@@ -1,0 +1,73 @@
+//! Cluster scaling sweep (E-SCALE): makespan and throughput as the
+//! number of MLPs (M) and boards (F) vary across the paper's three
+//! scheduling regimes (sequential / 1:1 / divided).
+//!
+//! ```sh
+//! cargo run --release --example cluster_scaling
+//! ```
+
+use mfnn::cluster::{run_cluster, ClusterConfig, Job};
+use mfnn::fixed::FixedSpec;
+use mfnn::nn::dataset;
+use mfnn::nn::lut::ActKind;
+use mfnn::nn::mlp::{LutParams, MlpSpec};
+use mfnn::nn::trainer::TrainConfig;
+use mfnn::report::{f, Table};
+use mfnn::util::Rng;
+use std::sync::Arc;
+
+fn mk_jobs(m: usize, steps: usize) -> Vec<Job> {
+    let fixed = FixedSpec::q(10).saturating();
+    (0..m)
+        .map(|i| {
+            let seed = 100 + i as u64;
+            let spec = MlpSpec::from_dims(
+                &format!("job{i}"), &[15, 24, 10], ActKind::Relu, ActKind::Identity,
+                fixed, LutParams::training(fixed),
+            )
+            .unwrap();
+            let (train, test) =
+                dataset::mini_digits(300, seed).split(0.8, &mut Rng::new(seed));
+            Job {
+                name: format!("job{i}"),
+                spec,
+                cfg: TrainConfig { batch: 16, lr: 1.0 / 128.0, steps, seed, log_every: 50 },
+                train_data: Arc::new(train),
+                test_data: Arc::new(test),
+            }
+        })
+        .collect()
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let steps = 120;
+    let mut t = Table::new(vec![
+        "M (MLPs)", "F (boards)", "mode", "makespan (sim ms)", "Σ steps/s (sim)", "min acc",
+    ])
+    .with_title("cluster scaling: M MLPs × F boards (paper §2 scheduling cases)")
+    .numeric();
+    for (m, fboards) in [(1usize, 1usize), (2, 1), (4, 1), (4, 2), (4, 4), (2, 4), (1, 4), (1, 2)] {
+        let jobs = mk_jobs(m, steps);
+        let cfg = ClusterConfig { boards: fboards, sync_every: 30, ..Default::default() };
+        let report = run_cluster(&cfg, &jobs)?;
+        let total_steps: usize = report.results.iter().map(|r| r.steps).sum();
+        let min_acc = report
+            .results
+            .iter()
+            .map(|r| r.accuracy)
+            .fold(f64::INFINITY, f64::min);
+        t.row(vec![
+            m.to_string(),
+            fboards.to_string(),
+            format!("{:?}", report.placement.mode),
+            f(report.makespan_s * 1e3, 2),
+            f(total_steps as f64 / report.makespan_s, 0),
+            f(min_acc, 3),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("expected shape: makespan grows ~linearly in M at fixed F (sequential),");
+    println!("shrinks with F at fixed M (parallel), with weight-sync bus overhead");
+    println!("making the divided mode sub-linear.");
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Regenerate every numeric table of the paper (E-T2, E-T3, E-T8,
+//! E-E34, E-W1 in DESIGN.md) from the implemented models and print them
+//! side by side with the published values.
+//!
+//! ```sh
+//! cargo run --release --example paper_tables
+//! ```
+
+use mfnn::assembler::resource::{ResourceModel, ACTPRO_PG_USAGE, MVM_PG_USAGE};
+use mfnn::hw::FpgaDevice;
+use mfnn::perf::catalog::CATALOG;
+use mfnn::perf::group::{OpClass, PerfModel};
+use mfnn::report::{f, Table};
+
+fn main() {
+    // Table 2 is structural (checked by tests); print the ISA as a table.
+    let mut t2 = Table::new(vec!["Instruction", "Op code", "Description"])
+        .with_title("Table 2 — instruction set architecture");
+    for op in mfnn::isa::Opcode::ALL {
+        t2.row(vec![op.mnemonic().into(), format!("{:03b}", op.bits()), op.description().into()]);
+    }
+    print!("{}", t2.render());
+
+    let mut t3 = Table::new(vec!["Component", "LUTs", "FFs", "RAMB18Ks", "DSPs"])
+        .with_title("Table 3 — processor group resource usages")
+        .numeric();
+    for (n, u) in [("MVM_PG", MVM_PG_USAGE), ("ACTPRO_PG", ACTPRO_PG_USAGE)] {
+        t3.row(vec![n.into(), u.luts.to_string(), u.ffs.to_string(), u.bram18.to_string(), u.dsps.to_string()]);
+    }
+    print!("{}", t3.render());
+
+    // §4.1 worked examples: published values beside our evaluation.
+    let published = [
+        ("vector addition", OpClass::Elementwise, 0.501, 6320.0),
+        ("vector dot product", OpClass::Reduction, 0.505, 6384.0),
+        ("activation function", OpClass::Activation, 0.401, 5088.0),
+    ];
+    let m = PerfModel::paper();
+    let mut tw = Table::new(vec!["op (N_I=1024)", "T_RUN", "T_all", "E ours", "E paper", "R ours (Mb/s)", "R paper"])
+        .with_title("Sec 4.1 worked examples — Eqns 5-9")
+        .numeric();
+    for (name, class, e_pub, r_pub) in published {
+        let g = m.group_perf(class, 1024);
+        tw.row(vec![
+            name.into(),
+            g.t_run.to_string(),
+            g.t_all.to_string(),
+            f(g.e_paper(), 3),
+            f(e_pub, 3),
+            f(g.r, 0),
+            f(r_pub, 0),
+        ]);
+    }
+    print!("{}", tw.render());
+
+    // Table 8 + Eqns 3-4 allocation.
+    let mut t8 = Table::new(vec!["FPGA", "IO", "DDR ch", "DDR clk", "Cost CAD", "R Mb/s", "F ours", "MVM_PG", "ACTPRO_PG"])
+        .with_title("Table 8 — performance/cost (Eqns 10-11) + Eqns 3-4 allocation")
+        .numeric();
+    for p in &CATALOG {
+        let d = FpgaDevice::new(p);
+        let rm = ResourceModel::new(p);
+        let _ = rm;
+        t8.row(vec![
+            p.name.into(),
+            p.io_pins.to_string(),
+            p.ddr_channels.to_string(),
+            format!("{}", p.ddr_clock_mhz),
+            format!("{}", p.cost_cad),
+            f(p.ddr_throughput_mbps(), 0),
+            f(p.perf_cost_paper(), 2),
+            d.mvm_groups.to_string(),
+            d.actpro_groups.to_string(),
+        ]);
+    }
+    print!("{}", t8.render());
+    let best = CATALOG.iter().max_by(|a, b| a.perf_cost().partial_cmp(&b.perf_cost()).unwrap()).unwrap();
+    println!("argmax F = {} (paper selects XC7S75-2) — {}", best.name,
+        if best.name == "XC7S75-2" { "MATCH" } else { "MISMATCH" });
+}

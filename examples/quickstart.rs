@@ -1,0 +1,69 @@
+//! Quickstart: write a net in the paper's assembly language, run the
+//! Matrix Assembler, execute one inference batch on a simulated
+//! Spartan-7 XC7S75-2, and print what happened.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use mfnn::asm::lower_file;
+use mfnn::hw::{FpgaDevice, MatrixMachine};
+use mfnn::util::Rng;
+
+const NET: &str = "
+NET quickstart
+FIXED 10 saturate
+INPUT x 8 4                            ; 8 x 4 data matrix (Table 1 INPUT)
+WEIGHT w0 4 16
+BIAS b0 16
+ACT a0 relu shift=5 mode=clamp interp=1
+MLP h x w0 b0 a0                       ; Table 1 MLP: OUT IN W B ACT
+WEIGHT w1 16 3
+BIAS b1 3
+ACT a1 identity shift=5 mode=clamp interp=1
+MLP scores h w1 b1 a1
+OUTPUT scores
+";
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // 1) Matrix Assembler: text → validated vector program.
+    let nets = lower_file(NET)?;
+    let net = &nets[0];
+    let program = &net.mlp.program;
+    println!(
+        "assembled {:?}: {} waves, {} lane-ops, {} buffers",
+        net.spec.name,
+        program.waves().count(),
+        program.total_lane_ops(),
+        program.buffers.len()
+    );
+
+    // 2) A Matrix Machine for the paper's selected board (XC7S75-2:
+    //    16 MVM groups + 4 ACTPRO groups by Eqns 3-4).
+    let device = FpgaDevice::selected();
+    let mut machine = MatrixMachine::new(device, program)?;
+
+    // 3) Bind quantised data and run.
+    let f = net.spec.fixed;
+    let mut rng = Rng::new(7);
+    let mut rand = |n: usize, amp: f64| -> Vec<i16> {
+        (0..n).map(|_| f.from_f64((rng.gen_f64() - 0.5) * amp)).collect()
+    };
+    machine.bind(program, "x", &rand(8 * 4, 2.0))?;
+    machine.bind(program, "w0", &rand(4 * 16, 1.0))?;
+    machine.bind(program, "b0", &rand(16, 0.3))?;
+    machine.bind(program, "w1", &rand(16 * 3, 1.0))?;
+    machine.bind(program, "b1", &rand(3, 0.3))?;
+    let stats = machine.run_verified(program)?; // structural verification on
+
+    // 4) Read results.
+    let scores = machine.read(program, "scores")?;
+    println!("scores[0..3] = {:?} (Q5.10 → {:?})", &scores[..3],
+        scores[..3].iter().map(|&q| f.to_f64(q)).collect::<Vec<_>>());
+    println!(
+        "{} cycles ({} dma, {} compute, {} lut, {} ring) = {:.3} µs on {} @100MHz",
+        stats.cycles, stats.dma_cycles, stats.compute_cycles, stats.lut_cycles,
+        stats.ring_cycles, stats.seconds(&device) * 1e6, device.part.name
+    );
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Regenerate the paper's timing diagrams (Figs 7, 8, 10 — E-F7/E-F8/
+//! E-F10 in DESIGN.md) from the cycle-accurate structural simulator.
+//!
+//! ```sh
+//! cargo run --release --example timing_traces
+//! ```
+
+fn main() {
+    print!("{}", mfnn::hw::trace_figures::all_figures());
+    println!("\nLandmarks (asserted by unit tests):");
+    println!("  Fig 7 : setup at cycle 1, dual-port commits from cycle 2");
+    println!("  Fig 8 : read@2 → DSP 6-stage pipeline → P@8 → write@9; C_RUN(512) = 519");
+    println!("  Fig 10: read@2 → shift@3 → LUT@4-5 → ctr@6 → write@7; C_RUN(1024) = 517");
+}

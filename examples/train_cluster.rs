@@ -1,0 +1,119 @@
+//! **End-to-end driver** (E-E2E in DESIGN.md): train and test multiple
+//! MLPs on a multi-FPGA cluster — the paper's whole point — and log the
+//! loss curves, accuracies, and simulated times.
+//!
+//! Workload: three different nets / datasets on 2 simulated XC7S75-2
+//! boards (M > F → sequential queues), then ONE net divided over 3
+//! boards (M < F → data-parallel with weight averaging), plus a float64
+//! host baseline for quality comparison. Results are recorded in
+//! EXPERIMENTS.md §E-E2E.
+//!
+//! ```sh
+//! cargo run --release --example train_cluster
+//! ```
+
+use mfnn::cluster::{run_cluster, ClusterConfig, Job, PlacementMode};
+use mfnn::fixed::FixedSpec;
+use mfnn::nn::dataset::{self, Dataset};
+use mfnn::nn::float_ref::FloatMlp;
+use mfnn::nn::lut::ActKind;
+use mfnn::nn::mlp::{LutParams, MlpSpec};
+use mfnn::nn::trainer::TrainConfig;
+use mfnn::report::{f, Table};
+use mfnn::util::Rng;
+use std::sync::Arc;
+
+fn job(name: &str, dims: &[usize], ds: Dataset, steps: usize, seed: u64) -> Job {
+    let fixed = FixedSpec::q(10).saturating();
+    let spec = MlpSpec::from_dims(
+        name, dims, ActKind::Relu, ActKind::Identity, fixed, LutParams::training(fixed),
+    )
+    .expect("valid spec");
+    let (train, test) = ds.split(0.8, &mut Rng::new(seed));
+    Job {
+        name: name.into(),
+        spec,
+        cfg: TrainConfig { batch: 16, lr: 1.0 / 128.0, steps, seed, log_every: 20 },
+        train_data: Arc::new(train),
+        test_data: Arc::new(test),
+    }
+}
+
+/// Float64 host baseline with the same architecture/steps.
+fn float_baseline(j: &Job) -> f64 {
+    let mut m = FloatMlp::init(&j.spec, &mut Rng::new(j.cfg.seed));
+    let mut r = Rng::new(j.cfg.seed ^ 0x5EED);
+    let ds = &j.train_data;
+    for _ in 0..j.cfg.steps {
+        let ids: Vec<usize> =
+            (0..j.cfg.batch).map(|_| r.gen_range(ds.len() as u64) as usize).collect();
+        let xs: Vec<Vec<f64>> = ids.iter().map(|&i| ds.x[i].clone()).collect();
+        let ys: Vec<Vec<f64>> = ids.iter().map(|&i| ds.y[i].clone()).collect();
+        m.train_step(&xs, &ys, 1.0 / 128.0);
+    }
+    m.accuracy(&j.test_data.x, &j.test_data.y)
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // ---- phase 1: M=3 jobs > F=2 boards → sequential queues ----
+    let jobs = vec![
+        job("digits", &[15, 24, 10], dataset::mini_digits(400, 11), 400, 11),
+        job("moons", &[2, 16, 2], dataset::two_moons(300, 22), 300, 22),
+        job("blobs", &[8, 16, 4], dataset::blobs(320, 4, 8, 33), 250, 33),
+    ];
+    let cfg = ClusterConfig { boards: 2, ..Default::default() };
+    println!("== phase 1: {} MLPs on {} boards ==", jobs.len(), cfg.boards);
+    let report = run_cluster(&cfg, &jobs)?;
+    assert_eq!(report.placement.mode, PlacementMode::Sequential);
+
+    let mut t = Table::new(vec![
+        "job", "boards", "steps", "first loss", "final loss", "accuracy",
+        "float64 acc", "sim compute", "sim bus",
+    ])
+    .with_title(format!(
+        "multi-MLP training (mode {:?}, simulated makespan {:.2} ms)",
+        report.placement.mode,
+        report.makespan_s * 1e3
+    ))
+    .numeric();
+    for (j, jr) in jobs.iter().zip(&report.results) {
+        let base = float_baseline(j);
+        t.row(vec![
+            jr.name.clone(),
+            format!("{:?}", jr.boards),
+            jr.steps.to_string(),
+            f(jr.curve.first().unwrap().loss, 4),
+            f(jr.curve.last().unwrap().loss, 4),
+            f(jr.accuracy, 3),
+            f(base, 3),
+            format!("{:.2} ms", jr.sim_compute_s * 1e3),
+            format!("{:.2} ms", jr.sim_bus_s * 1e3),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("loss curves (host-side MSE):");
+    for jr in &report.results {
+        let pts: Vec<String> =
+            jr.curve.iter().map(|p| format!("{}:{:.4}", p.step, p.loss)).collect();
+        println!("  {:<8} {}", jr.name, pts.join("  "));
+    }
+    println!("metrics: {:?}\n", report.metrics);
+
+    // ---- phase 2: M=1 job < F=3 boards → divided (data parallel) ----
+    let dp_jobs = vec![job("digits_dp", &[15, 24, 10], dataset::mini_digits(600, 44), 360, 44)];
+    let cfg = ClusterConfig { boards: 3, sync_every: 30, ..Default::default() };
+    println!("== phase 2: 1 MLP divided over {} boards ==", cfg.boards);
+    let report = run_cluster(&cfg, &dp_jobs)?;
+    assert_eq!(report.placement.mode, PlacementMode::Divided);
+    let jr = &report.results[0];
+    println!(
+        "{}: boards {:?}, accuracy {:.3}, sync rounds {}, critical-path compute {:.2} ms, bus {:.2} ms",
+        jr.name, jr.boards, jr.accuracy, report.metrics.sync_rounds,
+        jr.sim_compute_s * 1e3, jr.sim_bus_s * 1e3
+    );
+    for w in [0, report.results[0].curve.len() - 1] {
+        let p = &jr.curve[w];
+        println!("  step {:>4}: loss {:.4}", p.step, p.loss);
+    }
+    Ok(())
+}

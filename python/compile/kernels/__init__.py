@@ -1,0 +1,1 @@
+"""L1 kernels: the Pallas MLP-layer kernel + the pure-jnp oracle."""

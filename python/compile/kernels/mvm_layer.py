@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: one quantised MLP layer (the compute hot-spot).
+
+The Matrix Machine computes a layer as a wave of `VECTOR_DOT_PRODUCT`s
+(one per (sample, neuron)), a bias `VECTOR_ADDITION` wave, and an
+`ACTIVATION_FUNCTION` wave on the ACTPRO groups (paper sec. 1.1, 4.1).
+This kernel is the TPU re-expression of that pipeline (DESIGN.md
+sec. Hardware-Adaptation):
+
+* the MVM group's BRAM column-caching becomes `BlockSpec` staging of the
+  `x`/`w` tiles into VMEM (here: whole small tiles, grid of 1 — layer
+  dims are ≤512, i.e. ≤0.5 MB of VMEM, far under budget);
+* the 4-lane DSP array becomes the MXU-fed matmul over the whole tile;
+* the ACTPRO's shift + BRAM lookup becomes a gathered table lookup;
+* the numerics are the hardware's, unchanged: i16 operands, wide
+  accumulate, `>> F` rescale, wrap/saturate narrowing (`ref.narrow`).
+
+``interpret=True`` always: the CPU PJRT client cannot run Mosaic
+custom-calls; real-TPU behaviour is compile-only (see DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _layer_kernel(x_ref, w_ref, b_ref, lut_ref, o_ref, *, frac_bits, saturate,
+                  shift, clamp, interp):
+    """z = narrow((x @ w) >> F); z = narrow(z + b); o = LUT(z)."""
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    table = lut_ref[...]
+    z = ref.matmul_q(x, w, frac_bits, saturate)
+    z = ref.vadd(z, b[None, :], saturate)
+    o_ref[...] = ref.lut_apply(z, table, shift, clamp, interp, saturate)
+
+
+def mlp_layer(x, w, b, table, *, frac_bits=7, saturate=False, shift=7,
+              clamp=False, interp=False):
+    """Run one quantised MLP layer as a Pallas kernel.
+
+    Args:
+      x: int16[B, n_in] activations.
+      w: int16[n_in, n_out] weights.
+      b: int16[n_out] biases.
+      table: int16[1024] activation lookup table.
+    Returns:
+      int16[B, n_out] activations.
+    """
+    batch, _ = x.shape
+    n_out = w.shape[1]
+    kernel = functools.partial(
+        _layer_kernel,
+        frac_bits=frac_bits,
+        saturate=saturate,
+        shift=shift,
+        clamp=clamp,
+        interp=interp,
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, n_out), jnp.int16),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x, w, b, table)
+
+
+def mlp_layer_ref(x, w, b, table, *, frac_bits=7, saturate=False, shift=7,
+                  clamp=False, interp=False):
+    """The same layer straight from the jnp oracle (no Pallas)."""
+    z = ref.matmul_q(x, w, frac_bits, saturate)
+    z = ref.vadd(z, b[None, :], saturate)
+    return ref.lut_apply(z, table, shift, clamp, interp, saturate)

@@ -1,0 +1,163 @@
+"""Pure-jnp oracle of the Matrix Machine's fixed-point datapath.
+
+Single source of truth on the Python side, mirroring `rust/src/fixed`
+and `rust/src/nn/lut.rs` **bit-exactly** (asserted by the integration
+test `rust/tests/golden.rs` through the AOT artifacts, and by
+`python/tests` against the Pallas kernel):
+
+* values are Q(16, F) signed fixed point (default F = 7, paper sec. 2);
+* dot products accumulate in 64-bit (the DSP48E1's 48-bit accumulator
+  never overflows at paper sizes), then shift right by F and narrow;
+* narrowing is two's-complement truncation (``wrap``) or saturation
+  (``saturate``) — DESIGN.md sec. 3;
+* activations are 1024-entry lookup tables addressed by ``x >> shift``
+  with wrap (paper) or clamp addressing, optionally with linear
+  interpolation on the residual bits.
+
+Everything is plain jnp so it runs under jit, inside Pallas interpret
+kernels, and lowers to HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+LUT_SIZE = 1024
+
+I16_MIN = -32768
+I16_MAX = 32767
+
+
+def narrow(acc, saturate: bool):
+    """Narrow a wide (int64) value to int16 per the round mode."""
+    acc = jnp.asarray(acc, jnp.int64)
+    if saturate:
+        return jnp.clip(acc, I16_MIN, I16_MAX).astype(jnp.int16)
+    return acc.astype(jnp.int16)  # two's-complement wrap
+
+
+def vadd(a, b, saturate: bool):
+    """VECTOR_ADDITION (lane-wise)."""
+    return narrow(a.astype(jnp.int64) + b.astype(jnp.int64), saturate)
+
+
+def vsub(a, b, saturate: bool):
+    """VECTOR_SUBTRACTION (lane-wise)."""
+    return narrow(a.astype(jnp.int64) - b.astype(jnp.int64), saturate)
+
+
+def vmul(a, b, frac_bits: int, saturate: bool):
+    """ELEMENT_MULTIPLICATION: (a*b) >> F, narrowed."""
+    prod = a.astype(jnp.int64) * b.astype(jnp.int64)
+    return narrow(prod >> frac_bits, saturate)
+
+
+def vdot(a, b, frac_bits: int, saturate: bool):
+    """VECTOR_DOT_PRODUCT along the last axis: Σ a·b >> F, narrowed."""
+    acc = jnp.sum(a.astype(jnp.int64) * b.astype(jnp.int64), axis=-1)
+    return narrow(acc >> frac_bits, saturate)
+
+
+def vsum(a, saturate: bool):
+    """VECTOR_SUMMATION along the last axis (no shift)."""
+    return narrow(jnp.sum(a.astype(jnp.int64), axis=-1), saturate)
+
+
+def matmul_q(x, w, frac_bits: int, saturate: bool):
+    """Batched z = narrow((x @ w) >> F) — a wave of VECTOR_DOT_PRODUCTs."""
+    acc = x.astype(jnp.int64) @ w.astype(jnp.int64)
+    return narrow(acc >> frac_bits, saturate)
+
+
+def lut_addr(x, shift: int, clamp: bool):
+    """Table address of Q.F input ``x`` (ACTPRO shift stage, fig. 9)."""
+    shifted = x.astype(jnp.int32) >> shift
+    if clamp:
+        return jnp.clip(shifted + LUT_SIZE // 2, 0, LUT_SIZE - 1)
+    return (shifted & (LUT_SIZE - 1)).astype(jnp.int32)
+
+
+def lut_apply(x, table, shift: int, clamp: bool, interp: bool, saturate: bool):
+    """ACTIVATION_FUNCTION: shift → lookup [→ interpolate], narrowed."""
+    a = lut_addr(x, shift, clamp)
+    y0 = table[a].astype(jnp.int64)
+    if not interp or shift == 0:
+        return y0.astype(jnp.int16)
+    frac = x.astype(jnp.int64) & ((1 << shift) - 1)
+    if clamp:
+        a1 = jnp.minimum(a + 1, LUT_SIZE - 1)
+    else:
+        a1 = (a + 1) & (LUT_SIZE - 1)
+    y1 = table[a1].astype(jnp.int64)
+    return narrow(y0 + (((y1 - y0) * frac) >> shift), saturate)
+
+
+# -------------------------------------------------------------- LUT build
+# (numpy, build-time only — mirrors rust ActLut::build)
+
+
+def _act_f(kind: str, x):
+    if kind == "relu":
+        return np.maximum(0.0, x)
+    if kind == "sigmoid":
+        # numerically stable both tails (rust uses 1/(1+exp(-x)) in f64;
+        # the two agree to f64 precision over the LUT's input range)
+        out = np.empty_like(x)
+        pos = x >= 0
+        out[pos] = 1.0 / (1.0 + np.exp(-x[pos]))
+        ex = np.exp(x[~pos])
+        out[~pos] = ex / (1.0 + ex)
+        return out
+    if kind == "tanh":
+        return np.tanh(x)
+    if kind == "identity":
+        return x
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def _act_df(kind: str, x):
+    if kind == "relu":
+        return (x > 0.0).astype(np.float64)
+    if kind == "sigmoid":
+        s = _act_f("sigmoid", x)
+        return s * (1.0 - s)
+    if kind == "tanh":
+        return 1.0 - np.tanh(x) ** 2
+    if kind == "identity":
+        return np.ones_like(x)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def _from_f64(y, frac_bits: int, saturate: bool):
+    """rust FixedSpec::from_f64: round half away from zero, then narrow."""
+    scale = float(1 << frac_bits)
+    q = np.sign(y) * np.floor(np.abs(y) * scale + 0.5)
+    if saturate:
+        q = np.clip(q, I16_MIN, I16_MAX)
+    return q.astype(np.int64).astype(np.int16)
+
+
+def lut_build(kind: str, deriv: bool, frac_bits: int, clamp: bool, shift: int,
+              saturate: bool = False):
+    """Build a 1024-entry activation table (mirrors rust ActLut::build)."""
+    idx = np.arange(LUT_SIZE, dtype=np.int64)
+    if clamp:
+        v10 = idx - LUT_SIZE // 2
+    else:
+        v10 = (idx << (64 - 10)) >> (64 - 10)  # sign-extend 10 bits
+    x_real = (v10 << shift).astype(np.float64) / float(1 << frac_bits)
+    y = _act_df(kind, x_real) if deriv else _act_f(kind, x_real)
+    y = np.clip(y, -255.0, 255.0)
+    return _from_f64(y, frac_bits, saturate)
+
+
+def encode(x, frac_bits: int, saturate: bool = False):
+    """Encode real numbers into Q.F lanes (rust FixedSpec::from_f64)."""
+    return _from_f64(np.asarray(x, np.float64), frac_bits, saturate)
+
+
+def decode(q, frac_bits: int):
+    """Decode Q.F lanes to floats."""
+    return np.asarray(q, np.int64).astype(np.float64) / float(1 << frac_bits)

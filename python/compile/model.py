@@ -1,0 +1,140 @@
+"""L2: the quantised MLP forward pass and SGD training step in JAX.
+
+Mirrors the wave schedule that `rust/src/nn/lowering.rs` emits, op for
+op and narrow for narrow, so the Rust simulator and the AOT-compiled
+artifact are **bit-exact** (asserted by `rust/tests/golden.rs`):
+
+forward (per layer): DOT wave → narrow(>>F) → ADD-bias wave → ACT wave;
+loss: SUB → square (ELEM_MULT) → row SUMs → final SUM;
+backward (per layer, last→first):
+  deriv-LUT wave, ELEM_MULT (δ), DOT over batch columns (∂W),
+  SUM over batch columns (∂b), DOT over weight rows (δ propagation),
+  then ELEM_MULT by the learning-rate vector + SUB (in-place update).
+
+The hot-spot layer computation routes through the L1 Pallas kernel
+(`kernels.mvm_layer`), so the kernel lowers into the same HLO module.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mvm_layer, ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def mlp_forward(x, params, act_tables, *, frac_bits, saturate, shift, clamp,
+                interp, use_pallas=True):
+    """Forward pass. `params` = [(w0, b0), (w1, b1), ...]."""
+    layer = mvm_layer.mlp_layer if use_pallas else mvm_layer.mlp_layer_ref
+    o = x
+    for (w, b), table in zip(params, act_tables):
+        o = layer(
+            o, w, b, table,
+            frac_bits=frac_bits, saturate=saturate, shift=shift, clamp=clamp,
+            interp=interp,
+        )
+    return o
+
+
+def mlp_train_step(x, y, params, act_tables, dact_tables, lr_vec, *,
+                   frac_bits, saturate, shift, clamp, interp,
+                   use_pallas=True):
+    """One SGD step; returns (out, loss, new_params).
+
+    `lr_vec` is the int16 learning-rate constant vector (length =
+    max layer width), exactly like the machine's `lr` Const buffer.
+    """
+    f, s = frac_bits, saturate
+
+    # ---- forward, keeping pre-activations (z) for backprop ----
+    zs, os = [], []
+    o = x
+    for (w, b), table in zip(params, act_tables):
+        z = ref.matmul_q(o, w, f, s)
+        z = ref.vadd(z, b[None, :], s)
+        if use_pallas:
+            # The L1 kernel computes the fused layer; recomputing o from z
+            # via the table keeps z available for backprop while the
+            # Pallas path still covers the hot dot/bias portion.
+            o = mvm_layer.mlp_layer(
+                o, w, b, table,
+                frac_bits=f, saturate=s, shift=shift, clamp=clamp,
+                interp=interp,
+            )
+        else:
+            o = ref.lut_apply(z, table, shift, clamp, interp, s)
+        zs.append(z)
+        os.append(o)
+    out = os[-1]
+
+    # ---- loss: d = o − y; loss = Σ (d⊙d rows summed) ----
+    d = ref.vsub(out, y, s)
+    sq = ref.vmul(d, d, f, s)
+    lsum = ref.vsum(sq, s)  # per-sample row sums
+    loss = ref.vsum(lsum, s)  # scalar
+
+    # ---- backward ----
+    new_params = list(params)
+    nl = len(params)
+    for l in range(nl - 1, -1, -1):
+        w, b = params[l]
+        n_out = w.shape[1]
+        inp = x if l == 0 else os[l - 1]
+        # δ = d ⊙ A'(z)
+        g = ref.lut_apply(zs[l], dact_tables[l], shift, clamp, interp, s)
+        d = ref.vmul(d, g, f, s)
+        # ∂W[i,j] = dot over the batch of input col i with δ col j
+        acc = inp.astype(jnp.int64).T @ d.astype(jnp.int64)
+        gw = ref.narrow(acc >> f, s)
+        # ∂b[j] = Σ_b δ[b,j] (no shift)
+        gb = ref.narrow(d.astype(jnp.int64).sum(axis=0), s)
+        # δ_{prev}[b,i] = dot(w row i, δ row b)
+        if l > 0:
+            acc = d.astype(jnp.int64) @ w.astype(jnp.int64).T
+            d = ref.narrow(acc >> f, s)
+        # SGD update (lr as an ELEM_MULT by the constant vector)
+        lr = lr_vec[:n_out]
+        gw = ref.vmul(gw, lr[None, :], f, s)
+        new_w = ref.vsub(w, gw, s)
+        gb = ref.vmul(gb, lr, f, s)
+        new_b = ref.vsub(b, gb, s)
+        new_params[l] = (new_w, new_b)
+
+    return out, loss, new_params
+
+
+def flat_train_step(x, y, *flat, n_layers, frac_bits, saturate, shift, clamp,
+                    interp, use_pallas=True):
+    """`mlp_train_step` with flattened arguments, for AOT export.
+
+    flat = w0, b0, ..., w{L-1}, b{L-1}, act0.., dact0.., lr_vec
+    Returns a flat tuple: (out, loss, new_w0, new_b0, ...).
+    """
+    params = [(flat[2 * i], flat[2 * i + 1]) for i in range(n_layers)]
+    acts = list(flat[2 * n_layers:3 * n_layers])
+    dacts = list(flat[3 * n_layers:4 * n_layers])
+    lr_vec = flat[4 * n_layers]
+    out, loss, new_params = mlp_train_step(
+        x, y, params, acts, dacts, lr_vec,
+        frac_bits=frac_bits, saturate=saturate, shift=shift, clamp=clamp,
+        interp=interp, use_pallas=use_pallas,
+    )
+    flat_out = [out, loss]
+    for w, b in new_params:
+        flat_out.extend([w, b])
+    return tuple(flat_out)
+
+
+def flat_forward(x, *flat, n_layers, frac_bits, saturate, shift, clamp,
+                 interp, use_pallas=True):
+    """`mlp_forward` with flattened arguments, for AOT export."""
+    params = [(flat[2 * i], flat[2 * i + 1]) for i in range(n_layers)]
+    acts = list(flat[2 * n_layers:3 * n_layers])
+    return (
+        mlp_forward(
+            x, params, acts,
+            frac_bits=frac_bits, saturate=saturate, shift=shift, clamp=clamp,
+            interp=interp, use_pallas=use_pallas,
+        ),
+    )

@@ -1,0 +1,123 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, dtyped values, and LUT/datapath parameters and
+asserts bit-exact agreement between `kernels.mvm_layer.mlp_layer`
+(Pallas, interpret=True) and the oracle path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mvm_layer, ref
+
+I16 = st.integers(min_value=-32768, max_value=32767)
+
+
+def arr16(rng, *shape, amp=32768):
+    return rng.integers(-amp, amp, size=shape, dtype=np.int64).astype(np.int16)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    batch=st.integers(1, 9),
+    n_in=st.integers(1, 24),
+    n_out=st.integers(1, 17),
+    frac_bits=st.sampled_from([7, 10]),
+    saturate=st.booleans(),
+    clamp=st.booleans(),
+    interp=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_layer_matches_ref(batch, n_in, n_out, frac_bits, saturate,
+                                  clamp, interp, seed):
+    rng = np.random.default_rng(seed)
+    shift = frac_bits - 5 if clamp else frac_bits
+    x = arr16(rng, batch, n_in, amp=4000)
+    w = arr16(rng, n_in, n_out, amp=2000)
+    b = arr16(rng, n_out, amp=2000)
+    table = ref.lut_build("relu", False, frac_bits, clamp, shift)
+    kw = dict(frac_bits=frac_bits, saturate=saturate, shift=shift,
+              clamp=clamp, interp=interp)
+    got = np.asarray(mvm_layer.mlp_layer(x, w, b, table, **kw))
+    want = np.asarray(mvm_layer.mlp_layer_ref(x, w, b, table, **kw))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(1, 64),
+    frac_bits=st.sampled_from([7, 10]),
+    saturate=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vector_ops_reference_semantics(n, frac_bits, saturate, seed):
+    """The jnp primitives implement the documented fixed-point semantics
+    (checked against independent numpy integer arithmetic)."""
+    rng = np.random.default_rng(seed)
+    a = arr16(rng, n)
+    b = arr16(rng, n)
+    a64 = a.astype(np.int64)
+    b64 = b.astype(np.int64)
+
+    def nar(v):
+        if saturate:
+            return np.clip(v, -32768, 32767).astype(np.int16)
+        return (np.asarray(v, np.int64) & 0xFFFF).astype(np.uint16).astype(np.int16)
+
+    np.testing.assert_array_equal(
+        np.asarray(ref.vadd(a, b, saturate)), nar(a64 + b64))
+    np.testing.assert_array_equal(
+        np.asarray(ref.vsub(a, b, saturate)), nar(a64 - b64))
+    np.testing.assert_array_equal(
+        np.asarray(ref.vmul(a, b, frac_bits, saturate)),
+        nar((a64 * b64) >> frac_bits))
+    assert np.asarray(ref.vdot(a, b, frac_bits, saturate)) == nar(
+        (a64 * b64).sum() >> frac_bits)
+    assert np.asarray(ref.vsum(a, saturate)) == nar(a64.sum())
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    x=I16,
+    shift=st.integers(0, 12),
+    clamp=st.booleans(),
+    kind=st.sampled_from(["relu", "sigmoid", "tanh", "identity"]),
+)
+def test_lut_addressing(x, shift, clamp, kind):
+    table = ref.lut_build(kind, False, 7, clamp, shift)
+    assert table.shape == (1024,)
+    a = int(np.asarray(ref.lut_addr(np.int16(x), shift, clamp)))
+    assert 0 <= a < 1024
+    if clamp:
+        expect = min(max((x >> shift) + 512, 0), 1023)
+    else:
+        expect = (x >> shift) & 1023
+    assert a == expect
+
+
+def test_lut_interp_relu_exact_in_linear_region():
+    # With interpolation, ReLU is exact away from the kink (same property
+    # asserted in rust/src/nn/lut.rs tests).
+    f = 7
+    table = ref.lut_build("relu", False, f, True, f)
+    xs = np.arange(200, 16000, 37, dtype=np.int16)
+    ys = np.asarray(ref.lut_apply(xs, table, f, True, True, False))
+    np.testing.assert_array_equal(ys[xs >= 128], xs[xs >= 128])
+
+
+def test_encode_decode_roundtrip():
+    xs = np.linspace(-20, 20, 333)
+    q = ref.encode(xs, 10)
+    back = ref.decode(q, 10)
+    assert np.max(np.abs(back - xs)) <= 0.5 / 1024 + 1e-12
+
+
+@pytest.mark.parametrize("frac_bits", [7, 10])
+def test_dot_accumulates_before_rescale(frac_bits):
+    # 2^frac_bits ones dotted with ones: products are 1 each, the sum
+    # reaches 2^frac_bits and only then is rescaled — per-element rescale
+    # would give 0.
+    n = 1 << frac_bits
+    a = np.ones(n, np.int16)
+    assert int(np.asarray(ref.vdot(a, a, frac_bits, False))) == 1

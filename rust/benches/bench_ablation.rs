@@ -1,0 +1,75 @@
+//! E-ABL: ablations over the design choices DESIGN.md §3 calls out —
+//! narrowing mode (wrap = paper, saturate = ours), LUT addressing
+//! (wrap = paper, clamp = ours), LUT interpolation, and fraction bits.
+//! Measures final training accuracy on blobs after a fixed step budget.
+
+use mfnn::fixed::FixedSpec;
+use mfnn::hw::FpgaDevice;
+use mfnn::nn::dataset;
+use mfnn::nn::lut::{ActKind, AddrMode};
+use mfnn::nn::mlp::{LutParams, MlpSpec};
+use mfnn::nn::trainer::{TrainConfig, Trainer};
+use mfnn::report::{f, Table};
+use mfnn::util::Rng;
+
+fn run_config(name: &str, fixed: FixedSpec, lut: LutParams, t: &mut Table) {
+    let spec = MlpSpec::from_dims(
+        name, &[8, 16, 4], ActKind::Relu, ActKind::Identity, fixed, lut,
+    )
+    .unwrap();
+    let (train, test) = dataset::blobs(320, 4, 8, 77).split(0.8, &mut Rng::new(77));
+    let quick = std::env::var("MFNN_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let steps = if quick { 40 } else { 200 };
+    let cfg = TrainConfig { batch: 16, lr: 1.0 / 128.0, steps, seed: 9, log_every: 50 };
+    match Trainer::new(spec, FpgaDevice::selected(), cfg) {
+        Ok(mut tr) => {
+            let report = tr.train(&train).unwrap();
+            let (acc, _) = tr.evaluate(&test).unwrap();
+            t.row(vec![
+                name.into(),
+                format!("Q{}.{}", 16 - fixed.frac_bits, fixed.frac_bits),
+                format!("{:?}", fixed.round),
+                format!("{:?}", lut.mode),
+                lut.interp.to_string(),
+                f(report.curve.last().unwrap().loss, 4),
+                f(acc, 3),
+            ]);
+        }
+        Err(e) => {
+            t.row(vec![
+                name.into(), "-".into(), "-".into(), "-".into(), "-".into(),
+                "-".into(), format!("error: {e}"),
+            ]);
+        }
+    }
+}
+
+fn main() {
+    let mut t = Table::new(vec!["config", "format", "narrow", "lut addr", "interp", "final loss", "accuracy"])
+        .with_title("ablation: datapath/LUT design choices (blobs, fixed step budget)")
+        .numeric();
+    // Paper-faithful everything: Q8.7, wrap narrowing, wrap LUT, no interp.
+    run_config("paper_q8.7_wrap", FixedSpec::q(7),
+        LutParams { shift: 7, mode: AddrMode::Wrap, interp: false }, &mut t);
+    // + clamp addressing only
+    run_config("q8.7_wrap_clamplut", FixedSpec::q(7),
+        LutParams { shift: 2, mode: AddrMode::Clamp, interp: false }, &mut t);
+    // + saturating narrowing
+    run_config("q8.7_sat_clamplut", FixedSpec::q(7).saturating(),
+        LutParams { shift: 2, mode: AddrMode::Clamp, interp: false }, &mut t);
+    // + interpolation
+    run_config("q8.7_sat_interp", FixedSpec::q(7).saturating(),
+        LutParams { shift: 2, mode: AddrMode::Clamp, interp: true }, &mut t);
+    // + finer format (the training default)
+    run_config("q5.10_sat_interp", FixedSpec::q(10).saturating(),
+        LutParams { shift: 5, mode: AddrMode::Clamp, interp: true }, &mut t);
+    // format sensitivity
+    run_config("q3.12_sat_interp", FixedSpec::q(12).saturating(),
+        LutParams { shift: 7, mode: AddrMode::Clamp, interp: true }, &mut t);
+    print!("{}", t.render());
+    println!("reading: on an easy separable task every configuration can reach high");
+    println!("accuracy, but wrap narrowing is fragile (larger batches/lr overflow the");
+    println!("summed gradients and diverge — see DESIGN.md §3); saturating narrowing +");
+    println!("finer formats give markedly lower final loss and stable training, which");
+    println!("is why the training default is Q5.10/saturate/clamp/interp.");
+}

@@ -1,0 +1,60 @@
+//! E-T1/E-T2/E-F3 benches: Matrix Assembler throughput — parsing +
+//! lowering assembly, instruction encode/decode rates, and microcode
+//! generation rates.
+
+use mfnn::asm::lower_file;
+use mfnn::bench::Suite;
+use mfnn::isa::{Instruction, Microcode, Opcode, Width};
+use mfnn::assembler::microcode_gen;
+
+const NET: &str = "
+NET bench
+FIXED 10 saturate
+INPUT x 16 15
+WEIGHT w0 15 32
+BIAS b0 32
+ACT a0 relu shift=5 mode=clamp interp=1
+MLP h x w0 b0 a0
+WEIGHT w1 32 10
+BIAS b1 10
+ACT a1 identity shift=5 mode=clamp interp=1
+MLP out h w1 b1 a1
+OUTPUT out
+TARGET y 16 10
+TRAIN lr=0.0078125
+";
+
+fn main() {
+    let mut suite = Suite::new("assembler");
+    suite.bench("parse_and_lower_train_net", |b| {
+        b.iter(|| lower_file(NET).unwrap())
+    });
+    let nets = lower_file(NET).unwrap();
+    let p = &nets[0].mlp.program;
+    println!(
+        "lowered train net: {} waves, {} lane-ops",
+        p.waves().count(),
+        p.total_lane_ops()
+    );
+    suite.bench("program_validate", |b| b.iter(|| p.check().unwrap()));
+    suite.bench("encode_instruction_stream", |b| {
+        b.iter(|| p.encode(Width::W32, 16, 4).unwrap())
+    });
+    suite.bench("instruction_encode_decode_w32", |b| {
+        let i = Instruction::new(Opcode::VectorDotProduct, 3, 17, 1024);
+        b.iter_with_elements(1, || {
+            let raw = i.encode(Width::W32).unwrap();
+            Instruction::decode(raw, Width::W32).unwrap()
+        })
+    });
+    suite.bench("microcode_roundtrip", |b| {
+        let words = microcode_gen::mvm_batch(Opcode::VectorAddition, 512, 4).unwrap();
+        b.iter_with_elements(words.len() as u64, || {
+            words.iter().map(|w| Microcode::decode(w.encode()).cycles as u64).sum::<u64>()
+        })
+    });
+    suite.bench("microcode_gen_batch_512x4", |b| {
+        b.iter(|| microcode_gen::mvm_batch(Opcode::VectorDotProduct, 512, 4).unwrap())
+    });
+    suite.finish();
+}

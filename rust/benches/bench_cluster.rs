@@ -1,0 +1,55 @@
+//! E-SCALE: cluster makespan across the paper's three scheduling regimes
+//! — the multi-FPGA scaling claim of §2. Reports simulated makespan
+//! (the modelled hardware's time) and host wall-clock (simulator cost).
+
+use mfnn::cluster::{run_cluster, ClusterConfig, Job};
+use mfnn::fixed::FixedSpec;
+use mfnn::nn::dataset;
+use mfnn::nn::lut::ActKind;
+use mfnn::nn::mlp::{LutParams, MlpSpec};
+use mfnn::nn::trainer::TrainConfig;
+use mfnn::report::{f, Table};
+use mfnn::util::Rng;
+use std::sync::Arc;
+
+fn mk_jobs(m: usize, steps: usize) -> Vec<Job> {
+    let fixed = FixedSpec::q(10).saturating();
+    (0..m)
+        .map(|i| {
+            let seed = 500 + i as u64;
+            let spec = MlpSpec::from_dims(
+                &format!("j{i}"), &[15, 24, 10], ActKind::Relu, ActKind::Identity,
+                fixed, LutParams::training(fixed)).unwrap();
+            let (train, test) = dataset::mini_digits(240, seed).split(0.8, &mut Rng::new(seed));
+            Job {
+                name: format!("j{i}"), spec,
+                cfg: TrainConfig { batch: 16, lr: 1.0 / 128.0, steps, seed, log_every: 100 },
+                train_data: Arc::new(train), test_data: Arc::new(test),
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::var("MFNN_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let steps = if quick { 20 } else { 80 };
+    let mut t = Table::new(vec!["M", "F", "mode", "sim makespan ms", "Σsteps/s sim", "host wall ms"])
+        .with_title(format!("cluster scaling sweep ({steps} steps/job)"))
+        .numeric();
+    for (m, fb) in [(1usize, 1usize), (2, 1), (4, 1), (8, 1), (4, 2), (4, 4), (2, 4), (1, 4)] {
+        let jobs = mk_jobs(m, steps);
+        let cfg = ClusterConfig { boards: fb, sync_every: 20, ..Default::default() };
+        let r = run_cluster(&cfg, &jobs).unwrap();
+        let total_steps: usize = r.results.iter().map(|x| x.steps).sum();
+        t.row(vec![
+            m.to_string(),
+            fb.to_string(),
+            format!("{:?}", r.placement.mode),
+            f(r.makespan_s * 1e3, 2),
+            f(total_steps as f64 / r.makespan_s, 0),
+            f(r.wall_s * 1e3, 1),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("shape checks: M>F rows scale makespan ~M/F; F>M rows trade bus sync for compute.");
+}

@@ -1,0 +1,51 @@
+//! E-GOLD perf: the PJRT-executed JAX/Pallas golden model vs the Rust
+//! fast simulator on identical MLP train steps — the "CPU baseline vs
+//! accelerator model" comparison of the paper's §1, scaled to this
+//! testbed. Requires `make artifacts`.
+
+use mfnn::bench::Suite;
+use mfnn::hw::{FpgaDevice, MatrixMachine};
+use mfnn::nn::lowering::lower_train_step;
+use mfnn::runtime::{GoldenModel, Runtime};
+use mfnn::util::Rng;
+
+fn main() {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.toml").exists() {
+        eprintln!("skipping bench_golden: run `make artifacts` first");
+        return;
+    }
+    let g = GoldenModel::open(&dir).expect("open artifacts");
+    let h = lower_train_step(&g.spec, g.batch, g.lr).unwrap();
+    let lane_ops = h.program.total_lane_ops();
+    let fsp = g.spec.fixed;
+    let mut r = Rng::new(5);
+    let mut rand = |n: usize, amp: f64| -> Vec<i16> {
+        (0..n).map(|_| fsp.from_f64((r.gen_f64() - 0.5) * amp)).collect()
+    };
+    let ws: Vec<Vec<i16>> = g.spec.layers.iter().map(|l| rand(l.inputs * l.outputs, 1.2)).collect();
+    let bs: Vec<Vec<i16>> = g.spec.layers.iter().map(|l| rand(l.outputs, 0.4)).collect();
+    let x = rand(g.batch * g.spec.input_dim(), 2.0);
+    let y = rand(g.batch * g.spec.output_dim(), 1.0);
+
+    let mut m = MatrixMachine::new(FpgaDevice::selected(), &h.program).unwrap();
+    m.bind(&h.program, "x", &x).unwrap();
+    m.bind(&h.program, "y", &y).unwrap();
+    for l in 0..g.spec.layers.len() {
+        m.bind(&h.program, &format!("w{l}"), &ws[l]).unwrap();
+        m.bind(&h.program, &format!("b{l}"), &bs[l]).unwrap();
+    }
+
+    let mut suite = Suite::new("golden");
+    suite.bench(&format!("sim_train_step ({lane_ops} lane-ops)"), |b| {
+        b.iter_with_elements(lane_ops, || m.run(&h.program).unwrap())
+    });
+    suite.bench("golden_pjrt_train_step", |b| {
+        b.iter_with_elements(lane_ops, || g.train_step(&x, &y, &ws, &bs).unwrap())
+    });
+    suite.bench("golden_pjrt_forward", |b| {
+        b.iter_with_elements(lane_ops, || g.forward(&x, &ws, &bs).unwrap())
+    });
+    suite.finish();
+    println!("(same numerical work; sim also charges the hardware cycle model)");
+}

@@ -1,0 +1,102 @@
+//! E-W1 / E-W2 (DESIGN.md): the §4.1 per-group performance model —
+//! the three published worked examples, an `E(N_I)`/`R(N_I)` sweep, and
+//! a cross-check of the analytic model against the *structural*
+//! cycle-accurate simulator's measured per-op cycles, plus the
+//! simulator's own wall-clock speed (simulated cycles per second).
+
+use mfnn::bench::Suite;
+use mfnn::fixed::FixedSpec;
+use mfnn::hw::mvm::Mvm;
+use mfnn::hw::actpro::ActPro;
+use mfnn::isa::MvmOp;
+use mfnn::nn::lut::{ActKind, ActLut, AddrMode};
+use mfnn::perf::group::{OpClass, PerfModel};
+use mfnn::report::{f, Table};
+
+fn main() {
+    let m = PerfModel::paper();
+
+    // ---- published worked examples ----
+    let published = [
+        ("vector addition", OpClass::Elementwise, 0.501, 3.95e8, 6320.0),
+        ("vector dot product", OpClass::Reduction, 0.505, 3.99e8, 6384.0),
+        ("activation function", OpClass::Activation, 0.401, 3.18e8, 5088.0),
+    ];
+    let mut t = Table::new(vec!["op", "T_RUN", "T_all", "E ours", "E pub", "P ours", "P pub", "R ours", "R pub"])
+        .with_title("sec 4.1 worked examples at N_I=1024 (Eqns 5-9)")
+        .numeric();
+    for (name, class, e_pub, p_pub, r_pub) in published {
+        let g = m.group_perf(class, 1024);
+        t.row(vec![
+            name.into(),
+            g.t_run.to_string(),
+            g.t_all.to_string(),
+            f(g.e_paper(), 3),
+            f(e_pub, 3),
+            format!("{:.3e}", g.p),
+            format!("{p_pub:.2e}"),
+            f(g.r, 0),
+            f(r_pub, 0),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // ---- E(N_I) / R(N_I) sweep (the figure the equations imply) ----
+    let mut t = Table::new(vec!["N_I", "E add", "E dot", "E act", "R add Mb/s", "R dot", "R act"])
+        .with_title("efficiency/throughput sweep over iteration count")
+        .numeric();
+    for n_i in [1u64, 4, 16, 64, 256, 1024, 4096] {
+        let ga = m.group_perf(OpClass::Elementwise, n_i);
+        let gd = m.group_perf(OpClass::Reduction, n_i);
+        let gc = m.group_perf(OpClass::Activation, n_i);
+        t.row(vec![
+            n_i.to_string(),
+            f(ga.e, 3), f(gd.e, 3), f(gc.e, 3),
+            f(ga.r, 0), f(gd.r, 0), f(gc.r, 0),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // ---- structural sim cross-check: measured C_RUN per op ----
+    let fixed = FixedSpec::PAPER;
+    let mut t = Table::new(vec!["op", "len", "C_RUN model", "C_RUN structural sim"])
+        .with_title("analytic C_RUN vs cycle-accurate simulator")
+        .numeric();
+    let mut mvm = Mvm::new(fixed);
+    mvm.load_column(false, &vec![3; 512]);
+    mvm.load_column(true, &vec![2; 512]);
+    mvm.run_op(MvmOp::VecAdd, 512, false);
+    t.row(vec!["vec add".into(), "512".into(), "519".into(), mvm.last_op_cycles().to_string()]);
+    mvm.run_op(MvmOp::VecDot, 512, false);
+    t.row(vec!["vec dot".into(), "512".into(), "519".into(), mvm.last_op_cycles().to_string()]);
+    let lut = ActLut::build(ActKind::Relu, false, fixed, AddrMode::Wrap, 7);
+    let mut ap = ActPro::new(lut);
+    ap.load_input(&vec![64; 1024]);
+    ap.run(1024);
+    t.row(vec!["activation".into(), "1024".into(), "517".into(), ap.last_op_cycles().to_string()]);
+    print!("{}", t.render());
+
+    // ---- simulator speed (host wall-clock) ----
+    let mut suite = Suite::new("group_perf");
+    suite.bench("structural_mvm_vec_add_512 (simulated cycles/iter=520)", |b| {
+        let mut m = Mvm::new(fixed);
+        m.load_column(false, &vec![3; 512]);
+        m.load_column(true, &vec![2; 512]);
+        b.iter_with_elements(520, || m.run_op(MvmOp::VecAdd, 512, false))
+    });
+    suite.bench("structural_mvm_vec_dot_512", |b| {
+        let mut m = Mvm::new(fixed);
+        m.load_column(false, &vec![3; 512]);
+        m.load_column(true, &vec![2; 512]);
+        b.iter_with_elements(520, || m.run_op(MvmOp::VecDot, 512, false))
+    });
+    suite.bench("structural_actpro_1024", |b| {
+        let lut = ActLut::build(ActKind::Relu, false, fixed, AddrMode::Wrap, 7);
+        let mut a = ActPro::new(lut);
+        a.load_input(&vec![64; 1024]);
+        b.iter_with_elements(518, || a.run(1024))
+    });
+    let t = suite.finish();
+    let _ = t;
+    println!("(throughput column = simulated cycles per host second)");
+}

@@ -1,0 +1,64 @@
+//! The Matrix Machine hot path (§Perf): fast-simulator throughput on the
+//! waves MLP training is made of — forward dots, backprop outer-product
+//! dots, elementwise updates, LUT activations — and whole train-step
+//! rates. Throughput is lane-ops per host second (the quantity the perf
+//! pass optimises; see EXPERIMENTS.md §Perf).
+
+use mfnn::bench::Suite;
+use mfnn::fixed::FixedSpec;
+use mfnn::hw::{FpgaDevice, MatrixMachine};
+use mfnn::nn::lowering::{lower_forward, lower_train_step};
+use mfnn::nn::lut::ActKind;
+use mfnn::nn::mlp::{LutParams, MlpSpec};
+use mfnn::util::Rng;
+
+fn spec(dims: &[usize]) -> MlpSpec {
+    let fixed = FixedSpec::q(10).saturating();
+    MlpSpec::from_dims("bench", dims, ActKind::Relu, ActKind::Identity, fixed, LutParams::training(fixed)).unwrap()
+}
+
+fn bind_random(m: &mut MatrixMachine, p: &mfnn::assembler::Program, seed: u64) {
+    let mut r = Rng::new(seed);
+    for b in p.buffers.clone() {
+        use mfnn::assembler::BufKind::*;
+        if matches!(b.kind, Input | Weight | Bias | Target) {
+            let data: Vec<i16> = (0..b.len()).map(|_| r.gen_range_i64(-800, 800) as i16).collect();
+            m.bind(p, &b.name, &data).unwrap();
+        }
+    }
+}
+
+fn main() {
+    let device = FpgaDevice::selected();
+    let mut suite = Suite::new("machine");
+
+    // forward pass throughput at three scales
+    for dims in [vec![15, 16, 10], vec![64, 64, 32], vec![128, 256, 64]] {
+        let s = spec(&dims);
+        let batch = 16;
+        let h = lower_forward(&s, batch).unwrap();
+        let lane_ops = h.program.total_lane_ops();
+        let mut m = MatrixMachine::new(device, &h.program).unwrap();
+        bind_random(&mut m, &h.program, 1);
+        suite.bench(
+            &format!("fwd_{}x{}x{}_b{batch} ({lane_ops} lane-ops)", dims[0], dims[1], dims[2]),
+            |b| b.iter_with_elements(lane_ops, || m.run(&h.program).unwrap()),
+        );
+    }
+
+    // train step throughput
+    for dims in [vec![15, 16, 10], vec![64, 64, 32]] {
+        let s = spec(&dims);
+        let batch = 16;
+        let h = lower_train_step(&s, batch, 1.0 / 128.0).unwrap();
+        let lane_ops = h.program.total_lane_ops();
+        let mut m = MatrixMachine::new(device, &h.program).unwrap();
+        bind_random(&mut m, &h.program, 2);
+        suite.bench(
+            &format!("train_{}x{}x{}_b{batch} ({lane_ops} lane-ops)", dims[0], dims[1], dims[2]),
+            |b| b.iter_with_elements(lane_ops, || m.run(&h.program).unwrap()),
+        );
+    }
+    suite.finish();
+    println!("(throughput = fixed-point lane-ops per host second through the full machine model)");
+}

@@ -1,0 +1,39 @@
+//! E-T8: regenerate Table 8 (Eqns 10-11) and benchmark the catalog
+//! evaluation + allocation (Eqns 3-4) machinery.
+
+use mfnn::bench::Suite;
+use mfnn::hw::FpgaDevice;
+use mfnn::perf::catalog::CATALOG;
+use mfnn::report::{f, Table};
+
+fn main() {
+    let mut t = Table::new(vec!["FPGA", "R Mb/s (Eqn 10)", "F Mb/s/CAD (Eqn 11)", "F paper"])
+        .with_title("Table 8 reproduction")
+        .numeric();
+    let paper = [561.84, 634.63, 521.17, 538.32, 692.12, 516.85, 300.08, 272.80, 279.26];
+    for (p, f_pub) in CATALOG.iter().zip(paper) {
+        t.row(vec![
+            p.name.into(),
+            f(p.ddr_throughput_mbps(), 2),
+            f(p.perf_cost_paper(), 2),
+            f(f_pub, 2),
+        ]);
+    }
+    print!("{}", t.render());
+    let best = CATALOG.iter().max_by(|a, b| a.perf_cost().partial_cmp(&b.perf_cost()).unwrap()).unwrap();
+    assert_eq!(best.name, "XC7S75-2");
+    println!("argmax F: {} (matches the paper's selection)\n", best.name);
+
+    let mut suite = Suite::new("table8");
+    suite.bench("catalog_eval_all_parts", |b| {
+        b.iter_with_elements(CATALOG.len() as u64, || {
+            CATALOG.iter().map(|p| p.perf_cost()).sum::<f64>()
+        })
+    });
+    suite.bench("allocation_eqn3_eqn4_all_parts", |b| {
+        b.iter_with_elements(CATALOG.len() as u64, || {
+            CATALOG.iter().map(|p| FpgaDevice::new(p).mvm_groups).sum::<u32>()
+        })
+    });
+    suite.finish();
+}

@@ -1,0 +1,56 @@
+//! AST of the neural-network assembly language (paper §3.1, Table 1).
+
+use crate::nn::lut::{ActKind, AddrMode};
+
+/// One parsed directive with its source line (1-based) for diagnostics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Item {
+    /// 1-based source line.
+    pub line: usize,
+    /// The directive.
+    pub dir: Directive,
+}
+
+/// Table-1 codes plus the training extensions (`TARGET`, `TRAIN`) and the
+/// datapath selector (`FIXED`) — extensions documented in DESIGN.md.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Directive {
+    /// `NET <name>` — begins a network block.
+    Net { name: String },
+    /// `FIXED <frac_bits> <wrap|saturate>` — datapath format.
+    Fixed { frac_bits: u32, saturate: bool },
+    /// `INPUT <name> <N> <M>` — "Loads an N X M data matrix" (N = batch).
+    Input { name: String, rows: usize, cols: usize },
+    /// `WEIGHT <name> <N> <M>` — "Loads an N X M weight matrix".
+    Weight { name: String, rows: usize, cols: usize },
+    /// `BIAS <name> <N>` — "Loads a bias vector with size N".
+    Bias { name: String, size: usize },
+    /// `ACT <name> <kind> [shift=k] [mode=wrap|clamp] [interp=0|1]` —
+    /// "Loads an activation lookup table" (table size is fixed at 1024,
+    /// one RAMB18).
+    Act { name: String, kind: ActKind, shift: Option<u32>, mode: Option<AddrMode>, interp: Option<bool> },
+    /// `MLP <out> <in> <weight> <bias> <act>` — "Executes a MLP layer".
+    Mlp { out: String, input: String, weight: String, bias: String, act: String },
+    /// `OUTPUT <name>` — "Stores data matrix".
+    Output { name: String },
+    /// `TARGET <name> <N> <M>` — training targets (extension).
+    Target { name: String, rows: usize, cols: usize },
+    /// `TRAIN lr=<f64>` — expand to a backprop + SGD step (extension).
+    Train { lr: f64 },
+}
+
+/// A parsed file: one or more network blocks.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct AsmFile {
+    /// Network blocks in file order.
+    pub nets: Vec<AsmNet>,
+}
+
+/// One network block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AsmNet {
+    /// `NET` name.
+    pub name: String,
+    /// Items in block order.
+    pub items: Vec<Item>,
+}

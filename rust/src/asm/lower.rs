@@ -1,0 +1,401 @@
+//! Semantic analysis + lowering of parsed assembly to vector programs.
+//!
+//! Reconstructs an [`MlpSpec`] from each `NET` block's `MLP` chain,
+//! validates shapes/references, then reuses the training/inference
+//! lowering of [`crate::nn::lowering`] and renames the generated buffers
+//! back to the user's assembly-level names.
+
+use super::ast::{AsmNet, Directive};
+use super::parser::{parse, ParseError};
+use crate::assembler::program::BufKind;
+use crate::fixed::FixedSpec;
+use crate::nn::lowering::{lower_forward, lower_train_step, LowerError, LoweredMlp};
+use crate::nn::lut::{ActKind, AddrMode};
+use crate::nn::mlp::{LayerSpec, LutParams, MlpSpec};
+use thiserror::Error;
+
+/// Lowering / semantic errors.
+#[derive(Debug, Error, PartialEq)]
+pub enum AsmError {
+    /// Parse failure.
+    #[error(transparent)]
+    Parse(#[from] ParseError),
+    /// Program-construction failure.
+    #[error("net {0}: {1}")]
+    Lower(String, LowerError),
+    /// Reference to an undefined name.
+    #[error("line {0}: {1} {2:?} is not defined")]
+    Undefined(usize, &'static str, String),
+    /// Shape mismatch between chained layers / declarations.
+    #[error("line {0}: {1}")]
+    Shape(usize, String),
+    /// Structural issues (missing INPUT/OUTPUT/MLP, duplicate names...).
+    #[error("net {0}: {1}")]
+    Structure(String, String),
+    /// ACT options differ between layers of one net (one ACTPRO generic
+    /// set per machine).
+    #[error("line {0}: ACT options conflict with an earlier ACT in this net")]
+    LutConflict(usize),
+}
+
+/// A lowered net, with the mapping from assembly names to program buffers.
+#[derive(Debug, Clone)]
+pub struct LoweredNet {
+    /// The reconstructed spec.
+    pub spec: MlpSpec,
+    /// The lowered program + handles (train program when `TRAIN` present).
+    pub mlp: LoweredMlp,
+    /// Was this a training net?
+    pub train: bool,
+    /// Batch size (INPUT rows).
+    pub batch: usize,
+}
+
+/// Parse + lower a whole source file (one program per `NET`).
+pub fn lower_file(text: &str) -> Result<Vec<LoweredNet>, AsmError> {
+    let file = parse(text)?;
+    file.nets.iter().map(lower_net).collect()
+}
+
+/// Lower one `NET` block.
+pub fn lower_net(net: &AsmNet) -> Result<LoweredNet, AsmError> {
+    // Symbol tables.
+    struct Mat {
+        rows: usize,
+        cols: usize,
+    }
+    let mut inputs: Vec<(String, Mat)> = Vec::new();
+    let mut weights: Vec<(String, Mat)> = Vec::new();
+    let mut biases: Vec<(String, usize)> = Vec::new();
+    let mut acts: Vec<(String, ActKind, Option<u32>, Option<AddrMode>, Option<bool>)> = Vec::new();
+    let mut mlps: Vec<(usize, String, String, String, String, String)> = Vec::new();
+    let mut outputs: Vec<(usize, String)> = Vec::new();
+    let mut target: Option<(usize, String, Mat)> = None;
+    let mut train: Option<(usize, f64)> = None;
+    let mut fixed = FixedSpec::PAPER;
+
+    for item in &net.items {
+        match &item.dir {
+            Directive::Net { .. } => unreachable!("parser strips NET"),
+            Directive::Fixed { frac_bits, saturate } => {
+                fixed = FixedSpec::q(*frac_bits);
+                if *saturate {
+                    fixed = fixed.saturating();
+                }
+            }
+            Directive::Input { name, rows, cols } => {
+                inputs.push((name.clone(), Mat { rows: *rows, cols: *cols }))
+            }
+            Directive::Weight { name, rows, cols } => {
+                weights.push((name.clone(), Mat { rows: *rows, cols: *cols }))
+            }
+            Directive::Bias { name, size } => biases.push((name.clone(), *size)),
+            Directive::Act { name, kind, shift, mode, interp } => {
+                acts.push((name.clone(), *kind, *shift, *mode, *interp))
+            }
+            Directive::Mlp { out, input, weight, bias, act } => mlps.push((
+                item.line,
+                out.clone(),
+                input.clone(),
+                weight.clone(),
+                bias.clone(),
+                act.clone(),
+            )),
+            Directive::Output { name } => outputs.push((item.line, name.clone())),
+            Directive::Target { name, rows, cols } => {
+                target = Some((item.line, name.clone(), Mat { rows: *rows, cols: *cols }))
+            }
+            Directive::Train { lr } => train = Some((item.line, *lr)),
+        }
+    }
+
+    let err_structure =
+        |msg: String| -> AsmError { AsmError::Structure(net.name.clone(), msg) };
+    if inputs.len() != 1 {
+        return Err(err_structure(format!("expected exactly 1 INPUT, found {}", inputs.len())));
+    }
+    if mlps.is_empty() {
+        return Err(err_structure("no MLP layers".into()));
+    }
+    if outputs.len() != 1 {
+        return Err(err_structure(format!("expected exactly 1 OUTPUT, found {}", outputs.len())));
+    }
+    let (input_name, input_mat) = (&inputs[0].0, &inputs[0].1);
+    let batch = input_mat.rows;
+
+    // Walk the MLP chain, checking shapes and reconstructing layers.
+    let mut layers: Vec<LayerSpec> = Vec::new();
+    let mut w_names = Vec::new();
+    let mut b_names = Vec::new();
+    let mut prev_out_name = input_name.clone();
+    let mut prev_width = input_mat.cols;
+    let mut lut: Option<LutParams> = None;
+    for (line, out, inp, wname, bname, aname) in &mlps {
+        if inp != &prev_out_name {
+            return Err(AsmError::Shape(
+                *line,
+                format!(
+                    "MLP input {inp:?} must chain from the previous output {prev_out_name:?}"
+                ),
+            ));
+        }
+        let w = weights
+            .iter()
+            .find(|(n, _)| n == wname)
+            .ok_or_else(|| AsmError::Undefined(*line, "weight", wname.clone()))?;
+        let b = biases
+            .iter()
+            .find(|(n, _)| n == bname)
+            .ok_or_else(|| AsmError::Undefined(*line, "bias", bname.clone()))?;
+        let a = acts
+            .iter()
+            .find(|(n, ..)| n == aname)
+            .ok_or_else(|| AsmError::Undefined(*line, "activation", aname.clone()))?;
+        if w.1.rows != prev_width {
+            return Err(AsmError::Shape(
+                *line,
+                format!("weight {wname:?} has {} rows, layer input is {prev_width}", w.1.rows),
+            ));
+        }
+        if b.1 != w.1.cols {
+            return Err(AsmError::Shape(
+                *line,
+                format!("bias {bname:?} size {} != weight cols {}", b.1, w.1.cols),
+            ));
+        }
+        // One ACTPRO generic set per machine: all ACTs must agree.
+        let this_lut = LutParams {
+            shift: a.2.unwrap_or(fixed.frac_bits),
+            mode: a.3.unwrap_or(AddrMode::Wrap),
+            interp: a.4.unwrap_or(false),
+        };
+        match &lut {
+            None => lut = Some(this_lut),
+            Some(prev) if *prev == this_lut => {}
+            Some(_) => return Err(AsmError::LutConflict(*line)),
+        }
+        layers.push(LayerSpec { inputs: w.1.rows, outputs: w.1.cols, act: a.1 });
+        w_names.push(wname.clone());
+        b_names.push(bname.clone());
+        prev_out_name = out.clone();
+        prev_width = w.1.cols;
+    }
+    let (out_line, out_name) = &outputs[0];
+    if out_name != &prev_out_name {
+        return Err(AsmError::Shape(
+            *out_line,
+            format!("OUTPUT {out_name:?} is not the final MLP output {prev_out_name:?}"),
+        ));
+    }
+
+    let spec = MlpSpec {
+        name: net.name.clone(),
+        layers,
+        fixed,
+        lut: lut.unwrap_or(LutParams::PAPER),
+    };
+    spec.check().map_err(|e| AsmError::Lower(net.name.clone(), LowerError::Spec(e)))?;
+
+    // Training nets need TARGET shape (batch × out_dim).
+    let mut mlp = if let Some((tline, tlr)) = train {
+        let (yline, yname, ymat) = target
+            .as_ref()
+            .ok_or_else(|| AsmError::Shape(tline, "TRAIN requires a TARGET".into()))?;
+        if ymat.rows != batch || ymat.cols != spec.output_dim() {
+            return Err(AsmError::Shape(
+                *yline,
+                format!(
+                    "TARGET {yname:?} is {}x{}, expected {batch}x{}",
+                    ymat.rows,
+                    ymat.cols,
+                    spec.output_dim()
+                ),
+            ));
+        }
+        lower_train_step(&spec, batch, tlr)
+            .map_err(|e| AsmError::Lower(net.name.clone(), e))?
+    } else {
+        lower_forward(&spec, batch).map_err(|e| AsmError::Lower(net.name.clone(), e))?
+    };
+
+    // Rename generated buffers to assembly names.
+    rename(&mut mlp, "x", input_name);
+    for (l, wn) in w_names.iter().enumerate() {
+        rename(&mut mlp, &format!("w{l}"), wn);
+        rename(&mut mlp, &format!("b{l}"), &b_names[l]);
+    }
+    let last = spec.layers.len() - 1;
+    rename(&mut mlp, &format!("o{last}"), out_name);
+    if let Some((_, yname, _)) = &target {
+        if train.is_some() {
+            rename(&mut mlp, "y", yname);
+        }
+    }
+    // intermediate MLP outputs get the user's names too
+    for (l, (_, out, ..)) in mlps.iter().enumerate().take(mlps.len() - 1) {
+        rename(&mut mlp, &format!("o{l}"), out);
+    }
+
+    debug_assert!(mlp
+        .program
+        .buffers
+        .iter()
+        .any(|b| b.name == *out_name && matches!(b.kind, BufKind::Output)));
+    Ok(LoweredNet { spec, train: train.is_some(), batch, mlp })
+}
+
+fn rename(mlp: &mut LoweredMlp, from: &str, to: &str) {
+    if from == to {
+        return;
+    }
+    if let Some(id) = mlp.program.buffer_named(from) {
+        mlp.program.buffers[id].name = to.to_string();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{FpgaDevice, MatrixMachine};
+    use crate::util::Rng;
+
+    const FWD: &str = "
+NET fwd
+FIXED 10 saturate
+INPUT img 8 15
+WEIGHT w0 15 16
+BIAS b0 16
+ACT a0 relu shift=5 mode=clamp interp=1
+MLP h img w0 b0 a0
+WEIGHT w1 16 10
+BIAS b1 10
+ACT a1 identity shift=5 mode=clamp interp=1
+MLP scores h w1 b1 a1
+OUTPUT scores
+";
+
+    #[test]
+    fn lowers_forward_net() {
+        let nets = lower_file(FWD).unwrap();
+        assert_eq!(nets.len(), 1);
+        let n = &nets[0];
+        assert!(!n.train);
+        assert_eq!(n.batch, 8);
+        assert_eq!(n.spec.layers.len(), 2);
+        // user names survive
+        let p = &n.mlp.program;
+        for name in ["img", "w0", "b0", "w1", "b1", "scores", "h"] {
+            assert!(p.buffer_named(name).is_some(), "missing {name}");
+        }
+        p.check().unwrap();
+    }
+
+    #[test]
+    fn lowered_net_runs_on_machine() {
+        let nets = lower_file(FWD).unwrap();
+        let p = &nets[0].mlp.program;
+        let mut m = MatrixMachine::new(FpgaDevice::selected(), p).unwrap();
+        let mut r = Rng::new(1);
+        let f = nets[0].spec.fixed;
+        let q = |n: usize, r: &mut Rng| -> Vec<i16> {
+            (0..n).map(|_| f.from_f64(r.gen_f64() - 0.5)).collect()
+        };
+        m.bind(p, "img", &q(8 * 15, &mut r)).unwrap();
+        m.bind(p, "w0", &q(15 * 16, &mut r)).unwrap();
+        m.bind(p, "b0", &q(16, &mut r)).unwrap();
+        m.bind(p, "w1", &q(16 * 10, &mut r)).unwrap();
+        m.bind(p, "b1", &q(10, &mut r)).unwrap();
+        m.run(p).unwrap();
+        assert_eq!(m.read(p, "scores").unwrap().len(), 80);
+    }
+
+    #[test]
+    fn train_net_has_loss_and_target() {
+        let src = format!(
+            "{FWD}TARGET labels 8 10\nTRAIN lr=0.00390625\n"
+        );
+        let nets = lower_file(&src).unwrap();
+        let n = &nets[0];
+        assert!(n.train);
+        assert!(n.mlp.loss.is_some());
+        assert!(n.mlp.program.buffer_named("labels").is_some());
+    }
+
+    #[test]
+    fn chain_errors() {
+        let bad = "
+NET b
+INPUT x 4 2
+WEIGHT w0 3 4
+BIAS b0 4
+ACT a0 relu
+MLP h x w0 b0 a0
+OUTPUT h
+";
+        assert!(matches!(lower_file(bad), Err(AsmError::Shape(_, _))));
+
+        let bad2 = "
+NET b
+INPUT x 4 2
+WEIGHT w0 2 4
+BIAS b0 5
+ACT a0 relu
+MLP h x w0 b0 a0
+OUTPUT h
+";
+        assert!(matches!(lower_file(bad2), Err(AsmError::Shape(_, _))));
+
+        let undef = "
+NET b
+INPUT x 4 2
+BIAS b0 4
+ACT a0 relu
+MLP h x nothere b0 a0
+OUTPUT h
+";
+        assert!(matches!(lower_file(undef), Err(AsmError::Undefined(_, "weight", _))));
+    }
+
+    #[test]
+    fn conflicting_act_options_rejected() {
+        let bad = "
+NET c
+INPUT x 2 2
+WEIGHT w0 2 2
+BIAS b0 2
+ACT a0 relu shift=5
+MLP h x w0 b0 a0
+WEIGHT w1 2 2
+BIAS b1 2
+ACT a1 relu shift=3
+MLP o h w1 b1 a1
+OUTPUT o
+";
+        assert!(matches!(lower_file(bad), Err(AsmError::LutConflict(_))));
+    }
+
+    #[test]
+    fn structural_errors() {
+        assert!(matches!(
+            lower_file("NET n\nINPUT a 1 1\nOUTPUT a"),
+            Err(AsmError::Structure(_, _))
+        ));
+        let two_inputs = "
+NET n
+INPUT a 1 1
+INPUT b 1 1
+WEIGHT w 1 1
+BIAS c 1
+ACT k relu
+MLP o a w c k
+OUTPUT o
+";
+        assert!(matches!(lower_file(two_inputs), Err(AsmError::Structure(_, _))));
+    }
+
+    #[test]
+    fn train_without_target_rejected() {
+        let src = format!("{FWD}TRAIN lr=0.01\n");
+        assert!(matches!(lower_file(&src), Err(AsmError::Shape(_, _))));
+    }
+}

@@ -1,0 +1,33 @@
+//! Neural-network **assembly language** (paper §3.1, Table 1).
+//!
+//! The six Table-1 codes (`INPUT`, `WEIGHT`, `BIAS`, `ACT`, `MLP`,
+//! `OUTPUT`) plus our documented training extensions (`TARGET`, `TRAIN`,
+//! `FIXED`, `NET` block markers — DESIGN.md §4, S4/S20). Example:
+//!
+//! ```text
+//! NET xor_net
+//! FIXED 10 saturate
+//! INPUT x 16 2            ; 16 x 2 data matrix (batch x features)
+//! WEIGHT w0 2 8
+//! BIAS b0 8
+//! ACT a0 tanh shift=5 mode=clamp interp=1
+//! MLP h x w0 b0 a0        ; Table 1: MLP OUTMAT INMAT INMAT INVEC INVEC
+//! WEIGHT w1 8 2
+//! BIAS b1 2
+//! ACT a1 identity shift=5 mode=clamp interp=1
+//! MLP out h w1 b1 a1
+//! OUTPUT out
+//! TARGET y 16 2
+//! TRAIN lr=0.00390625     ; expands to backprop + SGD update waves
+//! ```
+//!
+//! `parse` produces the AST; `lower::lower_file` type-checks the net and
+//! produces one executable [`crate::assembler::Program`] per `NET` block.
+
+pub mod ast;
+pub mod lower;
+pub mod parser;
+
+pub use ast::{AsmFile, AsmNet, Directive, Item};
+pub use lower::{lower_file, lower_net, AsmError, LoweredNet};
+pub use parser::{parse, ParseError};

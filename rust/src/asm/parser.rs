@@ -1,0 +1,255 @@
+//! Parser for the neural-network assembly text format.
+//!
+//! Line-oriented: `;` or `#` start comments, blank lines are skipped,
+//! tokens are whitespace-separated, directives are case-insensitive,
+//! options are `key=value` pairs.
+
+use super::ast::{AsmFile, AsmNet, Directive, Item};
+use crate::nn::lut::{ActKind, AddrMode};
+use thiserror::Error;
+
+/// Parse errors with 1-based line numbers.
+#[derive(Debug, Error, PartialEq)]
+pub enum ParseError {
+    /// Unknown directive word.
+    #[error("line {0}: unknown directive {1:?}")]
+    UnknownDirective(usize, String),
+    /// Wrong argument count or malformed argument.
+    #[error("line {0}: {1}")]
+    BadArgs(usize, String),
+    /// Directive before any `NET`.
+    #[error("line {0}: directive outside a NET block")]
+    OutsideNet(usize),
+    /// Empty file / no NET blocks.
+    #[error("no NET blocks found")]
+    Empty,
+}
+
+fn ident(line: usize, tok: &str) -> Result<String, ParseError> {
+    let ok = !tok.is_empty()
+        && tok.chars().next().unwrap().is_ascii_alphabetic()
+        && tok.chars().all(|c| c.is_ascii_alphanumeric() || c == '_');
+    if ok {
+        Ok(tok.to_string())
+    } else {
+        Err(ParseError::BadArgs(line, format!("bad identifier {tok:?}")))
+    }
+}
+
+fn num<T: std::str::FromStr>(line: usize, tok: &str, what: &str) -> Result<T, ParseError> {
+    tok.parse::<T>()
+        .map_err(|_| ParseError::BadArgs(line, format!("cannot parse {what} from {tok:?}")))
+}
+
+/// Parse one source file.
+pub fn parse(text: &str) -> Result<AsmFile, ParseError> {
+    let mut file = AsmFile::default();
+    let mut current: Option<AsmNet> = None;
+    for (idx, raw) in text.lines().enumerate() {
+        let line = idx + 1;
+        let body = raw.split([';', '#']).next().unwrap_or("").trim();
+        if body.is_empty() {
+            continue;
+        }
+        let toks: Vec<&str> = body.split_whitespace().collect();
+        let dir_word = toks[0].to_ascii_uppercase();
+        let args = &toks[1..];
+        let dir = match dir_word.as_str() {
+            "NET" => {
+                if args.len() != 1 {
+                    return Err(ParseError::BadArgs(line, "NET takes one name".into()));
+                }
+                if let Some(net) = current.take() {
+                    file.nets.push(net);
+                }
+                current = Some(AsmNet { name: ident(line, args[0])?, items: Vec::new() });
+                continue;
+            }
+            "FIXED" => {
+                if args.len() != 2 {
+                    return Err(ParseError::BadArgs(line, "FIXED takes <frac_bits> <wrap|saturate>".into()));
+                }
+                let frac: u32 = num(line, args[0], "frac_bits")?;
+                if frac >= 16 {
+                    return Err(ParseError::BadArgs(line, format!("frac_bits {frac} must be < 16")));
+                }
+                let saturate = match args[1] {
+                    "wrap" => false,
+                    "saturate" => true,
+                    other => {
+                        return Err(ParseError::BadArgs(line, format!("bad mode {other:?}")))
+                    }
+                };
+                Directive::Fixed { frac_bits: frac, saturate }
+            }
+            "INPUT" | "TARGET" | "WEIGHT" => {
+                if args.len() != 3 {
+                    return Err(ParseError::BadArgs(
+                        line,
+                        format!("{dir_word} takes <name> <N> <M>"),
+                    ));
+                }
+                let name = ident(line, args[0])?;
+                let rows = num(line, args[1], "N")?;
+                let cols = num(line, args[2], "M")?;
+                match dir_word.as_str() {
+                    "INPUT" => Directive::Input { name, rows, cols },
+                    "TARGET" => Directive::Target { name, rows, cols },
+                    _ => Directive::Weight { name, rows, cols },
+                }
+            }
+            "BIAS" => {
+                if args.len() != 2 {
+                    return Err(ParseError::BadArgs(line, "BIAS takes <name> <N>".into()));
+                }
+                Directive::Bias { name: ident(line, args[0])?, size: num(line, args[1], "N")? }
+            }
+            "ACT" => {
+                if args.len() < 2 {
+                    return Err(ParseError::BadArgs(line, "ACT takes <name> <kind> [opts]".into()));
+                }
+                let name = ident(line, args[0])?;
+                let kind = ActKind::parse(args[1]).ok_or_else(|| {
+                    ParseError::BadArgs(line, format!("unknown activation {:?}", args[1]))
+                })?;
+                let (mut shift, mut mode, mut interp) = (None, None, None);
+                for opt in &args[2..] {
+                    let (k, v) = opt.split_once('=').ok_or_else(|| {
+                        ParseError::BadArgs(line, format!("bad option {opt:?} (want key=value)"))
+                    })?;
+                    match k {
+                        "shift" => shift = Some(num(line, v, "shift")?),
+                        "mode" => {
+                            mode = Some(match v {
+                                "wrap" => AddrMode::Wrap,
+                                "clamp" => AddrMode::Clamp,
+                                _ => {
+                                    return Err(ParseError::BadArgs(
+                                        line,
+                                        format!("bad mode {v:?}"),
+                                    ))
+                                }
+                            })
+                        }
+                        "interp" => interp = Some(v == "1" || v == "true"),
+                        _ => {
+                            return Err(ParseError::BadArgs(line, format!("unknown option {k:?}")))
+                        }
+                    }
+                }
+                Directive::Act { name, kind, shift, mode, interp }
+            }
+            "MLP" => {
+                if args.len() != 5 {
+                    return Err(ParseError::BadArgs(
+                        line,
+                        "MLP takes <out> <in> <weight> <bias> <act>".into(),
+                    ));
+                }
+                Directive::Mlp {
+                    out: ident(line, args[0])?,
+                    input: ident(line, args[1])?,
+                    weight: ident(line, args[2])?,
+                    bias: ident(line, args[3])?,
+                    act: ident(line, args[4])?,
+                }
+            }
+            "OUTPUT" => {
+                if args.len() != 1 {
+                    return Err(ParseError::BadArgs(line, "OUTPUT takes <name>".into()));
+                }
+                Directive::Output { name: ident(line, args[0])? }
+            }
+            "TRAIN" => {
+                let mut lr = None;
+                for opt in args {
+                    if let Some(v) = opt.strip_prefix("lr=") {
+                        lr = Some(num::<f64>(line, v, "lr")?);
+                    } else {
+                        return Err(ParseError::BadArgs(line, format!("unknown option {opt:?}")));
+                    }
+                }
+                let lr =
+                    lr.ok_or_else(|| ParseError::BadArgs(line, "TRAIN requires lr=<f>".into()))?;
+                Directive::Train { lr }
+            }
+            other => return Err(ParseError::UnknownDirective(line, other.to_string())),
+        };
+        match current.as_mut() {
+            Some(net) => net.items.push(Item { line, dir }),
+            None => return Err(ParseError::OutsideNet(line)),
+        }
+    }
+    if let Some(net) = current.take() {
+        file.nets.push(net);
+    }
+    if file.nets.is_empty() {
+        return Err(ParseError::Empty);
+    }
+    Ok(file)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+; a 2-layer classifier
+NET demo
+FIXED 10 saturate
+INPUT x 16 4        ; batch 16, dim 4
+WEIGHT w0 4 8
+BIAS b0 8
+ACT relu0 relu shift=5 mode=clamp interp=1
+MLP h0 x w0 b0 relu0
+WEIGHT w1 8 3
+BIAS b1 3
+ACT id1 identity shift=5 mode=clamp interp=1
+MLP out h0 w1 b1 id1
+OUTPUT out
+TARGET y 16 3
+TRAIN lr=0.00390625
+"#;
+
+    #[test]
+    fn parses_full_net() {
+        let f = parse(SAMPLE).unwrap();
+        assert_eq!(f.nets.len(), 1);
+        let net = &f.nets[0];
+        assert_eq!(net.name, "demo");
+        assert_eq!(net.items.len(), 13);
+        assert!(matches!(net.items[0].dir, Directive::Fixed { frac_bits: 10, saturate: true }));
+        assert!(matches!(
+            net.items[1].dir,
+            Directive::Input { rows: 16, cols: 4, .. }
+        ));
+        assert!(matches!(net.items.last().unwrap().dir, Directive::Train { lr } if lr == 0.00390625));
+    }
+
+    #[test]
+    fn comments_and_case_insensitivity() {
+        let f = parse("net a\ninput x 2 2 # trailing\n  OutPut x").unwrap();
+        assert_eq!(f.nets[0].items.len(), 2);
+    }
+
+    #[test]
+    fn multiple_nets() {
+        let f = parse("NET a\nINPUT x 1 1\nOUTPUT x\nNET b\nINPUT z 2 2\nOUTPUT z").unwrap();
+        assert_eq!(f.nets.len(), 2);
+        assert_eq!(f.nets[1].name, "b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        assert_eq!(
+            parse("NET a\nBOGUS x"),
+            Err(ParseError::UnknownDirective(2, "BOGUS".into()))
+        );
+        assert_eq!(parse("INPUT x 1 1"), Err(ParseError::OutsideNet(1)));
+        assert_eq!(parse(""), Err(ParseError::Empty));
+        assert!(matches!(parse("NET a\nINPUT x one 1"), Err(ParseError::BadArgs(2, _))));
+        assert!(matches!(parse("NET a\nACT t swish"), Err(ParseError::BadArgs(2, _))));
+        assert!(matches!(parse("NET a\nTRAIN"), Err(ParseError::BadArgs(2, _))));
+        assert!(matches!(parse("NET a\nFIXED 16 wrap"), Err(ParseError::BadArgs(2, _))));
+    }
+}

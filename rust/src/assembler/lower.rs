@@ -1,0 +1,2 @@
+//! Lowering from parsed assembly ([`crate::asm`]) to [`super::Program`].
+//! (Populated alongside the `asm` module.)

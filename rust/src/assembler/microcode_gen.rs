@@ -1,0 +1,256 @@
+//! Microcode generation — the "instructions are decoded into microcodes"
+//! step of §3.3, implemented as the deterministic expansion the global
+//! controller performs at runtime.
+//!
+//! The conventions these sequences follow (word kinds, cycle budgets) are
+//! documented at [`crate::hw::group`], which interprets them. One batch —
+//! operands in, one compute pass, results out — always fits the 16-entry
+//! microcode cache of §4.1 (asserted by tests).
+
+use crate::hw::COLUMN_LEN;
+use crate::isa::microcode::{Microcode, ProcCtrl, MAX_CYCLES, MICROCODE_CACHE_DEPTH, PROCS_PER_GROUP};
+use crate::isa::{ActproOp, MvmOp, Opcode};
+use thiserror::Error;
+
+/// Microcode generation failures.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum GenError {
+    /// Vector longer than an operand column.
+    #[error("vector length {0} exceeds the {COLUMN_LEN}-lane column")]
+    TooLong(usize),
+    /// More processors than the group has.
+    #[error("{0} processors requested; a group has {PROCS_PER_GROUP}")]
+    TooManyProcs(usize),
+    /// Opcode not executable on this group type.
+    #[error("opcode {0} is not an MVM operation")]
+    NotMvmOp(Opcode),
+    /// Zero-length vector.
+    #[error("zero-length vector")]
+    Empty,
+    /// A generated word exceeded the 10-bit cycle field.
+    #[error("cycle budget {0} exceeds the 10-bit microcode field")]
+    CycleOverflow(usize),
+}
+
+fn check_cycles(c: usize) -> Result<u16, GenError> {
+    if c > MAX_CYCLES as usize {
+        Err(GenError::CycleOverflow(c))
+    } else {
+        Ok(c as u16)
+    }
+}
+
+/// All-idle nibbles for MVM words (`MVM_READ` is the halted state).
+fn mvm_idle() -> [ProcCtrl; PROCS_PER_GROUP] {
+    [ProcCtrl::mvm(MvmOp::Read, false); PROCS_PER_GROUP]
+}
+
+/// A write word streaming `pairs` input beats into processor `p`.
+fn mvm_write_word(p: usize, pairs: usize, col: bool) -> Result<Microcode, GenError> {
+    let mut w = Microcode {
+        cycles: check_cycles(pairs + 1)?, // +1 setup (Fig 7)
+        input_col: col,
+        input_ctr_en: true,
+        ..Default::default()
+    };
+    w.proc_ctrl = mvm_idle();
+    w.proc_ctrl[p] = ProcCtrl::mvm(MvmOp::Write, false);
+    Ok(w)
+}
+
+/// Generate the batch program for one MVM group executing `op` on
+/// `nprocs` processors, each over `len`-lane vectors:
+/// per-proc operand loads, one lockstep compute word, per-proc drains.
+pub fn mvm_batch(op: Opcode, len: usize, nprocs: usize) -> Result<Vec<Microcode>, GenError> {
+    let mvm_op = MvmOp::from_opcode(op).ok_or(GenError::NotMvmOp(op))?;
+    if len == 0 {
+        return Err(GenError::Empty);
+    }
+    if len > COLUMN_LEN {
+        return Err(GenError::TooLong(len));
+    }
+    if nprocs == 0 || nprocs > PROCS_PER_GROUP {
+        return Err(GenError::TooManyProcs(nprocs));
+    }
+    let pairs = len.div_ceil(2);
+    let needs_b = !matches!(op, Opcode::VectorSummation);
+    let mut words = Vec::new();
+    // 1) operand loads
+    for p in 0..nprocs {
+        words.push(mvm_write_word(p, pairs, false)?);
+        if needs_b {
+            words.push(mvm_write_word(p, pairs, true)?);
+        }
+    }
+    // 2) lockstep compute
+    let mut compute = Microcode {
+        cycles: check_cycles(len + 8)?, // setup + Fig 8 pipeline
+        ..Default::default()
+    };
+    compute.proc_ctrl = mvm_idle();
+    for pc in compute.proc_ctrl.iter_mut().take(nprocs) {
+        *pc = ProcCtrl::mvm(mvm_op, false);
+    }
+    words.push(compute);
+    // 3) drains (dot/sum produce a single lane)
+    let out_len = match op {
+        Opcode::VectorDotProduct | Opcode::VectorSummation => 1,
+        _ => len,
+    };
+    for p in 0..nprocs {
+        let mut d = Microcode {
+            cycles: check_cycles(out_len)?,
+            output_ctr_en: true,
+            out_mux_sel: p as u8,
+            ..Default::default()
+        };
+        d.proc_ctrl = mvm_idle();
+        words.push(d);
+    }
+    debug_assert!(words.len() <= MICROCODE_CACHE_DEPTH);
+    Ok(words)
+}
+
+/// Generate the batch program for one ACTPRO group applying its loaded
+/// table to `nprocs` × `len`-element vectors.
+pub fn actpro_batch(len: usize, nprocs: usize) -> Result<Vec<Microcode>, GenError> {
+    if len == 0 {
+        return Err(GenError::Empty);
+    }
+    if len > crate::hw::BRAM_DEPTH {
+        return Err(GenError::TooLong(len));
+    }
+    if nprocs == 0 || nprocs > PROCS_PER_GROUP {
+        return Err(GenError::TooManyProcs(nprocs));
+    }
+    let run_len = len + (len & 1); // pad to even
+    let pairs = run_len / 2;
+    let idle = [ProcCtrl::actpro(ActproOp::Read); PROCS_PER_GROUP];
+    let mut words = Vec::new();
+    for p in 0..nprocs {
+        let mut w = Microcode {
+            cycles: check_cycles(pairs + 1)?,
+            input_ctr_en: true,
+            ..Default::default()
+        };
+        w.proc_ctrl = idle;
+        w.proc_ctrl[p] = ProcCtrl::actpro(ActproOp::WriteData);
+        words.push(w);
+    }
+    let mut run = Microcode { cycles: check_cycles(pairs + 6)?, ..Default::default() };
+    run.proc_ctrl = idle;
+    for pc in run.proc_ctrl.iter_mut().take(nprocs) {
+        *pc = ProcCtrl::actpro(ActproOp::Run);
+    }
+    words.push(run);
+    for p in 0..nprocs {
+        let mut d = Microcode {
+            cycles: check_cycles(pairs)?,
+            output_ctr_en: true,
+            out_mux_sel: p as u8,
+            ..Default::default()
+        };
+        d.proc_ctrl = idle;
+        words.push(d);
+    }
+    debug_assert!(words.len() <= MICROCODE_CACHE_DEPTH);
+    Ok(words)
+}
+
+/// Total cycle budget of a generated program.
+pub fn program_cycles(words: &[Microcode]) -> u64 {
+    words.iter().map(|w| w.cycles as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elementwise_batch_shape() {
+        let w = mvm_batch(Opcode::VectorAddition, 512, 4).unwrap();
+        assert_eq!(w.len(), 13); // 8 loads + 1 compute + 4 drains
+        assert_eq!(w[0].cycles, 257); // 256 pairs + setup
+        assert!(!w[0].input_col);
+        assert!(w[1].input_col);
+        assert_eq!(w[8].cycles, 520); // 512 + 8
+        assert_eq!(w[9].cycles, 512);
+        assert_eq!(w[9].out_mux_sel, 0);
+        assert_eq!(w[12].out_mux_sel, 3);
+    }
+
+    #[test]
+    fn sum_skips_operand_b() {
+        let w = mvm_batch(Opcode::VectorSummation, 100, 4).unwrap();
+        assert_eq!(w.len(), 4 + 1 + 4);
+        assert!(w[..4].iter().all(|x| !x.input_col));
+        // single-lane drains
+        assert_eq!(w[5].cycles, 1);
+    }
+
+    #[test]
+    fn dot_drain_is_single_lane() {
+        let w = mvm_batch(Opcode::VectorDotProduct, 512, 2).unwrap();
+        let drains: Vec<_> = w.iter().filter(|x| x.output_ctr_en).collect();
+        assert_eq!(drains.len(), 2);
+        assert!(drains.iter().all(|d| d.cycles == 1));
+    }
+
+    #[test]
+    fn all_batches_fit_cache_and_cycle_fields() {
+        for op in [
+            Opcode::VectorDotProduct,
+            Opcode::VectorSummation,
+            Opcode::VectorAddition,
+            Opcode::VectorSubtraction,
+            Opcode::ElementMultiplication,
+        ] {
+            for len in [1, 2, 3, 100, 511, 512] {
+                for n in 1..=4 {
+                    let w = mvm_batch(op, len, n).unwrap();
+                    assert!(w.len() <= MICROCODE_CACHE_DEPTH, "{op} len={len} n={n}");
+                    assert!(w.iter().all(|x| x.cycles <= MAX_CYCLES));
+                }
+            }
+        }
+        for len in [1, 2, 999, 1024] {
+            for n in 1..=4 {
+                let w = actpro_batch(len, n).unwrap();
+                assert!(w.len() <= MICROCODE_CACHE_DEPTH);
+                assert!(w.iter().all(|x| x.cycles <= MAX_CYCLES));
+            }
+        }
+    }
+
+    #[test]
+    fn errors() {
+        assert_eq!(
+            mvm_batch(Opcode::VectorAddition, 513, 4),
+            Err(GenError::TooLong(513))
+        );
+        assert_eq!(mvm_batch(Opcode::VectorAddition, 5, 5), Err(GenError::TooManyProcs(5)));
+        assert_eq!(
+            mvm_batch(Opcode::ActivationFunction, 5, 4),
+            Err(GenError::NotMvmOp(Opcode::ActivationFunction))
+        );
+        assert_eq!(mvm_batch(Opcode::VectorAddition, 0, 1), Err(GenError::Empty));
+        assert_eq!(actpro_batch(1025, 4), Err(GenError::TooLong(1025)));
+    }
+
+    #[test]
+    fn words_roundtrip_through_encoding() {
+        for w in mvm_batch(Opcode::ElementMultiplication, 77, 3).unwrap() {
+            assert_eq!(Microcode::decode(w.encode()), w);
+        }
+        for w in actpro_batch(200, 4).unwrap() {
+            assert_eq!(Microcode::decode(w.encode()), w);
+        }
+    }
+
+    #[test]
+    fn cycle_budget_helper() {
+        let w = mvm_batch(Opcode::VectorAddition, 2, 1).unwrap();
+        // load A: 2 (1 pair+setup), load B: 2, compute: 10, drain: 2 = 16
+        assert_eq!(program_cycles(&w), 16);
+    }
+}

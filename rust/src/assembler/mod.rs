@@ -1,0 +1,28 @@
+//! The **Matrix Assembler** — the paper's software contribution (§3).
+//!
+//! "The Matrix Assembler takes in neural network assembly codes and
+//! produces instructions and VHDL codes. At runtime, the instructions are
+//! decoded into microcodes... the Matrix Assembler controls the number of
+//! processor groups and the types of processors using the VHDL codes."
+//!
+//! Pipeline implemented here:
+//!
+//! ```text
+//! .nnasm text ──asm::parse──▶ asm::Ast ──lower──▶ Program (vector waves)
+//!                                      │
+//!                                      ├─ encode ─▶ Table-2 instructions (32/48-bit)
+//!                                      ├─ microcode_gen ─▶ Fig-3 microcode words
+//!                                      ├─ resource ─▶ processor-group counts (Eqns 3–4)
+//!                                      └─ vhdl ─▶ generated Matrix Machine VHDL
+//! ```
+
+pub mod lower;
+pub mod microcode_gen;
+pub mod optimizer;
+pub mod program;
+pub mod resource;
+pub mod vhdl;
+
+
+pub use program::{BufId, BufKind, BufferDecl, LaneOp, Program, Step, View, Wave};
+pub use resource::{Allocation, ResourceModel};

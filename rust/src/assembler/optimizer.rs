@@ -1,0 +1,358 @@
+//! Optimisation passes over vector programs — the "high level optimizing
+//! assembler" aspect of §3: the Matrix Assembler "optimizes the assembly
+//! codes and neural network processors".
+//!
+//! Passes (all semantics-preserving; each returns what it changed):
+//!
+//! 1. [`dedup_lut_loads`] — drop `LoadLut` steps that are redundant
+//!    (already-loaded table, or superseded before any activation wave).
+//! 2. [`fuse_waves`] — merge adjacent waves with identical opcode /
+//!    vector length / LUT when no data dependency separates them; fewer,
+//!    wider waves fill more processor groups per instruction.
+//! 3. [`eliminate_dead_waves`] — remove waves whose results are never
+//!    observed (not read later, not persistent state, not stored).
+//!
+//! `optimize` runs all passes to a fixed point.
+
+use super::program::{BufKind, Program, Step, View, Wave};
+use std::collections::HashSet;
+
+/// What the optimiser did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OptReport {
+    /// Redundant LUT loads removed.
+    pub lut_loads_removed: usize,
+    /// Wave pairs merged.
+    pub waves_fused: usize,
+    /// Dead waves removed.
+    pub waves_removed: usize,
+}
+
+impl OptReport {
+    /// Total changes.
+    pub fn total(&self) -> usize {
+        self.lut_loads_removed + self.waves_fused + self.waves_removed
+    }
+}
+
+fn wave_reads(w: &Wave) -> impl Iterator<Item = &View> {
+    w.lanes.iter().flat_map(|l| std::iter::once(&l.a).chain(l.b.as_ref()))
+}
+
+fn wave_writes(w: &Wave) -> impl Iterator<Item = &View> {
+    w.lanes.iter().map(|l| &l.out)
+}
+
+/// Remove `LoadLut` steps that re-load the current table or are
+/// superseded before any activation wave uses them. Runs its two passes
+/// to a fixed point (removing a superseded load can make a later load
+/// redundant).
+pub fn dedup_lut_loads(p: &mut Program) -> usize {
+    let mut total = 0;
+    loop {
+        let n = dedup_lut_loads_once(p);
+        total += n;
+        if n == 0 {
+            return total;
+        }
+    }
+}
+
+fn dedup_lut_loads_once(p: &mut Program) -> usize {
+    let mut removed = 0;
+    // Pass A: drop re-loads of the already-current LUT.
+    let mut current: Option<usize> = None;
+    let mut keep = Vec::with_capacity(p.steps.len());
+    for step in p.steps.drain(..) {
+        match step {
+            Step::LoadLut(l) if current == Some(l) => removed += 1,
+            Step::LoadLut(l) => {
+                current = Some(l);
+                keep.push(Step::LoadLut(l));
+            }
+            other => keep.push(other),
+        }
+    }
+    // Pass B (backwards): drop loads with no ACT wave before the next load.
+    let mut used_since_next_load = false;
+    let mut keep_flags = vec![true; keep.len()];
+    for (i, step) in keep.iter().enumerate().rev() {
+        match step {
+            Step::Wave(w) if w.lut.is_some() => used_since_next_load = true,
+            Step::LoadLut(_) => {
+                if !used_since_next_load {
+                    keep_flags[i] = false;
+                    removed += 1;
+                }
+                used_since_next_load = false;
+            }
+            _ => {}
+        }
+    }
+    p.steps = keep
+        .into_iter()
+        .zip(keep_flags)
+        .filter_map(|(s, k)| k.then_some(s))
+        .collect();
+    removed
+}
+
+/// Merge adjacent compatible waves (same op, vec_len, lut) when the
+/// second reads nothing the first writes and writes nothing the first
+/// touches.
+pub fn fuse_waves(p: &mut Program) -> usize {
+    let mut fused = 0;
+    let mut out: Vec<Step> = Vec::with_capacity(p.steps.len());
+    for step in p.steps.drain(..) {
+        if let (Some(Step::Wave(prev)), Step::Wave(cur)) = (out.last_mut(), &step) {
+            let compatible =
+                prev.op == cur.op && prev.vec_len == cur.vec_len && prev.lut == cur.lut;
+            if compatible && independent(prev, cur) {
+                prev.lanes.extend(cur.lanes.iter().copied());
+                fused += 1;
+                continue;
+            }
+        }
+        out.push(step);
+    }
+    p.steps = out;
+    fused
+}
+
+/// Conservative independence: no buffer written by `a` is touched by `b`,
+/// and no buffer written by `b` is read by `a`.
+fn independent(a: &Wave, b: &Wave) -> bool {
+    let a_writes: HashSet<usize> = wave_writes(a).map(|v| v.buf).collect();
+    let b_writes: HashSet<usize> = wave_writes(b).map(|v| v.buf).collect();
+    let b_touches: HashSet<usize> =
+        wave_reads(b).map(|v| v.buf).chain(b_writes.iter().copied()).collect();
+    if a_writes.intersection(&b_touches).next().is_some() {
+        return false;
+    }
+    wave_reads(a).all(|v| !b_writes.contains(&v.buf))
+}
+
+/// Remove waves whose outputs are never observed: not persistent
+/// (Weight/Bias/Output), not stored to DRAM, and not read by any later
+/// step.
+pub fn eliminate_dead_waves(p: &mut Program) -> usize {
+    let persistent: HashSet<usize> = p
+        .buffers
+        .iter()
+        .enumerate()
+        .filter(|(_, b)| matches!(b.kind, BufKind::Weight | BufKind::Bias | BufKind::Output))
+        .map(|(i, _)| i)
+        .collect();
+    let mut live: HashSet<usize> = persistent;
+    let mut removed = 0;
+    let mut kept_rev: Vec<Step> = Vec::with_capacity(p.steps.len());
+    for step in p.steps.drain(..).rev() {
+        match &step {
+            Step::StoreDram(b) => {
+                live.insert(*b);
+                kept_rev.push(step);
+            }
+            Step::Wave(w) => {
+                let observed = wave_writes(w).any(|v| live.contains(&v.buf));
+                if observed {
+                    for v in wave_reads(w) {
+                        live.insert(v.buf);
+                    }
+                    kept_rev.push(step);
+                } else {
+                    removed += 1;
+                }
+            }
+            _ => kept_rev.push(step),
+        }
+    }
+    kept_rev.reverse();
+    p.steps = kept_rev;
+    removed
+}
+
+/// Run all passes to a fixed point.
+pub fn optimize(p: &mut Program) -> OptReport {
+    let mut report = OptReport::default();
+    loop {
+        let mut changed = 0;
+        let r = dedup_lut_loads(p);
+        report.lut_loads_removed += r;
+        changed += r;
+        let r = fuse_waves(p);
+        report.waves_fused += r;
+        changed += r;
+        let r = eliminate_dead_waves(p);
+        report.waves_removed += r;
+        changed += r;
+        if changed == 0 {
+            return report;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembler::program::{BufKind, LaneOp, Program};
+    use crate::fixed::FixedSpec;
+    use crate::hw::{FpgaDevice, MatrixMachine};
+    use crate::isa::Opcode;
+    use crate::nn::lowering::lower_train_step;
+    use crate::nn::lut::{ActKind, ActLut, AddrMode};
+    use crate::nn::mlp::{LutParams, MlpSpec};
+    use crate::util::Rng;
+
+    const S: FixedSpec = FixedSpec::PAPER;
+
+    fn add_wave(a: usize, b: usize, o: usize, n: usize) -> Step {
+        Step::Wave(Wave {
+            op: Opcode::VectorAddition,
+            vec_len: n,
+            lut: None,
+            lanes: vec![LaneOp {
+                a: View::all(a, n),
+                b: Some(View::all(b, n)),
+                out: View::all(o, n),
+            }],
+        })
+    }
+
+    #[test]
+    fn dedups_redundant_lut_loads() {
+        let mut p = Program::new("t", S);
+        let x = p.buffer("x", 4, 1, BufKind::Output);
+        let l0 = p.lut(ActLut::build(ActKind::Relu, false, S, AddrMode::Clamp, 7));
+        let l1 = p.lut(ActLut::build(ActKind::Relu, true, S, AddrMode::Clamp, 7));
+        let act = |l: usize| {
+            Step::Wave(Wave {
+                op: Opcode::ActivationFunction,
+                vec_len: 4,
+                lut: Some(l),
+                lanes: vec![LaneOp { a: View::all(x, 4), b: None, out: View::all(x, 4) }],
+            })
+        };
+        p.steps = vec![
+            Step::LoadLut(l0),
+            Step::LoadLut(l0), // duplicate
+            act(l0),
+            Step::LoadLut(l1), // superseded with no use
+            Step::LoadLut(l0),
+            act(l0),
+        ];
+        let n = dedup_lut_loads(&mut p);
+        assert_eq!(n, 3); // dup + superseded + (l0 reload is current again)
+        let loads: Vec<_> =
+            p.steps.iter().filter(|s| matches!(s, Step::LoadLut(_))).collect();
+        assert_eq!(loads.len(), 1);
+        p.check().unwrap();
+    }
+
+    #[test]
+    fn fuses_independent_adjacent_waves() {
+        let mut p = Program::new("t", S);
+        let a = p.buffer("a", 8, 1, BufKind::Input);
+        let o1 = p.buffer("o1", 8, 1, BufKind::Output);
+        let o2 = p.buffer("o2", 8, 1, BufKind::Output);
+        p.steps = vec![add_wave(a, a, o1, 8), add_wave(a, a, o2, 8)];
+        assert_eq!(fuse_waves(&mut p), 1);
+        assert_eq!(p.waves().count(), 1);
+        assert_eq!(p.waves().next().unwrap().lanes.len(), 2);
+        p.check().unwrap();
+    }
+
+    #[test]
+    fn does_not_fuse_dependent_waves() {
+        let mut p = Program::new("t", S);
+        let a = p.buffer("a", 8, 1, BufKind::Input);
+        let o1 = p.buffer("o1", 8, 1, BufKind::Output);
+        let o2 = p.buffer("o2", 8, 1, BufKind::Output);
+        // second wave reads o1 written by the first
+        p.steps = vec![add_wave(a, a, o1, 8), add_wave(o1, a, o2, 8)];
+        assert_eq!(fuse_waves(&mut p), 0);
+        assert_eq!(p.waves().count(), 2);
+    }
+
+    #[test]
+    fn removes_dead_waves() {
+        let mut p = Program::new("t", S);
+        let a = p.buffer("a", 8, 1, BufKind::Input);
+        let t1 = p.buffer("t1", 8, 1, BufKind::Temp);
+        let t2 = p.buffer("t2", 8, 1, BufKind::Temp);
+        let o = p.buffer("o", 8, 1, BufKind::Output);
+        p.steps = vec![
+            add_wave(a, a, t1, 8), // live: read below
+            add_wave(a, a, t2, 8), // dead: t2 never read
+            add_wave(t1, a, o, 8),
+        ];
+        assert_eq!(eliminate_dead_waves(&mut p), 1);
+        assert_eq!(p.waves().count(), 2);
+        p.check().unwrap();
+    }
+
+    #[test]
+    fn optimize_preserves_training_semantics() {
+        // Optimised and unoptimised train programs must produce identical
+        // weights and outputs.
+        let fixed = FixedSpec::q(10).saturating();
+        let spec = MlpSpec::from_dims(
+            "opt",
+            &[4, 8, 2],
+            ActKind::Relu,
+            ActKind::Identity,
+            fixed,
+            LutParams::training(fixed),
+        )
+        .unwrap();
+        let h = lower_train_step(&spec, 8, 1.0 / 256.0).unwrap();
+        let mut opt_prog = h.program.clone();
+        // The emitted train program is already fairly tight; whatever the
+        // optimiser does (possibly nothing) must preserve semantics.
+        let _report = optimize(&mut opt_prog);
+        opt_prog.check().unwrap();
+
+        let mut r = Rng::new(3);
+        let q = |n: usize, r: &mut Rng| -> Vec<i16> {
+            (0..n).map(|_| fixed.from_f64(r.gen_f64() - 0.5)).collect()
+        };
+        let binds: Vec<(&str, Vec<i16>)> = vec![
+            ("x", q(8 * 4, &mut r)),
+            ("y", q(8 * 2, &mut r)),
+            ("w0", q(4 * 8, &mut r)),
+            ("b0", q(8, &mut r)),
+            ("w1", q(8 * 2, &mut r)),
+            ("b1", q(2, &mut r)),
+        ];
+        let run = |prog: &Program| -> (Vec<i16>, Vec<i16>) {
+            let mut m = MatrixMachine::new(FpgaDevice::selected(), prog).unwrap();
+            for (n, d) in &binds {
+                m.bind(prog, n, d).unwrap();
+            }
+            m.run(prog).unwrap();
+            (m.read(prog, "w0").unwrap(), m.read(prog, "o1").unwrap())
+        };
+        assert_eq!(run(&h.program), run(&opt_prog));
+    }
+
+    #[test]
+    fn optimize_reduces_cycles() {
+        let fixed = FixedSpec::q(10).saturating();
+        let spec = MlpSpec::from_dims(
+            "opt2",
+            &[8, 16, 4],
+            ActKind::Relu,
+            ActKind::Relu,
+            fixed,
+            LutParams::training(fixed),
+        )
+        .unwrap();
+        let h = lower_train_step(&spec, 16, 1.0 / 256.0).unwrap();
+        let mut opt_prog = h.program.clone();
+        optimize(&mut opt_prog);
+        let cycles = |prog: &Program| {
+            let mut m = MatrixMachine::new(FpgaDevice::selected(), prog).unwrap();
+            m.run(prog).unwrap().cycles
+        };
+        assert!(cycles(&opt_prog) <= cycles(&h.program));
+    }
+}

@@ -1,0 +1,500 @@
+//! The assembler's object code: a **vector program** for one Matrix
+//! Machine.
+//!
+//! Table-2 instructions carry an opcode, a processor-group range and an
+//! iteration count — operand *placement* is implied by the microcode
+//! counters and the global controller's data movement. The executable IR
+//! therefore carries both: each [`Wave`] is one Table-2 instruction's worth
+//! of work (the same opcode across a group range, one vector op per
+//! processor per iteration) *plus* symbolic operand bindings ([`LaneOp`])
+//! that the functional simulator uses to move the right data. The encoded
+//! instruction stream for the hardware is recovered with
+//! [`Program::encode`], and per-wave microcode with
+//! [`super::microcode_gen`].
+
+use crate::fixed::FixedSpec;
+use crate::hw::COLUMN_LEN;
+use crate::isa::{Instruction, InstructionError, Opcode, Width};
+use crate::nn::lut::ActLut;
+use thiserror::Error;
+
+/// Index of a buffer in a [`Program`].
+pub type BufId = usize;
+/// Index of a LUT in a [`Program`].
+pub type LutId = usize;
+
+/// What role a buffer plays (drives DMA direction and launcher binding).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufKind {
+    /// Loaded from DDR before execution (`INPUT` code).
+    Input,
+    /// Loaded from DDR; mutated in place by training (`WEIGHT` code).
+    Weight,
+    /// Loaded from DDR (`BIAS` code).
+    Bias,
+    /// Loaded from DDR; training target (`TARGET` extension).
+    Target,
+    /// Stored back to DDR after execution (`OUTPUT` code).
+    Output,
+    /// Scratch, never leaves the machine.
+    Temp,
+    /// Host-provided constant (e.g. the learning-rate vector), loaded once.
+    Const,
+}
+
+/// One declared buffer: a row-major `rows × cols` matrix of Q.F lanes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BufferDecl {
+    /// Assembly-level name.
+    pub name: String,
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Role.
+    pub kind: BufKind,
+    /// Initial contents (constants); `None` ⇒ zeroed / host-bound.
+    pub init: Option<Vec<i16>>,
+}
+
+impl BufferDecl {
+    /// Total lanes.
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// True when the matrix is empty (never valid in checked programs).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A strided view over a buffer: lanes `offset + i*stride`, `i < len`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct View {
+    /// Buffer index.
+    pub buf: BufId,
+    /// First lane.
+    pub offset: usize,
+    /// Number of lanes.
+    pub len: usize,
+    /// Lane stride (1 = contiguous; `cols` walks a column of a row-major
+    /// matrix).
+    pub stride: usize,
+}
+
+impl View {
+    /// Contiguous view.
+    pub fn contiguous(buf: BufId, offset: usize, len: usize) -> View {
+        View { buf, offset, len, stride: 1 }
+    }
+
+    /// Whole-buffer view.
+    pub fn all(buf: BufId, len: usize) -> View {
+        View::contiguous(buf, 0, len)
+    }
+
+    /// Index of the last lane touched.
+    pub fn max_lane(&self) -> usize {
+        self.offset + (self.len - 1) * self.stride
+    }
+}
+
+/// One vector operation bound to operands (one processor × one iteration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneOp {
+    /// First operand (A column).
+    pub a: View,
+    /// Second operand (B column); `None` for unary ops (SUM, ACT).
+    pub b: Option<View>,
+    /// Destination.
+    pub out: View,
+}
+
+/// A wave = one Table-2 instruction's worth of parallel vector ops.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Wave {
+    /// Instruction opcode.
+    pub op: Opcode,
+    /// Operand vector length (lanes per [`LaneOp`] input).
+    pub vec_len: usize,
+    /// For `ACTIVATION_FUNCTION` waves: which LUT to have loaded.
+    pub lut: Option<LutId>,
+    /// Independent vector ops, distributed over processors.
+    pub lanes: Vec<LaneOp>,
+}
+
+impl Wave {
+    /// Iteration count when spread over `procs` processors (the Table-2
+    /// iteration field: each processor loops `ceil(lanes/procs)` times).
+    pub fn iterations(&self, procs: usize) -> u32 {
+        (self.lanes.len().div_ceil(procs.max(1))) as u32
+    }
+}
+
+/// One step of the machine-level schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Step {
+    /// DMA a buffer DDR → machine (charged by the DDR model).
+    LoadDram(BufId),
+    /// DMA a buffer machine → DDR.
+    StoreDram(BufId),
+    /// Stream a LUT into the ACTPRO groups (`ACTPRO_WRITE_ACT`).
+    LoadLut(LutId),
+    /// Execute a wave of vector ops.
+    Wave(Wave),
+}
+
+/// A complete vector program for one Matrix Machine.
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// Program name (assembly `NET` name).
+    pub name: String,
+    /// Declared buffers; indices are [`BufId`]s.
+    pub buffers: Vec<BufferDecl>,
+    /// Activation tables; indices are [`LutId`]s.
+    pub luts: Vec<ActLut>,
+    /// Schedule.
+    pub steps: Vec<Step>,
+    /// Datapath fixed-point format.
+    pub fixed: FixedSpec,
+}
+
+/// Program validation errors.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum ProgramError {
+    /// A view refers to a missing buffer.
+    #[error("step {0}: view references undeclared buffer {1}")]
+    UnknownBuffer(usize, BufId),
+    /// A view reads/writes beyond its buffer.
+    #[error("step {0}: view out of bounds (buffer {1} has {2} lanes, view touches lane {3})")]
+    OutOfBounds(usize, BufId, usize, usize),
+    /// Operand lengths disagree.
+    #[error("step {0}: operand length mismatch")]
+    LengthMismatch(usize),
+    /// Vector longer than a column.
+    #[error("step {0}: vector length {1} exceeds the {COLUMN_LEN}-lane column")]
+    TooLong(usize, usize),
+    /// Binary op missing B, or unary op with B.
+    #[error("step {0}: operand arity wrong for {1}")]
+    Arity(usize, Opcode),
+    /// Activation wave without a LUT, or unknown LUT id.
+    #[error("step {0}: bad LUT reference")]
+    BadLut(usize),
+    /// Zero-length vector or empty wave.
+    #[error("step {0}: empty wave or zero-length vector")]
+    Empty(usize),
+}
+
+impl Program {
+    /// New empty program.
+    pub fn new(name: &str, fixed: FixedSpec) -> Program {
+        Program { name: name.to_string(), buffers: Vec::new(), luts: Vec::new(), steps: Vec::new(), fixed }
+    }
+
+    /// Declare a buffer, returning its id.
+    pub fn buffer(&mut self, name: &str, rows: usize, cols: usize, kind: BufKind) -> BufId {
+        self.buffers.push(BufferDecl { name: name.to_string(), rows, cols, kind, init: None });
+        self.buffers.len() - 1
+    }
+
+    /// Declare a constant buffer with initial contents.
+    pub fn const_buffer(&mut self, name: &str, data: Vec<i16>) -> BufId {
+        let rows = data.len();
+        self.buffers.push(BufferDecl {
+            name: name.to_string(),
+            rows,
+            cols: 1,
+            kind: BufKind::Const,
+            init: Some(data),
+        });
+        self.buffers.len() - 1
+    }
+
+    /// Register a LUT, returning its id.
+    pub fn lut(&mut self, lut: ActLut) -> LutId {
+        self.luts.push(lut);
+        self.luts.len() - 1
+    }
+
+    /// Find a buffer by name.
+    pub fn buffer_named(&self, name: &str) -> Option<BufId> {
+        self.buffers.iter().position(|b| b.name == name)
+    }
+
+    /// All waves in schedule order.
+    pub fn waves(&self) -> impl Iterator<Item = &Wave> {
+        self.steps.iter().filter_map(|s| match s {
+            Step::Wave(w) => Some(w),
+            _ => None,
+        })
+    }
+
+    /// Total lane-operations (vector-op count × vector length) — the
+    /// work metric used by benches.
+    pub fn total_lane_ops(&self) -> u64 {
+        self.waves().map(|w| (w.lanes.len() * w.vec_len) as u64).sum()
+    }
+
+    /// Validate every step (bounds, arity, lengths, LUT references).
+    pub fn check(&self) -> Result<(), ProgramError> {
+        for (si, step) in self.steps.iter().enumerate() {
+            match step {
+                Step::LoadDram(b) | Step::StoreDram(b) => {
+                    if *b >= self.buffers.len() {
+                        return Err(ProgramError::UnknownBuffer(si, *b));
+                    }
+                }
+                Step::LoadLut(l) => {
+                    if *l >= self.luts.len() {
+                        return Err(ProgramError::BadLut(si));
+                    }
+                }
+                Step::Wave(w) => self.check_wave(si, w)?,
+            }
+        }
+        Ok(())
+    }
+
+    fn check_view(&self, si: usize, v: &View) -> Result<(), ProgramError> {
+        let decl = self.buffers.get(v.buf).ok_or(ProgramError::UnknownBuffer(si, v.buf))?;
+        if v.len == 0 {
+            return Err(ProgramError::Empty(si));
+        }
+        if v.max_lane() >= decl.len() {
+            return Err(ProgramError::OutOfBounds(si, v.buf, decl.len(), v.max_lane()));
+        }
+        Ok(())
+    }
+
+    fn check_wave(&self, si: usize, w: &Wave) -> Result<(), ProgramError> {
+        if w.lanes.is_empty() || w.vec_len == 0 {
+            return Err(ProgramError::Empty(si));
+        }
+        if w.vec_len > COLUMN_LEN {
+            return Err(ProgramError::TooLong(si, w.vec_len));
+        }
+        let binary = matches!(
+            w.op,
+            Opcode::VectorDotProduct
+                | Opcode::VectorAddition
+                | Opcode::VectorSubtraction
+                | Opcode::ElementMultiplication
+        );
+        if w.op == Opcode::ActivationFunction {
+            match w.lut {
+                Some(l) if l < self.luts.len() => {}
+                _ => return Err(ProgramError::BadLut(si)),
+            }
+        }
+        for lane in &w.lanes {
+            if lane.a.len != w.vec_len {
+                return Err(ProgramError::LengthMismatch(si));
+            }
+            self.check_view(si, &lane.a)?;
+            match (&lane.b, binary) {
+                (Some(b), true) => {
+                    if b.len != w.vec_len {
+                        return Err(ProgramError::LengthMismatch(si));
+                    }
+                    self.check_view(si, b)?;
+                }
+                (None, false) => {}
+                _ => return Err(ProgramError::Arity(si, w.op)),
+            }
+            let out_len = match w.op {
+                Opcode::VectorDotProduct | Opcode::VectorSummation => 1,
+                _ => w.vec_len,
+            };
+            if lane.out.len != out_len {
+                return Err(ProgramError::LengthMismatch(si));
+            }
+            self.check_view(si, &lane.out)?;
+        }
+        Ok(())
+    }
+
+    /// Encode the wave schedule as Table-2 instruction words for a machine
+    /// with `mvm_groups`/`actpro_groups` processor groups (MVM waves spread
+    /// over the MVM groups, activation waves over the ACTPRO groups).
+    pub fn encode(
+        &self,
+        width: Width,
+        mvm_groups: usize,
+        actpro_groups: usize,
+    ) -> Result<Vec<Instruction>, InstructionError> {
+        let mut out = Vec::new();
+        for w in self.waves() {
+            let groups = if w.op == Opcode::ActivationFunction { actpro_groups } else { mvm_groups }
+                .max(1);
+            let groups = groups.min(width.max_groups() as usize);
+            // Use as many groups as there are lanes to fill.
+            let used = groups.min(w.lanes.len().div_ceil(crate::hw::PROCS_PER_GROUP)).max(1);
+            let procs = used * crate::hw::PROCS_PER_GROUP;
+            out.push(Instruction::new(
+                w.op,
+                0,
+                (used - 1) as u16,
+                w.iterations(procs),
+            ));
+        }
+        // Terminating NOP (global controller's end-of-program marker).
+        out.push(Instruction::nop());
+        for i in &out {
+            i.encode(width)?;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::lut::{ActKind, ActLut, AddrMode};
+
+    fn sample_program() -> Program {
+        let mut p = Program::new("t", FixedSpec::PAPER);
+        let x = p.buffer("x", 4, 1, BufKind::Input);
+        let y = p.buffer("y", 4, 1, BufKind::Output);
+        let lut = p.lut(ActLut::build(ActKind::Relu, false, FixedSpec::PAPER, AddrMode::Clamp, 7));
+        p.steps.push(Step::LoadDram(x));
+        p.steps.push(Step::LoadLut(lut));
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::VectorAddition,
+            vec_len: 4,
+            lut: None,
+            lanes: vec![LaneOp {
+                a: View::all(x, 4),
+                b: Some(View::all(x, 4)),
+                out: View::all(y, 4),
+            }],
+        }));
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::ActivationFunction,
+            vec_len: 4,
+            lut: Some(lut),
+            lanes: vec![LaneOp { a: View::all(y, 4), b: None, out: View::all(y, 4) }],
+        }));
+        p.steps.push(Step::StoreDram(y));
+        p
+    }
+
+    #[test]
+    fn valid_program_checks() {
+        sample_program().check().unwrap();
+    }
+
+    #[test]
+    fn detects_out_of_bounds() {
+        let mut p = sample_program();
+        if let Step::Wave(w) = &mut p.steps[2] {
+            w.lanes[0].a.len = 5;
+            w.vec_len = 5;
+        }
+        assert!(matches!(p.check(), Err(ProgramError::OutOfBounds(2, _, 4, 4))));
+    }
+
+    #[test]
+    fn detects_arity_errors() {
+        let mut p = sample_program();
+        if let Step::Wave(w) = &mut p.steps[2] {
+            w.lanes[0].b = None;
+        }
+        assert!(matches!(p.check(), Err(ProgramError::Arity(2, Opcode::VectorAddition))));
+    }
+
+    #[test]
+    fn detects_missing_lut() {
+        let mut p = sample_program();
+        if let Step::Wave(w) = &mut p.steps[3] {
+            w.lut = None;
+        }
+        assert!(matches!(p.check(), Err(ProgramError::BadLut(3))));
+    }
+
+    #[test]
+    fn dot_output_must_be_single_lane() {
+        let mut p = Program::new("d", FixedSpec::PAPER);
+        let a = p.buffer("a", 8, 1, BufKind::Input);
+        let o = p.buffer("o", 8, 1, BufKind::Output);
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::VectorDotProduct,
+            vec_len: 8,
+            lut: None,
+            lanes: vec![LaneOp {
+                a: View::all(a, 8),
+                b: Some(View::all(a, 8)),
+                out: View::all(o, 8), // wrong: dot yields 1 lane
+            }],
+        }));
+        assert_eq!(p.check(), Err(ProgramError::LengthMismatch(0)));
+    }
+
+    #[test]
+    fn strided_views_bounds() {
+        // column of a 4x3 row-major matrix: offset=2, stride=3, len=4 → max
+        // lane 2+3*3=11 < 12 OK
+        let v = View { buf: 0, offset: 2, len: 4, stride: 3 };
+        assert_eq!(v.max_lane(), 11);
+    }
+
+    #[test]
+    fn encoding_produces_instruction_per_wave_plus_nop() {
+        let p = sample_program();
+        let instrs = p.encode(Width::W32, 4, 2).unwrap();
+        assert_eq!(instrs.len(), 3); // 2 waves + NOP
+        assert_eq!(instrs[0].op, Opcode::VectorAddition);
+        assert_eq!(instrs[0].iterations, 1);
+        assert_eq!(instrs[2].op, Opcode::Nop);
+    }
+
+    #[test]
+    fn w48_encoding_covers_group_counts_beyond_128() {
+        // A hypothetical 200-group machine exceeds the 32-bit format's
+        // 128-group limit (sec 3.2) but fits the 48-bit one.
+        let mut p = Program::new("wide", FixedSpec::PAPER);
+        let a = p.buffer("a", 4096, 4, BufKind::Input);
+        let o = p.buffer("o", 4096, 1, BufKind::Output);
+        let lanes: Vec<LaneOp> = (0..4096)
+            .map(|i| LaneOp {
+                a: View::contiguous(a, i * 4, 4),
+                b: Some(View::contiguous(a, i * 4, 4)),
+                out: View::contiguous(o, i, 1),
+            })
+            .collect();
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::VectorDotProduct,
+            vec_len: 4,
+            lut: None,
+            lanes,
+        }));
+        let instrs = p.encode(Width::W48, 200, 4).unwrap();
+        assert!(instrs[0].proc_end >= 128, "should use >128 groups: {}", instrs[0]);
+        assert!(instrs[0].encode(Width::W48).is_ok());
+        assert!(instrs[0].encode(Width::W32).is_err(), "W32 cannot hold the range");
+        // the 32-bit encoding clamps the machine to its 128-group limit
+        let instrs32 = p.encode(Width::W32, 200, 4).unwrap();
+        assert!(instrs32[0].proc_end < 128, "{}", instrs32[0]);
+    }
+
+    #[test]
+    fn iteration_counts_split_over_processors() {
+        let w = Wave {
+            op: Opcode::VectorAddition,
+            vec_len: 4,
+            lut: None,
+            lanes: vec![
+                LaneOp { a: View::all(0, 4), b: Some(View::all(0, 4)), out: View::all(1, 4) };
+                33
+            ],
+        };
+        assert_eq!(w.iterations(16), 3); // ceil(33/16)
+        assert_eq!(w.iterations(64), 1);
+    }
+
+    #[test]
+    fn total_lane_ops_counts_work() {
+        let p = sample_program();
+        assert_eq!(p.total_lane_ops(), 8); // two 4-lane waves
+    }
+}

@@ -1,0 +1,152 @@
+//! Resource allocation — Eqns 3–4 and Table 3 (paper §3.4).
+//!
+//! "The Matrix Assembler determines the optimal number of processor groups
+//! in order to fully utilize the FPGA's resources."
+//!
+//! * Eqn 3: `N_MVM_PG = N_DDR · CLK_DDR / CLK_FPGA` — MVM group count is
+//!   sized to saturate the DDR channels.
+//! * Eqn 4: `N_ACTPRO_PG = min(LUT/LUT_pg, FF/FF_pg, BRAM/BRAM_pg)` over
+//!   the *leftover* fabric after the MVM groups are placed.
+
+use crate::perf::catalog::FpgaPart;
+
+/// Per-group resource usage (paper Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupUsage {
+    /// 6-input LUTs.
+    pub luts: u32,
+    /// Flip-flops.
+    pub ffs: u32,
+    /// RAMB18K blocks.
+    pub bram18: u32,
+    /// DSP48E1 slices.
+    pub dsps: u32,
+}
+
+/// Table 3 row `MVM_PG`.
+pub const MVM_PG_USAGE: GroupUsage = GroupUsage { luts: 495, ffs: 1642, bram18: 8, dsps: 4 };
+/// Table 3 row `ACTPRO_PG`.
+pub const ACTPRO_PG_USAGE: GroupUsage = GroupUsage { luts: 447, ffs: 1406, bram18: 12, dsps: 0 };
+
+/// The resource model for one target part.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceModel {
+    /// Target device.
+    pub part: &'static FpgaPart,
+}
+
+/// A computed allocation for one FPGA.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Allocation {
+    /// Eqn 3: MVM processor groups.
+    pub mvm_groups: u32,
+    /// Eqn 4: activation processor groups.
+    pub actpro_groups: u32,
+    /// Fabric left after both allocations.
+    pub leftover: GroupUsage,
+}
+
+impl ResourceModel {
+    /// Model for a catalog part.
+    pub fn new(part: &'static FpgaPart) -> ResourceModel {
+        ResourceModel { part }
+    }
+
+    /// Eqn 3 (floored to an integer group count, capped by DSP supply —
+    /// the paper's §2 scaling requirement: "if the FPGA has a low number
+    /// of DSPs, then the Matrix Assembler reduces the number of Mini
+    /// Vector Machines").
+    pub fn mvm_groups(&self) -> u32 {
+        let eqn3 = (self.part.ddr_channels as f64 * self.part.ddr_clock_mhz
+            / self.part.fpga_clock_mhz)
+            .floor() as u32;
+        let dsp_cap = self.part.dsps / MVM_PG_USAGE.dsps;
+        let lut_cap = self.part.luts / MVM_PG_USAGE.luts;
+        let ff_cap = self.part.ffs / MVM_PG_USAGE.ffs;
+        let bram_cap = self.part.bram18 / MVM_PG_USAGE.bram18;
+        eqn3.min(dsp_cap).min(lut_cap).min(ff_cap).min(bram_cap)
+    }
+
+    /// Eqn 4 over leftover fabric.
+    pub fn actpro_groups(&self) -> u32 {
+        let n = self.mvm_groups();
+        let lut_left = self.part.luts - n * MVM_PG_USAGE.luts;
+        let ff_left = self.part.ffs - n * MVM_PG_USAGE.ffs;
+        let bram_left = self.part.bram18 - n * MVM_PG_USAGE.bram18;
+        (lut_left / ACTPRO_PG_USAGE.luts)
+            .min(ff_left / ACTPRO_PG_USAGE.ffs)
+            .min(bram_left / ACTPRO_PG_USAGE.bram18)
+    }
+
+    /// Full allocation with leftovers.
+    pub fn allocate(&self) -> Allocation {
+        let m = self.mvm_groups();
+        let a = self.actpro_groups();
+        let leftover = GroupUsage {
+            luts: self.part.luts - m * MVM_PG_USAGE.luts - a * ACTPRO_PG_USAGE.luts,
+            ffs: self.part.ffs - m * MVM_PG_USAGE.ffs - a * ACTPRO_PG_USAGE.ffs,
+            bram18: self.part.bram18 - m * MVM_PG_USAGE.bram18 - a * ACTPRO_PG_USAGE.bram18,
+            dsps: self.part.dsps - m * MVM_PG_USAGE.dsps,
+        };
+        Allocation { mvm_groups: m, actpro_groups: a, leftover }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::catalog::{FpgaPart, CATALOG};
+
+    #[test]
+    fn table3_constants() {
+        assert_eq!(MVM_PG_USAGE, GroupUsage { luts: 495, ffs: 1642, bram18: 8, dsps: 4 });
+        assert_eq!(ACTPRO_PG_USAGE, GroupUsage { luts: 447, ffs: 1406, bram18: 12, dsps: 0 });
+    }
+
+    #[test]
+    fn eqn3_on_selected_part() {
+        // XC7S75-2: 4 channels × 400 MHz / 100 MHz = 16 MVM groups.
+        let m = ResourceModel::new(FpgaPart::selected());
+        assert_eq!(m.mvm_groups(), 16);
+    }
+
+    #[test]
+    fn eqn4_on_selected_part() {
+        // Leftover after 16 MVM_PG on XC7S75-2:
+        //   LUT 48000−16·495=40080 → /447 = 89
+        //   FF  96000−16·1642=69728 → /1406 = 49
+        //   BRAM 180−16·8=52 → /12 = 4   ← binding
+        let m = ResourceModel::new(FpgaPart::selected());
+        assert_eq!(m.actpro_groups(), 4);
+        let a = m.allocate();
+        assert_eq!(a.mvm_groups, 16);
+        assert_eq!(a.actpro_groups, 4);
+        assert_eq!(a.leftover.bram18, 52 - 48);
+        assert_eq!(a.leftover.dsps, 140 - 64);
+    }
+
+    #[test]
+    fn dsp_supply_caps_small_parts() {
+        // XC7S50-2: Eqn 3 gives 2·400/100 = 8 groups; DSP cap is
+        // 120/4 = 30 → Eqn 3 binds. Sanity: every part ends with
+        // non-negative leftovers and nonzero groups.
+        for p in &CATALOG {
+            let a = ResourceModel::new(p).allocate();
+            assert!(a.mvm_groups > 0, "{}", p.name);
+            assert!(a.actpro_groups > 0, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn allocation_never_oversubscribes() {
+        for p in &CATALOG {
+            let a = ResourceModel::new(p).allocate();
+            let lut = a.mvm_groups * MVM_PG_USAGE.luts + a.actpro_groups * ACTPRO_PG_USAGE.luts;
+            let ff = a.mvm_groups * MVM_PG_USAGE.ffs + a.actpro_groups * ACTPRO_PG_USAGE.ffs;
+            let bram =
+                a.mvm_groups * MVM_PG_USAGE.bram18 + a.actpro_groups * ACTPRO_PG_USAGE.bram18;
+            let dsp = a.mvm_groups * MVM_PG_USAGE.dsps;
+            assert!(lut <= p.luts && ff <= p.ffs && bram <= p.bram18 && dsp <= p.dsps, "{}", p.name);
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Micro-benchmark harness — a small criterion substitute (criterion is not
+//! in the sandbox's vendored crate set; see DESIGN.md §2).
+//!
+//! Usage from a `[[bench]] harness = false` binary:
+//!
+//! ```no_run
+//! use mfnn::bench::{Bencher, Suite};
+//! let mut suite = Suite::new("group_perf");
+//! suite.bench("vec_add_1024", |b: &mut Bencher| {
+//!     let xs = vec![1i16; 1024];
+//!     b.iter_with_elements(1024, || xs.iter().map(|&x| x as i64).sum::<i64>());
+//! });
+//! suite.finish();
+//! ```
+//!
+//! Each benchmark runs a warmup phase then collects wall-clock samples and
+//! reports mean / median / p95 / min plus element throughput when the
+//! workload declares its element count.
+
+use crate::report::Table;
+use std::time::{Duration, Instant};
+
+/// Collected statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    /// Benchmark name.
+    pub name: String,
+    /// Number of measured samples.
+    pub samples: usize,
+    /// Iterations per sample.
+    pub iters_per_sample: u64,
+    /// Mean time per iteration (ns).
+    pub mean_ns: f64,
+    /// Median time per iteration (ns).
+    pub median_ns: f64,
+    /// 95th percentile time per iteration (ns).
+    pub p95_ns: f64,
+    /// Fastest sample per-iteration time (ns).
+    pub min_ns: f64,
+    /// Elements processed per iteration (0 = not declared).
+    pub elements: u64,
+}
+
+impl Stats {
+    /// Element throughput in elements/second (None unless declared).
+    pub fn throughput(&self) -> Option<f64> {
+        if self.elements == 0 || self.median_ns == 0.0 {
+            None
+        } else {
+            Some(self.elements as f64 / (self.median_ns * 1e-9))
+        }
+    }
+}
+
+/// Passed to each benchmark closure; call one of the `iter*` methods once.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    max_samples: usize,
+    result: Option<(u64, Vec<Duration>, u64)>, // (iters/sample, samples, elements)
+}
+
+impl Bencher {
+    fn new(warmup: Duration, measure: Duration, max_samples: usize) -> Bencher {
+        Bencher { warmup, measure, max_samples, result: None }
+    }
+
+    /// Measure `f`, which is treated as processing `elements` items per call.
+    pub fn iter_with_elements<T, F: FnMut() -> T>(&mut self, elements: u64, mut f: F) {
+        // Warmup + calibration: find iters/sample so one sample ≈ 1–10 ms.
+        let warm_end = Instant::now() + self.warmup;
+        let mut calib_iters: u64 = 0;
+        let calib_start = Instant::now();
+        loop {
+            std::hint::black_box(f());
+            calib_iters += 1;
+            if Instant::now() >= warm_end {
+                break;
+            }
+        }
+        let per_iter = calib_start.elapsed().as_secs_f64() / calib_iters as f64;
+        let target_sample = 2e-3; // 2 ms per sample
+        let iters_per_sample = ((target_sample / per_iter.max(1e-9)) as u64).clamp(1, 1 << 24);
+
+        let mut samples = Vec::new();
+        let measure_end = Instant::now() + self.measure;
+        while samples.len() < self.max_samples
+            && (samples.len() < 8 || Instant::now() < measure_end)
+        {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed());
+            if samples.len() >= 8 && Instant::now() >= measure_end {
+                break;
+            }
+        }
+        self.result = Some((iters_per_sample, samples, elements));
+    }
+
+    /// Measure `f` with no element-count (latency only).
+    pub fn iter<T, F: FnMut() -> T>(&mut self, f: F) {
+        self.iter_with_elements(0, f)
+    }
+}
+
+/// A named collection of benchmarks that prints a table at the end.
+pub struct Suite {
+    name: String,
+    warmup: Duration,
+    measure: Duration,
+    max_samples: usize,
+    results: Vec<Stats>,
+    quick: bool,
+}
+
+impl Suite {
+    /// New suite with default timing (0.3 s warmup, 1 s measure, 64 samples).
+    /// Set env `MFNN_BENCH_QUICK=1` for a fast smoke run (CI / tests).
+    pub fn new(name: &str) -> Suite {
+        let quick = std::env::var("MFNN_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+        let (warmup, measure) = if quick {
+            (Duration::from_millis(20), Duration::from_millis(60))
+        } else {
+            (Duration::from_millis(300), Duration::from_secs(1))
+        };
+        Suite { name: name.to_string(), warmup, measure, max_samples: 64, results: Vec::new(), quick }
+    }
+
+    /// Is this a quick (smoke) run?
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Run one benchmark.
+    pub fn bench<F: FnOnce(&mut Bencher)>(&mut self, name: &str, f: F) -> &Stats {
+        let mut b = Bencher::new(self.warmup, self.measure, self.max_samples);
+        f(&mut b);
+        let (iters, samples, elements) =
+            b.result.expect("benchmark closure must call one of Bencher::iter*");
+        let mut per_iter_ns: Vec<f64> =
+            samples.iter().map(|d| d.as_secs_f64() * 1e9 / iters as f64).collect();
+        per_iter_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = per_iter_ns.len();
+        let stats = Stats {
+            name: name.to_string(),
+            samples: n,
+            iters_per_sample: iters,
+            mean_ns: per_iter_ns.iter().sum::<f64>() / n as f64,
+            median_ns: per_iter_ns[n / 2],
+            p95_ns: per_iter_ns[(n * 95 / 100).min(n - 1)],
+            min_ns: per_iter_ns[0],
+            elements,
+        };
+        eprintln!(
+            "  {:<40} median {:>12} p95 {:>12}{}",
+            name,
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.p95_ns),
+            stats
+                .throughput()
+                .map(|t| format!("  {:>12}/s", fmt_count(t)))
+                .unwrap_or_default()
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All collected stats.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Print the summary table; returns it for further use.
+    pub fn finish(&self) -> Table {
+        let mut t = Table::new(vec!["benchmark", "median", "mean", "p95", "min", "throughput"])
+            .with_title(format!("bench: {}", self.name))
+            .numeric();
+        for s in &self.results {
+            t.row(vec![
+                s.name.clone(),
+                fmt_ns(s.median_ns),
+                fmt_ns(s.mean_ns),
+                fmt_ns(s.p95_ns),
+                fmt_ns(s.min_ns),
+                s.throughput().map(|x| format!("{}/s", fmt_count(x))).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        println!("{}", t.render());
+        t
+    }
+}
+
+/// Human-format a nanosecond duration.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Human-format a large count (K/M/G).
+pub fn fmt_count(x: f64) -> String {
+    if x < 1e3 {
+        format!("{x:.0}")
+    } else if x < 1e6 {
+        format!("{:.1}K", x / 1e3)
+    } else if x < 1e9 {
+        format!("{:.1}M", x / 1e6)
+    } else {
+        format!("{:.2}G", x / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_collects_samples() {
+        std::env::set_var("MFNN_BENCH_QUICK", "1");
+        let mut suite = Suite::new("selftest");
+        let s = suite.bench("noop_sum", |b| {
+            let xs: Vec<u64> = (0..64).collect();
+            b.iter_with_elements(64, || xs.iter().sum::<u64>())
+        });
+        assert!(s.samples >= 8);
+        assert!(s.median_ns > 0.0);
+        assert!(s.throughput().unwrap() > 0.0);
+        let t = suite.finish();
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(5.0), "5.0 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_count(999.0), "999");
+        assert_eq!(fmt_count(2.5e6), "2.5M");
+        assert_eq!(fmt_count(3.95e8), "395.0M");
+    }
+}

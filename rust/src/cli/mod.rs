@@ -1,0 +1,303 @@
+//! Command-line argument parsing (hand-rolled; `clap` is not available in
+//! the sandbox's vendored crate set).
+//!
+//! Supports: subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! arguments, `-h/--help` text generation, and typed accessors with
+//! defaults. The `mfnn` binary defines its subcommands in
+//! `rust/src/main.rs`; this module is generic.
+
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+/// CLI parse errors.
+#[derive(Debug, Error, PartialEq)]
+pub enum CliError {
+    /// Option is not declared in the spec.
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    /// Declared value-taking option used without a value.
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    /// Value failed to parse as the requested type.
+    #[error("option --{0}: cannot parse {1:?} as {2}")]
+    BadValue(String, String, &'static str),
+    /// More positional args than declared.
+    #[error("unexpected positional argument {0:?}")]
+    UnexpectedPositional(String),
+    /// Required positional missing.
+    #[error("missing required argument <{0}>")]
+    MissingPositional(&'static str),
+}
+
+/// Whether an option takes a value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arity {
+    /// Boolean switch.
+    Flag,
+    /// Takes one value.
+    Value,
+}
+
+/// One declared option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    /// Long name without the leading `--`.
+    pub name: &'static str,
+    /// Flag or value-taking.
+    pub arity: Arity,
+    /// One-line help text.
+    pub help: &'static str,
+    /// Shown default in help output (informational only).
+    pub default: Option<&'static str>,
+}
+
+/// A declared positional argument.
+#[derive(Debug, Clone)]
+pub struct PosSpec {
+    /// Name shown as `<name>`.
+    pub name: &'static str,
+    /// One-line help text.
+    pub help: &'static str,
+    /// If false, may be omitted.
+    pub required: bool,
+}
+
+/// A parser spec: options + positionals for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Spec {
+    opts: Vec<OptSpec>,
+    positionals: Vec<PosSpec>,
+}
+
+impl Spec {
+    /// Empty spec.
+    pub fn new() -> Spec {
+        Spec::default()
+    }
+
+    /// Declare a boolean switch.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Spec {
+        self.opts.push(OptSpec { name, arity: Arity::Flag, help, default: None });
+        self
+    }
+
+    /// Declare a value-taking option.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Spec {
+        self.opts.push(OptSpec { name, arity: Arity::Value, help, default });
+        self
+    }
+
+    /// Declare a positional argument (declared order = consumption order).
+    pub fn pos(mut self, name: &'static str, help: &'static str, required: bool) -> Spec {
+        self.positionals.push(PosSpec { name, help, required });
+        self
+    }
+
+    fn find(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    /// Parse an argument list (excluding program/subcommand names).
+    pub fn parse<I, S>(&self, args: I) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positionals: Vec<String> = Vec::new();
+        let mut it = args.into_iter().map(Into::into).peekable();
+        let mut after_separator = false;
+        while let Some(arg) = it.next() {
+            if after_separator || !arg.starts_with("--") || arg == "-" {
+                positionals.push(arg);
+                continue;
+            }
+            if arg == "--" {
+                after_separator = true;
+                continue;
+            }
+            let body = &arg[2..];
+            let (name, inline) = match body.split_once('=') {
+                Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                None => (body.to_string(), None),
+            };
+            let spec = self.find(&name).ok_or_else(|| CliError::UnknownOption(name.clone()))?;
+            match spec.arity {
+                Arity::Flag => {
+                    if let Some(v) = inline {
+                        return Err(CliError::BadValue(name, v, "flag (takes no value)"));
+                    }
+                    flags.push(name);
+                }
+                Arity::Value => {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    values.insert(name, v);
+                }
+            }
+        }
+        if positionals.len() > self.positionals.len() {
+            return Err(CliError::UnexpectedPositional(
+                positionals[self.positionals.len()].clone(),
+            ));
+        }
+        for (i, p) in self.positionals.iter().enumerate() {
+            if p.required && i >= positionals.len() {
+                return Err(CliError::MissingPositional(p.name));
+            }
+        }
+        Ok(Args { values, flags, positionals, pos_spec: self.positionals.clone() })
+    }
+
+    /// Render `--help` text for this spec.
+    pub fn help(&self, cmd: &str, about: &str) -> String {
+        let mut s = format!("{about}\n\nUSAGE: {cmd}");
+        for p in &self.positionals {
+            if p.required {
+                s.push_str(&format!(" <{}>", p.name));
+            } else {
+                s.push_str(&format!(" [{}]", p.name));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        s.push('\n');
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for p in &self.positionals {
+                s.push_str(&format!("  <{}>  {}\n", p.name, p.help));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let mut left = format!("--{}", o.name);
+                if o.arity == Arity::Value {
+                    left.push_str(" <v>");
+                }
+                let default = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+                s.push_str(&format!("  {left:<24} {}{default}\n", o.help));
+            }
+        }
+        s
+    }
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+    pos_spec: Vec<PosSpec>,
+}
+
+impl Args {
+    /// Was a flag given?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Raw string value of an option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// String value with default.
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Parse an option as `T`, with default when absent.
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| {
+                CliError::BadValue(name.to_string(), v.to_string(), std::any::type_name::<T>())
+            }),
+        }
+    }
+
+    /// Positional by declared name.
+    pub fn positional(&self, name: &str) -> Option<&str> {
+        let idx = self.pos_spec.iter().position(|p| p.name == name)?;
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+
+    /// All positionals in order.
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec::new()
+            .flag("verbose", "more output")
+            .opt("steps", "training steps", Some("100"))
+            .opt("device", "FPGA part", Some("XC7S75-2"))
+            .pos("config", "launcher config path", true)
+            .pos("out", "output path", false)
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = spec()
+            .parse(["--verbose", "cfg.toml", "--steps=250", "--device", "XC7S50-1", "out.txt"])
+            .unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.parse_or("steps", 0u32).unwrap(), 250);
+        assert_eq!(a.get("device"), Some("XC7S50-1"));
+        assert_eq!(a.positional("config"), Some("cfg.toml"));
+        assert_eq!(a.positional("out"), Some("out.txt"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(["cfg.toml"]).unwrap();
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.parse_or("steps", 100u32).unwrap(), 100);
+        assert_eq!(a.positional("out"), None);
+    }
+
+    #[test]
+    fn errors() {
+        assert_eq!(
+            spec().parse(["--nope", "cfg"]).unwrap_err(),
+            CliError::UnknownOption("nope".into())
+        );
+        assert_eq!(
+            spec().parse(["cfg", "--steps"]).unwrap_err(),
+            CliError::MissingValue("steps".into())
+        );
+        assert_eq!(spec().parse::<_, &str>([]).unwrap_err(), CliError::MissingPositional("config"));
+        assert_eq!(
+            spec().parse(["a", "b", "c"]).unwrap_err(),
+            CliError::UnexpectedPositional("c".into())
+        );
+        let a = spec().parse(["cfg", "--steps", "abc"]).unwrap();
+        assert!(matches!(a.parse_or("steps", 0u32), Err(CliError::BadValue(_, _, _))));
+    }
+
+    #[test]
+    fn double_dash_stops_option_parsing() {
+        let a = spec().parse(["--", "--steps"]).unwrap();
+        assert_eq!(a.positional("config"), Some("--steps"));
+    }
+
+    #[test]
+    fn help_mentions_everything() {
+        let h = spec().help("mfnn train", "Train MLPs");
+        assert!(h.contains("--steps"));
+        assert!(h.contains("<config>"));
+        assert!(h.contains("[out]"));
+        assert!(h.contains("[default: 100]"));
+    }
+}

@@ -1,0 +1,62 @@
+//! System-bus model: host (control server) ↔ board transfers.
+//!
+//! "The system buses transfer the neural network data and microcode from
+//! the control server to the onboard RAM" (§2). We model a shared
+//! full-duplex link per board with fixed per-message latency + bandwidth,
+//! defaulting to a gigabit-class link — the class of board-management
+//! links the paper's Spartan-7 boards would carry.
+
+/// Host↔board link model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SystemBus {
+    /// Sustained bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+    /// Per-message latency in seconds.
+    pub latency_s: f64,
+}
+
+impl Default for SystemBus {
+    fn default() -> Self {
+        // 1 GbE-class: 125 MB/s, 50 µs per message.
+        SystemBus { bandwidth_bps: 125e6, latency_s: 50e-6 }
+    }
+}
+
+impl SystemBus {
+    /// Seconds to move `bytes` in one message.
+    pub fn transfer_s(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Seconds for a round trip moving `up` bytes out and `down` back.
+    pub fn round_trip_s(&self, up: u64, down: u64) -> f64 {
+        self.transfer_s(up) + self.transfer_s(down)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let b = SystemBus::default();
+        let t = b.transfer_s(64);
+        assert!(t > b.latency_s && t < b.latency_s * 1.1);
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_messages() {
+        let b = SystemBus::default();
+        // 125 MB at 125 MB/s ≈ 1 s
+        let t = b.transfer_s(125_000_000);
+        assert!((t - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn round_trip_sums() {
+        let b = SystemBus { bandwidth_bps: 1e6, latency_s: 1e-3 };
+        let t = b.round_trip_s(1000, 2000);
+        assert!((t - (2e-3 + 0.003)).abs() < 1e-9);
+    }
+}

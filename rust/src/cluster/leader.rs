@@ -1,0 +1,552 @@
+//! The cluster leader: schedules jobs onto boards (per §2's three cases),
+//! orchestrates data-parallel weight averaging for divided jobs, accounts
+//! simulated bus + compute time, and aggregates results.
+
+use super::bus::SystemBus;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::scheduler::{schedule, Placement, PlacementMode};
+use super::worker::{Cmd, Reply, Worker};
+use crate::hw::{FpgaDevice, RunStats};
+use crate::nn::dataset::Dataset;
+use crate::nn::trainer::{LossPoint, TrainConfig};
+use crate::nn::MlpSpec;
+use std::sync::Arc;
+use thiserror::Error;
+
+/// Cluster configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of FPGA boards.
+    pub boards: usize,
+    /// Board part name (Table 8 catalog).
+    pub device: String,
+    /// Host↔board link model.
+    pub bus: SystemBus,
+    /// Steps between weight syncs for divided jobs.
+    pub sync_every: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            boards: 2,
+            device: "XC7S75-2".into(),
+            bus: SystemBus::default(),
+            sync_every: 20,
+        }
+    }
+}
+
+/// One training job.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Job name (reporting).
+    pub name: String,
+    /// Network.
+    pub spec: MlpSpec,
+    /// Trainer configuration (total steps live here).
+    pub cfg: TrainConfig,
+    /// Training split.
+    pub train_data: Arc<Dataset>,
+    /// Test split.
+    pub test_data: Arc<Dataset>,
+}
+
+/// Result of one job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    /// Job name.
+    pub name: String,
+    /// Boards it ran on.
+    pub boards: Vec<usize>,
+    /// Final test accuracy.
+    pub accuracy: f64,
+    /// Loss curve (replica 0's view for divided jobs).
+    pub curve: Vec<LossPoint>,
+    /// Aggregated machine stats.
+    pub stats: RunStats,
+    /// Simulated compute seconds (critical path over replicas).
+    pub sim_compute_s: f64,
+    /// Simulated bus seconds attributed to this job.
+    pub sim_bus_s: f64,
+    /// Steps executed (per replica).
+    pub steps: usize,
+}
+
+/// Whole-run report.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// Placement used.
+    pub placement: Placement,
+    /// Per-job results (job order preserved).
+    pub results: Vec<JobResult>,
+    /// Simulated makespan: max over boards of accumulated sim time.
+    pub makespan_s: f64,
+    /// Per-board simulated busy time.
+    pub board_time_s: Vec<f64>,
+    /// Metrics snapshot.
+    pub metrics: MetricsSnapshot,
+    /// Wall-clock seconds spent simulating.
+    pub wall_s: f64,
+}
+
+/// Cluster errors.
+#[derive(Debug, Error)]
+pub enum ClusterError {
+    /// Unknown device name.
+    #[error("unknown FPGA part {0:?}")]
+    UnknownDevice(String),
+    /// A worker reported an error.
+    #[error("job {0} on board {1}: {2}")]
+    Worker(String, usize, String),
+    /// No jobs given.
+    #[error("no jobs")]
+    NoJobs,
+}
+
+/// Average quantised weights across replicas (element-wise i32 mean,
+/// round-to-nearest-even-free: plain round toward zero like the DSP
+/// truncation).
+pub fn average_weights(replicas: &[Vec<Vec<i16>>]) -> Vec<Vec<i16>> {
+    let k = replicas.len() as i32;
+    assert!(k > 0);
+    let mut out = replicas[0].clone();
+    for (l, layer) in out.iter_mut().enumerate() {
+        for (i, v) in layer.iter_mut().enumerate() {
+            let sum: i32 = replicas.iter().map(|r| r[l][i] as i32).sum();
+            *v = (sum / k) as i16;
+        }
+    }
+    out
+}
+
+/// Run a set of jobs on the cluster; blocks until completion.
+pub fn run_cluster(cfg: &ClusterConfig, jobs: &[Job]) -> Result<ClusterReport, ClusterError> {
+    if jobs.is_empty() {
+        return Err(ClusterError::NoJobs);
+    }
+    let device = FpgaDevice::by_name(&cfg.device)
+        .ok_or_else(|| ClusterError::UnknownDevice(cfg.device.clone()))?;
+    let wall0 = std::time::Instant::now();
+    let metrics = Metrics::shared();
+    let placement = schedule(jobs.len(), cfg.boards);
+    // Workers are moved into the orchestrator thread that exclusively
+    // drives them (board queues / board groups are disjoint), because the
+    // reply receiver is single-consumer.
+    let mut worker_slots: Vec<Option<Worker>> =
+        (0..cfg.boards).map(|b| Some(Worker::spawn(b, device, Arc::clone(&metrics)))).collect();
+
+    let mut board_time = vec![0.0f64; cfg.boards];
+    let mut results: Vec<Option<JobResult>> = (0..jobs.len()).map(|_| None).collect();
+
+    match placement.mode {
+        PlacementMode::Sequential | PlacementMode::OneToOne => {
+            // Per-board queues run concurrently; jobs within a queue run
+            // in order. Orchestrate each board from its own leader thread.
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for (b, queue) in placement.queues.iter().enumerate() {
+                    let worker = worker_slots[b].take().expect("board used once");
+                    let metrics = Arc::clone(&metrics);
+                    let bus = cfg.bus;
+                    let jobs_ref = jobs;
+                    let queue = queue.clone();
+                    handles.push(s.spawn(move || -> Result<(f64, Vec<(usize, JobResult)>), ClusterError> {
+                        let mut t = 0.0f64;
+                        let mut out = Vec::new();
+                        for j in queue {
+                            let (r, dt) =
+                                run_single(&worker, b, &jobs_ref[j], j, &bus, &metrics)?;
+                            t += dt;
+                            out.push((j, r));
+                        }
+                        Ok((t, out))
+                    }));
+                }
+                for (b, h) in handles.into_iter().enumerate() {
+                    let (t, rs) = h.join().expect("leader thread panicked")?;
+                    board_time[b] += t;
+                    for (j, r) in rs {
+                        results[j] = Some(r);
+                    }
+                }
+                Ok::<(), ClusterError>(())
+            })?;
+        }
+        PlacementMode::Divided => {
+            // Each job owns a group of boards; groups run concurrently.
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for (j, group) in placement.groups.iter().enumerate() {
+                    let group_workers: Vec<Worker> =
+                        group.iter().map(|&b| worker_slots[b].take().expect("board used once")).collect();
+                    let metrics = Arc::clone(&metrics);
+                    let bus = cfg.bus;
+                    let job = &jobs[j];
+                    let sync_every = cfg.sync_every;
+                    let group = group.clone();
+                    handles.push(s.spawn(
+                        move || -> Result<(Vec<f64>, JobResult), ClusterError> {
+                            let refs: Vec<&Worker> = group_workers.iter().collect();
+                            run_divided(&refs, &group, job, j, &bus, sync_every, &metrics)
+                        },
+                    ));
+                }
+                for (j, h) in handles.into_iter().enumerate() {
+                    let (times, r) = h.join().expect("leader thread panicked")?;
+                    for (k, &b) in placement.groups[j].iter().enumerate() {
+                        board_time[b] += times[k];
+                    }
+                    results[j] = Some(r);
+                }
+                Ok::<(), ClusterError>(())
+            })?;
+        }
+    }
+
+    drop(worker_slots);
+    let results: Vec<JobResult> = results.into_iter().map(Option::unwrap).collect();
+    let makespan_s = board_time.iter().cloned().fold(0.0, f64::max);
+    Ok(ClusterReport {
+        placement,
+        results,
+        makespan_s,
+        board_time_s: board_time,
+        metrics: metrics.snapshot(),
+        wall_s: wall0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Dataset bytes shipped to a board (quantised lanes).
+fn dataset_bytes(ds: &Dataset) -> u64 {
+    (ds.len() * (ds.dim() + ds.classes)) as u64 * 2
+}
+
+fn expect_chunk(
+    worker: &Worker,
+    job_name: &str,
+    board: usize,
+) -> Result<(Vec<LossPoint>, RunStats, f64, Vec<Vec<i16>>, Vec<Vec<i16>>), ClusterError> {
+    match worker.recv() {
+        Reply::ChunkDone { curve, stats, sim_seconds, w, b, .. } => {
+            Ok((curve, stats, sim_seconds, w, b))
+        }
+        Reply::Error { message, .. } => {
+            Err(ClusterError::Worker(job_name.to_string(), board, message))
+        }
+        other => Err(ClusterError::Worker(
+            job_name.to_string(),
+            board,
+            format!("unexpected reply {other:?}"),
+        )),
+    }
+}
+
+fn expect_ready(worker: &Worker, job_name: &str, board: usize) -> Result<(), ClusterError> {
+    match worker.recv() {
+        Reply::Ready { .. } => Ok(()),
+        Reply::Error { message, .. } => {
+            Err(ClusterError::Worker(job_name.to_string(), board, message))
+        }
+        other => Err(ClusterError::Worker(
+            job_name.to_string(),
+            board,
+            format!("unexpected reply {other:?}"),
+        )),
+    }
+}
+
+/// Run one job on one board (OneToOne / Sequential path).
+fn run_single(
+    worker: &Worker,
+    board: usize,
+    job: &Job,
+    job_id: usize,
+    bus: &SystemBus,
+    metrics: &Metrics,
+) -> Result<(JobResult, f64), ClusterError> {
+    // Ship program + params + dataset.
+    let up_bytes = job.spec.param_bytes() + dataset_bytes(&job.train_data);
+    let mut bus_s = bus.transfer_s(up_bytes);
+    Metrics::add(&metrics.bus_bytes, up_bytes);
+
+    worker.send(Cmd::NewTrainer { job: job_id, spec: job.spec.clone(), cfg: job.cfg.clone() });
+    expect_ready(worker, &job.name, board)?;
+    worker.send(Cmd::TrainChunk {
+        job: job_id,
+        data: Arc::clone(&job.train_data),
+        steps: job.cfg.steps,
+    });
+    let (curve, stats, sim_s, _, _) = expect_chunk(worker, &job.name, board)?;
+
+    worker.send(Cmd::Evaluate { job: job_id, data: Arc::clone(&job.test_data) });
+    let (accuracy, eval_stats, eval_s) = match worker.recv() {
+        Reply::EvalDone { accuracy, stats, sim_seconds, .. } => (accuracy, stats, sim_seconds),
+        Reply::Error { message, .. } => {
+            return Err(ClusterError::Worker(job.name.clone(), board, message))
+        }
+        other => {
+            return Err(ClusterError::Worker(
+                job.name.clone(),
+                board,
+                format!("unexpected reply {other:?}"),
+            ))
+        }
+    };
+    // Results readback.
+    let down = job.spec.param_bytes();
+    bus_s += bus.transfer_s(down);
+    Metrics::add(&metrics.bus_bytes, down);
+    Metrics::add(&metrics.jobs_completed, 1);
+
+    let mut total_stats = stats;
+    total_stats.add(&eval_stats);
+    let total = sim_s + eval_s + bus_s;
+    Ok((
+        JobResult {
+            name: job.name.clone(),
+            boards: vec![board],
+            accuracy,
+            curve,
+            stats: total_stats,
+            sim_compute_s: sim_s + eval_s,
+            sim_bus_s: bus_s,
+            steps: job.cfg.steps,
+        },
+        total,
+    ))
+}
+
+/// Run one job data-parallel over a board group with periodic weight
+/// averaging (Divided path).
+fn run_divided(
+    group_workers: &[&Worker],
+    boards: &[usize],
+    job: &Job,
+    job_id: usize,
+    bus: &SystemBus,
+    sync_every: usize,
+    metrics: &Metrics,
+) -> Result<(Vec<f64>, JobResult), ClusterError> {
+    let k = group_workers.len();
+    assert!(k >= 1);
+    let mut times = vec![0.0f64; k];
+
+    // Ship params + a dataset shard to every board.
+    for (i, w) in group_workers.iter().enumerate() {
+        let up = job.spec.param_bytes() + dataset_bytes(&job.train_data) / k as u64;
+        times[i] += bus.transfer_s(up);
+        Metrics::add(&metrics.bus_bytes, up);
+        let mut cfg = job.cfg.clone();
+        cfg.seed = cfg.seed.wrapping_add(i as u64 * 0x9E37);
+        w.send(Cmd::NewTrainer { job: job_id, spec: job.spec.clone(), cfg });
+    }
+    for (i, w) in group_workers.iter().enumerate() {
+        expect_ready(w, &job.name, boards[i])?;
+    }
+    // Replicas start from identical weights: broadcast replica 0's init.
+    group_workers[0].send(Cmd::TrainChunk {
+        job: job_id,
+        data: Arc::clone(&job.train_data),
+        steps: 0,
+    });
+    let (_, _, _, w0, b0) = expect_chunk(group_workers[0], &job.name, boards[0])?;
+    for (i, w) in group_workers.iter().enumerate() {
+        w.send(Cmd::SetWeights { job: job_id, w: w0.clone(), b: b0.clone() });
+        expect_ready(w, &job.name, boards[i])?;
+    }
+
+    let total_steps = job.cfg.steps;
+    let mut done = 0usize;
+    let mut curve = Vec::new();
+    let mut stats = RunStats::default();
+    let mut compute_critical = 0.0f64;
+    let mut bus_total = 0.0f64;
+    while done < total_steps {
+        let steps = sync_every.min(total_steps - done);
+        for w in group_workers {
+            w.send(Cmd::TrainChunk {
+                job: job_id,
+                data: Arc::clone(&job.train_data),
+                steps,
+            });
+        }
+        let mut ws = Vec::with_capacity(k);
+        let mut bs = Vec::with_capacity(k);
+        let mut round_max = 0.0f64;
+        for (i, w) in group_workers.iter().enumerate() {
+            let (c, st, sim_s, wi, bi) = expect_chunk(w, &job.name, boards[i])?;
+            if i == 0 {
+                curve.extend(c.into_iter().map(|mut p| {
+                    p.step += done;
+                    p
+                }));
+                stats.add(&st);
+            }
+            round_max = round_max.max(sim_s);
+            times[i] += sim_s;
+            ws.push(wi);
+            bs.push(bi);
+        }
+        compute_critical += round_max;
+        // Weight sync: gather k × params up, broadcast averaged params.
+        let sync_bytes = job.spec.param_bytes() * (k as u64 + 1);
+        let sync_s = bus.transfer_s(job.spec.param_bytes()) * (k as f64 + 1.0);
+        Metrics::add(&metrics.bus_bytes, sync_bytes);
+        Metrics::add(&metrics.sync_rounds, 1);
+        bus_total += sync_s;
+        let avg_w = average_weights(&ws);
+        let avg_b = average_weights(&bs);
+        for (i, w) in group_workers.iter().enumerate() {
+            w.send(Cmd::SetWeights { job: job_id, w: avg_w.clone(), b: avg_b.clone() });
+            times[i] += sync_s / k as f64;
+        }
+        for (i, w) in group_workers.iter().enumerate() {
+            expect_ready(w, &job.name, boards[i])?;
+        }
+        done += steps;
+    }
+
+    // Evaluate on replica 0.
+    group_workers[0].send(Cmd::Evaluate { job: job_id, data: Arc::clone(&job.test_data) });
+    let (accuracy, eval_stats, eval_s) = match group_workers[0].recv() {
+        Reply::EvalDone { accuracy, stats, sim_seconds, .. } => (accuracy, stats, sim_seconds),
+        Reply::Error { message, .. } => {
+            return Err(ClusterError::Worker(job.name.clone(), boards[0], message))
+        }
+        other => {
+            return Err(ClusterError::Worker(
+                job.name.clone(),
+                boards[0],
+                format!("unexpected reply {other:?}"),
+            ))
+        }
+    };
+    times[0] += eval_s;
+    stats.add(&eval_stats);
+    Metrics::add(&metrics.jobs_completed, 1);
+
+    Ok((
+        times,
+        JobResult {
+            name: job.name.clone(),
+            boards: boards.to_vec(),
+            accuracy,
+            curve,
+            stats,
+            sim_compute_s: compute_critical + eval_s,
+            sim_bus_s: bus_total,
+            steps: total_steps,
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FixedSpec;
+    use crate::nn::dataset;
+    use crate::nn::lut::ActKind;
+    use crate::nn::mlp::LutParams;
+    use crate::util::Rng;
+
+    fn mk_job(name: &str, seed: u64, steps: usize) -> Job {
+        let fixed = FixedSpec::q(10).saturating();
+        let spec = MlpSpec::from_dims(
+            name,
+            &[4, 16, 3],
+            ActKind::Relu,
+            ActKind::Identity,
+            fixed,
+            LutParams::training(fixed),
+        )
+        .unwrap();
+        let ds = dataset::blobs(192, 3, 4, seed);
+        let (train, test) = ds.split(0.75, &mut Rng::new(seed));
+        Job {
+            name: name.to_string(),
+            spec,
+            cfg: TrainConfig { batch: 16, lr: 1.0 / 256.0, steps, seed, log_every: 10 },
+            train_data: Arc::new(train),
+            test_data: Arc::new(test),
+        }
+    }
+
+    #[test]
+    fn one_to_one_two_jobs_two_boards() {
+        let cfg = ClusterConfig { boards: 2, ..Default::default() };
+        let jobs = vec![mk_job("a", 1, 60), mk_job("b", 2, 60)];
+        let r = run_cluster(&cfg, &jobs).unwrap();
+        assert_eq!(r.placement.mode, PlacementMode::OneToOne);
+        assert_eq!(r.results.len(), 2);
+        for jr in &r.results {
+            assert!(jr.accuracy > 0.7, "{} acc {}", jr.name, jr.accuracy);
+            assert!(jr.sim_compute_s > 0.0 && jr.sim_bus_s > 0.0);
+        }
+        assert_eq!(r.metrics.jobs_completed, 2);
+        assert!(r.makespan_s > 0.0);
+        // both boards did work
+        assert!(r.board_time_s.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn sequential_more_jobs_than_boards() {
+        let cfg = ClusterConfig { boards: 2, ..Default::default() };
+        let jobs =
+            vec![mk_job("a", 1, 25), mk_job("b", 2, 25), mk_job("c", 3, 25), mk_job("d", 4, 25)];
+        let r = run_cluster(&cfg, &jobs).unwrap();
+        assert_eq!(r.placement.mode, PlacementMode::Sequential);
+        assert_eq!(r.metrics.jobs_completed, 4);
+        // a board running two jobs should take about twice one job's time
+        let t = &r.board_time_s;
+        assert!(t[0] > 0.0 && t[1] > 0.0);
+    }
+
+    #[test]
+    fn divided_one_job_three_boards_syncs_weights() {
+        let cfg =
+            ClusterConfig { boards: 3, sync_every: 15, ..Default::default() };
+        let jobs = vec![mk_job("dp", 5, 60)];
+        let r = run_cluster(&cfg, &jobs).unwrap();
+        assert_eq!(r.placement.mode, PlacementMode::Divided);
+        assert_eq!(r.results[0].boards, vec![0, 1, 2]);
+        assert_eq!(r.metrics.sync_rounds, 4); // 60/15
+        assert!(r.results[0].accuracy > 0.7, "acc {}", r.results[0].accuracy);
+        assert!(r.metrics.bus_bytes > 0);
+    }
+
+    #[test]
+    fn average_weights_elementwise_mean() {
+        let a = vec![vec![10i16, -10], vec![4]];
+        let b = vec![vec![20i16, -20], vec![8]];
+        assert_eq!(average_weights(&[a, b]), vec![vec![15, -15], vec![6]]);
+    }
+
+    #[test]
+    fn failure_injection_bad_job_does_not_hang_cluster() {
+        // Job "bad" has a dataset whose dimensionality mismatches its
+        // spec: the worker reports the error and the leader surfaces it
+        // instead of deadlocking the other board.
+        let mut bad = mk_job("bad", 9, 30);
+        bad.train_data = Arc::new(dataset::xor(32, 1)); // dim 2 != 4
+        let jobs = vec![mk_job("good", 8, 30), bad];
+        let cfg = ClusterConfig { boards: 2, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let err = run_cluster(&cfg, &jobs).unwrap_err();
+        assert!(matches!(err, ClusterError::Worker(ref name, _, _) if name == "bad"), "{err}");
+        assert!(t0.elapsed().as_secs() < 30, "cluster hung on worker failure");
+    }
+
+    #[test]
+    fn errors_propagate() {
+        assert!(matches!(
+            run_cluster(&ClusterConfig::default(), &[]),
+            Err(ClusterError::NoJobs)
+        ));
+        let cfg = ClusterConfig { device: "nope".into(), ..Default::default() };
+        assert!(matches!(
+            run_cluster(&cfg, &[mk_job("a", 1, 5)]),
+            Err(ClusterError::UnknownDevice(_))
+        ));
+    }
+}

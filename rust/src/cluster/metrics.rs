@@ -1,0 +1,96 @@
+//! Cluster-wide metrics registry (lock-free counters shared between the
+//! leader and worker threads).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared atomic counters.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Jobs completed.
+    pub jobs_completed: AtomicU64,
+    /// Total training steps executed (across boards).
+    pub steps_total: AtomicU64,
+    /// Total simulated machine cycles.
+    pub sim_cycles: AtomicU64,
+    /// Bytes moved over the system bus.
+    pub bus_bytes: AtomicU64,
+    /// Weight-synchronisation rounds performed.
+    pub sync_rounds: AtomicU64,
+    /// Worker errors observed.
+    pub errors: AtomicU64,
+}
+
+impl Metrics {
+    /// Fresh shared registry.
+    pub fn shared() -> Arc<Metrics> {
+        Arc::new(Metrics::default())
+    }
+
+    /// Add to a counter.
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Read a consistent-enough snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            steps_total: self.steps_total.load(Ordering::Relaxed),
+            sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
+            bus_bytes: self.bus_bytes.load(Ordering::Relaxed),
+            sync_rounds: self.sync_rounds.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of [`Metrics`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// Jobs completed.
+    pub jobs_completed: u64,
+    /// Total training steps executed.
+    pub steps_total: u64,
+    /// Total simulated machine cycles.
+    pub sim_cycles: u64,
+    /// Bytes moved over the system bus.
+    pub bus_bytes: u64,
+    /// Weight-sync rounds.
+    pub sync_rounds: u64,
+    /// Worker errors.
+    pub errors: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn concurrent_counting() {
+        let m = Metrics::shared();
+        thread::scope(|s| {
+            for _ in 0..8 {
+                let m = Arc::clone(&m);
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        Metrics::add(&m.steps_total, 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.snapshot().steps_total, 8000);
+    }
+
+    #[test]
+    fn snapshot_reads_all_fields() {
+        let m = Metrics::default();
+        Metrics::add(&m.jobs_completed, 2);
+        Metrics::add(&m.bus_bytes, 1024);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_completed, 2);
+        assert_eq!(s.bus_bytes, 1024);
+        assert_eq!(s.errors, 0);
+    }
+}

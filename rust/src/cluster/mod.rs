@@ -1,0 +1,39 @@
+//! Multi-FPGA cluster runtime — the paper's "§2 scaling requirement:
+//! "the Matrix Machine must scale to any number of FPGAs":
+//!
+//! * M > F MLPs: "processed sequentially" — per-board job queues.
+//! * M < F: "the MLPs are divided and are processed in parallel" — each
+//!   MLP gets a group of boards running synchronous data-parallel
+//!   training with periodic fixed-point weight averaging (our
+//!   concretisation of "divided", documented in DESIGN.md §2).
+//! * M = F: "maps 1 MLP to 1 FPGA".
+//!
+//! Architecture (tokio is unavailable — std threads + bounded channels
+//! provide the same backpressure semantics):
+//!
+//! ```text
+//!   leader (one orchestrator thread per board-group)
+//!     │  sync_channel(1) per board  — bounded ⇒ backpressure
+//!     ▼
+//!   worker thread per FPGA board — owns the board's Trainers
+//!     │  mpsc replies (chunk results, weights, evaluations)
+//!     ▼
+//!   leader aggregates: weight averaging, bus-time accounting, metrics
+//! ```
+//!
+//! Time is **simulated**: compute time comes from the Matrix Machine's
+//! cycle model, transfer time from the [`bus`] model; the makespan of a
+//! schedule is the max over boards of accumulated simulated time. Wall
+//! clock is also reported (it measures the simulator, not the modelled
+//! hardware).
+
+pub mod bus;
+pub mod leader;
+pub mod metrics;
+pub mod scheduler;
+pub mod worker;
+
+pub use bus::SystemBus;
+pub use leader::{run_cluster, ClusterConfig, ClusterReport, Job, JobResult};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use scheduler::{schedule, Placement, PlacementMode};

@@ -1,0 +1,124 @@
+//! Job → board placement, implementing §2's three cases verbatim.
+
+/// How the schedule was derived.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementMode {
+    /// M = F: "maps 1 MLP to 1 FPGA".
+    OneToOne,
+    /// M > F: "the MLPs are processed sequentially" (per-board queues).
+    Sequential,
+    /// M < F: "the MLPs are divided and are processed in parallel"
+    /// (board groups per MLP, data-parallel with weight averaging).
+    Divided,
+}
+
+/// A placement: per job, the boards assigned to it, plus the execution
+/// order on shared boards.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    /// Mode chosen from the M/F relation.
+    pub mode: PlacementMode,
+    /// `groups[j]` = boards assigned to job `j`.
+    pub groups: Vec<Vec<usize>>,
+    /// `queues[b]` = jobs queued on board `b`, in order.
+    pub queues: Vec<Vec<usize>>,
+}
+
+/// Compute the placement of `jobs` jobs onto `boards` boards.
+pub fn schedule(jobs: usize, boards: usize) -> Placement {
+    assert!(jobs > 0, "no jobs");
+    assert!(boards > 0, "no boards");
+    let mut groups = vec![Vec::new(); jobs];
+    let mut queues = vec![Vec::new(); boards];
+    let mode = if jobs == boards {
+        for j in 0..jobs {
+            groups[j].push(j);
+            queues[j].push(j);
+        }
+        PlacementMode::OneToOne
+    } else if jobs > boards {
+        // Round-robin queues: board b runs jobs b, b+F, b+2F... in order.
+        for j in 0..jobs {
+            let b = j % boards;
+            groups[j].push(b);
+            queues[b].push(j);
+        }
+        PlacementMode::Sequential
+    } else {
+        // Divide boards among jobs: first (boards % jobs) jobs get one
+        // extra board.
+        let base = boards / jobs;
+        let extra = boards % jobs;
+        let mut next = 0usize;
+        for (j, group) in groups.iter_mut().enumerate() {
+            let take = base + usize::from(j < extra);
+            for _ in 0..take {
+                group.push(next);
+                queues[next].push(j);
+                next += 1;
+            }
+        }
+        PlacementMode::Divided
+    };
+    Placement { mode, groups, queues }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check, Gen};
+
+    #[test]
+    fn one_to_one() {
+        let p = schedule(4, 4);
+        assert_eq!(p.mode, PlacementMode::OneToOne);
+        for j in 0..4 {
+            assert_eq!(p.groups[j], vec![j]);
+            assert_eq!(p.queues[j], vec![j]);
+        }
+    }
+
+    #[test]
+    fn sequential_round_robin() {
+        let p = schedule(7, 3);
+        assert_eq!(p.mode, PlacementMode::Sequential);
+        assert_eq!(p.queues[0], vec![0, 3, 6]);
+        assert_eq!(p.queues[1], vec![1, 4]);
+        assert_eq!(p.queues[2], vec![2, 5]);
+        assert!(p.groups.iter().all(|g| g.len() == 1));
+    }
+
+    #[test]
+    fn divided_spreads_boards() {
+        let p = schedule(2, 5);
+        assert_eq!(p.mode, PlacementMode::Divided);
+        assert_eq!(p.groups[0], vec![0, 1, 2]); // first job gets the extra
+        assert_eq!(p.groups[1], vec![3, 4]);
+        // every board runs exactly one job
+        assert!(p.queues.iter().all(|q| q.len() == 1));
+    }
+
+    #[test]
+    fn placement_invariants_hold_for_all_shapes() {
+        // Property: every job appears in ≥1 group; every board queue entry
+        // is consistent with groups; no board is double-booked in Divided
+        // mode; all boards used when M ≤ F.
+        check(
+            "placement_invariants",
+            Gen::pair(Gen::int_range(1, 24), Gen::int_range(1, 24)),
+            |&(jobs, boards)| {
+                let (jobs, boards) = (jobs as usize, boards as usize);
+                let p = schedule(jobs, boards);
+                let groups_ok = p.groups.iter().all(|g| !g.is_empty())
+                    && p.groups.len() == jobs
+                    && p.queues.len() == boards;
+                let consistent = p.queues.iter().enumerate().all(|(b, q)| {
+                    q.iter().all(|&j| p.groups[j].contains(&b))
+                });
+                let all_used = jobs >= boards
+                    || p.queues.iter().all(|q| q.len() == 1);
+                groups_ok && consistent && all_used
+            },
+        );
+    }
+}

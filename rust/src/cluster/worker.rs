@@ -1,0 +1,284 @@
+//! Per-board worker threads.
+//!
+//! One OS thread per simulated FPGA board. Commands arrive on a **bounded**
+//! channel (`sync_channel(1)`) — a busy board exerts backpressure on the
+//! leader exactly like a full board-side command queue would. Each worker
+//! owns the [`Trainer`]s of the jobs placed on its board.
+
+use super::metrics::Metrics;
+use crate::hw::{FpgaDevice, RunStats};
+use crate::nn::dataset::Dataset;
+use crate::nn::trainer::{LossPoint, TrainConfig, Trainer};
+use crate::nn::MlpSpec;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Commands the leader sends to a board.
+pub enum Cmd {
+    /// Create a trainer for a job (weights initialised from `seed`).
+    NewTrainer {
+        /// Job index.
+        job: usize,
+        /// Network spec.
+        spec: MlpSpec,
+        /// Training configuration (seed included).
+        cfg: TrainConfig,
+    },
+    /// Overwrite a job's on-device weights (weight-sync).
+    SetWeights {
+        /// Job index.
+        job: usize,
+        /// Per-layer weights.
+        w: Vec<Vec<i16>>,
+        /// Per-layer biases.
+        b: Vec<Vec<i16>>,
+    },
+    /// Train `steps` mini-batch steps on `data`.
+    TrainChunk {
+        /// Job index.
+        job: usize,
+        /// Training data.
+        data: Arc<Dataset>,
+        /// Steps to run.
+        steps: usize,
+    },
+    /// Evaluate accuracy on `data`.
+    Evaluate {
+        /// Job index.
+        job: usize,
+        /// Test data.
+        data: Arc<Dataset>,
+    },
+    /// Terminate the worker.
+    Shutdown,
+}
+
+/// Worker → leader replies.
+#[derive(Debug)]
+pub enum Reply {
+    /// Trainer created.
+    Ready {
+        /// Job index.
+        job: usize,
+    },
+    /// A chunk finished.
+    ChunkDone {
+        /// Job index.
+        job: usize,
+        /// Loss curve of the chunk.
+        curve: Vec<LossPoint>,
+        /// Machine stats of the chunk.
+        stats: RunStats,
+        /// Simulated seconds of the chunk.
+        sim_seconds: f64,
+        /// Current weights (for averaging).
+        w: Vec<Vec<i16>>,
+        /// Current biases.
+        b: Vec<Vec<i16>>,
+    },
+    /// An evaluation finished.
+    EvalDone {
+        /// Job index.
+        job: usize,
+        /// Accuracy in [0,1].
+        accuracy: f64,
+        /// Machine stats.
+        stats: RunStats,
+        /// Simulated seconds.
+        sim_seconds: f64,
+    },
+    /// Something failed.
+    Error {
+        /// Job index.
+        job: usize,
+        /// Message.
+        message: String,
+    },
+}
+
+/// Handle to a running worker.
+pub struct Worker {
+    /// Board index.
+    pub board: usize,
+    cmd_tx: SyncSender<Cmd>,
+    reply_rx: Receiver<Reply>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Worker {
+    /// Spawn a worker for `board` simulating `device`.
+    pub fn spawn(board: usize, device: FpgaDevice, metrics: Arc<Metrics>) -> Worker {
+        // Bounded depth 1: leader blocks while the board is busy.
+        let (cmd_tx, cmd_rx) = sync_channel::<Cmd>(1);
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel::<Reply>();
+        let handle = std::thread::Builder::new()
+            .name(format!("fpga-worker-{board}"))
+            .spawn(move || worker_main(device, cmd_rx, reply_tx, metrics))
+            .expect("spawn worker thread");
+        Worker { board, cmd_tx, reply_rx, handle: Some(handle) }
+    }
+
+    /// Send a command (blocks when the board's queue is full —
+    /// backpressure).
+    pub fn send(&self, cmd: Cmd) {
+        self.cmd_tx.send(cmd).expect("worker hung up");
+    }
+
+    /// Wait for the next reply.
+    pub fn recv(&self) -> Reply {
+        self.reply_rx.recv().expect("worker hung up")
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        let _ = self.cmd_tx.send(Cmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(
+    device: FpgaDevice,
+    cmd_rx: Receiver<Cmd>,
+    reply_tx: Sender<Reply>,
+    metrics: Arc<Metrics>,
+) {
+    let mut trainers: HashMap<usize, Trainer> = HashMap::new();
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            Cmd::Shutdown => break,
+            Cmd::NewTrainer { job, spec, cfg } => {
+                match Trainer::new(spec, device, cfg) {
+                    Ok(t) => {
+                        trainers.insert(job, t);
+                        let _ = reply_tx.send(Reply::Ready { job });
+                    }
+                    Err(e) => {
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply_tx.send(Reply::Error { job, message: e.to_string() });
+                    }
+                }
+            }
+            Cmd::SetWeights { job, w, b } => {
+                if let Some(t) = trainers.get_mut(&job) {
+                    if let Err(e) = t.set_weights(&w, &b) {
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply_tx.send(Reply::Error { job, message: e.to_string() });
+                        continue;
+                    }
+                }
+                let _ = reply_tx.send(Reply::Ready { job });
+            }
+            Cmd::TrainChunk { job, data, steps } => {
+                let Some(t) = trainers.get_mut(&job) else {
+                    let _ = reply_tx
+                        .send(Reply::Error { job, message: "no trainer for job".into() });
+                    continue;
+                };
+                let saved_steps = t.cfg.steps;
+                t.cfg.steps = steps;
+                let res = t.train(&data);
+                t.cfg.steps = saved_steps;
+                match res {
+                    Ok(report) => {
+                        metrics.steps_total.fetch_add(steps as u64, Ordering::Relaxed);
+                        metrics.sim_cycles.fetch_add(report.stats.cycles, Ordering::Relaxed);
+                        let (w, b) = t.weights();
+                        let _ = reply_tx.send(Reply::ChunkDone {
+                            job,
+                            curve: report.curve,
+                            stats: report.stats,
+                            sim_seconds: report.sim_seconds,
+                            w,
+                            b,
+                        });
+                    }
+                    Err(e) => {
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply_tx.send(Reply::Error { job, message: e.to_string() });
+                    }
+                }
+            }
+            Cmd::Evaluate { job, data } => {
+                let Some(t) = trainers.get_mut(&job) else {
+                    let _ = reply_tx
+                        .send(Reply::Error { job, message: "no trainer for job".into() });
+                    continue;
+                };
+                match t.evaluate(&data) {
+                    Ok((accuracy, stats)) => {
+                        metrics.sim_cycles.fetch_add(stats.cycles, Ordering::Relaxed);
+                        let _ = reply_tx.send(Reply::EvalDone {
+                            job,
+                            accuracy,
+                            stats,
+                            sim_seconds: stats.seconds(&t.device),
+                        });
+                    }
+                    Err(e) => {
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply_tx.send(Reply::Error { job, message: e.to_string() });
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FixedSpec;
+    use crate::nn::dataset;
+    use crate::nn::lut::ActKind;
+    use crate::nn::mlp::LutParams;
+
+    fn spec() -> MlpSpec {
+        let fixed = FixedSpec::q(10).saturating();
+        MlpSpec::from_dims(
+            "w",
+            &[2, 8, 2],
+            ActKind::Relu,
+            ActKind::Identity,
+            fixed,
+            LutParams::training(fixed),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn worker_lifecycle() {
+        let m = Metrics::shared();
+        let w = Worker::spawn(0, FpgaDevice::selected(), Arc::clone(&m));
+        let cfg = TrainConfig { batch: 8, steps: 5, lr: 1.0 / 256.0, seed: 1, log_every: 1 };
+        w.send(Cmd::NewTrainer { job: 0, spec: spec(), cfg });
+        assert!(matches!(w.recv(), Reply::Ready { job: 0 }));
+        let ds = Arc::new(dataset::xor(64, 2));
+        w.send(Cmd::TrainChunk { job: 0, data: Arc::clone(&ds), steps: 5 });
+        match w.recv() {
+            Reply::ChunkDone { job, sim_seconds, w: wts, .. } => {
+                assert_eq!(job, 0);
+                assert!(sim_seconds > 0.0);
+                assert_eq!(wts.len(), 2);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        w.send(Cmd::Evaluate { job: 0, data: ds });
+        assert!(matches!(w.recv(), Reply::EvalDone { job: 0, .. }));
+        assert_eq!(m.snapshot().steps_total, 5);
+        drop(w); // clean shutdown
+    }
+
+    #[test]
+    fn unknown_job_errors() {
+        let m = Metrics::shared();
+        let w = Worker::spawn(1, FpgaDevice::selected(), m);
+        w.send(Cmd::TrainChunk { job: 9, data: Arc::new(dataset::xor(8, 1)), steps: 1 });
+        assert!(matches!(w.recv(), Reply::Error { job: 9, .. }));
+    }
+}

@@ -1,0 +1,197 @@
+//! Configuration system: a TOML-subset parser + typed accessors.
+//!
+//! The sandbox vendors no `serde`/`toml`, so this is a from-scratch parser
+//! for the subset we use in launcher configs (`configs/*.toml`):
+//! `[section.sub]` headers, `key = value` pairs with string / integer /
+//! float / boolean / homogeneous-array values, `#` comments. Keys are
+//! exposed flattened with dots: `cluster.num_fpgas`.
+
+mod parse;
+mod value;
+
+pub use parse::{parse_document, ConfigError};
+pub use value::Value;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed config document: flattened dotted keys → values.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Parse from TOML-subset text.
+    pub fn from_str(text: &str) -> Result<Config, ConfigError> {
+        Ok(Config { map: parse_document(text)? })
+    }
+
+    /// Parse from a file.
+    pub fn from_file(path: &Path) -> Result<Config, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::Io(path.display().to_string(), e.to_string()))?;
+        Config::from_str(&text)
+    }
+
+    /// Empty config.
+    pub fn empty() -> Config {
+        Config::default()
+    }
+
+    /// Insert / override a value programmatically (CLI overrides).
+    pub fn set<S: Into<String>>(&mut self, key: S, value: Value) {
+        self.map.insert(key.into(), value);
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    /// All keys under a dotted prefix (e.g. `"mlp."`).
+    pub fn keys_with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        self.map.keys().filter(move |k| k.starts_with(prefix)).map(|k| k.as_str())
+    }
+
+    /// Typed lookup: string.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.map.get(key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Typed lookup: integer.
+    pub fn get_int(&self, key: &str) -> Option<i64> {
+        match self.map.get(key) {
+            Some(Value::Int(i)) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Typed lookup: float (integers coerce).
+    pub fn get_float(&self, key: &str) -> Option<f64> {
+        match self.map.get(key) {
+            Some(Value::Float(f)) => Some(*f),
+            Some(Value::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Typed lookup: boolean.
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.map.get(key) {
+            Some(Value::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Typed lookup: array of integers.
+    pub fn get_int_array(&self, key: &str) -> Option<Vec<i64>> {
+        match self.map.get(key) {
+            Some(Value::Array(xs)) => {
+                xs.iter().map(|v| if let Value::Int(i) = v { Some(*i) } else { None }).collect()
+            }
+            _ => None,
+        }
+    }
+
+    /// Typed lookup: array of strings.
+    pub fn get_str_array(&self, key: &str) -> Option<Vec<String>> {
+        match self.map.get(key) {
+            Some(Value::Array(xs)) => xs
+                .iter()
+                .map(|v| if let Value::Str(s) = v { Some(s.clone()) } else { None })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    /// Integer with default.
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get_int(key).unwrap_or(default)
+    }
+
+    /// Float with default.
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get_float(key).unwrap_or(default)
+    }
+
+    /// Bool with default.
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get_bool(key).unwrap_or(default)
+    }
+
+    /// String with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get_str(key).unwrap_or(default).to_string()
+    }
+
+    /// Number of keys.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# launcher config
+title = "demo"
+
+[cluster]
+num_fpgas = 4
+device = "XC7S75-2"
+oversubscribe = false
+
+[mlp]
+layers = [64, 32, 10]
+lr = 0.0078125
+names = ["a", "b"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::from_str(SAMPLE).unwrap();
+        assert_eq!(c.get_str("title"), Some("demo"));
+        assert_eq!(c.get_int("cluster.num_fpgas"), Some(4));
+        assert_eq!(c.get_str("cluster.device"), Some("XC7S75-2"));
+        assert_eq!(c.get_bool("cluster.oversubscribe"), Some(false));
+        assert_eq!(c.get_int_array("mlp.layers"), Some(vec![64, 32, 10]));
+        assert_eq!(c.get_float("mlp.lr"), Some(0.0078125));
+        assert_eq!(c.get_str_array("mlp.names"), Some(vec!["a".into(), "b".into()]));
+    }
+
+    #[test]
+    fn defaults_and_coercion() {
+        let c = Config::from_str(SAMPLE).unwrap();
+        assert_eq!(c.int_or("cluster.num_fpgas", 1), 4);
+        assert_eq!(c.int_or("missing", 7), 7);
+        // int coerces to float
+        assert_eq!(c.get_float("cluster.num_fpgas"), Some(4.0));
+        // but not the reverse via get_int
+        assert_eq!(c.get_int("mlp.lr"), None);
+    }
+
+    #[test]
+    fn prefix_iteration() {
+        let c = Config::from_str(SAMPLE).unwrap();
+        let keys: Vec<&str> = c.keys_with_prefix("cluster.").collect();
+        assert_eq!(keys, vec!["cluster.device", "cluster.num_fpgas", "cluster.oversubscribe"]);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::from_str(SAMPLE).unwrap();
+        c.set("cluster.num_fpgas", Value::Int(8));
+        assert_eq!(c.get_int("cluster.num_fpgas"), Some(8));
+    }
+}

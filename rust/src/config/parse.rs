@@ -1,0 +1,217 @@
+//! TOML-subset parser (hand-rolled; no external deps available).
+
+use super::value::Value;
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+/// Parse errors with line numbers.
+#[derive(Debug, Error, PartialEq)]
+pub enum ConfigError {
+    /// I/O failure reading a config file.
+    #[error("cannot read config {0}: {1}")]
+    Io(String, String),
+    /// Syntax error at a given 1-based line.
+    #[error("config syntax error at line {0}: {1}")]
+    Syntax(usize, String),
+    /// The same key appears twice.
+    #[error("duplicate key {0:?} at line {1}")]
+    DuplicateKey(String, usize),
+}
+
+/// Parse a document into flattened dotted keys.
+pub fn parse_document(text: &str) -> Result<BTreeMap<String, Value>, ConfigError> {
+    let mut map = BTreeMap::new();
+    let mut section = String::new();
+    for (idx, raw_line) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw_line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| ConfigError::Syntax(lineno, "unterminated section header".into()))?
+                .trim();
+            if name.is_empty() || !name.split('.').all(is_valid_key) {
+                return Err(ConfigError::Syntax(lineno, format!("bad section name {name:?}")));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| ConfigError::Syntax(lineno, "expected `key = value`".into()))?;
+        let key = line[..eq].trim();
+        if !is_valid_key(key) {
+            return Err(ConfigError::Syntax(lineno, format!("bad key {key:?}")));
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        if map.contains_key(&full) {
+            return Err(ConfigError::DuplicateKey(full, lineno));
+        }
+        map.insert(full, value);
+    }
+    Ok(map)
+}
+
+fn is_valid_key(k: &str) -> bool {
+    !k.is_empty()
+        && k.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, ConfigError> {
+    if s.is_empty() {
+        return Err(ConfigError::Syntax(lineno, "missing value".into()));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| ConfigError::Syntax(lineno, "unterminated string".into()))?;
+        // Minimal escapes: \\ \" \n \t. A bare `"` inside the body (i.e. not
+        // escaped) means the string terminated early → malformed line.
+        let mut out = String::with_capacity(body.len());
+        let mut chars = body.chars();
+        while let Some(c) = chars.next() {
+            if c == '"' {
+                return Err(ConfigError::Syntax(lineno, "unescaped quote in string".into()));
+            }
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => {
+                        return Err(ConfigError::Syntax(
+                            lineno,
+                            format!("bad escape \\{}", other.map(String::from).unwrap_or_default()),
+                        ))
+                    }
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| ConfigError::Syntax(lineno, "unterminated array".into()))?
+            .trim();
+        if body.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        // No nested arrays in our subset; split on commas outside strings.
+        let mut items = Vec::new();
+        let mut depth_str = false;
+        let mut start = 0usize;
+        for (i, c) in body.char_indices() {
+            match c {
+                '"' => depth_str = !depth_str,
+                ',' if !depth_str => {
+                    items.push(parse_value(body[start..i].trim(), lineno)?);
+                    start = i + 1;
+                }
+                _ => {}
+            }
+        }
+        items.push(parse_value(body[start..].trim(), lineno)?);
+        return Ok(Value::Array(items));
+    }
+    // number: int if it parses as i64 and has no '.', 'e' etc.
+    if s.chars().all(|c| c.is_ascii_digit() || c == '-' || c == '+' || c == '_')
+        && s.chars().any(|c| c.is_ascii_digit())
+    {
+        let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ConfigError::Syntax(lineno, format!("cannot parse value {s:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let m = parse_document("a = 1\nb = -2\nc = 1_000\nd = 2.5\ne = true\nf = \"x\"").unwrap();
+        assert_eq!(m["a"], Value::Int(1));
+        assert_eq!(m["b"], Value::Int(-2));
+        assert_eq!(m["c"], Value::Int(1000));
+        assert_eq!(m["d"], Value::Float(2.5));
+        assert_eq!(m["e"], Value::Bool(true));
+        assert_eq!(m["f"], Value::Str("x".into()));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let m = parse_document("# top\n\na = 1 # trailing\nb = \"has # inside\"\n").unwrap();
+        assert_eq!(m["a"], Value::Int(1));
+        assert_eq!(m["b"], Value::Str("has # inside".into()));
+    }
+
+    #[test]
+    fn nested_sections_flatten() {
+        let m = parse_document("[a.b]\nc = 1").unwrap();
+        assert_eq!(m["a.b.c"], Value::Int(1));
+    }
+
+    #[test]
+    fn arrays_mixed_and_strings() {
+        let m = parse_document("xs = [1, 2, 3]\nys = [\"a,b\", \"c\"]").unwrap();
+        assert_eq!(m["xs"], Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)]));
+        assert_eq!(
+            m["ys"],
+            Value::Array(vec![Value::Str("a,b".into()), Value::Str("c".into())])
+        );
+    }
+
+    #[test]
+    fn string_escapes() {
+        let m = parse_document(r#"s = "a\nb\t\"q\"""#).unwrap();
+        assert_eq!(m["s"], Value::Str("a\nb\t\"q\"".into()));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        assert_eq!(
+            parse_document("a = 1\nbad line"),
+            Err(ConfigError::Syntax(2, "expected `key = value`".into()))
+        );
+        assert_eq!(
+            parse_document("a = 1\na = 2"),
+            Err(ConfigError::DuplicateKey("a".into(), 2))
+        );
+        assert!(matches!(parse_document("[unterminated"), Err(ConfigError::Syntax(1, _))));
+        assert!(matches!(parse_document("x = \"open"), Err(ConfigError::Syntax(1, _))));
+        assert!(matches!(parse_document("x = [1, 2"), Err(ConfigError::Syntax(1, _))));
+        assert!(matches!(parse_document("x = zzz"), Err(ConfigError::Syntax(1, _))));
+    }
+}

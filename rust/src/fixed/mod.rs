@@ -1,0 +1,299 @@
+//! 16-bit signed fixed-point arithmetic — the single source of truth for the
+//! Matrix Machine's datapath numerics (paper §2, §4.2).
+//!
+//! The paper's DSPs "are set to process 16 bit signed integers"; the DSP48E1
+//! produces a 48-bit result that "is truncated into a 16 bit signed integer",
+//! and the Activation Processor applies a 7-bit right shift before its BRAM
+//! table lookup. We model this as a `Q(16, F)` format (default `F = 7`,
+//! i.e. Q8.7): a lane value `v: i16` represents the real number `v / 2^F`.
+//!
+//! Semantics shared bit-exactly by the cycle-accurate simulator
+//! ([`crate::hw`]), the fast functional simulator, the pure-jnp reference
+//! (`python/compile/kernels/ref.py`) and the Pallas kernel
+//! (`python/compile/kernels/mvm_layer.py`):
+//!
+//! * `ADD`/`SUB`/`SUM` — operate on Q.F values directly; results wrap (or
+//!   saturate, see [`RoundMode`]) to 16 bits. No shift: Q.F + Q.F = Q.F.
+//! * `ELEM_MULT`/`DOT` — products are Q.2F; the 48-bit accumulator result is
+//!   shifted right by `F` (arithmetic) and then narrowed to 16 bits. This is
+//!   the "truncate 48 → 16" step of §4.2 interpreted as taking the Q.F
+//!   window (see DESIGN.md §3 deviation note; the low-16-bits reading cannot
+//!   train and is therefore rejected).
+//!
+//! [`RoundMode::Wrap`] is the paper-accurate hardware behaviour (a plain bus
+//! truncation); [`RoundMode::Saturate`] is the ablation alternative
+//! (`benches/bench_ablation.rs`).
+
+/// How a wide accumulator value is narrowed to 16 bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RoundMode {
+    /// Keep the low 16 bits (two's-complement wraparound) — what a plain
+    /// wire truncation in the VHDL does.
+    Wrap,
+    /// Clamp to `[i16::MIN, i16::MAX]` — costs a comparator tree in hardware
+    /// but avoids catastrophic sign flips near the range edges.
+    Saturate,
+}
+
+/// Fixed-point format + narrowing behaviour for one Matrix Machine datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FixedSpec {
+    /// Number of fractional bits `F` in the Q(16, F) format.
+    pub frac_bits: u32,
+    /// Narrowing behaviour of the 48→16 truncation stage.
+    pub round: RoundMode,
+}
+
+impl FixedSpec {
+    /// The paper's configuration: Q8.7, plain truncation.
+    pub const PAPER: FixedSpec = FixedSpec { frac_bits: 7, round: RoundMode::Wrap };
+
+    /// Create a spec with the given fraction bits and wrap narrowing.
+    pub fn q(frac_bits: u32) -> FixedSpec {
+        assert!(frac_bits < 16, "frac_bits must be < 16");
+        FixedSpec { frac_bits, round: RoundMode::Wrap }
+    }
+
+    /// Same format with saturating narrowing.
+    pub fn saturating(self) -> FixedSpec {
+        FixedSpec { round: RoundMode::Saturate, ..self }
+    }
+
+    /// The real-value scale `2^F`.
+    pub fn scale(&self) -> f64 {
+        (1u32 << self.frac_bits) as f64
+    }
+
+    /// Smallest representable positive step (`1 / 2^F`).
+    pub fn resolution(&self) -> f64 {
+        1.0 / self.scale()
+    }
+
+    /// Narrow a wide accumulator value to 16 bits per [`RoundMode`].
+    #[inline]
+    pub fn narrow(&self, acc: i64) -> i16 {
+        match self.round {
+            RoundMode::Wrap => acc as i16,
+            RoundMode::Saturate => acc.clamp(i16::MIN as i64, i16::MAX as i64) as i16,
+        }
+    }
+
+    /// Encode a real number into Q.F (round-to-nearest, then narrow).
+    pub fn from_f64(&self, x: f64) -> i16 {
+        self.narrow((x * self.scale()).round() as i64)
+    }
+
+    /// Decode a Q.F lane into a real number.
+    pub fn to_f64(&self, v: i16) -> f64 {
+        v as f64 / self.scale()
+    }
+
+    /// Encode a slice of reals.
+    pub fn encode_vec(&self, xs: &[f64]) -> Vec<i16> {
+        xs.iter().map(|&x| self.from_f64(x)).collect()
+    }
+
+    /// Decode a slice of lanes.
+    pub fn decode_vec(&self, vs: &[i16]) -> Vec<f64> {
+        vs.iter().map(|&v| self.to_f64(v)).collect()
+    }
+
+    // ---- lane ops (what one MVM does per element) ----
+
+    /// Lane addition (`MVM_VEC_ADD` element step).
+    #[inline]
+    pub fn add(&self, a: i16, b: i16) -> i16 {
+        self.narrow(a as i64 + b as i64)
+    }
+
+    /// Lane subtraction (`MVM_VEC_SUB` element step).
+    #[inline]
+    pub fn sub(&self, a: i16, b: i16) -> i16 {
+        self.narrow(a as i64 - b as i64)
+    }
+
+    /// Lane multiply with Q.2F → Q.F rescale (`MVM_ELEM_MUTLI` element step).
+    #[inline]
+    pub fn mul(&self, a: i16, b: i16) -> i16 {
+        self.narrow((a as i64 * b as i64) >> self.frac_bits)
+    }
+
+    // ---- vector ops (what one MVM does per instruction) ----
+
+    /// Vector dot product: 48-bit accumulate of Q.2F products, then one
+    /// rescale + narrow (`MVM_VEC_DOT`).
+    pub fn dot(&self, a: &[i16], b: &[i16]) -> i16 {
+        assert_eq!(a.len(), b.len(), "dot: length mismatch");
+        self.narrow(self.dot_acc(a, b) >> self.frac_bits)
+    }
+
+    /// The raw 48-bit (i64) accumulator value of a dot product, before the
+    /// rescale/narrow stage. Exposed for the cycle-accurate DSP model.
+    #[inline]
+    pub fn dot_acc(&self, a: &[i16], b: &[i16]) -> i64 {
+        let mut acc: i64 = 0;
+        for (&x, &y) in a.iter().zip(b.iter()) {
+            acc += x as i64 * y as i64;
+        }
+        acc
+    }
+
+    /// Vector summation: 48-bit accumulate of Q.F lanes, narrow, no shift
+    /// (`MVM_VEC_SUM`).
+    pub fn sum(&self, a: &[i16]) -> i16 {
+        let acc: i64 = a.iter().map(|&x| x as i64).sum();
+        self.narrow(acc)
+    }
+
+    /// Element-wise vector addition (`VECTOR_ADDITION`).
+    pub fn vadd(&self, a: &[i16], b: &[i16]) -> Vec<i16> {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(&x, &y)| self.add(x, y)).collect()
+    }
+
+    /// Element-wise vector subtraction (`VECTOR_SUBTRACTION`).
+    pub fn vsub(&self, a: &[i16], b: &[i16]) -> Vec<i16> {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(&x, &y)| self.sub(x, y)).collect()
+    }
+
+    /// Element-wise vector multiplication (`ELEMENT_MULTIPLICATION`).
+    pub fn vmul(&self, a: &[i16], b: &[i16]) -> Vec<i16> {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(&x, &y)| self.mul(x, y)).collect()
+    }
+}
+
+impl Default for FixedSpec {
+    fn default() -> Self {
+        FixedSpec::PAPER
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn paper_spec_is_q8_7() {
+        let s = FixedSpec::PAPER;
+        assert_eq!(s.frac_bits, 7);
+        assert_eq!(s.scale(), 128.0);
+        assert_eq!(s.from_f64(1.0), 128);
+        assert_eq!(s.to_f64(128), 1.0);
+        assert_eq!(s.from_f64(-0.5), -64);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_within_resolution() {
+        let s = FixedSpec::q(7);
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let x = (r.gen_f64() - 0.5) * 400.0; // within Q8.7 range ±256
+            let v = s.from_f64(x.clamp(-255.0, 255.0));
+            let y = s.to_f64(v);
+            assert!((x.clamp(-255.0, 255.0) - y).abs() <= s.resolution() * 0.5 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn mul_rescales_q2f_to_qf() {
+        let s = FixedSpec::q(7);
+        // 1.5 * 2.0 = 3.0
+        let a = s.from_f64(1.5);
+        let b = s.from_f64(2.0);
+        assert_eq!(s.to_f64(s.mul(a, b)), 3.0);
+        // 0.0078125 * 0.0078125 underflows to 0 at Q.7 (truncation toward -inf)
+        let tiny = s.from_f64(s.resolution());
+        assert_eq!(s.mul(tiny, tiny), 0);
+    }
+
+    #[test]
+    fn mul_truncates_toward_neg_infinity() {
+        // Arithmetic shift right truncates toward -inf: (-1 * 1) in Q.7 is
+        // -(2^-7 * 2^-7) = -2^-14, which shifts to -1, not 0.
+        let s = FixedSpec::q(7);
+        assert_eq!(s.mul(-1, 1), -1);
+        assert_eq!(s.mul(1, 1), 0);
+    }
+
+    #[test]
+    fn wrap_vs_saturate() {
+        let w = FixedSpec::q(7);
+        let st = w.saturating();
+        // 200.0 * 200.0 = 40000 >> Q8.7 range.
+        let a = w.from_f64(200.0);
+        let wide = (a as i64 * a as i64) >> 7;
+        assert_eq!(w.mul(a, a), wide as i16); // wraps
+        assert_eq!(st.mul(a, a), i16::MAX); // clamps
+        // add overflow
+        assert_eq!(w.add(i16::MAX, 1), i16::MIN);
+        assert_eq!(st.add(i16::MAX, 1), i16::MAX);
+    }
+
+    #[test]
+    fn dot_matches_scalar_decomposition_when_exact() {
+        let s = FixedSpec::q(7);
+        let a = s.encode_vec(&[1.0, 2.0, -3.0, 0.5]);
+        let b = s.encode_vec(&[4.0, -1.0, 2.0, 8.0]);
+        // 4 - 2 - 6 + 4 = 0
+        assert_eq!(s.dot(&a, &b), 0);
+    }
+
+    #[test]
+    fn dot_accumulates_before_single_rescale() {
+        // Accumulating in Q.2F then one shift differs from per-product
+        // shifts: two products of 0.5-resolution magnitudes must not each
+        // lose their fraction. dot([tiny,tiny],[tiny,tiny]) where
+        // tiny^2 = 2^-14: sum = 2*2^-14 = 2^-13, >>7 → 0 (still below
+        // resolution) but acc is 2, not 0.
+        let s = FixedSpec::q(7);
+        assert_eq!(s.dot_acc(&[1, 1], &[1, 1]), 2);
+        assert_eq!(s.dot(&[1, 1], &[1, 1]), 0);
+        // 64 lanes of 1*1 = 64 ≥ 128? no → still 0; 128 lanes → 1.
+        let ones = vec![1i16; 128];
+        assert_eq!(s.dot(&ones, &ones), 1);
+    }
+
+    #[test]
+    fn sum_has_no_shift() {
+        let s = FixedSpec::q(7);
+        let v = s.encode_vec(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.to_f64(s.sum(&v)), 6.0);
+    }
+
+    #[test]
+    fn vector_ops_match_lane_ops() {
+        let s = FixedSpec::q(7);
+        let mut r = Rng::new(5);
+        let a: Vec<i16> = (0..256).map(|_| r.gen_i16()).collect();
+        let b: Vec<i16> = (0..256).map(|_| r.gen_i16()).collect();
+        let add = s.vadd(&a, &b);
+        let sub = s.vsub(&a, &b);
+        let mul = s.vmul(&a, &b);
+        for i in 0..a.len() {
+            assert_eq!(add[i], s.add(a[i], b[i]));
+            assert_eq!(sub[i], s.sub(a[i], b[i]));
+            assert_eq!(mul[i], s.mul(a[i], b[i]));
+        }
+    }
+
+    #[test]
+    fn dot_never_overflows_i48_at_paper_sizes() {
+        // Worst case |a_i * b_i| = 2^30; 1024 lanes → 2^40 < 2^47.
+        let s = FixedSpec::q(7);
+        let a = vec![i16::MIN; 1024];
+        let acc = s.dot_acc(&a, &a);
+        assert_eq!(acc, (i16::MIN as i64) * (i16::MIN as i64) * 1024);
+        assert!(acc < (1i64 << 47));
+    }
+
+    #[test]
+    fn narrow_wrap_is_low_16_bits() {
+        let s = FixedSpec::q(7);
+        assert_eq!(s.narrow(0x1_0000), 0);
+        assert_eq!(s.narrow(0x1_8000), i16::MIN);
+        assert_eq!(s.narrow(-1), -1);
+    }
+}

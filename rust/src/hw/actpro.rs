@@ -1,0 +1,287 @@
+//! Activation Processor (§4.3, Table 7, Figs 9–10).
+//!
+//! Structure (Fig 9): 3 × BRAM (left = input, middle = activation lookup
+//! table, right = output), 2 counters, control logic. "The left BRAM is
+//! connected to the dual bit shifts. Each bit shifter applies a 7 bit shift
+//! to the right. After the dual bit shifts, the values are used as
+//! addresses to look-up the results for the activation functions."
+//!
+//! Two elements flow per cycle (the left BRAM's dual ports feed the dual
+//! shifters, the LUT BRAM's dual ports serve both lookups, and the right
+//! BRAM's dual ports commit both results), so a full 1024-element BRAM is
+//! processed in 512 run cycles + pipeline fill — the paper's
+//! `C_RUN = 517`.
+//!
+//! Pipeline (Fig 10): setup (1) → left-BRAM read (2) → shift (3) → LUT
+//! lookup (4–5) → write-counter increment (6) → right-BRAM write (7).
+//!
+//! ### Addressing modes
+//!
+//! The paper's shift-then-index scheme with a 1024-entry table: the shifted
+//! value indexes the LUT directly, wrapped to 10 bits (`AddrMode::Wrap`,
+//! paper-accurate). With Q8.7 inputs the wrap aliases `|x| ≥ 2^(9+s-7)`,
+//! which breaks saturating activations at the range edges, so the default
+//! mode used by the training stack biases the shifted value by half the
+//! table and clamps (`AddrMode::Clamp`) — see DESIGN.md §3. Both modes are
+//! exercised by tests and the ablation bench.
+
+use super::bram::Bram;
+use super::counter::Counter;
+use super::trace::Trace;
+use super::BRAM_DEPTH;
+use crate::isa::ActproOp;
+use crate::nn::lut::ActLut;
+
+/// ACTPRO pipeline latency from left-BRAM read issue to right-BRAM commit
+/// (Fig 10: read at cycle 2, write at cycle 7).
+pub const ACTPRO_LATENCY: u64 = 5;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Idle,
+    Run { len: u16, cycle_in_op: u64 },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Flight {
+    lane0: i16,
+    lane1: Option<i16>,
+    /// Cycles remaining until commit.
+    remaining: u64,
+    out_addr: u16,
+}
+
+/// One Activation Processor.
+#[derive(Debug, Clone)]
+pub struct ActPro {
+    left: Bram,
+    lut_bram: Bram,
+    right: Bram,
+    read_ctr: Counter,
+    write_ctr: Counter,
+    lut: ActLut,
+    state: State,
+    in_flight: Vec<Flight>,
+    writes_done: u16,
+    run_cycles: u64,
+    last_op_cycles: u64,
+}
+
+impl ActPro {
+    /// New ACTPRO with an activation table loaded (`ACTPRO_WRITE_ACT`).
+    pub fn new(lut: ActLut) -> ActPro {
+        let mut lut_bram = Bram::new();
+        lut_bram.load(0, lut.table());
+        ActPro {
+            left: Bram::new(),
+            lut_bram,
+            right: Bram::new(),
+            read_ctr: Counter::new(10),
+            write_ctr: Counter::new(10),
+            lut,
+            state: State::Idle,
+            in_flight: Vec::new(),
+            writes_done: 0,
+            run_cycles: 0,
+            last_op_cycles: 0,
+        }
+    }
+
+    /// Replace the activation table (`ACTPRO_WRITE_ACT`, Table 7). Takes
+    /// `table.len() / 2` cycles in hardware (dual-port load); charged by
+    /// the group model.
+    pub fn write_act(&mut self, lut: ActLut) {
+        self.lut_bram.load(0, lut.table());
+        self.lut = lut;
+    }
+
+    /// Load input data (`ACTPRO_WRITE_DATA`): testbench backdoor; the group
+    /// charges the 2-elements/cycle write cost.
+    pub fn load_input(&mut self, data: &[i16]) {
+        assert!(data.len() <= BRAM_DEPTH);
+        self.left.load(0, data);
+    }
+
+    /// Dump results (`ACTPRO_READ`).
+    pub fn dump_result(&self, len: usize) -> Vec<i16> {
+        self.right.dump(0, len)
+    }
+
+    /// Cycles of the most recently completed run (excludes setup).
+    pub fn last_op_cycles(&self) -> u64 {
+        self.last_op_cycles
+    }
+
+    /// Begin `ACTPRO_RUN` over `len` input elements.
+    pub fn begin_run(&mut self, len: u16) {
+        assert!(len as usize <= BRAM_DEPTH, "input length {len} exceeds BRAM");
+        assert!(len > 0);
+        self.state = State::Run { len, cycle_in_op: 0 };
+        self.in_flight.clear();
+        self.writes_done = 0;
+        self.run_cycles = 0;
+    }
+
+    /// Step one cycle of `ACTPRO_RUN`; true when complete.
+    pub fn step_run(&mut self, mut trace: Option<&mut Trace>) -> bool {
+        let (len, cycle_in_op) = match self.state {
+            State::Run { len, cycle_in_op } => (len, cycle_in_op),
+            _ => panic!("step_run outside ACTPRO_RUN"),
+        };
+        let cyc = cycle_in_op + 1;
+        if let Some(t) = trace.as_deref_mut() {
+            t.record(cyc, "state", ActproOp::Run.mnemonic());
+        }
+        if cyc == 1 {
+            // Fig 10 cycle 1: "the control logic sets up the pipeline".
+            self.read_ctr.reset();
+            self.write_ctr.reset();
+            if let Some(t) = trace.as_deref_mut() {
+                t.record(cyc, "phase", "setup");
+            }
+            self.state = State::Run { len, cycle_in_op: cycle_in_op + 1 };
+            return false;
+        }
+        self.run_cycles += 1;
+
+        // Advance in-flight pairs; commit those reaching the right BRAM.
+        for f in &mut self.in_flight {
+            f.remaining -= 1;
+        }
+        while let Some(pos) = self.in_flight.iter().position(|f| f.remaining == 0) {
+            let f = self.in_flight.remove(pos);
+            let y0 = self.lookup(f.lane0);
+            self.right.write(0, f.out_addr, y0);
+            self.writes_done += 1;
+            if let Some(y1_in) = f.lane1 {
+                let y1 = self.lookup(y1_in);
+                self.right.write(1, f.out_addr + 1, y1);
+                self.writes_done += 1;
+            }
+            if let Some(t) = trace.as_deref_mut() {
+                t.record(cyc, "wr_en", 1);
+                t.record(cyc, "wr_addr", f.out_addr);
+            }
+        }
+        self.right.clock();
+
+        // Issue the next dual read.
+        let i = self.read_ctr.value() * 2;
+        if i < len {
+            self.left.read(0, i);
+            let has_second = i + 1 < len;
+            if has_second {
+                self.left.read(1, i + 1);
+            }
+            self.left.clock();
+            let lane0 = self.left.dout(0);
+            let lane1 = if has_second { Some(self.left.dout(1)) } else { None };
+            // Data leaves the read stage now and commits ACTPRO_LATENCY
+            // cycles later (read@2 → write@7, Fig 10).
+            self.in_flight.push(Flight { lane0, lane1, remaining: ACTPRO_LATENCY, out_addr: i });
+            self.read_ctr.clock(true);
+            if let Some(t) = trace.as_deref_mut() {
+                t.record(cyc, "rd_addr", i);
+                t.record(cyc, "shift_in", lane0);
+            }
+        } else {
+            self.left.clock();
+        }
+
+        let done = self.writes_done >= len;
+        if done {
+            self.last_op_cycles = self.run_cycles;
+            self.state = State::Idle;
+        } else {
+            self.state = State::Run { len, cycle_in_op: cycle_in_op + 1 };
+        }
+        done
+    }
+
+    /// The shift → LUT-BRAM lookup datapath for one lane (Fig 9).
+    fn lookup(&self, x: i16) -> i16 {
+        self.lut.apply_scalar(x)
+    }
+
+    /// Run to completion, returning total cycles (including setup).
+    pub fn run(&mut self, len: u16) -> u64 {
+        self.begin_run(len);
+        let mut cycles = 1;
+        assert!(!self.step_run(None));
+        loop {
+            cycles += 1;
+            if self.step_run(None) {
+                return cycles;
+            }
+            assert!(cycles < 10_000, "runaway ACTPRO run");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FixedSpec;
+    use crate::nn::lut::{ActKind, ActLut, AddrMode};
+    use crate::util::Rng;
+
+    fn relu_lut() -> ActLut {
+        ActLut::build(ActKind::Relu, false, FixedSpec::PAPER, AddrMode::Clamp, 7)
+    }
+
+    #[test]
+    fn relu_matches_lut_reference() {
+        let mut r = Rng::new(6);
+        let xs: Vec<i16> = (0..777).map(|_| r.gen_i16()).collect();
+        let lut = relu_lut();
+        let mut a = ActPro::new(lut.clone());
+        a.load_input(&xs);
+        a.run(777);
+        let got = a.dump_result(777);
+        let want: Vec<i16> = xs.iter().map(|&x| lut.apply_scalar(x)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn full_bram_run_cycles_match_paper_c_run() {
+        // C_RUN = 517 for 1024 elements (paper §4.1 activation example):
+        // 512 dual-lane reads + 5-cycle latency.
+        let mut a = ActPro::new(relu_lut());
+        a.load_input(&vec![0; 1024]);
+        let total = a.run(1024);
+        assert_eq!(a.last_op_cycles(), 517);
+        assert_eq!(total, 518); // + setup cycle
+    }
+
+    #[test]
+    fn fig10_timing_read_at_2_write_at_7() {
+        let mut a = ActPro::new(relu_lut());
+        a.load_input(&[128, -128]);
+        a.begin_run(2);
+        let mut tr = Trace::new();
+        while !a.step_run(Some(&mut tr)) {}
+        assert_eq!(tr.first_cycle_of("rd_addr", "0"), Some(2));
+        assert_eq!(tr.first_cycle_of("wr_en", "1"), Some(7));
+    }
+
+    #[test]
+    fn odd_length_handles_final_single_lane() {
+        let xs = vec![10i16, -10, 300];
+        let lut = relu_lut();
+        let mut a = ActPro::new(lut.clone());
+        a.load_input(&xs);
+        a.run(3);
+        assert_eq!(a.dump_result(3), xs.iter().map(|&x| lut.apply_scalar(x)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn write_act_swaps_table() {
+        let relu = relu_lut();
+        let drelu = ActLut::build(ActKind::Relu, true, FixedSpec::PAPER, AddrMode::Clamp, 7);
+        let mut a = ActPro::new(relu);
+        a.write_act(drelu.clone());
+        a.load_input(&[256, -256]);
+        a.run(2);
+        assert_eq!(a.dump_result(2), vec![drelu.apply_scalar(256), drelu.apply_scalar(-256)]);
+    }
+}

@@ -1,0 +1,158 @@
+//! RAMB18E1 block RAM model (paper §4.2; Xilinx UG473).
+//!
+//! "Each BRAM (RAMB18E1) stores 1024 x 16 bit signed value. Furthermore,
+//! each BRAM has two read/write ports."
+//!
+//! The model is synchronous like the silicon: a read issued on a port in
+//! cycle *t* presents its data on that port's output register in cycle
+//! *t + 1*; writes are committed at the end of the cycle (write-first is
+//! irrelevant here because the simulator never reads and writes the same
+//! address in the same cycle from different ports — the assembler's
+//! schedules keep operand and result columns disjoint).
+
+use super::BRAM_DEPTH;
+
+/// Per-port latched command.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PortCmd {
+    Idle,
+    Read { addr: u16 },
+    Write { addr: u16, data: i16 },
+}
+
+/// One dual-port 1024 × 16-bit block RAM.
+#[derive(Debug, Clone)]
+pub struct Bram {
+    mem: Vec<i16>,
+    cmd: [PortCmd; 2],
+    dout: [i16; 2],
+}
+
+impl Default for Bram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bram {
+    /// Zero-initialised BRAM.
+    pub fn new() -> Bram {
+        Bram { mem: vec![0; BRAM_DEPTH], cmd: [PortCmd::Idle; 2], dout: [0; 2] }
+    }
+
+    /// Issue a read on `port` (0/1) for this cycle; data visible on
+    /// [`Bram::dout`] after the next [`Bram::clock`].
+    pub fn read(&mut self, port: usize, addr: u16) {
+        debug_assert!((addr as usize) < BRAM_DEPTH, "BRAM address {addr} out of range");
+        self.cmd[port] = PortCmd::Read { addr: addr % BRAM_DEPTH as u16 };
+    }
+
+    /// Issue a write on `port` for this cycle (committed at `clock`).
+    pub fn write(&mut self, port: usize, addr: u16, data: i16) {
+        debug_assert!((addr as usize) < BRAM_DEPTH, "BRAM address {addr} out of range");
+        self.cmd[port] = PortCmd::Write { addr: addr % BRAM_DEPTH as u16, data };
+    }
+
+    /// Advance one clock edge: commit writes, latch read data.
+    pub fn clock(&mut self) {
+        for p in 0..2 {
+            match self.cmd[p] {
+                PortCmd::Idle => {}
+                PortCmd::Read { addr } => {
+                    self.dout[p] = self.mem[addr as usize];
+                }
+                PortCmd::Write { addr, data } => {
+                    self.mem[addr as usize] = data;
+                }
+            }
+            self.cmd[p] = PortCmd::Idle;
+        }
+    }
+
+    /// Registered read-data output of `port` (value latched by the last
+    /// `clock` that serviced a read).
+    pub fn dout(&self, port: usize) -> i16 {
+        self.dout[port]
+    }
+
+    /// Debug/testbench backdoor: read memory combinationally.
+    pub fn peek(&self, addr: usize) -> i16 {
+        self.mem[addr]
+    }
+
+    /// Debug/testbench backdoor: load contents directly (used by the
+    /// functional machine to skip cycle-accurate DMA when configured).
+    pub fn load(&mut self, base: usize, data: &[i16]) {
+        assert!(base + data.len() <= BRAM_DEPTH, "BRAM load overflow");
+        self.mem[base..base + data.len()].copy_from_slice(data);
+    }
+
+    /// Debug/testbench backdoor: dump a range.
+    pub fn dump(&self, base: usize, len: usize) -> Vec<i16> {
+        self.mem[base..base + len].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_is_synchronous() {
+        let mut b = Bram::new();
+        b.load(0, &[5, 6, 7]);
+        b.read(0, 1);
+        // before the clock edge, dout still holds the old value (0)
+        assert_eq!(b.dout(0), 0);
+        b.clock();
+        assert_eq!(b.dout(0), 6);
+    }
+
+    #[test]
+    fn dual_port_parallel_write() {
+        // Fig 7: "the left BRAM writes input_data0 and input_data1 in
+        // parallel using the addresses given by input_addr0 and input_addr1"
+        let mut b = Bram::new();
+        b.write(0, 10, 111);
+        b.write(1, 11, 222);
+        b.clock();
+        assert_eq!(b.peek(10), 111);
+        assert_eq!(b.peek(11), 222);
+    }
+
+    #[test]
+    fn write_then_read_same_port() {
+        let mut b = Bram::new();
+        b.write(0, 3, -9);
+        b.clock();
+        b.read(0, 3);
+        b.clock();
+        assert_eq!(b.dout(0), -9);
+    }
+
+    #[test]
+    fn dout_holds_between_reads() {
+        let mut b = Bram::new();
+        b.load(0, &[42]);
+        b.read(1, 0);
+        b.clock();
+        assert_eq!(b.dout(1), 42);
+        b.clock(); // idle cycle: output register holds
+        assert_eq!(b.dout(1), 42);
+    }
+
+    #[test]
+    fn capacity_is_1024() {
+        let mut b = Bram::new();
+        b.write(0, (BRAM_DEPTH - 1) as u16, 1);
+        b.clock();
+        assert_eq!(b.peek(BRAM_DEPTH - 1), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "BRAM load overflow")]
+    fn load_overflow_panics() {
+        let mut b = Bram::new();
+        b.load(BRAM_DEPTH - 1, &[1, 2]);
+    }
+}

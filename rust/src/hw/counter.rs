@@ -1,0 +1,76 @@
+//! 8-bit address counters (paper §4.1: "The 8 bit input counter is used to
+//! select the input addresses of the individual MVMs... The output counters
+//! are designed to mirror the input counters").
+//!
+//! The counter value addresses a 512-entry column; the column-select bit
+//! supplies the BRAM address MSB (and the 10th bit for full-BRAM sweeps is
+//! handled by the group controller issuing two column passes).
+
+/// A clocked 8-bit-style counter with enable and synchronous reset.
+/// Width is parameterised because the ACTPRO's LUT sweep uses 9 bits.
+#[derive(Debug, Clone)]
+pub struct Counter {
+    value: u16,
+    width: u32,
+}
+
+impl Counter {
+    /// New counter of `width` bits, starting at 0.
+    pub fn new(width: u32) -> Counter {
+        assert!(width <= 16);
+        Counter { value: 0, width }
+    }
+
+    /// Paper's 8-bit counter.
+    pub fn bit8() -> Counter {
+        Counter::new(8)
+    }
+
+    /// Current value.
+    pub fn value(&self) -> u16 {
+        self.value
+    }
+
+    /// Clock edge: increment when enabled (wraps at 2^width).
+    pub fn clock(&mut self, enable: bool) {
+        if enable {
+            self.value = (self.value + 1) & ((1 << self.width) - 1);
+        }
+    }
+
+    /// Synchronous reset to zero.
+    pub fn reset(&mut self) {
+        self.value = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_when_enabled() {
+        let mut c = Counter::bit8();
+        c.clock(true);
+        c.clock(true);
+        c.clock(false);
+        assert_eq!(c.value(), 2);
+    }
+
+    #[test]
+    fn wraps_at_width() {
+        let mut c = Counter::new(2);
+        for _ in 0..5 {
+            c.clock(true);
+        }
+        assert_eq!(c.value(), 1); // 5 mod 4
+    }
+
+    #[test]
+    fn reset() {
+        let mut c = Counter::bit8();
+        c.clock(true);
+        c.reset();
+        assert_eq!(c.value(), 0);
+    }
+}

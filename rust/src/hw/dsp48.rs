@@ -1,0 +1,206 @@
+//! DSP48E1 slice model (paper §4.2; Xilinx UG479).
+//!
+//! "The left BRAM's dual outputs are feed to the dual inputs of the
+//! DSP48E1... The DSP48E1 is configured as a 6 stage pipeline. At the 8th
+//! cycle, the DSP48E1's P port outputs the result." — Fig 8.
+//!
+//! We model the slice as an opaque 6-stage pipeline: an operand pair issued
+//! in cycle *t* affects the 48-bit `P` register at the clock edge of cycle
+//! *t + 6*. Accumulating modes (`MultAcc` for dot products, `AddAcc` for
+//! summation) add into `P` at the exit stage — 1 op/cycle throughput, as in
+//! silicon where the post-adder closes the accumulate loop locally.
+//! `P` is wrapped to 48 bits like the real register.
+
+use super::DSP_PIPELINE_STAGES;
+
+/// DSP operating mode for one issued operand pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DspOp {
+    /// `P = A * B` (element-wise multiplication).
+    Mult,
+    /// `P = A + B` (vector addition).
+    Add,
+    /// `P = A - B` (vector subtraction).
+    Sub,
+    /// `P += A * B` (dot product).
+    MultAcc,
+    /// `P += A` (vector summation; B ignored).
+    AddAcc,
+}
+
+/// Sign-wrap an i64 into the 48-bit P register domain.
+#[inline]
+pub fn wrap48(x: i64) -> i64 {
+    (x << 16) >> 16
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Stage {
+    value: i64,
+    accumulate: bool,
+}
+
+/// One DSP48E1 slice as a 6-stage pipeline with a 48-bit `P` register.
+#[derive(Debug, Clone)]
+pub struct Dsp48 {
+    stages: [Option<Stage>; DSP_PIPELINE_STAGES],
+    p: i64,
+    p_updated: bool,
+}
+
+impl Default for Dsp48 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dsp48 {
+    /// Fresh slice, empty pipeline, `P = 0`.
+    pub fn new() -> Dsp48 {
+        Dsp48 { stages: [None; DSP_PIPELINE_STAGES], p: 0, p_updated: false }
+    }
+
+    /// Issue an operand pair for this cycle (call before [`Dsp48::clock`]).
+    pub fn issue(&mut self, a: i16, b: i16, op: DspOp) {
+        debug_assert!(self.stages[0].is_none(), "double issue in one cycle");
+        let (value, accumulate) = match op {
+            DspOp::Mult => (a as i64 * b as i64, false),
+            DspOp::Add => (a as i64 + b as i64, false),
+            DspOp::Sub => (a as i64 - b as i64, false),
+            DspOp::MultAcc => (a as i64 * b as i64, true),
+            DspOp::AddAcc => (a as i64, true),
+        };
+        self.stages[0] = Some(Stage { value: wrap48(value), accumulate });
+    }
+
+    /// Clock edge: shift the pipeline; a stage exiting updates `P`.
+    pub fn clock(&mut self) {
+        self.p_updated = false;
+        if let Some(out) = self.stages[DSP_PIPELINE_STAGES - 1] {
+            self.p = if out.accumulate { wrap48(self.p + out.value) } else { out.value };
+            self.p_updated = true;
+        }
+        for i in (1..DSP_PIPELINE_STAGES).rev() {
+            self.stages[i] = self.stages[i - 1];
+        }
+        self.stages[0] = None;
+    }
+
+    /// The 48-bit `P` output register (sign-extended into i64).
+    pub fn p(&self) -> i64 {
+        self.p
+    }
+
+    /// Did the last clock edge update `P`? (The MVM uses this as the
+    /// write-enable for the right BRAM / write counter, Fig 8 cycle 8.)
+    pub fn p_valid(&self) -> bool {
+        self.p_updated
+    }
+
+    /// Synchronous clear of the accumulator (issued between dot products).
+    pub fn clear_p(&mut self) {
+        self.p = 0;
+    }
+
+    /// True when no operations are in flight.
+    pub fn pipeline_empty(&self) -> bool {
+        self.stages.iter().all(Option::is_none)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_cycle_latency() {
+        // Fig 8: operands fed in cycle 3 appear on P at cycle 8 → 6 edges.
+        let mut d = Dsp48::new();
+        d.issue(2, 3, DspOp::Add);
+        for edge in 1..=DSP_PIPELINE_STAGES {
+            d.clock();
+            if edge < DSP_PIPELINE_STAGES {
+                assert!(!d.p_valid(), "P updated early at edge {edge}");
+            }
+        }
+        assert!(d.p_valid());
+        assert_eq!(d.p(), 5);
+    }
+
+    #[test]
+    fn pipelined_throughput_one_per_cycle() {
+        let mut d = Dsp48::new();
+        let mut outputs = Vec::new();
+        for i in 0..10i16 {
+            d.issue(i, 1, DspOp::Mult);
+            d.clock();
+            if d.p_valid() {
+                outputs.push(d.p());
+            }
+        }
+        // drain
+        for _ in 0..DSP_PIPELINE_STAGES {
+            d.clock();
+            if d.p_valid() {
+                outputs.push(d.p());
+            }
+        }
+        assert_eq!(outputs, (0..10).map(|i| i as i64).collect::<Vec<_>>());
+        assert!(d.pipeline_empty());
+    }
+
+    #[test]
+    fn mult_accumulate_sums_products() {
+        let mut d = Dsp48::new();
+        let a = [1i16, 2, 3, 4];
+        let b = [10i16, 20, 30, 40];
+        for i in 0..4 {
+            d.issue(a[i], b[i], DspOp::MultAcc);
+            d.clock();
+        }
+        for _ in 0..DSP_PIPELINE_STAGES {
+            d.clock();
+        }
+        assert_eq!(d.p(), 10 + 40 + 90 + 160);
+    }
+
+    #[test]
+    fn add_accumulate_ignores_b() {
+        let mut d = Dsp48::new();
+        for i in 1..=5i16 {
+            d.issue(i, 99, DspOp::AddAcc);
+            d.clock();
+        }
+        for _ in 0..DSP_PIPELINE_STAGES {
+            d.clock();
+        }
+        assert_eq!(d.p(), 15);
+    }
+
+    #[test]
+    fn p_wraps_at_48_bits() {
+        assert_eq!(wrap48((1i64 << 47) - 1) , (1i64 << 47) - 1);
+        assert_eq!(wrap48(1i64 << 47), -(1i64 << 47));
+        let mut d = Dsp48::new();
+        // accumulate i16::MIN * i16::MIN (=2^30) repeatedly: needs 2^17
+        // accumulations to overflow 48 bits — spot-check the wrap helper
+        // drives P through the pipeline instead.
+        d.issue(i16::MIN, i16::MIN, DspOp::Mult);
+        for _ in 0..DSP_PIPELINE_STAGES {
+            d.clock();
+        }
+        assert_eq!(d.p(), 1i64 << 30);
+    }
+
+    #[test]
+    fn clear_p_between_dots() {
+        let mut d = Dsp48::new();
+        d.issue(2, 2, DspOp::MultAcc);
+        for _ in 0..DSP_PIPELINE_STAGES {
+            d.clock();
+        }
+        assert_eq!(d.p(), 4);
+        d.clear_p();
+        assert_eq!(d.p(), 0);
+    }
+}

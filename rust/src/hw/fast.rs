@@ -1,0 +1,268 @@
+//! Fast functional simulator: bit-exact Matrix Machine numerics without
+//! per-flip-flop stepping. The hot path of training/cluster runs.
+//!
+//! Cycle charging is done by [`super::machine::MatrixMachine`]; this module
+//! is pure data movement + [`crate::fixed::FixedSpec`] arithmetic, shared
+//! with the structural simulator (equivalence asserted in
+//! `rust/tests/sim_equivalence.rs`).
+
+use crate::assembler::program::{Program, View, Wave};
+use crate::fixed::FixedSpec;
+use crate::isa::Opcode;
+
+/// Functional state: one lane vector per declared buffer.
+#[derive(Debug, Clone)]
+pub struct FastSim {
+    fixed: FixedSpec,
+    buffers: Vec<Vec<i16>>,
+    /// Reused lane scratch (perf pass §Perf: exec_wave is allocation-free
+    /// on the hot path; strided operands accumulate in place and
+    /// elementwise results stage here before scatter).
+    scratch: Vec<i16>,
+}
+
+impl FastSim {
+    /// Allocate buffers for a program (zeroed, or a constant's contents).
+    pub fn new(program: &Program) -> FastSim {
+        FastSim {
+            fixed: program.fixed,
+            buffers: program
+                .buffers
+                .iter()
+                .map(|b| match &b.init {
+                    Some(d) => {
+                        assert_eq!(d.len(), b.len(), "const init length mismatch");
+                        d.clone()
+                    }
+                    None => vec![0i16; b.len()],
+                })
+                .collect(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Dot-product accumulate of two views without materialising them.
+    #[inline]
+    fn dot_views(&self, a: &View, b: &View) -> i64 {
+        let ab = &self.buffers[a.buf];
+        let bb = &self.buffers[b.buf];
+        if a.stride == 1 && b.stride == 1 {
+            let av = &ab[a.offset..a.offset + a.len];
+            let bv = &bb[b.offset..b.offset + a.len];
+            self.fixed.dot_acc(av, bv)
+        } else {
+            let mut acc = 0i64;
+            let (mut ia, mut ib) = (a.offset, b.offset);
+            for _ in 0..a.len {
+                acc += ab[ia] as i64 * bb[ib] as i64;
+                ia += a.stride;
+                ib += b.stride;
+            }
+            acc
+        }
+    }
+
+    /// Sum-accumulate of one view.
+    #[inline]
+    fn sum_view(&self, a: &View) -> i64 {
+        let ab = &self.buffers[a.buf];
+        if a.stride == 1 {
+            ab[a.offset..a.offset + a.len].iter().map(|&x| x as i64).sum()
+        } else {
+            let mut acc = 0i64;
+            let mut ia = a.offset;
+            for _ in 0..a.len {
+                acc += ab[ia] as i64;
+                ia += a.stride;
+            }
+            acc
+        }
+    }
+
+    /// Overwrite a buffer's contents (length must match).
+    pub fn set_buffer(&mut self, id: usize, data: &[i16]) {
+        assert_eq!(self.buffers[id].len(), data.len(), "buffer {id} length mismatch");
+        self.buffers[id].copy_from_slice(data);
+    }
+
+    /// Read a whole buffer.
+    pub fn buffer(&self, id: usize) -> &[i16] {
+        &self.buffers[id]
+    }
+
+    /// Gather a strided view.
+    pub fn gather(&self, v: &View) -> Vec<i16> {
+        let buf = &self.buffers[v.buf];
+        if v.stride == 1 {
+            buf[v.offset..v.offset + v.len].to_vec()
+        } else {
+            (0..v.len).map(|i| buf[v.offset + i * v.stride]).collect()
+        }
+    }
+
+    /// Scatter into a strided view.
+    pub fn scatter(&mut self, v: &View, data: &[i16]) {
+        assert_eq!(data.len(), v.len);
+        let buf = &mut self.buffers[v.buf];
+        if v.stride == 1 {
+            buf[v.offset..v.offset + v.len].copy_from_slice(data);
+        } else {
+            for (i, &d) in data.iter().enumerate() {
+                buf[v.offset + i * v.stride] = d;
+            }
+        }
+    }
+
+    /// Execute one wave functionally (program must have passed `check`).
+    /// Allocation-free on the hot path: reductions accumulate straight
+    /// from the views; elementwise lanes stage in a reused scratch.
+    pub fn exec_wave(&mut self, program: &Program, wave: &Wave) {
+        let s = self.fixed;
+        match wave.op {
+            Opcode::Nop => {}
+            Opcode::VectorDotProduct => {
+                for lane in &wave.lanes {
+                    let b = lane.b.as_ref().expect("checked arity");
+                    let acc = self.dot_views(&lane.a, b);
+                    let v = s.narrow(acc >> s.frac_bits);
+                    self.buffers[lane.out.buf][lane.out.offset] = v;
+                }
+            }
+            Opcode::VectorSummation => {
+                for lane in &wave.lanes {
+                    let v = s.narrow(self.sum_view(&lane.a));
+                    self.buffers[lane.out.buf][lane.out.offset] = v;
+                }
+            }
+            Opcode::ActivationFunction => {
+                let lut = &program.luts[wave.lut.expect("checked: ACT wave has LUT")];
+                let mut scratch = std::mem::take(&mut self.scratch);
+                for lane in &wave.lanes {
+                    scratch.clear();
+                    let ab = &self.buffers[lane.a.buf];
+                    let mut ia = lane.a.offset;
+                    for _ in 0..lane.a.len {
+                        scratch.push(lut.apply_scalar(ab[ia]));
+                        ia += lane.a.stride;
+                    }
+                    self.scatter(&lane.out, &scratch);
+                }
+                self.scratch = scratch;
+            }
+            op => {
+                let mut scratch = std::mem::take(&mut self.scratch);
+                for lane in &wave.lanes {
+                    let b = lane.b.as_ref().expect("checked arity");
+                    scratch.clear();
+                    let ab = &self.buffers[lane.a.buf];
+                    let bb = &self.buffers[b.buf];
+                    let (mut ia, mut ib) = (lane.a.offset, b.offset);
+                    match op {
+                        Opcode::VectorAddition => {
+                            for _ in 0..lane.a.len {
+                                scratch.push(s.add(ab[ia], bb[ib]));
+                                ia += lane.a.stride;
+                                ib += b.stride;
+                            }
+                        }
+                        Opcode::VectorSubtraction => {
+                            for _ in 0..lane.a.len {
+                                scratch.push(s.sub(ab[ia], bb[ib]));
+                                ia += lane.a.stride;
+                                ib += b.stride;
+                            }
+                        }
+                        Opcode::ElementMultiplication => {
+                            for _ in 0..lane.a.len {
+                                scratch.push(s.mul(ab[ia], bb[ib]));
+                                ia += lane.a.stride;
+                                ib += b.stride;
+                            }
+                        }
+                        _ => unreachable!(),
+                    }
+                    self.scatter(&lane.out, &scratch);
+                }
+                self.scratch = scratch;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembler::program::{BufKind, LaneOp, Step};
+    use crate::nn::lut::{ActKind, ActLut, AddrMode};
+    use crate::util::Rng;
+
+    const S: FixedSpec = FixedSpec::PAPER;
+
+    #[test]
+    fn wave_execution_matches_fixed_reference() {
+        let mut p = Program::new("t", S);
+        let a = p.buffer("a", 32, 1, BufKind::Input);
+        let b = p.buffer("b", 32, 1, BufKind::Input);
+        let o = p.buffer("o", 32, 1, BufKind::Output);
+        let d = p.buffer("d", 1, 1, BufKind::Output);
+        let mut r = Rng::new(10);
+        let av: Vec<i16> = (0..32).map(|_| r.gen_i16()).collect();
+        let bv: Vec<i16> = (0..32).map(|_| r.gen_i16()).collect();
+        let mut sim = FastSim::new(&p);
+        sim.set_buffer(a, &av);
+        sim.set_buffer(b, &bv);
+        for (op, out, want) in [
+            (Opcode::VectorAddition, o, S.vadd(&av, &bv)),
+            (Opcode::VectorSubtraction, o, S.vsub(&av, &bv)),
+            (Opcode::ElementMultiplication, o, S.vmul(&av, &bv)),
+            (Opcode::VectorDotProduct, d, vec![S.dot(&av, &bv)]),
+        ] {
+            let out_len = if out == d { 1 } else { 32 };
+            let w = Wave {
+                op,
+                vec_len: 32,
+                lut: None,
+                lanes: vec![LaneOp {
+                    a: View::all(a, 32),
+                    b: Some(View::all(b, 32)),
+                    out: View::all(out, out_len),
+                }],
+            };
+            sim.exec_wave(&p, &w);
+            assert_eq!(sim.buffer(out), want.as_slice(), "{op}");
+        }
+    }
+
+    #[test]
+    fn strided_gather_scatter_walks_columns() {
+        // 3x4 row-major matrix; column 1 = lanes 1,5,9.
+        let mut p = Program::new("t", S);
+        let m = p.buffer("m", 3, 4, BufKind::Input);
+        let mut sim = FastSim::new(&p);
+        sim.set_buffer(m, &[0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11]);
+        let col1 = View { buf: m, offset: 1, len: 3, stride: 4 };
+        assert_eq!(sim.gather(&col1), vec![1, 5, 9]);
+        sim.scatter(&col1, &[-1, -5, -9]);
+        assert_eq!(sim.buffer(m), &[0, -1, 2, 3, 4, -5, 6, 7, 8, -9, 10, 11]);
+    }
+
+    #[test]
+    fn activation_wave_uses_lut() {
+        let mut p = Program::new("t", S);
+        let x = p.buffer("x", 4, 1, BufKind::Input);
+        let lut_id =
+            p.lut(ActLut::build(ActKind::Relu, false, S, AddrMode::Clamp, 7));
+        p.steps.push(Step::LoadLut(lut_id));
+        let mut sim = FastSim::new(&p);
+        sim.set_buffer(x, &[-300, -1, 128, 300]);
+        let w = Wave {
+            op: Opcode::ActivationFunction,
+            vec_len: 4,
+            lut: Some(lut_id),
+            lanes: vec![LaneOp { a: View::all(x, 4), b: None, out: View::all(x, 4) }],
+        };
+        sim.exec_wave(&p, &w);
+        let lut = &p.luts[lut_id];
+        assert_eq!(sim.buffer(x), lut.apply(&[-300, -1, 128, 300]).as_slice());
+    }
+}

@@ -1,0 +1,180 @@
+//! Circular FIFO ring connecting the global controller and the processor
+//! groups (paper §4, Fig 4).
+//!
+//! "The global controller writes microcodes and data to a circular FIFO.
+//! The FIFO's purpose is to distribute the microcodes and data to each
+//! processor group. The FIFO also collects outputs of each processor
+//! group. Moreover, the FIFO reduces the propagation delay of the signals."
+//!
+//! We model the ring as `n_stations` registered hops (station 0 = global
+//! controller, stations `1..=G` = processor groups): a token injected at
+//! station `s` for destination `d` takes `ring_distance(s, d)` cycles and
+//! one slot of the bounded buffer. The bounded capacity is what gives the
+//! cluster/machine layers their backpressure semantics.
+
+use std::collections::VecDeque;
+
+/// A token travelling the ring.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token<T> {
+    /// Destination station.
+    pub dest: usize,
+    /// Remaining hop count.
+    pub hops_left: usize,
+    /// Payload (microcode word or data beat).
+    pub payload: T,
+}
+
+/// Bounded ring FIFO with per-cycle hop progression.
+#[derive(Debug, Clone)]
+pub struct RingFifo<T> {
+    n_stations: usize,
+    capacity: usize,
+    in_flight: VecDeque<Token<T>>,
+    delivered: Vec<VecDeque<T>>,
+    /// Total tokens ever enqueued (for stats).
+    pub enqueued: u64,
+    /// Cycles advanced (for stats).
+    pub cycles: u64,
+}
+
+impl<T> RingFifo<T> {
+    /// A ring with `n_stations` stations and `capacity` in-flight slots.
+    pub fn new(n_stations: usize, capacity: usize) -> RingFifo<T> {
+        assert!(n_stations >= 1);
+        assert!(capacity >= 1);
+        RingFifo {
+            n_stations,
+            capacity,
+            in_flight: VecDeque::new(),
+            delivered: (0..n_stations).map(|_| VecDeque::new()).collect(),
+            enqueued: 0,
+            cycles: 0,
+        }
+    }
+
+    /// Unidirectional ring distance from `src` to `dest`.
+    pub fn ring_distance(&self, src: usize, dest: usize) -> usize {
+        (dest + self.n_stations - src) % self.n_stations
+    }
+
+    /// Try to inject a token at `src` for `dest`; `Err(payload)` when the
+    /// ring is full (backpressure).
+    pub fn push(&mut self, src: usize, dest: usize, payload: T) -> Result<(), T> {
+        assert!(src < self.n_stations && dest < self.n_stations);
+        if self.in_flight.len() >= self.capacity {
+            return Err(payload);
+        }
+        let hops = self.ring_distance(src, dest);
+        if hops == 0 {
+            self.delivered[dest].push_back(payload);
+        } else {
+            self.in_flight.push_back(Token { dest, hops_left: hops, payload });
+        }
+        self.enqueued += 1;
+        Ok(())
+    }
+
+    /// Advance one cycle: every in-flight token moves one hop.
+    pub fn clock(&mut self) {
+        self.cycles += 1;
+        let mut still = VecDeque::with_capacity(self.in_flight.len());
+        while let Some(mut t) = self.in_flight.pop_front() {
+            t.hops_left -= 1;
+            if t.hops_left == 0 {
+                self.delivered[t.dest].push_back(t.payload);
+            } else {
+                still.push_back(t);
+            }
+        }
+        self.in_flight = still;
+    }
+
+    /// Pop a delivered token at a station.
+    pub fn pop(&mut self, station: usize) -> Option<T> {
+        self.delivered[station].pop_front()
+    }
+
+    /// Tokens currently in flight.
+    pub fn in_flight_len(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Delivered-but-unconsumed count at a station.
+    pub fn pending_at(&self, station: usize) -> usize {
+        self.delivered[station].len()
+    }
+
+    /// Worst-case delivery latency (full ring traversal).
+    pub fn worst_latency(&self) -> usize {
+        self.n_stations - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delivers_after_ring_distance_cycles() {
+        let mut f: RingFifo<u32> = RingFifo::new(5, 16);
+        f.push(0, 3, 42).unwrap();
+        for _ in 0..2 {
+            f.clock();
+            assert_eq!(f.pop(3), None);
+        }
+        f.clock(); // 3rd hop
+        assert_eq!(f.pop(3), Some(42));
+    }
+
+    #[test]
+    fn wraparound_distance() {
+        let f: RingFifo<()> = RingFifo::new(4, 4);
+        assert_eq!(f.ring_distance(3, 1), 2);
+        assert_eq!(f.ring_distance(1, 3), 2);
+        assert_eq!(f.ring_distance(2, 2), 0);
+    }
+
+    #[test]
+    fn self_delivery_is_immediate() {
+        let mut f: RingFifo<u8> = RingFifo::new(3, 2);
+        f.push(1, 1, 9).unwrap();
+        assert_eq!(f.pop(1), Some(9));
+    }
+
+    #[test]
+    fn backpressure_when_full() {
+        let mut f: RingFifo<u8> = RingFifo::new(4, 2);
+        f.push(0, 1, 1).unwrap();
+        f.push(0, 2, 2).unwrap();
+        assert_eq!(f.push(0, 3, 3), Err(3));
+        f.clock(); // token 1 arrives
+        assert_eq!(f.pop(1), Some(1));
+        assert!(f.push(0, 3, 3).is_ok());
+    }
+
+    #[test]
+    fn fifo_order_preserved_per_destination() {
+        let mut f: RingFifo<u8> = RingFifo::new(3, 8);
+        f.push(0, 2, 1).unwrap();
+        f.push(0, 2, 2).unwrap();
+        f.clock();
+        f.push(0, 2, 3).unwrap();
+        f.clock();
+        f.clock();
+        assert_eq!(f.pop(2), Some(1));
+        assert_eq!(f.pop(2), Some(2));
+        assert_eq!(f.pop(2), Some(3));
+    }
+
+    #[test]
+    fn stats_count() {
+        let mut f: RingFifo<u8> = RingFifo::new(2, 4);
+        f.push(0, 1, 1).unwrap();
+        f.clock();
+        assert_eq!(f.enqueued, 1);
+        assert_eq!(f.cycles, 1);
+        assert_eq!(f.in_flight_len(), 0);
+        assert_eq!(f.pending_at(1), 1);
+    }
+}

@@ -1,0 +1,88 @@
+//! FPGA device model: one board of the paper's cluster (§2, §5).
+//!
+//! Combines a catalog part ([`crate::perf::catalog::FpgaPart`]) with the
+//! assembler's resource allocation (Eqns 3–4) into the machine shape the
+//! simulator executes against: how many MVM / ACTPRO groups exist and what
+//! the DDR can move per cycle.
+
+use crate::assembler::resource::ResourceModel;
+use crate::perf::catalog::FpgaPart;
+
+/// One FPGA board: part + derived Matrix Machine shape.
+#[derive(Debug, Clone, Copy)]
+pub struct FpgaDevice {
+    /// Catalog entry.
+    pub part: &'static FpgaPart,
+    /// MVM processor groups (Eqn 3).
+    pub mvm_groups: u32,
+    /// Activation processor groups (Eqn 4).
+    pub actpro_groups: u32,
+}
+
+impl FpgaDevice {
+    /// Build from a catalog part via the resource model.
+    pub fn new(part: &'static FpgaPart) -> FpgaDevice {
+        let alloc = ResourceModel::new(part).allocate();
+        FpgaDevice { part, mvm_groups: alloc.mvm_groups, actpro_groups: alloc.actpro_groups }
+    }
+
+    /// The paper's selected board (XC7S75-2).
+    pub fn selected() -> FpgaDevice {
+        FpgaDevice::new(FpgaPart::selected())
+    }
+
+    /// By part name.
+    pub fn by_name(name: &str) -> Option<FpgaDevice> {
+        FpgaPart::by_name(name).map(FpgaDevice::new)
+    }
+
+    /// Total MVM processors.
+    pub fn mvm_procs(&self) -> u32 {
+        self.mvm_groups * super::PROCS_PER_GROUP as u32
+    }
+
+    /// Cycles to move `bytes` over the board's DDR channels.
+    pub fn dma_cycles(&self, bytes: u64) -> u64 {
+        (bytes as f64 / self.part.ddr_bytes_per_cycle()).ceil() as u64
+    }
+
+    /// Wall-clock seconds for a cycle count at the fabric clock.
+    pub fn seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.part.t_cycle_s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selected_shape() {
+        let d = FpgaDevice::selected();
+        assert_eq!(d.mvm_groups, 16);
+        assert_eq!(d.actpro_groups, 4);
+        assert_eq!(d.mvm_procs(), 64);
+    }
+
+    #[test]
+    fn dma_cycles_at_128_bytes_per_cycle() {
+        let d = FpgaDevice::selected();
+        assert_eq!(d.dma_cycles(128), 1);
+        assert_eq!(d.dma_cycles(129), 2);
+        assert_eq!(d.dma_cycles(0), 0);
+        // a 512×512 i16 matrix = 512 KiB → 4096 cycles
+        assert_eq!(d.dma_cycles(512 * 512 * 2), 4096);
+    }
+
+    #[test]
+    fn seconds_at_100mhz() {
+        let d = FpgaDevice::selected();
+        assert!((d.seconds(100_000_000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn by_name() {
+        assert!(FpgaDevice::by_name("XC7S50-1").is_some());
+        assert!(FpgaDevice::by_name("nope").is_none());
+    }
+}

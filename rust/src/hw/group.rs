@@ -1,0 +1,369 @@
+//! Processor groups: 4 processors + local controller + microcode cache +
+//! 4:1 output multiplexer + input/output counters (paper §4.1, Fig 5,
+//! Tables 3–4).
+//!
+//! The **local controller** here is a real microcode interpreter: a group
+//! executes a sequence of up-to-16 [`Microcode`] words (the cache depth of
+//! §4.1), driving its four processors cycle by cycle exactly as the word
+//! fields dictate. The word kinds are distinguished by their
+//! processor-control nibbles, with the following conventions (fixed by the
+//! Matrix Assembler's `microcode_gen`, asserted here):
+//!
+//! * **write word** (MVM: one proc's nibble = `MVM_WRITE`; ACTPRO:
+//!   `ACTPRO_WRITE_DATA`/`ACTPRO_WRITE_ACT`): streams 2 lanes/cycle from
+//!   the group's input ports into the selected processor, addresses from
+//!   the input counter, column from `input_col`. `cycles = pairs + 1`
+//!   (setup cycle, Fig 7).
+//! * **compute word** (MVM: compute nibbles; ACTPRO: `ACTPRO_RUN`): all
+//!   flagged processors run in lockstep. MVM: `cycles = len + 8`
+//!   (setup + Fig 8 pipeline); ACTPRO: `cycles = len/2 + 6` (Fig 10).
+//! * **drain word** (all nibbles `*_READ`, output counter enabled): the
+//!   4:1 mux selects one processor (`out_mux_sel`); its result column
+//!   streams out at 1 lane/cycle (MVM right-BRAM port 1) or 2 lanes/cycle
+//!   (ACTPRO). `cycles = lanes` (resp. `lanes/2`).
+//!
+//! Counters reset at word boundaries (our convention; the paper's enable
+//! bits gate counting within a word).
+
+use super::actpro::ActPro;
+use super::counter::Counter;
+use super::mvm::Mvm;
+use super::Cycle;
+use crate::fixed::FixedSpec;
+use crate::isa::microcode::{Microcode, MICROCODE_CACHE_DEPTH, PROCS_PER_GROUP};
+use crate::isa::{ActproOp, MvmOp};
+use crate::nn::lut::ActLut;
+use std::collections::VecDeque;
+
+/// Streamed I/O of one group execution: input beats (2 lanes each) in,
+/// output lanes out.
+#[derive(Debug, Default)]
+pub struct GroupIo {
+    /// Input stream, consumed 2 lanes per write cycle.
+    pub input: VecDeque<(i16, i16)>,
+    /// Output stream, produced by drain words.
+    pub output: Vec<i16>,
+}
+
+impl GroupIo {
+    /// Queue a vector as input beats (padded to an even length).
+    pub fn feed(&mut self, data: &[i16]) {
+        let mut it = data.chunks(2);
+        for c in &mut it {
+            self.input.push_back((c[0], if c.len() > 1 { c[1] } else { 0 }));
+        }
+    }
+}
+
+/// MVM processor group (Fig 5; resources in Table 3 row `MVM_PG`).
+#[derive(Debug, Clone)]
+pub struct MvmGroup {
+    mvms: Vec<Mvm>,
+    input_ctr: Counter,
+    output_ctr: Counter,
+    /// Cycles consumed over the group's lifetime.
+    pub cycles: Cycle,
+}
+
+impl MvmGroup {
+    /// New group of 4 MVMs.
+    pub fn new(fixed: FixedSpec) -> MvmGroup {
+        MvmGroup {
+            mvms: (0..PROCS_PER_GROUP).map(|_| Mvm::new(fixed)).collect(),
+            input_ctr: Counter::bit8(),
+            output_ctr: Counter::new(10),
+            cycles: 0,
+        }
+    }
+
+    /// Access a member MVM (testbench).
+    pub fn mvm(&self, i: usize) -> &Mvm {
+        &self.mvms[i]
+    }
+
+    /// Mutable access (testbench backdoors).
+    pub fn mvm_mut(&mut self, i: usize) -> &mut Mvm {
+        &mut self.mvms[i]
+    }
+
+    /// Execute a cached microcode program. Panics on malformed programs
+    /// (the assembler's generator upholds the conventions). Returns cycles
+    /// consumed.
+    pub fn execute(&mut self, program: &[Microcode], io: &mut GroupIo) -> Cycle {
+        assert!(
+            program.len() <= MICROCODE_CACHE_DEPTH,
+            "program of {} words exceeds the {MICROCODE_CACHE_DEPTH}-entry microcode cache",
+            program.len()
+        );
+        let mut total: Cycle = 0;
+        for (wi, w) in program.iter().enumerate() {
+            total += w.cycles as Cycle;
+            self.input_ctr.reset();
+            self.output_ctr.reset();
+            // Classify the word by its nibbles.
+            let mvm_ops: Vec<(MvmOp, bool)> = w.proc_ctrl.iter().map(|pc| pc.as_mvm()).collect();
+            let writers: Vec<usize> = (0..PROCS_PER_GROUP)
+                .filter(|&p| mvm_ops[p].0 == MvmOp::Write)
+                .collect();
+            let computes: Vec<usize> = (0..PROCS_PER_GROUP)
+                .filter(|&p| mvm_ops[p].0.is_compute())
+                .collect();
+            assert!(
+                writers.len() <= 1,
+                "word {wi}: {} writers but the group has one input port pair",
+                writers.len()
+            );
+            if let Some(&p) = writers.first() {
+                assert!(computes.is_empty(), "word {wi}: mixed write/compute");
+                let col = w.input_col;
+                self.mvms[p].begin_write();
+                for cyc in 0..w.cycles {
+                    if cyc == 0 {
+                        // setup cycle (Fig 7 cycle 1)
+                        self.mvms[p].write_pair(0, 0, 0, 0, col);
+                        continue;
+                    }
+                    let (d0, d1) = io.input.pop_front().unwrap_or((0, 0));
+                    let a = self.input_ctr.value() * 2;
+                    self.mvms[p].write_pair(a, d0, a + 1, d1, col);
+                    self.input_ctr.clock(w.input_ctr_en);
+                }
+                self.mvms[p].end_write();
+            } else if !computes.is_empty() {
+                assert!(w.cycles > 8, "word {wi}: compute word needs len+8 cycles");
+                let len = w.cycles - 8;
+                for &p in &computes {
+                    let (op, msb) = mvm_ops[p];
+                    self.mvms[p].begin_compute(op, len, msb);
+                }
+                for _cyc in 0..w.cycles {
+                    for &p in &computes {
+                        if !self.mvms[p].idle() {
+                            self.mvms[p].step_compute(None);
+                        }
+                    }
+                }
+                for &p in &computes {
+                    assert!(self.mvms[p].idle(), "word {wi}: compute did not retire in budget");
+                }
+            } else if w.output_ctr_en {
+                // drain word: mux-selected processor, 1 lane/cycle.
+                let p = w.out_mux_sel as usize;
+                for _cyc in 0..w.cycles {
+                    let v = self.mvms[p].drain(w.output_col, self.output_ctr.value());
+                    io.output.push(v);
+                    self.output_ctr.clock(true);
+                }
+            } else {
+                // NOP / stall word.
+            }
+        }
+        self.cycles += total;
+        total
+    }
+}
+
+/// Activation processor group (resources in Table 3 row `ACTPRO_PG`).
+///
+/// The LUT addressing parameters (`shift`, mode, interpolation) are VHDL
+/// generics chosen by the Matrix Assembler at generation time; the table
+/// *contents* are streamed at runtime via `ACTPRO_WRITE_ACT` words.
+#[derive(Debug, Clone)]
+pub struct ActproGroup {
+    procs: Vec<ActPro>,
+    input_ctr: Counter,
+    output_ctr: Counter,
+    /// Cycles consumed over the group's lifetime.
+    pub cycles: Cycle,
+}
+
+impl ActproGroup {
+    /// New group of 4 ACTPROs, all initialised with `lut`.
+    pub fn new(lut: ActLut) -> ActproGroup {
+        ActproGroup {
+            procs: (0..PROCS_PER_GROUP).map(|_| ActPro::new(lut.clone())).collect(),
+            input_ctr: Counter::bit8(),
+            output_ctr: Counter::new(10),
+            cycles: 0,
+        }
+    }
+
+    /// Access a member processor (testbench).
+    pub fn proc(&self, i: usize) -> &ActPro {
+        &self.procs[i]
+    }
+
+    /// Swap the activation table on all processors (`ACTPRO_WRITE_ACT`
+    /// broadcast), charging the dual-port streaming cost once per proc.
+    pub fn write_act_all(&mut self, lut: &ActLut) -> Cycle {
+        let cost = (lut.table().len() as Cycle / 2 + 1) * self.procs.len() as Cycle;
+        for p in &mut self.procs {
+            p.write_act(lut.clone());
+        }
+        self.cycles += cost;
+        cost
+    }
+
+    /// Execute a cached microcode program (same conventions as
+    /// [`MvmGroup::execute`], with Table 7 nibbles).
+    pub fn execute(&mut self, program: &[Microcode], io: &mut GroupIo) -> Cycle {
+        assert!(program.len() <= MICROCODE_CACHE_DEPTH);
+        let mut total: Cycle = 0;
+        for (wi, w) in program.iter().enumerate() {
+            total += w.cycles as Cycle;
+            self.input_ctr.reset();
+            self.output_ctr.reset();
+            let ops: Vec<ActproOp> = w.proc_ctrl.iter().map(|pc| pc.as_actpro()).collect();
+            let writers: Vec<usize> = (0..PROCS_PER_GROUP)
+                .filter(|&p| ops[p] == ActproOp::WriteData)
+                .collect();
+            let runners: Vec<usize> =
+                (0..PROCS_PER_GROUP).filter(|&p| ops[p] == ActproOp::Run).collect();
+            assert!(writers.len() <= 1, "word {wi}: multiple ACTPRO writers");
+            if let Some(&p) = writers.first() {
+                assert!(w.cycles >= 1);
+                let pairs = (w.cycles - 1) as usize;
+                let mut data = Vec::with_capacity(pairs * 2);
+                for _ in 0..pairs {
+                    let (d0, d1) = io.input.pop_front().unwrap_or((0, 0));
+                    data.push(d0);
+                    data.push(d1);
+                }
+                self.procs[p].load_input(&data);
+            } else if !runners.is_empty() {
+                assert!(w.cycles > 6, "word {wi}: run word needs len/2+6 cycles");
+                let len = (w.cycles - 6) * 2;
+                for &p in &runners {
+                    self.procs[p].begin_run(len);
+                    for _ in 0..w.cycles {
+                        self.procs[p].step_run(None);
+                    }
+                }
+            } else if w.output_ctr_en {
+                // drain: 2 lanes/cycle from the mux-selected processor.
+                let p = w.out_mux_sel as usize;
+                for _ in 0..w.cycles {
+                    let base = self.output_ctr.value() as usize * 2;
+                    let pair = self.procs[p].dump_result(base + 2);
+                    io.output.push(pair[base]);
+                    io.output.push(pair[base + 1]);
+                    self.output_ctr.clock(true);
+                }
+            }
+        }
+        self.cycles += total;
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembler::microcode_gen;
+    use crate::fixed::FixedSpec;
+    use crate::isa::Opcode;
+    use crate::nn::lut::{ActKind, AddrMode};
+    use crate::util::Rng;
+
+    const S: FixedSpec = FixedSpec::PAPER;
+
+    fn rand_vec(r: &mut Rng, n: usize) -> Vec<i16> {
+        (0..n).map(|_| r.gen_range_i64(-2000, 2000) as i16).collect()
+    }
+
+    #[test]
+    fn group_runs_four_vector_adds_from_microcode() {
+        let mut r = Rng::new(21);
+        let n = 64usize;
+        let inputs: Vec<(Vec<i16>, Vec<i16>)> =
+            (0..4).map(|_| (rand_vec(&mut r, n), rand_vec(&mut r, n))).collect();
+        let program = microcode_gen::mvm_batch(Opcode::VectorAddition, n, 4).unwrap();
+        let mut io = GroupIo::default();
+        for (a, b) in &inputs {
+            io.feed(a);
+            io.feed(b);
+        }
+        let mut g = MvmGroup::new(S);
+        let cycles = g.execute(&program, &mut io);
+        assert!(cycles > 0);
+        // outputs: 4 drains of n lanes each, in proc order
+        assert_eq!(io.output.len(), 4 * n);
+        for (p, (a, b)) in inputs.iter().enumerate() {
+            assert_eq!(&io.output[p * n..(p + 1) * n], S.vadd(a, b).as_slice(), "proc {p}");
+        }
+    }
+
+    #[test]
+    fn group_dot_products_from_microcode() {
+        let mut r = Rng::new(22);
+        let n = 100usize;
+        let inputs: Vec<(Vec<i16>, Vec<i16>)> =
+            (0..4).map(|_| (rand_vec(&mut r, n), rand_vec(&mut r, n))).collect();
+        let program = microcode_gen::mvm_batch(Opcode::VectorDotProduct, n, 4).unwrap();
+        let mut io = GroupIo::default();
+        for (a, b) in &inputs {
+            io.feed(a);
+            io.feed(b);
+        }
+        let mut g = MvmGroup::new(S);
+        g.execute(&program, &mut io);
+        // dot drains are single-lane
+        assert_eq!(io.output.len(), 4);
+        for (p, (a, b)) in inputs.iter().enumerate() {
+            assert_eq!(io.output[p], S.dot(a, b), "proc {p}");
+        }
+    }
+
+    #[test]
+    fn microcode_program_fits_cache() {
+        // 4-proc batch: 8 write words + 1 compute + 4 drains = 13 ≤ 16.
+        let program = microcode_gen::mvm_batch(Opcode::VectorAddition, 512, 4).unwrap();
+        assert!(program.len() <= MICROCODE_CACHE_DEPTH);
+        assert_eq!(program.len(), 13);
+    }
+
+    #[test]
+    fn actpro_group_applies_relu_from_microcode() {
+        let lut = ActLut::build(ActKind::Relu, false, S, AddrMode::Clamp, 7);
+        let mut r = Rng::new(23);
+        let n = 50usize; // odd pair count exercises padding
+        let xs: Vec<Vec<i16>> = (0..4).map(|_| rand_vec(&mut r, n)).collect();
+        let program = microcode_gen::actpro_batch(n, 4).unwrap();
+        let mut io = GroupIo::default();
+        for x in &xs {
+            io.feed(x);
+        }
+        let mut g = ActproGroup::new(lut.clone());
+        g.execute(&program, &mut io);
+        // drains come back padded to even length
+        let per = io.output.len() / 4;
+        for (p, x) in xs.iter().enumerate() {
+            let got = &io.output[p * per..p * per + n];
+            let want = lut.apply(x);
+            assert_eq!(got, want.as_slice(), "proc {p}");
+        }
+    }
+
+    #[test]
+    fn group_cycle_count_matches_word_budget() {
+        let n = 32usize;
+        let program = microcode_gen::mvm_batch(Opcode::VectorSubtraction, n, 2).unwrap();
+        let budget: Cycle = program.iter().map(|w| w.cycles as Cycle).sum();
+        let mut io = GroupIo::default();
+        for _ in 0..2 {
+            io.feed(&vec![1; n]);
+            io.feed(&vec![2; n]);
+        }
+        let mut g = MvmGroup::new(S);
+        let cycles = g.execute(&program, &mut io);
+        assert_eq!(cycles, budget);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the 16-entry microcode cache")]
+    fn oversized_program_rejected() {
+        let words = vec![Microcode::default(); 17];
+        let mut g = MvmGroup::new(S);
+        g.execute(&words, &mut GroupIo::default());
+    }
+}

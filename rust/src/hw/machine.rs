@@ -1,0 +1,463 @@
+//! The **Matrix Machine**: global controller + ring FIFO + processor
+//! groups, executing assembled vector programs on one FPGA (paper §4,
+//! Fig 4).
+//!
+//! Two execution paths share the same numerics:
+//!
+//! * [`MatrixMachine::run`] — the fast path: functional execution via
+//!   [`super::fast::FastSim`] with cycle charging from the structural
+//!   per-batch model ([`crate::perf::group`]) + the DDR/DMA model + ring
+//!   distribution overhead. Groups execute batches in parallel; a wave's
+//!   cost is the per-group batch schedule's makespan.
+//! * [`MatrixMachine::run_verified`] — the checked path: every wave is
+//!   additionally lowered to microcode ([`crate::assembler::microcode_gen`])
+//!   and executed on the structural [`MvmGroup`]/[`ActproGroup`]
+//!   interpreters; outputs are asserted bit-identical to the fast path.
+//!   Used by integration tests and available from the CLI (`--verify`).
+//!
+//! Ring overhead model: each batch's microcode + operands are distributed
+//! over the circular FIFO (Fig 4); we charge the worst-case hop count
+//! (`groups` stations) once per batch wavefront, which is what the paper's
+//! "the FIFO reduces the propagation delay" buys relative to a flat bus.
+
+use super::fast::FastSim;
+use super::fpga::FpgaDevice;
+use super::group::{ActproGroup, GroupIo, MvmGroup};
+use super::Cycle;
+use crate::assembler::microcode_gen;
+use crate::assembler::program::{Program, ProgramError, Step, Wave};
+use crate::isa::Opcode;
+use crate::perf::group::{structural_actpro_batch_cycles, structural_mvm_batch_cycles};
+use thiserror::Error;
+
+/// Machine execution errors.
+#[derive(Debug, Error)]
+pub enum MachineError {
+    /// Program failed validation.
+    #[error("invalid program: {0}")]
+    Invalid(#[from] ProgramError),
+    /// A named buffer is missing.
+    #[error("unknown buffer {0:?}")]
+    UnknownBuffer(String),
+    /// Bound data has the wrong length.
+    #[error("buffer {0:?} expects {1} lanes, got {2}")]
+    LengthMismatch(String, usize, usize),
+    /// Structural verification diverged from the fast path.
+    #[error("verification mismatch in step {0}: structural != functional")]
+    VerifyMismatch(usize),
+}
+
+/// Cycle/work statistics of one program run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RunStats {
+    /// Total simulated cycles.
+    pub cycles: Cycle,
+    /// Cycles spent in DDR DMA.
+    pub dma_cycles: Cycle,
+    /// Cycles spent in compute batches (group makespan).
+    pub compute_cycles: Cycle,
+    /// Cycles spent streaming LUTs.
+    pub lut_cycles: Cycle,
+    /// Ring-distribution overhead cycles.
+    pub ring_cycles: Cycle,
+    /// Waves executed.
+    pub waves: u64,
+    /// Lane-operations executed (work metric).
+    pub lane_ops: u64,
+    /// Bytes moved over DDR.
+    pub dma_bytes: u64,
+}
+
+impl RunStats {
+    /// Merge another run's stats.
+    pub fn add(&mut self, o: &RunStats) {
+        self.cycles += o.cycles;
+        self.dma_cycles += o.dma_cycles;
+        self.compute_cycles += o.compute_cycles;
+        self.lut_cycles += o.lut_cycles;
+        self.ring_cycles += o.ring_cycles;
+        self.waves += o.waves;
+        self.lane_ops += o.lane_ops;
+        self.dma_bytes += o.dma_bytes;
+    }
+
+    /// Wall-clock seconds on `device`.
+    pub fn seconds(&self, device: &FpgaDevice) -> f64 {
+        device.seconds(self.cycles)
+    }
+
+    /// Lane-ops per second on `device`.
+    pub fn lane_ops_per_sec(&self, device: &FpgaDevice) -> f64 {
+        self.lane_ops as f64 / self.seconds(device).max(1e-30)
+    }
+}
+
+/// One simulated Matrix Machine.
+#[derive(Debug, Clone)]
+pub struct MatrixMachine {
+    /// The board this machine is generated for.
+    pub device: FpgaDevice,
+    sim: FastSim,
+    program_name: String,
+    /// LUT → ACTPRO-group residency (perf pass, EXPERIMENTS.md §Perf):
+    /// when the program's distinct tables fit the board's ACTPRO groups,
+    /// the global controller partitions the groups among them at first
+    /// load and never re-streams a table. `lut_groups[lut]` = groups
+    /// dedicated to that table; `lut_resident[lut]` = already streamed.
+    lut_groups: Vec<u64>,
+    lut_resident: Vec<bool>,
+}
+
+impl MatrixMachine {
+    /// Build a machine for `device` loaded with `program` (validates it).
+    pub fn new(device: FpgaDevice, program: &Program) -> Result<MatrixMachine, MachineError> {
+        program.check()?;
+        let n_luts = program.luts.len();
+        let groups = device.actpro_groups.max(1) as u64;
+        let lut_groups = if n_luts == 0 {
+            Vec::new()
+        } else if n_luts as u64 <= groups {
+            // Static partition: spread groups over tables.
+            let base = groups / n_luts as u64;
+            let extra = groups % n_luts as u64;
+            (0..n_luts as u64).map(|i| base + u64::from(i < extra)).collect()
+        } else {
+            // More tables than groups: every LoadLut re-streams to all
+            // groups (pre-optimisation behaviour).
+            vec![groups; n_luts]
+        };
+        Ok(MatrixMachine {
+            device,
+            sim: FastSim::new(program),
+            program_name: program.name.clone(),
+            lut_groups,
+            lut_resident: vec![false; n_luts],
+        })
+    }
+
+    /// Are the program's tables statically resident (no re-streaming)?
+    fn luts_static(&self) -> bool {
+        (self.lut_resident.len() as u64) <= self.device.actpro_groups.max(1) as u64
+    }
+
+    /// Program name this machine was built for.
+    pub fn program_name(&self) -> &str {
+        &self.program_name
+    }
+
+    /// Bind data to a named buffer.
+    pub fn bind(
+        &mut self,
+        program: &Program,
+        name: &str,
+        data: &[i16],
+    ) -> Result<(), MachineError> {
+        let id = program
+            .buffer_named(name)
+            .ok_or_else(|| MachineError::UnknownBuffer(name.to_string()))?;
+        let want = program.buffers[id].len();
+        if want != data.len() {
+            return Err(MachineError::LengthMismatch(name.to_string(), want, data.len()));
+        }
+        self.sim.set_buffer(id, data);
+        Ok(())
+    }
+
+    /// Read a named buffer after a run.
+    pub fn read(&self, program: &Program, name: &str) -> Result<Vec<i16>, MachineError> {
+        let id = program
+            .buffer_named(name)
+            .ok_or_else(|| MachineError::UnknownBuffer(name.to_string()))?;
+        Ok(self.sim.buffer(id).to_vec())
+    }
+
+    /// Read a buffer by id.
+    pub fn read_id(&self, id: usize) -> &[i16] {
+        self.sim.buffer(id)
+    }
+
+    /// Cycle cost of one wave on this machine's group allocation.
+    fn wave_cycles(&self, wave: &Wave) -> (Cycle, Cycle) {
+        let (groups, batch_cost): (u64, Box<dyn Fn(usize) -> u64>) =
+            if wave.op == Opcode::ActivationFunction {
+                // Under static residency an ACT wave runs only on the
+                // groups holding its table.
+                let g = if self.luts_static() {
+                    self.lut_groups[wave.lut.expect("checked: ACT wave has LUT")]
+                } else {
+                    self.device.actpro_groups.max(1) as u64
+                };
+                (
+                    g.max(1),
+                    Box::new(move |procs| structural_actpro_batch_cycles(wave.vec_len, procs)),
+                )
+            } else {
+                let op = wave.op;
+                let len = wave.vec_len;
+                (
+                    self.device.mvm_groups.max(1) as u64,
+                    Box::new(move |procs| structural_mvm_batch_cycles(op, len, procs)),
+                )
+            };
+        let lanes = wave.lanes.len() as u64;
+        let procs_total = groups * super::PROCS_PER_GROUP as u64;
+        // Full wavefronts of `procs_total` lanes, then a remainder.
+        let full_waves = lanes / procs_total;
+        let rem_lanes = lanes % procs_total;
+        let mut compute = full_waves * batch_cost(super::PROCS_PER_GROUP);
+        if rem_lanes > 0 {
+            // The remainder occupies ceil(rem/groups) procs in the slowest
+            // group.
+            let procs = (rem_lanes as usize).div_ceil(groups as usize).min(super::PROCS_PER_GROUP);
+            compute += batch_cost(procs);
+        }
+        // Ring overhead: one worst-case traversal per batch wavefront
+        // (stations = groups + global controller).
+        let wavefronts = full_waves + (rem_lanes > 0) as u64;
+        let ring = wavefronts * (groups + 1);
+        (compute, ring)
+    }
+
+    /// Execute the program on the fast path.
+    pub fn run(&mut self, program: &Program) -> Result<RunStats, MachineError> {
+        self.run_inner(program, false)
+    }
+
+    /// Execute with per-wave structural verification (slow; tests/CLI).
+    pub fn run_verified(&mut self, program: &Program) -> Result<RunStats, MachineError> {
+        self.run_inner(program, true)
+    }
+
+    fn run_inner(&mut self, program: &Program, verify: bool) -> Result<RunStats, MachineError> {
+        let mut st = RunStats::default();
+        for (si, step) in program.steps.iter().enumerate() {
+            match step {
+                Step::LoadDram(b) | Step::StoreDram(b) => {
+                    let bytes = program.buffers[*b].len() as u64 * 2;
+                    let c = self.device.dma_cycles(bytes);
+                    st.dma_cycles += c;
+                    st.cycles += c;
+                    st.dma_bytes += bytes;
+                }
+                Step::LoadLut(l) => {
+                    // Streamed in parallel to the groups that will hold the
+                    // table; within a group the 4 procs share the input
+                    // port pair. Under static residency the stream happens
+                    // once per machine lifetime (perf pass, §Perf).
+                    if !self.luts_static() || !self.lut_resident[*l] {
+                        let table_len = program.luts[*l].table().len() as u64;
+                        let c = (table_len / 2 + 1) * super::PROCS_PER_GROUP as u64;
+                        st.lut_cycles += c;
+                        st.cycles += c;
+                        self.lut_resident[*l] = true;
+                    }
+                }
+                Step::Wave(w) => {
+                    if verify {
+                        self.verify_wave(program, si, w)?;
+                    }
+                    self.sim.exec_wave(program, w);
+                    let (compute, ring) = self.wave_cycles(w);
+                    st.compute_cycles += compute;
+                    st.ring_cycles += ring;
+                    st.cycles += compute + ring;
+                    st.waves += 1;
+                    st.lane_ops += (w.lanes.len() * w.vec_len) as u64;
+                }
+            }
+        }
+        Ok(st)
+    }
+
+    /// Execute one wave on the structural group interpreters and compare
+    /// against what the fast path will produce.
+    fn verify_wave(&self, program: &Program, si: usize, w: &Wave) -> Result<(), MachineError> {
+        // Compute expected outputs functionally on a scratch copy.
+        let mut scratch = self.sim.clone();
+        scratch.exec_wave(program, w);
+
+        let procs = super::PROCS_PER_GROUP;
+        for chunk in w.lanes.chunks(procs) {
+            let mut io = GroupIo::default();
+            for lane in chunk {
+                io.feed(&self.sim.gather(&lane.a));
+                if w.op != Opcode::ActivationFunction && w.op != Opcode::VectorSummation {
+                    if let Some(b) = &lane.b {
+                        io.feed(&self.sim.gather(b));
+                    }
+                }
+            }
+            let out_per_lane: usize;
+            match w.op {
+                Opcode::ActivationFunction => {
+                    let lut = &program.luts[w.lut.expect("checked")];
+                    let words = microcode_gen::actpro_batch(w.vec_len, chunk.len())
+                        .expect("checked wave dims");
+                    let mut g = ActproGroup::new(lut.clone());
+                    g.execute(&words, &mut io);
+                    out_per_lane = w.vec_len + (w.vec_len & 1);
+                }
+                op => {
+                    let words = microcode_gen::mvm_batch(op, w.vec_len, chunk.len())
+                        .expect("checked wave dims");
+                    let mut g = MvmGroup::new(program.fixed);
+                    g.execute(&words, &mut io);
+                    out_per_lane = match op {
+                        Opcode::VectorDotProduct | Opcode::VectorSummation => 1,
+                        _ => w.vec_len,
+                    };
+                }
+            }
+            for (li, lane) in chunk.iter().enumerate() {
+                let got = &io.output[li * out_per_lane..li * out_per_lane + lane.out.len];
+                let want = scratch.gather(&lane.out);
+                if got != want.as_slice() {
+                    return Err(MachineError::VerifyMismatch(si));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembler::program::{BufKind, LaneOp, View};
+    use crate::fixed::FixedSpec;
+    use crate::nn::lut::{ActKind, ActLut, AddrMode};
+    use crate::util::Rng;
+
+    const S: FixedSpec = FixedSpec::PAPER;
+
+    /// x (+) x → act → out, with DMA steps.
+    fn small_program() -> (Program, usize, usize) {
+        let mut p = Program::new("t", S);
+        let x = p.buffer("x", 64, 1, BufKind::Input);
+        let o = p.buffer("o", 64, 1, BufKind::Output);
+        let lut = p.lut(ActLut::build(ActKind::Relu, false, S, AddrMode::Clamp, 7));
+        p.steps.push(Step::LoadDram(x));
+        p.steps.push(Step::LoadLut(lut));
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::VectorAddition,
+            vec_len: 64,
+            lut: None,
+            lanes: vec![LaneOp {
+                a: View::all(x, 64),
+                b: Some(View::all(x, 64)),
+                out: View::all(o, 64),
+            }],
+        }));
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::ActivationFunction,
+            vec_len: 64,
+            lut: Some(lut),
+            lanes: vec![LaneOp { a: View::all(o, 64), b: None, out: View::all(o, 64) }],
+        }));
+        p.steps.push(Step::StoreDram(o));
+        (p, x, o)
+    }
+
+    #[test]
+    fn run_produces_expected_numerics_and_stats() {
+        let (p, _, _) = small_program();
+        let mut r = Rng::new(31);
+        let xs: Vec<i16> = (0..64).map(|_| r.gen_range_i64(-3000, 3000) as i16).collect();
+        let mut m = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
+        m.bind(&p, "x", &xs).unwrap();
+        let st = m.run(&p).unwrap();
+        let lut = &p.luts[0];
+        let want = lut.apply(&S.vadd(&xs, &xs));
+        assert_eq!(m.read(&p, "o").unwrap(), want);
+        assert_eq!(st.waves, 2);
+        assert_eq!(st.lane_ops, 128);
+        assert!(st.dma_cycles > 0 && st.compute_cycles > 0 && st.lut_cycles > 0);
+        assert_eq!(
+            st.cycles,
+            st.dma_cycles + st.compute_cycles + st.lut_cycles + st.ring_cycles
+        );
+    }
+
+    #[test]
+    fn verified_run_matches_fast_run() {
+        let (p, _, _) = small_program();
+        let mut r = Rng::new(32);
+        let xs: Vec<i16> = (0..64).map(|_| r.gen_range_i64(-3000, 3000) as i16).collect();
+        let mut fast = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
+        let mut slow = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
+        fast.bind(&p, "x", &xs).unwrap();
+        slow.bind(&p, "x", &xs).unwrap();
+        let sf = fast.run(&p).unwrap();
+        let sv = slow.run_verified(&p).unwrap();
+        assert_eq!(fast.read(&p, "o").unwrap(), slow.read(&p, "o").unwrap());
+        assert_eq!(sf.cycles, sv.cycles);
+    }
+
+    #[test]
+    fn multi_lane_wave_distributes_over_groups() {
+        // 128 dot products on a 16-group machine: 2 wavefronts of 64.
+        let mut p = Program::new("dots", S);
+        let a = p.buffer("a", 128, 32, BufKind::Input);
+        let o = p.buffer("o", 128, 1, BufKind::Output);
+        let lanes: Vec<LaneOp> = (0..128)
+            .map(|i| LaneOp {
+                a: View::contiguous(a, i * 32, 32),
+                b: Some(View::contiguous(a, ((i + 1) % 128) * 32, 32)),
+                out: View::contiguous(o, i, 1),
+            })
+            .collect();
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::VectorDotProduct,
+            vec_len: 32,
+            lut: None,
+            lanes,
+        }));
+        let mut r = Rng::new(33);
+        let data: Vec<i16> = (0..128 * 32).map(|_| r.gen_i16()).collect();
+        let mut m = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
+        m.bind(&p, "a", &data).unwrap();
+        let st = m.run(&p).unwrap();
+        // expected: each lane dot(a[i], a[i+1])
+        for i in 0..128 {
+            let x = &data[i * 32..(i + 1) * 32];
+            let y = &data[((i + 1) % 128) * 32..((i + 1) % 128) * 32 + 32];
+            assert_eq!(m.read(&p, "o").unwrap()[i], S.dot(x, y), "lane {i}");
+        }
+        // 2 full wavefronts (128 lanes / 64 procs), each costing one
+        // 4-proc batch.
+        let batch = structural_mvm_batch_cycles(Opcode::VectorDotProduct, 32, 4);
+        assert_eq!(st.compute_cycles, 2 * batch);
+        assert_eq!(st.ring_cycles, 2 * 17);
+    }
+
+    #[test]
+    fn errors_on_bad_bindings() {
+        let (p, _, _) = small_program();
+        let mut m = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
+        assert!(matches!(
+            m.bind(&p, "nope", &[0]),
+            Err(MachineError::UnknownBuffer(_))
+        ));
+        assert!(matches!(
+            m.bind(&p, "x", &[0; 3]),
+            Err(MachineError::LengthMismatch(_, 64, 3))
+        ));
+    }
+
+    #[test]
+    fn invalid_program_rejected_at_construction() {
+        let mut p = Program::new("bad", S);
+        let x = p.buffer("x", 4, 1, BufKind::Input);
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::VectorAddition,
+            vec_len: 9, // OOB
+            lut: None,
+            lanes: vec![LaneOp {
+                a: View::all(x, 9),
+                b: Some(View::all(x, 9)),
+                out: View::all(x, 9),
+            }],
+        }));
+        assert!(MatrixMachine::new(FpgaDevice::selected(), &p).is_err());
+    }
+}

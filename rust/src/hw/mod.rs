@@ -1,0 +1,75 @@
+//! The **Matrix Machine** hardware, simulated (paper §4, Figs 4–10).
+//!
+//! The paper evaluates on Xilinx 7-series FPGAs we do not have; per the
+//! substitution rule (DESIGN.md §2) this module is a from-scratch simulator
+//! of the proposed design, at two fidelity levels:
+//!
+//! * **Structural / cycle-accurate** ([`bram`], [`dsp48`], [`counter`],
+//!   [`mvm`], [`actpro`], [`group`], [`fifo`]): each component is a clocked
+//!   state machine stepped one cycle at a time, with the port widths, BRAM
+//!   geometry (RAMB18E1 = 1024 × 16-bit, dual-port), DSP48E1 6-stage
+//!   pipeline, and FSM encodings from Tables 4–7. This level reproduces the
+//!   paper's timing diagrams (Fig 7 write, Fig 8 vector addition, Fig 10
+//!   ReLU) — rendered by [`trace`] — and provides measured per-op cycle
+//!   counts that EXPERIMENTS.md compares against the analytic model
+//!   (Eqns 5–9, implemented in [`crate::perf`]).
+//! * **Functional / fast** ([`fast`], [`machine`]): executes whole tensor
+//!   programs (what the Matrix Assembler emits) with bit-identical numerics
+//!   but charges cycles from the per-op model instead of stepping every
+//!   flip-flop. This is the engine used for end-to-end MLP training and the
+//!   cluster experiments. Equivalence between the two levels is asserted by
+//!   tests in `rust/tests/sim_equivalence.rs`.
+//!
+//! ### Reconstructed micro-architecture
+//!
+//! The paper's figures are images; the written description leaves the
+//! column/addressing scheme implicit. We reconstruct it as follows (used
+//! consistently by the structural sim, the assembler and the VHDL backend):
+//!
+//! * Each MVM's **left BRAM** holds the two operand vectors as *columns*:
+//!   column 0 = addresses `0..512`, column 1 = `512..1024`. The microcode's
+//!   input-column select is the address MSB for input writes; dual ports
+//!   read `A[i]` (port 0, column 0) and `B[i]` (port 1, column 1)
+//!   simultaneously during compute, so a vector op sees both operands each
+//!   cycle. A vector therefore has at most [`COLUMN_LEN`] = 512 lanes.
+//! * The **right BRAM**'s MSB select (`processor_control(3)`, Table 5)
+//!   picks the output column; port 0 writes DSP results, port 1 drains.
+//! * The DSP48E1 runs as a 6-stage pipeline (Fig 8): operands sampled at
+//!   cycle *t* appear on `P` at cycle *t+6*; with the BRAM read at cycle 2
+//!   and write-back at cycle 9, a length-`L` elementwise op occupies
+//!   `L + 7` cycles after setup — matching the paper's `C_RUN = 519` for
+//!   `L = 512`.
+//! * The ACTPRO pipeline (Fig 10) is read → dual 7-bit shift → LUT BRAM
+//!   lookup → write, 7 cycles of latency, matching `C_RUN = 517`.
+
+pub mod actpro;
+pub mod bram;
+pub mod counter;
+pub mod dsp48;
+pub mod fast;
+pub mod fifo;
+pub mod fpga;
+pub mod group;
+pub mod machine;
+pub mod mvm;
+pub mod trace;
+pub mod trace_figures;
+
+pub use fast::FastSim;
+pub use fpga::FpgaDevice;
+pub use machine::{MatrixMachine, RunStats};
+
+/// Simulated clock cycle count.
+pub type Cycle = u64;
+
+/// Depth of one BRAM (RAMB18E1 stores 1024 × 16-bit, paper §4.2).
+pub const BRAM_DEPTH: usize = 1024;
+
+/// Lanes per column (two operand columns per left BRAM).
+pub const COLUMN_LEN: usize = BRAM_DEPTH / 2;
+
+/// DSP48E1 pipeline depth ("configured as a 6 stage pipeline", §4.2).
+pub const DSP_PIPELINE_STAGES: usize = 6;
+
+/// Processors per group (4, behind a 4:1 mux — §3.3, §4.1).
+pub const PROCS_PER_GROUP: usize = crate::isa::microcode::PROCS_PER_GROUP;

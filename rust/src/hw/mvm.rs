@@ -1,0 +1,467 @@
+//! Mini Vector Machine — the paper's unit processor (§4.2, Tables 5–6,
+//! Figs 6–8).
+//!
+//! Structure (Fig 6): 1 × DSP48E1, 2 × RAMB18E1 (left = operands, right =
+//! results), read/write counters, and control logic (50 LUTs / 210 FFs in
+//! the paper's Table; those constants live in the resource model).
+//!
+//! Operand layout (see [`crate::hw`] module docs): the left BRAM holds
+//! operand `A` in column 0 (`0..512`) and operand `B` in column 1
+//! (`512..1024`). During a binary vector op both ports read lane `i` of each
+//! column in the same cycle and feed the DSP's `A`/`B` inputs. The right
+//! BRAM's column for results is chosen by `processor_control(3)`
+//! ("Right BRAM MSB select", Table 5).
+//!
+//! Timing reproduced from the paper:
+//! * **Write** (Fig 7): after a 1-cycle setup, each cycle commits
+//!   `input_data0/1` through both ports — 2 elements/cycle.
+//! * **Vector op** (Fig 8): setup at cycle 1; first BRAM read issued at
+//!   cycle 2; the DSP's 6-stage pipeline updates `P` at cycle 8; the write
+//!   counter increments at cycle 8 and the right BRAM commits at cycle 9.
+//!   A length-`L` elementwise op spans `L + 7` run cycles (`519` for
+//!   `L = 512`, the paper's `C_RUN`).
+
+use super::bram::Bram;
+use super::counter::Counter;
+use super::dsp48::{Dsp48, DspOp};
+use super::trace::Trace;
+use super::COLUMN_LEN;
+use crate::fixed::FixedSpec;
+use crate::isa::MvmOp;
+
+/// MVM execution state (Table 6 states; compute ops carry progress).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    /// `MVM_READ` — halted / drain reads.
+    Idle,
+    /// `MVM_WRITE` — loading operand columns.
+    Write { setup_done: bool },
+    /// One of the compute ops is running.
+    Compute { op: MvmOp, len: u16, cycle_in_op: u64 },
+}
+
+/// One Mini Vector Machine.
+#[derive(Debug, Clone)]
+pub struct Mvm {
+    left: Bram,
+    right: Bram,
+    dsp: Dsp48,
+    read_ctr: Counter,
+    write_ctr: Counter,
+    state: State,
+    fixed: FixedSpec,
+    out_col: bool,
+    /// Reads issued but whose BRAM data has not yet been forwarded to the
+    /// DSP (models the 1-cycle BRAM read latency).
+    pending_read: Option<(DspOp, bool)>, // (op, is_last_element)
+    /// Result registered at the DSP output, committed to the right BRAM on
+    /// the following cycle (Fig 8: P at cycle 8, BRAM write at cycle 9).
+    pending_write: Option<(u16, i16)>,
+    /// For accumulating ops: the element count that has entered the DSP.
+    issued: u16,
+    /// Results committed for the current op.
+    writes_done: u16,
+    /// Total cycles spent in the current/last op (excludes setup).
+    run_cycles: u64,
+    last_op_total_cycles: u64,
+}
+
+impl Mvm {
+    /// New MVM with the given fixed-point datapath spec.
+    pub fn new(fixed: FixedSpec) -> Mvm {
+        Mvm {
+            left: Bram::new(),
+            right: Bram::new(),
+            dsp: Dsp48::new(),
+            // The paper says 8-bit counters, which cannot address the
+            // 512-lane columns its own C_RUN=519 implies; our VHDL and
+            // model widen them to 10 bits (noted in DESIGN.md).
+            read_ctr: Counter::new(10),
+            write_ctr: Counter::new(10),
+            state: State::Idle,
+            fixed,
+            out_col: false,
+            pending_read: None,
+            pending_write: None,
+            issued: 0,
+            writes_done: 0,
+            run_cycles: 0,
+            last_op_total_cycles: 0,
+        }
+    }
+
+    /// Datapath spec in use.
+    pub fn fixed(&self) -> FixedSpec {
+        self.fixed
+    }
+
+    /// Is the MVM in the halted `MVM_READ` state?
+    pub fn idle(&self) -> bool {
+        self.state == State::Idle
+    }
+
+    /// Run cycles consumed by the most recently completed op (the measured
+    /// analogue of the paper's `C_RUN`).
+    pub fn last_op_cycles(&self) -> u64 {
+        self.last_op_total_cycles
+    }
+
+    // ---------------------------------------------------------- write phase
+
+    /// Enter `MVM_WRITE`. The next [`Mvm::write_pair`] cycle is the setup
+    /// cycle of Fig 7 (no data committed).
+    pub fn begin_write(&mut self) {
+        self.state = State::Write { setup_done: false };
+    }
+
+    /// One `MVM_WRITE` cycle: commit a pair through both ports (Fig 7).
+    /// `col` selects the operand column (microcode input-column bit).
+    /// Returns `true` if data was committed (false for the setup cycle).
+    pub fn write_pair(&mut self, addr0: u16, d0: i16, addr1: u16, d1: i16, col: bool) -> bool {
+        match self.state {
+            State::Write { setup_done: false } => {
+                // Fig 7 cycle 1: "executes the setup phase of the left BRAM".
+                self.state = State::Write { setup_done: true };
+                self.left.clock();
+                false
+            }
+            State::Write { setup_done: true } => {
+                let base = if col { COLUMN_LEN as u16 } else { 0 };
+                self.left.write(0, base + addr0, d0);
+                self.left.write(1, base + addr1, d1);
+                self.left.clock();
+                true
+            }
+            _ => panic!("write_pair outside MVM_WRITE (state {:?})", self.state),
+        }
+    }
+
+    /// Leave the write state.
+    pub fn end_write(&mut self) {
+        self.state = State::Idle;
+    }
+
+    // -------------------------------------------------------- compute phase
+
+    /// Latch a compute op. `len` is the number of lanes (≤ [`COLUMN_LEN`]);
+    /// `out_col` is the right-BRAM MSB select (Table 5 bit 3).
+    pub fn begin_compute(&mut self, op: MvmOp, len: u16, out_col: bool) {
+        assert!(op.is_compute(), "begin_compute with non-compute op {op}");
+        assert!(len as usize <= COLUMN_LEN, "vector length {len} exceeds column");
+        assert!(len > 0, "zero-length vector op");
+        self.state = State::Compute { op, len, cycle_in_op: 0 };
+        self.out_col = out_col;
+        self.pending_read = None;
+        self.pending_write = None;
+        self.issued = 0;
+        self.writes_done = 0;
+        self.run_cycles = 0;
+    }
+
+    /// Advance one clock cycle of the running compute op. Returns `true`
+    /// when the op has fully retired (last result committed).
+    ///
+    /// With `trace`, records the Fig 8 signal set: `state`, `rd_addr`,
+    /// `dsp_p`, `wr_en`, `wr_addr` keyed by the cycle number within the op
+    /// (setup = cycle 1, matching the paper's numbering).
+    pub fn step_compute(&mut self, mut trace: Option<&mut Trace>) -> bool {
+        let (op, len, cycle_in_op) = match self.state {
+            State::Compute { op, len, cycle_in_op } => (op, len, cycle_in_op),
+            _ => panic!("step_compute outside compute state"),
+        };
+        let cyc = cycle_in_op + 1; // 1-based, paper numbering
+        let dsp_op = match op {
+            MvmOp::VecDot => DspOp::MultAcc,
+            MvmOp::VecSum => DspOp::AddAcc,
+            MvmOp::VecAdd => DspOp::Add,
+            MvmOp::VecSub => DspOp::Sub,
+            MvmOp::ElemMult => DspOp::Mult,
+            _ => unreachable!(),
+        };
+        let accumulating = matches!(dsp_op, DspOp::MultAcc | DspOp::AddAcc);
+
+        if let Some(t) = trace.as_deref_mut() {
+            t.record(cyc, "state", op.mnemonic());
+        }
+
+        if cyc == 1 {
+            // Setup: reset counters + accumulator (Fig 8 cycle 1).
+            self.read_ctr.reset();
+            self.write_ctr.reset();
+            self.dsp.clear_p();
+            if let Some(t) = trace.as_deref_mut() {
+                t.record(cyc, "phase", "setup");
+            }
+            self.state = State::Compute { op, len, cycle_in_op: cycle_in_op + 1 };
+            return false;
+        }
+        self.run_cycles += 1;
+
+        // 1) Commit the result registered last cycle (Fig 8: the right BRAM
+        //    writes at cycle 9, one cycle after P updates at cycle 8).
+        if let Some((addr, v)) = self.pending_write.take() {
+            self.right.write(0, addr, v);
+            self.writes_done += 1;
+            if let Some(t) = trace.as_deref_mut() {
+                t.record(cyc, "wr_en", 1);
+                t.record(cyc, "wr_addr", addr);
+            }
+        }
+
+        // 2) Forward last cycle's BRAM read data into the DSP.
+        if let Some((pending_op, is_last)) = self.pending_read.take() {
+            let a = self.left.dout(0);
+            let b = self.left.dout(1);
+            self.dsp.issue(a, b, pending_op);
+            if is_last {
+                self.issued = len; // all elements now in flight
+            }
+        }
+
+        // 3) Issue the next BRAM read if elements remain.
+        let reads_done = self.read_ctr.value() >= len;
+        if !reads_done {
+            let i = self.read_ctr.value();
+            self.left.read(0, i);
+            self.left.read(1, COLUMN_LEN as u16 + i);
+            self.pending_read = Some((dsp_op, i + 1 == len));
+            self.read_ctr.clock(true);
+            if let Some(t) = trace.as_deref_mut() {
+                t.record(cyc, "rd_addr", i);
+            }
+        }
+
+        // 4) Clock the datapath.
+        self.left.clock();
+        self.dsp.clock();
+
+        // 5) Register the next write when P updates ("also in the 8th
+        //    cycle, the write counter increments").
+        let out_base = if self.out_col { COLUMN_LEN as u16 } else { 0 };
+        if self.dsp.p_valid() {
+            if let Some(t) = trace.as_deref_mut() {
+                t.record(cyc, "dsp_p", self.dsp.p());
+            }
+            let result = if !accumulating {
+                // Elementwise: every P update is a result.
+                Some(self.fixed.narrow(if matches!(dsp_op, DspOp::Mult) {
+                    self.dsp.p() >> self.fixed.frac_bits
+                } else {
+                    self.dsp.p()
+                }))
+            } else if self.issued == len && self.dsp.pipeline_empty() {
+                // Accumulating: single result once the pipeline drained.
+                Some(match op {
+                    MvmOp::VecDot => self.fixed.narrow(self.dsp.p() >> self.fixed.frac_bits),
+                    MvmOp::VecSum => self.fixed.narrow(self.dsp.p()),
+                    _ => unreachable!(),
+                })
+            } else {
+                None
+            };
+            if let Some(v) = result {
+                let addr = out_base + self.write_ctr.value();
+                self.pending_write = Some((addr, v));
+                self.write_ctr.clock(true);
+            }
+        }
+        self.right.clock();
+
+        // 6) Completion: elementwise after `len` committed writes;
+        //    accumulating after its single write.
+        let expected_writes = if accumulating { 1 } else { len };
+        let done = self.writes_done >= expected_writes;
+        if done {
+            self.last_op_total_cycles = self.run_cycles;
+            self.state = State::Idle;
+        } else {
+            self.state = State::Compute { op, len, cycle_in_op: cycle_in_op + 1 };
+        }
+        done
+    }
+
+    // ---------------------------------------------------------- drain phase
+
+    /// `MVM_READ` drain: combinational testbench read of the right BRAM
+    /// (port 1 is "always set to read", §4.2). One element per cycle in
+    /// hardware; the group charges those cycles.
+    pub fn drain(&self, col: bool, idx: u16) -> i16 {
+        let base = if col { COLUMN_LEN } else { 0 };
+        self.right.peek(base + idx as usize)
+    }
+
+    /// Testbench backdoor: load an operand column directly.
+    pub fn load_column(&mut self, col: bool, data: &[i16]) {
+        assert!(data.len() <= COLUMN_LEN);
+        let base = if col { COLUMN_LEN } else { 0 };
+        self.left.load(base, data);
+    }
+
+    /// Testbench backdoor: dump the result column.
+    pub fn dump_result(&self, col: bool, len: usize) -> Vec<i16> {
+        let base = if col { COLUMN_LEN } else { 0 };
+        self.right.dump(base, len)
+    }
+
+    /// Run a whole compute op to completion, returning the cycle count
+    /// (including the setup cycle).
+    pub fn run_op(&mut self, op: MvmOp, len: u16, out_col: bool) -> u64 {
+        self.begin_compute(op, len, out_col);
+        let mut cycles = 1; // setup
+        assert!(!self.step_compute(None));
+        loop {
+            cycles += 1;
+            if self.step_compute(None) {
+                return cycles;
+            }
+            assert!(cycles < 10_000, "runaway op");
+        }
+    }
+
+    /// Full reset (`MVM_RESET`).
+    pub fn reset(&mut self) {
+        *self = Mvm::new(self.fixed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::DSP_PIPELINE_STAGES;
+    use crate::util::Rng;
+
+    fn spec() -> FixedSpec {
+        FixedSpec::PAPER
+    }
+
+    fn rand_vec(r: &mut Rng, n: usize) -> Vec<i16> {
+        (0..n).map(|_| (r.gen_range_i64(-4000, 4000)) as i16).collect()
+    }
+
+    #[test]
+    fn vec_add_matches_fixed_reference() {
+        let mut r = Rng::new(2);
+        let (a, b) = (rand_vec(&mut r, 512), rand_vec(&mut r, 512));
+        let mut m = Mvm::new(spec());
+        m.load_column(false, &a);
+        m.load_column(true, &b);
+        m.run_op(MvmOp::VecAdd, 512, false);
+        assert_eq!(m.dump_result(false, 512), spec().vadd(&a, &b));
+    }
+
+    #[test]
+    fn vec_sub_and_mult_match_reference() {
+        let mut r = Rng::new(3);
+        let (a, b) = (rand_vec(&mut r, 100), rand_vec(&mut r, 100));
+        let mut m = Mvm::new(spec());
+        m.load_column(false, &a);
+        m.load_column(true, &b);
+        m.run_op(MvmOp::VecSub, 100, false);
+        assert_eq!(m.dump_result(false, 100), spec().vsub(&a, &b));
+        m.run_op(MvmOp::ElemMult, 100, true);
+        assert_eq!(m.dump_result(true, 100), spec().vmul(&a, &b));
+    }
+
+    #[test]
+    fn dot_and_sum_match_reference() {
+        let mut r = Rng::new(4);
+        let (a, b) = (rand_vec(&mut r, 256), rand_vec(&mut r, 256));
+        let mut m = Mvm::new(spec());
+        m.load_column(false, &a);
+        m.load_column(true, &b);
+        m.run_op(MvmOp::VecDot, 256, false);
+        assert_eq!(m.dump_result(false, 1)[0], spec().dot(&a, &b));
+        m.run_op(MvmOp::VecSum, 256, false);
+        assert_eq!(m.dump_result(false, 1)[0], spec().sum(&a));
+    }
+
+    #[test]
+    fn elementwise_run_cycles_match_paper_c_run() {
+        // C_RUN = L + 7 → 519 at L = 512 (§4.1 worked example).
+        let mut m = Mvm::new(spec());
+        m.load_column(false, &vec![1; 512]);
+        m.load_column(true, &vec![2; 512]);
+        let total = m.run_op(MvmOp::VecAdd, 512, false);
+        // total includes the setup cycle; C_RUN excludes it.
+        assert_eq!(m.last_op_cycles(), 519);
+        assert_eq!(total, 520);
+    }
+
+    #[test]
+    fn fig8_timing_first_result_at_cycles_8_and_9() {
+        let mut m = Mvm::new(spec());
+        m.load_column(false, &[5, 6, 7, 8]);
+        m.load_column(true, &[1, 1, 1, 1]);
+        m.begin_compute(MvmOp::VecAdd, 4, false);
+        let mut tr = Trace::new();
+        while !m.step_compute(Some(&mut tr)) {}
+        // Fig 8: read issued at cycle 2, P output at cycle 8, write at 9.
+        assert_eq!(tr.first_cycle_of("rd_addr", "0"), Some(2));
+        assert_eq!(tr.first_cycle_of("dsp_p", "6"), Some(8));
+        assert_eq!(tr.first_cycle_of("wr_en", "1"), Some(9));
+    }
+
+    #[test]
+    fn dsp_pipeline_depth_visible_in_latency() {
+        // 1-lane op: setup(1) + read(1) + forward(1) + 6 stages + write = 9.
+        let mut m = Mvm::new(spec());
+        m.load_column(false, &[3]);
+        m.load_column(true, &[4]);
+        let total = m.run_op(MvmOp::VecAdd, 1, false);
+        assert_eq!(total, 3 + DSP_PIPELINE_STAGES as u64); // 9 cycles
+        assert_eq!(m.dump_result(false, 1)[0], 7);
+    }
+
+    #[test]
+    fn write_phase_commits_two_per_cycle_after_setup() {
+        let mut m = Mvm::new(spec());
+        m.begin_write();
+        assert!(!m.write_pair(0, 10, 1, 20, false)); // setup cycle
+        assert!(m.write_pair(0, 10, 1, 20, false));
+        assert!(m.write_pair(2, 30, 3, 40, false));
+        m.end_write();
+        m.run_op(MvmOp::VecSum, 4, false);
+        assert_eq!(m.dump_result(false, 1)[0], 100);
+    }
+
+    #[test]
+    fn write_to_column1_is_operand_b() {
+        let mut m = Mvm::new(spec());
+        m.begin_write();
+        m.write_pair(0, 0, 0, 0, false); // setup
+        m.write_pair(0, 7, 1, 7, false); // A = [7,7]
+        m.write_pair(0, 3, 1, 3, true); // B = [3,3]
+        m.end_write();
+        m.run_op(MvmOp::VecSub, 2, false);
+        assert_eq!(m.dump_result(false, 2), vec![4, 4]);
+    }
+
+    #[test]
+    fn output_column_select_respected() {
+        let mut m = Mvm::new(spec());
+        m.load_column(false, &[1, 2]);
+        m.load_column(true, &[1, 1]);
+        m.run_op(MvmOp::VecAdd, 2, true);
+        assert_eq!(m.dump_result(true, 2), vec![2, 3]);
+        assert_eq!(m.dump_result(false, 2), vec![0, 0]); // col 0 untouched
+        assert_eq!(m.drain(true, 1), 3);
+    }
+
+    #[test]
+    fn back_to_back_ops_reset_state() {
+        let mut m = Mvm::new(spec());
+        m.load_column(false, &[10, 20, 30]);
+        m.load_column(true, &[1, 2, 3]);
+        m.run_op(MvmOp::VecDot, 3, false);
+        assert_eq!(m.dump_result(false, 1)[0], spec().dot(&[10, 20, 30], &[1, 2, 3]));
+        m.run_op(MvmOp::VecAdd, 3, false);
+        assert_eq!(m.dump_result(false, 3), vec![11, 22, 33]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds column")]
+    fn rejects_oversize_vectors() {
+        let mut m = Mvm::new(spec());
+        m.begin_compute(MvmOp::VecAdd, 513, false);
+    }
+}

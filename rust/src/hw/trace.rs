@@ -1,0 +1,141 @@
+//! Signal tracing + ASCII waveform rendering.
+//!
+//! The structural simulators record named signals per cycle; the renderer
+//! produces the textual equivalents of the paper's timing diagrams (Fig 7
+//! MVM write, Fig 8 MVM vector addition, Fig 10 ACTPRO ReLU), regenerated
+//! by `examples/timing_traces.rs`.
+
+use std::collections::BTreeMap;
+
+/// A recorded trace: signal name → (cycle → value).
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    signals: Vec<String>,
+    data: BTreeMap<String, BTreeMap<u64, String>>,
+    max_cycle: u64,
+}
+
+impl Trace {
+    /// Empty trace.
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    /// Record `signal = value` at `cycle`. First-recorded order of signals
+    /// is preserved in the rendering.
+    pub fn record<V: ToString>(&mut self, cycle: u64, signal: &str, value: V) {
+        if !self.data.contains_key(signal) {
+            self.signals.push(signal.to_string());
+        }
+        self.data.entry(signal.to_string()).or_default().insert(cycle, value.to_string());
+        self.max_cycle = self.max_cycle.max(cycle);
+    }
+
+    /// Last recorded cycle.
+    pub fn max_cycle(&self) -> u64 {
+        self.max_cycle
+    }
+
+    /// Value of a signal at a cycle, if recorded.
+    pub fn get(&self, cycle: u64, signal: &str) -> Option<&str> {
+        self.data.get(signal)?.get(&cycle).map(|s| s.as_str())
+    }
+
+    /// The cycle at which `signal` first took value `value`, if ever.
+    pub fn first_cycle_of(&self, signal: &str, value: &str) -> Option<u64> {
+        self.data.get(signal)?.iter().find(|(_, v)| v.as_str() == value).map(|(c, _)| *c)
+    }
+
+    /// Render cycles `[from, to]` as an ASCII waveform table. Values repeat
+    /// until changed; unchanged cycles show `.` to keep rows readable.
+    pub fn render(&self, from: u64, to: u64) -> String {
+        let width = self
+            .signals
+            .iter()
+            .flat_map(|s| {
+                self.data[s]
+                    .iter()
+                    .filter(|(c, _)| **c >= from && **c <= to)
+                    .map(|(_, v)| v.len())
+            })
+            .max()
+            .unwrap_or(1)
+            .max((to.to_string()).len())
+            .max(3);
+        let name_w = self.signals.iter().map(|s| s.len()).max().unwrap_or(5).max(5);
+        let mut out = String::new();
+        out.push_str(&format!("{:<name_w$} |", "cycle"));
+        for c in from..=to {
+            out.push_str(&format!(" {c:>width$}"));
+        }
+        out.push('\n');
+        out.push_str(&format!("{:-<name_w$}-+{}\n", "", "-".repeat(((width + 1) * (to - from + 1) as usize).max(1))));
+        for sig in &self.signals {
+            out.push_str(&format!("{sig:<name_w$} |"));
+            let series = &self.data[sig];
+            let mut last: Option<&str> = None;
+            for c in from..=to {
+                let cell: &str = match series.get(&c) {
+                    Some(v) if last != Some(v.as_str()) => {
+                        last = Some(v);
+                        v
+                    }
+                    Some(_) => ".",
+                    None => {
+                        if last.is_some() {
+                            "."
+                        } else {
+                            " "
+                        }
+                    }
+                };
+                out.push_str(&format!(" {cell:>width$}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_queries() {
+        let mut t = Trace::new();
+        t.record(1, "state", "SETUP");
+        t.record(2, "state", "RUN");
+        t.record(2, "addr", 0);
+        t.record(3, "addr", 1);
+        assert_eq!(t.get(2, "state"), Some("RUN"));
+        assert_eq!(t.first_cycle_of("state", "RUN"), Some(2));
+        assert_eq!(t.max_cycle(), 3);
+    }
+
+    #[test]
+    fn render_dedupes_repeats() {
+        let mut t = Trace::new();
+        t.record(1, "s", "A");
+        t.record(2, "s", "A");
+        t.record(3, "s", "B");
+        let r = t.render(1, 3);
+        assert!(r.contains('A'), "{r}");
+        // second A collapsed into '.'
+        let line = r.lines().find(|l| l.starts_with("s")).unwrap();
+        assert_eq!(line.matches('A').count(), 1, "{r}");
+        assert!(line.contains('.'), "{r}");
+        assert!(line.contains('B'), "{r}");
+    }
+
+    #[test]
+    fn signal_order_is_first_recorded() {
+        let mut t = Trace::new();
+        t.record(1, "zzz", 1);
+        t.record(1, "aaa", 2);
+        let r = t.render(1, 1);
+        let zi = r.find("zzz").unwrap();
+        let ai = r.find("aaa").unwrap();
+        assert!(zi < ai);
+    }
+}

@@ -1,0 +1,268 @@
+//! Instruction word encodings (paper §3.2, Fig 2).
+//!
+//! An instruction applies one [`Opcode`] to a contiguous range of processor
+//! groups, repeated for a number of iterations. The paper describes two
+//! encodings and gives their group capacities; the exact field order in
+//! Fig 2 is an image we reconstruct as (LSB→MSB): opcode, processor select
+//! start, processor select end, number of iterations.
+//!
+//! * **32-bit**: 3-bit opcode, 2 × 7-bit selects ("only control a maximum of
+//!   128 processor groups"), 15-bit iteration count.
+//! * **48-bit**: 3-bit opcode, 2 × 10-bit selects ("a maximum of 1024
+//!   processor groups"), 25-bit iteration count.
+
+use super::opcode::Opcode;
+use std::fmt;
+use thiserror::Error;
+
+/// Instruction word width (Fig 2 shows both variants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Width {
+    /// 32-bit words; ≤128 processor groups, ≤2¹⁵−1 iterations.
+    W32,
+    /// 48-bit words; ≤1024 processor groups, ≤2²⁵−1 iterations.
+    W48,
+}
+
+impl Width {
+    /// Bits in one processor-select field.
+    pub fn select_bits(self) -> u32 {
+        match self {
+            Width::W32 => 7,
+            Width::W48 => 10,
+        }
+    }
+
+    /// Bits in the iteration-count field.
+    pub fn iter_bits(self) -> u32 {
+        match self {
+            Width::W32 => 15,
+            Width::W48 => 25,
+        }
+    }
+
+    /// Maximum number of addressable processor groups.
+    pub fn max_groups(self) -> u32 {
+        1 << self.select_bits()
+    }
+
+    /// Maximum iteration count.
+    pub fn max_iterations(self) -> u32 {
+        (1 << self.iter_bits()) - 1
+    }
+
+    /// Total bits of the encoding.
+    pub fn bits(self) -> u32 {
+        match self {
+            Width::W32 => 32,
+            Width::W48 => 48,
+        }
+    }
+}
+
+/// Errors from instruction encoding/decoding.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum InstructionError {
+    /// A processor-select value exceeds the width's field capacity.
+    #[error("processor select {0} exceeds {1} groups for this width")]
+    SelectOutOfRange(u16, u32),
+    /// The iteration count exceeds the width's field capacity.
+    #[error("iteration count {0} exceeds maximum {1} for this width")]
+    IterationsOutOfRange(u32, u32),
+    /// start > end.
+    #[error("processor select start {0} > end {1}")]
+    InvertedRange(u16, u16),
+    /// Reserved opcode bits (`111`).
+    #[error("reserved opcode bits 0b111")]
+    ReservedOpcode,
+    /// Bits above the encoding width are set.
+    #[error("raw word has bits set above bit {0}")]
+    ExcessBits(u32),
+}
+
+/// One Matrix Machine instruction (paper Table 2 + Fig 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Instruction {
+    /// Operation applied by the selected processor groups.
+    pub op: Opcode,
+    /// First processor group the operation applies to (inclusive).
+    pub proc_start: u16,
+    /// Last processor group the operation applies to (inclusive).
+    pub proc_end: u16,
+    /// Number of loop iterations ("the number of iterations controls the
+    /// number of loops").
+    pub iterations: u32,
+}
+
+impl Instruction {
+    /// Convenience constructor.
+    pub fn new(op: Opcode, proc_start: u16, proc_end: u16, iterations: u32) -> Instruction {
+        Instruction { op, proc_start, proc_end, iterations }
+    }
+
+    /// A NOP touching no groups.
+    pub fn nop() -> Instruction {
+        Instruction::new(Opcode::Nop, 0, 0, 0)
+    }
+
+    /// Number of processor groups selected (inclusive range).
+    pub fn group_count(&self) -> u32 {
+        (self.proc_end as u32).saturating_sub(self.proc_start as u32) + 1
+    }
+
+    /// Encode into the low bits of a `u64` for the given width.
+    ///
+    /// Layout (LSB→MSB): `op[3] | proc_start[S] | proc_end[S] | iterations[I]`
+    /// where `S = select_bits`, `I = iter_bits`.
+    pub fn encode(&self, width: Width) -> Result<u64, InstructionError> {
+        if self.proc_start > self.proc_end {
+            return Err(InstructionError::InvertedRange(self.proc_start, self.proc_end));
+        }
+        let s = width.select_bits();
+        if self.proc_end as u32 >= width.max_groups() {
+            return Err(InstructionError::SelectOutOfRange(self.proc_end, width.max_groups()));
+        }
+        if self.iterations > width.max_iterations() {
+            return Err(InstructionError::IterationsOutOfRange(
+                self.iterations,
+                width.max_iterations(),
+            ));
+        }
+        let mut w: u64 = self.op.bits() as u64;
+        w |= (self.proc_start as u64) << 3;
+        w |= (self.proc_end as u64) << (3 + s);
+        w |= (self.iterations as u64) << (3 + 2 * s);
+        Ok(w)
+    }
+
+    /// Decode from a raw word for the given width.
+    pub fn decode(raw: u64, width: Width) -> Result<Instruction, InstructionError> {
+        if width.bits() < 64 && raw >> width.bits() != 0 {
+            return Err(InstructionError::ExcessBits(width.bits()));
+        }
+        let op =
+            Opcode::from_bits((raw & 0b111) as u8).ok_or(InstructionError::ReservedOpcode)?;
+        let s = width.select_bits();
+        let sel_mask = (1u64 << s) - 1;
+        let proc_start = ((raw >> 3) & sel_mask) as u16;
+        let proc_end = ((raw >> (3 + s)) & sel_mask) as u16;
+        if proc_start > proc_end {
+            return Err(InstructionError::InvertedRange(proc_start, proc_end));
+        }
+        let iter_mask = (1u64 << width.iter_bits()) - 1;
+        let iterations = ((raw >> (3 + 2 * s)) & iter_mask) as u32;
+        Ok(Instruction { op, proc_start, proc_end, iterations })
+    }
+}
+
+impl fmt::Display for Instruction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} pg[{}..={}] x{}",
+            self.op.mnemonic(),
+            self.proc_start,
+            self.proc_end,
+            self.iterations
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Instruction {
+        Instruction::new(Opcode::VectorAddition, 3, 17, 1024)
+    }
+
+    #[test]
+    fn capacities_match_paper() {
+        // §3.2: "For the 32 bit version, the instructions only control a
+        // maximum of 128 processor groups. For the 48 bit version ... 1024."
+        assert_eq!(Width::W32.max_groups(), 128);
+        assert_eq!(Width::W48.max_groups(), 1024);
+        // Field budget exactly fills the word: 3 + 2*S + I == width.
+        assert_eq!(3 + 2 * Width::W32.select_bits() + Width::W32.iter_bits(), 32);
+        assert_eq!(3 + 2 * Width::W48.select_bits() + Width::W48.iter_bits(), 48);
+    }
+
+    #[test]
+    fn roundtrip_w32_and_w48() {
+        for width in [Width::W32, Width::W48] {
+            let i = sample();
+            let raw = i.encode(width).unwrap();
+            assert!(raw >> width.bits() == 0);
+            assert_eq!(Instruction::decode(raw, width).unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let mut i = sample();
+        i.proc_end = 200; // > 127
+        assert_eq!(
+            i.encode(Width::W32),
+            Err(InstructionError::SelectOutOfRange(200, 128))
+        );
+        assert!(i.encode(Width::W48).is_ok());
+
+        let mut j = sample();
+        j.iterations = 40_000; // > 2^15-1
+        assert!(matches!(
+            j.encode(Width::W32),
+            Err(InstructionError::IterationsOutOfRange(40_000, _))
+        ));
+        assert!(j.encode(Width::W48).is_ok());
+    }
+
+    #[test]
+    fn rejects_inverted_range_both_ways() {
+        let i = Instruction::new(Opcode::Nop, 5, 2, 0);
+        assert_eq!(i.encode(Width::W32), Err(InstructionError::InvertedRange(5, 2)));
+        // raw word with start=5 end=2
+        let raw: u64 = Opcode::Nop.bits() as u64 | (5 << 3) | (2 << 10);
+        assert_eq!(
+            Instruction::decode(raw, Width::W32),
+            Err(InstructionError::InvertedRange(5, 2))
+        );
+    }
+
+    #[test]
+    fn rejects_reserved_opcode_and_excess_bits() {
+        assert_eq!(Instruction::decode(0b111, Width::W32), Err(InstructionError::ReservedOpcode));
+        assert_eq!(
+            Instruction::decode(1u64 << 32, Width::W32),
+            Err(InstructionError::ExcessBits(32))
+        );
+        assert_eq!(
+            Instruction::decode(1u64 << 48, Width::W48),
+            Err(InstructionError::ExcessBits(48))
+        );
+    }
+
+    #[test]
+    fn max_values_roundtrip() {
+        for width in [Width::W32, Width::W48] {
+            let i = Instruction::new(
+                Opcode::ElementMultiplication,
+                0,
+                (width.max_groups() - 1) as u16,
+                width.max_iterations(),
+            );
+            let raw = i.encode(width).unwrap();
+            assert_eq!(Instruction::decode(raw, width).unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn group_count() {
+        assert_eq!(sample().group_count(), 15);
+        assert_eq!(Instruction::nop().group_count(), 1);
+    }
+
+    #[test]
+    fn display_is_readable() {
+        assert_eq!(format!("{}", sample()), "VECTOR_ADDITION pg[3..=17] x1024");
+    }
+}

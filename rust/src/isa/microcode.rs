@@ -1,0 +1,233 @@
+//! 32-bit microcode words (paper §3.3, Fig 3).
+//!
+//! "Each microcode controls 4 MVMs. The MVMs are arranged in groups of 4
+//! because the 4:1 multiplexer is the most efficient multiplexer."
+//!
+//! Field layout straight from the prose of §3.3:
+//!
+//! | bits    | field                                    |
+//! |---------|------------------------------------------|
+//! | 9..0    | number of cycles                         |
+//! | 10      | input column select                      |
+//! | 11      | input counter enable                     |
+//! | 12      | output column select                     |
+//! | 13      | output counter enable                    |
+//! | 15..14  | output 4:1 multiplexer select            |
+//! | 31..16  | 4 × 4-bit processor control signals      |
+//!
+//! Each 4-bit processor-control nibble maps to one processor's
+//! `processor_control` port: for an MVM that is the 3-bit [`MvmOp`] plus the
+//! "Right BRAM MSB select" bit (Table 5); for an ACTPRO the low 2 bits are
+//! the [`ActproOp`] (Table 7).
+
+use super::opcode::{ActproOp, MvmOp};
+use std::fmt;
+
+/// Number of processors driven by one microcode word.
+pub const PROCS_PER_GROUP: usize = 4;
+/// Capacity of a processor group's microcode cache (§4.1: "stores 16
+/// microcodes in total").
+pub const MICROCODE_CACHE_DEPTH: usize = 16;
+/// Maximum value of the 10-bit cycle field.
+pub const MAX_CYCLES: u16 = (1 << 10) - 1;
+
+/// One processor-control nibble inside a microcode word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct ProcCtrl(pub u8);
+
+impl ProcCtrl {
+    /// Build from an MVM operation + right-BRAM MSB select bit.
+    pub fn mvm(op: MvmOp, msb_select: bool) -> ProcCtrl {
+        ProcCtrl(op.bits() | ((msb_select as u8) << 3))
+    }
+
+    /// Build from an Activation Processor operation.
+    pub fn actpro(op: ActproOp) -> ProcCtrl {
+        ProcCtrl(op.bits())
+    }
+
+    /// View the nibble as an MVM control (`processor_control(2..0)` +
+    /// MSB-select bit 3).
+    pub fn as_mvm(self) -> (MvmOp, bool) {
+        (MvmOp::from_bits(self.0), self.0 & 0b1000 != 0)
+    }
+
+    /// View the nibble as an ACTPRO control (`processor_control(1..0)`).
+    pub fn as_actpro(self) -> ActproOp {
+        ActproOp::from_bits(self.0)
+    }
+
+    /// Raw nibble value (low 4 bits).
+    pub fn bits(self) -> u8 {
+        self.0 & 0xF
+    }
+}
+
+/// A decoded 32-bit microcode word (Fig 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Microcode {
+    /// `microcode(9..0)` — number of cycles this word executes for.
+    pub cycles: u16,
+    /// `microcode(10)` — input column select (double-buffer column 0/1).
+    pub input_col: bool,
+    /// `microcode(11)` — input counter enable.
+    pub input_ctr_en: bool,
+    /// `microcode(12)` — output column select.
+    pub output_col: bool,
+    /// `microcode(13)` — output counter enable.
+    pub output_ctr_en: bool,
+    /// `microcode(15..14)` — output 4:1 multiplexer select.
+    pub out_mux_sel: u8,
+    /// `microcode(31..16)` — per-processor control nibbles.
+    pub proc_ctrl: [ProcCtrl; PROCS_PER_GROUP],
+}
+
+impl Microcode {
+    /// Encode to the 32-bit word. Panics in debug if fields exceed their
+    /// widths (callers validate; the assembler never produces oversize
+    /// fields because [`Microcode::with_cycles`] checks).
+    pub fn encode(&self) -> u32 {
+        debug_assert!(self.cycles <= MAX_CYCLES);
+        debug_assert!(self.out_mux_sel < 4);
+        let mut w = (self.cycles & 0x3FF) as u32;
+        w |= (self.input_col as u32) << 10;
+        w |= (self.input_ctr_en as u32) << 11;
+        w |= (self.output_col as u32) << 12;
+        w |= (self.output_ctr_en as u32) << 13;
+        w |= ((self.out_mux_sel & 0b11) as u32) << 14;
+        for (i, pc) in self.proc_ctrl.iter().enumerate() {
+            w |= (pc.bits() as u32) << (16 + 4 * i);
+        }
+        w
+    }
+
+    /// Decode from a 32-bit word. Total: every `u32` decodes.
+    pub fn decode(w: u32) -> Microcode {
+        let mut proc_ctrl = [ProcCtrl::default(); PROCS_PER_GROUP];
+        for (i, pc) in proc_ctrl.iter_mut().enumerate() {
+            *pc = ProcCtrl(((w >> (16 + 4 * i)) & 0xF) as u8);
+        }
+        Microcode {
+            cycles: (w & 0x3FF) as u16,
+            input_col: w & (1 << 10) != 0,
+            input_ctr_en: w & (1 << 11) != 0,
+            output_col: w & (1 << 12) != 0,
+            output_ctr_en: w & (1 << 13) != 0,
+            out_mux_sel: ((w >> 14) & 0b11) as u8,
+            proc_ctrl,
+        }
+    }
+
+    /// Builder: set cycle count, checking the 10-bit limit.
+    pub fn with_cycles(mut self, cycles: u16) -> Microcode {
+        assert!(cycles <= MAX_CYCLES, "cycle count {cycles} exceeds 10-bit field");
+        self.cycles = cycles;
+        self
+    }
+
+    /// Builder: same control nibble for all four processors.
+    pub fn broadcast(mut self, pc: ProcCtrl) -> Microcode {
+        self.proc_ctrl = [pc; PROCS_PER_GROUP];
+        self
+    }
+}
+
+impl fmt::Display for Microcode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "uc[cyc={} icol={} ictr={} ocol={} octr={} mux={} pc={:X?}]",
+            self.cycles,
+            self.input_col as u8,
+            self.input_ctr_en as u8,
+            self.output_col as u8,
+            self.output_ctr_en as u8,
+            self.out_mux_sel,
+            [
+                self.proc_ctrl[0].bits(),
+                self.proc_ctrl[1].bits(),
+                self.proc_ctrl[2].bits(),
+                self.proc_ctrl[3].bits()
+            ],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn field_layout_matches_fig3() {
+        let m = Microcode {
+            cycles: 0x3FF,
+            input_col: false,
+            input_ctr_en: false,
+            output_col: false,
+            output_ctr_en: false,
+            out_mux_sel: 0,
+            proc_ctrl: [ProcCtrl(0); 4],
+        };
+        assert_eq!(m.encode(), 0x0000_03FF);
+
+        let m = Microcode { cycles: 0, input_col: true, ..Default::default() };
+        assert_eq!(m.encode(), 1 << 10);
+        let m = Microcode { input_ctr_en: true, ..Default::default() };
+        assert_eq!(m.encode(), 1 << 11);
+        let m = Microcode { output_col: true, ..Default::default() };
+        assert_eq!(m.encode(), 1 << 12);
+        let m = Microcode { output_ctr_en: true, ..Default::default() };
+        assert_eq!(m.encode(), 1 << 13);
+        let m = Microcode { out_mux_sel: 0b11, ..Default::default() };
+        assert_eq!(m.encode(), 0b11 << 14);
+        let m = Microcode {
+            proc_ctrl: [ProcCtrl(0xF), ProcCtrl(0), ProcCtrl(0), ProcCtrl(0)],
+            ..Default::default()
+        };
+        assert_eq!(m.encode(), 0xF << 16);
+        let m = Microcode {
+            proc_ctrl: [ProcCtrl(0), ProcCtrl(0), ProcCtrl(0), ProcCtrl(0xF)],
+            ..Default::default()
+        };
+        assert_eq!(m.encode(), 0xF000_0000);
+    }
+
+    #[test]
+    fn decode_is_total_and_roundtrips() {
+        let mut r = Rng::new(99);
+        for _ in 0..10_000 {
+            let w = r.next_u32();
+            let m = Microcode::decode(w);
+            assert_eq!(m.encode(), w, "word {w:#010x} must survive decode→encode");
+        }
+    }
+
+    #[test]
+    fn proc_ctrl_mvm_view() {
+        let pc = ProcCtrl::mvm(MvmOp::VecDot, true);
+        assert_eq!(pc.bits(), 0b1011);
+        assert_eq!(pc.as_mvm(), (MvmOp::VecDot, true));
+        let pc = ProcCtrl::mvm(MvmOp::Write, false);
+        assert_eq!(pc.as_mvm(), (MvmOp::Write, false));
+    }
+
+    #[test]
+    fn proc_ctrl_actpro_view() {
+        for op in ActproOp::ALL {
+            assert_eq!(ProcCtrl::actpro(op).as_actpro(), op);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds 10-bit field")]
+    fn with_cycles_checks_range() {
+        let _ = Microcode::default().with_cycles(1024);
+    }
+
+    #[test]
+    fn cache_depth_matches_paper() {
+        // §4.1: "The microcode cache stores 16 microcodes in total."
+        assert_eq!(MICROCODE_CACHE_DEPTH, 16);
+    }
+}

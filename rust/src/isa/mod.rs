@@ -1,0 +1,20 @@
+//! Instruction-set architecture of the Matrix Machine (paper §3.2–§3.3).
+//!
+//! Two artifact levels, exactly as the paper describes:
+//!
+//! * **Instructions** ([`instruction`]) — what the Matrix Assembler emits and
+//!   the instruction cache stores (Table 2, Fig 2). Available in a 32-bit
+//!   encoding (≤128 processor groups) and a 48-bit encoding (≤1024 groups).
+//!   At runtime the global controller *decodes instructions into microcode*.
+//! * **Microcode** ([`microcode`]) — 32-bit words, each driving one processor
+//!   group of 4 processors (Fig 3): cycle count, input/output column
+//!   selects, counter enables, output-mux select, and four 4-bit
+//!   per-processor control nibbles (Tables 6–7).
+
+pub mod instruction;
+pub mod microcode;
+pub mod opcode;
+
+pub use instruction::{Instruction, InstructionError, Width};
+pub use microcode::{Microcode, ProcCtrl};
+pub use opcode::{ActproOp, MvmOp, Opcode};

@@ -1,0 +1,296 @@
+//! Operation codes: the instruction-level opcodes (Table 2) and the
+//! per-processor control encodings for MVMs (Table 6) and Activation
+//! Processors (Table 7).
+
+use std::fmt;
+
+/// Instruction-level operation codes (paper Table 2, 3 bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Opcode {
+    /// `000` — vector dot product.
+    VectorDotProduct = 0b000,
+    /// `001` — vector summation.
+    VectorSummation = 0b001,
+    /// `010` — vector addition.
+    VectorAddition = 0b010,
+    /// `011` — vector subtraction.
+    VectorSubtraction = 0b011,
+    /// `100` — element-wise multiplication.
+    ElementMultiplication = 0b100,
+    /// `101` — apply activation function to vectors.
+    ActivationFunction = 0b101,
+    /// `110` — no operation.
+    Nop = 0b110,
+}
+
+impl Opcode {
+    /// All opcodes, in Table 2 order.
+    pub const ALL: [Opcode; 7] = [
+        Opcode::VectorDotProduct,
+        Opcode::VectorSummation,
+        Opcode::VectorAddition,
+        Opcode::VectorSubtraction,
+        Opcode::ElementMultiplication,
+        Opcode::ActivationFunction,
+        Opcode::Nop,
+    ];
+
+    /// Decode a 3-bit field. `111` is reserved/invalid.
+    pub fn from_bits(bits: u8) -> Option<Opcode> {
+        Opcode::ALL.into_iter().find(|o| *o as u8 == bits & 0b111)
+    }
+
+    /// The 3-bit encoding.
+    pub fn bits(self) -> u8 {
+        self as u8
+    }
+
+    /// Table 2 mnemonic.
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            Opcode::VectorDotProduct => "VECTOR_DOT_PRODUCT",
+            Opcode::VectorSummation => "VECTOR_SUMMATION",
+            Opcode::VectorAddition => "VECTOR_ADDITION",
+            Opcode::VectorSubtraction => "VECTOR_SUBTRACTION",
+            Opcode::ElementMultiplication => "ELEMENT_MULTIPLICATION",
+            Opcode::ActivationFunction => "ACTIVATION_FUNCTION",
+            Opcode::Nop => "NOP",
+        }
+    }
+
+    /// Table 2 description column.
+    pub fn description(self) -> &'static str {
+        match self {
+            Opcode::VectorDotProduct => "Vector dot product",
+            Opcode::VectorSummation => "Vector summation",
+            Opcode::VectorAddition => "Vector addition",
+            Opcode::VectorSubtraction => "Vector subtraction",
+            Opcode::ElementMultiplication => "Element wise multiplication",
+            Opcode::ActivationFunction => "Apply activation function to vectors",
+            Opcode::Nop => "No operation",
+        }
+    }
+
+    /// Does this instruction run on MVM processor groups (vs ACTPRO groups)?
+    pub fn is_mvm(self) -> bool {
+        !matches!(self, Opcode::ActivationFunction | Opcode::Nop)
+    }
+}
+
+impl fmt::Display for Opcode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.mnemonic())
+    }
+}
+
+/// Mini Vector Machine processor control, `processor_control(2..0)`
+/// (paper Table 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum MvmOp {
+    /// `000` — reset all registers.
+    Reset = 0b000,
+    /// `001` — BRAM read (idle/halted state in Fig 7).
+    Read = 0b001,
+    /// `010` — BRAM write.
+    Write = 0b010,
+    /// `011` — vector dot product using BRAM.
+    VecDot = 0b011,
+    /// `100` — vector summation using BRAM.
+    VecSum = 0b100,
+    /// `101` — vector addition using BRAM.
+    VecAdd = 0b101,
+    /// `110` — vector subtraction using BRAM.
+    VecSub = 0b110,
+    /// `111` — element-wise multiplication.
+    ElemMult = 0b111,
+}
+
+impl MvmOp {
+    /// All MVM control values, in Table 6 order.
+    pub const ALL: [MvmOp; 8] = [
+        MvmOp::Reset,
+        MvmOp::Read,
+        MvmOp::Write,
+        MvmOp::VecDot,
+        MvmOp::VecSum,
+        MvmOp::VecAdd,
+        MvmOp::VecSub,
+        MvmOp::ElemMult,
+    ];
+
+    /// Decode the 3-bit field (total).
+    pub fn from_bits(bits: u8) -> MvmOp {
+        Self::ALL[(bits & 0b111) as usize]
+    }
+
+    /// The 3-bit encoding.
+    pub fn bits(self) -> u8 {
+        self as u8
+    }
+
+    /// Table 6 mnemonic.
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            MvmOp::Reset => "MVM_RESET",
+            MvmOp::Read => "MVM_READ",
+            MvmOp::Write => "MVM_WRITE",
+            MvmOp::VecDot => "MVM_VEC_DOT",
+            MvmOp::VecSum => "MVM_VEC_SUM",
+            MvmOp::VecAdd => "MVM_VEC_ADD",
+            MvmOp::VecSub => "MVM_VEC_SUB",
+            MvmOp::ElemMult => "MVM_ELEM_MUTLI", // sic — paper's spelling
+        }
+    }
+
+    /// Is this an arithmetic (DSP-engaging) operation?
+    pub fn is_compute(self) -> bool {
+        matches!(
+            self,
+            MvmOp::VecDot | MvmOp::VecSum | MvmOp::VecAdd | MvmOp::VecSub | MvmOp::ElemMult
+        )
+    }
+
+    /// The instruction opcode this control value implements, if any.
+    pub fn opcode(self) -> Option<Opcode> {
+        match self {
+            MvmOp::VecDot => Some(Opcode::VectorDotProduct),
+            MvmOp::VecSum => Some(Opcode::VectorSummation),
+            MvmOp::VecAdd => Some(Opcode::VectorAddition),
+            MvmOp::VecSub => Some(Opcode::VectorSubtraction),
+            MvmOp::ElemMult => Some(Opcode::ElementMultiplication),
+            _ => None,
+        }
+    }
+
+    /// The MVM control value implementing an instruction opcode.
+    pub fn from_opcode(op: Opcode) -> Option<MvmOp> {
+        match op {
+            Opcode::VectorDotProduct => Some(MvmOp::VecDot),
+            Opcode::VectorSummation => Some(MvmOp::VecSum),
+            Opcode::VectorAddition => Some(MvmOp::VecAdd),
+            Opcode::VectorSubtraction => Some(MvmOp::VecSub),
+            Opcode::ElementMultiplication => Some(MvmOp::ElemMult),
+            Opcode::ActivationFunction | Opcode::Nop => None,
+        }
+    }
+}
+
+impl fmt::Display for MvmOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.mnemonic())
+    }
+}
+
+/// Activation Processor control, `processor_control(1..0)` (paper Table 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum ActproOp {
+    /// `00` — read BRAM.
+    Read = 0b00,
+    /// `01` — write activation function table to BRAM.
+    WriteAct = 0b01,
+    /// `10` — write input data to BRAM.
+    WriteData = 0b10,
+    /// `11` — bit shift and activation function.
+    Run = 0b11,
+}
+
+impl ActproOp {
+    /// All ACTPRO control values, in Table 7 order.
+    pub const ALL: [ActproOp; 4] =
+        [ActproOp::Read, ActproOp::WriteAct, ActproOp::WriteData, ActproOp::Run];
+
+    /// Decode the 2-bit field (total).
+    pub fn from_bits(bits: u8) -> ActproOp {
+        Self::ALL[(bits & 0b11) as usize]
+    }
+
+    /// The 2-bit encoding.
+    pub fn bits(self) -> u8 {
+        self as u8
+    }
+
+    /// Table 7 mnemonic.
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            ActproOp::Read => "ACTPRO_READ",
+            ActproOp::WriteAct => "ACTPRO_WRITE_ACT",
+            ActproOp::WriteData => "ACTPRO_WRITE_DATA",
+            ActproOp::Run => "ACTPRO_RUN",
+        }
+    }
+}
+
+impl fmt::Display for ActproOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.mnemonic())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcode_encodings_match_table2() {
+        assert_eq!(Opcode::VectorDotProduct.bits(), 0b000);
+        assert_eq!(Opcode::VectorSummation.bits(), 0b001);
+        assert_eq!(Opcode::VectorAddition.bits(), 0b010);
+        assert_eq!(Opcode::VectorSubtraction.bits(), 0b011);
+        assert_eq!(Opcode::ElementMultiplication.bits(), 0b100);
+        assert_eq!(Opcode::ActivationFunction.bits(), 0b101);
+        assert_eq!(Opcode::Nop.bits(), 0b110);
+    }
+
+    #[test]
+    fn opcode_roundtrip_and_reserved() {
+        for op in Opcode::ALL {
+            assert_eq!(Opcode::from_bits(op.bits()), Some(op));
+        }
+        assert_eq!(Opcode::from_bits(0b111), None);
+    }
+
+    #[test]
+    fn mvm_op_encodings_match_table6() {
+        assert_eq!(MvmOp::Reset.bits(), 0b000);
+        assert_eq!(MvmOp::Read.bits(), 0b001);
+        assert_eq!(MvmOp::Write.bits(), 0b010);
+        assert_eq!(MvmOp::VecDot.bits(), 0b011);
+        assert_eq!(MvmOp::VecSum.bits(), 0b100);
+        assert_eq!(MvmOp::VecAdd.bits(), 0b101);
+        assert_eq!(MvmOp::VecSub.bits(), 0b110);
+        assert_eq!(MvmOp::ElemMult.bits(), 0b111);
+    }
+
+    #[test]
+    fn mvm_op_total_roundtrip() {
+        for bits in 0..8u8 {
+            assert_eq!(MvmOp::from_bits(bits).bits(), bits);
+        }
+    }
+
+    #[test]
+    fn actpro_op_encodings_match_table7() {
+        assert_eq!(ActproOp::Read.bits(), 0b00);
+        assert_eq!(ActproOp::WriteAct.bits(), 0b01);
+        assert_eq!(ActproOp::WriteData.bits(), 0b10);
+        assert_eq!(ActproOp::Run.bits(), 0b11);
+        for bits in 0..4u8 {
+            assert_eq!(ActproOp::from_bits(bits).bits(), bits);
+        }
+    }
+
+    #[test]
+    fn opcode_mvmop_mapping_is_inverse() {
+        for op in Opcode::ALL {
+            if let Some(m) = MvmOp::from_opcode(op) {
+                assert_eq!(m.opcode(), Some(op));
+                assert!(op.is_mvm());
+            } else {
+                assert!(!op.is_mvm());
+            }
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! `mfnn` — a reproduction of *Hardware/Software Codesign for Training/Testing
+//! Multiple Neural Networks on Multiple FPGAs* (Brosnan Yuen, 2019) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! Layer 3 (this crate) contains the paper's software/hardware contribution:
+//! the **Matrix Assembler** ([`asm`], [`assembler`]), the **Matrix Machine**
+//! simulated cycle-accurately ([`hw`]), the analytic performance/cost models
+//! ([`perf`]), MLP training lowered onto the vector ISA ([`nn`]), and the
+//! **multi-FPGA cluster coordinator** ([`cluster`]). The [`runtime`] module
+//! loads the JAX/Pallas golden model (AOT-compiled to HLO text by
+//! `python/compile/aot.py`) through PJRT and is used as a bit-exact oracle
+//! and host baseline. Python never runs at runtime.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index mapping
+//! every table/figure of the paper to modules and benches.
+
+pub mod asm;
+pub mod assembler;
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod fixed;
+pub mod hw;
+pub mod isa;
+pub mod nn;
+pub mod perf;
+pub mod prop;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,443 @@
+//! `mfnn` — the command-line launcher for the Matrix Assembler, the
+//! simulated Matrix Machine, and the multi-FPGA cluster runtime.
+//!
+//! ```text
+//! mfnn assemble <net.nnasm> [--device P] [--vhdl DIR] [--print]
+//! mfnn run      <net.nnasm> [--device P] [--verify] [--seed N]
+//! mfnn train    <config.toml>
+//! mfnn tables   [--which t2|t3|t8|alloc|perf|all]
+//! mfnn traces
+//! mfnn golden   [--dir artifacts]
+//! ```
+
+use mfnn::asm::lower_file;
+use mfnn::assembler::vhdl;
+use mfnn::cli::{Args, Spec};
+use mfnn::cluster::{run_cluster, ClusterConfig, Job, SystemBus};
+use mfnn::config::Config;
+use mfnn::fixed::FixedSpec;
+use mfnn::hw::{FpgaDevice, MatrixMachine};
+use mfnn::isa::Width;
+use mfnn::nn::dataset;
+use mfnn::nn::lut::ActKind;
+use mfnn::nn::mlp::{LutParams, MlpSpec};
+use mfnn::nn::trainer::TrainConfig;
+use mfnn::perf::catalog::{FpgaPart, CATALOG};
+use mfnn::perf::group::{OpClass, PerfModel};
+use mfnn::report::{f, Table};
+use mfnn::runtime::{GoldenModel, Runtime};
+use mfnn::util::Rng;
+use std::path::Path;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("{}", usage());
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd {
+        "assemble" => cmd_assemble(&rest),
+        "run" => cmd_run(&rest),
+        "train" => cmd_train(&rest),
+        "tables" => cmd_tables(&rest),
+        "traces" => cmd_traces(&rest),
+        "golden" => cmd_golden(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n{}", usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() -> String {
+    format!(
+        "mfnn {} — multiple neural networks on multiple (simulated) FPGAs\n\n\
+         COMMANDS:\n\
+         \x20 assemble <net.nnasm>   parse+lower a net; optional VHDL emission\n\
+         \x20 run      <net.nnasm>   execute a net on one simulated board\n\
+         \x20 train    <cfg.toml>    run a training cluster from a launcher config\n\
+         \x20 tables                 regenerate the paper's tables (2,3,8,alloc,perf)\n\
+         \x20 traces                 print the Fig 7/8/10 timing diagrams\n\
+         \x20 golden                 cross-check simulator vs JAX/Pallas artifacts\n",
+        mfnn::VERSION
+    )
+}
+
+fn parse_or_help(spec: &Spec, rest: &[String], cmd: &str, about: &str) -> Result<Args, String> {
+    if rest.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{}", spec.help(cmd, about));
+        std::process::exit(0);
+    }
+    spec.parse(rest.iter().cloned()).map_err(|e| e.to_string())
+}
+
+fn device_arg(args: &Args) -> Result<&'static FpgaPart, String> {
+    let name = args.str_or("device", "XC7S75-2");
+    FpgaPart::by_name(&name).ok_or_else(|| format!("unknown FPGA part {name:?}"))
+}
+
+// ----------------------------------------------------------------- assemble
+
+fn cmd_assemble(rest: &[String]) -> Result<(), String> {
+    let spec = Spec::new()
+        .opt("device", "target FPGA part", Some("XC7S75-2"))
+        .opt("vhdl", "emit the generated VHDL bundle into this directory", None)
+        .flag("print", "print the encoded instruction stream")
+        .pos("net", "assembly source (.nnasm)", true);
+    let args = parse_or_help(&spec, rest, "mfnn assemble", "Run the Matrix Assembler")?;
+    let path = args.positional("net").unwrap();
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let nets = lower_file(&text).map_err(|e| e.to_string())?;
+    let part = device_arg(&args)?;
+    let device = FpgaDevice::new(part);
+    println!(
+        "device {}: {} MVM_PG + {} ACTPRO_PG (Eqns 3-4)",
+        part.name, device.mvm_groups, device.actpro_groups
+    );
+    for net in &nets {
+        let p = &net.mlp.program;
+        println!(
+            "net {:?}: {} layers, batch {}, {} buffers, {} waves, {} lane-ops{}",
+            net.spec.name,
+            net.spec.layers.len(),
+            net.batch,
+            p.buffers.len(),
+            p.waves().count(),
+            p.total_lane_ops(),
+            if net.train { " (training)" } else { "" },
+        );
+        if args.flag("print") {
+            let instrs = p
+                .encode(Width::W32, device.mvm_groups as usize, device.actpro_groups as usize)
+                .map_err(|e| e.to_string())?;
+            for (i, ins) in instrs.iter().enumerate() {
+                println!("  [{i:>3}] {:#010x}  {}", ins.encode(Width::W32).unwrap(), ins);
+            }
+        }
+        if let Some(dir) = args.get("vhdl") {
+            let bundle = vhdl::generate(part, Some(p));
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+            for (name, body) in &bundle.files {
+                let out = Path::new(dir).join(format!("{}_{name}", net.spec.name));
+                std::fs::write(&out, body).map_err(|e| e.to_string())?;
+                println!("  wrote {}", out.display());
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------- run
+
+fn cmd_run(rest: &[String]) -> Result<(), String> {
+    let spec = Spec::new()
+        .opt("device", "target FPGA part", Some("XC7S75-2"))
+        .opt("seed", "RNG seed for random bindings", Some("1"))
+        .flag("verify", "verify every wave on the structural simulator")
+        .pos("net", "assembly source (.nnasm)", true);
+    let args = parse_or_help(&spec, rest, "mfnn run", "Execute a net on one simulated board")?;
+    let path = args.positional("net").unwrap();
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let nets = lower_file(&text).map_err(|e| e.to_string())?;
+    let part = device_arg(&args)?;
+    let seed: u64 = args.parse_or("seed", 1).map_err(|e| e.to_string())?;
+    for net in &nets {
+        let p = &net.mlp.program;
+        let mut m = MatrixMachine::new(FpgaDevice::new(part), p).map_err(|e| e.to_string())?;
+        // Bind random data to every host-facing buffer.
+        let mut r = Rng::new(seed);
+        let fsp = net.spec.fixed;
+        for b in &p.buffers {
+            use mfnn::assembler::program::BufKind::*;
+            if matches!(b.kind, Input | Weight | Bias | Target) {
+                let data: Vec<i16> =
+                    (0..b.len()).map(|_| fsp.from_f64((r.gen_f64() - 0.5) * 1.5)).collect();
+                m.bind(p, &b.name.clone(), &data).map_err(|e| e.to_string())?;
+            }
+        }
+        let stats = if args.flag("verify") {
+            m.run_verified(p).map_err(|e| e.to_string())?
+        } else {
+            m.run(p).map_err(|e| e.to_string())?
+        };
+        let dev = FpgaDevice::new(part);
+        println!(
+            "net {:?}: {} cycles (dma {} + compute {} + lut {} + ring {}), {:.3} ms simulated, {} lane-ops ({}/s)",
+            net.spec.name,
+            stats.cycles,
+            stats.dma_cycles,
+            stats.compute_cycles,
+            stats.lut_cycles,
+            stats.ring_cycles,
+            stats.seconds(&dev) * 1e3,
+            stats.lane_ops,
+            mfnn::bench::fmt_count(stats.lane_ops_per_sec(&dev)),
+        );
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------------------- train
+
+fn cmd_train(rest: &[String]) -> Result<(), String> {
+    let spec = Spec::new().pos("config", "launcher config (.toml)", true);
+    let args = parse_or_help(&spec, rest, "mfnn train", "Run a training cluster from a config")?;
+    let path = args.positional("config").unwrap();
+    let cfg = Config::from_file(Path::new(path)).map_err(|e| e.to_string())?;
+    let (ccfg, jobs) = jobs_from_config(&cfg)?;
+    let report = run_cluster(&ccfg, &jobs).map_err(|e| e.to_string())?;
+    let mut t = Table::new(vec!["job", "boards", "steps", "accuracy", "sim compute", "sim bus"])
+        .with_title(format!(
+            "cluster: {} boards ({:?}), makespan {:.3} ms simulated",
+            ccfg.boards,
+            report.placement.mode,
+            report.makespan_s * 1e3
+        ))
+        .numeric();
+    for jr in &report.results {
+        t.row(vec![
+            jr.name.clone(),
+            format!("{:?}", jr.boards),
+            jr.steps.to_string(),
+            f(jr.accuracy, 3),
+            format!("{:.3} ms", jr.sim_compute_s * 1e3),
+            format!("{:.3} ms", jr.sim_bus_s * 1e3),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("metrics: {:?}", report.metrics);
+    Ok(())
+}
+
+/// Build cluster + jobs from a launcher config (see `configs/demo.toml`).
+fn jobs_from_config(cfg: &Config) -> Result<(ClusterConfig, Vec<Job>), String> {
+    let ccfg = ClusterConfig {
+        boards: cfg.int_or("cluster.boards", 2) as usize,
+        device: cfg.str_or("cluster.device", "XC7S75-2"),
+        bus: SystemBus {
+            bandwidth_bps: cfg.float_or("cluster.bus_bandwidth_bps", 125e6),
+            latency_s: cfg.float_or("cluster.bus_latency_s", 50e-6),
+        },
+        sync_every: cfg.int_or("cluster.sync_every", 20) as usize,
+    };
+    let names =
+        cfg.get_str_array("jobs.names").ok_or("config needs jobs.names = [\"a\", ...]")?;
+    let mut jobs = Vec::new();
+    for name in &names {
+        let pfx = format!("job.{name}");
+        let dims: Vec<usize> = cfg
+            .get_int_array(&format!("{pfx}.dims"))
+            .ok_or(format!("{pfx}.dims missing"))?
+            .into_iter()
+            .map(|d| d as usize)
+            .collect();
+        let frac = cfg.int_or(&format!("{pfx}.frac_bits"), 10) as u32;
+        let mut fixed = FixedSpec::q(frac);
+        if cfg.bool_or(&format!("{pfx}.saturate"), true) {
+            fixed = fixed.saturating();
+        }
+        let act = ActKind::parse(&cfg.str_or(&format!("{pfx}.act"), "relu"))
+            .ok_or(format!("{pfx}.act invalid"))?;
+        let out_act = ActKind::parse(&cfg.str_or(&format!("{pfx}.out_act"), "identity"))
+            .ok_or(format!("{pfx}.out_act invalid"))?;
+        let spec =
+            MlpSpec::from_dims(name, &dims, act, out_act, fixed, LutParams::training(fixed))
+                .map_err(|e| e.to_string())?;
+        let ds_name = cfg.str_or(&format!("{pfx}.dataset"), "blobs");
+        let n = cfg.int_or(&format!("{pfx}.samples"), 256) as usize;
+        let seed = cfg.int_or(&format!("{pfx}.seed"), 1) as u64;
+        let ds =
+            dataset::by_name(&ds_name, n, seed).ok_or(format!("unknown dataset {ds_name:?}"))?;
+        let (train, test) = ds.split(0.8, &mut Rng::new(seed));
+        jobs.push(Job {
+            name: name.clone(),
+            spec,
+            cfg: TrainConfig {
+                batch: cfg.int_or(&format!("{pfx}.batch"), 16) as usize,
+                lr: cfg.float_or(&format!("{pfx}.lr"), 1.0 / 128.0),
+                steps: cfg.int_or(&format!("{pfx}.steps"), 300) as usize,
+                seed,
+                log_every: cfg.int_or(&format!("{pfx}.log_every"), 25) as usize,
+            },
+            train_data: Arc::new(train),
+            test_data: Arc::new(test),
+        });
+    }
+    Ok((ccfg, jobs))
+}
+
+// ------------------------------------------------------------------- tables
+
+fn cmd_tables(rest: &[String]) -> Result<(), String> {
+    let spec = Spec::new().opt("which", "t2|t3|t8|alloc|perf|all", Some("all"));
+    let args = parse_or_help(&spec, rest, "mfnn tables", "Regenerate the paper's tables")?;
+    let which = args.str_or("which", "all");
+    let all = which == "all";
+    if all || which == "t2" {
+        let mut t = Table::new(vec!["Instruction", "Op code", "Description"])
+            .with_title("Table 2: instruction set architecture");
+        for op in mfnn::isa::Opcode::ALL {
+            t.row(vec![
+                op.mnemonic().to_string(),
+                format!("{:03b}", op.bits()),
+                op.description().to_string(),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    if all || which == "t3" {
+        use mfnn::assembler::resource::{ACTPRO_PG_USAGE, MVM_PG_USAGE};
+        let mut t = Table::new(vec!["Component", "LUTs", "FFs", "RAMB18Ks", "DSPs"])
+            .with_title("Table 3: processor group resource usages")
+            .numeric();
+        for (n, u) in [("MVM_PG", MVM_PG_USAGE), ("ACTPRO_PG", ACTPRO_PG_USAGE)] {
+            t.row(vec![
+                n.to_string(),
+                u.luts.to_string(),
+                u.ffs.to_string(),
+                u.bram18.to_string(),
+                u.dsps.to_string(),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    if all || which == "t8" {
+        let mut t = Table::new(vec![
+            "FPGA",
+            "IO pins",
+            "DDR channels",
+            "DDR Bus Clock (MHz)",
+            "Cost (CAD)",
+            "DDR/Cost (Mb/s/CAD)",
+        ])
+        .with_title("Table 8: performance/cost evaluation of FPGAs (Eqns 10-11)")
+        .numeric();
+        for p in &CATALOG {
+            t.row(vec![
+                p.name.to_string(),
+                p.io_pins.to_string(),
+                p.ddr_channels.to_string(),
+                format!("{}", p.ddr_clock_mhz),
+                format!("{}", p.cost_cad),
+                f(p.perf_cost_paper(), 2),
+            ]);
+        }
+        print!("{}", t.render());
+        let best = CATALOG
+            .iter()
+            .max_by(|a, b| a.perf_cost().partial_cmp(&b.perf_cost()).unwrap())
+            .unwrap();
+        println!("selected (argmax F): {}\n", best.name);
+    }
+    if all || which == "alloc" {
+        let mut t = Table::new(vec!["FPGA", "N_MVM_PG (Eqn 3)", "N_ACTPRO_PG (Eqn 4)"])
+            .with_title("Eqns 3-4: processor-group allocation per part")
+            .numeric();
+        for p in &CATALOG {
+            let d = FpgaDevice::new(p);
+            t.row(vec![
+                p.name.to_string(),
+                d.mvm_groups.to_string(),
+                d.actpro_groups.to_string(),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    if all || which == "perf" {
+        let m = PerfModel::paper();
+        let mut t = Table::new(vec!["op", "N_I", "T_RUN", "T_all", "E", "P (elem/s)", "R (Mb/s)"])
+            .with_title("Sec 4.1 worked examples (Eqns 5-9), N_I = 1024")
+            .numeric();
+        for (name, class) in [
+            ("vector addition", OpClass::Elementwise),
+            ("vector dot product", OpClass::Reduction),
+            ("activation function", OpClass::Activation),
+        ] {
+            let g = m.group_perf(class, 1024);
+            t.row(vec![
+                name.to_string(),
+                "1024".to_string(),
+                g.t_run.to_string(),
+                g.t_all.to_string(),
+                f(g.e_paper(), 3),
+                format!("{:.3e}", g.p),
+                f(g.r, 0),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- traces
+
+fn cmd_traces(rest: &[String]) -> Result<(), String> {
+    let spec = Spec::new();
+    parse_or_help(&spec, rest, "mfnn traces", "Print the paper's timing diagrams")?;
+    print!("{}", mfnn::hw::trace_figures::all_figures());
+    Ok(())
+}
+
+// ------------------------------------------------------------------- golden
+
+fn cmd_golden(rest: &[String]) -> Result<(), String> {
+    let spec = Spec::new().opt("dir", "artifacts directory", None);
+    let args = parse_or_help(&spec, rest, "mfnn golden", "Cross-check sim vs JAX artifacts")?;
+    let dir =
+        args.get("dir").map(std::path::PathBuf::from).unwrap_or_else(Runtime::default_dir);
+    let g = GoldenModel::open(&dir).map_err(|e| e.to_string())?;
+    println!(
+        "golden model: dims {:?}, batch {}, Q{}.{}",
+        g.spec.layers.iter().map(|l| l.inputs).chain([g.spec.output_dim()]).collect::<Vec<_>>(),
+        g.batch,
+        16 - g.spec.fixed.frac_bits,
+        g.spec.fixed.frac_bits
+    );
+    let h =
+        mfnn::nn::lowering::lower_train_step(&g.spec, g.batch, g.lr).map_err(|e| e.to_string())?;
+    let mut r = Rng::new(0xC0FFEE);
+    let fsp = g.spec.fixed;
+    let rand = |n: usize, amp: f64, r: &mut Rng| -> Vec<i16> {
+        (0..n).map(|_| fsp.from_f64((r.gen_f64() - 0.5) * amp)).collect()
+    };
+    let ws: Vec<Vec<i16>> =
+        g.spec.layers.iter().map(|l| rand(l.inputs * l.outputs, 1.2, &mut r)).collect();
+    let bs: Vec<Vec<i16>> = g.spec.layers.iter().map(|l| rand(l.outputs, 0.4, &mut r)).collect();
+    let x = rand(g.batch * g.spec.input_dim(), 2.0, &mut r);
+    let y = rand(g.batch * g.spec.output_dim(), 1.0, &mut r);
+    let mut m =
+        MatrixMachine::new(FpgaDevice::selected(), &h.program).map_err(|e| e.to_string())?;
+    m.bind(&h.program, "x", &x).map_err(|e| e.to_string())?;
+    m.bind(&h.program, "y", &y).map_err(|e| e.to_string())?;
+    for l in 0..g.spec.layers.len() {
+        m.bind(&h.program, &format!("w{l}"), &ws[l]).map_err(|e| e.to_string())?;
+        m.bind(&h.program, &format!("b{l}"), &bs[l]).map_err(|e| e.to_string())?;
+    }
+    m.run(&h.program).map_err(|e| e.to_string())?;
+    let step = g.train_step(&x, &y, &ws, &bs).map_err(|e| e.to_string())?;
+    let last = g.spec.layers.len() - 1;
+    let sim_out = m.read(&h.program, &format!("o{last}")).unwrap();
+    if sim_out != step.out {
+        return Err("FORWARD OUTPUTS DIVERGE".into());
+    }
+    for l in 0..g.spec.layers.len() {
+        if m.read(&h.program, &format!("w{l}")).unwrap() != step.weights[l] {
+            return Err(format!("LAYER {l} WEIGHTS DIVERGE"));
+        }
+    }
+    println!("sim == golden: forward outputs, loss lane, and updated weights are bit-exact ✓");
+    Ok(())
+}

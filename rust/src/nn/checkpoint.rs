@@ -1,0 +1,231 @@
+//! Weight checkpointing: persist/restore a trained net's quantised
+//! parameters — what the control server keeps in its model store between
+//! "flash" operations (§2: the system buses move network data from the
+//! control server to the boards).
+//!
+//! Format (little-endian, versioned):
+//!
+//! ```text
+//! magic "MFNN"  u32 version  u32 frac_bits  u8 saturate  u32 n_layers
+//! per layer: u32 rows  u32 cols  rows*cols*i16 weights  cols*i16 biases
+//! ```
+
+use crate::fixed::{FixedSpec, RoundMode};
+use std::io::{Read, Write};
+use std::path::Path;
+use thiserror::Error;
+
+/// Checkpoint format version.
+pub const VERSION: u32 = 1;
+const MAGIC: &[u8; 4] = b"MFNN";
+
+/// Checkpoint errors.
+#[derive(Debug, Error)]
+pub enum CheckpointError {
+    /// I/O failure.
+    #[error("checkpoint io: {0}")]
+    Io(#[from] std::io::Error),
+    /// Not a checkpoint / wrong version.
+    #[error("bad checkpoint: {0}")]
+    Format(String),
+}
+
+/// A saved set of parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Fixed-point format the lanes are in.
+    pub fixed: FixedSpec,
+    /// Per-layer `(rows, cols, weights, biases)`.
+    pub layers: Vec<(u32, u32, Vec<i16>, Vec<i16>)>,
+}
+
+impl Checkpoint {
+    /// Capture from per-layer weight/bias lanes (`weights[l]` is
+    /// `rows*cols` row-major; `biases[l]` has `cols` lanes).
+    pub fn capture(
+        fixed: FixedSpec,
+        dims: &[(usize, usize)],
+        weights: &[Vec<i16>],
+        biases: &[Vec<i16>],
+    ) -> Checkpoint {
+        assert_eq!(dims.len(), weights.len());
+        assert_eq!(dims.len(), biases.len());
+        let layers = dims
+            .iter()
+            .zip(weights)
+            .zip(biases)
+            .map(|((&(r, c), w), b)| {
+                assert_eq!(w.len(), r * c, "weight lanes mismatch");
+                assert_eq!(b.len(), c, "bias lanes mismatch");
+                (r as u32, c as u32, w.clone(), b.clone())
+            })
+            .collect();
+        Checkpoint { fixed, layers }
+    }
+
+    /// Serialise to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.fixed.frac_bits.to_le_bytes());
+        out.push(matches!(self.fixed.round, RoundMode::Saturate) as u8);
+        out.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
+        for (r, c, w, b) in &self.layers {
+            out.extend_from_slice(&r.to_le_bytes());
+            out.extend_from_slice(&c.to_le_bytes());
+            for v in w {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            for v in b {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(mut data: &[u8]) -> Result<Checkpoint, CheckpointError> {
+        fn take<'a>(data: &mut &'a [u8], n: usize) -> Result<&'a [u8], CheckpointError> {
+            if data.len() < n {
+                return Err(CheckpointError::Format("truncated".into()));
+            }
+            let (head, rest) = data.split_at(n);
+            *data = rest;
+            Ok(head)
+        }
+        fn take_u32(data: &mut &[u8]) -> Result<u32, CheckpointError> {
+            Ok(u32::from_le_bytes(take(data, 4)?.try_into().unwrap()))
+        }
+        fn take_i16s(data: &mut &[u8], n: usize) -> Result<Vec<i16>, CheckpointError> {
+            let raw = take(data, n * 2)?;
+            Ok(raw.chunks_exact(2).map(|c| i16::from_le_bytes([c[0], c[1]])).collect())
+        }
+        let magic = take(&mut data, 4)?;
+        if magic != MAGIC {
+            return Err(CheckpointError::Format("bad magic".into()));
+        }
+        let version = take_u32(&mut data)?;
+        if version != VERSION {
+            return Err(CheckpointError::Format(format!("unsupported version {version}")));
+        }
+        let frac_bits = take_u32(&mut data)?;
+        if frac_bits >= 16 {
+            return Err(CheckpointError::Format(format!("bad frac_bits {frac_bits}")));
+        }
+        let saturate = take(&mut data, 1)?[0] != 0;
+        let mut fixed = FixedSpec::q(frac_bits);
+        if saturate {
+            fixed = fixed.saturating();
+        }
+        let n_layers = take_u32(&mut data)? as usize;
+        if n_layers > 1024 {
+            return Err(CheckpointError::Format(format!("implausible layer count {n_layers}")));
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let r = take_u32(&mut data)?;
+            let c = take_u32(&mut data)?;
+            if r as usize * c as usize > 1 << 24 {
+                return Err(CheckpointError::Format("implausible layer size".into()));
+            }
+            let w = take_i16s(&mut data, r as usize * c as usize)?;
+            let b = take_i16s(&mut data, c as usize)?;
+            layers.push((r, c, w, b));
+        }
+        if !data.is_empty() {
+            return Err(CheckpointError::Format("trailing bytes".into()));
+        }
+        Ok(Checkpoint { fixed, layers })
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Checkpoint, CheckpointError> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut buf)?;
+        Checkpoint::from_bytes(&buf)
+    }
+
+    /// Split back into (weights, biases) lane vectors.
+    pub fn into_params(self) -> (Vec<Vec<i16>>, Vec<Vec<i16>>) {
+        let mut ws = Vec::with_capacity(self.layers.len());
+        let mut bs = Vec::with_capacity(self.layers.len());
+        for (_, _, w, b) in self.layers {
+            ws.push(w);
+            bs.push(b);
+        }
+        (ws, bs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample() -> Checkpoint {
+        let mut r = Rng::new(3);
+        let dims = [(4usize, 8usize), (8, 2)];
+        let ws: Vec<Vec<i16>> =
+            dims.iter().map(|&(a, b)| (0..a * b).map(|_| r.gen_i16()).collect()).collect();
+        let bs: Vec<Vec<i16>> =
+            dims.iter().map(|&(_, b)| (0..b).map(|_| r.gen_i16()).collect()).collect();
+        Checkpoint::capture(FixedSpec::q(10).saturating(), &dims, &ws, &bs)
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let c = sample();
+        let back = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let c = sample();
+        let dir = std::env::temp_dir().join(format!("mfnn_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("net.mfnn");
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let c = sample();
+        let mut bytes = c.to_bytes();
+        // bad magic
+        let mut b2 = bytes.clone();
+        b2[0] = b'X';
+        assert!(matches!(Checkpoint::from_bytes(&b2), Err(CheckpointError::Format(_))));
+        // truncation
+        bytes.truncate(bytes.len() - 3);
+        assert!(matches!(Checkpoint::from_bytes(&bytes), Err(CheckpointError::Format(_))));
+        // trailing garbage
+        let mut b3 = c.to_bytes();
+        b3.push(0);
+        assert!(matches!(Checkpoint::from_bytes(&b3), Err(CheckpointError::Format(_))));
+        // bad version
+        let mut b4 = c.to_bytes();
+        b4[4] = 99;
+        assert!(matches!(Checkpoint::from_bytes(&b4), Err(CheckpointError::Format(_))));
+    }
+
+    #[test]
+    fn into_params_matches_capture() {
+        let c = sample();
+        let (ws, bs) = c.clone().into_params();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0], c.layers[0].2);
+        assert_eq!(bs[1], c.layers[1].3);
+    }
+}

@@ -1,0 +1,263 @@
+//! Synthetic datasets for training/testing the MLPs.
+//!
+//! The paper reports no datasets; per the substitution rule (DESIGN.md §2)
+//! we generate classic small classification tasks that exercise the same
+//! code paths: Gaussian blobs, two moons, XOR, and "mini-digits" — noisy
+//! 5×3 digit glyphs, a tiny synthetic stand-in for a real digits corpus.
+//! All generators are deterministic from a seed.
+
+use super::float_ref::argmax;
+use crate::util::Rng;
+
+/// A labelled dataset with one-hot targets.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Feature vectors.
+    pub x: Vec<Vec<f64>>,
+    /// One-hot target vectors.
+    pub y: Vec<Vec<f64>>,
+    /// Number of classes.
+    pub classes: usize,
+    /// Human-readable name.
+    pub name: String,
+}
+
+impl Dataset {
+    /// Feature dimension.
+    pub fn dim(&self) -> usize {
+        self.x.first().map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Sample count.
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+
+    /// Class label of sample `i`.
+    pub fn label(&self, i: usize) -> usize {
+        argmax(&self.y[i])
+    }
+
+    /// Shuffle and split into (train, test) at `train_frac`.
+    pub fn split(mut self, train_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        let cut = ((self.len() as f64) * train_frac).round() as usize;
+        let take = |ids: &[usize], s: &Dataset, name: String| Dataset {
+            x: ids.iter().map(|&i| s.x[i].clone()).collect(),
+            y: ids.iter().map(|&i| s.y[i].clone()).collect(),
+            classes: s.classes,
+            name,
+        };
+        let train = take(&idx[..cut], &self, format!("{}-train", self.name));
+        let test = take(&idx[cut..], &self, format!("{}-test", self.name));
+        self.x.clear();
+        self.y.clear();
+        (train, test)
+    }
+
+    /// A mini-batch as flattened row-major matrices `(B×dim, B×classes)`.
+    pub fn batch(&self, ids: &[usize]) -> (Vec<f64>, Vec<f64>) {
+        let mut bx = Vec::with_capacity(ids.len() * self.dim());
+        let mut by = Vec::with_capacity(ids.len() * self.classes);
+        for &i in ids {
+            bx.extend_from_slice(&self.x[i]);
+            by.extend_from_slice(&self.y[i]);
+        }
+        (bx, by)
+    }
+}
+
+fn one_hot(classes: usize, c: usize) -> Vec<f64> {
+    let mut v = vec![0.0; classes];
+    v[c] = 1.0;
+    v
+}
+
+/// Isotropic Gaussian blobs: `classes` clusters in `dim` dimensions.
+pub fn blobs(n: usize, classes: usize, dim: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f64>> = (0..classes)
+        .map(|_| (0..dim).map(|_| rng.gen_f64() * 4.0 - 2.0).collect())
+        .collect();
+    let mut x = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % classes;
+        x.push(centers[c].iter().map(|&m| m + rng.gen_normal() * 0.35).collect());
+        y.push(one_hot(classes, c));
+    }
+    Dataset { x, y, classes, name: "blobs".into() }
+}
+
+/// Two interleaved half-moons (2 classes, 2-D).
+pub fn two_moons(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = rng.gen_f64() * std::f64::consts::PI;
+        let (noise_x, noise_y) = (rng.gen_normal() * 0.1, rng.gen_normal() * 0.1);
+        if i % 2 == 0 {
+            x.push(vec![t.cos() + noise_x, t.sin() + noise_y]);
+            y.push(one_hot(2, 0));
+        } else {
+            x.push(vec![1.0 - t.cos() + noise_x, 0.5 - t.sin() + noise_y]);
+            y.push(one_hot(2, 1));
+        }
+    }
+    Dataset { x, y, classes: 2, name: "two_moons".into() }
+}
+
+/// The XOR problem with jitter (2 classes, 2-D).
+pub fn xor(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let a = rng.gen_bool(0.5);
+        let b = rng.gen_bool(0.5);
+        x.push(vec![
+            a as u8 as f64 + rng.gen_normal() * 0.1,
+            b as u8 as f64 + rng.gen_normal() * 0.1,
+        ]);
+        y.push(one_hot(2, (a ^ b) as usize));
+    }
+    Dataset { x, y, classes: 2, name: "xor".into() }
+}
+
+/// 5×3 glyphs of the digits 0–9.
+const GLYPHS: [[u8; 15]; 10] = [
+    [1, 1, 1, 1, 0, 1, 1, 0, 1, 1, 0, 1, 1, 1, 1], // 0
+    [0, 1, 0, 1, 1, 0, 0, 1, 0, 0, 1, 0, 1, 1, 1], // 1
+    [1, 1, 1, 0, 0, 1, 1, 1, 1, 1, 0, 0, 1, 1, 1], // 2
+    [1, 1, 1, 0, 0, 1, 0, 1, 1, 0, 0, 1, 1, 1, 1], // 3
+    [1, 0, 1, 1, 0, 1, 1, 1, 1, 0, 0, 1, 0, 0, 1], // 4
+    [1, 1, 1, 1, 0, 0, 1, 1, 1, 0, 0, 1, 1, 1, 1], // 5
+    [1, 1, 1, 1, 0, 0, 1, 1, 1, 1, 0, 1, 1, 1, 1], // 6
+    [1, 1, 1, 0, 0, 1, 0, 1, 0, 0, 1, 0, 0, 1, 0], // 7
+    [1, 1, 1, 1, 0, 1, 1, 1, 1, 1, 0, 1, 1, 1, 1], // 8
+    [1, 1, 1, 1, 0, 1, 1, 1, 1, 0, 0, 1, 1, 1, 1], // 9
+];
+
+/// "Mini-digits": noisy 15-pixel digit glyphs, 10 classes — the synthetic
+/// stand-in for a small real digits corpus (DESIGN.md §2).
+pub fn mini_digits(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % 10;
+        let v: Vec<f64> = GLYPHS[c]
+            .iter()
+            .map(|&p| {
+                let mut val = p as f64;
+                if rng.gen_bool(0.02) {
+                    val = 1.0 - val; // pixel flip
+                }
+                val + rng.gen_normal() * 0.12
+            })
+            .collect();
+        x.push(v);
+        y.push(one_hot(10, c));
+    }
+    Dataset { x, y, classes: 10, name: "mini_digits".into() }
+}
+
+/// Look up a generator by name (launcher configs).
+pub fn by_name(name: &str, n: usize, seed: u64) -> Option<Dataset> {
+    match name {
+        "blobs" => Some(blobs(n, 4, 8, seed)),
+        "two_moons" => Some(two_moons(n, seed)),
+        "xor" => Some(xor(n, seed)),
+        "mini_digits" => Some(mini_digits(n, seed)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        for name in ["blobs", "two_moons", "xor", "mini_digits"] {
+            let a = by_name(name, 100, 42).unwrap();
+            let b = by_name(name, 100, 42).unwrap();
+            assert_eq!(a.len(), 100, "{name}");
+            assert_eq!(a.x, b.x, "{name} not deterministic");
+            assert!(a.y.iter().all(|y| y.len() == a.classes));
+            assert!(a.x.iter().all(|x| x.len() == a.dim()));
+        }
+        assert!(by_name("nope", 10, 1).is_none());
+    }
+
+    #[test]
+    fn labels_are_one_hot() {
+        let d = mini_digits(50, 7);
+        for i in 0..d.len() {
+            assert_eq!(d.y[i].iter().sum::<f64>(), 1.0);
+            assert_eq!(d.y[i][d.label(i)], 1.0);
+            assert_eq!(d.label(i), i % 10);
+        }
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = blobs(100, 3, 4, 9);
+        let (tr, te) = d.split(0.8, &mut Rng::new(1));
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+        assert_eq!(tr.classes, 3);
+    }
+
+    #[test]
+    fn batch_flattens_row_major() {
+        let d = xor(10, 3);
+        let (bx, by) = d.batch(&[0, 3, 5]);
+        assert_eq!(bx.len(), 3 * 2);
+        assert_eq!(by.len(), 3 * 2);
+        assert_eq!(bx[2..4], d.x[3][..]);
+    }
+
+    #[test]
+    fn blobs_are_separable_by_centroid_distance() {
+        // Same-class points should on average be closer to their own
+        // centroid than to others.
+        let d = blobs(400, 4, 8, 11);
+        let mut centroids = vec![vec![0.0; d.dim()]; 4];
+        let mut counts = [0usize; 4];
+        for i in 0..d.len() {
+            let c = d.label(i);
+            counts[c] += 1;
+            for (k, v) in d.x[i].iter().enumerate() {
+                centroids[c][k] += v;
+            }
+        }
+        for (c, cen) in centroids.iter_mut().enumerate() {
+            for v in cen.iter_mut() {
+                *v /= counts[c] as f64;
+            }
+        }
+        let dist = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+        };
+        let mut correct = 0;
+        for i in 0..d.len() {
+            let best = (0..4)
+                .min_by(|&a, &b| {
+                    dist(&d.x[i], &centroids[a]).partial_cmp(&dist(&d.x[i], &centroids[b])).unwrap()
+                })
+                .unwrap();
+            if best == d.label(i) {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / d.len() as f64 > 0.95);
+    }
+}

@@ -1,0 +1,259 @@
+//! Float64 reference MLP — the host-side oracle used to judge how well
+//! the 16-bit fixed-point on-device training tracks ideal training
+//! (EXPERIMENTS.md §E-E2E), and the "CPU baseline" role of §1.
+
+use super::mlp::MlpSpec;
+use crate::util::Rng;
+
+/// Float weights for one MLP.
+#[derive(Debug, Clone)]
+pub struct FloatMlp {
+    /// Layer dims mirrored from the spec.
+    pub spec: MlpSpec,
+    /// Per-layer `(inputs × outputs)` row-major weights.
+    pub weights: Vec<Vec<f64>>,
+    /// Per-layer biases.
+    pub biases: Vec<Vec<f64>>,
+}
+
+impl FloatMlp {
+    /// Initialise with scaled-uniform weights (He-like: ±sqrt(2/fan_in)),
+    /// zero biases.
+    pub fn init(spec: &MlpSpec, rng: &mut Rng) -> FloatMlp {
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for l in &spec.layers {
+            let scale = (2.0 / l.inputs as f64).sqrt();
+            weights.push(
+                (0..l.inputs * l.outputs).map(|_| (rng.gen_f64() * 2.0 - 1.0) * scale).collect(),
+            );
+            biases.push(vec![0.0; l.outputs]);
+        }
+        FloatMlp { spec: spec.clone(), weights, biases }
+    }
+
+    /// Forward one sample; returns all pre-activations and activations
+    /// (`zs[l]`, `os[l]`), with `os.last()` the output.
+    pub fn forward_trace(&self, x: &[f64]) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+        let mut zs = Vec::new();
+        let mut os = Vec::new();
+        let mut cur = x.to_vec();
+        for (l, layer) in self.spec.layers.iter().enumerate() {
+            let (n_in, n_out) = (layer.inputs, layer.outputs);
+            let mut z = vec![0.0; n_out];
+            for j in 0..n_out {
+                let mut acc = self.biases[l][j];
+                for i in 0..n_in {
+                    acc += cur[i] * self.weights[l][i * n_out + j];
+                }
+                z[j] = acc;
+            }
+            let o: Vec<f64> = z.iter().map(|&v| layer.act.f(v)).collect();
+            zs.push(z);
+            os.push(o.clone());
+            cur = o;
+        }
+        (zs, os)
+    }
+
+    /// Forward one sample → output vector.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        self.forward_trace(x).1.pop().unwrap()
+    }
+
+    /// One mini-batch SGD step with MSE loss; returns the batch's summed
+    /// squared error (before the update).
+    pub fn train_step(&mut self, xs: &[Vec<f64>], ys: &[Vec<f64>], lr: f64) -> f64 {
+        let nl = self.spec.layers.len();
+        let mut gw: Vec<Vec<f64>> = self.weights.iter().map(|w| vec![0.0; w.len()]).collect();
+        let mut gb: Vec<Vec<f64>> = self.biases.iter().map(|b| vec![0.0; b.len()]).collect();
+        let mut loss = 0.0;
+        for (x, y) in xs.iter().zip(ys) {
+            let (zs, os) = self.forward_trace(x);
+            let out = &os[nl - 1];
+            let mut delta: Vec<f64> = out
+                .iter()
+                .zip(y)
+                .zip(&zs[nl - 1])
+                .map(|((&o, &t), &z)| {
+                    loss += (o - t) * (o - t);
+                    (o - t) * self.spec.layers[nl - 1].act.df(z)
+                })
+                .collect();
+            for l in (0..nl).rev() {
+                let layer = self.spec.layers[l];
+                let input: &[f64] = if l == 0 { x } else { &os[l - 1] };
+                for i in 0..layer.inputs {
+                    for j in 0..layer.outputs {
+                        gw[l][i * layer.outputs + j] += input[i] * delta[j];
+                    }
+                }
+                for j in 0..layer.outputs {
+                    gb[l][j] += delta[j];
+                }
+                if l > 0 {
+                    let prev = self.spec.layers[l - 1];
+                    let mut nd = vec![0.0; layer.inputs];
+                    for (i, nd_i) in nd.iter_mut().enumerate() {
+                        let mut acc = 0.0;
+                        for j in 0..layer.outputs {
+                            acc += self.weights[l][i * layer.outputs + j] * delta[j];
+                        }
+                        *nd_i = acc * prev.act.df(zs[l - 1][i]);
+                    }
+                    delta = nd;
+                }
+            }
+        }
+        for l in 0..nl {
+            for (w, g) in self.weights[l].iter_mut().zip(&gw[l]) {
+                *w -= lr * g;
+            }
+            for (b, g) in self.biases[l].iter_mut().zip(&gb[l]) {
+                *b -= lr * g;
+            }
+        }
+        loss
+    }
+
+    /// Classification accuracy by argmax (one-hot targets).
+    pub fn accuracy(&self, xs: &[Vec<f64>], ys: &[Vec<f64>]) -> f64 {
+        let mut ok = 0usize;
+        for (x, y) in xs.iter().zip(ys) {
+            let o = self.forward(x);
+            if argmax(&o) == argmax(y) {
+                ok += 1;
+            }
+        }
+        ok as f64 / xs.len().max(1) as f64
+    }
+
+    /// Quantise weights/biases into the spec's fixed-point format (the
+    /// initial "flash" the trainer binds to the machine).
+    pub fn quantized(&self) -> (Vec<Vec<i16>>, Vec<Vec<i16>>) {
+        let f = self.spec.fixed;
+        (
+            self.weights.iter().map(|w| f.encode_vec(w)).collect(),
+            self.biases.iter().map(|b| f.encode_vec(b)).collect(),
+        )
+    }
+}
+
+/// Index of the maximum element.
+pub fn argmax(xs: &[f64]) -> usize {
+    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FixedSpec;
+    use crate::nn::lut::ActKind;
+    use crate::nn::mlp::LutParams;
+
+    fn spec() -> MlpSpec {
+        MlpSpec::from_dims(
+            "f",
+            &[2, 8, 1],
+            ActKind::Tanh,
+            ActKind::Identity,
+            FixedSpec::q(10),
+            LutParams::training(FixedSpec::q(10)),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn forward_identity_linear() {
+        let s = MlpSpec::from_dims(
+            "lin",
+            &[2, 1],
+            ActKind::Identity,
+            ActKind::Identity,
+            FixedSpec::q(10),
+            LutParams::training(FixedSpec::q(10)),
+        )
+        .unwrap();
+        let mut m = FloatMlp::init(&s, &mut Rng::new(1));
+        m.weights[0] = vec![0.5, -0.25];
+        m.biases[0] = vec![0.125];
+        assert!((m.forward(&[1.0, 1.0])[0] - (0.5 - 0.25 + 0.125)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn learns_xor() {
+        let s = spec();
+        let mut m = FloatMlp::init(&s, &mut Rng::new(3));
+        let xs: Vec<Vec<f64>> =
+            vec![vec![0., 0.], vec![0., 1.], vec![1., 0.], vec![1., 1.]];
+        let ys: Vec<Vec<f64>> = vec![vec![0.], vec![1.], vec![1.], vec![0.]];
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..2000 {
+            let l = m.train_step(&xs, &ys, 0.1);
+            if step == 0 {
+                first = l;
+            }
+            last = l;
+        }
+        assert!(last < first * 0.05, "first {first}, last {last}");
+        for (x, y) in xs.iter().zip(&ys) {
+            assert!((m.forward(x)[0] - y[0]).abs() < 0.25);
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let s = spec();
+        let mut m = FloatMlp::init(&s, &mut Rng::new(5));
+        let x = vec![0.3, -0.7];
+        let y = vec![0.4];
+        // analytic gradient of 0.5 * dL/dw — our train_step applies
+        // full (o-t)*df; replicate by measuring the loss decrease of a
+        // small step against finite differences of the loss.
+        let loss = |m: &FloatMlp| {
+            let o = m.forward(&x)[0];
+            (o - y[0]) * (o - y[0])
+        };
+        let eps = 1e-6;
+        // pick one weight, compute numeric grad
+        let base = loss(&m);
+        m.weights[0][3] += eps;
+        let up = loss(&m);
+        m.weights[0][3] -= eps;
+        let num_grad = (up - base) / eps;
+        // one train step with tiny lr moves w by -lr*analytic_grad
+        let w_before = m.weights[0][3];
+        m.train_step(&[x.clone()], &[y.clone()], 1e-3);
+        let analytic = (w_before - m.weights[0][3]) / 1e-3;
+        // dL/dw of (o-t)^2 is 2(o-t)do/dw; our delta uses (o-t)do/dw → the
+        // analytic step is half the numeric gradient.
+        assert!(
+            (2.0 * analytic - num_grad).abs() < 1e-3,
+            "numeric {num_grad}, 2×analytic {}",
+            2.0 * analytic
+        );
+    }
+
+    #[test]
+    fn argmax_and_accuracy() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        let s = spec();
+        let m = FloatMlp::init(&s, &mut Rng::new(7));
+        let xs = vec![vec![0.0, 0.0]];
+        let ys = vec![vec![1.0]];
+        let acc = m.accuracy(&xs, &ys);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn quantized_roundtrips_within_resolution() {
+        let s = spec();
+        let m = FloatMlp::init(&s, &mut Rng::new(9));
+        let (qw, _) = m.quantized();
+        let f = s.fixed;
+        for (w, q) in m.weights[0].iter().zip(&qw[0]) {
+            assert!((w - f.to_f64(*q)).abs() <= f.resolution());
+        }
+    }
+}

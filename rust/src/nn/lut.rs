@@ -1,0 +1,296 @@
+//! Activation lookup tables (paper §4.3).
+//!
+//! "Each bit shifter applies a 7 bit shift to the right. After the dual bit
+//! shifts, the values are used as addresses to look-up the results for the
+//! activation functions... the look-up tables are able to store the
+//! activation functions as well as the derivatives of the activation
+//! functions."
+//!
+//! A table holds [`LUT_SIZE`] = 1024 entries of Q.F outputs (one RAMB18E1).
+//! The address of input `x: i16` is `x >> shift`, interpreted per
+//! [`AddrMode`]:
+//!
+//! * [`AddrMode::Wrap`] — paper-accurate: the shifted value is truncated to
+//!   10 bits and used directly (two's-complement aliasing at the edges).
+//! * [`AddrMode::Clamp`] — our default for training: the shifted value is
+//!   offset by half the table and saturated into `[0, 1023]`, so
+//!   out-of-range inputs hit the table's edge entries instead of aliasing
+//!   (DESIGN.md §3 deviation note; ablated in `benches/bench_ablation.rs`).
+//!
+//! `shift` trades range for resolution: the table covers real inputs of
+//! magnitude `2^(shift+9-F)` with resolution `2^(shift-F)`. The paper fixes
+//! `shift = 7`; the training stack typically uses smaller shifts for
+//! saturating activations. Linear interpolation on the residual low bits is
+//! available as an extension (`interp`), giving exact piecewise-linear
+//! ReLU between knots.
+
+use crate::fixed::FixedSpec;
+
+/// Entries in one activation table (one RAMB18E1 of 1024 × 16).
+pub const LUT_SIZE: usize = 1024;
+
+/// LUT addressing behaviour for out-of-range inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AddrMode {
+    /// Truncate the shifted value to 10 bits (paper behaviour).
+    Wrap,
+    /// Offset by 512 and saturate into the table (default for training).
+    Clamp,
+}
+
+/// Supported activation functions (and via `deriv` their derivatives).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActKind {
+    /// `max(0, x)` (paper Eqn 2).
+    Relu,
+    /// Logistic `1 / (1 + e^-x)`.
+    Sigmoid,
+    /// Hyperbolic tangent.
+    Tanh,
+    /// Pass-through (useful for output layers / testing).
+    Identity,
+}
+
+impl ActKind {
+    /// Real-valued function.
+    pub fn f(self, x: f64) -> f64 {
+        match self {
+            ActKind::Relu => x.max(0.0),
+            ActKind::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            ActKind::Tanh => x.tanh(),
+            ActKind::Identity => x,
+        }
+    }
+
+    /// Real-valued derivative.
+    pub fn df(self, x: f64) -> f64 {
+        match self {
+            ActKind::Relu => {
+                if x > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            ActKind::Sigmoid => {
+                let s = self.f(x);
+                s * (1.0 - s)
+            }
+            ActKind::Tanh => 1.0 - x.tanh().powi(2),
+            ActKind::Identity => 1.0,
+        }
+    }
+
+    /// Parse a config name.
+    pub fn parse(name: &str) -> Option<ActKind> {
+        match name {
+            "relu" => Some(ActKind::Relu),
+            "sigmoid" => Some(ActKind::Sigmoid),
+            "tanh" => Some(ActKind::Tanh),
+            "identity" | "linear" => Some(ActKind::Identity),
+            _ => None,
+        }
+    }
+
+    /// Config name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ActKind::Relu => "relu",
+            ActKind::Sigmoid => "sigmoid",
+            ActKind::Tanh => "tanh",
+            ActKind::Identity => "identity",
+        }
+    }
+}
+
+/// A built activation table + its addressing parameters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ActLut {
+    table: Vec<i16>,
+    /// Right-shift applied to the input before addressing.
+    pub shift: u32,
+    /// Addressing behaviour.
+    pub mode: AddrMode,
+    /// Linear interpolation on the residual bits (extension).
+    pub interp: bool,
+    /// The function this table encodes.
+    pub kind: ActKind,
+    /// Is this the derivative table?
+    pub deriv: bool,
+    /// Fixed-point format of inputs and outputs.
+    pub fixed: FixedSpec,
+}
+
+impl ActLut {
+    /// Build a table for `kind` (or its derivative) under the given
+    /// fixed-point format, addressing mode, and shift.
+    pub fn build(kind: ActKind, deriv: bool, fixed: FixedSpec, mode: AddrMode, shift: u32) -> ActLut {
+        assert!(shift <= 15, "shift {shift} out of range");
+        let mut table = vec![0i16; LUT_SIZE];
+        for (i, slot) in table.iter_mut().enumerate() {
+            // Index → the 10-bit shifted-input value it corresponds to.
+            let v10: i64 = match mode {
+                // Wrap: index IS the low 10 bits of (x >> shift), so the
+                // represented value is the sign-extended 10-bit pattern.
+                AddrMode::Wrap => ((i as i64) << 54) >> 54,
+                // Clamp: index = (x >> shift) + 512.
+                AddrMode::Clamp => i as i64 - (LUT_SIZE as i64 / 2),
+            };
+            // Real input at this knot: (v10 << shift) / 2^F.
+            let x_real = (v10 << shift) as f64 / fixed.scale();
+            let y = if deriv { kind.df(x_real) } else { kind.f(x_real) };
+            *slot = fixed.from_f64(y.clamp(-255.0, 255.0));
+        }
+        ActLut { table, shift, mode, interp: false, kind, deriv, fixed }
+    }
+
+    /// Enable linear interpolation on the residual low `shift` bits.
+    pub fn with_interp(mut self) -> ActLut {
+        self.interp = true;
+        self
+    }
+
+    /// The raw 1024-entry table (what `ACTPRO_WRITE_ACT` loads).
+    pub fn table(&self) -> &[i16] {
+        &self.table
+    }
+
+    /// Table address for input `x` (the shift + mode datapath of Fig 9).
+    #[inline]
+    pub fn addr(&self, x: i16) -> usize {
+        let shifted = (x as i32) >> self.shift;
+        match self.mode {
+            AddrMode::Wrap => (shifted as u32 as usize) & (LUT_SIZE - 1),
+            AddrMode::Clamp => (shifted + LUT_SIZE as i32 / 2).clamp(0, LUT_SIZE as i32 - 1) as usize,
+        }
+    }
+
+    /// Apply the activation to one lane exactly as the ACTPRO datapath
+    /// does (shift → address → BRAM read [→ optional interpolation]).
+    #[inline]
+    pub fn apply_scalar(&self, x: i16) -> i16 {
+        let a = self.addr(x);
+        let y0 = self.table[a] as i64;
+        if !self.interp || self.shift == 0 {
+            return y0 as i16;
+        }
+        // Residual low bits select the fraction between knot a and a+1.
+        let frac = (x as i64) & ((1 << self.shift) - 1);
+        let a1 = match self.mode {
+            AddrMode::Wrap => (a + 1) & (LUT_SIZE - 1),
+            AddrMode::Clamp => (a + 1).min(LUT_SIZE - 1),
+        };
+        let y1 = self.table[a1] as i64;
+        self.fixed.narrow(y0 + (((y1 - y0) * frac) >> self.shift))
+    }
+
+    /// Apply to a vector.
+    pub fn apply(&self, xs: &[i16]) -> Vec<i16> {
+        xs.iter().map(|&x| self.apply_scalar(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FixedSpec;
+    use crate::util::Rng;
+
+    const S: FixedSpec = FixedSpec::PAPER;
+
+    #[test]
+    fn paper_mode_is_shift7_wrap() {
+        // §4.3: "Each bit shifter applies a 7 bit shift to the right".
+        let lut = ActLut::build(ActKind::Relu, false, S, AddrMode::Wrap, 7);
+        // x = 1.0 (128 raw) → 128 >> 7 = 1 → knot value relu(1.0) = 1.0.
+        assert_eq!(lut.apply_scalar(S.from_f64(1.0)), S.from_f64(1.0));
+        // x = -1.0 → -128 >> 7 = -1 → relu(-1.0) = 0.
+        assert_eq!(lut.apply_scalar(S.from_f64(-1.0)), 0);
+    }
+
+    #[test]
+    fn wrap_mode_aliases_out_of_range() {
+        // shift 2, wrap: x >> 2 covers ±512 of shifted units = ±2048 raw =
+        // ±16.0 real. x = +16.0 (2048 raw) → 2048>>2 = 512 → wraps to
+        // index 512 → v10 = -512 → relu(-512 * 4 / 128) = 0: aliased!
+        let lut = ActLut::build(ActKind::Relu, false, S, AddrMode::Wrap, 2);
+        assert_eq!(lut.apply_scalar(S.from_f64(16.0)), 0);
+    }
+
+    #[test]
+    fn clamp_mode_saturates_out_of_range() {
+        let lut = ActLut::build(ActKind::Relu, false, S, AddrMode::Clamp, 2);
+        // +16.0 clamps to the top knot: relu(511 * 4 / 128) = 15.97.
+        let top = lut.apply_scalar(S.from_f64(16.0));
+        assert_eq!(top, S.from_f64(511.0 * 4.0 / 128.0));
+        // very negative input → bottom knot → 0
+        assert_eq!(lut.apply_scalar(S.from_f64(-100.0)), 0);
+    }
+
+    #[test]
+    fn relu_knots_are_exact() {
+        let lut = ActLut::build(ActKind::Relu, false, S, AddrMode::Clamp, 7);
+        for k in -3..=3i64 {
+            let x = (k << 7) as i16; // exactly on knot k
+            let want = S.from_f64(ActKind::Relu.f(k as f64));
+            assert_eq!(lut.apply_scalar(x), want, "knot {k}");
+        }
+    }
+
+    #[test]
+    fn interp_makes_relu_exact_away_from_kink() {
+        let lut = ActLut::build(ActKind::Relu, false, S, AddrMode::Clamp, 7).with_interp();
+        let mut r = Rng::new(8);
+        for _ in 0..2000 {
+            let x = r.gen_range_i64(-20000, 20000) as i16;
+            let y = lut.apply_scalar(x);
+            if x >= 128 {
+                // fully in the linear region: interp reconstructs x exactly
+                assert_eq!(y, x, "x={x}");
+            } else if x < -128 {
+                assert_eq!(y, 0, "x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn sigmoid_close_to_real_function_with_fine_shift() {
+        // shift 2 → resolution 4/128 = 1/32 real units per knot.
+        let lut =
+            ActLut::build(ActKind::Sigmoid, false, S, AddrMode::Clamp, 2).with_interp();
+        for i in -600..600 {
+            let x_real = i as f64 / 50.0; // ±12
+            let x = S.from_f64(x_real);
+            let y = S.to_f64(lut.apply_scalar(x));
+            let want = ActKind::Sigmoid.f(S.to_f64(x));
+            assert!(
+                (y - want).abs() < 0.02,
+                "sigmoid({x_real}) = {y}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn derivative_tables() {
+        let dlut = ActLut::build(ActKind::Relu, true, S, AddrMode::Clamp, 7);
+        assert_eq!(dlut.apply_scalar(S.from_f64(3.0)), S.from_f64(1.0));
+        assert_eq!(dlut.apply_scalar(S.from_f64(-3.0)), 0);
+        let dsig = ActLut::build(ActKind::Sigmoid, true, S, AddrMode::Clamp, 2);
+        // sigmoid'(0) = 0.25
+        assert_eq!(dsig.apply_scalar(0), S.from_f64(0.25));
+    }
+
+    #[test]
+    fn table_size_is_one_bram() {
+        let lut = ActLut::build(ActKind::Tanh, false, S, AddrMode::Clamp, 3);
+        assert_eq!(lut.table().len(), LUT_SIZE);
+    }
+
+    #[test]
+    fn all_kinds_parse_roundtrip() {
+        for k in [ActKind::Relu, ActKind::Sigmoid, ActKind::Tanh, ActKind::Identity] {
+            assert_eq!(ActKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(ActKind::parse("swish"), None);
+    }
+}

@@ -1,0 +1,229 @@
+//! MLP specifications (paper §1.1).
+//!
+//! `O_i = A(W_iᵀ X_i + B_i)` per layer; weights are `(inputs × outputs)`
+//! row-major so a weight column (one output neuron's fan-in) is a strided
+//! view and a weight row (one input's fan-out) is contiguous — the two
+//! access patterns forward and backward passes need (see
+//! [`super::lowering`]).
+
+use super::lut::{ActKind, AddrMode};
+use crate::fixed::FixedSpec;
+use crate::hw::COLUMN_LEN;
+use thiserror::Error;
+
+/// Maximum layer dimension the assembler supports by chunking vectors
+/// over multiple 512-lane columns (paper §2: matrices "could be as big
+/// as the user wants"; the chunked-dot quantisation note is in
+/// [`super::lowering`]).
+pub const MAX_DIM: usize = 8 * COLUMN_LEN;
+
+/// One layer: `inputs → outputs` with an activation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerSpec {
+    /// Fan-in.
+    pub inputs: usize,
+    /// Fan-out.
+    pub outputs: usize,
+    /// Activation function.
+    pub act: ActKind,
+}
+
+/// LUT generation parameters (VHDL generics of the ACTPRO groups).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LutParams {
+    /// Input right-shift before addressing.
+    pub shift: u32,
+    /// Addressing mode.
+    pub mode: AddrMode,
+    /// Linear interpolation extension.
+    pub interp: bool,
+}
+
+impl LutParams {
+    /// The paper's configuration (§4.3): shift 7, wrap, no interpolation.
+    pub const PAPER: LutParams = LutParams { shift: 7, mode: AddrMode::Wrap, interp: false };
+
+    /// Default training configuration: finer shift, clamped addressing,
+    /// interpolation on (DESIGN.md §3).
+    pub fn training(fixed: FixedSpec) -> LutParams {
+        LutParams {
+            shift: fixed.frac_bits.saturating_sub(5),
+            mode: AddrMode::Clamp,
+            interp: true,
+        }
+    }
+}
+
+/// A full MLP specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlpSpec {
+    /// Network name.
+    pub name: String,
+    /// Layers, in forward order.
+    pub layers: Vec<LayerSpec>,
+    /// Datapath fixed-point format.
+    pub fixed: FixedSpec,
+    /// Activation-table parameters.
+    pub lut: LutParams,
+}
+
+/// Spec validation errors.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum SpecError {
+    /// No layers.
+    #[error("MLP has no layers")]
+    NoLayers,
+    /// A dimension is zero or exceeds the assembler's chunking limit.
+    #[error("layer {0}: dimension {1} out of range 1..={MAX_DIM}")]
+    BadDim(usize, usize),
+    /// Consecutive layers disagree on width.
+    #[error("layer {0}: inputs {1} != previous outputs {2}")]
+    Mismatch(usize, usize, usize),
+}
+
+impl MlpSpec {
+    /// Build from a dimension list `[in, h1, ..., out]`, hidden activation
+    /// `act`, and output activation `out_act`.
+    pub fn from_dims(
+        name: &str,
+        dims: &[usize],
+        act: ActKind,
+        out_act: ActKind,
+        fixed: FixedSpec,
+        lut: LutParams,
+    ) -> Result<MlpSpec, SpecError> {
+        if dims.len() < 2 {
+            return Err(SpecError::NoLayers);
+        }
+        let layers: Vec<LayerSpec> = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| LayerSpec {
+                inputs: w[0],
+                outputs: w[1],
+                act: if i + 2 == dims.len() { out_act } else { act },
+            })
+            .collect();
+        let spec = MlpSpec { name: name.to_string(), layers, fixed, lut };
+        spec.check()?;
+        Ok(spec)
+    }
+
+    /// Validate dimensions.
+    pub fn check(&self) -> Result<(), SpecError> {
+        if self.layers.is_empty() {
+            return Err(SpecError::NoLayers);
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            for d in [l.inputs, l.outputs] {
+                if d == 0 || d > MAX_DIM {
+                    return Err(SpecError::BadDim(i, d));
+                }
+            }
+            if i > 0 && l.inputs != self.layers[i - 1].outputs {
+                return Err(SpecError::Mismatch(i, l.inputs, self.layers[i - 1].outputs));
+            }
+        }
+        Ok(())
+    }
+
+    /// Input dimension.
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].inputs
+    }
+
+    /// Output dimension.
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().unwrap().outputs
+    }
+
+    /// Total trainable parameters.
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.inputs * l.outputs + l.outputs).sum()
+    }
+
+    /// Parameter bytes at 16 bits/lane (what the cluster must ship to a
+    /// board when placing this net).
+    pub fn param_bytes(&self) -> u64 {
+        self.param_count() as u64 * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lp() -> LutParams {
+        LutParams::training(FixedSpec::PAPER)
+    }
+
+    #[test]
+    fn from_dims_builds_layers() {
+        let m = MlpSpec::from_dims(
+            "m",
+            &[4, 16, 8, 3],
+            ActKind::Relu,
+            ActKind::Sigmoid,
+            FixedSpec::PAPER,
+            lp(),
+        )
+        .unwrap();
+        assert_eq!(m.layers.len(), 3);
+        assert_eq!(m.layers[0], LayerSpec { inputs: 4, outputs: 16, act: ActKind::Relu });
+        assert_eq!(m.layers[2], LayerSpec { inputs: 8, outputs: 3, act: ActKind::Sigmoid });
+        assert_eq!(m.input_dim(), 4);
+        assert_eq!(m.output_dim(), 3);
+        assert_eq!(m.param_count(), 4 * 16 + 16 + 16 * 8 + 8 + 8 * 3 + 3);
+        assert_eq!(m.param_bytes(), 2 * m.param_count() as u64);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert_eq!(
+            MlpSpec::from_dims("m", &[4], ActKind::Relu, ActKind::Relu, FixedSpec::PAPER, lp()),
+            Err(SpecError::NoLayers)
+        );
+        assert_eq!(
+            MlpSpec::from_dims(
+                "m",
+                &[4, MAX_DIM + 1],
+                ActKind::Relu,
+                ActKind::Relu,
+                FixedSpec::PAPER,
+                lp()
+            ),
+            Err(SpecError::BadDim(0, MAX_DIM + 1))
+        );
+        // dims beyond one column but within MAX_DIM are fine (chunked)
+        assert!(MlpSpec::from_dims(
+            "m",
+            &[600, 513],
+            ActKind::Relu,
+            ActKind::Relu,
+            FixedSpec::PAPER,
+            lp()
+        )
+        .is_ok());
+        let mut m = MlpSpec::from_dims(
+            "m",
+            &[4, 8, 2],
+            ActKind::Relu,
+            ActKind::Relu,
+            FixedSpec::PAPER,
+            lp(),
+        )
+        .unwrap();
+        m.layers[1].inputs = 9;
+        assert_eq!(m.check(), Err(SpecError::Mismatch(1, 9, 8)));
+    }
+
+    #[test]
+    fn training_lut_params() {
+        let p = LutParams::training(FixedSpec::q(10));
+        assert_eq!(p.shift, 5);
+        assert_eq!(p.mode, AddrMode::Clamp);
+        assert!(p.interp);
+        assert_eq!(LutParams::PAPER.shift, 7);
+        assert_eq!(LutParams::PAPER.mode, AddrMode::Wrap);
+    }
+}

@@ -1,0 +1,21 @@
+//! Neural-network layer: MLP specifications, activation lookup tables,
+//! quantisation, datasets, the lowering of training/inference onto the
+//! Matrix Machine's vector ISA, and the trainer that drives the simulator.
+//!
+//! The paper's functional requirements (§2): "the Matrix Machine must train
+//! and test MLPs. The Matrix Machine must calculate the forward passes...
+//! the loss functions' gradients must be calculated using the
+//! back-propagation algorithm. The gradients are then used to update the
+//! weights." All of that is built here on top of the seven vector opcodes +
+//! LUT activations (see [`lowering`]).
+
+pub mod checkpoint;
+pub mod dataset;
+pub mod float_ref;
+pub mod lowering;
+pub mod lut;
+pub mod mlp;
+pub mod trainer;
+
+pub use lut::{ActKind, ActLut, AddrMode};
+pub use mlp::MlpSpec;

@@ -1,0 +1,322 @@
+//! The trainer: drives on-device MLP training on a simulated Matrix
+//! Machine — the paper's "training phase" (§2), with loss tracking and
+//! accuracy evaluation on the forward program ("testing phase").
+
+use super::dataset::Dataset;
+use super::float_ref::{argmax, FloatMlp};
+use super::lowering::{lower_forward, lower_train_step, LowerError, LoweredMlp};
+use super::mlp::MlpSpec;
+use crate::hw::machine::MachineError;
+use crate::hw::{FpgaDevice, MatrixMachine, RunStats};
+use crate::util::Rng;
+use thiserror::Error;
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Mini-batch size (≤ 512).
+    pub batch: usize,
+    /// Learning rate (must be representable in the fixed format).
+    pub lr: f64,
+    /// Training steps.
+    pub steps: usize,
+    /// RNG seed (weights + batch sampling).
+    pub seed: u64,
+    /// Record loss every `log_every` steps.
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { batch: 16, lr: 1.0 / 256.0, steps: 300, seed: 0xF00D, log_every: 10 }
+    }
+}
+
+/// Trainer errors.
+#[derive(Debug, Error)]
+pub enum TrainError {
+    /// Lowering failed.
+    #[error("lowering failed: {0}")]
+    Lower(#[from] LowerError),
+    /// Machine failed.
+    #[error("machine error: {0}")]
+    Machine(#[from] MachineError),
+    /// Dataset/spec dimension mismatch.
+    #[error("dataset dim {0}/classes {1} do not match MLP {2}→{3}")]
+    DimMismatch(usize, usize, usize, usize),
+}
+
+/// One logged training point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LossPoint {
+    /// Step index.
+    pub step: usize,
+    /// Mean squared error per sample·output (host-computed, float).
+    pub loss: f64,
+    /// On-device loss register (Σ(o−y)², quantised; may wrap for large
+    /// batches — diagnostic only).
+    pub device_loss: f64,
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// Loss curve.
+    pub curve: Vec<LossPoint>,
+    /// Aggregated machine statistics.
+    pub stats: RunStats,
+    /// Simulated wall-clock seconds on the device.
+    pub sim_seconds: f64,
+    /// Steps executed.
+    pub steps: usize,
+}
+
+/// Drives one MLP's training + evaluation on one simulated board.
+pub struct Trainer {
+    /// Network spec.
+    pub spec: MlpSpec,
+    /// Board.
+    pub device: FpgaDevice,
+    /// Config.
+    pub cfg: TrainConfig,
+    train: LoweredMlp,
+    fwd: LoweredMlp,
+    train_machine: MatrixMachine,
+    fwd_machine: MatrixMachine,
+    rng: Rng,
+}
+
+impl Trainer {
+    /// Lower programs and initialise weights (He-scaled, quantised).
+    pub fn new(spec: MlpSpec, device: FpgaDevice, cfg: TrainConfig) -> Result<Trainer, TrainError> {
+        let train = lower_train_step(&spec, cfg.batch, cfg.lr)?;
+        let fwd = lower_forward(&spec, cfg.batch)?;
+        let mut train_machine = MatrixMachine::new(device, &train.program)?;
+        let fwd_machine = MatrixMachine::new(device, &fwd.program)?;
+        let mut rng = Rng::new(cfg.seed);
+        // Initial weights from the float reference's init, quantised.
+        let init = FloatMlp::init(&spec, &mut rng);
+        let (qw, qb) = init.quantized();
+        for l in 0..spec.layers.len() {
+            train_machine.bind(&train.program, &format!("w{l}"), &qw[l])?;
+            train_machine.bind(&train.program, &format!("b{l}"), &qb[l])?;
+        }
+        Ok(Trainer { spec, device, cfg, train, fwd, train_machine, fwd_machine, rng })
+    }
+
+    /// Bind explicit weights (e.g. to mirror a float run).
+    pub fn set_weights(&mut self, qw: &[Vec<i16>], qb: &[Vec<i16>]) -> Result<(), TrainError> {
+        for l in 0..self.spec.layers.len() {
+            self.train_machine.bind(&self.train.program, &format!("w{l}"), &qw[l])?;
+            self.train_machine.bind(&self.train.program, &format!("b{l}"), &qb[l])?;
+        }
+        Ok(())
+    }
+
+    /// Snapshot the on-device parameters as a [`Checkpoint`].
+    pub fn checkpoint(&self) -> crate::nn::checkpoint::Checkpoint {
+        let (w, b) = self.weights();
+        let dims: Vec<(usize, usize)> =
+            self.spec.layers.iter().map(|l| (l.inputs, l.outputs)).collect();
+        crate::nn::checkpoint::Checkpoint::capture(self.spec.fixed, &dims, &w, &b)
+    }
+
+    /// Restore parameters from a [`Checkpoint`] (shapes must match).
+    pub fn restore(
+        &mut self,
+        ckpt: crate::nn::checkpoint::Checkpoint,
+    ) -> Result<(), TrainError> {
+        let (w, b) = ckpt.into_params();
+        self.set_weights(&w, &b)
+    }
+
+    /// Current on-device weights.
+    pub fn weights(&self) -> (Vec<Vec<i16>>, Vec<Vec<i16>>) {
+        let nl = self.spec.layers.len();
+        let w = (0..nl)
+            .map(|l| self.train_machine.read(&self.train.program, &format!("w{l}")).unwrap())
+            .collect();
+        let b = (0..nl)
+            .map(|l| self.train_machine.read(&self.train.program, &format!("b{l}")).unwrap())
+            .collect();
+        (w, b)
+    }
+
+    fn check_dims(&self, ds: &Dataset) -> Result<(), TrainError> {
+        if ds.dim() != self.spec.input_dim() || ds.classes != self.spec.output_dim() {
+            return Err(TrainError::DimMismatch(
+                ds.dim(),
+                ds.classes,
+                self.spec.input_dim(),
+                self.spec.output_dim(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Run `cfg.steps` SGD steps over random mini-batches of `ds`.
+    pub fn train(&mut self, ds: &Dataset) -> Result<TrainReport, TrainError> {
+        self.check_dims(ds)?;
+        let f = self.spec.fixed;
+        let batch = self.cfg.batch;
+        let out_dim = self.spec.output_dim();
+        let mut stats = RunStats::default();
+        let mut curve = Vec::new();
+        for step in 0..self.cfg.steps {
+            let ids: Vec<usize> =
+                (0..batch).map(|_| self.rng.gen_range(ds.len() as u64) as usize).collect();
+            let (bx, by) = ds.batch(&ids);
+            let qx = f.encode_vec(&bx);
+            let qy = f.encode_vec(&by);
+            self.train_machine.bind(&self.train.program, "x", &qx)?;
+            self.train_machine.bind(&self.train.program, "y", &qy)?;
+            let st = self.train_machine.run(&self.train.program)?;
+            stats.add(&st);
+            if step % self.cfg.log_every == 0 || step + 1 == self.cfg.steps {
+                // Host-side float loss from the device's output activations.
+                let last = self.spec.layers.len() - 1;
+                let o = self.train_machine.read(&self.train.program, &format!("o{last}"))?;
+                let mut loss = 0.0;
+                for (i, &q) in o.iter().enumerate() {
+                    let d = f.to_f64(q) - by[i];
+                    loss += d * d;
+                }
+                loss /= (batch * out_dim) as f64;
+                let device_loss =
+                    f.to_f64(self.train_machine.read(&self.train.program, "loss")?[0]);
+                curve.push(LossPoint { step, loss, device_loss });
+            }
+        }
+        Ok(TrainReport {
+            curve,
+            stats,
+            sim_seconds: stats.seconds(&self.device),
+            steps: self.cfg.steps,
+        })
+    }
+
+    /// Classification accuracy of the current weights over `ds` (uses the
+    /// forward program — the paper's "testing" phase).
+    pub fn evaluate(&mut self, ds: &Dataset) -> Result<(f64, RunStats), TrainError> {
+        self.check_dims(ds)?;
+        let f = self.spec.fixed;
+        let batch = self.cfg.batch;
+        let out_dim = self.spec.output_dim();
+        // copy current weights into the forward machine
+        let (qw, qb) = self.weights();
+        for l in 0..self.spec.layers.len() {
+            self.fwd_machine.bind(&self.fwd.program, &format!("w{l}"), &qw[l])?;
+            self.fwd_machine.bind(&self.fwd.program, &format!("b{l}"), &qb[l])?;
+        }
+        let mut stats = RunStats::default();
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        let last = self.spec.layers.len() - 1;
+        for chunk in (0..ds.len()).collect::<Vec<_>>().chunks(batch) {
+            let mut ids = chunk.to_vec();
+            while ids.len() < batch {
+                ids.push(chunk[0]); // pad the final partial batch
+            }
+            let (bx, _) = ds.batch(&ids);
+            self.fwd_machine.bind(&self.fwd.program, "x", &f.encode_vec(&bx))?;
+            let st = self.fwd_machine.run(&self.fwd.program)?;
+            stats.add(&st);
+            let o = self.fwd_machine.read(&self.fwd.program, &format!("o{last}"))?;
+            for (k, &i) in chunk.iter().enumerate() {
+                let row: Vec<f64> =
+                    o[k * out_dim..(k + 1) * out_dim].iter().map(|&q| f.to_f64(q)).collect();
+                if argmax(&row) == ds.label(i) {
+                    correct += 1;
+                }
+                seen += 1;
+            }
+        }
+        Ok((correct as f64 / seen.max(1) as f64, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FixedSpec;
+    use crate::nn::dataset;
+    use crate::nn::lut::ActKind;
+    use crate::nn::mlp::LutParams;
+
+    fn spec(dims: &[usize]) -> MlpSpec {
+        // Training datapath: Q5.10 with SATURATING narrowing — summed
+        // batch gradients exceed the Q range and must clamp, not wrap
+        // (DESIGN.md §3; wrap is the paper-accurate ablation mode).
+        let fixed = FixedSpec::q(10).saturating();
+        MlpSpec::from_dims(
+            "t",
+            dims,
+            ActKind::Relu,
+            ActKind::Identity,
+            fixed,
+            LutParams::training(fixed),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn trains_blobs_to_high_accuracy() {
+        let ds = dataset::blobs(256, 3, 4, 1234);
+        let (train, test) = ds.split(0.8, &mut Rng::new(5));
+        let s = spec(&[4, 16, 3]);
+        let cfg = TrainConfig { batch: 16, lr: 1.0 / 256.0, steps: 150, seed: 42, log_every: 10 };
+        let mut t = Trainer::new(s, FpgaDevice::selected(), cfg).unwrap();
+        let (acc0, _) = t.evaluate(&test).unwrap();
+        let report = t.train(&train).unwrap();
+        let (acc1, _) = t.evaluate(&test).unwrap();
+        assert!(
+            acc1 > 0.85 && acc1 > acc0,
+            "accuracy before {acc0}, after {acc1}, curve {:?}",
+            report.curve
+        );
+        // loss decreased
+        let first = report.curve.first().unwrap().loss;
+        let last = report.curve.last().unwrap().loss;
+        assert!(last < first, "loss did not decrease: {first} → {last}");
+        assert!(report.stats.cycles > 0);
+        assert!(report.sim_seconds > 0.0);
+    }
+
+    #[test]
+    fn dim_mismatch_detected() {
+        let ds = dataset::xor(32, 1);
+        let s = spec(&[4, 8, 3]);
+        let mut t = Trainer::new(s, FpgaDevice::selected(), TrainConfig::default()).unwrap();
+        assert!(matches!(t.train(&ds), Err(TrainError::DimMismatch(2, 2, 4, 3))));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_restores_training_state() {
+        let s = spec(&[2, 4, 2]);
+        let cfg = TrainConfig { batch: 8, lr: 1.0 / 128.0, steps: 5, seed: 13, log_every: 1 };
+        let ds = dataset::xor(64, 4);
+        let mut t = Trainer::new(s.clone(), FpgaDevice::selected(), cfg.clone()).unwrap();
+        t.train(&ds).unwrap();
+        let ckpt = t.checkpoint();
+        let bytes = ckpt.to_bytes();
+        // a fresh trainer restored from the checkpoint evaluates identically
+        let mut t2 = Trainer::new(s, FpgaDevice::selected(), cfg).unwrap();
+        t2.restore(crate::nn::checkpoint::Checkpoint::from_bytes(&bytes).unwrap()).unwrap();
+        assert_eq!(t.weights(), t2.weights());
+        let (a1, _) = t.evaluate(&ds).unwrap();
+        let (a2, _) = t2.evaluate(&ds).unwrap();
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn weights_persist_across_steps() {
+        let s = spec(&[2, 4, 2]);
+        let cfg = TrainConfig { batch: 8, lr: 1.0 / 32.0, steps: 3, seed: 7, log_every: 1 };
+        let mut t = Trainer::new(s, FpgaDevice::selected(), cfg).unwrap();
+        let (w0, _) = t.weights();
+        let ds = dataset::xor(64, 3);
+        t.train(&ds).unwrap();
+        let (w1, _) = t.weights();
+        assert_ne!(w0, w1, "training did not change weights");
+    }
+}

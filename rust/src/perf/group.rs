@@ -1,0 +1,339 @@
+//! Processor-group performance model — Eqns 5–9 (paper §4.1) plus the
+//! structural cycle model measured from our simulator.
+//!
+//! The paper's model, verbatim:
+//!
+//! ```text
+//! T_RUN(N_I) = N_proc · N_I · C_RUN                                   (5)
+//! T_all(N_I) = N_proc · ( load_iters · C_LOAD
+//!                        + N_I · (C_RUN + C_STORE + C_STALL) + extra ) (6)
+//! E(N_I)     = T_RUN / T_all                                          (7)
+//! P(N_I)     = N_proc² · N_I · N_e / (T_all · T_cycle)                (8)
+//! R(N_I)     = P · N_bits · 1e-6                                      (9)
+//! ```
+//!
+//! with the published per-op constants (from the three §4.1 worked
+//! examples): vector addition `C_LOAD=256, C_RUN=519, C_STORE=256,
+//! C_STALL=0, load_iters=N_I+N_proc²−1`; dot product `C_LOAD=256,
+//! C_RUN=519, C_STORE=0, C_STALL=248, extra=256`, same `load_iters`;
+//! activation `C_LOAD=512, C_RUN=517, C_STORE=256, C_STALL=0,
+//! load_iters=N_I+4`. `N_proc=4`, `N_e=1024`, `N_bits=16`,
+//! `T_cycle=10 ns` (the 100 MHz Spartan-7/Artix-7 clock of §4.2).
+//!
+//! The published examples round `P` to three significant figures *before*
+//! computing `R`, and truncate `E` to three decimals; the
+//! [`GroupPerf::paper_display`] accessors replicate that arithmetic so the
+//! regenerated table matches the PDF digit-for-digit, while the `e/p/r`
+//! fields keep full precision.
+
+use crate::isa::Opcode;
+
+/// Operation class, selecting the per-op constants of §4.1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    /// Vector addition / subtraction / element-wise multiplication.
+    Elementwise,
+    /// Vector dot product / summation.
+    Reduction,
+    /// Activation function (ACTPRO groups).
+    Activation,
+}
+
+impl OpClass {
+    /// Classify a Table-2 opcode.
+    pub fn of(op: Opcode) -> Option<OpClass> {
+        match op {
+            Opcode::VectorAddition | Opcode::VectorSubtraction | Opcode::ElementMultiplication => {
+                Some(OpClass::Elementwise)
+            }
+            Opcode::VectorDotProduct | Opcode::VectorSummation => Some(OpClass::Reduction),
+            Opcode::ActivationFunction => Some(OpClass::Activation),
+            Opcode::Nop => None,
+        }
+    }
+}
+
+/// Per-op cycle constants of Eqn 6.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpCosts {
+    /// Load cycles per load iteration.
+    pub c_load: u64,
+    /// Run cycles per iteration.
+    pub c_run: u64,
+    /// Store cycles per iteration.
+    pub c_store: u64,
+    /// Stall cycles per iteration.
+    pub c_stall: u64,
+    /// Constant term inside the parentheses (the dot product's `+256`).
+    pub extra: u64,
+    /// `true` → load_iters = N_I + N_proc² − 1; `false` → N_I + N_proc.
+    pub square_load_window: bool,
+}
+
+/// Model parameters (defaults = the paper's §4.1 values).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerfModel {
+    /// Processors per group.
+    pub n_proc: u64,
+    /// Elements per processor per iteration (Eqn 8's `N_e`).
+    pub n_e: u64,
+    /// Bits per element.
+    pub n_bits: u64,
+    /// Clock period in seconds.
+    pub t_cycle_s: f64,
+}
+
+impl PerfModel {
+    /// The paper's parameters: 4 procs, 1024 elements, 16 bits, 100 MHz.
+    pub fn paper() -> PerfModel {
+        PerfModel { n_proc: 4, n_e: 1024, n_bits: 16, t_cycle_s: 10e-9 }
+    }
+
+    /// The published per-op constants.
+    pub fn costs(&self, class: OpClass) -> OpCosts {
+        match class {
+            OpClass::Elementwise => OpCosts {
+                c_load: 256,
+                c_run: 519,
+                c_store: 256,
+                c_stall: 0,
+                extra: 0,
+                square_load_window: true,
+            },
+            OpClass::Reduction => OpCosts {
+                c_load: 256,
+                c_run: 519,
+                c_store: 0,
+                c_stall: 248,
+                extra: 256,
+                square_load_window: true,
+            },
+            OpClass::Activation => OpCosts {
+                c_load: 512,
+                c_run: 517,
+                c_store: 256,
+                c_stall: 0,
+                extra: 0,
+                square_load_window: false,
+            },
+        }
+    }
+
+    /// Eqn 5.
+    pub fn t_run(&self, class: OpClass, n_i: u64) -> u64 {
+        self.n_proc * n_i * self.costs(class).c_run
+    }
+
+    /// Eqn 6.
+    pub fn t_all(&self, class: OpClass, n_i: u64) -> u64 {
+        let c = self.costs(class);
+        let load_iters = if c.square_load_window {
+            n_i + self.n_proc * self.n_proc - 1
+        } else {
+            n_i + self.n_proc
+        };
+        self.n_proc
+            * (load_iters * c.c_load + n_i * (c.c_run + c.c_store + c.c_stall) + c.extra)
+    }
+
+    /// Eqns 5–9 evaluated together.
+    pub fn group_perf(&self, class: OpClass, n_i: u64) -> GroupPerf {
+        let t_run = self.t_run(class, n_i);
+        let t_all = self.t_all(class, n_i);
+        let e = t_run as f64 / t_all as f64;
+        let p = (self.n_proc * self.n_proc * n_i * self.n_e) as f64
+            / (t_all as f64 * self.t_cycle_s);
+        let r = p * self.n_bits as f64 * 1e-6;
+        GroupPerf { class, n_i, t_run, t_all, e, p, r }
+    }
+}
+
+/// Evaluated Eqns 5–9 for one (op class, N_I).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupPerf {
+    /// Op class.
+    pub class: OpClass,
+    /// Iteration count.
+    pub n_i: u64,
+    /// Eqn 5: total run cycles.
+    pub t_run: u64,
+    /// Eqn 6: total cycles.
+    pub t_all: u64,
+    /// Eqn 7: efficiency (full precision).
+    pub e: f64,
+    /// Eqn 8: processing rate, elements/s (full precision).
+    pub p: f64,
+    /// Eqn 9: throughput, Mb/s (full precision).
+    pub r: f64,
+}
+
+impl GroupPerf {
+    /// `E` truncated to 3 decimals, as printed in the paper.
+    pub fn e_paper(&self) -> f64 {
+        (self.e * 1000.0).floor() / 1000.0
+    }
+
+    /// `P` rounded to 3 significant figures, as printed in the paper.
+    pub fn p_paper(&self) -> f64 {
+        round_sig(self.p, 3)
+    }
+
+    /// `R` as the paper computes it: from the 3-sig-fig `P`.
+    pub fn r_paper(&self, n_bits: u64) -> f64 {
+        self.p_paper() * n_bits as f64 * 1e-6
+    }
+
+    /// All three paper-display values.
+    pub fn paper_display(&self, n_bits: u64) -> (f64, f64, f64) {
+        (self.e_paper(), self.p_paper(), self.r_paper(n_bits))
+    }
+}
+
+/// Round to `sig` significant figures.
+pub fn round_sig(x: f64, sig: i32) -> f64 {
+    if x == 0.0 {
+        return 0.0;
+    }
+    let d = (sig - 1 - x.abs().log10().floor() as i32) as f64;
+    let m = 10f64.powf(d);
+    (x * m).round() / m
+}
+
+// ------------------------------------------------------------------------
+// Structural model: closed-form cycle counts of *our* simulated pipeline
+// (matches `assembler::microcode_gen::program_cycles` exactly; asserted by
+// tests). Used by the fast simulator for cycle charging.
+
+/// Cycles for one MVM-group batch: `nprocs` processors each running `op`
+/// over `len`-lane vectors (loads + lockstep compute + drains).
+pub fn structural_mvm_batch_cycles(op: Opcode, len: usize, nprocs: usize) -> u64 {
+    let pairs = len.div_ceil(2) as u64;
+    let needs_b = !matches!(op, Opcode::VectorSummation);
+    let loads = nprocs as u64 * (pairs + 1) * if needs_b { 2 } else { 1 };
+    let compute = len as u64 + 8;
+    let out_len = match op {
+        Opcode::VectorDotProduct | Opcode::VectorSummation => 1,
+        _ => len as u64,
+    };
+    loads + compute + nprocs as u64 * out_len
+}
+
+/// Cycles for one ACTPRO-group batch.
+pub fn structural_actpro_batch_cycles(len: usize, nprocs: usize) -> u64 {
+    let run_len = (len + (len & 1)) as u64;
+    let pairs = run_len / 2;
+    nprocs as u64 * (pairs + 1) + (pairs + 6) + nprocs as u64 * pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembler::microcode_gen;
+
+    #[test]
+    fn worked_example_vector_addition() {
+        // §4.1: T_RUN=2125824, T_all=4238336, E=0.501, P=3.95e8, R=6320.
+        let m = PerfModel::paper();
+        let g = m.group_perf(OpClass::Elementwise, 1024);
+        assert_eq!(g.t_run, 2_125_824);
+        assert_eq!(g.t_all, 4_238_336);
+        assert_eq!(g.e_paper(), 0.501);
+        // The paper prints P=3.95e8 / R=6320 (its roundings of P are
+        // internally inconsistent between examples; see module docs).
+        assert!((g.p - 3.95e8).abs() / 3.95e8 < 5e-3, "P={}", g.p);
+        assert!((g.r - 6320.0).abs() / 6320.0 < 5e-3, "R={}", g.r);
+    }
+
+    #[test]
+    fn worked_example_dot_product() {
+        // §4.1: T_all=4206592, E=0.505, P=3.99e8, R=6384.
+        let m = PerfModel::paper();
+        let g = m.group_perf(OpClass::Reduction, 1024);
+        assert_eq!(g.t_run, 2_125_824);
+        assert_eq!(g.t_all, 4_206_592);
+        assert_eq!(g.e_paper(), 0.505);
+        assert!((g.p - 3.99e8).abs() / 3.99e8 < 5e-3, "P={}", g.p);
+        assert!((g.r - 6384.0).abs() / 6384.0 < 5e-3, "R={}", g.r);
+    }
+
+    #[test]
+    fn worked_example_activation() {
+        // §4.1: T_RUN=2117632, T_all=5271552, E=0.401, P=3.18e8, R=5088.
+        let m = PerfModel::paper();
+        let g = m.group_perf(OpClass::Activation, 1024);
+        assert_eq!(g.t_run, 2_117_632);
+        assert_eq!(g.t_all, 5_271_552);
+        let (e, p, r) = g.paper_display(m.n_bits);
+        assert_eq!(e, 0.401);
+        assert_eq!(p, 3.18e8); // consistent here: 3.1826e8 rounds to 3.18e8
+        assert_eq!(r, 5088.0);
+    }
+
+    #[test]
+    fn efficiency_approaches_half_for_vector_ops() {
+        // §4.1: "the efficiency approaches 50% for vector operations".
+        let m = PerfModel::paper();
+        let g = m.group_perf(OpClass::Elementwise, 1 << 20);
+        assert!((g.e - 519.0 / (519.0 + 256.0 + 256.0)).abs() < 1e-3);
+        assert!(g.e > 0.5 && g.e < 0.51);
+    }
+
+    #[test]
+    fn throughput_exceeds_5000_mbps_at_1024() {
+        // §4.1: "each processor group processes elements at a rate of
+        // > 5000 Mb/s".
+        let m = PerfModel::paper();
+        for class in [OpClass::Elementwise, OpClass::Reduction, OpClass::Activation] {
+            assert!(m.group_perf(class, 1024).r > 5000.0, "{class:?}");
+        }
+    }
+
+    #[test]
+    fn efficiency_grows_with_iterations() {
+        let m = PerfModel::paper();
+        let e1 = m.group_perf(OpClass::Elementwise, 1).e;
+        let e64 = m.group_perf(OpClass::Elementwise, 64).e;
+        let e4096 = m.group_perf(OpClass::Elementwise, 4096).e;
+        assert!(e1 < e64 && e64 < e4096);
+    }
+
+    #[test]
+    fn round_sig_behaviour() {
+        assert_eq!(round_sig(3.9584e8, 3), 3.96e8);
+        assert_eq!(round_sig(3.9549e8, 3), 3.95e8);
+        assert_eq!(round_sig(0.0, 3), 0.0);
+        assert_eq!(round_sig(-1234.0, 2), -1200.0);
+    }
+
+    #[test]
+    fn structural_closed_form_matches_microcode_generator() {
+        for op in [
+            Opcode::VectorDotProduct,
+            Opcode::VectorSummation,
+            Opcode::VectorAddition,
+            Opcode::VectorSubtraction,
+            Opcode::ElementMultiplication,
+        ] {
+            for len in [1, 2, 7, 64, 511, 512] {
+                for n in 1..=4 {
+                    let words = microcode_gen::mvm_batch(op, len, n).unwrap();
+                    assert_eq!(
+                        structural_mvm_batch_cycles(op, len, n),
+                        microcode_gen::program_cycles(&words),
+                        "{op} len={len} n={n}"
+                    );
+                }
+            }
+        }
+        for len in [1, 2, 999, 1024] {
+            for n in 1..=4 {
+                let words = microcode_gen::actpro_batch(len, n).unwrap();
+                assert_eq!(
+                    structural_actpro_batch_cycles(len, n),
+                    microcode_gen::program_cycles(&words),
+                    "act len={len} n={n}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Analytic performance and cost models (paper §3.4, §4.1, §5).
+//!
+//! * [`group`] — Eqns 5–9: per-processor-group cycle counts, efficiency
+//!   `E(N_I)`, processing rate `P(N_I)` and throughput `R(N_I)`, with the
+//!   paper's published per-op constants, reproducing the §4.1 worked
+//!   examples digit for digit. Also a *structural* cycle model derived
+//!   from our simulator's measured pipeline (used by the fast simulator).
+//! * [`catalog`] — Table 8's nine FPGA parts with DDR geometry, price, and
+//!   device resources; Eqns 10–11 (DDR throughput `R` and
+//!   throughput-per-cost `F`).
+
+pub mod catalog;
+pub mod group;
+
+pub use catalog::{FpgaPart, CATALOG};
+pub use group::{GroupPerf, OpClass, PerfModel};

@@ -1,0 +1,184 @@
+//! ASCII table rendering — used to regenerate the paper's tables
+//! (`mfnn tables`), print bench results, and write EXPERIMENTS.md sections.
+
+use std::fmt::Write as _;
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: Option<String>,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column headers (left-aligned).
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Table {
+        let headers: Vec<String> = headers.into_iter().map(Into::into).collect();
+        let aligns = vec![Align::Left; headers.len()];
+        Table { title: None, headers, aligns, rows: Vec::new() }
+    }
+
+    /// Set a title printed above the table.
+    pub fn with_title<S: Into<String>>(mut self, title: S) -> Table {
+        self.title = Some(title.into());
+        self
+    }
+
+    /// Set per-column alignment (length must match headers).
+    pub fn with_aligns(mut self, aligns: Vec<Align>) -> Table {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns;
+        self
+    }
+
+    /// Right-align every column except the first.
+    pub fn numeric(mut self) -> Table {
+        for (i, a) in self.aligns.iter_mut().enumerate() {
+            *a = if i == 0 { Align::Left } else { Align::Right };
+        }
+        self
+    }
+
+    /// Append a row. Panics if the column count mismatches.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Table {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to a string (box-drawing with `|` and `-`).
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            let _ = writeln!(out, "## {t}");
+        }
+        let sep = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], aligns: &[Align]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let c = &cells[i];
+                let pad = widths[i] - c.len();
+                match aligns[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(c);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(c);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+        let _ = writeln!(out, "{sep}");
+        let _ = writeln!(out, "{}", fmt_row(&self.headers, &vec![Align::Left; ncol]));
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &self.aligns));
+        }
+        let _ = writeln!(out, "{sep}");
+        out
+    }
+
+    /// Render as GitHub-flavored markdown (for EXPERIMENTS.md).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            let _ = writeln!(out, "### {t}\n");
+        }
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let dashes: Vec<String> = self
+            .aligns
+            .iter()
+            .map(|a| match a {
+                Align::Left => "---".to_string(),
+                Align::Right => "--:".to_string(),
+            })
+            .collect();
+        let _ = writeln!(out, "| {} |", dashes.join(" | "));
+        for row in &self.rows {
+            let _ = writeln!(out, "| {} |", row.join(" | "));
+        }
+        out
+    }
+}
+
+/// Format a float with `prec` decimals.
+pub fn f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new(vec!["name", "value"]).numeric();
+        t.row(vec!["alpha", "1"]);
+        t.row(vec!["b", "1000"]);
+        let s = t.render();
+        assert!(s.contains("| alpha |     1 |"), "got:\n{s}");
+        assert!(s.contains("| b     |  1000 |"), "got:\n{s}");
+    }
+
+    #[test]
+    fn markdown_has_header_separator() {
+        let mut t = Table::new(vec!["a", "b"]).numeric();
+        t.row(vec!["x", "1"]);
+        let md = t.render_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| --- | --: |"));
+        assert!(md.contains("| x | 1 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn float_formatting() {
+        assert_eq!(f(0.50123, 3), "0.501");
+    }
+}

@@ -1,0 +1,176 @@
+//! Typed wrapper over the MLP golden-model artifacts.
+//!
+//! Binds the `manifest.toml` configuration (network dims, batch,
+//! fixed-point format, LUT parameters) to the [`super::Runtime`] and
+//! offers `forward` / `train_step` calls mirroring the machine's
+//! buffer protocol.
+
+use super::rt::{Runtime, RuntimeError};
+use crate::fixed::FixedSpec;
+use crate::nn::lut::{ActKind, ActLut, AddrMode};
+use crate::nn::mlp::{LutParams, MlpSpec};
+use std::path::Path;
+
+/// The golden MLP model (shape fixed by the artifacts).
+pub struct GoldenModel {
+    rt: Runtime,
+    /// Spec reconstructed from the manifest.
+    pub spec: MlpSpec,
+    /// Batch the artifacts were lowered for.
+    pub batch: usize,
+    /// Learning rate encoded in the train artifact's lr vector protocol.
+    pub lr: f64,
+    act_tables: Vec<ActLut>,
+    dact_tables: Vec<ActLut>,
+}
+
+/// Output of one golden training step.
+#[derive(Debug, Clone)]
+pub struct GoldenStep {
+    /// Final-layer activations (batch × out_dim).
+    pub out: Vec<i16>,
+    /// On-device-style loss lane.
+    pub loss: i16,
+    /// Updated weights.
+    pub weights: Vec<Vec<i16>>,
+    /// Updated biases.
+    pub biases: Vec<Vec<i16>>,
+}
+
+impl GoldenModel {
+    /// Open the artifacts and compile both MLP executables.
+    pub fn open(dir: &Path) -> Result<GoldenModel, RuntimeError> {
+        let mut rt = Runtime::open(dir)?;
+        rt.load("mlp_fwd")?;
+        rt.load("mlp_train")?;
+        let m = rt.manifest();
+        let dims: Vec<usize> = m
+            .get_int_array("model.dims")
+            .ok_or_else(|| RuntimeError::Manifest("model.dims missing".into()))?
+            .into_iter()
+            .map(|d| d as usize)
+            .collect();
+        let batch = m.get_int("model.batch").unwrap_or(0) as usize;
+        let frac = m.get_int("model.frac_bits").unwrap_or(7) as u32;
+        let saturate = m.bool_or("model.saturate", false);
+        let shift = m.get_int("model.shift").unwrap_or(7) as u32;
+        let clamp = m.bool_or("model.clamp", false);
+        let interp = m.bool_or("model.interp", false);
+        let lr = m.float_or("model.lr", 1.0 / 256.0);
+        let act_names = m
+            .get_str_array("model.acts")
+            .ok_or_else(|| RuntimeError::Manifest("model.acts missing".into()))?;
+        let mut fixed = FixedSpec::q(frac);
+        if saturate {
+            fixed = fixed.saturating();
+        }
+        let mode = if clamp { AddrMode::Clamp } else { AddrMode::Wrap };
+        let lut = LutParams { shift, mode, interp };
+        let acts: Vec<ActKind> = act_names
+            .iter()
+            .map(|n| {
+                ActKind::parse(n)
+                    .ok_or_else(|| RuntimeError::Manifest(format!("bad activation {n:?}")))
+            })
+            .collect::<Result<_, _>>()?;
+        let spec = MlpSpec::from_dims(
+            "golden",
+            &dims,
+            *acts.first().unwrap_or(&ActKind::Relu),
+            *acts.last().unwrap_or(&ActKind::Identity),
+            fixed,
+            lut,
+        )
+        .map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        let build = |kind: ActKind, deriv: bool| {
+            let t = ActLut::build(kind, deriv, fixed, mode, shift);
+            if interp {
+                t.with_interp()
+            } else {
+                t
+            }
+        };
+        let act_tables = spec.layers.iter().map(|l| build(l.act, false)).collect();
+        let dact_tables = spec.layers.iter().map(|l| build(l.act, true)).collect();
+        Ok(GoldenModel { rt, spec, batch, lr, act_tables, dact_tables })
+    }
+
+    /// Activation tables the artifacts expect (built identically to the
+    /// machine's).
+    pub fn act_tables(&self) -> &[ActLut] {
+        &self.act_tables
+    }
+
+    /// The learning-rate constant vector for the train artifact.
+    pub fn lr_vec(&self) -> Vec<i16> {
+        let max_out = self.spec.layers.iter().map(|l| l.outputs).max().unwrap();
+        vec![self.spec.fixed.from_f64(self.lr); max_out]
+    }
+
+    fn mlp_inputs<'a>(
+        &'a self,
+        x: &'a [i16],
+        y: Option<&'a [i16]>,
+        weights: &'a [Vec<i16>],
+        biases: &'a [Vec<i16>],
+        lr_vec: Option<&'a [i16]>,
+    ) -> Vec<(&'a [i16], Vec<i64>)> {
+        let dims: Vec<usize> = std::iter::once(self.spec.input_dim())
+            .chain(self.spec.layers.iter().map(|l| l.outputs))
+            .collect();
+        let mut inputs: Vec<(&[i16], Vec<i64>)> =
+            vec![(x, vec![self.batch as i64, dims[0] as i64])];
+        if let Some(y) = y {
+            inputs.push((y, vec![self.batch as i64, *dims.last().unwrap() as i64]));
+        }
+        for (l, (w, b)) in weights.iter().zip(biases).enumerate() {
+            inputs.push((w, vec![dims[l] as i64, dims[l + 1] as i64]));
+            inputs.push((b, vec![dims[l + 1] as i64]));
+        }
+        for t in &self.act_tables {
+            inputs.push((t.table(), vec![1024]));
+        }
+        if let Some(lr) = lr_vec {
+            for t in &self.dact_tables {
+                inputs.push((t.table(), vec![1024]));
+            }
+            inputs.push((lr, vec![lr.len() as i64]));
+        }
+        inputs
+    }
+
+    /// Run the forward artifact.
+    pub fn forward(
+        &self,
+        x: &[i16],
+        weights: &[Vec<i16>],
+        biases: &[Vec<i16>],
+    ) -> Result<Vec<i16>, RuntimeError> {
+        let inputs = self.mlp_inputs(x, None, weights, biases, None);
+        let mut outs = self.rt.execute("mlp_fwd", &inputs)?;
+        Ok(outs.remove(0))
+    }
+
+    /// Run the train-step artifact.
+    pub fn train_step(
+        &self,
+        x: &[i16],
+        y: &[i16],
+        weights: &[Vec<i16>],
+        biases: &[Vec<i16>],
+    ) -> Result<GoldenStep, RuntimeError> {
+        let lr = self.lr_vec();
+        let inputs = self.mlp_inputs(x, Some(y), weights, biases, Some(&lr));
+        let mut outs = self.rt.execute("mlp_train", &inputs)?;
+        // layout: out, loss, (w, b) per layer
+        let out = outs.remove(0);
+        let loss = outs.remove(0)[0];
+        let mut weights_new = Vec::new();
+        let mut biases_new = Vec::new();
+        for _ in 0..self.spec.layers.len() {
+            weights_new.push(outs.remove(0));
+            biases_new.push(outs.remove(0));
+        }
+        Ok(GoldenStep { out, loss, weights: weights_new, biases: biases_new })
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas **golden model**
+//! artifacts (HLO text, produced by `python/compile/aot.py`) and execute
+//! them from Rust — Python never runs on this path.
+//!
+//! Roles of the golden model (DESIGN.md §3):
+//!
+//! * a **bit-exact oracle** for the simulator: `rust/tests/golden.rs`
+//!   asserts the simulated Matrix Machine, the pure-jnp reference and the
+//!   Pallas kernel produce identical int16 results for forward passes and
+//!   full training steps;
+//! * the **host/CPU baseline** of the paper's §1 comparison, used by
+//!   `benches/bench_golden.rs`.
+
+pub mod golden;
+pub mod rt;
+
+pub use golden::GoldenModel;
+pub use rt::{Runtime, RuntimeError};

@@ -1,0 +1,212 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Interchange is **HLO text** (`HloModuleProto::from_text_file`): jax ≥
+//! 0.5 serialises protos with 64-bit instruction ids that the image's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids
+//! (see /opt/xla-example/README.md and DESIGN.md §2).
+
+use crate::config::Config;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use thiserror::Error;
+
+/// Runtime errors.
+#[derive(Debug, Error)]
+pub enum RuntimeError {
+    /// XLA/PJRT failure.
+    #[error("xla: {0}")]
+    Xla(String),
+    /// Missing artifact file.
+    #[error("artifact {0:?} not found under {1:?} — run `make artifacts`")]
+    MissingArtifact(String, PathBuf),
+    /// Manifest problems.
+    #[error("manifest: {0}")]
+    Manifest(String),
+    /// Executable not loaded.
+    #[error("executable {0:?} not loaded")]
+    NotLoaded(String),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// A PJRT CPU runtime bound to an artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Config,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (reads `manifest.toml`, creates the
+    /// CPU client; compiles nothing yet).
+    pub fn open(dir: &Path) -> Result<Runtime, RuntimeError> {
+        let manifest_path = dir.join("manifest.toml");
+        if !manifest_path.exists() {
+            return Err(RuntimeError::MissingArtifact(
+                "manifest.toml".into(),
+                dir.to_path_buf(),
+            ));
+        }
+        let manifest = Config::from_file(&manifest_path)
+            .map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, execs: HashMap::new() })
+    }
+
+    /// The default artifacts directory (`$MFNN_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MFNN_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            // tests run from the crate root; binaries may run elsewhere
+            let cwd = PathBuf::from("artifacts");
+            if cwd.exists() {
+                cwd
+            } else {
+                PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            }
+        })
+    }
+
+    /// Parsed `manifest.toml`.
+    pub fn manifest(&self) -> &Config {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by manifest key (e.g. `"mlp_fwd"`).
+    pub fn load(&mut self, name: &str) -> Result<(), RuntimeError> {
+        if self.execs.contains_key(name) {
+            return Ok(());
+        }
+        let file = self
+            .manifest
+            .get_str(&format!("artifacts.{name}"))
+            .ok_or_else(|| RuntimeError::Manifest(format!("no artifact key {name:?}")))?
+            .to_string();
+        let path = self.dir.join(&file);
+        if !path.exists() {
+            return Err(RuntimeError::MissingArtifact(file, self.dir.clone()));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("artifact path is valid UTF-8"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.execs.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact. Inputs/outputs are i16 tensors
+    /// (value, dims) — the artifacts are lowered with `return_tuple=True`
+    /// so the single result literal decomposes into the output list.
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: &[(&[i16], Vec<i64>)],
+    ) -> Result<Vec<Vec<i16>>, RuntimeError> {
+        let exe =
+            self.execs.get(name).ok_or_else(|| RuntimeError::NotLoaded(name.to_string()))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            // i16 is not a `NativeType` in the crate (no `vec1::<i16>`),
+            // but untyped creation with an S16 shape works.
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 2)
+            };
+            let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+            literals.push(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S16,
+                &dims_usize,
+                bytes,
+            )?);
+        }
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        outs.into_iter().map(|l| l.to_vec::<i16>().map_err(Into::into)).collect()
+    }
+
+    /// Names of loaded executables.
+    pub fn loaded(&self) -> Vec<&str> {
+        self.execs.keys().map(String::as_str).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Runtime::default_dir().join("manifest.toml").exists()
+    }
+
+    #[test]
+    fn open_and_read_manifest() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::open(&Runtime::default_dir()).unwrap();
+        assert_eq!(rt.manifest().get_int("model.frac_bits"), Some(10));
+        assert_eq!(rt.manifest().get_int_array("model.dims"), Some(vec![15, 16, 10]));
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    #[test]
+    fn vec_ops_artifact_matches_fixed_semantics() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        use crate::fixed::FixedSpec;
+        use crate::nn::lut::{ActKind, ActLut, AddrMode};
+        use crate::util::Rng;
+        let mut rt = Runtime::open(&Runtime::default_dir()).unwrap();
+        rt.load("vec_ops").unwrap();
+        let n = rt.manifest().get_int("vec_ops.len").unwrap() as usize;
+        let fixed = FixedSpec::q(10).saturating();
+        let lut = ActLut::build(ActKind::Relu, false, fixed, AddrMode::Clamp, 5).with_interp();
+        let mut r = Rng::new(40);
+        let a: Vec<i16> = (0..n).map(|_| r.gen_i16()).collect();
+        let b: Vec<i16> = (0..n).map(|_| r.gen_i16()).collect();
+        let outs = rt
+            .execute(
+                "vec_ops",
+                &[
+                    (&a, vec![n as i64]),
+                    (&b, vec![n as i64]),
+                    (lut.table(), vec![1024]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(outs.len(), 6);
+        assert_eq!(outs[0], vec![fixed.dot(&a, &b)], "dot");
+        assert_eq!(outs[1], vec![fixed.sum(&a)], "sum");
+        assert_eq!(outs[2], fixed.vadd(&a, &b), "add");
+        assert_eq!(outs[3], fixed.vsub(&a, &b), "sub");
+        assert_eq!(outs[4], fixed.vmul(&a, &b), "mul");
+        assert_eq!(outs[5], lut.apply(&a), "act");
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::open(&Runtime::default_dir()).unwrap();
+        assert!(matches!(rt.load("nope"), Err(RuntimeError::Manifest(_))));
+        assert!(matches!(
+            rt.execute("mlp_fwd", &[]),
+            Err(RuntimeError::NotLoaded(_))
+        ));
+    }
+}

@@ -1,0 +1,117 @@
+//! Small shared utilities: deterministic PRNG, simple leveled logging, and
+//! misc numeric helpers.
+//!
+//! The sandbox has no `rand` crate, so [`Rng`] implements xorshift64* +
+//! SplitMix64 seeding from scratch. Everything that needs randomness in the
+//! crate (datasets, property tests, workload generators) goes through this
+//! type so runs are reproducible from a single `u64` seed.
+
+mod rng;
+pub use rng::Rng;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log levels, lowest = most verbose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Trace = 0,
+    Debug = 1,
+    Info = 2,
+    Warn = 3,
+    Error = 4,
+}
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+
+/// Set the global log level.
+pub fn set_log_level(level: Level) {
+    LOG_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current global log level.
+pub fn log_level() -> Level {
+    match LOG_LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Trace,
+        1 => Level::Debug,
+        2 => Level::Info,
+        3 => Level::Warn,
+        _ => Level::Error,
+    }
+}
+
+/// Emit a log line if `level` is enabled. Prefer the `log_*!` macros.
+pub fn log(level: Level, target: &str, msg: &str) {
+    if level >= log_level() {
+        eprintln!("[{:<5}] {}: {}", format!("{level:?}").to_uppercase(), target, msg);
+    }
+}
+
+/// `log_info!(target, fmt, args...)`
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log($crate::util::Level::Info, $target, &format!($($arg)*))
+    };
+}
+/// `log_debug!(target, fmt, args...)`
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log($crate::util::Level::Debug, $target, &format!($($arg)*))
+    };
+}
+/// `log_warn!(target, fmt, args...)`
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log($crate::util::Level::Warn, $target, &format!($($arg)*))
+    };
+}
+
+/// Integer ceiling division for unsigned 64-bit values.
+pub fn div_ceil(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Format a cycle count / large integer with thousands separators.
+pub fn fmt_thousands(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i != 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_basics() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+    }
+
+    #[test]
+    fn thousands_formatting() {
+        assert_eq!(fmt_thousands(0), "0");
+        assert_eq!(fmt_thousands(999), "999");
+        assert_eq!(fmt_thousands(1000), "1,000");
+        assert_eq!(fmt_thousands(4238336), "4,238,336");
+    }
+
+    #[test]
+    fn log_level_roundtrip() {
+        let old = log_level();
+        set_log_level(Level::Warn);
+        assert_eq!(log_level(), Level::Warn);
+        set_log_level(old);
+    }
+}

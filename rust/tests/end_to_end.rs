@@ -1,0 +1,102 @@
+//! End-to-end integration: assembly text → Matrix Assembler → simulated
+//! multi-FPGA cluster training → accuracy; plus the VHDL bundle for the
+//! same net. Exercises every layer of the stack in one flow.
+
+use mfnn::asm::lower_file;
+use mfnn::assembler::vhdl;
+use mfnn::cluster::{run_cluster, ClusterConfig, Job};
+use mfnn::fixed::FixedSpec;
+use mfnn::hw::{FpgaDevice, MatrixMachine};
+use mfnn::nn::dataset;
+use mfnn::nn::lut::ActKind;
+use mfnn::nn::mlp::{LutParams, MlpSpec};
+use mfnn::nn::trainer::TrainConfig;
+use mfnn::perf::catalog::FpgaPart;
+use mfnn::util::Rng;
+use std::sync::Arc;
+
+const NET: &str = "
+NET digits
+FIXED 10 saturate
+INPUT img 16 15
+WEIGHT w0 15 24
+BIAS b0 24
+ACT a0 relu shift=5 mode=clamp interp=1
+MLP h img w0 b0 a0
+WEIGHT w1 24 10
+BIAS b1 10
+ACT a1 identity shift=5 mode=clamp interp=1
+MLP scores h w1 b1 a1
+OUTPUT scores
+TARGET labels 16 10
+TRAIN lr=0.00390625
+";
+
+#[test]
+fn assembly_to_training_step_runs() {
+    let nets = lower_file(NET).unwrap();
+    let net = &nets[0];
+    assert!(net.train);
+    let p = &net.mlp.program;
+    let mut m = MatrixMachine::new(FpgaDevice::selected(), p).unwrap();
+    let f = net.spec.fixed;
+    let mut r = Rng::new(11);
+    let q = |n: usize, amp: f64, r: &mut Rng| -> Vec<i16> {
+        (0..n).map(|_| f.from_f64((r.gen_f64() - 0.5) * amp)).collect()
+    };
+    m.bind(p, "img", &q(16 * 15, 2.0, &mut r)).unwrap();
+    m.bind(p, "labels", &q(16 * 10, 1.0, &mut r)).unwrap();
+    m.bind(p, "w0", &q(15 * 24, 1.0, &mut r)).unwrap();
+    m.bind(p, "b0", &q(24, 0.2, &mut r)).unwrap();
+    m.bind(p, "w1", &q(24 * 10, 1.0, &mut r)).unwrap();
+    m.bind(p, "b1", &q(10, 0.2, &mut r)).unwrap();
+    let w_before = m.read(p, "w0").unwrap();
+    let stats = m.run(p).unwrap();
+    assert!(stats.cycles > 0);
+    assert_ne!(m.read(p, "w0").unwrap(), w_before, "SGD update must change weights");
+    // the same net generates a VHDL bundle with its instruction ROM
+    let bundle = vhdl::generate(FpgaPart::selected(), Some(p));
+    let gc = bundle.file("global_controller.vhd").unwrap();
+    assert!(gc.contains("VECTOR_DOT_PRODUCT"));
+}
+
+#[test]
+fn cluster_trains_mini_digits_to_accuracy() {
+    // The E-E2E experiment in miniature (the full run lives in
+    // examples/train_cluster.rs): 2 MLPs on 2 boards, mini-digits.
+    let fixed = FixedSpec::q(10).saturating();
+    let mk = |name: &str, seed: u64| {
+        let spec = MlpSpec::from_dims(
+            name,
+            &[15, 24, 10],
+            ActKind::Relu,
+            ActKind::Identity,
+            fixed,
+            LutParams::training(fixed),
+        )
+        .unwrap();
+        let (train, test) = dataset::mini_digits(400, seed).split(0.8, &mut Rng::new(seed));
+        Job {
+            name: name.into(),
+            spec,
+            cfg: TrainConfig { batch: 16, lr: 1.0 / 128.0, steps: 400, seed, log_every: 50 },
+            train_data: Arc::new(train),
+            test_data: Arc::new(test),
+        }
+    };
+    let cfg = ClusterConfig { boards: 2, ..Default::default() };
+    let report = run_cluster(&cfg, &[mk("net_a", 1), mk("net_b", 2)]).unwrap();
+    for jr in &report.results {
+        assert!(
+            jr.accuracy > 0.8,
+            "{} reached only {:.2} accuracy; curve: {:?}",
+            jr.name,
+            jr.accuracy,
+            jr.curve
+        );
+        let first = jr.curve.first().unwrap().loss;
+        let last = jr.curve.last().unwrap().loss;
+        assert!(last < first, "{}: loss {first} → {last}", jr.name);
+    }
+    assert!(report.makespan_s > 0.0);
+}

@@ -1,0 +1,137 @@
+//! Rust simulator ↔ JAX/Pallas golden model **bit-exactness** (E-GOLD in
+//! DESIGN.md).
+//!
+//! The artifacts (`make artifacts`) contain the quantised MLP forward
+//! pass and a full SGD training step lowered from JAX (calling the L1
+//! Pallas kernel) to HLO text. These tests execute them through PJRT
+//! from Rust and assert the simulated Matrix Machine produces *identical
+//! int16 bits* — activations, loss lane, and updated weights.
+
+use mfnn::hw::{FpgaDevice, MatrixMachine};
+use mfnn::nn::lowering::{lower_forward, lower_train_step};
+use mfnn::nn::mlp::MlpSpec;
+use mfnn::runtime::{GoldenModel, Runtime};
+use mfnn::util::Rng;
+
+fn golden() -> Option<GoldenModel> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.toml").exists() {
+        eprintln!("skipping golden tests: run `make artifacts` first");
+        return None;
+    }
+    Some(GoldenModel::open(&dir).expect("open golden model"))
+}
+
+fn rand_params(spec: &MlpSpec, seed: u64) -> (Vec<Vec<i16>>, Vec<Vec<i16>>) {
+    let mut r = Rng::new(seed);
+    let f = spec.fixed;
+    let ws = spec
+        .layers
+        .iter()
+        .map(|l| {
+            (0..l.inputs * l.outputs)
+                .map(|_| f.from_f64((r.gen_f64() - 0.5) * 1.2))
+                .collect()
+        })
+        .collect();
+    let bs = spec
+        .layers
+        .iter()
+        .map(|l| (0..l.outputs).map(|_| f.from_f64((r.gen_f64() - 0.5) * 0.4)).collect())
+        .collect();
+    (ws, bs)
+}
+
+fn rand_x(g: &GoldenModel, seed: u64, dim: usize, amp: f64) -> Vec<i16> {
+    let mut r = Rng::new(seed);
+    (0..g.batch * dim).map(|_| g.spec.fixed.from_f64((r.gen_f64() - 0.5) * amp)).collect()
+}
+
+#[test]
+fn forward_bit_exact_sim_vs_golden() {
+    let Some(g) = golden() else { return };
+    let h = lower_forward(&g.spec, g.batch).expect("lower fwd");
+    for trial in 0..5u64 {
+        let (ws, bs) = rand_params(&g.spec, 100 + trial);
+        let x = rand_x(&g, 200 + trial, g.spec.input_dim(), 2.0);
+
+        // simulated Matrix Machine
+        let mut m = MatrixMachine::new(FpgaDevice::selected(), &h.program).unwrap();
+        m.bind(&h.program, "x", &x).unwrap();
+        for l in 0..g.spec.layers.len() {
+            m.bind(&h.program, &format!("w{l}"), &ws[l]).unwrap();
+            m.bind(&h.program, &format!("b{l}"), &bs[l]).unwrap();
+        }
+        m.run(&h.program).unwrap();
+        let last = g.spec.layers.len() - 1;
+        let sim_out = m.read(&h.program, &format!("o{last}")).unwrap();
+
+        // golden JAX/Pallas artifact via PJRT
+        let gold_out = g.forward(&x, &ws, &bs).expect("golden forward");
+        assert_eq!(sim_out, gold_out, "trial {trial}: forward outputs diverge");
+    }
+}
+
+#[test]
+fn train_step_bit_exact_sim_vs_golden() {
+    let Some(g) = golden() else { return };
+    let h = lower_train_step(&g.spec, g.batch, g.lr).expect("lower train");
+    for trial in 0..3u64 {
+        let (ws, bs) = rand_params(&g.spec, 300 + trial);
+        let x = rand_x(&g, 400 + trial, g.spec.input_dim(), 2.0);
+        let y = rand_x(&g, 500 + trial, g.spec.output_dim(), 1.0);
+
+        let mut m = MatrixMachine::new(FpgaDevice::selected(), &h.program).unwrap();
+        m.bind(&h.program, "x", &x).unwrap();
+        m.bind(&h.program, "y", &y).unwrap();
+        for l in 0..g.spec.layers.len() {
+            m.bind(&h.program, &format!("w{l}"), &ws[l]).unwrap();
+            m.bind(&h.program, &format!("b{l}"), &bs[l]).unwrap();
+        }
+        m.run(&h.program).unwrap();
+        let last = g.spec.layers.len() - 1;
+        let sim_out = m.read(&h.program, &format!("o{last}")).unwrap();
+        let sim_loss = m.read(&h.program, "loss").unwrap()[0];
+
+        let step = g.train_step(&x, &y, &ws, &bs).expect("golden train step");
+        assert_eq!(sim_out, step.out, "trial {trial}: outputs diverge");
+        assert_eq!(sim_loss, step.loss, "trial {trial}: loss lanes diverge");
+        for l in 0..g.spec.layers.len() {
+            let sim_w = m.read(&h.program, &format!("w{l}")).unwrap();
+            let sim_b = m.read(&h.program, &format!("b{l}")).unwrap();
+            assert_eq!(sim_w, step.weights[l], "trial {trial}: layer {l} weights diverge");
+            assert_eq!(sim_b, step.biases[l], "trial {trial}: layer {l} biases diverge");
+        }
+    }
+}
+
+#[test]
+fn multi_step_training_stays_bit_exact() {
+    // Weights evolve identically over several chained steps — any
+    // single-bit divergence would compound and be caught here.
+    let Some(g) = golden() else { return };
+    let h = lower_train_step(&g.spec, g.batch, g.lr).expect("lower train");
+    let (mut ws, mut bs) = rand_params(&g.spec, 900);
+    let mut m = MatrixMachine::new(FpgaDevice::selected(), &h.program).unwrap();
+    for l in 0..g.spec.layers.len() {
+        m.bind(&h.program, &format!("w{l}"), &ws[l]).unwrap();
+        m.bind(&h.program, &format!("b{l}"), &bs[l]).unwrap();
+    }
+    for step in 0..4u64 {
+        let x = rand_x(&g, 1000 + step, g.spec.input_dim(), 2.0);
+        let y = rand_x(&g, 2000 + step, g.spec.output_dim(), 1.0);
+        m.bind(&h.program, "x", &x).unwrap();
+        m.bind(&h.program, "y", &y).unwrap();
+        m.run(&h.program).unwrap();
+        let gold = g.train_step(&x, &y, &ws, &bs).unwrap();
+        for l in 0..g.spec.layers.len() {
+            ws[l] = gold.weights[l].clone();
+            bs[l] = gold.biases[l].clone();
+            assert_eq!(
+                m.read(&h.program, &format!("w{l}")).unwrap(),
+                ws[l],
+                "step {step}, layer {l}"
+            );
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Cross-module property-based tests (mini prop framework — DESIGN.md
+//! S27): coordinator invariants (routing/placement, cycle accounting,
+//! program state), ISA encodings over their full domains, fixed-point
+//! algebra, and semantics preservation of the optimiser on random
+//! programs.
+
+use mfnn::assembler::optimizer;
+use mfnn::assembler::program::{BufKind, LaneOp, Program, Step, View, Wave};
+use mfnn::cluster::schedule;
+use mfnn::fixed::FixedSpec;
+use mfnn::hw::{FpgaDevice, MatrixMachine};
+use mfnn::isa::{Instruction, Microcode, Opcode, Width};
+use mfnn::nn::lut::{ActKind, ActLut, AddrMode};
+use mfnn::prop::{check, Gen};
+use mfnn::util::Rng;
+
+#[test]
+fn instruction_words_roundtrip_over_full_fields() {
+    let g = Gen::new(
+        |r: &mut Rng| {
+            let width = if r.gen_bool(0.5) { Width::W32 } else { Width::W48 };
+            let op = *r.choose(&Opcode::ALL);
+            let max_g = width.max_groups() as i64;
+            let a = r.gen_range_i64(0, max_g - 1) as u16;
+            let b = r.gen_range_i64(a as i64, max_g - 1) as u16;
+            let iters = r.gen_range_i64(0, width.max_iterations() as i64) as u32;
+            (width, Instruction::new(op, a, b, iters))
+        },
+        |_| Vec::new(),
+    );
+    check("instruction_roundtrip", g, |&(width, i)| {
+        let raw = i.encode(width).unwrap();
+        raw >> width.bits() == 0 && Instruction::decode(raw, width).unwrap() == i
+    });
+}
+
+#[test]
+fn microcode_decode_is_total_inverse_of_encode() {
+    let g = Gen::new(|r: &mut Rng| r.next_u32(), |_| Vec::new());
+    check("microcode_total", g, |&w| Microcode::decode(w).encode() == w);
+}
+
+#[test]
+fn fixed_point_algebra() {
+    let pair = Gen::pair(Gen::i16s(), Gen::i16s());
+    // wrap add/sub are exact inverses
+    check("wrap_add_sub_inverse", pair.clone(), |&(a, b)| {
+        let s = FixedSpec::q(7);
+        s.sub(s.add(a, b), b) == a
+    });
+    // multiplication commutes in both modes
+    check("mul_commutes", pair.clone(), |&(a, b)| {
+        let w = FixedSpec::q(10);
+        let sat = w.saturating();
+        w.mul(a, b) == w.mul(b, a) && sat.mul(a, b) == sat.mul(b, a)
+    });
+    // saturating ops never wrap signs on same-sign overflow
+    check("saturate_is_monotone_at_edges", pair, |&(a, b)| {
+        let s = FixedSpec::q(7).saturating();
+        let sum = a as i64 + b as i64;
+        let got = s.add(a, b) as i64;
+        got == sum.clamp(i16::MIN as i64, i16::MAX as i64)
+    });
+}
+
+#[test]
+fn dot_equals_sum_of_products_wideaccumulator() {
+    let g = Gen::vec(Gen::pair(Gen::i16s(), Gen::i16s()), 1, 64);
+    check("dot_linear", g, |pairs: &Vec<(i16, i16)>| {
+        let s = FixedSpec::q(7);
+        let (a, b): (Vec<i16>, Vec<i16>) = pairs.iter().cloned().unzip();
+        let wide: i64 = pairs.iter().map(|&(x, y)| x as i64 * y as i64).sum();
+        s.dot(&a, &b) == s.narrow(wide >> 7)
+    });
+}
+
+#[test]
+fn lut_clamp_is_monotone_for_monotone_activations() {
+    // ReLU/sigmoid/tanh are monotone; a clamped (non-wrapping) LUT must
+    // preserve that lane-wise for any shift.
+    for kind in [ActKind::Relu, ActKind::Sigmoid, ActKind::Tanh] {
+        let g = Gen::pair(Gen::i16s(), Gen::i16s());
+        check(&format!("lut_monotone_{}", kind.name()), g, move |&(a, b)| {
+            let lut = ActLut::build(kind, false, FixedSpec::q(10), AddrMode::Clamp, 5)
+                .with_interp();
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            lut.apply_scalar(lo) <= lut.apply_scalar(hi)
+        });
+    }
+}
+
+#[test]
+fn placement_covers_all_jobs_and_boards() {
+    let g = Gen::pair(Gen::int_range(1, 40), Gen::int_range(1, 40));
+    check("placement_total", g, |&(m, f)| {
+        let p = schedule(m as usize, f as usize);
+        // every job placed exactly once per board it owns; total queue
+        // entries == total group memberships; no empty queues when M ≥ F.
+        let memberships: usize = p.groups.iter().map(|g| g.len()).sum();
+        let queued: usize = p.queues.iter().map(|q| q.len()).sum();
+        memberships == queued
+            && p.groups.iter().all(|g| !g.is_empty())
+            && (m < f || p.queues.iter().all(|q| !q.is_empty()))
+    });
+}
+
+/// Random valid single-wave programs for optimiser/machine properties.
+fn random_program(r: &mut Rng) -> (Program, Vec<Vec<i16>>) {
+    let fixed = if r.gen_bool(0.5) { FixedSpec::q(7) } else { FixedSpec::q(10).saturating() };
+    let n = 4 + r.gen_range(40) as usize;
+    let mut p = Program::new("prop", fixed);
+    let nb = 3 + r.gen_range(3) as usize;
+    let mut data = Vec::new();
+    for i in 0..nb {
+        p.buffer(&format!("b{i}"), n, 1, if i == 0 { BufKind::Input } else { BufKind::Output });
+        data.push((0..n).map(|_| r.gen_i16()).collect());
+    }
+    let waves = 2 + r.gen_range(6) as usize;
+    for _ in 0..waves {
+        let op = *r.choose(&[
+            Opcode::VectorAddition,
+            Opcode::VectorSubtraction,
+            Opcode::ElementMultiplication,
+        ]);
+        let a = r.gen_range(nb as u64) as usize;
+        let b = r.gen_range(nb as u64) as usize;
+        let o = 1 + r.gen_range((nb - 1) as u64) as usize;
+        p.steps.push(Step::Wave(Wave {
+            op,
+            vec_len: n,
+            lut: None,
+            lanes: vec![LaneOp {
+                a: View::all(a, n),
+                b: Some(View::all(b, n)),
+                out: View::all(o, n),
+            }],
+        }));
+    }
+    (p, data)
+}
+
+#[test]
+fn optimizer_preserves_machine_state_on_random_programs() {
+    let mut rng = Rng::new(0xBEEF);
+    for _case in 0..40 {
+        let (p, data) = random_program(&mut rng);
+        p.check().unwrap();
+        let mut opt = p.clone();
+        optimizer::optimize(&mut opt);
+        opt.check().expect("optimised program must stay valid");
+        let run = |prog: &Program| -> Vec<Vec<i16>> {
+            let mut m = MatrixMachine::new(FpgaDevice::selected(), prog).unwrap();
+            for (i, d) in data.iter().enumerate() {
+                m.bind(prog, &prog.buffers[i].name.clone(), d).unwrap();
+            }
+            m.run(prog).unwrap();
+            (0..data.len()).map(|i| m.read_id(i).to_vec()).collect()
+        };
+        assert_eq!(run(&p), run(&opt), "optimiser changed observable state");
+    }
+}
+
+#[test]
+fn machine_cycle_accounting_is_additive_and_deterministic() {
+    let mut rng = Rng::new(0xFACE);
+    for _case in 0..25 {
+        let (p, data) = random_program(&mut rng);
+        let mut m1 = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
+        let mut m2 = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
+        for (i, d) in data.iter().enumerate() {
+            m1.bind(&p, &p.buffers[i].name.clone(), d).unwrap();
+            m2.bind(&p, &p.buffers[i].name.clone(), d).unwrap();
+        }
+        let s1 = m1.run(&p).unwrap();
+        let s2 = m2.run(&p).unwrap();
+        assert_eq!(s1, s2, "same program+data must cost the same");
+        assert_eq!(
+            s1.cycles,
+            s1.dma_cycles + s1.compute_cycles + s1.lut_cycles + s1.ring_cycles,
+            "cycle breakdown must sum to the total"
+        );
+    }
+}
+
+#[test]
+fn asm_parser_never_panics_on_mutated_sources() {
+    // Fuzz-lite: random mutations of a valid source must parse or fail
+    // with an error, never panic.
+    const BASE: &str = "NET a\nFIXED 10 saturate\nINPUT x 4 2\nWEIGHT w 2 3\nBIAS b 3\nACT k relu shift=5 mode=clamp interp=1\nMLP o x w b k\nOUTPUT o\nTARGET y 4 3\nTRAIN lr=0.0078125\n";
+    let mut rng = Rng::new(0xF00);
+    for _ in 0..300 {
+        let mut s: Vec<u8> = BASE.bytes().collect();
+        for _ in 0..1 + rng.gen_range(6) {
+            let i = rng.gen_range(s.len() as u64) as usize;
+            match rng.gen_range(3) {
+                0 => s[i] = rng.gen_range(128) as u8,
+                1 => {
+                    s.remove(i);
+                }
+                _ => s.insert(i, b' '),
+            }
+        }
+        if let Ok(text) = String::from_utf8(s) {
+            let _ = mfnn::asm::lower_file(&text); // must not panic
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Structural (cycle-accurate, microcode-interpreting) simulator vs the
+//! fast functional simulator: identical numerics on randomized programs.
+//! This is the promise that lets training runs use the fast path while
+//! timing claims rest on the structural model.
+
+use mfnn::assembler::program::{BufKind, LaneOp, Program, Step, View, Wave};
+use mfnn::fixed::FixedSpec;
+use mfnn::hw::{FpgaDevice, MatrixMachine};
+use mfnn::isa::Opcode;
+use mfnn::nn::lut::{ActKind, ActLut, AddrMode};
+use mfnn::util::Rng;
+
+/// Build a random but valid program over a handful of buffers.
+fn random_program(seed: u64, fixed: FixedSpec) -> (Program, Vec<(usize, Vec<i16>)>) {
+    let mut r = Rng::new(seed);
+    let n = 8 + r.gen_range(60) as usize; // vector length
+    let mut p = Program::new("rand", fixed);
+    let n_bufs = 4 + r.gen_range(3) as usize;
+    let mut binds = Vec::new();
+    for i in 0..n_bufs {
+        let id = p.buffer(&format!("buf{i}"), n, 1, if i == 0 { BufKind::Input } else { BufKind::Output });
+        let data: Vec<i16> = (0..n).map(|_| r.gen_range_i64(-6000, 6000) as i16).collect();
+        binds.push((id, data));
+    }
+    let scalar = p.buffer("scalar", n_bufs, 1, BufKind::Output);
+    let lut_id = p.lut(
+        ActLut::build(ActKind::Tanh, false, fixed, AddrMode::Clamp, fixed.frac_bits.saturating_sub(4))
+            .with_interp(),
+    );
+    p.steps.push(Step::LoadLut(lut_id));
+    let n_waves = 3 + r.gen_range(8) as usize;
+    for wi in 0..n_waves {
+        let op = *r.choose(&[
+            Opcode::VectorAddition,
+            Opcode::VectorSubtraction,
+            Opcode::ElementMultiplication,
+            Opcode::VectorDotProduct,
+            Opcode::VectorSummation,
+            Opcode::ActivationFunction,
+        ]);
+        let a = r.gen_range(n_bufs as u64) as usize;
+        let b = r.gen_range(n_bufs as u64) as usize;
+        let dst = 1 + r.gen_range((n_bufs - 1) as u64) as usize;
+        let lanes = match op {
+            Opcode::VectorDotProduct | Opcode::VectorSummation => vec![LaneOp {
+                a: View::all(a, n),
+                b: (op == Opcode::VectorDotProduct).then(|| View::all(b, n)),
+                out: View::contiguous(scalar, wi % n_bufs, 1),
+            }],
+            Opcode::ActivationFunction => vec![LaneOp {
+                a: View::all(a, n),
+                b: None,
+                out: View::all(dst, n),
+            }],
+            _ => vec![LaneOp {
+                a: View::all(a, n),
+                b: Some(View::all(b, n)),
+                out: View::all(dst, n),
+            }],
+        };
+        p.steps.push(Step::Wave(Wave {
+            op,
+            vec_len: n,
+            lut: (op == Opcode::ActivationFunction).then_some(lut_id),
+            lanes,
+        }));
+    }
+    (p, binds)
+}
+
+#[test]
+fn random_programs_agree_between_fast_and_structural() {
+    for seed in 0..12u64 {
+        let fixed = if seed % 2 == 0 { FixedSpec::PAPER } else { FixedSpec::q(10).saturating() };
+        let (p, binds) = random_program(seed, fixed);
+        p.check().expect("random program must validate");
+        let device = FpgaDevice::selected();
+        let mut fast = MatrixMachine::new(device, &p).unwrap();
+        let mut slow = MatrixMachine::new(device, &p).unwrap();
+        for (id, data) in &binds {
+            fast.bind(&p, &p.buffers[*id].name.clone(), data).unwrap();
+            slow.bind(&p, &p.buffers[*id].name.clone(), data).unwrap();
+        }
+        let sf = fast.run(&p).unwrap();
+        let sv = slow.run_verified(&p).expect("structural verification must pass");
+        assert_eq!(sf.cycles, sv.cycles, "seed {seed}: cycle accounting diverged");
+        for (id, _) in &binds {
+            assert_eq!(fast.read_id(*id), slow.read_id(*id), "seed {seed} buffer {id}");
+        }
+    }
+}
+
+#[test]
+fn multi_lane_waves_verify_structurally() {
+    // Wide waves exercise the group-batch split inside run_verified.
+    let fixed = FixedSpec::q(10).saturating();
+    let mut r = Rng::new(77);
+    let n = 32usize;
+    let lanes_count = 19; // not a multiple of 4: partial batch at the tail
+    let mut p = Program::new("wide", fixed);
+    let a = p.buffer("a", lanes_count, n, BufKind::Input);
+    let o = p.buffer("o", lanes_count, n, BufKind::Output);
+    let lanes: Vec<LaneOp> = (0..lanes_count)
+        .map(|i| LaneOp {
+            a: View::contiguous(a, i * n, n),
+            b: Some(View::contiguous(a, ((i + 7) % lanes_count) * n, n)),
+            out: View::contiguous(o, i * n, n),
+        })
+        .collect();
+    p.steps.push(Step::Wave(Wave { op: Opcode::ElementMultiplication, vec_len: n, lut: None, lanes }));
+    let data: Vec<i16> = (0..lanes_count * n).map(|_| r.gen_i16()).collect();
+    let mut m = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
+    m.bind(&p, "a", &data).unwrap();
+    m.run_verified(&p).unwrap();
+}
