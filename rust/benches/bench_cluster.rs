@@ -2,12 +2,14 @@
 //! — the multi-FPGA scaling claim of §2. Reports simulated makespan
 //! (the modelled hardware's time) and host wall-clock (simulator cost).
 
+use mfnn::bench::Suite;
 use mfnn::cluster::{run_cluster, ClusterConfig, Job};
 use mfnn::fixed::FixedSpec;
+use mfnn::hw::FpgaDevice;
 use mfnn::nn::dataset;
 use mfnn::nn::lut::ActKind;
 use mfnn::nn::mlp::{LutParams, MlpSpec};
-use mfnn::nn::trainer::TrainConfig;
+use mfnn::nn::trainer::{TrainConfig, Trainer};
 use mfnn::report::{f, Table};
 use mfnn::util::Rng;
 use std::sync::Arc;
@@ -52,4 +54,23 @@ fn main() {
     }
     print!("{}", t.render());
     println!("shape checks: M>F rows scale makespan ~M/F; F>M rows trade bus sync for compute.");
+
+    // ---- per-board hot path: one SGD train step / one evaluation ----
+    // This is the loop every cluster worker spends its life in; its
+    // median is the train-step number tracked in BENCH_cluster.json.
+    let mut suite = Suite::new("cluster");
+    let job = mk_jobs(1, 1).pop().unwrap();
+    let mut t = Trainer::new(job.spec.clone(), FpgaDevice::selected(), job.cfg.clone())
+        .expect("bench trainer");
+    t.cfg.steps = 1;
+    let warm = t.train(&job.train_data).expect("warmup step");
+    let step_lane_ops = warm.stats.lane_ops;
+    suite.bench("train_step_15-24-10_b16", |b| {
+        b.iter_with_elements(step_lane_ops, || t.train(&job.train_data).unwrap().stats.cycles)
+    });
+    let (_, eval_stats) = t.evaluate(&job.test_data).expect("warmup eval");
+    suite.bench("evaluate_48rows_b16", |b| {
+        b.iter_with_elements(eval_stats.lane_ops, || t.evaluate(&job.test_data).unwrap().0)
+    });
+    suite.finish();
 }

@@ -4,14 +4,62 @@
 //! cycle-accurate simulator's measured per-op cycles, plus the
 //! simulator's own wall-clock speed (simulated cycles per second).
 
+use mfnn::assembler::program::{BufKind, LaneOp, Program, Step, View, Wave};
 use mfnn::bench::Suite;
 use mfnn::fixed::FixedSpec;
-use mfnn::hw::mvm::Mvm;
 use mfnn::hw::actpro::ActPro;
-use mfnn::isa::MvmOp;
+use mfnn::hw::mvm::Mvm;
+use mfnn::hw::{ExecPlan, FastSim, FpgaDevice};
+use mfnn::isa::{MvmOp, Opcode};
 use mfnn::nn::lut::{ActKind, ActLut, AddrMode};
 use mfnn::perf::group::{OpClass, PerfModel};
 use mfnn::report::{f, Table};
+use mfnn::util::Rng;
+
+/// A Matrix-Machine-sized workload: `lanes` dot products of `len`-lane
+/// strided operands feeding an activation over the results (fusable),
+/// followed by a wide elementwise wave — the shape of one MLP layer's
+/// forward pass.
+fn layer_program(lanes: usize, len: usize) -> (Program, usize, Vec<i16>) {
+    let s = FixedSpec::PAPER;
+    let mut p = Program::new("layer", s);
+    let x = p.buffer("x", lanes, len, BufKind::Input);
+    let w = p.buffer("w", len, lanes, BufKind::Weight);
+    let z = p.buffer("z", lanes, 1, BufKind::Temp);
+    let o = p.buffer("o", lanes, len, BufKind::Output);
+    let lut = p.lut(ActLut::build(ActKind::Relu, false, s, AddrMode::Clamp, 7));
+    let dots: Vec<LaneOp> = (0..lanes)
+        .map(|i| LaneOp {
+            a: View::contiguous(x, i * len, len),
+            b: Some(View { buf: w, offset: i, len, stride: lanes }),
+            out: View::contiguous(z, i, 1),
+        })
+        .collect();
+    p.steps.push(Step::Wave(Wave { op: Opcode::VectorDotProduct, vec_len: len, lut: None, lanes: dots }));
+    p.steps.push(Step::LoadLut(lut));
+    p.steps.push(Step::Wave(Wave {
+        op: Opcode::ActivationFunction,
+        vec_len: lanes,
+        lut: Some(lut),
+        lanes: vec![LaneOp { a: View::all(z, lanes), b: None, out: View::all(z, lanes) }],
+    }));
+    let mults: Vec<LaneOp> = (0..lanes)
+        .map(|i| LaneOp {
+            a: View::contiguous(x, i * len, len),
+            b: Some(View::contiguous(x, ((i + 1) % lanes) * len, len)),
+            out: View::contiguous(o, i * len, len),
+        })
+        .collect();
+    p.steps.push(Step::Wave(Wave {
+        op: Opcode::ElementMultiplication,
+        vec_len: len,
+        lut: None,
+        lanes: mults,
+    }));
+    let mut r = Rng::new(4242);
+    let data: Vec<i16> = (0..lanes * len).map(|_| r.gen_range_i64(-4000, 4000) as i16).collect();
+    (p, x, data)
+}
 
 fn main() {
     let m = PerfModel::paper();
@@ -96,6 +144,43 @@ fn main() {
         a.load_input(&vec![64; 1024]);
         b.iter_with_elements(518, || a.run(1024))
     });
+
+    // ---- compiled ExecPlan hot path vs the sequential reference ----
+    // The pre-plan training loop executed waves through the sequential
+    // FastSim interpreter (re-resolving views and re-boxing cycle
+    // closures per step); the plan pre-resolves, fuses dot→act, and runs
+    // independent lanes across the worker pool. Same numerics — the
+    // median ratio of these two benchmarks is the headline speedup
+    // tracked in BENCH_group_perf.json.
+    let (lanes, len) = if suite.is_quick() { (128, 64) } else { (512, 256) };
+    let (p, x, data) = layer_program(lanes, len);
+    p.check().expect("bench program must validate");
+    let lane_ops = p.total_lane_ops();
+    let tag = format!("{lanes}x{len}");
+    suite.bench(&format!("ref_fastsim_layer_{tag}"), |b| {
+        let mut sim = FastSim::new(&p);
+        sim.set_buffer(x, &data);
+        let waves: Vec<&Wave> = p.waves().collect();
+        b.iter_with_elements(lane_ops, || {
+            for &w in &waves {
+                sim.exec_wave(&p, w);
+            }
+        })
+    });
+    let device = FpgaDevice::selected();
+    let plan = ExecPlan::new(&p, &device);
+    eprintln!(
+        "  (plan: {} fused, {} parallel waves, pool={} threads)",
+        plan.fused_waves(),
+        plan.parallel_waves(),
+        plan.pool_threads()
+    );
+    suite.bench(&format!("plan_layer_{tag}"), |b| {
+        let mut st = plan.state();
+        plan.write_buffer(&mut st, x, &data);
+        b.iter_with_elements(lane_ops, || plan.execute(&mut st).cycles)
+    });
+
     let t = suite.finish();
     let _ = t;
     println!("(throughput column = simulated cycles per host second)");

@@ -172,8 +172,70 @@ impl Suite {
         &self.results
     }
 
-    /// Print the summary table; returns it for further use.
+    /// Directory `BENCH_<suite>.json` files are written to: the repo
+    /// root (one level above the crate), overridable with
+    /// `MFNN_BENCH_DIR`.
+    pub fn json_dir() -> std::path::PathBuf {
+        if let Ok(d) = std::env::var("MFNN_BENCH_DIR") {
+            return std::path::PathBuf::from(d);
+        }
+        // The baked-in path only exists on the build machine; relocated
+        // binaries fall back to the working directory.
+        let baked = std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/.."));
+        if baked.is_dir() {
+            baked
+        } else {
+            std::path::PathBuf::from(".")
+        }
+    }
+
+    /// Serialise the collected stats as JSON (median/mean/p95/min ns and
+    /// element throughput per benchmark) so the perf trajectory can be
+    /// tracked across PRs.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"suite\": {},\n", json_str(&self.name)));
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str("  \"benchmarks\": [\n");
+        for (i, b) in self.results.iter().enumerate() {
+            let tp = b
+                .throughput()
+                .map(|t| format!("{t:.3}"))
+                .unwrap_or_else(|| "null".into());
+            s.push_str(&format!(
+                "    {{\"name\": {}, \"samples\": {}, \"iters_per_sample\": {}, \
+                 \"median_ns\": {:.3}, \"mean_ns\": {:.3}, \"p95_ns\": {:.3}, \
+                 \"min_ns\": {:.3}, \"elements\": {}, \"throughput_per_sec\": {}}}{}\n",
+                json_str(&b.name),
+                b.samples,
+                b.iters_per_sample,
+                b.median_ns,
+                b.mean_ns,
+                b.p95_ns,
+                b.min_ns,
+                b.elements,
+                tp,
+                if i + 1 == self.results.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Print the summary table and write `BENCH_<suite>.json` into
+    /// [`Suite::json_dir`]; returns the table for further use.
     pub fn finish(&self) -> Table {
+        let path = Suite::json_dir().join(format!("BENCH_{}.json", self.name));
+        match std::fs::write(&path, self.to_json()) {
+            Ok(()) => eprintln!("  wrote {}", path.display()),
+            Err(e) => eprintln!("  warning: could not write {}: {e}", path.display()),
+        }
+        self.finish_table()
+    }
+
+    /// Print the summary table only (no JSON side effect).
+    pub fn finish_table(&self) -> Table {
         let mut t = Table::new(vec!["benchmark", "median", "mean", "p95", "min", "throughput"])
             .with_title(format!("bench: {}", self.name))
             .numeric();
@@ -190,6 +252,25 @@ impl Suite {
         println!("{}", t.render());
         t
     }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 /// Human-format a nanosecond duration.
@@ -225,6 +306,7 @@ mod tests {
     #[test]
     fn bencher_collects_samples() {
         std::env::set_var("MFNN_BENCH_QUICK", "1");
+        std::env::set_var("MFNN_BENCH_DIR", std::env::temp_dir());
         let mut suite = Suite::new("selftest");
         let s = suite.bench("noop_sum", |b| {
             let xs: Vec<u64> = (0..64).collect();
@@ -235,6 +317,18 @@ mod tests {
         assert!(s.throughput().unwrap() > 0.0);
         let t = suite.finish();
         assert_eq!(t.len(), 1);
+        // the JSON sidecar landed next to the suite and parses the
+        // fields the CI trend tooling reads
+        let json = std::fs::read_to_string(Suite::json_dir().join("BENCH_selftest.json")).unwrap();
+        assert!(json.contains("\"suite\": \"selftest\""), "{json}");
+        assert!(json.contains("\"name\": \"noop_sum\""), "{json}");
+        assert!(json.contains("\"median_ns\""), "{json}");
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_str("tab\there"), "\"tab\\there\"");
     }
 
     #[test]

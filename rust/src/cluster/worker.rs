@@ -4,6 +4,13 @@
 //! channel (`sync_channel(1)`) — a busy board exerts backpressure on the
 //! leader exactly like a full board-side command queue would. Each worker
 //! owns the [`Trainer`]s of the jobs placed on its board.
+//!
+//! Since the perf pass every trainer's machines run on compiled
+//! [`crate::hw::ExecPlan`]s: the per-job train/forward programs are
+//! compiled once at `Cmd::NewTrainer` time, and every `TrainChunk` /
+//! `Evaluate` step executes the arena-backed plan (fused waves, pooled
+//! lanes) instead of re-interpreting the program, so cluster training
+//! inherits the single-board speedup without protocol changes.
 
 use super::metrics::Metrics;
 use crate::hw::{FpgaDevice, RunStats};

@@ -1,10 +1,13 @@
 //! Fast functional simulator: bit-exact Matrix Machine numerics without
-//! per-flip-flop stepping. The hot path of training/cluster runs.
+//! per-flip-flop stepping.
 //!
-//! Cycle charging is done by [`super::machine::MatrixMachine`]; this module
-//! is pure data movement + [`crate::fixed::FixedSpec`] arithmetic, shared
-//! with the structural simulator (equivalence asserted in
-//! `rust/tests/sim_equivalence.rs`).
+//! Since the perf pass (DESIGN.md §Perf) the training/cluster hot path
+//! runs on the compiled [`super::plan::ExecPlan`]; this module remains
+//! the **sequential reference executor** — pure data movement +
+//! [`crate::fixed::FixedSpec`] arithmetic with no plan-time analysis —
+//! against which the plan (and the structural simulator) are asserted
+//! equivalent in `rust/tests/sim_equivalence.rs` and the `hw::plan`
+//! unit tests.
 
 use crate::assembler::program::{Program, View, Wave};
 use crate::fixed::FixedSpec;

@@ -4,30 +4,31 @@
 //!
 //! Two execution paths share the same numerics:
 //!
-//! * [`MatrixMachine::run`] — the fast path: functional execution via
-//!   [`super::fast::FastSim`] with cycle charging from the structural
-//!   per-batch model ([`crate::perf::group`]) + the DDR/DMA model + ring
-//!   distribution overhead. Groups execute batches in parallel; a wave's
-//!   cost is the per-group batch schedule's makespan.
+//! * [`MatrixMachine::run`] — the fast path: a compiled, arena-backed
+//!   [`super::plan::ExecPlan`] built once at machine construction.
+//!   Views are pre-resolved, per-wave cycle charges are precomputed from
+//!   the structural per-batch model ([`crate::perf::group`]) + the
+//!   DDR/DMA model + ring distribution overhead, adjacent dot→activation
+//!   waves are fused, and independent lanes execute across a persistent
+//!   worker pool. Groups execute batches in parallel; a wave's cost is
+//!   the per-group batch schedule's makespan.
 //! * [`MatrixMachine::run_verified`] — the checked path: every wave is
 //!   additionally lowered to microcode ([`crate::assembler::microcode_gen`])
-//!   and executed on the structural [`MvmGroup`]/[`ActproGroup`]
-//!   interpreters; outputs are asserted bit-identical to the fast path.
-//!   Used by integration tests and available from the CLI (`--verify`).
+//!   and executed on the structural [`super::group::MvmGroup`] /
+//!   [`super::group::ActproGroup`] interpreters; outputs are asserted
+//!   bit-identical to the fast path. Used by integration tests and
+//!   available from the CLI (`--verify`).
 //!
 //! Ring overhead model: each batch's microcode + operands are distributed
 //! over the circular FIFO (Fig 4); we charge the worst-case hop count
 //! (`groups` stations) once per batch wavefront, which is what the paper's
 //! "the FIFO reduces the propagation delay" buys relative to a flat bus.
 
-use super::fast::FastSim;
 use super::fpga::FpgaDevice;
-use super::group::{ActproGroup, GroupIo, MvmGroup};
+use super::plan::{ExecPlan, PlanState};
 use super::Cycle;
-use crate::assembler::microcode_gen;
-use crate::assembler::program::{Program, ProgramError, Step, Wave};
-use crate::isa::Opcode;
-use crate::perf::group::{structural_actpro_batch_cycles, structural_mvm_batch_cycles};
+use crate::assembler::program::{Program, ProgramError};
+use std::sync::Arc;
 use thiserror::Error;
 
 /// Machine execution errors.
@@ -92,57 +93,35 @@ impl RunStats {
     }
 }
 
-/// One simulated Matrix Machine.
+/// One simulated Matrix Machine: a shared compiled plan + this machine's
+/// private run state (lane arena, LUT residency).
 #[derive(Debug, Clone)]
 pub struct MatrixMachine {
     /// The board this machine is generated for.
     pub device: FpgaDevice,
-    sim: FastSim,
+    plan: Arc<ExecPlan>,
+    state: PlanState,
     program_name: String,
-    /// LUT → ACTPRO-group residency (perf pass, EXPERIMENTS.md §Perf):
-    /// when the program's distinct tables fit the board's ACTPRO groups,
-    /// the global controller partitions the groups among them at first
-    /// load and never re-streams a table. `lut_groups[lut]` = groups
-    /// dedicated to that table; `lut_resident[lut]` = already streamed.
-    lut_groups: Vec<u64>,
-    lut_resident: Vec<bool>,
 }
 
 impl MatrixMachine {
-    /// Build a machine for `device` loaded with `program` (validates it).
+    /// Build a machine for `device` loaded with `program` (validates it,
+    /// then compiles the execution plan once).
     pub fn new(device: FpgaDevice, program: &Program) -> Result<MatrixMachine, MachineError> {
         program.check()?;
-        let n_luts = program.luts.len();
-        let groups = device.actpro_groups.max(1) as u64;
-        let lut_groups = if n_luts == 0 {
-            Vec::new()
-        } else if n_luts as u64 <= groups {
-            // Static partition: spread groups over tables.
-            let base = groups / n_luts as u64;
-            let extra = groups % n_luts as u64;
-            (0..n_luts as u64).map(|i| base + u64::from(i < extra)).collect()
-        } else {
-            // More tables than groups: every LoadLut re-streams to all
-            // groups (pre-optimisation behaviour).
-            vec![groups; n_luts]
-        };
-        Ok(MatrixMachine {
-            device,
-            sim: FastSim::new(program),
-            program_name: program.name.clone(),
-            lut_groups,
-            lut_resident: vec![false; n_luts],
-        })
-    }
-
-    /// Are the program's tables statically resident (no re-streaming)?
-    fn luts_static(&self) -> bool {
-        (self.lut_resident.len() as u64) <= self.device.actpro_groups.max(1) as u64
+        let plan = Arc::new(ExecPlan::new(program, &device));
+        let state = plan.state();
+        Ok(MatrixMachine { device, plan, state, program_name: program.name.clone() })
     }
 
     /// Program name this machine was built for.
     pub fn program_name(&self) -> &str {
         &self.program_name
+    }
+
+    /// The compiled execution plan (diagnostics/benches).
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
     }
 
     /// Bind data to a named buffer.
@@ -155,11 +134,11 @@ impl MatrixMachine {
         let id = program
             .buffer_named(name)
             .ok_or_else(|| MachineError::UnknownBuffer(name.to_string()))?;
-        let want = program.buffers[id].len();
+        let want = self.plan.buffer_len(id);
         if want != data.len() {
             return Err(MachineError::LengthMismatch(name.to_string(), want, data.len()));
         }
-        self.sim.set_buffer(id, data);
+        self.plan.write_buffer(&mut self.state, id, data);
         Ok(())
     }
 
@@ -168,164 +147,51 @@ impl MatrixMachine {
         let id = program
             .buffer_named(name)
             .ok_or_else(|| MachineError::UnknownBuffer(name.to_string()))?;
-        Ok(self.sim.buffer(id).to_vec())
+        Ok(self.plan.read_buffer(&self.state, id).to_vec())
     }
 
     /// Read a buffer by id.
     pub fn read_id(&self, id: usize) -> &[i16] {
-        self.sim.buffer(id)
+        self.plan.read_buffer(&self.state, id)
     }
 
-    /// Cycle cost of one wave on this machine's group allocation.
-    fn wave_cycles(&self, wave: &Wave) -> (Cycle, Cycle) {
-        let (groups, batch_cost): (u64, Box<dyn Fn(usize) -> u64>) =
-            if wave.op == Opcode::ActivationFunction {
-                // Under static residency an ACT wave runs only on the
-                // groups holding its table.
-                let g = if self.luts_static() {
-                    self.lut_groups[wave.lut.expect("checked: ACT wave has LUT")]
-                } else {
-                    self.device.actpro_groups.max(1) as u64
-                };
-                (
-                    g.max(1),
-                    Box::new(move |procs| structural_actpro_batch_cycles(wave.vec_len, procs)),
-                )
-            } else {
-                let op = wave.op;
-                let len = wave.vec_len;
-                (
-                    self.device.mvm_groups.max(1) as u64,
-                    Box::new(move |procs| structural_mvm_batch_cycles(op, len, procs)),
-                )
-            };
-        let lanes = wave.lanes.len() as u64;
-        let procs_total = groups * super::PROCS_PER_GROUP as u64;
-        // Full wavefronts of `procs_total` lanes, then a remainder.
-        let full_waves = lanes / procs_total;
-        let rem_lanes = lanes % procs_total;
-        let mut compute = full_waves * batch_cost(super::PROCS_PER_GROUP);
-        if rem_lanes > 0 {
-            // The remainder occupies ceil(rem/groups) procs in the slowest
-            // group.
-            let procs = (rem_lanes as usize).div_ceil(groups as usize).min(super::PROCS_PER_GROUP);
-            compute += batch_cost(procs);
-        }
-        // Ring overhead: one worst-case traversal per batch wavefront
-        // (stations = groups + global controller).
-        let wavefronts = full_waves + (rem_lanes > 0) as u64;
-        let ring = wavefronts * (groups + 1);
-        (compute, ring)
-    }
-
-    /// Execute the program on the fast path.
+    /// Execute the program on the fast (compiled-plan) path.
+    ///
+    /// The schedule was compiled into the plan at construction; `program`
+    /// must be the program this machine was built for.
     pub fn run(&mut self, program: &Program) -> Result<RunStats, MachineError> {
-        self.run_inner(program, false)
+        debug_assert_eq!(
+            program.name, self.program_name,
+            "machine was compiled for a different program"
+        );
+        Ok(self.plan.execute(&mut self.state))
     }
 
     /// Execute with per-wave structural verification (slow; tests/CLI).
+    ///
+    /// Verification replays an **unfused** plan — one wave per source
+    /// step — so each wave can be checked against the microcode
+    /// interpreters individually; its cycle charges are identical to the
+    /// fused fast path (asserted by `sim_equivalence`).
     pub fn run_verified(&mut self, program: &Program) -> Result<RunStats, MachineError> {
-        self.run_inner(program, true)
-    }
-
-    fn run_inner(&mut self, program: &Program, verify: bool) -> Result<RunStats, MachineError> {
-        let mut st = RunStats::default();
-        for (si, step) in program.steps.iter().enumerate() {
-            match step {
-                Step::LoadDram(b) | Step::StoreDram(b) => {
-                    let bytes = program.buffers[*b].len() as u64 * 2;
-                    let c = self.device.dma_cycles(bytes);
-                    st.dma_cycles += c;
-                    st.cycles += c;
-                    st.dma_bytes += bytes;
-                }
-                Step::LoadLut(l) => {
-                    // Streamed in parallel to the groups that will hold the
-                    // table; within a group the 4 procs share the input
-                    // port pair. Under static residency the stream happens
-                    // once per machine lifetime (perf pass, §Perf).
-                    if !self.luts_static() || !self.lut_resident[*l] {
-                        let table_len = program.luts[*l].table().len() as u64;
-                        let c = (table_len / 2 + 1) * super::PROCS_PER_GROUP as u64;
-                        st.lut_cycles += c;
-                        st.cycles += c;
-                        self.lut_resident[*l] = true;
-                    }
-                }
-                Step::Wave(w) => {
-                    if verify {
-                        self.verify_wave(program, si, w)?;
-                    }
-                    self.sim.exec_wave(program, w);
-                    let (compute, ring) = self.wave_cycles(w);
-                    st.compute_cycles += compute;
-                    st.ring_cycles += ring;
-                    st.cycles += compute + ring;
-                    st.waves += 1;
-                    st.lane_ops += (w.lanes.len() * w.vec_len) as u64;
-                }
-            }
-        }
-        Ok(st)
-    }
-
-    /// Execute one wave on the structural group interpreters and compare
-    /// against what the fast path will produce.
-    fn verify_wave(&self, program: &Program, si: usize, w: &Wave) -> Result<(), MachineError> {
-        // Compute expected outputs functionally on a scratch copy.
-        let mut scratch = self.sim.clone();
-        scratch.exec_wave(program, w);
-
-        let procs = super::PROCS_PER_GROUP;
-        for chunk in w.lanes.chunks(procs) {
-            let mut io = GroupIo::default();
-            for lane in chunk {
-                io.feed(&self.sim.gather(&lane.a));
-                if w.op != Opcode::ActivationFunction && w.op != Opcode::VectorSummation {
-                    if let Some(b) = &lane.b {
-                        io.feed(&self.sim.gather(b));
-                    }
-                }
-            }
-            let out_per_lane: usize;
-            match w.op {
-                Opcode::ActivationFunction => {
-                    let lut = &program.luts[w.lut.expect("checked")];
-                    let words = microcode_gen::actpro_batch(w.vec_len, chunk.len())
-                        .expect("checked wave dims");
-                    let mut g = ActproGroup::new(lut.clone());
-                    g.execute(&words, &mut io);
-                    out_per_lane = w.vec_len + (w.vec_len & 1);
-                }
-                op => {
-                    let words = microcode_gen::mvm_batch(op, w.vec_len, chunk.len())
-                        .expect("checked wave dims");
-                    let mut g = MvmGroup::new(program.fixed);
-                    g.execute(&words, &mut io);
-                    out_per_lane = match op {
-                        Opcode::VectorDotProduct | Opcode::VectorSummation => 1,
-                        _ => w.vec_len,
-                    };
-                }
-            }
-            for (li, lane) in chunk.iter().enumerate() {
-                let got = &io.output[li * out_per_lane..li * out_per_lane + lane.out.len];
-                let want = scratch.gather(&lane.out);
-                if got != want.as_slice() {
-                    return Err(MachineError::VerifyMismatch(si));
-                }
-            }
-        }
-        Ok(())
+        debug_assert_eq!(
+            program.name, self.program_name,
+            "machine was compiled for a different program"
+        );
+        let plan = ExecPlan::new_unfused(program, &self.device);
+        plan.execute_verified(&mut self.state, program)
+            .map_err(MachineError::VerifyMismatch)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::assembler::program::{BufKind, LaneOp, View};
+    use crate::assembler::program::{BufKind, LaneOp, Step, View, Wave};
     use crate::fixed::FixedSpec;
+    use crate::isa::Opcode;
     use crate::nn::lut::{ActKind, ActLut, AddrMode};
+    use crate::perf::group::structural_mvm_batch_cycles;
     use crate::util::Rng;
 
     const S: FixedSpec = FixedSpec::PAPER;

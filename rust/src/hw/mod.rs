@@ -52,12 +52,14 @@ pub mod fpga;
 pub mod group;
 pub mod machine;
 pub mod mvm;
+pub mod plan;
 pub mod trace;
 pub mod trace_figures;
 
 pub use fast::FastSim;
 pub use fpga::FpgaDevice;
 pub use machine::{MatrixMachine, RunStats};
+pub use plan::{ExecPlan, PlanState};
 
 /// Simulated clock cycle count.
 pub type Cycle = u64;

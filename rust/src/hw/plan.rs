@@ -1,0 +1,1348 @@
+//! Compiled execution plans: the Matrix Machine hot path (perf pass,
+//! DESIGN.md §Perf).
+//!
+//! [`ExecPlan`] is built **once** per [`Program`] and amortises everything
+//! the old per-step interpreter recomputed on every training step:
+//!
+//! * **Arena layout** — all declared buffers are flattened into one
+//!   contiguous lane arena; every strided [`View`] is pre-resolved to an
+//!   [`ArenaView`] (absolute base + stride), with contiguous fast paths
+//!   detected at plan time, not per step.
+//! * **Cycle tables** — each wave's DMA/compute/ring cycle charges are
+//!   precomputed into the plan (the old `MatrixMachine::wave_cycles`
+//!   allocated a `Box<dyn Fn>` per wave per run; the plan allocates
+//!   nothing on the hot path).
+//! * **Dot→activation fusion** — an `ACTIVATION_FUNCTION` wave that
+//!   consumes exactly the outputs of the immediately preceding
+//!   `VECTOR_DOT_PRODUCT` wave is folded into it: the LUT is applied to
+//!   each dot result while it is still in a register, saving a full pass
+//!   over the lane arena. Cycle charges of **both** waves are kept, so
+//!   the cycle model is unchanged (asserted by `sim_equivalence`).
+//! * **Parallel wave execution** — lanes of a wave whose operand/output
+//!   address sets are proven disjoint at plan time are executed across a
+//!   persistent worker pool sized to `min(host cores, processor groups)`,
+//!   mirroring how the hardware spreads a wave over its MVM/ACTPRO
+//!   groups. Disjointness is decided conservatively (interval overlap),
+//!   so the parallel path is bit-exact with the sequential one.
+//!
+//! The structural simulator remains the equivalence oracle:
+//! [`ExecPlan::execute_verified`] replays every wave on the microcode
+//! interpreters ([`super::group`]) and compares lane-for-lane.
+
+use super::fpga::FpgaDevice;
+use super::group::{ActproGroup, GroupIo, MvmGroup};
+use super::machine::RunStats;
+use super::{Cycle, PROCS_PER_GROUP};
+use crate::assembler::microcode_gen;
+use crate::assembler::program::{Program, Step, View, Wave};
+use crate::fixed::FixedSpec;
+use crate::isa::Opcode;
+use crate::nn::lut::ActLut;
+use crate::perf::group::{structural_actpro_batch_cycles, structural_mvm_batch_cycles};
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Minimum lane-ops (`lanes × vec_len`) before a wave is worth spreading
+/// over the worker pool; below this the dispatch overhead dominates.
+pub const PAR_MIN_LANE_OPS: usize = 8192;
+
+/// Minimum independent lanes before parallel dispatch.
+const PAR_MIN_LANES: usize = 8;
+
+/// Pairwise independence checking is O(lanes²); above this lane count
+/// only the cheap strict check is attempted.
+const PAIRWISE_MAX_LANES: usize = 2048;
+
+/// Address-set budget for fusion analysis (one-time, at plan build).
+const FUSE_MAX_ADDRS: usize = 1 << 20;
+
+/// A [`View`] resolved against the plan's lane arena: lanes
+/// `base + i*stride`, `i < len`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaView {
+    /// First arena lane.
+    pub base: usize,
+    /// Number of lanes.
+    pub len: usize,
+    /// Lane stride (1 = contiguous).
+    pub stride: usize,
+}
+
+impl ArenaView {
+    /// Sentinel for "no operand" (unary ops).
+    const EMPTY: ArenaView = ArenaView { base: 0, len: 0, stride: 0 };
+
+    /// First arena address touched.
+    #[inline]
+    fn first(&self) -> usize {
+        self.base
+    }
+
+    /// Last arena address touched.
+    #[inline]
+    fn last(&self) -> usize {
+        self.base + (self.len.max(1) - 1) * self.stride
+    }
+
+    /// Every arena address, in lane order.
+    fn addrs(self) -> impl Iterator<Item = usize> {
+        (0..self.len).map(move |i| self.base + i * self.stride)
+    }
+
+    /// Gather the view's lanes out of the arena.
+    fn gather(&self, arena: &[i16]) -> Vec<i16> {
+        (0..self.len).map(|i| arena[self.base + i * self.stride]).collect()
+    }
+}
+
+/// Conservative overlap test on the views' bounding address intervals.
+#[inline]
+fn overlaps(x: &ArenaView, y: &ArenaView) -> bool {
+    x.len > 0 && y.len > 0 && x.first() <= y.last() && y.first() <= x.last()
+}
+
+/// One pre-resolved lane of a wave.
+#[derive(Debug, Clone, Copy)]
+struct PlanLane {
+    a: ArenaView,
+    /// `EMPTY` (len 0) for unary ops.
+    b: ArenaView,
+    out: ArenaView,
+    /// Fused dot→act destination address, or `usize::MAX` when unfused.
+    fused_out: usize,
+    /// Elementwise/ACT lanes whose output aliases an input in a
+    /// non-identical way must stage results before scatter (preserves the
+    /// read-all-then-write semantics of the pre-plan simulator).
+    staged: bool,
+}
+
+/// One compiled wave: resolved lanes + precomputed cycle charges.
+#[derive(Debug, Clone)]
+struct PlanWave {
+    op: Opcode,
+    vec_len: usize,
+    /// LUT of an `ACTIVATION_FUNCTION` wave.
+    lut: Option<usize>,
+    /// LUT of a fused dot→act wave.
+    fused_lut: Option<usize>,
+    lanes: Vec<PlanLane>,
+    compute_cycles: Cycle,
+    ring_cycles: Cycle,
+    /// Waves accounted for (2 when a dot→act pair was fused).
+    waves: u64,
+    lane_ops: u64,
+    /// Lanes proven independent — eligible for the worker pool.
+    parallel: bool,
+    /// Index of the originating step in the source [`Program`].
+    src_step: usize,
+}
+
+/// One compiled schedule step.
+#[derive(Debug, Clone)]
+enum PlanStep {
+    /// DDR DMA with the precomputed cycle/byte charge.
+    Dma { cycles: Cycle, bytes: u64 },
+    /// LUT stream; charged per the residency rules at run time.
+    LoadLut { lut: usize, cycles: Cycle },
+    /// A compiled wave.
+    Wave(PlanWave),
+}
+
+/// Mutable run state of a plan: the lane arena + LUT residency.
+///
+/// Cheap to clone; several states may execute against one shared plan.
+#[derive(Debug, Clone)]
+pub struct PlanState {
+    arena: Vec<i16>,
+    lut_resident: Vec<bool>,
+}
+
+/// A compiled, arena-backed execution plan for one [`Program`] on one
+/// [`FpgaDevice`]. Built once; executed many times against a
+/// [`PlanState`].
+pub struct ExecPlan {
+    name: String,
+    fixed: FixedSpec,
+    /// `(arena base, lane count)` per program buffer.
+    bufs: Vec<(usize, usize)>,
+    arena_init: Vec<i16>,
+    luts: Vec<ActLut>,
+    /// Tables fit the ACTPRO groups → each streams at most once.
+    lut_static: bool,
+    steps: Vec<PlanStep>,
+    /// This plan's parallelism cap including the calling thread
+    /// (`min(host cores, processor groups)`); the threads themselves
+    /// live in the process-wide [`lane_pool`].
+    pool_threads: usize,
+    fused_waves: usize,
+    parallel_waves: usize,
+}
+
+impl fmt::Debug for ExecPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ExecPlan")
+            .field("name", &self.name)
+            .field("steps", &self.steps.len())
+            .field("arena_lanes", &self.arena_init.len())
+            .field("fused_waves", &self.fused_waves)
+            .field("parallel_waves", &self.parallel_waves)
+            .field("pool_threads", &self.pool_threads)
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------- building
+
+/// Resolve a program view against the arena layout.
+fn resolve(bufs: &[(usize, usize)], v: &View) -> ArenaView {
+    ArenaView { base: bufs[v.buf].0 + v.offset, len: v.len, stride: v.stride }
+}
+
+/// Cycle cost of one wave — the exact arithmetic of the pre-plan
+/// `MatrixMachine::wave_cycles`, evaluated once at plan time.
+fn wave_cycles(
+    device: &FpgaDevice,
+    lut_static: bool,
+    lut_groups: &[u64],
+    w: &Wave,
+) -> (Cycle, Cycle) {
+    let act = w.op == Opcode::ActivationFunction;
+    let groups_raw: u64 = if act {
+        if lut_static {
+            lut_groups[w.lut.expect("checked: ACT wave has LUT")]
+        } else {
+            device.actpro_groups.max(1) as u64
+        }
+    } else {
+        device.mvm_groups.max(1) as u64
+    };
+    let groups = groups_raw.max(1);
+    let batch_cost = |procs: usize| -> u64 {
+        if act {
+            structural_actpro_batch_cycles(w.vec_len, procs)
+        } else {
+            structural_mvm_batch_cycles(w.op, w.vec_len, procs)
+        }
+    };
+    let lanes = w.lanes.len() as u64;
+    let procs_total = groups * PROCS_PER_GROUP as u64;
+    let full_waves = lanes / procs_total;
+    let rem_lanes = lanes % procs_total;
+    let mut compute = full_waves * batch_cost(PROCS_PER_GROUP);
+    if rem_lanes > 0 {
+        let procs = (rem_lanes as usize).div_ceil(groups as usize).min(PROCS_PER_GROUP);
+        compute += batch_cost(procs);
+    }
+    let wavefronts = full_waves + (rem_lanes > 0) as u64;
+    let ring = wavefronts * (groups + 1);
+    (compute, ring)
+}
+
+/// Does this lane need read-all-then-write staging to match the
+/// sequential simulator bit-for-bit?
+fn needs_staging(op: Opcode, a: &ArenaView, b: &ArenaView, out: &ArenaView) -> bool {
+    match op {
+        Opcode::VectorAddition
+        | Opcode::VectorSubtraction
+        | Opcode::ElementMultiplication
+        | Opcode::ActivationFunction => {
+            // Identical views (pure in-place) or disjoint intervals are
+            // safe elementwise; anything else stages.
+            let ok_a = out == a || !overlaps(out, a);
+            let ok_b = b.len == 0 || out == b || !overlaps(out, b);
+            !(ok_a && ok_b)
+        }
+        // Reductions read everything before their single write.
+        _ => false,
+    }
+}
+
+/// Sorted-interval sweep: does any interval of `a` overlap one of `b`?
+/// Both slices sorted by start.
+fn any_overlap(a: &[(usize, usize, usize)], b: &[(usize, usize, usize)]) -> bool {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        let (a_s, a_e, _) = a[i];
+        let (b_s, b_e, _) = b[j];
+        if a_s <= b_e && b_s <= a_e {
+            return true;
+        }
+        if a_e < b_e {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    false
+}
+
+/// Prove (conservatively) that the lanes of a wave are mutually
+/// independent: no lane's outputs touch another lane's inputs or outputs.
+fn lanes_independent(lanes: &[PlanLane]) -> bool {
+    let n = lanes.len();
+    if n < 2 {
+        return false;
+    }
+    // Output intervals (fused single-lane writes included, except the
+    // pure in-place case where the fused write lands on the lane's own
+    // dot output).
+    let mut outs: Vec<(usize, usize, usize)> = Vec::with_capacity(2 * n);
+    for (i, l) in lanes.iter().enumerate() {
+        outs.push((l.out.first(), l.out.last(), i));
+        if l.fused_out != usize::MAX && l.fused_out != l.out.base {
+            outs.push((l.fused_out, l.fused_out, i));
+        }
+    }
+    outs.sort_unstable();
+    // Cross-lane output overlap kills parallelism outright (and would
+    // make results order-dependent even sequentially — keep order).
+    let mut max_end = outs[0].1;
+    for w in outs.windows(2) {
+        if w[1].0 <= max_end {
+            return false;
+        }
+        max_end = max_end.max(w[1].1);
+    }
+    // Strict check: outputs disjoint from every input interval.
+    let mut ins: Vec<(usize, usize, usize)> = Vec::with_capacity(2 * n);
+    for (i, l) in lanes.iter().enumerate() {
+        ins.push((l.a.first(), l.a.last(), i));
+        if l.b.len > 0 {
+            ins.push((l.b.first(), l.b.last(), i));
+        }
+    }
+    ins.sort_unstable();
+    if !any_overlap(&outs, &ins) {
+        return true;
+    }
+    // In-place waves (out == own input) fail the strict check; fall back
+    // to pairwise with the own-lane exemption.
+    if n > PAIRWISE_MAX_LANES {
+        return false;
+    }
+    for (i, li) in lanes.iter().enumerate() {
+        let mut own: [(usize, usize); 2] = [(0, 0); 2];
+        let mut n_own = 0usize;
+        if li.out.len > 0 {
+            own[n_own] = (li.out.first(), li.out.last());
+            n_own += 1;
+        }
+        if li.fused_out != usize::MAX {
+            own[n_own] = (li.fused_out, li.fused_out);
+            n_own += 1;
+        }
+        for (j, lj) in lanes.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            for &(s, e) in &own[..n_own] {
+                if s <= lj.a.last() && lj.a.first() <= e {
+                    return false;
+                }
+                if lj.b.len > 0 && s <= lj.b.last() && lj.b.first() <= e {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+/// Try to fuse an adjacent dot→activation pair. Returns the fused act
+/// destination address per dot lane (`usize::MAX` = dot lane's output is
+/// not consumed by the act wave) when the act wave reads **exactly** the
+/// dot outputs and no write of either wave can corrupt a later read.
+fn try_fuse(bufs: &[(usize, usize)], dot: &Wave, act: &Wave) -> Option<Vec<usize>> {
+    if dot.op != Opcode::VectorDotProduct || act.op != Opcode::ActivationFunction {
+        return None;
+    }
+    let dot_addrs = dot.lanes.len() * (2 * dot.vec_len + 1);
+    let act_addrs = act.lanes.len() * 2 * act.vec_len;
+    if dot_addrs + act_addrs > FUSE_MAX_ADDRS {
+        return None;
+    }
+    // Dot outputs: single lanes, all distinct.
+    let mut out_lane: HashMap<usize, usize> = HashMap::with_capacity(dot.lanes.len());
+    for (i, l) in dot.lanes.iter().enumerate() {
+        let o = resolve(bufs, &l.out);
+        if o.len != 1 || out_lane.insert(o.base, i).is_some() {
+            return None;
+        }
+    }
+    // Dot inputs; a dot chain (one lane reading another's output) cannot
+    // fuse because the act write would land before the dependent read.
+    let mut dot_in: HashSet<usize> = HashSet::with_capacity(dot_addrs);
+    for l in &dot.lanes {
+        for addr in resolve(bufs, &l.a).addrs() {
+            dot_in.insert(addr);
+        }
+        if let Some(b) = &l.b {
+            for addr in resolve(bufs, b).addrs() {
+                dot_in.insert(addr);
+            }
+        }
+    }
+    if out_lane.keys().any(|a| dot_in.contains(a)) {
+        return None;
+    }
+    // Act elements: every input must be a distinct dot output; act writes
+    // must not clobber dot inputs, other dot outputs, or other act
+    // inputs (in-place `out == in` is allowed).
+    let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(act_addrs / 2);
+    let mut act_in: HashSet<usize> = HashSet::with_capacity(act_addrs / 2);
+    for l in &act.lanes {
+        let av = resolve(bufs, &l.a);
+        let ov = resolve(bufs, &l.out);
+        if av.len != ov.len {
+            return None;
+        }
+        for (ia, oa) in av.addrs().zip(ov.addrs()) {
+            act_in.insert(ia);
+            pairs.push((ia, oa));
+        }
+    }
+    let mut fused_out = vec![usize::MAX; dot.lanes.len()];
+    let mut act_out_seen: HashSet<usize> = HashSet::with_capacity(pairs.len());
+    for &(ia, oa) in &pairs {
+        let &lane = out_lane.get(&ia)?;
+        if fused_out[lane] != usize::MAX {
+            return None; // dot output consumed twice
+        }
+        if oa != ia && (out_lane.contains_key(&oa) || act_in.contains(&oa)) {
+            return None;
+        }
+        if dot_in.contains(&oa) || !act_out_seen.insert(oa) {
+            return None;
+        }
+        fused_out[lane] = oa;
+    }
+    Some(fused_out)
+}
+
+impl ExecPlan {
+    /// Compile `program` for `device` with all optimisations on.
+    /// The program must already have passed [`Program::check`].
+    pub fn new(program: &Program, device: &FpgaDevice) -> ExecPlan {
+        ExecPlan::build(program, device, true)
+    }
+
+    /// Compile without dot→act fusion — one [`PlanWave`] per program
+    /// wave, as required by [`ExecPlan::execute_verified`].
+    pub fn new_unfused(program: &Program, device: &FpgaDevice) -> ExecPlan {
+        ExecPlan::build(program, device, false)
+    }
+
+    fn build(program: &Program, device: &FpgaDevice, fuse: bool) -> ExecPlan {
+        // Arena layout: buffers packed back to back.
+        let mut bufs = Vec::with_capacity(program.buffers.len());
+        let mut arena_len = 0usize;
+        for b in &program.buffers {
+            bufs.push((arena_len, b.len()));
+            arena_len += b.len();
+        }
+        let mut arena_init = vec![0i16; arena_len];
+        for (decl, &(base, len)) in program.buffers.iter().zip(&bufs) {
+            if let Some(d) = &decl.init {
+                assert_eq!(d.len(), len, "const init length mismatch");
+                arena_init[base..base + len].copy_from_slice(d);
+            }
+        }
+        // LUT → ACTPRO-group residency partition (identical to the
+        // pre-plan machine).
+        let n_luts = program.luts.len();
+        let agroups = device.actpro_groups.max(1) as u64;
+        let lut_static = (n_luts as u64) <= agroups;
+        let lut_groups: Vec<u64> = if n_luts == 0 {
+            Vec::new()
+        } else if lut_static {
+            let base = agroups / n_luts as u64;
+            let extra = agroups % n_luts as u64;
+            (0..n_luts as u64).map(|i| base + u64::from(i < extra)).collect()
+        } else {
+            vec![agroups; n_luts]
+        };
+        let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let groups = device.mvm_groups.max(device.actpro_groups).max(1) as usize;
+        let mut plan = ExecPlan {
+            name: program.name.clone(),
+            fixed: program.fixed,
+            bufs,
+            arena_init,
+            luts: program.luts.clone(),
+            lut_static,
+            steps: Vec::with_capacity(program.steps.len()),
+            pool_threads: host.min(groups).max(1),
+            fused_waves: 0,
+            parallel_waves: 0,
+        };
+        let lut_stream_cycles = |l: usize| -> Cycle {
+            (program.luts[l].table().len() as u64 / 2 + 1) * PROCS_PER_GROUP as u64
+        };
+        let src = &program.steps;
+        let mut i = 0usize;
+        while i < src.len() {
+            match &src[i] {
+                Step::LoadDram(b) | Step::StoreDram(b) => {
+                    let bytes = program.buffers[*b].len() as u64 * 2;
+                    plan.steps.push(PlanStep::Dma { cycles: device.dma_cycles(bytes), bytes });
+                    i += 1;
+                }
+                Step::LoadLut(l) => {
+                    plan.steps.push(PlanStep::LoadLut { lut: *l, cycles: lut_stream_cycles(*l) });
+                    i += 1;
+                }
+                Step::Wave(w) => {
+                    // Fusion lookahead: dot at i, optionally `LoadLut` of
+                    // the act wave's own table at i+1, act at i+1 / i+2.
+                    if fuse && w.op == Opcode::VectorDotProduct {
+                        let (lut_step, act_idx) = match src.get(i + 1) {
+                            Some(Step::LoadLut(l)) => (Some(*l), i + 2),
+                            _ => (None, i + 1),
+                        };
+                        if let Some(Step::Wave(act)) = src.get(act_idx) {
+                            if act.op == Opcode::ActivationFunction
+                                && lut_step.map_or(true, |l| Some(l) == act.lut)
+                            {
+                                if let Some(fused_out) = try_fuse(&plan.bufs, w, act) {
+                                    if let Some(l) = lut_step {
+                                        plan.steps.push(PlanStep::LoadLut {
+                                            lut: l,
+                                            cycles: lut_stream_cycles(l),
+                                        });
+                                    }
+                                    let (c1, r1) = wave_cycles(device, lut_static, &lut_groups, w);
+                                    let (c2, r2) =
+                                        wave_cycles(device, lut_static, &lut_groups, act);
+                                    let mut pw =
+                                        plan.compile_wave(w, i, (c1 + c2, r1 + r2), arena_len);
+                                    pw.fused_lut = act.lut;
+                                    for (lane, &fo) in pw.lanes.iter_mut().zip(&fused_out) {
+                                        lane.fused_out = fo;
+                                    }
+                                    pw.waves = 2;
+                                    pw.lane_ops += (act.lanes.len() * act.vec_len) as u64;
+                                    pw.parallel = lanes_independent(&pw.lanes);
+                                    plan.fused_waves += 1;
+                                    if pw.parallel {
+                                        plan.parallel_waves += 1;
+                                    }
+                                    plan.steps.push(PlanStep::Wave(pw));
+                                    i = act_idx + 1;
+                                    continue;
+                                }
+                            }
+                        }
+                    }
+                    let charges = wave_cycles(device, lut_static, &lut_groups, w);
+                    let pw = plan.compile_wave(w, i, charges, arena_len);
+                    if pw.parallel {
+                        plan.parallel_waves += 1;
+                    }
+                    plan.steps.push(PlanStep::Wave(pw));
+                    i += 1;
+                }
+            }
+        }
+        plan
+    }
+
+    fn compile_wave(
+        &self,
+        w: &Wave,
+        src_step: usize,
+        (compute_cycles, ring_cycles): (Cycle, Cycle),
+        arena_len: usize,
+    ) -> PlanWave {
+        let lanes: Vec<PlanLane> = w
+            .lanes
+            .iter()
+            .map(|l| {
+                let a = resolve(&self.bufs, &l.a);
+                let b = l.b.as_ref().map_or(ArenaView::EMPTY, |b| resolve(&self.bufs, b));
+                let out = resolve(&self.bufs, &l.out);
+                // The raw-pointer executor relies on these bounds.
+                assert!(a.last() < arena_len && out.last() < arena_len);
+                assert!(b.len == 0 || b.last() < arena_len);
+                let staged = needs_staging(w.op, &a, &b, &out);
+                PlanLane { a, b, out, fused_out: usize::MAX, staged }
+            })
+            .collect();
+        let parallel = lanes_independent(&lanes);
+        PlanWave {
+            op: w.op,
+            vec_len: w.vec_len,
+            lut: w.lut,
+            fused_lut: None,
+            lanes,
+            compute_cycles,
+            ring_cycles,
+            waves: 1,
+            lane_ops: (w.lanes.len() * w.vec_len) as u64,
+            parallel,
+            src_step,
+        }
+    }
+
+    // ----------------------------------------------------------- accessors
+
+    /// Program name the plan was compiled from.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Fixed-point format of the datapath.
+    pub fn fixed(&self) -> FixedSpec {
+        self.fixed
+    }
+
+    /// Total lanes in the arena.
+    pub fn arena_len(&self) -> usize {
+        self.arena_init.len()
+    }
+
+    /// Number of dot→act pairs folded into single passes.
+    pub fn fused_waves(&self) -> usize {
+        self.fused_waves
+    }
+
+    /// Number of waves whose lanes were proven independent.
+    pub fn parallel_waves(&self) -> usize {
+        self.parallel_waves
+    }
+
+    /// Worker-pool width (including the calling thread).
+    pub fn pool_threads(&self) -> usize {
+        self.pool_threads
+    }
+
+    /// Lane count of buffer `id`.
+    pub fn buffer_len(&self, id: usize) -> usize {
+        self.bufs[id].1
+    }
+
+    /// Fresh run state (buffers zeroed / constants applied).
+    pub fn state(&self) -> PlanState {
+        PlanState {
+            arena: self.arena_init.clone(),
+            lut_resident: vec![false; self.luts.len()],
+        }
+    }
+
+    /// Overwrite buffer `id` (length must match the declaration).
+    pub fn write_buffer(&self, st: &mut PlanState, id: usize, data: &[i16]) {
+        let (base, len) = self.bufs[id];
+        assert_eq!(len, data.len(), "buffer {id} length mismatch");
+        st.arena[base..base + len].copy_from_slice(data);
+    }
+
+    /// Read buffer `id`.
+    pub fn read_buffer<'a>(&self, st: &'a PlanState, id: usize) -> &'a [i16] {
+        let (base, len) = self.bufs[id];
+        &st.arena[base..base + len]
+    }
+
+    // ----------------------------------------------------------- execution
+
+    /// Execute the plan against `st`, returning the run's cycle/work
+    /// statistics. Bit-exact with the structural simulator; cycle charges
+    /// identical to the pre-plan interpreter.
+    pub fn execute(&self, st: &mut PlanState) -> RunStats {
+        let mut stats = RunStats::default();
+        for step in &self.steps {
+            match step {
+                PlanStep::Dma { cycles, bytes } => {
+                    stats.dma_cycles += cycles;
+                    stats.cycles += cycles;
+                    stats.dma_bytes += bytes;
+                }
+                PlanStep::LoadLut { lut, cycles } => {
+                    if !self.lut_static || !st.lut_resident[*lut] {
+                        stats.lut_cycles += cycles;
+                        stats.cycles += cycles;
+                        st.lut_resident[*lut] = true;
+                    }
+                }
+                PlanStep::Wave(w) => {
+                    self.exec_wave(w, st);
+                    stats.compute_cycles += w.compute_cycles;
+                    stats.ring_cycles += w.ring_cycles;
+                    stats.cycles += w.compute_cycles + w.ring_cycles;
+                    stats.waves += w.waves;
+                    stats.lane_ops += w.lane_ops;
+                }
+            }
+        }
+        stats
+    }
+
+    /// Execute with per-wave structural verification (slow; tests/CLI).
+    /// Requires an unfused plan; returns the offending source step index
+    /// on divergence.
+    pub fn execute_verified(
+        &self,
+        st: &mut PlanState,
+        _program: &Program,
+    ) -> Result<RunStats, usize> {
+        assert_eq!(self.fused_waves, 0, "verified execution requires an unfused plan");
+        let mut stats = RunStats::default();
+        for step in &self.steps {
+            match step {
+                PlanStep::Dma { cycles, bytes } => {
+                    stats.dma_cycles += cycles;
+                    stats.cycles += cycles;
+                    stats.dma_bytes += bytes;
+                }
+                PlanStep::LoadLut { lut, cycles } => {
+                    if !self.lut_static || !st.lut_resident[*lut] {
+                        stats.lut_cycles += cycles;
+                        stats.cycles += cycles;
+                        st.lut_resident[*lut] = true;
+                    }
+                }
+                PlanStep::Wave(w) => {
+                    self.verify_wave(st, w)?;
+                    stats.compute_cycles += w.compute_cycles;
+                    stats.ring_cycles += w.ring_cycles;
+                    stats.cycles += w.compute_cycles + w.ring_cycles;
+                    stats.waves += w.waves;
+                    stats.lane_ops += w.lane_ops;
+                }
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Run one wave on the structural microcode interpreters from the
+    /// pre-wave state, execute it on the plan path, and compare outputs
+    /// lane-for-lane.
+    fn verify_wave(&self, st: &mut PlanState, w: &PlanWave) -> Result<(), usize> {
+        let procs = PROCS_PER_GROUP;
+        let mut expected: Vec<(ArenaView, Vec<i16>)> = Vec::with_capacity(w.lanes.len());
+        for chunk in w.lanes.chunks(procs) {
+            let mut io = GroupIo::default();
+            for lane in chunk {
+                io.feed(&lane.a.gather(&st.arena));
+                if w.op != Opcode::ActivationFunction
+                    && w.op != Opcode::VectorSummation
+                    && lane.b.len > 0
+                {
+                    io.feed(&lane.b.gather(&st.arena));
+                }
+            }
+            let out_per_lane: usize;
+            match w.op {
+                Opcode::ActivationFunction => {
+                    let lut = &self.luts[w.lut.expect("checked: ACT wave has LUT")];
+                    let words = microcode_gen::actpro_batch(w.vec_len, chunk.len())
+                        .expect("checked wave dims");
+                    let mut g = ActproGroup::new(lut.clone());
+                    g.execute(&words, &mut io);
+                    out_per_lane = w.vec_len + (w.vec_len & 1);
+                }
+                op => {
+                    let words = microcode_gen::mvm_batch(op, w.vec_len, chunk.len())
+                        .expect("checked wave dims");
+                    let mut g = MvmGroup::new(self.fixed);
+                    g.execute(&words, &mut io);
+                    out_per_lane = match op {
+                        Opcode::VectorDotProduct | Opcode::VectorSummation => 1,
+                        _ => w.vec_len,
+                    };
+                }
+            }
+            for (li, lane) in chunk.iter().enumerate() {
+                let got = io.output[li * out_per_lane..li * out_per_lane + lane.out.len].to_vec();
+                expected.push((lane.out, got));
+            }
+        }
+        let arena_len = st.arena.len();
+        let ptr = st.arena.as_mut_ptr();
+        unsafe { self.exec_lane_range(w, ptr, arena_len, 0, w.lanes.len()) };
+        for (view, want) in &expected {
+            if view.gather(&st.arena) != *want {
+                return Err(w.src_step);
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one wave: parallel across the pool when proven safe and
+    /// big enough, sequential otherwise.
+    fn exec_wave(&self, w: &PlanWave, st: &mut PlanState) {
+        let n = w.lanes.len();
+        if w.parallel
+            && self.pool_threads > 1
+            && n >= PAR_MIN_LANES
+            && n * w.vec_len >= PAR_MIN_LANE_OPS
+        {
+            self.exec_wave_parallel(w, st);
+        } else {
+            let arena_len = st.arena.len();
+            let ptr = st.arena.as_mut_ptr();
+            unsafe { self.exec_lane_range(w, ptr, arena_len, 0, n) };
+        }
+    }
+
+    fn exec_wave_parallel(&self, w: &PlanWave, st: &mut PlanState) {
+        // The lock makes pool use exclusive: machines dispatching from
+        // different threads serialise their (short) wave hand-offs while
+        // each wave's lanes still run across all workers.
+        let pool = lane_pool().lock().expect("lane pool poisoned");
+        let n = w.lanes.len();
+        // Cap at this plan's device-derived width.
+        let parts = (pool.workers() + 1).min(self.pool_threads);
+        let per = n.div_ceil(parts);
+        let arena_len = st.arena.len();
+        let arena = st.arena.as_mut_ptr();
+        let task = RawTask {
+            plan: self as *const ExecPlan,
+            wave: w as *const PlanWave,
+            arena,
+            arena_len,
+        };
+        let mut sent = 0usize;
+        let mut lo = per.min(n);
+        let mut worker = 0usize;
+        while lo < n {
+            let hi = (lo + per).min(n);
+            pool.submit(worker, Job { task, lo, hi });
+            worker += 1;
+            sent += 1;
+            lo = hi;
+        }
+        // Drain guard: if the inline execution below unwinds, block until
+        // every dispatched job has finished before the arena (owned up
+        // the stack) can be dropped.
+        struct Drain<'a>(&'a PoolCore, usize);
+        impl Drop for Drain<'_> {
+            fn drop(&mut self) {
+                for _ in 0..self.1 {
+                    let _ = self.0.done_rx.recv();
+                }
+            }
+        }
+        let mut drain = Drain(&*pool, sent);
+        // The calling thread is lane executor 0.
+        unsafe { self.exec_lane_range(w, arena, arena_len, 0, per.min(n)) };
+        drain.1 = 0; // disarm; the checked wait below consumes the dones
+        drop(drain);
+        pool.wait(sent);
+    }
+
+    /// Execute lanes `lo..hi` of `w` through the raw arena pointer.
+    ///
+    /// # Safety
+    /// `arena` must point to `arena_len` lanes matching this plan's
+    /// layout, and concurrent callers must cover disjoint lane ranges of
+    /// a wave whose lanes were proven independent (`w.parallel`).
+    unsafe fn exec_lane_range(
+        &self,
+        w: &PlanWave,
+        arena: *mut i16,
+        arena_len: usize,
+        lo: usize,
+        hi: usize,
+    ) {
+        debug_assert!(hi <= w.lanes.len() && self.arena_init.len() == arena_len);
+        let s = self.fixed;
+        let lanes = &w.lanes[lo..hi];
+        match w.op {
+            Opcode::Nop => {}
+            Opcode::VectorDotProduct => {
+                let flut = w.fused_lut.map(|l| &self.luts[l]);
+                for lane in lanes {
+                    let acc = if lane.a.stride == 1 && lane.b.stride == 1 {
+                        let av = std::slice::from_raw_parts(
+                            arena.add(lane.a.base) as *const i16,
+                            lane.a.len,
+                        );
+                        let bv = std::slice::from_raw_parts(
+                            arena.add(lane.b.base) as *const i16,
+                            lane.a.len,
+                        );
+                        s.dot_acc(av, bv)
+                    } else {
+                        let mut acc = 0i64;
+                        let (mut ia, mut ib) = (lane.a.base, lane.b.base);
+                        for _ in 0..lane.a.len {
+                            acc += *arena.add(ia) as i64 * *arena.add(ib) as i64;
+                            ia += lane.a.stride;
+                            ib += lane.b.stride;
+                        }
+                        acc
+                    };
+                    let v = s.narrow(acc >> s.frac_bits);
+                    *arena.add(lane.out.base) = v;
+                    if lane.fused_out != usize::MAX {
+                        *arena.add(lane.fused_out) =
+                            flut.expect("fused lane has LUT").apply_scalar(v);
+                    }
+                }
+            }
+            Opcode::VectorSummation => {
+                for lane in lanes {
+                    let acc = if lane.a.stride == 1 {
+                        let av = std::slice::from_raw_parts(
+                            arena.add(lane.a.base) as *const i16,
+                            lane.a.len,
+                        );
+                        av.iter().map(|&x| x as i64).sum::<i64>()
+                    } else {
+                        let mut acc = 0i64;
+                        let mut ia = lane.a.base;
+                        for _ in 0..lane.a.len {
+                            acc += *arena.add(ia) as i64;
+                            ia += lane.a.stride;
+                        }
+                        acc
+                    };
+                    *arena.add(lane.out.base) = s.narrow(acc);
+                }
+            }
+            Opcode::ActivationFunction => {
+                let lut = &self.luts[w.lut.expect("checked: ACT wave has LUT")];
+                let mut scratch: Vec<i16> = Vec::new();
+                for lane in lanes {
+                    if lane.staged {
+                        scratch.clear();
+                        let mut ia = lane.a.base;
+                        for _ in 0..lane.a.len {
+                            scratch.push(lut.apply_scalar(*arena.add(ia)));
+                            ia += lane.a.stride;
+                        }
+                        let mut io = lane.out.base;
+                        for &v in &scratch {
+                            *arena.add(io) = v;
+                            io += lane.out.stride;
+                        }
+                    } else {
+                        let (mut ia, mut io) = (lane.a.base, lane.out.base);
+                        for _ in 0..lane.a.len {
+                            *arena.add(io) = lut.apply_scalar(*arena.add(ia));
+                            ia += lane.a.stride;
+                            io += lane.out.stride;
+                        }
+                    }
+                }
+            }
+            op => {
+                let mut scratch: Vec<i16> = Vec::new();
+                macro_rules! elementwise {
+                    ($f:expr) => {
+                        for lane in lanes {
+                            if lane.staged {
+                                scratch.clear();
+                                let (mut ia, mut ib) = (lane.a.base, lane.b.base);
+                                for _ in 0..lane.a.len {
+                                    scratch.push($f(*arena.add(ia), *arena.add(ib)));
+                                    ia += lane.a.stride;
+                                    ib += lane.b.stride;
+                                }
+                                let mut io = lane.out.base;
+                                for &v in &scratch {
+                                    *arena.add(io) = v;
+                                    io += lane.out.stride;
+                                }
+                            } else {
+                                let (mut ia, mut ib, mut io) =
+                                    (lane.a.base, lane.b.base, lane.out.base);
+                                for _ in 0..lane.a.len {
+                                    *arena.add(io) = $f(*arena.add(ia), *arena.add(ib));
+                                    ia += lane.a.stride;
+                                    ib += lane.b.stride;
+                                    io += lane.out.stride;
+                                }
+                            }
+                        }
+                    };
+                }
+                match op {
+                    Opcode::VectorAddition => elementwise!(|x, y| s.add(x, y)),
+                    Opcode::VectorSubtraction => elementwise!(|x, y| s.sub(x, y)),
+                    Opcode::ElementMultiplication => elementwise!(|x, y| s.mul(x, y)),
+                    _ => unreachable!("non-wave opcode {op} in plan"),
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- worker pool
+
+/// A dispatched lane range. The raw pointers stay valid because the
+/// dispatcher blocks on completion before returning.
+#[derive(Clone, Copy)]
+struct RawTask {
+    plan: *const ExecPlan,
+    wave: *const PlanWave,
+    arena: *mut i16,
+    arena_len: usize,
+}
+
+struct Job {
+    task: RawTask,
+    lo: usize,
+    hi: usize,
+}
+
+// SAFETY: the dispatcher keeps plan/wave/arena alive and lane ranges
+// disjoint for the whole job lifetime (it blocks in `PoolCore::wait`).
+unsafe impl Send for Job {}
+
+fn worker_loop(rx: Receiver<Job>, done: Sender<bool>) {
+    while let Ok(job) = rx.recv() {
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let plan = unsafe { &*job.task.plan };
+            let wave = unsafe { &*job.task.wave };
+            unsafe {
+                plan.exec_lane_range(wave, job.task.arena, job.task.arena_len, job.lo, job.hi)
+            };
+        }))
+        .is_ok();
+        if done.send(ok).is_err() {
+            break;
+        }
+    }
+}
+
+/// Process-wide lane worker pool shared by every plan: one set of
+/// threads no matter how many machines/trainers exist. Workers idle on
+/// their job channels between waves.
+static LANE_POOL: OnceLock<Mutex<PoolCore>> = OnceLock::new();
+
+/// Workers spawned on first use: `host cores − 1` (the dispatching
+/// thread is always lane executor 0), capped at 15 so a wave never
+/// spreads wider than the largest board's 16 processor groups.
+fn lane_pool() -> &'static Mutex<PoolCore> {
+    LANE_POOL.get_or_init(|| {
+        let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Mutex::new(PoolCore::new(host.saturating_sub(1).min(15)))
+    })
+}
+
+/// Persistent lane workers. Threads exit when the job senders are
+/// dropped (never, for the process-wide [`LANE_POOL`]).
+struct PoolCore {
+    txs: Vec<Sender<Job>>,
+    done_rx: Receiver<bool>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl PoolCore {
+    fn new(workers: usize) -> PoolCore {
+        let (done_tx, done_rx) = channel();
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = channel::<Job>();
+            let dt = done_tx.clone();
+            match std::thread::Builder::new()
+                .name(format!("mfnn-lane-{i}"))
+                .spawn(move || worker_loop(rx, dt))
+            {
+                Ok(h) => {
+                    txs.push(tx);
+                    handles.push(h);
+                }
+                Err(_) => break, // run with fewer workers
+            }
+        }
+        PoolCore { txs, done_rx, handles }
+    }
+
+    fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    fn submit(&self, worker: usize, job: Job) {
+        self.txs[worker].send(job).expect("lane worker hung up");
+    }
+
+    fn wait(&self, n: usize) {
+        for _ in 0..n {
+            let ok = self.done_rx.recv().expect("lane worker hung up");
+            assert!(ok, "lane worker panicked during wave execution");
+        }
+    }
+}
+
+impl Drop for PoolCore {
+    fn drop(&mut self) {
+        self.txs.clear(); // disconnect → workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembler::program::{BufKind, LaneOp};
+    use crate::hw::fast::FastSim;
+    use crate::nn::lut::{ActKind, AddrMode};
+    use crate::util::Rng;
+
+    const S: FixedSpec = FixedSpec::PAPER;
+
+    fn device() -> FpgaDevice {
+        FpgaDevice::selected()
+    }
+
+    /// dot → act over the dot outputs, fusable.
+    fn fused_program(lanes: usize, len: usize, in_place: bool) -> Program {
+        let mut p = Program::new("fuse", S);
+        let a = p.buffer("a", lanes, len, BufKind::Input);
+        let z = p.buffer("z", lanes, 1, BufKind::Temp);
+        let o = p.buffer("o", lanes, 1, BufKind::Output);
+        let lut = p.lut(ActLut::build(ActKind::Relu, false, S, AddrMode::Clamp, 7));
+        let dots: Vec<LaneOp> = (0..lanes)
+            .map(|i| LaneOp {
+                a: View::contiguous(a, i * len, len),
+                b: Some(View::contiguous(a, ((i + 1) % lanes) * len, len)),
+                out: View::contiguous(z, i, 1),
+            })
+            .collect();
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::VectorDotProduct,
+            vec_len: len,
+            lut: None,
+            lanes: dots,
+        }));
+        p.steps.push(Step::LoadLut(lut));
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::ActivationFunction,
+            vec_len: lanes,
+            lut: Some(lut),
+            lanes: vec![LaneOp {
+                a: View::all(z, lanes),
+                b: None,
+                out: if in_place { View::all(z, lanes) } else { View::all(o, lanes) },
+            }],
+        }));
+        p
+    }
+
+    fn run_fast_reference(p: &Program, binds: &[(usize, Vec<i16>)]) -> FastSim {
+        let mut sim = FastSim::new(p);
+        for (id, data) in binds {
+            sim.set_buffer(*id, data);
+        }
+        for step in &p.steps {
+            if let Step::Wave(w) = step {
+                sim.exec_wave(p, w);
+            }
+        }
+        sim
+    }
+
+    #[test]
+    fn arena_layout_packs_buffers() {
+        let mut p = Program::new("t", S);
+        let a = p.buffer("a", 4, 2, BufKind::Input);
+        let b = p.const_buffer("b", vec![1, 2, 3]);
+        let plan = ExecPlan::new(&p, &device());
+        assert_eq!(plan.arena_len(), 11);
+        assert_eq!(plan.buffer_len(a), 8);
+        let st = plan.state();
+        assert_eq!(plan.read_buffer(&st, b), &[1, 2, 3]);
+        assert_eq!(plan.read_buffer(&st, a), &[0; 8]);
+    }
+
+    #[test]
+    fn dot_act_pair_fuses_and_matches_reference() {
+        for in_place in [false, true] {
+            let p = fused_program(16, 8, in_place);
+            p.check().unwrap();
+            let plan = ExecPlan::new(&p, &device());
+            assert_eq!(plan.fused_waves(), 1, "in_place={in_place}");
+            let mut r = Rng::new(7);
+            let data: Vec<i16> = (0..16 * 8).map(|_| r.gen_range_i64(-4000, 4000) as i16).collect();
+            let mut st = plan.state();
+            plan.write_buffer(&mut st, 0, &data);
+            let stats = plan.execute(&mut st);
+            assert_eq!(stats.waves, 2, "fused wave still accounts for both");
+            let reference = run_fast_reference(&p, &[(0, data)]);
+            for id in 0..p.buffers.len() {
+                assert_eq!(plan.read_buffer(&st, id), reference.buffer(id), "buffer {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn fusion_refused_when_act_reads_extra_lanes() {
+        // Act wave reads one more lane than the dot wave produced.
+        let mut p = Program::new("nofuse", S);
+        let a = p.buffer("a", 4, 8, BufKind::Input);
+        let z = p.buffer("z", 5, 1, BufKind::Temp);
+        let lut = p.lut(ActLut::build(ActKind::Relu, false, S, AddrMode::Clamp, 7));
+        let dots: Vec<LaneOp> = (0..4)
+            .map(|i| LaneOp {
+                a: View::contiguous(a, i * 8, 8),
+                b: Some(View::contiguous(a, i * 8, 8)),
+                out: View::contiguous(z, i, 1),
+            })
+            .collect();
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::VectorDotProduct,
+            vec_len: 8,
+            lut: None,
+            lanes: dots,
+        }));
+        p.steps.push(Step::LoadLut(lut));
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::ActivationFunction,
+            vec_len: 5,
+            lut: Some(lut),
+            lanes: vec![LaneOp { a: View::all(z, 5), b: None, out: View::all(z, 5) }],
+        }));
+        p.check().unwrap();
+        let plan = ExecPlan::new(&p, &device());
+        assert_eq!(plan.fused_waves(), 0);
+    }
+
+    #[test]
+    fn fused_and_unfused_charge_identical_cycles() {
+        let p = fused_program(16, 8, false);
+        let fused = ExecPlan::new(&p, &device());
+        let unfused = ExecPlan::new_unfused(&p, &device());
+        assert_eq!(fused.fused_waves(), 1);
+        assert_eq!(unfused.fused_waves(), 0);
+        let mut r = Rng::new(8);
+        let data: Vec<i16> = (0..16 * 8).map(|_| r.gen_i16()).collect();
+        let mut s1 = fused.state();
+        let mut s2 = unfused.state();
+        fused.write_buffer(&mut s1, 0, &data);
+        unfused.write_buffer(&mut s2, 0, &data);
+        let st1 = fused.execute(&mut s1);
+        let st2 = unfused.execute(&mut s2);
+        assert_eq!(st1, st2, "cycle accounting must not change under fusion");
+        for id in 0..p.buffers.len() {
+            assert_eq!(fused.read_buffer(&s1, id), unfused.read_buffer(&s2, id));
+        }
+    }
+
+    #[test]
+    fn wide_independent_wave_runs_parallel_and_bit_exact() {
+        // 1024 lanes × 32 els = 32768 lane-ops ≥ PAR_MIN_LANE_OPS.
+        let lanes_n = 1024usize;
+        let len = 32usize;
+        let mut p = Program::new("wide", S);
+        let a = p.buffer("a", lanes_n, len, BufKind::Input);
+        let o = p.buffer("o", lanes_n, len, BufKind::Output);
+        let lanes: Vec<LaneOp> = (0..lanes_n)
+            .map(|i| LaneOp {
+                a: View::contiguous(a, i * len, len),
+                b: Some(View::contiguous(a, ((i + 13) % lanes_n) * len, len)),
+                out: View::contiguous(o, i * len, len),
+            })
+            .collect();
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::ElementMultiplication,
+            vec_len: len,
+            lut: None,
+            lanes,
+        }));
+        p.check().unwrap();
+        let plan = ExecPlan::new(&p, &device());
+        assert_eq!(plan.parallel_waves(), 1, "lanes are provably independent");
+        let mut r = Rng::new(9);
+        let data: Vec<i16> = (0..lanes_n * len).map(|_| r.gen_i16()).collect();
+        let mut st = plan.state();
+        plan.write_buffer(&mut st, a, &data);
+        plan.execute(&mut st);
+        let reference = run_fast_reference(&p, &[(a, data)]);
+        assert_eq!(plan.read_buffer(&st, o), reference.buffer(o));
+    }
+
+    #[test]
+    fn overlapping_lanes_fall_back_to_sequential() {
+        // Lane 1 reads lane 0's output: order matters, must not go
+        // parallel.
+        let mut p = Program::new("dep", S);
+        let x = p.buffer("x", 3, 4, BufKind::Input);
+        let lanes = vec![
+            LaneOp {
+                a: View::contiguous(x, 0, 4),
+                b: Some(View::contiguous(x, 0, 4)),
+                out: View::contiguous(x, 4, 4),
+            },
+            LaneOp {
+                a: View::contiguous(x, 4, 4),
+                b: Some(View::contiguous(x, 4, 4)),
+                out: View::contiguous(x, 8, 4),
+            },
+        ];
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::VectorAddition,
+            vec_len: 4,
+            lut: None,
+            lanes,
+        }));
+        p.check().unwrap();
+        let plan = ExecPlan::new(&p, &device());
+        assert_eq!(plan.parallel_waves(), 0);
+        let data: Vec<i16> = (1..=12).collect();
+        let mut st = plan.state();
+        plan.write_buffer(&mut st, x, &data);
+        plan.execute(&mut st);
+        let reference = run_fast_reference(&p, &[(x, data)]);
+        assert_eq!(plan.read_buffer(&st, x), reference.buffer(x));
+    }
+
+    #[test]
+    fn in_place_bias_adds_are_recognised_independent() {
+        // out == a (in-place), shared read-only b: the pairwise check
+        // with own-lane exemption must accept this.
+        let rows = 16usize;
+        let cols = 8usize;
+        let mut p = Program::new("bias", S);
+        let z = p.buffer("z", rows, cols, BufKind::Temp);
+        let b = p.buffer("b", cols, 1, BufKind::Bias);
+        let lanes: Vec<LaneOp> = (0..rows)
+            .map(|i| LaneOp {
+                a: View::contiguous(z, i * cols, cols),
+                b: Some(View::all(b, cols)),
+                out: View::contiguous(z, i * cols, cols),
+            })
+            .collect();
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::VectorAddition,
+            vec_len: cols,
+            lut: None,
+            lanes,
+        }));
+        p.check().unwrap();
+        let plan = ExecPlan::new(&p, &device());
+        assert_eq!(plan.parallel_waves(), 1);
+    }
+
+    #[test]
+    fn staged_lane_matches_read_all_then_write_semantics() {
+        // out overlaps a shifted by one: the staged path must reproduce
+        // FastSim's gather-then-scatter result exactly.
+        let mut p = Program::new("shift", S);
+        let x = p.buffer("x", 8, 1, BufKind::Input);
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::VectorAddition,
+            vec_len: 4,
+            lut: None,
+            lanes: vec![LaneOp {
+                a: View::contiguous(x, 0, 4),
+                b: Some(View::contiguous(x, 0, 4)),
+                out: View::contiguous(x, 1, 4),
+            }],
+        }));
+        p.check().unwrap();
+        let plan = ExecPlan::new(&p, &device());
+        let data: Vec<i16> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let mut st = plan.state();
+        plan.write_buffer(&mut st, x, &data);
+        plan.execute(&mut st);
+        let reference = run_fast_reference(&p, &[(x, data)]);
+        assert_eq!(plan.read_buffer(&st, x), reference.buffer(x));
+    }
+}

@@ -27,6 +27,10 @@ pub mod nn;
 pub mod perf;
 pub mod prop;
 pub mod report;
+/// PJRT-backed golden-model runtime. Off by default (cargo feature
+/// `xla`) so the stock build has no external native dependency; see
+/// DESIGN.md §Runtime for how to enable it.
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod util;
 

@@ -25,6 +25,7 @@ use mfnn::nn::trainer::TrainConfig;
 use mfnn::perf::catalog::{FpgaPart, CATALOG};
 use mfnn::perf::group::{OpClass, PerfModel};
 use mfnn::report::{f, Table};
+#[cfg(feature = "xla")]
 use mfnn::runtime::{GoldenModel, Runtime};
 use mfnn::util::Rng;
 use std::path::Path;
@@ -393,6 +394,14 @@ fn cmd_traces(rest: &[String]) -> Result<(), String> {
 
 // ------------------------------------------------------------------- golden
 
+#[cfg(not(feature = "xla"))]
+fn cmd_golden(_rest: &[String]) -> Result<(), String> {
+    Err("the `golden` command needs the PJRT runtime; rebuild with `--features xla` \
+         (see DESIGN.md §Runtime)"
+        .into())
+}
+
+#[cfg(feature = "xla")]
 fn cmd_golden(rest: &[String]) -> Result<(), String> {
     let spec = Spec::new().opt("dir", "artifacts directory", None);
     let args = parse_or_help(&spec, rest, "mfnn golden", "Cross-check sim vs JAX artifacts")?;

@@ -83,6 +83,12 @@ pub struct Trainer {
     fwd: LoweredMlp,
     train_machine: MatrixMachine,
     fwd_machine: MatrixMachine,
+    /// Lazily-lowered forward program for the final partial evaluation
+    /// chunk (`(rows, program, machine)`): instead of padding the last
+    /// chunk up to `cfg.batch` and paying full-batch compute, a
+    /// right-sized plan runs exactly the remaining rows (perf pass,
+    /// DESIGN.md §Perf).
+    fwd_rem: Option<(usize, LoweredMlp, MatrixMachine)>,
     rng: Rng,
 }
 
@@ -101,7 +107,7 @@ impl Trainer {
             train_machine.bind(&train.program, &format!("w{l}"), &qw[l])?;
             train_machine.bind(&train.program, &format!("b{l}"), &qb[l])?;
         }
-        Ok(Trainer { spec, device, cfg, train, fwd, train_machine, fwd_machine, rng })
+        Ok(Trainer { spec, device, cfg, train, fwd, train_machine, fwd_machine, fwd_rem: None, rng })
     }
 
     /// Bind explicit weights (e.g. to mirror a float run).
@@ -162,9 +168,12 @@ impl Trainer {
         let out_dim = self.spec.output_dim();
         let mut stats = RunStats::default();
         let mut curve = Vec::new();
+        let mut ids: Vec<usize> = Vec::with_capacity(batch);
         for step in 0..self.cfg.steps {
-            let ids: Vec<usize> =
-                (0..batch).map(|_| self.rng.gen_range(ds.len() as u64) as usize).collect();
+            ids.clear();
+            for _ in 0..batch {
+                ids.push(self.rng.gen_range(ds.len() as u64) as usize);
+            }
             let (bx, by) = ds.batch(&ids);
             let qx = f.encode_vec(&bx);
             let qy = f.encode_vec(&by);
@@ -197,39 +206,68 @@ impl Trainer {
 
     /// Classification accuracy of the current weights over `ds` (uses the
     /// forward program — the paper's "testing" phase).
+    ///
+    /// The final partial chunk (when `ds.len() % batch != 0`) runs on a
+    /// right-sized forward plan instead of being padded to the full
+    /// batch, so no compute (or cycle charge) is spent on padding rows.
     pub fn evaluate(&mut self, ds: &Dataset) -> Result<(f64, RunStats), TrainError> {
         self.check_dims(ds)?;
         let f = self.spec.fixed;
         let batch = self.cfg.batch;
         let out_dim = self.spec.output_dim();
-        // copy current weights into the forward machine
+        // copy current weights into the forward machine(s)
         let (qw, qb) = self.weights();
         for l in 0..self.spec.layers.len() {
             self.fwd_machine.bind(&self.fwd.program, &format!("w{l}"), &qw[l])?;
             self.fwd_machine.bind(&self.fwd.program, &format!("b{l}"), &qb[l])?;
         }
+        let rem = ds.len() % batch;
+        if rem != 0 {
+            if self.fwd_rem.as_ref().map_or(true, |(rows, _, _)| *rows != rem) {
+                let lowered = lower_forward(&self.spec, rem)?;
+                let machine = MatrixMachine::new(self.device, &lowered.program)?;
+                self.fwd_rem = Some((rem, lowered, machine));
+            }
+            let (_, lowered, machine) = self.fwd_rem.as_mut().expect("just built");
+            for l in 0..qw.len() {
+                machine.bind(&lowered.program, &format!("w{l}"), &qw[l])?;
+                machine.bind(&lowered.program, &format!("b{l}"), &qb[l])?;
+            }
+        }
         let mut stats = RunStats::default();
         let mut correct = 0usize;
         let mut seen = 0usize;
         let last = self.spec.layers.len() - 1;
-        for chunk in (0..ds.len()).collect::<Vec<_>>().chunks(batch) {
-            let mut ids = chunk.to_vec();
-            while ids.len() < batch {
-                ids.push(chunk[0]); // pad the final partial batch
-            }
+        let out_name = format!("o{last}");
+        let mut ids: Vec<usize> = Vec::with_capacity(batch);
+        let mut row: Vec<f64> = Vec::with_capacity(out_dim);
+        let mut off = 0usize;
+        while off < ds.len() {
+            let end = (off + batch).min(ds.len());
+            ids.clear();
+            ids.extend(off..end);
             let (bx, _) = ds.batch(&ids);
-            self.fwd_machine.bind(&self.fwd.program, "x", &f.encode_vec(&bx))?;
-            let st = self.fwd_machine.run(&self.fwd.program)?;
-            stats.add(&st);
-            let o = self.fwd_machine.read(&self.fwd.program, &format!("o{last}"))?;
-            for (k, &i) in chunk.iter().enumerate() {
-                let row: Vec<f64> =
-                    o[k * out_dim..(k + 1) * out_dim].iter().map(|&q| f.to_f64(q)).collect();
+            let qx = f.encode_vec(&bx);
+            let o = if end - off == batch {
+                self.fwd_machine.bind(&self.fwd.program, "x", &qx)?;
+                stats.add(&self.fwd_machine.run(&self.fwd.program)?);
+                self.fwd_machine.read(&self.fwd.program, &out_name)?
+            } else {
+                let (_, lowered, machine) =
+                    self.fwd_rem.as_mut().expect("partial-chunk machine built above");
+                machine.bind(&lowered.program, "x", &qx)?;
+                stats.add(&machine.run(&lowered.program)?);
+                machine.read(&lowered.program, &out_name)?
+            };
+            for (k, i) in (off..end).enumerate() {
+                row.clear();
+                row.extend(o[k * out_dim..(k + 1) * out_dim].iter().map(|&q| f.to_f64(q)));
                 if argmax(&row) == ds.label(i) {
                     correct += 1;
                 }
                 seen += 1;
             }
+            off = end;
         }
         Ok((correct as f64 / seen.max(1) as f64, stats))
     }

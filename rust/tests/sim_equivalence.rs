@@ -5,10 +5,31 @@
 
 use mfnn::assembler::program::{BufKind, LaneOp, Program, Step, View, Wave};
 use mfnn::fixed::FixedSpec;
-use mfnn::hw::{FpgaDevice, MatrixMachine};
+use mfnn::hw::{ExecPlan, FpgaDevice, MatrixMachine};
 use mfnn::isa::Opcode;
 use mfnn::nn::lut::{ActKind, ActLut, AddrMode};
 use mfnn::util::Rng;
+
+/// Run the same bindings through the fast (compiled-plan) path and the
+/// structurally-verified path; assert identical cycle accounting and
+/// identical contents of every buffer.
+fn assert_fast_matches_structural(p: &Program, binds: &[(usize, Vec<i16>)], tag: &str) {
+    let device = FpgaDevice::selected();
+    let mut fast = MatrixMachine::new(device, p).unwrap();
+    let mut slow = MatrixMachine::new(device, p).unwrap();
+    for (id, data) in binds {
+        let name = p.buffers[*id].name.clone();
+        fast.bind(p, &name, data).unwrap();
+        slow.bind(p, &name, data).unwrap();
+    }
+    let sf = fast.run(p).unwrap();
+    let sv = slow.run_verified(p).expect("structural verification must pass");
+    assert_eq!(sf.cycles, sv.cycles, "{tag}: cycle accounting diverged");
+    assert_eq!(sf, sv, "{tag}: run stats diverged");
+    for id in 0..p.buffers.len() {
+        assert_eq!(fast.read_id(id), slow.read_id(id), "{tag} buffer {id}");
+    }
+}
 
 /// Build a random but valid program over a handful of buffers.
 fn random_program(seed: u64, fixed: FixedSpec) -> (Program, Vec<(usize, Vec<i16>)>) {
@@ -112,4 +133,145 @@ fn multi_lane_waves_verify_structurally() {
     let mut m = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
     m.bind(&p, "a", &data).unwrap();
     m.run_verified(&p).unwrap();
+}
+
+/// Build a random program whose waves walk *columns* of row-major
+/// matrices (stride = cols), exercising the plan's strided views.
+fn random_strided_program(seed: u64, fixed: FixedSpec) -> (Program, Vec<(usize, Vec<i16>)>) {
+    let mut r = Rng::new(seed);
+    let rows = 4 + r.gen_range(12) as usize;
+    let cols = 2 + r.gen_range(5) as usize;
+    let mut p = Program::new("strided", fixed);
+    let n_bufs = 3 + r.gen_range(3) as usize;
+    let mut binds = Vec::new();
+    for i in 0..n_bufs {
+        let kind = if i == 0 { BufKind::Input } else { BufKind::Output };
+        let id = p.buffer(&format!("m{i}"), rows, cols, kind);
+        let data: Vec<i16> =
+            (0..rows * cols).map(|_| r.gen_range_i64(-5000, 5000) as i16).collect();
+        binds.push((id, data));
+    }
+    let scalar = p.buffer("scalar", cols, 1, BufKind::Output);
+    let lut_id = p.lut(ActLut::build(ActKind::Relu, false, fixed, AddrMode::Clamp, 7));
+    p.steps.push(Step::LoadLut(lut_id));
+    let column = |buf: usize, c: usize| View { buf, offset: c, len: rows, stride: cols };
+    let n_waves = 4 + r.gen_range(6) as usize;
+    for wi in 0..n_waves {
+        let op = *r.choose(&[
+            Opcode::VectorAddition,
+            Opcode::VectorSubtraction,
+            Opcode::ElementMultiplication,
+            Opcode::VectorDotProduct,
+            Opcode::VectorSummation,
+            Opcode::ActivationFunction,
+        ]);
+        let ca = r.gen_range(cols as u64) as usize;
+        let cb = r.gen_range(cols as u64) as usize;
+        let a_buf = r.gen_range(n_bufs as u64) as usize;
+        let b_buf = r.gen_range(n_bufs as u64) as usize;
+        let dst = 1 + r.gen_range((n_bufs - 1) as u64) as usize;
+        let cd = r.gen_range(cols as u64) as usize;
+        let lanes = match op {
+            Opcode::VectorDotProduct | Opcode::VectorSummation => vec![LaneOp {
+                a: column(a_buf, ca),
+                b: (op == Opcode::VectorDotProduct).then(|| column(b_buf, cb)),
+                out: View::contiguous(scalar, wi % cols, 1),
+            }],
+            Opcode::ActivationFunction => vec![LaneOp {
+                a: column(a_buf, ca),
+                b: None,
+                out: column(dst, cd),
+            }],
+            _ => vec![LaneOp {
+                a: column(a_buf, ca),
+                b: Some(column(b_buf, cb)),
+                out: column(dst, cd),
+            }],
+        };
+        p.steps.push(Step::Wave(Wave {
+            op,
+            vec_len: rows,
+            lut: (op == Opcode::ActivationFunction).then_some(lut_id),
+            lanes,
+        }));
+    }
+    (p, binds)
+}
+
+#[test]
+fn random_strided_programs_agree_between_fast_and_structural() {
+    for seed in 100..112u64 {
+        let fixed = if seed % 2 == 0 { FixedSpec::PAPER } else { FixedSpec::q(10).saturating() };
+        let (p, binds) = random_strided_program(seed, fixed);
+        p.check().expect("random strided program must validate");
+        assert_fast_matches_structural(&p, &binds, &format!("strided seed {seed}"));
+    }
+}
+
+/// dot wave → activation over exactly the dot outputs: the plan fuses
+/// the pair; the structural oracle executes them as two waves. Both the
+/// numerics and the cycle accounting must be unchanged by fusion.
+fn fused_dot_act_program(
+    seed: u64,
+    fixed: FixedSpec,
+) -> (Program, Vec<(usize, Vec<i16>)>) {
+    let mut r = Rng::new(seed);
+    let lanes_n = 4 + r.gen_range(36) as usize;
+    let len = 4 + r.gen_range(28) as usize;
+    let in_place = seed % 2 == 0;
+    let strided_b = seed % 3 == 0;
+    let mut p = Program::new("fused", fixed);
+    let a = p.buffer("a", lanes_n, len, BufKind::Input);
+    let w = p.buffer("w", len, lanes_n, BufKind::Weight); // column operands
+    let z = p.buffer("z", lanes_n, 1, BufKind::Temp);
+    let o = p.buffer("o", lanes_n, 1, BufKind::Output);
+    let lut = p.lut(ActLut::build(ActKind::Tanh, false, fixed, AddrMode::Clamp, 7));
+    let mut binds = Vec::new();
+    for (id, n) in [(a, lanes_n * len), (w, len * lanes_n)] {
+        let data: Vec<i16> = (0..n).map(|_| r.gen_range_i64(-4000, 4000) as i16).collect();
+        binds.push((id, data));
+    }
+    let dots: Vec<LaneOp> = (0..lanes_n)
+        .map(|i| LaneOp {
+            a: View::contiguous(a, i * len, len),
+            b: Some(if strided_b {
+                View { buf: w, offset: i, len, stride: lanes_n } // column i of w
+            } else {
+                View::contiguous(a, ((i + 1) % lanes_n) * len, len)
+            }),
+            out: View::contiguous(z, i, 1),
+        })
+        .collect();
+    p.steps.push(Step::Wave(Wave {
+        op: Opcode::VectorDotProduct,
+        vec_len: len,
+        lut: None,
+        lanes: dots,
+    }));
+    p.steps.push(Step::LoadLut(lut));
+    p.steps.push(Step::Wave(Wave {
+        op: Opcode::ActivationFunction,
+        vec_len: lanes_n,
+        lut: Some(lut),
+        lanes: vec![LaneOp {
+            a: View::all(z, lanes_n),
+            b: None,
+            out: if in_place { View::all(z, lanes_n) } else { View::all(o, lanes_n) },
+        }],
+    }));
+    (p, binds)
+}
+
+#[test]
+fn fused_dot_act_programs_agree_between_fast_and_structural() {
+    let device = FpgaDevice::selected();
+    for seed in 200..212u64 {
+        let fixed = if seed % 2 == 0 { FixedSpec::PAPER } else { FixedSpec::q(10).saturating() };
+        let (p, binds) = fused_dot_act_program(seed, fixed);
+        p.check().expect("fused program must validate");
+        // the optimisation actually fires
+        let plan = ExecPlan::new(&p, &device);
+        assert_eq!(plan.fused_waves(), 1, "seed {seed}: dot→act pair must fuse");
+        assert_fast_matches_structural(&p, &binds, &format!("fused seed {seed}"));
+    }
 }
