@@ -1,22 +1,29 @@
 //! Cluster scaling sweep (E-SCALE): makespan and throughput as the
 //! number of MLPs (M) and boards (F) vary across the paper's three
-//! scheduling regimes (sequential / 1:1 / divided).
+//! scheduling regimes (sequential / 1:1 / divided), driven through
+//! [`Session::train_many`] over compile-once artifacts.
 //!
 //! ```sh
 //! cargo run --release --example cluster_scaling
 //! ```
+//!
+//! [`Session::train_many`]: mfnn::Session::train_many
 
-use mfnn::cluster::{run_cluster, ClusterConfig, Job};
+use mfnn::cluster::ClusterConfig;
 use mfnn::fixed::FixedSpec;
 use mfnn::nn::dataset;
 use mfnn::nn::lut::ActKind;
 use mfnn::nn::mlp::{LutParams, MlpSpec};
 use mfnn::nn::trainer::TrainConfig;
 use mfnn::report::{f, Table};
+use mfnn::session::NetJob;
 use mfnn::util::Rng;
+use mfnn::{CompileOptions, Compiler, Session};
 use std::sync::Arc;
 
-fn mk_jobs(m: usize, steps: usize) -> Vec<Job> {
+const LR: f64 = 1.0 / 128.0;
+
+fn mk_jobs(compiler: &Compiler, m: usize, steps: usize) -> Vec<NetJob> {
     let fixed = FixedSpec::q(10).saturating();
     (0..m)
         .map(|i| {
@@ -26,20 +33,23 @@ fn mk_jobs(m: usize, steps: usize) -> Vec<Job> {
                 fixed, LutParams::training(fixed),
             )
             .unwrap();
+            // the compiler cache makes artifact reuse across sweep cells free
+            let artifact =
+                compiler.compile_spec(&spec, &CompileOptions::training(16, LR)).unwrap();
             let (train, test) =
                 dataset::mini_digits(300, seed).split(0.8, &mut Rng::new(seed));
-            Job {
-                name: format!("job{i}"),
-                spec,
-                cfg: TrainConfig { batch: 16, lr: 1.0 / 128.0, steps, seed, log_every: 50 },
-                train_data: Arc::new(train),
-                test_data: Arc::new(test),
+            NetJob {
+                artifact,
+                cfg: TrainConfig { batch: 16, lr: LR, steps, seed, log_every: 50 },
+                train: Arc::new(train),
+                test: Arc::new(test),
             }
         })
         .collect()
 }
 
-fn main() -> Result<(), Box<dyn std::error::Error>> {
+fn main() -> Result<(), mfnn::Error> {
+    let compiler = Compiler::new();
     let steps = 120;
     let mut t = Table::new(vec![
         "M (MLPs)", "F (boards)", "mode", "makespan (sim ms)", "Σ steps/s (sim)", "min acc",
@@ -47,9 +57,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     .with_title("cluster scaling: M MLPs × F boards (paper §2 scheduling cases)")
     .numeric();
     for (m, fboards) in [(1usize, 1usize), (2, 1), (4, 1), (4, 2), (4, 4), (2, 4), (1, 4), (1, 2)] {
-        let jobs = mk_jobs(m, steps);
+        let jobs = mk_jobs(&compiler, m, steps);
         let cfg = ClusterConfig { boards: fboards, sync_every: 30, ..Default::default() };
-        let report = run_cluster(&cfg, &jobs)?;
+        let report = Session::train_many(&cfg, &jobs)?;
         let total_steps: usize = report.results.iter().map(|r| r.steps).sum();
         let min_acc = report
             .results
@@ -66,6 +76,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         ]);
     }
     print!("{}", t.render());
+    println!("({} artifacts compiled once and reused across all sweep cells)", compiler.cached());
     println!("expected shape: makespan grows ~linearly in M at fixed F (sequential),");
     println!("shrinks with F at fixed M (parallel), with weight-sync bus overhead");
     println!("making the divided mode sub-linear.");

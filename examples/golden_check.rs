@@ -1,15 +1,16 @@
 //! Cross-layer golden check (E-GOLD): the simulated Matrix Machine vs
 //! the AOT-compiled JAX+Pallas artifact executed through PJRT, on a full
-//! SGD training step. Run `make artifacts` first.
+//! SGD training step — driven through the session front door (typed
+//! tensor handles + raw `step()`). Run `make artifacts` first.
 //!
 //! ```sh
 //! cargo run --release --example golden_check
 //! ```
 
-use mfnn::hw::{FpgaDevice, MatrixMachine};
-use mfnn::nn::lowering::lower_train_step;
 use mfnn::runtime::{GoldenModel, Runtime};
 use mfnn::util::Rng;
+use mfnn::{CompileOptions, Compiler, Session, Target};
+use mfnn::hw::FpgaDevice;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dir = Runtime::default_dir();
@@ -21,8 +22,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         16 - g.spec.fixed.frac_bits,
         g.spec.fixed.frac_bits,
     );
-    let h = lower_train_step(&g.spec, g.batch, g.lr)?;
-    let mut m = MatrixMachine::new(FpgaDevice::selected(), &h.program)?;
+    let compiler = Compiler::new();
+    let artifact = compiler.compile_spec(&g.spec, &CompileOptions::training(g.batch, g.lr))?;
+    let mut s = Session::open(artifact.clone(), Target::Board(FpgaDevice::selected()))?;
     let fsp = g.spec.fixed;
     let mut r = Rng::new(2026);
     let mut rand = |n: usize, amp: f64| -> Vec<i16> {
@@ -32,22 +34,28 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         g.spec.layers.iter().map(|l| rand(l.inputs * l.outputs, 1.2)).collect();
     let mut bs: Vec<Vec<i16>> = g.spec.layers.iter().map(|l| rand(l.outputs, 0.4)).collect();
     for l in 0..g.spec.layers.len() {
-        m.bind(&h.program, &format!("w{l}"), &ws[l])?;
-        m.bind(&h.program, &format!("b{l}"), &bs[l])?;
+        s.write(&artifact.tensor(&format!("w{l}"))?, &ws[l])?;
+        s.write(&artifact.tensor(&format!("b{l}"))?, &bs[l])?;
     }
+    let hx = artifact.tensor("x")?;
+    let hy = artifact.tensor("y")?;
+    let last = g.spec.layers.len() - 1;
+    let hout = artifact.tensor(&format!("o{last}"))?;
+    let hloss = artifact.tensor("loss")?;
     for step in 0..5 {
         let x = rand(g.batch * g.spec.input_dim(), 2.0);
         let y = rand(g.batch * g.spec.output_dim(), 1.0);
-        m.bind(&h.program, "x", &x)?;
-        m.bind(&h.program, "y", &y)?;
-        m.run(&h.program)?;
+        s.write(&hx, &x)?;
+        s.write(&hy, &y)?;
+        s.step();
         let gold = g.train_step(&x, &y, &ws, &bs)?;
-        let last = g.spec.layers.len() - 1;
-        assert_eq!(m.read(&h.program, &format!("o{last}"))?, gold.out, "step {step}: outputs");
-        assert_eq!(m.read(&h.program, "loss")?[0], gold.loss, "step {step}: loss");
+        assert_eq!(s.read(&hout)?, gold.out, "step {step}: outputs");
+        assert_eq!(s.read(&hloss)?[0], gold.loss, "step {step}: loss");
         for l in 0..g.spec.layers.len() {
-            assert_eq!(m.read(&h.program, &format!("w{l}"))?, gold.weights[l], "step {step} w{l}");
-            assert_eq!(m.read(&h.program, &format!("b{l}"))?, gold.biases[l], "step {step} b{l}");
+            let hw = artifact.tensor(&format!("w{l}"))?;
+            let hb = artifact.tensor(&format!("b{l}"))?;
+            assert_eq!(s.read(&hw)?, gold.weights[l], "step {step} w{l}");
+            assert_eq!(s.read(&hb)?, gold.biases[l], "step {step} b{l}");
             ws[l] = gold.weights[l].clone();
             bs[l] = gold.biases[l].clone();
         }

@@ -1,14 +1,18 @@
-//! Quickstart: write a net in the paper's assembly language, run the
-//! Matrix Assembler, execute one inference batch on a simulated
-//! Spartan-7 XC7S75-2, and print what happened.
+//! Quickstart: write a net in the paper's assembly language, compile it
+//! once with the session [`Compiler`], open a [`Session`] on a simulated
+//! Spartan-7 XC7S75-2, run one structurally-verified inference batch
+//! through typed tensor handles, and print what happened.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
+//!
+//! [`Compiler`]: mfnn::Compiler
+//! [`Session`]: mfnn::Session
 
-use mfnn::asm::lower_file;
-use mfnn::hw::{FpgaDevice, MatrixMachine};
+use mfnn::hw::FpgaDevice;
 use mfnn::util::Rng;
+use mfnn::{Compiler, Session, Target};
 
 const NET: &str = "
 NET quickstart
@@ -25,39 +29,43 @@ MLP scores h w1 b1 a1
 OUTPUT scores
 ";
 
-fn main() -> Result<(), Box<dyn std::error::Error>> {
-    // 1) Matrix Assembler: text → validated vector program.
-    let nets = lower_file(NET)?;
-    let net = &nets[0];
-    let program = &net.mlp.program;
+fn main() -> Result<(), mfnn::Error> {
+    // 1) Compile once: text → validated, cached Artifact (program +
+    //    symbol table + per-device execution plans).
+    let compiler = Compiler::new();
+    let artifact = compiler.compile_asm_net(NET)?;
+    let program = artifact.program();
     println!(
-        "assembled {:?}: {} waves, {} lane-ops, {} buffers",
-        net.spec.name,
+        "compiled {:?}: {} waves, {} lane-ops, {} tensors",
+        artifact.name(),
         program.waves().count(),
         program.total_lane_ops(),
-        program.buffers.len()
+        artifact.tensors().len()
     );
 
-    // 2) A Matrix Machine for the paper's selected board (XC7S75-2:
+    // 2) Open a session on the paper's selected board (XC7S75-2:
     //    16 MVM groups + 4 ACTPRO groups by Eqns 3-4).
     let device = FpgaDevice::selected();
-    let mut machine = MatrixMachine::new(device, program)?;
+    let mut session = Session::open(artifact.clone(), Target::Board(device))?;
 
-    // 3) Bind quantised data and run.
-    let f = net.spec.fixed;
+    // 3) Bind quantised data through typed handles (shapes were resolved
+    //    at compile time; a typo'd name would say "did you mean …").
+    let f = artifact.fixed();
     let mut rng = Rng::new(7);
     let mut rand = |n: usize, amp: f64| -> Vec<i16> {
         (0..n).map(|_| f.from_f64((rng.gen_f64() - 0.5) * amp)).collect()
     };
-    machine.bind(program, "x", &rand(8 * 4, 2.0))?;
-    machine.bind(program, "w0", &rand(4 * 16, 1.0))?;
-    machine.bind(program, "b0", &rand(16, 0.3))?;
-    machine.bind(program, "w1", &rand(16 * 3, 1.0))?;
-    machine.bind(program, "b1", &rand(3, 0.3))?;
-    let stats = machine.run_verified(program)?; // structural verification on
+    for (name, amp) in
+        [("x", 2.0), ("w0", 1.0), ("b0", 0.3), ("w1", 1.0), ("b1", 0.3)]
+    {
+        let h = artifact.tensor(name)?;
+        let data = rand(h.len(), amp);
+        session.write(&h, &data)?;
+    }
+    let stats = session.step_verified()?; // structural verification on
 
     // 4) Read results.
-    let scores = machine.read(program, "scores")?;
+    let scores = session.read(&artifact.tensor("scores")?)?;
     println!("scores[0..3] = {:?} (Q5.10 → {:?})", &scores[..3],
         scores[..3].iter().map(|&q| f.to_f64(q)).collect::<Vec<_>>());
     println!(

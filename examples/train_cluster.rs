@@ -1,18 +1,23 @@
 //! **End-to-end driver** (E-E2E in DESIGN.md): train and test multiple
-//! MLPs on a multi-FPGA cluster — the paper's whole point — and log the
-//! loss curves, accuracies, and simulated times.
+//! MLPs on a multi-FPGA cluster — the paper's whole point — through the
+//! unified session front door, and log the loss curves, accuracies, and
+//! simulated times.
 //!
 //! Workload: three different nets / datasets on 2 simulated XC7S75-2
-//! boards (M > F → sequential queues), then ONE net divided over 3
-//! boards (M < F → data-parallel with weight averaging), plus a float64
-//! host baseline for quality comparison. Results are recorded in
+//! boards (M > F → sequential queues) via [`Session::train_many`], then
+//! ONE net divided over 3 boards (M < F → data-parallel with weight
+//! averaging) via a cluster-target [`Session`], plus a float64 host
+//! baseline for quality comparison. Results are recorded in
 //! EXPERIMENTS.md §E-E2E.
 //!
 //! ```sh
 //! cargo run --release --example train_cluster
 //! ```
+//!
+//! [`Session`]: mfnn::Session
+//! [`Session::train_many`]: mfnn::Session::train_many
 
-use mfnn::cluster::{run_cluster, ClusterConfig, Job, PlacementMode};
+use mfnn::cluster::{ClusterConfig, PlacementMode};
 use mfnn::fixed::FixedSpec;
 use mfnn::nn::dataset::{self, Dataset};
 use mfnn::nn::float_ref::FloatMlp;
@@ -20,50 +25,66 @@ use mfnn::nn::lut::ActKind;
 use mfnn::nn::mlp::{LutParams, MlpSpec};
 use mfnn::nn::trainer::TrainConfig;
 use mfnn::report::{f, Table};
+use mfnn::session::NetJob;
 use mfnn::util::Rng;
+use mfnn::{Compiler, Session, Target};
 use std::sync::Arc;
 
-fn job(name: &str, dims: &[usize], ds: Dataset, steps: usize, seed: u64) -> Job {
+const LR: f64 = 1.0 / 128.0;
+
+fn job(
+    compiler: &Compiler,
+    name: &str,
+    dims: &[usize],
+    ds: Dataset,
+    steps: usize,
+    seed: u64,
+) -> NetJob {
     let fixed = FixedSpec::q(10).saturating();
     let spec = MlpSpec::from_dims(
         name, dims, ActKind::Relu, ActKind::Identity, fixed, LutParams::training(fixed),
     )
     .expect("valid spec");
+    let artifact = compiler
+        .compile_spec(&spec, &mfnn::CompileOptions::training(16, LR))
+        .expect("compile");
     let (train, test) = ds.split(0.8, &mut Rng::new(seed));
-    Job {
-        name: name.into(),
-        spec,
-        cfg: TrainConfig { batch: 16, lr: 1.0 / 128.0, steps, seed, log_every: 20 },
-        train_data: Arc::new(train),
-        test_data: Arc::new(test),
+    NetJob {
+        artifact,
+        cfg: TrainConfig { batch: 16, lr: LR, steps, seed, log_every: 20 },
+        train: Arc::new(train),
+        test: Arc::new(test),
     }
 }
 
 /// Float64 host baseline with the same architecture/steps.
-fn float_baseline(j: &Job) -> f64 {
-    let mut m = FloatMlp::init(&j.spec, &mut Rng::new(j.cfg.seed));
+fn float_baseline(j: &NetJob) -> f64 {
+    let spec = j.artifact.spec().expect("net artifact");
+    let mut m = FloatMlp::init(spec, &mut Rng::new(j.cfg.seed));
     let mut r = Rng::new(j.cfg.seed ^ 0x5EED);
-    let ds = &j.train_data;
+    let ds = &j.train;
     for _ in 0..j.cfg.steps {
         let ids: Vec<usize> =
             (0..j.cfg.batch).map(|_| r.gen_range(ds.len() as u64) as usize).collect();
         let xs: Vec<Vec<f64>> = ids.iter().map(|&i| ds.x[i].clone()).collect();
         let ys: Vec<Vec<f64>> = ids.iter().map(|&i| ds.y[i].clone()).collect();
-        m.train_step(&xs, &ys, 1.0 / 128.0);
+        m.train_step(&xs, &ys, LR);
     }
-    m.accuracy(&j.test_data.x, &j.test_data.y)
+    m.accuracy(&j.test.x, &j.test.y)
 }
 
-fn main() -> Result<(), Box<dyn std::error::Error>> {
+fn main() -> Result<(), mfnn::Error> {
+    let compiler = Compiler::new();
+
     // ---- phase 1: M=3 jobs > F=2 boards → sequential queues ----
     let jobs = vec![
-        job("digits", &[15, 24, 10], dataset::mini_digits(400, 11), 400, 11),
-        job("moons", &[2, 16, 2], dataset::two_moons(300, 22), 300, 22),
-        job("blobs", &[8, 16, 4], dataset::blobs(320, 4, 8, 33), 250, 33),
+        job(&compiler, "digits", &[15, 24, 10], dataset::mini_digits(400, 11), 400, 11),
+        job(&compiler, "moons", &[2, 16, 2], dataset::two_moons(300, 22), 300, 22),
+        job(&compiler, "blobs", &[8, 16, 4], dataset::blobs(320, 4, 8, 33), 250, 33),
     ];
     let cfg = ClusterConfig { boards: 2, ..Default::default() };
     println!("== phase 1: {} MLPs on {} boards ==", jobs.len(), cfg.boards);
-    let report = run_cluster(&cfg, &jobs)?;
+    let report = Session::train_many(&cfg, &jobs)?;
     assert_eq!(report.placement.mode, PlacementMode::Sequential);
 
     let mut t = Table::new(vec![
@@ -99,20 +120,29 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
     println!("metrics: {:?}\n", report.metrics);
 
-    // ---- phase 2: M=1 job < F=3 boards → divided (data parallel) ----
-    let dp_jobs = vec![job("digits_dp", &[15, 24, 10], dataset::mini_digits(600, 44), 360, 44)];
-    let cfg = ClusterConfig { boards: 3, sync_every: 30, ..Default::default() };
-    println!("== phase 2: 1 MLP divided over {} boards ==", cfg.boards);
-    let report = run_cluster(&cfg, &dp_jobs)?;
-    assert_eq!(report.placement.mode, PlacementMode::Divided);
-    let jr = &report.results[0];
+    // ---- phase 2: M=1 job < F=3 boards → divided (data parallel),
+    //      as a single cluster-target Session ----
+    let ds = dataset::mini_digits(600, 44);
+    let (train, test) = ds.split(0.8, &mut Rng::new(44));
+    let fixed = FixedSpec::q(10).saturating();
+    let spec = MlpSpec::from_dims(
+        "digits_dp", &[15, 24, 10], ActKind::Relu, ActKind::Identity,
+        fixed, LutParams::training(fixed),
+    )
+    .expect("valid spec");
+    let artifact = compiler.compile_spec(&spec, &mfnn::CompileOptions::training(16, LR))?;
+    let ccfg = ClusterConfig { boards: 3, sync_every: 30, ..Default::default() };
+    println!("== phase 2: 1 MLP divided over {} boards ==", ccfg.boards);
+    let mut session = Session::open(artifact, Target::Cluster(ccfg))?;
+    let cfg = TrainConfig { batch: 16, lr: LR, steps: 360, seed: 44, log_every: 20 };
+    let summary = session.train(&train, &cfg)?;
+    let eval = session.evaluate(&test)?;
     println!(
-        "{}: boards {:?}, accuracy {:.3}, sync rounds {}, critical-path compute {:.2} ms, bus {:.2} ms",
-        jr.name, jr.boards, jr.accuracy, report.metrics.sync_rounds,
-        jr.sim_compute_s * 1e3, jr.sim_bus_s * 1e3
+        "digits_dp: boards {:?}, accuracy {:.3}, sync rounds {}, sim train {:.2} ms",
+        summary.boards, eval.accuracy, summary.sync_rounds, summary.sim_seconds * 1e3,
     );
-    for w in [0, report.results[0].curve.len() - 1] {
-        let p = &jr.curve[w];
+    for w in [0, summary.curve.len() - 1] {
+        let p = &summary.curve[w];
         println!("  step {:>4}: loss {:.4}", p.step, p.loss);
     }
     Ok(())

@@ -21,7 +21,7 @@ fn run_config(name: &str, fixed: FixedSpec, lut: LutParams, t: &mut Table) {
     let quick = std::env::var("MFNN_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let steps = if quick { 40 } else { 200 };
     let cfg = TrainConfig { batch: 16, lr: 1.0 / 128.0, steps, seed: 9, log_every: 50 };
-    match Trainer::new(spec, FpgaDevice::selected(), cfg) {
+    match Trainer::build(spec, FpgaDevice::selected(), cfg) {
         Ok(mut tr) => {
             let report = tr.train(&train).unwrap();
             let (acc, _) = tr.evaluate(&test).unwrap();

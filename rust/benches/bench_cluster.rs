@@ -1,20 +1,25 @@
 //! E-SCALE: cluster makespan across the paper's three scheduling regimes
-//! — the multi-FPGA scaling claim of §2. Reports simulated makespan
-//! (the modelled hardware's time) and host wall-clock (simulator cost).
+//! — the multi-FPGA scaling claim of §2 — driven through the session
+//! front door. Reports simulated makespan (the modelled hardware's time)
+//! and host wall-clock (simulator cost).
 
 use mfnn::bench::Suite;
-use mfnn::cluster::{run_cluster, ClusterConfig, Job};
+use mfnn::cluster::ClusterConfig;
 use mfnn::fixed::FixedSpec;
 use mfnn::hw::FpgaDevice;
 use mfnn::nn::dataset;
 use mfnn::nn::lut::ActKind;
 use mfnn::nn::mlp::{LutParams, MlpSpec};
-use mfnn::nn::trainer::{TrainConfig, Trainer};
+use mfnn::nn::trainer::TrainConfig;
 use mfnn::report::{f, Table};
+use mfnn::session::NetJob;
 use mfnn::util::Rng;
+use mfnn::{CompileOptions, Compiler, Session, Target};
 use std::sync::Arc;
 
-fn mk_jobs(m: usize, steps: usize) -> Vec<Job> {
+const LR: f64 = 1.0 / 128.0;
+
+fn mk_jobs(compiler: &Compiler, m: usize, steps: usize) -> Vec<NetJob> {
     let fixed = FixedSpec::q(10).saturating();
     (0..m)
         .map(|i| {
@@ -22,26 +27,29 @@ fn mk_jobs(m: usize, steps: usize) -> Vec<Job> {
             let spec = MlpSpec::from_dims(
                 &format!("j{i}"), &[15, 24, 10], ActKind::Relu, ActKind::Identity,
                 fixed, LutParams::training(fixed)).unwrap();
+            let artifact =
+                compiler.compile_spec(&spec, &CompileOptions::training(16, LR)).unwrap();
             let (train, test) = dataset::mini_digits(240, seed).split(0.8, &mut Rng::new(seed));
-            Job {
-                name: format!("j{i}"), spec,
-                cfg: TrainConfig { batch: 16, lr: 1.0 / 128.0, steps, seed, log_every: 100 },
-                train_data: Arc::new(train), test_data: Arc::new(test),
+            NetJob {
+                artifact,
+                cfg: TrainConfig { batch: 16, lr: LR, steps, seed, log_every: 100 },
+                train: Arc::new(train), test: Arc::new(test),
             }
         })
         .collect()
 }
 
 fn main() {
+    let compiler = Compiler::new();
     let quick = std::env::var("MFNN_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let steps = if quick { 20 } else { 80 };
     let mut t = Table::new(vec!["M", "F", "mode", "sim makespan ms", "Σsteps/s sim", "host wall ms"])
         .with_title(format!("cluster scaling sweep ({steps} steps/job)"))
         .numeric();
     for (m, fb) in [(1usize, 1usize), (2, 1), (4, 1), (8, 1), (4, 2), (4, 4), (2, 4), (1, 4)] {
-        let jobs = mk_jobs(m, steps);
+        let jobs = mk_jobs(&compiler, m, steps);
         let cfg = ClusterConfig { boards: fb, sync_every: 20, ..Default::default() };
-        let r = run_cluster(&cfg, &jobs).unwrap();
+        let r = Session::train_many(&cfg, &jobs).unwrap();
         let total_steps: usize = r.results.iter().map(|x| x.steps).sum();
         t.row(vec![
             m.to_string(),
@@ -56,21 +64,27 @@ fn main() {
     println!("shape checks: M>F rows scale makespan ~M/F; F>M rows trade bus sync for compute.");
 
     // ---- per-board hot path: one SGD train step / one evaluation ----
-    // This is the loop every cluster worker spends its life in; its
-    // median is the train-step number tracked in BENCH_cluster.json.
+    // This is the loop every board-target session spends its life in;
+    // its median is the train-step number tracked in BENCH_cluster.json.
     let mut suite = Suite::new("cluster");
-    let job = mk_jobs(1, 1).pop().unwrap();
-    let mut t = Trainer::new(job.spec.clone(), FpgaDevice::selected(), job.cfg.clone())
-        .expect("bench trainer");
-    t.cfg.steps = 1;
-    let warm = t.train(&job.train_data).expect("warmup step");
+    let job = mk_jobs(&compiler, 1, 1).pop().unwrap();
+    let mut session =
+        Session::open(Arc::clone(&job.artifact), Target::Board(FpgaDevice::selected()))
+            .expect("bench session");
+    let mut cfg = job.cfg.clone();
+    cfg.steps = 1;
+    let warm = session.train(&job.train, &cfg).expect("warmup step");
     let step_lane_ops = warm.stats.lane_ops;
     suite.bench("train_step_15-24-10_b16", |b| {
-        b.iter_with_elements(step_lane_ops, || t.train(&job.train_data).unwrap().stats.cycles)
+        b.iter_with_elements(step_lane_ops, || {
+            session.train(&job.train, &cfg).unwrap().stats.cycles
+        })
     });
-    let (_, eval_stats) = t.evaluate(&job.test_data).expect("warmup eval");
+    let warm_eval = session.evaluate(&job.test).expect("warmup eval");
     suite.bench("evaluate_48rows_b16", |b| {
-        b.iter_with_elements(eval_stats.lane_ops, || t.evaluate(&job.test_data).unwrap().0)
+        b.iter_with_elements(warm_eval.stats.lane_ops, || {
+            session.evaluate(&job.test).unwrap().accuracy
+        })
     });
     suite.finish();
 }

@@ -29,16 +29,16 @@ fn main() {
     let y = rand(g.batch * g.spec.output_dim(), 1.0);
 
     let mut m = MatrixMachine::new(FpgaDevice::selected(), &h.program).unwrap();
-    m.bind(&h.program, "x", &x).unwrap();
-    m.bind(&h.program, "y", &y).unwrap();
+    m.bind_named("x", &x).unwrap();
+    m.bind_named("y", &y).unwrap();
     for l in 0..g.spec.layers.len() {
-        m.bind(&h.program, &format!("w{l}"), &ws[l]).unwrap();
-        m.bind(&h.program, &format!("b{l}"), &bs[l]).unwrap();
+        m.bind_named(&format!("w{l}"), &ws[l]).unwrap();
+        m.bind_named(&format!("b{l}"), &bs[l]).unwrap();
     }
 
     let mut suite = Suite::new("golden");
     suite.bench(&format!("sim_train_step ({lane_ops} lane-ops)"), |b| {
-        b.iter_with_elements(lane_ops, || m.run(&h.program).unwrap())
+        b.iter_with_elements(lane_ops, || m.execute())
     });
     suite.bench("golden_pjrt_train_step", |b| {
         b.iter_with_elements(lane_ops, || g.train_step(&x, &y, &ws, &bs).unwrap())

@@ -9,12 +9,13 @@ use mfnn::bench::Suite;
 use mfnn::fixed::FixedSpec;
 use mfnn::hw::actpro::ActPro;
 use mfnn::hw::mvm::Mvm;
-use mfnn::hw::{ExecPlan, FastSim, FpgaDevice};
+use mfnn::hw::{FastSim, FpgaDevice};
 use mfnn::isa::{MvmOp, Opcode};
 use mfnn::nn::lut::{ActKind, ActLut, AddrMode};
 use mfnn::perf::group::{OpClass, PerfModel};
 use mfnn::report::{f, Table};
 use mfnn::util::Rng;
+use mfnn::{Compiler, Session, Target};
 
 /// A Matrix-Machine-sized workload: `lanes` dot products of `len`-lane
 /// strided operands feeding an activation over the results (fusable),
@@ -145,13 +146,14 @@ fn main() {
         b.iter_with_elements(518, || a.run(1024))
     });
 
-    // ---- compiled ExecPlan hot path vs the sequential reference ----
+    // ---- compiled session hot path vs the sequential reference ----
     // The pre-plan training loop executed waves through the sequential
     // FastSim interpreter (re-resolving views and re-boxing cycle
-    // closures per step); the plan pre-resolves, fuses dot→act, and runs
-    // independent lanes across the worker pool. Same numerics — the
-    // median ratio of these two benchmarks is the headline speedup
-    // tracked in BENCH_group_perf.json.
+    // closures per step); the session opens the program's compiled
+    // ExecPlan (views pre-resolved, dot→act fused, independent lanes on
+    // the worker pool). Same numerics — the median ratio of these two
+    // benchmarks is the headline speedup tracked in
+    // BENCH_group_perf.json.
     let (lanes, len) = if suite.is_quick() { (128, 64) } else { (512, 256) };
     let (p, x, data) = layer_program(lanes, len);
     p.check().expect("bench program must validate");
@@ -168,17 +170,21 @@ fn main() {
         })
     });
     let device = FpgaDevice::selected();
-    let plan = ExecPlan::new(&p, &device);
+    let compiler = Compiler::new();
+    let artifact = compiler.compile_program(&p).expect("bench artifact");
+    let plan = artifact.plan_for(&device);
     eprintln!(
         "  (plan: {} fused, {} parallel waves, pool={} threads)",
         plan.fused_waves(),
         plan.parallel_waves(),
         plan.pool_threads()
     );
+    let mut session =
+        Session::open(artifact.clone(), Target::Board(device)).expect("bench session");
+    let hx = artifact.tensor("x").expect("x handle");
+    session.write(&hx, &data).expect("bind x");
     suite.bench(&format!("plan_layer_{tag}"), |b| {
-        let mut st = plan.state();
-        plan.write_buffer(&mut st, x, &data);
-        b.iter_with_elements(lane_ops, || plan.execute(&mut st).cycles)
+        b.iter_with_elements(lane_ops, || session.step().cycles)
     });
 
     let t = suite.finish();

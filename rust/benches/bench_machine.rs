@@ -23,7 +23,7 @@ fn bind_random(m: &mut MatrixMachine, p: &mfnn::assembler::Program, seed: u64) {
         use mfnn::assembler::BufKind::*;
         if matches!(b.kind, Input | Weight | Bias | Target) {
             let data: Vec<i16> = (0..b.len()).map(|_| r.gen_range_i64(-800, 800) as i16).collect();
-            m.bind(p, &b.name, &data).unwrap();
+            m.bind_named(&b.name, &data).unwrap();
         }
     }
 }
@@ -42,7 +42,7 @@ fn main() {
         bind_random(&mut m, &h.program, 1);
         suite.bench(
             &format!("fwd_{}x{}x{}_b{batch} ({lane_ops} lane-ops)", dims[0], dims[1], dims[2]),
-            |b| b.iter_with_elements(lane_ops, || m.run(&h.program).unwrap()),
+            |b| b.iter_with_elements(lane_ops, || m.execute()),
         );
     }
 
@@ -56,7 +56,7 @@ fn main() {
         bind_random(&mut m, &h.program, 2);
         suite.bench(
             &format!("train_{}x{}x{}_b{batch} ({lane_ops} lane-ops)", dims[0], dims[1], dims[2]),
-            |b| b.iter_with_elements(lane_ops, || m.run(&h.program).unwrap()),
+            |b| b.iter_with_elements(lane_ops, || m.execute()),
         );
     }
     suite.finish();

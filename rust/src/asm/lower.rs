@@ -47,6 +47,8 @@ pub struct LoweredNet {
     pub mlp: LoweredMlp,
     /// Was this a training net?
     pub train: bool,
+    /// Learning rate of the `TRAIN` directive (training nets only).
+    pub lr: Option<f64>,
     /// Batch size (INPUT rows).
     pub batch: usize,
 }
@@ -241,7 +243,7 @@ pub fn lower_net(net: &AsmNet) -> Result<LoweredNet, AsmError> {
         .buffers
         .iter()
         .any(|b| b.name == *out_name && matches!(b.kind, BufKind::Output)));
-    Ok(LoweredNet { spec, train: train.is_some(), batch, mlp })
+    Ok(LoweredNet { spec, train: train.is_some(), lr: train.map(|(_, lr)| lr), batch, mlp })
 }
 
 fn rename(mlp: &mut LoweredMlp, from: &str, to: &str) {
@@ -300,13 +302,13 @@ OUTPUT scores
         let q = |n: usize, r: &mut Rng| -> Vec<i16> {
             (0..n).map(|_| f.from_f64(r.gen_f64() - 0.5)).collect()
         };
-        m.bind(p, "img", &q(8 * 15, &mut r)).unwrap();
-        m.bind(p, "w0", &q(15 * 16, &mut r)).unwrap();
-        m.bind(p, "b0", &q(16, &mut r)).unwrap();
-        m.bind(p, "w1", &q(16 * 10, &mut r)).unwrap();
-        m.bind(p, "b1", &q(10, &mut r)).unwrap();
-        m.run(p).unwrap();
-        assert_eq!(m.read(p, "scores").unwrap().len(), 80);
+        m.bind_named("img", &q(8 * 15, &mut r)).unwrap();
+        m.bind_named("w0", &q(15 * 16, &mut r)).unwrap();
+        m.bind_named("b0", &q(16, &mut r)).unwrap();
+        m.bind_named("w1", &q(16 * 10, &mut r)).unwrap();
+        m.bind_named("b1", &q(10, &mut r)).unwrap();
+        m.execute();
+        assert_eq!(m.read_named("scores").unwrap().len(), 80);
     }
 
     #[test]

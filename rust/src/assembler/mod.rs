@@ -24,5 +24,5 @@ pub mod resource;
 pub mod vhdl;
 
 
-pub use program::{BufId, BufKind, BufferDecl, LaneOp, Program, Step, View, Wave};
+pub use program::{BufId, BufKind, BufferDecl, LaneOp, Program, Step, SymbolTable, View, Wave};
 pub use resource::{Allocation, ResourceModel};

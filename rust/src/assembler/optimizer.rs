@@ -326,10 +326,10 @@ mod tests {
         let run = |prog: &Program| -> (Vec<i16>, Vec<i16>) {
             let mut m = MatrixMachine::new(FpgaDevice::selected(), prog).unwrap();
             for (n, d) in &binds {
-                m.bind(prog, n, d).unwrap();
+                m.bind_named(n, d).unwrap();
             }
-            m.run(prog).unwrap();
-            (m.read(prog, "w0").unwrap(), m.read(prog, "o1").unwrap())
+            m.execute();
+            (m.read_named("w0").unwrap().to_vec(), m.read_named("o1").unwrap().to_vec())
         };
         assert_eq!(run(&h.program), run(&opt_prog));
     }
@@ -351,7 +351,7 @@ mod tests {
         optimize(&mut opt_prog);
         let cycles = |prog: &Program| {
             let mut m = MatrixMachine::new(FpgaDevice::selected(), prog).unwrap();
-            m.run(prog).unwrap().cycles
+            m.execute().cycles
         };
         assert!(cycles(&opt_prog) <= cycles(&h.program));
     }

@@ -222,6 +222,11 @@ impl Program {
         self.buffers.iter().position(|b| b.name == name)
     }
 
+    /// Resolve every buffer name once into a [`SymbolTable`].
+    pub fn symbols(&self) -> SymbolTable {
+        SymbolTable::new(self)
+    }
+
     /// All waves in schedule order.
     pub fn waves(&self) -> impl Iterator<Item = &Wave> {
         self.steps.iter().filter_map(|s| match s {
@@ -345,6 +350,97 @@ impl Program {
         }
         Ok(out)
     }
+}
+
+/// A program's tensor names resolved once into [`BufId`]s.
+///
+/// Every front door used to re-scan `Program::buffers` on each
+/// stringly-typed `bind`/`read`; the table does the name → id resolution
+/// once (binary search afterwards) and answers near-miss queries for
+/// "unknown tensor, did you mean …" diagnostics. Built by
+/// [`crate::hw::MatrixMachine`] at construction and by the session
+/// compiler for [`crate::session::TensorHandle`]s.
+#[derive(Debug, Clone, Default)]
+pub struct SymbolTable {
+    /// `(name, id)` pairs sorted by name (lowest id wins on duplicates,
+    /// matching [`Program::buffer_named`]).
+    entries: Vec<(String, BufId)>,
+}
+
+impl SymbolTable {
+    /// Build the table for `program`.
+    pub fn new(program: &Program) -> SymbolTable {
+        let mut entries: Vec<(String, BufId)> = program
+            .buffers
+            .iter()
+            .enumerate()
+            .map(|(id, b)| (b.name.clone(), id))
+            .collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+        entries.dedup_by(|later, earlier| later.0 == earlier.0);
+        SymbolTable { entries }
+    }
+
+    /// Number of distinct tensor names.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the program declares no buffers.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Resolve a name to its buffer id.
+    pub fn resolve(&self, name: &str) -> Option<BufId> {
+        self.entries
+            .binary_search_by(|(n, _)| n.as_str().cmp(name))
+            .ok()
+            .map(|i| self.entries[i].1)
+    }
+
+    /// All `(name, id)` pairs in name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, BufId)> {
+        self.entries.iter().map(|(n, id)| (n.as_str(), *id))
+    }
+
+    /// Closest declared name to a miss (edit distance ≤ max(2, len/3)),
+    /// for "did you mean …" diagnostics.
+    pub fn suggest(&self, name: &str) -> Option<&str> {
+        let mut best: Option<(usize, &str)> = None;
+        for (n, _) in &self.entries {
+            let d = levenshtein(name, n);
+            if best.is_none_or(|(bd, _)| d < bd) {
+                best = Some((d, n.as_str()));
+            }
+        }
+        let (d, n) = best?;
+        let limit = (name.chars().count().max(n.chars().count()) / 3).max(2);
+        (d <= limit).then_some(n)
+    }
+
+    /// The ", did you mean …?" suffix for an unknown name (empty when no
+    /// declared name is close enough).
+    pub fn hint(&self, name: &str) -> String {
+        self.suggest(name).map(|s| format!(", did you mean {s:?}?")).unwrap_or_default()
+    }
+}
+
+/// Classic two-row Levenshtein distance (tensor names are short).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -496,5 +592,41 @@ mod tests {
     fn total_lane_ops_counts_work() {
         let p = sample_program();
         assert_eq!(p.total_lane_ops(), 8); // two 4-lane waves
+    }
+
+    #[test]
+    fn symbol_table_resolves_and_suggests() {
+        let mut p = Program::new("s", FixedSpec::PAPER);
+        let w0 = p.buffer("weights0", 4, 4, BufKind::Weight);
+        let b0 = p.buffer("bias0", 4, 1, BufKind::Bias);
+        let x = p.buffer("x", 4, 1, BufKind::Input);
+        let t = p.symbols();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.resolve("weights0"), Some(w0));
+        assert_eq!(t.resolve("bias0"), Some(b0));
+        assert_eq!(t.resolve("x"), Some(x));
+        assert_eq!(t.resolve("nope_at_all"), None);
+        // close miss suggests, far miss does not
+        assert_eq!(t.suggest("weighs0"), Some("weights0"));
+        assert!(t.hint("weigths0").contains("did you mean"));
+        assert_eq!(t.suggest("completely_unrelated"), None);
+        assert_eq!(t.hint("completely_unrelated"), "");
+    }
+
+    #[test]
+    fn symbol_table_duplicate_names_keep_first_id() {
+        let mut p = Program::new("d", FixedSpec::PAPER);
+        let first = p.buffer("t", 2, 1, BufKind::Temp);
+        p.buffer("t", 4, 1, BufKind::Temp);
+        assert_eq!(p.symbols().resolve("t"), Some(first));
+        assert_eq!(p.symbols().resolve("t"), p.buffer_named("t"));
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("w0", "w1"), 1);
     }
 }

@@ -37,6 +37,10 @@ impl Default for ClusterConfig {
     }
 }
 
+/// Per-layer quantised parameters `(weights, biases)` as shipped over
+/// the bus.
+pub type Params = (Vec<Vec<i16>>, Vec<Vec<i16>>);
+
 /// One training job.
 #[derive(Debug, Clone)]
 pub struct Job {
@@ -50,6 +54,10 @@ pub struct Job {
     pub train_data: Arc<Dataset>,
     /// Test split.
     pub test_data: Arc<Dataset>,
+    /// Optional starting parameters (checkpoint restore / session
+    /// weights); `None` ⇒ each board initialises from `cfg.seed` (divided
+    /// jobs then broadcast replica 0's init).
+    pub initial: Option<Params>,
 }
 
 /// Result of one job.
@@ -71,6 +79,11 @@ pub struct JobResult {
     pub sim_bus_s: f64,
     /// Steps executed (per replica).
     pub steps: usize,
+    /// Final per-layer weights (post-averaging for divided jobs) — what a
+    /// [`crate::session::Session`] adopts after a cluster train.
+    pub weights: Vec<Vec<i16>>,
+    /// Final per-layer biases.
+    pub biases: Vec<Vec<i16>>,
 }
 
 /// Whole-run report.
@@ -121,7 +134,17 @@ pub fn average_weights(replicas: &[Vec<Vec<i16>>]) -> Vec<Vec<i16>> {
 }
 
 /// Run a set of jobs on the cluster; blocks until completion.
+#[deprecated(note = "use `session::Session` (Target::Cluster) or \
+                     `session::Session::train_many`; `cluster::execute` \
+                     is the bare engine entry")]
 pub fn run_cluster(cfg: &ClusterConfig, jobs: &[Job]) -> Result<ClusterReport, ClusterError> {
+    execute(cfg, jobs)
+}
+
+/// Engine entry point: run a set of jobs on the cluster; blocks until
+/// completion. Front doors ([`crate::session::Session::train_many`], the
+/// deprecated [`run_cluster`]) delegate here.
+pub fn execute(cfg: &ClusterConfig, jobs: &[Job]) -> Result<ClusterReport, ClusterError> {
     if jobs.is_empty() {
         return Err(ClusterError::NoJobs);
     }
@@ -272,12 +295,16 @@ fn run_single(
 
     worker.send(Cmd::NewTrainer { job: job_id, spec: job.spec.clone(), cfg: job.cfg.clone() });
     expect_ready(worker, &job.name, board)?;
+    if let Some((w0, b0)) = &job.initial {
+        worker.send(Cmd::SetWeights { job: job_id, w: w0.clone(), b: b0.clone() });
+        expect_ready(worker, &job.name, board)?;
+    }
     worker.send(Cmd::TrainChunk {
         job: job_id,
         data: Arc::clone(&job.train_data),
         steps: job.cfg.steps,
     });
-    let (curve, stats, sim_s, _, _) = expect_chunk(worker, &job.name, board)?;
+    let (curve, stats, sim_s, final_w, final_b) = expect_chunk(worker, &job.name, board)?;
 
     worker.send(Cmd::Evaluate { job: job_id, data: Arc::clone(&job.test_data) });
     let (accuracy, eval_stats, eval_s) = match worker.recv() {
@@ -312,6 +339,8 @@ fn run_single(
             sim_compute_s: sim_s + eval_s,
             sim_bus_s: bus_s,
             steps: job.cfg.steps,
+            weights: final_w,
+            biases: final_b,
         },
         total,
     ))
@@ -344,13 +373,20 @@ fn run_divided(
     for (i, w) in group_workers.iter().enumerate() {
         expect_ready(w, &job.name, boards[i])?;
     }
-    // Replicas start from identical weights: broadcast replica 0's init.
-    group_workers[0].send(Cmd::TrainChunk {
-        job: job_id,
-        data: Arc::clone(&job.train_data),
-        steps: 0,
-    });
-    let (_, _, _, w0, b0) = expect_chunk(group_workers[0], &job.name, boards[0])?;
+    // Replicas start from identical weights: the job's explicit initial
+    // parameters when given, else replica 0's seed init is broadcast.
+    let (w0, b0) = match &job.initial {
+        Some((w0, b0)) => (w0.clone(), b0.clone()),
+        None => {
+            group_workers[0].send(Cmd::TrainChunk {
+                job: job_id,
+                data: Arc::clone(&job.train_data),
+                steps: 0,
+            });
+            let (_, _, _, w0, b0) = expect_chunk(group_workers[0], &job.name, boards[0])?;
+            (w0, b0)
+        }
+    };
     for (i, w) in group_workers.iter().enumerate() {
         w.send(Cmd::SetWeights { job: job_id, w: w0.clone(), b: b0.clone() });
         expect_ready(w, &job.name, boards[i])?;
@@ -362,6 +398,9 @@ fn run_divided(
     let mut stats = RunStats::default();
     let mut compute_critical = 0.0f64;
     let mut bus_total = 0.0f64;
+    // Final synced parameters (what the last averaging round broadcast).
+    let mut cur_w = w0;
+    let mut cur_b = b0;
     while done < total_steps {
         let steps = sync_every.min(total_steps - done);
         for w in group_workers {
@@ -401,6 +440,8 @@ fn run_divided(
             w.send(Cmd::SetWeights { job: job_id, w: avg_w.clone(), b: avg_b.clone() });
             times[i] += sync_s / k as f64;
         }
+        cur_w = avg_w;
+        cur_b = avg_b;
         for (i, w) in group_workers.iter().enumerate() {
             expect_ready(w, &job.name, boards[i])?;
         }
@@ -437,6 +478,8 @@ fn run_divided(
             sim_compute_s: compute_critical + eval_s,
             sim_bus_s: bus_total,
             steps: total_steps,
+            weights: cur_w,
+            biases: cur_b,
         },
     ))
 }
@@ -469,6 +512,7 @@ mod tests {
             cfg: TrainConfig { batch: 16, lr: 1.0 / 256.0, steps, seed, log_every: 10 },
             train_data: Arc::new(train),
             test_data: Arc::new(test),
+            initial: None,
         }
     }
 
@@ -476,7 +520,7 @@ mod tests {
     fn one_to_one_two_jobs_two_boards() {
         let cfg = ClusterConfig { boards: 2, ..Default::default() };
         let jobs = vec![mk_job("a", 1, 60), mk_job("b", 2, 60)];
-        let r = run_cluster(&cfg, &jobs).unwrap();
+        let r = execute(&cfg, &jobs).unwrap();
         assert_eq!(r.placement.mode, PlacementMode::OneToOne);
         assert_eq!(r.results.len(), 2);
         for jr in &r.results {
@@ -494,7 +538,7 @@ mod tests {
         let cfg = ClusterConfig { boards: 2, ..Default::default() };
         let jobs =
             vec![mk_job("a", 1, 25), mk_job("b", 2, 25), mk_job("c", 3, 25), mk_job("d", 4, 25)];
-        let r = run_cluster(&cfg, &jobs).unwrap();
+        let r = execute(&cfg, &jobs).unwrap();
         assert_eq!(r.placement.mode, PlacementMode::Sequential);
         assert_eq!(r.metrics.jobs_completed, 4);
         // a board running two jobs should take about twice one job's time
@@ -507,12 +551,46 @@ mod tests {
         let cfg =
             ClusterConfig { boards: 3, sync_every: 15, ..Default::default() };
         let jobs = vec![mk_job("dp", 5, 60)];
-        let r = run_cluster(&cfg, &jobs).unwrap();
+        let r = execute(&cfg, &jobs).unwrap();
         assert_eq!(r.placement.mode, PlacementMode::Divided);
         assert_eq!(r.results[0].boards, vec![0, 1, 2]);
         assert_eq!(r.metrics.sync_rounds, 4); // 60/15
         assert!(r.results[0].accuracy > 0.7, "acc {}", r.results[0].accuracy);
         assert!(r.metrics.bus_bytes > 0);
+    }
+
+    #[test]
+    fn initial_weights_respected_and_final_weights_reported() {
+        // steps = 0 ⇒ the job's explicit initial parameters come back
+        // untouched as the final parameters, on both scheduling paths.
+        let shape_job = mk_job("shape", 6, 1);
+        let w0: Vec<Vec<i16>> = shape_job
+            .spec
+            .layers
+            .iter()
+            .map(|l| vec![7i16; l.inputs * l.outputs])
+            .collect();
+        let b0: Vec<Vec<i16>> = shape_job.spec.layers.iter().map(|l| vec![3i16; l.outputs]).collect();
+        let mut single = mk_job("single", 6, 0);
+        single.initial = Some((w0.clone(), b0.clone()));
+        let r = execute(&ClusterConfig { boards: 1, ..Default::default() }, &[single]).unwrap();
+        assert_eq!(r.results[0].weights, w0);
+        assert_eq!(r.results[0].biases, b0);
+        let mut divided = mk_job("divided", 6, 0);
+        divided.initial = Some((w0.clone(), b0.clone()));
+        let r = execute(&ClusterConfig { boards: 2, ..Default::default() }, &[divided]).unwrap();
+        assert_eq!(r.placement.mode, PlacementMode::Divided);
+        assert_eq!(r.results[0].weights, w0);
+        assert_eq!(r.results[0].biases, b0);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn run_cluster_shim_delegates_to_execute() {
+        let cfg = ClusterConfig { boards: 1, ..Default::default() };
+        let r = run_cluster(&cfg, &[mk_job("shim", 4, 10)]).unwrap();
+        assert_eq!(r.results.len(), 1);
+        assert!(matches!(run_cluster(&cfg, &[]), Err(ClusterError::NoJobs)));
     }
 
     #[test]
@@ -532,7 +610,7 @@ mod tests {
         let jobs = vec![mk_job("good", 8, 30), bad];
         let cfg = ClusterConfig { boards: 2, ..Default::default() };
         let t0 = std::time::Instant::now();
-        let err = run_cluster(&cfg, &jobs).unwrap_err();
+        let err = execute(&cfg, &jobs).unwrap_err();
         assert!(matches!(err, ClusterError::Worker(ref name, _, _) if name == "bad"), "{err}");
         assert!(t0.elapsed().as_secs() < 30, "cluster hung on worker failure");
     }
@@ -540,12 +618,12 @@ mod tests {
     #[test]
     fn errors_propagate() {
         assert!(matches!(
-            run_cluster(&ClusterConfig::default(), &[]),
+            execute(&ClusterConfig::default(), &[]),
             Err(ClusterError::NoJobs)
         ));
         let cfg = ClusterConfig { device: "nope".into(), ..Default::default() };
         assert!(matches!(
-            run_cluster(&cfg, &[mk_job("a", 1, 5)]),
+            execute(&cfg, &[mk_job("a", 1, 5)]),
             Err(ClusterError::UnknownDevice(_))
         ));
     }

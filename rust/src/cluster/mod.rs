@@ -34,6 +34,8 @@ pub mod scheduler;
 pub mod worker;
 
 pub use bus::SystemBus;
-pub use leader::{run_cluster, ClusterConfig, ClusterReport, Job, JobResult};
+pub use leader::{execute, ClusterConfig, ClusterError, ClusterReport, Job, JobResult, Params};
+#[allow(deprecated)]
+pub use leader::run_cluster;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use scheduler::{schedule, Placement, PlacementMode};

@@ -160,7 +160,7 @@ fn worker_main(
         match cmd {
             Cmd::Shutdown => break,
             Cmd::NewTrainer { job, spec, cfg } => {
-                match Trainer::new(spec, device, cfg) {
+                match Trainer::build(spec, device, cfg) {
                     Ok(t) => {
                         trainers.insert(job, t);
                         let _ = reply_tx.send(Reply::Ready { job });

@@ -4,20 +4,31 @@
 //!
 //! Two execution paths share the same numerics:
 //!
-//! * [`MatrixMachine::run`] — the fast path: a compiled, arena-backed
-//!   [`super::plan::ExecPlan`] built once at machine construction.
-//!   Views are pre-resolved, per-wave cycle charges are precomputed from
-//!   the structural per-batch model ([`crate::perf::group`]) + the
-//!   DDR/DMA model + ring distribution overhead, adjacent dot→activation
-//!   waves are fused, and independent lanes execute across a persistent
-//!   worker pool. Groups execute batches in parallel; a wave's cost is
-//!   the per-group batch schedule's makespan.
-//! * [`MatrixMachine::run_verified`] — the checked path: every wave is
-//!   additionally lowered to microcode ([`crate::assembler::microcode_gen`])
-//!   and executed on the structural [`super::group::MvmGroup`] /
-//!   [`super::group::ActproGroup`] interpreters; outputs are asserted
-//!   bit-identical to the fast path. Used by integration tests and
-//!   available from the CLI (`--verify`).
+//! * [`MatrixMachine::execute`] — the fast path: a compiled, arena-backed
+//!   [`super::plan::ExecPlan`] built once at machine construction (or
+//!   shared across machines via [`MatrixMachine::with_plan`] — the
+//!   session layer compiles a net once and opens many machines on the
+//!   same plan). Views are pre-resolved, per-wave cycle charges are
+//!   precomputed from the structural per-batch model
+//!   ([`crate::perf::group`]) + the DDR/DMA model + ring distribution
+//!   overhead, adjacent dot→activation waves are fused, and independent
+//!   lanes execute across a persistent worker pool. Groups execute
+//!   batches in parallel; a wave's cost is the per-group batch schedule's
+//!   makespan.
+//! * [`MatrixMachine::execute_verified`] — the checked path: every wave
+//!   is additionally lowered to microcode
+//!   ([`crate::assembler::microcode_gen`]) and executed on the structural
+//!   [`super::group::MvmGroup`] / [`super::group::ActproGroup`]
+//!   interpreters; outputs are asserted bit-identical to the fast path.
+//!   Used by integration tests and available from the CLI (`--verify`).
+//!
+//! Tensor I/O is resolved through the program's
+//! [`crate::assembler::program::SymbolTable`] built once at construction:
+//! [`MatrixMachine::bind_named`] / [`MatrixMachine::read_named`] look a
+//! name up in the table (misses come back with a "did you mean …" hint),
+//! and [`MatrixMachine::write_id`] / [`MatrixMachine::read_id`] skip
+//! names entirely for pre-resolved ids (what
+//! [`crate::session::TensorHandle`] and the trainer's hot loops use).
 //!
 //! Ring overhead model: each batch's microcode + operands are distributed
 //! over the circular FIFO (Fig 4); we charge the worst-case hop count
@@ -27,7 +38,7 @@
 use super::fpga::FpgaDevice;
 use super::plan::{ExecPlan, PlanState};
 use super::Cycle;
-use crate::assembler::program::{Program, ProgramError};
+use crate::assembler::program::{Program, ProgramError, SymbolTable};
 use std::sync::Arc;
 use thiserror::Error;
 
@@ -37,9 +48,10 @@ pub enum MachineError {
     /// Program failed validation.
     #[error("invalid program: {0}")]
     Invalid(#[from] ProgramError),
-    /// A named buffer is missing.
-    #[error("unknown buffer {0:?}")]
-    UnknownBuffer(String),
+    /// A named tensor is missing (the second field is the pre-rendered
+    /// ", did you mean …?" hint, empty when no declared name is close).
+    #[error("unknown tensor {0:?}{1}")]
+    UnknownBuffer(String, String),
     /// Bound data has the wrong length.
     #[error("buffer {0:?} expects {1} lanes, got {2}")]
     LengthMismatch(String, usize, usize),
@@ -94,14 +106,16 @@ impl RunStats {
 }
 
 /// One simulated Matrix Machine: a shared compiled plan + this machine's
-/// private run state (lane arena, LUT residency).
+/// private run state (lane arena, LUT residency) + the program's symbol
+/// table resolved once.
 #[derive(Debug, Clone)]
 pub struct MatrixMachine {
     /// The board this machine is generated for.
     pub device: FpgaDevice,
     plan: Arc<ExecPlan>,
     state: PlanState,
-    program_name: String,
+    program: Arc<Program>,
+    symbols: SymbolTable,
 }
 
 impl MatrixMachine {
@@ -110,13 +124,50 @@ impl MatrixMachine {
     pub fn new(device: FpgaDevice, program: &Program) -> Result<MatrixMachine, MachineError> {
         program.check()?;
         let plan = Arc::new(ExecPlan::new(program, &device));
+        MatrixMachine::with_plan(device, program, plan)
+    }
+
+    /// Build a machine around an already-compiled plan (validates the
+    /// program; the plan must have been compiled from it for `device`).
+    ///
+    /// This is the plan-reuse path: the session layer caches one
+    /// [`ExecPlan`] per `(net, device)` and every
+    /// [`crate::session::Session`] opened on that pair shares it. Each
+    /// machine still owns a copy of the (small) program for verification
+    /// and symbol resolution plus its private [`PlanState`]; the
+    /// expensive part — plan compilation (view resolution, fusion, cycle
+    /// precomputation) — happens once.
+    pub fn with_plan(
+        device: FpgaDevice,
+        program: &Program,
+        plan: Arc<ExecPlan>,
+    ) -> Result<MatrixMachine, MachineError> {
+        program.check()?;
+        debug_assert_eq!(plan.name(), program.name, "plan compiled from a different program");
         let state = plan.state();
-        Ok(MatrixMachine { device, plan, state, program_name: program.name.clone() })
+        let symbols = program.symbols();
+        Ok(MatrixMachine {
+            device,
+            plan,
+            state,
+            program: Arc::new(program.clone()),
+            symbols,
+        })
     }
 
     /// Program name this machine was built for.
     pub fn program_name(&self) -> &str {
-        &self.program_name
+        &self.program.name
+    }
+
+    /// The program this machine executes.
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    /// The program's symbol table (names resolved once at construction).
+    pub fn symbols(&self) -> &SymbolTable {
+        &self.symbols
     }
 
     /// The compiled execution plan (diagnostics/benches).
@@ -124,63 +175,102 @@ impl MatrixMachine {
         &self.plan
     }
 
+    fn resolve(&self, name: &str) -> Result<usize, MachineError> {
+        self.symbols
+            .resolve(name)
+            .ok_or_else(|| MachineError::UnknownBuffer(name.to_string(), self.symbols.hint(name)))
+    }
+
+    /// Bind data to a tensor by name (resolved through the symbol table;
+    /// misses come back with a "did you mean …" hint).
+    pub fn bind_named(&mut self, name: &str, data: &[i16]) -> Result<(), MachineError> {
+        let id = self.resolve(name)?;
+        self.write_id(id, data)
+    }
+
+    /// Read a tensor by name after a run.
+    pub fn read_named(&self, name: &str) -> Result<&[i16], MachineError> {
+        let id = self.resolve(name)?;
+        Ok(self.plan.read_buffer(&self.state, id))
+    }
+
+    /// Bind data to a tensor by pre-resolved buffer id (the typed-handle
+    /// hot path: no name lookup, just a length check).
+    pub fn write_id(&mut self, id: usize, data: &[i16]) -> Result<(), MachineError> {
+        let want = self.plan.buffer_len(id);
+        if want != data.len() {
+            return Err(MachineError::LengthMismatch(
+                self.program.buffers[id].name.clone(),
+                want,
+                data.len(),
+            ));
+        }
+        self.plan.write_buffer(&mut self.state, id, data);
+        Ok(())
+    }
+
+    /// Read a tensor by pre-resolved buffer id.
+    pub fn read_id(&self, id: usize) -> &[i16] {
+        self.plan.read_buffer(&self.state, id)
+    }
+
+    /// Execute the compiled plan once on the fast path.
+    pub fn execute(&mut self) -> RunStats {
+        self.plan.execute(&mut self.state)
+    }
+
+    /// Execute once with per-wave structural verification (slow;
+    /// tests/CLI).
+    ///
+    /// Verification replays an **unfused** plan — one wave per source
+    /// step — so each wave can be checked against the microcode
+    /// interpreters individually; its cycle charges are identical to the
+    /// fused fast path (asserted by `sim_equivalence`).
+    pub fn execute_verified(&mut self) -> Result<RunStats, MachineError> {
+        let plan = ExecPlan::new_unfused(&self.program, &self.device);
+        plan.execute_verified(&mut self.state, &self.program)
+            .map_err(MachineError::VerifyMismatch)
+    }
+
     /// Bind data to a named buffer.
+    #[deprecated(note = "use `bind_named` (or a `session::TensorHandle`); \
+                         the program is stored in the machine")]
     pub fn bind(
         &mut self,
         program: &Program,
         name: &str,
         data: &[i16],
     ) -> Result<(), MachineError> {
-        let id = program
-            .buffer_named(name)
-            .ok_or_else(|| MachineError::UnknownBuffer(name.to_string()))?;
-        let want = self.plan.buffer_len(id);
-        if want != data.len() {
-            return Err(MachineError::LengthMismatch(name.to_string(), want, data.len()));
-        }
-        self.plan.write_buffer(&mut self.state, id, data);
-        Ok(())
+        debug_assert_eq!(program.name, self.program.name);
+        self.bind_named(name, data)
     }
 
     /// Read a named buffer after a run.
+    #[deprecated(note = "use `read_named` (or a `session::TensorHandle`); \
+                         the program is stored in the machine")]
     pub fn read(&self, program: &Program, name: &str) -> Result<Vec<i16>, MachineError> {
-        let id = program
-            .buffer_named(name)
-            .ok_or_else(|| MachineError::UnknownBuffer(name.to_string()))?;
-        Ok(self.plan.read_buffer(&self.state, id).to_vec())
-    }
-
-    /// Read a buffer by id.
-    pub fn read_id(&self, id: usize) -> &[i16] {
-        self.plan.read_buffer(&self.state, id)
+        debug_assert_eq!(program.name, self.program.name);
+        self.read_named(name).map(<[i16]>::to_vec)
     }
 
     /// Execute the program on the fast (compiled-plan) path.
-    ///
-    /// The schedule was compiled into the plan at construction; `program`
-    /// must be the program this machine was built for.
+    #[deprecated(note = "use `execute`; the program is stored in the machine")]
     pub fn run(&mut self, program: &Program) -> Result<RunStats, MachineError> {
         debug_assert_eq!(
-            program.name, self.program_name,
+            program.name, self.program.name,
             "machine was compiled for a different program"
         );
-        Ok(self.plan.execute(&mut self.state))
+        Ok(self.execute())
     }
 
-    /// Execute with per-wave structural verification (slow; tests/CLI).
-    ///
-    /// Verification replays an **unfused** plan — one wave per source
-    /// step — so each wave can be checked against the microcode
-    /// interpreters individually; its cycle charges are identical to the
-    /// fused fast path (asserted by `sim_equivalence`).
+    /// Execute with per-wave structural verification.
+    #[deprecated(note = "use `execute_verified`; the program is stored in the machine")]
     pub fn run_verified(&mut self, program: &Program) -> Result<RunStats, MachineError> {
         debug_assert_eq!(
-            program.name, self.program_name,
+            program.name, self.program.name,
             "machine was compiled for a different program"
         );
-        let plan = ExecPlan::new_unfused(program, &self.device);
-        plan.execute_verified(&mut self.state, program)
-            .map_err(MachineError::VerifyMismatch)
+        self.execute_verified()
     }
 }
 
@@ -230,11 +320,11 @@ mod tests {
         let mut r = Rng::new(31);
         let xs: Vec<i16> = (0..64).map(|_| r.gen_range_i64(-3000, 3000) as i16).collect();
         let mut m = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
-        m.bind(&p, "x", &xs).unwrap();
-        let st = m.run(&p).unwrap();
+        m.bind_named("x", &xs).unwrap();
+        let st = m.execute();
         let lut = &p.luts[0];
         let want = lut.apply(&S.vadd(&xs, &xs));
-        assert_eq!(m.read(&p, "o").unwrap(), want);
+        assert_eq!(m.read_named("o").unwrap(), &want[..]);
         assert_eq!(st.waves, 2);
         assert_eq!(st.lane_ops, 128);
         assert!(st.dma_cycles > 0 && st.compute_cycles > 0 && st.lut_cycles > 0);
@@ -251,12 +341,31 @@ mod tests {
         let xs: Vec<i16> = (0..64).map(|_| r.gen_range_i64(-3000, 3000) as i16).collect();
         let mut fast = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
         let mut slow = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
-        fast.bind(&p, "x", &xs).unwrap();
-        slow.bind(&p, "x", &xs).unwrap();
-        let sf = fast.run(&p).unwrap();
-        let sv = slow.run_verified(&p).unwrap();
-        assert_eq!(fast.read(&p, "o").unwrap(), slow.read(&p, "o").unwrap());
+        fast.bind_named("x", &xs).unwrap();
+        slow.bind_named("x", &xs).unwrap();
+        let sf = fast.execute();
+        let sv = slow.execute_verified().unwrap();
+        assert_eq!(fast.read_named("o").unwrap(), slow.read_named("o").unwrap());
         assert_eq!(sf.cycles, sv.cycles);
+    }
+
+    #[test]
+    fn shared_plan_machines_are_independent() {
+        // Two machines on ONE compiled plan (the session reuse path):
+        // same cycles, private state.
+        let (p, x, _) = small_program();
+        let device = FpgaDevice::selected();
+        let plan = Arc::new(ExecPlan::new(&p, &device));
+        let mut a = MatrixMachine::with_plan(device, &p, Arc::clone(&plan)).unwrap();
+        let mut b = MatrixMachine::with_plan(device, &p, Arc::clone(&plan)).unwrap();
+        let xa: Vec<i16> = (0..64).collect();
+        let xb: Vec<i16> = (0..64).map(|v| -v).collect();
+        a.write_id(x, &xa).unwrap();
+        b.write_id(x, &xb).unwrap();
+        let sa = a.execute();
+        let sb = b.execute();
+        assert_eq!(sa.cycles, sb.cycles);
+        assert_ne!(a.read_named("o").unwrap(), b.read_named("o").unwrap());
     }
 
     #[test]
@@ -281,13 +390,13 @@ mod tests {
         let mut r = Rng::new(33);
         let data: Vec<i16> = (0..128 * 32).map(|_| r.gen_i16()).collect();
         let mut m = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
-        m.bind(&p, "a", &data).unwrap();
-        let st = m.run(&p).unwrap();
+        m.bind_named("a", &data).unwrap();
+        let st = m.execute();
         // expected: each lane dot(a[i], a[i+1])
         for i in 0..128 {
             let x = &data[i * 32..(i + 1) * 32];
             let y = &data[((i + 1) % 128) * 32..((i + 1) % 128) * 32 + 32];
-            assert_eq!(m.read(&p, "o").unwrap()[i], S.dot(x, y), "lane {i}");
+            assert_eq!(m.read_named("o").unwrap()[i], S.dot(x, y), "lane {i}");
         }
         // 2 full wavefronts (128 lanes / 64 procs), each costing one
         // 4-proc batch.
@@ -297,16 +406,44 @@ mod tests {
     }
 
     #[test]
-    fn errors_on_bad_bindings() {
+    fn errors_on_bad_bindings_with_suggestions() {
         let (p, _, _) = small_program();
         let mut m = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
+        // total miss: no hint
+        match m.bind_named("nope", &[0]) {
+            Err(MachineError::UnknownBuffer(name, hint)) => {
+                assert_eq!(name, "nope");
+                assert_eq!(hint, "");
+            }
+            other => panic!("expected UnknownBuffer, got {other:?}"),
+        }
+        // near miss: did-you-mean hint names the declared tensor
+        match m.read_named("0") {
+            Err(MachineError::UnknownBuffer(_, hint)) => {
+                assert!(hint.contains("did you mean \"o\""), "hint {hint:?}");
+            }
+            other => panic!("expected UnknownBuffer, got {other:?}"),
+        }
+        assert!(matches!(
+            m.bind_named("x", &[0; 3]),
+            Err(MachineError::LengthMismatch(_, 64, 3))
+        ));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_program_passing_shims_still_work() {
+        let (p, _, _) = small_program();
+        let xs: Vec<i16> = (0..64).collect();
+        let mut m = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
+        m.bind(&p, "x", &xs).unwrap();
+        let st = m.run(&p).unwrap();
+        assert_eq!(st.waves, 2);
+        let via_shim = m.read(&p, "o").unwrap();
+        assert_eq!(via_shim, m.read_named("o").unwrap().to_vec());
         assert!(matches!(
             m.bind(&p, "nope", &[0]),
-            Err(MachineError::UnknownBuffer(_))
-        ));
-        assert!(matches!(
-            m.bind(&p, "x", &[0; 3]),
-            Err(MachineError::LengthMismatch(_, 64, 3))
+            Err(MachineError::UnknownBuffer(_, _))
         ));
     }
 

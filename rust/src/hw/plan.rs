@@ -504,7 +504,7 @@ impl ExecPlan {
                         };
                         if let Some(Step::Wave(act)) = src.get(act_idx) {
                             if act.op == Opcode::ActivationFunction
-                                && lut_step.map_or(true, |l| Some(l) == act.lut)
+                                && lut_step.is_none_or(|l| Some(l) == act.lut)
                             {
                                 if let Some(fused_out) = try_fuse(&plan.bufs, w, act) {
                                     if let Some(l) = lut_step {

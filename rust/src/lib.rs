@@ -6,10 +6,13 @@
 //! the **Matrix Assembler** ([`asm`], [`assembler`]), the **Matrix Machine**
 //! simulated cycle-accurately ([`hw`]), the analytic performance/cost models
 //! ([`perf`]), MLP training lowered onto the vector ISA ([`nn`]), and the
-//! **multi-FPGA cluster coordinator** ([`cluster`]). The [`runtime`] module
-//! loads the JAX/Pallas golden model (AOT-compiled to HLO text by
-//! `python/compile/aot.py`) through PJRT and is used as a bit-exact oracle
-//! and host baseline. Python never runs at runtime.
+//! **multi-FPGA cluster coordinator** ([`cluster`]). The [`session`] module
+//! is the unified front door over all of them: [`Compiler`] produces
+//! compile-once [`Artifact`]s and [`Session`] runs them on a single board
+//! or a whole cluster with typed tensor handles and one [`enum@Error`].
+//! The [`runtime`] module loads the JAX/Pallas golden model (AOT-compiled
+//! to HLO text by `python/compile/aot.py`) through PJRT and is used as a
+//! bit-exact oracle and host baseline. Python never runs at runtime.
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index mapping
 //! every table/figure of the paper to modules and benches.
@@ -32,7 +35,10 @@ pub mod report;
 /// DESIGN.md §Runtime for how to enable it.
 #[cfg(feature = "xla")]
 pub mod runtime;
+pub mod session;
 pub mod util;
+
+pub use session::{Artifact, CompileOptions, Compiler, Error, Session, Target, TensorHandle};
 
 /// Crate version string (mirrors `Cargo.toml`).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -13,10 +13,10 @@
 use mfnn::asm::lower_file;
 use mfnn::assembler::vhdl;
 use mfnn::cli::{Args, Spec};
-use mfnn::cluster::{run_cluster, ClusterConfig, Job, SystemBus};
+use mfnn::cluster::{ClusterConfig, SystemBus};
 use mfnn::config::Config;
 use mfnn::fixed::FixedSpec;
-use mfnn::hw::{FpgaDevice, MatrixMachine};
+use mfnn::hw::FpgaDevice;
 use mfnn::isa::Width;
 use mfnn::nn::dataset;
 use mfnn::nn::lut::ActKind;
@@ -27,7 +27,9 @@ use mfnn::perf::group::{OpClass, PerfModel};
 use mfnn::report::{f, Table};
 #[cfg(feature = "xla")]
 use mfnn::runtime::{GoldenModel, Runtime};
+use mfnn::session::NetJob;
 use mfnn::util::Rng;
+use mfnn::{CompileOptions, Compiler, Session, Target};
 use std::path::Path;
 use std::process::ExitCode;
 use std::sync::Arc;
@@ -152,32 +154,33 @@ fn cmd_run(rest: &[String]) -> Result<(), String> {
     let args = parse_or_help(&spec, rest, "mfnn run", "Execute a net on one simulated board")?;
     let path = args.positional("net").unwrap();
     let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-    let nets = lower_file(&text).map_err(|e| e.to_string())?;
     let part = device_arg(&args)?;
     let seed: u64 = args.parse_or("seed", 1).map_err(|e| e.to_string())?;
-    for net in &nets {
-        let p = &net.mlp.program;
-        let mut m = MatrixMachine::new(FpgaDevice::new(part), p).map_err(|e| e.to_string())?;
-        // Bind random data to every host-facing buffer.
+    let compiler = Compiler::new();
+    let artifacts = compiler.compile_asm(&text).map_err(|e| e.to_string())?;
+    for artifact in &artifacts {
+        let dev = FpgaDevice::new(part);
+        let mut session = Session::open(Arc::clone(artifact), Target::Board(dev))
+            .map_err(|e| e.to_string())?;
+        // Bind random data to every host-facing tensor.
         let mut r = Rng::new(seed);
-        let fsp = net.spec.fixed;
-        for b in &p.buffers {
+        let fsp = artifact.fixed();
+        for h in artifact.tensors() {
             use mfnn::assembler::program::BufKind::*;
-            if matches!(b.kind, Input | Weight | Bias | Target) {
+            if matches!(h.kind(), Input | Weight | Bias | Target) {
                 let data: Vec<i16> =
-                    (0..b.len()).map(|_| fsp.from_f64((r.gen_f64() - 0.5) * 1.5)).collect();
-                m.bind(p, &b.name.clone(), &data).map_err(|e| e.to_string())?;
+                    (0..h.len()).map(|_| fsp.from_f64((r.gen_f64() - 0.5) * 1.5)).collect();
+                session.write(&h, &data).map_err(|e| e.to_string())?;
             }
         }
         let stats = if args.flag("verify") {
-            m.run_verified(p).map_err(|e| e.to_string())?
+            session.step_verified().map_err(|e| e.to_string())?
         } else {
-            m.run(p).map_err(|e| e.to_string())?
+            session.step()
         };
-        let dev = FpgaDevice::new(part);
         println!(
             "net {:?}: {} cycles (dma {} + compute {} + lut {} + ring {}), {:.3} ms simulated, {} lane-ops ({}/s)",
-            net.spec.name,
+            artifact.name(),
             stats.cycles,
             stats.dma_cycles,
             stats.compute_cycles,
@@ -198,8 +201,9 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
     let args = parse_or_help(&spec, rest, "mfnn train", "Run a training cluster from a config")?;
     let path = args.positional("config").unwrap();
     let cfg = Config::from_file(Path::new(path)).map_err(|e| e.to_string())?;
-    let (ccfg, jobs) = jobs_from_config(&cfg)?;
-    let report = run_cluster(&ccfg, &jobs).map_err(|e| e.to_string())?;
+    let compiler = Compiler::new();
+    let (ccfg, jobs) = jobs_from_config(&compiler, &cfg)?;
+    let report = Session::train_many(&ccfg, &jobs).map_err(|e| e.to_string())?;
     let mut t = Table::new(vec!["job", "boards", "steps", "accuracy", "sim compute", "sim bus"])
         .with_title(format!(
             "cluster: {} boards ({:?}), makespan {:.3} ms simulated",
@@ -223,8 +227,12 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-/// Build cluster + jobs from a launcher config (see `configs/demo.toml`).
-fn jobs_from_config(cfg: &Config) -> Result<(ClusterConfig, Vec<Job>), String> {
+/// Build cluster + session jobs from a launcher config (see
+/// `configs/demo.toml`).
+fn jobs_from_config(
+    compiler: &Compiler,
+    cfg: &Config,
+) -> Result<(ClusterConfig, Vec<NetJob>), String> {
     let ccfg = ClusterConfig {
         boards: cfg.int_or("cluster.boards", 2) as usize,
         device: cfg.str_or("cluster.device", "XC7S75-2"),
@@ -263,18 +271,22 @@ fn jobs_from_config(cfg: &Config) -> Result<(ClusterConfig, Vec<Job>), String> {
         let ds =
             dataset::by_name(&ds_name, n, seed).ok_or(format!("unknown dataset {ds_name:?}"))?;
         let (train, test) = ds.split(0.8, &mut Rng::new(seed));
-        jobs.push(Job {
-            name: name.clone(),
-            spec,
+        let batch = cfg.int_or(&format!("{pfx}.batch"), 16) as usize;
+        let lr = cfg.float_or(&format!("{pfx}.lr"), 1.0 / 128.0);
+        let artifact = compiler
+            .compile_spec(&spec, &CompileOptions::training(batch, lr))
+            .map_err(|e| e.to_string())?;
+        jobs.push(NetJob {
+            artifact,
             cfg: TrainConfig {
-                batch: cfg.int_or(&format!("{pfx}.batch"), 16) as usize,
-                lr: cfg.float_or(&format!("{pfx}.lr"), 1.0 / 128.0),
+                batch,
+                lr,
                 steps: cfg.int_or(&format!("{pfx}.steps"), 300) as usize,
                 seed,
                 log_every: cfg.int_or(&format!("{pfx}.log_every"), 25) as usize,
             },
-            train_data: Arc::new(train),
-            test_data: Arc::new(test),
+            train: Arc::new(train),
+            test: Arc::new(test),
         });
     }
     Ok((ccfg, jobs))
@@ -427,23 +439,23 @@ fn cmd_golden(rest: &[String]) -> Result<(), String> {
     let bs: Vec<Vec<i16>> = g.spec.layers.iter().map(|l| rand(l.outputs, 0.4, &mut r)).collect();
     let x = rand(g.batch * g.spec.input_dim(), 2.0, &mut r);
     let y = rand(g.batch * g.spec.output_dim(), 1.0, &mut r);
-    let mut m =
-        MatrixMachine::new(FpgaDevice::selected(), &h.program).map_err(|e| e.to_string())?;
-    m.bind(&h.program, "x", &x).map_err(|e| e.to_string())?;
-    m.bind(&h.program, "y", &y).map_err(|e| e.to_string())?;
+    let mut m = mfnn::hw::MatrixMachine::new(FpgaDevice::selected(), &h.program)
+        .map_err(|e| e.to_string())?;
+    m.bind_named("x", &x).map_err(|e| e.to_string())?;
+    m.bind_named("y", &y).map_err(|e| e.to_string())?;
     for l in 0..g.spec.layers.len() {
-        m.bind(&h.program, &format!("w{l}"), &ws[l]).map_err(|e| e.to_string())?;
-        m.bind(&h.program, &format!("b{l}"), &bs[l]).map_err(|e| e.to_string())?;
+        m.bind_named(&format!("w{l}"), &ws[l]).map_err(|e| e.to_string())?;
+        m.bind_named(&format!("b{l}"), &bs[l]).map_err(|e| e.to_string())?;
     }
-    m.run(&h.program).map_err(|e| e.to_string())?;
+    m.execute();
     let step = g.train_step(&x, &y, &ws, &bs).map_err(|e| e.to_string())?;
     let last = g.spec.layers.len() - 1;
-    let sim_out = m.read(&h.program, &format!("o{last}")).unwrap();
-    if sim_out != step.out {
+    let sim_out = m.read_named(&format!("o{last}")).unwrap();
+    if sim_out != &step.out[..] {
         return Err("FORWARD OUTPUTS DIVERGE".into());
     }
     for l in 0..g.spec.layers.len() {
-        if m.read(&h.program, &format!("w{l}")).unwrap() != step.weights[l] {
+        if m.read_named(&format!("w{l}")).unwrap() != &step.weights[l][..] {
             return Err(format!("LAYER {l} WEIGHTS DIVERGE"));
         }
     }

@@ -7,7 +7,19 @@
 //! All generators are deterministic from a seed.
 
 use super::float_ref::argmax;
+use crate::fixed::FixedSpec;
 use crate::util::Rng;
+use std::ops::Range;
+
+/// In-order chunks of at most `batch` rows covering `0..len` — **the**
+/// batch-chunking rule shared by every evaluation path
+/// ([`crate::nn::trainer::Trainer::evaluate`] and
+/// [`crate::session::Session::evaluate`] both iterate these ranges; the
+/// final range is the partial remainder chunk when `len % batch != 0`).
+pub fn chunk_ranges(len: usize, batch: usize) -> impl Iterator<Item = Range<usize>> {
+    assert!(batch > 0, "batch must be positive");
+    (0..len).step_by(batch).map(move |off| off..(off + batch).min(len))
+}
 
 /// A labelled dataset with one-hot targets.
 #[derive(Debug, Clone)]
@@ -59,6 +71,33 @@ impl Dataset {
         self.x.clear();
         self.y.clear();
         (train, test)
+    }
+
+    /// Quantised row-major feature matrix of rows `r` (the encode step of
+    /// every evaluation chunk loop — see [`chunk_ranges`]).
+    pub fn encode_rows(&self, r: Range<usize>, fixed: FixedSpec) -> Vec<i16> {
+        let mut q = Vec::with_capacity(r.len() * self.dim());
+        for i in r {
+            q.extend(self.x[i].iter().map(|&v| fixed.from_f64(v)));
+        }
+        q
+    }
+
+    /// Count rows of chunk `r` whose decoded argmax matches the label;
+    /// `out` is the device's row-major `(r.len() × classes)` output for
+    /// the chunk.
+    pub fn count_correct(&self, r: Range<usize>, out: &[i16], fixed: FixedSpec) -> usize {
+        let k = self.classes;
+        let mut row: Vec<f64> = Vec::with_capacity(k);
+        let mut correct = 0usize;
+        for (j, i) in r.enumerate() {
+            row.clear();
+            row.extend(out[j * k..(j + 1) * k].iter().map(|&q| fixed.to_f64(q)));
+            if argmax(&row) == self.label(i) {
+                correct += 1;
+            }
+        }
+        correct
     }
 
     /// A mini-batch as flattened row-major matrices `(B×dim, B×classes)`.
@@ -214,6 +253,43 @@ mod tests {
         assert_eq!(tr.len(), 80);
         assert_eq!(te.len(), 20);
         assert_eq!(tr.classes, 3);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_in_order_with_partial_tail() {
+        let rs: Vec<_> = chunk_ranges(10, 4).collect();
+        assert_eq!(rs, vec![0..4, 4..8, 8..10]);
+        let rs: Vec<_> = chunk_ranges(8, 4).collect();
+        assert_eq!(rs, vec![0..4, 4..8]);
+        assert_eq!(chunk_ranges(0, 4).count(), 0);
+        assert_eq!(chunk_ranges(3, 16).collect::<Vec<_>>(), vec![0..3]);
+    }
+
+    #[test]
+    fn encode_rows_matches_batch_encoding() {
+        let d = xor(10, 3);
+        let f = FixedSpec::q(10);
+        let (bx, _) = d.batch(&[2, 3, 4]);
+        let via_batch: Vec<i16> = bx.iter().map(|&v| f.from_f64(v)).collect();
+        assert_eq!(d.encode_rows(2..5, f), via_batch);
+    }
+
+    #[test]
+    fn count_correct_scores_argmax_rows() {
+        let d = xor(6, 1);
+        let f = FixedSpec::q(10);
+        // device output that one-hot matches every label exactly
+        let mut out = Vec::new();
+        for i in 2..5 {
+            for c in 0..d.classes {
+                out.push(if c == d.label(i) { f.from_f64(1.0) } else { 0 });
+            }
+        }
+        assert_eq!(d.count_correct(2..5, &out, f), 3);
+        // flip one row's scores → one miss
+        let k = d.classes;
+        out[..k].reverse();
+        assert_eq!(d.count_correct(2..5, &out, f), 2);
     }
 
     #[test]

@@ -555,13 +555,13 @@ mod tests {
         let bs: Vec<Vec<i16>> =
             s.layers.iter().map(|l| rand_q(&mut r, f, l.outputs, 0.2)).collect();
         let mut m = MatrixMachine::new(FpgaDevice::selected(), &h.program).unwrap();
-        m.bind(&h.program, "x", &x).unwrap();
+        m.bind_named("x", &x).unwrap();
         for l in 0..s.layers.len() {
-            m.bind(&h.program, &format!("w{l}"), &ws[l]).unwrap();
-            m.bind(&h.program, &format!("b{l}"), &bs[l]).unwrap();
+            m.bind_named(&format!("w{l}"), &ws[l]).unwrap();
+            m.bind_named(&format!("b{l}"), &bs[l]).unwrap();
         }
-        m.run(&h.program).unwrap();
-        let got = m.read(&h.program, "o1").unwrap();
+        m.execute();
+        let got = m.read_named("o1").unwrap().to_vec();
         let want = host_forward(&s, &h, &x, &ws, &bs, batch);
         assert_eq!(got, want);
     }
@@ -574,12 +574,12 @@ mod tests {
         let mut r = Rng::new(78);
         let f = s.fixed;
         let mut m = MatrixMachine::new(FpgaDevice::selected(), &h.program).unwrap();
-        m.bind(&h.program, "x", &rand_q(&mut r, f, 6, 1.0)).unwrap();
-        m.bind(&h.program, "w0", &rand_q(&mut r, f, 12, 0.5)).unwrap();
-        m.bind(&h.program, "b0", &rand_q(&mut r, f, 4, 0.2)).unwrap();
-        m.bind(&h.program, "w1", &rand_q(&mut r, f, 8, 0.5)).unwrap();
-        m.bind(&h.program, "b1", &rand_q(&mut r, f, 2, 0.2)).unwrap();
-        m.run_verified(&h.program).unwrap();
+        m.bind_named("x", &rand_q(&mut r, f, 6, 1.0)).unwrap();
+        m.bind_named("w0", &rand_q(&mut r, f, 12, 0.5)).unwrap();
+        m.bind_named("b0", &rand_q(&mut r, f, 4, 0.2)).unwrap();
+        m.bind_named("w1", &rand_q(&mut r, f, 8, 0.5)).unwrap();
+        m.bind_named("b1", &rand_q(&mut r, f, 2, 0.2)).unwrap();
+        m.execute_verified().unwrap();
     }
 
     #[test]
@@ -599,17 +599,17 @@ mod tests {
         let f = s.fixed;
         let mut r = Rng::new(79);
         let mut m = MatrixMachine::new(FpgaDevice::selected(), &h.program).unwrap();
-        m.bind(&h.program, "w0", &rand_q(&mut r, f, 2, 0.1)).unwrap();
-        m.bind(&h.program, "b0", &vec![0i16; 1]).unwrap();
+        m.bind_named("w0", &rand_q(&mut r, f, 2, 0.1)).unwrap();
+        m.bind_named("b0", &[0i16; 1]).unwrap();
         let mut losses = Vec::new();
         for _ in 0..60 {
             let xs: Vec<f64> = (0..batch * 2).map(|_| r.gen_f64() * 2.0 - 1.0).collect();
             let ys: Vec<f64> =
                 (0..batch).map(|bi| 0.5 * xs[bi * 2] - 0.25 * xs[bi * 2 + 1]).collect();
-            m.bind(&h.program, "x", &f.encode_vec(&xs)).unwrap();
-            m.bind(&h.program, "y", &f.encode_vec(&ys)).unwrap();
-            m.run(&h.program).unwrap();
-            let loss_q = m.read(&h.program, "loss").unwrap()[0];
+            m.bind_named("x", &f.encode_vec(&xs)).unwrap();
+            m.bind_named("y", &f.encode_vec(&ys)).unwrap();
+            m.execute();
+            let loss_q = m.read_named("loss").unwrap()[0];
             losses.push(f.to_f64(loss_q));
         }
         let early: f64 = losses[..10].iter().sum::<f64>() / 10.0;
@@ -619,7 +619,7 @@ mod tests {
             "training did not reduce loss: early {early:.4}, late {late:.4}, losses {losses:?}"
         );
         // learned weights should approach [0.5, -0.25]
-        let w = m.read(&h.program, "w0").unwrap();
+        let w = m.read_named("w0").unwrap().to_vec();
         let w0 = f.to_f64(w[0]);
         let w1 = f.to_f64(w[1]);
         assert!((w0 - 0.5).abs() < 0.15, "w0={w0}");
@@ -673,12 +673,12 @@ mod tests {
         let bs: Vec<Vec<i16>> =
             s.layers.iter().map(|l| rand_q(&mut r, f, l.outputs, 0.1)).collect();
         let mut m = MatrixMachine::new(FpgaDevice::selected(), &h.program).unwrap();
-        m.bind(&h.program, "x", &x).unwrap();
+        m.bind_named("x", &x).unwrap();
         for l in 0..s.layers.len() {
-            m.bind(&h.program, &format!("w{l}"), &ws[l]).unwrap();
-            m.bind(&h.program, &format!("b{l}"), &bs[l]).unwrap();
+            m.bind_named(&format!("w{l}"), &ws[l]).unwrap();
+            m.bind_named(&format!("b{l}"), &bs[l]).unwrap();
         }
-        m.run(&h.program).unwrap();
+        m.execute();
         // host reference with chunked-dot truncation semantics
         let lut0 = h.program.luts.iter().find(|t| t.kind == s.layers[0].act && !t.deriv).unwrap();
         let mut z0 = vec![0i16; batch * 700];
@@ -697,7 +697,7 @@ mod tests {
                 z0[bi * 700 + j] = lut0.apply_scalar(f.add(acc_q, bs[0][j]));
             }
         }
-        let got_h = m.read(&h.program, "o0").unwrap();
+        let got_h = m.read_named("o0").unwrap().to_vec();
         assert_eq!(got_h, z0, "chunked hidden layer mismatch");
     }
 

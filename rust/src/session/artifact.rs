@@ -1,0 +1,328 @@
+//! Compiled, immutable artifacts and their typed tensor handles.
+//!
+//! An [`Artifact`] is the output of [`super::Compiler`]: a validated
+//! vector [`Program`] (two for trainable nets — the training-step
+//! program plus the forward/testing program), the net's reconstructed
+//! [`MlpSpec`], the tensor [`SymbolTable`] resolved once at compile
+//! time, and a per-device cache of compiled [`ExecPlan`]s. Artifacts are
+//! shared (`Arc`) between the compiler cache and any number of open
+//! [`super::Session`]s; opening a second session on the same
+//! `(net, device)` pair reuses the cached plan instead of rebuilding it.
+
+use super::error::Error;
+use crate::assembler::program::{BufId, BufKind, Program, SymbolTable};
+use crate::fixed::FixedSpec;
+use crate::hw::{ExecPlan, FpgaDevice};
+use crate::nn::lowering::LoweredMlp;
+use crate::nn::trainer::TrainConfig;
+use crate::nn::MlpSpec;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex};
+
+/// Network-shaped payload: spec + lowered programs.
+pub(crate) struct NetInfo {
+    /// Reconstructed network spec.
+    pub spec: MlpSpec,
+    /// Batch size both programs were lowered for.
+    pub batch: usize,
+    /// Learning rate baked into the training program (`None` ⇒ the
+    /// artifact is inference-only).
+    pub lr: Option<f64>,
+    /// Forward/testing program with its buffer handles.
+    pub forward: LoweredMlp,
+    /// Training-step program (present when `lr` is set).
+    pub train: Option<LoweredMlp>,
+}
+
+/// What an artifact wraps.
+pub(crate) enum Payload {
+    /// A compiled network (spec known; all session verbs available).
+    Net(NetInfo),
+    /// A raw validated vector program (tensor handles + `step()` only).
+    Raw(Program),
+}
+
+/// Compiled plans for one device.
+#[derive(Clone)]
+pub(crate) struct DevicePlans {
+    /// Plan of the primary program (train for trainable nets).
+    pub primary: Arc<ExecPlan>,
+    /// Plan of the forward program (same `Arc` when the primary program
+    /// *is* the forward program).
+    pub forward: Arc<ExecPlan>,
+}
+
+/// An immutable compiled artifact: validated program(s) + symbol table +
+/// per-device execution plans.
+///
+/// ```
+/// use mfnn::session::{CompileOptions, Compiler};
+/// use mfnn::fixed::FixedSpec;
+/// use mfnn::nn::lut::ActKind;
+/// use mfnn::nn::mlp::{LutParams, MlpSpec};
+///
+/// let fixed = FixedSpec::q(10).saturating();
+/// let spec = MlpSpec::from_dims(
+///     "tiny", &[2, 4, 2], ActKind::Relu, ActKind::Identity,
+///     fixed, LutParams::training(fixed),
+/// ).unwrap();
+/// let compiler = Compiler::new();
+/// let artifact = compiler.compile_spec(&spec, &CompileOptions::inference(4)).unwrap();
+/// // Typed handles are resolved once, at compile time of the artifact:
+/// let w0 = artifact.tensor("w0").unwrap();
+/// assert_eq!((w0.rows(), w0.cols()), (2, 4));
+/// // Misses come back with a suggestion, not a bare error:
+/// let err = artifact.tensor("w00").unwrap_err().to_string();
+/// assert!(err.contains("did you mean \"w0\""), "{err}");
+/// ```
+pub struct Artifact {
+    fingerprint: u64,
+    payload: Payload,
+    symbols: SymbolTable,
+    plans: Mutex<HashMap<String, DevicePlans>>,
+}
+
+impl std::fmt::Debug for Artifact {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Artifact")
+            .field("name", &self.name())
+            .field("trainable", &self.trainable())
+            .field("tensors", &self.symbols.len())
+            .finish()
+    }
+}
+
+impl Artifact {
+    pub(crate) fn new(key: String, payload: Payload) -> Artifact {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        let fingerprint = h.finish();
+        let symbols = match &payload {
+            Payload::Net(n) => n
+                .train
+                .as_ref()
+                .map(|t| t.program.symbols())
+                .unwrap_or_else(|| n.forward.program.symbols()),
+            Payload::Raw(p) => p.symbols(),
+        };
+        Artifact { fingerprint, payload, symbols, plans: Mutex::new(HashMap::new()) }
+    }
+
+    /// Fingerprint used to tag [`TensorHandle`]s.
+    pub(crate) fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    pub(crate) fn net(&self) -> Option<&NetInfo> {
+        match &self.payload {
+            Payload::Net(n) => Some(n),
+            Payload::Raw(_) => None,
+        }
+    }
+
+    /// The primary program (training-step program for trainable nets,
+    /// the forward program otherwise, the raw program for
+    /// [`super::Compiler::compile_program`] artifacts).
+    pub fn program(&self) -> &Program {
+        match &self.payload {
+            Payload::Net(n) => {
+                n.train.as_ref().map(|t| &t.program).unwrap_or(&n.forward.program)
+            }
+            Payload::Raw(p) => p,
+        }
+    }
+
+    /// Artifact name (the net name for compiled networks, the program
+    /// name for raw-program artifacts).
+    pub fn name(&self) -> &str {
+        match &self.payload {
+            Payload::Net(n) => &n.spec.name,
+            Payload::Raw(p) => &p.name,
+        }
+    }
+
+    /// The reconstructed network spec (`None` for raw-program artifacts).
+    pub fn spec(&self) -> Option<&MlpSpec> {
+        self.net().map(|n| &n.spec)
+    }
+
+    /// Batch size the net was compiled for (`None` for raw programs).
+    pub fn batch(&self) -> Option<usize> {
+        self.net().map(|n| n.batch)
+    }
+
+    /// Learning rate baked into the training program, when trainable.
+    pub fn lr(&self) -> Option<f64> {
+        self.net().and_then(|n| n.lr)
+    }
+
+    /// True when the artifact carries a training-step program.
+    pub fn trainable(&self) -> bool {
+        self.net().is_some_and(|n| n.train.is_some())
+    }
+
+    /// Datapath fixed-point format.
+    pub fn fixed(&self) -> FixedSpec {
+        self.program().fixed
+    }
+
+    /// The tensor symbol table (names resolved once at compile time).
+    pub fn symbols(&self) -> &SymbolTable {
+        &self.symbols
+    }
+
+    fn handle_for(&self, id: BufId) -> TensorHandle {
+        let decl = &self.program().buffers[id];
+        TensorHandle {
+            artifact: self.fingerprint,
+            name: decl.name.clone(),
+            id,
+            rows: decl.rows,
+            cols: decl.cols,
+            kind: decl.kind,
+            fixed: self.program().fixed,
+        }
+    }
+
+    /// Resolve a tensor name into a typed handle (shape and fixed format
+    /// checked here, once — not at every bind).
+    pub fn tensor(&self, name: &str) -> Result<TensorHandle, Error> {
+        match self.symbols.resolve(name) {
+            Some(id) => Ok(self.handle_for(id)),
+            None => Err(Error::UnknownTensor {
+                artifact: self.name().to_string(),
+                name: name.to_string(),
+                hint: self.symbols.hint(name),
+            }),
+        }
+    }
+
+    /// Handles for every declared tensor, in declaration order.
+    pub fn tensors(&self) -> Vec<TensorHandle> {
+        (0..self.program().buffers.len()).map(|id| self.handle_for(id)).collect()
+    }
+
+    /// The compiled primary-program plan for `device`, building and
+    /// caching it on first use — the second `open` of the same
+    /// `(net, device)` pair returns the same `Arc` without rebuilding.
+    pub fn plan_for(&self, device: &FpgaDevice) -> Arc<ExecPlan> {
+        self.plans_for(device).primary
+    }
+
+    pub(crate) fn plans_for(&self, device: &FpgaDevice) -> DevicePlans {
+        let mut map = self.plans.lock().expect("plan cache poisoned");
+        map.entry(device.part.name.to_string())
+            .or_insert_with(|| {
+                let primary = Arc::new(ExecPlan::new(self.program(), device));
+                let forward = match &self.payload {
+                    Payload::Net(n) if n.train.is_some() => {
+                        Arc::new(ExecPlan::new(&n.forward.program, device))
+                    }
+                    _ => Arc::clone(&primary),
+                };
+                DevicePlans { primary, forward }
+            })
+            .clone()
+    }
+
+    /// Validate a `TrainConfig` against what this artifact was compiled
+    /// for (compile-once contract: batch and lr are baked into the
+    /// training program).
+    pub(crate) fn check_train_cfg(&self, cfg: &TrainConfig) -> Result<(), Error> {
+        let net = self.net().ok_or_else(|| Error::Unsupported {
+            verb: "train",
+            why: "raw-program artifacts have no network structure".into(),
+        })?;
+        let lr = net.lr.ok_or_else(|| Error::Unsupported {
+            verb: "train",
+            why: format!(
+                "artifact {:?} was compiled for inference only; recompile \
+                 with CompileOptions::training",
+                self.name()
+            ),
+        })?;
+        if cfg.batch != net.batch {
+            return Err(Error::ConfigMismatch {
+                what: "batch",
+                compiled: net.batch.to_string(),
+                requested: cfg.batch.to_string(),
+            });
+        }
+        if cfg.lr != lr {
+            return Err(Error::ConfigMismatch {
+                what: "lr",
+                compiled: lr.to_string(),
+                requested: cfg.lr.to_string(),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// A typed tensor handle: name resolved to a buffer id once, shape and
+/// fixed format carried along — [`super::Session::write`] checks lengths
+/// against the handle instead of re-scanning buffer tables per bind.
+#[derive(Debug, Clone)]
+pub struct TensorHandle {
+    artifact: u64,
+    name: String,
+    id: BufId,
+    rows: usize,
+    cols: usize,
+    kind: BufKind,
+    fixed: FixedSpec,
+}
+
+impl TensorHandle {
+    /// Fingerprint of the artifact this handle belongs to.
+    pub(crate) fn artifact(&self) -> u64 {
+        self.artifact
+    }
+
+    /// Resolved buffer id.
+    pub(crate) fn id(&self) -> BufId {
+        self.id
+    }
+
+    /// Tensor name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Declared rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Declared columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total lanes (`rows × cols`).
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// True for degenerate empty tensors (never in checked programs).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Buffer role.
+    pub fn kind(&self) -> BufKind {
+        self.kind
+    }
+
+    /// Fixed-point format of the lanes.
+    pub fn fixed(&self) -> FixedSpec {
+        self.fixed
+    }
+
+    /// True when this tensor holds trainable parameters.
+    pub fn is_param(&self) -> bool {
+        matches!(self.kind, BufKind::Weight | BufKind::Bias)
+    }
+}

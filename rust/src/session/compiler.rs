@@ -1,0 +1,215 @@
+//! The compile-once front end: source / spec / program → [`Artifact`].
+//!
+//! The compiler owns the artifact cache. Compiling the same net twice
+//! (same assembly source, or same spec + options) returns the same
+//! `Arc<Artifact>`; per-device [`crate::hw::ExecPlan`]s are cached inside
+//! the artifact, so `(net, device)` pairs are compiled exactly once no
+//! matter how many sessions open them.
+
+use super::artifact::{Artifact, NetInfo, Payload};
+use super::error::Error;
+use crate::asm::lower_file;
+use crate::assembler::program::Program;
+use crate::nn::lowering::{lower_forward, lower_train_step};
+use crate::nn::MlpSpec;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// What to compile a spec for.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompileOptions {
+    /// Batch size (input rows) both programs are lowered for.
+    pub batch: usize,
+    /// `Some(lr)` compiles a training-step program alongside the forward
+    /// program; `None` compiles an inference-only artifact.
+    pub lr: Option<f64>,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions { batch: 16, lr: None }
+    }
+}
+
+impl CompileOptions {
+    /// Inference-only artifact at `batch` rows.
+    pub fn inference(batch: usize) -> CompileOptions {
+        CompileOptions { batch, lr: None }
+    }
+
+    /// Trainable artifact at `batch` rows with learning rate `lr`.
+    pub fn training(batch: usize, lr: f64) -> CompileOptions {
+        CompileOptions { batch, lr: Some(lr) }
+    }
+}
+
+/// The compile-once front end. Cheap to create; share one per process to
+/// get cross-session artifact caching.
+///
+/// ```
+/// use mfnn::session::{CompileOptions, Compiler};
+/// use mfnn::fixed::FixedSpec;
+/// use mfnn::nn::lut::ActKind;
+/// use mfnn::nn::mlp::{LutParams, MlpSpec};
+/// use std::sync::Arc;
+///
+/// let compiler = Compiler::new();
+/// // From assembly text (one artifact per NET block):
+/// let nets = compiler.compile_asm("
+/// NET doc
+/// INPUT x 4 2
+/// WEIGHT w 2 2
+/// BIAS b 2
+/// ACT a relu
+/// MLP o x w b a
+/// OUTPUT o
+/// ").unwrap();
+/// assert_eq!(nets.len(), 1);
+/// assert_eq!(nets[0].name(), "doc");
+/// // Compile-once: the same source returns the same artifact.
+/// let again = compiler.compile_asm_net("
+/// NET doc
+/// INPUT x 4 2
+/// WEIGHT w 2 2
+/// BIAS b 2
+/// ACT a relu
+/// MLP o x w b a
+/// OUTPUT o
+/// ").unwrap();
+/// assert!(Arc::ptr_eq(&nets[0], &again));
+///
+/// // From a spec:
+/// let fixed = FixedSpec::q(10).saturating();
+/// let spec = MlpSpec::from_dims(
+///     "s", &[2, 4, 2], ActKind::Relu, ActKind::Identity,
+///     fixed, LutParams::training(fixed),
+/// ).unwrap();
+/// let a = compiler.compile_spec(&spec, &CompileOptions::training(8, 1.0 / 128.0)).unwrap();
+/// assert!(a.trainable());
+/// assert_eq!(a.batch(), Some(8));
+/// ```
+#[derive(Default)]
+pub struct Compiler {
+    asm_cache: Mutex<HashMap<String, Vec<Arc<Artifact>>>>,
+    net_cache: Mutex<HashMap<String, Arc<Artifact>>>,
+}
+
+impl Compiler {
+    /// New compiler with empty caches.
+    pub fn new() -> Compiler {
+        Compiler::default()
+    }
+
+    /// Number of cached artifacts (diagnostics/tests).
+    pub fn cached(&self) -> usize {
+        self.net_cache.lock().expect("cache poisoned").len()
+            + self
+                .asm_cache
+                .lock()
+                .expect("cache poisoned")
+                .values()
+                .map(Vec::len)
+                .sum::<usize>()
+    }
+
+    /// Compile assembly text: one artifact per `NET` block. Training nets
+    /// (`TRAIN` directive) produce trainable artifacts; a forward program
+    /// is lowered alongside for `infer`/`evaluate`.
+    pub fn compile_asm(&self, source: &str) -> Result<Vec<Arc<Artifact>>, Error> {
+        if let Some(hit) = self.asm_cache.lock().expect("cache poisoned").get(source) {
+            return Ok(hit.clone());
+        }
+        let nets = lower_file(source)?;
+        let mut artifacts = Vec::with_capacity(nets.len());
+        for net in nets {
+            let (forward, train) = if net.train {
+                (lower_forward(&net.spec, net.batch)?, Some(net.mlp))
+            } else {
+                (net.mlp, None)
+            };
+            let key = format!("asm::{}::{}", net.spec.name, source);
+            artifacts.push(Arc::new(Artifact::new(
+                key,
+                Payload::Net(NetInfo {
+                    spec: net.spec,
+                    batch: net.batch,
+                    lr: net.lr,
+                    forward,
+                    train,
+                }),
+            )));
+        }
+        self.asm_cache
+            .lock()
+            .expect("cache poisoned")
+            .insert(source.to_string(), artifacts.clone());
+        Ok(artifacts)
+    }
+
+    /// Compile assembly text that defines exactly one `NET`.
+    pub fn compile_asm_net(&self, source: &str) -> Result<Arc<Artifact>, Error> {
+        let mut nets = self.compile_asm(source)?;
+        if nets.len() != 1 {
+            return Err(Error::Unsupported {
+                verb: "compile_asm_net",
+                why: format!("source defines {} nets, expected exactly 1", nets.len()),
+            });
+        }
+        Ok(nets.remove(0))
+    }
+
+    /// Compile an [`MlpSpec`] (validated first). With
+    /// [`CompileOptions::training`] the artifact carries both the
+    /// training-step and the forward program; with
+    /// [`CompileOptions::inference`] only the forward program.
+    pub fn compile_spec(
+        &self,
+        spec: &MlpSpec,
+        opts: &CompileOptions,
+    ) -> Result<Arc<Artifact>, Error> {
+        spec.check()?;
+        // Exact structural key — no hash collisions, cheap at this scale.
+        let key = format!(
+            "spec::{spec:?}::batch={}::lr={:?}",
+            opts.batch,
+            opts.lr.map(f64::to_bits)
+        );
+        if let Some(hit) = self.net_cache.lock().expect("cache poisoned").get(&key) {
+            return Ok(Arc::clone(hit));
+        }
+        let forward = lower_forward(spec, opts.batch)?;
+        let train = match opts.lr {
+            Some(lr) => Some(lower_train_step(spec, opts.batch, lr)?),
+            None => None,
+        };
+        let artifact = Arc::new(Artifact::new(
+            key.clone(),
+            Payload::Net(NetInfo {
+                spec: spec.clone(),
+                batch: opts.batch,
+                lr: opts.lr,
+                forward,
+                train,
+            }),
+        ));
+        self.net_cache
+            .lock()
+            .expect("cache poisoned")
+            .insert(key, Arc::clone(&artifact));
+        Ok(artifact)
+    }
+
+    /// Wrap a raw vector [`Program`] (validated) in an artifact: tensor
+    /// handles and [`super::Session::step`] work; the net-shaped verbs
+    /// (`infer`/`train`/`evaluate`) do not. Raw artifacts are not
+    /// deduplicated in the compiler cache (their per-device plan cache
+    /// still applies).
+    pub fn compile_program(&self, program: &Program) -> Result<Arc<Artifact>, Error> {
+        program.check()?;
+        // Fingerprint the full structure, not just the name: two distinct
+        // programs sharing a name must not satisfy the foreign-handle
+        // guard against each other's sessions.
+        let key = format!("raw::{program:?}");
+        Ok(Arc::new(Artifact::new(key, Payload::Raw(program.clone()))))
+    }
+}

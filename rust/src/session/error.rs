@@ -1,0 +1,105 @@
+//! The crate-wide [`Error`] type — one error for the whole front door.
+//!
+//! Before the session redesign every layer had its own error
+//! (`ParseError`, `AsmError`, `LowerError`, `ProgramError`,
+//! `MachineError`, `TrainError`, `ClusterError`) and every caller
+//! re-plumbed conversions between them. They all fold into
+//! [`enum@Error`] via `#[from]`, so `?` works from any layer, and the
+//! session adds the typed-handle diagnostics the old stringly paths
+//! could not express (unknown-tensor suggestions, foreign handles,
+//! shape mismatches, artifact/config disagreements).
+
+use crate::asm::{AsmError, ParseError};
+use crate::assembler::program::ProgramError;
+use crate::cluster::leader::ClusterError;
+use crate::hw::machine::MachineError;
+use crate::nn::lowering::LowerError;
+use crate::nn::mlp::SpecError;
+use crate::nn::trainer::TrainError;
+use thiserror::Error;
+
+/// Unified `mfnn` error: every layer's error converts in via `#[from]`.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Assembly text failed to parse.
+    #[error(transparent)]
+    Parse(#[from] ParseError),
+    /// Assembly semantic analysis / lowering failed.
+    #[error(transparent)]
+    Asm(#[from] AsmError),
+    /// MLP specification invalid.
+    #[error(transparent)]
+    Spec(#[from] SpecError),
+    /// Lowering a spec onto the vector ISA failed.
+    #[error(transparent)]
+    Lower(#[from] LowerError),
+    /// Vector program failed validation.
+    #[error(transparent)]
+    Program(#[from] ProgramError),
+    /// The Matrix Machine rejected a bind/run.
+    #[error(transparent)]
+    Machine(#[from] MachineError),
+    /// The training engine failed.
+    #[error(transparent)]
+    Train(#[from] TrainError),
+    /// The multi-FPGA cluster runtime failed.
+    #[error(transparent)]
+    Cluster(#[from] ClusterError),
+    /// Tensor name not found in the artifact's symbol table (`hint` is
+    /// the pre-rendered ", did you mean …?" suffix, possibly empty).
+    #[error("unknown tensor {name:?} in artifact {artifact:?}{hint}")]
+    UnknownTensor {
+        /// Artifact (net) name.
+        artifact: String,
+        /// The name that missed.
+        name: String,
+        /// Pre-rendered suggestion suffix.
+        hint: String,
+    },
+    /// A handle from a different artifact was presented to a session.
+    #[error("tensor handle {name:?} belongs to a different artifact")]
+    ForeignHandle {
+        /// The handle's tensor name.
+        name: String,
+    },
+    /// Data length does not match the handle's compile-time shape.
+    #[error("tensor {name:?} is {rows}×{cols} ({expect} lanes), got {got}")]
+    ShapeMismatch {
+        /// Tensor name.
+        name: String,
+        /// Declared rows.
+        rows: usize,
+        /// Declared cols.
+        cols: usize,
+        /// Expected lane count.
+        expect: usize,
+        /// Provided lane count.
+        got: usize,
+    },
+    /// Verb not available for this artifact/target combination.
+    #[error("{verb} is not available: {why}")]
+    Unsupported {
+        /// The session verb that was called.
+        verb: &'static str,
+        /// Why it cannot run.
+        why: String,
+    },
+    /// A `TrainConfig` field disagrees with what the artifact was
+    /// compiled for (compile-once: recompile with matching options).
+    #[error(
+        "train config {what} = {requested} does not match the artifact's \
+         compiled {what} = {compiled}; recompile the artifact with \
+         matching options"
+    )]
+    ConfigMismatch {
+        /// Which field disagreed (`"batch"` / `"lr"`).
+        what: &'static str,
+        /// The artifact's compiled value.
+        compiled: String,
+        /// The requested value.
+        requested: String,
+    },
+    /// Unknown FPGA part name in a cluster target.
+    #[error("unknown FPGA part {0:?}")]
+    UnknownDevice(String),
+}

@@ -1,0 +1,50 @@
+//! The **unified session front door**: compile once, open anywhere, run
+//! any workload.
+//!
+//! The paper's headline capability — *any* network, trained or tested,
+//! on *any* number of FPGAs — used to be reachable only through three
+//! disjoint, stringly-typed entry points (`asm::lower_file` + manual
+//! `MatrixMachine` driving, `nn::Trainer`, `cluster::run_cluster`).
+//! This module is the single front door on top of those engines:
+//!
+//! ```text
+//!   .masm source ──┐
+//!   MlpSpec ───────┤→ Compiler ──→ Artifact ──→ Session(Target) ──→ infer
+//!   raw Program ───┘   (cached      (programs +   Board | Cluster     train
+//!                       by net)      symbols +                        evaluate
+//!                                    per-device ExecPlans)
+//! ```
+//!
+//! * [`Compiler`] turns assembly text, an [`crate::nn::MlpSpec`], or a
+//!   raw validated [`crate::assembler::program::Program`] into an
+//!   immutable [`Artifact`] — validated program(s), the tensor
+//!   [`crate::assembler::program::SymbolTable`], and a per-device cache
+//!   of compiled [`crate::hw::ExecPlan`]s. Same net ⇒ same `Arc`;
+//!   `(net, device)` plans are built exactly once.
+//! * [`Session::open`] places an artifact on a [`Target`] —
+//!   [`Target::Board`] for one simulated FPGA, [`Target::Cluster`] for
+//!   the multi-FPGA runtime — and exposes typed [`TensorHandle`]s
+//!   (resolved once at compile time, length-checked against the handle,
+//!   misses answered with "did you mean …") plus the three uniform
+//!   verbs `infer` / `train` / `evaluate` and the raw `step` escape
+//!   hatch. [`Session::train_many`] runs the paper's M×F workload over
+//!   many artifacts in one call.
+//! * [`enum@Error`] is the crate-wide error: every layer's error type
+//!   folds into it via `#[from]`.
+//!
+//! The old entry points remain as thin `#[deprecated]` shims
+//! (`nn::Trainer::new`, `cluster::run_cluster`,
+//! `hw::MatrixMachine::{bind, read, run, run_verified}`) delegating to
+//! the engines this module drives; they will be removed one release
+//! after the redesign.
+
+pub mod artifact;
+pub mod compiler;
+pub mod error;
+#[allow(clippy::module_inception)]
+pub mod session;
+
+pub use artifact::{Artifact, TensorHandle};
+pub use compiler::{CompileOptions, Compiler};
+pub use error::Error;
+pub use session::{Evaluation, Inference, NetJob, Session, Target, TrainSummary};

@@ -1,0 +1,487 @@
+//! The [`Session`]: an opened artifact on a target, with typed tensor
+//! I/O and the three uniform verbs.
+//!
+//! * [`Session::infer`] — one forward batch on the bound parameters.
+//! * [`Session::train`] — SGD training; on a board target the embedded
+//!   [`Trainer`] engine runs locally, on a cluster target the job is
+//!   dispatched through [`crate::cluster::leader::execute`] (divided /
+//!   1:1 per the paper's §2) and the averaged weights are adopted back
+//!   into the session.
+//! * [`Session::evaluate`] — classification accuracy over a dataset,
+//!   chunked by [`dataset::chunk_ranges`] (the same helper the trainer
+//!   uses — one chunking rule for every path).
+//!
+//! Plus the raw escape hatch [`Session::step`] / [`Session::write`] /
+//! [`Session::read`] for programs that need exact control of every
+//! tensor (golden-model cross-checks, raw-program artifacts).
+
+use super::artifact::{Artifact, TensorHandle};
+use super::error::Error;
+use crate::cluster::leader::{self, ClusterConfig, ClusterReport, Job};
+use crate::hw::{FpgaDevice, MatrixMachine, RunStats};
+use crate::nn::dataset::{self, Dataset};
+use crate::nn::lowering::{lower_forward, LoweredMlp};
+use crate::nn::trainer::{LossPoint, TrainConfig, Trainer};
+use std::sync::Arc;
+
+/// Where a session runs.
+#[derive(Debug, Clone)]
+pub enum Target {
+    /// One simulated FPGA board.
+    Board(FpgaDevice),
+    /// A multi-FPGA cluster (training is dispatched to the cluster
+    /// runtime; inference/evaluation run on one board of the cluster's
+    /// part).
+    Cluster(ClusterConfig),
+}
+
+/// Result of [`Session::infer`].
+#[derive(Debug, Clone)]
+pub struct Inference {
+    /// Quantised `batch × out_dim` output activations.
+    pub output: Vec<i16>,
+    /// Machine statistics of the pass.
+    pub stats: RunStats,
+}
+
+/// Result of [`Session::evaluate`].
+#[derive(Debug, Clone, Copy)]
+pub struct Evaluation {
+    /// Classification accuracy in `[0, 1]`.
+    pub accuracy: f64,
+    /// Aggregated machine statistics.
+    pub stats: RunStats,
+}
+
+/// Result of [`Session::train`].
+#[derive(Debug, Clone)]
+pub struct TrainSummary {
+    /// Loss curve (replica 0's view for divided cluster jobs).
+    pub curve: Vec<LossPoint>,
+    /// Aggregated machine statistics.
+    pub stats: RunStats,
+    /// Simulated seconds (compute + bus for cluster targets).
+    pub sim_seconds: f64,
+    /// Steps executed (per replica).
+    pub steps: usize,
+    /// Boards the job ran on (`[0]` for a board target).
+    pub boards: Vec<usize>,
+    /// Weight-averaging rounds (0 for board targets).
+    pub sync_rounds: u64,
+}
+
+/// One net's entry in [`Session::train_many`].
+pub struct NetJob {
+    /// Compiled trainable artifact.
+    pub artifact: Arc<Artifact>,
+    /// Training configuration (must match the artifact's compiled
+    /// batch/lr).
+    pub cfg: TrainConfig,
+    /// Training split.
+    pub train: Arc<Dataset>,
+    /// Test split (evaluated after training).
+    pub test: Arc<Dataset>,
+}
+
+enum Engine {
+    /// Trainable artifact: the [`Trainer`] engine owns both machines;
+    /// its training machine is the session's primary machine.
+    Trainable(Box<Trainer>),
+    /// Inference-only or raw artifact: one machine on the primary plan.
+    Forward(Box<MatrixMachine>),
+}
+
+/// An opened artifact on a target.
+///
+/// ```
+/// use mfnn::session::{CompileOptions, Compiler, Session, Target};
+/// use mfnn::hw::FpgaDevice;
+/// use mfnn::nn::dataset;
+/// use mfnn::nn::lut::ActKind;
+/// use mfnn::nn::mlp::{LutParams, MlpSpec};
+/// use mfnn::nn::trainer::TrainConfig;
+/// use mfnn::fixed::FixedSpec;
+///
+/// let fixed = FixedSpec::q(10).saturating();
+/// let spec = MlpSpec::from_dims(
+///     "xor", &[2, 8, 2], ActKind::Relu, ActKind::Identity,
+///     fixed, LutParams::training(fixed),
+/// ).unwrap();
+/// let compiler = Compiler::new();
+/// let artifact = compiler
+///     .compile_spec(&spec, &CompileOptions::training(8, 1.0 / 128.0))
+///     .unwrap();
+/// let mut session =
+///     Session::open(artifact, Target::Board(FpgaDevice::selected())).unwrap();
+/// let ds = dataset::xor(64, 7);
+/// let cfg = TrainConfig { batch: 8, lr: 1.0 / 128.0, steps: 20, seed: 1, log_every: 5 };
+/// let report = session.train(&ds, &cfg).unwrap();
+/// assert_eq!(report.steps, 20);
+/// let eval = session.evaluate(&ds).unwrap();
+/// assert!(eval.accuracy >= 0.0 && eval.accuracy <= 1.0);
+/// let out = session.infer(&ds.encode_rows(0..8, fixed)).unwrap();
+/// assert_eq!(out.output.len(), 8 * 2);
+/// ```
+pub struct Session {
+    artifact: Arc<Artifact>,
+    device: FpgaDevice,
+    cluster: Option<ClusterConfig>,
+    engine: Engine,
+    /// Set once parameters exist on-device (handle writes to weight/bias
+    /// tensors, explicit init, or a completed train): `train` then
+    /// continues from them instead of re-initialising from the seed.
+    weights_ready: bool,
+    /// Set once the batch-sampling RNG has been seeded from a train
+    /// call's `cfg.seed`; later train calls continue the stream.
+    sampler_seeded: bool,
+    /// Right-sized forward plan for the partial evaluation chunk
+    /// (inference-only artifacts; the trainer engine keeps its own).
+    fwd_rem: Option<(usize, LoweredMlp, MatrixMachine)>,
+}
+
+impl Session {
+    /// Open `artifact` on `target`: machines are built on the artifact's
+    /// cached per-device plans (compiled on first open, reused after).
+    pub fn open(artifact: Arc<Artifact>, target: Target) -> Result<Session, Error> {
+        let (device, cluster) = match target {
+            Target::Board(d) => (d, None),
+            Target::Cluster(c) => {
+                let d = FpgaDevice::by_name(&c.device)
+                    .ok_or_else(|| Error::UnknownDevice(c.device.clone()))?;
+                (d, Some(c))
+            }
+        };
+        let plans = artifact.plans_for(&device);
+        let engine = match artifact.net() {
+            Some(n) if n.train.is_some() => {
+                let tr = n.train.as_ref().expect("trainable net");
+                let train_machine =
+                    MatrixMachine::with_plan(device, &tr.program, Arc::clone(&plans.primary))?;
+                let fwd_machine = MatrixMachine::with_plan(
+                    device,
+                    &n.forward.program,
+                    Arc::clone(&plans.forward),
+                )?;
+                let cfg = TrainConfig {
+                    batch: n.batch,
+                    lr: n.lr.expect("trainable net has lr"),
+                    steps: 0,
+                    ..TrainConfig::default()
+                };
+                Engine::Trainable(Box::new(Trainer::from_parts(
+                    n.spec.clone(),
+                    device,
+                    cfg,
+                    tr.clone(),
+                    n.forward.clone(),
+                    train_machine,
+                    fwd_machine,
+                )))
+            }
+            _ => Engine::Forward(Box::new(MatrixMachine::with_plan(
+                device,
+                artifact.program(),
+                plans.primary,
+            )?)),
+        };
+        Ok(Session {
+            artifact,
+            device,
+            cluster,
+            engine,
+            weights_ready: false,
+            sampler_seeded: false,
+            fwd_rem: None,
+        })
+    }
+
+    /// The artifact this session opened.
+    pub fn artifact(&self) -> &Arc<Artifact> {
+        &self.artifact
+    }
+
+    /// The board (or the cluster's board part) this session simulates.
+    pub fn device(&self) -> FpgaDevice {
+        self.device
+    }
+
+    fn machine(&self) -> &MatrixMachine {
+        match &self.engine {
+            Engine::Trainable(t) => t.primary_machine(),
+            Engine::Forward(m) => m,
+        }
+    }
+
+    fn machine_mut(&mut self) -> &mut MatrixMachine {
+        match &mut self.engine {
+            Engine::Trainable(t) => t.primary_machine_mut(),
+            Engine::Forward(m) => m,
+        }
+    }
+
+    fn check_handle(&self, h: &TensorHandle) -> Result<(), Error> {
+        if h.artifact() != self.artifact.fingerprint() {
+            return Err(Error::ForeignHandle { name: h.name().to_string() });
+        }
+        Ok(())
+    }
+
+    /// Write quantised data to a tensor (length checked against the
+    /// handle's compile-time shape). Writing a weight/bias tensor marks
+    /// the session's parameters as user-provided: `train` will continue
+    /// from them instead of re-initialising from the seed.
+    pub fn write(&mut self, h: &TensorHandle, data: &[i16]) -> Result<(), Error> {
+        self.check_handle(h)?;
+        if data.len() != h.len() {
+            return Err(Error::ShapeMismatch {
+                name: h.name().to_string(),
+                rows: h.rows(),
+                cols: h.cols(),
+                expect: h.len(),
+                got: data.len(),
+            });
+        }
+        self.machine_mut().write_id(h.id(), data)?;
+        if h.is_param() {
+            self.weights_ready = true;
+            if let Engine::Trainable(t) = &mut self.engine {
+                t.mark_params_dirty();
+            }
+        }
+        Ok(())
+    }
+
+    /// Read a tensor after a run.
+    ///
+    /// Handles address the artifact's **primary** program state (the
+    /// training-step machine for trainable artifacts). [`Session::infer`]
+    /// executes on a separate forward instance and returns its output in
+    /// [`Inference::output`] — read it from there, not from an output
+    /// handle.
+    pub fn read(&self, h: &TensorHandle) -> Result<Vec<i16>, Error> {
+        self.check_handle(h)?;
+        Ok(self.machine().read_id(h.id()).to_vec())
+    }
+
+    /// Execute the artifact's primary program once on the currently
+    /// bound tensors (a training step for trainable artifacts — the
+    /// on-device parameters mutate — a forward pass otherwise); the raw
+    /// escape hatch under the verbs.
+    pub fn step(&mut self) -> RunStats {
+        match &mut self.engine {
+            Engine::Trainable(t) => t.step_primary(),
+            Engine::Forward(m) => m.execute(),
+        }
+    }
+
+    /// [`Session::step`] with per-wave structural verification against
+    /// the microcode interpreters (slow; tests and `--verify` flows).
+    pub fn step_verified(&mut self) -> Result<RunStats, Error> {
+        Ok(self.machine_mut().execute_verified()?)
+    }
+
+    /// One forward pass over a quantised `batch × in_dim` input with the
+    /// session's current parameters. The output lives in
+    /// [`Inference::output`]; for trainable artifacts the pass runs on a
+    /// separate forward instance, so output *handles* (which address the
+    /// primary training state) do not observe it.
+    pub fn infer(&mut self, qx: &[i16]) -> Result<Inference, Error> {
+        match &mut self.engine {
+            Engine::Trainable(t) => {
+                let (output, stats) = t.infer(qx)?;
+                Ok(Inference { output, stats })
+            }
+            Engine::Forward(m) => {
+                let n = self.artifact.net().ok_or_else(|| Error::Unsupported {
+                    verb: "infer",
+                    why: "raw-program artifacts have no input/output structure; \
+                          use step() with tensor handles"
+                        .into(),
+                })?;
+                m.write_id(n.forward.x, qx)?;
+                let stats = m.execute();
+                Ok(Inference { output: m.read_id(n.forward.out).to_vec(), stats })
+            }
+        }
+    }
+
+    /// Train on `ds`. Board targets run the embedded engine; cluster
+    /// targets dispatch one job to the cluster runtime (divided over the
+    /// boards per §2) and adopt the averaged weights back into the
+    /// session. `cfg.batch`/`cfg.lr` must match the artifact's compiled
+    /// options.
+    pub fn train(&mut self, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainSummary, Error> {
+        self.artifact.check_train_cfg(cfg)?;
+        match self.cluster.clone() {
+            Some(ccfg) => self.train_cluster(&ccfg, ds, cfg),
+            None => self.train_board(ds, cfg),
+        }
+    }
+
+    fn train_board(&mut self, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainSummary, Error> {
+        let Engine::Trainable(t) = &mut self.engine else {
+            unreachable!("check_train_cfg guarantees a trainable engine");
+        };
+        t.cfg = cfg.clone();
+        // First train call seeds the batch sampler from cfg.seed — also
+        // when weights were preloaded through handles (the seed must not
+        // be silently ignored). Later calls continue the stream.
+        if !self.sampler_seeded {
+            if self.weights_ready {
+                t.reseed(cfg.seed);
+            } else {
+                t.init_weights(cfg.seed)?;
+                self.weights_ready = true;
+            }
+            self.sampler_seeded = true;
+        }
+        let report = t.train(ds)?;
+        Ok(TrainSummary {
+            curve: report.curve,
+            stats: report.stats,
+            sim_seconds: report.sim_seconds,
+            steps: report.steps,
+            boards: vec![0],
+            sync_rounds: 0,
+        })
+    }
+
+    fn train_cluster(
+        &mut self,
+        ccfg: &ClusterConfig,
+        ds: &Dataset,
+        cfg: &TrainConfig,
+    ) -> Result<TrainSummary, Error> {
+        if ds.is_empty() {
+            return Err(Error::Unsupported { verb: "train", why: "empty dataset".into() });
+        }
+        let net = self.artifact.net().expect("checked trainable");
+        let initial = if self.weights_ready {
+            let Engine::Trainable(t) = &self.engine else {
+                unreachable!("trainable artifact has a trainer engine");
+            };
+            Some(t.weights())
+        } else {
+            None
+        };
+        // The cluster runtime always evaluates after training; give it a
+        // single-row probe so that cost stays negligible (the session's
+        // own `evaluate` is the real testing path).
+        let probe = Dataset {
+            x: vec![ds.x[0].clone()],
+            y: vec![ds.y[0].clone()],
+            classes: ds.classes,
+            name: format!("{}-probe", ds.name),
+        };
+        let job = Job {
+            name: net.spec.name.clone(),
+            spec: net.spec.clone(),
+            cfg: cfg.clone(),
+            train_data: Arc::new(ds.clone()),
+            test_data: Arc::new(probe),
+            initial,
+        };
+        let report = leader::execute(ccfg, &[job])?;
+        let jr = report.results.into_iter().next().expect("one job dispatched");
+        // Adopt the cluster's final (averaged) parameters locally so
+        // infer/evaluate see what the cluster trained.
+        let Engine::Trainable(t) = &mut self.engine else {
+            unreachable!("trainable artifact has a trainer engine");
+        };
+        t.set_weights(&jr.weights, &jr.biases)?;
+        self.weights_ready = true;
+        Ok(TrainSummary {
+            curve: jr.curve,
+            stats: jr.stats,
+            sim_seconds: jr.sim_compute_s + jr.sim_bus_s,
+            steps: jr.steps,
+            boards: jr.boards,
+            sync_rounds: report.metrics.sync_rounds,
+        })
+    }
+
+    /// Classification accuracy of the session's current parameters over
+    /// `ds` (the paper's "testing" phase), chunked by
+    /// [`dataset::chunk_ranges`].
+    pub fn evaluate(&mut self, ds: &Dataset) -> Result<Evaluation, Error> {
+        match &mut self.engine {
+            Engine::Trainable(t) => {
+                let (accuracy, stats) = t.evaluate(ds)?;
+                Ok(Evaluation { accuracy, stats })
+            }
+            Engine::Forward(m) => {
+                let n = self.artifact.net().ok_or_else(|| Error::Unsupported {
+                    verb: "evaluate",
+                    why: "raw-program artifacts have no network structure".into(),
+                })?;
+                if ds.dim() != n.spec.input_dim() || ds.classes != n.spec.output_dim() {
+                    return Err(crate::nn::trainer::TrainError::DimMismatch(
+                        ds.dim(),
+                        ds.classes,
+                        n.spec.input_dim(),
+                        n.spec.output_dim(),
+                    )
+                    .into());
+                }
+                let f = n.spec.fixed;
+                let batch = n.batch;
+                let rem = ds.len() % batch;
+                if rem != 0 {
+                    if self.fwd_rem.as_ref().is_none_or(|(rows, _, _)| *rows != rem) {
+                        let lowered = lower_forward(&n.spec, rem)?;
+                        let machine = MatrixMachine::new(self.device, &lowered.program)?;
+                        self.fwd_rem = Some((rem, lowered, machine));
+                    }
+                    // refresh the rem machine's parameters from the
+                    // session machine on every pass (they may have been
+                    // rebound since the last evaluate)
+                    let (_, lowered, machine) =
+                        self.fwd_rem.as_mut().expect("just built");
+                    for l in 0..n.spec.layers.len() {
+                        let w = m.read_id(n.forward.weights[l]).to_vec();
+                        let b = m.read_id(n.forward.biases[l]).to_vec();
+                        machine.write_id(lowered.weights[l], &w)?;
+                        machine.write_id(lowered.biases[l], &b)?;
+                    }
+                }
+                let mut stats = RunStats::default();
+                let mut correct = 0usize;
+                for r in dataset::chunk_ranges(ds.len(), batch) {
+                    let qx = ds.encode_rows(r.clone(), f);
+                    let (machine, lowered) = if r.len() == batch {
+                        (&mut **m, &n.forward)
+                    } else {
+                        let (_, lowered, machine) =
+                            self.fwd_rem.as_mut().expect("partial-chunk machine built above");
+                        (machine, &*lowered)
+                    };
+                    machine.write_id(lowered.x, &qx)?;
+                    stats.add(&machine.execute());
+                    correct += ds.count_correct(r, machine.read_id(lowered.out), f);
+                }
+                Ok(Evaluation { accuracy: correct as f64 / ds.len().max(1) as f64, stats })
+            }
+        }
+    }
+
+    /// The paper's headline M×F workload in one call: train/test many
+    /// compiled nets on an F-board cluster, scheduled per §2 (sequential
+    /// queues when M > F, 1:1 when M = F, divided data-parallel groups
+    /// when M < F).
+    pub fn train_many(cfg: &ClusterConfig, jobs: &[NetJob]) -> Result<ClusterReport, Error> {
+        let mut cluster_jobs = Vec::with_capacity(jobs.len());
+        for j in jobs {
+            j.artifact.check_train_cfg(&j.cfg)?;
+            let net = j.artifact.net().expect("checked trainable");
+            cluster_jobs.push(Job {
+                name: net.spec.name.clone(),
+                spec: net.spec.clone(),
+                cfg: j.cfg.clone(),
+                train_data: Arc::clone(&j.train),
+                test_data: Arc::clone(&j.test),
+                initial: None,
+            });
+        }
+        Ok(leader::execute(cfg, &cluster_jobs)?)
+    }
+}

@@ -1,17 +1,17 @@
-//! End-to-end integration: assembly text → Matrix Assembler → simulated
+//! End-to-end integration: assembly text → session compiler → simulated
 //! multi-FPGA cluster training → accuracy; plus the VHDL bundle for the
-//! same net. Exercises every layer of the stack in one flow.
+//! same net. Exercises every layer of the stack through the unified
+//! session front door.
 
-use mfnn::asm::lower_file;
 use mfnn::assembler::vhdl;
-use mfnn::cluster::{run_cluster, ClusterConfig, Job};
 use mfnn::fixed::FixedSpec;
-use mfnn::hw::{FpgaDevice, MatrixMachine};
+use mfnn::hw::FpgaDevice;
 use mfnn::nn::dataset;
 use mfnn::nn::lut::ActKind;
 use mfnn::nn::mlp::{LutParams, MlpSpec};
 use mfnn::nn::trainer::TrainConfig;
 use mfnn::perf::catalog::FpgaPart;
+use mfnn::session::{CompileOptions, Compiler, NetJob, Session, Target};
 use mfnn::util::Rng;
 use std::sync::Arc;
 
@@ -34,28 +34,37 @@ TRAIN lr=0.00390625
 
 #[test]
 fn assembly_to_training_step_runs() {
-    let nets = lower_file(NET).unwrap();
-    let net = &nets[0];
-    assert!(net.train);
-    let p = &net.mlp.program;
-    let mut m = MatrixMachine::new(FpgaDevice::selected(), p).unwrap();
-    let f = net.spec.fixed;
+    let compiler = Compiler::new();
+    let artifact = compiler.compile_asm_net(NET).unwrap();
+    assert!(artifact.trainable());
+    assert_eq!(artifact.lr(), Some(0.00390625));
+    let mut s = Session::open(Arc::clone(&artifact), Target::Board(FpgaDevice::selected()))
+        .unwrap();
+    let f = artifact.fixed();
     let mut r = Rng::new(11);
-    let q = |n: usize, amp: f64, r: &mut Rng| -> Vec<i16> {
+    let mut q = |n: usize, amp: f64| -> Vec<i16> {
         (0..n).map(|_| f.from_f64((r.gen_f64() - 0.5) * amp)).collect()
     };
-    m.bind(p, "img", &q(16 * 15, 2.0, &mut r)).unwrap();
-    m.bind(p, "labels", &q(16 * 10, 1.0, &mut r)).unwrap();
-    m.bind(p, "w0", &q(15 * 24, 1.0, &mut r)).unwrap();
-    m.bind(p, "b0", &q(24, 0.2, &mut r)).unwrap();
-    m.bind(p, "w1", &q(24 * 10, 1.0, &mut r)).unwrap();
-    m.bind(p, "b1", &q(10, 0.2, &mut r)).unwrap();
-    let w_before = m.read(p, "w0").unwrap();
-    let stats = m.run(p).unwrap();
+    // typed handles keep the user's assembly-level names
+    for (name, len, amp) in [
+        ("img", 16 * 15, 2.0),
+        ("labels", 16 * 10, 1.0),
+        ("w0", 15 * 24, 1.0),
+        ("b0", 24, 0.2),
+        ("w1", 24 * 10, 1.0),
+        ("b1", 10, 0.2),
+    ] {
+        let h = artifact.tensor(name).unwrap();
+        assert_eq!(h.len(), len, "{name}");
+        s.write(&h, &q(len, amp)).unwrap();
+    }
+    let w0 = artifact.tensor("w0").unwrap();
+    let w_before = s.read(&w0).unwrap();
+    let stats = s.step();
     assert!(stats.cycles > 0);
-    assert_ne!(m.read(p, "w0").unwrap(), w_before, "SGD update must change weights");
+    assert_ne!(s.read(&w0).unwrap(), w_before, "SGD update must change weights");
     // the same net generates a VHDL bundle with its instruction ROM
-    let bundle = vhdl::generate(FpgaPart::selected(), Some(p));
+    let bundle = vhdl::generate(FpgaPart::selected(), Some(artifact.program()));
     let gc = bundle.file("global_controller.vhd").unwrap();
     assert!(gc.contains("VECTOR_DOT_PRODUCT"));
 }
@@ -63,8 +72,10 @@ fn assembly_to_training_step_runs() {
 #[test]
 fn cluster_trains_mini_digits_to_accuracy() {
     // The E-E2E experiment in miniature (the full run lives in
-    // examples/train_cluster.rs): 2 MLPs on 2 boards, mini-digits.
+    // examples/train_cluster.rs): 2 MLPs on 2 boards, mini-digits,
+    // dispatched through Session::train_many.
     let fixed = FixedSpec::q(10).saturating();
+    let compiler = Compiler::new();
     let mk = |name: &str, seed: u64| {
         let spec = MlpSpec::from_dims(
             name,
@@ -75,17 +86,18 @@ fn cluster_trains_mini_digits_to_accuracy() {
             LutParams::training(fixed),
         )
         .unwrap();
+        let artifact =
+            compiler.compile_spec(&spec, &CompileOptions::training(16, 1.0 / 128.0)).unwrap();
         let (train, test) = dataset::mini_digits(400, seed).split(0.8, &mut Rng::new(seed));
-        Job {
-            name: name.into(),
-            spec,
+        NetJob {
+            artifact,
             cfg: TrainConfig { batch: 16, lr: 1.0 / 128.0, steps: 400, seed, log_every: 50 },
-            train_data: Arc::new(train),
-            test_data: Arc::new(test),
+            train: Arc::new(train),
+            test: Arc::new(test),
         }
     };
-    let cfg = ClusterConfig { boards: 2, ..Default::default() };
-    let report = run_cluster(&cfg, &[mk("net_a", 1), mk("net_b", 2)]).unwrap();
+    let cfg = mfnn::cluster::ClusterConfig { boards: 2, ..Default::default() };
+    let report = Session::train_many(&cfg, &[mk("net_a", 1), mk("net_b", 2)]).unwrap();
     for jr in &report.results {
         assert!(
             jr.accuracy > 0.8,

@@ -57,14 +57,14 @@ fn forward_bit_exact_sim_vs_golden() {
 
         // simulated Matrix Machine
         let mut m = MatrixMachine::new(FpgaDevice::selected(), &h.program).unwrap();
-        m.bind(&h.program, "x", &x).unwrap();
+        m.bind_named("x", &x).unwrap();
         for l in 0..g.spec.layers.len() {
-            m.bind(&h.program, &format!("w{l}"), &ws[l]).unwrap();
-            m.bind(&h.program, &format!("b{l}"), &bs[l]).unwrap();
+            m.bind_named(&format!("w{l}"), &ws[l]).unwrap();
+            m.bind_named(&format!("b{l}"), &bs[l]).unwrap();
         }
-        m.run(&h.program).unwrap();
+        m.execute();
         let last = g.spec.layers.len() - 1;
-        let sim_out = m.read(&h.program, &format!("o{last}")).unwrap();
+        let sim_out = m.read_named(&format!("o{last}")).unwrap().to_vec();
 
         // golden JAX/Pallas artifact via PJRT
         let gold_out = g.forward(&x, &ws, &bs).expect("golden forward");
@@ -82,23 +82,23 @@ fn train_step_bit_exact_sim_vs_golden() {
         let y = rand_x(&g, 500 + trial, g.spec.output_dim(), 1.0);
 
         let mut m = MatrixMachine::new(FpgaDevice::selected(), &h.program).unwrap();
-        m.bind(&h.program, "x", &x).unwrap();
-        m.bind(&h.program, "y", &y).unwrap();
+        m.bind_named("x", &x).unwrap();
+        m.bind_named("y", &y).unwrap();
         for l in 0..g.spec.layers.len() {
-            m.bind(&h.program, &format!("w{l}"), &ws[l]).unwrap();
-            m.bind(&h.program, &format!("b{l}"), &bs[l]).unwrap();
+            m.bind_named(&format!("w{l}"), &ws[l]).unwrap();
+            m.bind_named(&format!("b{l}"), &bs[l]).unwrap();
         }
-        m.run(&h.program).unwrap();
+        m.execute();
         let last = g.spec.layers.len() - 1;
-        let sim_out = m.read(&h.program, &format!("o{last}")).unwrap();
-        let sim_loss = m.read(&h.program, "loss").unwrap()[0];
+        let sim_out = m.read_named(&format!("o{last}")).unwrap().to_vec();
+        let sim_loss = m.read_named("loss").unwrap().to_vec()[0];
 
         let step = g.train_step(&x, &y, &ws, &bs).expect("golden train step");
         assert_eq!(sim_out, step.out, "trial {trial}: outputs diverge");
         assert_eq!(sim_loss, step.loss, "trial {trial}: loss lanes diverge");
         for l in 0..g.spec.layers.len() {
-            let sim_w = m.read(&h.program, &format!("w{l}")).unwrap();
-            let sim_b = m.read(&h.program, &format!("b{l}")).unwrap();
+            let sim_w = m.read_named(&format!("w{l}")).unwrap().to_vec();
+            let sim_b = m.read_named(&format!("b{l}")).unwrap().to_vec();
             assert_eq!(sim_w, step.weights[l], "trial {trial}: layer {l} weights diverge");
             assert_eq!(sim_b, step.biases[l], "trial {trial}: layer {l} biases diverge");
         }
@@ -114,21 +114,21 @@ fn multi_step_training_stays_bit_exact() {
     let (mut ws, mut bs) = rand_params(&g.spec, 900);
     let mut m = MatrixMachine::new(FpgaDevice::selected(), &h.program).unwrap();
     for l in 0..g.spec.layers.len() {
-        m.bind(&h.program, &format!("w{l}"), &ws[l]).unwrap();
-        m.bind(&h.program, &format!("b{l}"), &bs[l]).unwrap();
+        m.bind_named(&format!("w{l}"), &ws[l]).unwrap();
+        m.bind_named(&format!("b{l}"), &bs[l]).unwrap();
     }
     for step in 0..4u64 {
         let x = rand_x(&g, 1000 + step, g.spec.input_dim(), 2.0);
         let y = rand_x(&g, 2000 + step, g.spec.output_dim(), 1.0);
-        m.bind(&h.program, "x", &x).unwrap();
-        m.bind(&h.program, "y", &y).unwrap();
-        m.run(&h.program).unwrap();
+        m.bind_named("x", &x).unwrap();
+        m.bind_named("y", &y).unwrap();
+        m.execute();
         let gold = g.train_step(&x, &y, &ws, &bs).unwrap();
         for l in 0..g.spec.layers.len() {
             ws[l] = gold.weights[l].clone();
             bs[l] = gold.biases[l].clone();
             assert_eq!(
-                m.read(&h.program, &format!("w{l}")).unwrap(),
+                m.read_named(&format!("w{l}")).unwrap().to_vec(),
                 ws[l],
                 "step {step}, layer {l}"
             );

@@ -151,9 +151,9 @@ fn optimizer_preserves_machine_state_on_random_programs() {
         let run = |prog: &Program| -> Vec<Vec<i16>> {
             let mut m = MatrixMachine::new(FpgaDevice::selected(), prog).unwrap();
             for (i, d) in data.iter().enumerate() {
-                m.bind(prog, &prog.buffers[i].name.clone(), d).unwrap();
+                m.write_id(i, d).unwrap();
             }
-            m.run(prog).unwrap();
+            m.execute();
             (0..data.len()).map(|i| m.read_id(i).to_vec()).collect()
         };
         assert_eq!(run(&p), run(&opt), "optimiser changed observable state");
@@ -168,11 +168,11 @@ fn machine_cycle_accounting_is_additive_and_deterministic() {
         let mut m1 = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
         let mut m2 = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
         for (i, d) in data.iter().enumerate() {
-            m1.bind(&p, &p.buffers[i].name.clone(), d).unwrap();
-            m2.bind(&p, &p.buffers[i].name.clone(), d).unwrap();
+            m1.write_id(i, d).unwrap();
+            m2.write_id(i, d).unwrap();
         }
-        let s1 = m1.run(&p).unwrap();
-        let s2 = m2.run(&p).unwrap();
+        let s1 = m1.execute();
+        let s2 = m2.execute();
         assert_eq!(s1, s2, "same program+data must cost the same");
         assert_eq!(
             s1.cycles,

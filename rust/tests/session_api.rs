@@ -1,0 +1,350 @@
+//! Session front-door integration tests (ISSUE 2 acceptance):
+//!
+//! * `Session::infer` is **bit-identical** — outputs and cycle stats —
+//!   to the legacy `MatrixMachine` structurally-verified path on
+//!   randomized networks.
+//! * The artifact cache really is compile-once: a second compile of the
+//!   same net returns the same `Arc`, and a second open of the same
+//!   `(net, device)` pair does not rebuild the `ExecPlan`.
+//! * Typed-handle diagnostics: unknown tensors suggest near misses,
+//!   foreign handles and shape mismatches are rejected, train configs
+//!   must match the compiled artifact.
+
+use mfnn::cluster::ClusterConfig;
+use mfnn::fixed::FixedSpec;
+use mfnn::hw::{FpgaDevice, MatrixMachine};
+use mfnn::nn::dataset;
+use mfnn::nn::lowering::lower_forward;
+use mfnn::nn::lut::ActKind;
+use mfnn::nn::mlp::{LutParams, MlpSpec};
+use mfnn::nn::trainer::TrainConfig;
+use mfnn::session::{CompileOptions, Compiler, Error, NetJob, Session, Target};
+use mfnn::util::Rng;
+use std::sync::Arc;
+
+fn random_spec(r: &mut Rng, name: &str) -> (MlpSpec, usize) {
+    let fixed =
+        if r.gen_bool(0.5) { FixedSpec::PAPER } else { FixedSpec::q(10).saturating() };
+    let n_layers = 1 + r.gen_range(2) as usize;
+    let mut dims = vec![1 + r.gen_range(12) as usize];
+    for _ in 0..n_layers {
+        dims.push(1 + r.gen_range(20) as usize);
+    }
+    let spec = MlpSpec::from_dims(
+        name,
+        &dims,
+        ActKind::Relu,
+        ActKind::Identity,
+        fixed,
+        LutParams::training(fixed),
+    )
+    .unwrap();
+    let batch = 1 + r.gen_range(16) as usize;
+    (spec, batch)
+}
+
+fn rand_q(r: &mut Rng, f: FixedSpec, n: usize, amp: f64) -> Vec<i16> {
+    (0..n).map(|_| f.from_f64((r.gen_f64() - 0.5) * amp)).collect()
+}
+
+#[test]
+fn session_infer_bit_identical_to_legacy_verified_path() {
+    let compiler = Compiler::new();
+    let device = FpgaDevice::selected();
+    let mut r = Rng::new(0xA11CE);
+    for case in 0..6u64 {
+        let (spec, batch) = random_spec(&mut r, &format!("net{case}"));
+        let f = spec.fixed;
+        let artifact = compiler.compile_spec(&spec, &CompileOptions::inference(batch)).unwrap();
+        let mut s = Session::open(Arc::clone(&artifact), Target::Board(device)).unwrap();
+
+        // identical random parameters on both paths
+        let ws: Vec<Vec<i16>> = spec
+            .layers
+            .iter()
+            .map(|l| rand_q(&mut r, f, l.inputs * l.outputs, 1.2))
+            .collect();
+        let bs: Vec<Vec<i16>> =
+            spec.layers.iter().map(|l| rand_q(&mut r, f, l.outputs, 0.4)).collect();
+        let qx = rand_q(&mut r, f, batch * spec.input_dim(), 2.0);
+
+        for l in 0..spec.layers.len() {
+            s.write(&artifact.tensor(&format!("w{l}")).unwrap(), &ws[l]).unwrap();
+            s.write(&artifact.tensor(&format!("b{l}")).unwrap(), &bs[l]).unwrap();
+        }
+        let inf = s.infer(&qx).unwrap();
+
+        // legacy path: hand-lowered program on a hand-built machine,
+        // executed with full structural verification
+        let lowered = lower_forward(&spec, batch).unwrap();
+        let mut m = MatrixMachine::new(device, &lowered.program).unwrap();
+        m.bind_named("x", &qx).unwrap();
+        for l in 0..spec.layers.len() {
+            m.bind_named(&format!("w{l}"), &ws[l]).unwrap();
+            m.bind_named(&format!("b{l}"), &bs[l]).unwrap();
+        }
+        let legacy_stats = m.execute_verified().unwrap();
+        let last = spec.layers.len() - 1;
+        let legacy_out = m.read_named(&format!("o{last}")).unwrap().to_vec();
+
+        assert_eq!(inf.output, legacy_out, "case {case}: outputs diverge");
+        assert_eq!(inf.stats.cycles, legacy_stats.cycles, "case {case}: cycles diverge");
+        assert_eq!(inf.stats, legacy_stats, "case {case}: run stats diverge");
+    }
+}
+
+#[test]
+fn artifact_cache_compiles_once_per_net_and_device() {
+    let compiler = Compiler::new();
+    let mut r = Rng::new(0xCAFE);
+    let (spec, batch) = random_spec(&mut r, "cached");
+    let opts = CompileOptions::inference(batch);
+
+    // same spec + options ⇒ same artifact Arc
+    let a1 = compiler.compile_spec(&spec, &opts).unwrap();
+    let a2 = compiler.compile_spec(&spec, &opts).unwrap();
+    assert!(Arc::ptr_eq(&a1, &a2), "artifact was rebuilt");
+    assert_eq!(compiler.cached(), 1);
+
+    // first plan build is cached; a second open / plan request returns
+    // the same compiled ExecPlan
+    let device = FpgaDevice::selected();
+    let p1 = a1.plan_for(&device);
+    let _s1 = Session::open(Arc::clone(&a1), Target::Board(device)).unwrap();
+    let _s2 = Session::open(Arc::clone(&a2), Target::Board(device)).unwrap();
+    let p2 = a2.plan_for(&device);
+    assert!(Arc::ptr_eq(&p1, &p2), "plan was rebuilt for the same (net, device)");
+
+    // a different device gets its own plan
+    let other = FpgaDevice::by_name("XC7S50-1").unwrap();
+    assert!(!Arc::ptr_eq(&p1, &a1.plan_for(&other)));
+
+    // different options ⇒ different artifact
+    let a3 = compiler.compile_spec(&spec, &CompileOptions::inference(batch + 1)).unwrap();
+    assert!(!Arc::ptr_eq(&a1, &a3));
+
+    // asm source caches too
+    const SRC: &str = "
+NET cachedasm
+INPUT x 4 2
+WEIGHT w 2 2
+BIAS b 2
+ACT a relu
+MLP o x w b a
+OUTPUT o
+";
+    let b1 = compiler.compile_asm_net(SRC).unwrap();
+    let b2 = compiler.compile_asm_net(SRC).unwrap();
+    assert!(Arc::ptr_eq(&b1, &b2), "asm artifact was rebuilt");
+}
+
+#[test]
+fn typed_handle_diagnostics() {
+    let compiler = Compiler::new();
+    let fixed = FixedSpec::q(10).saturating();
+    let spec = MlpSpec::from_dims(
+        "diag",
+        &[4, 8, 2],
+        ActKind::Relu,
+        ActKind::Identity,
+        fixed,
+        LutParams::training(fixed),
+    )
+    .unwrap();
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::inference(4)).unwrap();
+    let mut s =
+        Session::open(Arc::clone(&artifact), Target::Board(FpgaDevice::selected())).unwrap();
+
+    // unknown tensor: near miss suggests the real name
+    let err = artifact.tensor("w9").unwrap_err();
+    assert!(matches!(err, Error::UnknownTensor { .. }));
+    let msg = err.to_string();
+    assert!(msg.contains("did you mean"), "no suggestion in {msg:?}");
+
+    // shape mismatch carries the declared shape
+    let w0 = artifact.tensor("w0").unwrap();
+    assert_eq!((w0.rows(), w0.cols(), w0.len()), (4, 8, 32));
+    let err = s.write(&w0, &[0i16; 3]).unwrap_err();
+    assert!(matches!(err, Error::ShapeMismatch { expect: 32, got: 3, .. }), "{err}");
+
+    // a handle from another artifact is rejected
+    let other = compiler.compile_spec(&spec, &CompileOptions::inference(8)).unwrap();
+    let foreign = other.tensor("w0").unwrap();
+    assert!(matches!(s.write(&foreign, &[0i16; 32]), Err(Error::ForeignHandle { .. })));
+
+    // train config must match the compiled artifact
+    let trainable = compiler
+        .compile_spec(&spec, &CompileOptions::training(8, 1.0 / 128.0))
+        .unwrap();
+    let mut ts = Session::open(trainable, Target::Board(FpgaDevice::selected())).unwrap();
+    let ds = dataset::blobs(64, 2, 4, 5);
+    let bad = TrainConfig { batch: 16, lr: 1.0 / 128.0, steps: 1, seed: 1, log_every: 1 };
+    assert!(matches!(
+        ts.train(&ds, &bad),
+        Err(Error::ConfigMismatch { what: "batch", .. })
+    ));
+    let bad = TrainConfig { batch: 8, lr: 1.0 / 64.0, steps: 1, seed: 1, log_every: 1 };
+    assert!(matches!(ts.train(&ds, &bad), Err(Error::ConfigMismatch { what: "lr", .. })));
+    // inference-only artifacts cannot train
+    let cfg = TrainConfig { batch: 4, lr: 1.0 / 128.0, steps: 1, seed: 1, log_every: 1 };
+    assert!(matches!(s.train(&ds, &cfg), Err(Error::Unsupported { verb: "train", .. })));
+}
+
+#[test]
+fn board_session_trains_and_evaluates_like_the_engine() {
+    let compiler = Compiler::new();
+    let fixed = FixedSpec::q(10).saturating();
+    let spec = MlpSpec::from_dims(
+        "blobs3",
+        &[4, 16, 3],
+        ActKind::Relu,
+        ActKind::Identity,
+        fixed,
+        LutParams::training(fixed),
+    )
+    .unwrap();
+    let ds = dataset::blobs(256, 3, 4, 1234);
+    let (train, test) = ds.split(0.8, &mut Rng::new(5));
+    let cfg = TrainConfig { batch: 16, lr: 1.0 / 256.0, steps: 150, seed: 42, log_every: 10 };
+    let artifact =
+        compiler.compile_spec(&spec, &CompileOptions::training(16, 1.0 / 256.0)).unwrap();
+    let mut s = Session::open(artifact, Target::Board(FpgaDevice::selected())).unwrap();
+    let before = s.evaluate(&test).unwrap();
+    let report = s.train(&train, &cfg).unwrap();
+    let after = s.evaluate(&test).unwrap();
+    assert!(
+        after.accuracy > 0.85 && after.accuracy > before.accuracy,
+        "accuracy {} → {}",
+        before.accuracy,
+        after.accuracy
+    );
+    assert_eq!(report.boards, vec![0]);
+    assert_eq!(report.sync_rounds, 0);
+    assert!(report.stats.cycles > 0 && report.sim_seconds > 0.0);
+    let first = report.curve.first().unwrap().loss;
+    let last = report.curve.last().unwrap().loss;
+    assert!(last < first, "loss did not decrease: {first} → {last}");
+}
+
+#[test]
+fn evaluate_before_train_uses_seedless_zero_weights() {
+    // An opened trainable session with no writes and no train yet has
+    // all-zero parameters; evaluate must still run (and be uninformative).
+    let compiler = Compiler::new();
+    let fixed = FixedSpec::q(10).saturating();
+    let spec = MlpSpec::from_dims(
+        "zero",
+        &[2, 4, 2],
+        ActKind::Relu,
+        ActKind::Identity,
+        fixed,
+        LutParams::training(fixed),
+    )
+    .unwrap();
+    let artifact =
+        compiler.compile_spec(&spec, &CompileOptions::training(8, 1.0 / 128.0)).unwrap();
+    let mut s = Session::open(artifact, Target::Board(FpgaDevice::selected())).unwrap();
+    let ds = dataset::xor(30, 2); // 30 % 8 != 0: exercises the partial chunk
+    let e = s.evaluate(&ds).unwrap();
+    assert!((0.0..=1.0).contains(&e.accuracy));
+    assert!(e.stats.cycles > 0);
+}
+
+#[test]
+fn cluster_session_trains_divided_and_adopts_weights() {
+    let compiler = Compiler::new();
+    let fixed = FixedSpec::q(10).saturating();
+    let spec = MlpSpec::from_dims(
+        "dp",
+        &[4, 16, 3],
+        ActKind::Relu,
+        ActKind::Identity,
+        fixed,
+        LutParams::training(fixed),
+    )
+    .unwrap();
+    let ds = dataset::blobs(192, 3, 4, 77);
+    let (train, test) = ds.split(0.75, &mut Rng::new(77));
+    let artifact =
+        compiler.compile_spec(&spec, &CompileOptions::training(16, 1.0 / 256.0)).unwrap();
+    let ccfg = ClusterConfig { boards: 3, sync_every: 15, ..Default::default() };
+    let mut s = Session::open(artifact, Target::Cluster(ccfg)).unwrap();
+    let cfg = TrainConfig { batch: 16, lr: 1.0 / 256.0, steps: 60, seed: 9, log_every: 10 };
+    let report = s.train(&train, &cfg).unwrap();
+    assert_eq!(report.boards, vec![0, 1, 2], "1 net on 3 boards must divide");
+    assert_eq!(report.sync_rounds, 4, "60 steps / sync_every 15");
+    assert!(report.sim_seconds > 0.0);
+    // the averaged weights were adopted: local evaluation reflects the
+    // cluster training
+    let e = s.evaluate(&test).unwrap();
+    assert!(e.accuracy > 0.7, "divided training reached only {}", e.accuracy);
+    // inference runs locally on the adopted weights
+    let out = s.infer(&train.encode_rows(0..16, fixed)).unwrap();
+    assert_eq!(out.output.len(), 16 * 3);
+}
+
+#[test]
+fn train_many_runs_the_m_by_f_matrix() {
+    let compiler = Compiler::new();
+    let fixed = FixedSpec::q(10).saturating();
+    let mk = |name: &str, seed: u64| {
+        let spec = MlpSpec::from_dims(
+            name,
+            &[4, 16, 3],
+            ActKind::Relu,
+            ActKind::Identity,
+            fixed,
+            LutParams::training(fixed),
+        )
+        .unwrap();
+        let (train, test) = dataset::blobs(192, 3, 4, seed).split(0.75, &mut Rng::new(seed));
+        NetJob {
+            artifact: compiler
+                .compile_spec(&spec, &CompileOptions::training(16, 1.0 / 256.0))
+                .unwrap(),
+            cfg: TrainConfig { batch: 16, lr: 1.0 / 256.0, steps: 40, seed, log_every: 10 },
+            train: Arc::new(train),
+            test: Arc::new(test),
+        }
+    };
+    let cfg = ClusterConfig { boards: 2, ..Default::default() };
+    let report = Session::train_many(&cfg, &[mk("a", 1), mk("b", 2)]).unwrap();
+    assert_eq!(report.results.len(), 2);
+    assert!(report.results.iter().all(|r| r.steps == 40));
+    assert!(report.makespan_s > 0.0);
+    // compile-once held across the fleet: both jobs' artifacts cached
+    assert!(compiler.cached() >= 2);
+}
+
+#[test]
+fn raw_program_artifacts_step_with_handles() {
+    use mfnn::assembler::program::{BufKind, LaneOp, Program, Step, View, Wave};
+    use mfnn::isa::Opcode;
+    let mut p = Program::new("raw", FixedSpec::PAPER);
+    let a = p.buffer("a", 16, 1, BufKind::Input);
+    let o = p.buffer("o", 16, 1, BufKind::Output);
+    p.steps.push(Step::Wave(Wave {
+        op: Opcode::VectorAddition,
+        vec_len: 16,
+        lut: None,
+        lanes: vec![LaneOp {
+            a: View::all(a, 16),
+            b: Some(View::all(a, 16)),
+            out: View::all(o, 16),
+        }],
+    }));
+    let compiler = Compiler::new();
+    let artifact = compiler.compile_program(&p).unwrap();
+    let mut s =
+        Session::open(Arc::clone(&artifact), Target::Board(FpgaDevice::selected())).unwrap();
+    let ha = artifact.tensor("a").unwrap();
+    let ho = artifact.tensor("o").unwrap();
+    let data: Vec<i16> = (0..16).collect();
+    s.write(&ha, &data).unwrap();
+    let st = s.step();
+    assert!(st.cycles > 0);
+    let doubled: Vec<i16> = data.iter().map(|v| v * 2).collect();
+    assert_eq!(s.read(&ho).unwrap(), doubled);
+    // net-shaped verbs are cleanly unavailable
+    assert!(matches!(s.infer(&data), Err(Error::Unsupported { verb: "infer", .. })));
+}

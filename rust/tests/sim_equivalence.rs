@@ -19,11 +19,11 @@ fn assert_fast_matches_structural(p: &Program, binds: &[(usize, Vec<i16>)], tag:
     let mut slow = MatrixMachine::new(device, p).unwrap();
     for (id, data) in binds {
         let name = p.buffers[*id].name.clone();
-        fast.bind(p, &name, data).unwrap();
-        slow.bind(p, &name, data).unwrap();
+        fast.bind_named(&name, data).unwrap();
+        slow.bind_named(&name, data).unwrap();
     }
-    let sf = fast.run(p).unwrap();
-    let sv = slow.run_verified(p).expect("structural verification must pass");
+    let sf = fast.execute();
+    let sv = slow.execute_verified().expect("structural verification must pass");
     assert_eq!(sf.cycles, sv.cycles, "{tag}: cycle accounting diverged");
     assert_eq!(sf, sv, "{tag}: run stats diverged");
     for id in 0..p.buffers.len() {
@@ -99,11 +99,11 @@ fn random_programs_agree_between_fast_and_structural() {
         let mut fast = MatrixMachine::new(device, &p).unwrap();
         let mut slow = MatrixMachine::new(device, &p).unwrap();
         for (id, data) in &binds {
-            fast.bind(&p, &p.buffers[*id].name.clone(), data).unwrap();
-            slow.bind(&p, &p.buffers[*id].name.clone(), data).unwrap();
+            fast.write_id(*id, data).unwrap();
+            slow.write_id(*id, data).unwrap();
         }
-        let sf = fast.run(&p).unwrap();
-        let sv = slow.run_verified(&p).expect("structural verification must pass");
+        let sf = fast.execute();
+        let sv = slow.execute_verified().expect("structural verification must pass");
         assert_eq!(sf.cycles, sv.cycles, "seed {seed}: cycle accounting diverged");
         for (id, _) in &binds {
             assert_eq!(fast.read_id(*id), slow.read_id(*id), "seed {seed} buffer {id}");
@@ -131,8 +131,8 @@ fn multi_lane_waves_verify_structurally() {
     p.steps.push(Step::Wave(Wave { op: Opcode::ElementMultiplication, vec_len: n, lut: None, lanes }));
     let data: Vec<i16> = (0..lanes_count * n).map(|_| r.gen_i16()).collect();
     let mut m = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
-    m.bind(&p, "a", &data).unwrap();
-    m.run_verified(&p).unwrap();
+    m.bind_named("a", &data).unwrap();
+    m.execute_verified().unwrap();
 }
 
 /// Build a random program whose waves walk *columns* of row-major
