@@ -34,6 +34,30 @@ impl SystemBus {
     }
 }
 
+/// FNV-1a integrity word over a per-layer parameter set — the checksum a
+/// board attaches to the parameters it returns over the bus, and the
+/// leader re-derives to reject chunks corrupted in transit (the
+/// fault-injection differential plants exactly such corruption; see
+/// [`super::fault::FaultPlan::corruptions`]). Layer lengths are folded in
+/// so differently-shaped layouts cannot collide by concatenation.
+pub fn params_checksum(w: &[Vec<i16>], b: &[Vec<i16>]) -> u64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = OFFSET;
+    for group in [w, b] {
+        h = (h ^ group.len() as u64).wrapping_mul(PRIME);
+        for layer in group {
+            h = (h ^ layer.len() as u64).wrapping_mul(PRIME);
+            for lane in layer {
+                for byte in lane.to_le_bytes() {
+                    h = (h ^ byte as u64).wrapping_mul(PRIME);
+                }
+            }
+        }
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -58,5 +82,21 @@ mod tests {
         let b = SystemBus { bandwidth_bps: 1e6, latency_s: 1e-3 };
         let t = b.round_trip_s(1000, 2000);
         assert!((t - (2e-3 + 0.003)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn checksum_detects_single_lane_flips_and_layout_shuffles() {
+        let w = vec![vec![1i16, -2, 3], vec![4]];
+        let b = vec![vec![5i16], vec![6]];
+        let base = params_checksum(&w, &b);
+        assert_eq!(base, params_checksum(&w.clone(), &b.clone()), "not deterministic");
+        let mut flipped = w.clone();
+        flipped[0][1] ^= 0x0400;
+        assert_ne!(base, params_checksum(&flipped, &b));
+        // moving a lane across the layer boundary must not collide
+        let w2 = vec![vec![1i16, -2], vec![3, 4]];
+        assert_ne!(base, params_checksum(&w2, &b));
+        // swapping the weight/bias roles must not collide
+        assert_ne!(base, params_checksum(&b, &w));
     }
 }

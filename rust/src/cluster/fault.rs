@@ -1,0 +1,148 @@
+//! Deterministic fault injection for the cluster runtime.
+//!
+//! The testkit's fault differential (`crate::testkit`) must be able to
+//! kill workers, corrupt parameter chunks in transit, and delay or
+//! reorder replies — and replay *exactly* the same faults from a seed.
+//! A [`FaultPlan`] is therefore a pure schedule: every fault is addressed
+//! by an explicit `(board, event-index)` site, with no randomness at
+//! injection time. The hooks live in [`super::worker`] (death, delay,
+//! reorder, corruption) and [`super::leader`] (corrupt-chunk rejection
+//! via the [`super::bus::params_checksum`] integrity word).
+//!
+//! The contract the leader must uphold under any plan: **never hang** —
+//! finish with correct results (benign faults) or surface a typed
+//! [`super::leader::ClusterError`] (lethal faults).
+
+/// One injected fault site, addressed by board + a per-board event index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSite {
+    /// Target board.
+    pub board: usize,
+    /// Per-board event index: the command index for deaths, the
+    /// successful chunk-reply index for the chunk faults.
+    pub at: usize,
+}
+
+/// A deterministic fault schedule for one cluster run. Empty by default
+/// (no faults); [`super::ClusterConfig`] carries one per run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Worker death: the board's thread exits without replying, on
+    /// receipt of its `at`-th command. The leader must surface
+    /// [`super::leader::ClusterError::WorkerDied`].
+    pub kills: Vec<FaultSite>,
+    /// Corrupt the `at`-th chunk reply's parameters *after* the board
+    /// checksummed them (simulated bus corruption); the leader must
+    /// reject the chunk ([`super::leader::ClusterError::CorruptChunk`]).
+    pub corruptions: Vec<FaultSite>,
+    /// Delay the `at`-th chunk reply by ~1 ms of wall clock. The
+    /// protocol is synchronous per board, so results must be unchanged.
+    pub delays: Vec<FaultSite>,
+    /// Send a stray out-of-order reply before the `at`-th chunk reply;
+    /// the leader must surface a typed protocol error, not hang.
+    pub reorders: Vec<FaultSite>,
+}
+
+impl FaultPlan {
+    /// The empty plan (no faults) — what [`Default`] gives.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty()
+            && self.corruptions.is_empty()
+            && self.delays.is_empty()
+            && self.reorders.is_empty()
+    }
+
+    /// True when every injected fault is result-preserving (delays only):
+    /// the run must complete with results bit-identical to a clean run.
+    pub fn is_benign(&self) -> bool {
+        self.kills.is_empty() && self.corruptions.is_empty() && self.reorders.is_empty()
+    }
+
+    /// Schedule a worker death on `board` at command index `at`.
+    pub fn kill(mut self, board: usize, at: usize) -> FaultPlan {
+        self.kills.push(FaultSite { board, at });
+        self
+    }
+
+    /// Schedule a parameter corruption on `board`'s `at`-th chunk reply.
+    pub fn corrupt(mut self, board: usize, at: usize) -> FaultPlan {
+        self.corruptions.push(FaultSite { board, at });
+        self
+    }
+
+    /// Schedule a delay on `board`'s `at`-th chunk reply.
+    pub fn delay(mut self, board: usize, at: usize) -> FaultPlan {
+        self.delays.push(FaultSite { board, at });
+        self
+    }
+
+    /// Schedule a stray out-of-order reply before `board`'s `at`-th
+    /// chunk reply.
+    pub fn reorder(mut self, board: usize, at: usize) -> FaultPlan {
+        self.reorders.push(FaultSite { board, at });
+        self
+    }
+
+    fn hits(sites: &[FaultSite], board: usize, at: usize) -> bool {
+        sites.iter().any(|s| s.board == board && s.at == at)
+    }
+
+    /// Does `board`'s worker die on receipt of command `cmd`?
+    pub(crate) fn dies_at(&self, board: usize, cmd: usize) -> bool {
+        Self::hits(&self.kills, board, cmd)
+    }
+
+    /// Is `board`'s `chunk`-th chunk reply corrupted in transit?
+    pub(crate) fn corrupts_chunk(&self, board: usize, chunk: usize) -> bool {
+        Self::hits(&self.corruptions, board, chunk)
+    }
+
+    /// Is `board`'s `chunk`-th chunk reply delayed?
+    pub(crate) fn delays_chunk(&self, board: usize, chunk: usize) -> bool {
+        Self::hits(&self.delays, board, chunk)
+    }
+
+    /// Is a stray reply injected before `board`'s `chunk`-th chunk reply?
+    pub(crate) fn reorders_chunk(&self, board: usize, chunk: usize) -> bool {
+        Self::hits(&self.reorders, board, chunk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_injects_nothing() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        assert!(p.is_benign());
+        assert!(!p.dies_at(0, 0));
+        assert!(!p.corrupts_chunk(0, 0));
+    }
+
+    #[test]
+    fn sites_address_board_and_index_exactly() {
+        let p = FaultPlan::none().kill(1, 2).corrupt(0, 0).delay(2, 1).reorder(1, 0);
+        assert!(p.dies_at(1, 2));
+        assert!(!p.dies_at(1, 1));
+        assert!(!p.dies_at(2, 2));
+        assert!(p.corrupts_chunk(0, 0));
+        assert!(p.delays_chunk(2, 1));
+        assert!(p.reorders_chunk(1, 0));
+        assert!(!p.is_empty());
+        assert!(!p.is_benign());
+    }
+
+    #[test]
+    fn delay_only_plans_are_benign() {
+        let p = FaultPlan::none().delay(0, 0).delay(1, 3);
+        assert!(p.is_benign());
+        assert!(!p.is_empty());
+    }
+}

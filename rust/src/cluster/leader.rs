@@ -2,10 +2,11 @@
 //! orchestrates data-parallel weight averaging for divided jobs, accounts
 //! simulated bus + compute time, and aggregates results.
 
-use super::bus::SystemBus;
+use super::bus::{params_checksum, SystemBus};
+use super::fault::FaultPlan;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::scheduler::{schedule, Placement, PlacementMode};
-use super::worker::{Cmd, Reply, Worker};
+use super::worker::{Cmd, Reply, Worker, WorkerGone};
 use crate::hw::{FpgaDevice, RunStats};
 use crate::nn::dataset::Dataset;
 use crate::nn::trainer::{LossPoint, TrainConfig};
@@ -24,6 +25,10 @@ pub struct ClusterConfig {
     pub bus: SystemBus,
     /// Steps between weight syncs for divided jobs.
     pub sync_every: usize,
+    /// Deterministic fault schedule (empty = no faults) — the testkit's
+    /// fault differential injects worker death, chunk corruption, and
+    /// delayed/reordered replies through this.
+    pub faults: FaultPlan,
 }
 
 impl Default for ClusterConfig {
@@ -33,6 +38,7 @@ impl Default for ClusterConfig {
             device: "XC7S75-2".into(),
             bus: SystemBus::default(),
             sync_every: 20,
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -112,9 +118,24 @@ pub enum ClusterError {
     /// A worker reported an error.
     #[error("job {0} on board {1}: {2}")]
     Worker(String, usize, String),
+    /// A worker thread died (channel closed) while serving a job — the
+    /// typed surface of injected (or real) worker death; the leader
+    /// aborts the job instead of hanging on the dead channel.
+    #[error("job {0}: board {1} worker died (channel closed)")]
+    WorkerDied(String, usize),
+    /// A returned parameter chunk failed its bus integrity check
+    /// ([`params_checksum`]); the leader rejects it rather than adopting
+    /// or averaging corrupted parameters.
+    #[error("job {0}: board {1} returned a corrupt parameter chunk (checksum mismatch)")]
+    CorruptChunk(String, usize),
     /// No jobs given.
     #[error("no jobs")]
     NoJobs,
+}
+
+/// Map a closed worker channel into the typed error for `job`.
+fn died(job_name: &str) -> impl '_ + Fn(WorkerGone) -> ClusterError {
+    move |g| ClusterError::WorkerDied(job_name.to_string(), g.board)
 }
 
 /// Average quantised weights across replicas (element-wise i32 mean,
@@ -156,8 +177,9 @@ pub fn execute(cfg: &ClusterConfig, jobs: &[Job]) -> Result<ClusterReport, Clust
     // Workers are moved into the orchestrator thread that exclusively
     // drives them (board queues / board groups are disjoint), because the
     // reply receiver is single-consumer.
-    let mut worker_slots: Vec<Option<Worker>> =
-        (0..cfg.boards).map(|b| Some(Worker::spawn(b, device, Arc::clone(&metrics)))).collect();
+    let mut worker_slots: Vec<Option<Worker>> = (0..cfg.boards)
+        .map(|b| Some(Worker::spawn(b, device, Arc::clone(&metrics), cfg.faults.clone())))
+        .collect();
 
     let mut board_time = vec![0.0f64; cfg.boards];
     let mut results: Vec<Option<JobResult>> = (0..jobs.len()).map(|_| None).collect();
@@ -250,8 +272,11 @@ fn expect_chunk(
     job_name: &str,
     board: usize,
 ) -> Result<(Vec<LossPoint>, RunStats, f64, Vec<Vec<i16>>, Vec<Vec<i16>>), ClusterError> {
-    match worker.recv() {
-        Reply::ChunkDone { curve, stats, sim_seconds, w, b, .. } => {
+    match worker.recv().map_err(died(job_name))? {
+        Reply::ChunkDone { curve, stats, sim_seconds, w, b, checksum, .. } => {
+            if params_checksum(&w, &b) != checksum {
+                return Err(ClusterError::CorruptChunk(job_name.to_string(), board));
+            }
             Ok((curve, stats, sim_seconds, w, b))
         }
         Reply::Error { message, .. } => {
@@ -266,7 +291,7 @@ fn expect_chunk(
 }
 
 fn expect_ready(worker: &Worker, job_name: &str, board: usize) -> Result<(), ClusterError> {
-    match worker.recv() {
+    match worker.recv().map_err(died(job_name))? {
         Reply::Ready { .. } => Ok(()),
         Reply::Error { message, .. } => {
             Err(ClusterError::Worker(job_name.to_string(), board, message))
@@ -293,21 +318,29 @@ fn run_single(
     let mut bus_s = bus.transfer_s(up_bytes);
     Metrics::add(&metrics.bus_bytes, up_bytes);
 
-    worker.send(Cmd::NewTrainer { job: job_id, spec: job.spec.clone(), cfg: job.cfg.clone() });
+    worker
+        .send(Cmd::NewTrainer { job: job_id, spec: job.spec.clone(), cfg: job.cfg.clone() })
+        .map_err(died(&job.name))?;
     expect_ready(worker, &job.name, board)?;
     if let Some((w0, b0)) = &job.initial {
-        worker.send(Cmd::SetWeights { job: job_id, w: w0.clone(), b: b0.clone() });
+        worker
+            .send(Cmd::SetWeights { job: job_id, w: w0.clone(), b: b0.clone() })
+            .map_err(died(&job.name))?;
         expect_ready(worker, &job.name, board)?;
     }
-    worker.send(Cmd::TrainChunk {
-        job: job_id,
-        data: Arc::clone(&job.train_data),
-        steps: job.cfg.steps,
-    });
+    worker
+        .send(Cmd::TrainChunk {
+            job: job_id,
+            data: Arc::clone(&job.train_data),
+            steps: job.cfg.steps,
+        })
+        .map_err(died(&job.name))?;
     let (curve, stats, sim_s, final_w, final_b) = expect_chunk(worker, &job.name, board)?;
 
-    worker.send(Cmd::Evaluate { job: job_id, data: Arc::clone(&job.test_data) });
-    let (accuracy, eval_stats, eval_s) = match worker.recv() {
+    worker
+        .send(Cmd::Evaluate { job: job_id, data: Arc::clone(&job.test_data) })
+        .map_err(died(&job.name))?;
+    let (accuracy, eval_stats, eval_s) = match worker.recv().map_err(died(&job.name))? {
         Reply::EvalDone { accuracy, stats, sim_seconds, .. } => (accuracy, stats, sim_seconds),
         Reply::Error { message, .. } => {
             return Err(ClusterError::Worker(job.name.clone(), board, message))
@@ -368,7 +401,8 @@ fn run_divided(
         Metrics::add(&metrics.bus_bytes, up);
         let mut cfg = job.cfg.clone();
         cfg.seed = cfg.seed.wrapping_add(i as u64 * 0x9E37);
-        w.send(Cmd::NewTrainer { job: job_id, spec: job.spec.clone(), cfg });
+        w.send(Cmd::NewTrainer { job: job_id, spec: job.spec.clone(), cfg })
+            .map_err(died(&job.name))?;
     }
     for (i, w) in group_workers.iter().enumerate() {
         expect_ready(w, &job.name, boards[i])?;
@@ -378,17 +412,20 @@ fn run_divided(
     let (w0, b0) = match &job.initial {
         Some((w0, b0)) => (w0.clone(), b0.clone()),
         None => {
-            group_workers[0].send(Cmd::TrainChunk {
-                job: job_id,
-                data: Arc::clone(&job.train_data),
-                steps: 0,
-            });
+            group_workers[0]
+                .send(Cmd::TrainChunk {
+                    job: job_id,
+                    data: Arc::clone(&job.train_data),
+                    steps: 0,
+                })
+                .map_err(died(&job.name))?;
             let (_, _, _, w0, b0) = expect_chunk(group_workers[0], &job.name, boards[0])?;
             (w0, b0)
         }
     };
     for (i, w) in group_workers.iter().enumerate() {
-        w.send(Cmd::SetWeights { job: job_id, w: w0.clone(), b: b0.clone() });
+        w.send(Cmd::SetWeights { job: job_id, w: w0.clone(), b: b0.clone() })
+            .map_err(died(&job.name))?;
         expect_ready(w, &job.name, boards[i])?;
     }
 
@@ -408,7 +445,8 @@ fn run_divided(
                 job: job_id,
                 data: Arc::clone(&job.train_data),
                 steps,
-            });
+            })
+            .map_err(died(&job.name))?;
         }
         let mut ws = Vec::with_capacity(k);
         let mut bs = Vec::with_capacity(k);
@@ -437,7 +475,8 @@ fn run_divided(
         let avg_w = average_weights(&ws);
         let avg_b = average_weights(&bs);
         for (i, w) in group_workers.iter().enumerate() {
-            w.send(Cmd::SetWeights { job: job_id, w: avg_w.clone(), b: avg_b.clone() });
+            w.send(Cmd::SetWeights { job: job_id, w: avg_w.clone(), b: avg_b.clone() })
+                .map_err(died(&job.name))?;
             times[i] += sync_s / k as f64;
         }
         cur_w = avg_w;
@@ -449,8 +488,10 @@ fn run_divided(
     }
 
     // Evaluate on replica 0.
-    group_workers[0].send(Cmd::Evaluate { job: job_id, data: Arc::clone(&job.test_data) });
-    let (accuracy, eval_stats, eval_s) = match group_workers[0].recv() {
+    group_workers[0]
+        .send(Cmd::Evaluate { job: job_id, data: Arc::clone(&job.test_data) })
+        .map_err(died(&job.name))?;
+    let (accuracy, eval_stats, eval_s) = match group_workers[0].recv().map_err(died(&job.name))? {
         Reply::EvalDone { accuracy, stats, sim_seconds, .. } => (accuracy, stats, sim_seconds),
         Reply::Error { message, .. } => {
             return Err(ClusterError::Worker(job.name.clone(), boards[0], message))
@@ -626,5 +667,77 @@ mod tests {
             execute(&cfg, &[mk_job("a", 1, 5)]),
             Err(ClusterError::UnknownDevice(_))
         ));
+    }
+
+    #[test]
+    fn injected_worker_death_surfaces_typed_error_without_hanging() {
+        // Board 1's worker dies on its very first command; the leader
+        // must abort job "b" with WorkerDied while board 0 completes.
+        let cfg = ClusterConfig {
+            boards: 2,
+            faults: FaultPlan::none().kill(1, 0),
+            ..Default::default()
+        };
+        let jobs = vec![mk_job("a", 1, 10), mk_job("b", 2, 10)];
+        let t0 = std::time::Instant::now();
+        let err = execute(&cfg, &jobs).unwrap_err();
+        assert!(
+            matches!(err, ClusterError::WorkerDied(ref name, 1) if name == "b"),
+            "{err}"
+        );
+        assert!(t0.elapsed().as_secs() < 30, "leader hung on worker death");
+    }
+
+    #[test]
+    fn injected_chunk_corruption_is_rejected() {
+        // Single-board run: the one TrainChunk reply is corrupted after
+        // checksumming; the leader must reject it, not adopt it.
+        let cfg = ClusterConfig {
+            boards: 1,
+            faults: FaultPlan::none().corrupt(0, 0),
+            ..Default::default()
+        };
+        let err = execute(&cfg, &[mk_job("c", 3, 5)]).unwrap_err();
+        assert!(
+            matches!(err, ClusterError::CorruptChunk(ref name, 0) if name == "c"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn injected_reorder_surfaces_typed_protocol_error() {
+        let cfg = ClusterConfig {
+            boards: 1,
+            faults: FaultPlan::none().reorder(0, 0),
+            ..Default::default()
+        };
+        let err = execute(&cfg, &[mk_job("r", 4, 5)]).unwrap_err();
+        assert!(
+            matches!(err, ClusterError::Worker(ref name, 0, ref m)
+                if name == "r" && m.contains("unexpected reply")),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn delay_only_faults_leave_results_bit_identical() {
+        // Delays exercise wall-clock timing without touching the
+        // synchronous protocol: results must match the clean run exactly,
+        // on both the divided and the single-board path.
+        for boards in [1usize, 2] {
+            let clean = ClusterConfig { boards, ..Default::default() };
+            let slow = ClusterConfig {
+                boards,
+                faults: FaultPlan::none().delay(0, 0).delay(0, 1),
+                ..Default::default()
+            };
+            let jobs = vec![mk_job("d", 6, 25)];
+            let r1 = execute(&clean, &jobs).unwrap();
+            let r2 = execute(&slow, &jobs).unwrap();
+            assert_eq!(r1.results[0].weights, r2.results[0].weights, "boards {boards}");
+            assert_eq!(r1.results[0].biases, r2.results[0].biases, "boards {boards}");
+            assert_eq!(r1.results[0].accuracy, r2.results[0].accuracy, "boards {boards}");
+            assert!(r2.metrics.faults_injected > 0, "delays did not fire");
+        }
     }
 }

@@ -19,6 +19,8 @@ pub struct Metrics {
     pub sync_rounds: AtomicU64,
     /// Worker errors observed.
     pub errors: AtomicU64,
+    /// Faults injected by the run's [`super::fault::FaultPlan`].
+    pub faults_injected: AtomicU64,
 }
 
 impl Metrics {
@@ -41,6 +43,7 @@ impl Metrics {
             bus_bytes: self.bus_bytes.load(Ordering::Relaxed),
             sync_rounds: self.sync_rounds.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            faults_injected: self.faults_injected.load(Ordering::Relaxed),
         }
     }
 }
@@ -60,6 +63,8 @@ pub struct MetricsSnapshot {
     pub sync_rounds: u64,
     /// Worker errors.
     pub errors: u64,
+    /// Injected faults that fired.
+    pub faults_injected: u64,
 }
 
 #[cfg(test)]

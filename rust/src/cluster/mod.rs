@@ -28,12 +28,14 @@
 //! hardware).
 
 pub mod bus;
+pub mod fault;
 pub mod leader;
 pub mod metrics;
 pub mod scheduler;
 pub mod worker;
 
-pub use bus::SystemBus;
+pub use bus::{params_checksum, SystemBus};
+pub use fault::{FaultPlan, FaultSite};
 pub use leader::{execute, ClusterConfig, ClusterError, ClusterReport, Job, JobResult, Params};
 #[allow(deprecated)]
 pub use leader::run_cluster;

@@ -99,6 +99,60 @@ mod tests {
     }
 
     #[test]
+    fn full_mf_grid_schedules_correctly() {
+        // Exhaustive properties over the 1..=8 × 1..=8 M×F grid: the mode
+        // matches the M/F relation, every job gets ≥ 1 board, and the
+        // queues partition the jobs consistently with the groups.
+        for jobs in 1..=8usize {
+            for boards in 1..=8usize {
+                let p = schedule(jobs, boards);
+                let want = if jobs == boards {
+                    PlacementMode::OneToOne
+                } else if jobs > boards {
+                    PlacementMode::Sequential
+                } else {
+                    PlacementMode::Divided
+                };
+                assert_eq!(p.mode, want, "M={jobs} F={boards}");
+                assert_eq!(p.groups.len(), jobs);
+                assert_eq!(p.queues.len(), boards);
+                // every job gets at least one board
+                assert!(
+                    p.groups.iter().all(|g| !g.is_empty()),
+                    "M={jobs} F={boards}: job without a board"
+                );
+                // queues partition the jobs: each job appears in exactly
+                // the queues of its group's boards, once per board
+                let mut seen = vec![0usize; jobs];
+                for (b, q) in p.queues.iter().enumerate() {
+                    for &j in q {
+                        seen[j] += 1;
+                        assert!(
+                            p.groups[j].contains(&b),
+                            "M={jobs} F={boards}: queue {b} lists job {j} outside its group"
+                        );
+                    }
+                }
+                for (j, &n) in seen.iter().enumerate() {
+                    assert_eq!(
+                        n,
+                        p.groups[j].len(),
+                        "M={jobs} F={boards}: job {j} queued {n}× for {} board(s)",
+                        p.groups[j].len()
+                    );
+                }
+                if jobs <= boards {
+                    // no board is double-booked, and groups cover all
+                    // boards disjointly
+                    assert!(p.queues.iter().all(|q| q.len() == 1));
+                    let total: usize = p.groups.iter().map(Vec::len).sum();
+                    assert_eq!(total, boards, "M={jobs} F={boards}: boards not covered");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn placement_invariants_hold_for_all_shapes() {
         // Property: every job appears in ≥1 group; every board queue entry
         // is consistent with groups; no board is double-booked in Divided

@@ -11,7 +11,16 @@
 //! `Evaluate` step executes the arena-backed plan (fused waves, pooled
 //! lanes) instead of re-interpreting the program, so cluster training
 //! inherits the single-board speedup without protocol changes.
+//!
+//! Fault injection (testkit): the worker honours the run's
+//! [`FaultPlan`] — seeded death (exit without replying), delayed and
+//! reordered chunk replies, and post-checksum parameter corruption. Every
+//! chunk reply carries a [`super::bus::params_checksum`] integrity word
+//! so the leader can reject corrupted parameters instead of averaging
+//! them in.
 
+use super::bus::params_checksum;
+use super::fault::FaultPlan;
 use super::metrics::Metrics;
 use crate::hw::{FpgaDevice, RunStats};
 use crate::nn::dataset::Dataset;
@@ -85,6 +94,9 @@ pub enum Reply {
         w: Vec<Vec<i16>>,
         /// Current biases.
         b: Vec<Vec<i16>>,
+        /// [`params_checksum`] of `(w, b)` as the board computed them —
+        /// the leader re-derives it to reject in-transit corruption.
+        checksum: u64,
     },
     /// An evaluation finished.
     EvalDone {
@@ -106,6 +118,16 @@ pub enum Reply {
     },
 }
 
+/// A worker whose thread is gone: a channel to it is closed because the
+/// thread exited (injected death, shutdown, or panic). The leader maps
+/// this into [`super::leader::ClusterError::WorkerDied`] — the typed
+/// surface of the "leader never hangs" contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerGone {
+    /// Board whose worker vanished.
+    pub board: usize,
+}
+
 /// Handle to a running worker.
 pub struct Worker {
     /// Board index.
@@ -116,27 +138,34 @@ pub struct Worker {
 }
 
 impl Worker {
-    /// Spawn a worker for `board` simulating `device`.
-    pub fn spawn(board: usize, device: FpgaDevice, metrics: Arc<Metrics>) -> Worker {
+    /// Spawn a worker for `board` simulating `device`, honouring the
+    /// run's fault plan.
+    pub fn spawn(
+        board: usize,
+        device: FpgaDevice,
+        metrics: Arc<Metrics>,
+        faults: FaultPlan,
+    ) -> Worker {
         // Bounded depth 1: leader blocks while the board is busy.
         let (cmd_tx, cmd_rx) = sync_channel::<Cmd>(1);
         let (reply_tx, reply_rx) = std::sync::mpsc::channel::<Reply>();
         let handle = std::thread::Builder::new()
             .name(format!("fpga-worker-{board}"))
-            .spawn(move || worker_main(device, cmd_rx, reply_tx, metrics))
+            .spawn(move || worker_main(board, device, cmd_rx, reply_tx, metrics, faults))
             .expect("spawn worker thread");
         Worker { board, cmd_tx, reply_rx, handle: Some(handle) }
     }
 
     /// Send a command (blocks when the board's queue is full —
-    /// backpressure).
-    pub fn send(&self, cmd: Cmd) {
-        self.cmd_tx.send(cmd).expect("worker hung up");
+    /// backpressure). `Err` when the worker thread is gone.
+    pub fn send(&self, cmd: Cmd) -> Result<(), WorkerGone> {
+        self.cmd_tx.send(cmd).map_err(|_| WorkerGone { board: self.board })
     }
 
-    /// Wait for the next reply.
-    pub fn recv(&self) -> Reply {
-        self.reply_rx.recv().expect("worker hung up")
+    /// Wait for the next reply. `Err` when the worker thread died
+    /// without replying.
+    pub fn recv(&self) -> Result<Reply, WorkerGone> {
+        self.reply_rx.recv().map_err(|_| WorkerGone { board: self.board })
     }
 }
 
@@ -150,13 +179,26 @@ impl Drop for Worker {
 }
 
 fn worker_main(
+    board: usize,
     device: FpgaDevice,
     cmd_rx: Receiver<Cmd>,
     reply_tx: Sender<Reply>,
     metrics: Arc<Metrics>,
+    faults: FaultPlan,
 ) {
     let mut trainers: HashMap<usize, Trainer> = HashMap::new();
+    // Deterministic fault addressing: cmd_idx counts received commands,
+    // chunk_idx counts successful ChunkDone replies.
+    let mut cmd_idx = 0usize;
+    let mut chunk_idx = 0usize;
     while let Ok(cmd) = cmd_rx.recv() {
+        if faults.dies_at(board, cmd_idx) {
+            // Injected worker death: exit without replying. The dropped
+            // reply channel surfaces at the leader as WorkerDied.
+            metrics.faults_injected.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        cmd_idx += 1;
         match cmd {
             Cmd::Shutdown => break,
             Cmd::NewTrainer { job, spec, cfg } => {
@@ -195,7 +237,27 @@ fn worker_main(
                     Ok(report) => {
                         metrics.steps_total.fetch_add(steps as u64, Ordering::Relaxed);
                         metrics.sim_cycles.fetch_add(report.stats.cycles, Ordering::Relaxed);
-                        let (w, b) = t.weights();
+                        let (mut w, b) = t.weights();
+                        // Checksum what the board actually holds, then
+                        // apply any injected in-transit corruption.
+                        let checksum = params_checksum(&w, &b);
+                        if faults.corrupts_chunk(board, chunk_idx) {
+                            metrics.faults_injected.fetch_add(1, Ordering::Relaxed);
+                            if let Some(lane) =
+                                w.iter_mut().find_map(|layer| layer.first_mut())
+                            {
+                                *lane ^= 0x0400;
+                            }
+                        }
+                        if faults.delays_chunk(board, chunk_idx) {
+                            metrics.faults_injected.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                        if faults.reorders_chunk(board, chunk_idx) {
+                            metrics.faults_injected.fetch_add(1, Ordering::Relaxed);
+                            let _ = reply_tx.send(Reply::Ready { job });
+                        }
+                        chunk_idx += 1;
                         let _ = reply_tx.send(Reply::ChunkDone {
                             job,
                             curve: report.curve,
@@ -203,6 +265,7 @@ fn worker_main(
                             sim_seconds: report.sim_seconds,
                             w,
                             b,
+                            checksum,
                         });
                     }
                     Err(e) => {
@@ -261,22 +324,23 @@ mod tests {
     #[test]
     fn worker_lifecycle() {
         let m = Metrics::shared();
-        let w = Worker::spawn(0, FpgaDevice::selected(), Arc::clone(&m));
+        let w = Worker::spawn(0, FpgaDevice::selected(), Arc::clone(&m), FaultPlan::none());
         let cfg = TrainConfig { batch: 8, steps: 5, lr: 1.0 / 256.0, seed: 1, log_every: 1 };
-        w.send(Cmd::NewTrainer { job: 0, spec: spec(), cfg });
-        assert!(matches!(w.recv(), Reply::Ready { job: 0 }));
+        w.send(Cmd::NewTrainer { job: 0, spec: spec(), cfg }).unwrap();
+        assert!(matches!(w.recv(), Ok(Reply::Ready { job: 0 })));
         let ds = Arc::new(dataset::xor(64, 2));
-        w.send(Cmd::TrainChunk { job: 0, data: Arc::clone(&ds), steps: 5 });
-        match w.recv() {
-            Reply::ChunkDone { job, sim_seconds, w: wts, .. } => {
+        w.send(Cmd::TrainChunk { job: 0, data: Arc::clone(&ds), steps: 5 }).unwrap();
+        match w.recv().unwrap() {
+            Reply::ChunkDone { job, sim_seconds, w: wts, b: bts, checksum, .. } => {
                 assert_eq!(job, 0);
                 assert!(sim_seconds > 0.0);
                 assert_eq!(wts.len(), 2);
+                assert_eq!(checksum, params_checksum(&wts, &bts));
             }
             other => panic!("unexpected {other:?}"),
         }
-        w.send(Cmd::Evaluate { job: 0, data: ds });
-        assert!(matches!(w.recv(), Reply::EvalDone { job: 0, .. }));
+        w.send(Cmd::Evaluate { job: 0, data: ds }).unwrap();
+        assert!(matches!(w.recv(), Ok(Reply::EvalDone { job: 0, .. })));
         assert_eq!(m.snapshot().steps_total, 5);
         drop(w); // clean shutdown
     }
@@ -284,8 +348,39 @@ mod tests {
     #[test]
     fn unknown_job_errors() {
         let m = Metrics::shared();
-        let w = Worker::spawn(1, FpgaDevice::selected(), m);
-        w.send(Cmd::TrainChunk { job: 9, data: Arc::new(dataset::xor(8, 1)), steps: 1 });
-        assert!(matches!(w.recv(), Reply::Error { job: 9, .. }));
+        let w = Worker::spawn(1, FpgaDevice::selected(), m, FaultPlan::none());
+        w.send(Cmd::TrainChunk { job: 9, data: Arc::new(dataset::xor(8, 1)), steps: 1 })
+            .unwrap();
+        assert!(matches!(w.recv(), Ok(Reply::Error { job: 9, .. })));
+    }
+
+    #[test]
+    fn injected_death_closes_the_reply_channel() {
+        let m = Metrics::shared();
+        let plan = FaultPlan::none().kill(3, 0);
+        let w = Worker::spawn(3, FpgaDevice::selected(), Arc::clone(&m), plan);
+        let cfg = TrainConfig { batch: 8, steps: 1, lr: 1.0 / 256.0, seed: 1, log_every: 1 };
+        w.send(Cmd::NewTrainer { job: 0, spec: spec(), cfg }).unwrap();
+        assert!(matches!(w.recv(), Err(WorkerGone { board: 3 })));
+        assert_eq!(m.snapshot().faults_injected, 1);
+    }
+
+    #[test]
+    fn corrupted_chunk_fails_its_own_checksum() {
+        let m = Metrics::shared();
+        let plan = FaultPlan::none().corrupt(0, 0);
+        let w = Worker::spawn(0, FpgaDevice::selected(), Arc::clone(&m), plan);
+        let cfg = TrainConfig { batch: 8, steps: 1, lr: 1.0 / 256.0, seed: 1, log_every: 1 };
+        w.send(Cmd::NewTrainer { job: 0, spec: spec(), cfg }).unwrap();
+        assert!(matches!(w.recv(), Ok(Reply::Ready { job: 0 })));
+        let ds = Arc::new(dataset::xor(32, 2));
+        w.send(Cmd::TrainChunk { job: 0, data: ds, steps: 1 }).unwrap();
+        match w.recv().unwrap() {
+            Reply::ChunkDone { w: wts, b: bts, checksum, .. } => {
+                assert_ne!(checksum, params_checksum(&wts, &bts), "corruption not applied");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(m.snapshot().faults_injected, 1);
     }
 }

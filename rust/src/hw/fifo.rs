@@ -168,6 +168,70 @@ mod tests {
     }
 
     #[test]
+    fn ring_distance_to_self_is_zero_at_every_station() {
+        let f: RingFifo<()> = RingFifo::new(6, 4);
+        for s in 0..6 {
+            assert_eq!(f.ring_distance(s, s), 0, "station {s}");
+        }
+        // degenerate single-station ring
+        let one: RingFifo<()> = RingFifo::new(1, 1);
+        assert_eq!(one.ring_distance(0, 0), 0);
+        assert_eq!(one.worst_latency(), 0);
+    }
+
+    #[test]
+    fn capacity_one_backpressure_roundtrip() {
+        let mut f: RingFifo<u8> = RingFifo::new(3, 1);
+        f.push(0, 1, 7).unwrap();
+        assert_eq!(f.push(0, 2, 9), Err(9), "single slot must backpressure");
+        f.clock(); // 7 delivered at station 1
+        assert!(f.push(0, 2, 9).is_ok(), "slot must free after delivery");
+        assert_eq!(f.pop(1), Some(7));
+        f.clock();
+        f.clock();
+        assert_eq!(f.pop(2), Some(9));
+        assert_eq!(f.in_flight_len(), 0);
+    }
+
+    #[test]
+    fn wraparound_delivery_order_across_station_zero() {
+        // src 3 → dest 1 on a 4-ring wraps through station 0 (2 hops);
+        // a direct 1-hop token injected at the same time lands first.
+        let mut f: RingFifo<u8> = RingFifo::new(4, 8);
+        f.push(3, 1, 10).unwrap();
+        f.push(0, 1, 20).unwrap();
+        f.clock();
+        assert_eq!(f.pop(1), Some(20), "direct token arrives after 1 hop");
+        assert_eq!(f.pop(1), None, "wrapped token still in flight");
+        f.clock();
+        assert_eq!(f.pop(1), Some(10), "wrapped token arrives after 2 hops");
+    }
+
+    #[test]
+    fn full_ring_stalls_then_drains_completely() {
+        let (n, cap) = (5usize, 4usize);
+        let mut f: RingFifo<usize> = RingFifo::new(n, cap);
+        for i in 0..cap {
+            // destinations 1..=4: hop counts 1..=worst_latency
+            f.push(0, 1 + (i % (n - 1)), i).unwrap();
+        }
+        assert_eq!(f.in_flight_len(), cap);
+        assert_eq!(f.push(0, 1, 99), Err(99), "full ring must stall injection");
+        for _ in 0..f.worst_latency() {
+            f.clock();
+        }
+        assert_eq!(f.in_flight_len(), 0, "ring must drain within worst_latency");
+        let mut delivered = 0usize;
+        for s in 0..n {
+            while f.pop(s).is_some() {
+                delivered += 1;
+            }
+        }
+        assert_eq!(delivered, cap, "every stalled-behind token must land");
+        assert!(f.push(0, 1, 99).is_ok(), "drained ring accepts again");
+    }
+
+    #[test]
     fn stats_count() {
         let mut f: RingFifo<u8> = RingFifo::new(2, 4);
         f.push(0, 1, 1).unwrap();

@@ -13,6 +13,9 @@
 //! The [`runtime`] module loads the JAX/Pallas golden model (AOT-compiled
 //! to HLO text by `python/compile/aot.py`) through PJRT and is used as a
 //! bit-exact oracle and host baseline. Python never runs at runtime.
+//! The [`testkit`] module is the differential-fuzzing and deterministic
+//! fault-injection harness that generates scenarios and proves all five
+//! simulator fidelity levels agree (`mfnn fuzz`; DESIGN.md §Testing).
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index mapping
 //! every table/figure of the paper to modules and benches.
@@ -36,6 +39,7 @@ pub mod report;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod session;
+pub mod testkit;
 pub mod util;
 
 pub use session::{Artifact, CompileOptions, Compiler, Error, Session, Target, TensorHandle};

@@ -5,6 +5,7 @@
 //! mfnn assemble <net.nnasm> [--device P] [--vhdl DIR] [--print]
 //! mfnn run      <net.nnasm> [--device P] [--verify] [--seed N]
 //! mfnn train    <config.toml>
+//! mfnn fuzz     [--cases N] [--seed S] [--corpus FILE] [--plant-divergence]
 //! mfnn tables   [--which t2|t3|t8|alloc|perf|all]
 //! mfnn traces
 //! mfnn golden   [--dir artifacts]
@@ -47,6 +48,7 @@ fn main() -> ExitCode {
         "assemble" => cmd_assemble(&rest),
         "run" => cmd_run(&rest),
         "train" => cmd_train(&rest),
+        "fuzz" => cmd_fuzz(&rest),
         "tables" => cmd_tables(&rest),
         "traces" => cmd_traces(&rest),
         "golden" => cmd_golden(&rest),
@@ -72,6 +74,7 @@ fn usage() -> String {
          \x20 assemble <net.nnasm>   parse+lower a net; optional VHDL emission\n\
          \x20 run      <net.nnasm>   execute a net on one simulated board\n\
          \x20 train    <cfg.toml>    run a training cluster from a launcher config\n\
+         \x20 fuzz                   differential-fuzz every simulator fidelity level\n\
          \x20 tables                 regenerate the paper's tables (2,3,8,alloc,perf)\n\
          \x20 traces                 print the Fig 7/8/10 timing diagrams\n\
          \x20 golden                 cross-check simulator vs JAX/Pallas artifacts\n",
@@ -241,6 +244,7 @@ fn jobs_from_config(
             latency_s: cfg.float_or("cluster.bus_latency_s", 50e-6),
         },
         sync_every: cfg.int_or("cluster.sync_every", 20) as usize,
+        ..ClusterConfig::default()
     };
     let names =
         cfg.get_str_array("jobs.names").ok_or("config needs jobs.names = [\"a\", ...]")?;
@@ -290,6 +294,64 @@ fn jobs_from_config(
         });
     }
     Ok((ccfg, jobs))
+}
+
+// --------------------------------------------------------------------- fuzz
+
+fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
+    let spec = Spec::new()
+        .opt("cases", "generated cases per family (net, program, fault)", Some("64"))
+        .opt("seed", "base seed (case i runs at seed + i·φ; case 0 = seed)", Some("0"))
+        .opt("device", "FPGA part every level simulates", Some("XC7S75-2"))
+        .opt("corpus", "replay `family seed` lines from this snapshot file", None)
+        .opt("failures-out", "write failing seeds here (corpus format)", Some("FUZZ_FAILURES.txt"))
+        .opt("max-shrink", "shrink-step budget per failure", Some("100"))
+        .flag("plant-divergence", "test-only hook: plant a known FastSim divergence");
+    let args = parse_or_help(
+        &spec,
+        rest,
+        "mfnn fuzz",
+        "Differential-fuzz every simulator fidelity level (DESIGN.md §Testing)",
+    )?;
+    let part = device_arg(&args)?;
+    let opts = mfnn::testkit::FuzzOptions {
+        cases: args.parse_or("cases", 64usize).map_err(|e| e.to_string())?,
+        seed: args.parse_or("seed", 0u64).map_err(|e| e.to_string())?,
+        device: FpgaDevice::new(part),
+        plant_divergence: args.flag("plant-divergence"),
+        max_shrink_steps: args.parse_or("max-shrink", 100usize).map_err(|e| e.to_string())?,
+        check_reproduction: true,
+    };
+    let report = match args.get("corpus") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            let entries = mfnn::testkit::parse_corpus(&text).map_err(|e| format!("{path}: {e}"))?;
+            mfnn::testkit::replay_corpus(&entries, &opts)
+        }
+        None => mfnn::testkit::fuzz(&opts),
+    };
+    print!("{}", report.render());
+    if opts.plant_divergence {
+        // The planted divergence MUST be caught, shrunk, and reproduced
+        // from its printed seed — this exercises the whole pipeline.
+        if report.ok() {
+            return Err("planted divergence was NOT caught".into());
+        }
+        if !report.failures.iter().any(|f| f.reproduced) {
+            return Err("planted divergence did not reproduce from its printed seed".into());
+        }
+        println!("planted divergence caught, shrunk, and reproduced from its seed ✓");
+        return Ok(());
+    }
+    if !report.ok() {
+        let out = args.str_or("failures-out", "FUZZ_FAILURES.txt");
+        std::fs::write(&out, report.failures_file()).map_err(|e| format!("{out}: {e}"))?;
+        return Err(format!(
+            "{} divergence(s); failing seeds written to {out}",
+            report.failures.len()
+        ));
+    }
+    Ok(())
 }
 
 // ------------------------------------------------------------------- tables

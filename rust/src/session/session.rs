@@ -205,6 +205,18 @@ impl Session {
         self.device
     }
 
+    /// The session's current on-device parameters as per-layer
+    /// `(weights, biases)`, or `None` for raw / inference-only artifacts
+    /// (their parameters live behind plain tensor handles). The testkit's
+    /// differential executor reads these to assert bit-identical trained
+    /// weights across fidelity levels.
+    pub fn weights(&self) -> Option<(Vec<Vec<i16>>, Vec<Vec<i16>>)> {
+        match &self.engine {
+            Engine::Trainable(t) => Some(t.weights()),
+            Engine::Forward(_) => None,
+        }
+    }
+
     fn machine(&self) -> &MatrixMachine {
         match &self.engine {
             Engine::Trainable(t) => t.primary_machine(),

@@ -1,0 +1,730 @@
+//! The differential executor: run one generated case through every
+//! simulator fidelity level and assert agreement.
+//!
+//! Levels (DESIGN.md §Testing):
+//!
+//! | level | executor | agreement |
+//! |---|---|---|
+//! | L0 | [`FloatMlp`] float64 oracle | within a quantisation tolerance band |
+//! | L1 | [`FastSim`] sequential functional reference | bit-exact |
+//! | L2 | unfused [`ExecPlan`] (one wave per source step) | bit-exact + identical [`crate::hw::RunStats`] |
+//! | L3 | fused [`ExecPlan`] via the Session API (+ structural microcode verify) | bit-exact + identical [`crate::hw::RunStats`] |
+//! | L4 | cluster runtime ([`crate::cluster::leader::execute`]) | bit-exact weights vs the board; deterministic across runs |
+//!
+//! The float oracle cannot be bit-exact against a 16-bit datapath; it is
+//! the wiring sanity check (a transposed weight or dropped layer shows up
+//! as an O(1) deviation, quantisation as an O(resolution) one). All
+//! fixed-point levels must agree to the bit, including cycle accounting
+//! between the fused and unfused plans.
+
+use super::gen::{FaultCase, FuzzCase, NetCase, ProgramCase};
+use crate::assembler::program::Step;
+use crate::cluster::fault::FaultPlan;
+use crate::cluster::leader::{self, ClusterConfig, ClusterError, Job, JobResult};
+use crate::hw::{ExecPlan, FastSim, FpgaDevice, MatrixMachine};
+use crate::nn::float_ref::FloatMlp;
+use crate::nn::lowering::{lower_forward, lower_train_step};
+use crate::nn::trainer::Trainer;
+use crate::session::{CompileOptions, Compiler, Session, Target};
+use std::sync::Arc;
+
+/// Float-oracle tolerance per layer: generous against quantisation +
+/// LUT approximation (both O(2^-frac_bits) at the generated magnitudes),
+/// tight against wiring bugs (O(1) deviations).
+const FLOAT_TOL_PER_LAYER: f64 = 0.35;
+
+/// Which differential level a divergence was detected at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// L0: `nn::float_ref` float64 oracle.
+    FloatRef,
+    /// L1: `hw::FastSim` sequential functional reference.
+    FastSim,
+    /// L2: unfused `ExecPlan` (incl. structural microcode verification).
+    UnfusedPlan,
+    /// L3: fused `ExecPlan` — the production hot path.
+    FusedPlan,
+    /// L4: multi-FPGA cluster runtime.
+    Cluster,
+}
+
+impl std::fmt::Display for Level {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Level::FloatRef => "float_ref",
+            Level::FastSim => "fastsim",
+            Level::UnfusedPlan => "unfused_plan",
+            Level::FusedPlan => "fused_plan",
+            Level::Cluster => "cluster",
+        })
+    }
+}
+
+/// A detected cross-level disagreement (or a harness error on a
+/// generated case — also a bug, and also shrinkable).
+#[derive(Debug, Clone)]
+pub struct Divergence {
+    /// Level at which the disagreement was detected.
+    pub level: Level,
+    /// What disagreed.
+    pub what: String,
+}
+
+impl std::fmt::Display for Divergence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.level, self.what)
+    }
+}
+
+fn fail(level: Level, what: impl Into<String>) -> Divergence {
+    Divergence { level, what: what.into() }
+}
+
+/// Render the first differing lane of two supposedly-identical vectors.
+fn first_diff(a: &[i16], b: &[i16]) -> String {
+    if a.len() != b.len() {
+        return format!("lengths {} vs {}", a.len(), b.len());
+    }
+    match a.iter().zip(b).position(|(x, y)| x != y) {
+        Some(i) => format!("lane {i}: {} vs {}", a[i], b[i]),
+        None => "equal".into(),
+    }
+}
+
+/// The differential executor. Owns a [`Compiler`] so shrink replays of
+/// the same net reuse cached artifacts and plans.
+pub struct Differ {
+    /// Board part every level simulates.
+    pub device: FpgaDevice,
+    /// Test-only hook: corrupt one FastSim output lane so the
+    /// catch→shrink→replay pipeline can be exercised on demand
+    /// (`mfnn fuzz --plant-divergence`; asserted by `tests/testkit.rs`).
+    pub plant_divergence: bool,
+    compiler: Compiler,
+}
+
+impl Default for Differ {
+    fn default() -> Differ {
+        Differ::new(FpgaDevice::selected())
+    }
+}
+
+impl Differ {
+    /// A differ simulating `device` at every level.
+    pub fn new(device: FpgaDevice) -> Differ {
+        Differ { device, plant_divergence: false, compiler: Compiler::new() }
+    }
+
+    /// Enable the test-only planted divergence.
+    pub fn with_plant(mut self, plant: bool) -> Differ {
+        self.plant_divergence = plant;
+        self
+    }
+
+    fn cluster_config(
+        &self,
+        boards: usize,
+        sync_every: usize,
+        faults: FaultPlan,
+    ) -> ClusterConfig {
+        ClusterConfig {
+            boards,
+            device: self.device.part.name.to_string(),
+            sync_every,
+            faults,
+            ..ClusterConfig::default()
+        }
+    }
+
+    // ------------------------------------------------------------ forward
+
+    /// Forward differential: one inference batch through L0–L3.
+    pub fn run_net(&self, c: &NetCase) -> Result<(), Divergence> {
+        let spec = c.spec();
+        let fixed = c.fixed();
+        let (qw, qb) = c.params();
+        let qx = c.input();
+        let lowered = lower_forward(&spec, c.batch)
+            .map_err(|e| fail(Level::FastSim, format!("lowering failed: {e}")))?;
+        let program = &lowered.program;
+
+        // L1: FastSim, the sequential functional reference.
+        let mut sim = FastSim::new(program);
+        sim.set_buffer(lowered.x, &qx);
+        for l in 0..spec.layers.len() {
+            sim.set_buffer(lowered.weights[l], &qw[l]);
+            sim.set_buffer(lowered.biases[l], &qb[l]);
+        }
+        for step in &program.steps {
+            if let Step::Wave(w) = step {
+                sim.exec_wave(program, w);
+            }
+        }
+        let mut fast_out = sim.buffer(lowered.out).to_vec();
+        if self.plant_divergence {
+            if let Some(v) = fast_out.last_mut() {
+                *v ^= 1;
+            }
+        }
+
+        // L3: fused plan through the Session front door.
+        let artifact = self
+            .compiler
+            .compile_spec(&spec, &CompileOptions::inference(c.batch))
+            .map_err(|e| fail(Level::FusedPlan, format!("compile failed: {e}")))?;
+        let mut session = Session::open(Arc::clone(&artifact), Target::Board(self.device))
+            .map_err(|e| fail(Level::FusedPlan, format!("open failed: {e}")))?;
+        for l in 0..spec.layers.len() {
+            for (name, data) in [(format!("w{l}"), &qw[l]), (format!("b{l}"), &qb[l])] {
+                let h = artifact
+                    .tensor(&name)
+                    .map_err(|e| fail(Level::FusedPlan, format!("handle {name}: {e}")))?;
+                session
+                    .write(&h, data)
+                    .map_err(|e| fail(Level::FusedPlan, format!("write {name}: {e}")))?;
+            }
+        }
+        let inf = session
+            .infer(&qx)
+            .map_err(|e| fail(Level::FusedPlan, format!("infer failed: {e}")))?;
+        if inf.output != fast_out {
+            return Err(fail(
+                Level::FusedPlan,
+                format!(
+                    "forward output, fused plan vs FastSim: {}",
+                    first_diff(&inf.output, &fast_out)
+                ),
+            ));
+        }
+
+        // L2: the unfused plan on the same bindings.
+        let unfused = ExecPlan::new_unfused(program, &self.device);
+        let mut st = unfused.state();
+        unfused.write_buffer(&mut st, lowered.x, &qx);
+        for l in 0..spec.layers.len() {
+            unfused.write_buffer(&mut st, lowered.weights[l], &qw[l]);
+            unfused.write_buffer(&mut st, lowered.biases[l], &qb[l]);
+        }
+        let unfused_stats = unfused.execute(&mut st);
+        let unfused_out = unfused.read_buffer(&st, lowered.out);
+        if unfused_out != fast_out.as_slice() {
+            return Err(fail(
+                Level::UnfusedPlan,
+                format!(
+                    "forward output, unfused plan vs FastSim: {}",
+                    first_diff(unfused_out, &fast_out)
+                ),
+            ));
+        }
+
+        // L3 cycle accounting + structural microcode verification: the
+        // fused machine and a structurally-verified clone must agree with
+        // each other and with the standalone unfused plan.
+        let mut fused_m = MatrixMachine::new(self.device, program)
+            .map_err(|e| fail(Level::FusedPlan, format!("machine build failed: {e}")))?;
+        fused_m.write_id(lowered.x, &qx).expect("shape checked");
+        for l in 0..spec.layers.len() {
+            fused_m.write_id(lowered.weights[l], &qw[l]).expect("shape checked");
+            fused_m.write_id(lowered.biases[l], &qb[l]).expect("shape checked");
+        }
+        let mut verif_m = fused_m.clone();
+        let fused_stats = fused_m.execute();
+        let verif_stats = verif_m
+            .execute_verified()
+            .map_err(|e| fail(Level::UnfusedPlan, format!("structural verification: {e}")))?;
+        if fused_m.read_id(lowered.out) != verif_m.read_id(lowered.out) {
+            return Err(fail(
+                Level::UnfusedPlan,
+                format!(
+                    "forward output, fused vs structurally-verified: {}",
+                    first_diff(fused_m.read_id(lowered.out), verif_m.read_id(lowered.out))
+                ),
+            ));
+        }
+        if fused_stats != verif_stats {
+            return Err(fail(
+                Level::UnfusedPlan,
+                format!("cycle accounting, fused vs unfused: {fused_stats:?} vs {verif_stats:?}"),
+            ));
+        }
+        if fused_stats != unfused_stats {
+            return Err(fail(
+                Level::UnfusedPlan,
+                format!(
+                    "cycle accounting, fused vs standalone unfused plan: \
+                     {fused_stats:?} vs {unfused_stats:?}"
+                ),
+            ));
+        }
+
+        // L0: float64 oracle within the quantisation tolerance band.
+        let float = FloatMlp {
+            spec: spec.clone(),
+            weights: qw.iter().map(|w| fixed.decode_vec(w)).collect(),
+            biases: qb.iter().map(|b| fixed.decode_vec(b)).collect(),
+        };
+        let (in_dim, out_dim) = (spec.input_dim(), spec.output_dim());
+        let tol = FLOAT_TOL_PER_LAYER * spec.layers.len() as f64;
+        for row in 0..c.batch {
+            let x = fixed.decode_vec(&qx[row * in_dim..(row + 1) * in_dim]);
+            let want = float.forward(&x);
+            for j in 0..out_dim {
+                let got = fixed.to_f64(fast_out[row * out_dim + j]);
+                if (got - want[j]).abs() > tol {
+                    return Err(fail(
+                        Level::FloatRef,
+                        format!(
+                            "row {row} output {j}: fixed {got} vs float {:.4} (tol {tol})",
+                            want[j]
+                        ),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ----------------------------------------------------------- training
+
+    /// Training differential: bare engine vs Session(board) vs a 1-board
+    /// cluster must produce bit-identical trained weights and loss
+    /// curves; one training step must verify structurally with identical
+    /// cycle accounting.
+    pub fn run_train(&self, c: &FuzzCase) -> Result<(), Divergence> {
+        let spec = c.net.spec();
+        let cfg = c.train_config();
+        let ds = c.dataset();
+
+        // Engine level: the bare Trainer (what every cluster worker runs).
+        let mut engine = Trainer::build(spec.clone(), self.device, cfg.clone())
+            .map_err(|e| fail(Level::FusedPlan, format!("trainer build failed: {e}")))?;
+        let engine_report = engine
+            .train(&ds)
+            .map_err(|e| fail(Level::FusedPlan, format!("engine train failed: {e}")))?;
+        let (ew, eb) = engine.weights();
+
+        // Session front door on a board target.
+        let artifact = self
+            .compiler
+            .compile_spec(&spec, &CompileOptions::training(cfg.batch, cfg.lr))
+            .map_err(|e| fail(Level::FusedPlan, format!("compile failed: {e}")))?;
+        let mut session = Session::open(Arc::clone(&artifact), Target::Board(self.device))
+            .map_err(|e| fail(Level::FusedPlan, format!("open failed: {e}")))?;
+        let summary = session
+            .train(&ds, &cfg)
+            .map_err(|e| fail(Level::FusedPlan, format!("session train failed: {e}")))?;
+        let (sw, sb) = session.weights().expect("trainable session");
+        if sw != ew || sb != eb {
+            return Err(fail(
+                Level::FusedPlan,
+                format!(
+                    "trained weights, Session(board) vs engine: {}",
+                    first_diff(&sw.concat(), &ew.concat())
+                ),
+            ));
+        }
+        if summary.curve != engine_report.curve {
+            return Err(fail(
+                Level::FusedPlan,
+                "loss curve, Session(board) vs engine".to_string(),
+            ));
+        }
+
+        // Cluster level, single board: must match the board bit-exactly.
+        let job = Job {
+            name: spec.name.clone(),
+            spec: spec.clone(),
+            cfg: cfg.clone(),
+            train_data: Arc::new(ds.clone()),
+            test_data: Arc::new(ds.clone()),
+            initial: None,
+        };
+        let ccfg = self.cluster_config(1, c.sync_every, FaultPlan::none());
+        let report = leader::execute(&ccfg, std::slice::from_ref(&job))
+            .map_err(|e| fail(Level::Cluster, format!("1-board cluster failed: {e}")))?;
+        let jr = &report.results[0];
+        if jr.weights != ew || jr.biases != eb {
+            return Err(fail(
+                Level::Cluster,
+                format!(
+                    "trained weights, 1-board cluster vs board: {}",
+                    first_diff(&jr.weights.concat(), &ew.concat())
+                ),
+            ));
+        }
+        if jr.curve != engine_report.curve {
+            return Err(fail(Level::Cluster, "loss curve, 1-board cluster vs board".to_string()));
+        }
+
+        // One training step, fused vs structurally-verified unfused:
+        // identical post-step parameters and identical cycle accounting.
+        let lowered = lower_train_step(&spec, cfg.batch, cfg.lr)
+            .map_err(|e| fail(Level::UnfusedPlan, format!("train lowering failed: {e}")))?;
+        let (qw, qb) = c.net.params();
+        let mut fast = MatrixMachine::new(self.device, &lowered.program)
+            .map_err(|e| fail(Level::FusedPlan, format!("train machine build failed: {e}")))?;
+        fast.write_id(lowered.x, &c.net.input()).expect("shape checked");
+        fast.write_id(lowered.y.expect("train program declares targets"), &c.net.targets())
+            .expect("shape checked");
+        for l in 0..spec.layers.len() {
+            fast.write_id(lowered.weights[l], &qw[l]).expect("shape checked");
+            fast.write_id(lowered.biases[l], &qb[l]).expect("shape checked");
+        }
+        let mut slow = fast.clone();
+        let sf = fast.execute();
+        let sv = slow
+            .execute_verified()
+            .map_err(|e| fail(Level::UnfusedPlan, format!("train-step verification: {e}")))?;
+        if sf != sv {
+            return Err(fail(
+                Level::UnfusedPlan,
+                format!("train-step cycle accounting, fused vs unfused: {sf:?} vs {sv:?}"),
+            ));
+        }
+        for l in 0..spec.layers.len() {
+            if fast.read_id(lowered.weights[l]) != slow.read_id(lowered.weights[l]) {
+                return Err(fail(
+                    Level::UnfusedPlan,
+                    format!(
+                        "train-step weights layer {l}, fused vs structural: {}",
+                        first_diff(
+                            fast.read_id(lowered.weights[l]),
+                            slow.read_id(lowered.weights[l])
+                        )
+                    ),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ cluster
+
+    /// Build the case's M jobs (same net, decorrelated seeds).
+    fn jobs_for(&self, c: &FuzzCase) -> Vec<Job> {
+        let spec = c.net.spec();
+        let ds = Arc::new(c.dataset());
+        (0..c.jobs)
+            .map(|j| {
+                let mut cfg = c.train_config();
+                cfg.seed = cfg.seed.wrapping_add(j as u64);
+                Job {
+                    name: format!("{}-{j}", spec.name),
+                    spec: spec.clone(),
+                    cfg,
+                    train_data: Arc::clone(&ds),
+                    test_data: Arc::clone(&ds),
+                    initial: None,
+                }
+            })
+            .collect()
+    }
+
+    /// Cluster differential: the M×F topology must schedule per §2, run
+    /// deterministically (bit-identical results across two executions),
+    /// and a cluster-target Session must adopt exactly the weights the
+    /// engine produces.
+    pub fn run_cluster(&self, c: &FuzzCase) -> Result<(), Divergence> {
+        use crate::cluster::scheduler::PlacementMode;
+        let jobs = self.jobs_for(c);
+        let ccfg = self.cluster_config(c.boards, c.sync_every, FaultPlan::none());
+        let r1 = leader::execute(&ccfg, &jobs)
+            .map_err(|e| fail(Level::Cluster, format!("cluster failed: {e}")))?;
+        let r2 = leader::execute(&ccfg, &jobs)
+            .map_err(|e| fail(Level::Cluster, format!("cluster replay failed: {e}")))?;
+
+        let want_mode = if c.jobs == c.boards {
+            PlacementMode::OneToOne
+        } else if c.jobs > c.boards {
+            PlacementMode::Sequential
+        } else {
+            PlacementMode::Divided
+        };
+        if r1.placement.mode != want_mode {
+            return Err(fail(
+                Level::Cluster,
+                format!(
+                    "placement mode {:?} for M={} F={}, want {want_mode:?}",
+                    r1.placement.mode, c.jobs, c.boards
+                ),
+            ));
+        }
+        if r1.placement != r2.placement {
+            return Err(fail(Level::Cluster, "placement nondeterministic".to_string()));
+        }
+        if r1.makespan_s != r2.makespan_s {
+            return Err(fail(Level::Cluster, "makespan nondeterministic".to_string()));
+        }
+        for (a, b) in r1.results.iter().zip(&r2.results) {
+            if let Err(d) = job_results_equal(a, b) {
+                return Err(fail(
+                    Level::Cluster,
+                    format!("nondeterministic result for job {:?}: {d}", a.name),
+                ));
+            }
+        }
+
+        // Session on a cluster target adopts exactly the engine's weights.
+        let spec = c.net.spec();
+        let cfg = c.train_config();
+        let ds = c.dataset();
+        let single = Job {
+            name: spec.name.clone(),
+            spec: spec.clone(),
+            cfg: cfg.clone(),
+            train_data: Arc::new(ds.clone()),
+            test_data: Arc::new(ds.clone()),
+            initial: None,
+        };
+        let want = leader::execute(&ccfg, std::slice::from_ref(&single))
+            .map_err(|e| fail(Level::Cluster, format!("reference cluster failed: {e}")))?;
+        let artifact = self
+            .compiler
+            .compile_spec(&spec, &CompileOptions::training(cfg.batch, cfg.lr))
+            .map_err(|e| fail(Level::Cluster, format!("compile failed: {e}")))?;
+        let mut cs = Session::open(Arc::clone(&artifact), Target::Cluster(ccfg))
+            .map_err(|e| fail(Level::Cluster, format!("cluster session open failed: {e}")))?;
+        cs.train(&ds, &cfg)
+            .map_err(|e| fail(Level::Cluster, format!("cluster session train failed: {e}")))?;
+        let (cw, cb) = cs.weights().expect("trainable session");
+        if cw != want.results[0].weights || cb != want.results[0].biases {
+            return Err(fail(
+                Level::Cluster,
+                format!(
+                    "adopted weights, cluster Session vs engine: {}",
+                    first_diff(&cw.concat(), &want.results[0].weights.concat())
+                ),
+            ));
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------- raw programs
+
+    /// Raw-program differential: FastSim vs unfused vs fused vs
+    /// structural, over every buffer and the full
+    /// [`crate::hw::RunStats`].
+    pub fn run_program(&self, c: &ProgramCase) -> Result<(), Divergence> {
+        let (p, binds) = c.build();
+        p.check()
+            .map_err(|e| fail(Level::FastSim, format!("generated program invalid: {e}")))?;
+
+        // L1: FastSim.
+        let mut sim = FastSim::new(&p);
+        for (id, data) in &binds {
+            sim.set_buffer(*id, data);
+        }
+        for step in &p.steps {
+            if let Step::Wave(w) = step {
+                sim.exec_wave(&p, w);
+            }
+        }
+
+        // L3 fused + structural clone.
+        let mut fast = MatrixMachine::new(self.device, &p)
+            .map_err(|e| fail(Level::FusedPlan, format!("machine build failed: {e}")))?;
+        for (id, data) in &binds {
+            fast.write_id(*id, data).expect("shape checked");
+        }
+        let mut slow = fast.clone();
+        let sf = fast.execute();
+        let sv = slow
+            .execute_verified()
+            .map_err(|e| fail(Level::UnfusedPlan, format!("structural verification: {e}")))?;
+        if sf != sv {
+            return Err(fail(
+                Level::UnfusedPlan,
+                format!("cycle accounting, fused vs unfused: {sf:?} vs {sv:?}"),
+            ));
+        }
+
+        // L2 standalone unfused plan.
+        let unfused = ExecPlan::new_unfused(&p, &self.device);
+        let mut st = unfused.state();
+        for (id, data) in &binds {
+            unfused.write_buffer(&mut st, *id, data);
+        }
+        let su = unfused.execute(&mut st);
+        if su != sf {
+            return Err(fail(
+                Level::UnfusedPlan,
+                format!("cycle accounting, standalone unfused vs fused: {su:?} vs {sf:?}"),
+            ));
+        }
+
+        for id in 0..p.buffers.len() {
+            let want = fast.read_id(id);
+            if sim.buffer(id) != want {
+                return Err(fail(
+                    Level::FastSim,
+                    format!("buffer {id}, FastSim vs fused: {}", first_diff(sim.buffer(id), want)),
+                ));
+            }
+            if slow.read_id(id) != want {
+                return Err(fail(
+                    Level::UnfusedPlan,
+                    format!(
+                        "buffer {id}, structural vs fused: {}",
+                        first_diff(slow.read_id(id), want)
+                    ),
+                ));
+            }
+            if unfused.read_buffer(&st, id) != want {
+                return Err(fail(
+                    Level::UnfusedPlan,
+                    format!(
+                        "buffer {id}, standalone unfused vs fused: {}",
+                        first_diff(unfused.read_buffer(&st, id), want)
+                    ),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------- faults
+
+    /// Fault differential: under any generated [`FaultPlan`] the leader
+    /// must terminate with either correct results (benign plans must be
+    /// bit-identical to a clean run) or a typed [`ClusterError`] — and
+    /// the outcome must be deterministic across replays.
+    pub fn run_faults(&self, fc: &FaultCase) -> Result<(), Divergence> {
+        let c = &fc.case;
+        let jobs = self.jobs_for(c);
+        let clean_cfg = self.cluster_config(c.boards, c.sync_every, FaultPlan::none());
+        let faulty_cfg = self.cluster_config(c.boards, c.sync_every, fc.plan.clone());
+
+        let clean = leader::execute(&clean_cfg, &jobs)
+            .map_err(|e| fail(Level::Cluster, format!("clean run failed: {e}")))?;
+        let f1 = leader::execute(&faulty_cfg, &jobs);
+        let f2 = leader::execute(&faulty_cfg, &jobs);
+
+        match (&f1, &f2) {
+            (Ok(a), Ok(b)) => {
+                for (x, y) in a.results.iter().zip(&b.results) {
+                    if let Err(d) = job_results_equal(x, y) {
+                        return Err(fail(
+                            Level::Cluster,
+                            format!("fault outcome nondeterministic for {:?}: {d}", x.name),
+                        ));
+                    }
+                }
+            }
+            (Err(a), Err(b)) => {
+                if a.to_string() != b.to_string() {
+                    return Err(fail(
+                        Level::Cluster,
+                        format!("fault outcome nondeterministic: {a} vs {b}"),
+                    ));
+                }
+            }
+            _ => {
+                return Err(fail(
+                    Level::Cluster,
+                    "fault outcome nondeterministic: Ok vs Err across replays".to_string(),
+                ))
+            }
+        }
+
+        match f1 {
+            Ok(faulty) => {
+                // A run that completes must match the clean run exactly:
+                // delays are result-preserving by design, and every
+                // lethal fault that actually fires aborts the run — so an
+                // Ok outcome with different results is always a bug.
+                for (x, y) in clean.results.iter().zip(&faulty.results) {
+                    if let Err(d) = job_results_equal(x, y) {
+                        return Err(fail(
+                            Level::Cluster,
+                            format!("faults changed a completed run's {:?}: {d}", x.name),
+                        ));
+                    }
+                }
+                Ok(())
+            }
+            Err(e) => {
+                if fc.plan.is_benign() {
+                    return Err(fail(
+                        Level::Cluster,
+                        format!("delay-only faults failed the run: {e}"),
+                    ));
+                }
+                match e {
+                    ClusterError::WorkerDied(..)
+                    | ClusterError::CorruptChunk(..)
+                    | ClusterError::Worker(..) => Ok(()),
+                    other => Err(fail(
+                        Level::Cluster,
+                        format!("untyped/unexpected fault error: {other}"),
+                    )),
+                }
+            }
+        }
+    }
+}
+
+/// Bit-exact comparison of two job results (weights, biases, accuracy,
+/// curve, stats, boards).
+fn job_results_equal(a: &JobResult, b: &JobResult) -> Result<(), String> {
+    if a.boards != b.boards {
+        return Err(format!("boards {:?} vs {:?}", a.boards, b.boards));
+    }
+    if a.weights != b.weights {
+        return Err(format!("weights: {}", first_diff(&a.weights.concat(), &b.weights.concat())));
+    }
+    if a.biases != b.biases {
+        return Err(format!("biases: {}", first_diff(&a.biases.concat(), &b.biases.concat())));
+    }
+    if a.accuracy != b.accuracy {
+        return Err(format!("accuracy {} vs {}", a.accuracy, b.accuracy));
+    }
+    if a.curve != b.curve {
+        return Err("loss curves differ".to_string());
+    }
+    if a.stats != b.stats {
+        return Err(format!("stats {:?} vs {:?}", a.stats, b.stats));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::gen;
+    use crate::util::Rng;
+
+    #[test]
+    fn a_handful_of_net_cases_agree_across_levels() {
+        let differ = Differ::default();
+        let mut r = Rng::new(0x5EED);
+        for i in 0..6 {
+            let c = gen::net_case().sample(&mut r);
+            differ.run_net(&c).unwrap_or_else(|d| panic!("case {i} ({c:?}): {d}"));
+        }
+    }
+
+    #[test]
+    fn a_handful_of_program_cases_agree_across_levels() {
+        let differ = Differ::default();
+        let mut r = Rng::new(0xC0DE);
+        for i in 0..6 {
+            let c = gen::program_case().sample(&mut r);
+            differ.run_program(&c).unwrap_or_else(|d| panic!("case {i} ({c:?}): {d}"));
+        }
+    }
+
+    #[test]
+    fn planted_divergence_is_detected_at_a_bit_exact_level() {
+        let differ = Differ::default().with_plant(true);
+        let c = gen::net_case().sample(&mut Rng::new(1));
+        let d = differ.run_net(&c).expect_err("plant must diverge");
+        assert_eq!(d.level, Level::FusedPlan, "{d}");
+    }
+
+    #[test]
+    fn one_train_case_agrees_across_engines() {
+        let differ = Differ::default();
+        let c = gen::fuzz_case().sample(&mut Rng::new(0xAB));
+        differ.run_train(&c).unwrap_or_else(|d| panic!("{c:?}: {d}"));
+    }
+}

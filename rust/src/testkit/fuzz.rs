@@ -1,0 +1,412 @@
+//! The fuzz harness: generate cases, run the differential executor,
+//! shrink failures to minimal cases, and replay them from printed seeds.
+//!
+//! Seed discipline: case `i` of a run with base seed `S` executes at
+//! `case_seed(S, i)`, and `case_seed(S, 0) == S` — so the seed a failure
+//! prints reproduces that exact case via `mfnn fuzz --cases 1 --seed N`.
+//! Corpus snapshot files (`rust/tests/corpus/*.seeds`) store
+//! `family seed` lines in the same format the failure file uses, so a
+//! CI-uploaded failure file can be replayed directly with
+//! `mfnn fuzz --corpus <file>`.
+
+use super::diff::{Differ, Divergence};
+use super::gen;
+use crate::hw::FpgaDevice;
+use crate::prop::Gen;
+use crate::util::Rng;
+use std::fmt::Debug;
+use std::fmt::Write as _;
+
+/// Per-case seed stride (odd, so consecutive cases decorrelate; index 0
+/// maps to the base seed itself for exact replay).
+const SEED_STRIDE: u64 = 0x9E3779B97F4A7C15;
+
+/// Derive the seed of case `index` from the run's base seed.
+/// `case_seed(base, 0) == base`.
+pub fn case_seed(base: u64, index: usize) -> u64 {
+    base.wrapping_add((index as u64).wrapping_mul(SEED_STRIDE))
+}
+
+/// The three generated case families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// [`gen::FuzzCase`]: forward + training + cluster levels.
+    Net,
+    /// [`gen::ProgramCase`]: raw-program levels.
+    Program,
+    /// [`gen::FaultCase`]: cluster fault injection.
+    Fault,
+}
+
+impl Family {
+    /// All families, in execution order.
+    pub const ALL: [Family; 3] = [Family::Net, Family::Program, Family::Fault];
+
+    /// Stable name used in corpus/failure files.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Net => "net",
+            Family::Program => "program",
+            Family::Fault => "fault",
+        }
+    }
+
+    /// Parse a corpus family tag.
+    pub fn parse(s: &str) -> Option<Family> {
+        match s {
+            "net" => Some(Family::Net),
+            "program" => Some(Family::Program),
+            "fault" => Some(Family::Fault),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Family {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Fuzz-run options.
+#[derive(Debug, Clone)]
+pub struct FuzzOptions {
+    /// Generated cases per family.
+    pub cases: usize,
+    /// Base seed (case `i` runs at [`case_seed`]`(seed, i)`).
+    pub seed: u64,
+    /// Board part every level simulates.
+    pub device: FpgaDevice,
+    /// Test-only hook: plant a known FastSim divergence (must be caught).
+    pub plant_divergence: bool,
+    /// Shrink-step budget per failure.
+    pub max_shrink_steps: usize,
+    /// Re-run each failure's seed to confirm it reproduces.
+    pub check_reproduction: bool,
+}
+
+impl Default for FuzzOptions {
+    fn default() -> FuzzOptions {
+        FuzzOptions {
+            cases: 64,
+            seed: 0,
+            device: FpgaDevice::selected(),
+            plant_divergence: false,
+            max_shrink_steps: 100,
+            check_reproduction: true,
+        }
+    }
+}
+
+/// One caught, shrunk divergence.
+#[derive(Debug, Clone)]
+pub struct FuzzFailure {
+    /// Case family.
+    pub family: Family,
+    /// Case index within the run.
+    pub case_index: usize,
+    /// The seed that reproduces the case exactly.
+    pub seed: u64,
+    /// Divergence of the *shrunk* case.
+    pub divergence: String,
+    /// Debug rendering of the original generated case.
+    pub original: String,
+    /// Debug rendering of the minimal shrunk case.
+    pub shrunk: String,
+    /// Shrink steps applied.
+    pub shrink_steps: usize,
+    /// Whether re-running the printed seed reproduced a divergence.
+    pub reproduced: bool,
+}
+
+/// Result of a fuzz run.
+#[derive(Debug, Clone, Default)]
+pub struct FuzzReport {
+    /// Generated cases per family (fuzz runs) or total corpus entries
+    /// replayed (corpus runs — see [`FuzzReport::corpus`]).
+    pub cases: usize,
+    /// Families executed (distinct families for corpus runs).
+    pub families: usize,
+    /// True for corpus replays, where each entry runs exactly one
+    /// family (so `cases` is the total run count, not per-family).
+    pub corpus: bool,
+    /// Caught divergences.
+    pub failures: Vec<FuzzFailure>,
+}
+
+impl FuzzReport {
+    /// True when every case agreed at every level.
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// Human-readable summary (what `mfnn fuzz` prints).
+    pub fn render(&self) -> String {
+        let mut s = if self.corpus {
+            format!(
+                "fuzz: replayed {} corpus entries spanning {} families — {} divergence(s)\n",
+                self.cases,
+                self.families,
+                self.failures.len()
+            )
+        } else {
+            format!(
+                "fuzz: {} case(s) × {} families — {} divergence(s)\n",
+                self.cases,
+                self.families,
+                self.failures.len()
+            )
+        };
+        for f in &self.failures {
+            let _ = writeln!(
+                s,
+                "FAIL [{}] case {} seed {}: {}\n  original: {}\n  shrunk ({} step(s)): {}\n  \
+                 reproduce: mfnn fuzz --cases 1 --seed {}\n  reproduced from seed: {}",
+                f.family,
+                f.case_index,
+                f.seed,
+                f.divergence,
+                f.original,
+                f.shrink_steps,
+                f.shrunk,
+                f.seed,
+                if f.reproduced { "yes" } else { "NO" },
+            );
+        }
+        s
+    }
+
+    /// Failure-file body: `family seed  # divergence` lines, replayable
+    /// with `mfnn fuzz --corpus <file>`.
+    pub fn failures_file(&self) -> String {
+        let mut s = String::from("# failing fuzz seeds — replay with `mfnn fuzz --corpus <file>`\n");
+        for f in &self.failures {
+            let _ = writeln!(s, "{} {}  # {}", f.family, f.seed, f.divergence);
+        }
+        s
+    }
+}
+
+/// The Net family's full differential sequence — the single definition
+/// shared by [`run_case`] and the fuzz loop, so the public replay entry
+/// point can never drift out of sync with what the fuzzer checks.
+fn run_net_family(differ: &Differ, c: &gen::FuzzCase) -> Result<(), Divergence> {
+    differ.run_net(&c.net)?;
+    differ.run_train(c)?;
+    differ.run_cluster(c)
+}
+
+/// Run one family's case at `seed` through its differential levels.
+pub fn run_case(differ: &Differ, family: Family, seed: u64) -> Result<(), Divergence> {
+    let mut rng = Rng::new(seed);
+    match family {
+        Family::Net => run_net_family(differ, &gen::fuzz_case().sample(&mut rng)),
+        Family::Program => differ.run_program(&gen::program_case().sample(&mut rng)),
+        Family::Fault => differ.run_faults(&gen::fault_case().sample(&mut rng)),
+    }
+}
+
+/// Greedy shrink: repeatedly take the first shrink candidate that still
+/// diverges, up to `max_steps`.
+fn shrink_failure<T: Clone + Debug>(
+    g: &Gen<T>,
+    mut best: T,
+    first: Divergence,
+    run: impl Fn(&T) -> Result<(), Divergence>,
+    max_steps: usize,
+) -> (T, Divergence, usize) {
+    let mut last = first;
+    let mut steps = 0usize;
+    'outer: loop {
+        for cand in g.shrink(&best) {
+            if let Err(d) = run(&cand) {
+                best = cand;
+                last = d;
+                steps += 1;
+                if steps >= max_steps {
+                    break 'outer;
+                }
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (best, last, steps)
+}
+
+/// Run one family's generator at `seed`; on divergence, shrink greedily
+/// and return the recorded failure.
+fn fuzz_family<T: Clone + Debug>(
+    opts: &FuzzOptions,
+    family: Family,
+    case_index: usize,
+    seed: u64,
+    g: &Gen<T>,
+    run: impl Fn(&T) -> Result<(), Divergence>,
+) -> Option<FuzzFailure> {
+    let c = g.sample(&mut Rng::new(seed));
+    let original = format!("{c:?}");
+    let first = match run(&c) {
+        Ok(()) => return None,
+        Err(d) => d,
+    };
+    let (shrunk, divergence, shrink_steps) =
+        shrink_failure(g, c, first, &run, opts.max_shrink_steps);
+    // Self-check the replay story: resampling the printed seed must
+    // reproduce a divergence.
+    let reproduced =
+        opts.check_reproduction && run(&g.sample(&mut Rng::new(seed))).is_err();
+    Some(FuzzFailure {
+        family,
+        case_index,
+        seed,
+        divergence: divergence.to_string(),
+        original,
+        shrunk: format!("{shrunk:?}"),
+        shrink_steps,
+        reproduced,
+    })
+}
+
+/// Run one family at `seed`; on divergence, shrink and record a failure.
+fn fuzz_one(
+    differ: &Differ,
+    opts: &FuzzOptions,
+    family: Family,
+    case_index: usize,
+    seed: u64,
+    failures: &mut Vec<FuzzFailure>,
+) {
+    let failure = match family {
+        Family::Net => fuzz_family(opts, family, case_index, seed, &gen::fuzz_case(), |c| {
+            run_net_family(differ, c)
+        }),
+        Family::Program => fuzz_family(opts, family, case_index, seed, &gen::program_case(), |c| {
+            differ.run_program(c)
+        }),
+        Family::Fault => fuzz_family(opts, family, case_index, seed, &gen::fault_case(), |c| {
+            differ.run_faults(c)
+        }),
+    };
+    failures.extend(failure);
+}
+
+/// Run the full differential fuzz: `opts.cases` cases per family, every
+/// case through every applicable fidelity level.
+pub fn fuzz(opts: &FuzzOptions) -> FuzzReport {
+    let differ = Differ::new(opts.device).with_plant(opts.plant_divergence);
+    let mut report = FuzzReport {
+        cases: opts.cases,
+        families: Family::ALL.len(),
+        corpus: false,
+        failures: Vec::new(),
+    };
+    for i in 0..opts.cases {
+        let seed = case_seed(opts.seed, i);
+        for family in Family::ALL {
+            fuzz_one(&differ, opts, family, i, seed, &mut report.failures);
+        }
+    }
+    report
+}
+
+/// Parse a corpus snapshot: `family seed` per line, `#` comments and
+/// blank lines ignored.
+pub fn parse_corpus(text: &str) -> Result<Vec<(Family, u64)>, String> {
+    let mut out = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let fam = parts
+            .next()
+            .and_then(Family::parse)
+            .ok_or_else(|| format!("line {}: expected `net|program|fault <seed>`", ln + 1))?;
+        let seed: u64 = parts
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| format!("line {}: bad seed", ln + 1))?;
+        if let Some(extra) = parts.next() {
+            // Reject rather than silently dropping a regression seed
+            // (e.g. two lines accidentally merged when appending).
+            return Err(format!(
+                "line {}: unexpected trailing token {extra:?} after the seed",
+                ln + 1
+            ));
+        }
+        out.push((fam, seed));
+    }
+    Ok(out)
+}
+
+/// Replay corpus entries (regression seeds / CI failure files) through
+/// the differential executor. Each entry runs exactly one family, so
+/// the report counts the distinct families actually present.
+pub fn replay_corpus(entries: &[(Family, u64)], opts: &FuzzOptions) -> FuzzReport {
+    let differ = Differ::new(opts.device).with_plant(opts.plant_divergence);
+    let mut report = FuzzReport {
+        cases: entries.len(),
+        families: Family::ALL
+            .iter()
+            .filter(|f| entries.iter().any(|(ef, _)| ef == *f))
+            .count(),
+        corpus: true,
+        failures: Vec::new(),
+    };
+    for (i, &(family, seed)) in entries.iter().enumerate() {
+        fuzz_one(&differ, opts, family, i, seed, &mut report.failures);
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_seed_is_replayable_and_decorrelated() {
+        assert_eq!(case_seed(42, 0), 42);
+        assert_ne!(case_seed(42, 1), case_seed(42, 2));
+        // the seed printed for case i IS a base seed whose case 0 is it
+        let s = case_seed(7, 3);
+        assert_eq!(case_seed(s, 0), s);
+    }
+
+    #[test]
+    fn corpus_parses_tags_seeds_and_comments() {
+        let text = "# comment\n\nnet 12  # trailing\nprogram 0\nfault 99\n";
+        let entries = parse_corpus(text).unwrap();
+        assert_eq!(
+            entries,
+            vec![(Family::Net, 12), (Family::Program, 0), (Family::Fault, 99)]
+        );
+        assert!(parse_corpus("bogus 1").is_err());
+        assert!(parse_corpus("net notanumber").is_err());
+        // merged lines must be rejected, not silently truncated
+        assert!(parse_corpus("net 12 34").is_err());
+    }
+
+    #[test]
+    fn failure_file_round_trips_through_the_corpus_parser() {
+        let report = FuzzReport {
+            cases: 1,
+            families: 3,
+            corpus: false,
+            failures: vec![FuzzFailure {
+                family: Family::Net,
+                case_index: 0,
+                seed: 1234,
+                divergence: "[fused_plan] demo".into(),
+                original: "X".into(),
+                shrunk: "Y".into(),
+                shrink_steps: 2,
+                reproduced: true,
+            }],
+        };
+        let entries = parse_corpus(&report.failures_file()).unwrap();
+        assert_eq!(entries, vec![(Family::Net, 1234)]);
+        assert!(report.render().contains("--seed 1234"));
+    }
+}

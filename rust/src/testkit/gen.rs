@@ -1,0 +1,578 @@
+//! Seeded case generators for the differential fuzzer, built on the
+//! [`crate::prop::Gen`] mini-framework.
+//!
+//! Three case families, each `Debug + Clone` and regenerated *exactly*
+//! from a single `u64` seed (the number a failure prints):
+//!
+//! * [`FuzzCase`] — a random [`MlpSpec`] with derived parameters, inputs,
+//!   dataset, training shape, and an M×F cluster topology sweeping all
+//!   three §2 placements. Drives the net/train/cluster differential
+//!   levels.
+//! * [`ProgramCase`] — a random raw vector [`Program`] over the six
+//!   executable opcodes (`Nop` has no lane semantics and no microcode
+//!   lowering, so it is intentionally excluded) with its input
+//!   bindings. Drives the raw-program levels (FastSim vs unfused vs
+//!   fused vs structural).
+//! * [`FaultCase`] — a topology plus a deterministic
+//!   [`FaultPlan`] for the cluster fault differential.
+//!
+//! Every generator pairs a structured shrinker so a divergence shrinks
+//! toward the minimal failing case (fewer layers, dim 1, batch 1, one
+//! board, one wave) — the [`crate::testkit::fuzz`] harness drives the
+//! shrink loop.
+
+use crate::assembler::program::{BufId, BufKind, LaneOp, Program, Step, View, Wave};
+use crate::cluster::fault::FaultPlan;
+use crate::fixed::FixedSpec;
+use crate::isa::Opcode;
+use crate::nn::lut::{ActKind, ActLut, AddrMode};
+use crate::nn::mlp::{LutParams, MlpSpec};
+use crate::nn::trainer::TrainConfig;
+use crate::nn::{dataset, dataset::Dataset};
+use crate::prop::Gen;
+use crate::util::Rng;
+
+/// Salt for deriving per-case parameter streams from the case seed.
+const SALT_PARAMS: u64 = 0x9E3779B97F4A7C15;
+/// Salt for the input/target batch stream.
+const SALT_IO: u64 = 0xD1B54A32D192ED03;
+/// Salt for the dataset stream.
+const SALT_DATA: u64 = 0x94D049BB133111EB;
+
+// ---------------------------------------------------------------- networks
+
+/// One generated network with derived bindings: everything the forward
+/// differential levels need, compact enough to shrink structurally.
+/// Parameters, inputs, and targets are re-derived from `seed` + the
+/// current shapes, so shrinking `dims` keeps the case self-consistent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetCase {
+    /// Case seed (printed on failure; regenerates the case exactly).
+    pub seed: u64,
+    /// Dimension list `[in, h1, ..., out]` (layers are `dims.windows(2)`).
+    pub dims: Vec<usize>,
+    /// Hidden activation.
+    pub act: ActKind,
+    /// Output activation.
+    pub out_act: ActKind,
+    /// Fractional bits of the (saturating) datapath.
+    pub frac_bits: u32,
+    /// Batch rows.
+    pub batch: usize,
+}
+
+impl NetCase {
+    /// The saturating fixed-point format of the case.
+    pub fn fixed(&self) -> FixedSpec {
+        FixedSpec::q(self.frac_bits).saturating()
+    }
+
+    /// The validated spec (generated dims are always valid).
+    pub fn spec(&self) -> MlpSpec {
+        let fixed = self.fixed();
+        MlpSpec::from_dims(
+            "fuzz",
+            &self.dims,
+            self.act,
+            self.out_act,
+            fixed,
+            LutParams::training(fixed),
+        )
+        .expect("generated dims are valid")
+    }
+
+    /// Deterministic quantised parameters: `|w| ≤ 1/fan_in`, `|b| ≤ 0.25`
+    /// — keeps every activation far from the Q range so the float oracle
+    /// stays comparable (no saturation events on the forward pass).
+    pub fn params(&self) -> (Vec<Vec<i16>>, Vec<Vec<i16>>) {
+        let fixed = self.fixed();
+        let mut r = Rng::new(self.seed ^ SALT_PARAMS);
+        let spec = self.spec();
+        let mut w = Vec::with_capacity(spec.layers.len());
+        let mut b = Vec::with_capacity(spec.layers.len());
+        for layer in &spec.layers {
+            let scale = 1.0 / layer.inputs as f64;
+            w.push(
+                (0..layer.inputs * layer.outputs)
+                    .map(|_| fixed.from_f64((r.gen_f64() * 2.0 - 1.0) * scale))
+                    .collect(),
+            );
+            b.push(
+                (0..layer.outputs)
+                    .map(|_| fixed.from_f64((r.gen_f64() * 2.0 - 1.0) * 0.25))
+                    .collect(),
+            );
+        }
+        (w, b)
+    }
+
+    /// Deterministic quantised `batch × in_dim` input in `[-1, 1]`.
+    pub fn input(&self) -> Vec<i16> {
+        let fixed = self.fixed();
+        let mut r = Rng::new(self.seed ^ SALT_IO);
+        (0..self.batch * self.dims[0])
+            .map(|_| fixed.from_f64(r.gen_f64() * 2.0 - 1.0))
+            .collect()
+    }
+
+    /// Deterministic quantised `batch × out_dim` target batch in
+    /// `[-1, 1]` (for single-train-step differentials).
+    pub fn targets(&self) -> Vec<i16> {
+        let fixed = self.fixed();
+        let mut r = Rng::new(self.seed ^ SALT_IO ^ SALT_DATA);
+        (0..self.batch * self.dims[self.dims.len() - 1])
+            .map(|_| fixed.from_f64(r.gen_f64() * 2.0 - 1.0))
+            .collect()
+    }
+}
+
+fn sample_net_case(r: &mut Rng) -> NetCase {
+    let n_layers = 1 + r.gen_range(3) as usize; // 1..=3
+    let dims: Vec<usize> =
+        (0..=n_layers).map(|_| 1 + r.gen_range(8) as usize).collect(); // 1..=8 each
+    NetCase {
+        seed: r.next_u64(),
+        dims,
+        act: *r.choose(&[ActKind::Relu, ActKind::Sigmoid, ActKind::Tanh, ActKind::Identity]),
+        out_act: *r.choose(&[ActKind::Identity, ActKind::Sigmoid, ActKind::Tanh]),
+        frac_bits: 8 + r.gen_range(4) as u32, // Q8..Q11
+        batch: 1 + r.gen_range(8) as usize,   // 1..=8
+    }
+}
+
+fn shrink_net_case(c: &NetCase) -> Vec<NetCase> {
+    let mut out = Vec::new();
+    // fewer layers: drop an interior dim (adjacent pairs stay valid)
+    if c.dims.len() > 2 {
+        for i in 1..c.dims.len() - 1 {
+            let mut d = c.clone();
+            d.dims.remove(i);
+            out.push(d);
+        }
+    }
+    // smaller dims, toward 1
+    for i in 0..c.dims.len() {
+        if c.dims[i] > 1 {
+            let mut d = c.clone();
+            d.dims[i] = c.dims[i] / 2;
+            out.push(d);
+        }
+    }
+    // smaller batch
+    if c.batch > 1 {
+        let mut d = c.clone();
+        d.batch = c.batch / 2;
+        out.push(d);
+    }
+    // simpler activations
+    if c.act != ActKind::Relu {
+        let mut d = c.clone();
+        d.act = ActKind::Relu;
+        out.push(d);
+    }
+    if c.out_act != ActKind::Identity {
+        let mut d = c.clone();
+        d.out_act = ActKind::Identity;
+        out.push(d);
+    }
+    out
+}
+
+/// Generator for [`NetCase`].
+pub fn net_case() -> Gen<NetCase> {
+    Gen::new(sample_net_case, shrink_net_case)
+}
+
+// -------------------------------------------------------- full fuzz cases
+
+/// One full differential-fuzz case: a net, a training-run shape, and an
+/// M×F cluster topology. All five fidelity levels derive from this.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FuzzCase {
+    /// The network (forward levels; also the net every cluster job trains).
+    pub net: NetCase,
+    /// SGD steps per job.
+    pub steps: usize,
+    /// `lr = 2^-lr_pow` — always exactly representable in the datapath.
+    pub lr_pow: u32,
+    /// Training-set rows.
+    pub rows: usize,
+    /// Jobs (M) in the cluster phase.
+    pub jobs: usize,
+    /// Boards (F) in the cluster phase.
+    pub boards: usize,
+    /// Weight-sync cadence for divided placements.
+    pub sync_every: usize,
+}
+
+impl FuzzCase {
+    /// The learning rate encoded by `lr_pow`.
+    pub fn lr(&self) -> f64 {
+        1.0 / (1u64 << self.lr_pow) as f64
+    }
+
+    /// The training configuration of every level.
+    pub fn train_config(&self) -> TrainConfig {
+        TrainConfig {
+            batch: self.net.batch,
+            lr: self.lr(),
+            steps: self.steps,
+            seed: self.net.seed,
+            log_every: 2,
+        }
+    }
+
+    /// The deterministic dataset (classes = out_dim, dim = in_dim).
+    pub fn dataset(&self) -> Dataset {
+        let spec = self.net.spec();
+        dataset::blobs(
+            self.rows,
+            spec.output_dim(),
+            spec.input_dim(),
+            self.net.seed ^ SALT_DATA,
+        )
+    }
+}
+
+pub(crate) fn sample_fuzz_case(r: &mut Rng) -> FuzzCase {
+    let net = sample_net_case(r);
+    let batch = net.batch;
+    FuzzCase {
+        net,
+        steps: 1 + r.gen_range(8) as usize, // 1..=8
+        lr_pow: 5 + r.gen_range(3) as u32,  // lr ∈ {1/32, 1/64, 1/128}
+        // ≥ 2·batch rows, usually with a partial evaluation tail
+        rows: batch * (2 + r.gen_range(4) as usize) + r.gen_range(3) as usize,
+        jobs: 1 + r.gen_range(3) as usize,   // 1..=3
+        boards: 1 + r.gen_range(3) as usize, // 1..=3
+        sync_every: 1 + r.gen_range(4) as usize,
+    }
+}
+
+fn shrink_fuzz_case(c: &FuzzCase) -> Vec<FuzzCase> {
+    let mut out: Vec<FuzzCase> = shrink_net_case(&c.net)
+        .into_iter()
+        .map(|net| FuzzCase { net, ..c.clone() })
+        .collect();
+    if c.steps > 1 {
+        out.push(FuzzCase { steps: c.steps / 2, ..c.clone() });
+    }
+    if c.rows > 1 {
+        out.push(FuzzCase { rows: c.rows / 2, ..c.clone() });
+    }
+    if c.jobs > 1 {
+        out.push(FuzzCase { jobs: c.jobs - 1, ..c.clone() });
+    }
+    if c.boards > 1 {
+        out.push(FuzzCase { boards: c.boards - 1, ..c.clone() });
+    }
+    if c.sync_every > 1 {
+        out.push(FuzzCase { sync_every: 1, ..c.clone() });
+    }
+    out
+}
+
+/// Generator for [`FuzzCase`].
+pub fn fuzz_case() -> Gen<FuzzCase> {
+    Gen::new(sample_fuzz_case, shrink_fuzz_case)
+}
+
+// ---------------------------------------------------------- raw programs
+
+/// Opcodes the raw-program generator draws from: every opcode with lane
+/// semantics. `Nop` is excluded deliberately — it has no microcode
+/// lowering (`MvmOp::from_opcode` rejects it), so a Nop wave cannot be
+/// structurally verified.
+const OPS: [Opcode; 6] = [
+    Opcode::VectorAddition,
+    Opcode::VectorSubtraction,
+    Opcode::ElementMultiplication,
+    Opcode::VectorDotProduct,
+    Opcode::VectorSummation,
+    Opcode::ActivationFunction,
+];
+
+/// A generated raw vector program + input bindings. Wave operand fields
+/// are stored as raw draws and reduced modulo the current buffer count at
+/// [`ProgramCase::build`] time, so shrinking `bufs`/`waves` never
+/// invalidates the case.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramCase {
+    /// Case seed (drives the bound data).
+    pub seed: u64,
+    /// Vector length of every buffer.
+    pub len: usize,
+    /// Number of data buffers (≥ 2; buffer 0 is input-only).
+    pub bufs: usize,
+    /// Wave descriptors: `(op draw, a draw, b draw, dst draw)`.
+    pub waves: Vec<(usize, usize, usize, usize)>,
+    /// Fractional bits.
+    pub frac_bits: u32,
+    /// Saturating vs wrapping narrowing.
+    pub saturate: bool,
+}
+
+impl ProgramCase {
+    /// Materialise the program and its deterministic input bindings.
+    pub fn build(&self) -> (Program, Vec<(BufId, Vec<i16>)>) {
+        let fixed = if self.saturate {
+            FixedSpec::q(self.frac_bits).saturating()
+        } else {
+            FixedSpec::q(self.frac_bits)
+        };
+        let mut r = Rng::new(self.seed);
+        let mut p = Program::new("fuzz_raw", fixed);
+        let mut binds = Vec::new();
+        for i in 0..self.bufs {
+            let kind = if i == 0 { BufKind::Input } else { BufKind::Output };
+            let id = p.buffer(&format!("buf{i}"), self.len, 1, kind);
+            let data: Vec<i16> =
+                (0..self.len).map(|_| r.gen_range_i64(-6000, 6000) as i16).collect();
+            binds.push((id, data));
+        }
+        let scalar = p.buffer("scalar", self.bufs, 1, BufKind::Output);
+        let lut = p.lut(
+            ActLut::build(
+                ActKind::Tanh,
+                false,
+                fixed,
+                AddrMode::Clamp,
+                self.frac_bits.saturating_sub(4),
+            )
+            .with_interp(),
+        );
+        p.steps.push(Step::LoadLut(lut));
+        for (wi, &(op_d, a_d, b_d, dst_d)) in self.waves.iter().enumerate() {
+            let op = OPS[op_d % OPS.len()];
+            let a = a_d % self.bufs;
+            let b = b_d % self.bufs;
+            let dst = 1 + dst_d % (self.bufs - 1);
+            let n = self.len;
+            let lanes = match op {
+                Opcode::VectorDotProduct | Opcode::VectorSummation => vec![LaneOp {
+                    a: View::all(a, n),
+                    b: (op == Opcode::VectorDotProduct).then(|| View::all(b, n)),
+                    out: View::contiguous(scalar, wi % self.bufs, 1),
+                }],
+                Opcode::ActivationFunction => vec![LaneOp {
+                    a: View::all(a, n),
+                    b: None,
+                    out: View::all(dst, n),
+                }],
+                _ => vec![LaneOp {
+                    a: View::all(a, n),
+                    b: Some(View::all(b, n)),
+                    out: View::all(dst, n),
+                }],
+            };
+            p.steps.push(Step::Wave(Wave {
+                op,
+                vec_len: n,
+                lut: (op == Opcode::ActivationFunction).then_some(lut),
+                lanes,
+            }));
+        }
+        (p, binds)
+    }
+}
+
+pub(crate) fn sample_program_case(r: &mut Rng) -> ProgramCase {
+    let n_waves = 1 + r.gen_range(8) as usize; // 1..=8
+    ProgramCase {
+        seed: r.next_u64(),
+        len: 4 + r.gen_range(45) as usize, // 4..=48
+        bufs: 2 + r.gen_range(5) as usize, // 2..=6
+        waves: (0..n_waves)
+            .map(|_| {
+                (
+                    r.gen_range(64) as usize,
+                    r.gen_range(64) as usize,
+                    r.gen_range(64) as usize,
+                    r.gen_range(64) as usize,
+                )
+            })
+            .collect(),
+        frac_bits: 7 + r.gen_range(5) as u32, // Q7..Q11
+        saturate: r.gen_bool(0.5),
+    }
+}
+
+fn shrink_program_case(c: &ProgramCase) -> Vec<ProgramCase> {
+    let mut out = Vec::new();
+    if c.waves.len() > 1 {
+        let mut d = c.clone();
+        d.waves.truncate(c.waves.len() / 2);
+        out.push(d);
+        let mut d = c.clone();
+        d.waves.pop();
+        out.push(d);
+    }
+    if c.len > 1 {
+        out.push(ProgramCase { len: c.len / 2, ..c.clone() });
+    }
+    if c.bufs > 2 {
+        out.push(ProgramCase { bufs: c.bufs - 1, ..c.clone() });
+    }
+    if !c.saturate {
+        out.push(ProgramCase { saturate: true, ..c.clone() });
+    }
+    out
+}
+
+/// Generator for [`ProgramCase`].
+pub fn program_case() -> Gen<ProgramCase> {
+    Gen::new(sample_program_case, shrink_program_case)
+}
+
+// -------------------------------------------------------- fault scenarios
+
+/// A generated cluster fault scenario: a topology (reusing [`FuzzCase`])
+/// plus a deterministic [`FaultPlan`] targeting it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultCase {
+    /// Topology + jobs.
+    pub case: FuzzCase,
+    /// The injected fault schedule.
+    pub plan: FaultPlan,
+}
+
+pub(crate) fn sample_fault_case(r: &mut Rng) -> FaultCase {
+    let case = sample_fuzz_case(r);
+    let mut plan = FaultPlan::none();
+    for _ in 0..r.gen_range(3) {
+        // 0..=2 faults
+        let board = r.gen_range(case.boards as u64) as usize;
+        let at = r.gen_range(4) as usize;
+        plan = match r.gen_range(4) {
+            0 => plan.kill(board, at),
+            1 => plan.corrupt(board, at),
+            2 => plan.delay(board, at),
+            _ => plan.reorder(board, at),
+        };
+    }
+    FaultCase { case, plan }
+}
+
+fn shrink_fault_case(c: &FaultCase) -> Vec<FaultCase> {
+    let mut out: Vec<FaultCase> = shrink_fuzz_case(&c.case)
+        .into_iter()
+        .map(|case| FaultCase { case, plan: c.plan.clone() })
+        .collect();
+    // drop one fault at a time
+    for (list, strip) in [
+        (&c.plan.kills, 0usize),
+        (&c.plan.corruptions, 1),
+        (&c.plan.delays, 2),
+        (&c.plan.reorders, 3),
+    ] {
+        for i in 0..list.len() {
+            let mut d = c.clone();
+            match strip {
+                0 => {
+                    d.plan.kills.remove(i);
+                }
+                1 => {
+                    d.plan.corruptions.remove(i);
+                }
+                2 => {
+                    d.plan.delays.remove(i);
+                }
+                _ => {
+                    d.plan.reorders.remove(i);
+                }
+            }
+            out.push(d);
+        }
+    }
+    out
+}
+
+/// Generator for [`FaultCase`].
+pub fn fault_case() -> Gen<FaultCase> {
+    Gen::new(sample_fault_case, shrink_fault_case)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_regenerate_exactly_from_a_seed() {
+        for seed in [0u64, 1, 0xDEAD] {
+            assert_eq!(
+                sample_fuzz_case(&mut Rng::new(seed)),
+                sample_fuzz_case(&mut Rng::new(seed))
+            );
+            assert_eq!(
+                sample_program_case(&mut Rng::new(seed)),
+                sample_program_case(&mut Rng::new(seed))
+            );
+            assert_eq!(
+                sample_fault_case(&mut Rng::new(seed)),
+                sample_fault_case(&mut Rng::new(seed))
+            );
+        }
+    }
+
+    #[test]
+    fn generated_nets_validate_and_derive_consistent_bindings() {
+        let mut r = Rng::new(42);
+        for _ in 0..50 {
+            let c = sample_net_case(&mut r);
+            let spec = c.spec();
+            spec.check().unwrap();
+            let (w, b) = c.params();
+            assert_eq!(w.len(), spec.layers.len());
+            for (l, layer) in spec.layers.iter().enumerate() {
+                assert_eq!(w[l].len(), layer.inputs * layer.outputs);
+                assert_eq!(b[l].len(), layer.outputs);
+            }
+            assert_eq!(c.input().len(), c.batch * spec.input_dim());
+            assert_eq!(c.targets().len(), c.batch * spec.output_dim());
+        }
+    }
+
+    #[test]
+    fn generated_programs_validate() {
+        let mut r = Rng::new(7);
+        for _ in 0..50 {
+            let c = sample_program_case(&mut r);
+            let (p, binds) = c.build();
+            p.check().expect("generated program must validate");
+            assert_eq!(binds.len(), c.bufs);
+        }
+    }
+
+    #[test]
+    fn shrinking_preserves_validity_and_reduces() {
+        let mut r = Rng::new(9);
+        for _ in 0..20 {
+            let c = sample_fuzz_case(&mut r);
+            for s in shrink_fuzz_case(&c) {
+                s.net.spec().check().unwrap();
+                assert!(s != c, "shrink candidate equals original");
+            }
+            let pc = sample_program_case(&mut r);
+            for s in shrink_program_case(&pc) {
+                s.build().0.check().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn net_case_shrinks_to_the_minimal_net() {
+        // Greedy shrinking with an always-failing property bottoms out at
+        // the 1→1 relu/identity net at batch 1.
+        let mut c = sample_net_case(&mut Rng::new(3));
+        loop {
+            match shrink_net_case(&c).into_iter().next() {
+                Some(next) => c = next,
+                None => break,
+            }
+        }
+        assert_eq!(c.dims, vec![1, 1]);
+        assert_eq!(c.batch, 1);
+        assert_eq!(c.act, ActKind::Relu);
+        assert_eq!(c.out_act, ActKind::Identity);
+    }
+}

@@ -1,0 +1,40 @@
+//! Differential fuzzing & deterministic fault-injection testkit.
+//!
+//! The paper's claim is that one flexible structure can train/test *any*
+//! network on *any* number of FPGAs. The stack realises that at five
+//! fidelity levels (float oracle → FastSim → unfused plan → fused plan →
+//! cluster), and this subsystem *generates* the scenarios that prove the
+//! levels agree — instead of trusting a handful of hand-picked nets:
+//!
+//! * [`gen`] — seeded case generators built on [`crate::prop::Gen`]:
+//!   random `MlpSpec`s with derived parameters/batches, raw vector
+//!   `Program`s, datasets, and M×F cluster topologies sweeping the §2
+//!   placements, each with structured shrinkers.
+//! * [`diff`] — the differential executor: every case through every
+//!   level via the Session API, asserting bit-identical outputs, trained
+//!   weights, and identical cycle accounting between fused and unfused
+//!   plans (the float oracle gets a quantisation tolerance band).
+//! * Fault injection — [`crate::cluster::fault::FaultPlan`] schedules
+//!   deterministic worker death, post-checksum chunk corruption, and
+//!   delayed/reordered replies; [`Differ::run_faults`] asserts the
+//!   leader never hangs and either finishes bit-identically or surfaces
+//!   a typed [`crate::cluster::ClusterError`].
+//! * [`fuzz`] — the harness: seeded case streams, greedy shrinking to a
+//!   minimal failing case, seed replay (`mfnn fuzz --cases 1 --seed N`
+//!   reproduces exactly), and corpus snapshots under
+//!   `rust/tests/corpus/`.
+//!
+//! Reproducing a failure: every divergence prints its case seed; the
+//! `mfnn fuzz` subcommand replays it, and `MFNN_PROP_CASES` scales the
+//! adjacent property suites (see DESIGN.md §Testing).
+
+pub mod diff;
+pub mod fuzz;
+pub mod gen;
+
+pub use diff::{Differ, Divergence, Level};
+pub use fuzz::{
+    case_seed, fuzz, parse_corpus, replay_corpus, run_case, Family, FuzzFailure, FuzzOptions,
+    FuzzReport,
+};
+pub use gen::{FaultCase, FuzzCase, NetCase, ProgramCase};
