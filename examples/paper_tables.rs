@@ -25,7 +25,13 @@ fn main() {
         .with_title("Table 3 — processor group resource usages")
         .numeric();
     for (n, u) in [("MVM_PG", MVM_PG_USAGE), ("ACTPRO_PG", ACTPRO_PG_USAGE)] {
-        t3.row(vec![n.into(), u.luts.to_string(), u.ffs.to_string(), u.bram18.to_string(), u.dsps.to_string()]);
+        t3.row(vec![
+            n.into(),
+            u.luts.to_string(),
+            u.ffs.to_string(),
+            u.bram18.to_string(),
+            u.dsps.to_string(),
+        ]);
     }
     print!("{}", t3.render());
 
@@ -36,7 +42,9 @@ fn main() {
         ("activation function", OpClass::Activation, 0.401, 5088.0),
     ];
     let m = PerfModel::paper();
-    let mut tw = Table::new(vec!["op (N_I=1024)", "T_RUN", "T_all", "E ours", "E paper", "R ours (Mb/s)", "R paper"])
+    let mut tw = Table::new(vec![
+        "op (N_I=1024)", "T_RUN", "T_all", "E ours", "E paper", "R ours (Mb/s)", "R paper",
+    ])
         .with_title("Sec 4.1 worked examples — Eqns 5-9")
         .numeric();
     for (name, class, e_pub, r_pub) in published {
@@ -54,7 +62,9 @@ fn main() {
     print!("{}", tw.render());
 
     // Table 8 + Eqns 3-4 allocation.
-    let mut t8 = Table::new(vec!["FPGA", "IO", "DDR ch", "DDR clk", "Cost CAD", "R Mb/s", "F ours", "MVM_PG", "ACTPRO_PG"])
+    let mut t8 = Table::new(vec![
+        "FPGA", "IO", "DDR ch", "DDR clk", "Cost CAD", "R Mb/s", "F ours", "MVM_PG", "ACTPRO_PG",
+    ])
         .with_title("Table 8 — performance/cost (Eqns 10-11) + Eqns 3-4 allocation")
         .numeric();
     for p in &CATALOG {
@@ -74,7 +84,10 @@ fn main() {
         ]);
     }
     print!("{}", t8.render());
-    let best = CATALOG.iter().max_by(|a, b| a.perf_cost().partial_cmp(&b.perf_cost()).unwrap()).unwrap();
+    let best = CATALOG
+        .iter()
+        .max_by(|a, b| a.perf_cost().partial_cmp(&b.perf_cost()).unwrap())
+        .unwrap();
     println!("argmax F = {} (paper selects XC7S75-2) — {}", best.name,
         if best.name == "XC7S75-2" { "MATCH" } else { "MISMATCH" });
 }

@@ -45,7 +45,9 @@ fn run_config(name: &str, fixed: FixedSpec, lut: LutParams, t: &mut Table) {
 }
 
 fn main() {
-    let mut t = Table::new(vec!["config", "format", "narrow", "lut addr", "interp", "final loss", "accuracy"])
+    let mut t = Table::new(vec![
+        "config", "format", "narrow", "lut addr", "interp", "final loss", "accuracy",
+    ])
         .with_title("ablation: datapath/LUT design choices (blobs, fixed step budget)")
         .numeric();
     // Paper-faithful everything: Q8.7, wrap narrowing, wrap LUT, no interp.

@@ -43,7 +43,8 @@ fn main() {
     let compiler = Compiler::new();
     let quick = std::env::var("MFNN_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let steps = if quick { 20 } else { 80 };
-    let mut t = Table::new(vec!["M", "F", "mode", "sim makespan ms", "Σsteps/s sim", "host wall ms"])
+    let mut t =
+        Table::new(vec!["M", "F", "mode", "sim makespan ms", "Σsteps/s sim", "host wall ms"])
         .with_title(format!("cluster scaling sweep ({steps} steps/job)"))
         .numeric();
     for (m, fb) in [(1usize, 1usize), (2, 1), (4, 1), (8, 1), (4, 2), (4, 4), (2, 4), (1, 4)] {

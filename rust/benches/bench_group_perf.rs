@@ -36,7 +36,12 @@ fn layer_program(lanes: usize, len: usize) -> (Program, usize, Vec<i16>) {
             out: View::contiguous(z, i, 1),
         })
         .collect();
-    p.steps.push(Step::Wave(Wave { op: Opcode::VectorDotProduct, vec_len: len, lut: None, lanes: dots }));
+    p.steps.push(Step::Wave(Wave {
+        op: Opcode::VectorDotProduct,
+        vec_len: len,
+        lut: None,
+        lanes: dots,
+    }));
     p.steps.push(Step::LoadLut(lut));
     p.steps.push(Step::Wave(Wave {
         op: Opcode::ActivationFunction,
@@ -71,7 +76,9 @@ fn main() {
         ("vector dot product", OpClass::Reduction, 0.505, 3.99e8, 6384.0),
         ("activation function", OpClass::Activation, 0.401, 3.18e8, 5088.0),
     ];
-    let mut t = Table::new(vec!["op", "T_RUN", "T_all", "E ours", "E pub", "P ours", "P pub", "R ours", "R pub"])
+    let mut t = Table::new(vec![
+        "op", "T_RUN", "T_all", "E ours", "E pub", "P ours", "P pub", "R ours", "R pub",
+    ])
         .with_title("sec 4.1 worked examples at N_I=1024 (Eqns 5-9)")
         .numeric();
     for (name, class, e_pub, p_pub, r_pub) in published {

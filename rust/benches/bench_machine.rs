@@ -14,7 +14,15 @@ use mfnn::util::Rng;
 
 fn spec(dims: &[usize]) -> MlpSpec {
     let fixed = FixedSpec::q(10).saturating();
-    MlpSpec::from_dims("bench", dims, ActKind::Relu, ActKind::Identity, fixed, LutParams::training(fixed)).unwrap()
+    MlpSpec::from_dims(
+        "bench",
+        dims,
+        ActKind::Relu,
+        ActKind::Identity,
+        fixed,
+        LutParams::training(fixed),
+    )
+    .unwrap()
 }
 
 fn bind_random(m: &mut MatrixMachine, p: &mfnn::assembler::Program, seed: u64) {

@@ -1,0 +1,121 @@
+//! Serving-path benchmarks: single-board vs pooled serving across the
+//! batch ladder (1 / 8 / 32). Wall-clock timings measure the simulator;
+//! the **simulated**-cycle throughput of each configuration — the number
+//! that is comparable across machines and PRs — is recorded in the
+//! suite's JSON `notes` (requests per simulated second, cycles per
+//! request, and the pooled+batched vs single-board-batch-1 speedup,
+//! which the serving acceptance criterion requires to be ≥ 2×).
+//!
+//! Run: `cargo bench --bench bench_serving` (writes
+//! `BENCH_serving.json` at the repo root; `MFNN_BENCH_QUICK=1` for CI).
+
+use mfnn::bench::{Bencher, Suite};
+use mfnn::fixed::FixedSpec;
+use mfnn::nn::lut::ActKind;
+use mfnn::nn::mlp::{LutParams, MlpSpec};
+use mfnn::serve::{open_loop, seeded_params, ServeReport, SynthRequest};
+use mfnn::{Artifact, CompileOptions, Compiler, ServeConfig, Server};
+use std::sync::Arc;
+
+/// The datapath format every bench net uses.
+fn fixed() -> FixedSpec {
+    FixedSpec::q(10).saturating()
+}
+
+/// Three small distinct nets with seeded parameters (the serve-sim mix).
+#[allow(clippy::type_complexity)]
+fn fleet(
+    compiler: &Compiler,
+    max_batch: usize,
+) -> Vec<(Arc<Artifact>, Vec<Vec<i16>>, Vec<Vec<i16>>)> {
+    [[4usize, 16, 3], [6, 12, 4], [3, 10, 2]]
+        .iter()
+        .enumerate()
+        .map(|(j, dims)| {
+            let spec = MlpSpec::from_dims(
+                &format!("bench{j}"),
+                dims,
+                ActKind::Relu,
+                ActKind::Identity,
+                fixed(),
+                LutParams::training(fixed()),
+            )
+            .unwrap();
+            let (w, b) = seeded_params(&spec, 0xBE7C4 + j as u64);
+            let artifact =
+                compiler.compile_spec(&spec, &CompileOptions::serving(max_batch)).unwrap();
+            (artifact, w, b)
+        })
+        .collect()
+}
+
+/// Run one saturated (open-loop, mean gap 1 cycle) workload against a
+/// fresh server and return its metrics.
+fn run_workload(
+    compiler: &Compiler,
+    boards: usize,
+    max_batch: usize,
+    workload: &[SynthRequest],
+) -> ServeReport {
+    let mut server = Server::open(ServeConfig {
+        boards,
+        max_batch,
+        // batch-1 configs flush instantly; batched ones wait briefly
+        max_wait_cycles: if max_batch == 1 { 0 } else { 64 },
+        // admit the entire workload even while every board is busy
+        queue_cap: workload.len() + 1,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let nets = fleet(compiler, max_batch);
+    for (artifact, w, b) in &nets {
+        server.register(Arc::clone(artifact), w, b).unwrap();
+    }
+    for q in workload {
+        server.submit_at(q.at, q.net, &q.row).unwrap();
+    }
+    server.drain().unwrap();
+    server.report()
+}
+
+fn main() {
+    let mut suite = Suite::new("serving");
+    let requests = if suite.is_quick() { 64 } else { 256 };
+    let compiler = Compiler::new();
+    let in_dims = [4usize, 6, 3];
+    let workload = open_loop(requests, 0, 1, &in_dims, fixed());
+
+    // (name, boards, max_batch) — the single-board batch ladder plus the
+    // pooled configuration the acceptance criterion compares against.
+    let scenarios: &[(&str, usize, usize)] = &[
+        ("single_board_b1", 1, 1),
+        ("single_board_b8", 1, 8),
+        ("single_board_b32", 1, 32),
+        ("pool4_b8", 4, 8),
+        ("pool4_b32", 4, 32),
+    ];
+    let mut sim_rps = Vec::new();
+    for &(name, boards, max_batch) in scenarios {
+        let report = run_workload(&compiler, boards, max_batch, &workload);
+        assert_eq!(
+            report.total_completed() as usize,
+            requests,
+            "{name}: dropped requests in a bench workload"
+        );
+        sim_rps.push((name, report.requests_per_sim_s()));
+        suite.note(&format!("sim_rps_{name}"), format!("{:.1}", report.requests_per_sim_s()));
+        suite.note(
+            &format!("sim_cycles_per_req_{name}"),
+            format!("{:.1}", report.cycles_per_request()),
+        );
+        suite.bench(name, |b: &mut Bencher| {
+            b.iter_with_elements(requests as u64, || {
+                run_workload(&compiler, boards, max_batch, &workload)
+            });
+        });
+    }
+    let base = sim_rps.iter().find(|(n, _)| *n == "single_board_b1").unwrap().1;
+    let pooled = sim_rps.iter().find(|(n, _)| *n == "pool4_b32").unwrap().1;
+    suite.note("sim_speedup_pool4_b32_vs_single_b1", format!("{:.2}", pooled / base));
+    suite.finish();
+}

@@ -20,7 +20,10 @@ fn main() {
         ]);
     }
     print!("{}", t.render());
-    let best = CATALOG.iter().max_by(|a, b| a.perf_cost().partial_cmp(&b.perf_cost()).unwrap()).unwrap();
+    let best = CATALOG
+        .iter()
+        .max_by(|a, b| a.perf_cost().partial_cmp(&b.perf_cost()).unwrap())
+        .unwrap();
     assert_eq!(best.name, "XC7S75-2");
     println!("argmax F: {} (matches the paper's selection)\n", best.name);
 

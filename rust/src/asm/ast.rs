@@ -28,7 +28,13 @@ pub enum Directive {
     /// `ACT <name> <kind> [shift=k] [mode=wrap|clamp] [interp=0|1]` —
     /// "Loads an activation lookup table" (table size is fixed at 1024,
     /// one RAMB18).
-    Act { name: String, kind: ActKind, shift: Option<u32>, mode: Option<AddrMode>, interp: Option<bool> },
+    Act {
+        name: String,
+        kind: ActKind,
+        shift: Option<u32>,
+        mode: Option<AddrMode>,
+        interp: Option<bool>,
+    },
     /// `MLP <out> <in> <weight> <bias> <act>` — "Executes a MLP layer".
     Mlp { out: String, input: String, weight: String, bias: String, act: String },
     /// `OUTPUT <name>` — "Stores data matrix".

@@ -67,7 +67,10 @@ pub fn parse(text: &str) -> Result<AsmFile, ParseError> {
             }
             "FIXED" => {
                 if args.len() != 2 {
-                    return Err(ParseError::BadArgs(line, "FIXED takes <frac_bits> <wrap|saturate>".into()));
+                    return Err(ParseError::BadArgs(
+                        line,
+                        "FIXED takes <frac_bits> <wrap|saturate>".into(),
+                    ));
                 }
                 let frac: u32 = num(line, args[0], "frac_bits")?;
                 if frac >= 16 {
@@ -223,7 +226,10 @@ TRAIN lr=0.00390625
             net.items[1].dir,
             Directive::Input { rows: 16, cols: 4, .. }
         ));
-        assert!(matches!(net.items.last().unwrap().dir, Directive::Train { lr } if lr == 0.00390625));
+        assert!(matches!(
+            net.items.last().unwrap().dir,
+            Directive::Train { lr } if lr == 0.00390625
+        ));
     }
 
     #[test]

@@ -8,7 +8,9 @@
 //! microcode cache of §4.1 (asserted by tests).
 
 use crate::hw::COLUMN_LEN;
-use crate::isa::microcode::{Microcode, ProcCtrl, MAX_CYCLES, MICROCODE_CACHE_DEPTH, PROCS_PER_GROUP};
+use crate::isa::microcode::{
+    Microcode, ProcCtrl, MAX_CYCLES, MICROCODE_CACHE_DEPTH, PROCS_PER_GROUP,
+};
 use crate::isa::{ActproOp, MvmOp, Opcode};
 use thiserror::Error;
 

@@ -189,7 +189,13 @@ pub enum ProgramError {
 impl Program {
     /// New empty program.
     pub fn new(name: &str, fixed: FixedSpec) -> Program {
-        Program { name: name.to_string(), buffers: Vec::new(), luts: Vec::new(), steps: Vec::new(), fixed }
+        Program {
+            name: name.to_string(),
+            buffers: Vec::new(),
+            luts: Vec::new(),
+            steps: Vec::new(),
+            fixed,
+        }
     }
 
     /// Declare a buffer, returning its id.

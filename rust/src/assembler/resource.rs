@@ -146,7 +146,11 @@ mod tests {
             let bram =
                 a.mvm_groups * MVM_PG_USAGE.bram18 + a.actpro_groups * ACTPRO_PG_USAGE.bram18;
             let dsp = a.mvm_groups * MVM_PG_USAGE.dsps;
-            assert!(lut <= p.luts && ff <= p.ffs && bram <= p.bram18 && dsp <= p.dsps, "{}", p.name);
+            assert!(
+                lut <= p.luts && ff <= p.ffs && bram <= p.bram18 && dsp <= p.dsps,
+                "{}",
+                p.name
+            );
         }
     }
 }

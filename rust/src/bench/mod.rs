@@ -112,6 +112,7 @@ pub struct Suite {
     measure: Duration,
     max_samples: usize,
     results: Vec<Stats>,
+    notes: Vec<(String, String)>,
     quick: bool,
 }
 
@@ -125,12 +126,31 @@ impl Suite {
         } else {
             (Duration::from_millis(300), Duration::from_secs(1))
         };
-        Suite { name: name.to_string(), warmup, measure, max_samples: 64, results: Vec::new(), quick }
+        Suite {
+            name: name.to_string(),
+            warmup,
+            measure,
+            max_samples: 64,
+            results: Vec::new(),
+            notes: Vec::new(),
+            quick,
+        }
     }
 
     /// Is this a quick (smoke) run?
     pub fn is_quick(&self) -> bool {
         self.quick
+    }
+
+    /// Attach a named note to the suite's JSON (`"notes": {…}`) —
+    /// deterministic, wall-clock-independent numbers a suite wants to
+    /// record alongside its timings (the serving bench stores simulated
+    /// cycle throughput and speedups here, so the perf trajectory is
+    /// comparable across machines).
+    pub fn note(&mut self, key: &str, value: impl std::fmt::Display) {
+        let value = value.to_string();
+        eprintln!("  note: {key} = {value}");
+        self.notes.push((key.to_string(), value));
     }
 
     /// Run one benchmark.
@@ -197,6 +217,18 @@ impl Suite {
         s.push_str("{\n");
         s.push_str(&format!("  \"suite\": {},\n", json_str(&self.name)));
         s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        if !self.notes.is_empty() {
+            s.push_str("  \"notes\": {\n");
+            for (i, (k, v)) in self.notes.iter().enumerate() {
+                s.push_str(&format!(
+                    "    {}: {}{}\n",
+                    json_str(k),
+                    json_str(v),
+                    if i + 1 == self.notes.len() { "" } else { "," },
+                ));
+            }
+            s.push_str("  },\n");
+        }
         s.push_str("  \"benchmarks\": [\n");
         for (i, b) in self.results.iter().enumerate() {
             let tp = b
@@ -254,8 +286,9 @@ impl Suite {
     }
 }
 
-/// Minimal JSON string escaping (quotes, backslashes, control chars).
-fn json_str(s: &str) -> String {
+/// Minimal JSON string escaping (quotes, backslashes, control chars) —
+/// shared with the serving metrics JSON writer.
+pub(crate) fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {
@@ -329,6 +362,17 @@ mod tests {
     fn json_escaping() {
         assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
         assert_eq!(json_str("tab\there"), "\"tab\\there\"");
+    }
+
+    #[test]
+    fn notes_land_in_the_suite_json() {
+        let mut suite = Suite::new("notetest");
+        suite.note("sim_rps", format!("{:.2}", 1234.5));
+        suite.note("speedup", "3.1");
+        let json = suite.to_json();
+        assert!(json.contains("\"notes\": {"), "{json}");
+        assert!(json.contains("\"sim_rps\": \"1234.50\","), "{json}");
+        assert!(json.contains("\"speedup\": \"3.1\""), "{json}");
     }
 
     #[test]

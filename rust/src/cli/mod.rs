@@ -82,7 +82,12 @@ impl Spec {
     }
 
     /// Declare a value-taking option.
-    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Spec {
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Spec {
         self.opts.push(OptSpec { name, arity: Arity::Value, help, default });
         self
     }

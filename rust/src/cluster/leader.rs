@@ -196,7 +196,8 @@ pub fn execute(cfg: &ClusterConfig, jobs: &[Job]) -> Result<ClusterReport, Clust
                     let bus = cfg.bus;
                     let jobs_ref = jobs;
                     let queue = queue.clone();
-                    handles.push(s.spawn(move || -> Result<(f64, Vec<(usize, JobResult)>), ClusterError> {
+                    type QueueOut = Result<(f64, Vec<(usize, JobResult)>), ClusterError>;
+                    handles.push(s.spawn(move || -> QueueOut {
                         let mut t = 0.0f64;
                         let mut out = Vec::new();
                         for j in queue {
@@ -224,7 +225,10 @@ pub fn execute(cfg: &ClusterConfig, jobs: &[Job]) -> Result<ClusterReport, Clust
                 let mut handles = Vec::new();
                 for (j, group) in placement.groups.iter().enumerate() {
                     let group_workers: Vec<Worker> =
-                        group.iter().map(|&b| worker_slots[b].take().expect("board used once")).collect();
+                        group
+                            .iter()
+                            .map(|&b| worker_slots[b].take().expect("board used once"))
+                            .collect();
                     let metrics = Arc::clone(&metrics);
                     let bus = cfg.bus;
                     let job = &jobs[j];
@@ -279,6 +283,35 @@ fn expect_chunk(
             }
             Ok((curve, stats, sim_seconds, w, b))
         }
+        Reply::Error { message, .. } => {
+            Err(ClusterError::Worker(job_name.to_string(), board, message))
+        }
+        other => Err(ClusterError::Worker(
+            job_name.to_string(),
+            board,
+            format!("unexpected reply {other:?}"),
+        )),
+    }
+}
+
+/// Serve one inference micro-batch on a board's job, synchronously —
+/// the leader-side entry of the dual-workload protocol (`InferChunk`
+/// alongside training): send the rows, wait for the outputs, surface
+/// worker death/errors as typed [`ClusterError`]s (the same never-hangs
+/// contract as the training path). `qx` is a quantised
+/// `rows × input_dim` batch; the reply is the `rows × output_dim`
+/// outputs with the pass's stats and simulated seconds.
+pub fn infer_on(
+    worker: &Worker,
+    job_name: &str,
+    board: usize,
+    job_id: usize,
+    rows: usize,
+    qx: Vec<i16>,
+) -> Result<(Vec<i16>, RunStats, f64), ClusterError> {
+    worker.send(Cmd::InferChunk { job: job_id, rows, qx }).map_err(died(job_name))?;
+    match worker.recv().map_err(died(job_name))? {
+        Reply::InferDone { out, stats, sim_seconds, .. } => Ok((out, stats, sim_seconds)),
         Reply::Error { message, .. } => {
             Err(ClusterError::Worker(job_name.to_string(), board, message))
         }
@@ -611,7 +644,8 @@ mod tests {
             .iter()
             .map(|l| vec![7i16; l.inputs * l.outputs])
             .collect();
-        let b0: Vec<Vec<i16>> = shape_job.spec.layers.iter().map(|l| vec![3i16; l.outputs]).collect();
+        let b0: Vec<Vec<i16>> =
+            shape_job.spec.layers.iter().map(|l| vec![3i16; l.outputs]).collect();
         let mut single = mk_job("single", 6, 0);
         single.initial = Some((w0.clone(), b0.clone()));
         let r = execute(&ClusterConfig { boards: 1, ..Default::default() }, &[single]).unwrap();
@@ -632,6 +666,37 @@ mod tests {
         let r = run_cluster(&cfg, &[mk_job("shim", 4, 10)]).unwrap();
         assert_eq!(r.results.len(), 1);
         assert!(matches!(run_cluster(&cfg, &[]), Err(ClusterError::NoJobs)));
+    }
+
+    #[test]
+    fn infer_on_serves_between_train_chunks() {
+        // A board mid-training-session answers inference micro-batches
+        // through the same command channel — both workloads on one
+        // board, with typed errors instead of hangs.
+        let metrics = Metrics::shared();
+        let device = FpgaDevice::by_name("XC7S75-2").unwrap();
+        let job = mk_job("mix", 11, 6);
+        let w = Worker::spawn(0, device, Arc::clone(&metrics), FaultPlan::none());
+        w.send(Cmd::NewTrainer { job: 0, spec: job.spec.clone(), cfg: job.cfg.clone() })
+            .unwrap();
+        expect_ready(&w, "mix", 0).unwrap();
+        w.send(Cmd::TrainChunk { job: 0, data: Arc::clone(&job.train_data), steps: 3 })
+            .unwrap();
+        expect_chunk(&w, "mix", 0).unwrap();
+        // serve a 2-row micro-batch (not the training batch size) on the
+        // current parameters
+        let qx = job.train_data.encode_rows(0..2, job.spec.fixed);
+        let (out, stats, sim_s) = infer_on(&w, "mix", 0, 0, 2, qx).unwrap();
+        assert_eq!(out.len(), 2 * job.spec.output_dim());
+        assert!(stats.cycles > 0 && sim_s > 0.0);
+        // training resumes unperturbed on the same board
+        w.send(Cmd::TrainChunk { job: 0, data: Arc::clone(&job.train_data), steps: 3 })
+            .unwrap();
+        expect_chunk(&w, "mix", 0).unwrap();
+        assert_eq!(metrics.snapshot().infer_chunks, 1);
+        // wrong-size rows surface as a typed worker error, not a hang
+        let err = infer_on(&w, "mix", 0, 0, 3, vec![0i16; 5]).unwrap_err();
+        assert!(matches!(err, ClusterError::Worker(ref n, 0, _) if n == "mix"), "{err}");
     }
 
     #[test]

@@ -21,6 +21,9 @@ pub struct Metrics {
     pub errors: AtomicU64,
     /// Faults injected by the run's [`super::fault::FaultPlan`].
     pub faults_injected: AtomicU64,
+    /// Inference micro-batches served (`Cmd::InferChunk` — the serving
+    /// workload coexisting with training on the same boards).
+    pub infer_chunks: AtomicU64,
 }
 
 impl Metrics {
@@ -44,6 +47,7 @@ impl Metrics {
             sync_rounds: self.sync_rounds.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             faults_injected: self.faults_injected.load(Ordering::Relaxed),
+            infer_chunks: self.infer_chunks.load(Ordering::Relaxed),
         }
     }
 }
@@ -65,6 +69,8 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     /// Injected faults that fired.
     pub faults_injected: u64,
+    /// Inference micro-batches served.
+    pub infer_chunks: u64,
 }
 
 #[cfg(test)]

@@ -8,6 +8,12 @@
 //!   concretisation of "divided", documented in DESIGN.md §2).
 //! * M = F: "maps 1 MLP to 1 FPGA".
 //!
+//! Boards are dual-workload: alongside the training protocol
+//! (`NewTrainer`/`SetWeights`/`TrainChunk`/`Evaluate`), workers accept
+//! `InferChunk` — serve one inference micro-batch of any size on a
+//! job's current parameters ([`infer_on`] is the leader-side entry) —
+//! so the same boards train and serve (DESIGN.md §Serving).
+//!
 //! Architecture (tokio is unavailable — std threads + bounded channels
 //! provide the same backpressure semantics):
 //!
@@ -36,7 +42,9 @@ pub mod worker;
 
 pub use bus::{params_checksum, SystemBus};
 pub use fault::{FaultPlan, FaultSite};
-pub use leader::{execute, ClusterConfig, ClusterError, ClusterReport, Job, JobResult, Params};
+pub use leader::{
+    execute, infer_on, ClusterConfig, ClusterError, ClusterReport, Job, JobResult, Params,
+};
 #[allow(deprecated)]
 pub use leader::run_cluster;
 pub use metrics::{Metrics, MetricsSnapshot};

@@ -68,6 +68,21 @@ pub enum Cmd {
         /// Test data.
         data: Arc<Dataset>,
     },
+    /// Serve one inference micro-batch on the job's current parameters —
+    /// the serving workload kind, accepted alongside training so the
+    /// same board serves both. `rows` may be any size `1..=512`; the
+    /// worker rounds it up to the power-of-two forward bucket
+    /// (zero-padded, same ladder policy as the serving runtime) and
+    /// runs it through [`Trainer::infer_rows`] without touching
+    /// training state.
+    InferChunk {
+        /// Job index.
+        job: usize,
+        /// Rows in the micro-batch.
+        rows: usize,
+        /// Quantised `rows × input_dim` input.
+        qx: Vec<i16>,
+    },
     /// Terminate the worker.
     Shutdown,
 }
@@ -105,6 +120,17 @@ pub enum Reply {
         /// Accuracy in [0,1].
         accuracy: f64,
         /// Machine stats.
+        stats: RunStats,
+        /// Simulated seconds.
+        sim_seconds: f64,
+    },
+    /// An inference micro-batch finished.
+    InferDone {
+        /// Job index.
+        job: usize,
+        /// Quantised `rows × output_dim` outputs.
+        out: Vec<i16>,
+        /// Machine stats of the pass.
         stats: RunStats,
         /// Simulated seconds.
         sim_seconds: f64,
@@ -296,6 +322,49 @@ fn worker_main(
                     }
                 }
             }
+            Cmd::InferChunk { job, rows, mut qx } => {
+                let Some(t) = trainers.get_mut(&job) else {
+                    let _ = reply_tx
+                        .send(Reply::Error { job, message: "no trainer for job".into() });
+                    continue;
+                };
+                let in_dim = t.spec.input_dim();
+                if rows == 0 || qx.len() != rows * in_dim {
+                    let _ = reply_tx.send(Reply::Error {
+                        job,
+                        message: format!(
+                            "inference batch has {} lanes, expected {rows} × {in_dim}",
+                            qx.len()
+                        ),
+                    });
+                    continue;
+                }
+                // Round up to the power-of-two forward bucket and
+                // zero-pad, mirroring the serving runtime's ladder: at
+                // most log2(COLUMN_LEN) lazily-compiled variants per
+                // trainer instead of one per observed micro-batch size.
+                // Forward lanes are per-row, so padding never perturbs
+                // real rows.
+                let bucket = rows.next_power_of_two();
+                qx.resize(bucket * in_dim, 0);
+                match t.infer_rows(bucket, &qx) {
+                    Ok((mut out, stats)) => {
+                        out.truncate(rows * t.spec.output_dim());
+                        metrics.infer_chunks.fetch_add(1, Ordering::Relaxed);
+                        metrics.sim_cycles.fetch_add(stats.cycles, Ordering::Relaxed);
+                        let _ = reply_tx.send(Reply::InferDone {
+                            job,
+                            out,
+                            stats,
+                            sim_seconds: stats.seconds(&t.device),
+                        });
+                    }
+                    Err(e) => {
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply_tx.send(Reply::Error { job, message: e.to_string() });
+                    }
+                }
+            }
         }
     }
 }
@@ -343,6 +412,55 @@ mod tests {
         assert!(matches!(w.recv(), Ok(Reply::EvalDone { job: 0, .. })));
         assert_eq!(m.snapshot().steps_total, 5);
         drop(w); // clean shutdown
+    }
+
+    #[test]
+    fn infer_chunks_serve_alongside_training_without_perturbing_it() {
+        use crate::nn::trainer::Trainer;
+        let m = Metrics::shared();
+        let device = FpgaDevice::selected();
+        let w = Worker::spawn(0, device, Arc::clone(&m), FaultPlan::none());
+        let cfg = TrainConfig { batch: 8, steps: 3, lr: 1.0 / 256.0, seed: 5, log_every: 1 };
+        w.send(Cmd::NewTrainer { job: 0, spec: spec(), cfg: cfg.clone() }).unwrap();
+        assert!(matches!(w.recv(), Ok(Reply::Ready { job: 0 })));
+        let ds = Arc::new(dataset::xor(64, 3));
+        let fixed = spec().fixed;
+        // train → serve → train on the same board
+        w.send(Cmd::TrainChunk { job: 0, data: Arc::clone(&ds), steps: 3 }).unwrap();
+        assert!(matches!(w.recv(), Ok(Reply::ChunkDone { .. })));
+        let qx = ds.encode_rows(0..3, fixed);
+        w.send(Cmd::InferChunk { job: 0, rows: 3, qx: qx.clone() }).unwrap();
+        let served = match w.recv().unwrap() {
+            Reply::InferDone { job, out, stats, sim_seconds } => {
+                assert_eq!(job, 0);
+                assert_eq!(out.len(), 3 * 2);
+                assert!(stats.cycles > 0 && sim_seconds > 0.0);
+                out
+            }
+            other => panic!("unexpected {other:?}"),
+        };
+        w.send(Cmd::TrainChunk { job: 0, data: Arc::clone(&ds), steps: 3 }).unwrap();
+        let final_w = match w.recv().unwrap() {
+            Reply::ChunkDone { w, .. } => w,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(m.snapshot().infer_chunks, 1);
+        // reference: the identical training run with no serve interleave
+        // — inference must not perturb training state (weights or RNG)
+        let mut reference = Trainer::build(spec(), device, cfg).unwrap();
+        reference.train(&ds).unwrap();
+        let (ref_out, _) = reference.infer_rows(3, &qx).unwrap();
+        assert_eq!(served, ref_out, "served outputs diverge from the engine");
+        reference.train(&ds).unwrap();
+        assert_eq!(final_w, reference.weights().0, "serving perturbed training");
+    }
+
+    #[test]
+    fn infer_chunk_for_unknown_job_errors() {
+        let m = Metrics::shared();
+        let w = Worker::spawn(2, FpgaDevice::selected(), m, FaultPlan::none());
+        w.send(Cmd::InferChunk { job: 4, rows: 1, qx: vec![0, 0] }).unwrap();
+        assert!(matches!(w.recv(), Ok(Reply::Error { job: 4, .. })));
     }
 
     #[test]

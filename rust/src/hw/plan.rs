@@ -644,6 +644,25 @@ impl ExecPlan {
         &st.arena[base..base + len]
     }
 
+    /// Batched-forward entry (the serving hot path): bind a micro-batch
+    /// to input buffer `x`, execute the plan once, and return the `out`
+    /// buffer's lanes — one plan invocation for the whole B-row bucket
+    /// instead of B single-row runs. `qx` must be exactly the input
+    /// buffer's declared lane count; callers pad partial buckets with
+    /// zero rows (forward lanes are per-row, so padding never perturbs
+    /// real rows).
+    pub fn run_forward(
+        &self,
+        st: &mut PlanState,
+        x: usize,
+        qx: &[i16],
+        out: usize,
+    ) -> (Vec<i16>, RunStats) {
+        self.write_buffer(st, x, qx);
+        let stats = self.execute(st);
+        (self.read_buffer(st, out).to_vec(), stats)
+    }
+
     // ----------------------------------------------------------- execution
 
     /// Execute the plan against `st`, returning the run's cycle/work
@@ -1150,6 +1169,30 @@ mod tests {
         let st = plan.state();
         assert_eq!(plan.read_buffer(&st, b), &[1, 2, 3]);
         assert_eq!(plan.read_buffer(&st, a), &[0; 8]);
+    }
+
+    #[test]
+    fn run_forward_is_write_execute_read_in_one_call() {
+        let p = fused_program(16, 8, false);
+        let plan = ExecPlan::new(&p, &device());
+        let mut r = Rng::new(9);
+        let data: Vec<i16> = (0..16 * 8).map(|_| r.gen_range_i64(-4000, 4000) as i16).collect();
+        // reference: the three separate calls
+        let mut st_ref = plan.state();
+        plan.write_buffer(&mut st_ref, 0, &data);
+        let stats_ref = plan.execute(&mut st_ref);
+        let out_ref = plan.read_buffer(&st_ref, 2).to_vec();
+        // batched entry on a fresh state
+        let mut st = plan.state();
+        let (out, stats) = plan.run_forward(&mut st, 0, &data, 2);
+        assert_eq!(out, out_ref);
+        assert_eq!(stats, stats_ref);
+        // steady state: a second batch on the same state re-uses the
+        // resident LUT, exactly like repeated execute() calls
+        plan.write_buffer(&mut st_ref, 0, &data);
+        let stats2_ref = plan.execute(&mut st_ref);
+        let (_, stats2) = plan.run_forward(&mut st, 0, &data, 2);
+        assert_eq!(stats2, stats2_ref);
     }
 
     #[test]

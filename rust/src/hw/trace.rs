@@ -69,7 +69,11 @@ impl Trace {
             out.push_str(&format!(" {c:>width$}"));
         }
         out.push('\n');
-        out.push_str(&format!("{:-<name_w$}-+{}\n", "", "-".repeat(((width + 1) * (to - from + 1) as usize).max(1))));
+        out.push_str(&format!(
+            "{:-<name_w$}-+{}\n",
+            "",
+            "-".repeat(((width + 1) * (to - from + 1) as usize).max(1))
+        ));
         for sig in &self.signals {
             out.push_str(&format!("{sig:<name_w$} |"));
             let series = &self.data[sig];

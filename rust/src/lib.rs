@@ -10,6 +10,11 @@
 //! is the unified front door over all of them: [`Compiler`] produces
 //! compile-once [`Artifact`]s and [`Session`] runs them on a single board
 //! or a whole cluster with typed tensor handles and one [`enum@Error`].
+//! The [`serve`] module is the multi-tenant batched inference serving
+//! runtime: many nets, concurrent requests, a dynamic micro-batcher over
+//! a forward batch ladder, and a board pool — deterministic and
+//! bit-identical to sequential `Session::infer` (`mfnn serve-sim`;
+//! DESIGN.md §Serving).
 //! The [`runtime`] module loads the JAX/Pallas golden model (AOT-compiled
 //! to HLO text by `python/compile/aot.py`) through PJRT and is used as a
 //! bit-exact oracle and host baseline. Python never runs at runtime.
@@ -38,10 +43,12 @@ pub mod report;
 /// DESIGN.md §Runtime for how to enable it.
 #[cfg(feature = "xla")]
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod testkit;
 pub mod util;
 
+pub use serve::{ServeConfig, Server};
 pub use session::{Artifact, CompileOptions, Compiler, Error, Session, Target, TensorHandle};
 
 /// Crate version string (mirrors `Cargo.toml`).

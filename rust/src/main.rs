@@ -2,13 +2,14 @@
 //! simulated Matrix Machine, and the multi-FPGA cluster runtime.
 //!
 //! ```text
-//! mfnn assemble <net.nnasm> [--device P] [--vhdl DIR] [--print]
-//! mfnn run      <net.nnasm> [--device P] [--verify] [--seed N]
-//! mfnn train    <config.toml>
-//! mfnn fuzz     [--cases N] [--seed S] [--corpus FILE] [--plant-divergence]
-//! mfnn tables   [--which t2|t3|t8|alloc|perf|all]
+//! mfnn assemble  <net.nnasm> [--device P] [--vhdl DIR] [--print]
+//! mfnn run       <net.nnasm> [--device P] [--verify] [--seed N]
+//! mfnn train     <config.toml>
+//! mfnn serve-sim [--requests N] [--seed S] [--nets M] [--boards B] [--max-batch K]
+//! mfnn fuzz      [--cases N] [--seed S] [--corpus FILE] [--plant-divergence]
+//! mfnn tables    [--which t2|t3|t8|alloc|perf|all]
 //! mfnn traces
-//! mfnn golden   [--dir artifacts]
+//! mfnn golden    [--dir artifacts]
 //! ```
 
 use mfnn::asm::lower_file;
@@ -48,6 +49,7 @@ fn main() -> ExitCode {
         "assemble" => cmd_assemble(&rest),
         "run" => cmd_run(&rest),
         "train" => cmd_train(&rest),
+        "serve-sim" => cmd_serve_sim(&rest),
         "fuzz" => cmd_fuzz(&rest),
         "tables" => cmd_tables(&rest),
         "traces" => cmd_traces(&rest),
@@ -74,6 +76,7 @@ fn usage() -> String {
          \x20 assemble <net.nnasm>   parse+lower a net; optional VHDL emission\n\
          \x20 run      <net.nnasm>   execute a net on one simulated board\n\
          \x20 train    <cfg.toml>    run a training cluster from a launcher config\n\
+         \x20 serve-sim              drive the batched serving runtime with synthetic load\n\
          \x20 fuzz                   differential-fuzz every simulator fidelity level\n\
          \x20 tables                 regenerate the paper's tables (2,3,8,alloc,perf)\n\
          \x20 traces                 print the Fig 7/8/10 timing diagrams\n\
@@ -294,6 +297,124 @@ fn jobs_from_config(
         });
     }
     Ok((ccfg, jobs))
+}
+
+// ---------------------------------------------------------------- serve-sim
+
+/// The serve-sim fleet: `nets` small distinct MLPs with seeded random
+/// parameters, compiled for serving at `max_batch`.
+#[allow(clippy::type_complexity)]
+fn serve_sim_nets(
+    compiler: &Compiler,
+    nets: usize,
+    max_batch: usize,
+    seed: u64,
+) -> Result<Vec<(Arc<mfnn::Artifact>, Vec<Vec<i16>>, Vec<Vec<i16>>)>, String> {
+    let fixed = FixedSpec::q(10).saturating();
+    let mut out = Vec::with_capacity(nets);
+    for j in 0..nets {
+        let dims = [3 + j % 4, 8 + 4 * (j % 3), 2 + j % 3];
+        let spec = MlpSpec::from_dims(
+            &format!("net{j}"),
+            &dims,
+            ActKind::Relu,
+            ActKind::Identity,
+            fixed,
+            LutParams::training(fixed),
+        )
+        .map_err(|e| e.to_string())?;
+        let (w, b) = mfnn::serve::seeded_params(&spec, seed ^ 0xA11CE ^ j as u64);
+        let artifact = compiler
+            .compile_spec(&spec, &CompileOptions::serving(max_batch))
+            .map_err(|e| e.to_string())?;
+        out.push((artifact, w, b));
+    }
+    Ok(out)
+}
+
+fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
+    let spec = Spec::new()
+        .opt("requests", "total requests in the synthetic workload", Some("256"))
+        .opt("seed", "workload seed (arrivals, rows, net mix, params)", Some("0"))
+        .opt("nets", "registered nets (distinct shapes)", Some("3"))
+        .opt("boards", "boards in the serving pool", Some("2"))
+        .opt("device", "FPGA part the pool simulates", Some("XC7S75-2"))
+        .opt("max-batch", "micro-batcher flush threshold / top ladder bucket", Some("8"))
+        .opt("max-wait", "micro-batcher flush deadline in simulated cycles", Some("64"))
+        .opt("queue-cap", "per-net admission limit (typed Overloaded beyond)", Some("1024"))
+        .opt("rate", "mean request inter-arrival gap in simulated cycles", Some("8"))
+        .opt("metrics-out", "write the metrics JSON here", Some("serve_metrics.json"))
+        .flag("check-determinism", "run the workload twice and require identical metrics");
+    let args = parse_or_help(
+        &spec,
+        rest,
+        "mfnn serve-sim",
+        "Simulate multi-tenant batched inference serving over the board pool",
+    )?;
+    let requests: usize = args.parse_or("requests", 256).map_err(|e| e.to_string())?;
+    let seed: u64 = args.parse_or("seed", 0).map_err(|e| e.to_string())?;
+    let nets: usize = args.parse_or("nets", 3).map_err(|e| e.to_string())?;
+    let max_batch: usize = args.parse_or("max-batch", 8).map_err(|e| e.to_string())?;
+    if nets == 0 {
+        return Err("need at least one net".into());
+    }
+    let cfg = mfnn::ServeConfig {
+        boards: args.parse_or("boards", 2).map_err(|e| e.to_string())?,
+        device: args.str_or("device", "XC7S75-2"),
+        max_batch,
+        max_wait_cycles: args.parse_or("max-wait", 64).map_err(|e| e.to_string())?,
+        queue_cap: args.parse_or("queue-cap", 1024).map_err(|e| e.to_string())?,
+    };
+    let rate: u64 = args.parse_or("rate", 8).map_err(|e| e.to_string())?;
+    let compiler = Compiler::new();
+    let fleet = serve_sim_nets(&compiler, nets, max_batch, seed)?;
+    let fixed = FixedSpec::q(10).saturating();
+    let in_dims: Vec<usize> =
+        fleet.iter().map(|(a, _, _)| a.spec().expect("net artifact").input_dim()).collect();
+    let workload = mfnn::serve::open_loop(requests, seed, rate, &in_dims, fixed);
+
+    // Run the whole workload against a fresh server; returns the report
+    // plus (accepted, rejected) submit counts.
+    let run = || -> Result<(mfnn::serve::ServeReport, usize, usize), String> {
+        let mut server = mfnn::Server::open(cfg.clone()).map_err(|e| e.to_string())?;
+        for (artifact, w, b) in &fleet {
+            server.register(Arc::clone(artifact), w, b).map_err(|e| e.to_string())?;
+        }
+        let (mut accepted, mut rejected) = (0usize, 0usize);
+        for q in &workload {
+            match server.submit_at(q.at, q.net, &q.row) {
+                Ok(_) => accepted += 1,
+                Err(mfnn::serve::ServeError::Overloaded { .. }) => rejected += 1,
+                Err(e) => return Err(e.to_string()),
+            }
+        }
+        server.drain().map_err(|e| e.to_string())?;
+        Ok((server.report(), accepted, rejected))
+    };
+
+    let (report, accepted, rejected) = run()?;
+    if args.flag("check-determinism") {
+        let (again, _, _) = run()?;
+        if again.to_json() != report.to_json() {
+            return Err(
+                "nondeterministic serving metrics: two identical-seed runs disagree".into()
+            );
+        }
+        println!("determinism check: two identical-seed runs produced identical metrics ✓");
+    }
+    print!("{}", report.render());
+    let out = args.str_or("metrics-out", "serve_metrics.json");
+    std::fs::write(&out, report.to_json()).map_err(|e| format!("{out}: {e}"))?;
+    println!("wrote {out}");
+    if rejected > 0 {
+        return Err(format!("{rejected} request(s) rejected (Overloaded); raise --queue-cap"));
+    }
+    let completed = report.total_completed() as usize;
+    if completed != accepted {
+        return Err(format!("dropped/hung requests: accepted {accepted}, completed {completed}"));
+    }
+    println!("{completed}/{accepted} requests completed, 0 dropped ✓");
+    Ok(())
 }
 
 // --------------------------------------------------------------------- fuzz

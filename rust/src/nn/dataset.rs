@@ -21,6 +21,23 @@ pub fn chunk_ranges(len: usize, batch: usize) -> impl Iterator<Item = Range<usiz
     (0..len).step_by(batch).map(move |off| off..(off + batch).min(len))
 }
 
+/// Flatten request `rows` (each exactly `dim` lanes) into a row-major
+/// `pad_to × dim` matrix, zero-padding the tail rows — the serving
+/// micro-batcher's batch-assembly step, producing the same row-major
+/// layout [`Dataset::encode_rows`] emits for evaluation chunks (one
+/// assembly rule for every batched-forward path). Padding is safe:
+/// forward lanes are per-row, so zero rows never perturb real rows.
+pub fn flatten_rows(rows: &[&[i16]], dim: usize, pad_to: usize) -> Vec<i16> {
+    assert!(rows.len() <= pad_to, "{} rows exceed bucket {pad_to}", rows.len());
+    let mut q = Vec::with_capacity(pad_to * dim);
+    for r in rows {
+        assert_eq!(r.len(), dim, "row has {} lanes, expected {dim}", r.len());
+        q.extend_from_slice(r);
+    }
+    q.resize(pad_to * dim, 0);
+    q
+}
+
 /// A labelled dataset with one-hot targets.
 #[derive(Debug, Clone)]
 pub struct Dataset {
@@ -272,6 +289,24 @@ mod tests {
         let (bx, _) = d.batch(&[2, 3, 4]);
         let via_batch: Vec<i16> = bx.iter().map(|&v| f.from_f64(v)).collect();
         assert_eq!(d.encode_rows(2..5, f), via_batch);
+    }
+
+    #[test]
+    fn flatten_rows_matches_encode_rows_and_pads_with_zeros() {
+        let d = xor(6, 5);
+        let f = FixedSpec::q(10);
+        let r0 = d.encode_rows(0..1, f);
+        let r1 = d.encode_rows(1..2, f);
+        let r2 = d.encode_rows(2..3, f);
+        // same layout as one encode_rows call over the contiguous range
+        let flat = flatten_rows(&[&r0, &r1, &r2], 2, 3);
+        assert_eq!(flat, d.encode_rows(0..3, f));
+        // padding appends zero rows only
+        let padded = flatten_rows(&[&r0, &r1, &r2], 2, 5);
+        assert_eq!(padded[..6], flat[..]);
+        assert!(padded[6..].iter().all(|&v| v == 0));
+        assert_eq!(padded.len(), 10);
+        assert_eq!(flatten_rows(&[], 2, 2), vec![0i16; 4]);
     }
 
     #[test]

@@ -161,6 +161,27 @@ fn declare_net(ctx: &mut Ctx, spec: &MlpSpec, batch: usize, train: bool) -> Lowe
     }
 }
 
+/// The canonical batch ladder for batch-parametric forward compilation:
+/// powers of two `1, 2, 4, …` strictly below `max_batch`, then
+/// `max_batch` itself as the top bucket. Every bucket is a valid
+/// [`lower_forward`] batch; the serving runtime rounds each micro-batch
+/// up to the smallest bucket that fits, so one net compiles a small
+/// number of forward plans instead of one per observed batch size.
+pub fn forward_buckets(max_batch: usize) -> Vec<usize> {
+    assert!(
+        max_batch >= 1 && max_batch <= COLUMN_LEN,
+        "max_batch {max_batch} out of range 1..={COLUMN_LEN}"
+    );
+    let mut out = Vec::new();
+    let mut b = 1;
+    while b < max_batch {
+        out.push(b);
+        b *= 2;
+    }
+    out.push(max_batch);
+    out
+}
+
 /// Split `0..n` into segments of at most [`COLUMN_LEN`] lanes.
 fn segments(n: usize) -> Vec<(usize, usize)> {
     let mut out = Vec::new();
@@ -715,5 +736,28 @@ mod tests {
         let s = spec(&[2, 1]);
         assert!(matches!(lower_forward(&s, 0), Err(LowerError::BadBatch(0))));
         assert!(matches!(lower_forward(&s, 513), Err(LowerError::BadBatch(513))));
+    }
+
+    #[test]
+    fn forward_buckets_cover_every_micro_batch_size() {
+        assert_eq!(forward_buckets(1), vec![1]);
+        assert_eq!(forward_buckets(8), vec![1, 2, 4, 8]);
+        assert_eq!(forward_buckets(32), vec![1, 2, 4, 8, 16, 32]);
+        // non-power-of-two tops keep the full power-of-two prefix
+        assert_eq!(forward_buckets(12), vec![1, 2, 4, 8, 12]);
+        // every rows ∈ 1..=max has a bucket ≥ rows, and buckets lower
+        for max in [1usize, 3, 8, 17, 32] {
+            let ladder = forward_buckets(max);
+            let s = spec(&[2, 3]);
+            for &b in &ladder {
+                lower_forward(&s, b).unwrap();
+            }
+            for rows in 1..=max {
+                assert!(
+                    ladder.iter().any(|&b| b >= rows),
+                    "no bucket for {rows} rows in {ladder:?}"
+                );
+            }
+        }
     }
 }

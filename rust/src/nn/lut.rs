@@ -124,7 +124,13 @@ pub struct ActLut {
 impl ActLut {
     /// Build a table for `kind` (or its derivative) under the given
     /// fixed-point format, addressing mode, and shift.
-    pub fn build(kind: ActKind, deriv: bool, fixed: FixedSpec, mode: AddrMode, shift: u32) -> ActLut {
+    pub fn build(
+        kind: ActKind,
+        deriv: bool,
+        fixed: FixedSpec,
+        mode: AddrMode,
+        shift: u32,
+    ) -> ActLut {
         assert!(shift <= 15, "shift {shift} out of range");
         let mut table = vec![0i16; LUT_SIZE];
         for (i, slot) in table.iter_mut().enumerate() {
@@ -161,7 +167,9 @@ impl ActLut {
         let shifted = (x as i32) >> self.shift;
         match self.mode {
             AddrMode::Wrap => (shifted as u32 as usize) & (LUT_SIZE - 1),
-            AddrMode::Clamp => (shifted + LUT_SIZE as i32 / 2).clamp(0, LUT_SIZE as i32 - 1) as usize,
+            AddrMode::Clamp => {
+                (shifted + LUT_SIZE as i32 / 2).clamp(0, LUT_SIZE as i32 - 1) as usize
+            }
         }
     }
 

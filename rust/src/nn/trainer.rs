@@ -17,6 +17,7 @@ use super::mlp::MlpSpec;
 use crate::hw::machine::MachineError;
 use crate::hw::{FpgaDevice, MatrixMachine, RunStats};
 use crate::util::Rng;
+use std::collections::HashMap;
 use thiserror::Error;
 
 /// Trainer configuration.
@@ -79,6 +80,15 @@ pub struct TrainReport {
     pub steps: usize,
 }
 
+/// One right-sized forward instance of the trainer's batch ladder: the
+/// forward program lowered at exactly `lowered.batch` rows plus the
+/// machine executing it, with the parameter version it last synced.
+struct FwdVariant {
+    lowered: LoweredMlp,
+    machine: MatrixMachine,
+    synced: u64,
+}
+
 /// Drives one MLP's training + evaluation on one simulated board.
 pub struct Trainer {
     /// Network spec.
@@ -91,16 +101,19 @@ pub struct Trainer {
     fwd: LoweredMlp,
     train_machine: MatrixMachine,
     fwd_machine: MatrixMachine,
-    /// Lazily-lowered forward program for the final partial evaluation
-    /// chunk (`(rows, program, machine)`): instead of padding the last
-    /// chunk up to `cfg.batch` and paying full-batch compute, a
-    /// right-sized plan runs exactly the remaining rows (perf pass,
-    /// DESIGN.md §Perf).
-    fwd_rem: Option<(usize, LoweredMlp, MatrixMachine)>,
-    /// True when the forward machine's parameter copies lag the training
-    /// machine: `infer`/`evaluate` refresh them only then, so a
-    /// steady-state serving loop of `infer` calls copies nothing.
-    fwd_stale: bool,
+    /// Lazily-lowered forward ladder for row counts other than
+    /// `cfg.batch` (the final partial evaluation chunk and the serving
+    /// runtime's variable-size `InferChunk` micro-batches): instead of
+    /// padding up to `cfg.batch` and paying full-batch compute, a
+    /// right-sized plan runs exactly the requested rows (perf pass,
+    /// DESIGN.md §Perf/§Serving).
+    fwd_variants: HashMap<usize, FwdVariant>,
+    /// Bumped whenever the on-device parameters change; forward machines
+    /// record the version they last copied, so a steady-state serving
+    /// loop of `infer`/`infer_rows` calls copies nothing.
+    params_version: u64,
+    /// Version the primary forward machine's parameter copies are at.
+    fwd_synced: u64,
     rng: Rng,
 }
 
@@ -148,8 +161,9 @@ impl Trainer {
             fwd,
             train_machine,
             fwd_machine,
-            fwd_rem: None,
-            fwd_stale: true,
+            fwd_variants: HashMap::new(),
+            params_version: 1,
+            fwd_synced: 0,
             rng: Rng::new(seed),
         }
     }
@@ -184,7 +198,7 @@ impl Trainer {
             self.train_machine.write_id(self.train.weights[l], &qw[l])?;
             self.train_machine.write_id(self.train.biases[l], &qb[l])?;
         }
-        self.fwd_stale = true;
+        self.params_version += 1;
         Ok(())
     }
 
@@ -232,17 +246,17 @@ impl Trainer {
         &mut self.train_machine
     }
 
-    /// Mark the forward machine's parameter copies stale (the session
+    /// Mark the forward machines' parameter copies stale (the session
     /// layer calls this after writing a weight/bias tensor through a
     /// handle, which bypasses [`Trainer::set_weights`]).
     pub(crate) fn mark_params_dirty(&mut self) {
-        self.fwd_stale = true;
+        self.params_version += 1;
     }
 
     /// Execute the training program once on the currently bound tensors
     /// (the session layer's raw `step`; parameters mutate on-device).
     pub(crate) fn step_primary(&mut self) -> RunStats {
-        self.fwd_stale = true;
+        self.params_version += 1;
         self.train_machine.execute()
     }
 
@@ -295,7 +309,7 @@ impl Trainer {
             }
         }
         if self.cfg.steps > 0 {
-            self.fwd_stale = true;
+            self.params_version += 1;
         }
         Ok(TrainReport {
             curve,
@@ -308,13 +322,13 @@ impl Trainer {
     /// Refresh the forward machine's parameters from the training
     /// machine if they are stale.
     fn sync_fwd_params(&mut self) -> Result<(), TrainError> {
-        if self.fwd_stale {
+        if self.fwd_synced != self.params_version {
             let (qw, qb) = self.weights();
             for l in 0..self.spec.layers.len() {
                 self.fwd_machine.write_id(self.fwd.weights[l], &qw[l])?;
                 self.fwd_machine.write_id(self.fwd.biases[l], &qb[l])?;
             }
-            self.fwd_stale = false;
+            self.fwd_synced = self.params_version;
         }
         Ok(())
     }
@@ -330,49 +344,61 @@ impl Trainer {
         Ok((self.fwd_machine.read_id(self.fwd.out).to_vec(), stats))
     }
 
+    /// One forward pass over a quantised `rows × input_dim` micro-batch:
+    /// `rows == cfg.batch` runs the primary forward machine; any other
+    /// row count runs a lazily-lowered right-sized variant from the
+    /// forward ladder (the serving runtime's `InferChunk` path and the
+    /// partial evaluation chunk both land here). Variant parameters are
+    /// refreshed only when they changed since the variant's last pass.
+    pub fn infer_rows(
+        &mut self,
+        rows: usize,
+        qx: &[i16],
+    ) -> Result<(Vec<i16>, RunStats), TrainError> {
+        if rows == self.cfg.batch {
+            return self.infer(qx);
+        }
+        if let std::collections::hash_map::Entry::Vacant(slot) = self.fwd_variants.entry(rows) {
+            let lowered = lower_forward(&self.spec, rows)?;
+            let machine = MatrixMachine::new(self.device, &lowered.program)?;
+            slot.insert(FwdVariant { lowered, machine, synced: 0 });
+        }
+        if self.fwd_variants[&rows].synced != self.params_version {
+            let (qw, qb) = self.weights();
+            let version = self.params_version;
+            let v = self.fwd_variants.get_mut(&rows).expect("variant built above");
+            for l in 0..qw.len() {
+                v.machine.write_id(v.lowered.weights[l], &qw[l])?;
+                v.machine.write_id(v.lowered.biases[l], &qb[l])?;
+            }
+            v.synced = version;
+        }
+        let v = self.fwd_variants.get_mut(&rows).expect("variant built above");
+        v.machine.write_id(v.lowered.x, qx)?;
+        let stats = v.machine.execute();
+        Ok((v.machine.read_id(v.lowered.out).to_vec(), stats))
+    }
+
     /// Classification accuracy of the current weights over `ds` (uses the
     /// forward program — the paper's "testing" phase).
     ///
     /// Chunking comes from [`dataset::chunk_ranges`] (shared with the
-    /// session layer); the final partial chunk (when
-    /// `ds.len() % batch != 0`) runs on a right-sized forward plan
-    /// instead of being padded to the full batch, so no compute (or cycle
-    /// charge) is spent on padding rows.
+    /// session layer and the serving micro-batcher — one chunking rule
+    /// for every batched-forward path); the final partial chunk (when
+    /// `ds.len() % batch != 0`) runs on a right-sized forward-ladder
+    /// variant instead of being padded to the full batch, so no compute
+    /// (or cycle charge) is spent on padding rows.
     pub fn evaluate(&mut self, ds: &Dataset) -> Result<(f64, RunStats), TrainError> {
         self.check_dims(ds)?;
         let f = self.spec.fixed;
         let batch = self.cfg.batch;
-        // copy current weights into the forward machine (when stale) and
-        // the partial-chunk machine (every pass — it may be rebuilt)
-        self.sync_fwd_params()?;
-        let rem = ds.len() % batch;
-        if rem != 0 {
-            if self.fwd_rem.as_ref().is_none_or(|(rows, _, _)| *rows != rem) {
-                let lowered = lower_forward(&self.spec, rem)?;
-                let machine = MatrixMachine::new(self.device, &lowered.program)?;
-                self.fwd_rem = Some((rem, lowered, machine));
-            }
-            let (qw, qb) = self.weights();
-            let (_, lowered, machine) = self.fwd_rem.as_mut().expect("just built");
-            for l in 0..qw.len() {
-                machine.write_id(lowered.weights[l], &qw[l])?;
-                machine.write_id(lowered.biases[l], &qb[l])?;
-            }
-        }
         let mut stats = RunStats::default();
         let mut correct = 0usize;
         for r in dataset::chunk_ranges(ds.len(), batch) {
             let qx = ds.encode_rows(r.clone(), f);
-            let (machine, lowered) = if r.len() == batch {
-                (&mut self.fwd_machine, &self.fwd)
-            } else {
-                let (_, lowered, machine) =
-                    self.fwd_rem.as_mut().expect("partial-chunk machine built above");
-                (machine, &*lowered)
-            };
-            machine.write_id(lowered.x, &qx)?;
-            stats.add(&machine.execute());
-            correct += ds.count_correct(r, machine.read_id(lowered.out), f);
+            let (out, st) = self.infer_rows(r.len(), &qx)?;
+            stats.add(&st);
+            correct += ds.count_correct(r, &out, f);
         }
         Ok((correct as f64 / ds.len().max(1) as f64, stats))
     }
@@ -505,6 +531,31 @@ mod tests {
             o2.iter().all(|&v| v == 0),
             "stale parameters served after set_weights: {o2:?}"
         );
+    }
+
+    #[test]
+    fn infer_rows_matches_primary_batch_bit_exactly() {
+        // A 4-row batch through the primary forward machine must equal
+        // the same rows served as 3-row + 1-row ladder variants: forward
+        // lanes are per-row, so micro-batch size never changes a bit.
+        let s = spec(&[2, 6, 2]);
+        let cfg = TrainConfig { batch: 4, lr: 1.0 / 128.0, steps: 10, seed: 21, log_every: 5 };
+        let ds = dataset::xor(64, 6);
+        let mut t = Trainer::build(s.clone(), FpgaDevice::selected(), cfg).unwrap();
+        t.train(&ds).unwrap();
+        let f = s.fixed;
+        let qx = ds.encode_rows(0..4, f);
+        let (full, _) = t.infer(&qx).unwrap();
+        let (head, _) = t.infer_rows(3, &ds.encode_rows(0..3, f)).unwrap();
+        let (tail, _) = t.infer_rows(1, &ds.encode_rows(3..4, f)).unwrap();
+        assert_eq!([head, tail].concat(), full);
+        // ladder variants must observe weight updates immediately
+        let zw: Vec<Vec<i16>> =
+            s.layers.iter().map(|l| vec![0i16; l.inputs * l.outputs]).collect();
+        let zb: Vec<Vec<i16>> = s.layers.iter().map(|l| vec![0i16; l.outputs]).collect();
+        t.set_weights(&zw, &zb).unwrap();
+        let (o, _) = t.infer_rows(3, &ds.encode_rows(0..3, f)).unwrap();
+        assert!(o.iter().all(|&v| v == 0), "stale ladder variant served: {o:?}");
     }
 
     #[test]

@@ -85,15 +85,114 @@ impl FpgaPart {
 
 /// Table 8's nine candidate parts.
 pub const CATALOG: [FpgaPart; 9] = [
-    FpgaPart { name: "XC7S50-1", io_pins: 250, ddr_channels: 2, ddr_clock_mhz: 333.33, cost_cad: 75.94, fpga_clock_mhz: 100.0, luts: 32_600, ffs: 65_200, bram18: 150, dsps: 120 },
-    FpgaPart { name: "XC7S75-1", io_pins: 400, ddr_channels: 4, ddr_clock_mhz: 333.33, cost_cad: 134.46, fpga_clock_mhz: 100.0, luts: 48_000, ffs: 96_000, bram18: 180, dsps: 140 },
-    FpgaPart { name: "XC7S100-1", io_pins: 400, ddr_channels: 4, ddr_clock_mhz: 333.33, cost_cad: 163.73, fpga_clock_mhz: 100.0, luts: 64_000, ffs: 128_000, bram18: 240, dsps: 160 },
-    FpgaPart { name: "XC7S50-2", io_pins: 250, ddr_channels: 2, ddr_clock_mhz: 400.0, cost_cad: 95.11, fpga_clock_mhz: 100.0, luts: 32_600, ffs: 65_200, bram18: 150, dsps: 120 },
-    FpgaPart { name: "XC7S75-2", io_pins: 400, ddr_channels: 4, ddr_clock_mhz: 400.0, cost_cad: 147.95, fpga_clock_mhz: 100.0, luts: 48_000, ffs: 96_000, bram18: 180, dsps: 140 },
-    FpgaPart { name: "XC7S100-2", io_pins: 400, ddr_channels: 4, ddr_clock_mhz: 400.0, cost_cad: 198.12, fpga_clock_mhz: 100.0, luts: 64_000, ffs: 128_000, bram18: 240, dsps: 160 },
-    FpgaPart { name: "XC7A75T-1", io_pins: 300, ddr_channels: 3, ddr_clock_mhz: 333.33, cost_cad: 213.27, fpga_clock_mhz: 100.0, luts: 47_200, ffs: 94_400, bram18: 210, dsps: 180 },
-    FpgaPart { name: "XC7A100T-1", io_pins: 300, ddr_channels: 3, ddr_clock_mhz: 333.33, cost_cad: 234.6, fpga_clock_mhz: 100.0, luts: 63_400, ffs: 126_800, bram18: 270, dsps: 240 },
-    FpgaPart { name: "XC7A200T-1", io_pins: 500, ddr_channels: 5, ddr_clock_mhz: 333.33, cost_cad: 381.95, fpga_clock_mhz: 100.0, luts: 134_600, ffs: 269_200, bram18: 730, dsps: 740 },
+    FpgaPart {
+        name: "XC7S50-1",
+        io_pins: 250,
+        ddr_channels: 2,
+        ddr_clock_mhz: 333.33,
+        cost_cad: 75.94,
+        fpga_clock_mhz: 100.0,
+        luts: 32_600,
+        ffs: 65_200,
+        bram18: 150,
+        dsps: 120,
+    },
+    FpgaPart {
+        name: "XC7S75-1",
+        io_pins: 400,
+        ddr_channels: 4,
+        ddr_clock_mhz: 333.33,
+        cost_cad: 134.46,
+        fpga_clock_mhz: 100.0,
+        luts: 48_000,
+        ffs: 96_000,
+        bram18: 180,
+        dsps: 140,
+    },
+    FpgaPart {
+        name: "XC7S100-1",
+        io_pins: 400,
+        ddr_channels: 4,
+        ddr_clock_mhz: 333.33,
+        cost_cad: 163.73,
+        fpga_clock_mhz: 100.0,
+        luts: 64_000,
+        ffs: 128_000,
+        bram18: 240,
+        dsps: 160,
+    },
+    FpgaPart {
+        name: "XC7S50-2",
+        io_pins: 250,
+        ddr_channels: 2,
+        ddr_clock_mhz: 400.0,
+        cost_cad: 95.11,
+        fpga_clock_mhz: 100.0,
+        luts: 32_600,
+        ffs: 65_200,
+        bram18: 150,
+        dsps: 120,
+    },
+    FpgaPart {
+        name: "XC7S75-2",
+        io_pins: 400,
+        ddr_channels: 4,
+        ddr_clock_mhz: 400.0,
+        cost_cad: 147.95,
+        fpga_clock_mhz: 100.0,
+        luts: 48_000,
+        ffs: 96_000,
+        bram18: 180,
+        dsps: 140,
+    },
+    FpgaPart {
+        name: "XC7S100-2",
+        io_pins: 400,
+        ddr_channels: 4,
+        ddr_clock_mhz: 400.0,
+        cost_cad: 198.12,
+        fpga_clock_mhz: 100.0,
+        luts: 64_000,
+        ffs: 128_000,
+        bram18: 240,
+        dsps: 160,
+    },
+    FpgaPart {
+        name: "XC7A75T-1",
+        io_pins: 300,
+        ddr_channels: 3,
+        ddr_clock_mhz: 333.33,
+        cost_cad: 213.27,
+        fpga_clock_mhz: 100.0,
+        luts: 47_200,
+        ffs: 94_400,
+        bram18: 210,
+        dsps: 180,
+    },
+    FpgaPart {
+        name: "XC7A100T-1",
+        io_pins: 300,
+        ddr_channels: 3,
+        ddr_clock_mhz: 333.33,
+        cost_cad: 234.6,
+        fpga_clock_mhz: 100.0,
+        luts: 63_400,
+        ffs: 126_800,
+        bram18: 270,
+        dsps: 240,
+    },
+    FpgaPart {
+        name: "XC7A200T-1",
+        io_pins: 500,
+        ddr_channels: 5,
+        ddr_clock_mhz: 333.33,
+        cost_cad: 381.95,
+        fpga_clock_mhz: 100.0,
+        luts: 134_600,
+        ffs: 269_200,
+        bram18: 730,
+        dsps: 740,
+    },
 ];
 
 #[cfg(test)]

@@ -1,0 +1,167 @@
+//! The dynamic micro-batcher: one bounded FIFO queue per registered
+//! net, flushed into dispatchable micro-batches on either of two
+//! triggers (whichever fires first, both in **simulated** cycles so the
+//! whole serving runtime is deterministic):
+//!
+//! * **fill** — the queue reaches `max_batch` waiting requests;
+//! * **deadline** — the oldest waiting request has waited
+//!   `max_wait_cycles` (a partial batch flushes rather than starving).
+//!
+//! Batch splitting reuses [`dataset::chunk_ranges`] — the same chunking
+//! rule `Session::evaluate` and the trainer use — so every batched
+//! forward path in the codebase cuts batches identically.
+
+use crate::nn::dataset;
+use std::collections::VecDeque;
+
+/// A request waiting in a net's queue.
+#[derive(Debug, Clone)]
+pub struct Pending {
+    /// Request id (server-assigned, monotonic).
+    pub id: u64,
+    /// Quantised input row (`in_dim` lanes).
+    pub row: Vec<i16>,
+    /// Simulated cycle the request was admitted.
+    pub arrival: u64,
+}
+
+/// Per-net micro-batcher state.
+#[derive(Debug)]
+pub struct MicroBatcher {
+    max_batch: usize,
+    max_wait_cycles: u64,
+    cap: usize,
+    queue: VecDeque<Pending>,
+}
+
+impl MicroBatcher {
+    /// New empty batcher. `max_batch` is the fill-flush threshold,
+    /// `max_wait_cycles` the deadline-flush latency bound, `cap` the
+    /// admission-control queue capacity.
+    pub fn new(max_batch: usize, max_wait_cycles: u64, cap: usize) -> MicroBatcher {
+        assert!(max_batch >= 1, "max_batch must be positive");
+        assert!(cap >= 1, "queue capacity must be positive");
+        MicroBatcher { max_batch, max_wait_cycles, cap, queue: VecDeque::new() }
+    }
+
+    /// Requests currently waiting.
+    pub fn depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admission: enqueue `p`, or refuse with the current depth when the
+    /// queue is at capacity (the server turns this into the typed
+    /// `Overloaded` rejection — requests are never silently dropped and
+    /// the queue never grows without bound).
+    pub fn push(&mut self, p: Pending) -> Result<(), usize> {
+        if self.queue.len() >= self.cap {
+            return Err(self.queue.len());
+        }
+        self.queue.push_back(p);
+        Ok(())
+    }
+
+    /// Simulated cycle at which the oldest waiting request forces a
+    /// deadline flush (`None` when the queue is empty). This is the
+    /// batcher's contribution to the server's next-event computation.
+    pub fn deadline(&self) -> Option<u64> {
+        self.queue.front().map(|p| p.arrival + self.max_wait_cycles)
+    }
+
+    /// Pop every batch that is due at simulated cycle `now`: full
+    /// `max_batch` groups always flush; the partial tail flushes only
+    /// when its deadline has passed. Returned batches preserve FIFO
+    /// order and are split by [`dataset::chunk_ranges`].
+    pub fn take_ready(&mut self, now: u64) -> Vec<Vec<Pending>> {
+        let full = self.queue.len() - self.queue.len() % self.max_batch;
+        let take = if self.deadline().is_some_and(|d| d <= now) {
+            self.queue.len()
+        } else {
+            full
+        };
+        if take == 0 {
+            return Vec::new();
+        }
+        let mut rows: Vec<Pending> = self.queue.drain(..take).collect();
+        let mut out = Vec::new();
+        for r in dataset::chunk_ranges(take, self.max_batch) {
+            out.push(rows.drain(..r.len()).collect());
+        }
+        out
+    }
+}
+
+/// The smallest ladder bucket that fits `rows` requests (`None` when
+/// `rows` exceeds every bucket — never happens for server batches, whose
+/// size is capped at `max_batch`, the ladder's top bucket).
+pub fn bucket_for(rows: usize, ladder: &[usize]) -> Option<usize> {
+    ladder.iter().copied().filter(|&b| b >= rows).min()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(id: u64, arrival: u64) -> Pending {
+        Pending { id, row: vec![0; 2], arrival }
+    }
+
+    #[test]
+    fn fill_flush_pops_full_batches_in_fifo_order() {
+        let mut b = MicroBatcher::new(4, 100, 64);
+        for i in 0..9 {
+            b.push(p(i, 0)).unwrap();
+        }
+        // two full batches flush immediately; the 1-row tail waits
+        let ready = b.take_ready(0);
+        assert_eq!(ready.len(), 2);
+        assert_eq!(ready[0].iter().map(|x| x.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(ready[1].iter().map(|x| x.id).collect::<Vec<_>>(), vec![4, 5, 6, 7]);
+        assert_eq!(b.depth(), 1);
+        // before the deadline nothing more flushes…
+        assert!(b.take_ready(99).is_empty());
+        // …at the deadline the partial tail flushes
+        let tail = b.take_ready(100);
+        assert_eq!(tail.len(), 1);
+        assert_eq!(tail[0][0].id, 8);
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn deadline_tracks_the_oldest_request() {
+        let mut b = MicroBatcher::new(8, 10, 64);
+        assert_eq!(b.deadline(), None);
+        b.push(p(0, 5)).unwrap();
+        b.push(p(1, 9)).unwrap();
+        assert_eq!(b.deadline(), Some(15));
+        assert_eq!(b.take_ready(15).len(), 1);
+        assert_eq!(b.deadline(), None);
+    }
+
+    #[test]
+    fn admission_control_refuses_at_capacity() {
+        let mut b = MicroBatcher::new(8, 10, 2);
+        b.push(p(0, 0)).unwrap();
+        b.push(p(1, 0)).unwrap();
+        assert_eq!(b.push(p(2, 0)), Err(2));
+        assert_eq!(b.depth(), 2, "refused request must not be enqueued");
+    }
+
+    #[test]
+    fn bucket_for_picks_the_smallest_fitting_bucket() {
+        let ladder = [1usize, 2, 4, 8];
+        assert_eq!(bucket_for(1, &ladder), Some(1));
+        assert_eq!(bucket_for(3, &ladder), Some(4));
+        assert_eq!(bucket_for(8, &ladder), Some(8));
+        assert_eq!(bucket_for(9, &ladder), None);
+    }
+
+    #[test]
+    fn zero_wait_flushes_any_nonempty_queue() {
+        let mut b = MicroBatcher::new(8, 0, 64);
+        b.push(p(0, 3)).unwrap();
+        let ready = b.take_ready(3);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].len(), 1);
+    }
+}

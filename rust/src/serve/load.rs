@@ -1,0 +1,129 @@
+//! Synthetic open-loop load generation for `mfnn serve-sim` and the
+//! serving bench: a seeded arrival process (uniform inter-arrival gaps
+//! with the requested mean, in simulated cycles), a uniform net mix, and
+//! random quantised input rows. Everything derives from one seed, so the
+//! same seed always produces the same workload — the determinism the
+//! serve-sim acceptance check relies on.
+
+use crate::fixed::FixedSpec;
+use crate::nn::mlp::MlpSpec;
+use crate::util::Rng;
+
+/// One generated request: which net, when (simulated cycle), and the
+/// quantised input row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SynthRequest {
+    /// Target net (index into the server's registration order).
+    pub net: usize,
+    /// Arrival cycle (non-decreasing across the returned sequence).
+    pub at: u64,
+    /// Quantised input row (`in_dims[net]` lanes, values in `[-1, 1]`).
+    pub row: Vec<i16>,
+}
+
+/// Generate `requests` open-loop requests against nets with the given
+/// input dimensions. `mean_gap_cycles` is the mean inter-arrival gap
+/// (gaps are uniform over `0..=2·mean`, so the process neither bursts
+/// unboundedly nor locks to a fixed cadence).
+pub fn open_loop(
+    requests: usize,
+    seed: u64,
+    mean_gap_cycles: u64,
+    in_dims: &[usize],
+    fixed: FixedSpec,
+) -> Vec<SynthRequest> {
+    assert!(!in_dims.is_empty(), "open_loop needs at least one net");
+    let mut r = Rng::new(seed);
+    let mut at = 0u64;
+    (0..requests)
+        .map(|_| {
+            at += r.gen_range(2 * mean_gap_cycles + 1);
+            let net = r.gen_range(in_dims.len() as u64) as usize;
+            let row = (0..in_dims[net])
+                .map(|_| fixed.from_f64(r.gen_f64() * 2.0 - 1.0))
+                .collect();
+            SynthRequest { net, at, row }
+        })
+        .collect()
+}
+
+/// Seeded random quantised parameters for `spec`: weights uniform in
+/// `±1/fan_in`, biases in `±0.25`, quantised in the spec's fixed
+/// format — the one parameter generator the serve-sim CLI, the serving
+/// bench, and the serving tests share (one distribution, one
+/// quantisation rule, everywhere).
+pub fn seeded_params(spec: &MlpSpec, seed: u64) -> (Vec<Vec<i16>>, Vec<Vec<i16>>) {
+    let f = spec.fixed;
+    let mut r = Rng::new(seed);
+    let mut w: Vec<Vec<i16>> = Vec::with_capacity(spec.layers.len());
+    let mut b: Vec<Vec<i16>> = Vec::with_capacity(spec.layers.len());
+    for layer in &spec.layers {
+        let scale = 1.0 / layer.inputs as f64;
+        w.push(
+            (0..layer.inputs * layer.outputs)
+                .map(|_| f.from_f64((r.gen_f64() * 2.0 - 1.0) * scale))
+                .collect(),
+        );
+        b.push(
+            (0..layer.outputs)
+                .map(|_| f.from_f64((r.gen_f64() * 2.0 - 1.0) * 0.25))
+                .collect(),
+        );
+    }
+    (w, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_params_are_deterministic_and_shaped() {
+        use crate::nn::lut::ActKind;
+        use crate::nn::mlp::LutParams;
+        let f = FixedSpec::q(10).saturating();
+        let spec = MlpSpec::from_dims(
+            "p",
+            &[3, 6, 2],
+            ActKind::Relu,
+            ActKind::Identity,
+            f,
+            LutParams::training(f),
+        )
+        .unwrap();
+        let (w, b) = seeded_params(&spec, 9);
+        assert_eq!(seeded_params(&spec, 9), (w.clone(), b.clone()));
+        assert_ne!(seeded_params(&spec, 10), (w.clone(), b.clone()));
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].len(), 3 * 6);
+        assert_eq!(w[1].len(), 6 * 2);
+        assert_eq!(b[0].len(), 6);
+        assert_eq!(b[1].len(), 2);
+    }
+
+    #[test]
+    fn workload_is_deterministic_and_well_formed() {
+        let f = FixedSpec::q(10).saturating();
+        let a = open_loop(64, 7, 5, &[4, 6, 3], f);
+        let b = open_loop(64, 7, 5, &[4, 6, 3], f);
+        assert_eq!(a, b, "same seed must regenerate the same workload");
+        assert_eq!(a.len(), 64);
+        let mut last = 0u64;
+        let mut hit = [false; 3];
+        for q in &a {
+            assert!(q.at >= last, "arrivals must be non-decreasing");
+            last = q.at;
+            assert_eq!(q.row.len(), [4usize, 6, 3][q.net]);
+            hit[q.net] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "64 requests should hit all 3 nets");
+        assert_ne!(a, open_loop(64, 8, 5, &[4, 6, 3], f), "seed must matter");
+    }
+
+    #[test]
+    fn zero_gap_is_a_burst_at_cycle_zero() {
+        let f = FixedSpec::q(10);
+        let a = open_loop(8, 1, 0, &[2], f);
+        assert!(a.iter().all(|q| q.at == 0));
+    }
+}

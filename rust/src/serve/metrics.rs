@@ -1,0 +1,277 @@
+//! Per-net and per-board serving metrics, all in **simulated** cycles:
+//! queue depth, batch-fill ratio, p50/p99 request latency, and
+//! throughput derived from the simulated makespan. Snapshots render as a
+//! table (`mfnn serve-sim`) and serialise to deterministic JSON (the CI
+//! artifact and the `BENCH_serving.json` notes source).
+
+use crate::bench::json_str;
+use crate::hw::FpgaDevice;
+use crate::report::{f as fmt_f, Table};
+
+/// Percentile of an already-sorted sample (`0` when empty): the value
+/// at rank `⌊p/100 · (n−1)⌋`, so `p50` of an even-sized sample is the
+/// lower median (never above it).
+fn sorted_percentile(s: &[u64], p: f64) -> u64 {
+    if s.is_empty() {
+        return 0;
+    }
+    let idx = ((p / 100.0) * (s.len() as f64 - 1.0)).floor() as usize;
+    s[idx.min(s.len() - 1)]
+}
+
+/// Nearest-rank percentile of `xs` (`0` when empty); sorts a copy.
+/// Report rendering uses [`NetMetrics::latency_quantiles`] instead,
+/// which sorts once for all the quantiles it reads.
+pub fn percentile(xs: &[u64], p: f64) -> u64 {
+    let mut s = xs.to_vec();
+    s.sort_unstable();
+    sorted_percentile(&s, p)
+}
+
+/// Per-net serving counters and latency distribution.
+#[derive(Debug, Clone, Default)]
+pub struct NetMetrics {
+    /// Net name (artifact name).
+    pub name: String,
+    /// Requests admitted.
+    pub submitted: u64,
+    /// Requests completed (outputs delivered).
+    pub completed: u64,
+    /// Requests refused by admission control (typed `Overloaded`).
+    pub rejected: u64,
+    /// Micro-batches dispatched.
+    pub batches: u64,
+    /// Real request rows dispatched.
+    pub batch_rows: u64,
+    /// Bucket slots dispatched (real rows + zero padding).
+    pub bucket_rows: u64,
+    /// High-water queue depth.
+    pub max_queue_depth: usize,
+    /// Per-request simulated-cycle latencies (admission → completion).
+    pub(crate) latencies: Vec<u64>,
+}
+
+impl NetMetrics {
+    /// Batch-fill ratio: real rows over dispatched bucket slots
+    /// (`1.0` = every dispatched batch exactly filled its bucket).
+    pub fn batch_fill(&self) -> f64 {
+        if self.bucket_rows == 0 {
+            0.0
+        } else {
+            self.batch_rows as f64 / self.bucket_rows as f64
+        }
+    }
+
+    /// Median request latency in simulated cycles.
+    pub fn latency_p50(&self) -> u64 {
+        self.latency_quantiles().0
+    }
+
+    /// 99th-percentile request latency in simulated cycles.
+    pub fn latency_p99(&self) -> u64 {
+        self.latency_quantiles().1
+    }
+
+    /// `(p50, p99)` request latency in simulated cycles from **one**
+    /// sorted snapshot of the samples (rendering reads both, so this
+    /// halves the clone+sort work per report).
+    pub fn latency_quantiles(&self) -> (u64, u64) {
+        let mut s = self.latencies.clone();
+        s.sort_unstable();
+        (sorted_percentile(&s, 50.0), sorted_percentile(&s, 99.0))
+    }
+}
+
+/// Per-board serving counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BoardMetrics {
+    /// Micro-batches this board executed.
+    pub batches: u64,
+    /// Simulated cycles this board spent computing.
+    pub busy_cycles: u64,
+}
+
+/// A point-in-time snapshot of a server's serving metrics.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Board part the pool simulates.
+    pub device: FpgaDevice,
+    /// Per-board counters (index = board id).
+    pub boards: Vec<BoardMetrics>,
+    /// Per-net counters (index = net id).
+    pub nets: Vec<NetMetrics>,
+    /// Simulated cycle at which the last dispatched batch completes.
+    pub makespan_cycles: u64,
+}
+
+impl ServeReport {
+    /// Requests admitted across all nets.
+    pub fn total_submitted(&self) -> u64 {
+        self.nets.iter().map(|n| n.submitted).sum()
+    }
+
+    /// Requests completed across all nets.
+    pub fn total_completed(&self) -> u64 {
+        self.nets.iter().map(|n| n.completed).sum()
+    }
+
+    /// Requests refused across all nets.
+    pub fn total_rejected(&self) -> u64 {
+        self.nets.iter().map(|n| n.rejected).sum()
+    }
+
+    /// Simulated makespan in seconds on the pool's device.
+    pub fn makespan_s(&self) -> f64 {
+        self.device.seconds(self.makespan_cycles)
+    }
+
+    /// Completed requests per **simulated** second — the throughput
+    /// number the serving bench compares across pool/batch
+    /// configurations.
+    pub fn requests_per_sim_s(&self) -> f64 {
+        self.total_completed() as f64 / self.makespan_s().max(1e-30)
+    }
+
+    /// Simulated cycles per completed request (makespan amortised).
+    pub fn cycles_per_request(&self) -> f64 {
+        self.makespan_cycles as f64 / self.total_completed().max(1) as f64
+    }
+
+    /// The latency/throughput table `mfnn serve-sim` prints.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec![
+            "net", "submitted", "done", "rejected", "batches", "fill", "p50 (cyc)",
+            "p99 (cyc)", "max depth",
+        ])
+        .with_title(format!(
+            "serving: {} board(s) ({}), makespan {:.3} ms simulated, {:.0} req/s simulated",
+            self.boards.len(),
+            self.device.part.name,
+            self.makespan_s() * 1e3,
+            self.requests_per_sim_s(),
+        ))
+        .numeric();
+        for n in &self.nets {
+            let (p50, p99) = n.latency_quantiles();
+            t.row(vec![
+                n.name.clone(),
+                n.submitted.to_string(),
+                n.completed.to_string(),
+                n.rejected.to_string(),
+                n.batches.to_string(),
+                fmt_f(n.batch_fill(), 3),
+                p50.to_string(),
+                p99.to_string(),
+                n.max_queue_depth.to_string(),
+            ]);
+        }
+        let mut s = t.render();
+        for (b, m) in self.boards.iter().enumerate() {
+            s.push_str(&format!(
+                "board {b}: {} batch(es), {} busy cycles ({:.1}% of makespan)\n",
+                m.batches,
+                m.busy_cycles,
+                100.0 * m.busy_cycles as f64 / self.makespan_cycles.max(1) as f64,
+            ));
+        }
+        s
+    }
+
+    /// Deterministic JSON snapshot (CI artifact; two identical-seed runs
+    /// must serialise identically — `mfnn serve-sim --check-determinism`
+    /// asserts exactly that).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"device\": {},\n", json_str(self.device.part.name)));
+        s.push_str(&format!("  \"boards\": {},\n", self.boards.len()));
+        s.push_str(&format!("  \"makespan_cycles\": {},\n", self.makespan_cycles));
+        s.push_str(&format!("  \"makespan_s\": {:.9},\n", self.makespan_s()));
+        s.push_str(&format!(
+            "  \"requests_per_sim_s\": {:.3},\n",
+            self.requests_per_sim_s()
+        ));
+        s.push_str(&format!("  \"cycles_per_request\": {:.3},\n", self.cycles_per_request()));
+        s.push_str(&format!("  \"submitted\": {},\n", self.total_submitted()));
+        s.push_str(&format!("  \"completed\": {},\n", self.total_completed()));
+        s.push_str(&format!("  \"rejected\": {},\n", self.total_rejected()));
+        s.push_str("  \"board_metrics\": [\n");
+        for (i, b) in self.boards.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"batches\": {}, \"busy_cycles\": {}}}{}\n",
+                b.batches,
+                b.busy_cycles,
+                if i + 1 == self.boards.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ],\n  \"nets\": [\n");
+        for (i, n) in self.nets.iter().enumerate() {
+            let (p50, p99) = n.latency_quantiles();
+            s.push_str(&format!(
+                "    {{\"name\": {}, \"submitted\": {}, \"completed\": {}, \
+                 \"rejected\": {}, \"batches\": {}, \"batch_fill\": {:.4}, \
+                 \"p50_cycles\": {}, \"p99_cycles\": {}, \"max_queue_depth\": {}}}{}\n",
+                json_str(&n.name),
+                n.submitted,
+                n.completed,
+                n.rejected,
+                n.batches,
+                n.batch_fill(),
+                p50,
+                p99,
+                n.max_queue_depth,
+                if i + 1 == self.nets.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 50.0), 0);
+        assert_eq!(percentile(&[7], 99.0), 7);
+        let xs: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&xs, 50.0), 50);
+        assert_eq!(percentile(&xs, 99.0), 99);
+        assert_eq!(percentile(&xs, 100.0), 100);
+        // unsorted input is handled
+        assert_eq!(percentile(&[9, 1, 5], 50.0), 5);
+    }
+
+    #[test]
+    fn report_aggregates_and_serialises() {
+        let report = ServeReport {
+            device: FpgaDevice::selected(),
+            boards: vec![BoardMetrics { batches: 2, busy_cycles: 100 }],
+            nets: vec![NetMetrics {
+                name: "a".into(),
+                submitted: 4,
+                completed: 4,
+                rejected: 1,
+                batches: 2,
+                batch_rows: 4,
+                bucket_rows: 8,
+                max_queue_depth: 3,
+                latencies: vec![10, 20, 30, 40],
+            }],
+            makespan_cycles: 200,
+        };
+        assert_eq!(report.total_submitted(), 4);
+        assert_eq!(report.total_rejected(), 1);
+        // one sorted snapshot serves both quantiles (lower-rank rule)
+        assert_eq!(report.nets[0].latency_quantiles(), (20, 30));
+        assert_eq!(report.nets[0].latency_p50(), 20);
+        assert!((report.nets[0].batch_fill() - 0.5).abs() < 1e-12);
+        assert!(report.requests_per_sim_s() > 0.0);
+        let json = report.to_json();
+        assert!(json.contains("\"completed\": 4"), "{json}");
+        assert!(json.contains("\"batch_fill\": 0.5000"), "{json}");
+        let rendered = report.render();
+        assert!(rendered.contains("serving: 1 board(s)"), "{rendered}");
+    }
+}

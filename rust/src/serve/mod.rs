@@ -1,0 +1,41 @@
+//! **Multi-tenant batched inference serving** over the simulated board
+//! pool — the runtime that turns the trainer-plus-simulator stack into a
+//! system that *serves* (ROADMAP north star: heavy traffic, many nets,
+//! many boards).
+//!
+//! Many registered [`crate::session::Artifact`]s accept concurrent
+//! requests; a dynamic micro-batcher coalesces each net's queue into
+//! bucket-sized micro-batches from the forward batch ladder
+//! ([`crate::nn::lowering::forward_buckets`], compiled once per
+//! `(net, bucket, device)` via [`crate::session::Artifact::forward_variant`]);
+//! a board pool executes them on compiled
+//! [`crate::hw::ExecPlan::run_forward`] engines. The whole runtime is a
+//! deterministic discrete-event simulation over the machine cycle model:
+//! same seed ⇒ same outputs and same metrics, and every served output is
+//! **bit-identical** to a batch-1 `Session::infer` with the same
+//! parameters (forward lanes are per-row; asserted by the
+//! `testkit::diff` serving level and `rust/tests/serving.rs`).
+//!
+//! * [`Server`] / [`ServeConfig`] — the runtime ([`Server::open`],
+//!   `register`, `submit_at`, `drain`, `take_completions`, `report`).
+//!   [`crate::session::Session::server`] is the one-net convenience
+//!   front door.
+//! * [`batcher`] — per-net queues, flush rules, bucket selection.
+//! * [`metrics`] — per-net/per-board counters, p50/p99 simulated-cycle
+//!   latency, batch-fill, throughput; table + JSON rendering.
+//! * [`load`] — the seeded open-loop generator behind `mfnn serve-sim`
+//!   and `bench_serving`.
+//!
+//! See DESIGN.md §Serving for the architecture diagram, the batching
+//! semantics, the backpressure contract, and how serving coexists with
+//! training on the same boards (`cluster::worker` `InferChunk`).
+
+pub mod batcher;
+pub mod load;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{bucket_for, MicroBatcher, Pending};
+pub use load::{open_loop, seeded_params, SynthRequest};
+pub use metrics::{percentile, BoardMetrics, NetMetrics, ServeReport};
+pub use server::{Completion, NetId, RequestId, ServeConfig, ServeError, Server};

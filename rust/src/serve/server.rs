@@ -1,0 +1,558 @@
+//! The multi-tenant serving [`Server`]: per-net request queues, the
+//! dynamic micro-batcher, bucket selection from the forward batch
+//! ladder, and board-pool placement — driven as a **discrete-event
+//! simulation** over the machine cycle model, so every run is
+//! deterministic (same seed ⇒ same outputs, same metrics, bit for bit).
+//!
+//! ```text
+//!   submit_at(cycle, net, row)
+//!        │  admission control (typed Overloaded beyond queue_cap)
+//!        ▼
+//!   per-net FIFO queue ──▶ micro-batcher (flush on max_batch │ max_wait)
+//!        │                        │ bucket = smallest ladder plan ≥ rows
+//!        ▼                        ▼
+//!   ready batches ──▶ board pool (earliest-free board; FIFO batches)
+//!                          │ ExecPlan::run_forward on the (net, bucket)
+//!                          │ engine; service time = RunStats.cycles
+//!                          ▼
+//!                     completions (outputs + latency), metrics
+//! ```
+//!
+//! **No-hang contract** (the serving twin of the cluster's
+//! "leader-never-hangs"): admission is bounded, every formed batch
+//! dispatches at a finite board-free time, and [`Server::drain`]
+//! terminates after finitely many events — an overload surfaces as a
+//! typed [`ServeError::Overloaded`] rejection at submit time, never as a
+//! stuck queue.
+
+use super::batcher::{bucket_for, MicroBatcher, Pending};
+use super::metrics::{BoardMetrics, NetMetrics, ServeReport};
+use crate::hw::{ExecPlan, FpgaDevice, PlanState, COLUMN_LEN};
+use crate::nn::dataset;
+use crate::nn::lowering::forward_buckets;
+use crate::session::artifact::ForwardVariant;
+use crate::session::Artifact;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+use thiserror::Error;
+
+/// Index of a registered net (registration order).
+pub type NetId = usize;
+
+/// Server-assigned request id (monotonic across all nets).
+pub type RequestId = u64;
+
+/// Serving runtime errors — all typed; in particular overload is a
+/// first-class rejection, not a hang or a silent drop.
+#[derive(Debug, Error)]
+pub enum ServeError {
+    /// Unknown FPGA part name.
+    #[error("unknown FPGA part {0:?}")]
+    UnknownDevice(String),
+    /// Invalid server configuration.
+    #[error("bad serve config: {0}")]
+    Config(String),
+    /// Net id was never registered.
+    #[error("unknown net id {0}")]
+    UnknownNet(NetId),
+    /// Artifact cannot serve (raw program, missing network structure).
+    #[error("artifact {net:?} is not servable: {why}")]
+    NotServable {
+        /// Artifact name.
+        net: String,
+        /// Why it cannot serve.
+        why: String,
+    },
+    /// Registered parameters disagree with the net's layer shapes.
+    #[error("net {net:?}: layer {layer} {what} expect {want} lanes, got {got}")]
+    BadParams {
+        /// Artifact name.
+        net: String,
+        /// Layer index.
+        layer: usize,
+        /// `"weights"` or `"biases"`.
+        what: &'static str,
+        /// Expected lane count.
+        want: usize,
+        /// Provided lane count.
+        got: usize,
+    },
+    /// Request row has the wrong lane count for the target net.
+    #[error("net {net}: request row has {got} lanes, expected {want}")]
+    BadRow {
+        /// Target net id.
+        net: NetId,
+        /// Expected lane count (`input_dim`).
+        want: usize,
+        /// Provided lane count.
+        got: usize,
+    },
+    /// Admission control refused the request: the net's backlog —
+    /// requests admitted but not yet dispatched to a board, whether
+    /// still queued or already formed into waiting batches — is at
+    /// capacity. The caller decides whether to retry later, shed load,
+    /// or fail.
+    #[error("net {net} overloaded: backlog {depth} at capacity {cap}; retry later")]
+    Overloaded {
+        /// Target net id.
+        net: NetId,
+        /// Backlog (undispatched admitted requests) at rejection time.
+        depth: usize,
+        /// Configured capacity.
+        cap: usize,
+    },
+    /// Submissions must carry a non-decreasing simulated clock.
+    #[error("simulated clock must be monotonic: submit at cycle {at} before now {now}")]
+    ClockSkew {
+        /// Requested submission cycle.
+        at: u64,
+        /// Server's current simulated cycle.
+        now: u64,
+    },
+    /// Lowering a forward-ladder bucket failed (unreachable for
+    /// configurations that pass [`Server::open`] validation).
+    #[error("forward ladder compile failed: {0}")]
+    Compile(String),
+}
+
+/// Serving runtime configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Boards in the pool.
+    pub boards: usize,
+    /// Board part name (Table 8 catalog).
+    pub device: String,
+    /// Micro-batcher fill-flush threshold; also the top bucket of the
+    /// forward batch ladder (`1..=512`).
+    pub max_batch: usize,
+    /// Micro-batcher deadline flush: a partial batch waits at most this
+    /// many simulated cycles (0 = flush immediately, batch-1 serving).
+    pub max_wait_cycles: u64,
+    /// Per-net admission-control backlog capacity: the maximum number
+    /// of admitted-but-undispatched requests (queued **plus** formed
+    /// batches waiting for a board) before submissions are refused with
+    /// the typed [`ServeError::Overloaded`].
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            boards: 2,
+            device: "XC7S75-2".into(),
+            max_batch: 8,
+            max_wait_cycles: 256,
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// One registered net: its artifact, pinned parameters, and queue.
+struct NetEntry {
+    artifact: Arc<Artifact>,
+    w: Vec<Vec<i16>>,
+    b: Vec<Vec<i16>>,
+    in_dim: usize,
+    out_dim: usize,
+    batcher: MicroBatcher,
+    /// Admitted requests not yet dispatched to a board (queued in the
+    /// batcher **or** sitting in a formed batch awaiting a free board)
+    /// — the quantity `queue_cap` bounds, so backlog cannot grow
+    /// without bound even while every board is busy.
+    outstanding: usize,
+    metrics: NetMetrics,
+}
+
+/// One serving engine: a `(net, bucket)` forward plan plus this board's
+/// private state, parameters pre-bound at creation.
+struct Engine {
+    variant: Arc<ForwardVariant>,
+    plan: Arc<ExecPlan>,
+    state: PlanState,
+}
+
+/// One board of the pool.
+struct BoardState {
+    /// Simulated cycle the board becomes free.
+    busy_until: u64,
+    /// Lazily-created engines, keyed `(net, bucket)` (BTreeMap: the
+    /// runtime never iterates hash-ordered state — determinism).
+    engines: BTreeMap<(NetId, usize), Engine>,
+}
+
+/// A formed micro-batch waiting for a free board.
+struct ReadyBatch {
+    net: NetId,
+    rows: Vec<Pending>,
+}
+
+/// One served request's result.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    /// Request id (as returned by [`Server::submit_at`]).
+    pub id: RequestId,
+    /// Net the request targeted.
+    pub net: NetId,
+    /// Quantised output row (`out_dim` lanes) — bit-identical to what a
+    /// batch-1 `Session::infer` produces with the same parameters.
+    pub output: Vec<i16>,
+    /// Simulated cycle the request was admitted.
+    pub submitted: u64,
+    /// Simulated cycle its micro-batch started on a board.
+    pub dispatched: u64,
+    /// Simulated cycle its micro-batch finished.
+    pub completed: u64,
+    /// Real rows in the micro-batch it rode in.
+    pub batch_rows: usize,
+    /// Ladder bucket the micro-batch ran at.
+    pub bucket: usize,
+}
+
+/// The multi-tenant batched inference server over a simulated board
+/// pool. See the module docs for the architecture; see
+/// [`crate::session::Session::server`] for the one-net convenience
+/// front door.
+pub struct Server {
+    cfg: ServeConfig,
+    device: FpgaDevice,
+    ladder: Vec<usize>,
+    now: u64,
+    next_id: RequestId,
+    nets: Vec<NetEntry>,
+    boards: Vec<BoardState>,
+    board_metrics: Vec<BoardMetrics>,
+    ready: VecDeque<ReadyBatch>,
+    completions: Vec<Completion>,
+}
+
+impl Server {
+    /// Open a serving runtime on `cfg` (validated; the forward batch
+    /// ladder is `forward_buckets(cfg.max_batch)`).
+    pub fn open(cfg: ServeConfig) -> Result<Server, ServeError> {
+        let device = FpgaDevice::by_name(&cfg.device)
+            .ok_or_else(|| ServeError::UnknownDevice(cfg.device.clone()))?;
+        if cfg.boards == 0 {
+            return Err(ServeError::Config("board pool must have at least 1 board".into()));
+        }
+        if cfg.max_batch == 0 || cfg.max_batch > COLUMN_LEN {
+            return Err(ServeError::Config(format!(
+                "max_batch {} out of range 1..={COLUMN_LEN}",
+                cfg.max_batch
+            )));
+        }
+        if cfg.queue_cap == 0 {
+            return Err(ServeError::Config("queue_cap must be at least 1".into()));
+        }
+        let ladder = forward_buckets(cfg.max_batch);
+        let boards = (0..cfg.boards)
+            .map(|_| BoardState { busy_until: 0, engines: BTreeMap::new() })
+            .collect();
+        let board_metrics = vec![BoardMetrics::default(); cfg.boards];
+        Ok(Server {
+            cfg,
+            device,
+            ladder,
+            now: 0,
+            next_id: 0,
+            nets: Vec::new(),
+            boards,
+            board_metrics,
+            ready: VecDeque::new(),
+            completions: Vec::new(),
+        })
+    }
+
+    /// Register a compiled net with explicit quantised parameters
+    /// (per-layer weights/biases, e.g. from `Session::weights` after
+    /// training). Returns the net's id. Engines compile lazily — the
+    /// first micro-batch of each `(net, bucket)` pays the (cached)
+    /// lowering+plan cost, every later one reuses it.
+    pub fn register(
+        &mut self,
+        artifact: Arc<Artifact>,
+        w: &[Vec<i16>],
+        b: &[Vec<i16>],
+    ) -> Result<NetId, ServeError> {
+        let spec = artifact
+            .spec()
+            .ok_or_else(|| ServeError::NotServable {
+                net: artifact.name().to_string(),
+                why: "raw-program artifacts have no network structure".into(),
+            })?
+            .clone();
+        if w.len() != spec.layers.len() || b.len() != spec.layers.len() {
+            return Err(ServeError::NotServable {
+                net: artifact.name().to_string(),
+                why: format!(
+                    "{} weight / {} bias layers for a {}-layer net",
+                    w.len(),
+                    b.len(),
+                    spec.layers.len()
+                ),
+            });
+        }
+        for (l, layer) in spec.layers.iter().enumerate() {
+            let want_w = layer.inputs * layer.outputs;
+            if w[l].len() != want_w {
+                return Err(ServeError::BadParams {
+                    net: artifact.name().to_string(),
+                    layer: l,
+                    what: "weights",
+                    want: want_w,
+                    got: w[l].len(),
+                });
+            }
+            if b[l].len() != layer.outputs {
+                return Err(ServeError::BadParams {
+                    net: artifact.name().to_string(),
+                    layer: l,
+                    what: "biases",
+                    want: layer.outputs,
+                    got: b[l].len(),
+                });
+            }
+        }
+        let id = self.nets.len();
+        self.nets.push(NetEntry {
+            metrics: NetMetrics { name: artifact.name().to_string(), ..NetMetrics::default() },
+            artifact,
+            w: w.to_vec(),
+            b: b.to_vec(),
+            in_dim: spec.input_dim(),
+            out_dim: spec.output_dim(),
+            batcher: MicroBatcher::new(
+                self.cfg.max_batch,
+                self.cfg.max_wait_cycles,
+                self.cfg.queue_cap,
+            ),
+            outstanding: 0,
+        });
+        Ok(id)
+    }
+
+    /// The pool's simulated device.
+    pub fn device(&self) -> FpgaDevice {
+        self.device
+    }
+
+    /// Current simulated cycle.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// The forward batch ladder buckets in use.
+    pub fn ladder(&self) -> &[usize] {
+        &self.ladder
+    }
+
+    /// Submit one request (a quantised `input_dim` row for `net`) at
+    /// simulated cycle `at` (must be ≥ the server's clock; the clock
+    /// advances to `at`, firing any deadlines/dispatches due before it).
+    /// Returns the request id, or the typed rejection.
+    pub fn submit_at(
+        &mut self,
+        at: u64,
+        net: NetId,
+        row: &[i16],
+    ) -> Result<RequestId, ServeError> {
+        if at < self.now {
+            return Err(ServeError::ClockSkew { at, now: self.now });
+        }
+        if net >= self.nets.len() {
+            return Err(ServeError::UnknownNet(net));
+        }
+        self.advance_to(at)?;
+        let cap = self.cfg.queue_cap;
+        let entry = &mut self.nets[net];
+        if row.len() != entry.in_dim {
+            return Err(ServeError::BadRow { net, want: entry.in_dim, got: row.len() });
+        }
+        // Admission bounds the whole undispatched backlog — queued
+        // requests plus formed batches waiting for a board — not just
+        // the batcher queue (which fill-flushes below max_batch and
+        // would otherwise never refuse anything).
+        if entry.outstanding >= cap {
+            entry.metrics.rejected += 1;
+            return Err(ServeError::Overloaded { net, depth: entry.outstanding, cap });
+        }
+        let id = self.next_id;
+        if let Err(depth) =
+            entry.batcher.push(Pending { id, row: row.to_vec(), arrival: at })
+        {
+            entry.metrics.rejected += 1;
+            return Err(ServeError::Overloaded { net, depth, cap });
+        }
+        entry.outstanding += 1;
+        entry.metrics.submitted += 1;
+        entry.metrics.max_queue_depth = entry.metrics.max_queue_depth.max(entry.batcher.depth());
+        self.next_id += 1;
+        self.pump()?;
+        Ok(id)
+    }
+
+    /// Run the simulation until every queue is empty and every formed
+    /// batch has dispatched, then fast-forward the clock to the cycle
+    /// the last board goes idle. Returns that cycle (the makespan).
+    /// Terminates after finitely many events by construction — the
+    /// serving half of the no-hang contract.
+    pub fn drain(&mut self) -> Result<u64, ServeError> {
+        while self.has_work() {
+            let e = self.next_event().expect("pending work implies a next event");
+            self.now = self.now.max(e);
+            self.pump()?;
+        }
+        let idle = self.boards.iter().map(|b| b.busy_until).max().unwrap_or(self.now);
+        self.now = self.now.max(idle);
+        Ok(self.now)
+    }
+
+    /// Take the completions accumulated so far (dispatch order).
+    pub fn take_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completions)
+    }
+
+    /// Snapshot the serving metrics.
+    pub fn report(&self) -> ServeReport {
+        let makespan = self
+            .boards
+            .iter()
+            .map(|b| b.busy_until)
+            .max()
+            .unwrap_or(0)
+            .max(self.now);
+        ServeReport {
+            device: self.device,
+            boards: self.board_metrics.clone(),
+            nets: self.nets.iter().map(|n| n.metrics.clone()).collect(),
+            makespan_cycles: makespan,
+        }
+    }
+
+    // ------------------------------------------------------ event loop
+
+    fn has_work(&self) -> bool {
+        !self.ready.is_empty() || self.nets.iter().any(|n| n.batcher.depth() > 0)
+    }
+
+    /// Earliest future event: a queue's deadline flush, or — when formed
+    /// batches are waiting — the earliest board-free time.
+    fn next_event(&self) -> Option<u64> {
+        let mut e: Option<u64> = None;
+        let mut fold = |t: u64| e = Some(e.map_or(t, |x| x.min(t)));
+        for n in &self.nets {
+            if let Some(d) = n.batcher.deadline() {
+                fold(d);
+            }
+        }
+        if !self.ready.is_empty() {
+            if let Some(b) = self.boards.iter().map(|b| b.busy_until).min() {
+                fold(b);
+            }
+        }
+        e
+    }
+
+    /// Process everything due at the current cycle: flush due batches
+    /// (stable net order), then dispatch FIFO batches onto the
+    /// lowest-indexed free boards. After `pump` returns, no further
+    /// progress is possible without advancing the clock.
+    fn pump(&mut self) -> Result<(), ServeError> {
+        for nid in 0..self.nets.len() {
+            for rows in self.nets[nid].batcher.take_ready(self.now) {
+                self.ready.push_back(ReadyBatch { net: nid, rows });
+            }
+        }
+        while !self.ready.is_empty() {
+            let Some(board) = self.free_board() else { break };
+            let batch = self.ready.pop_front().expect("checked non-empty");
+            self.dispatch(board, batch)?;
+        }
+        Ok(())
+    }
+
+    /// The lowest-indexed free board (`None` when all busy) — a
+    /// deterministic placement rule.
+    fn free_board(&self) -> Option<usize> {
+        self.boards.iter().position(|b| b.busy_until <= self.now)
+    }
+
+    /// Execute one micro-batch on `board` at the current cycle.
+    fn dispatch(&mut self, board: usize, batch: ReadyBatch) -> Result<(), ServeError> {
+        let nid = batch.net;
+        let bucket = bucket_for(batch.rows.len(), &self.ladder)
+            .expect("batch size is capped at max_batch, the ladder's top bucket");
+        let entry = &self.nets[nid];
+        // Lazily create the (net, bucket) engine on this board, binding
+        // the net's pinned parameters once.
+        if let std::collections::btree_map::Entry::Vacant(slot) =
+            self.boards[board].engines.entry((nid, bucket))
+        {
+            let variant = entry
+                .artifact
+                .forward_variant(bucket)
+                .map_err(|e| ServeError::Compile(e.to_string()))?;
+            let plan = variant.plan_for(&self.device);
+            let mut state = plan.state();
+            let low = variant.lowered();
+            for l in 0..entry.w.len() {
+                plan.write_buffer(&mut state, low.weights[l], &entry.w[l]);
+                plan.write_buffer(&mut state, low.biases[l], &entry.b[l]);
+            }
+            slot.insert(Engine { variant, plan, state });
+        }
+        // Assemble the padded row-major micro-batch (shared layout rule
+        // with every evaluation chunk — see `dataset::flatten_rows`).
+        let row_refs: Vec<&[i16]> = batch.rows.iter().map(|p| p.row.as_slice()).collect();
+        let qx = dataset::flatten_rows(&row_refs, entry.in_dim, bucket);
+        let out_dim = entry.out_dim;
+        let engine = self.boards[board]
+            .engines
+            .get_mut(&(nid, bucket))
+            .expect("engine created above");
+        let low = engine.variant.lowered();
+        let (x_id, out_id) = (low.x, low.out);
+        let (out, stats) = engine.plan.run_forward(&mut engine.state, x_id, &qx, out_id);
+        // Timing: the batch starts now (the board was free) and occupies
+        // the board for the run's simulated cycles.
+        let start = self.now;
+        let done = start + stats.cycles;
+        self.boards[board].busy_until = done;
+        self.board_metrics[board].batches += 1;
+        self.board_metrics[board].busy_cycles += stats.cycles;
+        self.nets[nid].outstanding -= batch.rows.len();
+        let m = &mut self.nets[nid].metrics;
+        m.batches += 1;
+        m.batch_rows += batch.rows.len() as u64;
+        m.bucket_rows += bucket as u64;
+        m.completed += batch.rows.len() as u64;
+        for (i, p) in batch.rows.iter().enumerate() {
+            m.latencies.push(done - p.arrival);
+            self.completions.push(Completion {
+                id: p.id,
+                net: nid,
+                output: out[i * out_dim..(i + 1) * out_dim].to_vec(),
+                submitted: p.arrival,
+                dispatched: start,
+                completed: done,
+                batch_rows: batch.rows.len(),
+                bucket,
+            });
+        }
+        Ok(())
+    }
+
+    /// Advance the simulated clock to `t`, firing every event on the
+    /// way. Progress is strict: each pump resolves everything due at the
+    /// current cycle, so the next event is always strictly later.
+    fn advance_to(&mut self, t: u64) -> Result<(), ServeError> {
+        loop {
+            self.pump()?;
+            match self.next_event() {
+                Some(e) if e <= t => self.now = self.now.max(e),
+                _ => break,
+            }
+        }
+        self.now = self.now.max(t);
+        self.pump()
+    }
+}

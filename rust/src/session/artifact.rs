@@ -12,8 +12,9 @@
 use super::error::Error;
 use crate::assembler::program::{BufId, BufKind, Program, SymbolTable};
 use crate::fixed::FixedSpec;
-use crate::hw::{ExecPlan, FpgaDevice};
-use crate::nn::lowering::LoweredMlp;
+use crate::hw::machine::MachineError;
+use crate::hw::{ExecPlan, FpgaDevice, MatrixMachine};
+use crate::nn::lowering::{lower_forward, LoweredMlp};
 use crate::nn::trainer::TrainConfig;
 use crate::nn::MlpSpec;
 use std::collections::hash_map::DefaultHasher;
@@ -50,8 +51,55 @@ pub(crate) struct DevicePlans {
     /// Plan of the primary program (train for trainable nets).
     pub primary: Arc<ExecPlan>,
     /// Plan of the forward program (same `Arc` when the primary program
-    /// *is* the forward program).
+    /// *is* the forward program). Comes from the forward batch ladder
+    /// ([`Artifact::forward_variant`]) so sessions and the serving
+    /// runtime share one compiled plan per `(net, batch, device)`.
     pub forward: Arc<ExecPlan>,
+}
+
+/// One batch-size bucket of a net's forward ladder: the forward program
+/// lowered at that batch plus its per-device compiled-plan cache. The
+/// serving runtime opens one engine (plan + private state) per
+/// `(board, net, bucket)`; the plan itself is compiled exactly once per
+/// `(net, bucket, device)` no matter how many boards or servers use it.
+pub struct ForwardVariant {
+    lowered: LoweredMlp,
+    plans: Mutex<HashMap<String, Arc<ExecPlan>>>,
+}
+
+impl std::fmt::Debug for ForwardVariant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ForwardVariant").field("batch", &self.lowered.batch).finish()
+    }
+}
+
+impl ForwardVariant {
+    /// Batch rows this variant's forward program was lowered for.
+    pub fn batch(&self) -> usize {
+        self.lowered.batch
+    }
+
+    /// The lowered forward program with its buffer handles
+    /// (`x`/`out`/`weights`/`biases` ids).
+    pub fn lowered(&self) -> &LoweredMlp {
+        &self.lowered
+    }
+
+    /// The compiled plan for `device`, building and caching it on first
+    /// use.
+    pub fn plan_for(&self, device: &FpgaDevice) -> Arc<ExecPlan> {
+        let mut map = self.plans.lock().expect("forward plan cache poisoned");
+        Arc::clone(
+            map.entry(device.part.name.to_string())
+                .or_insert_with(|| Arc::new(ExecPlan::new(&self.lowered.program, device))),
+        )
+    }
+
+    /// A [`MatrixMachine`] on this variant's cached plan (fresh private
+    /// state; parameters unbound).
+    pub fn machine(&self, device: FpgaDevice) -> Result<MatrixMachine, MachineError> {
+        MatrixMachine::with_plan(device, &self.lowered.program, self.plan_for(&device))
+    }
 }
 
 /// An immutable compiled artifact: validated program(s) + symbol table +
@@ -82,6 +130,11 @@ pub struct Artifact {
     payload: Payload,
     symbols: SymbolTable,
     plans: Mutex<HashMap<String, DevicePlans>>,
+    /// Forward batch ladder: one lowered forward program (+ per-device
+    /// plan cache) per batch size ever requested. The compiled batch's
+    /// variant wraps the artifact's own forward program; other buckets
+    /// lower lazily on first use.
+    forward_variants: Mutex<HashMap<usize, Arc<ForwardVariant>>>,
 }
 
 impl std::fmt::Debug for Artifact {
@@ -107,7 +160,13 @@ impl Artifact {
                 .unwrap_or_else(|| n.forward.program.symbols()),
             Payload::Raw(p) => p.symbols(),
         };
-        Artifact { fingerprint, payload, symbols, plans: Mutex::new(HashMap::new()) }
+        Artifact {
+            fingerprint,
+            payload,
+            symbols,
+            plans: Mutex::new(HashMap::new()),
+            forward_variants: Mutex::new(HashMap::new()),
+        }
     }
 
     /// Fingerprint used to tag [`TensorHandle`]s.
@@ -212,19 +271,70 @@ impl Artifact {
     }
 
     pub(crate) fn plans_for(&self, device: &FpgaDevice) -> DevicePlans {
-        let mut map = self.plans.lock().expect("plan cache poisoned");
-        map.entry(device.part.name.to_string())
-            .or_insert_with(|| {
-                let primary = Arc::new(ExecPlan::new(self.program(), device));
-                let forward = match &self.payload {
-                    Payload::Net(n) if n.train.is_some() => {
-                        Arc::new(ExecPlan::new(&n.forward.program, device))
-                    }
-                    _ => Arc::clone(&primary),
+        if let Some(hit) =
+            self.plans.lock().expect("plan cache poisoned").get(device.part.name)
+        {
+            return hit.clone();
+        }
+        let plans = match &self.payload {
+            Payload::Net(n) => {
+                // The forward plan comes from the batch ladder so every
+                // consumer of `(net, compiled batch, device)` — sessions,
+                // evaluation chunks, the serving runtime — shares one
+                // compiled plan.
+                let forward = self
+                    .forward_variant(n.batch)
+                    .expect("compiled batch is always a valid forward variant")
+                    .plan_for(device);
+                let primary = if n.train.is_some() {
+                    Arc::new(ExecPlan::new(self.program(), device))
+                } else {
+                    Arc::clone(&forward)
                 };
                 DevicePlans { primary, forward }
-            })
+            }
+            Payload::Raw(p) => {
+                let primary = Arc::new(ExecPlan::new(p, device));
+                DevicePlans { primary: Arc::clone(&primary), forward: primary }
+            }
+        };
+        self.plans
+            .lock()
+            .expect("plan cache poisoned")
+            .entry(device.part.name.to_string())
+            .or_insert(plans)
             .clone()
+    }
+
+    /// The forward-ladder variant for a `rows`-row micro-batch: the
+    /// forward program lowered at exactly `rows` (cached per batch size)
+    /// with its per-device compiled-plan cache. `rows` equal to the
+    /// compiled batch reuses the artifact's own forward program; any
+    /// other bucket lowers lazily on first request. Raw-program
+    /// artifacts have no forward structure and are rejected.
+    pub fn forward_variant(&self, rows: usize) -> Result<Arc<ForwardVariant>, Error> {
+        let net = self.net().ok_or_else(|| Error::Unsupported {
+            verb: "forward_variant",
+            why: "raw-program artifacts have no network structure".into(),
+        })?;
+        if let Some(hit) =
+            self.forward_variants.lock().expect("forward ladder poisoned").get(&rows)
+        {
+            return Ok(Arc::clone(hit));
+        }
+        let lowered = if rows == net.batch {
+            net.forward.clone()
+        } else {
+            lower_forward(&net.spec, rows)?
+        };
+        let variant = Arc::new(ForwardVariant { lowered, plans: Mutex::new(HashMap::new()) });
+        Ok(Arc::clone(
+            self.forward_variants
+                .lock()
+                .expect("forward ladder poisoned")
+                .entry(rows)
+                .or_insert(variant),
+        ))
     }
 
     /// Validate a `TrainConfig` against what this artifact was compiled

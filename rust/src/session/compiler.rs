@@ -41,6 +41,16 @@ impl CompileOptions {
     pub fn training(batch: usize, lr: f64) -> CompileOptions {
         CompileOptions { batch, lr: Some(lr) }
     }
+
+    /// Inference artifact for the serving runtime: compiled at
+    /// `max_batch` (the top bucket of the forward batch ladder), so the
+    /// artifact's own forward program doubles as the full-bucket serving
+    /// plan and the smaller buckets
+    /// ([`crate::nn::lowering::forward_buckets`]) lower lazily through
+    /// [`super::Artifact::forward_variant`] on first use.
+    pub fn serving(max_batch: usize) -> CompileOptions {
+        CompileOptions::inference(max_batch)
+    }
 }
 
 /// The compile-once front end. Cheap to create; share one per process to

@@ -45,6 +45,11 @@ pub enum Error {
     /// The multi-FPGA cluster runtime failed.
     #[error(transparent)]
     Cluster(#[from] ClusterError),
+    /// The multi-tenant serving runtime failed (typed overload
+    /// rejections, admission/config errors — see
+    /// [`crate::serve::ServeError`]).
+    #[error(transparent)]
+    Serve(#[from] crate::serve::ServeError),
     /// Tensor name not found in the artifact's symbol table (`hint` is
     /// the pre-rendered ", did you mean …?" suffix, possibly empty).
     #[error("unknown tensor {name:?} in artifact {artifact:?}{hint}")]

@@ -28,7 +28,14 @@
 //!   misses answered with "did you mean …") plus the three uniform
 //!   verbs `infer` / `train` / `evaluate` and the raw `step` escape
 //!   hatch. [`Session::train_many`] runs the paper's M×F workload over
-//!   many artifacts in one call.
+//!   many artifacts in one call; [`Session::server`] opens the
+//!   multi-tenant serving runtime ([`crate::serve`]) preloaded with the
+//!   session's artifact and current parameters.
+//! * Artifacts carry a **forward batch ladder**
+//!   ([`Artifact::forward_variant`] / [`ForwardVariant`]): one lowered
+//!   forward program + cached [`crate::hw::ExecPlan`] per requested
+//!   batch size, shared by evaluation's partial chunks and every
+//!   serving engine on every board.
 //! * [`enum@Error`] is the crate-wide error: every layer's error type
 //!   folds into it via `#[from]`.
 //!
@@ -44,7 +51,7 @@ pub mod error;
 #[allow(clippy::module_inception)]
 pub mod session;
 
-pub use artifact::{Artifact, TensorHandle};
+pub use artifact::{Artifact, ForwardVariant, TensorHandle};
 pub use compiler::{CompileOptions, Compiler};
 pub use error::Error;
 pub use session::{Evaluation, Inference, NetJob, Session, Target, TrainSummary};

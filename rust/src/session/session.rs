@@ -15,13 +15,13 @@
 //! [`Session::read`] for programs that need exact control of every
 //! tensor (golden-model cross-checks, raw-program artifacts).
 
-use super::artifact::{Artifact, TensorHandle};
+use super::artifact::{Artifact, ForwardVariant, TensorHandle};
 use super::error::Error;
 use crate::cluster::leader::{self, ClusterConfig, ClusterReport, Job};
 use crate::hw::{FpgaDevice, MatrixMachine, RunStats};
 use crate::nn::dataset::{self, Dataset};
-use crate::nn::lowering::{lower_forward, LoweredMlp};
 use crate::nn::trainer::{LossPoint, TrainConfig, Trainer};
+use crate::serve;
 use std::sync::Arc;
 
 /// Where a session runs.
@@ -134,9 +134,15 @@ pub struct Session {
     /// Set once the batch-sampling RNG has been seeded from a train
     /// call's `cfg.seed`; later train calls continue the stream.
     sampler_seeded: bool,
-    /// Right-sized forward plan for the partial evaluation chunk
-    /// (inference-only artifacts; the trainer engine keeps its own).
-    fwd_rem: Option<(usize, LoweredMlp, MatrixMachine)>,
+    /// Cached right-sized engine for the partial evaluation chunk of
+    /// inference-only sessions (`(rows, variant, machine)`): the plan
+    /// comes from the artifact's forward ladder; the machine's state
+    /// (including its resident LUT) persists across evaluate calls, so
+    /// repeated evaluations charge the same cycles the trainer engine's
+    /// cached variants do. Parameters are refreshed from the session
+    /// machine on every pass (they may have been rebound through
+    /// handles).
+    fwd_rem: Option<(usize, Arc<ForwardVariant>, MatrixMachine)>,
 }
 
 impl Session {
@@ -215,6 +221,40 @@ impl Session {
             Engine::Trainable(t) => Some(t.weights()),
             Engine::Forward(_) => None,
         }
+    }
+
+    /// Current per-layer parameters for any net-shaped artifact:
+    /// trainable sessions read the trainer's on-device weights,
+    /// inference-only sessions read the forward program's weight/bias
+    /// tensors (whatever was last written through handles). `None` only
+    /// for raw-program artifacts.
+    fn current_params(&self) -> Option<(Vec<Vec<i16>>, Vec<Vec<i16>>)> {
+        match &self.engine {
+            Engine::Trainable(t) => Some(t.weights()),
+            Engine::Forward(m) => {
+                let n = self.artifact.net()?;
+                let w = n.forward.weights.iter().map(|&id| m.read_id(id).to_vec()).collect();
+                let b = n.forward.biases.iter().map(|&id| m.read_id(id).to_vec()).collect();
+                Some((w, b))
+            }
+        }
+    }
+
+    /// Open a multi-tenant serving runtime on `cfg` with this session's
+    /// artifact registered under its **current** parameters (trained
+    /// weights for trainable sessions, handle-written parameters for
+    /// inference-only ones). The registered net is id `0` of the new
+    /// server; register more artifacts on it for multi-tenant serving.
+    /// Served outputs are bit-identical to this session's `infer` on the
+    /// same rows (see DESIGN.md §Serving).
+    pub fn server(&self, cfg: serve::ServeConfig) -> Result<serve::Server, Error> {
+        let (w, b) = self.current_params().ok_or_else(|| Error::Unsupported {
+            verb: "server",
+            why: "raw-program artifacts have no network structure".into(),
+        })?;
+        let mut srv = serve::Server::open(cfg)?;
+        srv.register(Arc::clone(&self.artifact), &w, &b)?;
+        Ok(srv)
     }
 
     fn machine(&self) -> &MatrixMachine {
@@ -437,39 +477,44 @@ impl Session {
                 }
                 let f = n.spec.fixed;
                 let batch = n.batch;
+                // The partial remainder chunk runs on a right-sized
+                // forward-ladder variant from the artifact (compiled
+                // once per `(net, rows, device)`, shared with the
+                // serving runtime), cached in the session across
+                // evaluate calls and refreshed with the session
+                // machine's current parameters on every pass.
                 let rem = ds.len() % batch;
                 if rem != 0 {
                     if self.fwd_rem.as_ref().is_none_or(|(rows, _, _)| *rows != rem) {
-                        let lowered = lower_forward(&n.spec, rem)?;
-                        let machine = MatrixMachine::new(self.device, &lowered.program)?;
-                        self.fwd_rem = Some((rem, lowered, machine));
+                        let variant = self.artifact.forward_variant(rem)?;
+                        let machine = variant.machine(self.device)?;
+                        self.fwd_rem = Some((rem, variant, machine));
                     }
-                    // refresh the rem machine's parameters from the
-                    // session machine on every pass (they may have been
-                    // rebound since the last evaluate)
-                    let (_, lowered, machine) =
+                    let (_, variant, machine) =
                         self.fwd_rem.as_mut().expect("just built");
                     for l in 0..n.spec.layers.len() {
                         let w = m.read_id(n.forward.weights[l]).to_vec();
                         let b = m.read_id(n.forward.biases[l]).to_vec();
-                        machine.write_id(lowered.weights[l], &w)?;
-                        machine.write_id(lowered.biases[l], &b)?;
+                        machine.write_id(variant.lowered().weights[l], &w)?;
+                        machine.write_id(variant.lowered().biases[l], &b)?;
                     }
                 }
                 let mut stats = RunStats::default();
                 let mut correct = 0usize;
                 for r in dataset::chunk_ranges(ds.len(), batch) {
                     let qx = ds.encode_rows(r.clone(), f);
-                    let (machine, lowered) = if r.len() == batch {
-                        (&mut **m, &n.forward)
+                    let (machine, x_id, out_id) = if r.len() == batch {
+                        (&mut **m, n.forward.x, n.forward.out)
                     } else {
-                        let (_, lowered, machine) =
-                            self.fwd_rem.as_mut().expect("partial-chunk machine built above");
-                        (machine, &*lowered)
+                        let (_, variant, machine) = self
+                            .fwd_rem
+                            .as_mut()
+                            .expect("partial-chunk engine built above");
+                        (machine, variant.lowered().x, variant.lowered().out)
                     };
-                    machine.write_id(lowered.x, &qx)?;
+                    machine.write_id(x_id, &qx)?;
                     stats.add(&machine.execute());
-                    correct += ds.count_correct(r, machine.read_id(lowered.out), f);
+                    correct += ds.count_correct(r, machine.read_id(out_id), f);
                 }
                 Ok(Evaluation { accuracy: correct as f64 / ds.len().max(1) as f64, stats })
             }

@@ -10,6 +10,7 @@
 //! | L2 | unfused [`ExecPlan`] (one wave per source step) | bit-exact + identical [`crate::hw::RunStats`] |
 //! | L3 | fused [`ExecPlan`] via the Session API (+ structural microcode verify) | bit-exact + identical [`crate::hw::RunStats`] |
 //! | L4 | cluster runtime ([`crate::cluster::leader::execute`]) | bit-exact weights vs the board; deterministic across runs |
+//! | L5 | serving runtime ([`crate::serve::Server`]) | every request bit-exact vs a batch-1 `Session::infer` |
 //!
 //! The float oracle cannot be bit-exact against a 16-bit datapath; it is
 //! the wiring sanity check (a transposed weight or dropped layer shows up
@@ -46,6 +47,8 @@ pub enum Level {
     FusedPlan,
     /// L4: multi-FPGA cluster runtime.
     Cluster,
+    /// L5: multi-tenant batched serving runtime.
+    Serve,
 }
 
 impl std::fmt::Display for Level {
@@ -56,6 +59,7 @@ impl std::fmt::Display for Level {
             Level::UnfusedPlan => "unfused_plan",
             Level::FusedPlan => "fused_plan",
             Level::Cluster => "cluster",
+            Level::Serve => "serve",
         })
     }
 }
@@ -398,6 +402,96 @@ impl Differ {
         Ok(())
     }
 
+    // ------------------------------------------------------------ serving
+
+    /// Serving differential: the batched multi-tenant serving runtime
+    /// must return, for every request, exactly the lanes a sequential
+    /// batch-1 [`Session::infer`] produces with the same parameters —
+    /// micro-batching, bucket padding, and board placement must never
+    /// change a single bit.
+    pub fn run_serve(&self, c: &FuzzCase) -> Result<(), Divergence> {
+        use crate::serve::{ServeConfig, Server};
+        let spec = c.net.spec();
+        let (qw, qb) = c.net.params();
+        let qx = c.net.input();
+        let in_dim = spec.input_dim();
+
+        // Sequential reference: one batch-1 infer per request row.
+        let a1 = self
+            .compiler
+            .compile_spec(&spec, &CompileOptions::inference(1))
+            .map_err(|e| fail(Level::Serve, format!("batch-1 compile failed: {e}")))?;
+        let mut reference = Session::open(Arc::clone(&a1), Target::Board(self.device))
+            .map_err(|e| fail(Level::Serve, format!("reference open failed: {e}")))?;
+        for l in 0..spec.layers.len() {
+            for (name, data) in [(format!("w{l}"), &qw[l]), (format!("b{l}"), &qb[l])] {
+                let h = a1
+                    .tensor(&name)
+                    .map_err(|e| fail(Level::Serve, format!("handle {name}: {e}")))?;
+                reference
+                    .write(&h, data)
+                    .map_err(|e| fail(Level::Serve, format!("write {name}: {e}")))?;
+            }
+        }
+        let mut want = Vec::with_capacity(c.net.batch);
+        for row in qx.chunks(in_dim) {
+            want.push(
+                reference
+                    .infer(row)
+                    .map_err(|e| fail(Level::Serve, format!("reference infer: {e}")))?
+                    .output,
+            );
+        }
+
+        // The serving runtime: same rows as staggered requests,
+        // micro-batched over the case's board pool.
+        let max_batch = c.net.batch.max(2);
+        let artifact = self
+            .compiler
+            .compile_spec(&spec, &CompileOptions::serving(max_batch))
+            .map_err(|e| fail(Level::Serve, format!("serving compile failed: {e}")))?;
+        let cfg = ServeConfig {
+            boards: c.boards,
+            device: self.device.part.name.to_string(),
+            max_batch,
+            max_wait_cycles: c.sync_every as u64 * 7,
+            queue_cap: c.net.batch * 4 + 8,
+        };
+        let mut server = Server::open(cfg)
+            .map_err(|e| fail(Level::Serve, format!("server open failed: {e}")))?;
+        let nid = server
+            .register(Arc::clone(&artifact), &qw, &qb)
+            .map_err(|e| fail(Level::Serve, format!("register failed: {e}")))?;
+        for (i, row) in qx.chunks(in_dim).enumerate() {
+            let at = i as u64 * (1 + c.net.seed % 5);
+            server
+                .submit_at(at, nid, row)
+                .map_err(|e| fail(Level::Serve, format!("submit {i} failed: {e}")))?;
+        }
+        server.drain().map_err(|e| fail(Level::Serve, format!("drain failed: {e}")))?;
+        let mut got = server.take_completions();
+        got.sort_by_key(|r| r.id);
+        if got.len() != want.len() {
+            return Err(fail(
+                Level::Serve,
+                format!("{} completion(s) for {} request(s)", got.len(), want.len()),
+            ));
+        }
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            if g.output != *w {
+                return Err(fail(
+                    Level::Serve,
+                    format!(
+                        "request {i} (bucket {}): served output vs batch-1 Session::infer: {}",
+                        g.bucket,
+                        first_diff(&g.output, w)
+                    ),
+                ));
+            }
+        }
+        Ok(())
+    }
+
     // ------------------------------------------------------------ cluster
 
     /// Build the case's M jobs (same net, decorrelated seeds).
@@ -726,5 +820,15 @@ mod tests {
         let differ = Differ::default();
         let c = gen::fuzz_case().sample(&mut Rng::new(0xAB));
         differ.run_train(&c).unwrap_or_else(|d| panic!("{c:?}: {d}"));
+    }
+
+    #[test]
+    fn a_handful_of_serve_cases_are_bit_exact_vs_sequential_infer() {
+        let differ = Differ::default();
+        let mut r = Rng::new(0x5E57E);
+        for i in 0..4 {
+            let c = gen::fuzz_case().sample(&mut r);
+            differ.run_serve(&c).unwrap_or_else(|d| panic!("case {i} ({c:?}): {d}"));
+        }
     }
 }

@@ -179,7 +179,8 @@ impl FuzzReport {
     /// Failure-file body: `family seed  # divergence` lines, replayable
     /// with `mfnn fuzz --corpus <file>`.
     pub fn failures_file(&self) -> String {
-        let mut s = String::from("# failing fuzz seeds — replay with `mfnn fuzz --corpus <file>`\n");
+        let mut s =
+            String::from("# failing fuzz seeds — replay with `mfnn fuzz --corpus <file>`\n");
         for f in &self.failures {
             let _ = writeln!(s, "{} {}  # {}", f.family, f.seed, f.divergence);
         }
@@ -192,6 +193,7 @@ impl FuzzReport {
 /// point can never drift out of sync with what the fuzzer checks.
 fn run_net_family(differ: &Differ, c: &gen::FuzzCase) -> Result<(), Divergence> {
     differ.run_net(&c.net)?;
+    differ.run_serve(c)?;
     differ.run_train(c)?;
     differ.run_cluster(c)
 }

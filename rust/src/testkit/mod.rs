@@ -1,10 +1,11 @@
 //! Differential fuzzing & deterministic fault-injection testkit.
 //!
 //! The paper's claim is that one flexible structure can train/test *any*
-//! network on *any* number of FPGAs. The stack realises that at five
+//! network on *any* number of FPGAs. The stack realises that at six
 //! fidelity levels (float oracle → FastSim → unfused plan → fused plan →
-//! cluster), and this subsystem *generates* the scenarios that prove the
-//! levels agree — instead of trusting a handful of hand-picked nets:
+//! cluster → serving runtime), and this subsystem *generates* the
+//! scenarios that prove the levels agree — instead of trusting a handful
+//! of hand-picked nets:
 //!
 //! * [`gen`] — seeded case generators built on [`crate::prop::Gen`]:
 //!   random `MlpSpec`s with derived parameters/batches, raw vector
@@ -13,7 +14,10 @@
 //! * [`diff`] — the differential executor: every case through every
 //!   level via the Session API, asserting bit-identical outputs, trained
 //!   weights, and identical cycle accounting between fused and unfused
-//!   plans (the float oracle gets a quantisation tolerance band).
+//!   plans (the float oracle gets a quantisation tolerance band). The
+//!   serving level ([`Differ::run_serve`]) batches each case's rows
+//!   through [`crate::serve::Server`] and asserts every served output is
+//!   bit-identical to a batch-1 `Session::infer`.
 //! * Fault injection — [`crate::cluster::fault::FaultPlan`] schedules
 //!   deterministic worker death, post-checksum chunk corruption, and
 //!   delayed/reordered replies; [`Differ::run_faults`] asserts the

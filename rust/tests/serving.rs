@@ -1,0 +1,407 @@
+//! Acceptance tests of the multi-tenant batched serving runtime
+//! (DESIGN.md §Serving): bit-exactness of batched serving vs sequential
+//! `Session::infer`, determinism, backpressure, padding/metrics
+//! semantics, multi-tenant routing, and the pooled+batched ≥ 2×
+//! single-board-batch-1 simulated-throughput criterion.
+
+use mfnn::fixed::FixedSpec;
+use mfnn::hw::FpgaDevice;
+use mfnn::nn::dataset;
+use mfnn::nn::lut::ActKind;
+use mfnn::nn::mlp::{LutParams, MlpSpec};
+use mfnn::nn::trainer::TrainConfig;
+use mfnn::serve::{open_loop, seeded_params, Completion, ServeConfig, ServeError, Server};
+use mfnn::util::Rng;
+use mfnn::{Artifact, CompileOptions, Compiler, Session, Target};
+use std::sync::Arc;
+
+fn fixed() -> FixedSpec {
+    FixedSpec::q(10).saturating()
+}
+
+fn mk_spec(name: &str, dims: &[usize]) -> MlpSpec {
+    let f = fixed();
+    MlpSpec::from_dims(name, dims, ActKind::Relu, ActKind::Identity, f, LutParams::training(f))
+        .unwrap()
+}
+
+/// A batch-1 session with explicit parameters — the sequential serving
+/// reference every batched output must match bit-for-bit.
+fn reference_session(
+    compiler: &Compiler,
+    spec: &MlpSpec,
+    w: &[Vec<i16>],
+    b: &[Vec<i16>],
+) -> (Arc<Artifact>, Session) {
+    let artifact = compiler.compile_spec(spec, &CompileOptions::inference(1)).unwrap();
+    let mut session =
+        Session::open(Arc::clone(&artifact), Target::Board(FpgaDevice::selected())).unwrap();
+    for l in 0..spec.layers.len() {
+        let hw = artifact.tensor(&format!("w{l}")).unwrap();
+        let hb = artifact.tensor(&format!("b{l}")).unwrap();
+        session.write(&hw, &w[l]).unwrap();
+        session.write(&hb, &b[l]).unwrap();
+    }
+    (artifact, session)
+}
+
+#[test]
+fn batched_serving_is_bit_identical_to_sequential_infer() {
+    // 11 staggered requests over a 2-board pool with an 8-bucket ladder:
+    // full batches, a padded partial batch, every output bit-exact.
+    let compiler = Compiler::new();
+    let spec = mk_spec("bits", &[4, 12, 3]);
+    let (w, b) = seeded_params(&spec, 0xF00);
+    let (_, mut reference) = reference_session(&compiler, &spec, &w, &b);
+
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::serving(8)).unwrap();
+    let mut server = Server::open(ServeConfig {
+        boards: 2,
+        max_batch: 8,
+        max_wait_cycles: 16,
+        queue_cap: 64,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let nid = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+
+    let mut r = Rng::new(0xB17);
+    let rows: Vec<Vec<i16>> = (0..11)
+        .map(|_| (0..4).map(|_| fixed().from_f64(r.gen_f64() * 2.0 - 1.0)).collect())
+        .collect();
+    for (i, row) in rows.iter().enumerate() {
+        server.submit_at(i as u64 * 3, nid, row).unwrap();
+    }
+    let makespan = server.drain().unwrap();
+    assert!(makespan > 0);
+    let mut comps = server.take_completions();
+    comps.sort_by_key(|c| c.id);
+    assert_eq!(comps.len(), 11);
+    for (i, c) in comps.iter().enumerate() {
+        let want = reference.infer(&rows[i]).unwrap().output;
+        assert_eq!(c.output, want, "request {i} diverged (bucket {})", c.bucket);
+        assert!(c.completed > c.submitted || c.submitted == c.dispatched);
+    }
+    let report = server.report();
+    assert_eq!(report.total_completed(), 11);
+    assert_eq!(report.total_rejected(), 0);
+}
+
+#[test]
+fn session_server_serves_a_trained_net_bit_exactly() {
+    // Train through the Session front door, open a server with
+    // Session::server, and check a full bucket of served rows equals one
+    // batched Session::infer of the same rows.
+    let compiler = Compiler::new();
+    let spec = mk_spec("trained", &[2, 8, 2]);
+    let artifact =
+        compiler.compile_spec(&spec, &CompileOptions::training(8, 1.0 / 128.0)).unwrap();
+    let mut session =
+        Session::open(Arc::clone(&artifact), Target::Board(FpgaDevice::selected())).unwrap();
+    let ds = dataset::xor(64, 3);
+    let cfg = TrainConfig { batch: 8, lr: 1.0 / 128.0, steps: 40, seed: 9, log_every: 10 };
+    session.train(&ds, &cfg).unwrap();
+
+    let cfg = ServeConfig {
+        boards: 2,
+        max_batch: 8,
+        max_wait_cycles: 32,
+        ..ServeConfig::default()
+    };
+    let mut server = session.server(cfg).unwrap();
+    let f = spec.fixed;
+    let qx = ds.encode_rows(0..8, f);
+    for i in 0..8 {
+        server.submit_at(0, 0, &qx[i * 2..(i + 1) * 2]).unwrap();
+    }
+    server.drain().unwrap();
+    let mut comps = server.take_completions();
+    comps.sort_by_key(|c| c.id);
+    let served: Vec<i16> = comps.iter().flat_map(|c| c.output.clone()).collect();
+    let want = session.infer(&qx).unwrap().output;
+    assert_eq!(served, want, "served bucket diverged from batched Session::infer");
+    // all 8 arrived at cycle 0 ⇒ one full 8-row batch, fill 1.0
+    let report = server.report();
+    assert_eq!(report.nets[0].batches, 1);
+    assert!((report.nets[0].batch_fill() - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn serving_is_deterministic_across_runs() {
+    let compiler = Compiler::new();
+    let spec = mk_spec("det", &[3, 10, 2]);
+    let (w, b) = seeded_params(&spec, 42);
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::serving(4)).unwrap();
+    let workload = open_loop(48, 7, 3, &[3], fixed());
+    let run = || {
+        let mut server = Server::open(ServeConfig {
+            boards: 3,
+            max_batch: 4,
+            max_wait_cycles: 8,
+            queue_cap: 64,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let nid = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+        for q in &workload {
+            server.submit_at(q.at, nid, &q.row).unwrap();
+        }
+        server.drain().unwrap();
+        let comps: Vec<Completion> = server.take_completions();
+        (server.report().to_json(), comps)
+    };
+    let (json1, comps1) = run();
+    let (json2, comps2) = run();
+    assert_eq!(json1, json2, "metrics JSON must be identical across runs");
+    assert_eq!(comps1.len(), comps2.len());
+    for (a, c) in comps1.iter().zip(&comps2) {
+        assert_eq!(a.id, c.id);
+        assert_eq!(a.output, c.output);
+        assert_eq!(a.completed, c.completed);
+    }
+}
+
+#[test]
+fn overload_is_a_typed_rejection_not_a_hang() {
+    let compiler = Compiler::new();
+    let spec = mk_spec("ovl", &[2, 4, 2]);
+    let (w, b) = seeded_params(&spec, 1);
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::serving(8)).unwrap();
+    // queue_cap 2, high max_wait, big max_batch: the third same-cycle
+    // submit must be refused with the typed error.
+    let mut server = Server::open(ServeConfig {
+        boards: 1,
+        max_batch: 8,
+        max_wait_cycles: 1_000_000,
+        queue_cap: 2,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let nid = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+    let row = vec![0i16; 2];
+    server.submit_at(0, nid, &row).unwrap();
+    server.submit_at(0, nid, &row).unwrap();
+    let err = server.submit_at(0, nid, &row).unwrap_err();
+    assert!(
+        matches!(err, ServeError::Overloaded { net: 0, depth: 2, cap: 2 }),
+        "expected typed Overloaded, got {err}"
+    );
+    // the queued requests still complete (deadline flush) — no hang
+    server.drain().unwrap();
+    assert_eq!(server.take_completions().len(), 2);
+    assert_eq!(server.report().nets[0].rejected, 1);
+}
+
+#[test]
+fn backlog_of_formed_batches_still_triggers_overload() {
+    // All boards busy: full batches leave the batcher queue but sit in
+    // the server's ready backlog — admission must still refuse beyond
+    // queue_cap, because the contract bounds the whole undispatched
+    // backlog, not just the raw queue.
+    let compiler = Compiler::new();
+    let spec = mk_spec("backlog", &[2, 4, 2]);
+    let (w, b) = seeded_params(&spec, 3);
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::serving(2)).unwrap();
+    let mut server = Server::open(ServeConfig {
+        boards: 1,
+        max_batch: 2,
+        max_wait_cycles: 1_000_000,
+        queue_cap: 5,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let nid = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+    let row = vec![0i16; 2];
+    // requests 1–2 form a full batch that dispatches immediately (the
+    // board is free); 3–6 form two batches stuck behind the busy board;
+    // 7 queues. Backlog is now 5 = queue_cap, so request 8 is refused.
+    for _ in 0..7 {
+        server.submit_at(0, nid, &row).unwrap();
+    }
+    let err = server.submit_at(0, nid, &row).unwrap_err();
+    assert!(
+        matches!(err, ServeError::Overloaded { net: 0, depth: 5, cap: 5 }),
+        "expected backlog Overloaded, got {err}"
+    );
+    server.drain().unwrap();
+    assert_eq!(server.take_completions().len(), 7, "admitted requests must all complete");
+    assert_eq!(server.report().nets[0].rejected, 1);
+}
+
+#[test]
+fn typed_errors_for_bad_requests_and_clocks() {
+    let compiler = Compiler::new();
+    let spec = mk_spec("bad", &[2, 4, 2]);
+    let (w, b) = seeded_params(&spec, 2);
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::serving(4)).unwrap();
+    let mut server = Server::open(ServeConfig::default()).unwrap();
+    let nid = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+    assert!(matches!(
+        server.submit_at(0, nid + 1, &[0, 0]),
+        Err(ServeError::UnknownNet(_))
+    ));
+    assert!(matches!(
+        server.submit_at(0, nid, &[0, 0, 0]),
+        Err(ServeError::BadRow { want: 2, got: 3, .. })
+    ));
+    server.submit_at(10, nid, &[0, 0]).unwrap();
+    assert!(matches!(
+        server.submit_at(3, nid, &[0, 0]),
+        Err(ServeError::ClockSkew { at: 3, .. })
+    ));
+    // bad params at registration
+    let short_w = vec![vec![0i16; 1]; 2];
+    assert!(matches!(
+        server.register(Arc::clone(&artifact), &short_w, &b),
+        Err(ServeError::BadParams { layer: 0, what: "weights", .. })
+    ));
+    // bad config
+    assert!(matches!(
+        Server::open(ServeConfig { boards: 0, ..ServeConfig::default() }),
+        Err(ServeError::Config(_))
+    ));
+    assert!(matches!(
+        Server::open(ServeConfig { max_batch: 0, ..ServeConfig::default() }),
+        Err(ServeError::Config(_))
+    ));
+    assert!(matches!(
+        Server::open(ServeConfig { device: "nope".into(), ..ServeConfig::default() }),
+        Err(ServeError::UnknownDevice(_))
+    ));
+}
+
+#[test]
+fn partial_batches_pad_to_the_bucket_and_record_fill() {
+    let compiler = Compiler::new();
+    let spec = mk_spec("pad", &[3, 6, 2]);
+    let (w, b) = seeded_params(&spec, 5);
+    let (_, mut reference) = reference_session(&compiler, &spec, &w, &b);
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::serving(4)).unwrap();
+    let mut server = Server::open(ServeConfig {
+        boards: 1,
+        max_batch: 4,
+        // all 3 rows arrive at cycle 0 and flush together at the
+        // deadline: one partial batch riding the 4-bucket
+        max_wait_cycles: 5,
+        queue_cap: 16,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let nid = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+    let mut r = Rng::new(6);
+    let rows: Vec<Vec<i16>> = (0..3)
+        .map(|_| (0..3).map(|_| fixed().from_f64(r.gen_f64() * 2.0 - 1.0)).collect())
+        .collect();
+    for row in &rows {
+        server.submit_at(0, nid, row).unwrap();
+    }
+    server.drain().unwrap();
+    let mut comps = server.take_completions();
+    comps.sort_by_key(|c| c.id);
+    assert_eq!(comps.len(), 3);
+    for (i, c) in comps.iter().enumerate() {
+        assert_eq!(c.bucket, 4, "3 rows must ride the 4-bucket");
+        assert_eq!(c.batch_rows, 3);
+        let want = reference.infer(&rows[i]).unwrap().output;
+        assert_eq!(c.output, want, "padding perturbed request {i}");
+    }
+    let m = &server.report().nets[0];
+    assert_eq!(m.batches, 1);
+    assert!((m.batch_fill() - 0.75).abs() < 1e-12);
+}
+
+#[test]
+fn multi_tenant_requests_route_to_their_nets() {
+    let compiler = Compiler::new();
+    let spec_a = mk_spec("tenant_a", &[2, 6, 2]);
+    let spec_b = mk_spec("tenant_b", &[5, 8, 3]);
+    let (wa, ba) = seeded_params(&spec_a, 10);
+    let (wb, bb) = seeded_params(&spec_b, 11);
+    let (_, mut ref_a) = reference_session(&compiler, &spec_a, &wa, &ba);
+    let (_, mut ref_b) = reference_session(&compiler, &spec_b, &wb, &bb);
+    let art_a = compiler.compile_spec(&spec_a, &CompileOptions::serving(4)).unwrap();
+    let art_b = compiler.compile_spec(&spec_b, &CompileOptions::serving(4)).unwrap();
+    let mut server = Server::open(ServeConfig {
+        boards: 2,
+        max_batch: 4,
+        max_wait_cycles: 4,
+        queue_cap: 32,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let na = server.register(Arc::clone(&art_a), &wa, &ba).unwrap();
+    let nb = server.register(Arc::clone(&art_b), &wb, &bb).unwrap();
+    let workload = open_loop(24, 3, 2, &[2, 5], fixed());
+    let mut expected = Vec::new();
+    for q in &workload {
+        let id = server.submit_at(q.at, [na, nb][q.net], &q.row).unwrap();
+        let want = if q.net == 0 {
+            ref_a.infer(&q.row).unwrap().output
+        } else {
+            ref_b.infer(&q.row).unwrap().output
+        };
+        expected.push((id, q.net, want));
+    }
+    server.drain().unwrap();
+    let mut comps = server.take_completions();
+    comps.sort_by_key(|c| c.id);
+    assert_eq!(comps.len(), expected.len());
+    for (c, (id, net, want)) in comps.iter().zip(&expected) {
+        assert_eq!(c.id, *id);
+        assert_eq!(c.net, [na, nb][*net]);
+        assert_eq!(&c.output, want, "tenant {net} output diverged");
+    }
+    let report = server.report();
+    assert_eq!(report.nets.len(), 2);
+    assert!(report.nets[0].completed > 0 && report.nets[1].completed > 0);
+    assert!(report.nets[0].latency_p50() <= report.nets[0].latency_p99());
+}
+
+#[test]
+fn pooled_batched_throughput_beats_single_board_batch1_by_2x() {
+    // The serving acceptance criterion, asserted on simulated cycles
+    // (deterministic — safe to gate in CI): 4 boards with a 32-bucket
+    // ladder must serve a saturated workload at ≥ 2× the requests/sim-s
+    // of 1 board at batch 1.
+    let compiler = Compiler::new();
+    let spec = mk_spec("thr", &[4, 16, 3]);
+    let (w, b) = seeded_params(&spec, 77);
+    let workload = open_loop(128, 0, 1, &[4], fixed());
+    let run = |boards: usize, max_batch: usize| {
+        let artifact =
+            compiler.compile_spec(&spec, &CompileOptions::serving(max_batch)).unwrap();
+        let mut server = Server::open(ServeConfig {
+            boards,
+            max_batch,
+            max_wait_cycles: if max_batch == 1 { 0 } else { 64 },
+            queue_cap: workload.len() + 1,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let nid = server.register(artifact, &w, &b).unwrap();
+        for q in &workload {
+            server.submit_at(q.at, nid, &q.row).unwrap();
+        }
+        server.drain().unwrap();
+        let report = server.report();
+        assert_eq!(report.total_completed(), 128);
+        report.requests_per_sim_s()
+    };
+    let single_b1 = run(1, 1);
+    let pooled_b32 = run(4, 32);
+    assert!(
+        pooled_b32 >= 2.0 * single_b1,
+        "pooled+batched {pooled_b32:.0} req/s < 2× single-board batch-1 {single_b1:.0} req/s"
+    );
+}
+
+#[test]
+fn ladder_report_and_clock_accessors_are_consistent() {
+    let server = Server::open(ServeConfig { max_batch: 8, ..ServeConfig::default() }).unwrap();
+    assert_eq!(server.ladder(), &[1, 2, 4, 8]);
+    assert_eq!(server.now(), 0);
+    assert_eq!(server.device().part.name, "XC7S75-2");
+    let report = server.report();
+    assert_eq!(report.total_submitted(), 0);
+    assert_eq!(report.makespan_cycles, 0);
+}

@@ -39,15 +39,15 @@ fn random_program(seed: u64, fixed: FixedSpec) -> (Program, Vec<(usize, Vec<i16>
     let n_bufs = 4 + r.gen_range(3) as usize;
     let mut binds = Vec::new();
     for i in 0..n_bufs {
-        let id = p.buffer(&format!("buf{i}"), n, 1, if i == 0 { BufKind::Input } else { BufKind::Output });
+        let kind = if i == 0 { BufKind::Input } else { BufKind::Output };
+        let id = p.buffer(&format!("buf{i}"), n, 1, kind);
         let data: Vec<i16> = (0..n).map(|_| r.gen_range_i64(-6000, 6000) as i16).collect();
         binds.push((id, data));
     }
     let scalar = p.buffer("scalar", n_bufs, 1, BufKind::Output);
-    let lut_id = p.lut(
-        ActLut::build(ActKind::Tanh, false, fixed, AddrMode::Clamp, fixed.frac_bits.saturating_sub(4))
-            .with_interp(),
-    );
+    let shift = fixed.frac_bits.saturating_sub(4);
+    let lut_id =
+        p.lut(ActLut::build(ActKind::Tanh, false, fixed, AddrMode::Clamp, shift).with_interp());
     p.steps.push(Step::LoadLut(lut_id));
     let n_waves = 3 + r.gen_range(8) as usize;
     for wi in 0..n_waves {
@@ -128,7 +128,12 @@ fn multi_lane_waves_verify_structurally() {
             out: View::contiguous(o, i * n, n),
         })
         .collect();
-    p.steps.push(Step::Wave(Wave { op: Opcode::ElementMultiplication, vec_len: n, lut: None, lanes }));
+    p.steps.push(Step::Wave(Wave {
+        op: Opcode::ElementMultiplication,
+        vec_len: n,
+        lut: None,
+        lanes,
+    }));
     let data: Vec<i16> = (0..lanes_count * n).map(|_| r.gen_i16()).collect();
     let mut m = MatrixMachine::new(FpgaDevice::selected(), &p).unwrap();
     m.bind_named("a", &data).unwrap();
