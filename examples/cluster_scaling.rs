@@ -43,6 +43,7 @@ fn mk_jobs(compiler: &Compiler, m: usize, steps: usize) -> Vec<NetJob> {
                 cfg: TrainConfig { batch: 16, lr: LR, steps, seed, log_every: 50 },
                 train: Arc::new(train),
                 test: Arc::new(test),
+                resume: None,
             }
         })
         .collect()

@@ -54,6 +54,7 @@ fn job(
         cfg: TrainConfig { batch: 16, lr: LR, steps, seed, log_every: 20 },
         train: Arc::new(train),
         test: Arc::new(test),
+        resume: None,
     }
 }
 

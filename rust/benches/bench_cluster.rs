@@ -34,6 +34,7 @@ fn mk_jobs(compiler: &Compiler, m: usize, steps: usize) -> Vec<NetJob> {
                 artifact,
                 cfg: TrainConfig { batch: 16, lr: LR, steps, seed, log_every: 100 },
                 train: Arc::new(train), test: Arc::new(test),
+                resume: None,
             }
         })
         .collect()

@@ -1,0 +1,419 @@
+//! Deterministic training checkpoints — the versioned snapshot a run
+//! can be resumed from **bit-exactly**.
+//!
+//! A [`TrainCheckpoint`] captures everything the deterministic training
+//! pipeline needs to continue as if it had never stopped:
+//!
+//! * the quantised **parameters** (as a [`crate::nn::checkpoint`]
+//!   payload — weights, biases, fixed-point format, layer shapes);
+//! * the **sampler cursor** (`steps_done`): the batch sampler draws
+//!   exactly `batch` indices per step from a seed-determined stream, so
+//!   a fresh trainer built from the same seed and fast-forwarded by
+//!   `steps_done` steps ([`crate::nn::trainer::Trainer::skip_steps`])
+//!   continues the exact stream;
+//! * the **chunk cursor** and run identity (`seed`, `batch`,
+//!   `total_steps`, net name) so a resume against the wrong run is a
+//!   typed error instead of a silent divergence;
+//! * the **metrics so far**: loss-curve prefix, aggregated
+//!   [`RunStats`], and simulated compute seconds — so the resumed run's
+//!   final curve and stats equal the uninterrupted run's, bit for bit
+//!   (f64 additions replay in the same order).
+//!
+//! Format (little-endian, versioned, self-checking):
+//!
+//! ```text
+//! magic "MFCK"  u32 version  u32 name_len  name  u64 seed  u32 batch
+//! f64 lr  u32 replicas  u32 sync_every
+//! u64 total_steps  u64 steps_done  u64 params_checksum  f64 sim_compute_s
+//! RunStats (8 × u64)  u32 curve_len  curve_len × (u64 step, f64, f64)
+//! u32 params_len  params (nn::checkpoint bytes)
+//! ```
+//!
+//! `params_checksum` is [`super::bus::params_checksum`] over the decoded
+//! parameters — a truncated or bit-flipped snapshot fails closed.
+
+use super::bus::params_checksum;
+use crate::hw::RunStats;
+use crate::nn::checkpoint::{Checkpoint, CheckpointError};
+use crate::nn::trainer::LossPoint;
+use crate::nn::MlpSpec;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Cluster checkpoint format version.
+pub const VERSION: u32 = 1;
+const MAGIC: &[u8; 4] = b"MFCK";
+
+/// A deterministic, resumable snapshot of one training job at a chunk
+/// boundary. See the module docs for the exact resume contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainCheckpoint {
+    /// Net / job name the snapshot belongs to.
+    pub net: String,
+    /// Training seed of the run (weights init + sample stream).
+    pub seed: u64,
+    /// Mini-batch size (sampler draws per step).
+    pub batch: usize,
+    /// Learning rate of the run — resuming under a different lr would
+    /// silently change the gradient scale, so it is validated.
+    pub lr: f64,
+    /// Data-parallel replicas of the run this snapshot was cut from
+    /// (1 for board targets and single-board cluster jobs, the group
+    /// size for divided jobs). A divided resume must match it exactly.
+    pub replicas: usize,
+    /// Weight-sync cadence of a divided run (0 for single-board /
+    /// board-target snapshots). A divided resume must match it.
+    pub sync_every: usize,
+    /// Total steps of the run this snapshot was cut from.
+    pub total_steps: usize,
+    /// Steps completed at capture time — the sampler cursor.
+    pub steps_done: usize,
+    /// Loss-curve prefix up to `steps_done`.
+    pub curve: Vec<LossPoint>,
+    /// Machine stats aggregated up to `steps_done`.
+    pub stats: RunStats,
+    /// Simulated compute seconds accumulated up to `steps_done`.
+    pub sim_compute_s: f64,
+    /// The parameters at `steps_done` (weights/biases + format).
+    pub params: Checkpoint,
+}
+
+impl TrainCheckpoint {
+    /// Capture a snapshot from leader-held state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn capture(
+        spec: &MlpSpec,
+        run: &RunIdentity,
+        steps_done: usize,
+        curve: &[LossPoint],
+        stats: RunStats,
+        sim_compute_s: f64,
+        w: &[Vec<i16>],
+        b: &[Vec<i16>],
+    ) -> TrainCheckpoint {
+        let dims: Vec<(usize, usize)> =
+            spec.layers.iter().map(|l| (l.inputs, l.outputs)).collect();
+        TrainCheckpoint {
+            net: spec.name.clone(),
+            seed: run.seed,
+            batch: run.batch,
+            lr: run.lr,
+            replicas: run.replicas,
+            sync_every: run.sync_every,
+            total_steps: run.total_steps,
+            steps_done,
+            curve: curve.to_vec(),
+            stats,
+            sim_compute_s,
+            params: Checkpoint::capture(spec.fixed, &dims, w, b),
+        }
+    }
+
+    /// The snapshot's parameters as per-layer `(weights, biases)`.
+    pub fn weights(&self) -> (Vec<Vec<i16>>, Vec<Vec<i16>>) {
+        self.params.clone().into_params()
+    }
+
+    /// Serialise to bytes (see the module docs for the layout).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let (w, b) = self.weights();
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.net.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.net.as_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&(self.batch as u32).to_le_bytes());
+        out.extend_from_slice(&self.lr.to_bits().to_le_bytes());
+        out.extend_from_slice(&(self.replicas as u32).to_le_bytes());
+        out.extend_from_slice(&(self.sync_every as u32).to_le_bytes());
+        out.extend_from_slice(&(self.total_steps as u64).to_le_bytes());
+        out.extend_from_slice(&(self.steps_done as u64).to_le_bytes());
+        out.extend_from_slice(&params_checksum(&w, &b).to_le_bytes());
+        out.extend_from_slice(&self.sim_compute_s.to_bits().to_le_bytes());
+        for v in [
+            self.stats.cycles,
+            self.stats.dma_cycles,
+            self.stats.compute_cycles,
+            self.stats.lut_cycles,
+            self.stats.ring_cycles,
+            self.stats.waves,
+            self.stats.lane_ops,
+            self.stats.dma_bytes,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.curve.len() as u32).to_le_bytes());
+        for p in &self.curve {
+            out.extend_from_slice(&(p.step as u64).to_le_bytes());
+            out.extend_from_slice(&p.loss.to_bits().to_le_bytes());
+            out.extend_from_slice(&p.device_loss.to_bits().to_le_bytes());
+        }
+        let params = self.params.to_bytes();
+        out.extend_from_slice(&(params.len() as u32).to_le_bytes());
+        out.extend_from_slice(&params);
+        out
+    }
+
+    /// Parse from bytes; rejects bad magic/version, truncation,
+    /// trailing bytes, and parameter-checksum mismatches.
+    pub fn from_bytes(mut data: &[u8]) -> Result<TrainCheckpoint, CheckpointError> {
+        fn take<'a>(data: &mut &'a [u8], n: usize) -> Result<&'a [u8], CheckpointError> {
+            if data.len() < n {
+                return Err(CheckpointError::Format("truncated".into()));
+            }
+            let (head, rest) = data.split_at(n);
+            *data = rest;
+            Ok(head)
+        }
+        fn take_u32(data: &mut &[u8]) -> Result<u32, CheckpointError> {
+            Ok(u32::from_le_bytes(take(data, 4)?.try_into().unwrap()))
+        }
+        fn take_u64(data: &mut &[u8]) -> Result<u64, CheckpointError> {
+            Ok(u64::from_le_bytes(take(data, 8)?.try_into().unwrap()))
+        }
+        fn take_f64(data: &mut &[u8]) -> Result<f64, CheckpointError> {
+            Ok(f64::from_bits(take_u64(data)?))
+        }
+        if take(&mut data, 4)? != MAGIC {
+            return Err(CheckpointError::Format("bad magic (not a cluster checkpoint)".into()));
+        }
+        let version = take_u32(&mut data)?;
+        if version != VERSION {
+            return Err(CheckpointError::Format(format!("unsupported version {version}")));
+        }
+        let name_len = take_u32(&mut data)? as usize;
+        if name_len > 4096 {
+            return Err(CheckpointError::Format("implausible name length".into()));
+        }
+        let net = String::from_utf8(take(&mut data, name_len)?.to_vec())
+            .map_err(|_| CheckpointError::Format("name is not utf-8".into()))?;
+        let seed = take_u64(&mut data)?;
+        let batch = take_u32(&mut data)? as usize;
+        let lr = take_f64(&mut data)?;
+        let replicas = take_u32(&mut data)? as usize;
+        let sync_every = take_u32(&mut data)? as usize;
+        let total_steps = take_u64(&mut data)? as usize;
+        let steps_done = take_u64(&mut data)? as usize;
+        let checksum = take_u64(&mut data)?;
+        let sim_compute_s = take_f64(&mut data)?;
+        let stats = RunStats {
+            cycles: take_u64(&mut data)?,
+            dma_cycles: take_u64(&mut data)?,
+            compute_cycles: take_u64(&mut data)?,
+            lut_cycles: take_u64(&mut data)?,
+            ring_cycles: take_u64(&mut data)?,
+            waves: take_u64(&mut data)?,
+            lane_ops: take_u64(&mut data)?,
+            dma_bytes: take_u64(&mut data)?,
+        };
+        let curve_len = take_u32(&mut data)? as usize;
+        if curve_len > 1 << 24 {
+            return Err(CheckpointError::Format("implausible curve length".into()));
+        }
+        let mut curve = Vec::with_capacity(curve_len);
+        for _ in 0..curve_len {
+            curve.push(LossPoint {
+                step: take_u64(&mut data)? as usize,
+                loss: take_f64(&mut data)?,
+                device_loss: take_f64(&mut data)?,
+            });
+        }
+        let params_len = take_u32(&mut data)? as usize;
+        let params = Checkpoint::from_bytes(take(&mut data, params_len)?)?;
+        if !data.is_empty() {
+            return Err(CheckpointError::Format("trailing bytes".into()));
+        }
+        let ck = TrainCheckpoint {
+            net,
+            seed,
+            batch,
+            lr,
+            replicas,
+            sync_every,
+            total_steps,
+            steps_done,
+            curve,
+            stats,
+            sim_compute_s,
+            params,
+        };
+        let (w, b) = ck.weights();
+        if params_checksum(&w, &b) != checksum {
+            return Err(CheckpointError::Format(
+                "parameter checksum mismatch (corrupt snapshot)".into(),
+            ));
+        }
+        Ok(ck)
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<TrainCheckpoint, CheckpointError> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut buf)?;
+        TrainCheckpoint::from_bytes(&buf)
+    }
+
+    /// Validate this snapshot against the run it is being resumed into.
+    /// `run.replicas`/`run.sync_every` describe the resuming topology:
+    /// a divided resume must match the snapshot's exactly (a different
+    /// group size or sync cadence would silently diverge from the
+    /// uninterrupted run instead of reproducing it).
+    pub fn check_resume(&self, net: &str, run: &RunIdentity) -> Result<(), CheckpointError> {
+        if self.net != net {
+            return Err(CheckpointError::Format(format!(
+                "checkpoint is for net {:?}, resuming {net:?}",
+                self.net
+            )));
+        }
+        if self.seed != run.seed || self.batch != run.batch || self.lr != run.lr {
+            return Err(CheckpointError::Format(format!(
+                "checkpoint run identity (seed {}, batch {}, lr {}) does not \
+                 match the resume config (seed {}, batch {}, lr {})",
+                self.seed, self.batch, self.lr, run.seed, run.batch, run.lr
+            )));
+        }
+        if self.replicas != run.replicas || self.sync_every != run.sync_every {
+            return Err(CheckpointError::Format(format!(
+                "checkpoint topology ({} replica(s), sync_every {}) does not \
+                 match the resuming target ({} replica(s), sync_every {})",
+                self.replicas, self.sync_every, run.replicas, run.sync_every
+            )));
+        }
+        if self.steps_done > run.total_steps {
+            return Err(CheckpointError::Format(format!(
+                "checkpoint is at step {} but the run has only {} steps",
+                self.steps_done, run.total_steps
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// The identity of a training run a snapshot belongs to (or is resumed
+/// into): everything that shapes the deterministic trajectory besides
+/// the dataset and the net itself.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RunIdentity {
+    /// Training seed (weights init + sample stream).
+    pub seed: u64,
+    /// Mini-batch size.
+    pub batch: usize,
+    /// Learning rate.
+    pub lr: f64,
+    /// Data-parallel replicas (1 = single board / board target).
+    pub replicas: usize,
+    /// Weight-sync cadence (0 = not divided).
+    pub sync_every: usize,
+    /// Total steps of the run.
+    pub total_steps: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FixedSpec;
+    use crate::nn::lut::ActKind;
+    use crate::nn::mlp::LutParams;
+    use crate::util::Rng;
+
+    fn sample() -> TrainCheckpoint {
+        let fixed = FixedSpec::q(10).saturating();
+        let spec = MlpSpec::from_dims(
+            "ck",
+            &[3, 5, 2],
+            ActKind::Relu,
+            ActKind::Identity,
+            fixed,
+            LutParams::training(fixed),
+        )
+        .unwrap();
+        let mut r = Rng::new(9);
+        let w: Vec<Vec<i16>> = spec
+            .layers
+            .iter()
+            .map(|l| (0..l.inputs * l.outputs).map(|_| r.gen_i16()).collect())
+            .collect();
+        let b: Vec<Vec<i16>> =
+            spec.layers.iter().map(|l| (0..l.outputs).map(|_| r.gen_i16()).collect()).collect();
+        let curve = vec![
+            LossPoint { step: 0, loss: 1.25, device_loss: 1.5 },
+            LossPoint { step: 10, loss: 0.5, device_loss: 0.75 },
+        ];
+        let stats = RunStats { cycles: 123, waves: 4, lane_ops: 99, ..RunStats::default() };
+        let run = RunIdentity {
+            seed: 42,
+            batch: 16,
+            lr: 1.0 / 128.0,
+            replicas: 1,
+            sync_every: 0,
+            total_steps: 100,
+        };
+        TrainCheckpoint::capture(&spec, &run, 20, &curve, stats, 0.125, &w, &b)
+    }
+
+    #[test]
+    fn roundtrip_bytes_and_file() {
+        let ck = sample();
+        assert_eq!(TrainCheckpoint::from_bytes(&ck.to_bytes()).unwrap(), ck);
+        let dir = std::env::temp_dir().join(format!("mfnn_tck_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("job.mfck");
+        ck.save(&path).unwrap();
+        assert_eq!(TrainCheckpoint::load(&path).unwrap(), ck);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_corruption_and_truncation() {
+        let ck = sample();
+        let bytes = ck.to_bytes();
+        // bad magic
+        let mut b2 = bytes.clone();
+        b2[0] = b'X';
+        assert!(TrainCheckpoint::from_bytes(&b2).is_err());
+        // truncation
+        let mut b3 = bytes.clone();
+        b3.truncate(b3.len() - 5);
+        assert!(TrainCheckpoint::from_bytes(&b3).is_err());
+        // a flipped parameter lane fails the integrity checksum
+        let mut b4 = bytes.clone();
+        let n = b4.len();
+        b4[n - 3] ^= 0x40;
+        assert!(TrainCheckpoint::from_bytes(&b4).is_err());
+        // trailing garbage
+        let mut b5 = bytes;
+        b5.push(0);
+        assert!(TrainCheckpoint::from_bytes(&b5).is_err());
+    }
+
+    #[test]
+    fn resume_identity_is_validated() {
+        let ck = sample();
+        let run = RunIdentity {
+            seed: 42,
+            batch: 16,
+            lr: 1.0 / 128.0,
+            replicas: 1,
+            sync_every: 0,
+            total_steps: 100,
+        };
+        ck.check_resume("ck", &run).unwrap();
+        // exactly at the end is fine
+        ck.check_resume("ck", &RunIdentity { total_steps: 20, ..run }).unwrap();
+        assert!(ck.check_resume("other", &run).is_err());
+        assert!(ck.check_resume("ck", &RunIdentity { seed: 43, ..run }).is_err());
+        assert!(ck.check_resume("ck", &RunIdentity { batch: 8, ..run }).is_err());
+        assert!(ck.check_resume("ck", &RunIdentity { lr: 1.0 / 64.0, ..run }).is_err());
+        assert!(ck.check_resume("ck", &RunIdentity { replicas: 2, ..run }).is_err());
+        assert!(ck.check_resume("ck", &RunIdentity { sync_every: 10, ..run }).is_err());
+        assert!(ck.check_resume("ck", &RunIdentity { total_steps: 19, ..run }).is_err());
+    }
+}

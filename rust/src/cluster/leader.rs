@@ -1,10 +1,29 @@
 //! The cluster leader: schedules jobs onto boards (per §2's three cases),
 //! orchestrates data-parallel weight averaging for divided jobs, accounts
 //! simulated bus + compute time, and aggregates results.
+//!
+//! Since the recovery pass the leader also **survives board loss**: under
+//! the run's [`RecoveryPolicy`] (on by default) a dead or
+//! persistently-corrupting board is evicted and its outstanding chunks
+//! are rescheduled onto surviving boards — single-board jobs restart
+//! from their last leader-held checkpoint on the lowest-indexed
+//! surviving board, divided replicas are **adopted** by a surviving
+//! group member that rebuilds the replica's trainer from the last
+//! broadcast average and fast-forwards its sampler. Gradients still
+//! accumulate in chunk-index (replica) order, so recovered results are
+//! **bit-identical** to the fault-free run (DESIGN.md §Recovery).
+//! Checksum-failed chunks are re-read over the bus
+//! (`Cmd::ReadParams`) within a bounded retry budget before eviction.
+//! Worker-reported job errors and protocol violations still abort with
+//! the pre-recovery typed errors. On every exit path — success, abort,
+//! eviction — the leader closes each worker's command channel and joins
+//! its thread before returning (no leaked `fpga-worker-*` threads).
 
 use super::bus::{params_checksum, SystemBus};
+use super::checkpoint::{RunIdentity, TrainCheckpoint};
 use super::fault::FaultPlan;
 use super::metrics::{Metrics, MetricsSnapshot};
+use super::recovery::RecoveryPolicy;
 use super::scheduler::{schedule, Placement, PlacementMode};
 use super::worker::{Cmd, Reply, Worker, WorkerGone};
 use crate::hw::{FpgaDevice, RunStats};
@@ -29,6 +48,9 @@ pub struct ClusterConfig {
     /// fault differential injects worker death, chunk corruption, and
     /// delayed/reordered replies through this.
     pub faults: FaultPlan,
+    /// What the leader does when a board fails (retry / evict /
+    /// reschedule / checkpoint); defaults to recovery **on**.
+    pub recovery: RecoveryPolicy,
 }
 
 impl Default for ClusterConfig {
@@ -39,6 +61,7 @@ impl Default for ClusterConfig {
             bus: SystemBus::default(),
             sync_every: 20,
             faults: FaultPlan::none(),
+            recovery: RecoveryPolicy::default(),
         }
     }
 }
@@ -46,6 +69,36 @@ impl Default for ClusterConfig {
 /// Per-layer quantised parameters `(weights, biases)` as shipped over
 /// the bus.
 pub type Params = (Vec<Vec<i16>>, Vec<Vec<i16>>);
+
+/// A resume cursor for a job whose [`Job::initial`] parameters were
+/// captured at a checkpoint: the leader fast-forwards each trainer's
+/// batch sampler past `steps_done` steps and seeds the result's curve
+/// and stats with the snapshot's prefix, so the continued run is
+/// bit-identical to the uninterrupted one.
+#[derive(Debug, Clone, Default)]
+pub struct JobResume {
+    /// Steps already trained into [`Job::initial`].
+    pub steps_done: usize,
+    /// Loss-curve prefix up to `steps_done`.
+    pub curve: Vec<LossPoint>,
+    /// Machine stats aggregated up to `steps_done`.
+    pub stats: RunStats,
+    /// Simulated compute seconds up to `steps_done`.
+    pub sim_compute_s: f64,
+}
+
+impl JobResume {
+    /// Build the resume cursor encoded by a [`TrainCheckpoint`] (pair it
+    /// with `Job::initial = Some(ckpt.weights())`).
+    pub fn from_checkpoint(ck: &TrainCheckpoint) -> JobResume {
+        JobResume {
+            steps_done: ck.steps_done,
+            curve: ck.curve.clone(),
+            stats: ck.stats,
+            sim_compute_s: ck.sim_compute_s,
+        }
+    }
+}
 
 /// One training job.
 #[derive(Debug, Clone)]
@@ -64,6 +117,10 @@ pub struct Job {
     /// weights); `None` ⇒ each board initialises from `cfg.seed` (divided
     /// jobs then broadcast replica 0's init).
     pub initial: Option<Params>,
+    /// Resume cursor when `initial` came from a checkpoint (requires
+    /// `initial`; divided jobs additionally require the cursor to sit on
+    /// a weight-sync boundary).
+    pub resume: Option<JobResume>,
 }
 
 /// Result of one job.
@@ -71,13 +128,19 @@ pub struct Job {
 pub struct JobResult {
     /// Job name.
     pub name: String,
-    /// Boards it ran on.
+    /// Boards it ran on: the placement's group for divided jobs (even
+    /// when a member was evicted mid-run — its replica's chunks were
+    /// recomputed by the survivors), the final board for single-board
+    /// jobs (which differs from the placement when the job was
+    /// rescheduled).
     pub boards: Vec<usize>,
     /// Final test accuracy.
     pub accuracy: f64,
     /// Loss curve (replica 0's view for divided jobs).
     pub curve: Vec<LossPoint>,
-    /// Aggregated machine stats.
+    /// Aggregated machine stats — the successful chunk lineage only, so
+    /// a recovered run reports bit-identical stats to a fault-free one
+    /// (wasted work shows in board time and the recovery metrics).
     pub stats: RunStats,
     /// Simulated compute seconds (critical path over replicas).
     pub sim_compute_s: f64,
@@ -90,6 +153,9 @@ pub struct JobResult {
     pub weights: Vec<Vec<i16>>,
     /// Final per-layer biases.
     pub biases: Vec<Vec<i16>>,
+    /// Deterministic snapshots captured at chunk / sync boundaries when
+    /// [`RecoveryPolicy::checkpoint_every`] is non-zero (chronological).
+    pub checkpoints: Vec<TrainCheckpoint>,
 }
 
 /// Whole-run report.
@@ -119,15 +185,22 @@ pub enum ClusterError {
     #[error("job {0} on board {1}: {2}")]
     Worker(String, usize, String),
     /// A worker thread died (channel closed) while serving a job — the
-    /// typed surface of injected (or real) worker death; the leader
-    /// aborts the job instead of hanging on the dead channel.
+    /// typed surface of injected (or real) worker death. With recovery
+    /// off (or no surviving board left) the leader aborts the job with
+    /// this instead of hanging on the dead channel; with recovery on it
+    /// first evicts the board and reschedules the outstanding chunks.
     #[error("job {0}: board {1} worker died (channel closed)")]
     WorkerDied(String, usize),
     /// A returned parameter chunk failed its bus integrity check
-    /// ([`params_checksum`]); the leader rejects it rather than adopting
-    /// or averaging corrupted parameters.
+    /// ([`params_checksum`]) and every retry in the
+    /// [`RecoveryPolicy::max_chunk_retries`] budget failed too; the
+    /// leader rejects it rather than adopting or averaging corrupted
+    /// parameters.
     #[error("job {0}: board {1} returned a corrupt parameter chunk (checksum mismatch)")]
     CorruptChunk(String, usize),
+    /// A checkpoint/resume request is inconsistent with the job.
+    #[error("bad checkpoint/resume: {0}")]
+    Checkpoint(String),
     /// No jobs given.
     #[error("no jobs")]
     NoJobs,
@@ -174,9 +247,11 @@ pub fn execute(cfg: &ClusterConfig, jobs: &[Job]) -> Result<ClusterReport, Clust
     let wall0 = std::time::Instant::now();
     let metrics = Metrics::shared();
     let placement = schedule(jobs.len(), cfg.boards);
-    // Workers are moved into the orchestrator thread that exclusively
-    // drives them (board queues / board groups are disjoint), because the
-    // reply receiver is single-consumer.
+    // Workers are moved into the orchestrator threads that exclusively
+    // drive them (board queues / board groups are disjoint), because the
+    // reply receiver is single-consumer. Every worker comes back to this
+    // frame — via the thread result or `worker_slots` — so the explicit
+    // shutdown pass below joins all of them on every exit path.
     let mut worker_slots: Vec<Option<Worker>> = (0..cfg.boards)
         .map(|b| Some(Worker::spawn(b, device, Arc::clone(&metrics), cfg.faults.clone())))
         .collect();
@@ -184,76 +259,36 @@ pub fn execute(cfg: &ClusterConfig, jobs: &[Job]) -> Result<ClusterReport, Clust
     let mut board_time = vec![0.0f64; cfg.boards];
     let mut results: Vec<Option<JobResult>> = (0..jobs.len()).map(|_| None).collect();
 
-    match placement.mode {
-        PlacementMode::Sequential | PlacementMode::OneToOne => {
-            // Per-board queues run concurrently; jobs within a queue run
-            // in order. Orchestrate each board from its own leader thread.
-            std::thread::scope(|s| {
-                let mut handles = Vec::new();
-                for (b, queue) in placement.queues.iter().enumerate() {
-                    let worker = worker_slots[b].take().expect("board used once");
-                    let metrics = Arc::clone(&metrics);
-                    let bus = cfg.bus;
-                    let jobs_ref = jobs;
-                    let queue = queue.clone();
-                    type QueueOut = Result<(f64, Vec<(usize, JobResult)>), ClusterError>;
-                    handles.push(s.spawn(move || -> QueueOut {
-                        let mut t = 0.0f64;
-                        let mut out = Vec::new();
-                        for j in queue {
-                            let (r, dt) =
-                                run_single(&worker, b, &jobs_ref[j], j, &bus, &metrics)?;
-                            t += dt;
-                            out.push((j, r));
-                        }
-                        Ok((t, out))
-                    }));
-                }
-                for (b, h) in handles.into_iter().enumerate() {
-                    let (t, rs) = h.join().expect("leader thread panicked")?;
-                    board_time[b] += t;
-                    for (j, r) in rs {
-                        results[j] = Some(r);
-                    }
-                }
-                Ok::<(), ClusterError>(())
-            })?;
-        }
-        PlacementMode::Divided => {
-            // Each job owns a group of boards; groups run concurrently.
-            std::thread::scope(|s| {
-                let mut handles = Vec::new();
-                for (j, group) in placement.groups.iter().enumerate() {
-                    let group_workers: Vec<Worker> =
-                        group
-                            .iter()
-                            .map(|&b| worker_slots[b].take().expect("board used once"))
-                            .collect();
-                    let metrics = Arc::clone(&metrics);
-                    let bus = cfg.bus;
-                    let job = &jobs[j];
-                    let sync_every = cfg.sync_every;
-                    let group = group.clone();
-                    handles.push(s.spawn(
-                        move || -> Result<(Vec<f64>, JobResult), ClusterError> {
-                            let refs: Vec<&Worker> = group_workers.iter().collect();
-                            run_divided(&refs, &group, job, j, &bus, sync_every, &metrics)
-                        },
-                    ));
-                }
-                for (j, h) in handles.into_iter().enumerate() {
-                    let (times, r) = h.join().expect("leader thread panicked")?;
-                    for (k, &b) in placement.groups[j].iter().enumerate() {
-                        board_time[b] += times[k];
-                    }
-                    results[j] = Some(r);
-                }
-                Ok::<(), ClusterError>(())
-            })?;
-        }
-    }
+    let outcome = match placement.mode {
+        PlacementMode::Sequential | PlacementMode::OneToOne => run_queues(
+            cfg,
+            jobs,
+            &placement,
+            &mut worker_slots,
+            &mut board_time,
+            &mut results,
+            &metrics,
+        ),
+        PlacementMode::Divided => run_groups(
+            cfg,
+            jobs,
+            &placement,
+            &mut worker_slots,
+            &mut board_time,
+            &mut results,
+            &metrics,
+        ),
+    };
 
-    drop(worker_slots);
+    // Leak-proof teardown (also on the error path): close every
+    // remaining command channel and join every surviving worker thread
+    // before returning. Evicted workers were already shut down at
+    // eviction time.
+    for w in worker_slots.iter_mut().filter_map(Option::take) {
+        w.shutdown();
+    }
+    outcome?;
+
     let results: Vec<JobResult> = results.into_iter().map(Option::unwrap).collect();
     let makespan_s = board_time.iter().cloned().fold(0.0, f64::max);
     Ok(ClusterReport {
@@ -271,6 +306,512 @@ fn dataset_bytes(ds: &Dataset) -> u64 {
     (ds.len() * (ds.dim() + ds.classes)) as u64 * 2
 }
 
+// ------------------------------------------------------------------
+// Sequential / OneToOne orchestration with recovery passes
+// ------------------------------------------------------------------
+
+/// One job awaiting redispatch after a board failure.
+struct PendingJob {
+    job: usize,
+    /// Progress to resume from (`None` = from scratch / its own resume
+    /// point).
+    ckpt: Option<LeaderCkpt>,
+    /// Whether the job had actually started on the failed board — only
+    /// then does a redispatch recompute lost work
+    /// (`metrics.chunks_rescheduled`); queued-behind jobs just run
+    /// normally elsewhere.
+    started: bool,
+}
+
+/// A board's queue stopped early: the typed error, whether the board
+/// fault is recoverable (death / persistent corruption ⇒ evict +
+/// reschedule) and the jobs left outstanding with their progress.
+struct QueueFailure {
+    err: ClusterError,
+    retryable: bool,
+    pending: Vec<PendingJob>,
+}
+
+/// Phase 1: every board runs its static queue concurrently. Phase 2
+/// (serial, deterministic): outstanding jobs of failed boards are
+/// redispatched in job order onto the lowest-indexed surviving board,
+/// resuming from their last leader-held checkpoint.
+fn run_queues(
+    cfg: &ClusterConfig,
+    jobs: &[Job],
+    placement: &Placement,
+    worker_slots: &mut [Option<Worker>],
+    board_time: &mut [f64],
+    results: &mut [Option<JobResult>],
+    metrics: &Arc<Metrics>,
+) -> Result<(), ClusterError> {
+    let policy = &cfg.recovery;
+    let bus = cfg.bus;
+    type QueueOut = (Worker, f64, Vec<(usize, JobResult)>, Option<QueueFailure>);
+    let outs: Vec<(usize, QueueOut)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (b, queue) in placement.queues.iter().enumerate() {
+            let worker = worker_slots[b].take().expect("board used once");
+            let metrics = Arc::clone(metrics);
+            let queue = queue.clone();
+            handles.push((
+                b,
+                s.spawn(move || -> QueueOut {
+                    let mut time = 0.0f64;
+                    let mut done = Vec::new();
+                    for (idx, &j) in queue.iter().enumerate() {
+                        match run_single_on(
+                            &worker, b, &jobs[j], j, &bus, &metrics, policy, None,
+                        ) {
+                            Ok((r, dt)) => {
+                                time += dt;
+                                done.push((j, r));
+                            }
+                            Err(f) => {
+                                time += f.time_spent;
+                                let mut pending =
+                                    vec![PendingJob { job: j, ckpt: f.ckpt, started: true }];
+                                pending.extend(queue[idx + 1..].iter().map(|&j2| {
+                                    PendingJob { job: j2, ckpt: None, started: false }
+                                }));
+                                let failure = QueueFailure {
+                                    err: f.err,
+                                    retryable: f.retryable,
+                                    pending,
+                                };
+                                return (worker, time, done, Some(failure));
+                            }
+                        }
+                    }
+                    (worker, time, done, None)
+                }),
+            ));
+        }
+        handles
+            .into_iter()
+            .map(|(b, h)| (b, h.join().expect("leader thread panicked")))
+            .collect()
+    });
+
+    // Merge phase-1 outcomes; failed boards are evicted (shut down now).
+    let mut pending: Vec<PendingJob> = Vec::new();
+    let mut last_err: Option<ClusterError> = None;
+    let mut fatal: Option<ClusterError> = None;
+    for (b, (worker, time, done, failure)) in outs {
+        board_time[b] += time;
+        for (j, r) in done {
+            results[j] = Some(r);
+        }
+        match failure {
+            None => worker_slots[b] = Some(worker),
+            Some(f) => {
+                // Evicted: close + join its thread immediately.
+                worker.shutdown();
+                if f.retryable && policy.reschedule {
+                    Metrics::add(&metrics.boards_evicted, 1);
+                    pending.extend(f.pending);
+                    last_err = Some(f.err);
+                } else if fatal.is_none() {
+                    fatal = Some(f.err);
+                }
+            }
+        }
+    }
+    if let Some(e) = fatal {
+        return Err(e);
+    }
+    pending.sort_by_key(|p| p.job);
+
+    // Phase 2: serial recovery passes (deterministic board choice).
+    while !pending.is_empty() {
+        let p = pending.remove(0);
+        let Some(b) = worker_slots.iter().position(Option::is_some) else {
+            return Err(last_err.expect("pending work implies a recorded failure"));
+        };
+        if p.started {
+            // The failed board's in-flight chunk recomputes here.
+            Metrics::add(&metrics.chunks_rescheduled, 1);
+        }
+        let worker = worker_slots[b].as_ref().expect("chosen alive");
+        match run_single_on(worker, b, &jobs[p.job], p.job, &bus, metrics, policy, p.ckpt) {
+            Ok((r, dt)) => {
+                board_time[b] += dt;
+                results[p.job] = Some(r);
+            }
+            Err(f) => {
+                board_time[b] += f.time_spent;
+                // Evict this board too and keep the job's progress.
+                worker_slots[b].take().expect("chosen alive").shutdown();
+                if !(f.retryable && policy.reschedule) {
+                    return Err(f.err);
+                }
+                Metrics::add(&metrics.boards_evicted, 1);
+                last_err = Some(f.err);
+                pending.insert(0, PendingJob { job: p.job, ckpt: f.ckpt, started: true });
+            }
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------
+// One job on one board, chunked, with retry/eviction classification
+// ------------------------------------------------------------------
+
+/// Leader-held progress of a single-board job — everything needed to
+/// resume it bit-exactly on another board.
+struct LeaderCkpt {
+    steps_done: usize,
+    w: Vec<Vec<i16>>,
+    b: Vec<Vec<i16>>,
+    curve: Vec<LossPoint>,
+    stats: RunStats,
+    compute_s: f64,
+    /// Durable snapshots captured so far (threaded through failures so
+    /// a redispatched job's `JobResult.checkpoints` stays complete; the
+    /// live list is kept in [`SingleRun`] and only moved here — never
+    /// cloned per chunk).
+    checkpoints: Vec<TrainCheckpoint>,
+}
+
+/// Why (and how recoverably) a single-board job stopped.
+struct SingleFailure {
+    err: ClusterError,
+    /// Death / persistent corruption — evict the board and reschedule.
+    /// Worker-reported job errors and protocol violations are not.
+    retryable: bool,
+    /// Progress to resume from (falls back to the job's own resume
+    /// point, or scratch).
+    ckpt: Option<LeaderCkpt>,
+    /// Simulated board time consumed before the failure.
+    time_spent: f64,
+}
+
+/// One received chunk (curve/stats are always trustworthy — only the
+/// parameter lanes are subject to in-transit corruption and retries).
+struct ChunkData {
+    curve: Vec<LossPoint>,
+    stats: RunStats,
+    sim_s: f64,
+    w: Vec<Vec<i16>>,
+    b: Vec<Vec<i16>>,
+}
+
+/// Run one job on one board (OneToOne / Sequential path, and the
+/// recovery redispatch), chunked at the policy's checkpoint cadence,
+/// optionally starting from a leader checkpoint or the job's own
+/// resume point.
+#[allow(clippy::too_many_arguments)]
+fn run_single_on(
+    worker: &Worker,
+    board: usize,
+    job: &Job,
+    job_id: usize,
+    bus: &SystemBus,
+    metrics: &Metrics,
+    policy: &RecoveryPolicy,
+    start: Option<LeaderCkpt>,
+) -> Result<(JobResult, f64), SingleFailure> {
+    let mut run = SingleRun {
+        worker,
+        board,
+        job,
+        job_id,
+        bus,
+        metrics,
+        policy,
+        ckpt: None,
+        checkpoints: Vec::new(),
+        time: 0.0,
+    };
+    let mut start = match start {
+        Some(c) => Some(c),
+        None => match start_ckpt(job) {
+            Ok(c) => c,
+            Err(e) => {
+                return Err(SingleFailure { err: e, retryable: false, ckpt: None, time_spent: 0.0 })
+            }
+        },
+    };
+    if let Some(c) = &mut start {
+        run.checkpoints = std::mem::take(&mut c.checkpoints);
+    }
+    run.ckpt = start;
+    match run.drive() {
+        Ok(out) => Ok(out),
+        Err((err, retryable)) => Err(SingleFailure {
+            err,
+            retryable,
+            ckpt: run.ckpt.take().map(|mut c| {
+                c.checkpoints = std::mem::take(&mut run.checkpoints);
+                c
+            }),
+            time_spent: run.time,
+        }),
+    }
+}
+
+/// Validate a job's resume point (shared by the single-board and
+/// divided paths; the divided path adds its sync-boundary check on
+/// top).
+fn validate_resume(job: &Job) -> Result<(), ClusterError> {
+    let Some(r) = &job.resume else { return Ok(()) };
+    if job.initial.is_none() {
+        return Err(ClusterError::Checkpoint(format!(
+            "job {:?} resumes at step {} but carries no initial parameters",
+            job.name, r.steps_done
+        )));
+    }
+    if r.steps_done > job.cfg.steps {
+        return Err(ClusterError::Checkpoint(format!(
+            "job {:?} resumes at step {} of a {}-step run",
+            job.name, r.steps_done, job.cfg.steps
+        )));
+    }
+    Ok(())
+}
+
+/// Convert a job's own resume point into the leader checkpoint shape
+/// (validated).
+fn start_ckpt(job: &Job) -> Result<Option<LeaderCkpt>, ClusterError> {
+    validate_resume(job)?;
+    let Some(r) = &job.resume else { return Ok(None) };
+    let (w, b) = job.initial.clone().expect("validated above");
+    Ok(Some(LeaderCkpt {
+        steps_done: r.steps_done,
+        w,
+        b,
+        curve: r.curve.clone(),
+        stats: r.stats,
+        compute_s: r.sim_compute_s,
+        checkpoints: Vec::new(),
+    }))
+}
+
+struct SingleRun<'a> {
+    worker: &'a Worker,
+    board: usize,
+    job: &'a Job,
+    job_id: usize,
+    bus: &'a SystemBus,
+    metrics: &'a Metrics,
+    policy: &'a RecoveryPolicy,
+    /// Live progress, read back by [`run_single_on`] on failure.
+    ckpt: Option<LeaderCkpt>,
+    /// Durable snapshots captured so far (moved, not cloned, into the
+    /// failure checkpoint / the final [`JobResult`]).
+    checkpoints: Vec<TrainCheckpoint>,
+    /// Simulated board time consumed so far.
+    time: f64,
+}
+
+impl SingleRun<'_> {
+    fn gone(&self) -> (ClusterError, bool) {
+        (ClusterError::WorkerDied(self.job.name.clone(), self.board), true)
+    }
+
+    fn fatal(&self, message: String) -> (ClusterError, bool) {
+        (ClusterError::Worker(self.job.name.clone(), self.board, message), false)
+    }
+
+    fn send(&self, cmd: Cmd) -> Result<(), (ClusterError, bool)> {
+        self.worker.send(cmd).map_err(|_| self.gone())
+    }
+
+    fn ready(&self) -> Result<(), (ClusterError, bool)> {
+        match self.worker.recv().map_err(|_| self.gone())? {
+            Reply::Ready { .. } => Ok(()),
+            Reply::Error { message, .. } => Err(self.fatal(message)),
+            other => Err(self.fatal(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Receive a chunk reply; on checksum failure re-read the parameters
+    /// within the retry budget, then classify the board as
+    /// persistently-failing.
+    fn recv_chunk(&self) -> Result<ChunkData, (ClusterError, bool)> {
+        match self.worker.recv().map_err(|_| self.gone())? {
+            Reply::ChunkDone { curve, stats, sim_seconds, w, b, checksum, .. } => {
+                if params_checksum(&w, &b) == checksum {
+                    return Ok(ChunkData { curve, stats, sim_s: sim_seconds, w, b });
+                }
+                for _ in 0..self.policy.max_chunk_retries {
+                    Metrics::add(&self.metrics.chunk_retries, 1);
+                    self.send(Cmd::ReadParams { job: self.job_id })?;
+                    match self.worker.recv().map_err(|_| self.gone())? {
+                        Reply::Params { w: rw, b: rb, checksum: rc, .. } => {
+                            if params_checksum(&rw, &rb) == rc {
+                                return Ok(ChunkData {
+                                    curve,
+                                    stats,
+                                    sim_s: sim_seconds,
+                                    w: rw,
+                                    b: rb,
+                                });
+                            }
+                        }
+                        Reply::Error { message, .. } => return Err(self.fatal(message)),
+                        other => {
+                            return Err(self.fatal(format!("unexpected reply {other:?}")))
+                        }
+                    }
+                }
+                Err((
+                    ClusterError::CorruptChunk(self.job.name.clone(), self.board),
+                    true,
+                ))
+            }
+            Reply::Error { message, .. } => Err(self.fatal(message)),
+            other => Err(self.fatal(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    fn drive(&mut self) -> Result<(JobResult, f64), (ClusterError, bool)> {
+        let job = self.job;
+        // Ship program + params + dataset.
+        let up_bytes = job.spec.param_bytes() + dataset_bytes(&job.train_data);
+        let mut bus_s = self.bus.transfer_s(up_bytes);
+        Metrics::add(&self.metrics.bus_bytes, up_bytes);
+        self.time += bus_s;
+
+        self.send(Cmd::NewTrainer {
+            job: self.job_id,
+            spec: job.spec.clone(),
+            cfg: job.cfg.clone(),
+        })?;
+        self.ready()?;
+        if let Some(ck) = &self.ckpt {
+            self.send(Cmd::SetWeights { job: self.job_id, w: ck.w.clone(), b: ck.b.clone() })?;
+            self.ready()?;
+            if ck.steps_done > 0 {
+                self.send(Cmd::SkipSamples { job: self.job_id, steps: ck.steps_done })?;
+                self.ready()?;
+            }
+        } else if let Some((w0, b0)) = &job.initial {
+            self.send(Cmd::SetWeights { job: self.job_id, w: w0.clone(), b: b0.clone() })?;
+            self.ready()?;
+        }
+
+        let total = job.cfg.steps;
+        let mut done = self.ckpt.as_ref().map_or(0, |c| c.steps_done);
+        let every = self.policy.checkpoint_every;
+
+        // `self.ckpt` is the single live accumulator (curve/stats grow
+        // in place — never re-cloned per chunk); it stays `None` until
+        // real progress exists, so a pre-first-chunk failure restarts
+        // from scratch / the job's own resume point. When no chunk runs
+        // at all (steps-0 jobs) a zero-step probe chunk fetches the
+        // parameters (the pre-recovery trace).
+        if done >= total && self.ckpt.is_none() {
+            self.send(Cmd::TrainChunk {
+                job: self.job_id,
+                data: Arc::clone(&job.train_data),
+                steps: 0,
+            })?;
+            let chunk = self.recv_chunk()?;
+            self.time += chunk.sim_s;
+            self.absorb(chunk, done, done);
+        }
+        while done < total {
+            let steps = if every > 0 { every.min(total - done) } else { total - done };
+            self.send(Cmd::TrainChunk {
+                job: self.job_id,
+                data: Arc::clone(&job.train_data),
+                steps,
+            })?;
+            let chunk = self.recv_chunk()?;
+            self.time += chunk.sim_s;
+            self.absorb(chunk, done, done + steps);
+            done += steps;
+            if every > 0 {
+                let run = RunIdentity {
+                    seed: job.cfg.seed,
+                    batch: job.cfg.batch,
+                    lr: job.cfg.lr,
+                    replicas: 1,
+                    sync_every: 0,
+                    total_steps: total,
+                };
+                let ck = self.ckpt.as_ref().expect("absorbed above");
+                let snap = TrainCheckpoint::capture(
+                    &job.spec, &run, done, &ck.curve, ck.stats, ck.compute_s, &ck.w, &ck.b,
+                );
+                self.checkpoints.push(snap);
+                Metrics::add(&self.metrics.checkpoints_captured, 1);
+            }
+        }
+
+        self.send(Cmd::Evaluate { job: self.job_id, data: Arc::clone(&job.test_data) })?;
+        let (accuracy, eval_stats, eval_s) = match self.worker.recv().map_err(|_| self.gone())? {
+            Reply::EvalDone { accuracy, stats, sim_seconds, .. } => {
+                (accuracy, stats, sim_seconds)
+            }
+            Reply::Error { message, .. } => return Err(self.fatal(message)),
+            other => return Err(self.fatal(format!("unexpected reply {other:?}"))),
+        };
+        self.time += eval_s;
+
+        // Results readback.
+        let down = job.spec.param_bytes();
+        let down_s = self.bus.transfer_s(down);
+        bus_s += down_s;
+        self.time += down_s;
+        Metrics::add(&self.metrics.bus_bytes, down);
+        Metrics::add(&self.metrics.jobs_completed, 1);
+
+        // Evaluation succeeded — no failure can follow, so the live
+        // accumulator moves (not clones) into the result.
+        let mut ck = self.ckpt.take().expect("progress exists after training");
+        ck.stats.add(&eval_stats);
+        Ok((
+            JobResult {
+                name: job.name.clone(),
+                boards: vec![self.board],
+                accuracy,
+                curve: ck.curve,
+                stats: ck.stats,
+                sim_compute_s: ck.compute_s + eval_s,
+                sim_bus_s: bus_s,
+                steps: total,
+                weights: ck.w,
+                biases: ck.b,
+                checkpoints: std::mem::take(&mut self.checkpoints),
+            },
+            self.time,
+        ))
+    }
+
+    /// Fold a received chunk into the live progress accumulator:
+    /// curve points shift by `from` (the chunk's absolute start step),
+    /// stats/compute accumulate, the cursor moves to `to`, and the
+    /// chunk's parameters become the current ones.
+    fn absorb(&mut self, chunk: ChunkData, from: usize, to: usize) {
+        let ck = self.ckpt.get_or_insert_with(|| LeaderCkpt {
+            steps_done: 0,
+            w: Vec::new(),
+            b: Vec::new(),
+            curve: Vec::new(),
+            stats: RunStats::default(),
+            compute_s: 0.0,
+            checkpoints: Vec::new(),
+        });
+        ck.curve.extend(chunk.curve.into_iter().map(|mut p| {
+            p.step += from;
+            p
+        }));
+        ck.stats.add(&chunk.stats);
+        ck.compute_s += chunk.sim_s;
+        ck.steps_done = to;
+        ck.w = chunk.w;
+        ck.b = chunk.b;
+    }
+}
+
+// ------------------------------------------------------------------
+// Inference serving entry (unchanged protocol)
+// ------------------------------------------------------------------
+
+#[cfg(test)]
 fn expect_chunk(
     worker: &Worker,
     job_name: &str,
@@ -323,6 +864,7 @@ pub fn infer_on(
     }
 }
 
+#[cfg(test)]
 fn expect_ready(worker: &Worker, job_name: &str, board: usize) -> Result<(), ClusterError> {
     match worker.recv().map_err(died(job_name))? {
         Reply::Ready { .. } => Ok(()),
@@ -337,225 +879,652 @@ fn expect_ready(worker: &Worker, job_name: &str, board: usize) -> Result<(), Clu
     }
 }
 
-/// Run one job on one board (OneToOne / Sequential path).
-fn run_single(
-    worker: &Worker,
-    board: usize,
-    job: &Job,
-    job_id: usize,
-    bus: &SystemBus,
-    metrics: &Metrics,
-) -> Result<(JobResult, f64), ClusterError> {
-    // Ship program + params + dataset.
-    let up_bytes = job.spec.param_bytes() + dataset_bytes(&job.train_data);
-    let mut bus_s = bus.transfer_s(up_bytes);
-    Metrics::add(&metrics.bus_bytes, up_bytes);
+// ------------------------------------------------------------------
+// Divided orchestration with replica adoption
+// ------------------------------------------------------------------
 
-    worker
-        .send(Cmd::NewTrainer { job: job_id, spec: job.spec.clone(), cfg: job.cfg.clone() })
-        .map_err(died(&job.name))?;
-    expect_ready(worker, &job.name, board)?;
-    if let Some((w0, b0)) = &job.initial {
-        worker
-            .send(Cmd::SetWeights { job: job_id, w: w0.clone(), b: b0.clone() })
-            .map_err(died(&job.name))?;
-        expect_ready(worker, &job.name, board)?;
+/// Each job owns a group of boards; groups run concurrently and fail
+/// independently (there is no cross-group rescheduling — a group that
+/// loses all its boards aborts the run with [`ClusterError::WorkerDied`]).
+fn run_groups(
+    cfg: &ClusterConfig,
+    jobs: &[Job],
+    placement: &Placement,
+    worker_slots: &mut [Option<Worker>],
+    board_time: &mut [f64],
+    results: &mut [Option<JobResult>],
+    metrics: &Arc<Metrics>,
+) -> Result<(), ClusterError> {
+    let policy = &cfg.recovery;
+    let bus = cfg.bus;
+    let sync_every = cfg.sync_every;
+    type GroupOut = (Vec<Worker>, Vec<f64>, Result<JobResult, ClusterError>);
+    let outs: Vec<(usize, GroupOut)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (j, group) in placement.groups.iter().enumerate() {
+            let group_workers: Vec<Worker> = group
+                .iter()
+                .map(|&b| worker_slots[b].take().expect("board used once"))
+                .collect();
+            let metrics = Arc::clone(metrics);
+            let job = &jobs[j];
+            let group = group.clone();
+            handles.push((
+                j,
+                s.spawn(move || -> GroupOut {
+                    let mut run = DividedRun::new(
+                        job, j, &group_workers, &group, &bus, sync_every, policy, &metrics,
+                    );
+                    let result = run.drive();
+                    let times = run.times.clone();
+                    drop(run);
+                    (group_workers, times, result)
+                }),
+            ));
+        }
+        handles
+            .into_iter()
+            .map(|(j, h)| (j, h.join().expect("leader thread panicked")))
+            .collect()
+    });
+    let mut first_err: Option<ClusterError> = None;
+    for (j, (group_workers, times, result)) in outs {
+        for (k, &b) in placement.groups[j].iter().enumerate() {
+            board_time[b] += times[k];
+        }
+        for w in group_workers {
+            w.shutdown();
+        }
+        match result {
+            Ok(r) => results[j] = Some(r),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
     }
-    worker
-        .send(Cmd::TrainChunk {
-            job: job_id,
-            data: Arc::clone(&job.train_data),
-            steps: job.cfg.steps,
-        })
-        .map_err(died(&job.name))?;
-    let (curve, stats, sim_s, final_w, final_b) = expect_chunk(worker, &job.name, board)?;
-
-    worker
-        .send(Cmd::Evaluate { job: job_id, data: Arc::clone(&job.test_data) })
-        .map_err(died(&job.name))?;
-    let (accuracy, eval_stats, eval_s) = match worker.recv().map_err(died(&job.name))? {
-        Reply::EvalDone { accuracy, stats, sim_seconds, .. } => (accuracy, stats, sim_seconds),
-        Reply::Error { message, .. } => {
-            return Err(ClusterError::Worker(job.name.clone(), board, message))
-        }
-        other => {
-            return Err(ClusterError::Worker(
-                job.name.clone(),
-                board,
-                format!("unexpected reply {other:?}"),
-            ))
-        }
-    };
-    // Results readback.
-    let down = job.spec.param_bytes();
-    bus_s += bus.transfer_s(down);
-    Metrics::add(&metrics.bus_bytes, down);
-    Metrics::add(&metrics.jobs_completed, 1);
-
-    let mut total_stats = stats;
-    total_stats.add(&eval_stats);
-    let total = sim_s + eval_s + bus_s;
-    Ok((
-        JobResult {
-            name: job.name.clone(),
-            boards: vec![board],
-            accuracy,
-            curve,
-            stats: total_stats,
-            sim_compute_s: sim_s + eval_s,
-            sim_bus_s: bus_s,
-            steps: job.cfg.steps,
-            weights: final_w,
-            biases: final_b,
-        },
-        total,
-    ))
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
-/// Run one job data-parallel over a board group with periodic weight
-/// averaging (Divided path).
-fn run_divided(
-    group_workers: &[&Worker],
-    boards: &[usize],
-    job: &Job,
+/// The per-replica state machine driving one divided job over its board
+/// group, including adoption of replicas whose board died.
+struct DividedRun<'a> {
+    job: &'a Job,
     job_id: usize,
-    bus: &SystemBus,
+    workers: &'a [Worker],
+    boards: &'a [usize],
+    bus: &'a SystemBus,
     sync_every: usize,
-    metrics: &Metrics,
-) -> Result<(Vec<f64>, JobResult), ClusterError> {
-    let k = group_workers.len();
-    assert!(k >= 1);
-    let mut times = vec![0.0f64; k];
+    policy: &'a RecoveryPolicy,
+    metrics: &'a Metrics,
+    /// Per-slot liveness (a slot is a position in `workers`).
+    alive: Vec<bool>,
+    /// Replica → slot currently hosting its trainer.
+    owner: Vec<usize>,
+    /// Replica → worker-side trainer key.
+    key: Vec<usize>,
+    /// Replica → sampler steps its current trainer has consumed
+    /// (`None` = no live trainer; must be re-established).
+    cursor: Vec<Option<usize>>,
+    /// Last broadcast parameters (what re-establishment binds).
+    cur_w: Vec<Vec<i16>>,
+    cur_b: Vec<Vec<i16>>,
+    /// Steps completed by every replica.
+    done: usize,
+    /// Fresh trainer keys for adopted replicas (counts down from
+    /// `usize::MAX`; never collides with job ids).
+    next_key: usize,
+    /// Per-slot simulated time.
+    times: Vec<f64>,
+    last_dead_slot: usize,
+}
 
-    // Ship params + a dataset shard to every board.
-    for (i, w) in group_workers.iter().enumerate() {
-        let up = job.spec.param_bytes() + dataset_bytes(&job.train_data) / k as u64;
-        times[i] += bus.transfer_s(up);
-        Metrics::add(&metrics.bus_bytes, up);
-        let mut cfg = job.cfg.clone();
+impl<'a> DividedRun<'a> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        job: &'a Job,
+        job_id: usize,
+        workers: &'a [Worker],
+        boards: &'a [usize],
+        bus: &'a SystemBus,
+        sync_every: usize,
+        policy: &'a RecoveryPolicy,
+        metrics: &'a Metrics,
+    ) -> DividedRun<'a> {
+        let k = workers.len();
+        DividedRun {
+            job,
+            job_id,
+            workers,
+            boards,
+            bus,
+            sync_every,
+            policy,
+            metrics,
+            alive: vec![true; k],
+            owner: (0..k).collect(),
+            key: vec![job_id; k],
+            cursor: vec![None; k],
+            cur_w: Vec::new(),
+            cur_b: Vec::new(),
+            done: 0,
+            next_key: usize::MAX,
+            times: vec![0.0f64; k],
+            last_dead_slot: 0,
+        }
+    }
+
+    fn k(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn replica_cfg(&self, i: usize) -> TrainConfig {
+        let mut cfg = self.job.cfg.clone();
         cfg.seed = cfg.seed.wrapping_add(i as u64 * 0x9E37);
-        w.send(Cmd::NewTrainer { job: job_id, spec: job.spec.clone(), cfg })
-            .map_err(died(&job.name))?;
-    }
-    for (i, w) in group_workers.iter().enumerate() {
-        expect_ready(w, &job.name, boards[i])?;
-    }
-    // Replicas start from identical weights: the job's explicit initial
-    // parameters when given, else replica 0's seed init is broadcast.
-    let (w0, b0) = match &job.initial {
-        Some((w0, b0)) => (w0.clone(), b0.clone()),
-        None => {
-            group_workers[0]
-                .send(Cmd::TrainChunk {
-                    job: job_id,
-                    data: Arc::clone(&job.train_data),
-                    steps: 0,
-                })
-                .map_err(died(&job.name))?;
-            let (_, _, _, w0, b0) = expect_chunk(group_workers[0], &job.name, boards[0])?;
-            (w0, b0)
-        }
-    };
-    for (i, w) in group_workers.iter().enumerate() {
-        w.send(Cmd::SetWeights { job: job_id, w: w0.clone(), b: b0.clone() })
-            .map_err(died(&job.name))?;
-        expect_ready(w, &job.name, boards[i])?;
+        cfg
     }
 
-    let total_steps = job.cfg.steps;
-    let mut done = 0usize;
-    let mut curve = Vec::new();
-    let mut stats = RunStats::default();
-    let mut compute_critical = 0.0f64;
-    let mut bus_total = 0.0f64;
-    // Final synced parameters (what the last averaging round broadcast).
-    let mut cur_w = w0;
-    let mut cur_b = b0;
-    while done < total_steps {
-        let steps = sync_every.min(total_steps - done);
-        for w in group_workers {
-            w.send(Cmd::TrainChunk {
-                job: job_id,
-                data: Arc::clone(&job.train_data),
-                steps,
-            })
-            .map_err(died(&job.name))?;
-        }
-        let mut ws = Vec::with_capacity(k);
-        let mut bs = Vec::with_capacity(k);
-        let mut round_max = 0.0f64;
-        for (i, w) in group_workers.iter().enumerate() {
-            let (c, st, sim_s, wi, bi) = expect_chunk(w, &job.name, boards[i])?;
-            if i == 0 {
-                curve.extend(c.into_iter().map(|mut p| {
-                    p.step += done;
-                    p
-                }));
-                stats.add(&st);
+    /// Evict a slot: mark dead, invalidate every replica it hosted, and
+    /// return the typed death error (callers abort with it when the
+    /// policy forbids rescheduling).
+    fn kill_slot(&mut self, slot: usize) -> ClusterError {
+        if self.alive[slot] {
+            self.alive[slot] = false;
+            if self.policy.reschedule {
+                // Only an actual eviction (abort policy kills the whole
+                // run instead — nothing is evicted from a pool).
+                Metrics::add(&self.metrics.boards_evicted, 1);
             }
-            round_max = round_max.max(sim_s);
-            times[i] += sim_s;
-            ws.push(wi);
-            bs.push(bi);
+            for r in 0..self.k() {
+                if self.owner[r] == slot {
+                    self.cursor[r] = None;
+                }
+            }
         }
-        compute_critical += round_max;
-        // Weight sync: gather k × params up, broadcast averaged params.
-        let sync_bytes = job.spec.param_bytes() * (k as u64 + 1);
-        let sync_s = bus.transfer_s(job.spec.param_bytes()) * (k as f64 + 1.0);
-        Metrics::add(&metrics.bus_bytes, sync_bytes);
-        Metrics::add(&metrics.sync_rounds, 1);
-        bus_total += sync_s;
-        let avg_w = average_weights(&ws);
-        let avg_b = average_weights(&bs);
-        for (i, w) in group_workers.iter().enumerate() {
-            w.send(Cmd::SetWeights { job: job_id, w: avg_w.clone(), b: avg_b.clone() })
-                .map_err(died(&job.name))?;
-            times[i] += sync_s / k as f64;
-        }
-        cur_w = avg_w;
-        cur_b = avg_b;
-        for (i, w) in group_workers.iter().enumerate() {
-            expect_ready(w, &job.name, boards[i])?;
-        }
-        done += steps;
+        self.last_dead_slot = slot;
+        ClusterError::WorkerDied(self.job.name.clone(), self.boards[slot])
     }
 
-    // Evaluate on replica 0.
-    group_workers[0]
-        .send(Cmd::Evaluate { job: job_id, data: Arc::clone(&job.test_data) })
-        .map_err(died(&job.name))?;
-    let (accuracy, eval_stats, eval_s) = match group_workers[0].recv().map_err(died(&job.name))? {
-        Reply::EvalDone { accuracy, stats, sim_seconds, .. } => (accuracy, stats, sim_seconds),
-        Reply::Error { message, .. } => {
-            return Err(ClusterError::Worker(job.name.clone(), boards[0], message))
-        }
-        other => {
-            return Err(ClusterError::Worker(
-                job.name.clone(),
-                boards[0],
-                format!("unexpected reply {other:?}"),
-            ))
-        }
-    };
-    times[0] += eval_s;
-    stats.add(&eval_stats);
-    Metrics::add(&metrics.jobs_completed, 1);
+    fn no_survivors(&self) -> ClusterError {
+        ClusterError::WorkerDied(self.job.name.clone(), self.boards[self.last_dead_slot])
+    }
 
-    Ok((
-        times,
-        JobResult {
-            name: job.name.clone(),
-            boards: boards.to_vec(),
+    fn fatal(&self, slot: usize, message: String) -> ClusterError {
+        ClusterError::Worker(self.job.name.clone(), self.boards[slot], message)
+    }
+
+    /// Wait for a `Ready` from `slot`. `Ok(false)` = slot died.
+    fn ready(&mut self, slot: usize) -> Result<bool, ClusterError> {
+        match self.workers[slot].recv() {
+            Err(_) => {
+                let e = self.kill_slot(slot);
+                if !self.policy.reschedule {
+                    return Err(e);
+                }
+                Ok(false)
+            }
+            Ok(Reply::Ready { .. }) => Ok(true),
+            Ok(Reply::Error { message, .. }) => Err(self.fatal(slot, message)),
+            Ok(other) => Err(self.fatal(slot, format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Send `cmd` to `slot`. `Ok(false)` = slot died.
+    fn send(&mut self, slot: usize, cmd: Cmd) -> Result<bool, ClusterError> {
+        if self.workers[slot].send(cmd).is_err() {
+            let e = self.kill_slot(slot);
+            if !self.policy.reschedule {
+                return Err(e);
+            }
+            return Ok(false);
+        }
+        Ok(true)
+    }
+
+    /// Make sure replica `r` has a live trainer positioned at the
+    /// current `(cur_w, cur_b, done)` state, adopting it onto the
+    /// lowest-indexed surviving slot if its board died.
+    fn ensure(&mut self, r: usize) -> Result<(), ClusterError> {
+        loop {
+            if self.alive[self.owner[r]] && self.cursor[r] == Some(self.done) {
+                return Ok(());
+            }
+            let Some(slot) = (0..self.k()).find(|&s| self.alive[s]) else {
+                return Err(self.no_survivors());
+            };
+            let key = self.next_key;
+            self.next_key -= 1;
+            // Re-ship params (+ the shard the new host trains on).
+            let up = self.job.spec.param_bytes()
+                + dataset_bytes(&self.job.train_data) / self.k() as u64;
+            self.times[slot] += self.bus.transfer_s(up);
+            Metrics::add(&self.metrics.bus_bytes, up);
+            let cfg = self.replica_cfg(r);
+            let spec = self.job.spec.clone();
+            if !self.send(slot, Cmd::NewTrainer { job: key, spec, cfg })? {
+                continue;
+            }
+            if !self.ready(slot)? {
+                continue;
+            }
+            let (w, b) = (self.cur_w.clone(), self.cur_b.clone());
+            if !self.send(slot, Cmd::SetWeights { job: key, w, b })? {
+                continue;
+            }
+            if !self.ready(slot)? {
+                continue;
+            }
+            if self.done > 0 {
+                if !self.send(slot, Cmd::SkipSamples { job: key, steps: self.done })? {
+                    continue;
+                }
+                if !self.ready(slot)? {
+                    continue;
+                }
+            }
+            self.owner[r] = slot;
+            self.key[r] = key;
+            self.cursor[r] = Some(self.done);
+            // The replica's outstanding chunk now recomputes here.
+            Metrics::add(&self.metrics.chunks_rescheduled, 1);
+            return Ok(());
+        }
+    }
+
+    /// Receive one chunk reply from `slot`; `Ok(None)` = slot died.
+    /// Checksum failures are recorded in the returned flag — retries run
+    /// after the sweep so they never interleave with queued replies.
+    #[allow(clippy::type_complexity)]
+    fn recv_chunk(&mut self, slot: usize) -> Result<Option<(ChunkData, bool)>, ClusterError> {
+        match self.workers[slot].recv() {
+            Err(_) => {
+                let e = self.kill_slot(slot);
+                if !self.policy.reschedule {
+                    return Err(e);
+                }
+                Ok(None)
+            }
+            Ok(Reply::ChunkDone { curve, stats, sim_seconds, w, b, checksum, .. }) => {
+                let ok = params_checksum(&w, &b) == checksum;
+                if !ok && self.policy.max_chunk_retries == 0 && !self.policy.reschedule {
+                    // Pre-recovery trace: corrupt chunks abort on the spot.
+                    return Err(ClusterError::CorruptChunk(
+                        self.job.name.clone(),
+                        self.boards[slot],
+                    ));
+                }
+                Ok(Some((ChunkData { curve, stats, sim_s: sim_seconds, w, b }, ok)))
+            }
+            Ok(Reply::Error { message, .. }) => Err(self.fatal(slot, message)),
+            Ok(other) => Err(self.fatal(slot, format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Post-sweep retry of a checksum-failed chunk: re-read the params
+    /// from the (idle) owner within the budget. `Ok(None)` = the board
+    /// kept corrupting (or died) and was evicted.
+    fn retry_params(&mut self, r: usize) -> Result<Option<Params>, ClusterError> {
+        let slot = self.owner[r];
+        for _ in 0..self.policy.max_chunk_retries {
+            Metrics::add(&self.metrics.chunk_retries, 1);
+            if !self.send(slot, Cmd::ReadParams { job: self.key[r] })? {
+                return Ok(None);
+            }
+            match self.workers[slot].recv() {
+                Err(_) => {
+                    let e = self.kill_slot(slot);
+                    if !self.policy.reschedule {
+                        return Err(e);
+                    }
+                    return Ok(None);
+                }
+                Ok(Reply::Params { w, b, checksum, .. }) => {
+                    if params_checksum(&w, &b) == checksum {
+                        return Ok(Some((w, b)));
+                    }
+                }
+                Ok(Reply::Error { message, .. }) => return Err(self.fatal(slot, message)),
+                Ok(other) => {
+                    return Err(self.fatal(slot, format!("unexpected reply {other:?}")))
+                }
+            }
+        }
+        // Persistently failing: evict.
+        let _ = self.kill_slot(slot);
+        if !self.policy.reschedule {
+            return Err(ClusterError::CorruptChunk(
+                self.job.name.clone(),
+                self.boards[slot],
+            ));
+        }
+        Ok(None)
+    }
+
+    /// Initial setup: spawn every replica's trainer on its own board
+    /// (the pre-recovery command trace), derive the shared starting
+    /// parameters, broadcast them, and fast-forward samplers on resume.
+    fn setup(&mut self) -> Result<(), ClusterError> {
+        validate_resume(self.job)?;
+        if let Some(r) = &self.job.resume {
+            if r.steps_done % self.sync_every != 0 && r.steps_done != self.job.cfg.steps {
+                return Err(ClusterError::Checkpoint(format!(
+                    "divided job {:?} can only resume on a weight-sync boundary \
+                     (step {} is not a multiple of sync_every = {})",
+                    self.job.name, r.steps_done, self.sync_every
+                )));
+            }
+        }
+        for slot in 0..self.k() {
+            let up = self.job.spec.param_bytes()
+                + dataset_bytes(&self.job.train_data) / self.k() as u64;
+            self.times[slot] += self.bus.transfer_s(up);
+            Metrics::add(&self.metrics.bus_bytes, up);
+            let cfg = self.replica_cfg(slot);
+            let spec = self.job.spec.clone();
+            self.send(slot, Cmd::NewTrainer { job: self.job_id, spec, cfg })?;
+        }
+        for slot in 0..self.k() {
+            if self.alive[slot] && self.ready(slot)? {
+                self.cursor[slot] = Some(0);
+            }
+        }
+        // Replicas start from identical weights: the job's explicit
+        // initial parameters when given, else replica 0's seed init is
+        // broadcast (derived via a zero-step probe chunk).
+        let (w0, b0) = match &self.job.initial {
+            Some((w0, b0)) => (w0.clone(), b0.clone()),
+            None => self.derive_init()?,
+        };
+        self.cur_w = w0;
+        self.cur_b = b0;
+        for r in 0..self.k() {
+            // Broadcast to live trainers; dead/unestablished replicas are
+            // rebuilt (with these parameters) on first use.
+            if !self.alive[self.owner[r]] || self.cursor[r].is_none() {
+                continue;
+            }
+            let (w, b) = (self.cur_w.clone(), self.cur_b.clone());
+            let key = self.key[r];
+            self.send(self.owner[r], Cmd::SetWeights { job: key, w, b })?;
+        }
+        for r in 0..self.k() {
+            if self.alive[self.owner[r]] && self.cursor[r].is_some() {
+                self.ready(self.owner[r])?;
+            }
+        }
+        if let Some(res) = &self.job.resume {
+            self.done = res.steps_done;
+            if self.done > 0 {
+                for r in 0..self.k() {
+                    if !self.alive[self.owner[r]] || self.cursor[r] != Some(0) {
+                        self.cursor[r] = None; // rebuild at `done` on first use
+                        continue;
+                    }
+                    let key = self.key[r];
+                    let steps = self.done;
+                    if self.send(self.owner[r], Cmd::SkipSamples { job: key, steps })?
+                        && self.ready(self.owner[r])?
+                    {
+                        self.cursor[r] = Some(self.done);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Replica 0's seed-initialised parameters via a zero-step probe
+    /// chunk (re-hosted if its board is gone).
+    fn derive_init(&mut self) -> Result<Params, ClusterError> {
+        loop {
+            if !self.alive[self.owner[0]] || self.cursor[0].is_none() {
+                // Fresh trainer for replica 0 on a surviving slot; at
+                // done == 0 the seed init *is* the state — no
+                // SetWeights / SkipSamples needed.
+                let Some(slot) = (0..self.k()).find(|&s| self.alive[s]) else {
+                    return Err(self.no_survivors());
+                };
+                let key = self.next_key;
+                self.next_key -= 1;
+                let cfg = self.replica_cfg(0);
+                let spec = self.job.spec.clone();
+                if !self.send(slot, Cmd::NewTrainer { job: key, spec, cfg })? {
+                    continue;
+                }
+                if !self.ready(slot)? {
+                    continue;
+                }
+                self.owner[0] = slot;
+                self.key[0] = key;
+                self.cursor[0] = Some(0);
+            }
+            let slot = self.owner[0];
+            let key = self.key[0];
+            let data = Arc::clone(&self.job.train_data);
+            if !self.send(slot, Cmd::TrainChunk { job: key, data, steps: 0 })? {
+                continue;
+            }
+            match self.recv_chunk(slot)? {
+                None => continue,
+                Some((chunk, true)) => return Ok((chunk.w, chunk.b)),
+                Some((_, false)) => match self.retry_params(0)? {
+                    Some(params) => return Ok(params),
+                    None => continue,
+                },
+            }
+        }
+    }
+
+    /// The synchronous data-parallel rounds, with per-round recovery.
+    /// Returns `(curve, stats, compute_critical, bus_total, checkpoints)`.
+    #[allow(clippy::type_complexity)]
+    fn rounds(
+        &mut self,
+    ) -> Result<
+        (Vec<LossPoint>, RunStats, f64, f64, Vec<TrainCheckpoint>),
+        ClusterError,
+    > {
+        let total = self.job.cfg.steps;
+        let k = self.k();
+        let mut curve: Vec<LossPoint> =
+            self.job.resume.as_ref().map_or_else(Vec::new, |r| r.curve.clone());
+        let mut stats =
+            self.job.resume.as_ref().map_or_else(RunStats::default, |r| r.stats);
+        let mut compute_critical =
+            self.job.resume.as_ref().map_or(0.0, |r| r.sim_compute_s);
+        let mut bus_total = 0.0f64;
+        let mut checkpoints: Vec<TrainCheckpoint> = Vec::new();
+        let every = self.policy.checkpoint_every;
+
+        while self.done < total {
+            let steps = self.sync_every.min(total - self.done);
+            let mut collected: Vec<Option<ChunkData>> = (0..k).map(|_| None).collect();
+            loop {
+                let missing: Vec<usize> =
+                    (0..k).filter(|&r| collected[r].is_none()).collect();
+                if missing.is_empty() {
+                    break;
+                }
+                for &r in &missing {
+                    self.ensure(r)?;
+                }
+                // Send sweep (replica order — chunk-index order is the
+                // total order the averaging accumulates in).
+                let mut sent = vec![false; k];
+                for &r in &missing {
+                    let slot = self.owner[r];
+                    if !self.alive[slot] {
+                        continue;
+                    }
+                    let key = self.key[r];
+                    let data = Arc::clone(&self.job.train_data);
+                    sent[r] = self.send(slot, Cmd::TrainChunk { job: key, data, steps })?;
+                }
+                // Receive sweep; corrupt params are retried afterwards.
+                let mut corrupt: Vec<usize> = Vec::new();
+                for &r in &missing {
+                    if !sent[r] || !self.alive[self.owner[r]] {
+                        continue;
+                    }
+                    match self.recv_chunk(self.owner[r])? {
+                        None => {}
+                        Some((chunk, true)) => {
+                            self.times[self.owner[r]] += chunk.sim_s;
+                            self.cursor[r] = Some(self.done + steps);
+                            collected[r] = Some(chunk);
+                        }
+                        Some((chunk, false)) => {
+                            self.times[self.owner[r]] += chunk.sim_s;
+                            self.cursor[r] = Some(self.done + steps);
+                            collected[r] = Some(chunk);
+                            corrupt.push(r);
+                        }
+                    }
+                }
+                for r in corrupt {
+                    if !self.alive[self.owner[r]] {
+                        // Owner died after replying; recompute instead.
+                        collected[r] = None;
+                        continue;
+                    }
+                    match self.retry_params(r)? {
+                        Some((w, b)) => {
+                            let c = collected[r].as_mut().expect("collected above");
+                            c.w = w;
+                            c.b = b;
+                        }
+                        None => collected[r] = None, // evicted: recompute
+                    }
+                }
+                if !self.policy.reschedule && collected.iter().any(Option::is_none) {
+                    return Err(self.no_survivors());
+                }
+            }
+            // Merge in replica order; replica 0 carries curve + stats.
+            let mut ws = Vec::with_capacity(k);
+            let mut bs = Vec::with_capacity(k);
+            let mut round_max = 0.0f64;
+            for (r, c) in collected.into_iter().enumerate() {
+                let chunk = c.expect("loop above collected every replica");
+                if r == 0 {
+                    let done = self.done;
+                    curve.extend(chunk.curve.into_iter().map(|mut p| {
+                        p.step += done;
+                        p
+                    }));
+                    stats.add(&chunk.stats);
+                }
+                round_max = round_max.max(chunk.sim_s);
+                ws.push(chunk.w);
+                bs.push(chunk.b);
+            }
+            compute_critical += round_max;
+            // Weight sync: gather k × params up, broadcast averaged params.
+            let sync_bytes = self.job.spec.param_bytes() * (k as u64 + 1);
+            let sync_s = self.bus.transfer_s(self.job.spec.param_bytes()) * (k as f64 + 1.0);
+            Metrics::add(&self.metrics.bus_bytes, sync_bytes);
+            Metrics::add(&self.metrics.sync_rounds, 1);
+            bus_total += sync_s;
+            self.cur_w = average_weights(&ws);
+            self.cur_b = average_weights(&bs);
+            let mut acked = vec![false; k];
+            for r in 0..k {
+                let slot = self.owner[r];
+                if !self.alive[slot] {
+                    self.cursor[r] = None;
+                    continue;
+                }
+                let (w, b) = (self.cur_w.clone(), self.cur_b.clone());
+                let key = self.key[r];
+                acked[r] = self.send(slot, Cmd::SetWeights { job: key, w, b })?;
+                self.times[slot] += sync_s / k as f64;
+            }
+            for r in 0..k {
+                if acked[r] && self.alive[self.owner[r]] && !self.ready(self.owner[r])? {
+                    self.cursor[r] = None;
+                }
+            }
+            let before = self.done;
+            self.done += steps;
+            if every > 0 && (self.done / every > before / every || self.done == total) {
+                let run = RunIdentity {
+                    seed: self.job.cfg.seed,
+                    batch: self.job.cfg.batch,
+                    lr: self.job.cfg.lr,
+                    replicas: k,
+                    sync_every: self.sync_every,
+                    total_steps: total,
+                };
+                checkpoints.push(TrainCheckpoint::capture(
+                    &self.job.spec,
+                    &run,
+                    self.done,
+                    &curve,
+                    stats,
+                    compute_critical,
+                    &self.cur_w,
+                    &self.cur_b,
+                ));
+                Metrics::add(&self.metrics.checkpoints_captured, 1);
+            }
+        }
+        Ok((curve, stats, compute_critical, bus_total, checkpoints))
+    }
+
+    /// Evaluate on replica 0 (re-hosting it first if its board died).
+    fn evaluate_r0(&mut self) -> Result<(f64, RunStats, f64), ClusterError> {
+        loop {
+            self.ensure(0)?;
+            let slot = self.owner[0];
+            let key = self.key[0];
+            let data = Arc::clone(&self.job.test_data);
+            if !self.send(slot, Cmd::Evaluate { job: key, data })? {
+                continue;
+            }
+            match self.workers[slot].recv() {
+                Err(_) => {
+                    let e = self.kill_slot(slot);
+                    if !self.policy.reschedule {
+                        return Err(e);
+                    }
+                }
+                Ok(Reply::EvalDone { accuracy, stats, sim_seconds, .. }) => {
+                    return Ok((accuracy, stats, sim_seconds))
+                }
+                Ok(Reply::Error { message, .. }) => return Err(self.fatal(slot, message)),
+                Ok(other) => {
+                    return Err(self.fatal(slot, format!("unexpected reply {other:?}")))
+                }
+            }
+        }
+    }
+
+    fn drive(&mut self) -> Result<JobResult, ClusterError> {
+        assert!(self.k() >= 1);
+        self.setup()?;
+        let (curve, mut stats, compute_critical, bus_total, checkpoints) = self.rounds()?;
+        let (accuracy, eval_stats, eval_s) = self.evaluate_r0()?;
+        self.times[self.owner[0]] += eval_s;
+        stats.add(&eval_stats);
+        Metrics::add(&self.metrics.jobs_completed, 1);
+        Ok(JobResult {
+            name: self.job.name.clone(),
+            boards: self.boards.to_vec(),
             accuracy,
             curve,
             stats,
             sim_compute_s: compute_critical + eval_s,
             sim_bus_s: bus_total,
-            steps: total_steps,
-            weights: cur_w,
-            biases: cur_b,
-        },
-    ))
+            steps: self.job.cfg.steps,
+            weights: self.cur_w.clone(),
+            biases: self.cur_b.clone(),
+            checkpoints,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -587,6 +1556,7 @@ mod tests {
             train_data: Arc::new(train),
             test_data: Arc::new(test),
             initial: None,
+            resume: None,
         }
     }
 
@@ -622,8 +1592,7 @@ mod tests {
 
     #[test]
     fn divided_one_job_three_boards_syncs_weights() {
-        let cfg =
-            ClusterConfig { boards: 3, sync_every: 15, ..Default::default() };
+        let cfg = ClusterConfig { boards: 3, sync_every: 15, ..Default::default() };
         let jobs = vec![mk_job("dp", 5, 60)];
         let r = execute(&cfg, &jobs).unwrap();
         assert_eq!(r.placement.mode, PlacementMode::Divided);
@@ -702,15 +1671,16 @@ mod tests {
     #[test]
     fn average_weights_elementwise_mean() {
         let a = vec![vec![10i16, -10], vec![4]];
-        let b = vec![vec![20i16, -20], vec![8]];
-        assert_eq!(average_weights(&[a, b]), vec![vec![15, -15], vec![6]]);
+        let b = vec![vec![20i16, -20], vec![6]];
+        assert_eq!(average_weights(&[a, b]), vec![vec![15, -15], vec![5]]);
     }
 
     #[test]
     fn failure_injection_bad_job_does_not_hang_cluster() {
         // Job "bad" has a dataset whose dimensionality mismatches its
-        // spec: the worker reports the error and the leader surfaces it
-        // instead of deadlocking the other board.
+        // spec: a *logic* error, not a board fault — recovery must NOT
+        // mask it; the leader surfaces it instead of deadlocking (or
+        // endlessly rescheduling it around) the other board.
         let mut bad = mk_job("bad", 9, 30);
         bad.train_data = Arc::new(dataset::xor(32, 1)); // dim 2 != 4
         let jobs = vec![mk_job("good", 8, 30), bad];
@@ -735,12 +1705,14 @@ mod tests {
     }
 
     #[test]
-    fn injected_worker_death_surfaces_typed_error_without_hanging() {
-        // Board 1's worker dies on its very first command; the leader
+    fn abort_policy_worker_death_surfaces_typed_error_without_hanging() {
+        // The pre-recovery contract, pinned under RecoveryPolicy::abort:
+        // board 1's worker dies on its very first command; the leader
         // must abort job "b" with WorkerDied while board 0 completes.
         let cfg = ClusterConfig {
             boards: 2,
             faults: FaultPlan::none().kill(1, 0),
+            recovery: RecoveryPolicy::abort(),
             ..Default::default()
         };
         let jobs = vec![mk_job("a", 1, 10), mk_job("b", 2, 10)];
@@ -754,12 +1726,14 @@ mod tests {
     }
 
     #[test]
-    fn injected_chunk_corruption_is_rejected() {
-        // Single-board run: the one TrainChunk reply is corrupted after
-        // checksumming; the leader must reject it, not adopt it.
+    fn abort_policy_chunk_corruption_is_rejected() {
+        // Single-board run under the abort policy: the one TrainChunk
+        // reply is corrupted after checksumming; the leader must reject
+        // it, not adopt it.
         let cfg = ClusterConfig {
             boards: 1,
             faults: FaultPlan::none().corrupt(0, 0),
+            recovery: RecoveryPolicy::abort(),
             ..Default::default()
         };
         let err = execute(&cfg, &[mk_job("c", 3, 5)]).unwrap_err();
@@ -771,6 +1745,8 @@ mod tests {
 
     #[test]
     fn injected_reorder_surfaces_typed_protocol_error() {
+        // Protocol violations are not board faults: recovery leaves them
+        // as typed aborts even with rescheduling on (the default).
         let cfg = ClusterConfig {
             boards: 1,
             faults: FaultPlan::none().reorder(0, 0),
@@ -804,5 +1780,160 @@ mod tests {
             assert_eq!(r1.results[0].accuracy, r2.results[0].accuracy, "boards {boards}");
             assert!(r2.metrics.faults_injected > 0, "delays did not fire");
         }
+    }
+
+    #[test]
+    fn recovery_reschedules_a_dead_boards_job_bit_identically() {
+        // Sequential pool, board 1 dies on its first command. With the
+        // default recovery policy job "b" restarts on board 0 and the
+        // whole run completes with results bit-identical to a clean run.
+        let jobs = vec![mk_job("a", 1, 12), mk_job("b", 2, 12)];
+        let clean = execute(&ClusterConfig { boards: 2, ..Default::default() }, &jobs).unwrap();
+        let cfg = ClusterConfig {
+            boards: 2,
+            faults: FaultPlan::none().kill(1, 0),
+            ..Default::default()
+        };
+        let r = execute(&cfg, &jobs).unwrap();
+        assert_eq!(r.metrics.jobs_completed, 2);
+        assert!(r.metrics.boards_evicted >= 1);
+        assert!(r.metrics.chunks_rescheduled >= 1);
+        for (jr, cl) in r.results.iter().zip(&clean.results) {
+            assert_eq!(jr.weights, cl.weights, "{}", jr.name);
+            assert_eq!(jr.biases, cl.biases, "{}", jr.name);
+            assert_eq!(jr.accuracy, cl.accuracy, "{}", jr.name);
+            assert_eq!(jr.curve, cl.curve, "{}", jr.name);
+            assert_eq!(jr.stats, cl.stats, "{}", jr.name);
+        }
+        // the rescheduled job ran on the surviving board
+        assert_eq!(r.results[1].boards, vec![0]);
+    }
+
+    #[test]
+    fn recovery_retries_a_corrupt_chunk_over_the_bus() {
+        // One corruption site: the chunk reply fails its checksum, the
+        // retry (ReadParams) is clean — the run completes bit-identical
+        // to a fault-free one, with no eviction.
+        let jobs = vec![mk_job("c", 3, 8)];
+        let clean = execute(&ClusterConfig { boards: 1, ..Default::default() }, &jobs).unwrap();
+        let cfg = ClusterConfig {
+            boards: 1,
+            faults: FaultPlan::none().corrupt(0, 0),
+            ..Default::default()
+        };
+        let r = execute(&cfg, &jobs).unwrap();
+        assert!(r.metrics.chunk_retries >= 1);
+        assert_eq!(r.metrics.boards_evicted, 0);
+        assert_eq!(r.results[0].weights, clean.results[0].weights);
+        assert_eq!(r.results[0].curve, clean.results[0].curve);
+    }
+
+    #[test]
+    fn persistent_corruption_evicts_and_errors_only_without_survivors() {
+        // Corruption at chunk indices 0..=3 outlasts the 2-retry budget.
+        // With one board there is nowhere left to go: typed CorruptChunk.
+        let plan = FaultPlan::none().corrupt(0, 0).corrupt(0, 1).corrupt(0, 2).corrupt(0, 3);
+        let cfg = ClusterConfig { boards: 1, faults: plan, ..Default::default() };
+        let err = execute(&cfg, &[mk_job("p", 5, 6)]).unwrap_err();
+        assert!(
+            matches!(err, ClusterError::WorkerDied(..) | ClusterError::CorruptChunk(..)),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn divided_replica_adoption_keeps_weights_bit_identical() {
+        // One job over three boards; board 2 dies mid-run. Its replica
+        // is adopted by a survivor and recomputed from the last average,
+        // so the final averaged weights equal the clean run's exactly.
+        let jobs = vec![mk_job("dp", 7, 30)];
+        let base = ClusterConfig { boards: 3, sync_every: 10, ..Default::default() };
+        let clean = execute(&base, &jobs).unwrap();
+        // kill board 2 on its 3rd command (mid-round TrainChunk)
+        let cfg = ClusterConfig {
+            faults: FaultPlan::none().kill(2, 3),
+            ..base.clone()
+        };
+        let r = execute(&cfg, &jobs).unwrap();
+        assert!(r.metrics.boards_evicted >= 1, "no eviction recorded");
+        assert!(r.metrics.chunks_rescheduled >= 1, "no adoption recorded");
+        assert_eq!(r.results[0].weights, clean.results[0].weights);
+        assert_eq!(r.results[0].biases, clean.results[0].biases);
+        assert_eq!(r.results[0].curve, clean.results[0].curve);
+        assert_eq!(r.results[0].accuracy, clean.results[0].accuracy);
+        assert_eq!(r.results[0].boards, clean.results[0].boards, "group identity kept");
+    }
+
+    #[test]
+    fn checkpoints_are_captured_and_resume_bit_exactly() {
+        // checkpoint_every chunks the job; resuming a fresh run from the
+        // mid-run snapshot reproduces the uninterrupted run's weights,
+        // curve, and stats bit-exactly.
+        let job = mk_job("ck", 8, 40);
+        let cfg = ClusterConfig {
+            boards: 1,
+            recovery: RecoveryPolicy::checkpointed(10),
+            ..Default::default()
+        };
+        let full = execute(&cfg, std::slice::from_ref(&job)).unwrap();
+        let jr = &full.results[0];
+        assert_eq!(jr.checkpoints.len(), 4, "40 steps / every 10");
+        assert_eq!(full.metrics.checkpoints_captured, 4);
+        let mid = &jr.checkpoints[1]; // step 20
+        assert_eq!(mid.steps_done, 20);
+        // serialise → parse → resume
+        let mid = TrainCheckpoint::from_bytes(&mid.to_bytes()).unwrap();
+        let mut resumed_job = job.clone();
+        resumed_job.initial = Some(mid.weights());
+        resumed_job.resume = Some(JobResume::from_checkpoint(&mid));
+        let resumed = execute(&cfg, &[resumed_job]).unwrap();
+        let rr = &resumed.results[0];
+        assert_eq!(rr.weights, jr.weights);
+        assert_eq!(rr.biases, jr.biases);
+        assert_eq!(rr.curve, jr.curve);
+        assert_eq!(rr.stats, jr.stats);
+        assert_eq!(rr.accuracy, jr.accuracy);
+        assert_eq!(rr.sim_compute_s, jr.sim_compute_s);
+    }
+
+    #[test]
+    fn divided_checkpoint_resume_is_bit_exact_on_sync_boundaries() {
+        let job = mk_job("dpc", 12, 40);
+        let cfg = ClusterConfig {
+            boards: 2,
+            sync_every: 10,
+            recovery: RecoveryPolicy::checkpointed(20),
+            ..Default::default()
+        };
+        let full = execute(&cfg, std::slice::from_ref(&job)).unwrap();
+        let jr = &full.results[0];
+        assert!(!jr.checkpoints.is_empty());
+        let mid = jr.checkpoints[0].clone(); // first boundary ≥ 20
+        assert_eq!(mid.steps_done % 10, 0, "divided snapshots sit on sync boundaries");
+        let mut resumed_job = job.clone();
+        resumed_job.initial = Some(mid.weights());
+        resumed_job.resume = Some(JobResume::from_checkpoint(&mid));
+        let resumed = execute(&cfg, &[resumed_job]).unwrap();
+        assert_eq!(resumed.results[0].weights, jr.weights);
+        assert_eq!(resumed.results[0].biases, jr.biases);
+        assert_eq!(resumed.results[0].curve, jr.curve);
+        // off-boundary resume is a typed error, not silent divergence
+        let mut bad = job.clone();
+        let mut off = JobResume::from_checkpoint(&mid);
+        off.steps_done = 7;
+        bad.initial = Some(mid.weights());
+        bad.resume = Some(off);
+        assert!(matches!(
+            execute(&cfg, &[bad]),
+            Err(ClusterError::Checkpoint(_))
+        ));
+    }
+
+    #[test]
+    fn resume_without_initial_parameters_is_rejected() {
+        let mut job = mk_job("bad", 2, 10);
+        job.resume = Some(JobResume { steps_done: 5, ..JobResume::default() });
+        let cfg = ClusterConfig { boards: 1, ..Default::default() };
+        assert!(matches!(execute(&cfg, &[job]), Err(ClusterError::Checkpoint(_))));
     }
 }

@@ -24,6 +24,16 @@ pub struct Metrics {
     /// Inference micro-batches served (`Cmd::InferChunk` — the serving
     /// workload coexisting with training on the same boards).
     pub infer_chunks: AtomicU64,
+    /// Corrupt parameter chunks re-read over the bus (`Cmd::ReadParams`
+    /// retries under the run's [`super::recovery::RecoveryPolicy`]).
+    pub chunk_retries: AtomicU64,
+    /// Chunks recomputed on a surviving board after a death/eviction
+    /// (divided-replica adoptions and single-job redispatches).
+    pub chunks_rescheduled: AtomicU64,
+    /// Boards evicted from the pool (dead or persistently failing).
+    pub boards_evicted: AtomicU64,
+    /// Deterministic checkpoints captured at chunk/sync boundaries.
+    pub checkpoints_captured: AtomicU64,
 }
 
 impl Metrics {
@@ -48,6 +58,10 @@ impl Metrics {
             errors: self.errors.load(Ordering::Relaxed),
             faults_injected: self.faults_injected.load(Ordering::Relaxed),
             infer_chunks: self.infer_chunks.load(Ordering::Relaxed),
+            chunk_retries: self.chunk_retries.load(Ordering::Relaxed),
+            chunks_rescheduled: self.chunks_rescheduled.load(Ordering::Relaxed),
+            boards_evicted: self.boards_evicted.load(Ordering::Relaxed),
+            checkpoints_captured: self.checkpoints_captured.load(Ordering::Relaxed),
         }
     }
 }
@@ -71,6 +85,14 @@ pub struct MetricsSnapshot {
     pub faults_injected: u64,
     /// Inference micro-batches served.
     pub infer_chunks: u64,
+    /// Corrupt chunks re-read over the bus (recovery retries).
+    pub chunk_retries: u64,
+    /// Chunks recomputed on a surviving board after death/eviction.
+    pub chunks_rescheduled: u64,
+    /// Boards evicted from the pool.
+    pub boards_evicted: u64,
+    /// Deterministic checkpoints captured.
+    pub checkpoints_captured: u64,
 }
 
 #[cfg(test)]

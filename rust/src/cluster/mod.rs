@@ -32,20 +32,33 @@
 //! schedule is the max over boards of accumulated simulated time. Wall
 //! clock is also reported (it measures the simulator, not the modelled
 //! hardware).
+//!
+//! The runtime is **crash-tolerant** (DESIGN.md §Recovery): under the
+//! default [`RecoveryPolicy`] the leader retries checksum-failed chunks
+//! over the bus, evicts dead/persistently-failing boards, reschedules
+//! their outstanding chunks onto survivors **bit-identically** to the
+//! fault-free run, and captures deterministic [`TrainCheckpoint`]s that
+//! resume a job bit-exactly (`Session::train_with`,
+//! `mfnn train --checkpoint-every/--resume`).
 
 pub mod bus;
+pub mod checkpoint;
 pub mod fault;
 pub mod leader;
 pub mod metrics;
+pub mod recovery;
 pub mod scheduler;
 pub mod worker;
 
 pub use bus::{params_checksum, SystemBus};
+pub use checkpoint::{RunIdentity, TrainCheckpoint};
 pub use fault::{FaultPlan, FaultSite};
 pub use leader::{
-    execute, infer_on, ClusterConfig, ClusterError, ClusterReport, Job, JobResult, Params,
+    execute, infer_on, ClusterConfig, ClusterError, ClusterReport, Job, JobResult, JobResume,
+    Params,
 };
 #[allow(deprecated)]
 pub use leader::run_cluster;
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use recovery::RecoveryPolicy;
 pub use scheduler::{schedule, Placement, PlacementMode};

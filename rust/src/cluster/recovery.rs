@@ -1,0 +1,91 @@
+//! Recovery policy for the cluster runtime — what the leader does when a
+//! board fails *instead of* aborting the whole job.
+//!
+//! PR 3's fault hooks proved the leader never hangs: injected worker
+//! death and chunk corruption surfaced as typed
+//! [`super::leader::ClusterError`]s. But a typed abort still wastes every
+//! surviving board's work. With a [`RecoveryPolicy`] (on by default) the
+//! leader instead:
+//!
+//! * **retries** a corrupt parameter chunk over the bus (the board's
+//!   on-device state is fine — the [`super::bus::params_checksum`]
+//!   mismatch was in transit) via `Cmd::ReadParams`, up to
+//!   [`RecoveryPolicy::max_chunk_retries`] times;
+//! * **evicts** a dead or persistently-corrupting board from the pool
+//!   and **reschedules** its outstanding chunks onto surviving boards:
+//!   single-board jobs restart from their last leader-held checkpoint
+//!   (or from scratch) on the lowest-indexed surviving board; divided
+//!   replicas are adopted by a surviving group member, which rebuilds
+//!   the replica's trainer from the last broadcast average and
+//!   fast-forwards its sampler — so the recomputed chunk, and therefore
+//!   the chunk-index-ordered gradient accumulation, is **bit-identical**
+//!   to the fault-free run (DESIGN.md §Recovery);
+//! * **checkpoints** at a configurable step cadence, giving both the
+//!   in-run restart granularity and the durable
+//!   [`super::checkpoint::TrainCheckpoint`] snapshots that
+//!   `Session::train_with` / `mfnn train --checkpoint-every` expose.
+//!
+//! Recovery never masks *logic* errors: a worker-reported job error
+//! (bad dataset, shape mismatch) or a protocol violation still aborts
+//! with the old typed error — rescheduling those would fail everywhere.
+
+/// How the leader responds to board failures. Carried per run by
+/// [`super::ClusterConfig`]; the default is recovery **on**.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecoveryPolicy {
+    /// Master switch: reschedule work off dead/evicted boards. `false`
+    /// restores the pre-recovery behaviour (first fault aborts the job
+    /// with a typed error — what the never-hangs fault tests pin down).
+    pub reschedule: bool,
+    /// How many times a checksum-failed parameter chunk is re-read
+    /// (`Cmd::ReadParams`) before the board is declared
+    /// persistently-failing and evicted.
+    pub max_chunk_retries: usize,
+    /// Capture a [`super::checkpoint::TrainCheckpoint`] every this many
+    /// steps (0 = off). Single-board jobs are chunked at exactly this
+    /// cadence; divided jobs capture at the first weight-sync boundary
+    /// at or past each multiple. Also the restart granularity: a
+    /// rescheduled single-board job resumes from its last checkpoint
+    /// instead of step 0.
+    pub checkpoint_every: usize,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy { reschedule: true, max_chunk_retries: 2, checkpoint_every: 0 }
+    }
+}
+
+impl RecoveryPolicy {
+    /// The pre-recovery behaviour: any board fault aborts the job with
+    /// a typed error (no retries, no rescheduling, no checkpoints).
+    pub fn abort() -> RecoveryPolicy {
+        RecoveryPolicy { reschedule: false, max_chunk_retries: 0, checkpoint_every: 0 }
+    }
+
+    /// Recovery with checkpoints every `steps` steps.
+    pub fn checkpointed(steps: usize) -> RecoveryPolicy {
+        RecoveryPolicy { checkpoint_every: steps, ..RecoveryPolicy::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_reschedules_with_a_bounded_retry_budget() {
+        let p = RecoveryPolicy::default();
+        assert!(p.reschedule);
+        assert!(p.max_chunk_retries > 0);
+        assert_eq!(p.checkpoint_every, 0);
+    }
+
+    #[test]
+    fn abort_policy_disables_everything() {
+        let p = RecoveryPolicy::abort();
+        assert!(!p.reschedule);
+        assert_eq!(p.max_chunk_retries, 0);
+        assert_eq!(RecoveryPolicy::checkpointed(25).checkpoint_every, 25);
+    }
+}

@@ -153,6 +153,67 @@ mod tests {
     }
 
     #[test]
+    fn divided_remainder_distribution_is_balanced() {
+        // When boards % jobs != 0 the remainder boards must spread one
+        // per job from the front: no job sits at `base` boards while
+        // another holds `base + 2` (i.e. one idle board's worth of
+        // chunks piled two deep on a neighbour).
+        for jobs in 1..=8usize {
+            for boards in jobs..=24usize {
+                let p = schedule(jobs, boards);
+                let sizes: Vec<usize> = p.groups.iter().map(Vec::len).collect();
+                let max = *sizes.iter().max().unwrap();
+                let min = *sizes.iter().min().unwrap();
+                assert!(
+                    max - min <= 1,
+                    "M={jobs} F={boards}: group sizes {sizes:?} differ by more than 1"
+                );
+                if boards % jobs != 0 {
+                    // exactly (boards % jobs) jobs carry the extra board,
+                    // and they are the lowest-indexed ones
+                    let extras: Vec<usize> = sizes
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, &s)| s == max)
+                        .map(|(j, _)| j)
+                        .collect();
+                    assert_eq!(extras.len(), boards % jobs, "M={jobs} F={boards}");
+                    assert_eq!(extras, (0..boards % jobs).collect::<Vec<_>>());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn divided_chunk_index_order_is_a_total_order() {
+        // The leader accumulates a divided job's chunks in
+        // (job, replica-slot) order; that enumeration must be a strict
+        // total order over distinct boards with no repeats or gaps —
+        // what makes the recovery path's "accumulate in chunk-index
+        // order" rule well-defined.
+        for jobs in 1..=6usize {
+            for boards in jobs..=18usize {
+                let p = schedule(jobs, boards);
+                let mut seen = vec![false; boards];
+                let mut chunk_index = Vec::new();
+                for (j, group) in p.groups.iter().enumerate() {
+                    for (slot, &b) in group.iter().enumerate() {
+                        assert!(!seen[b], "M={jobs} F={boards}: board {b} assigned twice");
+                        seen[b] = true;
+                        chunk_index.push((j, slot));
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "M={jobs} F={boards}: idle board");
+                // strictly increasing lexicographic (job, slot) order
+                assert!(
+                    chunk_index.windows(2).all(|w| w[0] < w[1]),
+                    "M={jobs} F={boards}: chunk order {chunk_index:?} not total"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn placement_invariants_hold_for_all_shapes() {
         // Property: every job appears in ≥1 group; every board queue entry
         // is consistent with groups; no board is double-booked in Divided

@@ -83,6 +83,24 @@ pub enum Cmd {
         /// Quantised `rows × input_dim` input.
         qx: Vec<i16>,
     },
+    /// Re-read a job's current on-device parameters (the recovery
+    /// retry path for a checksum-failed chunk reply: the board's state
+    /// is fine, the corruption was in transit — see
+    /// [`super::recovery::RecoveryPolicy::max_chunk_retries`]).
+    ReadParams {
+        /// Job index.
+        job: usize,
+    },
+    /// Fast-forward a job's batch sampler past `steps` already-trained
+    /// steps without running compute ([`Trainer::skip_steps`]) — how a
+    /// rescheduled replica or a checkpoint resume lands on the exact
+    /// sample stream of the uninterrupted run.
+    SkipSamples {
+        /// Job index.
+        job: usize,
+        /// Steps to skip (each consumes `cfg.batch` sampler draws).
+        steps: usize,
+    },
     /// Terminate the worker.
     Shutdown,
 }
@@ -123,6 +141,17 @@ pub enum Reply {
         stats: RunStats,
         /// Simulated seconds.
         sim_seconds: f64,
+    },
+    /// A parameter re-read finished (`Cmd::ReadParams`).
+    Params {
+        /// Job index.
+        job: usize,
+        /// Current per-layer weights.
+        w: Vec<Vec<i16>>,
+        /// Current per-layer biases.
+        b: Vec<Vec<i16>>,
+        /// [`params_checksum`] of `(w, b)` as the board computed them.
+        checksum: u64,
     },
     /// An inference micro-batch finished.
     InferDone {
@@ -193,14 +222,29 @@ impl Worker {
     pub fn recv(&self) -> Result<Reply, WorkerGone> {
         self.reply_rx.recv().map_err(|_| WorkerGone { board: self.board })
     }
-}
 
-impl Drop for Worker {
-    fn drop(&mut self) {
+    /// Explicit teardown: send `Shutdown` down the command channel and
+    /// **join** the worker thread before returning. The leader calls
+    /// this on every exit path — abort, eviction, and normal completion
+    /// — so no `fpga-worker-*` thread outlives
+    /// [`super::leader::execute`] (asserted by
+    /// `tests/recovery.rs::no_worker_threads_survive_execute`). `Drop`
+    /// performs the same teardown as a safety net.
+    pub fn shutdown(mut self) {
+        self.close();
+    }
+
+    fn close(&mut self) {
         let _ = self.cmd_tx.send(Cmd::Shutdown);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        self.close();
     }
 }
 
@@ -298,6 +342,39 @@ fn worker_main(
                         metrics.errors.fetch_add(1, Ordering::Relaxed);
                         let _ = reply_tx.send(Reply::Error { job, message: e.to_string() });
                     }
+                }
+            }
+            Cmd::ReadParams { job } => {
+                let Some(t) = trainers.get_mut(&job) else {
+                    let _ = reply_tx
+                        .send(Reply::Error { job, message: "no trainer for job".into() });
+                    continue;
+                };
+                let (mut w, b) = t.weights();
+                // Same in-transit fault surface as a chunk reply: the
+                // retry path must be corruptible too, so persistent
+                // corruption (consecutive sites) is expressible.
+                let checksum = params_checksum(&w, &b);
+                if faults.corrupts_chunk(board, chunk_idx) {
+                    metrics.faults_injected.fetch_add(1, Ordering::Relaxed);
+                    if let Some(lane) = w.iter_mut().find_map(|layer| layer.first_mut()) {
+                        *lane ^= 0x0400;
+                    }
+                }
+                if faults.delays_chunk(board, chunk_idx) {
+                    metrics.faults_injected.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                chunk_idx += 1;
+                let _ = reply_tx.send(Reply::Params { job, w, b, checksum });
+            }
+            Cmd::SkipSamples { job, steps } => {
+                if let Some(t) = trainers.get_mut(&job) {
+                    t.skip_steps(steps);
+                    let _ = reply_tx.send(Reply::Ready { job });
+                } else {
+                    let _ = reply_tx
+                        .send(Reply::Error { job, message: "no trainer for job".into() });
                 }
             }
             Cmd::Evaluate { job, data } => {
@@ -470,6 +547,91 @@ mod tests {
         w.send(Cmd::TrainChunk { job: 9, data: Arc::new(dataset::xor(8, 1)), steps: 1 })
             .unwrap();
         assert!(matches!(w.recv(), Ok(Reply::Error { job: 9, .. })));
+    }
+
+    #[test]
+    fn read_params_returns_the_boards_current_state() {
+        let m = Metrics::shared();
+        let w = Worker::spawn(0, FpgaDevice::selected(), Arc::clone(&m), FaultPlan::none());
+        let cfg = TrainConfig { batch: 8, steps: 2, lr: 1.0 / 256.0, seed: 4, log_every: 1 };
+        w.send(Cmd::NewTrainer { job: 0, spec: spec(), cfg }).unwrap();
+        assert!(matches!(w.recv(), Ok(Reply::Ready { job: 0 })));
+        let ds = Arc::new(dataset::xor(32, 5));
+        w.send(Cmd::TrainChunk { job: 0, data: ds, steps: 2 }).unwrap();
+        let (cw, cb) = match w.recv().unwrap() {
+            Reply::ChunkDone { w, b, .. } => (w, b),
+            other => panic!("unexpected {other:?}"),
+        };
+        w.send(Cmd::ReadParams { job: 0 }).unwrap();
+        match w.recv().unwrap() {
+            Reply::Params { job, w: pw, b: pb, checksum } => {
+                assert_eq!(job, 0);
+                assert_eq!((pw.clone(), pb.clone()), (cw, cb));
+                assert_eq!(checksum, params_checksum(&pw, &pb));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // unknown job is a typed error, not a hang
+        w.send(Cmd::ReadParams { job: 7 }).unwrap();
+        assert!(matches!(w.recv(), Ok(Reply::Error { job: 7, .. })));
+    }
+
+    #[test]
+    fn read_params_retry_escapes_a_single_corruption_site() {
+        // Corrupt chunk reply 0; the retry (chunk index 1) is clean —
+        // exactly the in-transit corruption the recovery retry fixes.
+        let m = Metrics::shared();
+        let plan = FaultPlan::none().corrupt(0, 0);
+        let w = Worker::spawn(0, FpgaDevice::selected(), Arc::clone(&m), plan);
+        let cfg = TrainConfig { batch: 8, steps: 1, lr: 1.0 / 256.0, seed: 1, log_every: 1 };
+        w.send(Cmd::NewTrainer { job: 0, spec: spec(), cfg }).unwrap();
+        assert!(matches!(w.recv(), Ok(Reply::Ready { job: 0 })));
+        w.send(Cmd::TrainChunk { job: 0, data: Arc::new(dataset::xor(32, 2)), steps: 1 })
+            .unwrap();
+        match w.recv().unwrap() {
+            Reply::ChunkDone { w: cw, b: cb, checksum, .. } => {
+                assert_ne!(checksum, params_checksum(&cw, &cb), "corruption not applied");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        w.send(Cmd::ReadParams { job: 0 }).unwrap();
+        match w.recv().unwrap() {
+            Reply::Params { w: pw, b: pb, checksum, .. } => {
+                assert_eq!(checksum, params_checksum(&pw, &pb), "retry also corrupt");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn skip_samples_matches_trained_stream() {
+        use crate::nn::trainer::Trainer;
+        // A worker trainer that skips k steps then trains the tail must
+        // land on the same weights as one that trained straight through.
+        let m = Metrics::shared();
+        let device = FpgaDevice::selected();
+        let cfg = TrainConfig { batch: 8, steps: 6, lr: 1.0 / 128.0, seed: 9, log_every: 2 };
+        let ds = Arc::new(dataset::xor(64, 6));
+        let mut straight = Trainer::build(spec(), device, cfg.clone()).unwrap();
+        straight.train(&ds).unwrap();
+        let mut head = Trainer::build(spec(), device, cfg.clone()).unwrap();
+        head.cfg.steps = 2;
+        head.train(&ds).unwrap();
+        let (w2, b2) = head.weights();
+
+        let w = Worker::spawn(0, device, Arc::clone(&m), FaultPlan::none());
+        w.send(Cmd::NewTrainer { job: 0, spec: spec(), cfg }).unwrap();
+        assert!(matches!(w.recv(), Ok(Reply::Ready { job: 0 })));
+        w.send(Cmd::SetWeights { job: 0, w: w2, b: b2 }).unwrap();
+        assert!(matches!(w.recv(), Ok(Reply::Ready { job: 0 })));
+        w.send(Cmd::SkipSamples { job: 0, steps: 2 }).unwrap();
+        assert!(matches!(w.recv(), Ok(Reply::Ready { job: 0 })));
+        w.send(Cmd::TrainChunk { job: 0, data: ds, steps: 4 }).unwrap();
+        let tail_w = match w.recv().unwrap() {
+            Reply::ChunkDone { w, .. } => w,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(tail_w, straight.weights().0, "skip+tail diverged from straight run");
     }
 
     #[test]

@@ -20,6 +20,18 @@
 //!   window (see DESIGN.md §3 deviation note; the low-16-bits reading cannot
 //!   train and is therefore rejected).
 //!
+//! **Rounding rule (documented floor).** The Q.2F → Q.F rescale is an
+//! *arithmetic* right shift, i.e. floor division by `2^F`: negative
+//! products round toward −∞, so `mul(a, b)` and `-mul(-a, b)` may differ
+//! by one ULP. This is deliberately the plain wire truncation the DSP48
+//! slice performs — a round-half-up stage would cost an adder per lane
+//! and break bit-compatibility with the VHDL and the Pallas kernels. The
+//! rule lives in exactly one place, [`FixedSpec::rescale`]; every
+//! simulator level (FastSim, ExecPlan, the structural MVM/DSP model) and
+//! [`FixedSpec::mul`]/[`FixedSpec::dot`] call it, and the float oracle's
+//! tolerance band absorbs the ≤ 1 ULP floor bias
+//! (`tests/properties.rs::fixed_rescale_is_floor_division_for_signed_products`).
+//!
 //! [`RoundMode::Wrap`] is the paper-accurate hardware behaviour (a plain bus
 //! truncation); [`RoundMode::Saturate`] is the ablation alternative
 //! (`benches/bench_ablation.rs`).
@@ -78,6 +90,17 @@ impl FixedSpec {
         }
     }
 
+    /// The Q.2F → Q.F rescale + narrow stage: arithmetic shift right by
+    /// `F` (**floor** division — negative accumulators round toward −∞,
+    /// see the module docs for why), then [`FixedSpec::narrow`]. The
+    /// single definition of the product rounding rule, shared by
+    /// [`FixedSpec::mul`]/[`FixedSpec::dot`], FastSim, the compiled
+    /// ExecPlan, and the structural MVM/DSP model.
+    #[inline]
+    pub fn rescale(&self, acc: i64) -> i16 {
+        self.narrow(acc >> self.frac_bits)
+    }
+
     /// Encode a real number into Q.F (round-to-nearest, then narrow).
     pub fn from_f64(&self, x: f64) -> i16 {
         self.narrow((x * self.scale()).round() as i64)
@@ -112,19 +135,21 @@ impl FixedSpec {
         self.narrow(a as i64 - b as i64)
     }
 
-    /// Lane multiply with Q.2F → Q.F rescale (`MVM_ELEM_MUTLI` element step).
+    /// Lane multiply with Q.2F → Q.F rescale (`MVM_ELEM_MUTLI` element
+    /// step). Floor rounding — see [`FixedSpec::rescale`].
     #[inline]
     pub fn mul(&self, a: i16, b: i16) -> i16 {
-        self.narrow((a as i64 * b as i64) >> self.frac_bits)
+        self.rescale(a as i64 * b as i64)
     }
 
     // ---- vector ops (what one MVM does per instruction) ----
 
     /// Vector dot product: 48-bit accumulate of Q.2F products, then one
-    /// rescale + narrow (`MVM_VEC_DOT`).
+    /// rescale + narrow (`MVM_VEC_DOT`; floor rounding — see
+    /// [`FixedSpec::rescale`]).
     pub fn dot(&self, a: &[i16], b: &[i16]) -> i16 {
         assert_eq!(a.len(), b.len(), "dot: length mismatch");
-        self.narrow(self.dot_acc(a, b) >> self.frac_bits)
+        self.rescale(self.dot_acc(a, b))
     }
 
     /// The raw 48-bit (i64) accumulator value of a dot product, before the
@@ -216,6 +241,22 @@ mod tests {
         let s = FixedSpec::q(7);
         assert_eq!(s.mul(-1, 1), -1);
         assert_eq!(s.mul(1, 1), 0);
+    }
+
+    #[test]
+    fn rescale_is_the_shared_floor_rule() {
+        let s = FixedSpec::q(7);
+        let mut r = Rng::new(0xF10);
+        for _ in 0..2000 {
+            let (a, b) = (r.gen_i16(), r.gen_i16());
+            let wide = a as i64 * b as i64;
+            // mul is exactly rescale, and rescale is floor division
+            assert_eq!(s.mul(a, b), s.rescale(wide));
+            assert_eq!(s.rescale(wide), s.narrow(wide.div_euclid(1 << s.frac_bits)));
+        }
+        // the documented floor bias: -(2^-14) floors to -1 ULP, not 0
+        assert_eq!(s.rescale(-1), -1);
+        assert_eq!(s.rescale(1), 0);
     }
 
     #[test]

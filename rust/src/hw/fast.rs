@@ -127,7 +127,7 @@ impl FastSim {
                 for lane in &wave.lanes {
                     let b = lane.b.as_ref().expect("checked arity");
                     let acc = self.dot_views(&lane.a, b);
-                    let v = s.narrow(acc >> s.frac_bits);
+                    let v = s.rescale(acc);
                     self.buffers[lane.out.buf][lane.out.offset] = v;
                 }
             }

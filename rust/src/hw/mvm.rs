@@ -244,15 +244,15 @@ impl Mvm {
             }
             let result = if !accumulating {
                 // Elementwise: every P update is a result.
-                Some(self.fixed.narrow(if matches!(dsp_op, DspOp::Mult) {
-                    self.dsp.p() >> self.fixed.frac_bits
+                Some(if matches!(dsp_op, DspOp::Mult) {
+                    self.fixed.rescale(self.dsp.p())
                 } else {
-                    self.dsp.p()
-                }))
+                    self.fixed.narrow(self.dsp.p())
+                })
             } else if self.issued == len && self.dsp.pipeline_empty() {
                 // Accumulating: single result once the pipeline drained.
                 Some(match op {
-                    MvmOp::VecDot => self.fixed.narrow(self.dsp.p() >> self.fixed.frac_bits),
+                    MvmOp::VecDot => self.fixed.rescale(self.dsp.p()),
                     MvmOp::VecSum => self.fixed.narrow(self.dsp.p()),
                     _ => unreachable!(),
                 })

@@ -893,7 +893,7 @@ impl ExecPlan {
                         }
                         acc
                     };
-                    let v = s.narrow(acc >> s.frac_bits);
+                    let v = s.rescale(acc);
                     *arena.add(lane.out.base) = v;
                     if lane.fused_out != usize::MAX {
                         *arena.add(lane.fused_out) =

@@ -49,7 +49,10 @@ pub mod testkit;
 pub mod util;
 
 pub use serve::{ServeConfig, Server};
-pub use session::{Artifact, CompileOptions, Compiler, Error, Session, Target, TensorHandle};
+pub use cluster::{RecoveryPolicy, TrainCheckpoint};
+pub use session::{
+    Artifact, CompileOptions, Compiler, Error, Session, Target, TensorHandle, TrainOptions,
+};
 
 /// Crate version string (mirrors `Cargo.toml`).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

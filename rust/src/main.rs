@@ -185,7 +185,8 @@ fn cmd_run(rest: &[String]) -> Result<(), String> {
             session.step()
         };
         println!(
-            "net {:?}: {} cycles (dma {} + compute {} + lut {} + ring {}), {:.3} ms simulated, {} lane-ops ({}/s)",
+            "net {:?}: {} cycles (dma {} + compute {} + lut {} + ring {}), \
+             {:.3} ms simulated, {} lane-ops ({}/s)",
             artifact.name(),
             stats.cycles,
             stats.dma_cycles,
@@ -203,13 +204,55 @@ fn cmd_run(rest: &[String]) -> Result<(), String> {
 // -------------------------------------------------------------------- train
 
 fn cmd_train(rest: &[String]) -> Result<(), String> {
-    let spec = Spec::new().pos("config", "launcher config (.toml)", true);
+    let spec = Spec::new()
+        .opt(
+            "checkpoint-every",
+            "capture a deterministic checkpoint every N steps (0 = off)",
+            Some("0"),
+        )
+        .opt("checkpoint-dir", "directory for per-job <name>.mfck snapshots", Some("checkpoints"))
+        .flag("resume", "resume each job from <checkpoint-dir>/<name>.mfck when present")
+        .pos("config", "launcher config (.toml)", true);
     let args = parse_or_help(&spec, rest, "mfnn train", "Run a training cluster from a config")?;
     let path = args.positional("config").unwrap();
     let cfg = Config::from_file(Path::new(path)).map_err(|e| e.to_string())?;
+    let every: usize = args.parse_or("checkpoint-every", 0).map_err(|e| e.to_string())?;
+    let ckpt_dir = args.str_or("checkpoint-dir", "checkpoints");
     let compiler = Compiler::new();
-    let (ccfg, jobs) = jobs_from_config(&compiler, &cfg)?;
+    let (mut ccfg, mut jobs) = jobs_from_config(&compiler, &cfg)?;
+    ccfg.recovery.checkpoint_every = every;
+    if args.flag("resume") {
+        for job in &mut jobs {
+            let path = Path::new(&ckpt_dir).join(format!("{}.mfck", job.artifact.name()));
+            if path.exists() {
+                let ck = mfnn::TrainCheckpoint::load(&path)
+                    .map_err(|e| format!("{}: {e}", path.display()))?;
+                println!(
+                    "resuming {:?} from step {} ({})",
+                    job.artifact.name(),
+                    ck.steps_done,
+                    path.display()
+                );
+                job.resume = Some(ck);
+            }
+        }
+    }
     let report = Session::train_many(&ccfg, &jobs).map_err(|e| e.to_string())?;
+    if every > 0 {
+        std::fs::create_dir_all(&ckpt_dir).map_err(|e| format!("{ckpt_dir}: {e}"))?;
+        for jr in &report.results {
+            if let Some(ck) = jr.checkpoints.last() {
+                let path = Path::new(&ckpt_dir).join(format!("{}.mfck", jr.name));
+                ck.save(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+                println!(
+                    "checkpoint: {:?} at step {} → {}",
+                    jr.name,
+                    ck.steps_done,
+                    path.display()
+                );
+            }
+        }
+    }
     let mut t = Table::new(vec!["job", "boards", "steps", "accuracy", "sim compute", "sim bus"])
         .with_title(format!(
             "cluster: {} boards ({:?}), makespan {:.3} ms simulated",
@@ -425,6 +468,7 @@ fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
         .opt("seed", "base seed (case i runs at seed + i·φ; case 0 = seed)", Some("0"))
         .opt("device", "FPGA part every level simulates", Some("XC7S75-2"))
         .opt("corpus", "replay `family seed` lines from this snapshot file", None)
+        .opt("family", "restrict to one family: net|program|fault|recovery", None)
         .opt("failures-out", "write failing seeds here (corpus format)", Some("FUZZ_FAILURES.txt"))
         .opt("max-shrink", "shrink-step budget per failure", Some("100"))
         .flag("plant-divergence", "test-only hook: plant a known FastSim divergence");
@@ -435,6 +479,13 @@ fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
         "Differential-fuzz every simulator fidelity level (DESIGN.md §Testing)",
     )?;
     let part = device_arg(&args)?;
+    let family = match args.get("family") {
+        Some(f) => Some(
+            mfnn::testkit::Family::parse(f)
+                .ok_or(format!("unknown family {f:?} (net|program|fault|recovery)"))?,
+        ),
+        None => None,
+    };
     let opts = mfnn::testkit::FuzzOptions {
         cases: args.parse_or("cases", 64usize).map_err(|e| e.to_string())?,
         seed: args.parse_or("seed", 0u64).map_err(|e| e.to_string())?,
@@ -442,6 +493,7 @@ fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
         plant_divergence: args.flag("plant-divergence"),
         max_shrink_steps: args.parse_or("max-shrink", 100usize).map_err(|e| e.to_string())?,
         check_reproduction: true,
+        family,
     };
     let report = match args.get("corpus") {
         Some(path) => {

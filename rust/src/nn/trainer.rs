@@ -192,6 +192,16 @@ impl Trainer {
         self.rng = Rng::new(seed);
     }
 
+    /// Fast-forward the batch sampler past `steps` already-trained steps
+    /// (each step draws `cfg.batch` sample indices) without running any
+    /// compute — the deterministic checkpoint/resume cursor: a fresh
+    /// trainer built from the same seed, restored to a snapshot's
+    /// parameters and skipped to its step count, continues the exact
+    /// sample stream of the uninterrupted run.
+    pub fn skip_steps(&mut self, steps: usize) {
+        self.rng.skip(steps as u64 * self.cfg.batch as u64);
+    }
+
     /// Bind explicit weights (e.g. to mirror a float run).
     pub fn set_weights(&mut self, qw: &[Vec<i16>], qb: &[Vec<i16>]) -> Result<(), TrainError> {
         for l in 0..self.spec.layers.len() {
@@ -556,6 +566,30 @@ mod tests {
         t.set_weights(&zw, &zb).unwrap();
         let (o, _) = t.infer_rows(3, &ds.encode_rows(0..3, f)).unwrap();
         assert!(o.iter().all(|&v| v == 0), "stale ladder variant served: {o:?}");
+    }
+
+    #[test]
+    fn skip_steps_fast_forwards_the_sample_stream_bit_exactly() {
+        // Train 7 steps straight vs train 3, snapshot, restore into a
+        // fresh trainer skipped to step 3, train 4 more: identical
+        // weights — the resume primitive under cluster checkpointing.
+        let s = spec(&[2, 6, 2]);
+        let cfg = TrainConfig { batch: 8, lr: 1.0 / 128.0, steps: 7, seed: 31, log_every: 2 };
+        let ds = dataset::xor(64, 8);
+        let mut straight = Trainer::build(s.clone(), FpgaDevice::selected(), cfg.clone()).unwrap();
+        straight.train(&ds).unwrap();
+
+        let mut head = Trainer::build(s.clone(), FpgaDevice::selected(), cfg.clone()).unwrap();
+        head.cfg.steps = 3;
+        head.train(&ds).unwrap();
+        let (w3, b3) = head.weights();
+
+        let mut resumed = Trainer::build(s, FpgaDevice::selected(), cfg).unwrap();
+        resumed.set_weights(&w3, &b3).unwrap();
+        resumed.skip_steps(3);
+        resumed.cfg.steps = 4;
+        resumed.train(&ds).unwrap();
+        assert_eq!(resumed.weights(), straight.weights(), "resume diverged");
     }
 
     #[test]

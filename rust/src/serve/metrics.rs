@@ -89,6 +89,9 @@ pub struct BoardMetrics {
     pub batches: u64,
     /// Simulated cycles this board spent computing.
     pub busy_cycles: u64,
+    /// True once the board was evicted from the pool
+    /// ([`crate::serve::Server::evict_board`]).
+    pub evicted: bool,
 }
 
 /// A point-in-time snapshot of a server's serving metrics.
@@ -168,10 +171,11 @@ impl ServeReport {
         let mut s = t.render();
         for (b, m) in self.boards.iter().enumerate() {
             s.push_str(&format!(
-                "board {b}: {} batch(es), {} busy cycles ({:.1}% of makespan)\n",
+                "board {b}: {} batch(es), {} busy cycles ({:.1}% of makespan){}\n",
                 m.batches,
                 m.busy_cycles,
                 100.0 * m.busy_cycles as f64 / self.makespan_cycles.max(1) as f64,
+                if m.evicted { " [evicted]" } else { "" },
             ));
         }
         s
@@ -197,9 +201,10 @@ impl ServeReport {
         s.push_str("  \"board_metrics\": [\n");
         for (i, b) in self.boards.iter().enumerate() {
             s.push_str(&format!(
-                "    {{\"batches\": {}, \"busy_cycles\": {}}}{}\n",
+                "    {{\"batches\": {}, \"busy_cycles\": {}, \"evicted\": {}}}{}\n",
                 b.batches,
                 b.busy_cycles,
+                b.evicted,
                 if i + 1 == self.boards.len() { "" } else { "," },
             ));
         }
@@ -247,7 +252,7 @@ mod tests {
     fn report_aggregates_and_serialises() {
         let report = ServeReport {
             device: FpgaDevice::selected(),
-            boards: vec![BoardMetrics { batches: 2, busy_cycles: 100 }],
+            boards: vec![BoardMetrics { batches: 2, busy_cycles: 100, evicted: false }],
             nets: vec![NetMetrics {
                 name: "a".into(),
                 submitted: 4,

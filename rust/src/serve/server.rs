@@ -101,6 +101,14 @@ pub enum ServeError {
         /// Configured capacity.
         cap: usize,
     },
+    /// Every board of the pool has been evicted: nothing can serve the
+    /// backlog (or admit new requests). Unlike a transient
+    /// [`ServeError::Overloaded`] this is terminal for the server.
+    #[error("all {boards} board(s) evicted; cannot serve")]
+    NoBoards {
+        /// Pool size (all evicted).
+        boards: usize,
+    },
     /// Submissions must carry a non-decreasing simulated clock.
     #[error("simulated clock must be monotonic: submit at cycle {at} before now {now}")]
     ClockSkew {
@@ -175,6 +183,10 @@ struct Engine {
 struct BoardState {
     /// Simulated cycle the board becomes free.
     busy_until: u64,
+    /// False once the board was evicted ([`Server::evict_board`]): it
+    /// takes no further batches; the shared ready queue redistributes
+    /// onto the survivors.
+    alive: bool,
     /// Lazily-created engines, keyed `(net, bucket)` (BTreeMap: the
     /// runtime never iterates hash-ordered state — determinism).
     engines: BTreeMap<(NetId, usize), Engine>,
@@ -245,7 +257,7 @@ impl Server {
         }
         let ladder = forward_buckets(cfg.max_batch);
         let boards = (0..cfg.boards)
-            .map(|_| BoardState { busy_until: 0, engines: BTreeMap::new() })
+            .map(|_| BoardState { busy_until: 0, alive: true, engines: BTreeMap::new() })
             .collect();
         let board_metrics = vec![BoardMetrics::default(); cfg.boards];
         Ok(Server {
@@ -345,6 +357,35 @@ impl Server {
         &self.ladder
     }
 
+    /// Boards still accepting work.
+    pub fn alive_boards(&self) -> usize {
+        self.boards.iter().filter(|b| b.alive).count()
+    }
+
+    /// Evict a failed board from the pool (idempotent). The board takes
+    /// no further batches — its in-flight micro-batch finishes at its
+    /// already-scheduled completion cycle, and everything queued or
+    /// formed redistributes onto the surviving boards through the
+    /// shared ready queue (the serving twin of the cluster leader's
+    /// board eviction: requests are **not** errored). Evicting the last
+    /// board is allowed; the failure then surfaces as a typed
+    /// [`ServeError::NoBoards`] on the next submit/drain that actually
+    /// needs a board.
+    pub fn evict_board(&mut self, board: usize) -> Result<(), ServeError> {
+        if board >= self.boards.len() {
+            return Err(ServeError::Config(format!(
+                "evict_board({board}) out of range for a {}-board pool",
+                self.boards.len()
+            )));
+        }
+        if self.boards[board].alive {
+            self.boards[board].alive = false;
+            self.boards[board].engines.clear();
+            self.board_metrics[board].evicted = true;
+        }
+        Ok(())
+    }
+
     /// Submit one request (a quantised `input_dim` row for `net`) at
     /// simulated cycle `at` (must be ≥ the server's clock; the clock
     /// advances to `at`, firing any deadlines/dispatches due before it).
@@ -360,6 +401,9 @@ impl Server {
         }
         if net >= self.nets.len() {
             return Err(ServeError::UnknownNet(net));
+        }
+        if self.alive_boards() == 0 {
+            return Err(ServeError::NoBoards { boards: self.boards.len() });
         }
         self.advance_to(at)?;
         let cap = self.cfg.queue_cap;
@@ -397,7 +441,11 @@ impl Server {
     /// serving half of the no-hang contract.
     pub fn drain(&mut self) -> Result<u64, ServeError> {
         while self.has_work() {
-            let e = self.next_event().expect("pending work implies a next event");
+            let Some(e) = self.next_event() else {
+                // Only possible when every board has been evicted while
+                // work is still pending: typed, never a hang.
+                return Err(ServeError::NoBoards { boards: self.boards.len() });
+            };
             self.now = self.now.max(e);
             self.pump()?;
         }
@@ -445,7 +493,9 @@ impl Server {
             }
         }
         if !self.ready.is_empty() {
-            if let Some(b) = self.boards.iter().map(|b| b.busy_until).min() {
+            if let Some(b) =
+                self.boards.iter().filter(|b| b.alive).map(|b| b.busy_until).min()
+            {
                 fold(b);
             }
         }
@@ -470,10 +520,10 @@ impl Server {
         Ok(())
     }
 
-    /// The lowest-indexed free board (`None` when all busy) — a
-    /// deterministic placement rule.
+    /// The lowest-indexed free **alive** board (`None` when all busy or
+    /// evicted) — a deterministic placement rule.
     fn free_board(&self) -> Option<usize> {
-        self.boards.iter().position(|b| b.busy_until <= self.now)
+        self.boards.iter().position(|b| b.alive && b.busy_until <= self.now)
     }
 
     /// Execute one micro-batch on `board` at the current cycle.

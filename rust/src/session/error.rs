@@ -45,6 +45,11 @@ pub enum Error {
     /// The multi-FPGA cluster runtime failed.
     #[error(transparent)]
     Cluster(#[from] ClusterError),
+    /// A checkpoint could not be read/written or failed validation
+    /// (bad magic, truncation, integrity-checksum mismatch, resume
+    /// against the wrong run).
+    #[error(transparent)]
+    Checkpoint(#[from] crate::nn::checkpoint::CheckpointError),
     /// The multi-tenant serving runtime failed (typed overload
     /// rejections, admission/config errors — see
     /// [`crate::serve::ServeError`]).

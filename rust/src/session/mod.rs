@@ -54,4 +54,6 @@ pub mod session;
 pub use artifact::{Artifact, ForwardVariant, TensorHandle};
 pub use compiler::{CompileOptions, Compiler};
 pub use error::Error;
-pub use session::{Evaluation, Inference, NetJob, Session, Target, TrainSummary};
+pub use session::{
+    Evaluation, Inference, NetJob, Session, Target, TrainOptions, TrainSummary,
+};

@@ -17,7 +17,8 @@
 
 use super::artifact::{Artifact, ForwardVariant, TensorHandle};
 use super::error::Error;
-use crate::cluster::leader::{self, ClusterConfig, ClusterReport, Job};
+use crate::cluster::checkpoint::{RunIdentity, TrainCheckpoint};
+use crate::cluster::leader::{self, ClusterConfig, ClusterReport, Job, JobResume};
 use crate::hw::{FpgaDevice, MatrixMachine, RunStats};
 use crate::nn::dataset::{self, Dataset};
 use crate::nn::trainer::{LossPoint, TrainConfig, Trainer};
@@ -81,6 +82,44 @@ pub struct NetJob {
     pub train: Arc<Dataset>,
     /// Test split (evaluated after training).
     pub test: Arc<Dataset>,
+    /// Resume this job bit-exactly from a [`TrainCheckpoint`] (validated
+    /// against the job's identity) instead of starting from scratch —
+    /// what `mfnn train --resume` loads per job.
+    pub resume: Option<TrainCheckpoint>,
+}
+
+/// Checkpoint/resume options for [`Session::train_with`].
+#[derive(Debug, Clone, Default)]
+pub struct TrainOptions {
+    /// Capture a deterministic [`TrainCheckpoint`] every this many steps
+    /// (0 = none). On a board target this also chunks the training loop
+    /// at the same cadence; on a cluster target it sets the run's
+    /// [`crate::cluster::RecoveryPolicy::checkpoint_every`] (divided
+    /// jobs snapshot at weight-sync boundaries).
+    pub checkpoint_every: usize,
+    /// Resume from this snapshot: validated against the run's identity
+    /// (net, seed, batch, steps). The continuation always reproduces
+    /// the uninterrupted run's **weights** bit-exactly; the loss curve
+    /// and simulated-seconds accounting are additionally bit-exact when
+    /// the resumed run uses the **same** [`TrainOptions::checkpoint_every`]
+    /// as the original (chunk boundaries are observable in the curve's
+    /// logging cadence, so a different cadence logs different steps).
+    pub resume: Option<TrainCheckpoint>,
+}
+
+impl TrainOptions {
+    /// Checkpoint every `steps` steps, no resume.
+    pub fn checkpoint_every(steps: usize) -> TrainOptions {
+        TrainOptions { checkpoint_every: steps, resume: None }
+    }
+
+    /// Resume from `ck` with checkpointing off. Weights are bit-exact
+    /// regardless; for a bit-exact loss curve too, set
+    /// [`TrainOptions::checkpoint_every`] to the original run's cadence
+    /// (see [`TrainOptions::resume`] (field) docs).
+    pub fn resume(ck: TrainCheckpoint) -> TrainOptions {
+        TrainOptions { checkpoint_every: 0, resume: Some(ck) }
+    }
 }
 
 enum Engine {
@@ -363,59 +402,161 @@ impl Session {
     /// session. `cfg.batch`/`cfg.lr` must match the artifact's compiled
     /// options.
     pub fn train(&mut self, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainSummary, Error> {
+        self.train_with(ds, cfg, &TrainOptions::default()).map(|(summary, _)| summary)
+    }
+
+    /// [`Session::train`] with deterministic checkpointing: snapshots
+    /// are captured every [`TrainOptions::checkpoint_every`] steps and
+    /// returned alongside the summary, and [`TrainOptions::resume`]
+    /// continues a snapshotted run **bit-exactly** — `resume(k)` then
+    /// training to the end reproduces the uninterrupted run's weights
+    /// always, and its loss curve and stats too when resumed at the
+    /// same checkpoint cadence (asserted for every captured `k` by
+    /// `tests/recovery.rs`).
+    pub fn train_with(
+        &mut self,
+        ds: &Dataset,
+        cfg: &TrainConfig,
+        opts: &TrainOptions,
+    ) -> Result<(TrainSummary, Vec<TrainCheckpoint>), Error> {
         self.artifact.check_train_cfg(cfg)?;
+        if let Some(ck) = &opts.resume {
+            let net = self.artifact.net().expect("checked trainable");
+            // One job on F boards divides over all of them when F > 1
+            // (see `cluster::schedule`); otherwise the run is
+            // single-board and the snapshot must say so too.
+            let (replicas, sync_every) = match &self.cluster {
+                Some(c) if c.boards > 1 => (c.boards, c.sync_every),
+                _ => (1, 0),
+            };
+            let run = RunIdentity {
+                seed: cfg.seed,
+                batch: cfg.batch,
+                lr: cfg.lr,
+                replicas,
+                sync_every,
+                total_steps: cfg.steps,
+            };
+            ck.check_resume(&net.spec.name, &run)?;
+        }
         match self.cluster.clone() {
-            Some(ccfg) => self.train_cluster(&ccfg, ds, cfg),
-            None => self.train_board(ds, cfg),
+            Some(ccfg) => self.train_cluster_with(&ccfg, ds, cfg, opts),
+            None => self.train_board_with(ds, cfg, opts),
         }
     }
 
-    fn train_board(&mut self, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainSummary, Error> {
+    fn train_board_with(
+        &mut self,
+        ds: &Dataset,
+        cfg: &TrainConfig,
+        opts: &TrainOptions,
+    ) -> Result<(TrainSummary, Vec<TrainCheckpoint>), Error> {
         let Engine::Trainable(t) = &mut self.engine else {
             unreachable!("check_train_cfg guarantees a trainable engine");
         };
         t.cfg = cfg.clone();
-        // First train call seeds the batch sampler from cfg.seed — also
-        // when weights were preloaded through handles (the seed must not
-        // be silently ignored). Later calls continue the stream.
-        if !self.sampler_seeded {
-            if self.weights_ready {
-                t.reseed(cfg.seed);
-            } else {
+        let (mut done, mut curve, mut stats, mut compute_s) = match &opts.resume {
+            Some(ck) => {
+                // Deterministic resume: a seed init positions the
+                // sampler stream exactly where a fresh run's would be,
+                // the snapshot's parameters overwrite the seed weights,
+                // and the sampler fast-forwards past the trained steps.
                 t.init_weights(cfg.seed)?;
+                let (w, b) = ck.weights();
+                t.set_weights(&w, &b)?;
+                t.skip_steps(ck.steps_done);
                 self.weights_ready = true;
+                self.sampler_seeded = true;
+                (ck.steps_done, ck.curve.clone(), ck.stats, ck.sim_compute_s)
             }
-            self.sampler_seeded = true;
+            None => {
+                // First train call seeds the batch sampler from
+                // cfg.seed — also when weights were preloaded through
+                // handles (the seed must not be silently ignored).
+                // Later calls continue the stream.
+                if !self.sampler_seeded {
+                    if self.weights_ready {
+                        t.reseed(cfg.seed);
+                    } else {
+                        t.init_weights(cfg.seed)?;
+                        self.weights_ready = true;
+                    }
+                    self.sampler_seeded = true;
+                }
+                (0, Vec::new(), RunStats::default(), 0.0)
+            }
+        };
+        let total = cfg.steps;
+        let every = opts.checkpoint_every;
+        let mut checkpoints = Vec::new();
+        while done < total {
+            let steps = if every > 0 { every.min(total - done) } else { total - done };
+            t.cfg.steps = steps;
+            let report = t.train(ds)?;
+            curve.extend(report.curve.into_iter().map(|mut p| {
+                p.step += done;
+                p
+            }));
+            stats.add(&report.stats);
+            compute_s += report.sim_seconds;
+            done += steps;
+            if every > 0 {
+                let run = RunIdentity {
+                    seed: cfg.seed,
+                    batch: cfg.batch,
+                    lr: cfg.lr,
+                    replicas: 1,
+                    sync_every: 0,
+                    total_steps: total,
+                };
+                let (w, b) = t.weights();
+                checkpoints.push(TrainCheckpoint::capture(
+                    &t.spec, &run, done, &curve, stats, compute_s, &w, &b,
+                ));
+            }
         }
-        let report = t.train(ds)?;
-        Ok(TrainSummary {
-            curve: report.curve,
-            stats: report.stats,
-            sim_seconds: report.sim_seconds,
-            steps: report.steps,
-            boards: vec![0],
-            sync_rounds: 0,
-        })
+        t.cfg.steps = total;
+        Ok((
+            TrainSummary {
+                curve,
+                stats,
+                sim_seconds: compute_s,
+                steps: total,
+                boards: vec![0],
+                sync_rounds: 0,
+            },
+            checkpoints,
+        ))
     }
 
-    fn train_cluster(
+    fn train_cluster_with(
         &mut self,
         ccfg: &ClusterConfig,
         ds: &Dataset,
         cfg: &TrainConfig,
-    ) -> Result<TrainSummary, Error> {
+        opts: &TrainOptions,
+    ) -> Result<(TrainSummary, Vec<TrainCheckpoint>), Error> {
         if ds.is_empty() {
             return Err(Error::Unsupported { verb: "train", why: "empty dataset".into() });
         }
         let net = self.artifact.net().expect("checked trainable");
-        let initial = if self.weights_ready {
-            let Engine::Trainable(t) = &self.engine else {
-                unreachable!("trainable artifact has a trainer engine");
-            };
-            Some(t.weights())
-        } else {
-            None
+        let (initial, resume) = match &opts.resume {
+            Some(ck) => (Some(ck.weights()), Some(JobResume::from_checkpoint(ck))),
+            None => {
+                if self.weights_ready {
+                    let Engine::Trainable(t) = &self.engine else {
+                        unreachable!("trainable artifact has a trainer engine");
+                    };
+                    (Some(t.weights()), None)
+                } else {
+                    (None, None)
+                }
+            }
         };
+        let mut ccfg = ccfg.clone();
+        if opts.checkpoint_every > 0 {
+            ccfg.recovery.checkpoint_every = opts.checkpoint_every;
+        }
         // The cluster runtime always evaluates after training; give it a
         // single-row probe so that cost stays negligible (the session's
         // own `evaluate` is the real testing path).
@@ -432,8 +573,9 @@ impl Session {
             train_data: Arc::new(ds.clone()),
             test_data: Arc::new(probe),
             initial,
+            resume,
         };
-        let report = leader::execute(ccfg, &[job])?;
+        let report = leader::execute(&ccfg, &[job])?;
         let jr = report.results.into_iter().next().expect("one job dispatched");
         // Adopt the cluster's final (averaged) parameters locally so
         // infer/evaluate see what the cluster trained.
@@ -442,14 +584,17 @@ impl Session {
         };
         t.set_weights(&jr.weights, &jr.biases)?;
         self.weights_ready = true;
-        Ok(TrainSummary {
-            curve: jr.curve,
-            stats: jr.stats,
-            sim_seconds: jr.sim_compute_s + jr.sim_bus_s,
-            steps: jr.steps,
-            boards: jr.boards,
-            sync_rounds: report.metrics.sync_rounds,
-        })
+        Ok((
+            TrainSummary {
+                curve: jr.curve,
+                stats: jr.stats,
+                sim_seconds: jr.sim_compute_s + jr.sim_bus_s,
+                steps: jr.steps,
+                boards: jr.boards,
+                sync_rounds: report.metrics.sync_rounds,
+            },
+            jr.checkpoints,
+        ))
     }
 
     /// Classification accuracy of the session's current parameters over
@@ -526,17 +671,41 @@ impl Session {
     /// queues when M > F, 1:1 when M = F, divided data-parallel groups
     /// when M < F).
     pub fn train_many(cfg: &ClusterConfig, jobs: &[NetJob]) -> Result<ClusterReport, Error> {
+        let placement = crate::cluster::schedule(jobs.len(), cfg.boards);
         let mut cluster_jobs = Vec::with_capacity(jobs.len());
-        for j in jobs {
+        for (ji, j) in jobs.iter().enumerate() {
             j.artifact.check_train_cfg(&j.cfg)?;
             let net = j.artifact.net().expect("checked trainable");
+            let (initial, resume) = match &j.resume {
+                Some(ck) => {
+                    use crate::cluster::PlacementMode;
+                    let (replicas, sync_every) = match placement.mode {
+                        PlacementMode::Divided => {
+                            (placement.groups[ji].len(), cfg.sync_every)
+                        }
+                        _ => (1, 0),
+                    };
+                    let run = RunIdentity {
+                        seed: j.cfg.seed,
+                        batch: j.cfg.batch,
+                        lr: j.cfg.lr,
+                        replicas,
+                        sync_every,
+                        total_steps: j.cfg.steps,
+                    };
+                    ck.check_resume(&net.spec.name, &run)?;
+                    (Some(ck.weights()), Some(JobResume::from_checkpoint(ck)))
+                }
+                None => (None, None),
+            };
             cluster_jobs.push(Job {
                 name: net.spec.name.clone(),
                 spec: net.spec.clone(),
                 cfg: j.cfg.clone(),
                 train_data: Arc::clone(&j.train),
                 test_data: Arc::clone(&j.test),
-                initial: None,
+                initial,
+                resume,
             });
         }
         Ok(leader::execute(cfg, &cluster_jobs)?)

@@ -5,12 +5,12 @@
 //!
 //! | level | executor | agreement |
 //! |---|---|---|
-//! | L0 | [`FloatMlp`] float64 oracle | within a quantisation tolerance band |
-//! | L1 | [`FastSim`] sequential functional reference | bit-exact |
-//! | L2 | unfused [`ExecPlan`] (one wave per source step) | bit-exact + identical [`crate::hw::RunStats`] |
-//! | L3 | fused [`ExecPlan`] via the Session API (+ structural microcode verify) | bit-exact + identical [`crate::hw::RunStats`] |
-//! | L4 | cluster runtime ([`crate::cluster::leader::execute`]) | bit-exact weights vs the board; deterministic across runs |
-//! | L5 | serving runtime ([`crate::serve::Server`]) | every request bit-exact vs a batch-1 `Session::infer` |
+//! | L0 | [`FloatMlp`] float64 oracle | quantisation tolerance band |
+//! | L1 | [`FastSim`] sequential reference | bit-exact |
+//! | L2 | unfused [`ExecPlan`], one wave/step | bit-exact + same `RunStats` |
+//! | L3 | fused [`ExecPlan`] via the Session API | bit-exact + same `RunStats` |
+//! | L4 | cluster runtime (`leader::execute`) | bit-exact weights vs board |
+//! | L5 | serving runtime ([`crate::serve::Server`]) | bit-exact vs batch-1 infer |
 //!
 //! The float oracle cannot be bit-exact against a 16-bit datapath; it is
 //! the wiring sanity check (a transposed weight or dropped layer shows up
@@ -18,7 +18,7 @@
 //! fixed-point levels must agree to the bit, including cycle accounting
 //! between the fused and unfused plans.
 
-use super::gen::{FaultCase, FuzzCase, NetCase, ProgramCase};
+use super::gen::{FaultCase, FuzzCase, NetCase, ProgramCase, RecoveryCase};
 use crate::assembler::program::Step;
 use crate::cluster::fault::FaultPlan;
 use crate::cluster::leader::{self, ClusterConfig, ClusterError, Job, JobResult};
@@ -342,6 +342,7 @@ impl Differ {
             train_data: Arc::new(ds.clone()),
             test_data: Arc::new(ds.clone()),
             initial: None,
+            resume: None,
         };
         let ccfg = self.cluster_config(1, c.sync_every, FaultPlan::none());
         let report = leader::execute(&ccfg, std::slice::from_ref(&job))
@@ -509,6 +510,7 @@ impl Differ {
                     train_data: Arc::clone(&ds),
                     test_data: Arc::clone(&ds),
                     initial: None,
+                    resume: None,
                 }
             })
             .collect()
@@ -569,6 +571,7 @@ impl Differ {
             train_data: Arc::new(ds.clone()),
             test_data: Arc::new(ds.clone()),
             initial: None,
+            resume: None,
         };
         let want = leader::execute(&ccfg, std::slice::from_ref(&single))
             .map_err(|e| fail(Level::Cluster, format!("reference cluster failed: {e}")))?;
@@ -722,12 +725,16 @@ impl Differ {
 
         match f1 {
             Ok(faulty) => {
-                // A run that completes must match the clean run exactly:
-                // delays are result-preserving by design, and every
-                // lethal fault that actually fires aborts the run — so an
-                // Ok outcome with different results is always a bug.
+                // A run that completes must match the clean run's
+                // trained state exactly: delays are result-preserving by
+                // design, and under the default RecoveryPolicy a lethal
+                // fault either recovers **bit-identically** (chunks
+                // rescheduled onto survivors, corrupt params re-read) or
+                // aborts typed — so an Ok outcome with different
+                // weights/curves is always a bug. Only the board
+                // assignment may legitimately differ (rescheduling).
                 for (x, y) in clean.results.iter().zip(&faulty.results) {
-                    if let Err(d) = job_results_equal(x, y) {
+                    if let Err(d) = job_results_equivalent(x, y) {
                         return Err(fail(
                             Level::Cluster,
                             format!("faults changed a completed run's {:?}: {d}", x.name),
@@ -755,6 +762,56 @@ impl Differ {
             }
         }
     }
+
+    // ----------------------------------------------------------- recovery
+
+    /// Recovery differential — the crash-tolerance acceptance property:
+    /// a **survivable** fault plan (kills leave ≥ 1 board per recovery
+    /// domain, corruptions within the retry budget) must *complete*
+    /// under the default [`crate::cluster::RecoveryPolicy`] with
+    /// weights, biases, loss curves, accuracy, and stats bit-identical
+    /// to the fault-free run — and deterministically across replays.
+    pub fn run_recovery(&self, rc: &RecoveryCase) -> Result<(), Divergence> {
+        let c = &rc.case;
+        let jobs = self.jobs_for(c);
+        let clean_cfg = self.cluster_config(c.boards, c.sync_every, FaultPlan::none());
+        let faulty_cfg = self.cluster_config(c.boards, c.sync_every, rc.plan.clone());
+
+        let clean = leader::execute(&clean_cfg, &jobs)
+            .map_err(|e| fail(Level::Cluster, format!("clean run failed: {e}")))?;
+        let f1 = leader::execute(&faulty_cfg, &jobs).map_err(|e| {
+            fail(
+                Level::Cluster,
+                format!("survivable fault plan did not recover: {e}"),
+            )
+        })?;
+        let f2 = leader::execute(&faulty_cfg, &jobs).map_err(|e| {
+            fail(
+                Level::Cluster,
+                format!("survivable fault plan did not recover on replay: {e}"),
+            )
+        })?;
+        // Replays agree on everything, including the (rescheduled)
+        // board assignment.
+        for (a, b) in f1.results.iter().zip(&f2.results) {
+            if let Err(d) = job_results_equal(a, b) {
+                return Err(fail(
+                    Level::Cluster,
+                    format!("recovered outcome nondeterministic for {:?}: {d}", a.name),
+                ));
+            }
+        }
+        // Bit-identical to fault-free, modulo board placement.
+        for (x, y) in clean.results.iter().zip(&f1.results) {
+            if let Err(d) = job_results_equivalent(x, y) {
+                return Err(fail(
+                    Level::Cluster,
+                    format!("recovery diverged from the fault-free run's {:?}: {d}", x.name),
+                ));
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Bit-exact comparison of two job results (weights, biases, accuracy,
@@ -763,6 +820,13 @@ fn job_results_equal(a: &JobResult, b: &JobResult) -> Result<(), String> {
     if a.boards != b.boards {
         return Err(format!("boards {:?} vs {:?}", a.boards, b.boards));
     }
+    job_results_equivalent(a, b)
+}
+
+/// Bit-exact comparison of the *trained state* of two job results —
+/// everything except the board assignment, which recovery legitimately
+/// changes when a job is rescheduled onto a surviving board.
+fn job_results_equivalent(a: &JobResult, b: &JobResult) -> Result<(), String> {
     if a.weights != b.weights {
         return Err(format!("weights: {}", first_diff(&a.weights.concat(), &b.weights.concat())));
     }
@@ -820,6 +884,16 @@ mod tests {
         let differ = Differ::default();
         let c = gen::fuzz_case().sample(&mut Rng::new(0xAB));
         differ.run_train(&c).unwrap_or_else(|d| panic!("{c:?}: {d}"));
+    }
+
+    #[test]
+    fn a_handful_of_recovery_cases_complete_bit_identically() {
+        let differ = Differ::default();
+        let mut r = Rng::new(0x4EC);
+        for i in 0..3 {
+            let c = gen::recovery_case().sample(&mut r);
+            differ.run_recovery(&c).unwrap_or_else(|d| panic!("case {i} ({c:?}): {d}"));
+        }
     }
 
     #[test]

@@ -27,20 +27,26 @@ pub fn case_seed(base: u64, index: usize) -> u64 {
     base.wrapping_add((index as u64).wrapping_mul(SEED_STRIDE))
 }
 
-/// The three generated case families.
+/// The four generated case families.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Family {
     /// [`gen::FuzzCase`]: forward + training + cluster levels.
     Net,
     /// [`gen::ProgramCase`]: raw-program levels.
     Program,
-    /// [`gen::FaultCase`]: cluster fault injection.
+    /// [`gen::FaultCase`]: cluster fault injection (never hang: finish
+    /// bit-identically — recovered or benign — or abort typed).
     Fault,
+    /// [`gen::RecoveryCase`]: survivable fault plans (kills leave ≥ 1
+    /// board per recovery domain) must complete bit-identically to the
+    /// fault-free run under the default recovery policy.
+    Recovery,
 }
 
 impl Family {
     /// All families, in execution order.
-    pub const ALL: [Family; 3] = [Family::Net, Family::Program, Family::Fault];
+    pub const ALL: [Family; 4] =
+        [Family::Net, Family::Program, Family::Fault, Family::Recovery];
 
     /// Stable name used in corpus/failure files.
     pub fn name(&self) -> &'static str {
@@ -48,6 +54,7 @@ impl Family {
             Family::Net => "net",
             Family::Program => "program",
             Family::Fault => "fault",
+            Family::Recovery => "recovery",
         }
     }
 
@@ -57,6 +64,7 @@ impl Family {
             "net" => Some(Family::Net),
             "program" => Some(Family::Program),
             "fault" => Some(Family::Fault),
+            "recovery" => Some(Family::Recovery),
             _ => None,
         }
     }
@@ -83,6 +91,9 @@ pub struct FuzzOptions {
     pub max_shrink_steps: usize,
     /// Re-run each failure's seed to confirm it reproduces.
     pub check_reproduction: bool,
+    /// Restrict the run to one family (`None` = all four) —
+    /// `mfnn fuzz --family recovery` is the CI recovery smoke.
+    pub family: Option<Family>,
 }
 
 impl Default for FuzzOptions {
@@ -94,6 +105,7 @@ impl Default for FuzzOptions {
             plant_divergence: false,
             max_shrink_steps: 100,
             check_reproduction: true,
+            family: None,
         }
     }
 }
@@ -205,6 +217,7 @@ pub fn run_case(differ: &Differ, family: Family, seed: u64) -> Result<(), Diverg
         Family::Net => run_net_family(differ, &gen::fuzz_case().sample(&mut rng)),
         Family::Program => differ.run_program(&gen::program_case().sample(&mut rng)),
         Family::Fault => differ.run_faults(&gen::fault_case().sample(&mut rng)),
+        Family::Recovery => differ.run_recovery(&gen::recovery_case().sample(&mut rng)),
     }
 }
 
@@ -289,6 +302,11 @@ fn fuzz_one(
         Family::Fault => fuzz_family(opts, family, case_index, seed, &gen::fault_case(), |c| {
             differ.run_faults(c)
         }),
+        Family::Recovery => {
+            fuzz_family(opts, family, case_index, seed, &gen::recovery_case(), |c| {
+                differ.run_recovery(c)
+            })
+        }
     };
     failures.extend(failure);
 }
@@ -297,15 +315,19 @@ fn fuzz_one(
 /// case through every applicable fidelity level.
 pub fn fuzz(opts: &FuzzOptions) -> FuzzReport {
     let differ = Differ::new(opts.device).with_plant(opts.plant_divergence);
+    let families: Vec<Family> = Family::ALL
+        .into_iter()
+        .filter(|f| opts.family.is_none_or(|only| only == *f))
+        .collect();
     let mut report = FuzzReport {
         cases: opts.cases,
-        families: Family::ALL.len(),
+        families: families.len(),
         corpus: false,
         failures: Vec::new(),
     };
     for i in 0..opts.cases {
         let seed = case_seed(opts.seed, i);
-        for family in Family::ALL {
+        for &family in &families {
             fuzz_one(&differ, opts, family, i, seed, &mut report.failures);
         }
     }
@@ -378,16 +400,37 @@ mod tests {
 
     #[test]
     fn corpus_parses_tags_seeds_and_comments() {
-        let text = "# comment\n\nnet 12  # trailing\nprogram 0\nfault 99\n";
+        let text = "# comment\n\nnet 12  # trailing\nprogram 0\nfault 99\nrecovery 7\n";
         let entries = parse_corpus(text).unwrap();
         assert_eq!(
             entries,
-            vec![(Family::Net, 12), (Family::Program, 0), (Family::Fault, 99)]
+            vec![
+                (Family::Net, 12),
+                (Family::Program, 0),
+                (Family::Fault, 99),
+                (Family::Recovery, 7)
+            ]
         );
         assert!(parse_corpus("bogus 1").is_err());
         assert!(parse_corpus("net notanumber").is_err());
         // merged lines must be rejected, not silently truncated
         assert!(parse_corpus("net 12 34").is_err());
+    }
+
+    #[test]
+    fn family_filter_restricts_the_run() {
+        // A filtered run executes exactly one family (cases = 0 keeps
+        // this a pure bookkeeping test — no differential work).
+        let opts = FuzzOptions {
+            cases: 0,
+            family: Some(Family::Recovery),
+            ..FuzzOptions::default()
+        };
+        let report = fuzz(&opts);
+        assert_eq!(report.families, 1);
+        assert!(report.ok());
+        let all = fuzz(&FuzzOptions { cases: 0, ..FuzzOptions::default() });
+        assert_eq!(all.families, Family::ALL.len());
     }
 
     #[test]

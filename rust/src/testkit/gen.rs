@@ -23,6 +23,7 @@
 
 use crate::assembler::program::{BufId, BufKind, LaneOp, Program, Step, View, Wave};
 use crate::cluster::fault::FaultPlan;
+use crate::cluster::scheduler::{schedule, PlacementMode};
 use crate::fixed::FixedSpec;
 use crate::isa::Opcode;
 use crate::nn::lut::{ActKind, ActLut, AddrMode};
@@ -492,6 +493,112 @@ pub fn fault_case() -> Gen<FaultCase> {
     Gen::new(sample_fault_case, shrink_fault_case)
 }
 
+// ------------------------------------------------------ recovery scenarios
+
+/// A generated **survivable** fault scenario: a topology plus a
+/// deterministic [`FaultPlan`] whose kills leave at least one board
+/// alive in every recovery domain (the whole pool for sequential/1:1
+/// placements, each board group for divided ones) and whose corruptions
+/// stay within the retry budget. Under the default
+/// [`crate::cluster::RecoveryPolicy`] such a run must **complete** with
+/// results bit-identical to the fault-free run — the acceptance
+/// property of the recovery subsystem ("kill up to F−1 boards mid-job
+/// and still converge to the fault-free weights").
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryCase {
+    /// Topology + jobs (boards forced ≥ 2 so a kill can be survivable).
+    pub case: FuzzCase,
+    /// The injected, survivable fault schedule.
+    pub plan: FaultPlan,
+}
+
+pub(crate) fn sample_recovery_case(r: &mut Rng) -> RecoveryCase {
+    let mut case = sample_fuzz_case(r);
+    if case.boards < 2 {
+        case.boards = 2;
+    }
+    let placement = schedule(case.jobs, case.boards);
+    let mut plan = FaultPlan::none();
+    let mut victims: Vec<usize> = Vec::new();
+    match placement.mode {
+        PlacementMode::Divided => {
+            // Groups recover internally: keep each group's first board.
+            for group in &placement.groups {
+                for &b in group.iter().skip(1) {
+                    if r.gen_bool(0.5) {
+                        victims.push(b);
+                    }
+                }
+            }
+        }
+        _ => {
+            // Pool-wide recovery domain: keep board 0.
+            for b in 1..case.boards {
+                if r.gen_bool(0.5) {
+                    victims.push(b);
+                }
+            }
+        }
+    }
+    for &b in &victims {
+        // Command indices 0..=5 cover setup, mid-chunk, and evaluate.
+        plan = plan.kill(b, r.gen_range(6) as usize);
+    }
+    if r.gen_bool(0.5) {
+        // One in-transit corruption anywhere: the bounded ReadParams
+        // retry recovers it without evicting the board.
+        let b = r.gen_range(case.boards as u64) as usize;
+        plan = plan.corrupt(b, r.gen_range(2) as usize);
+    }
+    RecoveryCase { case, plan }
+}
+
+fn shrink_recovery_case(c: &RecoveryCase) -> Vec<RecoveryCase> {
+    // Never shrink jobs/boards — that would change the recovery domains
+    // and could turn a survivable plan into a legitimate abort.
+    let mut out: Vec<RecoveryCase> = shrink_net_case(&c.case.net)
+        .into_iter()
+        .map(|net| RecoveryCase {
+            case: FuzzCase { net, ..c.case.clone() },
+            plan: c.plan.clone(),
+        })
+        .collect();
+    if c.case.steps > 1 {
+        out.push(RecoveryCase {
+            case: FuzzCase { steps: c.case.steps / 2, ..c.case.clone() },
+            plan: c.plan.clone(),
+        });
+    }
+    if c.case.rows > 1 {
+        out.push(RecoveryCase {
+            case: FuzzCase { rows: c.case.rows / 2, ..c.case.clone() },
+            plan: c.plan.clone(),
+        });
+    }
+    if c.case.sync_every > 1 {
+        out.push(RecoveryCase {
+            case: FuzzCase { sync_every: 1, ..c.case.clone() },
+            plan: c.plan.clone(),
+        });
+    }
+    for i in 0..c.plan.kills.len() {
+        let mut d = c.clone();
+        d.plan.kills.remove(i);
+        out.push(d);
+    }
+    for i in 0..c.plan.corruptions.len() {
+        let mut d = c.clone();
+        d.plan.corruptions.remove(i);
+        out.push(d);
+    }
+    out
+}
+
+/// Generator for [`RecoveryCase`].
+pub fn recovery_case() -> Gen<RecoveryCase> {
+    Gen::new(sample_recovery_case, shrink_recovery_case)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -511,6 +618,46 @@ mod tests {
                 sample_fault_case(&mut Rng::new(seed)),
                 sample_fault_case(&mut Rng::new(seed))
             );
+            assert_eq!(
+                sample_recovery_case(&mut Rng::new(seed)),
+                sample_recovery_case(&mut Rng::new(seed))
+            );
+        }
+    }
+
+    #[test]
+    fn recovery_cases_always_leave_a_survivor_per_domain() {
+        let mut r = Rng::new(0xEC0);
+        for _ in 0..200 {
+            let c = sample_recovery_case(&mut r);
+            assert!(c.case.boards >= 2);
+            assert!(c.plan.reorders.is_empty(), "reorders are not survivable");
+            let killed: Vec<usize> = c.plan.kills.iter().map(|s| s.board).collect();
+            let placement = schedule(c.case.jobs, c.case.boards);
+            match placement.mode {
+                PlacementMode::Divided => {
+                    for group in &placement.groups {
+                        assert!(
+                            group.iter().any(|b| !killed.contains(b)),
+                            "group {group:?} fully killed by {killed:?}"
+                        );
+                    }
+                }
+                _ => {
+                    assert!(
+                        (0..c.case.boards).any(|b| !killed.contains(&b)),
+                        "whole pool killed by {killed:?}"
+                    );
+                }
+            }
+            // at most one corruption site per case — within the default
+            // retry budget, so never an eviction by itself
+            assert!(c.plan.corruptions.len() <= 1);
+            // shrinks keep the topology (and therefore survivability)
+            for s in shrink_recovery_case(&c) {
+                assert_eq!(s.case.jobs, c.case.jobs);
+                assert_eq!(s.case.boards, c.case.boards);
+            }
         }
     }
 

@@ -21,8 +21,13 @@
 //! * Fault injection — [`crate::cluster::fault::FaultPlan`] schedules
 //!   deterministic worker death, post-checksum chunk corruption, and
 //!   delayed/reordered replies; [`Differ::run_faults`] asserts the
-//!   leader never hangs and either finishes bit-identically or surfaces
-//!   a typed [`crate::cluster::ClusterError`].
+//!   leader never hangs and either finishes bit-identically (recovered
+//!   or benign) or surfaces a typed [`crate::cluster::ClusterError`].
+//! * Recovery — [`Differ::run_recovery`] generates **survivable** fault
+//!   plans (kills leave ≥ 1 board per recovery domain) and asserts the
+//!   run completes with weights, curves, and stats bit-identical to the
+//!   fault-free run under the default
+//!   [`crate::cluster::RecoveryPolicy`] (DESIGN.md §Recovery).
 //! * [`fuzz`] — the harness: seeded case streams, greedy shrinking to a
 //!   minimal failing case, seed replay (`mfnn fuzz --cases 1 --seed N`
 //!   reproduces exactly), and corpus snapshots under
@@ -41,4 +46,4 @@ pub use fuzz::{
     case_seed, fuzz, parse_corpus, replay_corpus, run_case, Family, FuzzFailure, FuzzOptions,
     FuzzReport,
 };
-pub use gen::{FaultCase, FuzzCase, NetCase, ProgramCase};
+pub use gen::{FaultCase, FuzzCase, NetCase, ProgramCase, RecoveryCase};

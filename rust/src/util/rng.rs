@@ -88,6 +88,17 @@ impl Rng {
     pub fn split(&mut self) -> Rng {
         Rng::new(self.next_u64())
     }
+
+    /// Advance the stream by `n` draws without using them. Every
+    /// single-value generator (`gen_range`, `gen_f64`, `gen_i16`, …)
+    /// consumes exactly one draw, so `skip(n)` puts the stream where it
+    /// would be after `n` such calls — what deterministic
+    /// checkpoint/resume uses to fast-forward a batch sampler.
+    pub fn skip(&mut self, n: u64) {
+        for _ in 0..n {
+            self.next_u64();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -145,6 +156,25 @@ mod tests {
         let var = sq / n as f64 - mean * mean;
         assert!(mean.abs() < 0.03, "mean={mean}");
         assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn skip_matches_discarded_draws() {
+        let mut a = Rng::new(77);
+        let mut b = Rng::new(77);
+        for _ in 0..13 {
+            a.gen_range(10);
+        }
+        b.skip(13);
+        assert_eq!(a.next_u64(), b.next_u64());
+        // gen_f64 / gen_i16 / gen_bool are also exactly one draw each
+        let mut c = Rng::new(5);
+        let mut d = Rng::new(5);
+        c.gen_f64();
+        c.gen_i16();
+        c.gen_bool(0.5);
+        d.skip(3);
+        assert_eq!(c.next_u64(), d.next_u64());
     }
 
     #[test]

@@ -94,6 +94,7 @@ fn cluster_trains_mini_digits_to_accuracy() {
             cfg: TrainConfig { batch: 16, lr: 1.0 / 128.0, steps: 400, seed, log_every: 50 },
             train: Arc::new(train),
             test: Arc::new(test),
+            resume: None,
         }
     };
     let cfg = mfnn::cluster::ClusterConfig { boards: 2, ..Default::default() };

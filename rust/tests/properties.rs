@@ -183,10 +183,53 @@ fn machine_cycle_accounting_is_additive_and_deterministic() {
 }
 
 #[test]
+fn fixed_rescale_is_floor_division_for_signed_products() {
+    // The documented product rounding rule (fixed/mod.rs): the Q.2F→Q.F
+    // rescale is an arithmetic shift, i.e. FLOOR division by 2^F — so
+    // negative products round toward −∞ and mul(a,b) vs -mul(-a,b) can
+    // differ by at most one ULP. Holds for mul and dot, under both wrap
+    // and saturate narrowing, and FLOAT_TOL absorbs the bias elsewhere.
+    for spec in [FixedSpec::q(7), FixedSpec::q(10), FixedSpec::q(10).saturating()] {
+        let two_f = 1i64 << spec.frac_bits;
+        check(
+            &format!("mul_floor_q{}", spec.frac_bits),
+            Gen::pair(Gen::int_range(-32768, 32767), Gen::int_range(-32768, 32767)),
+            |&(a, b)| {
+                let (a, b) = (a as i16, b as i16);
+                let wide = a as i64 * b as i64;
+                let floor = spec.narrow(wide.div_euclid(two_f));
+                let anti = spec.mul(a, b) as i64 + spec.mul((-(a as i32)) as i16, b) as i64;
+                // exact floor semantics + the ≤ 1 ULP asymmetry bound
+                // (checked away from the wrap/saturate range edges)
+                spec.mul(a, b) == floor
+                    && (a == i16::MIN || wide.abs() >= (1 << 22) || anti.abs() <= 1)
+            },
+        );
+        let mut r = Rng::new(0xD07 + spec.frac_bits as u64);
+        for _ in 0..200 {
+            let n = 1 + r.gen_range(16) as usize;
+            let a: Vec<i16> = (0..n).map(|_| (r.gen_i16() / 4)).collect();
+            let b: Vec<i16> = (0..n).map(|_| (r.gen_i16() / 4)).collect();
+            let acc = spec.dot_acc(&a, &b);
+            assert_eq!(
+                spec.dot(&a, &b),
+                spec.narrow(acc.div_euclid(two_f)),
+                "dot is not floor division at Q{}",
+                spec.frac_bits
+            );
+        }
+    }
+}
+
+#[test]
 fn asm_parser_never_panics_on_mutated_sources() {
     // Fuzz-lite: random mutations of a valid source must parse or fail
     // with an error, never panic.
-    const BASE: &str = "NET a\nFIXED 10 saturate\nINPUT x 4 2\nWEIGHT w 2 3\nBIAS b 3\nACT k relu shift=5 mode=clamp interp=1\nMLP o x w b k\nOUTPUT o\nTARGET y 4 3\nTRAIN lr=0.0078125\n";
+    const BASE: &str = concat!(
+        "NET a\nFIXED 10 saturate\nINPUT x 4 2\nWEIGHT w 2 3\nBIAS b 3\n",
+        "ACT k relu shift=5 mode=clamp interp=1\nMLP o x w b k\nOUTPUT o\n",
+        "TARGET y 4 3\nTRAIN lr=0.0078125\n"
+    );
     let mut rng = Rng::new(0xF00);
     for _ in 0..300 {
         let mut s: Vec<u8> = BASE.bytes().collect();

@@ -1,0 +1,272 @@
+//! Crash-tolerance acceptance tests (DESIGN.md §Recovery): chunk
+//! rescheduling keeps results bit-identical to the fault-free run,
+//! checkpoint→resume reproduces the uninterrupted run bit-exactly, the
+//! serving pool survives board eviction, and no worker thread outlives
+//! the leader.
+
+use mfnn::cluster::{ClusterConfig, FaultPlan, RecoveryPolicy};
+use mfnn::fixed::FixedSpec;
+use mfnn::hw::FpgaDevice;
+use mfnn::nn::dataset;
+use mfnn::nn::lut::ActKind;
+use mfnn::nn::mlp::{LutParams, MlpSpec};
+use mfnn::nn::trainer::TrainConfig;
+use mfnn::{
+    CompileOptions, Compiler, Session, Target, TrainCheckpoint, TrainOptions,
+};
+use std::sync::Arc;
+
+const LR: f64 = 1.0 / 128.0;
+
+fn spec(name: &str) -> MlpSpec {
+    let fixed = FixedSpec::q(10).saturating();
+    MlpSpec::from_dims(
+        name,
+        &[2, 8, 2],
+        ActKind::Relu,
+        ActKind::Identity,
+        fixed,
+        LutParams::training(fixed),
+    )
+    .unwrap()
+}
+
+fn session(name: &str, target: Target) -> Session {
+    let compiler = Compiler::new();
+    let artifact = compiler
+        .compile_spec(&spec(name), &CompileOptions::training(8, LR))
+        .unwrap();
+    Session::open(artifact, target).unwrap()
+}
+
+fn cfg(steps: usize, seed: u64) -> TrainConfig {
+    TrainConfig { batch: 8, lr: LR, steps, seed, log_every: 5 }
+}
+
+#[test]
+fn board_resume_from_every_checkpoint_reproduces_the_full_run() {
+    // The acceptance property: resume(k) ≡ uninterrupted run, for every
+    // captured k — weights, loss curve, and stats, bit for bit. Each
+    // snapshot additionally round-trips through its byte serialisation.
+    let ds = dataset::xor(64, 3);
+    let c = cfg(40, 11);
+    let mut full = session("ckpt_net", Target::Board(FpgaDevice::selected()));
+    let (summary, ckpts) =
+        full.train_with(&ds, &c, &TrainOptions::checkpoint_every(10)).unwrap();
+    assert_eq!(ckpts.len(), 4, "40 steps / every 10");
+    let want = full.weights().expect("trainable");
+    for ck in &ckpts {
+        let ck = TrainCheckpoint::from_bytes(&ck.to_bytes()).unwrap();
+        let at = ck.steps_done;
+        let mut resumed = session("ckpt_net", Target::Board(FpgaDevice::selected()));
+        let opts = TrainOptions { checkpoint_every: 10, resume: Some(ck) };
+        let (rsum, _) = resumed.train_with(&ds, &c, &opts).unwrap();
+        assert_eq!(resumed.weights().unwrap(), want, "weights diverged resuming at {at}");
+        assert_eq!(rsum.curve, summary.curve, "curve diverged resuming at {at}");
+        assert_eq!(rsum.stats, summary.stats, "stats diverged resuming at {at}");
+        assert_eq!(rsum.sim_seconds, summary.sim_seconds, "sim time diverged at {at}");
+    }
+}
+
+#[test]
+fn resume_against_the_wrong_run_is_a_typed_error() {
+    let ds = dataset::xor(64, 3);
+    let c = cfg(20, 11);
+    let mut s = session("ckpt_net", Target::Board(FpgaDevice::selected()));
+    let (_, ckpts) = s.train_with(&ds, &c, &TrainOptions::checkpoint_every(10)).unwrap();
+    let ck = ckpts[0].clone();
+    // wrong seed
+    let mut other = session("ckpt_net", Target::Board(FpgaDevice::selected()));
+    let bad = cfg(20, 12);
+    let err = other.train_with(&ds, &bad, &TrainOptions::resume(ck.clone())).unwrap_err();
+    assert!(matches!(err, mfnn::Error::Checkpoint(_)), "{err}");
+    // fewer total steps than the snapshot has trained
+    let short = cfg(5, 11);
+    let err = other.train_with(&ds, &short, &TrainOptions::resume(ck)).unwrap_err();
+    assert!(matches!(err, mfnn::Error::Checkpoint(_)), "{err}");
+}
+
+#[test]
+fn cluster_session_checkpoints_and_resumes_bit_exactly() {
+    // Divided 2-board cluster target: snapshots land on weight-sync
+    // boundaries; a fresh session resumed from the mid-run snapshot
+    // adopts exactly the uninterrupted run's final weights and curve.
+    let ds = dataset::blobs(96, 2, 2, 5);
+    let c = cfg(40, 21);
+    let ccfg = ClusterConfig { boards: 2, sync_every: 10, ..Default::default() };
+    let mut full = session("cluster_ck", Target::Cluster(ccfg.clone()));
+    let (summary, ckpts) =
+        full.train_with(&ds, &c, &TrainOptions::checkpoint_every(20)).unwrap();
+    assert!(!ckpts.is_empty(), "no cluster checkpoints captured");
+    let mid = &ckpts[0];
+    assert_eq!(mid.steps_done % 10, 0, "snapshot off a sync boundary");
+    assert!(mid.steps_done < 40);
+    let mut resumed = session("cluster_ck", Target::Cluster(ccfg));
+    let opts = TrainOptions { checkpoint_every: 20, resume: Some(mid.clone()) };
+    let (rsum, _) = resumed.train_with(&ds, &c, &opts).unwrap();
+    assert_eq!(resumed.weights().unwrap(), full.weights().unwrap());
+    assert_eq!(rsum.curve, summary.curve);
+    assert_eq!(rsum.stats, summary.stats);
+}
+
+#[test]
+fn kill_one_board_then_resume_from_checkpoint_file() {
+    // The CI recovery smoke scenario end-to-end: a 3-board divided job
+    // loses board 1 mid-run but completes bit-identically to the clean
+    // run; its mid-run snapshot, round-tripped through a file, resumes
+    // a third run to the same final weights.
+    let ds = dataset::blobs(96, 2, 2, 9);
+    let c = cfg(40, 33);
+    let base = ClusterConfig {
+        boards: 3,
+        sync_every: 10,
+        recovery: RecoveryPolicy::checkpointed(10),
+        ..Default::default()
+    };
+    let mut clean = session("smoke", Target::Cluster(base.clone()));
+    let (clean_sum, clean_ckpts) =
+        clean.train_with(&ds, &c, &TrainOptions::default()).unwrap();
+    let faulty_cfg = ClusterConfig {
+        faults: FaultPlan::none().kill(1, 4),
+        ..base.clone()
+    };
+    let mut faulty = session("smoke", Target::Cluster(faulty_cfg));
+    let (faulty_sum, faulty_ckpts) =
+        faulty.train_with(&ds, &c, &TrainOptions::default()).unwrap();
+    assert_eq!(faulty.weights().unwrap(), clean.weights().unwrap(), "recovery diverged");
+    assert_eq!(faulty_sum.curve, clean_sum.curve);
+    assert_eq!(faulty_ckpts.len(), clean_ckpts.len());
+    // checkpoint file round-trip → resume → same end state
+    let mid = clean_ckpts.iter().find(|ck| ck.steps_done == 20).expect("mid snapshot");
+    let dir = std::env::temp_dir().join(format!("mfnn_recovery_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("smoke.mfck");
+    mid.save(&path).unwrap();
+    let loaded = TrainCheckpoint::load(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    let mut resumed = session("smoke", Target::Cluster(base));
+    let opts = TrainOptions { checkpoint_every: 0, resume: Some(loaded) };
+    resumed.train_with(&ds, &c, &opts).unwrap();
+    assert_eq!(resumed.weights().unwrap(), clean.weights().unwrap());
+}
+
+#[test]
+fn serve_eviction_redistributes_the_backlog_without_errors() {
+    use mfnn::serve::{seeded_params, ServeError};
+    use mfnn::ServeConfig;
+    let fixed = FixedSpec::q(10).saturating();
+    let nspec = spec("served");
+    let (w, b) = seeded_params(&nspec, 77);
+    let compiler = Compiler::new();
+    let artifact = compiler.compile_spec(&nspec, &CompileOptions::serving(4)).unwrap();
+    let scfg = ServeConfig {
+        boards: 2,
+        max_batch: 4,
+        max_wait_cycles: 16,
+        queue_cap: 256,
+        ..ServeConfig::default()
+    };
+    let rows: Vec<Vec<i16>> = (0..24)
+        .map(|i| {
+            vec![
+                fixed.from_f64((i as f64 / 24.0) - 0.5),
+                fixed.from_f64(0.5 - (i as f64 / 24.0)),
+            ]
+        })
+        .collect();
+    let run = |evict_at: Option<usize>| {
+        let mut server = mfnn::Server::open(scfg.clone()).unwrap();
+        let net = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+        for (i, row) in rows.iter().enumerate() {
+            if evict_at == Some(i) {
+                server.evict_board(1).unwrap();
+                server.evict_board(1).unwrap(); // idempotent
+            }
+            server.submit_at(i as u64 * 3, net, row).unwrap();
+        }
+        server.drain().unwrap();
+        let mut done = server.take_completions();
+        done.sort_by_key(|r| r.id);
+        (done, server.report())
+    };
+    let (healthy, _) = run(None);
+    let (survived, report) = run(Some(8));
+    assert_eq!(healthy.len(), 24);
+    assert_eq!(survived.len(), 24, "eviction dropped requests");
+    for (a, c) in healthy.iter().zip(&survived) {
+        assert_eq!(a.output, c.output, "eviction changed request {} bitwise", a.id);
+    }
+    assert!(report.boards[1].evicted, "eviction not reported");
+    assert!(!report.boards[0].evicted);
+    // losing the whole pool is terminal and typed, never a hang
+    let mut server = mfnn::Server::open(scfg.clone()).unwrap();
+    let net = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+    server.submit_at(0, net, &rows[0]).unwrap();
+    server.evict_board(0).unwrap();
+    server.evict_board(1).unwrap();
+    assert!(matches!(
+        server.submit_at(1, net, &rows[1]),
+        Err(ServeError::NoBoards { boards: 2 })
+    ));
+    match server.drain() {
+        Ok(_) => {} // the backlog may already have dispatched pre-eviction
+        Err(ServeError::NoBoards { .. }) => {}
+        Err(e) => panic!("unexpected drain error: {e}"),
+    }
+    // out-of-range eviction is a typed config error
+    assert!(server.evict_board(9).is_err());
+}
+
+/// Threads of this process whose name marks them as the 5-board pool of
+/// [`no_worker_threads_survive_execute`] (board indices 0..=4; the
+/// highest index is unique to that test within this test binary).
+#[cfg(target_os = "linux")]
+fn pool_marker_threads() -> usize {
+    let Ok(dir) = std::fs::read_dir("/proc/self/task") else { return 0 };
+    dir.filter_map(|e| e.ok())
+        .filter(|e| {
+            std::fs::read_to_string(e.path().join("comm"))
+                .map(|c| c.trim() == "fpga-worker-4")
+                .unwrap_or(false)
+        })
+        .count()
+}
+
+#[test]
+fn no_worker_threads_survive_execute() {
+    // Regression for the thread-leak bug: on abort AND on eviction the
+    // leader must close command channels and join every surviving
+    // worker before returning — no `fpga-worker-*` thread may outlive
+    // `execute`. Uses a 5-board pool so its marker thread name is
+    // unique within this test binary.
+    use mfnn::cluster::leader::{execute, Job};
+    let mk = |name: &str, seed: u64| Job {
+        name: name.into(),
+        spec: spec(name),
+        cfg: cfg(8, seed),
+        train_data: Arc::new(dataset::xor(64, seed)),
+        test_data: Arc::new(dataset::xor(32, seed + 1)),
+        initial: None,
+        resume: None,
+    };
+    let jobs: Vec<Job> = (0..5).map(|i| mk(&format!("j{i}"), 40 + i as u64)).collect();
+    // abort path: board 4 dies, recovery off → typed error
+    let abort = ClusterConfig {
+        boards: 5,
+        faults: FaultPlan::none().kill(4, 0),
+        recovery: RecoveryPolicy::abort(),
+        ..Default::default()
+    };
+    assert!(execute(&abort, &jobs).is_err());
+    #[cfg(target_os = "linux")]
+    assert_eq!(pool_marker_threads(), 0, "worker thread leaked after abort");
+    // eviction path: board 4 dies, recovery on → completes
+    let recover = ClusterConfig {
+        boards: 5,
+        faults: FaultPlan::none().kill(4, 0),
+        ..Default::default()
+    };
+    assert!(execute(&recover, &jobs).is_ok());
+    #[cfg(target_os = "linux")]
+    assert_eq!(pool_marker_threads(), 0, "worker thread leaked after eviction");
+}

@@ -305,6 +305,7 @@ fn train_many_runs_the_m_by_f_matrix() {
             cfg: TrainConfig { batch: 16, lr: 1.0 / 256.0, steps: 40, seed, log_every: 10 },
             train: Arc::new(train),
             test: Arc::new(test),
+            resume: None,
         }
     };
     let cfg = ClusterConfig { boards: 2, ..Default::default() };

@@ -17,7 +17,7 @@ fn generated_cases_have_zero_divergences() {
     let report = testkit::fuzz(&opts(4, 0));
     assert!(report.ok(), "{}", report.render());
     assert_eq!(report.cases, 4);
-    assert_eq!(report.families, 3);
+    assert_eq!(report.families, 4);
 }
 
 #[test]
@@ -68,6 +68,19 @@ fn corpus_fault_seeds_replay_clean() {
     let entries = testkit::parse_corpus(text).unwrap();
     assert!(!entries.is_empty());
     assert!(entries.iter().all(|(f, _)| *f == Family::Fault));
+    let report = testkit::replay_corpus(&entries, &FuzzOptions::default());
+    assert!(report.ok(), "{}", report.render());
+}
+
+#[test]
+fn corpus_recovery_seeds_replay_clean() {
+    // The CI recovery smoke (`mfnn fuzz --family recovery --cases 8`)
+    // plus this pinned corpus: survivable fault plans must complete
+    // bit-identically to the fault-free run.
+    let text = include_str!("corpus/recovery.seeds");
+    let entries = testkit::parse_corpus(text).unwrap();
+    assert!(entries.len() >= 8, "recovery corpus unexpectedly small");
+    assert!(entries.iter().all(|(f, _)| *f == Family::Recovery));
     let report = testkit::replay_corpus(&entries, &FuzzOptions::default());
     assert!(report.ok(), "{}", report.render());
 }
