@@ -4,7 +4,9 @@
 //! that is comparable across machines and PRs — is recorded in the
 //! suite's JSON `notes` (requests per simulated second, cycles per
 //! request, and the pooled+batched vs single-board-batch-1 speedup,
-//! which the serving acceptance criterion requires to be ≥ 2×).
+//! which the serving acceptance criterion requires to be ≥ 2×). A final
+//! degraded-mode scenario re-runs pool4_b8 under a survivable injected
+//! fault plan and records the throughput ratio vs the clean run.
 //!
 //! Run: `cargo bench --bench bench_serving` (writes
 //! `BENCH_serving.json` at the repo root; `MFNN_BENCH_QUICK=1` for CI).
@@ -13,7 +15,7 @@ use mfnn::bench::{Bencher, Suite};
 use mfnn::fixed::FixedSpec;
 use mfnn::nn::lut::ActKind;
 use mfnn::nn::mlp::{LutParams, MlpSpec};
-use mfnn::serve::{open_loop, seeded_params, ServeReport, SynthRequest};
+use mfnn::serve::{open_loop, seeded_params, ServeFaultPlan, ServeReport, SynthRequest};
 use mfnn::{Artifact, CompileOptions, Compiler, ServeConfig, Server};
 use std::sync::Arc;
 
@@ -56,6 +58,7 @@ fn run_workload(
     boards: usize,
     max_batch: usize,
     workload: &[SynthRequest],
+    faults: &ServeFaultPlan,
 ) -> ServeReport {
     let mut server = Server::open(ServeConfig {
         boards,
@@ -64,6 +67,7 @@ fn run_workload(
         max_wait_cycles: if max_batch == 1 { 0 } else { 64 },
         // admit the entire workload even while every board is busy
         queue_cap: workload.len() + 1,
+        faults: faults.clone(),
         ..ServeConfig::default()
     })
     .unwrap();
@@ -95,8 +99,9 @@ fn main() {
         ("pool4_b32", 4, 32),
     ];
     let mut sim_rps = Vec::new();
+    let clean = ServeFaultPlan::none();
     for &(name, boards, max_batch) in scenarios {
-        let report = run_workload(&compiler, boards, max_batch, &workload);
+        let report = run_workload(&compiler, boards, max_batch, &workload, &clean);
         assert_eq!(
             report.total_completed() as usize,
             requests,
@@ -110,12 +115,35 @@ fn main() {
         );
         suite.bench(name, |b: &mut Bencher| {
             b.iter_with_elements(requests as u64, || {
-                run_workload(&compiler, boards, max_batch, &workload)
+                run_workload(&compiler, boards, max_batch, &workload, &clean)
             });
         });
     }
     let base = sim_rps.iter().find(|(n, _)| *n == "single_board_b1").unwrap().1;
     let pooled = sim_rps.iter().find(|(n, _)| *n == "pool4_b32").unwrap().1;
     suite.note("sim_speedup_pool4_b32_vs_single_b1", format!("{:.2}", pooled / base));
+
+    // Degraded mode: the pool4_b8 configuration under a survivable
+    // injected fault plan (stalls, corruptions within the hedged-retry
+    // budget, deaths that spare board 0). No request may be lost —
+    // without deadlines every admitted row must still complete — and
+    // the throughput ratio vs the clean run quantifies the cost of
+    // quarantine + hedged retries.
+    let faults = ServeFaultPlan::survivable(0xC405, 4, ServeConfig::default().max_retries);
+    let chaos = run_workload(&compiler, 4, 8, &workload, &faults);
+    assert_eq!(
+        chaos.total_completed() as usize,
+        requests,
+        "pool4_b8_chaos: lost requests under a survivable fault plan"
+    );
+    let clean_b8 = sim_rps.iter().find(|(n, _)| *n == "pool4_b8").unwrap().1;
+    suite.note("sim_rps_pool4_b8_chaos", format!("{:.1}", chaos.requests_per_sim_s()));
+    suite.note(
+        "degraded_mode_throughput_ratio",
+        format!("{:.2}", chaos.requests_per_sim_s() / clean_b8),
+    );
+    suite.bench("pool4_b8_chaos", |b: &mut Bencher| {
+        b.iter_with_elements(requests as u64, || run_workload(&compiler, 4, 8, &workload, &faults));
+    });
     suite.finish();
 }

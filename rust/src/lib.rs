@@ -48,7 +48,7 @@ pub mod session;
 pub mod testkit;
 pub mod util;
 
-pub use serve::{ServeConfig, Server};
+pub use serve::{ServeConfig, ServeFaultPlan, Server, SubmitOptions};
 pub use cluster::{RecoveryPolicy, TrainCheckpoint};
 pub use session::{
     Artifact, CompileOptions, Compiler, Error, Session, Target, TensorHandle, TrainOptions,

@@ -6,6 +6,7 @@
 //! mfnn run       <net.nnasm> [--device P] [--verify] [--seed N]
 //! mfnn train     <config.toml>
 //! mfnn serve-sim [--requests N] [--seed S] [--nets M] [--boards B] [--max-batch K]
+//!                [--chaos] [--fault-seed S] [--check-determinism]
 //! mfnn fuzz      [--cases N] [--seed S] [--corpus FILE] [--plant-divergence]
 //! mfnn tables    [--which t2|t3|t8|alloc|perf|all]
 //! mfnn traces
@@ -384,10 +385,12 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
         .opt("device", "FPGA part the pool simulates", Some("XC7S75-2"))
         .opt("max-batch", "micro-batcher flush threshold / top ladder bucket", Some("8"))
         .opt("max-wait", "micro-batcher flush deadline in simulated cycles", Some("64"))
-        .opt("queue-cap", "per-net admission limit (typed Overloaded beyond)", Some("1024"))
+        .opt("queue-cap", "per-net admission limit (typed sheds beyond)", Some("1024"))
         .opt("rate", "mean request inter-arrival gap in simulated cycles", Some("8"))
         .opt("metrics-out", "write the metrics JSON here", Some("serve_metrics.json"))
-        .flag("check-determinism", "run the workload twice and require identical metrics");
+        .opt("fault-seed", "chaos fault-plan seed (default: the workload seed)", None)
+        .flag("chaos", "degraded mode: SLO-annotated load + a survivable injected fault plan")
+        .flag("check-determinism", "run the workload twice and require identical outcomes");
     let args = parse_or_help(
         &spec,
         rest,
@@ -401,12 +404,23 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
     if nets == 0 {
         return Err("need at least one net".into());
     }
+    let chaos = args.flag("chaos");
+    let fault_seed: u64 = args.parse_or("fault-seed", seed).map_err(|e| e.to_string())?;
+    let boards: usize = args.parse_or("boards", 2).map_err(|e| e.to_string())?;
+    let defaults = mfnn::ServeConfig::default();
+    let max_retries = defaults.max_retries;
     let cfg = mfnn::ServeConfig {
-        boards: args.parse_or("boards", 2).map_err(|e| e.to_string())?,
+        boards,
         device: args.str_or("device", "XC7S75-2"),
         max_batch,
         max_wait_cycles: args.parse_or("max-wait", 64).map_err(|e| e.to_string())?,
         queue_cap: args.parse_or("queue-cap", 1024).map_err(|e| e.to_string())?,
+        faults: if chaos {
+            mfnn::serve::ServeFaultPlan::survivable(fault_seed, boards, max_retries)
+        } else {
+            mfnn::serve::ServeFaultPlan::none()
+        },
+        ..defaults
     };
     let rate: u64 = args.parse_or("rate", 8).map_err(|e| e.to_string())?;
     let compiler = Compiler::new();
@@ -414,45 +428,102 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
     let fixed = FixedSpec::q(10).saturating();
     let in_dims: Vec<usize> =
         fleet.iter().map(|(a, _, _)| a.spec().expect("net artifact").input_dim()).collect();
-    let workload = mfnn::serve::open_loop(requests, seed, rate, &in_dims, fixed);
+    // Plain mode submits the open-loop stream with default options —
+    // bit-identical to pre-degraded-mode serving. Chaos mode rides the
+    // same arrivals/rows with SLO annotations (priorities + deadlines).
+    let plain = if chaos {
+        Vec::new()
+    } else {
+        mfnn::serve::open_loop(requests, seed, rate, &in_dims, fixed)
+    };
+    let slo = if chaos {
+        mfnn::serve::slo_open_loop(requests, seed, rate, &in_dims, fixed)
+    } else {
+        Vec::new()
+    };
 
     // Run the whole workload against a fresh server; returns the report
-    // plus (accepted, rejected) submit counts.
-    let run = || -> Result<(mfnn::serve::ServeReport, usize, usize), String> {
+    // plus (accepted, refused-at-submit) counts and the typed
+    // post-admission drop records.
+    type RunOut = (mfnn::serve::ServeReport, usize, usize, Vec<mfnn::serve::DroppedRequest>);
+    let run = || -> Result<RunOut, String> {
         let mut server = mfnn::Server::open(cfg.clone()).map_err(|e| e.to_string())?;
         for (artifact, w, b) in &fleet {
             server.register(Arc::clone(artifact), w, b).map_err(|e| e.to_string())?;
         }
-        let (mut accepted, mut rejected) = (0usize, 0usize);
-        for q in &workload {
-            match server.submit_at(q.at, q.net, &q.row) {
-                Ok(_) => accepted += 1,
-                Err(mfnn::serve::ServeError::Overloaded { .. }) => rejected += 1,
-                Err(e) => return Err(e.to_string()),
+        let (mut accepted, mut refused) = (0usize, 0usize);
+        if chaos {
+            for q in &slo {
+                match server.submit_with(q.at, q.net, &q.row, q.options()) {
+                    Ok(_) => accepted += 1,
+                    Err(mfnn::serve::ServeError::Shed { .. })
+                    | Err(mfnn::serve::ServeError::DeadlineExceeded { .. }) => refused += 1,
+                    Err(e) => return Err(e.to_string()),
+                }
+            }
+        } else {
+            for q in &plain {
+                match server.submit_at(q.at, q.net, &q.row) {
+                    Ok(_) => accepted += 1,
+                    Err(mfnn::serve::ServeError::Shed { .. }) => refused += 1,
+                    Err(e) => return Err(e.to_string()),
+                }
             }
         }
         server.drain().map_err(|e| e.to_string())?;
-        Ok((server.report(), accepted, rejected))
+        let dropped = server.take_dropped();
+        Ok((server.report(), accepted, refused, dropped))
     };
 
-    let (report, accepted, rejected) = run()?;
+    let (report, accepted, refused, dropped) = run()?;
     if args.flag("check-determinism") {
-        let (again, _, _) = run()?;
-        if again.to_json() != report.to_json() {
+        let (again, a2, r2, d2) = run()?;
+        if again.to_json() != report.to_json()
+            || a2 != accepted
+            || r2 != refused
+            || d2 != dropped
+        {
             return Err(
-                "nondeterministic serving metrics: two identical-seed runs disagree".into()
+                "nondeterministic serving outcome: two identical-seed runs disagree".into()
             );
         }
-        println!("determinism check: two identical-seed runs produced identical metrics ✓");
+        println!("determinism check: two identical-seed runs produced identical outcomes ✓");
     }
     print!("{}", report.render());
     let out = args.str_or("metrics-out", "serve_metrics.json");
     std::fs::write(&out, report.to_json()).map_err(|e| format!("{out}: {e}"))?;
     println!("wrote {out}");
-    if rejected > 0 {
-        return Err(format!("{rejected} request(s) rejected (Overloaded); raise --queue-cap"));
-    }
     let completed = report.total_completed() as usize;
+    if chaos {
+        // Degraded-mode accounting: every admitted request terminates as
+        // a completion or a typed drop — never a hang or a silent loss.
+        if completed + dropped.len() != accepted {
+            return Err(format!(
+                "lost requests under the fault plan: accepted {accepted}, completed \
+                 {completed}, dropped {} (typed)",
+                dropped.len()
+            ));
+        }
+        let shed = dropped
+            .iter()
+            .filter(|d| d.reason == mfnn::serve::DropReason::Shed)
+            .count();
+        let expired = dropped
+            .iter()
+            .filter(|d| d.reason == mfnn::serve::DropReason::DeadlineExceeded)
+            .count();
+        let budget = dropped.len() - shed - expired;
+        println!(
+            "chaos (fault seed {fault_seed}): {completed}/{accepted} completed, {} dropped \
+             typed ({shed} shed, {expired} expired, {budget} retry-budget), {refused} refused \
+             at submit — no silent losses ✓",
+            dropped.len()
+        );
+        return Ok(());
+    }
+    if refused > 0 {
+        return Err(format!("{refused} request(s) shed; raise --queue-cap"));
+    }
     if completed != accepted {
         return Err(format!("dropped/hung requests: accepted {accepted}, completed {completed}"));
     }
@@ -464,11 +535,11 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
 
 fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
     let spec = Spec::new()
-        .opt("cases", "generated cases per family (net, program, fault)", Some("64"))
+        .opt("cases", "generated cases per family (net, program, fault, recovery, serve-chaos)", Some("64"))
         .opt("seed", "base seed (case i runs at seed + i·φ; case 0 = seed)", Some("0"))
         .opt("device", "FPGA part every level simulates", Some("XC7S75-2"))
         .opt("corpus", "replay `family seed` lines from this snapshot file", None)
-        .opt("family", "restrict to one family: net|program|fault|recovery", None)
+        .opt("family", "restrict to one family: net|program|fault|recovery|serve-chaos", None)
         .opt("failures-out", "write failing seeds here (corpus format)", Some("FUZZ_FAILURES.txt"))
         .opt("max-shrink", "shrink-step budget per failure", Some("100"))
         .flag("plant-divergence", "test-only hook: plant a known FastSim divergence");
@@ -482,7 +553,7 @@ fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
     let family = match args.get("family") {
         Some(f) => Some(
             mfnn::testkit::Family::parse(f)
-                .ok_or(format!("unknown family {f:?} (net|program|fault|recovery)"))?,
+                .ok_or(format!("unknown family {f:?} (net|program|fault|recovery|serve-chaos)"))?,
         ),
         None => None,
     };

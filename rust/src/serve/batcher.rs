@@ -1,11 +1,16 @@
 //! The dynamic micro-batcher: one bounded FIFO queue per registered
-//! net, flushed into dispatchable micro-batches on either of two
-//! triggers (whichever fires first, both in **simulated** cycles so the
+//! net, flushed into dispatchable micro-batches on any of three
+//! triggers (whichever fires first, all in **simulated** cycles so the
 //! whole serving runtime is deterministic):
 //!
 //! * **fill** — the queue reaches `max_batch` waiting requests;
-//! * **deadline** — the oldest waiting request has waited
-//!   `max_wait_cycles` (a partial batch flushes rather than starving).
+//! * **wait bound** — the oldest waiting request has waited
+//!   `max_wait_cycles` (a partial batch flushes rather than starving);
+//! * **SLO urgency** — a queued request's deadline is within
+//!   `deadline_slack` cycles: the whole partial tail flushes early, so
+//!   the urgent request rides a *smaller* ladder bucket with a faster
+//!   plan — the forward-variant ladder used for adaptive routing
+//!   (DESIGN.md §Serving, "Degraded mode").
 //!
 //! Batch splitting reuses [`dataset::chunk_ranges`] — the same chunking
 //! rule `Session::evaluate` and the trainer use — so every batched
@@ -23,6 +28,20 @@ pub struct Pending {
     pub row: Vec<i16>,
     /// Simulated cycle the request was admitted.
     pub arrival: u64,
+    /// Scheduling priority (higher = more important; sheds last).
+    pub priority: u8,
+    /// Absolute simulated-cycle deadline, if the request carries an SLO
+    /// (`None` = best-effort, treated as the latest possible deadline).
+    pub deadline: Option<u64>,
+}
+
+impl Pending {
+    /// The deadline used for ordering decisions: `None` sorts after
+    /// every finite deadline (best-effort requests shed first among
+    /// equal priorities).
+    pub fn effective_deadline(&self) -> u64 {
+        self.deadline.unwrap_or(u64::MAX)
+    }
 }
 
 /// Per-net micro-batcher state.
@@ -31,17 +50,25 @@ pub struct MicroBatcher {
     max_batch: usize,
     max_wait_cycles: u64,
     cap: usize,
+    deadline_slack: u64,
     queue: VecDeque<Pending>,
 }
 
 impl MicroBatcher {
     /// New empty batcher. `max_batch` is the fill-flush threshold,
-    /// `max_wait_cycles` the deadline-flush latency bound, `cap` the
-    /// admission-control queue capacity.
-    pub fn new(max_batch: usize, max_wait_cycles: u64, cap: usize) -> MicroBatcher {
+    /// `max_wait_cycles` the wait-bound flush latency, `cap` the
+    /// admission-control queue capacity, and `deadline_slack` the SLO
+    /// urgency margin: a queued request whose deadline is within
+    /// `deadline_slack` cycles forces a partial flush.
+    pub fn new(
+        max_batch: usize,
+        max_wait_cycles: u64,
+        cap: usize,
+        deadline_slack: u64,
+    ) -> MicroBatcher {
         assert!(max_batch >= 1, "max_batch must be positive");
         assert!(cap >= 1, "queue capacity must be positive");
-        MicroBatcher { max_batch, max_wait_cycles, cap, queue: VecDeque::new() }
+        MicroBatcher { max_batch, max_wait_cycles, cap, deadline_slack, queue: VecDeque::new() }
     }
 
     /// Requests currently waiting.
@@ -49,10 +76,23 @@ impl MicroBatcher {
         self.queue.len()
     }
 
+    /// Iterate the waiting requests in FIFO order (shed-victim scans).
+    pub fn iter(&self) -> impl Iterator<Item = &Pending> {
+        self.queue.iter()
+    }
+
+    /// Remove a specific waiting request by id (load shedding). Returns
+    /// the removed request, or `None` when `id` is not queued. Relative
+    /// order of the survivors is preserved.
+    pub fn remove(&mut self, id: u64) -> Option<Pending> {
+        let at = self.queue.iter().position(|p| p.id == id)?;
+        self.queue.remove(at)
+    }
+
     /// Admission: enqueue `p`, or refuse with the current depth when the
     /// queue is at capacity (the server turns this into the typed
-    /// `Overloaded` rejection — requests are never silently dropped and
-    /// the queue never grows without bound).
+    /// `Shed` rejection — requests are never silently dropped and the
+    /// queue never grows without bound).
     pub fn push(&mut self, p: Pending) -> Result<(), usize> {
         if self.queue.len() >= self.cap {
             return Err(self.queue.len());
@@ -61,17 +101,29 @@ impl MicroBatcher {
         Ok(())
     }
 
-    /// Simulated cycle at which the oldest waiting request forces a
-    /// deadline flush (`None` when the queue is empty). This is the
-    /// batcher's contribution to the server's next-event computation.
+    /// Simulated cycle at which the queue forces a partial flush
+    /// (`None` when the queue is empty): the oldest request's wait
+    /// bound, or the earliest SLO-urgency trigger (`deadline -
+    /// deadline_slack`) of any queued request, whichever is sooner.
+    /// This is the batcher's contribution to the server's next-event
+    /// computation.
     pub fn deadline(&self) -> Option<u64> {
-        self.queue.front().map(|p| p.arrival + self.max_wait_cycles)
+        let wait = self.queue.front().map(|p| p.arrival + self.max_wait_cycles)?;
+        let urgency = self
+            .queue
+            .iter()
+            .filter_map(|p| p.deadline)
+            .map(|d| d.saturating_sub(self.deadline_slack))
+            .min();
+        Some(urgency.map_or(wait, |u| u.min(wait)))
     }
 
     /// Pop every batch that is due at simulated cycle `now`: full
     /// `max_batch` groups always flush; the partial tail flushes only
-    /// when its deadline has passed. Returned batches preserve FIFO
-    /// order and are split by [`dataset::chunk_ranges`].
+    /// when the wait bound or an SLO-urgency trigger has passed (the
+    /// early partial flush is what routes deadline-at-risk requests
+    /// onto a smaller, faster ladder bucket). Returned batches preserve
+    /// FIFO order and are split by [`dataset::chunk_ranges`].
     pub fn take_ready(&mut self, now: u64) -> Vec<Vec<Pending>> {
         let full = self.queue.len() - self.queue.len() % self.max_batch;
         let take = if self.deadline().is_some_and(|d| d <= now) {
@@ -103,12 +155,16 @@ mod tests {
     use super::*;
 
     fn p(id: u64, arrival: u64) -> Pending {
-        Pending { id, row: vec![0; 2], arrival }
+        Pending { id, row: vec![0; 2], arrival, priority: 0, deadline: None }
+    }
+
+    fn slo(id: u64, arrival: u64, deadline: u64) -> Pending {
+        Pending { id, row: vec![0; 2], arrival, priority: 0, deadline: Some(deadline) }
     }
 
     #[test]
     fn fill_flush_pops_full_batches_in_fifo_order() {
-        let mut b = MicroBatcher::new(4, 100, 64);
+        let mut b = MicroBatcher::new(4, 100, 64, 0);
         for i in 0..9 {
             b.push(p(i, 0)).unwrap();
         }
@@ -129,7 +185,7 @@ mod tests {
 
     #[test]
     fn deadline_tracks_the_oldest_request() {
-        let mut b = MicroBatcher::new(8, 10, 64);
+        let mut b = MicroBatcher::new(8, 10, 64, 0);
         assert_eq!(b.deadline(), None);
         b.push(p(0, 5)).unwrap();
         b.push(p(1, 9)).unwrap();
@@ -139,8 +195,44 @@ mod tests {
     }
 
     #[test]
+    fn slo_urgency_pulls_the_flush_forward() {
+        let mut b = MicroBatcher::new(8, 1000, 64, 16);
+        b.push(p(0, 0)).unwrap();
+        // best-effort alone: wait bound governs
+        assert_eq!(b.deadline(), Some(1000));
+        // an SLO request whose deadline-minus-slack beats the wait bound
+        b.push(slo(1, 4, 100)).unwrap();
+        assert_eq!(b.deadline(), Some(84));
+        // urgency flushes the whole partial tail early, onto a smaller bucket
+        assert!(b.take_ready(83).is_empty());
+        let ready = b.take_ready(84);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].len(), 2, "urgent flush takes the whole partial tail");
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn lax_deadlines_do_not_beat_the_wait_bound() {
+        let mut b = MicroBatcher::new(8, 10, 64, 2);
+        b.push(slo(0, 5, 500)).unwrap();
+        assert_eq!(b.deadline(), Some(15), "wait bound still governs lax SLOs");
+    }
+
+    #[test]
+    fn remove_sheds_by_id_and_preserves_order() {
+        let mut b = MicroBatcher::new(8, 10, 64, 0);
+        for i in 0..4 {
+            b.push(p(i, 0)).unwrap();
+        }
+        let victim = b.remove(2).expect("queued");
+        assert_eq!(victim.id, 2);
+        assert_eq!(b.remove(2).map(|p| p.id), None, "already removed");
+        assert_eq!(b.iter().map(|p| p.id).collect::<Vec<_>>(), vec![0, 1, 3]);
+    }
+
+    #[test]
     fn admission_control_refuses_at_capacity() {
-        let mut b = MicroBatcher::new(8, 10, 2);
+        let mut b = MicroBatcher::new(8, 10, 2, 0);
         b.push(p(0, 0)).unwrap();
         b.push(p(1, 0)).unwrap();
         assert_eq!(b.push(p(2, 0)), Err(2));
@@ -158,7 +250,7 @@ mod tests {
 
     #[test]
     fn zero_wait_flushes_any_nonempty_queue() {
-        let mut b = MicroBatcher::new(8, 0, 64);
+        let mut b = MicroBatcher::new(8, 0, 64, 0);
         b.push(p(0, 3)).unwrap();
         let ready = b.take_ready(3);
         assert_eq!(ready.len(), 1);

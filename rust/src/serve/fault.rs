@@ -1,0 +1,258 @@
+//! Deterministic fault injection for the serving runtime — the serving
+//! twin of [`crate::cluster::fault::FaultPlan`].
+//!
+//! A [`ServeFaultPlan`] is a pure schedule: every fault is addressed by
+//! an explicit `(board, dispatch-index)` site, with no randomness at
+//! injection time, so the same plan replays bit-identically against the
+//! same workload. Three transient/terminal fault kinds model what a
+//! flaky FPGA does to an inference pool:
+//!
+//! * **stall** — the board holds its micro-batch for `cycles` extra
+//!   simulated cycles past the plan's charged compute time. Short
+//!   stalls are benign delays (the result is delivered late); stalls
+//!   past the server's `stall_timeout_cycles` watchdog are detected and
+//!   the batch is hedged onto another board.
+//! * **corruption** — the batch's output block is flipped *after* the
+//!   board computed its [`output_checksum`] integrity word (simulated
+//!   readback corruption); the server detects the mismatch and retries
+//!   the batch. The integrity word is the serving analogue of
+//!   [`crate::cluster::bus::params_checksum`].
+//! * **death** — the board drops out of the pool at the instant it
+//!   would take its `at`-th micro-batch; the batch redistributes to the
+//!   survivors and the board is permanently dead (same terminal state
+//!   as [`crate::serve::Server::evict_board`]).
+//!
+//! The contract the server upholds under any *survivable* plan (deaths
+//! leave ≥ 1 board, transient sites within the hedged-retry budget):
+//! **never hang, never drop silently** — every admitted request
+//! terminates as a completion or a typed
+//! [`crate::serve::DroppedRequest`] record (DESIGN.md §Serving,
+//! "Degraded mode").
+
+use crate::util::Rng;
+
+/// One injected fault site, addressed by board + that board's
+/// dispatch index (the `at`-th micro-batch the board starts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeFaultSite {
+    /// Target board.
+    pub board: usize,
+    /// Per-board dispatch index the fault fires at.
+    pub at: usize,
+}
+
+/// A stall site: the dispatch holds the board for `cycles` extra
+/// simulated cycles before the result becomes readable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StallSite {
+    /// Target board.
+    pub board: usize,
+    /// Per-board dispatch index the stall fires at.
+    pub at: usize,
+    /// Extra simulated cycles the board holds the batch.
+    pub cycles: u64,
+}
+
+/// A deterministic fault schedule for one serving run. Empty by default
+/// (no faults — the server is then bit-identical to a fault-free
+/// build); [`crate::serve::ServeConfig`] carries one per server.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ServeFaultPlan {
+    /// Stall the board's `at`-th dispatch for extra cycles.
+    pub stalls: Vec<StallSite>,
+    /// Corrupt the output block of the board's `at`-th dispatch after
+    /// its integrity word was computed (detected via
+    /// [`output_checksum`], then hedged onto another board).
+    pub corruptions: Vec<ServeFaultSite>,
+    /// Kill the board at its `at`-th dispatch (terminal, like
+    /// [`crate::serve::Server::evict_board`]); the batch redistributes.
+    pub deaths: Vec<ServeFaultSite>,
+}
+
+impl ServeFaultPlan {
+    /// The empty plan (no faults) — what [`Default`] gives.
+    pub fn none() -> ServeFaultPlan {
+        ServeFaultPlan::default()
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.stalls.is_empty() && self.corruptions.is_empty() && self.deaths.is_empty()
+    }
+
+    /// Transient (retryable) fault sites: stalls + corruptions. A plan
+    /// is within a server's hedged-retry budget when this does not
+    /// exceed `max_retries` — the worst case is one logical batch
+    /// absorbing every transient site across its retries.
+    pub fn transient_sites(&self) -> usize {
+        self.stalls.len() + self.corruptions.len()
+    }
+
+    /// True when the plan is survivable by a `boards`-sized pool with
+    /// `max_retries` hedged retries: deaths leave at least one board
+    /// alive and the transient sites fit the retry budget. Under a
+    /// survivable plan every admitted request must terminate as
+    /// Completed, Shed, or DeadlineExceeded — never hang.
+    pub fn is_survivable(&self, boards: usize, max_retries: usize) -> bool {
+        let mut dead: Vec<usize> = self.deaths.iter().map(|s| s.board).collect();
+        dead.sort_unstable();
+        dead.dedup();
+        dead.len() < boards && self.transient_sites() <= max_retries
+    }
+
+    /// Schedule a stall of `cycles` on `board`'s `at`-th dispatch.
+    pub fn stall(mut self, board: usize, at: usize, cycles: u64) -> ServeFaultPlan {
+        self.stalls.push(StallSite { board, at, cycles });
+        self
+    }
+
+    /// Schedule an output corruption on `board`'s `at`-th dispatch.
+    pub fn corrupt(mut self, board: usize, at: usize) -> ServeFaultPlan {
+        self.corruptions.push(ServeFaultSite { board, at });
+        self
+    }
+
+    /// Schedule a board death at `board`'s `at`-th dispatch.
+    pub fn kill(mut self, board: usize, at: usize) -> ServeFaultPlan {
+        self.deaths.push(ServeFaultSite { board, at });
+        self
+    }
+
+    /// Generate a seeded **survivable** plan for a `boards`-sized pool
+    /// with `max_retries` hedged retries — the shared chaos-plan source
+    /// of `mfnn serve-sim --chaos` and the `serve-chaos` fuzz family.
+    /// Board 0 is never killed (≥ 1 survivor) and at most `max_retries`
+    /// transient sites are scheduled, each at a distinct
+    /// `(board, dispatch)` site.
+    pub fn survivable(seed: u64, boards: usize, max_retries: usize) -> ServeFaultPlan {
+        let mut r = Rng::new(seed);
+        let mut plan = ServeFaultPlan::none();
+        // Deaths: any subset of boards 1.. (board 0 always survives).
+        for b in 1..boards {
+            if r.gen_bool(0.4) {
+                plan = plan.kill(b, r.gen_range(6) as usize);
+            }
+        }
+        // Transient sites within the retry budget, at distinct sites.
+        let transients = if max_retries == 0 { 0 } else { r.gen_range(max_retries as u64 + 1) };
+        let mut used: Vec<(usize, usize)> = Vec::new();
+        for _ in 0..transients {
+            let board = r.gen_range(boards as u64) as usize;
+            let at = r.gen_range(8) as usize;
+            let stall = r.gen_bool(0.5);
+            let cycles = 1 + r.gen_range(4096);
+            if used.contains(&(board, at)) {
+                continue;
+            }
+            used.push((board, at));
+            plan = if stall { plan.stall(board, at, cycles) } else { plan.corrupt(board, at) };
+        }
+        plan
+    }
+
+    fn hits(sites: &[ServeFaultSite], board: usize, at: usize) -> bool {
+        sites.iter().any(|s| s.board == board && s.at == at)
+    }
+
+    /// Is the output of `board`'s `at`-th dispatch corrupted?
+    pub(crate) fn corrupts(&self, board: usize, at: usize) -> bool {
+        Self::hits(&self.corruptions, board, at)
+    }
+
+    /// Does `board` die at its `at`-th dispatch?
+    pub(crate) fn kills(&self, board: usize, at: usize) -> bool {
+        Self::hits(&self.deaths, board, at)
+    }
+
+    /// Extra cycles `board`'s `at`-th dispatch stalls for, if any.
+    pub(crate) fn stall_cycles(&self, board: usize, at: usize) -> Option<u64> {
+        self.stalls.iter().find(|s| s.board == board && s.at == at).map(|s| s.cycles)
+    }
+}
+
+/// FNV-1a integrity word over an output block — the serving analogue of
+/// [`crate::cluster::bus::params_checksum`]: the board computes it over
+/// the micro-batch's output lanes before readback, so any later
+/// corruption of the block is detected as a mismatch and the batch is
+/// hedged instead of delivering wrong lanes.
+pub fn output_checksum(out: &[i16]) -> u64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = OFFSET;
+    let mut eat = |byte: u8| {
+        h ^= byte as u64;
+        h = h.wrapping_mul(PRIME);
+    };
+    for byte in (out.len() as u64).to_le_bytes() {
+        eat(byte);
+    }
+    for v in out {
+        for byte in v.to_le_bytes() {
+            eat(byte);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_injects_nothing() {
+        let p = ServeFaultPlan::none();
+        assert!(p.is_empty());
+        assert!(!p.corrupts(0, 0));
+        assert!(!p.kills(0, 0));
+        assert_eq!(p.stall_cycles(0, 0), None);
+        assert!(p.is_survivable(1, 0));
+    }
+
+    #[test]
+    fn sites_address_board_and_dispatch_exactly() {
+        let p = ServeFaultPlan::none().kill(1, 2).corrupt(0, 0).stall(2, 1, 99);
+        assert!(p.kills(1, 2));
+        assert!(!p.kills(1, 1));
+        assert!(!p.kills(2, 2));
+        assert!(p.corrupts(0, 0));
+        assert!(!p.corrupts(0, 1));
+        assert_eq!(p.stall_cycles(2, 1), Some(99));
+        assert_eq!(p.stall_cycles(2, 0), None);
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn survivability_checks_deaths_and_retry_budget() {
+        let p = ServeFaultPlan::none().kill(1, 0).corrupt(0, 1);
+        assert!(p.is_survivable(2, 1));
+        assert!(!p.is_survivable(1, 1), "killing the whole pool is lethal");
+        assert!(!p.is_survivable(2, 0), "one transient site needs one retry");
+        // duplicate deaths of one board count once
+        let q = ServeFaultPlan::none().kill(1, 0).kill(1, 3);
+        assert!(q.is_survivable(2, 0));
+    }
+
+    #[test]
+    fn seeded_survivable_plans_regenerate_and_hold_the_invariant() {
+        for seed in 0..200u64 {
+            let boards = 1 + (seed % 4) as usize;
+            let p = ServeFaultPlan::survivable(seed, boards, 3);
+            assert_eq!(p, ServeFaultPlan::survivable(seed, boards, 3));
+            assert!(p.is_survivable(boards, 3), "seed {seed}: {p:?}");
+            assert!(p.deaths.iter().all(|s| s.board != 0), "board 0 must survive");
+        }
+        assert!(ServeFaultPlan::survivable(1, 4, 3) != ServeFaultPlan::survivable(2, 4, 3));
+    }
+
+    #[test]
+    fn output_checksum_detects_single_lane_flips() {
+        let out = vec![5i16, -3, 0, 127];
+        let base = output_checksum(&out);
+        assert_eq!(base, output_checksum(&out.clone()), "not deterministic");
+        let mut flipped = out.clone();
+        flipped[2] ^= 1;
+        assert_ne!(base, output_checksum(&flipped));
+        // length is part of the word (a truncated block never matches)
+        assert_ne!(output_checksum(&out[..3]), base);
+    }
+}

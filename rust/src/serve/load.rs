@@ -5,9 +5,14 @@
 //! same seed always produces the same workload — the determinism the
 //! serve-sim acceptance check relies on.
 
+use super::server::SubmitOptions;
 use crate::fixed::FixedSpec;
 use crate::nn::mlp::MlpSpec;
 use crate::util::Rng;
+
+/// Seed salt for the SLO annotation stream, so [`slo_open_loop`]'s
+/// arrival process stays bit-compatible with [`open_loop`].
+const SALT_SLO: u64 = 0xD1B54A32D192ED03;
 
 /// One generated request: which net, when (simulated cycle), and the
 /// quantised input row.
@@ -43,6 +48,56 @@ pub fn open_loop(
                 .map(|_| fixed.from_f64(r.gen_f64() * 2.0 - 1.0))
                 .collect();
             SynthRequest { net, at, row }
+        })
+        .collect()
+}
+
+/// One generated SLO-annotated request: an [`open_loop`] arrival plus
+/// scheduling priority and an optional absolute deadline, for
+/// [`crate::serve::Server::submit_with`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloRequest {
+    /// Target net (index into the server's registration order).
+    pub net: usize,
+    /// Arrival cycle (non-decreasing across the returned sequence).
+    pub at: u64,
+    /// Quantised input row (`in_dims[net]` lanes, values in `[-1, 1]`).
+    pub row: Vec<i16>,
+    /// Scheduling priority in `0..3` (higher sheds last).
+    pub priority: u8,
+    /// Absolute deadline cycle (about half the requests carry one).
+    pub deadline: Option<u64>,
+}
+
+impl SloRequest {
+    /// This request's [`SubmitOptions`].
+    pub fn options(&self) -> SubmitOptions {
+        SubmitOptions { priority: self.priority, deadline: self.deadline }
+    }
+}
+
+/// Generate `requests` SLO-annotated open-loop requests: the arrivals,
+/// net mix, and rows are **exactly** [`open_loop`]'s (same seed ⇒ same
+/// base stream, bit for bit), and a second, salted seed stream assigns
+/// each request a priority in `0..3` and — with probability ½ — an
+/// absolute deadline `at + 256 + uniform(0..2048)` cycles out. This is
+/// the workload behind `mfnn serve-sim --chaos` and the `serve-chaos`
+/// fuzz family.
+pub fn slo_open_loop(
+    requests: usize,
+    seed: u64,
+    mean_gap_cycles: u64,
+    in_dims: &[usize],
+    fixed: FixedSpec,
+) -> Vec<SloRequest> {
+    let base = open_loop(requests, seed, mean_gap_cycles, in_dims, fixed);
+    let mut r = Rng::new(seed ^ SALT_SLO);
+    base.into_iter()
+        .map(|q| {
+            let priority = r.gen_range(3) as u8;
+            let deadline =
+                if r.gen_bool(0.5) { Some(q.at + 256 + r.gen_range(2048)) } else { None };
+            SloRequest { net: q.net, at: q.at, row: q.row, priority, deadline }
         })
         .collect()
 }
@@ -118,6 +173,28 @@ mod tests {
         }
         assert!(hit.iter().all(|&h| h), "64 requests should hit all 3 nets");
         assert_ne!(a, open_loop(64, 8, 5, &[4, 6, 3], f), "seed must matter");
+    }
+
+    #[test]
+    fn slo_workload_rides_the_open_loop_stream_unchanged() {
+        let f = FixedSpec::q(10).saturating();
+        let slo = slo_open_loop(64, 7, 5, &[4, 6, 3], f);
+        assert_eq!(slo, slo_open_loop(64, 7, 5, &[4, 6, 3], f), "seeded");
+        // stripping the SLO annotations recovers open_loop bit for bit
+        let base = open_loop(64, 7, 5, &[4, 6, 3], f);
+        for (s, b) in slo.iter().zip(&base) {
+            assert_eq!((s.net, s.at, &s.row), (b.net, b.at, &b.row));
+            assert!(s.priority < 3);
+            if let Some(d) = s.deadline {
+                assert!(d >= s.at + 256, "deadlines leave a feasible window");
+            }
+        }
+        assert!(slo.iter().any(|s| s.deadline.is_some()), "some requests carry SLOs");
+        assert!(slo.iter().any(|s| s.deadline.is_none()), "some are best-effort");
+        assert!(slo.iter().any(|s| s.priority > 0), "priorities vary");
+        let opts = slo[0].options();
+        assert_eq!(opts.priority, slo[0].priority);
+        assert_eq!(opts.deadline, slo[0].deadline);
     }
 
     #[test]

@@ -37,8 +37,20 @@ pub struct NetMetrics {
     pub submitted: u64,
     /// Requests completed (outputs delivered).
     pub completed: u64,
-    /// Requests refused by admission control (typed `Overloaded`).
+    /// Requests refused at submit time (typed `Shed` returned to the
+    /// caller, or a deadline already in the past).
     pub rejected: u64,
+    /// Admitted requests dropped by load shedding or the hedged-retry
+    /// budget (each leaves a typed `DroppedRequest` record).
+    pub shed: u64,
+    /// Admitted requests dropped because their deadline passed before
+    /// their micro-batch dispatched.
+    pub expired: u64,
+    /// Completed requests whose output was delivered after their
+    /// deadline (SLO miss, but the answer was still produced).
+    pub late: u64,
+    /// Hedged micro-batch re-dispatches after a detected board fault.
+    pub retries: u64,
     /// Micro-batches dispatched.
     pub batches: u64,
     /// Real request rows dispatched.
@@ -89,8 +101,15 @@ pub struct BoardMetrics {
     pub batches: u64,
     /// Simulated cycles this board spent computing.
     pub busy_cycles: u64,
-    /// True once the board was evicted from the pool
-    /// ([`crate::serve::Server::evict_board`]).
+    /// Detected faults (corruptions + watchdog stalls) charged to this
+    /// board.
+    pub strikes: u64,
+    /// Times the board crossed the strike threshold and sat out a
+    /// quarantine.
+    pub quarantines: u64,
+    /// True once the board is dead — evicted
+    /// ([`crate::serve::Server::evict_board`]) or killed by the fault
+    /// plan.
     pub evicted: bool,
 }
 
@@ -123,6 +142,18 @@ impl ServeReport {
         self.nets.iter().map(|n| n.rejected).sum()
     }
 
+    /// Admitted requests shed across all nets (load shedding + retry
+    /// budget).
+    pub fn total_shed(&self) -> u64 {
+        self.nets.iter().map(|n| n.shed).sum()
+    }
+
+    /// Admitted requests expired (deadline passed undispatched) across
+    /// all nets.
+    pub fn total_expired(&self) -> u64 {
+        self.nets.iter().map(|n| n.expired).sum()
+    }
+
     /// Simulated makespan in seconds on the pool's device.
     pub fn makespan_s(&self) -> f64 {
         self.device.seconds(self.makespan_cycles)
@@ -143,8 +174,8 @@ impl ServeReport {
     /// The latency/throughput table `mfnn serve-sim` prints.
     pub fn render(&self) -> String {
         let mut t = Table::new(vec![
-            "net", "submitted", "done", "rejected", "batches", "fill", "p50 (cyc)",
-            "p99 (cyc)", "max depth",
+            "net", "submitted", "done", "rejected", "shed", "expired", "late", "retries",
+            "batches", "fill", "p50 (cyc)", "p99 (cyc)", "max depth",
         ])
         .with_title(format!(
             "serving: {} board(s) ({}), makespan {:.3} ms simulated, {:.0} req/s simulated",
@@ -161,6 +192,10 @@ impl ServeReport {
                 n.submitted.to_string(),
                 n.completed.to_string(),
                 n.rejected.to_string(),
+                n.shed.to_string(),
+                n.expired.to_string(),
+                n.late.to_string(),
+                n.retries.to_string(),
                 n.batches.to_string(),
                 fmt_f(n.batch_fill(), 3),
                 p50.to_string(),
@@ -170,12 +205,19 @@ impl ServeReport {
         }
         let mut s = t.render();
         for (b, m) in self.boards.iter().enumerate() {
+            let health = if m.evicted {
+                " [dead]".to_string()
+            } else if m.strikes > 0 || m.quarantines > 0 {
+                format!(" [{} strike(s), {} quarantine(s)]", m.strikes, m.quarantines)
+            } else {
+                String::new()
+            };
             s.push_str(&format!(
                 "board {b}: {} batch(es), {} busy cycles ({:.1}% of makespan){}\n",
                 m.batches,
                 m.busy_cycles,
                 100.0 * m.busy_cycles as f64 / self.makespan_cycles.max(1) as f64,
-                if m.evicted { " [evicted]" } else { "" },
+                health,
             ));
         }
         s
@@ -198,12 +240,17 @@ impl ServeReport {
         s.push_str(&format!("  \"submitted\": {},\n", self.total_submitted()));
         s.push_str(&format!("  \"completed\": {},\n", self.total_completed()));
         s.push_str(&format!("  \"rejected\": {},\n", self.total_rejected()));
+        s.push_str(&format!("  \"shed\": {},\n", self.total_shed()));
+        s.push_str(&format!("  \"expired\": {},\n", self.total_expired()));
         s.push_str("  \"board_metrics\": [\n");
         for (i, b) in self.boards.iter().enumerate() {
             s.push_str(&format!(
-                "    {{\"batches\": {}, \"busy_cycles\": {}, \"evicted\": {}}}{}\n",
+                "    {{\"batches\": {}, \"busy_cycles\": {}, \"strikes\": {}, \
+                 \"quarantines\": {}, \"evicted\": {}}}{}\n",
                 b.batches,
                 b.busy_cycles,
+                b.strikes,
+                b.quarantines,
                 b.evicted,
                 if i + 1 == self.boards.len() { "" } else { "," },
             ));
@@ -213,12 +260,17 @@ impl ServeReport {
             let (p50, p99) = n.latency_quantiles();
             s.push_str(&format!(
                 "    {{\"name\": {}, \"submitted\": {}, \"completed\": {}, \
-                 \"rejected\": {}, \"batches\": {}, \"batch_fill\": {:.4}, \
+                 \"rejected\": {}, \"shed\": {}, \"expired\": {}, \"late\": {}, \
+                 \"retries\": {}, \"batches\": {}, \"batch_fill\": {:.4}, \
                  \"p50_cycles\": {}, \"p99_cycles\": {}, \"max_queue_depth\": {}}}{}\n",
                 json_str(&n.name),
                 n.submitted,
                 n.completed,
                 n.rejected,
+                n.shed,
+                n.expired,
+                n.late,
+                n.retries,
                 n.batches,
                 n.batch_fill(),
                 p50,
@@ -252,12 +304,22 @@ mod tests {
     fn report_aggregates_and_serialises() {
         let report = ServeReport {
             device: FpgaDevice::selected(),
-            boards: vec![BoardMetrics { batches: 2, busy_cycles: 100, evicted: false }],
+            boards: vec![BoardMetrics {
+                batches: 2,
+                busy_cycles: 100,
+                strikes: 1,
+                quarantines: 0,
+                evicted: false,
+            }],
             nets: vec![NetMetrics {
                 name: "a".into(),
                 submitted: 4,
                 completed: 4,
                 rejected: 1,
+                shed: 2,
+                expired: 1,
+                late: 1,
+                retries: 1,
                 batches: 2,
                 batch_rows: 4,
                 bucket_rows: 8,
@@ -268,6 +330,8 @@ mod tests {
         };
         assert_eq!(report.total_submitted(), 4);
         assert_eq!(report.total_rejected(), 1);
+        assert_eq!(report.total_shed(), 2);
+        assert_eq!(report.total_expired(), 1);
         // one sorted snapshot serves both quantiles (lower-rank rule)
         assert_eq!(report.nets[0].latency_quantiles(), (20, 30));
         assert_eq!(report.nets[0].latency_p50(), 20);
@@ -276,7 +340,28 @@ mod tests {
         let json = report.to_json();
         assert!(json.contains("\"completed\": 4"), "{json}");
         assert!(json.contains("\"batch_fill\": 0.5000"), "{json}");
+        assert!(json.contains("\"shed\": 2"), "{json}");
+        assert!(json.contains("\"strikes\": 1"), "{json}");
         let rendered = report.render();
         assert!(rendered.contains("serving: 1 board(s)"), "{rendered}");
+        assert!(rendered.contains("1 strike(s)"), "{rendered}");
+    }
+
+    #[test]
+    fn registered_but_idle_net_reports_zero_quantiles() {
+        // A net that never received a request has an empty latency
+        // sample; the report must render p50/p99 as 0, not panic.
+        let idle = NetMetrics { name: "idle".into(), ..NetMetrics::default() };
+        assert_eq!(idle.latency_quantiles(), (0, 0));
+        let report = ServeReport {
+            device: FpgaDevice::selected(),
+            boards: vec![BoardMetrics::default()],
+            nets: vec![idle],
+            makespan_cycles: 0,
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"p50_cycles\": 0"), "{json}");
+        assert!(json.contains("\"p99_cycles\": 0"), "{json}");
+        assert!(report.render().contains("idle"));
     }
 }

@@ -16,26 +16,49 @@
 //! parameters (forward lanes are per-row; asserted by the
 //! `testkit::diff` serving level and `rust/tests/serving.rs`).
 //!
+//! The runtime is also **SLO-aware and fault-tolerant** (degraded
+//! mode): requests carry a priority and an optional deadline
+//! ([`SubmitOptions`]); overload sheds the worst backlogged request
+//! first; a deterministic [`ServeFaultPlan`] injects board stalls,
+//! output corruption (caught by the [`output_checksum`] integrity
+//! word), and deaths; boards cycle Healthy → Quarantined → probation on
+//! strikes; faulted micro-batches are hedged onto the healthiest free
+//! board within a bounded retry budget; and every admitted request
+//! terminates as a [`Completion`] or a typed [`DroppedRequest`] — never
+//! a hang or a silent drop. With an empty fault plan and default submit
+//! options, behaviour is bit-identical to fault-free serving.
+//!
 //! * [`Server`] / [`ServeConfig`] — the runtime ([`Server::open`],
-//!   `register`, `submit_at`, `drain`, `take_completions`, `report`).
+//!   `register`, `submit_at`/`submit_with`, `drain`,
+//!   `take_completions`, `take_dropped`, `report`).
 //!   [`crate::session::Session::server`] is the one-net convenience
 //!   front door.
-//! * [`batcher`] — per-net queues, flush rules, bucket selection.
+//! * [`batcher`] — per-net queues, flush rules (fill / wait bound /
+//!   deadline urgency), bucket selection.
+//! * [`fault`] — the deterministic serving fault plan and the output
+//!   integrity word.
 //! * [`metrics`] — per-net/per-board counters, p50/p99 simulated-cycle
-//!   latency, batch-fill, throughput; table + JSON rendering.
-//! * [`load`] — the seeded open-loop generator behind `mfnn serve-sim`
-//!   and `bench_serving`.
+//!   latency, batch-fill, shed/expired/late/retry counts, board health;
+//!   table + JSON rendering.
+//! * [`load`] — the seeded open-loop generators (plain and
+//!   SLO-annotated) behind `mfnn serve-sim` and `bench_serving`.
 //!
 //! See DESIGN.md §Serving for the architecture diagram, the batching
-//! semantics, the backpressure contract, and how serving coexists with
-//! training on the same boards (`cluster::worker` `InferChunk`).
+//! semantics, the backpressure contract, the degraded-mode state
+//! machine, and how serving coexists with training on the same boards
+//! (`cluster::worker` `InferChunk`).
 
 pub mod batcher;
+pub mod fault;
 pub mod load;
 pub mod metrics;
 pub mod server;
 
 pub use batcher::{bucket_for, MicroBatcher, Pending};
-pub use load::{open_loop, seeded_params, SynthRequest};
+pub use fault::{output_checksum, ServeFaultPlan, ServeFaultSite, StallSite};
+pub use load::{open_loop, seeded_params, slo_open_loop, SloRequest, SynthRequest};
 pub use metrics::{percentile, BoardMetrics, NetMetrics, ServeReport};
-pub use server::{Completion, NetId, RequestId, ServeConfig, ServeError, Server};
+pub use server::{
+    Completion, DropReason, DroppedRequest, NetId, RequestId, ServeConfig, ServeError, Server,
+    SubmitOptions,
+};

@@ -5,27 +5,43 @@
 //! deterministic (same seed ⇒ same outputs, same metrics, bit for bit).
 //!
 //! ```text
-//!   submit_at(cycle, net, row)
-//!        │  admission control (typed Overloaded beyond queue_cap)
+//!   submit_with(cycle, net, row, {priority, deadline})
+//!        │  admission control (shed-by-priority beyond queue_cap)
 //!        ▼
-//!   per-net FIFO queue ──▶ micro-batcher (flush on max_batch │ max_wait)
+//!   per-net FIFO queue ──▶ micro-batcher (flush on max_batch │ max_wait
+//!        │                        │        │ deadline-slack urgency)
 //!        │                        │ bucket = smallest ladder plan ≥ rows
 //!        ▼                        ▼
-//!   ready batches ──▶ board pool (earliest-free board; FIFO batches)
+//!   ready batches ──▶ board pool (healthiest-free board; FIFO batches)
 //!                          │ ExecPlan::run_forward on the (net, bucket)
 //!                          │ engine; service time = RunStats.cycles
+//!                          │ fault plan: stall / corrupt / kill sites
 //!                          ▼
-//!                     completions (outputs + latency), metrics
+//!                completions (outputs + latency) │ hedged retries
+//!                dropped records (shed/expired)  │ quarantine, metrics
 //! ```
+//!
+//! **Degraded mode** (see DESIGN.md §Serving): every request carries a
+//! priority and an optional deadline; overload sheds the *worst*
+//! undispatched request (lowest priority, then latest deadline) instead
+//! of blanket-refusing arrivals; a [`super::fault::ServeFaultPlan`]
+//! injects deterministic board faults; boards move Healthy →
+//! Quarantined → probation on strikes; corrupt/stalled batches are
+//! hedged onto the healthiest free board within a bounded retry budget;
+//! and deadline-at-risk requests flush early onto a smaller, faster
+//! ladder bucket.
 //!
 //! **No-hang contract** (the serving twin of the cluster's
 //! "leader-never-hangs"): admission is bounded, every formed batch
-//! dispatches at a finite board-free time, and [`Server::drain`]
-//! terminates after finitely many events — an overload surfaces as a
-//! typed [`ServeError::Overloaded`] rejection at submit time, never as a
-//! stuck queue.
+//! dispatches at a finite board-free or quarantine-expiry time, and
+//! [`Server::drain`] terminates after finitely many events — under any
+//! survivable fault plan every admitted request terminates as a
+//! [`Completion`] or a typed [`DroppedRequest`], never as a hang or a
+//! silent drop. With an empty fault plan and default submit options the
+//! runtime is bit-identical to the pre-degraded-mode server.
 
 use super::batcher::{bucket_for, MicroBatcher, Pending};
+use super::fault::{output_checksum, ServeFaultPlan};
 use super::metrics::{BoardMetrics, NetMetrics, ServeReport};
 use crate::hw::{ExecPlan, FpgaDevice, PlanState, COLUMN_LEN};
 use crate::nn::dataset;
@@ -43,7 +59,7 @@ pub type NetId = usize;
 pub type RequestId = u64;
 
 /// Serving runtime errors — all typed; in particular overload is a
-/// first-class rejection, not a hang or a silent drop.
+/// first-class shed decision, not a hang or a silent drop.
 #[derive(Debug, Error)]
 pub enum ServeError {
     /// Unknown FPGA part name.
@@ -87,26 +103,45 @@ pub enum ServeError {
         /// Provided lane count.
         got: usize,
     },
-    /// Admission control refused the request: the net's backlog —
+    /// Admission control shed this request: the net's backlog —
     /// requests admitted but not yet dispatched to a board, whether
     /// still queued or already formed into waiting batches — is at
-    /// capacity. The caller decides whether to retry later, shed load,
-    /// or fail.
-    #[error("net {net} overloaded: backlog {depth} at capacity {cap}; retry later")]
-    Overloaded {
+    /// capacity, and this request is the *worst* of the backlog plus
+    /// itself (lowest priority, then latest deadline, then newest).
+    /// Backlogged requests of strictly lower priority are shed first as
+    /// [`DroppedRequest`] records instead — never this error.
+    #[error(
+        "net {net} shed priority-{priority} request: backlog {depth} at capacity {cap}"
+    )]
+    Shed {
         /// Target net id.
         net: NetId,
-        /// Backlog (undispatched admitted requests) at rejection time.
+        /// Backlog (undispatched admitted requests) at shed time.
         depth: usize,
         /// Configured capacity.
         cap: usize,
+        /// Priority of the shed (incoming) request.
+        priority: u8,
     },
-    /// Every board of the pool has been evicted: nothing can serve the
-    /// backlog (or admit new requests). Unlike a transient
-    /// [`ServeError::Overloaded`] this is terminal for the server.
-    #[error("all {boards} board(s) evicted; cannot serve")]
+    /// The request's deadline already lies in the past at submit time —
+    /// it could never complete in time, so it is refused immediately
+    /// rather than admitted and expired later.
+    #[error("net {net}: deadline cycle {deadline} is before submit cycle {at}")]
+    DeadlineExceeded {
+        /// Target net id.
+        net: NetId,
+        /// The requested absolute deadline cycle.
+        deadline: u64,
+        /// The submit cycle.
+        at: u64,
+    },
+    /// Every board of the pool is dead (evicted or killed by the fault
+    /// plan): nothing can serve the backlog (or admit new requests).
+    /// Unlike a transient [`ServeError::Shed`] this is terminal for the
+    /// server.
+    #[error("all {boards} board(s) dead; cannot serve")]
     NoBoards {
-        /// Pool size (all evicted).
+        /// Pool size (all dead).
         boards: usize,
     },
     /// Submissions must carry a non-decreasing simulated clock.
@@ -133,14 +168,38 @@ pub struct ServeConfig {
     /// Micro-batcher fill-flush threshold; also the top bucket of the
     /// forward batch ladder (`1..=512`).
     pub max_batch: usize,
-    /// Micro-batcher deadline flush: a partial batch waits at most this
-    /// many simulated cycles (0 = flush immediately, batch-1 serving).
+    /// Micro-batcher wait-bound flush: a partial batch waits at most
+    /// this many simulated cycles (0 = flush immediately, batch-1
+    /// serving).
     pub max_wait_cycles: u64,
     /// Per-net admission-control backlog capacity: the maximum number
     /// of admitted-but-undispatched requests (queued **plus** formed
-    /// batches waiting for a board) before submissions are refused with
-    /// the typed [`ServeError::Overloaded`].
+    /// batches waiting for a board) before a submission forces a shed
+    /// decision — the worst backlogged request drops as a
+    /// [`DroppedRequest`], or the incoming one is refused with the
+    /// typed [`ServeError::Shed`].
     pub queue_cap: usize,
+    /// Deterministic fault schedule (empty = fault-free serving,
+    /// bit-identical to a server without degraded mode).
+    pub faults: ServeFaultPlan,
+    /// Hedged-retry budget: a micro-batch whose dispatch was corrupted
+    /// or stall-detected is re-dispatched onto the healthiest free
+    /// board at most this many times before its requests drop as
+    /// [`DropReason::RetryBudget`].
+    pub max_retries: usize,
+    /// Strikes (detected faults) before a board is quarantined.
+    pub quarantine_after: u32,
+    /// Simulated cycles a quarantined board sits out before it may be
+    /// re-admitted on probation.
+    pub quarantine_cycles: u64,
+    /// Watchdog: a dispatch holding a board longer than this many
+    /// simulated cycles is declared stalled; the batch is hedged and
+    /// the board struck (its late result is discarded).
+    pub stall_timeout_cycles: u64,
+    /// SLO urgency margin handed to every net's micro-batcher: a queued
+    /// request within this many cycles of its deadline forces an early
+    /// partial flush onto a smaller, faster ladder bucket.
+    pub deadline_slack_cycles: u64,
 }
 
 impl Default for ServeConfig {
@@ -151,8 +210,60 @@ impl Default for ServeConfig {
             max_batch: 8,
             max_wait_cycles: 256,
             queue_cap: 1024,
+            faults: ServeFaultPlan::default(),
+            max_retries: 3,
+            quarantine_after: 2,
+            quarantine_cycles: 4096,
+            stall_timeout_cycles: 2048,
+            deadline_slack_cycles: 64,
         }
     }
+}
+
+/// Per-request submit options: scheduling priority and optional SLO
+/// deadline. [`Default`] (priority 0, no deadline) reproduces the
+/// pre-degraded-mode behaviour exactly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SubmitOptions {
+    /// Scheduling priority (higher = more important; sheds last).
+    pub priority: u8,
+    /// Absolute simulated-cycle deadline (`None` = best-effort).
+    pub deadline: Option<u64>,
+}
+
+/// Why an *admitted* request was dropped (post-admission terminations;
+/// submit-time refusals surface as [`ServeError`] instead). Every drop
+/// is recorded — requests are never silently discarded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropReason {
+    /// Shed by admission control to make room for a better request
+    /// (this one had the lowest priority / latest deadline).
+    Shed,
+    /// Its deadline passed while it waited for a board.
+    DeadlineExceeded,
+    /// Its micro-batch exhausted the hedged-retry budget
+    /// (`max_retries`) against transient board faults.
+    RetryBudget,
+}
+
+/// A typed record of one admitted request that was dropped instead of
+/// completed. Take them with [`Server::take_dropped`]; the invariant
+/// under any survivable fault plan is
+/// `admitted == completions + dropped`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DroppedRequest {
+    /// Request id (as returned by submit).
+    pub id: RequestId,
+    /// Net the request targeted.
+    pub net: NetId,
+    /// Why it dropped.
+    pub reason: DropReason,
+    /// Simulated cycle the drop was decided.
+    pub at: u64,
+    /// The request's priority.
+    pub priority: u8,
+    /// The request's deadline, if any.
+    pub deadline: Option<u64>,
 }
 
 /// One registered net: its artifact, pinned parameters, and queue.
@@ -164,9 +275,9 @@ struct NetEntry {
     out_dim: usize,
     batcher: MicroBatcher,
     /// Admitted requests not yet dispatched to a board (queued in the
-    /// batcher **or** sitting in a formed batch awaiting a free board)
-    /// — the quantity `queue_cap` bounds, so backlog cannot grow
-    /// without bound even while every board is busy.
+    /// batcher **or** sitting in a first-attempt formed batch awaiting
+    /// a free board) — the quantity `queue_cap` bounds, so backlog
+    /// cannot grow without bound even while every board is busy.
     outstanding: usize,
     metrics: NetMetrics,
 }
@@ -179,23 +290,70 @@ struct Engine {
     state: PlanState,
 }
 
+/// Board lifecycle (DESIGN.md §Serving, "Degraded mode"): healthy
+/// boards accumulate strikes on detected faults; at
+/// `quarantine_after` strikes the board sits out `quarantine_cycles`,
+/// then re-admits on probation (strikes preserved, so the next strike
+/// re-quarantines; a clean dispatch resets them). Death is terminal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Health {
+    /// Serving (possibly on probation when `strikes > 0`).
+    Up { strikes: u32 },
+    /// Sitting out until the given simulated cycle.
+    Quarantined { strikes: u32, until: u64 },
+    /// Evicted or killed by the fault plan; never returns.
+    Dead,
+}
+
 /// One board of the pool.
 struct BoardState {
     /// Simulated cycle the board becomes free.
     busy_until: u64,
-    /// False once the board was evicted ([`Server::evict_board`]): it
-    /// takes no further batches; the shared ready queue redistributes
-    /// onto the survivors.
-    alive: bool,
+    /// Lifecycle state (see [`Health`]).
+    health: Health,
+    /// Dispatches started on this board — the fault plan's per-board
+    /// `at` index.
+    dispatches: usize,
     /// Lazily-created engines, keyed `(net, bucket)` (BTreeMap: the
     /// runtime never iterates hash-ordered state — determinism).
     engines: BTreeMap<(NetId, usize), Engine>,
 }
 
-/// A formed micro-batch waiting for a free board.
+/// A formed micro-batch waiting for a free board. `attempts` counts
+/// executions so far (0 = never dispatched; retries keep the original
+/// rows).
 struct ReadyBatch {
     net: NetId,
     rows: Vec<Pending>,
+    attempts: usize,
+}
+
+/// What a faulted dispatch resolves to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Verdict {
+    /// A benign stall: the result is valid, just delivered late.
+    DelayedOk,
+    /// The output integrity word mismatched — retry.
+    Corrupt,
+    /// The watchdog fired before the board returned — retry; the late
+    /// result is discarded.
+    Stalled,
+}
+
+/// A dispatched micro-batch whose outcome resolves at a future cycle
+/// (only fault-plan-affected dispatches go in flight; clean dispatches
+/// complete synchronously at dispatch time, exactly as before).
+struct InFlight {
+    net: NetId,
+    rows: Vec<Pending>,
+    attempts: usize,
+    board: usize,
+    start: u64,
+    resolve_at: u64,
+    verdict: Verdict,
+    /// Output block (valid for [`Verdict::DelayedOk`] only).
+    out: Vec<i16>,
+    bucket: usize,
 }
 
 /// One served request's result.
@@ -220,6 +378,25 @@ pub struct Completion {
     pub bucket: usize,
 }
 
+/// Where the shed-victim scan found the worst request.
+enum VictimLoc {
+    /// The incoming request itself is the worst — refuse it.
+    Incoming,
+    /// A request still queued in the net's batcher.
+    Queued(RequestId),
+    /// A row of a formed first-attempt batch (`ready[i].rows[j]`).
+    Ready(usize, usize),
+}
+
+/// Is candidate `a` strictly worse (shed sooner) than `b`? Keys are
+/// `(priority, effective_deadline, id)`: lower priority is worse; ties
+/// shed the latest deadline (`None` = latest possible), then the
+/// newest request — so a uniform-priority, no-deadline workload always
+/// sheds the incoming request, exactly the old `Overloaded` behaviour.
+fn worse_than(a: (u8, u64, u64), b: (u8, u64, u64)) -> bool {
+    a.0 < b.0 || (a.0 == b.0 && (a.1 > b.1 || (a.1 == b.1 && a.2 > b.2)))
+}
+
 /// The multi-tenant batched inference server over a simulated board
 /// pool. See the module docs for the architecture; see
 /// [`crate::session::Session::server`] for the one-net convenience
@@ -234,7 +411,9 @@ pub struct Server {
     boards: Vec<BoardState>,
     board_metrics: Vec<BoardMetrics>,
     ready: VecDeque<ReadyBatch>,
+    inflight: Vec<InFlight>,
     completions: Vec<Completion>,
+    dropped: Vec<DroppedRequest>,
 }
 
 impl Server {
@@ -255,9 +434,20 @@ impl Server {
         if cfg.queue_cap == 0 {
             return Err(ServeError::Config("queue_cap must be at least 1".into()));
         }
+        if cfg.quarantine_after == 0 {
+            return Err(ServeError::Config("quarantine_after must be at least 1 strike".into()));
+        }
+        if cfg.stall_timeout_cycles == 0 {
+            return Err(ServeError::Config("stall_timeout_cycles must be positive".into()));
+        }
         let ladder = forward_buckets(cfg.max_batch);
         let boards = (0..cfg.boards)
-            .map(|_| BoardState { busy_until: 0, alive: true, engines: BTreeMap::new() })
+            .map(|_| BoardState {
+                busy_until: 0,
+                health: Health::Up { strikes: 0 },
+                dispatches: 0,
+                engines: BTreeMap::new(),
+            })
             .collect();
         let board_metrics = vec![BoardMetrics::default(); cfg.boards];
         Ok(Server {
@@ -270,7 +460,9 @@ impl Server {
             boards,
             board_metrics,
             ready: VecDeque::new(),
+            inflight: Vec::new(),
             completions: Vec::new(),
+            dropped: Vec::new(),
         })
     }
 
@@ -336,6 +528,7 @@ impl Server {
                 self.cfg.max_batch,
                 self.cfg.max_wait_cycles,
                 self.cfg.queue_cap,
+                self.cfg.deadline_slack_cycles,
             ),
             outstanding: 0,
         });
@@ -357,20 +550,22 @@ impl Server {
         &self.ladder
     }
 
-    /// Boards still accepting work.
+    /// Boards still accepting work (healthy or quarantined — not dead).
     pub fn alive_boards(&self) -> usize {
-        self.boards.iter().filter(|b| b.alive).count()
+        self.boards.iter().filter(|b| b.health != Health::Dead).count()
     }
 
-    /// Evict a failed board from the pool (idempotent). The board takes
-    /// no further batches — its in-flight micro-batch finishes at its
-    /// already-scheduled completion cycle, and everything queued or
-    /// formed redistributes onto the surviving boards through the
-    /// shared ready queue (the serving twin of the cluster leader's
-    /// board eviction: requests are **not** errored). Evicting the last
-    /// board is allowed; the failure then surfaces as a typed
-    /// [`ServeError::NoBoards`] on the next submit/drain that actually
-    /// needs a board.
+    /// Evict a failed board from the pool (**idempotent** — evicting an
+    /// already-dead board changes nothing, so external health checks
+    /// may fire redundantly without miscounting `alive_boards`). The
+    /// board takes no further batches — its in-flight micro-batch
+    /// finishes at its already-scheduled completion cycle, and
+    /// everything queued or formed redistributes onto the surviving
+    /// boards through the shared ready queue (the serving twin of the
+    /// cluster leader's board eviction: requests are **not** errored).
+    /// Evicting the last board is allowed; the failure then surfaces as
+    /// a typed [`ServeError::NoBoards`] on the next submit/drain that
+    /// actually needs a board.
     pub fn evict_board(&mut self, board: usize) -> Result<(), ServeError> {
         if board >= self.boards.len() {
             return Err(ServeError::Config(format!(
@@ -378,23 +573,38 @@ impl Server {
                 self.boards.len()
             )));
         }
-        if self.boards[board].alive {
-            self.boards[board].alive = false;
-            self.boards[board].engines.clear();
-            self.board_metrics[board].evicted = true;
-        }
+        self.mark_dead(board);
         Ok(())
     }
 
     /// Submit one request (a quantised `input_dim` row for `net`) at
-    /// simulated cycle `at` (must be ≥ the server's clock; the clock
-    /// advances to `at`, firing any deadlines/dispatches due before it).
-    /// Returns the request id, or the typed rejection.
+    /// simulated cycle `at` with default options (priority 0, no
+    /// deadline — the pre-degraded-mode behaviour). See
+    /// [`Server::submit_with`].
     pub fn submit_at(
         &mut self,
         at: u64,
         net: NetId,
         row: &[i16],
+    ) -> Result<RequestId, ServeError> {
+        self.submit_with(at, net, row, SubmitOptions::default())
+    }
+
+    /// Submit one request with explicit [`SubmitOptions`] at simulated
+    /// cycle `at` (must be ≥ the server's clock; the clock advances to
+    /// `at`, firing any deadlines/dispatches due before it). Returns
+    /// the request id, or the typed rejection. When the net's backlog
+    /// is at capacity the *worst* request of backlog ∪ {incoming} is
+    /// shed: a backlogged victim drops as a [`DroppedRequest`] and the
+    /// incoming request is admitted; the incoming request itself is
+    /// refused with [`ServeError::Shed`] only when nothing in the
+    /// backlog is worse.
+    pub fn submit_with(
+        &mut self,
+        at: u64,
+        net: NetId,
+        row: &[i16],
+        opts: SubmitOptions,
     ) -> Result<RequestId, ServeError> {
         if at < self.now {
             return Err(ServeError::ClockSkew { at, now: self.now });
@@ -407,24 +617,60 @@ impl Server {
         }
         self.advance_to(at)?;
         let cap = self.cfg.queue_cap;
-        let entry = &mut self.nets[net];
-        if row.len() != entry.in_dim {
-            return Err(ServeError::BadRow { net, want: entry.in_dim, got: row.len() });
+        if row.len() != self.nets[net].in_dim {
+            return Err(ServeError::BadRow {
+                net,
+                want: self.nets[net].in_dim,
+                got: row.len(),
+            });
         }
-        // Admission bounds the whole undispatched backlog — queued
-        // requests plus formed batches waiting for a board — not just
-        // the batcher queue (which fill-flushes below max_batch and
-        // would otherwise never refuse anything).
-        if entry.outstanding >= cap {
-            entry.metrics.rejected += 1;
-            return Err(ServeError::Overloaded { net, depth: entry.outstanding, cap });
+        if let Some(d) = opts.deadline {
+            if d < at {
+                self.nets[net].metrics.rejected += 1;
+                return Err(ServeError::DeadlineExceeded { net, deadline: d, at });
+            }
         }
         let id = self.next_id;
-        if let Err(depth) =
-            entry.batcher.push(Pending { id, row: row.to_vec(), arrival: at })
-        {
+        // Admission bounds the whole undispatched backlog — queued
+        // requests plus first-attempt formed batches waiting for a
+        // board — not just the batcher queue (which fill-flushes below
+        // max_batch and would otherwise never refuse anything). At
+        // capacity, shed the worst of backlog ∪ {incoming}.
+        if self.nets[net].outstanding >= cap {
+            let depth = self.nets[net].outstanding;
+            match self.find_victim(net, opts, id) {
+                VictimLoc::Incoming => {
+                    self.nets[net].metrics.rejected += 1;
+                    return Err(ServeError::Shed { net, depth, cap, priority: opts.priority });
+                }
+                VictimLoc::Queued(vid) => {
+                    let p = self.nets[net]
+                        .batcher
+                        .remove(vid)
+                        .expect("victim scanned from the queue");
+                    self.drop_request(net, &p, DropReason::Shed);
+                    self.nets[net].outstanding -= 1;
+                }
+                VictimLoc::Ready(bi, ri) => {
+                    let p = self.ready[bi].rows.remove(ri);
+                    if self.ready[bi].rows.is_empty() {
+                        self.ready.remove(bi);
+                    }
+                    self.drop_request(net, &p, DropReason::Shed);
+                    self.nets[net].outstanding -= 1;
+                }
+            }
+        }
+        let entry = &mut self.nets[net];
+        if let Err(depth) = entry.batcher.push(Pending {
+            id,
+            row: row.to_vec(),
+            arrival: at,
+            priority: opts.priority,
+            deadline: opts.deadline,
+        }) {
             entry.metrics.rejected += 1;
-            return Err(ServeError::Overloaded { net, depth, cap });
+            return Err(ServeError::Shed { net, depth, cap, priority: opts.priority });
         }
         entry.outstanding += 1;
         entry.metrics.submitted += 1;
@@ -434,16 +680,17 @@ impl Server {
         Ok(id)
     }
 
-    /// Run the simulation until every queue is empty and every formed
-    /// batch has dispatched, then fast-forward the clock to the cycle
-    /// the last board goes idle. Returns that cycle (the makespan).
-    /// Terminates after finitely many events by construction — the
-    /// serving half of the no-hang contract.
+    /// Run the simulation until every queue is empty, every formed
+    /// batch has dispatched, and every in-flight outcome has resolved,
+    /// then fast-forward the clock to the cycle the last board goes
+    /// idle. Returns that cycle (the makespan). Terminates after
+    /// finitely many events by construction — the serving half of the
+    /// no-hang contract.
     pub fn drain(&mut self) -> Result<u64, ServeError> {
         while self.has_work() {
             let Some(e) = self.next_event() else {
-                // Only possible when every board has been evicted while
-                // work is still pending: typed, never a hang.
+                // Only possible when every board is dead while work is
+                // still pending: typed, never a hang.
                 return Err(ServeError::NoBoards { boards: self.boards.len() });
             };
             self.now = self.now.max(e);
@@ -454,9 +701,17 @@ impl Server {
         Ok(self.now)
     }
 
-    /// Take the completions accumulated so far (dispatch order).
+    /// Take the completions accumulated so far (dispatch order; delayed
+    /// results in resolution order).
     pub fn take_completions(&mut self) -> Vec<Completion> {
         std::mem::take(&mut self.completions)
+    }
+
+    /// Take the typed drop records accumulated so far (decision order).
+    /// Under any survivable fault plan,
+    /// `admitted == completions + dropped` — no silent losses.
+    pub fn take_dropped(&mut self) -> Vec<DroppedRequest> {
+        std::mem::take(&mut self.dropped)
     }
 
     /// Snapshot the serving metrics.
@@ -476,14 +731,103 @@ impl Server {
         }
     }
 
+    // ------------------------------------------------------ degraded mode
+
+    /// Record one post-admission drop (typed — never silent).
+    fn drop_request(&mut self, net: NetId, p: &Pending, reason: DropReason) {
+        match reason {
+            DropReason::Shed | DropReason::RetryBudget => self.nets[net].metrics.shed += 1,
+            DropReason::DeadlineExceeded => self.nets[net].metrics.expired += 1,
+        }
+        self.dropped.push(DroppedRequest {
+            id: p.id,
+            net,
+            reason,
+            at: self.now,
+            priority: p.priority,
+            deadline: p.deadline,
+        });
+    }
+
+    /// Scan the net's undispatched backlog plus the incoming request
+    /// for the worst candidate (see [`worse_than`]). Only first-attempt
+    /// ready batches participate — retried batches already left the
+    /// admission-controlled backlog.
+    fn find_victim(&self, net: NetId, opts: SubmitOptions, incoming_id: RequestId) -> VictimLoc {
+        let mut worst_key =
+            (opts.priority, opts.deadline.unwrap_or(u64::MAX), incoming_id);
+        let mut worst = VictimLoc::Incoming;
+        for p in self.nets[net].batcher.iter() {
+            let key = (p.priority, p.effective_deadline(), p.id);
+            if worse_than(key, worst_key) {
+                worst_key = key;
+                worst = VictimLoc::Queued(p.id);
+            }
+        }
+        for (bi, batch) in self.ready.iter().enumerate() {
+            if batch.net != net || batch.attempts != 0 {
+                continue;
+            }
+            for (ri, p) in batch.rows.iter().enumerate() {
+                let key = (p.priority, p.effective_deadline(), p.id);
+                if worse_than(key, worst_key) {
+                    worst_key = key;
+                    worst = VictimLoc::Ready(bi, ri);
+                }
+            }
+        }
+        worst
+    }
+
+    /// Terminal board death (idempotent): eviction and fault-plan kills
+    /// share this path.
+    fn mark_dead(&mut self, board: usize) {
+        if self.boards[board].health != Health::Dead {
+            self.boards[board].health = Health::Dead;
+            self.boards[board].engines.clear();
+            self.board_metrics[board].evicted = true;
+        }
+    }
+
+    /// One detected fault on `board`: count a strike and quarantine at
+    /// the configured threshold.
+    fn strike(&mut self, board: usize) {
+        let q = self.cfg.quarantine_cycles;
+        let threshold = self.cfg.quarantine_after;
+        self.board_metrics[board].strikes += 1;
+        match self.boards[board].health {
+            Health::Up { strikes } => {
+                let s = strikes + 1;
+                if s >= threshold {
+                    self.boards[board].health =
+                        Health::Quarantined { strikes: s, until: self.now + q };
+                    self.board_metrics[board].quarantines += 1;
+                } else {
+                    self.boards[board].health = Health::Up { strikes: s };
+                }
+            }
+            Health::Quarantined { strikes, until } => {
+                self.boards[board].health = Health::Quarantined {
+                    strikes: strikes + 1,
+                    until: until.max(self.now + q),
+                };
+            }
+            Health::Dead => {}
+        }
+    }
+
     // ------------------------------------------------------ event loop
 
     fn has_work(&self) -> bool {
-        !self.ready.is_empty() || self.nets.iter().any(|n| n.batcher.depth() > 0)
+        !self.ready.is_empty()
+            || !self.inflight.is_empty()
+            || self.nets.iter().any(|n| n.batcher.depth() > 0)
     }
 
-    /// Earliest future event: a queue's deadline flush, or — when formed
-    /// batches are waiting — the earliest board-free time.
+    /// Earliest future event: a queue's flush trigger, an in-flight
+    /// outcome resolving, or — when formed batches are waiting — the
+    /// earliest cycle any non-dead board can take work (its free time,
+    /// pushed past its quarantine expiry if it is sitting out).
     fn next_event(&self) -> Option<u64> {
         let mut e: Option<u64> = None;
         let mut fold = |t: u64| e = Some(e.map_or(t, |x| x.min(t)));
@@ -492,9 +836,19 @@ impl Server {
                 fold(d);
             }
         }
+        for f in &self.inflight {
+            fold(f.resolve_at);
+        }
         if !self.ready.is_empty() {
-            if let Some(b) =
-                self.boards.iter().filter(|b| b.alive).map(|b| b.busy_until).min()
+            if let Some(b) = self
+                .boards
+                .iter()
+                .filter_map(|b| match b.health {
+                    Health::Up { .. } => Some(b.busy_until),
+                    Health::Quarantined { until, .. } => Some(until.max(b.busy_until)),
+                    Health::Dead => None,
+                })
+                .min()
             {
                 fold(b);
             }
@@ -502,33 +856,156 @@ impl Server {
         e
     }
 
-    /// Process everything due at the current cycle: flush due batches
-    /// (stable net order), then dispatch FIFO batches onto the
-    /// lowest-indexed free boards. After `pump` returns, no further
+    /// Process everything due at the current cycle: resolve in-flight
+    /// outcomes (delayed completions, strikes, hedged retries), flush
+    /// due batches (stable net order), then dispatch FIFO batches onto
+    /// the healthiest free boards. After `pump` returns, no further
     /// progress is possible without advancing the clock.
     fn pump(&mut self) -> Result<(), ServeError> {
+        self.resolve_inflight();
         for nid in 0..self.nets.len() {
             for rows in self.nets[nid].batcher.take_ready(self.now) {
-                self.ready.push_back(ReadyBatch { net: nid, rows });
+                self.ready.push_back(ReadyBatch { net: nid, rows, attempts: 0 });
             }
         }
         while !self.ready.is_empty() {
-            let Some(board) = self.free_board() else { break };
+            let Some(board) = self.pick_board() else { break };
             let batch = self.ready.pop_front().expect("checked non-empty");
             self.dispatch(board, batch)?;
         }
         Ok(())
     }
 
-    /// The lowest-indexed free **alive** board (`None` when all busy or
-    /// evicted) — a deterministic placement rule.
-    fn free_board(&self) -> Option<usize> {
-        self.boards.iter().position(|b| b.alive && b.busy_until <= self.now)
+    /// Resolve every in-flight outcome due at the current cycle, in
+    /// dispatch order: benign delays deliver their results; detected
+    /// corruptions/stalls strike the board and hedge the batch onto the
+    /// ready queue's front (next free board), or drop its requests once
+    /// the retry budget is exhausted.
+    fn resolve_inflight(&mut self) {
+        let due: Vec<InFlight> = {
+            let mut rest = Vec::with_capacity(self.inflight.len());
+            let mut due = Vec::new();
+            for f in self.inflight.drain(..) {
+                if f.resolve_at <= self.now {
+                    due.push(f);
+                } else {
+                    rest.push(f);
+                }
+            }
+            self.inflight = rest;
+            due
+        };
+        for f in due {
+            match f.verdict {
+                Verdict::DelayedOk => self.deliver(&f),
+                Verdict::Corrupt | Verdict::Stalled => {
+                    self.strike(f.board);
+                    // `attempts` counts executions so far; re-dispatch
+                    // number `attempts` must stay within the budget.
+                    if f.attempts > self.cfg.max_retries {
+                        for p in &f.rows {
+                            self.drop_request(f.net, p, DropReason::RetryBudget);
+                        }
+                    } else {
+                        self.nets[f.net].metrics.retries += 1;
+                        self.ready.push_front(ReadyBatch {
+                            net: f.net,
+                            rows: f.rows,
+                            attempts: f.attempts,
+                        });
+                    }
+                }
+            }
+        }
     }
 
-    /// Execute one micro-batch on `board` at the current cycle.
-    fn dispatch(&mut self, board: usize, batch: ReadyBatch) -> Result<(), ServeError> {
+    /// Deliver a delayed (benign-stall) batch: completions carry the
+    /// stalled finish cycle, so SLO accounting sees the real latency.
+    fn deliver(&mut self, f: &InFlight) {
+        let out_dim = self.nets[f.net].out_dim;
+        let m = &mut self.nets[f.net].metrics;
+        m.completed += f.rows.len() as u64;
+        for (i, p) in f.rows.iter().enumerate() {
+            m.latencies.push(f.resolve_at - p.arrival);
+            if p.deadline.is_some_and(|d| d < f.resolve_at) {
+                m.late += 1;
+            }
+            self.completions.push(Completion {
+                id: p.id,
+                net: f.net,
+                output: f.out[i * out_dim..(i + 1) * out_dim].to_vec(),
+                submitted: p.arrival,
+                dispatched: f.start,
+                completed: f.resolve_at,
+                batch_rows: f.rows.len(),
+                bucket: f.bucket,
+            });
+        }
+    }
+
+    /// The healthiest free non-dead board: lowest strike count, then
+    /// lowest index, among boards that are free now (`busy_until ≤
+    /// now`) and not sitting out a quarantine. Selecting a board whose
+    /// quarantine has expired re-admits it on probation (strikes
+    /// preserved). With zero strikes everywhere this is exactly the old
+    /// lowest-indexed-free rule.
+    fn pick_board(&mut self) -> Option<usize> {
+        let mut best: Option<(u32, usize)> = None;
+        for (i, b) in self.boards.iter().enumerate() {
+            if b.busy_until > self.now {
+                continue;
+            }
+            let strikes = match b.health {
+                Health::Up { strikes } => strikes,
+                Health::Quarantined { strikes, until } if until <= self.now => strikes,
+                _ => continue,
+            };
+            if best.map_or(true, |k| (strikes, i) < k) {
+                best = Some((strikes, i));
+            }
+        }
+        let (_, i) = best?;
+        if let Health::Quarantined { strikes, .. } = self.boards[i].health {
+            self.boards[i].health = Health::Up { strikes };
+        }
+        Some(i)
+    }
+
+    /// Execute one micro-batch on `board` at the current cycle,
+    /// applying any fault-plan site scheduled for this board's next
+    /// dispatch index.
+    fn dispatch(&mut self, board: usize, mut batch: ReadyBatch) -> Result<(), ServeError> {
         let nid = batch.net;
+        // Expire requests whose deadline already passed while they
+        // waited (typed drops — never run work nobody can use).
+        let mut i = 0;
+        while i < batch.rows.len() {
+            if batch.rows[i].deadline.is_some_and(|d| d < self.now) {
+                let p = batch.rows.remove(i);
+                self.drop_request(nid, &p, DropReason::DeadlineExceeded);
+                if batch.attempts == 0 {
+                    self.nets[nid].outstanding -= 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        if batch.rows.is_empty() {
+            return Ok(());
+        }
+        let k = self.boards[board].dispatches;
+        self.boards[board].dispatches += 1;
+        if self.cfg.faults.kills(board, k) {
+            // The board dies taking the batch: nothing ran. Requeue at
+            // the front — the batch redistributes to the survivors
+            // without consuming retry budget.
+            self.mark_dead(board);
+            self.ready.push_front(batch);
+            return Ok(());
+        }
+        if batch.attempts == 0 {
+            self.nets[nid].outstanding -= batch.rows.len();
+        }
         let bucket = bucket_for(batch.rows.len(), &self.ladder)
             .expect("batch size is capped at max_batch, the ladder's top bucket");
         let entry = &self.nets[nid];
@@ -563,20 +1040,79 @@ impl Server {
         let (x_id, out_id) = (low.x, low.out);
         let (out, stats) = engine.plan.run_forward(&mut engine.state, x_id, &qx, out_id);
         // Timing: the batch starts now (the board was free) and occupies
-        // the board for the run's simulated cycles.
+        // the board for the run's simulated cycles (plus any injected
+        // stall).
         let start = self.now;
         let done = start + stats.cycles;
-        self.boards[board].busy_until = done;
         self.board_metrics[board].batches += 1;
         self.board_metrics[board].busy_cycles += stats.cycles;
-        self.nets[nid].outstanding -= batch.rows.len();
         let m = &mut self.nets[nid].metrics;
         m.batches += 1;
         m.batch_rows += batch.rows.len() as u64;
         m.bucket_rows += bucket as u64;
+        // Fault verdict for this dispatch. The board computes the
+        // output integrity word before readback; a corruption site
+        // flips the block afterwards, and the checksum mismatch — not
+        // the plan — is what marks the batch corrupt, so the detection
+        // path itself is exercised.
+        if self.cfg.faults.corrupts(board, k) {
+            let expected = output_checksum(&out);
+            let mut bad = out;
+            bad[0] ^= 1;
+            let verdict = if output_checksum(&bad) == expected {
+                Verdict::DelayedOk
+            } else {
+                Verdict::Corrupt
+            };
+            self.boards[board].busy_until = done;
+            self.inflight.push(InFlight {
+                net: nid,
+                rows: batch.rows,
+                attempts: batch.attempts + 1,
+                board,
+                start,
+                resolve_at: done,
+                verdict,
+                out: bad,
+                bucket,
+            });
+            return Ok(());
+        }
+        if let Some(stall) = self.cfg.faults.stall_cycles(board, k) {
+            let actual = done + stall;
+            self.boards[board].busy_until = actual;
+            let detected = actual - start > self.cfg.stall_timeout_cycles;
+            let (verdict, resolve_at) = if detected {
+                // Watchdog fires first: hedge the batch; the board's
+                // late (valid) result is discarded.
+                (Verdict::Stalled, start + self.cfg.stall_timeout_cycles)
+            } else {
+                (Verdict::DelayedOk, actual)
+            };
+            self.inflight.push(InFlight {
+                net: nid,
+                rows: batch.rows,
+                attempts: batch.attempts + 1,
+                board,
+                start,
+                resolve_at,
+                verdict,
+                out,
+                bucket,
+            });
+            return Ok(());
+        }
+        // Clean dispatch: the fault-free fast path, byte-for-byte the
+        // pre-degraded-mode behaviour. A clean run clears the board's
+        // probation strikes.
+        self.boards[board].busy_until = done;
+        self.boards[board].health = Health::Up { strikes: 0 };
         m.completed += batch.rows.len() as u64;
         for (i, p) in batch.rows.iter().enumerate() {
             m.latencies.push(done - p.arrival);
+            if p.deadline.is_some_and(|d| d < done) {
+                m.late += 1;
+            }
             self.completions.push(Completion {
                 id: p.id,
                 net: nid,

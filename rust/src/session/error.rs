@@ -50,9 +50,9 @@ pub enum Error {
     /// against the wrong run).
     #[error(transparent)]
     Checkpoint(#[from] crate::nn::checkpoint::CheckpointError),
-    /// The multi-tenant serving runtime failed (typed overload
-    /// rejections, admission/config errors — see
-    /// [`crate::serve::ServeError`]).
+    /// The multi-tenant serving runtime failed (typed shed /
+    /// deadline-exceeded rejections, degraded-mode pool exhaustion,
+    /// admission/config errors — see [`crate::serve::ServeError`]).
     #[error(transparent)]
     Serve(#[from] crate::serve::ServeError),
     /// Tensor name not found in the artifact's symbol table (`hint` is

@@ -285,7 +285,9 @@ impl Session {
     /// inference-only ones). The registered net is id `0` of the new
     /// server; register more artifacts on it for multi-tenant serving.
     /// Served outputs are bit-identical to this session's `infer` on the
-    /// same rows (see DESIGN.md §Serving).
+    /// same rows, and `cfg` carries the degraded-mode knobs — SLO
+    /// shedding, fault plan, quarantine, hedged retries (see DESIGN.md
+    /// §Serving).
     pub fn server(&self, cfg: serve::ServeConfig) -> Result<serve::Server, Error> {
         let (w, b) = self.current_params().ok_or_else(|| Error::Unsupported {
             verb: "server",

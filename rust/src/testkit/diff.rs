@@ -18,7 +18,7 @@
 //! fixed-point levels must agree to the bit, including cycle accounting
 //! between the fused and unfused plans.
 
-use super::gen::{FaultCase, FuzzCase, NetCase, ProgramCase, RecoveryCase};
+use super::gen::{FaultCase, FuzzCase, NetCase, ProgramCase, RecoveryCase, ServeChaosCase};
 use crate::assembler::program::Step;
 use crate::cluster::fault::FaultPlan;
 use crate::cluster::leader::{self, ClusterConfig, ClusterError, Job, JobResult};
@@ -457,6 +457,7 @@ impl Differ {
             max_batch,
             max_wait_cycles: c.sync_every as u64 * 7,
             queue_cap: c.net.batch * 4 + 8,
+            ..ServeConfig::default()
         };
         let mut server = Server::open(cfg)
             .map_err(|e| fail(Level::Serve, format!("server open failed: {e}")))?;
@@ -489,6 +490,195 @@ impl Differ {
                     ),
                 ));
             }
+        }
+        Ok(())
+    }
+
+    /// Serving-chaos differential — the degraded-mode acceptance
+    /// property: under a **survivable** [`crate::serve::ServeFaultPlan`]
+    /// (kills leave ≥ 1 board, transient sites within the hedged-retry
+    /// budget) every admitted SLO-annotated request must terminate as a
+    /// completion or a typed drop (never a hang, a silent loss, or a
+    /// retry-budget exhaustion), every *completed* output must still be
+    /// bit-identical to the batch-1 sequential reference, and the whole
+    /// outcome — completions, drop records, and the metrics snapshot —
+    /// must replay deterministically.
+    pub fn run_serve_chaos(&self, sc: &ServeChaosCase) -> Result<(), Divergence> {
+        use super::gen::SERVE_CHAOS_RETRIES;
+        use crate::serve::{
+            Completion, DropReason, DroppedRequest, RequestId, ServeConfig, ServeError, Server,
+            SubmitOptions,
+        };
+        use crate::util::Rng;
+        use std::collections::BTreeSet;
+        let c = &sc.case;
+        let spec = c.net.spec();
+        let (qw, qb) = c.net.params();
+        let qx = c.net.input();
+        let in_dim = spec.input_dim();
+
+        // Sequential reference: one batch-1 infer per request row
+        // (identical to `run_serve`'s).
+        let a1 = self
+            .compiler
+            .compile_spec(&spec, &CompileOptions::inference(1))
+            .map_err(|e| fail(Level::Serve, format!("batch-1 compile failed: {e}")))?;
+        let mut reference = Session::open(Arc::clone(&a1), Target::Board(self.device))
+            .map_err(|e| fail(Level::Serve, format!("reference open failed: {e}")))?;
+        for l in 0..spec.layers.len() {
+            for (name, data) in [(format!("w{l}"), &qw[l]), (format!("b{l}"), &qb[l])] {
+                let h = a1
+                    .tensor(&name)
+                    .map_err(|e| fail(Level::Serve, format!("handle {name}: {e}")))?;
+                reference
+                    .write(&h, data)
+                    .map_err(|e| fail(Level::Serve, format!("write {name}: {e}")))?;
+            }
+        }
+        let mut want = Vec::with_capacity(c.net.batch);
+        for row in qx.chunks(in_dim) {
+            want.push(
+                reference
+                    .infer(row)
+                    .map_err(|e| fail(Level::Serve, format!("reference infer: {e}")))?
+                    .output,
+            );
+        }
+
+        // SLO annotations: a salted seed stream assigns each request a
+        // priority and (half the time) a feasible-at-submit deadline —
+        // deadlines may still expire while batches wait out faults,
+        // which is exactly the degraded-mode path under test.
+        let arrivals: Vec<u64> =
+            (0..want.len()).map(|i| i as u64 * (1 + c.net.seed % 5)).collect();
+        let opts: Vec<SubmitOptions> = {
+            let mut r = Rng::new(c.net.seed ^ 0xC4A0_5D1B_54A3_2D19);
+            arrivals
+                .iter()
+                .map(|&at| SubmitOptions {
+                    priority: r.gen_range(3) as u8,
+                    deadline: if r.gen_bool(0.5) {
+                        Some(at + 64 + r.gen_range(4096))
+                    } else {
+                        None
+                    },
+                })
+                .collect()
+        };
+
+        let max_batch = c.net.batch.max(2);
+        let artifact = self
+            .compiler
+            .compile_spec(&spec, &CompileOptions::serving(max_batch))
+            .map_err(|e| fail(Level::Serve, format!("serving compile failed: {e}")))?;
+        let cfg = ServeConfig {
+            boards: c.boards,
+            device: self.device.part.name.to_string(),
+            max_batch,
+            max_wait_cycles: c.sync_every as u64 * 7,
+            queue_cap: c.net.batch * 4 + 8,
+            faults: sc.plan.clone(),
+            max_retries: SERVE_CHAOS_RETRIES,
+            ..ServeConfig::default()
+        };
+
+        // Two identical runs: the second is the replay-determinism
+        // check.
+        let mut runs: Vec<(Vec<(RequestId, usize)>, Vec<Completion>, Vec<DroppedRequest>, String)> =
+            Vec::with_capacity(2);
+        for rep in 0..2 {
+            let mut server = Server::open(cfg.clone())
+                .map_err(|e| fail(Level::Serve, format!("run {rep}: server open failed: {e}")))?;
+            let nid = server
+                .register(Arc::clone(&artifact), &qw, &qb)
+                .map_err(|e| fail(Level::Serve, format!("run {rep}: register failed: {e}")))?;
+            let mut admitted: Vec<(RequestId, usize)> = Vec::new();
+            for (i, row) in qx.chunks(in_dim).enumerate() {
+                match server.submit_with(arrivals[i], nid, row, opts[i]) {
+                    Ok(id) => admitted.push((id, i)),
+                    // Typed refusals are legitimate degraded-mode
+                    // outcomes; anything else is a harness bug.
+                    Err(ServeError::Shed { .. }) | Err(ServeError::DeadlineExceeded { .. }) => {}
+                    Err(e) => {
+                        return Err(fail(
+                            Level::Serve,
+                            format!("run {rep}: submit {i} failed untyped: {e}"),
+                        ))
+                    }
+                }
+            }
+            server
+                .drain()
+                .map_err(|e| fail(Level::Serve, format!("run {rep}: drain failed: {e}")))?;
+            let completions = server.take_completions();
+            let dropped = server.take_dropped();
+            let json = server.report().to_json();
+            runs.push((admitted, completions, dropped, json));
+        }
+        let (admitted, completions, dropped, json) = &runs[0];
+
+        // No silent losses, no double deliveries: every admitted id
+        // terminates exactly once, as a completion or a typed drop.
+        let admitted_ids: BTreeSet<RequestId> = admitted.iter().map(|&(id, _)| id).collect();
+        let mut seen: BTreeSet<RequestId> = BTreeSet::new();
+        for id in completions
+            .iter()
+            .map(|g| g.id)
+            .chain(dropped.iter().map(|d| d.id))
+        {
+            if !admitted_ids.contains(&id) {
+                return Err(fail(Level::Serve, format!("request {id} terminated twice or was never admitted")));
+            }
+            if !seen.insert(id) {
+                return Err(fail(Level::Serve, format!("request {id} terminated twice")));
+            }
+        }
+        if seen != admitted_ids {
+            let missing = admitted_ids.difference(&seen).count();
+            return Err(fail(
+                Level::Serve,
+                format!("{missing} admitted request(s) silently lost under the fault plan"),
+            ));
+        }
+        // A survivable plan never exhausts the hedged-retry budget.
+        if let Some(d) = dropped.iter().find(|d| d.reason == DropReason::RetryBudget) {
+            return Err(fail(
+                Level::Serve,
+                format!("request {} exhausted retries under a survivable plan", d.id),
+            ));
+        }
+        // Completed outputs are still bit-identical to the batch-1
+        // reference — faults and hedging must never corrupt a result.
+        let index_of: std::collections::BTreeMap<RequestId, usize> =
+            admitted.iter().map(|&(id, i)| (id, i)).collect();
+        for g in completions {
+            let i = index_of[&g.id];
+            if g.output != want[i] {
+                return Err(fail(
+                    Level::Serve,
+                    format!(
+                        "request {i} (bucket {}): chaos-served output vs batch-1 \
+                         Session::infer: {}",
+                        g.bucket,
+                        first_diff(&g.output, &want[i])
+                    ),
+                ));
+            }
+        }
+        // Replay determinism: same seed + same plan ⇒ identical
+        // admissions, completions, drop records, and metrics snapshot.
+        let (admitted2, completions2, dropped2, json2) = &runs[1];
+        if admitted != admitted2 {
+            return Err(fail(Level::Serve, "admission set nondeterministic across replays"));
+        }
+        if format!("{completions:?}") != format!("{completions2:?}") {
+            return Err(fail(Level::Serve, "completions nondeterministic across replays"));
+        }
+        if dropped != dropped2 {
+            return Err(fail(Level::Serve, "drop records nondeterministic across replays"));
+        }
+        if json != json2 {
+            return Err(fail(Level::Serve, "metrics snapshot nondeterministic across replays"));
         }
         Ok(())
     }
@@ -903,6 +1093,16 @@ mod tests {
         for i in 0..4 {
             let c = gen::fuzz_case().sample(&mut r);
             differ.run_serve(&c).unwrap_or_else(|d| panic!("case {i} ({c:?}): {d}"));
+        }
+    }
+
+    #[test]
+    fn a_handful_of_serve_chaos_cases_terminate_and_match_the_reference() {
+        let differ = Differ::default();
+        let mut r = Rng::new(0xC4A05);
+        for i in 0..3 {
+            let c = gen::serve_chaos_case().sample(&mut r);
+            differ.run_serve_chaos(&c).unwrap_or_else(|d| panic!("case {i} ({c:?}): {d}"));
         }
     }
 }

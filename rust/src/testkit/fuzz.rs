@@ -27,7 +27,7 @@ pub fn case_seed(base: u64, index: usize) -> u64 {
     base.wrapping_add((index as u64).wrapping_mul(SEED_STRIDE))
 }
 
-/// The four generated case families.
+/// The five generated case families.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Family {
     /// [`gen::FuzzCase`]: forward + training + cluster levels.
@@ -41,12 +41,22 @@ pub enum Family {
     /// board per recovery domain) must complete bit-identically to the
     /// fault-free run under the default recovery policy.
     Recovery,
+    /// [`gen::ServeChaosCase`]: survivable serving fault plans — every
+    /// admitted request terminates typed, completed outputs stay
+    /// bit-identical to the batch-1 reference, outcome replays
+    /// deterministically.
+    ServeChaos,
 }
 
 impl Family {
     /// All families, in execution order.
-    pub const ALL: [Family; 4] =
-        [Family::Net, Family::Program, Family::Fault, Family::Recovery];
+    pub const ALL: [Family; 5] = [
+        Family::Net,
+        Family::Program,
+        Family::Fault,
+        Family::Recovery,
+        Family::ServeChaos,
+    ];
 
     /// Stable name used in corpus/failure files.
     pub fn name(&self) -> &'static str {
@@ -55,6 +65,7 @@ impl Family {
             Family::Program => "program",
             Family::Fault => "fault",
             Family::Recovery => "recovery",
+            Family::ServeChaos => "serve-chaos",
         }
     }
 
@@ -65,6 +76,7 @@ impl Family {
             "program" => Some(Family::Program),
             "fault" => Some(Family::Fault),
             "recovery" => Some(Family::Recovery),
+            "serve-chaos" => Some(Family::ServeChaos),
             _ => None,
         }
     }
@@ -91,8 +103,9 @@ pub struct FuzzOptions {
     pub max_shrink_steps: usize,
     /// Re-run each failure's seed to confirm it reproduces.
     pub check_reproduction: bool,
-    /// Restrict the run to one family (`None` = all four) —
-    /// `mfnn fuzz --family recovery` is the CI recovery smoke.
+    /// Restrict the run to one family (`None` = all five) —
+    /// `mfnn fuzz --family recovery` and `--family serve-chaos` are the
+    /// CI recovery and chaos smokes.
     pub family: Option<Family>,
 }
 
@@ -218,6 +231,7 @@ pub fn run_case(differ: &Differ, family: Family, seed: u64) -> Result<(), Diverg
         Family::Program => differ.run_program(&gen::program_case().sample(&mut rng)),
         Family::Fault => differ.run_faults(&gen::fault_case().sample(&mut rng)),
         Family::Recovery => differ.run_recovery(&gen::recovery_case().sample(&mut rng)),
+        Family::ServeChaos => differ.run_serve_chaos(&gen::serve_chaos_case().sample(&mut rng)),
     }
 }
 
@@ -307,6 +321,11 @@ fn fuzz_one(
                 differ.run_recovery(c)
             })
         }
+        Family::ServeChaos => {
+            fuzz_family(opts, family, case_index, seed, &gen::serve_chaos_case(), |c| {
+                differ.run_serve_chaos(c)
+            })
+        }
     };
     failures.extend(failure);
 }
@@ -347,7 +366,9 @@ pub fn parse_corpus(text: &str) -> Result<Vec<(Family, u64)>, String> {
         let fam = parts
             .next()
             .and_then(Family::parse)
-            .ok_or_else(|| format!("line {}: expected `net|program|fault <seed>`", ln + 1))?;
+            .ok_or_else(|| {
+                format!("line {}: expected `net|program|fault|recovery|serve-chaos <seed>`", ln + 1)
+            })?;
         let seed: u64 = parts
             .next()
             .and_then(|s| s.parse().ok())
@@ -400,7 +421,8 @@ mod tests {
 
     #[test]
     fn corpus_parses_tags_seeds_and_comments() {
-        let text = "# comment\n\nnet 12  # trailing\nprogram 0\nfault 99\nrecovery 7\n";
+        let text =
+            "# comment\n\nnet 12  # trailing\nprogram 0\nfault 99\nrecovery 7\nserve-chaos 3\n";
         let entries = parse_corpus(text).unwrap();
         assert_eq!(
             entries,
@@ -408,7 +430,8 @@ mod tests {
                 (Family::Net, 12),
                 (Family::Program, 0),
                 (Family::Fault, 99),
-                (Family::Recovery, 7)
+                (Family::Recovery, 7),
+                (Family::ServeChaos, 3)
             ]
         );
         assert!(parse_corpus("bogus 1").is_err());

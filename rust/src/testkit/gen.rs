@@ -15,6 +15,8 @@
 //!   fused vs structural).
 //! * [`FaultCase`] — a topology plus a deterministic
 //!   [`FaultPlan`] for the cluster fault differential.
+//! * [`ServeChaosCase`] — a topology plus a survivable
+//!   [`ServeFaultPlan`] for the serving degraded-mode differential.
 //!
 //! Every generator pairs a structured shrinker so a divergence shrinks
 //! toward the minimal failing case (fewer layers, dim 1, batch 1, one
@@ -31,6 +33,7 @@ use crate::nn::mlp::{LutParams, MlpSpec};
 use crate::nn::trainer::TrainConfig;
 use crate::nn::{dataset, dataset::Dataset};
 use crate::prop::Gen;
+use crate::serve::ServeFaultPlan;
 use crate::util::Rng;
 
 /// Salt for deriving per-case parameter streams from the case seed.
@@ -599,6 +602,84 @@ pub fn recovery_case() -> Gen<RecoveryCase> {
     Gen::new(sample_recovery_case, shrink_recovery_case)
 }
 
+// --------------------------------------------------- serve-chaos scenarios
+
+/// A generated **survivable** serving fault scenario: a topology
+/// (reusing [`FuzzCase`]: `boards` sizes the pool, the net is the
+/// served artifact, `rows` the request count) plus a deterministic
+/// [`ServeFaultPlan`] that never kills board 0 and keeps transient
+/// sites within the default hedged-retry budget. Under such a plan the
+/// serving runtime must terminate every admitted request as a
+/// completion or a typed drop (shed / deadline-exceeded) — the serving
+/// twin of the cluster's "leader never hangs" acceptance property —
+/// and completed outputs must stay bit-identical to batch-1 inference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeChaosCase {
+    /// Topology + net (boards forced ≥ 2 so hedging has a survivor).
+    pub case: FuzzCase,
+    /// The injected, survivable serving fault schedule.
+    pub plan: ServeFaultPlan,
+}
+
+/// The retry budget serve-chaos plans are generated against — the
+/// default [`crate::serve::ServeConfig::max_retries`].
+pub(crate) const SERVE_CHAOS_RETRIES: usize = 3;
+
+pub(crate) fn sample_serve_chaos_case(r: &mut Rng) -> ServeChaosCase {
+    let mut case = sample_fuzz_case(r);
+    if case.boards < 2 {
+        case.boards = 2;
+    }
+    let plan = ServeFaultPlan::survivable(r.next_u64(), case.boards, SERVE_CHAOS_RETRIES);
+    ServeChaosCase { case, plan }
+}
+
+fn shrink_serve_chaos_case(c: &ServeChaosCase) -> Vec<ServeChaosCase> {
+    // Never shrink boards — the plan's sites target specific boards and
+    // shrinking the pool could make a survivable plan lethal.
+    let mut out: Vec<ServeChaosCase> = shrink_net_case(&c.case.net)
+        .into_iter()
+        .map(|net| ServeChaosCase {
+            case: FuzzCase { net, ..c.case.clone() },
+            plan: c.plan.clone(),
+        })
+        .collect();
+    if c.case.rows > 1 {
+        out.push(ServeChaosCase {
+            case: FuzzCase { rows: c.case.rows / 2, ..c.case.clone() },
+            plan: c.plan.clone(),
+        });
+    }
+    if c.case.sync_every > 1 {
+        out.push(ServeChaosCase {
+            case: FuzzCase { sync_every: 1, ..c.case.clone() },
+            plan: c.plan.clone(),
+        });
+    }
+    // drop one fault at a time (stays survivable: fewer faults)
+    for i in 0..c.plan.stalls.len() {
+        let mut d = c.clone();
+        d.plan.stalls.remove(i);
+        out.push(d);
+    }
+    for i in 0..c.plan.corruptions.len() {
+        let mut d = c.clone();
+        d.plan.corruptions.remove(i);
+        out.push(d);
+    }
+    for i in 0..c.plan.deaths.len() {
+        let mut d = c.clone();
+        d.plan.deaths.remove(i);
+        out.push(d);
+    }
+    out
+}
+
+/// Generator for [`ServeChaosCase`].
+pub fn serve_chaos_case() -> Gen<ServeChaosCase> {
+    Gen::new(sample_serve_chaos_case, shrink_serve_chaos_case)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -622,6 +703,31 @@ mod tests {
                 sample_recovery_case(&mut Rng::new(seed)),
                 sample_recovery_case(&mut Rng::new(seed))
             );
+            assert_eq!(
+                sample_serve_chaos_case(&mut Rng::new(seed)),
+                sample_serve_chaos_case(&mut Rng::new(seed))
+            );
+        }
+    }
+
+    #[test]
+    fn serve_chaos_cases_are_survivable_and_shrink_safely() {
+        let mut r = Rng::new(0x5E1);
+        for _ in 0..200 {
+            let c = sample_serve_chaos_case(&mut r);
+            assert!(c.case.boards >= 2);
+            assert!(
+                c.plan.is_survivable(c.case.boards, SERVE_CHAOS_RETRIES),
+                "plan {:?} not survivable for {} boards",
+                c.plan,
+                c.case.boards
+            );
+            assert!(c.plan.deaths.iter().all(|s| s.board != 0), "board 0 must survive");
+            for s in shrink_serve_chaos_case(&c) {
+                assert_eq!(s.case.boards, c.case.boards, "shrinks keep the pool size");
+                assert!(s.plan.is_survivable(s.case.boards, SERVE_CHAOS_RETRIES));
+                assert!(s != c, "shrink candidate equals original");
+            }
         }
     }
 

@@ -28,6 +28,14 @@
 //!   run completes with weights, curves, and stats bit-identical to the
 //!   fault-free run under the default
 //!   [`crate::cluster::RecoveryPolicy`] (DESIGN.md §Recovery).
+//! * Serving chaos — [`Differ::run_serve_chaos`] generates survivable
+//!   [`crate::serve::ServeFaultPlan`]s (board stalls, output
+//!   corruption, deaths that spare board 0) against SLO-annotated
+//!   request streams and asserts the degraded-mode contract: every
+//!   admitted request terminates as a completion or a typed drop, no
+//!   retry-budget exhaustion, completed outputs bit-identical to the
+//!   batch-1 reference, the whole outcome replay-deterministic
+//!   (DESIGN.md §Serving, "Degraded mode").
 //! * [`fuzz`] — the harness: seeded case streams, greedy shrinking to a
 //!   minimal failing case, seed replay (`mfnn fuzz --cases 1 --seed N`
 //!   reproduces exactly), and corpus snapshots under
@@ -46,4 +54,4 @@ pub use fuzz::{
     case_seed, fuzz, parse_corpus, replay_corpus, run_case, Family, FuzzFailure, FuzzOptions,
     FuzzReport,
 };
-pub use gen::{FaultCase, FuzzCase, NetCase, ProgramCase, RecoveryCase};
+pub use gen::{FaultCase, FuzzCase, NetCase, ProgramCase, RecoveryCase, ServeChaosCase};

@@ -10,7 +10,10 @@ use mfnn::nn::dataset;
 use mfnn::nn::lut::ActKind;
 use mfnn::nn::mlp::{LutParams, MlpSpec};
 use mfnn::nn::trainer::TrainConfig;
-use mfnn::serve::{open_loop, seeded_params, Completion, ServeConfig, ServeError, Server};
+use mfnn::serve::{
+    open_loop, seeded_params, slo_open_loop, Completion, DropReason, ServeConfig, ServeError,
+    ServeFaultPlan, Server, SubmitOptions,
+};
 use mfnn::util::Rng;
 use mfnn::{Artifact, CompileOptions, Compiler, Session, Target};
 use std::sync::Arc;
@@ -183,8 +186,8 @@ fn overload_is_a_typed_rejection_not_a_hang() {
     server.submit_at(0, nid, &row).unwrap();
     let err = server.submit_at(0, nid, &row).unwrap_err();
     assert!(
-        matches!(err, ServeError::Overloaded { net: 0, depth: 2, cap: 2 }),
-        "expected typed Overloaded, got {err}"
+        matches!(err, ServeError::Shed { net: 0, depth: 2, cap: 2, priority: 0 }),
+        "expected typed Shed, got {err}"
     );
     // the queued requests still complete (deadline flush) — no hang
     server.drain().unwrap();
@@ -220,8 +223,8 @@ fn backlog_of_formed_batches_still_triggers_overload() {
     }
     let err = server.submit_at(0, nid, &row).unwrap_err();
     assert!(
-        matches!(err, ServeError::Overloaded { net: 0, depth: 5, cap: 5 }),
-        "expected backlog Overloaded, got {err}"
+        matches!(err, ServeError::Shed { net: 0, depth: 5, cap: 5, priority: 0 }),
+        "expected backlog Shed, got {err}"
     );
     server.drain().unwrap();
     assert_eq!(server.take_completions().len(), 7, "admitted requests must all complete");
@@ -393,6 +396,470 @@ fn pooled_batched_throughput_beats_single_board_batch1_by_2x() {
         pooled_b32 >= 2.0 * single_b1,
         "pooled+batched {pooled_b32:.0} req/s < 2× single-board batch-1 {single_b1:.0} req/s"
     );
+}
+
+#[test]
+fn evicting_a_board_is_idempotent() {
+    // Regression: a second evict of the same board must not miscount
+    // alive_boards or disturb the pool — external health checks may
+    // fire redundantly.
+    let compiler = Compiler::new();
+    let spec = mk_spec("evict2", &[2, 4, 2]);
+    let (w, b) = seeded_params(&spec, 13);
+    let (_, mut reference) = reference_session(&compiler, &spec, &w, &b);
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::serving(2)).unwrap();
+    let mut server = Server::open(ServeConfig {
+        boards: 2,
+        max_batch: 2,
+        max_wait_cycles: 4,
+        queue_cap: 16,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let nid = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+    assert_eq!(server.alive_boards(), 2);
+    server.evict_board(1).unwrap();
+    server.evict_board(1).unwrap();
+    server.evict_board(1).unwrap();
+    assert_eq!(server.alive_boards(), 1, "re-evicting a dead board must not double-count");
+    assert!(matches!(server.evict_board(9), Err(ServeError::Config(_))));
+    // the survivor still serves, bit-exactly
+    let mut r = Rng::new(3);
+    let rows: Vec<Vec<i16>> = (0..4)
+        .map(|_| (0..2).map(|_| fixed().from_f64(r.gen_f64() * 2.0 - 1.0)).collect())
+        .collect();
+    for (i, row) in rows.iter().enumerate() {
+        server.submit_at(i as u64, nid, row).unwrap();
+    }
+    server.drain().unwrap();
+    let mut comps = server.take_completions();
+    comps.sort_by_key(|c| c.id);
+    assert_eq!(comps.len(), 4);
+    for (i, c) in comps.iter().enumerate() {
+        assert_eq!(c.output, reference.infer(&rows[i]).unwrap().output);
+    }
+    assert!(server.report().boards[1].evicted);
+    assert_eq!(server.report().boards[1].batches, 0);
+    // killing the last board makes pool exhaustion typed, not a hang
+    server.evict_board(0).unwrap();
+    assert_eq!(server.alive_boards(), 0);
+    assert!(matches!(
+        server.submit_at(1_000_000, nid, &rows[0]),
+        Err(ServeError::NoBoards { boards: 2 })
+    ));
+}
+
+#[test]
+fn registered_but_never_submitted_net_reports_zero_quantiles() {
+    // Regression: percentile over an empty latency set must render 0,
+    // not panic or index out of bounds.
+    let compiler = Compiler::new();
+    let spec_a = mk_spec("busy", &[2, 4, 2]);
+    let spec_b = mk_spec("idle", &[3, 4, 2]);
+    let (wa, ba) = seeded_params(&spec_a, 1);
+    let (wb, bb) = seeded_params(&spec_b, 2);
+    let art_a = compiler.compile_spec(&spec_a, &CompileOptions::serving(4)).unwrap();
+    let art_b = compiler.compile_spec(&spec_b, &CompileOptions::serving(4)).unwrap();
+    let mut server = Server::open(ServeConfig {
+        boards: 1,
+        max_batch: 4,
+        max_wait_cycles: 4,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let na = server.register(art_a, &wa, &ba).unwrap();
+    let _nb = server.register(art_b, &wb, &bb).unwrap();
+    server.submit_at(0, na, &[0, 0]).unwrap();
+    server.drain().unwrap();
+    let report = server.report();
+    assert_eq!(report.nets[1].submitted, 0);
+    assert_eq!(report.nets[1].latency_p50(), 0, "idle net p50 must render as 0");
+    assert_eq!(report.nets[1].latency_p99(), 0, "idle net p99 must render as 0");
+    // both renderings stay total
+    assert!(report.render().contains("idle"));
+    assert!(report.to_json().contains("\"idle\""));
+}
+
+#[test]
+fn shedding_is_priority_monotone_against_an_oracle_backlog() {
+    // Property (satellite of the degraded-mode contract): at capacity
+    // the server sheds exactly the worst of backlog ∪ {incoming} —
+    // lowest priority first, ties to the latest deadline, then the
+    // newest id. In particular no request is ever shed while a strictly
+    // lower-priority one remains backlogged for the same net. Verified
+    // against an oracle replaying the same decision rule.
+    fn worse(a: (u8, u64, u64), b: (u8, u64, u64)) -> bool {
+        a.0 < b.0 || (a.0 == b.0 && (a.1 > b.1 || (a.1 == b.1 && a.2 > b.2)))
+    }
+    let compiler = Compiler::new();
+    let spec = mk_spec("shedp", &[2, 4, 2]);
+    let (w, b) = seeded_params(&spec, 21);
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::serving(64)).unwrap();
+    let cap = 8usize;
+    let mut server = Server::open(ServeConfig {
+        boards: 1,
+        max_batch: 64,
+        max_wait_cycles: 1_000_000,
+        queue_cap: cap,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let nid = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+    let row = vec![0i16; 2];
+    let mut r = Rng::new(0x5ED);
+    let mut oracle: Vec<(u8, u64, u64)> = Vec::new(); // (priority, eff deadline, id)
+    let mut expect_shed: Vec<u64> = Vec::new();
+    let mut next_id = 0u64;
+    for _ in 0..60 {
+        let priority = r.gen_range(3) as u8;
+        let deadline = if r.gen_bool(0.5) { Some(256 + r.gen_range(2048)) } else { None };
+        let inc = (priority, deadline.unwrap_or(u64::MAX), next_id);
+        let res = server.submit_with(0, nid, &row, SubmitOptions { priority, deadline });
+        if oracle.len() >= cap {
+            let worst = oracle.iter().copied().fold(inc, |acc, k| {
+                if worse(k, acc) {
+                    k
+                } else {
+                    acc
+                }
+            });
+            if worst == inc {
+                let err = res.expect_err("oracle says the incoming request is the worst");
+                assert!(
+                    matches!(err, ServeError::Shed { net: 0, .. }),
+                    "expected Shed, got {err}"
+                );
+                continue;
+            }
+            oracle.retain(|&k| k != worst);
+            expect_shed.push(worst.2);
+        }
+        assert_eq!(res.unwrap(), next_id, "oracle and server disagree on admission");
+        oracle.push(inc);
+        next_id += 1;
+    }
+    let admitted = next_id as usize;
+    server.drain().unwrap();
+    let dropped = server.take_dropped();
+    let shed: Vec<u64> = dropped
+        .iter()
+        .filter(|d| d.reason == DropReason::Shed)
+        .map(|d| d.id)
+        .collect();
+    assert_eq!(shed, expect_shed, "server shed different victims than the oracle");
+    // every admitted request still terminates exactly once, typed
+    let comps = server.take_completions();
+    assert_eq!(comps.len() + dropped.len(), admitted, "silent losses");
+}
+
+#[test]
+fn default_submit_options_reproduce_plain_submission_bit_for_bit() {
+    // Empty fault plan + default options ⇒ degraded mode is invisible:
+    // submit_with(default) must equal submit_at on outputs, timing, and
+    // the metrics snapshot.
+    let compiler = Compiler::new();
+    let spec = mk_spec("ident", &[3, 8, 2]);
+    let (w, b) = seeded_params(&spec, 99);
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::serving(4)).unwrap();
+    let workload = open_loop(32, 11, 4, &[3], fixed());
+    let run = |with_opts: bool| {
+        let mut server = Server::open(ServeConfig {
+            boards: 2,
+            max_batch: 4,
+            max_wait_cycles: 8,
+            queue_cap: 64,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let nid = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+        for q in &workload {
+            if with_opts {
+                server.submit_with(q.at, nid, &q.row, SubmitOptions::default()).unwrap();
+            } else {
+                server.submit_at(q.at, nid, &q.row).unwrap();
+            }
+        }
+        server.drain().unwrap();
+        assert!(server.take_dropped().is_empty());
+        (server.report().to_json(), server.take_completions())
+    };
+    let (ja, ca) = run(false);
+    let (jb, cb) = run(true);
+    assert_eq!(ja, jb, "metrics diverge between submit_at and default submit_with");
+    assert_eq!(ca.len(), cb.len());
+    for (x, y) in ca.iter().zip(&cb) {
+        assert_eq!((x.id, &x.output, x.dispatched, x.completed, x.bucket),
+                   (y.id, &y.output, y.dispatched, y.completed, y.bucket));
+    }
+}
+
+#[test]
+fn corrupted_dispatch_hedges_onto_the_healthiest_free_board() {
+    let compiler = Compiler::new();
+    let spec = mk_spec("hedge", &[3, 6, 2]);
+    let (w, b) = seeded_params(&spec, 31);
+    let (_, mut reference) = reference_session(&compiler, &spec, &w, &b);
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::serving(4)).unwrap();
+    let mut server = Server::open(ServeConfig {
+        boards: 2,
+        max_batch: 4,
+        max_wait_cycles: 8,
+        queue_cap: 16,
+        // board 0's first dispatch returns a corrupted output block
+        faults: ServeFaultPlan::none().corrupt(0, 0),
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let nid = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+    let mut r = Rng::new(8);
+    let rows: Vec<Vec<i16>> = (0..4)
+        .map(|_| (0..3).map(|_| fixed().from_f64(r.gen_f64() * 2.0 - 1.0)).collect())
+        .collect();
+    for row in &rows {
+        server.submit_at(0, nid, row).unwrap();
+    }
+    server.drain().unwrap();
+    assert!(server.take_dropped().is_empty(), "a single corruption is retryable, never a drop");
+    let mut comps = server.take_completions();
+    comps.sort_by_key(|c| c.id);
+    assert_eq!(comps.len(), 4);
+    for (i, c) in comps.iter().enumerate() {
+        assert_eq!(
+            c.output,
+            reference.infer(&rows[i]).unwrap().output,
+            "hedged output corrupted"
+        );
+        assert!(c.dispatched > 0, "the retry re-dispatched after the corrupt run resolved");
+    }
+    let report = server.report();
+    assert_eq!(report.nets[0].retries, 1);
+    assert_eq!(report.boards[0].strikes, 1);
+    assert_eq!(report.boards[1].batches, 1, "the hedge went to the clean board");
+}
+
+#[test]
+fn repeated_strikes_quarantine_the_board_and_probation_recovers() {
+    let compiler = Compiler::new();
+    let spec = mk_spec("quar", &[2, 4, 2]);
+    let (w, b) = seeded_params(&spec, 47);
+    let (_, mut reference) = reference_session(&compiler, &spec, &w, &b);
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::serving(2)).unwrap();
+    let mut server = Server::open(ServeConfig {
+        boards: 1,
+        max_batch: 2,
+        max_wait_cycles: 4,
+        queue_cap: 16,
+        faults: ServeFaultPlan::none().corrupt(0, 0).corrupt(0, 1),
+        quarantine_after: 2,
+        quarantine_cycles: 500,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let nid = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+    let rows = [vec![100i16, -50], vec![-25i16, 75]];
+    for row in &rows {
+        server.submit_at(0, nid, row).unwrap();
+    }
+    server.drain().unwrap();
+    assert!(server.take_dropped().is_empty());
+    let mut comps = server.take_completions();
+    comps.sort_by_key(|c| c.id);
+    assert_eq!(comps.len(), 2);
+    for (i, c) in comps.iter().enumerate() {
+        assert_eq!(c.output, reference.infer(&rows[i]).unwrap().output);
+        assert!(
+            c.completed >= 500,
+            "the third (clean) attempt had to wait out the quarantine"
+        );
+    }
+    let report = server.report();
+    assert_eq!(report.boards[0].strikes, 2);
+    assert_eq!(report.boards[0].quarantines, 1);
+    assert_eq!(report.nets[0].retries, 2);
+    assert!(!report.boards[0].evicted, "quarantine is probation, not death");
+}
+
+#[test]
+fn a_killed_board_redistributes_its_batch_without_burning_retries() {
+    let compiler = Compiler::new();
+    let spec = mk_spec("kill", &[2, 4, 2]);
+    let (w, b) = seeded_params(&spec, 53);
+    let (_, mut reference) = reference_session(&compiler, &spec, &w, &b);
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::serving(2)).unwrap();
+    let mut server = Server::open(ServeConfig {
+        boards: 2,
+        max_batch: 2,
+        max_wait_cycles: 4,
+        queue_cap: 16,
+        // board 0 dies taking its first batch: nothing ran, the batch
+        // redistributes to board 1 without consuming retry budget
+        faults: ServeFaultPlan::none().kill(0, 0),
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let nid = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+    let rows = [vec![10i16, 20], vec![-30i16, 40]];
+    for row in &rows {
+        server.submit_at(0, nid, row).unwrap();
+    }
+    server.drain().unwrap();
+    assert!(server.take_dropped().is_empty());
+    let mut comps = server.take_completions();
+    comps.sort_by_key(|c| c.id);
+    assert_eq!(comps.len(), 2);
+    for (i, c) in comps.iter().enumerate() {
+        assert_eq!(c.output, reference.infer(&rows[i]).unwrap().output);
+    }
+    assert_eq!(server.alive_boards(), 1);
+    let report = server.report();
+    assert!(report.boards[0].evicted);
+    assert_eq!(report.boards[0].batches, 0, "the killed dispatch never ran");
+    assert_eq!(report.boards[1].batches, 1);
+    assert_eq!(report.nets[0].retries, 0, "a death is not a strike against the batch");
+}
+
+#[test]
+fn deadline_at_risk_requests_flush_early_onto_a_smaller_bucket() {
+    // Graceful degradation: an SLO deadline pulls the flush forward, so
+    // the partial batch rides a smaller (faster) ladder bucket instead
+    // of waiting out max_wait for a fuller batch.
+    let compiler = Compiler::new();
+    let spec = mk_spec("slo", &[2, 4, 2]);
+    let (w, b) = seeded_params(&spec, 61);
+    let (_, mut reference) = reference_session(&compiler, &spec, &w, &b);
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::serving(8)).unwrap();
+    let mut server = Server::open(ServeConfig {
+        boards: 1,
+        max_batch: 8,
+        max_wait_cycles: 1000,
+        queue_cap: 16,
+        deadline_slack_cycles: 16,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let nid = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+    let rows = [vec![5i16, -5], vec![15i16, 25]];
+    for row in &rows {
+        server
+            .submit_with(0, nid, row, SubmitOptions { priority: 1, deadline: Some(100) })
+            .unwrap();
+    }
+    server.drain().unwrap();
+    let mut comps = server.take_completions();
+    comps.sort_by_key(|c| c.id);
+    assert_eq!(comps.len(), 2);
+    for (i, c) in comps.iter().enumerate() {
+        assert_eq!(c.dispatched, 84, "flush at deadline − slack, not at max_wait");
+        assert_eq!(c.bucket, 2, "2 urgent rows ride the 2-bucket, not the 8-bucket");
+        assert_eq!(c.output, reference.infer(&rows[i]).unwrap().output);
+    }
+}
+
+#[test]
+fn expired_requests_drop_typed_not_silently() {
+    let compiler = Compiler::new();
+    let spec = mk_spec("expire", &[2, 4, 2]);
+    let (w, b) = seeded_params(&spec, 71);
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::serving(1)).unwrap();
+    let mut server = Server::open(ServeConfig {
+        boards: 1,
+        max_batch: 1,
+        max_wait_cycles: 0,
+        queue_cap: 16,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let nid = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+    // request A dispatches immediately and occupies the only board well
+    // past cycle 2; request B's deadline expires while it waits.
+    let a = server.submit_at(0, nid, &[1, 2]).unwrap();
+    let b_id = server
+        .submit_with(1, nid, &[3, 4], SubmitOptions { priority: 2, deadline: Some(2) })
+        .unwrap();
+    server.drain().unwrap();
+    let comps = server.take_completions();
+    assert_eq!(comps.len(), 1);
+    assert_eq!(comps[0].id, a);
+    let dropped = server.take_dropped();
+    assert_eq!(dropped.len(), 1);
+    assert_eq!(dropped[0].id, b_id);
+    assert_eq!(dropped[0].reason, DropReason::DeadlineExceeded);
+    assert_eq!(dropped[0].deadline, Some(2));
+    assert_eq!(server.report().nets[0].expired, 1);
+
+    // a deadline already in the past is refused at submit, typed
+    let err = server
+        .submit_with(1_000_000, nid, &[0, 0], SubmitOptions { priority: 0, deadline: Some(50) })
+        .unwrap_err();
+    assert!(
+        matches!(err, ServeError::DeadlineExceeded { net: 0, deadline: 50, at: 1_000_000 }),
+        "expected submit-time DeadlineExceeded, got {err}"
+    );
+}
+
+#[test]
+fn survivable_chaos_terminates_every_request_typed_and_bit_exact() {
+    // The degraded-mode acceptance property end to end: a seeded
+    // survivable fault plan against an SLO-annotated open-loop stream —
+    // every admitted request completes or drops typed, completed
+    // outputs match the batch-1 reference bit for bit, and the whole
+    // outcome replays deterministically.
+    let compiler = Compiler::new();
+    let spec = mk_spec("chaos", &[3, 8, 2]);
+    let (w, b) = seeded_params(&spec, 85);
+    let (_, mut reference) = reference_session(&compiler, &spec, &w, &b);
+    let artifact = compiler.compile_spec(&spec, &CompileOptions::serving(8)).unwrap();
+    let workload = slo_open_loop(48, 5, 3, &[3], fixed());
+    let want: Vec<Vec<i16>> =
+        workload.iter().map(|q| reference.infer(&q.row).unwrap().output).collect();
+    let boards = 3usize;
+    let plan = ServeFaultPlan::survivable(0xC405, boards, 3);
+    assert!(plan.is_survivable(boards, 3));
+    let run = || {
+        let mut server = Server::open(ServeConfig {
+            boards,
+            max_batch: 8,
+            max_wait_cycles: 16,
+            queue_cap: 64,
+            faults: plan.clone(),
+            max_retries: 3,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let nid = server.register(Arc::clone(&artifact), &w, &b).unwrap();
+        let mut admitted = Vec::new();
+        for (i, q) in workload.iter().enumerate() {
+            match server.submit_with(q.at, nid, &q.row, q.options()) {
+                Ok(id) => admitted.push((id, i)),
+                Err(ServeError::Shed { .. }) | Err(ServeError::DeadlineExceeded { .. }) => {}
+                Err(e) => panic!("untyped submit failure: {e}"),
+            }
+        }
+        server.drain().unwrap();
+        (admitted, server.take_completions(), server.take_dropped(), server.report().to_json())
+    };
+    let (admitted, comps, dropped, json) = run();
+    assert_eq!(
+        comps.len() + dropped.len(),
+        admitted.len(),
+        "every admitted request must terminate exactly once"
+    );
+    assert!(
+        dropped.iter().all(|d| d.reason != DropReason::RetryBudget),
+        "a survivable plan never exhausts the hedged-retry budget"
+    );
+    let index: std::collections::BTreeMap<u64, usize> = admitted.iter().copied().collect();
+    for c in &comps {
+        assert_eq!(c.output, want[index[&c.id]], "fault-era output diverged from reference");
+    }
+    let (admitted2, comps2, dropped2, json2) = run();
+    assert_eq!(admitted, admitted2);
+    assert_eq!(dropped, dropped2);
+    assert_eq!(json, json2, "chaos outcome must replay deterministically");
+    assert_eq!(comps.len(), comps2.len());
+    for (x, y) in comps.iter().zip(&comps2) {
+        assert_eq!((x.id, &x.output, x.completed), (y.id, &y.output, y.completed));
+    }
 }
 
 #[test]

@@ -86,6 +86,20 @@ fn corpus_recovery_seeds_replay_clean() {
 }
 
 #[test]
+fn corpus_serve_chaos_seeds_replay_clean() {
+    // The CI chaos smoke (`mfnn fuzz --family serve-chaos --cases 8`)
+    // plus this pinned corpus: survivable serving fault plans must
+    // terminate every admitted request as a completion or a typed drop,
+    // bit-identical to the batch-1 reference and replay-deterministic.
+    let text = include_str!("corpus/serve_chaos.seeds");
+    let entries = testkit::parse_corpus(text).unwrap();
+    assert!(entries.len() >= 8, "serve-chaos corpus unexpectedly small");
+    assert!(entries.iter().all(|(f, _)| *f == Family::ServeChaos));
+    let report = testkit::replay_corpus(&entries, &FuzzOptions::default());
+    assert!(report.ok(), "{}", report.render());
+}
+
+#[test]
 fn every_placement_mode_is_reachable_by_the_generator() {
     // The M×F sweep must actually exercise all three §2 placements
     // within a modest case budget.
