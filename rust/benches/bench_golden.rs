@@ -5,7 +5,7 @@
 
 use mfnn::bench::Suite;
 use mfnn::hw::{FpgaDevice, MatrixMachine};
-use mfnn::nn::lowering::lower_train_step;
+use mfnn::nn::graph::lower_mlp_train as lower_train_step;
 use mfnn::runtime::{GoldenModel, Runtime};
 use mfnn::util::Rng;
 

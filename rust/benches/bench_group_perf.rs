@@ -11,11 +11,13 @@ use mfnn::hw::actpro::ActPro;
 use mfnn::hw::mvm::Mvm;
 use mfnn::hw::{FastSim, FpgaDevice};
 use mfnn::isa::{MvmOp, Opcode};
+use mfnn::nn::graph::{Conv2dGeom, GraphSpec, INPUT};
 use mfnn::nn::lut::{ActKind, ActLut, AddrMode};
+use mfnn::nn::mlp::LutParams;
 use mfnn::perf::group::{OpClass, PerfModel};
 use mfnn::report::{f, Table};
 use mfnn::util::Rng;
-use mfnn::{Compiler, Session, Target};
+use mfnn::{CompileOptions, Compiler, Session, Target};
 
 /// A Matrix-Machine-sized workload: `lanes` dot products of `len`-lane
 /// strided operands feeding an activation over the results (fusable),
@@ -193,6 +195,53 @@ fn main() {
     suite.bench(&format!("plan_layer_{tag}"), |b| {
         b.iter_with_elements(lane_ops, || session.step().cycles)
     });
+
+    // ---- operator-graph scenarios: one CNN and one transformer block
+    // through Compiler::compile_graph and the same session hot path ----
+    let gfixed = FixedSpec::q(9).saturating();
+    let geom = Conv2dGeom { in_h: 8, in_w: 8, in_c: 1, out_c: 8, kh: 3, kw: 3, stride: 1 };
+    let mut conv = GraphSpec::new("conv", 64, gfixed, LutParams::training(gfixed));
+    let c = conv.conv2d(INPUT, geom);
+    let ca = conv.activation(c, ActKind::Relu);
+    conv.linear(ca, 10);
+
+    let (seq, d) = (8, 8);
+    let mut xfmr = GraphSpec::new("transformer_block", seq * d, gfixed, LutParams::training(gfixed));
+    let att = xfmr.attention(INPUT, seq, d);
+    let r1 = xfmr.add(att, INPUT);
+    let n1 = xfmr.normalization(r1, d);
+    let f1 = xfmr.linear(n1, seq * d);
+    let fa = xfmr.activation(f1, ActKind::Relu);
+    let f2 = xfmr.linear(fa, seq * d);
+    let r2 = xfmr.add(f2, n1);
+    xfmr.normalization(r2, d);
+
+    let batch = if suite.is_quick() { 2 } else { 8 };
+    for spec in [&conv, &xfmr] {
+        let artifact = compiler
+            .compile_graph(spec, &CompileOptions::inference(batch))
+            .expect("graph bench artifact");
+        let lane_ops = artifact.program().total_lane_ops();
+        let mut session =
+            Session::open(artifact.clone(), Target::Board(device)).expect("graph session");
+        let mut r = Rng::new(77);
+        for dcl in spec.param_decls().expect("bench graphs validate") {
+            let w: Vec<i16> = (0..dcl.rows * dcl.cols)
+                .map(|_| gfixed.from_f64((r.gen_f64() - 0.5) * 0.5))
+                .collect();
+            let bv: Vec<i16> =
+                (0..dcl.cols).map(|_| gfixed.from_f64((r.gen_f64() - 0.5) * 0.25)).collect();
+            session.write(&artifact.tensor(&dcl.wname).expect("w handle"), &w).expect("bind w");
+            session.write(&artifact.tensor(&dcl.bname).expect("b handle"), &bv).expect("bind b");
+        }
+        let qx: Vec<i16> = (0..batch * spec.input_dim())
+            .map(|_| gfixed.from_f64(r.gen_f64() - 0.5))
+            .collect();
+        session.write(&artifact.tensor("x").expect("x handle"), &qx).expect("bind x");
+        suite.bench(&format!("graph_{}_b{batch} ({lane_ops} lane-ops)", spec.name), |b| {
+            b.iter_with_elements(lane_ops, || session.step().cycles)
+        });
+    }
 
     let t = suite.finish();
     let _ = t;

@@ -7,7 +7,7 @@
 use mfnn::bench::Suite;
 use mfnn::fixed::FixedSpec;
 use mfnn::hw::{FpgaDevice, MatrixMachine};
-use mfnn::nn::lowering::{lower_forward, lower_train_step};
+use mfnn::nn::graph::{lower_mlp_forward as lower_forward, lower_mlp_train as lower_train_step};
 use mfnn::nn::lut::ActKind;
 use mfnn::nn::mlp::{LutParams, MlpSpec};
 use mfnn::util::Rng;

@@ -9,7 +9,8 @@ use super::ast::{AsmNet, Directive};
 use super::parser::{parse, ParseError};
 use crate::assembler::program::BufKind;
 use crate::fixed::FixedSpec;
-use crate::nn::lowering::{lower_forward, lower_train_step, LowerError, LoweredMlp};
+use crate::nn::graph::{lower_mlp_forward, lower_mlp_train};
+use crate::nn::lowering::{LowerError, LoweredMlp};
 use crate::nn::lut::{ActKind, AddrMode};
 use crate::nn::mlp::{LayerSpec, LutParams, MlpSpec};
 use thiserror::Error;
@@ -214,10 +215,10 @@ pub fn lower_net(net: &AsmNet) -> Result<LoweredNet, AsmError> {
                 ),
             ));
         }
-        lower_train_step(&spec, batch, tlr)
+        lower_mlp_train(&spec, batch, tlr)
             .map_err(|e| AsmError::Lower(net.name.clone(), e))?
     } else {
-        lower_forward(&spec, batch).map_err(|e| AsmError::Lower(net.name.clone(), e))?
+        lower_mlp_forward(&spec, batch).map_err(|e| AsmError::Lower(net.name.clone(), e))?
     };
 
     // Rename generated buffers to assembly names.

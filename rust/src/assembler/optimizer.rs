@@ -198,7 +198,7 @@ mod tests {
     use crate::fixed::FixedSpec;
     use crate::hw::{FpgaDevice, MatrixMachine};
     use crate::isa::Opcode;
-    use crate::nn::lowering::lower_train_step;
+    use crate::nn::graph::lower_mlp_train as lower_train_step;
     use crate::nn::lut::{ActKind, ActLut, AddrMode};
     use crate::nn::mlp::{LutParams, MlpSpec};
     use crate::util::Rng;

@@ -535,11 +535,11 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
 
 fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
     let spec = Spec::new()
-        .opt("cases", "generated cases per family (net, program, fault, recovery, serve-chaos)", Some("64"))
+        .opt("cases", "generated cases per family (net, graph, program, fault, recovery, serve-chaos)", Some("64"))
         .opt("seed", "base seed (case i runs at seed + i·φ; case 0 = seed)", Some("0"))
         .opt("device", "FPGA part every level simulates", Some("XC7S75-2"))
         .opt("corpus", "replay `family seed` lines from this snapshot file", None)
-        .opt("family", "restrict to one family: net|program|fault|recovery|serve-chaos", None)
+        .opt("family", "restrict to one family: net|graph|program|fault|recovery|serve-chaos", None)
         .opt("failures-out", "write failing seeds here (corpus format)", Some("FUZZ_FAILURES.txt"))
         .opt("max-shrink", "shrink-step budget per failure", Some("100"))
         .flag("plant-divergence", "test-only hook: plant a known FastSim divergence");
@@ -553,7 +553,9 @@ fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
     let family = match args.get("family") {
         Some(f) => Some(
             mfnn::testkit::Family::parse(f)
-                .ok_or(format!("unknown family {f:?} (net|program|fault|recovery|serve-chaos)"))?,
+                .ok_or(format!(
+                    "unknown family {f:?} (net|graph|program|fault|recovery|serve-chaos)"
+                ))?,
         ),
         None => None,
     };
@@ -734,7 +736,7 @@ fn cmd_golden(rest: &[String]) -> Result<(), String> {
         g.spec.fixed.frac_bits
     );
     let h =
-        mfnn::nn::lowering::lower_train_step(&g.spec, g.batch, g.lr).map_err(|e| e.to_string())?;
+        mfnn::nn::graph::lower_mlp_train(&g.spec, g.batch, g.lr).map_err(|e| e.to_string())?;
     let mut r = Rng::new(0xC0FFEE);
     let fsp = g.spec.fixed;
     let rand = |n: usize, amp: f64, r: &mut Rng| -> Vec<i16> {

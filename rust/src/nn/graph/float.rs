@@ -1,0 +1,287 @@
+//! Float64 reference evaluation of a [`GraphSpec`] — the graph twin of
+//! [`crate::nn::float_ref::FloatMlp`], used by the `graph` fuzz family
+//! and the golden per-op tests to judge the 16-bit fixed-point
+//! lowering.
+//!
+//! The semantics mirror the lowering exactly, not textbook math: the
+//! softmax has no max-subtraction and normalises via `1/max(Σ, ε)`
+//! (the `Recip` table's guard), and normalisation scales by
+//! `1/√max(var, ε)` (the `Rsqrt` table's guard) — see
+//! [`crate::nn::lut::LUT_EPS`].
+
+use super::ir::{Conv2dGeom, GraphSpec, OpKind};
+use crate::nn::lut::ActKind;
+use crate::util::Rng;
+
+/// Float parameters for one graph net, aligned with
+/// [`GraphSpec::param_decls`] (attention contributes q, k, v, o pairs
+/// in that order).
+#[derive(Debug, Clone)]
+pub struct FloatGraph {
+    /// The graph mirrored from the spec.
+    pub spec: GraphSpec,
+    /// `(weights, bias)` per parameter pair; weights are
+    /// `(rows × cols)` row-major exactly like the lowered buffers.
+    pub params: Vec<(Vec<f64>, Vec<f64>)>,
+}
+
+impl FloatGraph {
+    /// Initialise with scaled-uniform weights (He-like:
+    /// ±sqrt(2/fan_in)), zero biases — the same recipe as
+    /// [`crate::nn::float_ref::FloatMlp::init`].
+    pub fn init(spec: &GraphSpec, rng: &mut Rng) -> FloatGraph {
+        let decls = spec.param_decls().expect("init on an invalid graph");
+        let params = decls
+            .iter()
+            .map(|d| {
+                let scale = (2.0 / d.rows as f64).sqrt();
+                let w =
+                    (0..d.rows * d.cols).map(|_| (rng.gen_f64() * 2.0 - 1.0) * scale).collect();
+                (w, vec![0.0; d.cols])
+            })
+            .collect();
+        FloatGraph { spec: spec.clone(), params }
+    }
+
+    /// Forward one sample, returning every value (`values[0]` is the
+    /// input copy, `values.last()` the output).
+    pub fn forward_trace(&self, x: &[f64]) -> Vec<Vec<f64>> {
+        let dims = self.spec.value_dims().expect("forward on an invalid graph");
+        assert_eq!(x.len(), dims[0], "input length");
+        let mut values: Vec<Vec<f64>> = vec![x.to_vec()];
+        let mut pi = 0usize; // param-pair cursor (decls are in op order)
+        for op in &self.spec.ops {
+            let a = &values[op.ins[0]];
+            let out = match op.kind {
+                OpKind::Linear { outputs } => {
+                    let (w, b) = &self.params[pi];
+                    pi += 1;
+                    dense(a, w, b, outputs)
+                }
+                OpKind::Activation { act } => a.iter().map(|&v| act.f(v)).collect(),
+                OpKind::ElemAdd => {
+                    let bb = &values[op.ins[1]];
+                    a.iter().zip(bb).map(|(&x, &y)| x + y).collect()
+                }
+                OpKind::ElemMul => {
+                    let bb = &values[op.ins[1]];
+                    a.iter().zip(bb).map(|(&x, &y)| x * y).collect()
+                }
+                OpKind::Normalization { cols } => normalize(a, cols),
+                OpKind::Conv2d(g) => {
+                    let (w, b) = &self.params[pi];
+                    pi += 1;
+                    conv2d(a, w, b, g)
+                }
+                OpKind::Attention { seq, d } => {
+                    let p = &self.params[pi..pi + 4];
+                    pi += 4;
+                    attention(a, p, seq, d)
+                }
+            };
+            values.push(out);
+        }
+        values
+    }
+
+    /// Forward one sample → output vector.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        self.forward_trace(x).pop().unwrap()
+    }
+
+    /// Forward a row-major batch → row-major outputs (rows are
+    /// independent, mirroring the lowering's row invariant).
+    pub fn forward_batch(&self, xs: &[f64], rows: usize) -> Vec<f64> {
+        let in_dim = self.spec.input_dim();
+        let mut out = Vec::new();
+        for r in 0..rows {
+            out.extend(self.forward(&xs[r * in_dim..(r + 1) * in_dim]));
+        }
+        out
+    }
+
+    /// Quantise parameters into the spec's fixed-point format, in
+    /// lowered-buffer order (what [`super::GraphTrainer`] flashes).
+    pub fn quantized(&self) -> Vec<(Vec<i16>, Vec<i16>)> {
+        let f = self.spec.fixed;
+        self.params.iter().map(|(w, b)| (f.encode_vec(w), f.encode_vec(b))).collect()
+    }
+}
+
+fn dense(x: &[f64], w: &[f64], b: &[f64], n_out: usize) -> Vec<f64> {
+    let n_in = x.len();
+    (0..n_out)
+        .map(|j| {
+            let mut acc = b[j];
+            for i in 0..n_in {
+                acc += x[i] * w[i * n_out + j];
+            }
+            acc
+        })
+        .collect()
+}
+
+fn normalize(x: &[f64], cols: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(x.len());
+    for group in x.chunks(cols) {
+        let n = cols as f64;
+        let mean = group.iter().sum::<f64>() / n;
+        let var = group.iter().map(|&v| (v - mean) * (v - mean)).sum::<f64>() / n;
+        let inv = ActKind::Rsqrt.f(var); // 1/√max(var, ε)
+        out.extend(group.iter().map(|&v| (v - mean) * inv));
+    }
+    out
+}
+
+fn conv2d(x: &[f64], w: &[f64], b: &[f64], g: Conv2dGeom) -> Vec<f64> {
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let mut out = Vec::with_capacity(oh * ow * g.out_c);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for oc in 0..g.out_c {
+                let mut acc = b[oc];
+                for c in 0..g.in_c {
+                    for ky in 0..g.kh {
+                        for kx in 0..g.kw {
+                            let iv = x[c * (g.in_h * g.in_w)
+                                + (oy * g.stride + ky) * g.in_w
+                                + (ox * g.stride + kx)];
+                            // weight rows are im2col patch-major
+                            let wv = w[((c * g.kh + ky) * g.kw + kx) * g.out_c + oc];
+                            acc += iv * wv;
+                        }
+                    }
+                }
+                out.push(acc);
+            }
+        }
+    }
+    out
+}
+
+fn attention(x: &[f64], p: &[(Vec<f64>, Vec<f64>)], seq: usize, d: usize) -> Vec<f64> {
+    let tok = |buf: &[f64], t: usize| buf[t * d..(t + 1) * d].to_vec();
+    let project = |src: &[f64], (w, b): &(Vec<f64>, Vec<f64>)| -> Vec<f64> {
+        let mut out = Vec::with_capacity(seq * d);
+        for t in 0..seq {
+            out.extend(dense(&tok(src, t), w, b, d));
+        }
+        out
+    };
+    let q = project(x, &p[0]);
+    let k = project(x, &p[1]);
+    let v = project(x, &p[2]);
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut a = vec![0.0; seq * d];
+    for tq in 0..seq {
+        // scores → exp → normalise by 1/max(Σ, ε) (no max-subtraction,
+        // matching the on-device Exp/Recip tables)
+        let mut pr: Vec<f64> = (0..seq)
+            .map(|tk| {
+                let s: f64 = (0..d).map(|i| q[tq * d + i] * k[tk * d + i]).sum();
+                ActKind::Exp.f(s * scale)
+            })
+            .collect();
+        let inv = ActKind::Recip.f(pr.iter().sum());
+        pr.iter_mut().for_each(|w| *w *= inv);
+        for j in 0..d {
+            a[tq * d + j] = (0..seq).map(|tk| pr[tk] * v[tk * d + j]).sum();
+        }
+    }
+    project(&a, &p[3])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FixedSpec;
+    use crate::nn::graph::ir::INPUT;
+    use crate::nn::mlp::LutParams;
+
+    fn g(input: usize) -> GraphSpec {
+        GraphSpec::new("fg", input, FixedSpec::PAPER, LutParams::training(FixedSpec::PAPER))
+    }
+
+    #[test]
+    fn linear_matches_hand_math() {
+        let mut s = g(2);
+        s.linear(INPUT, 1);
+        let mut fg = FloatGraph::init(&s, &mut Rng::new(1));
+        fg.params[0] = (vec![0.5, -0.25], vec![0.125]);
+        assert!((fg.forward(&[1.0, 1.0])[0] - (0.5 - 0.25 + 0.125)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn residual_add_and_mul() {
+        let mut s = g(3);
+        let v1 = s.activation(INPUT, ActKind::Identity);
+        let v2 = s.add(v1, INPUT); // x + x
+        s.mul(v2, INPUT); // 2x · x
+        let fg = FloatGraph::init(&s, &mut Rng::new(2));
+        let out = fg.forward(&[1.0, 2.0, -3.0]);
+        assert_eq!(out, vec![2.0, 8.0, 18.0]);
+    }
+
+    #[test]
+    fn normalization_centres_and_scales() {
+        let mut s = g(4);
+        s.normalization(INPUT, 4);
+        let fg = FloatGraph::init(&s, &mut Rng::new(3));
+        let out = fg.forward(&[1.0, 2.0, 3.0, 4.0]);
+        let mean: f64 = out.iter().sum::<f64>() / 4.0;
+        let var: f64 = out.iter().map(|&v| (v - mean) * (v - mean)).sum::<f64>() / 4.0;
+        assert!(mean.abs() < 1e-9, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}"); // ε skews slightly
+    }
+
+    #[test]
+    fn conv_matches_im2col_dense() {
+        // 1×4×4 input, 1 output channel, 3×3 kernel → 2×2 output; the
+        // direct convolution must equal an explicit im2col dot.
+        let geom = Conv2dGeom { in_h: 4, in_w: 4, in_c: 1, out_c: 1, kh: 3, kw: 3, stride: 1 };
+        let mut s = g(16);
+        s.conv2d(INPUT, geom);
+        let mut fg = FloatGraph::init(&s, &mut Rng::new(4));
+        let w: Vec<f64> = (0..9).map(|i| (i as f64 - 4.0) / 8.0).collect();
+        fg.params[0] = (w.clone(), vec![0.25]);
+        let x: Vec<f64> = (0..16).map(|i| i as f64 / 16.0).collect();
+        let out = fg.forward(&x);
+        for (pos, &o) in out.iter().enumerate() {
+            let (oy, ox) = (pos / 2, pos % 2);
+            let mut acc = 0.25;
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    acc += x[(oy + ky) * 4 + (ox + kx)] * w[ky * 3 + kx];
+                }
+            }
+            assert!((o - acc).abs() < 1e-12, "pos {pos}: {o} vs {acc}");
+        }
+    }
+
+    #[test]
+    fn attention_rows_are_a_distribution() {
+        // With Wo = I, bo = 0 and V = x the output of each token is a
+        // convex combination of value rows — bounded by their extremes.
+        let (seq, d) = (3, 2);
+        let mut s = g(seq * d);
+        s.attention(INPUT, seq, d);
+        let mut fg = FloatGraph::init(&s, &mut Rng::new(5));
+        let eye: Vec<f64> =
+            (0..d * d).map(|i| if i / d == i % d { 1.0 } else { 0.0 }).collect();
+        fg.params[2] = (eye.clone(), vec![0.0; d]); // v
+        fg.params[3] = (eye, vec![0.0; d]); // o
+        let x = vec![0.5, -0.25, 0.75, 0.0, -0.5, 0.25];
+        let out = fg.forward(&x);
+        for j in 0..d {
+            let col: Vec<f64> = (0..seq).map(|t| x[t * d + j]).collect();
+            let (lo, hi) = (
+                col.iter().cloned().fold(f64::INFINITY, f64::min),
+                col.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            );
+            for t in 0..seq {
+                let o = out[t * d + j];
+                assert!(o >= lo - 0.05 && o <= hi + 0.05, "token {t} col {j}: {o} ∉ [{lo},{hi}]");
+            }
+        }
+    }
+}

@@ -1,0 +1,598 @@
+//! The typed operator-graph data model.
+//!
+//! A [`GraphSpec`] is a straight-line dataflow graph over *per-sample*
+//! tensor values: value `0` is the graph input, and the op at index `i`
+//! produces value `i + 1`. Every value is a flat per-sample vector
+//! (batches add a leading row dimension at lowering time, exactly like
+//! `MlpSpec`); ops that carry 2-D structure ([`OpKind::Conv2d`]) or
+//! sequence structure ([`OpKind::Attention`]) record their geometry in
+//! the op itself and interpret the flat vector accordingly.
+//!
+//! **Row independence invariant:** every op maps sample rows to sample
+//! rows independently — attention attends *within* one sample's
+//! `seq × d` tokens, never across the batch. This is what lets graph
+//! nets ride the forward batch ladder and serve through `serve/` with
+//! micro-batching bit-exact against batch-1 execution.
+
+use crate::fixed::FixedSpec;
+use crate::hw::COLUMN_LEN;
+use crate::nn::lut::ActKind;
+use crate::nn::mlp::{LutParams, MAX_DIM};
+use thiserror::Error;
+
+/// Index of a value in a [`GraphSpec`]: `0` is the graph input, the op
+/// at index `i` produces value `i + 1`.
+pub type ValueId = usize;
+
+/// Conv2d geometry: valid (no-padding) convolution over a per-sample
+/// `(channels, height, width)` channel-major input volume, producing a
+/// `(out_h, out_w, out_c)` *position-major* output vector — positions
+/// outer, output channels inner, so the conv output doubles as the
+/// `(batch·out_h·out_w) × out_c` matrix the im2col dot waves write.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dGeom {
+    /// Input height.
+    pub in_h: usize,
+    /// Input width.
+    pub in_w: usize,
+    /// Input channels.
+    pub in_c: usize,
+    /// Output channels.
+    pub out_c: usize,
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Stride (both axes).
+    pub stride: usize,
+}
+
+impl Conv2dGeom {
+    /// Output height (valid padding, floor semantics).
+    pub fn out_h(&self) -> usize {
+        if self.in_h < self.kh || self.stride == 0 {
+            return 0;
+        }
+        (self.in_h - self.kh) / self.stride + 1
+    }
+
+    /// Output width (valid padding, floor semantics).
+    pub fn out_w(&self) -> usize {
+        if self.in_w < self.kw || self.stride == 0 {
+            return 0;
+        }
+        (self.in_w - self.kw) / self.stride + 1
+    }
+
+    /// im2col patch length (`in_c · kh · kw`) — the fan-in of the dense
+    /// dot the convolution lowers to.
+    pub fn patch(&self) -> usize {
+        self.in_c * self.kh * self.kw
+    }
+
+    /// Per-sample input vector length (`in_c · in_h · in_w`).
+    pub fn in_dim(&self) -> usize {
+        self.in_c * self.in_h * self.in_w
+    }
+
+    /// Per-sample output vector length (`out_h · out_w · out_c`).
+    pub fn out_dim(&self) -> usize {
+        self.out_h() * self.out_w() * self.out_c
+    }
+}
+
+/// One operator kind. Arity (number of input values) is 1 for all
+/// kinds except the elementwise combinators, which take 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Dense `x·W + b`: per-sample `n_in → outputs`. Weights are
+    /// `(n_in, outputs)` row-major, exactly like an `MlpSpec` layer.
+    Linear {
+        /// Fan-out.
+        outputs: usize,
+    },
+    /// LUT activation applied elementwise over the input value.
+    Activation {
+        /// Table function.
+        act: ActKind,
+    },
+    /// Elementwise sum of two same-shaped values (residual connection).
+    ElemAdd,
+    /// Elementwise product of two same-shaped values (gating).
+    ElemMul,
+    /// Layernorm-style row normalisation: the per-sample vector is
+    /// split into `dim / cols` groups of `cols` lanes; each group is
+    /// centred and scaled by `1/√(var + ε)` via the `Rsqrt` table
+    /// (no learned affine). `cols == dim` is classic layernorm.
+    Normalization {
+        /// Group width (must divide the input dimension).
+        cols: usize,
+    },
+    /// 2-D convolution via im2col onto the chunked-dot machinery.
+    Conv2d(Conv2dGeom),
+    /// Single-head self-attention over a per-sample `seq × d` token
+    /// matrix: `softmax(QKᵀ/√d)·V·Wo + bo` with `Q/K/V = x·W* + b*`.
+    /// Softmax is `Exp` + row-sum + `Recip` LUTs (the ISA has no
+    /// divide, and no max-subtraction — documented in DESIGN.md).
+    Attention {
+        /// Tokens per sample.
+        seq: usize,
+        /// Model width per token (`dim == seq · d`).
+        d: usize,
+    },
+}
+
+/// One operator instance: a kind plus its input value ids.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Op {
+    /// What it computes.
+    pub kind: OpKind,
+    /// Input values (arity checked by [`GraphSpec::check`]).
+    pub ins: Vec<ValueId>,
+}
+
+/// Graph validation errors.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum GraphError {
+    /// No operators.
+    #[error("graph has no ops")]
+    Empty,
+    /// Graph input dimension out of range.
+    #[error("graph input dimension {0} out of range 1..={MAX_DIM}")]
+    BadInput(usize),
+    /// Wrong number of op inputs.
+    #[error("op {op}: expects {want} inputs, got {got}")]
+    Arity {
+        /// Op index.
+        op: usize,
+        /// Required arity.
+        want: usize,
+        /// Provided arity.
+        got: usize,
+    },
+    /// An op references a value that is not yet defined (ops may only
+    /// consume the graph input or earlier ops' outputs).
+    #[error("op {op}: input value {value} is not defined yet")]
+    UnknownValue {
+        /// Op index.
+        op: usize,
+        /// Offending value id.
+        value: ValueId,
+    },
+    /// Elementwise inputs disagree on shape.
+    #[error("op {op}: elementwise inputs disagree: {a} vs {b}")]
+    DimMismatch {
+        /// Op index.
+        op: usize,
+        /// First input dimension.
+        a: usize,
+        /// Second input dimension.
+        b: usize,
+    },
+    /// A dimension is zero or exceeds the assembler's chunking limit.
+    #[error("op {op}: dimension {dim} out of range 1..={MAX_DIM}")]
+    BadDim {
+        /// Op index.
+        op: usize,
+        /// Offending dimension.
+        dim: usize,
+    },
+    /// A dimension this op cannot chunk exceeds one 512-lane column.
+    #[error("op {op}: {what} {dim} exceeds one column ({COLUMN_LEN})")]
+    TooWide {
+        /// Op index.
+        op: usize,
+        /// Which dimension.
+        what: &'static str,
+        /// Offending dimension.
+        dim: usize,
+    },
+    /// Normalization group width does not divide the input dimension.
+    #[error("op {op}: group width {cols} does not divide dimension {dim}")]
+    NotDivisible {
+        /// Op index.
+        op: usize,
+        /// Group width.
+        cols: usize,
+        /// Input dimension.
+        dim: usize,
+    },
+    /// An op's declared geometry disagrees with its input dimension.
+    #[error("op {op}: geometry expects input dimension {want}, got {got}")]
+    GeometryMismatch {
+        /// Op index.
+        op: usize,
+        /// Dimension the geometry implies.
+        want: usize,
+        /// Actual input dimension.
+        got: usize,
+    },
+}
+
+/// A full operator-graph network specification.
+///
+/// The graph output is the **last op's value**. Build with
+/// [`GraphSpec::new`] plus the builder methods, then [`check`]
+/// (lowering checks for you).
+///
+/// [`check`]: GraphSpec::check
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphSpec {
+    /// Network name.
+    pub name: String,
+    /// Per-sample input dimension (value 0).
+    pub input: usize,
+    /// Operators in definition order; op `i` produces value `i + 1`.
+    pub ops: Vec<Op>,
+    /// Datapath fixed-point format.
+    pub fixed: FixedSpec,
+    /// Activation-table parameters.
+    pub lut: LutParams,
+}
+
+/// The graph input's [`ValueId`].
+pub const INPUT: ValueId = 0;
+
+/// One weight/bias parameter pair as it appears in the lowered
+/// program: `w` is `(rows × cols)` row-major, the bias is `cols` lanes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamDecl {
+    /// Index of the op owning this pair.
+    pub op: usize,
+    /// Weight buffer name in the lowered program.
+    pub wname: String,
+    /// Bias buffer name in the lowered program.
+    pub bname: String,
+    /// Weight rows (fan-in).
+    pub rows: usize,
+    /// Weight columns = bias length (fan-out).
+    pub cols: usize,
+}
+
+impl GraphSpec {
+    /// Start an empty graph with the given per-sample input dimension.
+    pub fn new(name: &str, input: usize, fixed: FixedSpec, lut: LutParams) -> GraphSpec {
+        GraphSpec { name: name.to_string(), input, ops: Vec::new(), fixed, lut }
+    }
+
+    fn push(&mut self, kind: OpKind, ins: Vec<ValueId>) -> ValueId {
+        self.ops.push(Op { kind, ins });
+        self.ops.len()
+    }
+
+    /// Append a dense layer on `input`, returning the new value.
+    pub fn linear(&mut self, input: ValueId, outputs: usize) -> ValueId {
+        self.push(OpKind::Linear { outputs }, vec![input])
+    }
+
+    /// Append a LUT activation on `input`.
+    pub fn activation(&mut self, input: ValueId, act: ActKind) -> ValueId {
+        self.push(OpKind::Activation { act }, vec![input])
+    }
+
+    /// Append an elementwise sum of `a` and `b` (residual connection).
+    pub fn add(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.push(OpKind::ElemAdd, vec![a, b])
+    }
+
+    /// Append an elementwise product of `a` and `b`.
+    pub fn mul(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.push(OpKind::ElemMul, vec![a, b])
+    }
+
+    /// Append a row normalisation with group width `cols`.
+    pub fn normalization(&mut self, input: ValueId, cols: usize) -> ValueId {
+        self.push(OpKind::Normalization { cols }, vec![input])
+    }
+
+    /// Append a 2-D convolution with the given geometry.
+    pub fn conv2d(&mut self, input: ValueId, geom: Conv2dGeom) -> ValueId {
+        self.push(OpKind::Conv2d(geom), vec![input])
+    }
+
+    /// Append a single-head self-attention block over `seq` tokens of
+    /// width `d`.
+    pub fn attention(&mut self, input: ValueId, seq: usize, d: usize) -> ValueId {
+        self.push(OpKind::Attention { seq, d }, vec![input])
+    }
+
+    /// Per-value dimensions (`dims[0]` is the input), validating the
+    /// whole graph along the way. [`check`](GraphSpec::check) is this
+    /// with the dimensions thrown away.
+    pub fn value_dims(&self) -> Result<Vec<usize>, GraphError> {
+        if self.ops.is_empty() {
+            return Err(GraphError::Empty);
+        }
+        if self.input == 0 || self.input > MAX_DIM {
+            return Err(GraphError::BadInput(self.input));
+        }
+        let mut dims = Vec::with_capacity(self.ops.len() + 1);
+        dims.push(self.input);
+        for (i, op) in self.ops.iter().enumerate() {
+            let want = match op.kind {
+                OpKind::ElemAdd | OpKind::ElemMul => 2,
+                _ => 1,
+            };
+            if op.ins.len() != want {
+                return Err(GraphError::Arity { op: i, want, got: op.ins.len() });
+            }
+            for &v in &op.ins {
+                if v >= dims.len() {
+                    return Err(GraphError::UnknownValue { op: i, value: v });
+                }
+            }
+            let a = dims[op.ins[0]];
+            let out = match op.kind {
+                OpKind::Linear { outputs } => {
+                    if outputs == 0 || outputs > MAX_DIM {
+                        return Err(GraphError::BadDim { op: i, dim: outputs });
+                    }
+                    outputs
+                }
+                OpKind::Activation { .. } => a,
+                OpKind::ElemAdd | OpKind::ElemMul => {
+                    let b = dims[op.ins[1]];
+                    if a != b {
+                        return Err(GraphError::DimMismatch { op: i, a, b });
+                    }
+                    a
+                }
+                OpKind::Normalization { cols } => {
+                    if cols == 0 {
+                        return Err(GraphError::BadDim { op: i, dim: cols });
+                    }
+                    if cols > COLUMN_LEN {
+                        // group sums/variances are single VECTOR_SUMMATION
+                        // lanes and cannot chunk
+                        return Err(GraphError::TooWide { op: i, what: "group width", dim: cols });
+                    }
+                    if a % cols != 0 {
+                        return Err(GraphError::NotDivisible { op: i, cols, dim: a });
+                    }
+                    a
+                }
+                OpKind::Conv2d(g) => {
+                    for d in [g.in_h, g.in_w, g.in_c, g.out_c, g.kh, g.kw, g.stride] {
+                        if d == 0 {
+                            return Err(GraphError::BadDim { op: i, dim: d });
+                        }
+                    }
+                    if g.kw > COLUMN_LEN {
+                        // im2col copies one kw-pixel strip per lane and
+                        // cannot chunk
+                        return Err(GraphError::TooWide { op: i, what: "kernel width", dim: g.kw });
+                    }
+                    if g.kh > g.in_h || g.kw > g.in_w {
+                        return Err(GraphError::GeometryMismatch {
+                            op: i,
+                            want: g.kh.max(g.kw),
+                            got: g.in_h.min(g.in_w),
+                        });
+                    }
+                    if g.in_dim() != a {
+                        return Err(GraphError::GeometryMismatch { op: i, want: g.in_dim(), got: a });
+                    }
+                    let out = g.out_dim();
+                    if out == 0 || out > MAX_DIM {
+                        return Err(GraphError::BadDim { op: i, dim: out });
+                    }
+                    if g.patch() > MAX_DIM {
+                        return Err(GraphError::BadDim { op: i, dim: g.patch() });
+                    }
+                    out
+                }
+                OpKind::Attention { seq, d } => {
+                    if seq == 0 || d == 0 {
+                        return Err(GraphError::BadDim { op: i, dim: seq.min(d) });
+                    }
+                    // per-token dots (vec_len d) and per-row softmax
+                    // lanes (vec_len seq) cannot chunk
+                    if d > COLUMN_LEN {
+                        return Err(GraphError::TooWide { op: i, what: "head width", dim: d });
+                    }
+                    if seq > COLUMN_LEN {
+                        return Err(GraphError::TooWide { op: i, what: "sequence", dim: seq });
+                    }
+                    if seq * d != a {
+                        return Err(GraphError::GeometryMismatch { op: i, want: seq * d, got: a });
+                    }
+                    a
+                }
+            };
+            if out == 0 || out > MAX_DIM {
+                return Err(GraphError::BadDim { op: i, dim: out });
+            }
+            dims.push(out);
+        }
+        Ok(dims)
+    }
+
+    /// Validate the graph (typing, arity, dimension ranges).
+    pub fn check(&self) -> Result<(), GraphError> {
+        self.value_dims().map(|_| ())
+    }
+
+    /// Per-sample input dimension.
+    pub fn input_dim(&self) -> usize {
+        self.input
+    }
+
+    /// Per-sample output dimension (last op's value). Call only on a
+    /// graph that passes [`check`](GraphSpec::check).
+    pub fn output_dim(&self) -> usize {
+        *self.value_dims().expect("output_dim on an invalid graph").last().unwrap()
+    }
+
+    /// Weight/bias parameter pairs in lowered-program order (op order;
+    /// attention contributes four pairs q, k, v, o). Buffer names here
+    /// are exactly the names the lowered programs declare, so trainers
+    /// and the serving runtime can address parameters generically.
+    pub fn param_decls(&self) -> Result<Vec<ParamDecl>, GraphError> {
+        let dims = self.value_dims()?;
+        let mut out = Vec::new();
+        let mut n_linear = 0usize;
+        let mut n_conv = 0usize;
+        let mut n_attn = 0usize;
+        for (i, op) in self.ops.iter().enumerate() {
+            match op.kind {
+                OpKind::Linear { outputs } => {
+                    out.push(ParamDecl {
+                        op: i,
+                        wname: format!("w{n_linear}"),
+                        bname: format!("b{n_linear}"),
+                        rows: dims[op.ins[0]],
+                        cols: outputs,
+                    });
+                    n_linear += 1;
+                }
+                OpKind::Conv2d(g) => {
+                    out.push(ParamDecl {
+                        op: i,
+                        wname: format!("wc{n_conv}"),
+                        bname: format!("bc{n_conv}"),
+                        rows: g.patch(),
+                        cols: g.out_c,
+                    });
+                    n_conv += 1;
+                }
+                OpKind::Attention { d, .. } => {
+                    for proj in ["q", "k", "v", "o"] {
+                        out.push(ParamDecl {
+                            op: i,
+                            wname: format!("w{proj}{n_attn}"),
+                            bname: format!("b{proj}{n_attn}"),
+                            rows: d,
+                            cols: d,
+                        });
+                    }
+                    n_attn += 1;
+                }
+                _ => {}
+            }
+        }
+        Ok(out)
+    }
+
+    /// Total trainable parameters.
+    pub fn param_count(&self) -> usize {
+        self.param_decls()
+            .map(|ds| ds.iter().map(|d| d.rows * d.cols + d.cols).sum())
+            .unwrap_or(0)
+    }
+
+    /// Parameter bytes at 16 bits/lane (what the cluster must ship to
+    /// a board when placing this net).
+    pub fn param_bytes(&self) -> u64 {
+        self.param_count() as u64 * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g(input: usize) -> GraphSpec {
+        GraphSpec::new("g", input, FixedSpec::PAPER, LutParams::training(FixedSpec::PAPER))
+    }
+
+    #[test]
+    fn mlp_chain_dims_and_params() {
+        let mut s = g(4);
+        let v1 = s.linear(INPUT, 16);
+        let v2 = s.activation(v1, ActKind::Relu);
+        let v3 = s.linear(v2, 3);
+        let v4 = s.activation(v3, ActKind::Identity);
+        assert_eq!(v4, 4);
+        assert_eq!(s.value_dims().unwrap(), vec![4, 16, 16, 3, 3]);
+        assert_eq!(s.output_dim(), 3);
+        let ps = s.param_decls().unwrap();
+        assert_eq!(ps.len(), 2);
+        assert_eq!((ps[0].wname.as_str(), ps[0].rows, ps[0].cols), ("w0", 4, 16));
+        assert_eq!((ps[1].wname.as_str(), ps[1].rows, ps[1].cols), ("w1", 16, 3));
+        assert_eq!(s.param_count(), 4 * 16 + 16 + 16 * 3 + 3);
+        assert_eq!(s.param_bytes(), 2 * s.param_count() as u64);
+    }
+
+    #[test]
+    fn conv_geometry() {
+        let geom = Conv2dGeom { in_h: 6, in_w: 6, in_c: 2, out_c: 3, kh: 3, kw: 3, stride: 1 };
+        assert_eq!((geom.out_h(), geom.out_w()), (4, 4));
+        assert_eq!(geom.patch(), 18);
+        assert_eq!(geom.in_dim(), 72);
+        assert_eq!(geom.out_dim(), 48);
+        // stride 2 floors
+        let s2 = Conv2dGeom { stride: 2, ..geom };
+        assert_eq!((s2.out_h(), s2.out_w()), (2, 2));
+        assert_eq!(s2.out_dim(), 12);
+        let mut s = g(72);
+        s.conv2d(INPUT, geom);
+        assert_eq!(s.value_dims().unwrap(), vec![72, 48]);
+        let ps = s.param_decls().unwrap();
+        assert_eq!((ps[0].wname.as_str(), ps[0].rows, ps[0].cols), ("wc0", 18, 3));
+    }
+
+    #[test]
+    fn attention_and_residual_dims() {
+        let mut s = g(12); // 4 tokens × width 3
+        let a = s.attention(INPUT, 4, 3);
+        let r = s.add(a, INPUT);
+        let n = s.normalization(r, 3);
+        assert_eq!(s.value_dims().unwrap(), vec![12, 12, 12, 12]);
+        assert_eq!(n, 3);
+        let ps = s.param_decls().unwrap();
+        assert_eq!(ps.len(), 4);
+        assert_eq!(
+            ps.iter().map(|p| p.wname.as_str()).collect::<Vec<_>>(),
+            vec!["wq0", "wk0", "wv0", "wo0"]
+        );
+        assert!(ps.iter().all(|p| (p.rows, p.cols) == (3, 3)));
+    }
+
+    #[test]
+    fn rejects_malformed_graphs() {
+        assert_eq!(g(4).check(), Err(GraphError::Empty));
+        let mut s = g(0);
+        s.linear(INPUT, 2);
+        assert_eq!(s.check(), Err(GraphError::BadInput(0)));
+
+        // forward reference
+        let mut s = g(4);
+        s.ops.push(Op { kind: OpKind::ElemAdd, ins: vec![INPUT, 3] });
+        assert_eq!(s.check(), Err(GraphError::UnknownValue { op: 0, value: 3 }));
+
+        // arity
+        let mut s = g(4);
+        s.ops.push(Op { kind: OpKind::ElemAdd, ins: vec![INPUT] });
+        assert_eq!(s.check(), Err(GraphError::Arity { op: 0, want: 2, got: 1 }));
+
+        // elementwise shape mismatch
+        let mut s = g(4);
+        let v1 = s.linear(INPUT, 5);
+        s.add(v1, INPUT);
+        assert_eq!(s.check(), Err(GraphError::DimMismatch { op: 1, a: 5, b: 4 }));
+
+        // normalization divisibility and width
+        let mut s = g(10);
+        s.normalization(INPUT, 3);
+        assert_eq!(s.check(), Err(GraphError::NotDivisible { op: 0, cols: 3, dim: 10 }));
+        let mut s = g(MAX_DIM);
+        s.normalization(INPUT, COLUMN_LEN + 1);
+        assert_eq!(
+            s.check(),
+            Err(GraphError::TooWide { op: 0, what: "group width", dim: COLUMN_LEN + 1 })
+        );
+
+        // conv geometry vs input dim
+        let mut s = g(50);
+        s.conv2d(
+            INPUT,
+            Conv2dGeom { in_h: 6, in_w: 6, in_c: 2, out_c: 3, kh: 3, kw: 3, stride: 1 },
+        );
+        assert_eq!(s.check(), Err(GraphError::GeometryMismatch { op: 0, want: 72, got: 50 }));
+
+        // attention geometry
+        let mut s = g(13);
+        s.attention(INPUT, 4, 3);
+        assert_eq!(s.check(), Err(GraphError::GeometryMismatch { op: 0, want: 12, got: 13 }));
+    }
+}

@@ -1,0 +1,1709 @@
+//! Per-op lowering of a [`GraphSpec`] onto the MVM/ActPro vector ISA.
+//!
+//! The pass works over **units**: a `Linear` (or `Conv2d`) immediately
+//! followed by its only consumer, an `Activation`, fuses into one dense
+//! unit that is emitted exactly like a legacy `MlpSpec` layer — chunked
+//! dots, segment-wise bias add, segment-wise activation. That fusion is
+//! what makes [`lower_mlp_forward`]/[`lower_mlp_train`] emit programs
+//! **bit-identical** to `nn::lowering`'s frozen legacy emission
+//! (asserted in the tests here and in `rust/tests/graph.rs`): same
+//! buffer names in the same declaration order, same LUT registration
+//! order, same wave-for-wave schedule.
+//!
+//! Backward recipes (see DESIGN.md §Operator IR for the contract):
+//!
+//! * dense / conv-as-dense: the legacy backprop schedule (deriv LUT,
+//!   gradient dots over batch columns, delta dots over weight rows,
+//!   in-place SGD update);
+//! * `ElemAdd` routes δ to both inputs, `ElemMul` cross-multiplies;
+//! * `Normalization` is straight-through scaled by the saved `1/σ`
+//!   (the Jacobian's mean/variance terms are dropped — documented
+//!   approximation);
+//! * `Attention` freezes the softmax scores: `Wv/Wo` (and biases) get
+//!   exact gradients through `A = P·V`, `Wq/Wk` are not updated —
+//!   documented approximation, keeps the whole step on-device;
+//! * `Conv2d` trains only when it reads the graph input (there is no
+//!   col2im delta path), surfaced as a typed error otherwise.
+//!
+//! Values consumed by more than one op get their deltas accumulated:
+//! the first contribution overwrites the delta buffer (device state
+//! persists across steps, so every buffer must be fully written before
+//! being read), later contributions go through a scratch buffer and a
+//! `VECTOR_ADDITION`.
+
+use super::ir::{Conv2dGeom, GraphSpec, OpKind, ValueId, INPUT};
+use crate::assembler::program::{BufId, BufKind, LaneOp, Program, Step, View};
+use crate::fixed::FixedSpec;
+use crate::hw::COLUMN_LEN;
+use crate::isa::Opcode;
+use crate::nn::lowering::{col, lane, row, segments, Ctx, LowerError, LoweredMlp};
+use crate::nn::lut::ActKind;
+use crate::nn::mlp::{LutParams, MlpSpec};
+
+// ---------------------------------------------------------------------
+// Units: ops after Linear/Conv2d + Activation fusion.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+enum UnitKind {
+    /// `Linear` (+ optionally its fused activation and the activation's
+    /// per-kind naming counter, so `o{j}` matches the legacy layout).
+    Dense { n_out: usize, act: Option<(ActKind, usize)> },
+    /// `Conv2d` (+ optionally its fused activation).
+    Conv { geom: Conv2dGeom, act: Option<ActKind> },
+    /// A standalone activation.
+    Act { act: ActKind },
+    Add,
+    Mul,
+    Norm { cols: usize },
+    Attn { seq: usize, d: usize },
+}
+
+#[derive(Debug, Clone)]
+struct Unit {
+    kind: UnitKind,
+    /// Index of the unit's first op (names errors, keys param decls).
+    op: usize,
+    /// Input values of the first op.
+    ins: Vec<ValueId>,
+    /// Output value (the fused activation's value when fused).
+    out: ValueId,
+    /// Per-kind naming counter (`z{tag}`, `cz{tag}`, `add{tag}`, …).
+    tag: usize,
+}
+
+fn build_units(g: &GraphSpec) -> Vec<Unit> {
+    let mut consumers = vec![0usize; g.ops.len() + 1];
+    for op in &g.ops {
+        for &v in &op.ins {
+            consumers[v] += 1;
+        }
+    }
+    let mut units = Vec::new();
+    let (mut nl, mut na, mut nc, mut nat) = (0usize, 0usize, 0usize, 0usize);
+    let (mut nadd, mut nmul, mut nnorm) = (0usize, 0usize, 0usize);
+    let mut i = 0;
+    while i < g.ops.len() {
+        let op = &g.ops[i];
+        // A Linear/Conv2d whose value is consumed only by the very next
+        // op, an Activation, fuses into one dense unit — the legacy
+        // layer shape.
+        let fused = match g.ops.get(i + 1) {
+            Some(next) if matches!(op.kind, OpKind::Linear { .. } | OpKind::Conv2d(_)) => {
+                match next.kind {
+                    OpKind::Activation { act }
+                        if next.ins.len() == 1 && next.ins[0] == i + 1 && consumers[i + 1] == 1 =>
+                    {
+                        Some(act)
+                    }
+                    _ => None,
+                }
+            }
+            _ => None,
+        };
+        match op.kind {
+            OpKind::Linear { outputs } => {
+                let act = fused.map(|a| {
+                    let pair = (a, na);
+                    na += 1;
+                    pair
+                });
+                let span = if act.is_some() { 2 } else { 1 };
+                units.push(Unit {
+                    kind: UnitKind::Dense { n_out: outputs, act },
+                    op: i,
+                    ins: op.ins.clone(),
+                    out: i + span,
+                    tag: nl,
+                });
+                nl += 1;
+                i += span;
+            }
+            OpKind::Conv2d(geom) => {
+                if fused.is_some() {
+                    na += 1;
+                }
+                let span = if fused.is_some() { 2 } else { 1 };
+                units.push(Unit {
+                    kind: UnitKind::Conv { geom, act: fused },
+                    op: i,
+                    ins: op.ins.clone(),
+                    out: i + span,
+                    tag: nc,
+                });
+                nc += 1;
+                i += span;
+            }
+            OpKind::Activation { act } => {
+                units.push(Unit {
+                    kind: UnitKind::Act { act },
+                    op: i,
+                    ins: op.ins.clone(),
+                    out: i + 1,
+                    tag: na,
+                });
+                na += 1;
+                i += 1;
+            }
+            OpKind::ElemAdd => {
+                units.push(Unit {
+                    kind: UnitKind::Add,
+                    op: i,
+                    ins: op.ins.clone(),
+                    out: i + 1,
+                    tag: nadd,
+                });
+                nadd += 1;
+                i += 1;
+            }
+            OpKind::ElemMul => {
+                units.push(Unit {
+                    kind: UnitKind::Mul,
+                    op: i,
+                    ins: op.ins.clone(),
+                    out: i + 1,
+                    tag: nmul,
+                });
+                nmul += 1;
+                i += 1;
+            }
+            OpKind::Normalization { cols } => {
+                units.push(Unit {
+                    kind: UnitKind::Norm { cols },
+                    op: i,
+                    ins: op.ins.clone(),
+                    out: i + 1,
+                    tag: nnorm,
+                });
+                nnorm += 1;
+                i += 1;
+            }
+            OpKind::Attention { seq, d } => {
+                units.push(Unit {
+                    kind: UnitKind::Attn { seq, d },
+                    op: i,
+                    ins: op.ins.clone(),
+                    out: i + 1,
+                    tag: nat,
+                });
+                nat += 1;
+                i += 1;
+            }
+        }
+    }
+    units
+}
+
+// ---------------------------------------------------------------------
+// Declaration.
+// ---------------------------------------------------------------------
+
+struct Net {
+    dims: Vec<usize>,
+    units: Vec<Unit>,
+    decls: Vec<super::ir::ParamDecl>,
+    /// Param pairs aligned with `decls`.
+    params: Vec<(BufId, BufId)>,
+    /// Buffer per value id (value 0 is `x`).
+    val_buf: Vec<BufId>,
+    x: BufId,
+    y: Option<BufId>,
+    out: BufId,
+}
+
+fn params_for(net: &Net, op: usize) -> Vec<(BufId, BufId)> {
+    net.decls
+        .iter()
+        .zip(&net.params)
+        .filter(|(d, _)| d.op == op)
+        .map(|(_, &p)| p)
+        .collect()
+}
+
+/// Declare `x`, parameters, per-value buffers, and (for training) `y` —
+/// in exactly the legacy order so MLP chains stay bit-identical.
+fn declare_graph(ctx: &mut Ctx, g: &GraphSpec, batch: usize, train: bool) -> Result<Net, LowerError> {
+    let dims = g.value_dims()?;
+    let units = build_units(g);
+    let decls = g.param_decls()?;
+    let last = g.ops.len();
+    let p = &mut ctx.p;
+    let x = p.buffer("x", batch, dims[0], BufKind::Input);
+    let mut params = Vec::with_capacity(decls.len());
+    for d in &decls {
+        let w = p.buffer(&d.wname, d.rows, d.cols, BufKind::Weight);
+        let b = p.buffer(&d.bname, d.cols, 1, BufKind::Bias);
+        params.push((w, b));
+    }
+    let out_kind = |v: ValueId| if v == last { BufKind::Output } else { BufKind::Temp };
+    let mut val_buf = vec![x];
+    for u in &units {
+        match u.kind {
+            UnitKind::Dense { n_out, act } => {
+                let zk = if act.is_some() { BufKind::Temp } else { out_kind(u.out) };
+                val_buf.push(p.buffer(&format!("z{}", u.tag), batch, n_out, zk));
+                if let Some((_, atag)) = act {
+                    val_buf.push(p.buffer(&format!("o{atag}"), batch, n_out, out_kind(u.out)));
+                }
+            }
+            UnitKind::Conv { geom, act } => {
+                let od = geom.out_dim();
+                let zk = if act.is_some() { BufKind::Temp } else { out_kind(u.out) };
+                val_buf.push(p.buffer(&format!("cz{}", u.tag), batch, od, zk));
+                if act.is_some() {
+                    val_buf.push(p.buffer(&format!("co{}", u.tag), batch, od, out_kind(u.out)));
+                }
+            }
+            UnitKind::Act { .. } => {
+                val_buf.push(p.buffer(&format!("o{}", u.tag), batch, dims[u.out], out_kind(u.out)));
+            }
+            UnitKind::Add => {
+                val_buf.push(p.buffer(&format!("add{}", u.tag), batch, dims[u.out], out_kind(u.out)));
+            }
+            UnitKind::Mul => {
+                val_buf.push(p.buffer(&format!("mul{}", u.tag), batch, dims[u.out], out_kind(u.out)));
+            }
+            UnitKind::Norm { .. } => {
+                val_buf.push(p.buffer(&format!("nrm{}", u.tag), batch, dims[u.out], out_kind(u.out)));
+            }
+            UnitKind::Attn { .. } => {
+                val_buf.push(p.buffer(&format!("att{}", u.tag), batch, dims[u.out], out_kind(u.out)));
+            }
+        }
+    }
+    let out = *val_buf.last().unwrap();
+    let y = if train { Some(p.buffer("y", batch, dims[last], BufKind::Target)) } else { None };
+    Ok(Net { dims, units, decls, params, val_buf, x, y, out })
+}
+
+// ---------------------------------------------------------------------
+// Forward emission.
+// ---------------------------------------------------------------------
+
+/// The legacy dense-layer emission, parametrised so conv's im2col
+/// matrix can ride it too: chunked dots over the fan-in, a lazy partial
+/// accumulator, segment-wise bias add, optional segment-wise
+/// activation. Wave order and views match `nn::lowering::emit_forward`
+/// exactly (`rows` is the batch there).
+#[allow(clippy::too_many_arguments)]
+fn emit_dense_core(
+    ctx: &mut Ctx,
+    fixed: FixedSpec,
+    lp: LutParams,
+    input: BufId,
+    n_in: usize,
+    rows: usize,
+    w: BufId,
+    bias: BufId,
+    z: BufId,
+    n_out: usize,
+    act: Option<(ActKind, BufId)>,
+    partial: &str,
+) {
+    let in_chunks = segments(n_in);
+    for (ci, &(c_off, c_len)) in in_chunks.iter().enumerate() {
+        let dest = if ci == 0 {
+            z
+        } else {
+            ctx.p
+                .buffer_named(partial)
+                .unwrap_or_else(|| ctx.p.buffer(partial, rows, n_out, BufKind::Temp))
+        };
+        let mut lanes = Vec::with_capacity(rows * n_out);
+        for bi in 0..rows {
+            for j in 0..n_out {
+                lanes.push(LaneOp {
+                    a: View::contiguous(input, bi * n_in + c_off, c_len),
+                    b: Some(View { buf: w, offset: c_off * n_out + j, len: c_len, stride: n_out }),
+                    out: lane(dest, bi * n_out + j),
+                });
+            }
+        }
+        ctx.wave(Opcode::VectorDotProduct, c_len, lanes);
+        if ci > 0 {
+            // z += partial, segment-wise
+            for &(s_off, s_len) in &segments(n_out) {
+                let lanes = (0..rows)
+                    .map(|bi| LaneOp {
+                        a: View::contiguous(z, bi * n_out + s_off, s_len),
+                        b: Some(View::contiguous(dest, bi * n_out + s_off, s_len)),
+                        out: View::contiguous(z, bi * n_out + s_off, s_len),
+                    })
+                    .collect();
+                ctx.wave(Opcode::VectorAddition, s_len, lanes);
+            }
+        }
+    }
+    // z row += bias; o = A(z) — segment-wise over wide outputs. The LUT
+    // is registered before the bias waves, matching the legacy order.
+    let lut = act.map(|(kind, _)| ctx.lut_for(fixed, lp, kind, false));
+    for &(s_off, s_len) in &segments(n_out) {
+        let lanes = (0..rows)
+            .map(|bi| LaneOp {
+                a: View::contiguous(z, bi * n_out + s_off, s_len),
+                b: Some(View::contiguous(bias, s_off, s_len)),
+                out: View::contiguous(z, bi * n_out + s_off, s_len),
+            })
+            .collect();
+        ctx.wave(Opcode::VectorAddition, s_len, lanes);
+    }
+    if let Some((_, o)) = act {
+        let lut = lut.unwrap();
+        for &(s_off, s_len) in &segments(n_out) {
+            let lanes = (0..rows)
+                .map(|bi| LaneOp {
+                    a: View::contiguous(z, bi * n_out + s_off, s_len),
+                    b: None,
+                    out: View::contiguous(o, bi * n_out + s_off, s_len),
+                })
+                .collect();
+            ctx.act_wave(lut, lanes, s_len);
+        }
+    }
+}
+
+fn emit_conv_forward(
+    ctx: &mut Ctx,
+    g: &GraphSpec,
+    net: &Net,
+    u: &Unit,
+    batch: usize,
+    geom: Conv2dGeom,
+    act: Option<ActKind>,
+) {
+    let (w, b) = params_for(net, u.op)[0];
+    let input = net.val_buf[u.ins[0]];
+    let in_dim = geom.in_dim();
+    let (oh, ow) = (geom.out_h(), geom.out_w());
+    let f = geom.patch();
+    let p_rows = batch * oh * ow;
+    let im = ctx.p.buffer(&format!("im{}", u.tag), p_rows, f, BufKind::Temp);
+    let zeros = ctx.p.const_buffer(&format!("imz{}", u.tag), vec![0i16; geom.kw]);
+    // im2col: one VECTOR_ADDITION wave copies every kw-pixel strip of
+    // the input volume into its patch slot (x + 0 — the ISA has no
+    // copy). Strips stay contiguous for any stride because the stride
+    // only moves the strip *start*.
+    let mut lanes = Vec::with_capacity(p_rows * geom.in_c * geom.kh);
+    for bi in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let prow = (bi * oh + oy) * ow + ox;
+                for c in 0..geom.in_c {
+                    for ky in 0..geom.kh {
+                        let src = bi * in_dim
+                            + c * (geom.in_h * geom.in_w)
+                            + (oy * geom.stride + ky) * geom.in_w
+                            + ox * geom.stride;
+                        let dst = prow * f + (c * geom.kh + ky) * geom.kw;
+                        lanes.push(LaneOp {
+                            a: View::contiguous(input, src, geom.kw),
+                            b: Some(View::contiguous(zeros, 0, geom.kw)),
+                            out: View::contiguous(im, dst, geom.kw),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    ctx.wave(Opcode::VectorAddition, geom.kw, lanes);
+    // Then the convolution is a dense layer over the (P × patch) im2col
+    // matrix; the (batch × oh·ow·oc) value buffer is the same flat
+    // memory as the (P × oc) dense output.
+    let z = net.val_buf[u.op + 1];
+    let act_cfg = act.map(|k| (k, net.val_buf[u.out]));
+    emit_dense_core(
+        ctx,
+        g.fixed,
+        g.lut,
+        im,
+        f,
+        p_rows,
+        w,
+        b,
+        z,
+        geom.out_c,
+        act_cfg,
+        &format!("czp{}", u.tag),
+    );
+}
+
+fn emit_norm_forward(
+    ctx: &mut Ctx,
+    g: &GraphSpec,
+    net: &Net,
+    u: &Unit,
+    batch: usize,
+    cols: usize,
+) -> Result<(), LowerError> {
+    let dim = net.dims[u.out];
+    let rr = batch * (dim / cols); // normalisation rows
+    let input = net.val_buf[u.ins[0]];
+    let outb = net.val_buf[u.out];
+    let inv = g.fixed.from_f64(1.0 / cols as f64);
+    if inv == 0 {
+        return Err(LowerError::ConstUnderflow {
+            what: "normalization 1/n",
+            value: 1.0 / cols as f64,
+        });
+    }
+    let t = u.tag;
+    let p = &mut ctx.p;
+    let nm = p.buffer(&format!("nm{t}"), rr, 1, BufKind::Temp);
+    let nv = p.buffer(&format!("nv{t}"), rr, 1, BufKind::Temp);
+    let ni = p.buffer(&format!("ni{t}"), rr, 1, BufKind::Temp);
+    let ncn = p.buffer(&format!("ncn{t}"), rr, cols, BufKind::Temp);
+    let nsq = p.buffer(&format!("nsq{t}"), rr, cols, BufKind::Temp);
+    let ninv = p.const_buffer(&format!("nin{t}"), vec![inv]);
+    // mean per group: row-sum × (1/n)
+    let lanes = (0..rr)
+        .map(|r| LaneOp { a: View::contiguous(input, r * cols, cols), b: None, out: lane(nm, r) })
+        .collect();
+    ctx.wave(Opcode::VectorSummation, cols, lanes);
+    let lanes = (0..rr)
+        .map(|r| LaneOp { a: lane(nm, r), b: Some(lane(ninv, 0)), out: lane(nm, r) })
+        .collect();
+    ctx.wave(Opcode::ElementMultiplication, 1, lanes);
+    // centre: x − mean, mean broadcast lane-wise
+    let mut lanes = Vec::with_capacity(rr * cols);
+    for r in 0..rr {
+        for i in 0..cols {
+            lanes.push(LaneOp {
+                a: lane(input, r * cols + i),
+                b: Some(lane(nm, r)),
+                out: lane(ncn, r * cols + i),
+            });
+        }
+    }
+    ctx.wave(Opcode::VectorSubtraction, 1, lanes);
+    // variance = Σ centred² × (1/n)
+    let lanes = (0..rr)
+        .map(|r| LaneOp { a: row(ncn, cols, r), b: Some(row(ncn, cols, r)), out: row(nsq, cols, r) })
+        .collect();
+    ctx.wave(Opcode::ElementMultiplication, cols, lanes);
+    let lanes =
+        (0..rr).map(|r| LaneOp { a: row(nsq, cols, r), b: None, out: lane(nv, r) }).collect();
+    ctx.wave(Opcode::VectorSummation, cols, lanes);
+    let lanes = (0..rr)
+        .map(|r| LaneOp { a: lane(nv, r), b: Some(lane(ninv, 0)), out: lane(nv, r) })
+        .collect();
+    ctx.wave(Opcode::ElementMultiplication, 1, lanes);
+    // 1/√(var ∨ ε) via the Rsqrt table (ε is baked into the knots)
+    let lut = ctx.lut_for(g.fixed, g.lut, ActKind::Rsqrt, false);
+    for &(s_off, s_len) in &segments(rr) {
+        ctx.act_wave(
+            lut,
+            vec![LaneOp {
+                a: View::contiguous(nv, s_off, s_len),
+                b: None,
+                out: View::contiguous(ni, s_off, s_len),
+            }],
+            s_len,
+        );
+    }
+    // y = centred ⊙ invstd (broadcast)
+    let mut lanes = Vec::with_capacity(rr * cols);
+    for r in 0..rr {
+        for i in 0..cols {
+            lanes.push(LaneOp {
+                a: lane(ncn, r * cols + i),
+                b: Some(lane(ni, r)),
+                out: lane(outb, r * cols + i),
+            });
+        }
+    }
+    ctx.wave(Opcode::ElementMultiplication, 1, lanes);
+    Ok(())
+}
+
+fn emit_attn_forward(
+    ctx: &mut Ctx,
+    g: &GraphSpec,
+    net: &Net,
+    u: &Unit,
+    batch: usize,
+    s: usize,
+    d: usize,
+) -> Result<(), LowerError> {
+    let pairs = params_for(net, u.op); // q, k, v, o
+    let input = net.val_buf[u.ins[0]];
+    let outb = net.val_buf[u.out];
+    let sd = s * d;
+    let t = u.tag;
+    let scale = 1.0 / (d as f64).sqrt();
+    let scale_q = g.fixed.from_f64(scale);
+    if scale_q == 0 {
+        return Err(LowerError::ConstUnderflow { what: "attention 1/√d", value: scale });
+    }
+    let p = &mut ctx.p;
+    let aq = p.buffer(&format!("aq{t}"), batch, sd, BufKind::Temp);
+    let ak = p.buffer(&format!("ak{t}"), batch, sd, BufKind::Temp);
+    let av = p.buffer(&format!("av{t}"), batch, sd, BufKind::Temp);
+    let asb = p.buffer(&format!("as{t}"), batch, s * s, BufKind::Temp);
+    let ap = p.buffer(&format!("ap{t}"), batch, s * s, BufKind::Temp);
+    let ar = p.buffer(&format!("ar{t}"), batch * s, 1, BufKind::Temp);
+    let ai = p.buffer(&format!("ai{t}"), batch * s, 1, BufKind::Temp);
+    let ao = p.buffer(&format!("ao{t}"), batch, sd, BufKind::Temp);
+    let asc = p.const_buffer(&format!("asc{t}"), vec![scale_q; s]);
+    // X·W + b per token *within each sample* — attention never crosses
+    // the batch (row-independence invariant).
+    let proj = |ctx: &mut Ctx, src: BufId, w: BufId, bias: BufId, dst: BufId| {
+        let mut lanes = Vec::with_capacity(batch * sd);
+        for bi in 0..batch {
+            for tok in 0..s {
+                for jd in 0..d {
+                    lanes.push(LaneOp {
+                        a: View::contiguous(src, bi * sd + tok * d, d),
+                        b: Some(View { buf: w, offset: jd, len: d, stride: d }),
+                        out: lane(dst, bi * sd + tok * d + jd),
+                    });
+                }
+            }
+        }
+        ctx.wave(Opcode::VectorDotProduct, d, lanes);
+        let lanes = (0..batch * s)
+            .map(|r| LaneOp {
+                a: View::contiguous(dst, r * d, d),
+                b: Some(View::contiguous(bias, 0, d)),
+                out: View::contiguous(dst, r * d, d),
+            })
+            .collect();
+        ctx.wave(Opcode::VectorAddition, d, lanes);
+    };
+    proj(ctx, input, pairs[0].0, pairs[0].1, aq);
+    proj(ctx, input, pairs[1].0, pairs[1].1, ak);
+    proj(ctx, input, pairs[2].0, pairs[2].1, av);
+    // S = QKᵀ / √d, per sample (K rows are contiguous, no transpose)
+    let mut lanes = Vec::with_capacity(batch * s * s);
+    for bi in 0..batch {
+        for tq in 0..s {
+            for tk in 0..s {
+                lanes.push(LaneOp {
+                    a: View::contiguous(aq, bi * sd + tq * d, d),
+                    b: Some(View::contiguous(ak, bi * sd + tk * d, d)),
+                    out: lane(asb, (bi * s + tq) * s + tk),
+                });
+            }
+        }
+    }
+    ctx.wave(Opcode::VectorDotProduct, d, lanes);
+    let lanes = (0..batch * s)
+        .map(|r| LaneOp {
+            a: View::contiguous(asb, r * s, s),
+            b: Some(View::contiguous(asc, 0, s)),
+            out: View::contiguous(asb, r * s, s),
+        })
+        .collect();
+    ctx.wave(Opcode::ElementMultiplication, s, lanes);
+    // softmax rows: exp → row-sum → recip → broadcast multiply. No
+    // max-subtraction: scaled scores live in the LUT's representable
+    // range under the same fixed-point contract as every activation.
+    let exp = ctx.lut_for(g.fixed, g.lut, ActKind::Exp, false);
+    let lanes = (0..batch * s)
+        .map(|r| LaneOp {
+            a: View::contiguous(asb, r * s, s),
+            b: None,
+            out: View::contiguous(ap, r * s, s),
+        })
+        .collect();
+    ctx.act_wave(exp, lanes, s);
+    let lanes = (0..batch * s)
+        .map(|r| LaneOp { a: View::contiguous(ap, r * s, s), b: None, out: lane(ar, r) })
+        .collect();
+    ctx.wave(Opcode::VectorSummation, s, lanes);
+    let recip = ctx.lut_for(g.fixed, g.lut, ActKind::Recip, false);
+    for &(s_off, s_len) in &segments(batch * s) {
+        ctx.act_wave(
+            recip,
+            vec![LaneOp {
+                a: View::contiguous(ar, s_off, s_len),
+                b: None,
+                out: View::contiguous(ai, s_off, s_len),
+            }],
+            s_len,
+        );
+    }
+    let mut lanes = Vec::with_capacity(batch * s * s);
+    for r in 0..batch * s {
+        for tk in 0..s {
+            lanes.push(LaneOp {
+                a: lane(ap, r * s + tk),
+                b: Some(lane(ai, r)),
+                out: lane(ap, r * s + tk),
+            });
+        }
+    }
+    ctx.wave(Opcode::ElementMultiplication, 1, lanes);
+    // A = P·V per sample; V columns are strided views within the sample
+    let mut lanes = Vec::with_capacity(batch * sd);
+    for bi in 0..batch {
+        for tq in 0..s {
+            for jd in 0..d {
+                lanes.push(LaneOp {
+                    a: View::contiguous(ap, (bi * s + tq) * s, s),
+                    b: Some(View { buf: av, offset: bi * sd + jd, len: s, stride: d }),
+                    out: lane(ao, bi * sd + tq * d + jd),
+                });
+            }
+        }
+    }
+    ctx.wave(Opcode::VectorDotProduct, s, lanes);
+    // out = A·Wo + bo
+    proj(ctx, ao, pairs[3].0, pairs[3].1, outb);
+    Ok(())
+}
+
+fn emit_unit_forward(
+    ctx: &mut Ctx,
+    g: &GraphSpec,
+    net: &Net,
+    u: &Unit,
+    batch: usize,
+) -> Result<(), LowerError> {
+    match u.kind {
+        UnitKind::Dense { n_out, act } => {
+            let (w, b) = params_for(net, u.op)[0];
+            let input = net.val_buf[u.ins[0]];
+            let n_in = net.dims[u.ins[0]];
+            let z = net.val_buf[u.op + 1];
+            let act_cfg = act.map(|(k, _)| (k, net.val_buf[u.out]));
+            emit_dense_core(
+                ctx,
+                g.fixed,
+                g.lut,
+                input,
+                n_in,
+                batch,
+                w,
+                b,
+                z,
+                n_out,
+                act_cfg,
+                &format!("zc{}", u.tag),
+            );
+        }
+        UnitKind::Conv { geom, act } => emit_conv_forward(ctx, g, net, u, batch, geom, act),
+        UnitKind::Act { act } => {
+            let lut = ctx.lut_for(g.fixed, g.lut, act, false);
+            let dim = net.dims[u.out];
+            let input = net.val_buf[u.ins[0]];
+            let o = net.val_buf[u.out];
+            for &(s_off, s_len) in &segments(dim) {
+                let lanes = (0..batch)
+                    .map(|bi| LaneOp {
+                        a: View::contiguous(input, bi * dim + s_off, s_len),
+                        b: None,
+                        out: View::contiguous(o, bi * dim + s_off, s_len),
+                    })
+                    .collect();
+                ctx.act_wave(lut, lanes, s_len);
+            }
+        }
+        UnitKind::Add | UnitKind::Mul => {
+            let opcode = if matches!(u.kind, UnitKind::Add) {
+                Opcode::VectorAddition
+            } else {
+                Opcode::ElementMultiplication
+            };
+            let dim = net.dims[u.out];
+            let (a, b) = (net.val_buf[u.ins[0]], net.val_buf[u.ins[1]]);
+            let o = net.val_buf[u.out];
+            for &(s_off, s_len) in &segments(dim) {
+                let lanes = (0..batch)
+                    .map(|bi| LaneOp {
+                        a: View::contiguous(a, bi * dim + s_off, s_len),
+                        b: Some(View::contiguous(b, bi * dim + s_off, s_len)),
+                        out: View::contiguous(o, bi * dim + s_off, s_len),
+                    })
+                    .collect();
+                ctx.wave(opcode, s_len, lanes);
+            }
+        }
+        UnitKind::Norm { cols } => emit_norm_forward(ctx, g, net, u, batch, cols)?,
+        UnitKind::Attn { seq, d } => emit_attn_forward(ctx, g, net, u, batch, seq, d)?,
+    }
+    Ok(())
+}
+
+fn emit_units_forward(
+    ctx: &mut Ctx,
+    g: &GraphSpec,
+    net: &Net,
+    batch: usize,
+) -> Result<(), LowerError> {
+    ctx.p.steps.push(Step::LoadDram(net.x));
+    for u in &net.units {
+        emit_unit_forward(ctx, g, net, u, batch)?;
+    }
+    ctx.p.steps.push(Step::StoreDram(net.out));
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Entry points.
+// ---------------------------------------------------------------------
+
+fn handles(net: &Net, batch: usize, fixed: FixedSpec) -> LoweredMlp {
+    LoweredMlp {
+        program: Program::new("placeholder", fixed), // replaced by caller
+        batch,
+        x: net.x,
+        y: net.y,
+        out: net.out,
+        weights: net.params.iter().map(|&(w, _)| w).collect(),
+        biases: net.params.iter().map(|&(_, b)| b).collect(),
+        loss: None,
+    }
+}
+
+/// Lower a graph forward pass over a batch.
+pub fn lower_graph_forward(g: &GraphSpec, batch: usize) -> Result<LoweredMlp, LowerError> {
+    g.check()?;
+    if batch == 0 || batch > COLUMN_LEN {
+        return Err(LowerError::BadBatch(batch));
+    }
+    let mut ctx = Ctx::new(&format!("{}_fwd_b{batch}", g.name), g.fixed);
+    let net = declare_graph(&mut ctx, g, batch, false)?;
+    emit_units_forward(&mut ctx, g, &net, batch)?;
+    let mut h = handles(&net, batch, g.fixed);
+    h.program = ctx.p;
+    h.program.check()?;
+    Ok(h)
+}
+
+/// Lower an [`MlpSpec`] forward pass through the graph IR. Emits
+/// programs bit-identical to the frozen legacy lowering.
+pub fn lower_mlp_forward(spec: &MlpSpec, batch: usize) -> Result<LoweredMlp, LowerError> {
+    spec.check()?;
+    lower_graph_forward(&spec.to_graph(), batch)
+}
+
+/// Lower an [`MlpSpec`] SGD train step through the graph IR.
+pub fn lower_mlp_train(spec: &MlpSpec, batch: usize, lr: f64) -> Result<LoweredMlp, LowerError> {
+    spec.check()?;
+    lower_graph_train(&spec.to_graph(), batch, lr)
+}
+
+// ---------------------------------------------------------------------
+// Training.
+// ---------------------------------------------------------------------
+
+struct TrainBufs {
+    /// Delta buffer per value id (None for the graph input and for
+    /// fused intermediates, which no other op can consume).
+    val_delta: Vec<Option<BufId>>,
+    sq: BufId,
+    lsum: BufId,
+    loss: BufId,
+}
+
+/// Declare the per-unit gradient/delta buffers and the loss chain, in
+/// the legacy order (per unit in forward order, then sq/lsum/loss).
+fn declare_train_bufs(ctx: &mut Ctx, net: &Net, batch: usize) -> TrainBufs {
+    let p = &mut ctx.p;
+    let mut val_delta = vec![None; net.dims.len()];
+    for u in &net.units {
+        let t = u.tag;
+        let dim = net.dims[u.out];
+        let dbuf = match u.kind {
+            UnitKind::Dense { n_out, .. } => {
+                let d = p.buffer(&format!("d{t}"), batch, n_out, BufKind::Temp);
+                p.buffer(&format!("g{t}"), batch, n_out, BufKind::Temp);
+                p.buffer(&format!("gw{t}"), net.dims[u.ins[0]], n_out, BufKind::Temp);
+                p.buffer(&format!("gb{t}"), n_out, 1, BufKind::Temp);
+                d
+            }
+            UnitKind::Conv { geom, act } => {
+                let d = p.buffer(&format!("dc{t}"), batch, dim, BufKind::Temp);
+                if act.is_some() {
+                    p.buffer(&format!("gc{t}"), batch, dim, BufKind::Temp);
+                }
+                p.buffer(&format!("gwc{t}"), geom.patch(), geom.out_c, BufKind::Temp);
+                p.buffer(&format!("gbc{t}"), geom.out_c, 1, BufKind::Temp);
+                d
+            }
+            UnitKind::Act { .. } => {
+                let d = p.buffer(&format!("da{t}"), batch, dim, BufKind::Temp);
+                p.buffer(&format!("ga{t}"), batch, dim, BufKind::Temp);
+                d
+            }
+            UnitKind::Add => p.buffer(&format!("dadd{t}"), batch, dim, BufKind::Temp),
+            UnitKind::Mul => p.buffer(&format!("dmul{t}"), batch, dim, BufKind::Temp),
+            UnitKind::Norm { .. } => p.buffer(&format!("dnrm{t}"), batch, dim, BufKind::Temp),
+            UnitKind::Attn { d, .. } => {
+                let db = p.buffer(&format!("datt{t}"), batch, dim, BufKind::Temp);
+                p.buffer(&format!("gwv{t}"), d, d, BufKind::Temp);
+                p.buffer(&format!("gbv{t}"), d, 1, BufKind::Temp);
+                p.buffer(&format!("gwo{t}"), d, d, BufKind::Temp);
+                p.buffer(&format!("gbo{t}"), d, 1, BufKind::Temp);
+                db
+            }
+        };
+        val_delta[u.out] = Some(dbuf);
+    }
+    let out_dim = *net.dims.last().unwrap();
+    let sq = p.buffer("sq", batch, out_dim, BufKind::Temp);
+    let lsum = p.buffer("lsum", batch, 1, BufKind::Temp);
+    let loss = p.buffer("loss", 1, 1, BufKind::Output);
+    TrainBufs { val_delta, sq, lsum, loss }
+}
+
+/// Route a delta contribution into value `v`'s delta buffer. The first
+/// contribution overwrites (buffers persist across steps, so they must
+/// be fully written before read); later ones go through `scratch` and
+/// a segment-wise accumulate.
+fn deposit(
+    ctx: &mut Ctx,
+    net: &Net,
+    tb: &TrainBufs,
+    written: &mut [bool],
+    batch: usize,
+    v: ValueId,
+    scratch: &str,
+    emit: impl FnOnce(&mut Ctx, BufId),
+) {
+    let dest = tb.val_delta[v].expect("consumed value must have a delta buffer");
+    if !written[v] {
+        emit(ctx, dest);
+        written[v] = true;
+        return;
+    }
+    let dim = net.dims[v];
+    let s = ctx
+        .p
+        .buffer_named(scratch)
+        .unwrap_or_else(|| ctx.p.buffer(scratch, batch, dim, BufKind::Temp));
+    emit(ctx, s);
+    for &(s_off, s_len) in &segments(dim) {
+        let lanes = (0..batch)
+            .map(|bi| LaneOp {
+                a: View::contiguous(dest, bi * dim + s_off, s_len),
+                b: Some(View::contiguous(s, bi * dim + s_off, s_len)),
+                out: View::contiguous(dest, bi * dim + s_off, s_len),
+            })
+            .collect();
+        ctx.wave(Opcode::VectorAddition, s_len, lanes);
+    }
+}
+
+/// The legacy in-place SGD update: `gw ⊙= lr` per row, `w −= gw`,
+/// `gb ⊙= lr`, `b −= gb`.
+#[allow(clippy::too_many_arguments)]
+fn sgd_update(
+    ctx: &mut Ctx,
+    w: BufId,
+    bias: BufId,
+    gw: BufId,
+    gb: BufId,
+    n_in: usize,
+    n_out: usize,
+    lr_buf: BufId,
+) {
+    let lanes = (0..n_in)
+        .map(|i| LaneOp {
+            a: row(gw, n_out, i),
+            b: Some(View::contiguous(lr_buf, 0, n_out)),
+            out: row(gw, n_out, i),
+        })
+        .collect();
+    ctx.wave(Opcode::ElementMultiplication, n_out, lanes);
+    let lanes = (0..n_in)
+        .map(|i| LaneOp { a: row(w, n_out, i), b: Some(row(gw, n_out, i)), out: row(w, n_out, i) })
+        .collect();
+    ctx.wave(Opcode::VectorSubtraction, n_out, lanes);
+    ctx.wave(
+        Opcode::ElementMultiplication,
+        n_out,
+        vec![LaneOp {
+            a: View::all(gb, n_out),
+            b: Some(View::contiguous(lr_buf, 0, n_out)),
+            out: View::all(gb, n_out),
+        }],
+    );
+    ctx.wave(
+        Opcode::VectorSubtraction,
+        n_out,
+        vec![LaneOp {
+            a: View::all(bias, n_out),
+            b: Some(View::all(gb, n_out)),
+            out: View::all(bias, n_out),
+        }],
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_unit_backward(
+    ctx: &mut Ctx,
+    g: &GraphSpec,
+    net: &Net,
+    tb: &TrainBufs,
+    u: &Unit,
+    batch: usize,
+    lr_buf: BufId,
+    written: &mut [bool],
+) {
+    match u.kind {
+        UnitKind::Dense { n_out, act } => {
+            let (w, bias) = params_for(net, u.op)[0];
+            let n_in = net.dims[u.ins[0]];
+            let input = net.val_buf[u.ins[0]];
+            let d = tb.val_delta[u.out].unwrap();
+            let z = net.val_buf[u.op + 1];
+            let gbuf = ctx.p.buffer_named(&format!("g{}", u.tag)).unwrap();
+            let gw = ctx.p.buffer_named(&format!("gw{}", u.tag)).unwrap();
+            let gb = ctx.p.buffer_named(&format!("gb{}", u.tag)).unwrap();
+            // δ = d ⊙ A'(z) (fused activation only — a bare Linear's
+            // delta is already the pre-activation delta)
+            if let Some((akind, _)) = act {
+                let dlut = ctx.lut_for(g.fixed, g.lut, akind, true);
+                let lanes = (0..batch)
+                    .map(|bi| LaneOp { a: row(z, n_out, bi), b: None, out: row(gbuf, n_out, bi) })
+                    .collect();
+                ctx.act_wave(dlut, lanes, n_out);
+                let lanes = (0..batch)
+                    .map(|bi| LaneOp {
+                        a: row(d, n_out, bi),
+                        b: Some(row(gbuf, n_out, bi)),
+                        out: row(d, n_out, bi),
+                    })
+                    .collect();
+                ctx.wave(Opcode::ElementMultiplication, n_out, lanes);
+            }
+            // ∂W[i,j] = Σ_b input[b,i]·δ[b,j]
+            let mut lanes = Vec::with_capacity(n_in * n_out);
+            for i in 0..n_in {
+                for j in 0..n_out {
+                    lanes.push(LaneOp {
+                        a: col(input, batch, n_in, i),
+                        b: Some(col(d, batch, n_out, j)),
+                        out: lane(gw, i * n_out + j),
+                    });
+                }
+            }
+            ctx.wave(Opcode::VectorDotProduct, batch, lanes);
+            // ∂b[j] = Σ_b δ[b,j]
+            let lanes = (0..n_out)
+                .map(|j| LaneOp { a: col(d, batch, n_out, j), b: None, out: lane(gb, j) })
+                .collect();
+            ctx.wave(Opcode::VectorSummation, batch, lanes);
+            // δ_prev[b,i] = dot(w row i, δ row b)  (pre-update weights)
+            if u.ins[0] != INPUT {
+                deposit(ctx, net, tb, written, batch, u.ins[0], &format!("ds{}", u.op), |ctx, dest| {
+                    let mut lanes = Vec::with_capacity(batch * n_in);
+                    for bi in 0..batch {
+                        for i in 0..n_in {
+                            lanes.push(LaneOp {
+                                a: View::contiguous(w, i * n_out, n_out),
+                                b: Some(row(d, n_out, bi)),
+                                out: lane(dest, bi * n_in + i),
+                            });
+                        }
+                    }
+                    ctx.wave(Opcode::VectorDotProduct, n_out, lanes);
+                });
+            }
+            sgd_update(ctx, w, bias, gw, gb, n_in, n_out, lr_buf);
+        }
+        UnitKind::Conv { geom, act } => {
+            // Only lowered when the conv reads the graph input (checked
+            // up front): param grads via the dense backward over the
+            // im2col matrix; no col2im delta path.
+            let (w, bias) = params_for(net, u.op)[0];
+            let f = geom.patch();
+            let oc = geom.out_c;
+            let prows = batch * geom.out_h() * geom.out_w();
+            let dc = tb.val_delta[u.out].unwrap();
+            let im = ctx.p.buffer_named(&format!("im{}", u.tag)).unwrap();
+            let gwc = ctx.p.buffer_named(&format!("gwc{}", u.tag)).unwrap();
+            let gbc = ctx.p.buffer_named(&format!("gbc{}", u.tag)).unwrap();
+            if let Some(akind) = act {
+                let gc = ctx.p.buffer_named(&format!("gc{}", u.tag)).unwrap();
+                let cz = net.val_buf[u.op + 1];
+                let dlut = ctx.lut_for(g.fixed, g.lut, akind, true);
+                let lanes = (0..prows)
+                    .map(|r| LaneOp { a: row(cz, oc, r), b: None, out: row(gc, oc, r) })
+                    .collect();
+                ctx.act_wave(dlut, lanes, oc);
+                let lanes = (0..prows)
+                    .map(|r| LaneOp {
+                        a: row(dc, oc, r),
+                        b: Some(row(gc, oc, r)),
+                        out: row(dc, oc, r),
+                    })
+                    .collect();
+                ctx.wave(Opcode::ElementMultiplication, oc, lanes);
+            }
+            let mut lanes = Vec::with_capacity(f * oc);
+            for i in 0..f {
+                for j in 0..oc {
+                    lanes.push(LaneOp {
+                        a: col(im, prows, f, i),
+                        b: Some(col(dc, prows, oc, j)),
+                        out: lane(gwc, i * oc + j),
+                    });
+                }
+            }
+            ctx.wave(Opcode::VectorDotProduct, prows, lanes);
+            let lanes = (0..oc)
+                .map(|j| LaneOp { a: col(dc, prows, oc, j), b: None, out: lane(gbc, j) })
+                .collect();
+            ctx.wave(Opcode::VectorSummation, prows, lanes);
+            sgd_update(ctx, w, bias, gwc, gbc, f, oc, lr_buf);
+        }
+        UnitKind::Act { act } => {
+            let dim = net.dims[u.out];
+            let dout = tb.val_delta[u.out].unwrap();
+            let input = net.val_buf[u.ins[0]];
+            let ga = ctx.p.buffer_named(&format!("ga{}", u.tag)).unwrap();
+            let dlut = ctx.lut_for(g.fixed, g.lut, act, true);
+            for &(s_off, s_len) in &segments(dim) {
+                let lanes = (0..batch)
+                    .map(|bi| LaneOp {
+                        a: View::contiguous(input, bi * dim + s_off, s_len),
+                        b: None,
+                        out: View::contiguous(ga, bi * dim + s_off, s_len),
+                    })
+                    .collect();
+                ctx.act_wave(dlut, lanes, s_len);
+            }
+            if u.ins[0] != INPUT {
+                deposit(ctx, net, tb, written, batch, u.ins[0], &format!("ds{}", u.op), |ctx, dest| {
+                    for &(s_off, s_len) in &segments(dim) {
+                        let lanes = (0..batch)
+                            .map(|bi| LaneOp {
+                                a: View::contiguous(dout, bi * dim + s_off, s_len),
+                                b: Some(View::contiguous(ga, bi * dim + s_off, s_len)),
+                                out: View::contiguous(dest, bi * dim + s_off, s_len),
+                            })
+                            .collect();
+                        ctx.wave(Opcode::ElementMultiplication, s_len, lanes);
+                    }
+                });
+            }
+        }
+        UnitKind::Add => {
+            // δ flows unchanged to both inputs. First contribution is a
+            // copy (x + 0 — full overwrite); a repeat contribution can
+            // accumulate straight from dout.
+            let dim = net.dims[u.out];
+            let dout = tb.val_delta[u.out].unwrap();
+            for &vin in &u.ins {
+                if vin == INPUT {
+                    continue;
+                }
+                let dest = tb.val_delta[vin].expect("consumed value must have a delta buffer");
+                if !written[vin] {
+                    let zeros = ctx
+                        .p
+                        .buffer_named("gz")
+                        .unwrap_or_else(|| ctx.p.const_buffer("gz", vec![0i16; COLUMN_LEN]));
+                    for &(s_off, s_len) in &segments(dim) {
+                        let lanes = (0..batch)
+                            .map(|bi| LaneOp {
+                                a: View::contiguous(dout, bi * dim + s_off, s_len),
+                                b: Some(View::contiguous(zeros, 0, s_len)),
+                                out: View::contiguous(dest, bi * dim + s_off, s_len),
+                            })
+                            .collect();
+                        ctx.wave(Opcode::VectorAddition, s_len, lanes);
+                    }
+                    written[vin] = true;
+                } else {
+                    for &(s_off, s_len) in &segments(dim) {
+                        let lanes = (0..batch)
+                            .map(|bi| LaneOp {
+                                a: View::contiguous(dest, bi * dim + s_off, s_len),
+                                b: Some(View::contiguous(dout, bi * dim + s_off, s_len)),
+                                out: View::contiguous(dest, bi * dim + s_off, s_len),
+                            })
+                            .collect();
+                        ctx.wave(Opcode::VectorAddition, s_len, lanes);
+                    }
+                }
+            }
+        }
+        UnitKind::Mul => {
+            // δ_a = δ ⊙ b, δ_b = δ ⊙ a
+            let dim = net.dims[u.out];
+            let dout = tb.val_delta[u.out].unwrap();
+            for (slot, other) in [(0usize, u.ins[1]), (1usize, u.ins[0])] {
+                let vin = u.ins[slot];
+                if vin == INPUT {
+                    continue;
+                }
+                let other_buf = net.val_buf[other];
+                let scratch = format!("ds{}{}", u.op, ["a", "b"][slot]);
+                deposit(ctx, net, tb, written, batch, vin, &scratch, |ctx, dest| {
+                    for &(s_off, s_len) in &segments(dim) {
+                        let lanes = (0..batch)
+                            .map(|bi| LaneOp {
+                                a: View::contiguous(dout, bi * dim + s_off, s_len),
+                                b: Some(View::contiguous(other_buf, bi * dim + s_off, s_len)),
+                                out: View::contiguous(dest, bi * dim + s_off, s_len),
+                            })
+                            .collect();
+                        ctx.wave(Opcode::ElementMultiplication, s_len, lanes);
+                    }
+                });
+            }
+        }
+        UnitKind::Norm { cols } => {
+            // Straight-through scaled by the saved 1/σ (Jacobian
+            // mean/variance terms dropped — documented approximation).
+            if u.ins[0] == INPUT {
+                return;
+            }
+            let dim = net.dims[u.out];
+            let rr = batch * (dim / cols);
+            let dout = tb.val_delta[u.out].unwrap();
+            let ni = ctx.p.buffer_named(&format!("ni{}", u.tag)).unwrap();
+            deposit(ctx, net, tb, written, batch, u.ins[0], &format!("ds{}", u.op), |ctx, dest| {
+                let mut lanes = Vec::with_capacity(rr * cols);
+                for r in 0..rr {
+                    for i in 0..cols {
+                        lanes.push(LaneOp {
+                            a: lane(dout, r * cols + i),
+                            b: Some(lane(ni, r)),
+                            out: lane(dest, r * cols + i),
+                        });
+                    }
+                }
+                ctx.wave(Opcode::ElementMultiplication, 1, lanes);
+            });
+        }
+        UnitKind::Attn { seq: s, d } => {
+            // Frozen-scores backward: exact grads for Wv/bv/Wo/bo
+            // through A = P·V; Wq/Wk/bq/bk are not updated (documented
+            // approximation — keeps the whole step on-device).
+            let sd = s * d;
+            let rr = batch * s;
+            let t = u.tag;
+            let dout = tb.val_delta[u.out].unwrap();
+            let pairs = params_for(net, u.op);
+            let (wv, bv) = pairs[2];
+            let (wo, bo) = pairs[3];
+            let ap = ctx.p.buffer_named(&format!("ap{t}")).unwrap();
+            let ao = ctx.p.buffer_named(&format!("ao{t}")).unwrap();
+            let gwv = ctx.p.buffer_named(&format!("gwv{t}")).unwrap();
+            let gbv = ctx.p.buffer_named(&format!("gbv{t}")).unwrap();
+            let gwo = ctx.p.buffer_named(&format!("gwo{t}")).unwrap();
+            let gbo = ctx.p.buffer_named(&format!("gbo{t}")).unwrap();
+            let input = net.val_buf[u.ins[0]];
+            let dao = ctx.p.buffer(&format!("dao{t}"), batch, sd, BufKind::Temp);
+            let dav = ctx.p.buffer(&format!("dav{t}"), batch, sd, BufKind::Temp);
+            // δA = δout · Woᵀ (Wo rows are contiguous)
+            let mut lanes = Vec::with_capacity(batch * sd);
+            for bi in 0..batch {
+                for tok in 0..s {
+                    for i in 0..d {
+                        lanes.push(LaneOp {
+                            a: View::contiguous(wo, i * d, d),
+                            b: Some(View::contiguous(dout, bi * sd + tok * d, d)),
+                            out: lane(dao, bi * sd + tok * d + i),
+                        });
+                    }
+                }
+            }
+            ctx.wave(Opcode::VectorDotProduct, d, lanes);
+            // ∂Wo[i,j] = Σ_r A[r,i]·δout[r,j] over all batch·seq rows
+            let mut lanes = Vec::with_capacity(d * d);
+            for i in 0..d {
+                for j in 0..d {
+                    lanes.push(LaneOp {
+                        a: col(ao, rr, d, i),
+                        b: Some(col(dout, rr, d, j)),
+                        out: lane(gwo, i * d + j),
+                    });
+                }
+            }
+            ctx.wave(Opcode::VectorDotProduct, rr, lanes);
+            let lanes = (0..d)
+                .map(|j| LaneOp { a: col(dout, rr, d, j), b: None, out: lane(gbo, j) })
+                .collect();
+            ctx.wave(Opcode::VectorSummation, rr, lanes);
+            // δV[b,u,j] = Σ_t P[b,t,u]·δA[b,t,j] (per sample)
+            let mut lanes = Vec::with_capacity(batch * sd);
+            for bi in 0..batch {
+                for uu in 0..s {
+                    for j in 0..d {
+                        lanes.push(LaneOp {
+                            a: View { buf: ap, offset: bi * s * s + uu, len: s, stride: s },
+                            b: Some(View { buf: dao, offset: bi * sd + j, len: s, stride: d }),
+                            out: lane(dav, bi * sd + uu * d + j),
+                        });
+                    }
+                }
+            }
+            ctx.wave(Opcode::VectorDotProduct, s, lanes);
+            // ∂Wv[i,j] = Σ_r X[r,i]·δV[r,j]
+            let mut lanes = Vec::with_capacity(d * d);
+            for i in 0..d {
+                for j in 0..d {
+                    lanes.push(LaneOp {
+                        a: col(input, rr, d, i),
+                        b: Some(col(dav, rr, d, j)),
+                        out: lane(gwv, i * d + j),
+                    });
+                }
+            }
+            ctx.wave(Opcode::VectorDotProduct, rr, lanes);
+            let lanes = (0..d)
+                .map(|j| LaneOp { a: col(dav, rr, d, j), b: None, out: lane(gbv, j) })
+                .collect();
+            ctx.wave(Opcode::VectorSummation, rr, lanes);
+            // δX = δV · Wvᵀ (the only surviving input-delta term under
+            // frozen scores)
+            if u.ins[0] != INPUT {
+                deposit(ctx, net, tb, written, batch, u.ins[0], &format!("ds{}", u.op), |ctx, dest| {
+                    let mut lanes = Vec::with_capacity(batch * sd);
+                    for bi in 0..batch {
+                        for tok in 0..s {
+                            for i in 0..d {
+                                lanes.push(LaneOp {
+                                    a: View::contiguous(wv, i * d, d),
+                                    b: Some(View::contiguous(dav, bi * sd + tok * d, d)),
+                                    out: lane(dest, bi * sd + tok * d + i),
+                                });
+                            }
+                        }
+                    }
+                    ctx.wave(Opcode::VectorDotProduct, d, lanes);
+                });
+            }
+            sgd_update(ctx, wv, bv, gwv, gbv, d, d, lr_buf);
+            sgd_update(ctx, wo, bo, gwo, gbo, d, d, lr_buf);
+        }
+    }
+}
+
+/// Lower one SGD train step over a graph: forward + backward + in-place
+/// update with on-device Σ(o−y)² loss, mirroring the legacy MLP train
+/// schedule (and bit-identical to it for MLP chains).
+pub fn lower_graph_train(g: &GraphSpec, batch: usize, lr: f64) -> Result<LoweredMlp, LowerError> {
+    g.check()?;
+    if batch == 0 || batch > COLUMN_LEN {
+        return Err(LowerError::BadBatch(batch));
+    }
+    let dims = g.value_dims()?;
+    let units = build_units(g);
+    // Per-unit trainability checks, in op order (legacy precedence:
+    // width errors before the learning-rate check).
+    for u in &units {
+        match u.kind {
+            UnitKind::Dense { n_out, .. } => {
+                let wide = dims[u.ins[0]].max(n_out);
+                if wide > COLUMN_LEN {
+                    return Err(LowerError::TrainingTooWide(wide));
+                }
+            }
+            UnitKind::Conv { geom, .. } => {
+                if u.ins[0] != INPUT {
+                    return Err(LowerError::TrainUnsupported {
+                        op: u.op,
+                        why: "Conv2d gradients need the convolution first in the graph \
+                              (no col2im delta path)",
+                    });
+                }
+                let prows = batch * geom.out_h() * geom.out_w();
+                if prows > COLUMN_LEN {
+                    return Err(LowerError::TrainingTooWide(prows));
+                }
+                if geom.out_c > COLUMN_LEN {
+                    return Err(LowerError::TrainingTooWide(geom.out_c));
+                }
+            }
+            UnitKind::Attn { seq, .. } => {
+                if batch * seq > COLUMN_LEN {
+                    return Err(LowerError::TrainingTooWide(batch * seq));
+                }
+            }
+            _ => {}
+        }
+    }
+    let out_dim = *dims.last().unwrap();
+    if out_dim > COLUMN_LEN {
+        return Err(LowerError::TrainingTooWide(out_dim));
+    }
+    let lr_q = g.fixed.from_f64(lr);
+    if lr_q == 0 {
+        return Err(LowerError::LrUnderflow(lr));
+    }
+    let decls = g.param_decls()?;
+    if decls.is_empty() {
+        return Err(LowerError::NoParams);
+    }
+    let lr_len = decls.iter().map(|d| d.cols).max().unwrap();
+
+    let mut ctx = Ctx::new(&format!("{}_train_b{batch}", g.name), g.fixed);
+    let net = declare_graph(&mut ctx, g, batch, true)?;
+    let lr_buf = ctx.p.const_buffer("lr", vec![lr_q; lr_len]);
+    let tb = declare_train_bufs(&mut ctx, &net, batch);
+
+    // ---- forward ----
+    emit_units_forward(&mut ctx, g, &net, batch)?;
+    let y = net.y.unwrap();
+    ctx.p.steps.push(Step::LoadDram(y));
+    ctx.p.steps.push(Step::LoadDram(lr_buf));
+
+    // ---- output error: d_out = o − y ----
+    let last = g.ops.len();
+    let d_last = tb.val_delta[last].unwrap();
+    let lanes = (0..batch)
+        .map(|bi| LaneOp {
+            a: row(net.out, out_dim, bi),
+            b: Some(row(y, out_dim, bi)),
+            out: row(d_last, out_dim, bi),
+        })
+        .collect();
+    ctx.wave(Opcode::VectorSubtraction, out_dim, lanes);
+
+    // ---- loss = Σ (o−y)² (diagnostic) ----
+    let lanes = (0..batch)
+        .map(|bi| LaneOp {
+            a: row(d_last, out_dim, bi),
+            b: Some(row(d_last, out_dim, bi)),
+            out: row(tb.sq, out_dim, bi),
+        })
+        .collect();
+    ctx.wave(Opcode::ElementMultiplication, out_dim, lanes);
+    let lanes = (0..batch)
+        .map(|bi| LaneOp { a: row(tb.sq, out_dim, bi), b: None, out: lane(tb.lsum, bi) })
+        .collect();
+    ctx.wave(Opcode::VectorSummation, out_dim, lanes);
+    ctx.wave(
+        Opcode::VectorSummation,
+        batch,
+        vec![LaneOp { a: View::all(tb.lsum, batch), b: None, out: lane(tb.loss, 0) }],
+    );
+
+    // ---- backward, reverse unit order ----
+    let mut written = vec![false; net.dims.len()];
+    written[last] = true;
+    for ui in (0..net.units.len()).rev() {
+        let u = net.units[ui].clone();
+        if !written[u.out] {
+            continue; // dead branch: nothing consumed it, no delta
+        }
+        emit_unit_backward(&mut ctx, g, &net, &tb, &u, batch, lr_buf, &mut written);
+    }
+    ctx.p.steps.push(Step::StoreDram(tb.loss));
+
+    let mut h = handles(&net, batch, g.fixed);
+    h.y = net.y;
+    h.loss = Some(tb.loss);
+    h.program = ctx.p;
+    h.program.check()?;
+    Ok(h)
+}
+
+// ---------------------------------------------------------------------
+// Tests.
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{FastSim, FpgaDevice, MatrixMachine};
+    use crate::nn::graph::FloatGraph;
+    use crate::nn::lowering::{legacy_lower_forward, legacy_lower_train_step};
+    use crate::util::Rng;
+
+    fn mlp(dims: &[usize]) -> MlpSpec {
+        let fixed = FixedSpec::q(10).saturating();
+        MlpSpec::from_dims(
+            "m",
+            dims,
+            ActKind::Relu,
+            ActKind::Identity,
+            fixed,
+            LutParams::training(fixed),
+        )
+        .unwrap()
+    }
+
+    /// Field-wise program equality ([`Program`] doesn't derive
+    /// `PartialEq`); the step loop pinpoints the first divergent wave.
+    fn assert_same_program(a: &Program, b: &Program) {
+        assert_eq!(a.name, b.name, "program names");
+        assert_eq!(a.fixed, b.fixed, "fixed-point specs");
+        assert_eq!(a.buffers, b.buffers, "buffer declarations");
+        assert_eq!(a.luts, b.luts, "LUT tables");
+        for (i, (x, y)) in a.steps.iter().zip(&b.steps).enumerate() {
+            assert_eq!(x, y, "step {i}");
+        }
+        assert_eq!(a.steps.len(), b.steps.len(), "step counts");
+    }
+
+    fn assert_same_handles(a: &LoweredMlp, b: &LoweredMlp) {
+        assert_eq!(a.batch, b.batch, "batch");
+        assert_eq!(a.x, b.x, "x handle");
+        assert_eq!(a.y, b.y, "y handle");
+        assert_eq!(a.out, b.out, "out handle");
+        assert_eq!(a.weights, b.weights, "weight handles");
+        assert_eq!(a.biases, b.biases, "bias handles");
+        assert_eq!(a.loss, b.loss, "loss handle");
+    }
+
+    #[test]
+    fn mlp_forward_through_graph_is_bit_identical_to_legacy() {
+        let spec = mlp(&[5, 9, 3]);
+        for batch in [1, 4] {
+            let g = lower_mlp_forward(&spec, batch).unwrap();
+            let l = legacy_lower_forward(&spec, batch).unwrap();
+            assert_same_program(&g.program, &l.program);
+            assert_same_handles(&g, &l);
+        }
+    }
+
+    #[test]
+    fn wide_mlp_forward_chunks_identically_to_legacy() {
+        // Dims beyond COLUMN_LEN exercise the chunked-dot and segmented
+        // bias/activation paths on both sides.
+        let spec = mlp(&[1100, 700, 4]);
+        let g = lower_mlp_forward(&spec, 2).unwrap();
+        let l = legacy_lower_forward(&spec, 2).unwrap();
+        assert_same_program(&g.program, &l.program);
+        assert_same_handles(&g, &l);
+    }
+
+    #[test]
+    fn mlp_train_through_graph_is_bit_identical_to_legacy() {
+        let spec = mlp(&[5, 9, 3]);
+        let g = lower_mlp_train(&spec, 6, 1.0 / 64.0).unwrap();
+        let l = legacy_lower_train_step(&spec, 6, 1.0 / 64.0).unwrap();
+        assert_same_program(&g.program, &l.program);
+        assert_same_handles(&g, &l);
+    }
+
+    #[test]
+    fn mlp_error_cases_match_legacy() {
+        let spec = mlp(&[5, 9, 3]);
+        assert_eq!(
+            lower_mlp_forward(&spec, 0).unwrap_err(),
+            legacy_lower_forward(&spec, 0).unwrap_err()
+        );
+        let wide = mlp(&[600, 10, 4]);
+        assert_eq!(
+            lower_mlp_train(&wide, 2, 1.0 / 64.0).unwrap_err(),
+            legacy_lower_train_step(&wide, 2, 1.0 / 64.0).unwrap_err()
+        );
+    }
+
+    // ---- golden per-op tests: lowered programs vs the float oracle ----
+
+    /// Lower `spec`, run the forward program on [`FastSim`], return the
+    /// output lanes.
+    fn run_forward(
+        spec: &GraphSpec,
+        params: &[(Vec<i16>, Vec<i16>)],
+        qx: &[i16],
+        batch: usize,
+    ) -> Vec<i16> {
+        let h = lower_graph_forward(spec, batch).expect("lower forward");
+        let mut sim = FastSim::new(&h.program);
+        sim.set_buffer(h.x, qx);
+        for (i, (w, b)) in params.iter().enumerate() {
+            sim.set_buffer(h.weights[i], w);
+            sim.set_buffer(h.biases[i], b);
+        }
+        for step in &h.program.steps {
+            if let Step::Wave(w) = step {
+                sim.exec_wave(&h.program, w);
+            }
+        }
+        sim.buffer(h.out).to_vec()
+    }
+
+    /// Snap the float oracle's parameters onto the fixed-point grid so
+    /// the only divergence left is datapath rounding, not param
+    /// quantisation.
+    fn dequantized(fg: &FloatGraph) -> FloatGraph {
+        let f = fg.spec.fixed;
+        let mut out = fg.clone();
+        for p in &mut out.params {
+            *p = (f.decode_vec(&f.encode_vec(&p.0)), f.decode_vec(&f.encode_vec(&p.1)));
+        }
+        out
+    }
+
+    fn rand_x(fixed: FixedSpec, rng: &mut Rng, n: usize) -> Vec<i16> {
+        fixed.encode_vec(&(0..n).map(|_| rng.gen_f64() * 2.0 - 1.0).collect::<Vec<_>>())
+    }
+
+    fn assert_close(fixed: FixedSpec, got: &[i16], want: &[f64], tol: f64, what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: lane counts");
+        for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+            let g = fixed.to_f64(g);
+            assert!((g - w).abs() < tol, "{what} lane {i}: {g} vs float {w}");
+        }
+    }
+
+    #[test]
+    fn conv_im2col_matches_float_reference() {
+        let fixed = FixedSpec::q(9).saturating();
+        let geom = Conv2dGeom { in_h: 4, in_w: 4, in_c: 1, out_c: 3, kh: 2, kw: 2, stride: 1 };
+        let mut s = GraphSpec::new("conv", 16, fixed, LutParams::training(fixed));
+        let c = s.conv2d(INPUT, geom);
+        s.activation(c, ActKind::Relu);
+        let mut rng = Rng::new(11);
+        let fg = dequantized(&FloatGraph::init(&s, &mut rng));
+        let qx = rand_x(fixed, &mut rng, 2 * 16);
+        let got = run_forward(&s, &fg.quantized(), &qx, 2);
+        let want = fg.forward_batch(&fixed.decode_vec(&qx), 2);
+        assert_close(fixed, &got, &want, 0.05, "conv");
+    }
+
+    #[test]
+    fn layernorm_matches_float_reference_and_centres_groups() {
+        let fixed = FixedSpec::q(9).saturating();
+        let mut s = GraphSpec::new("ln", 8, fixed, LutParams::training(fixed));
+        let l = s.linear(INPUT, 8);
+        s.normalization(l, 4);
+        let mut rng = Rng::new(12);
+        let fg = dequantized(&FloatGraph::init(&s, &mut rng));
+        let qx = rand_x(fixed, &mut rng, 2 * 8);
+        let got = run_forward(&s, &fg.quantized(), &qx, 2);
+        let want = fg.forward_batch(&fixed.decode_vec(&qx), 2);
+        // Rsqrt amplifies rounding near small variances — wider band.
+        assert_close(fixed, &got, &want, 0.35, "layernorm");
+        for (gi, group) in got.chunks(4).enumerate() {
+            let sum: f64 = group.iter().map(|&v| fixed.to_f64(v)).sum();
+            assert!(sum.abs() < 0.1, "group {gi} mean not removed: Σ = {sum}");
+        }
+    }
+
+    #[test]
+    fn residual_add_matches_float_reference() {
+        let fixed = FixedSpec::q(9).saturating();
+        let mut s = GraphSpec::new("res", 6, fixed, LutParams::training(fixed));
+        let l = s.linear(INPUT, 6);
+        let a = s.activation(l, ActKind::Tanh);
+        s.add(a, INPUT);
+        let mut rng = Rng::new(13);
+        let fg = dequantized(&FloatGraph::init(&s, &mut rng));
+        let qx = rand_x(fixed, &mut rng, 3 * 6);
+        let got = run_forward(&s, &fg.quantized(), &qx, 3);
+        let want = fg.forward_batch(&fixed.decode_vec(&qx), 3);
+        assert_close(fixed, &got, &want, 0.1, "residual add");
+    }
+
+    #[test]
+    fn gated_elementwise_mul_matches_float_reference() {
+        let fixed = FixedSpec::q(9).saturating();
+        let mut s = GraphSpec::new("gate", 5, fixed, LutParams::training(fixed));
+        let g1 = s.linear(INPUT, 4);
+        let a = s.activation(g1, ActKind::Sigmoid);
+        let g2 = s.linear(INPUT, 4);
+        s.mul(a, g2);
+        let mut rng = Rng::new(14);
+        let fg = dequantized(&FloatGraph::init(&s, &mut rng));
+        let qx = rand_x(fixed, &mut rng, 2 * 5);
+        let got = run_forward(&s, &fg.quantized(), &qx, 2);
+        let want = fg.forward_batch(&fixed.decode_vec(&qx), 2);
+        assert_close(fixed, &got, &want, 0.1, "gated mul");
+    }
+
+    #[test]
+    fn attention_matches_float_reference_on_the_verified_machine() {
+        // Q8 keeps the un-shifted softmax Exp inputs representable.
+        let fixed = FixedSpec::q(8).saturating();
+        let (seq, d) = (3, 2);
+        let mut s = GraphSpec::new("attn", seq * d, fixed, LutParams::training(fixed));
+        s.attention(INPUT, seq, d);
+        let mut rng = Rng::new(15);
+        let mut fg = FloatGraph::init(&s, &mut rng);
+        // Halve the He-init weights: keeps the un-shifted softmax
+        // scores small, where the nearest-knot Exp table is accurate.
+        for (w, _) in &mut fg.params {
+            w.iter_mut().for_each(|v| *v *= 0.5);
+        }
+        let fg = dequantized(&fg);
+        let q = fg.quantized();
+        let qx = rand_x(fixed, &mut rng, seq * d);
+
+        // Through the full machine model with structural verification.
+        let h = lower_graph_forward(&s, 1).unwrap();
+        let mut m = MatrixMachine::new(FpgaDevice::selected(), &h.program).unwrap();
+        m.bind_named(&h.program.buffers[h.x].name, &qx).unwrap();
+        let decls = s.param_decls().unwrap();
+        for (dcl, (w, b)) in decls.iter().zip(&q) {
+            m.bind_named(&dcl.wname, w).unwrap();
+            m.bind_named(&dcl.bname, b).unwrap();
+        }
+        m.execute_verified().expect("verified execution");
+        let got = m.read_named(&h.program.buffers[h.out].name).unwrap().to_vec();
+        let want = fg.forward(&fixed.decode_vec(&qx));
+        // Exp → Recip → mixing chains three LUT approximations.
+        assert_close(fixed, &got, &want, 0.5, "attention");
+    }
+
+    #[test]
+    fn attention_batch_rows_are_independent() {
+        // A batch-2 forward must be bit-identical to two batch-1
+        // forwards concatenated: no cross-row leakage in the lowering.
+        let fixed = FixedSpec::q(8).saturating();
+        let (seq, d) = (3, 2);
+        let mut s = GraphSpec::new("attn", seq * d, fixed, LutParams::training(fixed));
+        s.attention(INPUT, seq, d);
+        let mut rng = Rng::new(16);
+        let fg = FloatGraph::init(&s, &mut rng);
+        let q = fg.quantized();
+        let qx = rand_x(fixed, &mut rng, 2 * seq * d);
+        let both = run_forward(&s, &q, &qx, 2);
+        let row0 = run_forward(&s, &q, &qx[..seq * d], 1);
+        let row1 = run_forward(&s, &q, &qx[seq * d..], 1);
+        assert_eq!(both[..seq * d], row0[..], "row 0 leaked");
+        assert_eq!(both[seq * d..], row1[..], "row 1 leaked");
+    }
+
+    // ---- typed lowering errors ----
+
+    #[test]
+    fn conv_not_first_is_a_typed_training_error() {
+        let fixed = FixedSpec::q(9).saturating();
+        let geom = Conv2dGeom { in_h: 4, in_w: 4, in_c: 1, out_c: 2, kh: 2, kw: 2, stride: 1 };
+        let mut s = GraphSpec::new("cv", 16, fixed, LutParams::training(fixed));
+        let a = s.activation(INPUT, ActKind::Relu);
+        s.conv2d(a, geom);
+        match lower_graph_train(&s, 1, 1.0 / 64.0) {
+            Err(LowerError::TrainUnsupported { op, .. }) => assert_eq!(op, 1),
+            other => panic!("want TrainUnsupported, got {other:?}"),
+        }
+        // The same graph still lowers for inference.
+        lower_graph_forward(&s, 1).unwrap();
+    }
+
+    #[test]
+    fn attention_wider_than_a_column_is_a_typed_training_error() {
+        let fixed = FixedSpec::q(8).saturating();
+        let (seq, d) = (300, 2);
+        let mut s = GraphSpec::new("wide_attn", seq * d, fixed, LutParams::training(fixed));
+        s.attention(INPUT, seq, d);
+        assert_eq!(
+            lower_graph_train(&s, 2, 1.0 / 64.0).unwrap_err(),
+            LowerError::TrainingTooWide(600)
+        );
+    }
+
+    #[test]
+    fn param_free_graph_is_a_typed_training_error() {
+        let fixed = FixedSpec::q(9).saturating();
+        let mut s = GraphSpec::new("np", 4, fixed, LutParams::training(fixed));
+        s.activation(INPUT, ActKind::Tanh);
+        assert_eq!(lower_graph_train(&s, 1, 1.0 / 64.0).unwrap_err(), LowerError::NoParams);
+    }
+
+    #[test]
+    fn normalization_one_over_n_underflow_is_typed() {
+        // At Q7 the constant 1/512 quantises to zero — surfaced as a
+        // typed error instead of silently zeroing every group.
+        let fixed = FixedSpec::q(7).saturating();
+        let mut s = GraphSpec::new("uf", 512, fixed, LutParams::training(fixed));
+        s.normalization(INPUT, 512);
+        match lower_graph_forward(&s, 1) {
+            Err(LowerError::ConstUnderflow { what, .. }) => {
+                assert_eq!(what, "normalization 1/n");
+            }
+            other => panic!("want ConstUnderflow, got {other:?}"),
+        }
+    }
+}

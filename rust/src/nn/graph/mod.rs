@@ -1,0 +1,47 @@
+//! The operator-graph IR: compile *any* network shape — not just the
+//! fixed `MlpSpec` topology — onto the MVM/ActPro processor groups.
+//!
+//! The paper's pitch is one flexible structure that trains and tests
+//! "any neural network" on the processor groups; this subsystem is the
+//! compiler layer that makes good on it. A [`GraphSpec`] is a small
+//! typed dataflow graph of per-sample tensor values (shape + the net's
+//! `FixedSpec`) connected by operators:
+//!
+//! * [`OpKind::Linear`] — dense `x·W + b` (the MLP building block),
+//! * [`OpKind::Activation`] — LUT activation over a value,
+//! * [`OpKind::ElemAdd`] / [`OpKind::ElemMul`] — residual / gating
+//!   elementwise combinators,
+//! * [`OpKind::Normalization`] — layernorm-style row normalisation
+//!   built from sums, elementwise ops, and an `Rsqrt` LUT (the ISA has
+//!   no divide),
+//! * [`OpKind::Conv2d`] — 2-D convolution lowered via im2col onto the
+//!   existing chunked-dot machinery,
+//! * [`OpKind::Attention`] — a single-head attention block assembled
+//!   from linear projections, an `Exp`/`Recip` softmax LUT pair, and
+//!   elementwise primitives.
+//!
+//! [`lower::lower_graph_forward`] / [`lower::lower_graph_train`] emit
+//! the same kind of MVM/ActPro vector [`crate::assembler::program::Program`]s
+//! `nn::lowering` produced for MLPs — and for a graph built by
+//! [`crate::nn::MlpSpec::to_graph`] the emitted programs are
+//! **bit-identical** to the legacy MLP lowering (asserted by
+//! `rust/tests/graph.rs`), which is why the old entry points are now
+//! thin `#[deprecated]` shims over this path.
+//!
+//! [`float::FloatGraph`] is the float64 forward oracle (the graph twin
+//! of `nn::float_ref::FloatMlp`) used by the `graph` fuzz family, and
+//! [`trainer::GraphTrainer`] is the board training engine behind
+//! `Session` for graph artifacts (the graph twin of `nn::Trainer`).
+//!
+//! See DESIGN.md §Operator IR for the data model, the per-op lowering
+//! contract, and the `MlpSpec` migration table.
+
+pub mod float;
+pub mod ir;
+pub mod lower;
+pub mod trainer;
+
+pub use float::FloatGraph;
+pub use ir::{Conv2dGeom, GraphError, GraphSpec, Op, OpKind, ParamDecl, ValueId, INPUT};
+pub use lower::{lower_graph_forward, lower_graph_train, lower_mlp_forward, lower_mlp_train};
+pub use trainer::GraphTrainer;

@@ -1,0 +1,433 @@
+//! The graph trainer: drives on-device training and inference of an
+//! operator-graph net ([`GraphSpec`]) on a simulated Matrix Machine —
+//! the graph twin of [`crate::nn::trainer::Trainer`], sharing its
+//! [`TrainConfig`]/[`TrainError`]/[`TrainReport`] surface so the
+//! session layer can hold either engine behind one API.
+//!
+//! Parameters are `(weights, bias)` pairs in [`GraphSpec::param_decls`]
+//! order (the only difference from the MLP trainer, whose parameters
+//! are per-layer by construction). Everything else — the batch-ladder
+//! forward variants, the params-version dirty tracking, the
+//! deterministic batch-sampling RNG with `skip_steps` resume — is
+//! behaviourally identical, and for an `MlpSpec::to_graph` net the
+//! lowered programs are bit-identical too.
+
+use super::float::FloatGraph;
+use super::ir::GraphSpec;
+use super::lower::{lower_graph_forward, lower_graph_train};
+use crate::nn::dataset::{self, Dataset};
+use crate::nn::lowering::LoweredMlp;
+use crate::nn::trainer::{LossPoint, TrainConfig, TrainError, TrainReport};
+use crate::hw::{FpgaDevice, MatrixMachine, RunStats};
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// One right-sized forward instance of the graph trainer's batch
+/// ladder (see [`crate::nn::trainer::Trainer::infer_rows`]).
+struct FwdVariant {
+    lowered: LoweredMlp,
+    machine: MatrixMachine,
+    synced: u64,
+}
+
+/// Drives one operator-graph net's training + evaluation on one
+/// simulated board.
+pub struct GraphTrainer {
+    /// Network graph.
+    pub spec: GraphSpec,
+    /// Board.
+    pub device: FpgaDevice,
+    /// Config.
+    pub cfg: TrainConfig,
+    train: LoweredMlp,
+    fwd: LoweredMlp,
+    train_machine: MatrixMachine,
+    fwd_machine: MatrixMachine,
+    fwd_variants: HashMap<usize, FwdVariant>,
+    params_version: u64,
+    fwd_synced: u64,
+    rng: Rng,
+}
+
+impl GraphTrainer {
+    /// Lower programs, compile machines, and initialise parameters
+    /// (He-scaled, quantised).
+    pub fn build(
+        spec: GraphSpec,
+        device: FpgaDevice,
+        cfg: TrainConfig,
+    ) -> Result<GraphTrainer, TrainError> {
+        let train = lower_graph_train(&spec, cfg.batch, cfg.lr)?;
+        let fwd = lower_graph_forward(&spec, cfg.batch)?;
+        let train_machine = MatrixMachine::new(device, &train.program)?;
+        let fwd_machine = MatrixMachine::new(device, &fwd.program)?;
+        let seed = cfg.seed;
+        let mut t =
+            GraphTrainer::from_parts(spec, device, cfg, train, fwd, train_machine, fwd_machine);
+        t.init_params(seed)?;
+        Ok(t)
+    }
+
+    /// Assemble from pre-lowered programs and pre-built machines (the
+    /// artifact plan-reuse path). Parameters are **not** initialised;
+    /// call [`GraphTrainer::init_params`] or [`GraphTrainer::set_params`].
+    pub fn from_parts(
+        spec: GraphSpec,
+        device: FpgaDevice,
+        cfg: TrainConfig,
+        train: LoweredMlp,
+        fwd: LoweredMlp,
+        train_machine: MatrixMachine,
+        fwd_machine: MatrixMachine,
+    ) -> GraphTrainer {
+        debug_assert_eq!(train.program.name, train_machine.program_name());
+        debug_assert_eq!(fwd.program.name, fwd_machine.program_name());
+        let seed = cfg.seed;
+        GraphTrainer {
+            spec,
+            device,
+            cfg,
+            train,
+            fwd,
+            train_machine,
+            fwd_machine,
+            fwd_variants: HashMap::new(),
+            params_version: 1,
+            fwd_synced: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// (Re-)initialise on-device parameters from `seed` (He-scaled
+    /// float init, quantised) and reset the batch-sampling RNG to the
+    /// same stream.
+    pub fn init_params(&mut self, seed: u64) -> Result<(), TrainError> {
+        self.rng = Rng::new(seed);
+        let init = FloatGraph::init(&self.spec, &mut self.rng);
+        self.set_params(&init.quantized())
+    }
+
+    /// Reset the batch-sampling RNG without touching on-device
+    /// parameters.
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+    }
+
+    /// Fast-forward the batch sampler past `steps` already-trained
+    /// steps (the deterministic resume cursor — see
+    /// [`crate::nn::trainer::Trainer::skip_steps`]).
+    pub fn skip_steps(&mut self, steps: usize) {
+        self.rng.skip(steps as u64 * self.cfg.batch as u64);
+    }
+
+    /// Bind explicit parameters: one `(weights, biases)` pair per
+    /// [`GraphSpec::param_decls`] entry.
+    pub fn set_params(&mut self, params: &[(Vec<i16>, Vec<i16>)]) -> Result<(), TrainError> {
+        for (i, (w, b)) in params.iter().enumerate() {
+            self.train_machine.write_id(self.train.weights[i], w)?;
+            self.train_machine.write_id(self.train.biases[i], b)?;
+        }
+        self.params_version += 1;
+        Ok(())
+    }
+
+    /// Current on-device parameters, in decl order.
+    pub fn params(&self) -> Vec<(Vec<i16>, Vec<i16>)> {
+        self.train
+            .weights
+            .iter()
+            .zip(&self.train.biases)
+            .map(|(&w, &b)| {
+                (self.train_machine.read_id(w).to_vec(), self.train_machine.read_id(b).to_vec())
+            })
+            .collect()
+    }
+
+    /// Current on-device parameters split into parallel weight/bias
+    /// lists (the session layer's `weights()` shape).
+    pub fn weights(&self) -> (Vec<Vec<i16>>, Vec<Vec<i16>>) {
+        self.params().into_iter().unzip()
+    }
+
+    /// The machine executing the training program (typed-handle I/O).
+    pub(crate) fn primary_machine(&self) -> &MatrixMachine {
+        &self.train_machine
+    }
+
+    /// Mutable access to the training machine.
+    pub(crate) fn primary_machine_mut(&mut self) -> &mut MatrixMachine {
+        &mut self.train_machine
+    }
+
+    /// Mark the forward machines' parameter copies stale (after a
+    /// direct handle write bypassed [`GraphTrainer::set_params`]).
+    pub(crate) fn mark_params_dirty(&mut self) {
+        self.params_version += 1;
+    }
+
+    /// Execute the training program once on the currently bound
+    /// tensors (parameters mutate on-device).
+    pub(crate) fn step_primary(&mut self) -> RunStats {
+        self.params_version += 1;
+        self.train_machine.execute()
+    }
+
+    fn check_dims(&self, ds: &Dataset) -> Result<(), TrainError> {
+        if ds.dim() != self.spec.input_dim() || ds.classes != self.spec.output_dim() {
+            return Err(TrainError::DimMismatch(
+                ds.dim(),
+                ds.classes,
+                self.spec.input_dim(),
+                self.spec.output_dim(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Run `cfg.steps` SGD steps over random mini-batches of `ds` —
+    /// the same loop (and the same sample stream for the same seed) as
+    /// the MLP trainer.
+    pub fn train(&mut self, ds: &Dataset) -> Result<TrainReport, TrainError> {
+        self.check_dims(ds)?;
+        let f = self.spec.fixed;
+        let batch = self.cfg.batch;
+        let out_dim = self.spec.output_dim();
+        let y_id = self.train.y.expect("training program declares targets");
+        let loss_id = self.train.loss.expect("training program declares a loss lane");
+        let mut stats = RunStats::default();
+        let mut curve = Vec::new();
+        let mut ids: Vec<usize> = Vec::with_capacity(batch);
+        for step in 0..self.cfg.steps {
+            ids.clear();
+            for _ in 0..batch {
+                ids.push(self.rng.gen_range(ds.len() as u64) as usize);
+            }
+            let (bx, by) = ds.batch(&ids);
+            let qx = f.encode_vec(&bx);
+            let qy = f.encode_vec(&by);
+            self.train_machine.write_id(self.train.x, &qx)?;
+            self.train_machine.write_id(y_id, &qy)?;
+            let st = self.train_machine.execute();
+            stats.add(&st);
+            if step % self.cfg.log_every == 0 || step + 1 == self.cfg.steps {
+                let o = self.train_machine.read_id(self.train.out);
+                let mut loss = 0.0;
+                for (i, &q) in o.iter().enumerate() {
+                    let d = f.to_f64(q) - by[i];
+                    loss += d * d;
+                }
+                loss /= (batch * out_dim) as f64;
+                let device_loss = f.to_f64(self.train_machine.read_id(loss_id)[0]);
+                curve.push(LossPoint { step, loss, device_loss });
+            }
+        }
+        if self.cfg.steps > 0 {
+            self.params_version += 1;
+        }
+        Ok(TrainReport {
+            curve,
+            stats,
+            sim_seconds: stats.seconds(&self.device),
+            steps: self.cfg.steps,
+        })
+    }
+
+    /// Refresh the forward machine's parameters if stale.
+    fn sync_fwd_params(&mut self) -> Result<(), TrainError> {
+        if self.fwd_synced != self.params_version {
+            for (i, (w, b)) in self.params().iter().enumerate() {
+                self.fwd_machine.write_id(self.fwd.weights[i], w)?;
+                self.fwd_machine.write_id(self.fwd.biases[i], b)?;
+            }
+            self.fwd_synced = self.params_version;
+        }
+        Ok(())
+    }
+
+    /// One inference pass over a quantised `cfg.batch × input_dim`
+    /// batch with the current on-device parameters.
+    pub fn infer(&mut self, qx: &[i16]) -> Result<(Vec<i16>, RunStats), TrainError> {
+        self.sync_fwd_params()?;
+        self.fwd_machine.write_id(self.fwd.x, qx)?;
+        let stats = self.fwd_machine.execute();
+        Ok((self.fwd_machine.read_id(self.fwd.out).to_vec(), stats))
+    }
+
+    /// One forward pass over a quantised `rows × input_dim`
+    /// micro-batch via the lazily-lowered forward batch ladder (the
+    /// serving runtime's variable-size micro-batch path — every graph
+    /// op maps rows independently, so micro-batch size never changes a
+    /// bit of any row's output).
+    pub fn infer_rows(
+        &mut self,
+        rows: usize,
+        qx: &[i16],
+    ) -> Result<(Vec<i16>, RunStats), TrainError> {
+        if rows == self.cfg.batch {
+            return self.infer(qx);
+        }
+        if let std::collections::hash_map::Entry::Vacant(slot) = self.fwd_variants.entry(rows) {
+            let lowered = lower_graph_forward(&self.spec, rows)?;
+            let machine = MatrixMachine::new(self.device, &lowered.program)?;
+            slot.insert(FwdVariant { lowered, machine, synced: 0 });
+        }
+        if self.fwd_variants[&rows].synced != self.params_version {
+            let params = self.params();
+            let version = self.params_version;
+            let v = self.fwd_variants.get_mut(&rows).expect("variant built above");
+            for (i, (w, b)) in params.iter().enumerate() {
+                v.machine.write_id(v.lowered.weights[i], w)?;
+                v.machine.write_id(v.lowered.biases[i], b)?;
+            }
+            v.synced = version;
+        }
+        let v = self.fwd_variants.get_mut(&rows).expect("variant built above");
+        v.machine.write_id(v.lowered.x, qx)?;
+        let stats = v.machine.execute();
+        Ok((v.machine.read_id(v.lowered.out).to_vec(), stats))
+    }
+
+    /// Classification accuracy of the current parameters over `ds`
+    /// (forward program only; chunking shared with every batched
+    /// forward path via [`dataset::chunk_ranges`]).
+    pub fn evaluate(&mut self, ds: &Dataset) -> Result<(f64, RunStats), TrainError> {
+        self.check_dims(ds)?;
+        let f = self.spec.fixed;
+        let batch = self.cfg.batch;
+        let mut stats = RunStats::default();
+        let mut correct = 0usize;
+        for r in dataset::chunk_ranges(ds.len(), batch) {
+            let qx = ds.encode_rows(r.clone(), f);
+            let (out, st) = self.infer_rows(r.len(), &qx)?;
+            stats.add(&st);
+            correct += ds.count_correct(r, &out, f);
+        }
+        Ok((correct as f64 / ds.len().max(1) as f64, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FixedSpec;
+    use crate::nn::graph::ir::INPUT;
+    use crate::nn::lut::ActKind;
+    use crate::nn::mlp::{LutParams, MlpSpec};
+    use crate::nn::trainer::Trainer;
+
+    fn fixed() -> FixedSpec {
+        FixedSpec::q(10).saturating()
+    }
+
+    fn mlp(dims: &[usize]) -> MlpSpec {
+        MlpSpec::from_dims(
+            "gt",
+            dims,
+            ActKind::Relu,
+            ActKind::Identity,
+            fixed(),
+            LutParams::training(fixed()),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn graph_trainer_matches_mlp_trainer_bit_exactly() {
+        // An MlpSpec trained through the legacy Trainer and its
+        // to_graph() twin trained through GraphTrainer must produce
+        // identical parameters, loss curves, and evaluations: the
+        // graph path's programs are bit-identical, the sample streams
+        // share one RNG recipe, and the init draws the same weights
+        // in the same order.
+        let ds = dataset::blobs(128, 3, 4, 77);
+        let s = mlp(&[4, 12, 3]);
+        let cfg = TrainConfig { batch: 8, lr: 1.0 / 256.0, steps: 40, seed: 9, log_every: 10 };
+        let mut t = Trainer::build(s.clone(), FpgaDevice::selected(), cfg.clone()).unwrap();
+        let mut g = GraphTrainer::build(s.to_graph(), FpgaDevice::selected(), cfg).unwrap();
+        let (tw, tb) = t.weights();
+        let (gw, gb) = g.weights();
+        assert_eq!((tw, tb), (gw, gb), "init diverged");
+        let rt = t.train(&ds).unwrap();
+        let rg = g.train(&ds).unwrap();
+        assert_eq!(t.weights(), g.weights(), "training diverged");
+        assert_eq!(rt.curve, rg.curve, "loss curves diverged");
+        assert_eq!(rt.stats.cycles, rg.stats.cycles, "cycle counts diverged");
+        let (at, _) = t.evaluate(&ds).unwrap();
+        let (ag, _) = g.evaluate(&ds).unwrap();
+        assert_eq!(at, ag, "evaluation diverged");
+    }
+
+    #[test]
+    fn residual_net_trains_and_infers() {
+        // linear → relu → linear, with a residual add around the
+        // middle: trains to better-than-chance on blobs and infers
+        // deterministically row-by-row.
+        let mut spec = GraphSpec::new("res", 4, fixed(), LutParams::training(fixed()));
+        let h = spec.linear(INPUT, 8);
+        let a = spec.activation(h, ActKind::Relu);
+        let r = spec.add(a, h);
+        spec.linear(r, 3);
+        let ds = dataset::blobs(192, 3, 4, 55);
+        let cfg = TrainConfig { batch: 8, lr: 1.0 / 256.0, steps: 120, seed: 4, log_every: 20 };
+        let mut g = GraphTrainer::build(spec, FpgaDevice::selected(), cfg).unwrap();
+        let (acc0, _) = g.evaluate(&ds).unwrap();
+        g.train(&ds).unwrap();
+        let (acc1, _) = g.evaluate(&ds).unwrap();
+        assert!(acc1 > 0.6 && acc1 >= acc0, "accuracy {acc0} → {acc1}");
+        // infer_rows ladder equals the primary batch bit-exactly
+        let f = g.spec.fixed;
+        let qx = ds.encode_rows(0..8, f);
+        let (full, _) = g.infer(&qx).unwrap();
+        let (head, _) = g.infer_rows(5, &ds.encode_rows(0..5, f)).unwrap();
+        let (tail, _) = g.infer_rows(3, &ds.encode_rows(5..8, f)).unwrap();
+        assert_eq!([head, tail].concat(), full);
+    }
+
+    #[test]
+    fn set_params_is_visible_immediately() {
+        let mut spec = GraphSpec::new("z", 2, fixed(), LutParams::training(fixed()));
+        let h = spec.linear(INPUT, 4);
+        let a = spec.activation(h, ActKind::Relu);
+        spec.linear(a, 2);
+        let cfg = TrainConfig { batch: 4, lr: 1.0 / 64.0, steps: 0, seed: 2, log_every: 1 };
+        let mut g = GraphTrainer::build(spec, FpgaDevice::selected(), cfg).unwrap();
+        let qx = vec![512i16; 4 * 2];
+        let (o1, _) = g.infer(&qx).unwrap();
+        let (o1b, _) = g.infer(&qx).unwrap();
+        assert_eq!(o1, o1b, "steady-state infer must be deterministic");
+        let zero: Vec<(Vec<i16>, Vec<i16>)> = g
+            .params()
+            .into_iter()
+            .map(|(w, b)| (vec![0; w.len()], vec![0; b.len()]))
+            .collect();
+        g.set_params(&zero).unwrap();
+        let (o2, _) = g.infer(&qx).unwrap();
+        assert!(o2.iter().all(|&v| v == 0), "stale parameters served: {o2:?}");
+    }
+
+    #[test]
+    fn skip_steps_resumes_bit_exactly() {
+        let mut spec = GraphSpec::new("rs", 2, fixed(), LutParams::training(fixed()));
+        let h = spec.linear(INPUT, 6);
+        let a = spec.activation(h, ActKind::Relu);
+        spec.linear(a, 2);
+        let ds = dataset::xor(64, 8);
+        let cfg = TrainConfig { batch: 8, lr: 1.0 / 128.0, steps: 7, seed: 31, log_every: 2 };
+        let mut straight =
+            GraphTrainer::build(spec.clone(), FpgaDevice::selected(), cfg.clone()).unwrap();
+        straight.train(&ds).unwrap();
+
+        let mut head =
+            GraphTrainer::build(spec.clone(), FpgaDevice::selected(), cfg.clone()).unwrap();
+        head.cfg.steps = 3;
+        head.train(&ds).unwrap();
+        let at3 = head.params();
+
+        let mut resumed = GraphTrainer::build(spec, FpgaDevice::selected(), cfg).unwrap();
+        resumed.set_params(&at3).unwrap();
+        resumed.skip_steps(3);
+        resumed.cfg.steps = 4;
+        resumed.train(&ds).unwrap();
+        assert_eq!(resumed.params(), straight.params(), "resume diverged");
+    }
+}

@@ -28,8 +28,9 @@
 //! back).
 
 use super::lut::{ActKind, ActLut};
-use super::mlp::MlpSpec;
-use crate::assembler::program::{BufId, BufKind, LaneOp, LutId, Program, Step, View, Wave};
+use super::mlp::{LutParams, MlpSpec};
+use crate::assembler::program::{BufId, BufKind, LaneOp, LutId, Program, ProgramError, Step, View, Wave};
+use crate::fixed::FixedSpec;
 use crate::hw::COLUMN_LEN;
 use crate::isa::Opcode;
 use thiserror::Error;
@@ -40,15 +41,41 @@ pub enum LowerError {
     /// Spec invalid.
     #[error("bad MLP spec: {0}")]
     Spec(#[from] super::mlp::SpecError),
+    /// Graph invalid.
+    #[error("bad graph: {0}")]
+    Graph(#[from] super::graph::GraphError),
     /// Batch exceeds a column.
     #[error("batch {0} out of range 1..={COLUMN_LEN}")]
     BadBatch(usize),
     /// Learning rate quantises to zero.
     #[error("learning rate {0} is below the fixed-point resolution")]
     LrUnderflow(f64),
+    /// A lowering constant quantises to zero.
+    #[error("{what} {value} is below the fixed-point resolution")]
+    ConstUnderflow {
+        /// Which constant.
+        what: &'static str,
+        /// The real value that underflowed.
+        value: f64,
+    },
     /// Training is not chunked: every layer dim must fit one column.
     #[error("training requires layer dims ≤ {COLUMN_LEN} (layer has {0})")]
     TrainingTooWide(usize),
+    /// The op has no on-device backward recipe in this position.
+    #[error("op {op}: training unsupported: {why}")]
+    TrainUnsupported {
+        /// Graph op index.
+        op: usize,
+        /// What is missing.
+        why: &'static str,
+    },
+    /// A train step over a graph with nothing to update.
+    #[error("graph has no trainable parameters")]
+    NoParams,
+    /// The emitted program failed validation — a lowering bug surfaced
+    /// as a typed error instead of a panic.
+    #[error("lowered program failed validation: {0}")]
+    Invalid(#[from] ProgramError),
 }
 
 /// A lowered MLP program with its buffer handles.
@@ -72,23 +99,37 @@ pub struct LoweredMlp {
     pub loss: Option<BufId>,
 }
 
-struct Ctx {
-    p: Program,
-    act_luts: Vec<(ActKind, bool, LutId)>,
-    current_lut: Option<LutId>,
+/// Shared emission context: the program under construction plus the
+/// LUT dedup/swap state. Used by both the legacy MLP emission kept
+/// below as the bit-identity reference and the operator-graph lowering
+/// in [`super::graph::lower`].
+pub(crate) struct Ctx {
+    pub(crate) p: Program,
+    pub(crate) act_luts: Vec<(ActKind, bool, LutId)>,
+    pub(crate) current_lut: Option<LutId>,
 }
 
 impl Ctx {
-    fn lut_for(&mut self, spec: &MlpSpec, kind: ActKind, deriv: bool) -> LutId {
+    pub(crate) fn new(name: &str, fixed: FixedSpec) -> Ctx {
+        Ctx { p: Program::new(name, fixed), act_luts: Vec::new(), current_lut: None }
+    }
+
+    pub(crate) fn lut_for(
+        &mut self,
+        fixed: FixedSpec,
+        lp: LutParams,
+        kind: ActKind,
+        deriv: bool,
+    ) -> LutId {
         if let Some(&(_, _, id)) =
             self.act_luts.iter().find(|(k, d, _)| *k == kind && *d == deriv)
         {
             return id;
         }
-        let lut = if spec.lut.interp {
-            ActLut::build(kind, deriv, spec.fixed, spec.lut.mode, spec.lut.shift).with_interp()
+        let lut = if lp.interp {
+            ActLut::build(kind, deriv, fixed, lp.mode, lp.shift).with_interp()
         } else {
-            ActLut::build(kind, deriv, spec.fixed, spec.lut.mode, spec.lut.shift)
+            ActLut::build(kind, deriv, fixed, lp.mode, lp.shift)
         };
         let id = self.p.lut(lut);
         self.act_luts.push((kind, deriv, id));
@@ -96,7 +137,7 @@ impl Ctx {
     }
 
     /// Emit an activation wave, swapping the ACTPRO table if needed.
-    fn act_wave(&mut self, lut: LutId, lanes: Vec<LaneOp>, vec_len: usize) {
+    pub(crate) fn act_wave(&mut self, lut: LutId, lanes: Vec<LaneOp>, vec_len: usize) {
         if self.current_lut != Some(lut) {
             self.p.steps.push(Step::LoadLut(lut));
             self.current_lut = Some(lut);
@@ -109,23 +150,23 @@ impl Ctx {
         }));
     }
 
-    fn wave(&mut self, op: Opcode, vec_len: usize, lanes: Vec<LaneOp>) {
+    pub(crate) fn wave(&mut self, op: Opcode, vec_len: usize, lanes: Vec<LaneOp>) {
         self.p.steps.push(Step::Wave(Wave { op, vec_len, lut: None, lanes }));
     }
 }
 
 /// Row view of a `(rows, cols)` row-major buffer.
-fn row(buf: BufId, cols: usize, r: usize) -> View {
+pub(crate) fn row(buf: BufId, cols: usize, r: usize) -> View {
     View::contiguous(buf, r * cols, cols)
 }
 
 /// Column view of a `(rows, cols)` row-major buffer.
-fn col(buf: BufId, rows: usize, cols: usize, c: usize) -> View {
+pub(crate) fn col(buf: BufId, rows: usize, cols: usize, c: usize) -> View {
     View { buf, offset: c, len: rows, stride: cols }
 }
 
 /// Single-lane view.
-fn lane(buf: BufId, i: usize) -> View {
+pub(crate) fn lane(buf: BufId, i: usize) -> View {
     View::contiguous(buf, i, 1)
 }
 
@@ -167,11 +208,13 @@ fn declare_net(ctx: &mut Ctx, spec: &MlpSpec, batch: usize, train: bool) -> Lowe
 /// [`lower_forward`] batch; the serving runtime rounds each micro-batch
 /// up to the smallest bucket that fits, so one net compiles a small
 /// number of forward plans instead of one per observed batch size.
-pub fn forward_buckets(max_batch: usize) -> Vec<usize> {
-    assert!(
-        max_batch >= 1 && max_batch <= COLUMN_LEN,
-        "max_batch {max_batch} out of range 1..={COLUMN_LEN}"
-    );
+///
+/// A `max_batch` outside `1..=COLUMN_LEN` is a typed
+/// [`LowerError::BadBatch`] (this used to panic).
+pub fn forward_buckets(max_batch: usize) -> Result<Vec<usize>, LowerError> {
+    if max_batch == 0 || max_batch > COLUMN_LEN {
+        return Err(LowerError::BadBatch(max_batch));
+    }
     let mut out = Vec::new();
     let mut b = 1;
     while b < max_batch {
@@ -179,11 +222,11 @@ pub fn forward_buckets(max_batch: usize) -> Vec<usize> {
         b *= 2;
     }
     out.push(max_batch);
-    out
+    Ok(out)
 }
 
 /// Split `0..n` into segments of at most [`COLUMN_LEN`] lanes.
-fn segments(n: usize) -> Vec<(usize, usize)> {
+pub(crate) fn segments(n: usize) -> Vec<(usize, usize)> {
     let mut out = Vec::new();
     let mut off = 0;
     while off < n {
@@ -251,7 +294,7 @@ fn emit_forward(ctx: &mut Ctx, spec: &MlpSpec, h: &LoweredMlp) {
             }
         }
         // z row += bias; o = A(z) — segment-wise over wide outputs.
-        let lut = ctx.lut_for(spec, layer.act, false);
+        let lut = ctx.lut_for(spec.fixed, spec.lut, layer.act, false);
         for &(s_off, s_len) in &segments(n_out) {
             let lanes = (0..batch)
                 .map(|bi| LaneOp {
@@ -279,16 +322,37 @@ fn emit_forward(ctx: &mut Ctx, spec: &MlpSpec, h: &LoweredMlp) {
 }
 
 /// Lower inference: forward pass over a batch.
+///
+/// Deprecated shim: `MlpSpec` now lowers *through the operator-graph
+/// IR* ([`super::graph::lower_mlp_forward`]), which emits bit-identical
+/// programs (asserted by `rust/tests/graph.rs` against
+/// [`legacy_lower_forward`], the frozen pre-graph emission).
+#[deprecated(note = "use nn::graph::lower_mlp_forward — MlpSpec lowers through the graph IR")]
 pub fn lower_forward(spec: &MlpSpec, batch: usize) -> Result<LoweredMlp, LowerError> {
+    super::graph::lower_mlp_forward(spec, batch)
+}
+
+/// Lower one SGD training step: forward + backprop + in-place update,
+/// with on-device loss.
+///
+/// Deprecated shim over [`super::graph::lower_mlp_train`]; see
+/// [`lower_forward`].
+#[deprecated(note = "use nn::graph::lower_mlp_train — MlpSpec lowers through the graph IR")]
+pub fn lower_train_step(spec: &MlpSpec, batch: usize, lr: f64) -> Result<LoweredMlp, LowerError> {
+    super::graph::lower_mlp_train(spec, batch, lr)
+}
+
+/// The frozen pre-graph forward emission, kept verbatim as the
+/// bit-identity oracle for the graph path (`rust/tests/graph.rs`
+/// asserts [`super::graph::lower_mlp_forward`] reproduces its programs
+/// field-for-field). Not deprecated — it *is* the reference — but new
+/// code should lower through the graph.
+pub fn legacy_lower_forward(spec: &MlpSpec, batch: usize) -> Result<LoweredMlp, LowerError> {
     spec.check()?;
     if batch == 0 || batch > COLUMN_LEN {
         return Err(LowerError::BadBatch(batch));
     }
-    let mut ctx = Ctx {
-        p: Program::new(&format!("{}_fwd_b{batch}", spec.name), spec.fixed),
-        act_luts: Vec::new(),
-        current_lut: None,
-    };
+    let mut ctx = Ctx::new(&format!("{}_fwd_b{batch}", spec.name), spec.fixed);
     let mut h = declare_net(&mut ctx, spec, batch, false);
     emit_forward(&mut ctx, spec, &h);
     h.program = ctx.p;
@@ -296,9 +360,13 @@ pub fn lower_forward(spec: &MlpSpec, batch: usize) -> Result<LoweredMlp, LowerEr
     Ok(h)
 }
 
-/// Lower one SGD training step: forward + backprop + in-place update,
-/// with on-device loss.
-pub fn lower_train_step(spec: &MlpSpec, batch: usize, lr: f64) -> Result<LoweredMlp, LowerError> {
+/// The frozen pre-graph train-step emission; see
+/// [`legacy_lower_forward`].
+pub fn legacy_lower_train_step(
+    spec: &MlpSpec,
+    batch: usize,
+    lr: f64,
+) -> Result<LoweredMlp, LowerError> {
     spec.check()?;
     if batch == 0 || batch > COLUMN_LEN {
         return Err(LowerError::BadBatch(batch));
@@ -314,11 +382,7 @@ pub fn lower_train_step(spec: &MlpSpec, batch: usize, lr: f64) -> Result<Lowered
     if lr_q == 0 {
         return Err(LowerError::LrUnderflow(lr));
     }
-    let mut ctx = Ctx {
-        p: Program::new(&format!("{}_train_b{batch}", spec.name), spec.fixed),
-        act_luts: Vec::new(),
-        current_lut: None,
-    };
+    let mut ctx = Ctx::new(&format!("{}_train_b{batch}", spec.name), spec.fixed);
     let mut h = declare_net(&mut ctx, spec, batch, true);
     let nl = spec.layers.len();
     let out_dim = spec.output_dim();
@@ -394,7 +458,7 @@ pub fn lower_train_step(spec: &MlpSpec, batch: usize, lr: f64) -> Result<Lowered
             if l == 0 { h.x } else { ctx.p.buffer_named(&format!("o{}", l - 1)).unwrap() };
 
         // δ_l = d_l ⊙ A'(z_l)
-        let dlut = ctx.lut_for(spec, layer.act, true);
+        let dlut = ctx.lut_for(spec.fixed, spec.lut, layer.act, true);
         let lanes = (0..batch)
             .map(|bi| LaneOp { a: row(z, n_out, bi), b: None, out: row(g, n_out, bi) })
             .collect();
@@ -491,6 +555,10 @@ pub fn lower_train_step(spec: &MlpSpec, batch: usize, lr: f64) -> Result<Lowered
 #[cfg(test)]
 mod tests {
     use super::*;
+    // These tests pin the *legacy* emission (the bit-identity oracle);
+    // the graph path is exercised in nn::graph and rust/tests/graph.rs.
+    use super::legacy_lower_forward as lower_forward;
+    use super::legacy_lower_train_step as lower_train_step;
     use crate::fixed::FixedSpec;
     use crate::hw::{FpgaDevice, MatrixMachine};
     use crate::nn::lut::AddrMode;
@@ -740,14 +808,14 @@ mod tests {
 
     #[test]
     fn forward_buckets_cover_every_micro_batch_size() {
-        assert_eq!(forward_buckets(1), vec![1]);
-        assert_eq!(forward_buckets(8), vec![1, 2, 4, 8]);
-        assert_eq!(forward_buckets(32), vec![1, 2, 4, 8, 16, 32]);
+        assert_eq!(forward_buckets(1).unwrap(), vec![1]);
+        assert_eq!(forward_buckets(8).unwrap(), vec![1, 2, 4, 8]);
+        assert_eq!(forward_buckets(32).unwrap(), vec![1, 2, 4, 8, 16, 32]);
         // non-power-of-two tops keep the full power-of-two prefix
-        assert_eq!(forward_buckets(12), vec![1, 2, 4, 8, 12]);
+        assert_eq!(forward_buckets(12).unwrap(), vec![1, 2, 4, 8, 12]);
         // every rows ∈ 1..=max has a bucket ≥ rows, and buckets lower
         for max in [1usize, 3, 8, 17, 32] {
-            let ladder = forward_buckets(max);
+            let ladder = forward_buckets(max).unwrap();
             let s = spec(&[2, 3]);
             for &b in &ladder {
                 lower_forward(&s, b).unwrap();
@@ -759,5 +827,13 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn forward_buckets_rejects_malformed_max_batch_as_typed_errors() {
+        // Both of these used to assert!-panic deep in the serving path;
+        // they now surface as LowerError (and through mfnn::Error).
+        assert_eq!(forward_buckets(0), Err(LowerError::BadBatch(0)));
+        assert_eq!(forward_buckets(COLUMN_LEN + 88), Err(LowerError::BadBatch(COLUMN_LEN + 88)));
     }
 }

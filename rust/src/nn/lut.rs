@@ -38,6 +38,12 @@ pub enum AddrMode {
     Clamp,
 }
 
+/// Guard epsilon for the unbounded table kinds ([`ActKind::Recip`],
+/// [`ActKind::Rsqrt`]): inputs below it are treated as ε so the knot
+/// values stay inside the representable range. Baked into the table at
+/// build time, so every fidelity level sees the same knots.
+pub const LUT_EPS: f64 = 1.0 / 64.0;
+
 /// Supported activation functions (and via `deriv` their derivatives).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ActKind {
@@ -49,6 +55,13 @@ pub enum ActKind {
     Tanh,
     /// Pass-through (useful for output layers / testing).
     Identity,
+    /// `e^x` — the softmax numerator table (operator-graph attention).
+    Exp,
+    /// `1 / max(x, ε)` — the softmax normaliser table (ε = [`LUT_EPS`]).
+    Recip,
+    /// `1 / sqrt(max(x, ε))` — the layernorm inverse-stddev table
+    /// (ε = [`LUT_EPS`], playing the usual layernorm ε role).
+    Rsqrt,
 }
 
 impl ActKind {
@@ -59,6 +72,9 @@ impl ActKind {
             ActKind::Sigmoid => 1.0 / (1.0 + (-x).exp()),
             ActKind::Tanh => x.tanh(),
             ActKind::Identity => x,
+            ActKind::Exp => x.exp(),
+            ActKind::Recip => 1.0 / x.max(LUT_EPS),
+            ActKind::Rsqrt => 1.0 / x.max(LUT_EPS).sqrt(),
         }
     }
 
@@ -78,6 +94,15 @@ impl ActKind {
             }
             ActKind::Tanh => 1.0 - x.tanh().powi(2),
             ActKind::Identity => 1.0,
+            ActKind::Exp => x.exp(),
+            ActKind::Recip => {
+                let c = x.max(LUT_EPS);
+                -1.0 / (c * c)
+            }
+            ActKind::Rsqrt => {
+                let c = x.max(LUT_EPS);
+                -0.5 / (c * c.sqrt())
+            }
         }
     }
 
@@ -88,6 +113,9 @@ impl ActKind {
             "sigmoid" => Some(ActKind::Sigmoid),
             "tanh" => Some(ActKind::Tanh),
             "identity" | "linear" => Some(ActKind::Identity),
+            "exp" => Some(ActKind::Exp),
+            "recip" => Some(ActKind::Recip),
+            "rsqrt" => Some(ActKind::Rsqrt),
             _ => None,
         }
     }
@@ -99,6 +127,9 @@ impl ActKind {
             ActKind::Sigmoid => "sigmoid",
             ActKind::Tanh => "tanh",
             ActKind::Identity => "identity",
+            ActKind::Exp => "exp",
+            ActKind::Recip => "recip",
+            ActKind::Rsqrt => "rsqrt",
         }
     }
 }
@@ -296,9 +327,45 @@ mod tests {
 
     #[test]
     fn all_kinds_parse_roundtrip() {
-        for k in [ActKind::Relu, ActKind::Sigmoid, ActKind::Tanh, ActKind::Identity] {
+        for k in [
+            ActKind::Relu,
+            ActKind::Sigmoid,
+            ActKind::Tanh,
+            ActKind::Identity,
+            ActKind::Exp,
+            ActKind::Recip,
+            ActKind::Rsqrt,
+        ] {
             assert_eq!(ActKind::parse(k.name()), Some(k));
         }
         assert_eq!(ActKind::parse("swish"), None);
+    }
+
+    #[test]
+    fn graph_tables_track_their_functions() {
+        // shift 2 → knots every 4/128 = 1/32 real units; interp keeps the
+        // residual error well under the tolerance oracle's band.
+        for kind in [ActKind::Exp, ActKind::Recip, ActKind::Rsqrt] {
+            let lut = ActLut::build(kind, false, S, AddrMode::Clamp, 2).with_interp();
+            // Recip/Rsqrt are steep near the ε guard; the accuracy
+            // contract is over the moderate range the lowering feeds
+            // them (sums/variances well above ε).
+            for i in 20..200 {
+                let x_real = i as f64 / 40.0; // [0.5, 5]
+                let x = S.from_f64(x_real);
+                let y = S.to_f64(lut.apply_scalar(x));
+                let want = kind.f(S.to_f64(x));
+                assert!(
+                    (y - want).abs() < 0.3,
+                    "{}({x_real}) = {y}, want {want}",
+                    kind.name()
+                );
+            }
+        }
+        // the ε guard keeps small/negative inputs finite and positive
+        let recip = ActLut::build(ActKind::Recip, false, S, AddrMode::Clamp, 2);
+        assert_eq!(recip.apply_scalar(0), S.from_f64(64.0));
+        let rsqrt = ActLut::build(ActKind::Rsqrt, false, S, AddrMode::Clamp, 2);
+        assert_eq!(rsqrt.apply_scalar(0), S.from_f64(8.0));
     }
 }

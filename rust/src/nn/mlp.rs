@@ -147,6 +147,26 @@ impl MlpSpec {
     pub fn param_bytes(&self) -> u64 {
         self.param_count() as u64 * 2
     }
+
+    /// The MLP as an operator graph: a `Linear` + `Activation` chain.
+    /// Lowering this graph emits programs **bit-identical** to the
+    /// frozen legacy MLP lowering (the pairs fuse back into dense
+    /// layers) — `MlpSpec` is now a thin builder over
+    /// [`crate::nn::graph::GraphSpec`].
+    pub fn to_graph(&self) -> crate::nn::graph::GraphSpec {
+        let mut g = crate::nn::graph::GraphSpec::new(
+            &self.name,
+            self.input_dim(),
+            self.fixed,
+            self.lut,
+        );
+        let mut v = crate::nn::graph::INPUT;
+        for layer in &self.layers {
+            v = g.linear(v, layer.outputs);
+            v = g.activation(v, layer.act);
+        }
+        g
+    }
 }
 
 #[cfg(test)]

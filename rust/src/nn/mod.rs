@@ -12,10 +12,12 @@
 pub mod checkpoint;
 pub mod dataset;
 pub mod float_ref;
+pub mod graph;
 pub mod lowering;
 pub mod lut;
 pub mod mlp;
 pub mod trainer;
 
+pub use graph::{FloatGraph, GraphSpec, GraphTrainer};
 pub use lut::{ActKind, ActLut, AddrMode};
 pub use mlp::MlpSpec;

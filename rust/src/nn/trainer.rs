@@ -12,7 +12,8 @@
 
 use super::dataset::{self, Dataset};
 use super::float_ref::FloatMlp;
-use super::lowering::{lower_forward, lower_train_step, LowerError, LoweredMlp};
+use super::graph::{lower_mlp_forward, lower_mlp_train};
+use super::lowering::{LowerError, LoweredMlp};
 use super::mlp::MlpSpec;
 use crate::hw::machine::MachineError;
 use crate::hw::{FpgaDevice, MatrixMachine, RunStats};
@@ -126,8 +127,8 @@ impl Trainer {
         device: FpgaDevice,
         cfg: TrainConfig,
     ) -> Result<Trainer, TrainError> {
-        let train = lower_train_step(&spec, cfg.batch, cfg.lr)?;
-        let fwd = lower_forward(&spec, cfg.batch)?;
+        let train = lower_mlp_train(&spec, cfg.batch, cfg.lr)?;
+        let fwd = lower_mlp_forward(&spec, cfg.batch)?;
         let train_machine = MatrixMachine::new(device, &train.program)?;
         let fwd_machine = MatrixMachine::new(device, &fwd.program)?;
         let seed = cfg.seed;
@@ -369,7 +370,7 @@ impl Trainer {
             return self.infer(qx);
         }
         if let std::collections::hash_map::Entry::Vacant(slot) = self.fwd_variants.entry(rows) {
-            let lowered = lower_forward(&self.spec, rows)?;
+            let lowered = lower_mlp_forward(&self.spec, rows)?;
             let machine = MatrixMachine::new(self.device, &lowered.program)?;
             slot.insert(FwdVariant { lowered, machine, synced: 0 });
         }

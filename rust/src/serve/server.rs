@@ -440,7 +440,8 @@ impl Server {
         if cfg.stall_timeout_cycles == 0 {
             return Err(ServeError::Config("stall_timeout_cycles must be positive".into()));
         }
-        let ladder = forward_buckets(cfg.max_batch);
+        let ladder = forward_buckets(cfg.max_batch)
+            .map_err(|e| ServeError::Config(e.to_string()))?;
         let boards = (0..cfg.boards)
             .map(|_| BoardState {
                 busy_until: 0,
@@ -477,41 +478,43 @@ impl Server {
         w: &[Vec<i16>],
         b: &[Vec<i16>],
     ) -> Result<NetId, ServeError> {
-        let spec = artifact
-            .spec()
-            .ok_or_else(|| ServeError::NotServable {
+        // Shapes come from the net's first-class identity
+        // (`NetSpec::param_shapes`), so MLP and operator-graph artifacts
+        // validate and serve through the same path.
+        let (shapes, in_dim, out_dim) = {
+            let spec = artifact.net_spec().ok_or_else(|| ServeError::NotServable {
                 net: artifact.name().to_string(),
                 why: "raw-program artifacts have no network structure".into(),
-            })?
-            .clone();
-        if w.len() != spec.layers.len() || b.len() != spec.layers.len() {
+            })?;
+            (spec.param_shapes(), spec.input_dim(), spec.output_dim())
+        };
+        if w.len() != shapes.len() || b.len() != shapes.len() {
             return Err(ServeError::NotServable {
                 net: artifact.name().to_string(),
                 why: format!(
-                    "{} weight / {} bias layers for a {}-layer net",
+                    "{} weight / {} bias tensors for a net with {} parameter pairs",
                     w.len(),
                     b.len(),
-                    spec.layers.len()
+                    shapes.len()
                 ),
             });
         }
-        for (l, layer) in spec.layers.iter().enumerate() {
-            let want_w = layer.inputs * layer.outputs;
-            if w[l].len() != want_w {
+        for (l, &(rows, cols)) in shapes.iter().enumerate() {
+            if w[l].len() != rows * cols {
                 return Err(ServeError::BadParams {
                     net: artifact.name().to_string(),
                     layer: l,
                     what: "weights",
-                    want: want_w,
+                    want: rows * cols,
                     got: w[l].len(),
                 });
             }
-            if b[l].len() != layer.outputs {
+            if b[l].len() != cols {
                 return Err(ServeError::BadParams {
                     net: artifact.name().to_string(),
                     layer: l,
                     what: "biases",
-                    want: layer.outputs,
+                    want: cols,
                     got: b[l].len(),
                 });
             }
@@ -522,8 +525,8 @@ impl Server {
             artifact,
             w: w.to_vec(),
             b: b.to_vec(),
-            in_dim: spec.input_dim(),
-            out_dim: spec.output_dim(),
+            in_dim,
+            out_dim,
             batcher: MicroBatcher::new(
                 self.cfg.max_batch,
                 self.cfg.max_wait_cycles,

@@ -3,7 +3,9 @@
 //! An [`Artifact`] is the output of [`super::Compiler`]: a validated
 //! vector [`Program`] (two for trainable nets — the training-step
 //! program plus the forward/testing program), the net's reconstructed
-//! [`MlpSpec`], the tensor [`SymbolTable`] resolved once at compile
+//! identity (a [`NetSpec`]: an [`MlpSpec`] layer list or an
+//! operator-graph [`GraphSpec`]), the tensor [`SymbolTable`] resolved
+//! once at compile
 //! time, and a per-device cache of compiled [`ExecPlan`]s. Artifacts are
 //! shared (`Arc`) between the compiler cache and any number of open
 //! [`super::Session`]s; opening a second session on the same
@@ -14,7 +16,8 @@ use crate::assembler::program::{BufId, BufKind, Program, SymbolTable};
 use crate::fixed::FixedSpec;
 use crate::hw::machine::MachineError;
 use crate::hw::{ExecPlan, FpgaDevice, MatrixMachine};
-use crate::nn::lowering::{lower_forward, LoweredMlp};
+use crate::nn::graph::{lower_graph_forward, lower_mlp_forward, GraphSpec};
+use crate::nn::lowering::{LowerError, LoweredMlp};
 use crate::nn::trainer::TrainConfig;
 use crate::nn::MlpSpec;
 use std::collections::hash_map::DefaultHasher;
@@ -22,10 +25,99 @@ use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::{Arc, Mutex};
 
+/// First-class net identity of a compiled artifact: either the fixed
+/// MLP topology or a general operator graph. Both lower onto the same
+/// MVM/ActPro program shape (`LoweredMlp` handles), so everything
+/// downstream of compilation — sessions, the forward batch ladder, the
+/// serving runtime — treats the two uniformly through this enum's
+/// accessors.
+#[derive(Debug, Clone)]
+pub enum NetSpec {
+    /// A classic layer-list MLP ([`MlpSpec`]).
+    Mlp(MlpSpec),
+    /// An operator graph ([`GraphSpec`]): CNNs, residual/gated blocks,
+    /// transformer blocks, …
+    Graph(GraphSpec),
+}
+
+impl NetSpec {
+    /// Network name.
+    pub fn name(&self) -> &str {
+        match self {
+            NetSpec::Mlp(s) => &s.name,
+            NetSpec::Graph(g) => &g.name,
+        }
+    }
+
+    /// Input dimension (columns of one sample row).
+    pub fn input_dim(&self) -> usize {
+        match self {
+            NetSpec::Mlp(s) => s.input_dim(),
+            NetSpec::Graph(g) => g.input_dim(),
+        }
+    }
+
+    /// Output dimension.
+    pub fn output_dim(&self) -> usize {
+        match self {
+            NetSpec::Mlp(s) => s.output_dim(),
+            NetSpec::Graph(g) => g.output_dim(),
+        }
+    }
+
+    /// Datapath fixed-point format.
+    pub fn fixed(&self) -> FixedSpec {
+        match self {
+            NetSpec::Mlp(s) => s.fixed,
+            NetSpec::Graph(g) => g.fixed,
+        }
+    }
+
+    /// The MLP spec, when this net is one.
+    pub fn as_mlp(&self) -> Option<&MlpSpec> {
+        match self {
+            NetSpec::Mlp(s) => Some(s),
+            NetSpec::Graph(_) => None,
+        }
+    }
+
+    /// The operator graph, when this net is one.
+    pub fn as_graph(&self) -> Option<&GraphSpec> {
+        match self {
+            NetSpec::Mlp(_) => None,
+            NetSpec::Graph(g) => Some(g),
+        }
+    }
+
+    /// `(rows, cols)` of every `(weights, bias)` parameter pair, in
+    /// lowered-buffer order — the shape contract serving registration
+    /// validates caller-supplied parameters against.
+    pub fn param_shapes(&self) -> Vec<(usize, usize)> {
+        match self {
+            NetSpec::Mlp(s) => s.layers.iter().map(|l| (l.inputs, l.outputs)).collect(),
+            NetSpec::Graph(g) => g
+                .param_decls()
+                .expect("compiled artifacts hold validated graphs")
+                .iter()
+                .map(|d| (d.rows, d.cols))
+                .collect(),
+        }
+    }
+
+    /// Lower the forward program at `rows` (the batch-ladder bucket
+    /// lowering).
+    pub(crate) fn lower_forward(&self, rows: usize) -> Result<LoweredMlp, LowerError> {
+        match self {
+            NetSpec::Mlp(s) => lower_mlp_forward(s, rows),
+            NetSpec::Graph(g) => lower_graph_forward(g, rows),
+        }
+    }
+}
+
 /// Network-shaped payload: spec + lowered programs.
 pub(crate) struct NetInfo {
-    /// Reconstructed network spec.
-    pub spec: MlpSpec,
+    /// Reconstructed network identity.
+    pub spec: NetSpec,
     /// Batch size both programs were lowered for.
     pub batch: usize,
     /// Learning rate baked into the training program (`None` ⇒ the
@@ -197,14 +289,27 @@ impl Artifact {
     /// name for raw-program artifacts).
     pub fn name(&self) -> &str {
         match &self.payload {
-            Payload::Net(n) => &n.spec.name,
+            Payload::Net(n) => n.spec.name(),
             Payload::Raw(p) => &p.name,
         }
     }
 
-    /// The reconstructed network spec (`None` for raw-program artifacts).
+    /// The reconstructed MLP spec (`None` for raw-program artifacts
+    /// **and** for operator-graph nets — see [`Artifact::net_spec`] for
+    /// the uniform identity).
     pub fn spec(&self) -> Option<&MlpSpec> {
+        self.net().and_then(|n| n.spec.as_mlp())
+    }
+
+    /// The net's first-class identity — MLP or operator graph (`None`
+    /// for raw-program artifacts).
+    pub fn net_spec(&self) -> Option<&NetSpec> {
         self.net().map(|n| &n.spec)
+    }
+
+    /// The operator graph, when this artifact compiled one.
+    pub fn graph_spec(&self) -> Option<&GraphSpec> {
+        self.net().and_then(|n| n.spec.as_graph())
     }
 
     /// Batch size the net was compiled for (`None` for raw programs).
@@ -325,7 +430,7 @@ impl Artifact {
         let lowered = if rows == net.batch {
             net.forward.clone()
         } else {
-            lower_forward(&net.spec, rows)?
+            net.spec.lower_forward(rows)?
         };
         let variant = Arc::new(ForwardVariant { lowered, plans: Mutex::new(HashMap::new()) });
         Ok(Arc::clone(

@@ -6,12 +6,12 @@
 //! the artifact, so `(net, device)` pairs are compiled exactly once no
 //! matter how many sessions open them.
 
-use super::artifact::{Artifact, NetInfo, Payload};
+use super::artifact::{Artifact, NetInfo, NetSpec, Payload};
 use super::error::Error;
 use crate::asm::lower_file;
 use crate::assembler::program::Program;
-use crate::nn::lowering::{lower_forward, lower_train_step};
-use crate::nn::MlpSpec;
+use crate::nn::graph::{lower_graph_forward, lower_graph_train, lower_mlp_forward, lower_mlp_train};
+use crate::nn::{GraphSpec, MlpSpec};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -133,7 +133,7 @@ impl Compiler {
         let mut artifacts = Vec::with_capacity(nets.len());
         for net in nets {
             let (forward, train) = if net.train {
-                (lower_forward(&net.spec, net.batch)?, Some(net.mlp))
+                (lower_mlp_forward(&net.spec, net.batch)?, Some(net.mlp))
             } else {
                 (net.mlp, None)
             };
@@ -141,7 +141,7 @@ impl Compiler {
             artifacts.push(Arc::new(Artifact::new(
                 key,
                 Payload::Net(NetInfo {
-                    spec: net.spec,
+                    spec: NetSpec::Mlp(net.spec),
                     batch: net.batch,
                     lr: net.lr,
                     forward,
@@ -187,15 +187,56 @@ impl Compiler {
         if let Some(hit) = self.net_cache.lock().expect("cache poisoned").get(&key) {
             return Ok(Arc::clone(hit));
         }
-        let forward = lower_forward(spec, opts.batch)?;
+        let forward = lower_mlp_forward(spec, opts.batch)?;
         let train = match opts.lr {
-            Some(lr) => Some(lower_train_step(spec, opts.batch, lr)?),
+            Some(lr) => Some(lower_mlp_train(spec, opts.batch, lr)?),
             None => None,
         };
         let artifact = Arc::new(Artifact::new(
             key.clone(),
             Payload::Net(NetInfo {
-                spec: spec.clone(),
+                spec: NetSpec::Mlp(spec.clone()),
+                batch: opts.batch,
+                lr: opts.lr,
+                forward,
+                train,
+            }),
+        ));
+        self.net_cache
+            .lock()
+            .expect("cache poisoned")
+            .insert(key, Arc::clone(&artifact));
+        Ok(artifact)
+    }
+
+    /// Compile a [`GraphSpec`] operator graph — the graph twin of
+    /// [`Compiler::compile_spec`], same caching contract. The artifact
+    /// flows through the same `Artifact`/`Session`/serving machinery as
+    /// MLP artifacts (graph identity is first-class — see
+    /// [`super::artifact::NetSpec`]).
+    pub fn compile_graph(
+        &self,
+        spec: &GraphSpec,
+        opts: &CompileOptions,
+    ) -> Result<Arc<Artifact>, Error> {
+        spec.check().map_err(crate::nn::lowering::LowerError::from)?;
+        let key = format!(
+            "graph::{spec:?}::batch={}::lr={:?}",
+            opts.batch,
+            opts.lr.map(f64::to_bits)
+        );
+        if let Some(hit) = self.net_cache.lock().expect("cache poisoned").get(&key) {
+            return Ok(Arc::clone(hit));
+        }
+        let forward = lower_graph_forward(spec, opts.batch)?;
+        let train = match opts.lr {
+            Some(lr) => Some(lower_graph_train(spec, opts.batch, lr)?),
+            None => None,
+        };
+        let artifact = Arc::new(Artifact::new(
+            key.clone(),
+            Payload::Net(NetInfo {
+                spec: NetSpec::Graph(spec.clone()),
                 batch: opts.batch,
                 lr: opts.lr,
                 forward,

@@ -15,7 +15,9 @@
 //!                                    per-device ExecPlans)
 //! ```
 //!
-//! * [`Compiler`] turns assembly text, an [`crate::nn::MlpSpec`], or a
+//! * [`Compiler`] turns assembly text, an [`crate::nn::MlpSpec`], an
+//!   operator-graph [`crate::nn::GraphSpec`] (CNNs, residual blocks,
+//!   transformer blocks — [`Compiler::compile_graph`]), or a
 //!   raw validated [`crate::assembler::program::Program`] into an
 //!   immutable [`Artifact`] — validated program(s), the tensor
 //!   [`crate::assembler::program::SymbolTable`], and a per-device cache
@@ -51,7 +53,7 @@ pub mod error;
 #[allow(clippy::module_inception)]
 pub mod session;
 
-pub use artifact::{Artifact, ForwardVariant, TensorHandle};
+pub use artifact::{Artifact, ForwardVariant, NetSpec, TensorHandle};
 pub use compiler::{CompileOptions, Compiler};
 pub use error::Error;
 pub use session::{

@@ -15,12 +15,13 @@
 //! [`Session::read`] for programs that need exact control of every
 //! tensor (golden-model cross-checks, raw-program artifacts).
 
-use super::artifact::{Artifact, ForwardVariant, TensorHandle};
+use super::artifact::{Artifact, ForwardVariant, NetSpec, TensorHandle};
 use super::error::Error;
 use crate::cluster::checkpoint::{RunIdentity, TrainCheckpoint};
 use crate::cluster::leader::{self, ClusterConfig, ClusterReport, Job, JobResume};
 use crate::hw::{FpgaDevice, MatrixMachine, RunStats};
 use crate::nn::dataset::{self, Dataset};
+use crate::nn::graph::GraphTrainer;
 use crate::nn::trainer::{LossPoint, TrainConfig, Trainer};
 use crate::serve;
 use std::sync::Arc;
@@ -123,9 +124,13 @@ impl TrainOptions {
 }
 
 enum Engine {
-    /// Trainable artifact: the [`Trainer`] engine owns both machines;
-    /// its training machine is the session's primary machine.
+    /// Trainable MLP artifact: the [`Trainer`] engine owns both
+    /// machines; its training machine is the session's primary machine.
     Trainable(Box<Trainer>),
+    /// Trainable operator-graph artifact: the [`GraphTrainer`] engine —
+    /// same machine layout, parameters keyed by the graph's
+    /// `param_decls` order instead of per-layer.
+    GraphTrainable(Box<GraphTrainer>),
     /// Inference-only or raw artifact: one machine on the primary plan.
     Forward(Box<MatrixMachine>),
 }
@@ -213,15 +218,28 @@ impl Session {
                     steps: 0,
                     ..TrainConfig::default()
                 };
-                Engine::Trainable(Box::new(Trainer::from_parts(
-                    n.spec.clone(),
-                    device,
-                    cfg,
-                    tr.clone(),
-                    n.forward.clone(),
-                    train_machine,
-                    fwd_machine,
-                )))
+                match &n.spec {
+                    NetSpec::Mlp(spec) => Engine::Trainable(Box::new(Trainer::from_parts(
+                        spec.clone(),
+                        device,
+                        cfg,
+                        tr.clone(),
+                        n.forward.clone(),
+                        train_machine,
+                        fwd_machine,
+                    ))),
+                    NetSpec::Graph(g) => {
+                        Engine::GraphTrainable(Box::new(GraphTrainer::from_parts(
+                            g.clone(),
+                            device,
+                            cfg,
+                            tr.clone(),
+                            n.forward.clone(),
+                            train_machine,
+                            fwd_machine,
+                        )))
+                    }
+                }
             }
             _ => Engine::Forward(Box::new(MatrixMachine::with_plan(
                 device,
@@ -258,6 +276,7 @@ impl Session {
     pub fn weights(&self) -> Option<(Vec<Vec<i16>>, Vec<Vec<i16>>)> {
         match &self.engine {
             Engine::Trainable(t) => Some(t.weights()),
+            Engine::GraphTrainable(t) => Some(t.weights()),
             Engine::Forward(_) => None,
         }
     }
@@ -270,6 +289,7 @@ impl Session {
     fn current_params(&self) -> Option<(Vec<Vec<i16>>, Vec<Vec<i16>>)> {
         match &self.engine {
             Engine::Trainable(t) => Some(t.weights()),
+            Engine::GraphTrainable(t) => Some(t.weights()),
             Engine::Forward(m) => {
                 let n = self.artifact.net()?;
                 let w = n.forward.weights.iter().map(|&id| m.read_id(id).to_vec()).collect();
@@ -301,6 +321,7 @@ impl Session {
     fn machine(&self) -> &MatrixMachine {
         match &self.engine {
             Engine::Trainable(t) => t.primary_machine(),
+            Engine::GraphTrainable(t) => t.primary_machine(),
             Engine::Forward(m) => m,
         }
     }
@@ -308,6 +329,7 @@ impl Session {
     fn machine_mut(&mut self) -> &mut MatrixMachine {
         match &mut self.engine {
             Engine::Trainable(t) => t.primary_machine_mut(),
+            Engine::GraphTrainable(t) => t.primary_machine_mut(),
             Engine::Forward(m) => m,
         }
     }
@@ -337,8 +359,10 @@ impl Session {
         self.machine_mut().write_id(h.id(), data)?;
         if h.is_param() {
             self.weights_ready = true;
-            if let Engine::Trainable(t) = &mut self.engine {
-                t.mark_params_dirty();
+            match &mut self.engine {
+                Engine::Trainable(t) => t.mark_params_dirty(),
+                Engine::GraphTrainable(t) => t.mark_params_dirty(),
+                Engine::Forward(_) => {}
             }
         }
         Ok(())
@@ -363,6 +387,7 @@ impl Session {
     pub fn step(&mut self) -> RunStats {
         match &mut self.engine {
             Engine::Trainable(t) => t.step_primary(),
+            Engine::GraphTrainable(t) => t.step_primary(),
             Engine::Forward(m) => m.execute(),
         }
     }
@@ -381,6 +406,10 @@ impl Session {
     pub fn infer(&mut self, qx: &[i16]) -> Result<Inference, Error> {
         match &mut self.engine {
             Engine::Trainable(t) => {
+                let (output, stats) = t.infer(qx)?;
+                Ok(Inference { output, stats })
+            }
+            Engine::GraphTrainable(t) => {
                 let (output, stats) = t.infer(qx)?;
                 Ok(Inference { output, stats })
             }
@@ -439,7 +468,7 @@ impl Session {
                 sync_every,
                 total_steps: cfg.steps,
             };
-            ck.check_resume(&net.spec.name, &run)?;
+            ck.check_resume(net.spec.name(), &run)?;
         }
         match self.cluster.clone() {
             Some(ccfg) => self.train_cluster_with(&ccfg, ds, cfg, opts),
@@ -453,6 +482,43 @@ impl Session {
         cfg: &TrainConfig,
         opts: &TrainOptions,
     ) -> Result<(TrainSummary, Vec<TrainCheckpoint>), Error> {
+        if let Engine::GraphTrainable(t) = &mut self.engine {
+            // Operator-graph board training: the same engine loop, but
+            // checkpoint/resume is MLP-only for now ([`TrainCheckpoint`]
+            // captures per-layer dims; a graph-aware snapshot format is
+            // future work).
+            if opts.checkpoint_every > 0 || opts.resume.is_some() {
+                return Err(Error::Unsupported {
+                    verb: "train",
+                    why: "checkpoint/resume is not yet supported for operator-graph \
+                          nets (snapshots capture MLP layer shapes)"
+                        .into(),
+                });
+            }
+            if !self.sampler_seeded {
+                if self.weights_ready {
+                    t.reseed(cfg.seed);
+                } else {
+                    t.init_params(cfg.seed)?;
+                    self.weights_ready = true;
+                }
+                self.sampler_seeded = true;
+            }
+            t.cfg = cfg.clone();
+            let report = t.train(ds)?;
+            self.weights_ready = true;
+            return Ok((
+                TrainSummary {
+                    curve: report.curve,
+                    stats: report.stats,
+                    sim_seconds: report.sim_seconds,
+                    steps: report.steps,
+                    boards: vec![0],
+                    sync_rounds: 0,
+                },
+                Vec::new(),
+            ));
+        }
         let Engine::Trainable(t) = &mut self.engine else {
             unreachable!("check_train_cfg guarantees a trainable engine");
         };
@@ -542,6 +608,14 @@ impl Session {
             return Err(Error::Unsupported { verb: "train", why: "empty dataset".into() });
         }
         let net = self.artifact.net().expect("checked trainable");
+        let Some(mlp) = net.spec.as_mlp().cloned() else {
+            return Err(Error::Unsupported {
+                verb: "train",
+                why: "cluster training dispatches MLP jobs; train operator-graph \
+                      nets on a board target"
+                    .into(),
+            });
+        };
         let (initial, resume) = match &opts.resume {
             Some(ck) => (Some(ck.weights()), Some(JobResume::from_checkpoint(ck))),
             None => {
@@ -569,8 +643,8 @@ impl Session {
             name: format!("{}-probe", ds.name),
         };
         let job = Job {
-            name: net.spec.name.clone(),
-            spec: net.spec.clone(),
+            name: mlp.name.clone(),
+            spec: mlp,
             cfg: cfg.clone(),
             train_data: Arc::new(ds.clone()),
             test_data: Arc::new(probe),
@@ -608,6 +682,10 @@ impl Session {
                 let (accuracy, stats) = t.evaluate(ds)?;
                 Ok(Evaluation { accuracy, stats })
             }
+            Engine::GraphTrainable(t) => {
+                let (accuracy, stats) = t.evaluate(ds)?;
+                Ok(Evaluation { accuracy, stats })
+            }
             Engine::Forward(m) => {
                 let n = self.artifact.net().ok_or_else(|| Error::Unsupported {
                     verb: "evaluate",
@@ -622,7 +700,7 @@ impl Session {
                     )
                     .into());
                 }
-                let f = n.spec.fixed;
+                let f = n.spec.fixed();
                 let batch = n.batch;
                 // The partial remainder chunk runs on a right-sized
                 // forward-ladder variant from the artifact (compiled
@@ -639,7 +717,7 @@ impl Session {
                     }
                     let (_, variant, machine) =
                         self.fwd_rem.as_mut().expect("just built");
-                    for l in 0..n.spec.layers.len() {
+                    for l in 0..n.forward.weights.len() {
                         let w = m.read_id(n.forward.weights[l]).to_vec();
                         let b = m.read_id(n.forward.biases[l]).to_vec();
                         machine.write_id(variant.lowered().weights[l], &w)?;
@@ -678,6 +756,16 @@ impl Session {
         for (ji, j) in jobs.iter().enumerate() {
             j.artifact.check_train_cfg(&j.cfg)?;
             let net = j.artifact.net().expect("checked trainable");
+            let Some(mlp) = net.spec.as_mlp().cloned() else {
+                return Err(Error::Unsupported {
+                    verb: "train_many",
+                    why: format!(
+                        "net {:?}: cluster training dispatches MLP jobs; train \
+                         operator-graph nets on a board target",
+                        net.spec.name()
+                    ),
+                });
+            };
             let (initial, resume) = match &j.resume {
                 Some(ck) => {
                     use crate::cluster::PlacementMode;
@@ -695,14 +783,14 @@ impl Session {
                         sync_every,
                         total_steps: j.cfg.steps,
                     };
-                    ck.check_resume(&net.spec.name, &run)?;
+                    ck.check_resume(&mlp.name, &run)?;
                     (Some(ck.weights()), Some(JobResume::from_checkpoint(ck)))
                 }
                 None => (None, None),
             };
             cluster_jobs.push(Job {
-                name: net.spec.name.clone(),
-                spec: net.spec.clone(),
+                name: mlp.name.clone(),
+                spec: mlp,
                 cfg: j.cfg.clone(),
                 train_data: Arc::clone(&j.train),
                 test_data: Arc::clone(&j.test),

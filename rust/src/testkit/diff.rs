@@ -5,7 +5,7 @@
 //!
 //! | level | executor | agreement |
 //! |---|---|---|
-//! | L0 | [`FloatMlp`] float64 oracle | quantisation tolerance band |
+//! | L0 | [`FloatMlp`] / [`FloatGraph`] float64 oracle | quantisation tolerance band |
 //! | L1 | [`FastSim`] sequential reference | bit-exact |
 //! | L2 | unfused [`ExecPlan`], one wave/step | bit-exact + same `RunStats` |
 //! | L3 | fused [`ExecPlan`] via the Session API | bit-exact + same `RunStats` |
@@ -18,13 +18,13 @@
 //! fixed-point levels must agree to the bit, including cycle accounting
 //! between the fused and unfused plans.
 
-use super::gen::{FaultCase, FuzzCase, NetCase, ProgramCase, RecoveryCase, ServeChaosCase};
+use super::gen::{FaultCase, FuzzCase, GraphCase, NetCase, ProgramCase, RecoveryCase, ServeChaosCase};
 use crate::assembler::program::Step;
 use crate::cluster::fault::FaultPlan;
 use crate::cluster::leader::{self, ClusterConfig, ClusterError, Job, JobResult};
 use crate::hw::{ExecPlan, FastSim, FpgaDevice, MatrixMachine};
 use crate::nn::float_ref::FloatMlp;
-use crate::nn::lowering::{lower_forward, lower_train_step};
+use crate::nn::graph::{lower_graph_forward, lower_mlp_forward, lower_mlp_train, FloatGraph};
 use crate::nn::trainer::Trainer;
 use crate::session::{CompileOptions, Compiler, Session, Target};
 use std::sync::Arc;
@@ -148,7 +148,7 @@ impl Differ {
         let fixed = c.fixed();
         let (qw, qb) = c.params();
         let qx = c.input();
-        let lowered = lower_forward(&spec, c.batch)
+        let lowered = lower_mlp_forward(&spec, c.batch)
             .map_err(|e| fail(Level::FastSim, format!("lowering failed: {e}")))?;
         let program = &lowered.program;
 
@@ -288,6 +288,170 @@ impl Differ {
         Ok(())
     }
 
+    /// Graph forward differential: one inference batch of a generated
+    /// operator graph (residual / gated / CNN / transformer-block)
+    /// through L0–L3 — same ladder as [`Differ::run_net`], with
+    /// [`FloatGraph`] as the L0 oracle and
+    /// [`crate::session::Compiler::compile_graph`] as the front door.
+    pub fn run_graph(&self, c: &GraphCase) -> Result<(), Divergence> {
+        let spec = c.spec();
+        let fixed = c.fixed();
+        let (qw, qb) = c.params();
+        let qx = c.input();
+        let decls = spec.param_decls().expect("generated graphs are valid");
+        let lowered = lower_graph_forward(&spec, c.batch)
+            .map_err(|e| fail(Level::FastSim, format!("graph lowering failed: {e}")))?;
+        let program = &lowered.program;
+
+        // L1: FastSim, the sequential functional reference.
+        let mut sim = FastSim::new(program);
+        sim.set_buffer(lowered.x, &qx);
+        for i in 0..decls.len() {
+            sim.set_buffer(lowered.weights[i], &qw[i]);
+            sim.set_buffer(lowered.biases[i], &qb[i]);
+        }
+        for step in &program.steps {
+            if let Step::Wave(w) = step {
+                sim.exec_wave(program, w);
+            }
+        }
+        let mut fast_out = sim.buffer(lowered.out).to_vec();
+        if self.plant_divergence {
+            if let Some(v) = fast_out.last_mut() {
+                *v ^= 1;
+            }
+        }
+
+        // L3: fused plan through the Session front door.
+        let artifact = self
+            .compiler
+            .compile_graph(&spec, &CompileOptions::inference(c.batch))
+            .map_err(|e| fail(Level::FusedPlan, format!("graph compile failed: {e}")))?;
+        let mut session = Session::open(Arc::clone(&artifact), Target::Board(self.device))
+            .map_err(|e| fail(Level::FusedPlan, format!("open failed: {e}")))?;
+        for (i, d) in decls.iter().enumerate() {
+            for (name, data) in [(&d.wname, &qw[i]), (&d.bname, &qb[i])] {
+                let h = artifact
+                    .tensor(name)
+                    .map_err(|e| fail(Level::FusedPlan, format!("handle {name}: {e}")))?;
+                session
+                    .write(&h, data)
+                    .map_err(|e| fail(Level::FusedPlan, format!("write {name}: {e}")))?;
+            }
+        }
+        let inf = session
+            .infer(&qx)
+            .map_err(|e| fail(Level::FusedPlan, format!("infer failed: {e}")))?;
+        if inf.output != fast_out {
+            return Err(fail(
+                Level::FusedPlan,
+                format!(
+                    "graph output, fused plan vs FastSim: {}",
+                    first_diff(&inf.output, &fast_out)
+                ),
+            ));
+        }
+
+        // L2: the unfused plan on the same bindings.
+        let unfused = ExecPlan::new_unfused(program, &self.device);
+        let mut st = unfused.state();
+        unfused.write_buffer(&mut st, lowered.x, &qx);
+        for i in 0..decls.len() {
+            unfused.write_buffer(&mut st, lowered.weights[i], &qw[i]);
+            unfused.write_buffer(&mut st, lowered.biases[i], &qb[i]);
+        }
+        let unfused_stats = unfused.execute(&mut st);
+        let unfused_out = unfused.read_buffer(&st, lowered.out);
+        if unfused_out != fast_out.as_slice() {
+            return Err(fail(
+                Level::UnfusedPlan,
+                format!(
+                    "graph output, unfused plan vs FastSim: {}",
+                    first_diff(unfused_out, &fast_out)
+                ),
+            ));
+        }
+
+        // L3 cycle accounting + structural microcode verification.
+        let mut fused_m = MatrixMachine::new(self.device, program)
+            .map_err(|e| fail(Level::FusedPlan, format!("machine build failed: {e}")))?;
+        fused_m.write_id(lowered.x, &qx).expect("shape checked");
+        for i in 0..decls.len() {
+            fused_m.write_id(lowered.weights[i], &qw[i]).expect("shape checked");
+            fused_m.write_id(lowered.biases[i], &qb[i]).expect("shape checked");
+        }
+        let mut verif_m = fused_m.clone();
+        let fused_stats = fused_m.execute();
+        let verif_stats = verif_m
+            .execute_verified()
+            .map_err(|e| fail(Level::UnfusedPlan, format!("structural verification: {e}")))?;
+        if fused_m.read_id(lowered.out) != verif_m.read_id(lowered.out) {
+            return Err(fail(
+                Level::UnfusedPlan,
+                format!(
+                    "graph output, fused vs structurally-verified: {}",
+                    first_diff(fused_m.read_id(lowered.out), verif_m.read_id(lowered.out))
+                ),
+            ));
+        }
+        if fused_stats != verif_stats {
+            return Err(fail(
+                Level::UnfusedPlan,
+                format!("cycle accounting, fused vs unfused: {fused_stats:?} vs {verif_stats:?}"),
+            ));
+        }
+        if fused_stats != unfused_stats {
+            return Err(fail(
+                Level::UnfusedPlan,
+                format!(
+                    "cycle accounting, fused vs standalone unfused plan: \
+                     {fused_stats:?} vs {unfused_stats:?}"
+                ),
+            ));
+        }
+
+        // L0: FloatGraph oracle. Tolerance scales with op depth;
+        // attention weighs as five units (q/k/v/o projections + the
+        // Exp/Recip softmax), normalisation as two (Rsqrt amplifies
+        // quantisation error near small variances).
+        let float = FloatGraph {
+            spec: spec.clone(),
+            params: qw
+                .iter()
+                .zip(&qb)
+                .map(|(w, b)| (fixed.decode_vec(w), fixed.decode_vec(b)))
+                .collect(),
+        };
+        let units: usize = spec
+            .ops
+            .iter()
+            .map(|op| match op.kind {
+                crate::nn::graph::OpKind::Attention { .. } => 5,
+                crate::nn::graph::OpKind::Normalization { .. } => 2,
+                _ => 1,
+            })
+            .sum();
+        let tol = FLOAT_TOL_PER_LAYER * units as f64;
+        let (in_dim, out_dim) = (spec.input_dim(), spec.output_dim());
+        for row in 0..c.batch {
+            let x = fixed.decode_vec(&qx[row * in_dim..(row + 1) * in_dim]);
+            let want = float.forward(&x);
+            for j in 0..out_dim {
+                let got = fixed.to_f64(fast_out[row * out_dim + j]);
+                if (got - want[j]).abs() > tol {
+                    return Err(fail(
+                        Level::FloatRef,
+                        format!(
+                            "row {row} output {j}: fixed {got} vs float {:.4} (tol {tol})",
+                            want[j]
+                        ),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
     // ----------------------------------------------------------- training
 
     /// Training differential: bare engine vs Session(board) vs a 1-board
@@ -363,7 +527,7 @@ impl Differ {
 
         // One training step, fused vs structurally-verified unfused:
         // identical post-step parameters and identical cycle accounting.
-        let lowered = lower_train_step(&spec, cfg.batch, cfg.lr)
+        let lowered = lower_mlp_train(&spec, cfg.batch, cfg.lr)
             .map_err(|e| fail(Level::UnfusedPlan, format!("train lowering failed: {e}")))?;
         let (qw, qb) = c.net.params();
         let mut fast = MatrixMachine::new(self.device, &lowered.program)
@@ -1048,6 +1212,16 @@ mod tests {
         for i in 0..6 {
             let c = gen::net_case().sample(&mut r);
             differ.run_net(&c).unwrap_or_else(|d| panic!("case {i} ({c:?}): {d}"));
+        }
+    }
+
+    #[test]
+    fn a_handful_of_graph_cases_agree_across_levels() {
+        let differ = Differ::default();
+        let mut r = Rng::new(0x6AF5);
+        for i in 0..6 {
+            let c = gen::graph_case().sample(&mut r);
+            differ.run_graph(&c).unwrap_or_else(|d| panic!("case {i} ({c:?}): {d}"));
         }
     }
 

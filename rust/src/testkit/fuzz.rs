@@ -27,11 +27,14 @@ pub fn case_seed(base: u64, index: usize) -> u64 {
     base.wrapping_add((index as u64).wrapping_mul(SEED_STRIDE))
 }
 
-/// The five generated case families.
+/// The six generated case families.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Family {
     /// [`gen::FuzzCase`]: forward + training + cluster levels.
     Net,
+    /// [`gen::GraphCase`]: operator-graph nets (residual / gated / CNN /
+    /// transformer-block) through the forward fidelity levels.
+    Graph,
     /// [`gen::ProgramCase`]: raw-program levels.
     Program,
     /// [`gen::FaultCase`]: cluster fault injection (never hang: finish
@@ -50,8 +53,9 @@ pub enum Family {
 
 impl Family {
     /// All families, in execution order.
-    pub const ALL: [Family; 5] = [
+    pub const ALL: [Family; 6] = [
         Family::Net,
+        Family::Graph,
         Family::Program,
         Family::Fault,
         Family::Recovery,
@@ -62,6 +66,7 @@ impl Family {
     pub fn name(&self) -> &'static str {
         match self {
             Family::Net => "net",
+            Family::Graph => "graph",
             Family::Program => "program",
             Family::Fault => "fault",
             Family::Recovery => "recovery",
@@ -73,6 +78,7 @@ impl Family {
     pub fn parse(s: &str) -> Option<Family> {
         match s {
             "net" => Some(Family::Net),
+            "graph" => Some(Family::Graph),
             "program" => Some(Family::Program),
             "fault" => Some(Family::Fault),
             "recovery" => Some(Family::Recovery),
@@ -103,7 +109,7 @@ pub struct FuzzOptions {
     pub max_shrink_steps: usize,
     /// Re-run each failure's seed to confirm it reproduces.
     pub check_reproduction: bool,
-    /// Restrict the run to one family (`None` = all five) —
+    /// Restrict the run to one family (`None` = all six) —
     /// `mfnn fuzz --family recovery` and `--family serve-chaos` are the
     /// CI recovery and chaos smokes.
     pub family: Option<Family>,
@@ -228,6 +234,7 @@ pub fn run_case(differ: &Differ, family: Family, seed: u64) -> Result<(), Diverg
     let mut rng = Rng::new(seed);
     match family {
         Family::Net => run_net_family(differ, &gen::fuzz_case().sample(&mut rng)),
+        Family::Graph => differ.run_graph(&gen::graph_case().sample(&mut rng)),
         Family::Program => differ.run_program(&gen::program_case().sample(&mut rng)),
         Family::Fault => differ.run_faults(&gen::fault_case().sample(&mut rng)),
         Family::Recovery => differ.run_recovery(&gen::recovery_case().sample(&mut rng)),
@@ -310,6 +317,9 @@ fn fuzz_one(
         Family::Net => fuzz_family(opts, family, case_index, seed, &gen::fuzz_case(), |c| {
             run_net_family(differ, c)
         }),
+        Family::Graph => fuzz_family(opts, family, case_index, seed, &gen::graph_case(), |c| {
+            differ.run_graph(c)
+        }),
         Family::Program => fuzz_family(opts, family, case_index, seed, &gen::program_case(), |c| {
             differ.run_program(c)
         }),
@@ -367,7 +377,10 @@ pub fn parse_corpus(text: &str) -> Result<Vec<(Family, u64)>, String> {
             .next()
             .and_then(Family::parse)
             .ok_or_else(|| {
-                format!("line {}: expected `net|program|fault|recovery|serve-chaos <seed>`", ln + 1)
+                format!(
+                    "line {}: expected `net|graph|program|fault|recovery|serve-chaos <seed>`",
+                    ln + 1
+                )
             })?;
         let seed: u64 = parts
             .next()
@@ -421,8 +434,8 @@ mod tests {
 
     #[test]
     fn corpus_parses_tags_seeds_and_comments() {
-        let text =
-            "# comment\n\nnet 12  # trailing\nprogram 0\nfault 99\nrecovery 7\nserve-chaos 3\n";
+        let text = "# comment\n\nnet 12  # trailing\nprogram 0\nfault 99\nrecovery 7\n\
+                    serve-chaos 3\ngraph 5\n";
         let entries = parse_corpus(text).unwrap();
         assert_eq!(
             entries,
@@ -431,7 +444,8 @@ mod tests {
                 (Family::Program, 0),
                 (Family::Fault, 99),
                 (Family::Recovery, 7),
-                (Family::ServeChaos, 3)
+                (Family::ServeChaos, 3),
+                (Family::Graph, 5)
             ]
         );
         assert!(parse_corpus("bogus 1").is_err());

@@ -17,6 +17,10 @@
 //!   [`FaultPlan`] for the cluster fault differential.
 //! * [`ServeChaosCase`] — a topology plus a survivable
 //!   [`ServeFaultPlan`] for the serving degraded-mode differential.
+//! * [`GraphCase`] — a random well-typed operator graph
+//!   ([`GraphSpec`]: residual, gated, CNN, or transformer-block shaped)
+//!   with derived parameters and input. Drives the graph forward
+//!   differential levels.
 //!
 //! Every generator pairs a structured shrinker so a divergence shrinks
 //! toward the minimal failing case (fewer layers, dim 1, batch 1, one
@@ -28,6 +32,7 @@ use crate::cluster::fault::FaultPlan;
 use crate::cluster::scheduler::{schedule, PlacementMode};
 use crate::fixed::FixedSpec;
 use crate::isa::Opcode;
+use crate::nn::graph::{Conv2dGeom, GraphSpec, INPUT};
 use crate::nn::lut::{ActKind, ActLut, AddrMode};
 use crate::nn::mlp::{LutParams, MlpSpec};
 use crate::nn::trainer::TrainConfig;
@@ -185,6 +190,192 @@ fn shrink_net_case(c: &NetCase) -> Vec<NetCase> {
 /// Generator for [`NetCase`].
 pub fn net_case() -> Gen<NetCase> {
     Gen::new(sample_net_case, shrink_net_case)
+}
+
+// ------------------------------------------------------- operator graphs
+
+/// Architecture family of a generated [`GraphCase`] — four shapes that
+/// together exercise every [`crate::nn::graph::OpKind`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphArch {
+    /// `linear(hidden) → act → linear(dim) → add(input) → norm(dim)` —
+    /// the minimal residual block (Linear, Activation, ElemAdd,
+    /// Normalization).
+    Residual,
+    /// `mul(act(linear(hidden)), linear(hidden)) → linear(dim)` — a
+    /// gated unit (ElemMul plus a diamond-shaped dataflow).
+    Gated,
+    /// `conv2d(2×2, out_c=hidden) → act → linear(dim)` — a one-layer
+    /// CNN classifier head (Conv2d via im2col).
+    Cnn,
+    /// `attention(seq=dim, d=hidden) → add → norm(d) → linear → act →
+    /// linear → add → norm(d)` — a full pre-MLP transformer block
+    /// (Attention plus both residual/norm sites).
+    TransformerBlock,
+}
+
+/// One generated operator-graph net with derived bindings, the graph
+/// twin of [`NetCase`]: parameters and input are re-derived from `seed`
+/// + the current sizes, so shrinking keeps the case self-consistent.
+/// Sizes are kept small (≤ 5) and the datapath at Q8–Q9 so attention's
+/// un-shifted `Exp` scores stay representable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphCase {
+    /// Case seed (printed on failure; regenerates the case exactly).
+    pub seed: u64,
+    /// Architecture family.
+    pub arch: GraphArch,
+    /// Primary size: residual/gated width, CNN output side, tokens.
+    pub dim: usize,
+    /// Secondary size: bottleneck width, conv channels, head width.
+    pub hidden: usize,
+    /// Activation used at every activation site.
+    pub act: ActKind,
+    /// Fractional bits of the (saturating) datapath.
+    pub frac_bits: u32,
+    /// Batch rows.
+    pub batch: usize,
+}
+
+impl GraphCase {
+    /// The saturating fixed-point format of the case.
+    pub fn fixed(&self) -> FixedSpec {
+        FixedSpec::q(self.frac_bits).saturating()
+    }
+
+    /// The validated graph (generated sizes are always valid).
+    pub fn spec(&self) -> GraphSpec {
+        let fixed = self.fixed();
+        let lut = LutParams::training(fixed);
+        match self.arch {
+            GraphArch::Residual => {
+                let mut g = GraphSpec::new("fuzz_graph", self.dim, fixed, lut);
+                let l1 = g.linear(INPUT, self.hidden);
+                let a1 = g.activation(l1, self.act);
+                let l2 = g.linear(a1, self.dim);
+                let res = g.add(l2, INPUT);
+                g.normalization(res, self.dim);
+                g
+            }
+            GraphArch::Gated => {
+                let mut g = GraphSpec::new("fuzz_graph", self.dim, fixed, lut);
+                let gate = g.linear(INPUT, self.hidden);
+                let ga = g.activation(gate, self.act);
+                let val = g.linear(INPUT, self.hidden);
+                let m = g.mul(ga, val);
+                g.linear(m, self.dim);
+                g
+            }
+            GraphArch::Cnn => {
+                let side = self.dim + 1; // a 2×2 kernel always fits
+                let geom = Conv2dGeom {
+                    in_h: side,
+                    in_w: side,
+                    in_c: 1,
+                    out_c: self.hidden,
+                    kh: 2,
+                    kw: 2,
+                    stride: 1,
+                };
+                let mut g = GraphSpec::new("fuzz_graph", geom.in_dim(), fixed, lut);
+                let c = g.conv2d(INPUT, geom);
+                let a = g.activation(c, self.act);
+                g.linear(a, self.dim);
+                g
+            }
+            GraphArch::TransformerBlock => {
+                let (seq, d) = (self.dim, self.hidden);
+                let width = seq * d;
+                let mut g = GraphSpec::new("fuzz_graph", width, fixed, lut);
+                let att = g.attention(INPUT, seq, d);
+                let r1 = g.add(att, INPUT);
+                let n1 = g.normalization(r1, d);
+                let f1 = g.linear(n1, width);
+                let fa = g.activation(f1, self.act);
+                let f2 = g.linear(fa, width);
+                let r2 = g.add(f2, n1);
+                g.normalization(r2, d);
+                g
+            }
+        }
+    }
+
+    /// Deterministic quantised parameters in
+    /// [`GraphSpec::param_decls`] order: `|w| ≤ 1/fan_in`, `|b| ≤ 0.25`
+    /// — same comparability recipe as [`NetCase::params`].
+    pub fn params(&self) -> (Vec<Vec<i16>>, Vec<Vec<i16>>) {
+        let fixed = self.fixed();
+        let mut r = Rng::new(self.seed ^ SALT_PARAMS);
+        let decls = self.spec().param_decls().expect("generated graphs are valid");
+        let mut w = Vec::with_capacity(decls.len());
+        let mut b = Vec::with_capacity(decls.len());
+        for d in &decls {
+            let scale = 1.0 / d.rows as f64;
+            w.push(
+                (0..d.rows * d.cols)
+                    .map(|_| fixed.from_f64((r.gen_f64() * 2.0 - 1.0) * scale))
+                    .collect(),
+            );
+            b.push(
+                (0..d.cols)
+                    .map(|_| fixed.from_f64((r.gen_f64() * 2.0 - 1.0) * 0.25))
+                    .collect(),
+            );
+        }
+        (w, b)
+    }
+
+    /// Deterministic quantised `batch × in_dim` input in `[-1, 1]`.
+    pub fn input(&self) -> Vec<i16> {
+        let fixed = self.fixed();
+        let mut r = Rng::new(self.seed ^ SALT_IO);
+        (0..self.batch * self.spec().input_dim())
+            .map(|_| fixed.from_f64(r.gen_f64() * 2.0 - 1.0))
+            .collect()
+    }
+}
+
+pub(crate) fn sample_graph_case(r: &mut Rng) -> GraphCase {
+    GraphCase {
+        seed: r.next_u64(),
+        arch: *r.choose(&[
+            GraphArch::Residual,
+            GraphArch::Gated,
+            GraphArch::Cnn,
+            GraphArch::TransformerBlock,
+        ]),
+        dim: 1 + r.gen_range(5) as usize,    // 1..=5
+        hidden: 1 + r.gen_range(4) as usize, // 1..=4
+        act: *r.choose(&[ActKind::Relu, ActKind::Sigmoid, ActKind::Tanh, ActKind::Identity]),
+        frac_bits: 8 + r.gen_range(2) as u32, // Q8..Q9
+        batch: 1 + r.gen_range(4) as usize,   // 1..=4
+    }
+}
+
+fn shrink_graph_case(c: &GraphCase) -> Vec<GraphCase> {
+    let mut out = Vec::new();
+    // simplest architecture first (fewest ops, no LUT-heavy blocks)
+    if c.arch != GraphArch::Residual {
+        out.push(GraphCase { arch: GraphArch::Residual, ..c.clone() });
+    }
+    if c.dim > 1 {
+        out.push(GraphCase { dim: c.dim / 2, ..c.clone() });
+    }
+    if c.hidden > 1 {
+        out.push(GraphCase { hidden: c.hidden / 2, ..c.clone() });
+    }
+    if c.batch > 1 {
+        out.push(GraphCase { batch: c.batch / 2, ..c.clone() });
+    }
+    if c.act != ActKind::Relu {
+        out.push(GraphCase { act: ActKind::Relu, ..c.clone() });
+    }
+    out
+}
+
+/// Generator for [`GraphCase`].
+pub fn graph_case() -> Gen<GraphCase> {
+    Gen::new(sample_graph_case, shrink_graph_case)
 }
 
 // -------------------------------------------------------- full fuzz cases
@@ -707,6 +898,32 @@ mod tests {
                 sample_serve_chaos_case(&mut Rng::new(seed)),
                 sample_serve_chaos_case(&mut Rng::new(seed))
             );
+            assert_eq!(
+                sample_graph_case(&mut Rng::new(seed)),
+                sample_graph_case(&mut Rng::new(seed))
+            );
+        }
+    }
+
+    #[test]
+    fn generated_graphs_validate_and_derive_consistent_bindings() {
+        let mut r = Rng::new(0x6AF);
+        for _ in 0..80 {
+            let c = sample_graph_case(&mut r);
+            let spec = c.spec();
+            spec.check().unwrap();
+            let decls = spec.param_decls().unwrap();
+            let (w, b) = c.params();
+            assert_eq!(w.len(), decls.len());
+            for (i, d) in decls.iter().enumerate() {
+                assert_eq!(w[i].len(), d.rows * d.cols);
+                assert_eq!(b[i].len(), d.cols);
+            }
+            assert_eq!(c.input().len(), c.batch * spec.input_dim());
+            for s in shrink_graph_case(&c) {
+                s.spec().check().unwrap();
+                assert!(s != c, "shrink candidate equals original");
+            }
         }
     }
 

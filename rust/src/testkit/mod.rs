@@ -8,9 +8,11 @@
 //! of hand-picked nets:
 //!
 //! * [`gen`] — seeded case generators built on [`crate::prop::Gen`]:
-//!   random `MlpSpec`s with derived parameters/batches, raw vector
-//!   `Program`s, datasets, and M×F cluster topologies sweeping the §2
-//!   placements, each with structured shrinkers.
+//!   random `MlpSpec`s with derived parameters/batches, random
+//!   well-typed operator graphs ([`gen::GraphCase`]: residual / gated /
+//!   CNN / transformer-block), raw vector `Program`s, datasets, and M×F
+//!   cluster topologies sweeping the §2 placements, each with
+//!   structured shrinkers.
 //! * [`diff`] — the differential executor: every case through every
 //!   level via the Session API, asserting bit-identical outputs, trained
 //!   weights, and identical cycle accounting between fused and unfused
@@ -54,4 +56,6 @@ pub use fuzz::{
     case_seed, fuzz, parse_corpus, replay_corpus, run_case, Family, FuzzFailure, FuzzOptions,
     FuzzReport,
 };
-pub use gen::{FaultCase, FuzzCase, NetCase, ProgramCase, RecoveryCase, ServeChaosCase};
+pub use gen::{
+    FaultCase, FuzzCase, GraphArch, GraphCase, NetCase, ProgramCase, RecoveryCase, ServeChaosCase,
+};

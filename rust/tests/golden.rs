@@ -8,7 +8,7 @@
 //! int16 bits* — activations, loss lane, and updated weights.
 
 use mfnn::hw::{FpgaDevice, MatrixMachine};
-use mfnn::nn::lowering::{lower_forward, lower_train_step};
+use mfnn::nn::graph::{lower_mlp_forward as lower_forward, lower_mlp_train as lower_train_step};
 use mfnn::nn::mlp::MlpSpec;
 use mfnn::runtime::{GoldenModel, Runtime};
 use mfnn::util::Rng;

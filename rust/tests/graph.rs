@@ -1,0 +1,228 @@
+//! Operator-graph IR end-to-end (DESIGN.md §Operator IR): the MlpSpec
+//! migration is observationally perfect — identical outputs *and*
+//! identical cycle accounting against the frozen legacy lowering — and
+//! graph-native nets (a small CNN and a transformer block) compile,
+//! train, infer, evaluate and serve through the production
+//! Compiler → Artifact → Session → Server stack bit-exactly.
+
+use mfnn::fixed::FixedSpec;
+use mfnn::hw::{FpgaDevice, MatrixMachine};
+use mfnn::nn::dataset::Dataset;
+use mfnn::nn::graph::{Conv2dGeom, GraphSpec, INPUT};
+use mfnn::nn::lowering::{legacy_lower_forward, legacy_lower_train_step, LoweredMlp};
+use mfnn::nn::lut::ActKind;
+use mfnn::nn::mlp::{LutParams, MlpSpec};
+use mfnn::nn::trainer::TrainConfig;
+use mfnn::serve::{ServeConfig, Server};
+use mfnn::session::{Artifact, CompileOptions, Compiler, Session, Target};
+use mfnn::testkit::{Differ, GraphArch, GraphCase};
+use mfnn::util::Rng;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------
+// MlpSpec through the graph path ≡ legacy lowering, incl. cycle stats.
+// ---------------------------------------------------------------------
+
+#[test]
+fn mlp_outputs_and_cycle_stats_match_legacy_lowering() {
+    let fixed = FixedSpec::q(10).saturating();
+    let spec = MlpSpec::from_dims(
+        "bitident",
+        &[6, 8, 4],
+        ActKind::Relu,
+        ActKind::Identity,
+        fixed,
+        LutParams::training(fixed),
+    )
+    .unwrap();
+    let device = FpgaDevice::selected();
+    let mut rng = Rng::new(0xB17);
+    let mut rand = |n: usize, amp: f64| -> Vec<i16> {
+        (0..n).map(|_| fixed.from_f64((rng.gen_f64() - 0.5) * amp)).collect()
+    };
+    let ws: Vec<Vec<i16>> = spec.layers.iter().map(|l| rand(l.inputs * l.outputs, 1.0)).collect();
+    let bs: Vec<Vec<i16>> = spec.layers.iter().map(|l| rand(l.outputs, 0.4)).collect();
+    let x = rand(3 * 6, 2.0);
+    let y = rand(3 * 4, 1.0);
+
+    let run = |h: &LoweredMlp, with_y: bool| {
+        let mut m = MatrixMachine::new(device, &h.program).unwrap();
+        m.bind_named("x", &x[..h.batch * 6]).unwrap();
+        if with_y {
+            m.bind_named("y", &y[..h.batch * 4]).unwrap();
+        }
+        for l in 0..spec.layers.len() {
+            m.bind_named(&format!("w{l}"), &ws[l]).unwrap();
+            m.bind_named(&format!("b{l}"), &bs[l]).unwrap();
+        }
+        let stats = m.execute();
+        let mut state = vec![m.read_named("o1").unwrap().to_vec()];
+        if with_y {
+            state.push(m.read_named("loss").unwrap().to_vec());
+            for l in 0..spec.layers.len() {
+                state.push(m.read_named(&format!("w{l}")).unwrap().to_vec());
+                state.push(m.read_named(&format!("b{l}")).unwrap().to_vec());
+            }
+        }
+        (state, stats)
+    };
+
+    // Forward, batch 3.
+    let g = mfnn::nn::graph::lower_mlp_forward(&spec, 3).unwrap();
+    let l = legacy_lower_forward(&spec, 3).unwrap();
+    let (g_out, g_stats) = run(&g, false);
+    let (l_out, l_stats) = run(&l, false);
+    assert_eq!(g_out, l_out, "forward outputs diverge");
+    assert_eq!(g_stats, l_stats, "forward cycle stats diverge");
+
+    // Train step, batch 3: outputs, loss, updated params, cycle stats.
+    let g = mfnn::nn::graph::lower_mlp_train(&spec, 3, 1.0 / 64.0).unwrap();
+    let l = legacy_lower_train_step(&spec, 3, 1.0 / 64.0).unwrap();
+    let (g_state, g_stats) = run(&g, true);
+    let (l_state, l_stats) = run(&l, true);
+    assert_eq!(g_state, l_state, "train-step state diverges");
+    assert_eq!(g_stats, l_stats, "train-step cycle stats diverge");
+}
+
+// ---------------------------------------------------------------------
+// Graph-native nets through the production stack.
+// ---------------------------------------------------------------------
+
+fn write_params(
+    session: &mut Session,
+    artifact: &Arc<Artifact>,
+    spec: &GraphSpec,
+    qw: &[Vec<i16>],
+    qb: &[Vec<i16>],
+) {
+    for (i, d) in spec.param_decls().unwrap().iter().enumerate() {
+        for (name, data) in [(&d.wname, &qw[i]), (&d.bname, &qb[i])] {
+            let h = artifact.tensor(name).unwrap();
+            session.write(&h, data).unwrap();
+        }
+    }
+}
+
+/// Train `spec` on a synthetic dataset, then assert the trained
+/// parameters produce bit-identical outputs through (a) the trainable
+/// session's own forward instance, (b) a fresh batch-1 inference
+/// artifact, and (c) the batched serving runtime.
+fn train_infer_evaluate_serve(spec: &GraphSpec, seed: u64) {
+    let in_dim = spec.input_dim();
+    let classes = spec.output_dim();
+    let mut rng = Rng::new(seed);
+    let n = 24;
+    let x: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..in_dim).map(|_| rng.gen_f64() * 2.0 - 1.0).collect()).collect();
+    let y: Vec<Vec<f64>> = (0..n)
+        .map(|i| {
+            let mut v = vec![0.0; classes];
+            v[i % classes] = 1.0;
+            v
+        })
+        .collect();
+    let ds = Dataset { x, y, classes, name: format!("{}-synthetic", spec.name) };
+
+    let device = FpgaDevice::selected();
+    let compiler = Compiler::new();
+    let cfg = TrainConfig { batch: 4, lr: 1.0 / 64.0, steps: 8, seed, log_every: 4 };
+    let art = compiler.compile_graph(spec, &CompileOptions::training(cfg.batch, cfg.lr)).unwrap();
+    let mut session = Session::open(Arc::clone(&art), Target::Board(device)).expect("open");
+    session.train(&ds, &cfg).expect("train");
+    let ev = session.evaluate(&ds).expect("evaluate");
+    assert!((0.0..=1.0).contains(&ev.accuracy), "accuracy {}", ev.accuracy);
+    let (qw, qb) = session.weights().expect("trained params");
+
+    let fixed = spec.fixed;
+    let rows: Vec<Vec<i16>> = ds.x.iter().take(3).map(|x| fixed.encode_vec(x)).collect();
+
+    // Batch-1 reference with the trained parameters.
+    let a1 = compiler.compile_graph(spec, &CompileOptions::inference(1)).unwrap();
+    let mut reference = Session::open(Arc::clone(&a1), Target::Board(device)).unwrap();
+    write_params(&mut reference, &a1, spec, &qw, &qb);
+    let want: Vec<Vec<i16>> =
+        rows.iter().map(|r| reference.infer(r).expect("reference infer").output).collect();
+
+    // (a) The trainable session's forward instance agrees to the bit.
+    for (r, w) in rows.iter().zip(&want) {
+        assert_eq!(&session.infer(r).expect("trained infer").output, w, "trained-session infer");
+    }
+
+    // (c) The serving runtime returns the same bits per request,
+    // through micro-batching and the forward batch ladder.
+    let srv = compiler.compile_graph(spec, &CompileOptions::serving(4)).unwrap();
+    let scfg = ServeConfig {
+        boards: 2,
+        device: device.part.name.to_string(),
+        max_batch: 4,
+        ..ServeConfig::default()
+    };
+    let mut server = Server::open(scfg).expect("server open");
+    let nid = server.register(Arc::clone(&srv), &qw, &qb).expect("register");
+    for (i, r) in rows.iter().enumerate() {
+        server.submit_at(i as u64 * 3, nid, r).expect("submit");
+    }
+    server.drain().expect("drain");
+    let mut got = server.take_completions();
+    got.sort_by_key(|c| c.id);
+    assert_eq!(got.len(), rows.len(), "one completion per request");
+    for (c, w) in got.iter().zip(&want) {
+        assert_eq!(&c.output, w, "served request {} diverged from batch-1 infer", c.id);
+    }
+}
+
+#[test]
+fn cnn_trains_infers_evaluates_and_serves() {
+    // 4×4 single-channel images → 2×2 conv (3 maps) → ReLU → classifier.
+    let fixed = FixedSpec::q(9).saturating();
+    let geom = Conv2dGeom { in_h: 4, in_w: 4, in_c: 1, out_c: 3, kh: 2, kw: 2, stride: 1 };
+    let mut s = GraphSpec::new("tiny_cnn", 16, fixed, LutParams::training(fixed));
+    let c = s.conv2d(INPUT, geom);
+    let a = s.activation(c, ActKind::Relu);
+    s.linear(a, 3);
+    train_infer_evaluate_serve(&s, 0xC2201);
+}
+
+#[test]
+fn transformer_block_trains_infers_evaluates_and_serves() {
+    // Pre-head transformer block over 3 tokens of width 2: attention +
+    // residual + norm, two-layer FFN + residual + norm, linear head.
+    let fixed = FixedSpec::q(8).saturating();
+    let (seq, d) = (3, 2);
+    let mut s = GraphSpec::new("tiny_xfmr", seq * d, fixed, LutParams::training(fixed));
+    let att = s.attention(INPUT, seq, d);
+    let r1 = s.add(att, INPUT);
+    let n1 = s.normalization(r1, d);
+    let f1 = s.linear(n1, seq * d);
+    let fa = s.activation(f1, ActKind::Relu);
+    let f2 = s.linear(fa, seq * d);
+    let r2 = s.add(f2, n1);
+    let n2 = s.normalization(r2, d);
+    s.linear(n2, 3);
+    train_infer_evaluate_serve(&s, 0x7F02);
+}
+
+// ---------------------------------------------------------------------
+// Every generated-graph architecture through the differential ladder.
+// ---------------------------------------------------------------------
+
+#[test]
+fn generated_graph_cases_agree_across_fidelity_levels() {
+    let differ = Differ::default();
+    for arch in
+        [GraphArch::Residual, GraphArch::Gated, GraphArch::Cnn, GraphArch::TransformerBlock]
+    {
+        let c = GraphCase {
+            seed: 0xE2E,
+            arch,
+            dim: 3,
+            hidden: 2,
+            act: ActKind::Relu,
+            frac_bits: 9,
+            batch: 2,
+        };
+        if let Err(div) = differ.run_graph(&c) {
+            panic!("{arch:?}: {div:?}");
+        }
+    }
+}

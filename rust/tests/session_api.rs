@@ -14,7 +14,7 @@ use mfnn::cluster::ClusterConfig;
 use mfnn::fixed::FixedSpec;
 use mfnn::hw::{FpgaDevice, MatrixMachine};
 use mfnn::nn::dataset;
-use mfnn::nn::lowering::lower_forward;
+use mfnn::nn::graph::lower_mlp_forward as lower_forward;
 use mfnn::nn::lut::ActKind;
 use mfnn::nn::mlp::{LutParams, MlpSpec};
 use mfnn::nn::trainer::TrainConfig;

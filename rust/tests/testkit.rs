@@ -63,6 +63,19 @@ fn corpus_case_seeds_replay_clean() {
 }
 
 #[test]
+fn corpus_graph_seeds_replay_clean() {
+    // The CI graph smoke (`mfnn fuzz --family graph --cases 8`) plus
+    // this pinned corpus: generated operator graphs (residual / gated /
+    // CNN / transformer-block) must agree across every fidelity level.
+    let text = include_str!("corpus/graph.seeds");
+    let entries = testkit::parse_corpus(text).unwrap();
+    assert!(entries.len() >= 8, "graph corpus unexpectedly small");
+    assert!(entries.iter().all(|(f, _)| *f == Family::Graph));
+    let report = testkit::replay_corpus(&entries, &FuzzOptions::default());
+    assert!(report.ok(), "{}", report.render());
+}
+
+#[test]
 fn corpus_fault_seeds_replay_clean() {
     let text = include_str!("corpus/faults.seeds");
     let entries = testkit::parse_corpus(text).unwrap();
