@@ -9,11 +9,11 @@ use mfnn::bench::Suite;
 use mfnn::fixed::FixedSpec;
 use mfnn::hw::actpro::ActPro;
 use mfnn::hw::mvm::Mvm;
-use mfnn::hw::{FastSim, FpgaDevice};
+use mfnn::hw::{FastSim, FpgaDevice, MemPlan};
 use mfnn::isa::{MvmOp, Opcode};
 use mfnn::nn::graph::{Conv2dGeom, GraphSpec, INPUT};
 use mfnn::nn::lut::{ActKind, ActLut, AddrMode};
-use mfnn::nn::mlp::LutParams;
+use mfnn::nn::mlp::{LutParams, MlpSpec};
 use mfnn::perf::group::{OpClass, PerfModel};
 use mfnn::report::{f, Table};
 use mfnn::util::Rng;
@@ -241,7 +241,52 @@ fn main() {
         suite.bench(&format!("graph_{}_b{batch} ({lane_ops} lane-ops)", spec.name), |b| {
             b.iter_with_elements(lane_ops, || session.step().cycles)
         });
+        // Static memory planner (DESIGN.md §Memory planner): the
+        // lane-reuse layout these scenarios would run under with
+        // `CompileOptions::with_memory_plan()` — bit-identical execution
+        // (enforced by the memplan fuzz family) at a lower peak
+        // lane/BRAM footprint than the default packed arena.
+        let mp = MemPlan::build(artifact.program());
+        suite.note(
+            &format!("memplan_{}_b{batch}", spec.name),
+            format!(
+                "packed {} lanes / {} BRAM18 -> planned {} lanes / {} BRAM18 (saved {} lanes)",
+                mp.packed_lanes(),
+                mp.packed_bram(),
+                mp.peak_lanes(),
+                mp.peak_bram(),
+                mp.saved_lanes(),
+            ),
+        );
     }
+
+    // Planner note for a paper-style MLP training step (the same net the
+    // `mfnn plan --report` table leads with): backward-pass temporaries
+    // are where interval-based lane reuse pays most.
+    let fixed10 = FixedSpec::q(10).saturating();
+    let mlp = MlpSpec::from_dims(
+        "mlp_16_32_32_10",
+        &[16, 32, 32, 10],
+        ActKind::Relu,
+        ActKind::Identity,
+        fixed10,
+        LutParams::training(fixed10),
+    )
+    .expect("bench mlp spec");
+    let lowered =
+        mfnn::nn::graph::lower_mlp_train(&mlp, batch, 1.0 / 128.0).expect("bench mlp train");
+    let mp = MemPlan::build(&lowered.program);
+    suite.note(
+        &format!("memplan_{}_train_b{batch}", mlp.name),
+        format!(
+            "packed {} lanes / {} BRAM18 -> planned {} lanes / {} BRAM18 (saved {} lanes)",
+            mp.packed_lanes(),
+            mp.packed_bram(),
+            mp.peak_lanes(),
+            mp.peak_bram(),
+            mp.saved_lanes(),
+        ),
+    );
 
     let t = suite.finish();
     let _ = t;

@@ -1,0 +1,498 @@
+//! Static lane-arena memory planner (DESIGN.md §Memory planner).
+//!
+//! [`super::plan::ExecPlan`]'s default layout packs every declared buffer
+//! back-to-back and keeps it alive for the whole program — simple, but it
+//! means a deep net's temporaries all coexist even though most are dead
+//! for most of the schedule. This module computes each buffer's live
+//! interval over the step schedule and lays temporaries out so buffers
+//! whose intervals do not overlap **share arena lanes**, shrinking peak
+//! BRAM demand per net. It also turns "does this net fit the board?" into
+//! a typed answer: [`MemPlan::fit`] returns [`PlanError::ExceedsBoard`]
+//! (with a suggested schedule split point) instead of silently allocating
+//! past the part's BRAM budget.
+//!
+//! ### Liveness model
+//!
+//! One interval per buffer over the program's step indices, conservative
+//! in both directions:
+//!
+//! * `Wave` lane views: `a`/`b` are uses; `out` is a definition **and** a
+//!   use (a strided write may touch only part of the buffer).
+//! * `LoadDram` fully defines its buffer; `StoreDram` uses it.
+//! * The interval is `[first reference, last reference]` — any reference,
+//!   def or use, extends it.
+//!
+//! ### Lane-reuse rule
+//!
+//! Only `BufKind::Temp` buffers are reuse candidates, and only when their
+//! *first* reference is a **full definition** (a `LoadDram`, or a wave
+//! step whose `out` views cover every lane without reading the buffer in
+//! the same step). Everything else is *pinned* — laid out packed, alive
+//! for the whole program:
+//!
+//! * Host-visible kinds (`Input`/`Weight`/`Bias`/`Target`/`Output`/
+//!   `Const`) may be written or read by the host before/after execution,
+//!   so their lanes must survive end-to-end.
+//! * A temporary first referenced by a *read* (or a partial write)
+//!   observes the arena's zero-init; reusing its lanes would leak another
+//!   buffer's stale values into that read and break bit-exactness.
+//!
+//! Eligible temporaries are placed first-fit above the pinned region,
+//! ordered by interval start; two temporaries may overlap in lanes only
+//! if their live intervals are disjoint. Because a shared-lane pair is
+//! never live at the same step, no wave can read one while the other
+//! holds the lanes — so planned execution is bit-identical to packed
+//! execution, and every cycle charge (`wave_cycles`, DMA bytes, LUT
+//! streams) is address-independent, so `RunStats` is too. The `memplan`
+//! fuzz family ([`crate::testkit::diff::Differ::run_memplan`]) enforces
+//! both properties on generated nets.
+
+use super::BRAM_DEPTH;
+use crate::assembler::program::{BufKind, Program, Step};
+use crate::perf::catalog::FpgaPart;
+use std::collections::{HashMap, HashSet};
+use thiserror::Error;
+
+/// Typed board-fit failure from [`MemPlan::fit`] / [`MemPlan::require_fit`].
+#[derive(Debug, Clone, PartialEq, Eq, Error)]
+pub enum PlanError {
+    /// Even with lane reuse, the net's peak lane demand exceeds the
+    /// board's BRAM capacity. `split_step` is the first step index whose
+    /// live demand exceeds the capacity (or the peak-demand step when
+    /// only fragmentation pushed the layout over) — splitting the
+    /// schedule into separate programs before that step is the smallest
+    /// cut that can help.
+    #[error(
+        "net `{net}`: peak lane demand {demand} exceeds board {board} \
+         capacity of {capacity} lanes; suggest splitting the schedule \
+         before step {split_step}"
+    )]
+    ExceedsBoard {
+        /// Program name.
+        net: String,
+        /// Board part name.
+        board: String,
+        /// Planned peak lanes (after reuse).
+        demand: usize,
+        /// Board capacity in lanes (`bram18 × BRAM_DEPTH`).
+        capacity: usize,
+        /// Suggested schedule split point (step index).
+        split_step: usize,
+    },
+}
+
+/// Live interval of one buffer over the program's step schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    /// First step index referencing the buffer (def or use).
+    pub first: usize,
+    /// Last step index referencing the buffer.
+    pub last: usize,
+    /// Pinned buffers keep a packed, whole-program placement (see the
+    /// module docs for which buffers pin).
+    pub pinned: bool,
+}
+
+impl Interval {
+    /// Do two intervals overlap in time? Pinned intervals span the whole
+    /// program, so they overlap everything.
+    pub fn overlaps(&self, other: &Interval) -> bool {
+        self.pinned || other.pinned || (self.first <= other.last && other.first <= self.last)
+    }
+
+    /// Does the interval cover step `s`?
+    pub fn covers(&self, s: usize) -> bool {
+        self.pinned || (self.first <= s && s <= self.last)
+    }
+}
+
+/// A computed arena layout for one [`Program`]: per-buffer live
+/// intervals, a lane placement that reuses lanes across disjoint
+/// intervals, and the resulting peak-lane / peak-BRAM report.
+#[derive(Debug, Clone)]
+pub struct MemPlan {
+    name: String,
+    /// `(arena base, lane count)` per program buffer — the same shape
+    /// [`super::plan::ExecPlan`] uses for its arena layout.
+    bufs: Vec<(usize, usize)>,
+    intervals: Vec<Interval>,
+    pinned_len: usize,
+    packed_len: usize,
+    arena_len: usize,
+    n_steps: usize,
+}
+
+impl MemPlan {
+    /// Analyze liveness and lay the program's buffers out with lane
+    /// reuse. Infallible — board-fit is a separate, explicit check
+    /// ([`MemPlan::require_fit`] / [`MemPlan::fit`]).
+    pub fn build(program: &Program) -> MemPlan {
+        let n = program.buffers.len();
+        let n_steps = program.steps.len();
+        let mut first = vec![usize::MAX; n];
+        let mut last = vec![0usize; n];
+        // Was the buffer's first reference a full definition?
+        let mut full_def = vec![false; n];
+        for (s, step) in program.steps.iter().enumerate() {
+            match step {
+                Step::LoadDram(b) => {
+                    if first[*b] == usize::MAX {
+                        first[*b] = s;
+                        full_def[*b] = true;
+                    }
+                    last[*b] = s;
+                }
+                Step::StoreDram(b) => {
+                    if first[*b] == usize::MAX {
+                        first[*b] = s;
+                    }
+                    last[*b] = s;
+                }
+                Step::LoadLut(_) => {}
+                Step::Wave(w) => {
+                    let mut reads: HashSet<usize> = HashSet::new();
+                    let mut writes: HashMap<usize, Vec<bool>> = HashMap::new();
+                    for l in &w.lanes {
+                        reads.insert(l.a.buf);
+                        if let Some(b) = &l.b {
+                            reads.insert(b.buf);
+                        }
+                        let cov = writes
+                            .entry(l.out.buf)
+                            .or_insert_with(|| vec![false; program.buffers[l.out.buf].len()]);
+                        for i in 0..l.out.len {
+                            let lane = l.out.offset + i * l.out.stride;
+                            if lane < cov.len() {
+                                cov[lane] = true;
+                            }
+                        }
+                    }
+                    for (&b, cov) in &writes {
+                        if first[b] == usize::MAX {
+                            first[b] = s;
+                            full_def[b] = !reads.contains(&b) && cov.iter().all(|&c| c);
+                        }
+                        last[b] = s;
+                    }
+                    for &b in &reads {
+                        if first[b] == usize::MAX {
+                            first[b] = s; // read-before-def: stays pinned
+                        }
+                        last[b] = s;
+                    }
+                }
+            }
+        }
+        // Classify: reusable temporaries vs pinned everything-else.
+        let last_step = n_steps.saturating_sub(1);
+        let mut reusable = vec![false; n];
+        let mut intervals = Vec::with_capacity(n);
+        for (i, decl) in program.buffers.iter().enumerate() {
+            let referenced = first[i] != usize::MAX;
+            reusable[i] = decl.kind == BufKind::Temp && referenced && full_def[i];
+            intervals.push(if reusable[i] {
+                Interval { first: first[i], last: last[i], pinned: false }
+            } else {
+                Interval { first: 0, last: last_step, pinned: true }
+            });
+        }
+        // Pinned region: packed in declaration order, exactly like the
+        // default ExecPlan layout restricted to the pinned set.
+        let mut bufs = vec![(0usize, 0usize); n];
+        let mut pinned_len = 0usize;
+        for (i, decl) in program.buffers.iter().enumerate() {
+            bufs[i].1 = decl.len();
+            if !reusable[i] {
+                bufs[i].0 = pinned_len;
+                pinned_len += decl.len();
+            }
+        }
+        // Reusable temporaries: first-fit above the pinned region,
+        // ordered by interval start; a placed temp only blocks lanes for
+        // candidates whose intervals overlap it.
+        let mut order: Vec<usize> = (0..n).filter(|&i| reusable[i]).collect();
+        order.sort_by_key(|&i| (intervals[i].first, i));
+        let mut placed: Vec<usize> = Vec::with_capacity(order.len());
+        for &t in &order {
+            let len = bufs[t].1;
+            let mut conflicts: Vec<(usize, usize)> = placed
+                .iter()
+                .filter(|&&o| bufs[o].1 > 0 && intervals[o].overlaps(&intervals[t]))
+                .map(|&o| bufs[o])
+                .collect();
+            conflicts.sort_unstable();
+            let mut base = pinned_len;
+            for (cb, cl) in conflicts {
+                if len == 0 || base + len <= cb {
+                    break; // fits in the hole before this conflict
+                }
+                base = base.max(cb + cl);
+            }
+            bufs[t].0 = base;
+            placed.push(t);
+        }
+        let arena_len = bufs.iter().map(|&(b, l)| b + l).max().unwrap_or(0);
+        let packed_len = program.buffers.iter().map(|b| b.len()).sum();
+        MemPlan {
+            name: program.name.clone(),
+            bufs,
+            intervals,
+            pinned_len,
+            packed_len,
+            arena_len,
+            n_steps,
+        }
+    }
+
+    /// Build and check against a catalog part in one call.
+    pub fn fit(program: &Program, part: &FpgaPart) -> Result<MemPlan, PlanError> {
+        let plan = MemPlan::build(program);
+        plan.require_fit(part.name, MemPlan::board_lanes(part))?;
+        Ok(plan)
+    }
+
+    /// Lane capacity of a board: every RAMB18 holds [`BRAM_DEPTH`]
+    /// 16-bit lanes.
+    pub fn board_lanes(part: &FpgaPart) -> usize {
+        part.bram18 as usize * BRAM_DEPTH
+    }
+
+    /// Board-fit contract: `Err(ExceedsBoard)` **iff** the planned peak
+    /// lane demand exceeds `capacity_lanes`.
+    pub fn require_fit(&self, board: &str, capacity_lanes: usize) -> Result<(), PlanError> {
+        if self.arena_len > capacity_lanes {
+            return Err(PlanError::ExceedsBoard {
+                net: self.name.clone(),
+                board: board.to_string(),
+                demand: self.arena_len,
+                capacity: capacity_lanes,
+                split_step: self.split_point(capacity_lanes),
+            });
+        }
+        Ok(())
+    }
+
+    /// Program name the plan was built from.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// `(arena base, lane count)` per buffer — feed to the planned
+    /// [`super::plan::ExecPlan`] constructors.
+    pub fn layout(&self) -> &[(usize, usize)] {
+        &self.bufs
+    }
+
+    /// Per-buffer live intervals (index = buffer id).
+    pub fn intervals(&self) -> &[Interval] {
+        &self.intervals
+    }
+
+    /// Peak lanes of the planned layout (= its arena length).
+    pub fn peak_lanes(&self) -> usize {
+        self.arena_len
+    }
+
+    /// Lanes of the default packed layout (sum of all buffer lengths).
+    pub fn packed_lanes(&self) -> usize {
+        self.packed_len
+    }
+
+    /// Lanes held by pinned buffers alone.
+    pub fn pinned_lanes(&self) -> usize {
+        self.pinned_len
+    }
+
+    /// Lanes saved by reuse versus the packed layout.
+    pub fn saved_lanes(&self) -> usize {
+        self.packed_len - self.arena_len
+    }
+
+    /// RAMB18 blocks the planned layout occupies.
+    pub fn peak_bram(&self) -> usize {
+        self.arena_len.div_ceil(BRAM_DEPTH)
+    }
+
+    /// RAMB18 blocks the packed layout occupies.
+    pub fn packed_bram(&self) -> usize {
+        self.packed_len.div_ceil(BRAM_DEPTH)
+    }
+
+    /// Number of schedule steps analyzed.
+    pub fn steps(&self) -> usize {
+        self.n_steps
+    }
+
+    /// Live lane demand at step `s`: pinned lanes plus every reusable
+    /// temporary whose interval covers `s`. A lower bound on
+    /// [`MemPlan::peak_lanes`] (first-fit may fragment).
+    pub fn demand_at(&self, s: usize) -> usize {
+        let mut d = self.pinned_len;
+        for (iv, &(_, len)) in self.intervals.iter().zip(&self.bufs) {
+            if !iv.pinned && iv.covers(s) {
+                d += len;
+            }
+        }
+        d
+    }
+
+    /// Suggested schedule split point for a board of `capacity` lanes:
+    /// the first step whose live demand exceeds the capacity, or the
+    /// peak-demand step when only layout fragmentation overflows.
+    pub fn split_point(&self, capacity: usize) -> usize {
+        let mut worst = (0usize, 0usize); // (demand, step)
+        for s in 0..self.n_steps {
+            let d = self.demand_at(s);
+            if d > capacity {
+                return s;
+            }
+            if d > worst.0 {
+                worst = (d, s);
+            }
+        }
+        worst.1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembler::program::{LaneOp, View, Wave};
+    use crate::fixed::FixedSpec;
+    use crate::isa::Opcode;
+
+    const S: FixedSpec = FixedSpec::PAPER;
+
+    fn wave(op: Opcode, a: View, b: Option<View>, out: View) -> Step {
+        Step::Wave(Wave { op, vec_len: a.len, lut: None, lanes: vec![LaneOp { a, b, out }] })
+    }
+
+    /// x → t1 → o, then x → t2 → o: t1 and t2 have disjoint intervals.
+    fn reuse_program() -> (Program, usize, usize) {
+        let mut p = Program::new("reuse", S);
+        let x = p.buffer("x", 4, 1, BufKind::Input);
+        let t1 = p.buffer("t1", 4, 1, BufKind::Temp);
+        let t2 = p.buffer("t2", 4, 1, BufKind::Temp);
+        let o = p.buffer("o", 4, 1, BufKind::Output);
+        let add = Opcode::VectorAddition;
+        p.steps.push(wave(add, View::all(x, 4), Some(View::all(x, 4)), View::all(t1, 4)));
+        p.steps.push(wave(add, View::all(t1, 4), Some(View::all(t1, 4)), View::all(o, 4)));
+        p.steps.push(wave(add, View::all(x, 4), Some(View::all(x, 4)), View::all(t2, 4)));
+        p.steps.push(wave(add, View::all(t2, 4), Some(View::all(o, 4)), View::all(o, 4)));
+        p.check().unwrap();
+        (p, t1, t2)
+    }
+
+    #[test]
+    fn disjoint_temps_share_lanes() {
+        let (p, t1, t2) = reuse_program();
+        let mp = MemPlan::build(&p);
+        assert_eq!(mp.packed_lanes(), 16);
+        assert_eq!(mp.peak_lanes(), 12, "t2 reuses t1's lanes");
+        assert_eq!(mp.layout()[t1], mp.layout()[t2]);
+        assert_eq!(mp.saved_lanes(), 4);
+        assert!(!mp.intervals()[t1].overlaps(&mp.intervals()[t2]));
+    }
+
+    #[test]
+    fn overlapping_temps_keep_disjoint_lanes() {
+        // t1 live [0,3] and t2 live [1,2] overlap → no sharing.
+        let mut p = Program::new("overlap", S);
+        let x = p.buffer("x", 4, 1, BufKind::Input);
+        let t1 = p.buffer("t1", 4, 1, BufKind::Temp);
+        let t2 = p.buffer("t2", 4, 1, BufKind::Temp);
+        let o = p.buffer("o", 4, 1, BufKind::Output);
+        let add = Opcode::VectorAddition;
+        p.steps.push(wave(add, View::all(x, 4), Some(View::all(x, 4)), View::all(t1, 4)));
+        p.steps.push(wave(add, View::all(x, 4), Some(View::all(x, 4)), View::all(t2, 4)));
+        p.steps.push(wave(add, View::all(t2, 4), Some(View::all(t2, 4)), View::all(o, 4)));
+        p.steps.push(wave(add, View::all(t1, 4), Some(View::all(o, 4)), View::all(o, 4)));
+        p.check().unwrap();
+        let mp = MemPlan::build(&p);
+        assert_eq!(mp.peak_lanes(), mp.packed_lanes());
+        let (b1, l1) = mp.layout()[t1];
+        let (b2, _) = mp.layout()[t2];
+        assert!(b1 + l1 <= b2 || b2 + 4 <= b1, "overlapping temps must not alias");
+    }
+
+    #[test]
+    fn read_before_def_temp_stays_pinned() {
+        // t's first reference is a read → its zero-init is observable.
+        let mut p = Program::new("rbd", S);
+        let t = p.buffer("t", 4, 1, BufKind::Temp);
+        let o = p.buffer("o", 4, 1, BufKind::Output);
+        p.steps.push(wave(
+            Opcode::VectorAddition,
+            View::all(t, 4),
+            Some(View::all(t, 4)),
+            View::all(o, 4),
+        ));
+        p.check().unwrap();
+        let mp = MemPlan::build(&p);
+        assert!(mp.intervals()[t].pinned);
+        assert_eq!(mp.peak_lanes(), mp.packed_lanes());
+    }
+
+    #[test]
+    fn partial_first_def_temp_stays_pinned() {
+        // First write covers only 2 of t's 4 lanes → pinned.
+        let mut p = Program::new("partial", S);
+        let x = p.buffer("x", 2, 1, BufKind::Input);
+        let t = p.buffer("t", 4, 1, BufKind::Temp);
+        let o = p.buffer("o", 4, 1, BufKind::Output);
+        let add = Opcode::VectorAddition;
+        p.steps.push(wave(add, View::all(x, 2), Some(View::all(x, 2)), View::contiguous(t, 0, 2)));
+        p.steps.push(wave(add, View::all(t, 4), Some(View::all(t, 4)), View::all(o, 4)));
+        p.check().unwrap();
+        let mp = MemPlan::build(&p);
+        assert!(mp.intervals()[t].pinned);
+    }
+
+    #[test]
+    fn full_def_temp_interval_covers_its_references() {
+        let (p, t1, _) = reuse_program();
+        let mp = MemPlan::build(&p);
+        let iv = mp.intervals()[t1];
+        assert!(!iv.pinned);
+        assert_eq!((iv.first, iv.last), (0, 1));
+    }
+
+    #[test]
+    fn exceeds_board_fires_iff_demand_exceeds_capacity() {
+        let (p, _, _) = reuse_program();
+        let mp = MemPlan::build(&p);
+        for cap in 0..=mp.packed_lanes() + 1 {
+            let r = mp.require_fit("test-board", cap);
+            if cap >= mp.peak_lanes() {
+                assert!(r.is_ok(), "cap {cap}");
+            } else {
+                let Err(PlanError::ExceedsBoard { demand, capacity, split_step, .. }) = r else {
+                    panic!("cap {cap}: expected ExceedsBoard");
+                };
+                assert_eq!(demand, mp.peak_lanes());
+                assert_eq!(capacity, cap);
+                assert!(split_step < mp.steps());
+            }
+        }
+    }
+
+    #[test]
+    fn fit_accepts_small_nets_on_the_selected_part() {
+        let (p, _, _) = reuse_program();
+        let part = FpgaPart::selected();
+        let mp = MemPlan::fit(&p, part).unwrap();
+        assert!(mp.peak_lanes() <= MemPlan::board_lanes(part));
+        assert_eq!(mp.peak_bram(), 1);
+    }
+
+    #[test]
+    fn demand_profile_lower_bounds_the_layout() {
+        let (p, _, _) = reuse_program();
+        let mp = MemPlan::build(&p);
+        for s in 0..mp.steps() {
+            assert!(mp.demand_at(s) <= mp.peak_lanes());
+        }
+        // Peak demand here equals the layout (no fragmentation): 12.
+        assert_eq!((0..mp.steps()).map(|s| mp.demand_at(s)).max(), Some(12));
+    }
+}

@@ -51,6 +51,7 @@ pub mod fifo;
 pub mod fpga;
 pub mod group;
 pub mod machine;
+pub mod memplan;
 pub mod mvm;
 pub mod plan;
 pub mod trace;
@@ -59,6 +60,7 @@ pub mod trace_figures;
 pub use fast::FastSim;
 pub use fpga::FpgaDevice;
 pub use machine::{MatrixMachine, RunStats};
+pub use memplan::{Interval, MemPlan, PlanError};
 pub use plan::{ExecPlan, PlanState};
 
 /// Simulated clock cycle count.

@@ -426,23 +426,45 @@ impl ExecPlan {
     /// Compile `program` for `device` with all optimisations on.
     /// The program must already have passed [`Program::check`].
     pub fn new(program: &Program, device: &FpgaDevice) -> ExecPlan {
-        ExecPlan::build(program, device, true)
+        ExecPlan::build(program, device, true, false)
     }
 
     /// Compile without dot→act fusion — one [`PlanWave`] per program
     /// wave, as required by [`ExecPlan::execute_verified`].
     pub fn new_unfused(program: &Program, device: &FpgaDevice) -> ExecPlan {
-        ExecPlan::build(program, device, false)
+        ExecPlan::build(program, device, false, false)
     }
 
-    fn build(program: &Program, device: &FpgaDevice, fuse: bool) -> ExecPlan {
-        // Arena layout: buffers packed back to back.
-        let mut bufs = Vec::with_capacity(program.buffers.len());
-        let mut arena_len = 0usize;
-        for b in &program.buffers {
-            bufs.push((arena_len, b.len()));
-            arena_len += b.len();
-        }
+    /// Compile with the static memory planner's lane-reuse layout
+    /// ([`super::memplan::MemPlan`]): temporaries with disjoint live
+    /// intervals share arena lanes, shrinking [`ExecPlan::arena_len`] to
+    /// the planner's peak demand. Outputs and `RunStats` stay
+    /// bit-identical to [`ExecPlan::new`] (every cycle charge is
+    /// address-independent; the `memplan` fuzz family enforces this).
+    pub fn new_planned(program: &Program, device: &FpgaDevice) -> ExecPlan {
+        ExecPlan::build(program, device, true, true)
+    }
+
+    /// Planned layout without fusion (see [`ExecPlan::new_planned`]).
+    pub fn new_unfused_planned(program: &Program, device: &FpgaDevice) -> ExecPlan {
+        ExecPlan::build(program, device, false, true)
+    }
+
+    fn build(program: &Program, device: &FpgaDevice, fuse: bool, planned: bool) -> ExecPlan {
+        // Arena layout: buffers packed back to back, or the memory
+        // planner's lane-reuse layout (DESIGN.md §Memory planner).
+        let (bufs, arena_len) = if planned {
+            let mp = super::memplan::MemPlan::build(program);
+            (mp.layout().to_vec(), mp.peak_lanes())
+        } else {
+            let mut bufs = Vec::with_capacity(program.buffers.len());
+            let mut arena_len = 0usize;
+            for b in &program.buffers {
+                bufs.push((arena_len, b.len()));
+                arena_len += b.len();
+            }
+            (bufs, arena_len)
+        };
         let mut arena_init = vec![0i16; arena_len];
         for (decl, &(base, len)) in program.buffers.iter().zip(&bufs) {
             if let Some(d) = &decl.init {
@@ -1169,6 +1191,43 @@ mod tests {
         let st = plan.state();
         assert_eq!(plan.read_buffer(&st, b), &[1, 2, 3]);
         assert_eq!(plan.read_buffer(&st, a), &[0; 8]);
+    }
+
+    #[test]
+    fn planned_layout_is_bit_exact_and_smaller() {
+        // Two disjoint-lifetime temps: the planner overlays them, and
+        // execution plus cycle accounting must not change.
+        let mut p = Program::new("planned", S);
+        let x = p.buffer("x", 8, 1, BufKind::Input);
+        let t1 = p.buffer("t1", 8, 1, BufKind::Temp);
+        let t2 = p.buffer("t2", 8, 1, BufKind::Temp);
+        let o = p.buffer("o", 8, 1, BufKind::Output);
+        let mk = |a: View, b: View, out: View| {
+            Step::Wave(Wave {
+                op: Opcode::VectorAddition,
+                vec_len: 8,
+                lut: None,
+                lanes: vec![LaneOp { a, b: Some(b), out }],
+            })
+        };
+        p.steps.push(mk(View::all(x, 8), View::all(x, 8), View::all(t1, 8)));
+        p.steps.push(mk(View::all(t1, 8), View::all(x, 8), View::all(o, 8)));
+        p.steps.push(mk(View::all(o, 8), View::all(o, 8), View::all(t2, 8)));
+        p.steps.push(mk(View::all(t2, 8), View::all(x, 8), View::all(o, 8)));
+        p.check().unwrap();
+        let packed = ExecPlan::new(&p, &device());
+        let planned = ExecPlan::new_planned(&p, &device());
+        assert!(planned.arena_len() < packed.arena_len());
+        let data: Vec<i16> = (0..8).map(|i| (i * 3 - 9) as i16).collect();
+        let mut s1 = packed.state();
+        let mut s2 = planned.state();
+        packed.write_buffer(&mut s1, x, &data);
+        planned.write_buffer(&mut s2, x, &data);
+        let st1 = packed.execute(&mut s1);
+        let st2 = planned.execute(&mut s2);
+        assert_eq!(st1, st2, "cycle accounting must not change under planning");
+        assert_eq!(packed.read_buffer(&s1, o), planned.read_buffer(&s2, o));
+        assert_eq!(packed.read_buffer(&s1, x), planned.read_buffer(&s2, x));
     }
 
     #[test]

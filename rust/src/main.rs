@@ -8,6 +8,7 @@
 //! mfnn serve-sim [--requests N] [--seed S] [--nets M] [--boards B] [--max-batch K]
 //!                [--chaos] [--fault-seed S] [--check-determinism]
 //! mfnn fuzz      [--cases N] [--seed S] [--corpus FILE] [--plant-divergence]
+//! mfnn plan      [--device P] [--batch N] [--report] [--out FILE]
 //! mfnn tables    [--which t2|t3|t8|alloc|perf|all]
 //! mfnn traces
 //! mfnn golden    [--dir artifacts]
@@ -19,7 +20,7 @@ use mfnn::cli::{Args, Spec};
 use mfnn::cluster::{ClusterConfig, SystemBus};
 use mfnn::config::Config;
 use mfnn::fixed::FixedSpec;
-use mfnn::hw::FpgaDevice;
+use mfnn::hw::{FpgaDevice, MemPlan};
 use mfnn::isa::Width;
 use mfnn::nn::dataset;
 use mfnn::nn::lut::ActKind;
@@ -52,6 +53,7 @@ fn main() -> ExitCode {
         "train" => cmd_train(&rest),
         "serve-sim" => cmd_serve_sim(&rest),
         "fuzz" => cmd_fuzz(&rest),
+        "plan" => cmd_plan(&rest),
         "tables" => cmd_tables(&rest),
         "traces" => cmd_traces(&rest),
         "golden" => cmd_golden(&rest),
@@ -79,6 +81,7 @@ fn usage() -> String {
          \x20 train    <cfg.toml>    run a training cluster from a launcher config\n\
          \x20 serve-sim              drive the batched serving runtime with synthetic load\n\
          \x20 fuzz                   differential-fuzz every simulator fidelity level\n\
+         \x20 plan                   static memory-planner report: packed vs planned BRAM per net\n\
          \x20 tables                 regenerate the paper's tables (2,3,8,alloc,perf)\n\
          \x20 traces                 print the Fig 7/8/10 timing diagrams\n\
          \x20 golden                 cross-check simulator vs JAX/Pallas artifacts\n",
@@ -535,11 +538,11 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
 
 fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
     let spec = Spec::new()
-        .opt("cases", "generated cases per family (net, graph, program, fault, recovery, serve-chaos)", Some("64"))
+        .opt("cases", "generated cases per family (net, graph, program, fault, recovery, serve-chaos, memplan)", Some("64"))
         .opt("seed", "base seed (case i runs at seed + i·φ; case 0 = seed)", Some("0"))
         .opt("device", "FPGA part every level simulates", Some("XC7S75-2"))
         .opt("corpus", "replay `family seed` lines from this snapshot file", None)
-        .opt("family", "restrict to one family: net|graph|program|fault|recovery|serve-chaos", None)
+        .opt("family", "restrict to one family: net|graph|program|fault|recovery|serve-chaos|memplan", None)
         .opt("failures-out", "write failing seeds here (corpus format)", Some("FUZZ_FAILURES.txt"))
         .opt("max-shrink", "shrink-step budget per failure", Some("100"))
         .flag("plant-divergence", "test-only hook: plant a known FastSim divergence");
@@ -554,7 +557,7 @@ fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
         Some(f) => Some(
             mfnn::testkit::Family::parse(f)
                 .ok_or(format!(
-                    "unknown family {f:?} (net|graph|program|fault|recovery|serve-chaos)"
+                    "unknown family {f:?} (net|graph|program|fault|recovery|serve-chaos|memplan)"
                 ))?,
         ),
         None => None,
@@ -596,6 +599,134 @@ fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
             "{} divergence(s); failing seeds written to {out}",
             report.failures.len()
         ));
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------------- plan
+
+/// The nets the planner report sweeps: a paper-style MLP (forward and
+/// training-step programs) plus the CNN and transformer-block graph
+/// scenarios from `BENCH_group_perf` — lowered, planned, and compared
+/// against the default packed layout.
+fn plan_programs(batch: usize) -> Result<Vec<mfnn::assembler::program::Program>, String> {
+    use mfnn::nn::graph::{
+        lower_graph_forward, lower_mlp_forward, lower_mlp_train, Conv2dGeom, GraphSpec, INPUT,
+    };
+    let fixed = FixedSpec::q(10).saturating();
+    let mlp = MlpSpec::from_dims(
+        "mlp_16_32_32_10",
+        &[16, 32, 32, 10],
+        ActKind::Relu,
+        ActKind::Identity,
+        fixed,
+        LutParams::training(fixed),
+    )
+    .map_err(|e| e.to_string())?;
+
+    let gfixed = FixedSpec::q(9).saturating();
+    let geom = Conv2dGeom { in_h: 8, in_w: 8, in_c: 1, out_c: 8, kh: 3, kw: 3, stride: 1 };
+    let mut conv = GraphSpec::new("cnn_8x8", 64, gfixed, LutParams::training(gfixed));
+    let c = conv.conv2d(INPUT, geom);
+    let ca = conv.activation(c, ActKind::Relu);
+    conv.linear(ca, 10);
+
+    let (seq, d) = (8, 8);
+    let mut xfmr =
+        GraphSpec::new("transformer_block", seq * d, gfixed, LutParams::training(gfixed));
+    let att = xfmr.attention(INPUT, seq, d);
+    let r1 = xfmr.add(att, INPUT);
+    let n1 = xfmr.normalization(r1, d);
+    let f1 = xfmr.linear(n1, seq * d);
+    let fa = xfmr.activation(f1, ActKind::Relu);
+    let f2 = xfmr.linear(fa, seq * d);
+    let r2 = xfmr.add(f2, n1);
+    xfmr.normalization(r2, d);
+
+    Ok(vec![
+        lower_mlp_forward(&mlp, batch).map_err(|e| e.to_string())?.program,
+        lower_mlp_train(&mlp, batch, 1.0 / 128.0).map_err(|e| e.to_string())?.program,
+        lower_graph_forward(&conv, batch).map_err(|e| e.to_string())?.program,
+        lower_graph_forward(&xfmr, batch).map_err(|e| e.to_string())?.program,
+    ])
+}
+
+fn cmd_plan(rest: &[String]) -> Result<(), String> {
+    let spec = Spec::new()
+        .opt("device", "board the fit check targets", Some("XC7S75-2"))
+        .opt("batch", "batch size the nets are lowered at", Some("8"))
+        .opt("out", "report path for --report", Some("PLAN_REPORT.md"))
+        .flag("report", "also write the table as a Markdown report (CI artifact)");
+    let args = parse_or_help(
+        &spec,
+        rest,
+        "mfnn plan",
+        "Static memory-planner report: packed vs planned peak lanes/BRAM per net",
+    )?;
+    let part = device_arg(&args)?;
+    let batch: usize = args.parse_or("batch", 8).map_err(|e| e.to_string())?;
+    let capacity = MemPlan::board_lanes(part);
+    let mut t = Table::new(vec![
+        "net",
+        "steps",
+        "packed lanes",
+        "planned lanes",
+        "saved",
+        "packed BRAM18",
+        "planned BRAM18",
+        "fit",
+    ])
+    .with_title(format!(
+        "static memory planner on {} ({} RAMB18 = {} lanes), batch {batch}",
+        part.name, part.bram18, capacity
+    ))
+    .numeric();
+    let mut rows = Vec::new();
+    for p in plan_programs(batch)? {
+        let mp = MemPlan::build(&p);
+        let fit = match mp.require_fit(part.name, capacity) {
+            Ok(()) => "✓".to_string(),
+            Err(mfnn::hw::PlanError::ExceedsBoard { split_step, .. }) => {
+                format!("split@{split_step}")
+            }
+        };
+        let cells = vec![
+            mp.name().to_string(),
+            mp.steps().to_string(),
+            mp.packed_lanes().to_string(),
+            mp.peak_lanes().to_string(),
+            mp.saved_lanes().to_string(),
+            mp.packed_bram().to_string(),
+            mp.peak_bram().to_string(),
+            fit,
+        ];
+        t.row(cells.clone());
+        rows.push(cells);
+    }
+    print!("{}", t.render());
+    if args.flag("report") {
+        let out = args.str_or("out", "PLAN_REPORT.md");
+        let mut md = String::new();
+        md.push_str("# Static memory-planner report\n\n");
+        md.push_str(&format!(
+            "Board `{}` — {} RAMB18 blocks = {} 16-bit lanes; nets lowered at batch \
+             {batch}.\n\n",
+            part.name, part.bram18, capacity
+        ));
+        md.push_str(
+            "`planned` is the lane-reuse layout (`hw::memplan`); `packed` is the default \
+             whole-program layout. Planned execution is bit-identical to packed — enforced \
+             by the `memplan` fuzz family and the planner property tests.\n\n",
+        );
+        md.push_str(
+            "| net | steps | packed lanes | planned lanes | saved | packed BRAM18 | \
+             planned BRAM18 | fit |\n|---|---|---|---|---|---|---|---|\n",
+        );
+        for cells in &rows {
+            md.push_str(&format!("| {} |\n", cells.join(" | ")));
+        }
+        std::fs::write(&out, md).map_err(|e| format!("{out}: {e}"))?;
+        println!("wrote {out}");
     }
     Ok(())
 }

@@ -16,8 +16,10 @@ pub mod graph;
 pub mod lowering;
 pub mod lut;
 pub mod mlp;
+pub mod precision;
 pub mod trainer;
 
 pub use graph::{FloatGraph, GraphSpec, GraphTrainer};
 pub use lut::{ActKind, ActLut, AddrMode};
 pub use mlp::MlpSpec;
+pub use precision::PrecisionPlan;

@@ -1,0 +1,253 @@
+//! Per-tensor fixed-point precision search against the float oracle
+//! (DESIGN.md §Memory planner, "Precision search").
+//!
+//! The datapath runs one Q(16, F) format end-to-end, and picking `F` has
+//! so far been manual (the paper's Q8.7, or per-experiment overrides).
+//! [`search`] automates the choice: for each layer it sweeps fraction
+//! widths against the [`FloatMlp`] float64 oracle and picks the
+//! *narrowest* `FixedSpec` whose worst-case output error over a probe
+//! batch stays within the caller's error budget — never picking a wider
+//! format than the uniform default. The per-layer choices are reported
+//! ([`PrecisionPlan::per_layer`]) and combined into one
+//! [`PrecisionPlan::unified`] format (the widest per-layer requirement)
+//! that the compiler applies when `CompileOptions::precision_search` is
+//! set.
+//!
+//! ### Budget semantics
+//!
+//! The budget is a bound on the **max absolute output error** introduced
+//! by quantization, measured against the float64 forward pass on the
+//! probe inputs. It is best-effort bounded below by the uniform default's
+//! own quantization error: if even the default format exceeds the
+//! budget, the search returns the default (it never widens past it) and
+//! reports the achieved error in [`PrecisionPlan::max_err`].
+
+use crate::fixed::FixedSpec;
+use crate::nn::float_ref::FloatMlp;
+use crate::nn::mlp::{LutParams, MlpSpec};
+use crate::util::Rng;
+
+/// Probe rows used by [`search_spec`]'s derived sample batch.
+const PROBE_ROWS: usize = 32;
+
+/// The chosen format for one layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerChoice {
+    /// Layer index.
+    pub layer: usize,
+    /// Chosen format (same rounding mode as the default).
+    pub spec: FixedSpec,
+    /// Max abs output error observed when this choice was made (the solo
+    /// sweep, or the combined error after the widening pass).
+    pub err: f64,
+}
+
+/// Result of a precision search: per-layer choices plus the unified
+/// format the compiler applies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionPlan {
+    /// Net name the search ran against.
+    pub net: String,
+    /// The caller's error budget.
+    pub budget: f64,
+    /// The uniform default the search must never exceed.
+    pub default_spec: FixedSpec,
+    /// Narrowest per-layer formats within budget.
+    pub per_layer: Vec<LayerChoice>,
+    /// Max abs output error of the combined (all layers quantized at
+    /// their chosen formats) forward pass over the probe batch.
+    pub max_err: f64,
+}
+
+impl PrecisionPlan {
+    /// The single datapath format implied by the per-layer choices: the
+    /// widest per-layer requirement. Never wider than the default.
+    pub fn unified(&self) -> FixedSpec {
+        let frac = self
+            .per_layer
+            .iter()
+            .map(|c| c.spec.frac_bits)
+            .max()
+            .unwrap_or(self.default_spec.frac_bits);
+        FixedSpec { frac_bits: frac, ..self.default_spec }
+    }
+
+    /// Apply the unified format to a spec, keeping the LUT parameters
+    /// coherent: a LUT derived from the old format via
+    /// [`LutParams::training`] is re-derived from the new one; anything
+    /// else is left untouched.
+    pub fn apply(&self, spec: &MlpSpec) -> MlpSpec {
+        let unified = self.unified();
+        let mut out = spec.clone();
+        if out.lut == LutParams::training(out.fixed) {
+            out.lut = LutParams::training(unified);
+        }
+        out.fixed = unified;
+        out
+    }
+
+    /// Forward `x` through `m` with every layer quantized at its chosen
+    /// format (weights, biases, and the layer's output activations).
+    pub fn forward(&self, m: &FloatMlp, x: &[f64]) -> Vec<f64> {
+        let frac: Vec<u32> = self.per_layer.iter().map(|c| c.spec.frac_bits).collect();
+        mixed_forward(m, &frac, self.default_spec, x)
+    }
+}
+
+/// Quantization round-trip at `s`.
+fn q(s: FixedSpec, v: f64) -> f64 {
+    s.to_f64(s.from_f64(v))
+}
+
+/// Forward pass with layer `l` quantized at `frac[l]` fraction bits
+/// (rounding mode taken from `default`): weights, biases, and the
+/// layer's output activations all pass through the layer's format, the
+/// way the fixed datapath would hold them.
+fn mixed_forward(m: &FloatMlp, frac: &[u32], default: FixedSpec, x: &[f64]) -> Vec<f64> {
+    let mut cur: Vec<f64> = x.to_vec();
+    for (l, layer) in m.spec.layers.iter().enumerate() {
+        let s = FixedSpec { frac_bits: frac[l], ..default };
+        let (n_in, n_out) = (layer.inputs, layer.outputs);
+        let mut out = vec![0.0; n_out];
+        for (j, out_j) in out.iter_mut().enumerate() {
+            let mut acc = q(s, m.biases[l][j]);
+            for i in 0..n_in {
+                acc += q(s, cur[i]) * q(s, m.weights[l][i * n_out + j]);
+            }
+            *out_j = q(s, layer.act.f(acc));
+        }
+        cur = out;
+    }
+    cur
+}
+
+/// Max abs error of the mixed-precision forward vs the float64 oracle
+/// over the probe batch.
+fn probe_err(m: &FloatMlp, frac: &[u32], default: FixedSpec, samples: &[Vec<f64>]) -> f64 {
+    let mut worst = 0.0f64;
+    for x in samples {
+        let want = m.forward(x);
+        let got = mixed_forward(m, frac, default, x);
+        for (w, g) in want.iter().zip(&got) {
+            worst = worst.max((w - g).abs());
+        }
+    }
+    worst
+}
+
+/// Per-layer precision search against the float oracle `m`: for each
+/// layer, the narrowest fraction width whose solo quantization error
+/// stays within `budget`; then the combined plan is widened greedily
+/// (narrowest layer first, never past the default) until the combined
+/// error also fits — or every layer is back at the default.
+pub fn search(m: &FloatMlp, budget: f64, samples: &[Vec<f64>]) -> PrecisionPlan {
+    let default = m.spec.fixed;
+    let d = default.frac_bits;
+    let n_layers = m.spec.layers.len();
+    let uniform: Vec<u32> = vec![d; n_layers];
+    let mut per_layer = Vec::with_capacity(n_layers);
+    let mut frac = uniform.clone();
+    for l in 0..n_layers {
+        let mut choice = (d, probe_err(m, &uniform, default, samples));
+        for f in 1..d {
+            let mut solo = uniform.clone();
+            solo[l] = f;
+            let err = probe_err(m, &solo, default, samples);
+            if err <= budget {
+                choice = (f, err);
+                break;
+            }
+        }
+        frac[l] = choice.0;
+        per_layer.push(LayerChoice {
+            layer: l,
+            spec: FixedSpec { frac_bits: choice.0, ..default },
+            err: choice.1,
+        });
+    }
+    // Combined pass: per-layer errors compound; widen until within
+    // budget or back at the uniform default.
+    let mut max_err = probe_err(m, &frac, default, samples);
+    while max_err > budget {
+        let Some(narrowest) = (0..n_layers).filter(|&l| frac[l] < d).min_by_key(|&l| frac[l])
+        else {
+            break; // all layers at the default — budget unreachable
+        };
+        frac[narrowest] += 1;
+        per_layer[narrowest].spec = FixedSpec { frac_bits: frac[narrowest], ..default };
+        max_err = probe_err(m, &frac, default, samples);
+        per_layer[narrowest].err = max_err;
+    }
+    PrecisionPlan { net: m.spec.name.clone(), budget, default_spec: default, per_layer, max_err }
+}
+
+/// [`search`] with a deterministic seeded oracle and probe batch derived
+/// from the spec — the entry the compiler uses
+/// (`CompileOptions::precision_search`).
+pub fn search_spec(spec: &MlpSpec, budget: f64, seed: u64) -> PrecisionPlan {
+    let mut rng = Rng::new(seed);
+    let m = FloatMlp::init(spec, &mut rng);
+    let in_dim = spec.layers[0].inputs;
+    let samples: Vec<Vec<f64>> = (0..PROBE_ROWS)
+        .map(|_| (0..in_dim).map(|_| rng.gen_f64() * 2.0 - 1.0).collect())
+        .collect();
+    search(&m, budget, &samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::lut::ActKind;
+
+    fn spec(frac: u32) -> MlpSpec {
+        let fixed = FixedSpec::q(frac).saturating();
+        MlpSpec::from_dims(
+            "prec",
+            &[6, 12, 4],
+            ActKind::Tanh,
+            ActKind::Identity,
+            fixed,
+            LutParams::training(fixed),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn search_never_widens_past_the_default() {
+        let plan = search_spec(&spec(12), 0.05, 11);
+        for c in &plan.per_layer {
+            assert!(c.spec.frac_bits <= plan.default_spec.frac_bits);
+        }
+        assert!(plan.unified().frac_bits <= plan.default_spec.frac_bits);
+        assert_eq!(plan.unified().round, plan.default_spec.round);
+    }
+
+    #[test]
+    fn combined_plan_meets_the_budget_when_the_default_does() {
+        let s = spec(12);
+        let plan = search_spec(&s, 0.05, 11);
+        // Q12 resolution is ~2.4e-4; a 0.05 budget is generously
+        // reachable, so the combined error must be within it.
+        assert!(plan.max_err <= 0.05, "max_err {}", plan.max_err);
+    }
+
+    #[test]
+    fn loose_budget_picks_narrower_formats() {
+        let s = spec(12);
+        let tight = search_spec(&s, 1e-4, 11);
+        let loose = search_spec(&s, 0.25, 11);
+        assert!(loose.unified().frac_bits <= tight.unified().frac_bits);
+        assert!(loose.unified().frac_bits < s.fixed.frac_bits, "0.25 budget should narrow Q12");
+    }
+
+    #[test]
+    fn apply_rewrites_fixed_and_training_lut_coherently() {
+        let s = spec(12);
+        let plan = search_spec(&s, 0.25, 11);
+        let applied = plan.apply(&s);
+        assert_eq!(applied.fixed, plan.unified());
+        assert_eq!(applied.lut, LutParams::training(plan.unified()));
+        // Deterministic: same seed, same plan.
+        assert_eq!(plan, search_spec(&s, 0.25, 11));
+    }
+}

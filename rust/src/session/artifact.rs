@@ -127,6 +127,10 @@ pub(crate) struct NetInfo {
     pub forward: LoweredMlp,
     /// Training-step program (present when `lr` is set).
     pub train: Option<LoweredMlp>,
+    /// Compile every [`ExecPlan`] with the static memory planner's
+    /// lane-reuse layout (`CompileOptions::memory_plan`). Bit-exact with
+    /// the packed layout — see DESIGN.md §Memory planner.
+    pub memory_plan: bool,
 }
 
 /// What an artifact wraps.
@@ -156,6 +160,9 @@ pub(crate) struct DevicePlans {
 /// `(net, bucket, device)` no matter how many boards or servers use it.
 pub struct ForwardVariant {
     lowered: LoweredMlp,
+    /// Build plans with the memory planner's lane-reuse layout
+    /// (inherited from the artifact's compile options).
+    planned: bool,
     plans: Mutex<HashMap<String, Arc<ExecPlan>>>,
 }
 
@@ -181,10 +188,13 @@ impl ForwardVariant {
     /// use.
     pub fn plan_for(&self, device: &FpgaDevice) -> Arc<ExecPlan> {
         let mut map = self.plans.lock().expect("forward plan cache poisoned");
-        Arc::clone(
-            map.entry(device.part.name.to_string())
-                .or_insert_with(|| Arc::new(ExecPlan::new(&self.lowered.program, device))),
-        )
+        Arc::clone(map.entry(device.part.name.to_string()).or_insert_with(|| {
+            Arc::new(if self.planned {
+                ExecPlan::new_planned(&self.lowered.program, device)
+            } else {
+                ExecPlan::new(&self.lowered.program, device)
+            })
+        }))
     }
 
     /// A [`MatrixMachine`] on this variant's cached plan (fresh private
@@ -392,7 +402,11 @@ impl Artifact {
                     .expect("compiled batch is always a valid forward variant")
                     .plan_for(device);
                 let primary = if n.train.is_some() {
-                    Arc::new(ExecPlan::new(self.program(), device))
+                    Arc::new(if n.memory_plan {
+                        ExecPlan::new_planned(self.program(), device)
+                    } else {
+                        ExecPlan::new(self.program(), device)
+                    })
                 } else {
                     Arc::clone(&forward)
                 };
@@ -432,7 +446,11 @@ impl Artifact {
         } else {
             net.spec.lower_forward(rows)?
         };
-        let variant = Arc::new(ForwardVariant { lowered, plans: Mutex::new(HashMap::new()) });
+        let variant = Arc::new(ForwardVariant {
+            lowered,
+            planned: net.memory_plan,
+            plans: Mutex::new(HashMap::new()),
+        });
         Ok(Arc::clone(
             self.forward_variants
                 .lock()

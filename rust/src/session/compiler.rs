@@ -10,10 +10,16 @@ use super::artifact::{Artifact, NetInfo, NetSpec, Payload};
 use super::error::Error;
 use crate::asm::lower_file;
 use crate::assembler::program::Program;
+use crate::hw::memplan::MemPlan;
 use crate::nn::graph::{lower_graph_forward, lower_graph_train, lower_mlp_forward, lower_mlp_train};
-use crate::nn::{GraphSpec, MlpSpec};
+use crate::nn::{precision, GraphSpec, MlpSpec};
+use crate::perf::catalog::FpgaPart;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+
+/// Seed for the precision search's deterministic oracle/probe batch:
+/// the same spec + budget always picks the same formats.
+const PRECISION_SEED: u64 = 0x9E3779B97F4A7C15;
 
 /// What to compile a spec for.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -23,23 +29,47 @@ pub struct CompileOptions {
     /// `Some(lr)` compiles a training-step program alongside the forward
     /// program; `None` compiles an inference-only artifact.
     pub lr: Option<f64>,
+    /// Compile every [`crate::hw::ExecPlan`] with the static memory
+    /// planner's lane-reuse layout (DESIGN.md §Memory planner). Outputs
+    /// and `RunStats` stay bit-identical to the packed layout; board fit
+    /// is validated at compile time against the selected part
+    /// ([`crate::hw::memplan::PlanError::ExceedsBoard`] on overflow).
+    pub memory_plan: bool,
+    /// `Some(budget)` runs [`crate::nn::precision::search`] before
+    /// lowering: the datapath format is narrowed to the searched
+    /// per-layer requirement (never widened) within the given max-abs
+    /// output-error budget. MLP specs only — graph compiles reject it.
+    pub precision_search: Option<f64>,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        CompileOptions { batch: 16, lr: None }
+        CompileOptions { batch: 16, lr: None, memory_plan: false, precision_search: None }
     }
 }
 
 impl CompileOptions {
     /// Inference-only artifact at `batch` rows.
     pub fn inference(batch: usize) -> CompileOptions {
-        CompileOptions { batch, lr: None }
+        CompileOptions { batch, ..CompileOptions::default() }
     }
 
     /// Trainable artifact at `batch` rows with learning rate `lr`.
     pub fn training(batch: usize, lr: f64) -> CompileOptions {
-        CompileOptions { batch, lr: Some(lr) }
+        CompileOptions { batch, lr: Some(lr), ..CompileOptions::default() }
+    }
+
+    /// Same options with the static memory planner enabled.
+    pub fn with_memory_plan(mut self) -> CompileOptions {
+        self.memory_plan = true;
+        self
+    }
+
+    /// Same options with per-layer precision search at `budget` max abs
+    /// output error.
+    pub fn with_precision_search(mut self, budget: f64) -> CompileOptions {
+        self.precision_search = Some(budget);
+        self
     }
 
     /// Inference artifact for the serving runtime: compiled at
@@ -146,6 +176,7 @@ impl Compiler {
                     lr: net.lr,
                     forward,
                     train,
+                    memory_plan: false,
                 }),
             )));
         }
@@ -180,26 +211,36 @@ impl Compiler {
         spec.check()?;
         // Exact structural key — no hash collisions, cheap at this scale.
         let key = format!(
-            "spec::{spec:?}::batch={}::lr={:?}",
+            "spec::{spec:?}::batch={}::lr={:?}::plan={}::prec={:?}",
             opts.batch,
-            opts.lr.map(f64::to_bits)
+            opts.lr.map(f64::to_bits),
+            opts.memory_plan,
+            opts.precision_search.map(f64::to_bits)
         );
         if let Some(hit) = self.net_cache.lock().expect("cache poisoned").get(&key) {
             return Ok(Arc::clone(hit));
         }
-        let forward = lower_mlp_forward(spec, opts.batch)?;
+        // Precision search: narrow the datapath format within the error
+        // budget (never wider than the spec's own format).
+        let spec = match opts.precision_search {
+            Some(budget) => precision::search_spec(spec, budget, PRECISION_SEED).apply(spec),
+            None => spec.clone(),
+        };
+        let forward = lower_mlp_forward(&spec, opts.batch)?;
         let train = match opts.lr {
-            Some(lr) => Some(lower_mlp_train(spec, opts.batch, lr)?),
+            Some(lr) => Some(lower_mlp_train(&spec, opts.batch, lr)?),
             None => None,
         };
+        self.check_board_fit(opts, &forward.program, train.as_ref().map(|t| &t.program))?;
         let artifact = Arc::new(Artifact::new(
             key.clone(),
             Payload::Net(NetInfo {
-                spec: NetSpec::Mlp(spec.clone()),
+                spec: NetSpec::Mlp(spec),
                 batch: opts.batch,
                 lr: opts.lr,
                 forward,
                 train,
+                memory_plan: opts.memory_plan,
             }),
         ));
         self.net_cache
@@ -220,10 +261,17 @@ impl Compiler {
         opts: &CompileOptions,
     ) -> Result<Arc<Artifact>, Error> {
         spec.check().map_err(crate::nn::lowering::LowerError::from)?;
+        if opts.precision_search.is_some() {
+            return Err(Error::Unsupported {
+                verb: "compile_graph",
+                why: "precision search requires an MLP spec (the float_ref oracle)".into(),
+            });
+        }
         let key = format!(
-            "graph::{spec:?}::batch={}::lr={:?}",
+            "graph::{spec:?}::batch={}::lr={:?}::plan={}",
             opts.batch,
-            opts.lr.map(f64::to_bits)
+            opts.lr.map(f64::to_bits),
+            opts.memory_plan
         );
         if let Some(hit) = self.net_cache.lock().expect("cache poisoned").get(&key) {
             return Ok(Arc::clone(hit));
@@ -233,6 +281,7 @@ impl Compiler {
             Some(lr) => Some(lower_graph_train(spec, opts.batch, lr)?),
             None => None,
         };
+        self.check_board_fit(opts, &forward.program, train.as_ref().map(|t| &t.program))?;
         let artifact = Arc::new(Artifact::new(
             key.clone(),
             Payload::Net(NetInfo {
@@ -241,6 +290,7 @@ impl Compiler {
                 lr: opts.lr,
                 forward,
                 train,
+                memory_plan: opts.memory_plan,
             }),
         ));
         self.net_cache
@@ -248,6 +298,27 @@ impl Compiler {
             .expect("cache poisoned")
             .insert(key, Arc::clone(&artifact));
         Ok(artifact)
+    }
+
+    /// When the memory planner is requested, validate at compile time
+    /// that both programs' planned peak lane demand fits the selected
+    /// board — a typed [`crate::hw::memplan::PlanError::ExceedsBoard`]
+    /// (with a suggested split point) instead of a silent allocation.
+    fn check_board_fit(
+        &self,
+        opts: &CompileOptions,
+        forward: &Program,
+        train: Option<&Program>,
+    ) -> Result<(), Error> {
+        if !opts.memory_plan {
+            return Ok(());
+        }
+        let part = FpgaPart::selected();
+        MemPlan::fit(forward, part)?;
+        if let Some(t) = train {
+            MemPlan::fit(t, part)?;
+        }
+        Ok(())
     }
 
     /// Wrap a raw vector [`Program`] (validated) in an artifact: tensor

@@ -45,6 +45,11 @@ pub enum Error {
     /// The multi-FPGA cluster runtime failed.
     #[error(transparent)]
     Cluster(#[from] ClusterError),
+    /// The static memory planner rejected a net for the configured board
+    /// (peak lane demand exceeds its BRAM capacity — see
+    /// [`crate::hw::memplan::PlanError`] for the suggested split point).
+    #[error(transparent)]
+    Plan(#[from] crate::hw::memplan::PlanError),
     /// A checkpoint could not be read/written or failed validation
     /// (bad magic, truncation, integrity-checksum mismatch, resume
     /// against the wrong run).

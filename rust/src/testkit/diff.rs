@@ -18,11 +18,14 @@
 //! fixed-point levels must agree to the bit, including cycle accounting
 //! between the fused and unfused plans.
 
-use super::gen::{FaultCase, FuzzCase, GraphCase, NetCase, ProgramCase, RecoveryCase, ServeChaosCase};
-use crate::assembler::program::Step;
+use super::gen::{
+    FaultCase, FuzzCase, GraphCase, MemplanCase, NetCase, ProgramCase, RecoveryCase,
+    ServeChaosCase,
+};
+use crate::assembler::program::{BufKind, Step};
 use crate::cluster::fault::FaultPlan;
 use crate::cluster::leader::{self, ClusterConfig, ClusterError, Job, JobResult};
-use crate::hw::{ExecPlan, FastSim, FpgaDevice, MatrixMachine};
+use crate::hw::{ExecPlan, FastSim, FpgaDevice, MatrixMachine, MemPlan};
 use crate::nn::float_ref::FloatMlp;
 use crate::nn::graph::{lower_graph_forward, lower_mlp_forward, lower_mlp_train, FloatGraph};
 use crate::nn::trainer::Trainer;
@@ -49,6 +52,8 @@ pub enum Level {
     Cluster,
     /// L5: multi-tenant batched serving runtime.
     Serve,
+    /// Memory-planner differential: planned vs packed `ExecPlan` layout.
+    MemPlan,
 }
 
 impl std::fmt::Display for Level {
@@ -60,6 +65,7 @@ impl std::fmt::Display for Level {
             Level::FusedPlan => "fused_plan",
             Level::Cluster => "cluster",
             Level::Serve => "serve",
+            Level::MemPlan => "memplan",
         })
     }
 }
@@ -1033,6 +1039,121 @@ impl Differ {
         Ok(())
     }
 
+    // ------------------------------------------------------------ memplan
+
+    /// Memory-planner differential: the same forward program executed
+    /// with the static lane-reuse layout on vs off must produce
+    /// bit-identical non-`Temp` buffers and identical
+    /// [`crate::hw::RunStats`] — for both the fused and unfused plan
+    /// variants — and the planned arena must never exceed the packed one
+    /// (`Temp` lanes are excluded from the comparison because dead
+    /// temporaries legitimately hold different values once their lanes
+    /// are reused).
+    pub fn run_memplan(&self, c: &MemplanCase) -> Result<(), Divergence> {
+        let (lowered, binds) = match c {
+            MemplanCase::Net(n) => {
+                let spec = n.spec();
+                let (qw, qb) = n.params();
+                let lowered = lower_mlp_forward(&spec, n.batch)
+                    .map_err(|e| fail(Level::MemPlan, format!("lowering failed: {e}")))?;
+                let mut binds = vec![(lowered.x, n.input())];
+                for l in 0..spec.layers.len() {
+                    binds.push((lowered.weights[l], qw[l].clone()));
+                    binds.push((lowered.biases[l], qb[l].clone()));
+                }
+                (lowered, binds)
+            }
+            MemplanCase::Graph(g) => {
+                let spec = g.spec();
+                let (qw, qb) = g.params();
+                let decls = spec.param_decls().expect("generated graphs are valid");
+                let lowered = lower_graph_forward(&spec, g.batch)
+                    .map_err(|e| fail(Level::MemPlan, format!("graph lowering failed: {e}")))?;
+                let mut binds = vec![(lowered.x, g.input())];
+                for i in 0..decls.len() {
+                    binds.push((lowered.weights[i], qw[i].clone()));
+                    binds.push((lowered.biases[i], qb[i].clone()));
+                }
+                (lowered, binds)
+            }
+        };
+        let program = &lowered.program;
+        let mp = MemPlan::build(program);
+        if mp.peak_lanes() > mp.packed_lanes() {
+            return Err(fail(
+                Level::MemPlan,
+                format!(
+                    "planned arena {} lanes exceeds the packed {} lanes",
+                    mp.peak_lanes(),
+                    mp.packed_lanes()
+                ),
+            ));
+        }
+        for (what, packed, planned) in [
+            (
+                "fused",
+                ExecPlan::new(program, &self.device),
+                ExecPlan::new_planned(program, &self.device),
+            ),
+            (
+                "unfused",
+                ExecPlan::new_unfused(program, &self.device),
+                ExecPlan::new_unfused_planned(program, &self.device),
+            ),
+        ] {
+            if planned.arena_len() > packed.arena_len() {
+                return Err(fail(
+                    Level::MemPlan,
+                    format!(
+                        "{what}: planned arena {} > packed arena {}",
+                        planned.arena_len(),
+                        packed.arena_len()
+                    ),
+                ));
+            }
+            let mut packed_st = packed.state();
+            let mut planned_st = planned.state();
+            for (id, data) in &binds {
+                packed.write_buffer(&mut packed_st, *id, data);
+                planned.write_buffer(&mut planned_st, *id, data);
+            }
+            let packed_stats = packed.execute(&mut packed_st);
+            let planned_stats = planned.execute(&mut planned_st);
+            if packed_stats != planned_stats {
+                return Err(fail(
+                    Level::MemPlan,
+                    format!(
+                        "{what}: cycle accounting, planned vs packed: \
+                         {planned_stats:?} vs {packed_stats:?}"
+                    ),
+                ));
+            }
+            for (id, b) in program.buffers.iter().enumerate() {
+                if b.kind == BufKind::Temp {
+                    continue;
+                }
+                let mut want = packed.read_buffer(&packed_st, id).to_vec();
+                if self.plant_divergence {
+                    if let Some(v) = want.last_mut() {
+                        *v ^= 1;
+                    }
+                }
+                let got = planned.read_buffer(&planned_st, id);
+                if got != want.as_slice() {
+                    return Err(fail(
+                        Level::MemPlan,
+                        format!(
+                            "{what}: buffer {id} ({:?}), planned vs packed: {}",
+                            b.kind,
+                            first_diff(got, &want)
+                        ),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
     // ------------------------------------------------------------- faults
 
     /// Fault differential: under any generated [`FaultPlan`] the leader
@@ -1232,6 +1353,16 @@ mod tests {
         for i in 0..6 {
             let c = gen::program_case().sample(&mut r);
             differ.run_program(&c).unwrap_or_else(|d| panic!("case {i} ({c:?}): {d}"));
+        }
+    }
+
+    #[test]
+    fn a_handful_of_memplan_cases_are_bit_exact_planned_vs_packed() {
+        let differ = Differ::default();
+        let mut r = Rng::new(0x3E37);
+        for i in 0..6 {
+            let c = gen::memplan_case().sample(&mut r);
+            differ.run_memplan(&c).unwrap_or_else(|d| panic!("case {i} ({c:?}): {d}"));
         }
     }
 

@@ -27,7 +27,7 @@ pub fn case_seed(base: u64, index: usize) -> u64 {
     base.wrapping_add((index as u64).wrapping_mul(SEED_STRIDE))
 }
 
-/// The six generated case families.
+/// The seven generated case families.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Family {
     /// [`gen::FuzzCase`]: forward + training + cluster levels.
@@ -49,17 +49,22 @@ pub enum Family {
     /// bit-identical to the batch-1 reference, outcome replays
     /// deterministically.
     ServeChaos,
+    /// [`gen::MemplanCase`]: the static memory planner on vs off must
+    /// be behaviour-invisible — bit-identical outputs, identical
+    /// `RunStats`, planned arena never larger than the packed one.
+    Memplan,
 }
 
 impl Family {
     /// All families, in execution order.
-    pub const ALL: [Family; 6] = [
+    pub const ALL: [Family; 7] = [
         Family::Net,
         Family::Graph,
         Family::Program,
         Family::Fault,
         Family::Recovery,
         Family::ServeChaos,
+        Family::Memplan,
     ];
 
     /// Stable name used in corpus/failure files.
@@ -71,6 +76,7 @@ impl Family {
             Family::Fault => "fault",
             Family::Recovery => "recovery",
             Family::ServeChaos => "serve-chaos",
+            Family::Memplan => "memplan",
         }
     }
 
@@ -83,6 +89,7 @@ impl Family {
             "fault" => Some(Family::Fault),
             "recovery" => Some(Family::Recovery),
             "serve-chaos" => Some(Family::ServeChaos),
+            "memplan" => Some(Family::Memplan),
             _ => None,
         }
     }
@@ -109,9 +116,10 @@ pub struct FuzzOptions {
     pub max_shrink_steps: usize,
     /// Re-run each failure's seed to confirm it reproduces.
     pub check_reproduction: bool,
-    /// Restrict the run to one family (`None` = all six) —
-    /// `mfnn fuzz --family recovery` and `--family serve-chaos` are the
-    /// CI recovery and chaos smokes.
+    /// Restrict the run to one family (`None` = all seven) —
+    /// `mfnn fuzz --family recovery`, `--family serve-chaos`, and
+    /// `--family memplan` are the CI recovery, chaos, and
+    /// memory-planner smokes.
     pub family: Option<Family>,
 }
 
@@ -239,6 +247,7 @@ pub fn run_case(differ: &Differ, family: Family, seed: u64) -> Result<(), Diverg
         Family::Fault => differ.run_faults(&gen::fault_case().sample(&mut rng)),
         Family::Recovery => differ.run_recovery(&gen::recovery_case().sample(&mut rng)),
         Family::ServeChaos => differ.run_serve_chaos(&gen::serve_chaos_case().sample(&mut rng)),
+        Family::Memplan => differ.run_memplan(&gen::memplan_case().sample(&mut rng)),
     }
 }
 
@@ -336,6 +345,11 @@ fn fuzz_one(
                 differ.run_serve_chaos(c)
             })
         }
+        Family::Memplan => {
+            fuzz_family(opts, family, case_index, seed, &gen::memplan_case(), |c| {
+                differ.run_memplan(c)
+            })
+        }
     };
     failures.extend(failure);
 }
@@ -378,7 +392,8 @@ pub fn parse_corpus(text: &str) -> Result<Vec<(Family, u64)>, String> {
             .and_then(Family::parse)
             .ok_or_else(|| {
                 format!(
-                    "line {}: expected `net|graph|program|fault|recovery|serve-chaos <seed>`",
+                    "line {}: expected \
+                     `net|graph|program|fault|recovery|serve-chaos|memplan <seed>`",
                     ln + 1
                 )
             })?;
@@ -435,7 +450,7 @@ mod tests {
     #[test]
     fn corpus_parses_tags_seeds_and_comments() {
         let text = "# comment\n\nnet 12  # trailing\nprogram 0\nfault 99\nrecovery 7\n\
-                    serve-chaos 3\ngraph 5\n";
+                    serve-chaos 3\ngraph 5\nmemplan 8\n";
         let entries = parse_corpus(text).unwrap();
         assert_eq!(
             entries,
@@ -445,7 +460,8 @@ mod tests {
                 (Family::Fault, 99),
                 (Family::Recovery, 7),
                 (Family::ServeChaos, 3),
-                (Family::Graph, 5)
+                (Family::Graph, 5),
+                (Family::Memplan, 8)
             ]
         );
         assert!(parse_corpus("bogus 1").is_err());

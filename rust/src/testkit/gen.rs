@@ -21,6 +21,9 @@
 //!   ([`GraphSpec`]: residual, gated, CNN, or transformer-block shaped)
 //!   with derived parameters and input. Drives the graph forward
 //!   differential levels.
+//! * [`MemplanCase`] — a [`NetCase`] or [`GraphCase`] run with the
+//!   static memory planner on vs off: outputs and `RunStats` must be
+//!   bit-identical and the planned arena never larger.
 //!
 //! Every generator pairs a structured shrinker so a divergence shrinks
 //! toward the minimal failing case (fewer layers, dim 1, batch 1, one
@@ -871,6 +874,45 @@ pub fn serve_chaos_case() -> Gen<ServeChaosCase> {
     Gen::new(sample_serve_chaos_case, shrink_serve_chaos_case)
 }
 
+// ------------------------------------------------------- memplan scenarios
+
+/// A generated memory-planner case: one forward program — MLP-shaped or
+/// operator-graph-shaped (the graph arm covers the CNN and
+/// transformer-block archetypes whose many temporaries make lane reuse
+/// interesting) — executed with the static memory planner on vs off.
+/// The planner must be behaviour-invisible: bit-identical outputs,
+/// identical [`crate::hw::RunStats`], and a planned arena never larger
+/// than the packed one.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MemplanCase {
+    /// An MLP forward program.
+    Net(NetCase),
+    /// An operator-graph forward program.
+    Graph(GraphCase),
+}
+
+pub(crate) fn sample_memplan_case(r: &mut Rng) -> MemplanCase {
+    if r.gen_bool(0.5) {
+        MemplanCase::Net(sample_net_case(r))
+    } else {
+        MemplanCase::Graph(sample_graph_case(r))
+    }
+}
+
+fn shrink_memplan_case(c: &MemplanCase) -> Vec<MemplanCase> {
+    match c {
+        MemplanCase::Net(n) => shrink_net_case(n).into_iter().map(MemplanCase::Net).collect(),
+        MemplanCase::Graph(g) => {
+            shrink_graph_case(g).into_iter().map(MemplanCase::Graph).collect()
+        }
+    }
+}
+
+/// Generator for [`MemplanCase`].
+pub fn memplan_case() -> Gen<MemplanCase> {
+    Gen::new(sample_memplan_case, shrink_memplan_case)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -901,6 +943,10 @@ mod tests {
             assert_eq!(
                 sample_graph_case(&mut Rng::new(seed)),
                 sample_graph_case(&mut Rng::new(seed))
+            );
+            assert_eq!(
+                sample_memplan_case(&mut Rng::new(seed)),
+                sample_memplan_case(&mut Rng::new(seed))
             );
         }
     }

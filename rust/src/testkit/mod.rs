@@ -38,6 +38,12 @@
 //!   retry-budget exhaustion, completed outputs bit-identical to the
 //!   batch-1 reference, the whole outcome replay-deterministic
 //!   (DESIGN.md §Serving, "Degraded mode").
+//! * Memory planner — [`Differ::run_memplan`] runs each generated MLP /
+//!   operator-graph forward program with the static lane-reuse layout on
+//!   vs off ([`crate::hw::MemPlan`]) and asserts the planner is
+//!   behaviour-invisible: bit-identical non-scratch buffers, identical
+//!   `RunStats` for both fused and unfused variants, and a planned
+//!   arena never larger than the packed one (DESIGN.md §Memory planner).
 //! * [`fuzz`] — the harness: seeded case streams, greedy shrinking to a
 //!   minimal failing case, seed replay (`mfnn fuzz --cases 1 --seed N`
 //!   reproduces exactly), and corpus snapshots under
@@ -57,5 +63,6 @@ pub use fuzz::{
     FuzzReport,
 };
 pub use gen::{
-    FaultCase, FuzzCase, GraphArch, GraphCase, NetCase, ProgramCase, RecoveryCase, ServeChaosCase,
+    FaultCase, FuzzCase, GraphArch, GraphCase, MemplanCase, NetCase, ProgramCase, RecoveryCase,
+    ServeChaosCase,
 };

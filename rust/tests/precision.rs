@@ -1,0 +1,191 @@
+//! Golden tests for the per-tensor precision search and the planned
+//! compile pipeline (DESIGN.md §Memory planner): searched formats stay
+//! within the caller's error budget of the float64 oracle, never widen
+//! past the uniform default, apply coherently through the compiler, and
+//! memory-planned artifacts infer bit-identically to packed ones.
+
+use mfnn::fixed::FixedSpec;
+use mfnn::hw::FpgaDevice;
+use mfnn::nn::lut::ActKind;
+use mfnn::nn::mlp::{LutParams, MlpSpec};
+use mfnn::nn::precision;
+use mfnn::nn::float_ref::FloatMlp;
+use mfnn::session::{CompileOptions, Compiler, Session, Target};
+use mfnn::util::Rng;
+use std::sync::Arc;
+
+/// Paper-style MLP specs the golden assertions sweep: the Q8.7 datapath
+/// of the paper plus wider Q11/Q12 variants where a narrow budget has
+/// real room to shrink.
+fn specs() -> Vec<MlpSpec> {
+    let mk = |name: &str, dims: &[usize], act, frac: u32| {
+        let fixed = FixedSpec::q(frac).saturating();
+        MlpSpec::from_dims(name, dims, act, ActKind::Identity, fixed, LutParams::training(fixed))
+            .unwrap()
+    };
+    vec![
+        mk("paper_q7", &[8, 16, 4], ActKind::Sigmoid, 7),
+        mk("tanh_q11", &[6, 12, 12, 3], ActKind::Tanh, 11),
+        mk("relu_q12", &[10, 20, 5], ActKind::Relu, 12),
+    ]
+}
+
+#[test]
+fn searched_plans_stay_within_budget_of_the_float_oracle() {
+    // A budget the uniform default comfortably meets must be met by the
+    // combined searched plan, and the reported error must reproduce
+    // against the oracle on the exact probe construction.
+    for spec in specs() {
+        let budget = 0.08;
+        let plan = precision::search_spec(&spec, budget, 0x90_1D);
+        assert!(
+            plan.max_err <= budget,
+            "{}: combined error {} exceeds budget {budget}",
+            spec.name,
+            plan.max_err
+        );
+        // Reproduce the oracle comparison: same seeded init and probe
+        // stream as search_spec.
+        let mut rng = Rng::new(0x90_1D);
+        let m = FloatMlp::init(&spec, &mut rng);
+        let in_dim = spec.layers[0].inputs;
+        let mut worst = 0.0f64;
+        for _ in 0..32 {
+            let x: Vec<f64> = (0..in_dim).map(|_| rng.gen_f64() * 2.0 - 1.0).collect();
+            let want = m.forward(&x);
+            let got = plan.forward(&m, &x);
+            for (w, g) in want.iter().zip(&got) {
+                worst = worst.max((w - g).abs());
+            }
+        }
+        assert!(
+            worst <= budget,
+            "{}: oracle disagreement {worst} exceeds budget {budget}",
+            spec.name
+        );
+        assert_eq!(worst, plan.max_err, "{}: reported error must be the probe error", spec.name);
+    }
+}
+
+#[test]
+fn searched_formats_never_widen_past_the_uniform_default() {
+    for spec in specs() {
+        for budget in [1e-6, 1e-3, 0.05, 0.5] {
+            for seed in [1u64, 0xBEEF, 42] {
+                let plan = precision::search_spec(&spec, budget, seed);
+                assert!(
+                    plan.unified().frac_bits <= spec.fixed.frac_bits,
+                    "{}: budget {budget} seed {seed} widened Q{} to Q{}",
+                    spec.name,
+                    spec.fixed.frac_bits,
+                    plan.unified().frac_bits
+                );
+                for c in &plan.per_layer {
+                    assert!(c.spec.frac_bits <= spec.fixed.frac_bits);
+                    assert!(c.spec.frac_bits >= 1);
+                }
+                assert_eq!(plan.unified().round, spec.fixed.round);
+                // Deterministic: the same inputs always pick the same plan.
+                assert_eq!(plan, precision::search_spec(&spec, budget, seed));
+            }
+        }
+    }
+}
+
+#[test]
+fn loose_budgets_narrow_wide_datapaths() {
+    // On a Q12 datapath a 0.25 max-abs-error budget is orders of
+    // magnitude above the quantisation floor: the search must find a
+    // strictly narrower format, and monotonically — looser budgets never
+    // pick wider formats than tighter ones.
+    let spec = specs().remove(2);
+    let mut prev = u32::MAX;
+    for budget in [1e-5, 1e-3, 0.05, 0.25] {
+        let plan = precision::search_spec(&spec, budget, 7);
+        let frac = plan.unified().frac_bits;
+        assert!(frac <= prev, "budget {budget} widened Q{prev} to Q{frac}");
+        prev = frac;
+    }
+    assert!(prev < spec.fixed.frac_bits, "0.25 budget should narrow a Q12 datapath");
+}
+
+#[test]
+fn compiler_applies_the_searched_format_coherently() {
+    let compiler = Compiler::new();
+    let spec = specs().remove(1); // tanh_q11
+    let searched = precision::search_spec(&spec, 0.25, 0x9E3779B97F4A7C15);
+    let a = compiler
+        .compile_spec(&spec, &CompileOptions::inference(4).with_precision_search(0.25))
+        .unwrap();
+    // The artifact's datapath is the searched unified format, with the
+    // training LUT re-derived from it.
+    assert_eq!(a.fixed(), searched.unified());
+    let got = a.spec().expect("MLP artifact");
+    assert_eq!(got.lut, LutParams::training(searched.unified()));
+    // Caching keys the options: a plain compile of the same spec is a
+    // distinct artifact with the original format.
+    let plain = compiler.compile_spec(&spec, &CompileOptions::inference(4)).unwrap();
+    assert_eq!(plain.fixed(), spec.fixed);
+    assert!(!Arc::ptr_eq(&a, &plain));
+}
+
+#[test]
+fn graph_compiles_reject_precision_search_typed() {
+    use mfnn::nn::graph::{GraphSpec, INPUT};
+    use mfnn::session::Error;
+    let fixed = FixedSpec::q(8).saturating();
+    let mut g = GraphSpec::new("prec_graph", 4, fixed, LutParams::training(fixed));
+    let l = g.linear(INPUT, 4);
+    g.activation(l, ActKind::Relu);
+    let compiler = Compiler::new();
+    let err = compiler
+        .compile_graph(&g, &CompileOptions::inference(2).with_precision_search(0.1))
+        .expect_err("graphs have no float_ref oracle");
+    assert!(matches!(err, Error::Unsupported { verb: "compile_graph", .. }), "{err}");
+}
+
+#[test]
+fn memory_planned_artifacts_infer_bit_identically_to_packed() {
+    // The compile-level twin of the memplan fuzz family: the same spec
+    // compiled with and without `memory_plan` must produce bit-identical
+    // inference through the Session front door.
+    let device = FpgaDevice::selected();
+    let compiler = Compiler::new();
+    for spec in specs() {
+        let fixed = spec.fixed;
+        let batch = 3;
+        let mut r = Rng::new(0x91A2);
+        let params: Vec<(Vec<i16>, Vec<i16>)> = spec
+            .layers
+            .iter()
+            .map(|l| {
+                let scale = 1.0 / l.inputs as f64;
+                let w = (0..l.inputs * l.outputs)
+                    .map(|_| fixed.from_f64((r.gen_f64() * 2.0 - 1.0) * scale))
+                    .collect();
+                let b = (0..l.outputs)
+                    .map(|_| fixed.from_f64((r.gen_f64() * 2.0 - 1.0) * 0.25))
+                    .collect();
+                (w, b)
+            })
+            .collect();
+        let x: Vec<i16> = (0..batch * spec.input_dim())
+            .map(|_| fixed.from_f64(r.gen_f64() * 2.0 - 1.0))
+            .collect();
+
+        let mut outputs = Vec::new();
+        for opts in [
+            CompileOptions::inference(batch),
+            CompileOptions::inference(batch).with_memory_plan(),
+        ] {
+            let a = compiler.compile_spec(&spec, &opts).unwrap();
+            let mut s = Session::open(Arc::clone(&a), Target::Board(device)).unwrap();
+            for (l, (w, b)) in params.iter().enumerate() {
+                s.write(&a.tensor(&format!("w{l}")).unwrap(), w).unwrap();
+                s.write(&a.tensor(&format!("b{l}")).unwrap(), b).unwrap();
+            }
+            outputs.push(s.infer(&x).unwrap().output);
+        }
+        assert_eq!(outputs[0], outputs[1], "{}: planned infer diverged from packed", spec.name);
+    }
+}

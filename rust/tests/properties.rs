@@ -8,7 +8,7 @@ use mfnn::assembler::optimizer;
 use mfnn::assembler::program::{BufKind, LaneOp, Program, Step, View, Wave};
 use mfnn::cluster::schedule;
 use mfnn::fixed::FixedSpec;
-use mfnn::hw::{FpgaDevice, MatrixMachine};
+use mfnn::hw::{FpgaDevice, MatrixMachine, MemPlan, PlanError};
 use mfnn::isa::{Instruction, Microcode, Opcode, Width};
 use mfnn::nn::lut::{ActKind, ActLut, AddrMode};
 use mfnn::prop::{check, Gen};
@@ -217,6 +217,135 @@ fn fixed_rescale_is_floor_division_for_signed_products() {
                 "dot is not floor division at Q{}",
                 spec.frac_bits
             );
+        }
+    }
+}
+
+/// Random valid programs with `Temp` scratch buffers for the memory
+/// planner properties: buffer 0 is the input, the last the output,
+/// everything between scratch. Operand draws may read a temp before any
+/// write (exercising the planner's pinning rule) and destination draws
+/// never target the input.
+fn random_temp_program(r: &mut Rng) -> Program {
+    let n = 4 + r.gen_range(24) as usize;
+    let mut p = Program::new("memprop", FixedSpec::q(10).saturating());
+    let nt = 2 + r.gen_range(4) as usize;
+    p.buffer("x", n, 1, BufKind::Input);
+    for i in 0..nt {
+        p.buffer(&format!("t{i}"), n, 1, BufKind::Temp);
+    }
+    p.buffer("o", n, 1, BufKind::Output);
+    let nb = nt + 2;
+    let waves = 2 + r.gen_range(8) as usize;
+    for _ in 0..waves {
+        let op = *r.choose(&[
+            Opcode::VectorAddition,
+            Opcode::VectorSubtraction,
+            Opcode::ElementMultiplication,
+        ]);
+        let a = r.gen_range(nb as u64) as usize;
+        let b = r.gen_range(nb as u64) as usize;
+        let o = 1 + r.gen_range((nb - 1) as u64) as usize;
+        p.steps.push(Step::Wave(Wave {
+            op,
+            vec_len: n,
+            lut: None,
+            lanes: vec![LaneOp {
+                a: View::all(a, n),
+                b: Some(View::all(b, n)),
+                out: View::all(o, n),
+            }],
+        }));
+    }
+    p
+}
+
+#[test]
+fn memplan_overlapping_intervals_never_share_lanes() {
+    // The planner's soundness invariant: two buffers may occupy
+    // overlapping lane ranges only if their live intervals are disjoint
+    // (and the planned arena never exceeds the packed one).
+    let mut rng = Rng::new(0x3E3);
+    for _case in 0..120 {
+        let p = random_temp_program(&mut rng);
+        p.check().unwrap();
+        let mp = MemPlan::build(&p);
+        assert!(mp.peak_lanes() <= mp.packed_lanes());
+        let layout = mp.layout();
+        let iv = mp.intervals();
+        for i in 0..layout.len() {
+            for j in i + 1..layout.len() {
+                let (bi, li) = layout[i];
+                let (bj, lj) = layout[j];
+                let lanes_overlap = bi < bj + lj && bj < bi + li;
+                assert!(
+                    !(lanes_overlap && iv[i].overlaps(&iv[j])),
+                    "buffers {i} and {j} share lanes while live together: \
+                     {:?}/{:?} at {:?}/{:?}",
+                    iv[i],
+                    iv[j],
+                    layout[i],
+                    layout[j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn memplan_intervals_cover_every_reference() {
+    // Completeness: recompute every buffer reference by walking the
+    // schedule; the planner's interval must cover each one.
+    let mut rng = Rng::new(0xC0F);
+    for _case in 0..120 {
+        let p = random_temp_program(&mut rng);
+        let mp = MemPlan::build(&p);
+        let iv = mp.intervals();
+        for (s, step) in p.steps.iter().enumerate() {
+            let mut refs: Vec<usize> = Vec::new();
+            match step {
+                Step::LoadDram(b) | Step::StoreDram(b) => refs.push(*b),
+                Step::LoadLut(_) => {}
+                Step::Wave(w) => {
+                    for l in &w.lanes {
+                        refs.push(l.a.buf);
+                        if let Some(b) = &l.b {
+                            refs.push(b.buf);
+                        }
+                        refs.push(l.out.buf);
+                    }
+                }
+            }
+            for b in refs {
+                assert!(
+                    iv[b].covers(s),
+                    "buffer {b} referenced at step {s} outside its interval {:?}",
+                    iv[b]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn memplan_exceeds_board_iff_demand_exceeds_capacity() {
+    // Board-fit contract, exhaustive over small capacities: ExceedsBoard
+    // fires exactly when the planned peak demand exceeds the capacity,
+    // and the typed error reports the demand and a valid split point.
+    let mut rng = Rng::new(0xB0A);
+    for _case in 0..25 {
+        let p = random_temp_program(&mut rng);
+        let mp = MemPlan::build(&p);
+        for cap in 0..=mp.packed_lanes() + 2 {
+            match mp.require_fit("prop-board", cap) {
+                Ok(()) => assert!(mp.peak_lanes() <= cap),
+                Err(PlanError::ExceedsBoard { demand, capacity, split_step, .. }) => {
+                    assert!(mp.peak_lanes() > cap);
+                    assert_eq!(demand, mp.peak_lanes());
+                    assert_eq!(capacity, cap);
+                    assert!(split_step < mp.steps(), "split point must be a schedule step");
+                }
+            }
         }
     }
 }

@@ -17,7 +17,7 @@ fn generated_cases_have_zero_divergences() {
     let report = testkit::fuzz(&opts(4, 0));
     assert!(report.ok(), "{}", report.render());
     assert_eq!(report.cases, 4);
-    assert_eq!(report.families, 4);
+    assert_eq!(report.families, Family::ALL.len());
 }
 
 #[test]
@@ -108,6 +108,20 @@ fn corpus_serve_chaos_seeds_replay_clean() {
     let entries = testkit::parse_corpus(text).unwrap();
     assert!(entries.len() >= 8, "serve-chaos corpus unexpectedly small");
     assert!(entries.iter().all(|(f, _)| *f == Family::ServeChaos));
+    let report = testkit::replay_corpus(&entries, &FuzzOptions::default());
+    assert!(report.ok(), "{}", report.render());
+}
+
+#[test]
+fn corpus_memplan_seeds_replay_clean() {
+    // The CI memplan smoke (`mfnn fuzz --family memplan --cases 8`) plus
+    // this pinned corpus: the static memory planner must be
+    // behaviour-invisible — bit-identical outputs and RunStats with the
+    // lane-reuse layout on vs off, planned arena never larger.
+    let text = include_str!("corpus/memplan.seeds");
+    let entries = testkit::parse_corpus(text).unwrap();
+    assert!(entries.len() >= 8, "memplan corpus unexpectedly small");
+    assert!(entries.iter().all(|(f, _)| *f == Family::Memplan));
     let report = testkit::replay_corpus(&entries, &FuzzOptions::default());
     assert!(report.ok(), "{}", report.render());
 }
