@@ -4,7 +4,7 @@
 //! and host wall-clock (simulator cost).
 
 use mfnn::bench::Suite;
-use mfnn::cluster::ClusterConfig;
+use mfnn::cluster::{ring_sync_cost, star_sync_cost, ClusterConfig, SyncPolicy, SystemBus};
 use mfnn::fixed::FixedSpec;
 use mfnn::hw::FpgaDevice;
 use mfnn::nn::dataset;
@@ -88,5 +88,46 @@ fn main() {
             session.evaluate(&job.test).unwrap().accuracy
         })
     });
+
+    // ---- sync-policy scaling curves (BENCH_cluster.json "notes") ----
+    // Per-collective bus cost of one weight sync of the bench net under
+    // each policy, from the deterministic cost model, for group sizes
+    // far beyond what the simulator can run in CI: star serialises
+    // (k+1)·P through the leader endpoint, the ring pipelines 2(k−1)
+    // chunks of P/k per board — ~O(k·P) vs ~O(P)/board makespan.
+    let p_bytes =
+        job.artifact.spec().expect("MLP bench artifact").param_bytes();
+    let bus = SystemBus::default();
+    suite.note("sync_param_bytes", p_bytes);
+    for k in [2usize, 4, 8, 16, 32, 64] {
+        let star = star_sync_cost(k, p_bytes, &bus);
+        let ring = ring_sync_cost(k, p_bytes, &bus);
+        suite.note(&format!("sync_cycles_star_f{k}"), star.cycles);
+        suite.note(&format!("sync_cycles_ring_f{k}"), ring.cycles);
+        suite.note(&format!("sync_bytes_star_f{k}"), star.bytes);
+        suite.note(&format!("sync_bytes_ring_f{k}"), ring.bytes);
+    }
+    // Measured end-to-end divided runs at the small group sizes CI can
+    // afford — one job over F boards per policy. Star and ring report
+    // identical trained state (asserted by tests/sync_policy.rs); the
+    // notes track what each pays on the modeled bus for it, and how
+    // many collectives bounded staleness actually performs.
+    let policies = [
+        SyncPolicy::Star,
+        SyncPolicy::Ring,
+        SyncPolicy::BoundedStale { max_lag: 1 },
+    ];
+    for fb in [2usize, 4] {
+        for sync in policies {
+            let jobs = mk_jobs(&compiler, 1, steps);
+            let cfg = ClusterConfig { boards: fb, sync_every: 20, sync, ..Default::default() };
+            let r = Session::train_many(&cfg, &jobs).unwrap();
+            let tag = format!("divided_f{fb}_{}", sync.name());
+            suite.note(&format!("{tag}_sync_rounds"), r.metrics.sync_rounds);
+            suite.note(&format!("{tag}_sync_cycles"), r.metrics.sync_cycles);
+            suite.note(&format!("{tag}_bus_bytes"), r.metrics.bus_bytes);
+            suite.note(&format!("{tag}_makespan_us"), f(r.makespan_s * 1e6, 1));
+        }
+    }
     suite.finish();
 }

@@ -32,6 +32,13 @@ impl SystemBus {
     pub fn round_trip_s(&self, up: u64, down: u64) -> f64 {
         self.transfer_s(up) + self.transfer_s(down)
     }
+
+    /// Modelled bus-controller cycles to move `bytes` in one message,
+    /// at [`super::cost::BUS_CLOCK_HZ`] — the unit
+    /// [`super::Metrics::sync_cycles`] accumulates.
+    pub fn transfer_cycles(&self, bytes: u64) -> u64 {
+        super::cost::cycles_of(self.transfer_s(bytes))
+    }
 }
 
 /// FNV-1a integrity word over a per-layer parameter set — the checksum a
@@ -75,6 +82,13 @@ mod tests {
         // 125 MB at 125 MB/s ≈ 1 s
         let t = b.transfer_s(125_000_000);
         assert!((t - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn transfer_cycles_scale_with_the_bus_clock() {
+        let b = SystemBus { bandwidth_bps: 1e6, latency_s: 0.0 };
+        // 1000 bytes at 1 MB/s = 1 ms = 100_000 cycles at 100 MHz.
+        assert_eq!(b.transfer_cycles(1000), 100_000);
     }
 
     #[test]

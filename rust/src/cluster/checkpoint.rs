@@ -23,16 +23,23 @@
 //!
 //! ```text
 //! magic "MFCK"  u32 version  u32 name_len  name  u64 seed  u32 batch
-//! f64 lr  u32 replicas  u32 sync_every
+//! f64 lr  u32 replicas  u32 sync_every  u32 boards  u32 sync_tag  u32 sync_lag
 //! u64 total_steps  u64 steps_done  u64 params_checksum  f64 sim_compute_s
 //! RunStats (8 × u64)  u32 curve_len  curve_len × (u64 step, f64, f64)
 //! u32 params_len  params (nn::checkpoint bytes)
 //! ```
 //!
+//! Version 2 added `boards` (the cluster's total board count F — a
+//! snapshot cut on 4 boards must not silently resume on 8, where the
+//! divided-mode schedule differs) and the run's [`SyncPolicy`]
+//! (`sync_tag`/`sync_lag`, see [`SyncPolicy::tag`]) — resuming under a
+//! different policy is a typed error too.
+//!
 //! `params_checksum` is [`super::bus::params_checksum`] over the decoded
 //! parameters — a truncated or bit-flipped snapshot fails closed.
 
 use super::bus::params_checksum;
+use super::cost::SyncPolicy;
 use crate::hw::RunStats;
 use crate::nn::checkpoint::{Checkpoint, CheckpointError};
 use crate::nn::trainer::LossPoint;
@@ -41,7 +48,7 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 /// Cluster checkpoint format version.
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
 const MAGIC: &[u8; 4] = b"MFCK";
 
 /// A deterministic, resumable snapshot of one training job at a chunk
@@ -64,6 +71,15 @@ pub struct TrainCheckpoint {
     /// Weight-sync cadence of a divided run (0 for single-board /
     /// board-target snapshots). A divided resume must match it.
     pub sync_every: usize,
+    /// Total board count F of the cluster the snapshot was cut on
+    /// (1 for board targets). Resuming on a different board count is a
+    /// typed wrong-topology error — the divided-mode schedule depends
+    /// on F, so a 4-board snapshot must not silently continue on 8.
+    pub boards: usize,
+    /// Weight-sync policy of the run. Resuming under a different
+    /// policy is a typed error (`BoundedStale` trajectories are not
+    /// interchangeable with `Star`/`Ring` ones).
+    pub sync: SyncPolicy,
     /// Total steps of the run this snapshot was cut from.
     pub total_steps: usize,
     /// Steps completed at capture time — the sampler cursor.
@@ -100,6 +116,8 @@ impl TrainCheckpoint {
             lr: run.lr,
             replicas: run.replicas,
             sync_every: run.sync_every,
+            boards: run.boards,
+            sync: run.sync,
             total_steps: run.total_steps,
             steps_done,
             curve: curve.to_vec(),
@@ -127,6 +145,9 @@ impl TrainCheckpoint {
         out.extend_from_slice(&self.lr.to_bits().to_le_bytes());
         out.extend_from_slice(&(self.replicas as u32).to_le_bytes());
         out.extend_from_slice(&(self.sync_every as u32).to_le_bytes());
+        out.extend_from_slice(&(self.boards as u32).to_le_bytes());
+        out.extend_from_slice(&self.sync.tag().to_le_bytes());
+        out.extend_from_slice(&self.sync.lag().to_le_bytes());
         out.extend_from_slice(&(self.total_steps as u64).to_le_bytes());
         out.extend_from_slice(&(self.steps_done as u64).to_le_bytes());
         out.extend_from_slice(&params_checksum(&w, &b).to_le_bytes());
@@ -193,6 +214,12 @@ impl TrainCheckpoint {
         let lr = take_f64(&mut data)?;
         let replicas = take_u32(&mut data)? as usize;
         let sync_every = take_u32(&mut data)? as usize;
+        let boards = take_u32(&mut data)? as usize;
+        let sync_tag = take_u32(&mut data)?;
+        let sync_lag = take_u32(&mut data)?;
+        let sync = SyncPolicy::from_tag(sync_tag, sync_lag).ok_or_else(|| {
+            CheckpointError::Format(format!("unknown sync-policy tag {sync_tag}"))
+        })?;
         let total_steps = take_u64(&mut data)? as usize;
         let steps_done = take_u64(&mut data)? as usize;
         let checksum = take_u64(&mut data)?;
@@ -231,6 +258,8 @@ impl TrainCheckpoint {
             lr,
             replicas,
             sync_every,
+            boards,
+            sync,
             total_steps,
             steps_done,
             curve,
@@ -280,11 +309,27 @@ impl TrainCheckpoint {
                 self.seed, self.batch, self.lr, run.seed, run.batch, run.lr
             )));
         }
-        if self.replicas != run.replicas || self.sync_every != run.sync_every {
+        if self.replicas != run.replicas
+            || self.sync_every != run.sync_every
+            || self.boards != run.boards
+        {
             return Err(CheckpointError::Format(format!(
-                "checkpoint topology ({} replica(s), sync_every {}) does not \
-                 match the resuming target ({} replica(s), sync_every {})",
-                self.replicas, self.sync_every, run.replicas, run.sync_every
+                "checkpoint topology ({} board(s), {} replica(s), sync_every {}) \
+                 does not match the resuming target ({} board(s), {} replica(s), \
+                 sync_every {})",
+                self.boards,
+                self.replicas,
+                self.sync_every,
+                run.boards,
+                run.replicas,
+                run.sync_every
+            )));
+        }
+        if self.sync != run.sync {
+            return Err(CheckpointError::Format(format!(
+                "checkpoint was cut under sync policy {} but the resuming run \
+                 uses {}",
+                self.sync, run.sync
             )));
         }
         if self.steps_done > run.total_steps {
@@ -312,6 +357,10 @@ pub struct RunIdentity {
     pub replicas: usize,
     /// Weight-sync cadence (0 = not divided).
     pub sync_every: usize,
+    /// Total board count F of the cluster (1 = board target).
+    pub boards: usize,
+    /// Weight-sync policy of the run.
+    pub sync: SyncPolicy,
     /// Total steps of the run.
     pub total_steps: usize,
 }
@@ -354,6 +403,8 @@ mod tests {
             lr: 1.0 / 128.0,
             replicas: 1,
             sync_every: 0,
+            boards: 1,
+            sync: SyncPolicy::Star,
             total_steps: 100,
         };
         TrainCheckpoint::capture(&spec, &run, 20, &curve, stats, 0.125, &w, &b)
@@ -403,6 +454,8 @@ mod tests {
             lr: 1.0 / 128.0,
             replicas: 1,
             sync_every: 0,
+            boards: 1,
+            sync: SyncPolicy::Star,
             total_steps: 100,
         };
         ck.check_resume("ck", &run).unwrap();
@@ -414,6 +467,55 @@ mod tests {
         assert!(ck.check_resume("ck", &RunIdentity { lr: 1.0 / 64.0, ..run }).is_err());
         assert!(ck.check_resume("ck", &RunIdentity { replicas: 2, ..run }).is_err());
         assert!(ck.check_resume("ck", &RunIdentity { sync_every: 10, ..run }).is_err());
+        assert!(ck.check_resume("ck", &RunIdentity { boards: 2, ..run }).is_err());
+        assert!(ck
+            .check_resume("ck", &RunIdentity { sync: SyncPolicy::Ring, ..run })
+            .is_err());
         assert!(ck.check_resume("ck", &RunIdentity { total_steps: 19, ..run }).is_err());
+    }
+
+    #[test]
+    fn wrong_board_count_is_a_typed_topology_error() {
+        // Regression: a snapshot cut on a 4-board cluster used to resume
+        // silently on 8 boards (RunIdentity did not capture F), where
+        // the divided-mode schedule differs. It must be a typed error.
+        let mut ck = sample();
+        ck.boards = 4;
+        let run = RunIdentity {
+            seed: 42,
+            batch: 16,
+            lr: 1.0 / 128.0,
+            replicas: 1,
+            sync_every: 0,
+            boards: 8,
+            sync: SyncPolicy::Star,
+            total_steps: 100,
+        };
+        let err = ck.check_resume("ck", &run).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("4 board(s)") && msg.contains("8 board(s)"), "{msg}");
+        // and the board count round-trips through the byte format
+        let back = TrainCheckpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.boards, 4);
+    }
+
+    #[test]
+    fn sync_policy_round_trips_and_mismatches_are_typed() {
+        let mut ck = sample();
+        ck.sync = SyncPolicy::BoundedStale { max_lag: 3 };
+        let back = TrainCheckpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.sync, SyncPolicy::BoundedStale { max_lag: 3 });
+        let run = RunIdentity {
+            seed: 42,
+            batch: 16,
+            lr: 1.0 / 128.0,
+            replicas: 1,
+            sync_every: 0,
+            boards: 1,
+            sync: SyncPolicy::Ring,
+            total_steps: 100,
+        };
+        let err = back.check_resume("ck", &run).unwrap_err();
+        assert!(err.to_string().contains("bounded-stale:3"), "{err}");
     }
 }

@@ -21,6 +21,7 @@
 
 use super::bus::{params_checksum, SystemBus};
 use super::checkpoint::{RunIdentity, TrainCheckpoint};
+use super::cost::{ring_average, ring_sync_cost, star_sync_cost, SyncPolicy};
 use super::fault::FaultPlan;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::recovery::RecoveryPolicy;
@@ -44,6 +45,13 @@ pub struct ClusterConfig {
     pub bus: SystemBus,
     /// Steps between weight syncs for divided jobs.
     pub sync_every: usize,
+    /// How divided groups synchronise weights at `sync_every`
+    /// boundaries: star gather/broadcast (the bit-exact default), ring
+    /// all-reduce (bit-identical averages, ring-shaped cost), or
+    /// bounded-stale averaging (see [`SyncPolicy`]). Recorded in every
+    /// checkpoint's [`RunIdentity`]; resuming under a different policy
+    /// is a typed error.
+    pub sync: SyncPolicy,
     /// Deterministic fault schedule (empty = no faults) — the testkit's
     /// fault differential injects worker death, chunk corruption, and
     /// delayed/reordered replies through this.
@@ -60,6 +68,7 @@ impl Default for ClusterConfig {
             device: "XC7S75-2".into(),
             bus: SystemBus::default(),
             sync_every: 20,
+            sync: SyncPolicy::Star,
             faults: FaultPlan::none(),
             recovery: RecoveryPolicy::default(),
         }
@@ -347,6 +356,7 @@ fn run_queues(
 ) -> Result<(), ClusterError> {
     let policy = &cfg.recovery;
     let bus = cfg.bus;
+    let topo = (cfg.boards, cfg.sync);
     type QueueOut = (Worker, f64, Vec<(usize, JobResult)>, Option<QueueFailure>);
     let outs: Vec<(usize, QueueOut)> = std::thread::scope(|s| {
         let mut handles = Vec::new();
@@ -361,7 +371,7 @@ fn run_queues(
                     let mut done = Vec::new();
                     for (idx, &j) in queue.iter().enumerate() {
                         match run_single_on(
-                            &worker, b, &jobs[j], j, &bus, &metrics, policy, None,
+                            &worker, b, &jobs[j], j, &bus, &metrics, policy, topo, None,
                         ) {
                             Ok((r, dt)) => {
                                 time += dt;
@@ -433,7 +443,8 @@ fn run_queues(
             Metrics::add(&metrics.chunks_rescheduled, 1);
         }
         let worker = worker_slots[b].as_ref().expect("chosen alive");
-        match run_single_on(worker, b, &jobs[p.job], p.job, &bus, metrics, policy, p.ckpt) {
+        match run_single_on(worker, b, &jobs[p.job], p.job, &bus, metrics, policy, topo, p.ckpt)
+        {
             Ok((r, dt)) => {
                 board_time[b] += dt;
                 results[p.job] = Some(r);
@@ -510,6 +521,7 @@ fn run_single_on(
     bus: &SystemBus,
     metrics: &Metrics,
     policy: &RecoveryPolicy,
+    topo: (usize, SyncPolicy),
     start: Option<LeaderCkpt>,
 ) -> Result<(JobResult, f64), SingleFailure> {
     let mut run = SingleRun {
@@ -520,6 +532,7 @@ fn run_single_on(
         bus,
         metrics,
         policy,
+        topo,
         ckpt: None,
         checkpoints: Vec::new(),
         time: 0.0,
@@ -596,6 +609,10 @@ struct SingleRun<'a> {
     bus: &'a SystemBus,
     metrics: &'a Metrics,
     policy: &'a RecoveryPolicy,
+    /// The run's `(total boards, sync policy)` — checkpoint identity
+    /// only (a single-board job never syncs, but its checkpoints must
+    /// refuse a different topology on resume).
+    topo: (usize, SyncPolicy),
     /// Live progress, read back by [`run_single_on`] on failure.
     ckpt: Option<LeaderCkpt>,
     /// Durable snapshots captured so far (moved, not cloned, into the
@@ -730,6 +747,8 @@ impl SingleRun<'_> {
                     lr: job.cfg.lr,
                     replicas: 1,
                     sync_every: 0,
+                    boards: self.topo.0,
+                    sync: self.topo.1,
                     total_steps: total,
                 };
                 let ck = self.ckpt.as_ref().expect("absorbed above");
@@ -898,6 +917,7 @@ fn run_groups(
     let policy = &cfg.recovery;
     let bus = cfg.bus;
     let sync_every = cfg.sync_every;
+    let topo = (cfg.boards, cfg.sync);
     type GroupOut = (Vec<Worker>, Vec<f64>, Result<JobResult, ClusterError>);
     let outs: Vec<(usize, GroupOut)> = std::thread::scope(|s| {
         let mut handles = Vec::new();
@@ -913,7 +933,8 @@ fn run_groups(
                 j,
                 s.spawn(move || -> GroupOut {
                     let mut run = DividedRun::new(
-                        job, j, &group_workers, &group, &bus, sync_every, policy, &metrics,
+                        job, j, &group_workers, &group, &bus, sync_every, topo, policy,
+                        &metrics,
                     );
                     let result = run.drive();
                     let times = run.times.clone();
@@ -959,6 +980,15 @@ struct DividedRun<'a> {
     boards: &'a [usize],
     bus: &'a SystemBus,
     sync_every: usize,
+    /// The run's sync policy (how the collective below is priced and,
+    /// for [`SyncPolicy::BoundedStale`], whether it runs at all).
+    sync: SyncPolicy,
+    /// Total board count F of the whole run (checkpoint identity; can
+    /// exceed this group's `k` when several groups share the cluster).
+    total_boards: usize,
+    /// Consecutive sync boundaries skipped since the last completed
+    /// collective (always 0 for the deterministic policies).
+    lag: usize,
     policy: &'a RecoveryPolicy,
     metrics: &'a Metrics,
     /// Per-slot liveness (a slot is a position in `workers`).
@@ -992,6 +1022,7 @@ impl<'a> DividedRun<'a> {
         boards: &'a [usize],
         bus: &'a SystemBus,
         sync_every: usize,
+        topo: (usize, SyncPolicy),
         policy: &'a RecoveryPolicy,
         metrics: &'a Metrics,
     ) -> DividedRun<'a> {
@@ -1003,6 +1034,9 @@ impl<'a> DividedRun<'a> {
             boards,
             bus,
             sync_every,
+            sync: topo.1,
+            total_boards: topo.0,
+            lag: 0,
             policy,
             metrics,
             alive: vec![true; k],
@@ -1423,40 +1457,96 @@ impl<'a> DividedRun<'a> {
                 bs.push(chunk.b);
             }
             compute_critical += round_max;
-            // Weight sync: gather k × params up, broadcast averaged params.
-            let sync_bytes = self.job.spec.param_bytes() * (k as u64 + 1);
-            let sync_s = self.bus.transfer_s(self.job.spec.param_bytes()) * (k as f64 + 1.0);
-            Metrics::add(&self.metrics.bus_bytes, sync_bytes);
-            Metrics::add(&self.metrics.sync_rounds, 1);
-            bus_total += sync_s;
-            self.cur_w = average_weights(&ws);
-            self.cur_b = average_weights(&bs);
-            let mut acked = vec![false; k];
-            for r in 0..k {
-                let slot = self.owner[r];
-                if !self.alive[slot] {
-                    self.cursor[r] = None;
-                    continue;
+            // Weight sync under the run's [`SyncPolicy`] (charges from
+            // the [`super::cost`] contention model). BoundedStale may
+            // skip the collective while within its lag budget — the
+            // replicas then continue on their own weights, diverged
+            // from the last completed average — but the final boundary
+            // always syncs so the reported parameters are a true
+            // average of all replicas.
+            let last_round = self.done + steps == total;
+            let collective = match self.sync {
+                SyncPolicy::BoundedStale { max_lag } if !last_round && self.lag < max_lag => {
+                    self.lag += 1;
+                    false
                 }
-                let (w, b) = (self.cur_w.clone(), self.cur_b.clone());
-                let key = self.key[r];
-                acked[r] = self.send(slot, Cmd::SetWeights { job: key, w, b })?;
-                self.times[slot] += sync_s / k as f64;
-            }
-            for r in 0..k {
-                if acked[r] && self.alive[self.owner[r]] && !self.ready(self.owner[r])? {
-                    self.cursor[r] = None;
+                _ => true,
+            };
+            if collective {
+                self.lag = 0;
+                let p_bytes = self.job.spec.param_bytes();
+                let (sync_s, sync_bytes, sync_cycles, per_slot_s);
+                match self.sync {
+                    SyncPolicy::Ring => {
+                        // Survivors re-form the ring after an eviction:
+                        // the collective is sized to the *live* board
+                        // count, while the average still folds in all k
+                        // replica parameter sets (adopted replicas run
+                        // on surviving boards).
+                        let live = self.alive.iter().filter(|&&a| a).count();
+                        let c = ring_sync_cost(live, p_bytes, self.bus);
+                        sync_s = c.seconds;
+                        sync_bytes = c.bytes;
+                        sync_cycles = c.cycles;
+                        // Every ring member's link is busy for the
+                        // whole collective.
+                        per_slot_s = c.seconds;
+                        self.cur_w = ring_average(&ws);
+                        self.cur_b = ring_average(&bs);
+                    }
+                    SyncPolicy::Star | SyncPolicy::BoundedStale { .. } => {
+                        // Star: gather k × params up, broadcast the
+                        // average — charges identical to the pre-policy
+                        // leader (asserted in cost.rs), so existing
+                        // makespans and metrics stay bit-identical.
+                        // BoundedStale's performed collectives are
+                        // star-shaped too.
+                        let c = star_sync_cost(k, p_bytes, self.bus);
+                        sync_s = c.seconds;
+                        sync_bytes = c.bytes;
+                        sync_cycles = c.cycles;
+                        per_slot_s = sync_s / k as f64;
+                        self.cur_w = average_weights(&ws);
+                        self.cur_b = average_weights(&bs);
+                    }
+                }
+                Metrics::add(&self.metrics.bus_bytes, sync_bytes);
+                Metrics::add(&self.metrics.sync_rounds, 1);
+                Metrics::add(&self.metrics.sync_cycles, sync_cycles);
+                bus_total += sync_s;
+                let mut acked = vec![false; k];
+                for r in 0..k {
+                    let slot = self.owner[r];
+                    if !self.alive[slot] {
+                        self.cursor[r] = None;
+                        continue;
+                    }
+                    let (w, b) = (self.cur_w.clone(), self.cur_b.clone());
+                    let key = self.key[r];
+                    acked[r] = self.send(slot, Cmd::SetWeights { job: key, w, b })?;
+                    self.times[slot] += per_slot_s;
+                }
+                for r in 0..k {
+                    if acked[r] && self.alive[self.owner[r]] && !self.ready(self.owner[r])? {
+                        self.cursor[r] = None;
+                    }
                 }
             }
             let before = self.done;
             self.done += steps;
-            if every > 0 && (self.done / every > before / every || self.done == total) {
+            // Divided checkpoints are only valid at completed-sync
+            // boundaries (resume re-broadcasts the snapshot weights to
+            // every replica), so a skipped boundary captures nothing.
+            if collective && every > 0 && (self.done / every > before / every || self.done == total)
+            {
                 let run = RunIdentity {
                     seed: self.job.cfg.seed,
                     batch: self.job.cfg.batch,
                     lr: self.job.cfg.lr,
                     replicas: k,
                     sync_every: self.sync_every,
+                    boards: self.total_boards,
+                    sync: self.sync,
                     total_steps: total,
                 };
                 checkpoints.push(TrainCheckpoint::capture(
@@ -1935,5 +2025,92 @@ mod tests {
         job.resume = Some(JobResume { steps_done: 5, ..JobResume::default() });
         let cfg = ClusterConfig { boards: 1, ..Default::default() };
         assert!(matches!(execute(&cfg, &[job]), Err(ClusterError::Checkpoint(_))));
+    }
+
+    #[test]
+    fn ring_sync_is_bit_identical_to_star_and_cheaper_on_the_bus() {
+        let jobs = vec![mk_job("rs", 5, 60)];
+        let base = ClusterConfig { boards: 3, sync_every: 15, ..Default::default() };
+        let star = execute(&base, &jobs).unwrap();
+        let ring_cfg = ClusterConfig { sync: SyncPolicy::Ring, ..base };
+        let ring = execute(&ring_cfg, &jobs).unwrap();
+        assert_eq!(ring.results[0].weights, star.results[0].weights);
+        assert_eq!(ring.results[0].biases, star.results[0].biases);
+        assert_eq!(ring.results[0].curve, star.results[0].curve);
+        assert_eq!(ring.results[0].accuracy, star.results[0].accuracy);
+        assert_eq!(ring.results[0].stats, star.results[0].stats);
+        assert_eq!(ring.metrics.sync_rounds, star.metrics.sync_rounds);
+        // Same averages, different cost shape: the ring avoids the
+        // leader's serialized link.
+        assert!(ring.metrics.sync_cycles > 0);
+        assert!(
+            ring.metrics.sync_cycles < star.metrics.sync_cycles,
+            "ring {} !< star {}",
+            ring.metrics.sync_cycles,
+            star.metrics.sync_cycles
+        );
+    }
+
+    #[test]
+    fn bounded_stale_zero_lag_degenerates_to_star() {
+        let jobs = vec![mk_job("bz", 9, 60)];
+        let base = ClusterConfig { boards: 3, sync_every: 15, ..Default::default() };
+        let star = execute(&base, &jobs).unwrap();
+        let stale_cfg =
+            ClusterConfig { sync: SyncPolicy::BoundedStale { max_lag: 0 }, ..base };
+        let stale = execute(&stale_cfg, &jobs).unwrap();
+        assert_eq!(stale.results[0].weights, star.results[0].weights);
+        assert_eq!(stale.results[0].biases, star.results[0].biases);
+        assert_eq!(stale.results[0].curve, star.results[0].curve);
+        assert_eq!(stale.results[0].accuracy, star.results[0].accuracy);
+        assert_eq!(stale.metrics.sync_rounds, star.metrics.sync_rounds);
+        assert_eq!(stale.metrics.sync_cycles, star.metrics.sync_cycles);
+        assert_eq!(stale.metrics.bus_bytes, star.metrics.bus_bytes);
+    }
+
+    #[test]
+    fn bounded_stale_skips_collectives_within_the_lag_budget() {
+        // Boundaries at 15/30/45/60 with max_lag 1: skip, sync, skip,
+        // forced final sync — exactly 2 collectives, and the run still
+        // trains (deterministically: same config, same result).
+        let cfg = ClusterConfig {
+            boards: 3,
+            sync_every: 15,
+            sync: SyncPolicy::BoundedStale { max_lag: 1 },
+            ..Default::default()
+        };
+        let jobs = vec![mk_job("bs", 5, 60)];
+        let r = execute(&cfg, &jobs).unwrap();
+        assert_eq!(r.metrics.sync_rounds, 2, "skip/sync/skip/forced-final");
+        assert!(r.results[0].accuracy > 0.5, "acc {}", r.results[0].accuracy);
+        let again = execute(&cfg, &jobs).unwrap();
+        assert_eq!(again.results[0].weights, r.results[0].weights);
+        assert_eq!(again.results[0].curve, r.results[0].curve);
+    }
+
+    #[test]
+    fn ring_heals_after_eviction_and_stays_bit_identical() {
+        // Board 2 dies mid-run: its replica is adopted, the survivors
+        // re-form a 2-board ring (cheaper collectives), and the final
+        // weights still equal the fault-free ring run's exactly.
+        let jobs = vec![mk_job("rh", 7, 30)];
+        let base = ClusterConfig {
+            boards: 3,
+            sync_every: 10,
+            sync: SyncPolicy::Ring,
+            ..Default::default()
+        };
+        let clean = execute(&base, &jobs).unwrap();
+        let cfg = ClusterConfig { faults: FaultPlan::none().kill(2, 3), ..base };
+        let r = execute(&cfg, &jobs).unwrap();
+        assert!(r.metrics.boards_evicted >= 1, "no eviction recorded");
+        assert_eq!(r.results[0].weights, clean.results[0].weights);
+        assert_eq!(r.results[0].biases, clean.results[0].biases);
+        assert_eq!(r.results[0].curve, clean.results[0].curve);
+        assert_eq!(r.results[0].accuracy, clean.results[0].accuracy);
+        assert!(
+            r.metrics.sync_cycles < clean.metrics.sync_cycles,
+            "the healed 2-board ring should be cheaper than the 3-board one"
+        );
     }
 }

@@ -17,6 +17,10 @@ pub struct Metrics {
     pub bus_bytes: AtomicU64,
     /// Weight-synchronisation rounds performed.
     pub sync_rounds: AtomicU64,
+    /// Modelled bus-controller cycles spent inside weight-sync
+    /// collectives, under the [`super::cost`] contention model (star
+    /// serializes on the leader's link; ring overlaps neighbours).
+    pub sync_cycles: AtomicU64,
     /// Worker errors observed.
     pub errors: AtomicU64,
     /// Faults injected by the run's [`super::fault::FaultPlan`].
@@ -55,6 +59,7 @@ impl Metrics {
             sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
             bus_bytes: self.bus_bytes.load(Ordering::Relaxed),
             sync_rounds: self.sync_rounds.load(Ordering::Relaxed),
+            sync_cycles: self.sync_cycles.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             faults_injected: self.faults_injected.load(Ordering::Relaxed),
             infer_chunks: self.infer_chunks.load(Ordering::Relaxed),
@@ -79,6 +84,8 @@ pub struct MetricsSnapshot {
     pub bus_bytes: u64,
     /// Weight-sync rounds.
     pub sync_rounds: u64,
+    /// Modelled bus cycles spent in weight-sync collectives.
+    pub sync_cycles: u64,
     /// Worker errors.
     pub errors: u64,
     /// Injected faults that fired.

@@ -43,6 +43,7 @@
 
 pub mod bus;
 pub mod checkpoint;
+pub mod cost;
 pub mod fault;
 pub mod leader;
 pub mod metrics;
@@ -52,6 +53,7 @@ pub mod worker;
 
 pub use bus::{params_checksum, SystemBus};
 pub use checkpoint::{RunIdentity, TrainCheckpoint};
+pub use cost::{ring_sync_cost, star_sync_cost, SyncCost, SyncPolicy, BUS_CLOCK_HZ};
 pub use fault::{FaultPlan, FaultSite};
 pub use leader::{
     execute, infer_on, ClusterConfig, ClusterError, ClusterReport, Job, JobResult, JobResume,

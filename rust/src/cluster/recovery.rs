@@ -28,6 +28,13 @@
 //! Recovery never masks *logic* errors: a worker-reported job error
 //! (bad dataset, shape mismatch) or a protocol violation still aborts
 //! with the old typed error — rescheduling those would fail everywhere.
+//!
+//! Eviction also heals the ring (DESIGN.md §Cluster): under
+//! [`super::cost::SyncPolicy::Ring`] the adopting replica re-collects
+//! every replica's chunk, so the averaging input — and therefore the
+//! trained state — stays bit-identical to the fault-free run; only the
+//! modelled collective shrinks to the surviving ring
+//! ([`super::cost::ring_sync_cost`] over the live count).
 
 /// How the leader responds to board failures. Carried per run by
 /// [`super::ClusterConfig`]; the default is recovery **on**.

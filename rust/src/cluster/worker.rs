@@ -18,6 +18,14 @@
 //! chunk reply carries a [`super::bus::params_checksum`] integrity word
 //! so the leader can reject corrupted parameters instead of averaging
 //! them in.
+//!
+//! Sync policies (DESIGN.md §Cluster): `Cmd::SetWeights` stays the one
+//! transport-level primitive for weight sync regardless of the run's
+//! [`super::cost::SyncPolicy`] — the leader computes the average (star
+//! gather or simulated ring all-reduce, bit-identical by construction)
+//! and broadcasts it here, while the *modelled* bus traffic of the
+//! chosen collective is charged by [`super::cost`], not by counting
+//! these commands.
 
 use super::bus::params_checksum;
 use super::fault::FaultPlan;

@@ -17,7 +17,7 @@
 use mfnn::asm::lower_file;
 use mfnn::assembler::vhdl;
 use mfnn::cli::{Args, Spec};
-use mfnn::cluster::{ClusterConfig, SystemBus};
+use mfnn::cluster::{ClusterConfig, SyncPolicy, SystemBus};
 use mfnn::config::Config;
 use mfnn::fixed::FixedSpec;
 use mfnn::hw::{FpgaDevice, MemPlan};
@@ -294,6 +294,8 @@ fn jobs_from_config(
             latency_s: cfg.float_or("cluster.bus_latency_s", 50e-6),
         },
         sync_every: cfg.int_or("cluster.sync_every", 20) as usize,
+        sync: SyncPolicy::parse(&cfg.str_or("cluster.sync", "star"))
+            .ok_or("cluster.sync invalid (star|ring|bounded-stale[:N])")?,
         ..ClusterConfig::default()
     };
     let names =
@@ -545,6 +547,7 @@ fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
         .opt("family", "restrict to one family: net|graph|program|fault|recovery|serve-chaos|memplan", None)
         .opt("failures-out", "write failing seeds here (corpus format)", Some("FUZZ_FAILURES.txt"))
         .opt("max-shrink", "shrink-step budget per failure", Some("100"))
+        .opt("sync", "force one weight-sync policy on every cluster case: star|ring|bounded-stale[:N]", None)
         .flag("plant-divergence", "test-only hook: plant a known FastSim divergence");
     let args = parse_or_help(
         &spec,
@@ -562,6 +565,13 @@ fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
         ),
         None => None,
     };
+    let sync_override = match args.get("sync") {
+        Some(s) => Some(
+            SyncPolicy::parse(s)
+                .ok_or(format!("unknown sync policy {s:?} (star|ring|bounded-stale[:N])"))?,
+        ),
+        None => None,
+    };
     let opts = mfnn::testkit::FuzzOptions {
         cases: args.parse_or("cases", 64usize).map_err(|e| e.to_string())?,
         seed: args.parse_or("seed", 0u64).map_err(|e| e.to_string())?,
@@ -570,6 +580,7 @@ fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
         max_shrink_steps: args.parse_or("max-shrink", 100usize).map_err(|e| e.to_string())?,
         check_reproduction: true,
         family,
+        sync_override,
     };
     let report = match args.get("corpus") {
         Some(path) => {

@@ -18,6 +18,7 @@
 use super::artifact::{Artifact, ForwardVariant, NetSpec, TensorHandle};
 use super::error::Error;
 use crate::cluster::checkpoint::{RunIdentity, TrainCheckpoint};
+use crate::cluster::cost::SyncPolicy;
 use crate::cluster::leader::{self, ClusterConfig, ClusterReport, Job, JobResume};
 use crate::hw::{FpgaDevice, MatrixMachine, RunStats};
 use crate::nn::dataset::{self, Dataset};
@@ -456,9 +457,10 @@ impl Session {
             // One job on F boards divides over all of them when F > 1
             // (see `cluster::schedule`); otherwise the run is
             // single-board and the snapshot must say so too.
-            let (replicas, sync_every) = match &self.cluster {
-                Some(c) if c.boards > 1 => (c.boards, c.sync_every),
-                _ => (1, 0),
+            let (replicas, sync_every, boards, sync) = match &self.cluster {
+                Some(c) if c.boards > 1 => (c.boards, c.sync_every, c.boards, c.sync),
+                Some(c) => (1, 0, c.boards, c.sync),
+                None => (1, 0, 1, SyncPolicy::Star),
             };
             let run = RunIdentity {
                 seed: cfg.seed,
@@ -466,6 +468,8 @@ impl Session {
                 lr: cfg.lr,
                 replicas,
                 sync_every,
+                boards,
+                sync,
                 total_steps: cfg.steps,
             };
             ck.check_resume(net.spec.name(), &run)?;
@@ -575,6 +579,8 @@ impl Session {
                     lr: cfg.lr,
                     replicas: 1,
                     sync_every: 0,
+                    boards: 1,
+                    sync: SyncPolicy::Star,
                     total_steps: total,
                 };
                 let (w, b) = t.weights();
@@ -781,6 +787,8 @@ impl Session {
                         lr: j.cfg.lr,
                         replicas,
                         sync_every,
+                        boards: cfg.boards,
+                        sync: cfg.sync,
                         total_steps: j.cfg.steps,
                     };
                     ck.check_resume(&mlp.name, &run)?;

@@ -11,6 +11,7 @@
 
 use super::diff::{Differ, Divergence};
 use super::gen;
+use crate::cluster::cost::SyncPolicy;
 use crate::hw::FpgaDevice;
 use crate::prop::Gen;
 use crate::util::Rng;
@@ -121,6 +122,12 @@ pub struct FuzzOptions {
     /// `--family memplan` are the CI recovery, chaos, and
     /// memory-planner smokes.
     pub family: Option<Family>,
+    /// Force every cluster-bearing case to one [`SyncPolicy`],
+    /// overriding the generator's sampled `FuzzCase::sync` —
+    /// `mfnn fuzz --family recovery --sync ring` is the CI ring-healing
+    /// smoke. A failure found under an override replays only with the
+    /// same `--sync` flag.
+    pub sync_override: Option<SyncPolicy>,
 }
 
 impl Default for FuzzOptions {
@@ -133,6 +140,7 @@ impl Default for FuzzOptions {
             max_shrink_steps: 100,
             check_reproduction: true,
             family: None,
+            sync_override: None,
         }
     }
 }
@@ -237,6 +245,15 @@ fn run_net_family(differ: &Differ, c: &gen::FuzzCase) -> Result<(), Divergence> 
     differ.run_cluster(c)
 }
 
+/// Apply a [`FuzzOptions::sync_override`] to a sampled case's cluster
+/// phase (identity when no override is set).
+fn with_sync(c: &gen::FuzzCase, sync: Option<SyncPolicy>) -> gen::FuzzCase {
+    match sync {
+        Some(s) => gen::FuzzCase { sync: s, ..c.clone() },
+        None => c.clone(),
+    }
+}
+
 /// Run one family's case at `seed` through its differential levels.
 pub fn run_case(differ: &Differ, family: Family, seed: u64) -> Result<(), Divergence> {
     let mut rng = Rng::new(seed);
@@ -324,7 +341,7 @@ fn fuzz_one(
 ) {
     let failure = match family {
         Family::Net => fuzz_family(opts, family, case_index, seed, &gen::fuzz_case(), |c| {
-            run_net_family(differ, c)
+            run_net_family(differ, &with_sync(c, opts.sync_override))
         }),
         Family::Graph => fuzz_family(opts, family, case_index, seed, &gen::graph_case(), |c| {
             differ.run_graph(c)
@@ -333,11 +350,17 @@ fn fuzz_one(
             differ.run_program(c)
         }),
         Family::Fault => fuzz_family(opts, family, case_index, seed, &gen::fault_case(), |c| {
-            differ.run_faults(c)
+            differ.run_faults(&gen::FaultCase {
+                case: with_sync(&c.case, opts.sync_override),
+                plan: c.plan.clone(),
+            })
         }),
         Family::Recovery => {
             fuzz_family(opts, family, case_index, seed, &gen::recovery_case(), |c| {
-                differ.run_recovery(c)
+                differ.run_recovery(&gen::RecoveryCase {
+                    case: with_sync(&c.case, opts.sync_override),
+                    plan: c.plan.clone(),
+                })
             })
         }
         Family::ServeChaos => {
@@ -484,6 +507,15 @@ mod tests {
         assert!(report.ok());
         let all = fuzz(&FuzzOptions { cases: 0, ..FuzzOptions::default() });
         assert_eq!(all.families, Family::ALL.len());
+    }
+
+    #[test]
+    fn sync_override_rewrites_only_the_policy() {
+        let c = gen::fuzz_case().sample(&mut Rng::new(9));
+        let forced = with_sync(&c, Some(SyncPolicy::Ring));
+        assert_eq!(forced.sync, SyncPolicy::Ring);
+        assert_eq!(with_sync(&c, None), c);
+        assert_eq!(gen::FuzzCase { sync: c.sync, ..forced }, c);
     }
 
     #[test]

@@ -31,6 +31,7 @@
 //! shrink loop.
 
 use crate::assembler::program::{BufId, BufKind, LaneOp, Program, Step, View, Wave};
+use crate::cluster::cost::SyncPolicy;
 use crate::cluster::fault::FaultPlan;
 use crate::cluster::scheduler::{schedule, PlacementMode};
 use crate::fixed::FixedSpec;
@@ -401,6 +402,11 @@ pub struct FuzzCase {
     pub boards: usize,
     /// Weight-sync cadence for divided placements.
     pub sync_every: usize,
+    /// Weight-sync policy of the cluster phase. Deterministic policies
+    /// (`Star`, `Ring`, `BoundedStale { max_lag: 0 }`) keep the
+    /// bit-exact differential oracles; other `BoundedStale` lags use
+    /// the loss-descent convergence oracle instead.
+    pub sync: SyncPolicy,
 }
 
 impl FuzzCase {
@@ -444,6 +450,11 @@ pub(crate) fn sample_fuzz_case(r: &mut Rng) -> FuzzCase {
         jobs: 1 + r.gen_range(3) as usize,   // 1..=3
         boards: 1 + r.gen_range(3) as usize, // 1..=3
         sync_every: 1 + r.gen_range(4) as usize,
+        sync: *r.choose(&[
+            SyncPolicy::Star,
+            SyncPolicy::Ring,
+            SyncPolicy::BoundedStale { max_lag: 1 },
+        ]),
     }
 }
 
@@ -466,6 +477,11 @@ fn shrink_fuzz_case(c: &FuzzCase) -> Vec<FuzzCase> {
     }
     if c.sync_every > 1 {
         out.push(FuzzCase { sync_every: 1, ..c.clone() });
+    }
+    // toward the star oracle (a policy-independent reproduction shrinks
+    // away the policy dimension entirely)
+    if c.sync != SyncPolicy::Star {
+        out.push(FuzzCase { sync: SyncPolicy::Star, ..c.clone() });
     }
     out
 }

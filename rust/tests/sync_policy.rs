@@ -1,0 +1,238 @@
+//! Weight-sync policy acceptance tests (DESIGN.md §Cluster): the ring
+//! all-reduce must be **bit-identical** to the star gather/average/
+//! broadcast on every M×F grid point — weights, biases, loss curves,
+//! accuracy, stats, and checkpoints (modulo the recorded policy tag) —
+//! while costing asymptotically less on the modeled bus; bounded
+//! staleness with a zero lag budget must degenerate to star exactly;
+//! and resuming a checkpoint on the wrong topology or under the wrong
+//! policy must be a typed error.
+
+use mfnn::cluster::leader::{execute, Job};
+use mfnn::cluster::{
+    ring_sync_cost, star_sync_cost, ClusterConfig, RecoveryPolicy, SyncPolicy, SystemBus,
+};
+use mfnn::fixed::FixedSpec;
+use mfnn::hw::FpgaDevice;
+use mfnn::nn::dataset;
+use mfnn::nn::lut::ActKind;
+use mfnn::nn::mlp::{LutParams, MlpSpec};
+use mfnn::nn::trainer::TrainConfig;
+use mfnn::{CompileOptions, Compiler, Session, Target, TrainOptions};
+use std::sync::Arc;
+
+const LR: f64 = 1.0 / 128.0;
+
+fn spec(name: &str) -> MlpSpec {
+    let fixed = FixedSpec::q(10).saturating();
+    MlpSpec::from_dims(
+        name,
+        &[2, 5, 2],
+        ActKind::Relu,
+        ActKind::Identity,
+        fixed,
+        LutParams::training(fixed),
+    )
+    .unwrap()
+}
+
+fn mk_job(name: &str, seed: u64, steps: usize) -> Job {
+    // Train and test share one dataset: blob centers are seed-derived,
+    // so a differently-seeded test set would have different clusters.
+    let ds = Arc::new(dataset::blobs(48, 2, 2, seed));
+    Job {
+        name: name.into(),
+        spec: spec(name),
+        cfg: TrainConfig { batch: 8, lr: LR, steps, seed, log_every: 4 },
+        train_data: Arc::clone(&ds),
+        test_data: ds,
+        initial: None,
+        resume: None,
+    }
+}
+
+fn cfg(boards: usize, sync: SyncPolicy) -> ClusterConfig {
+    ClusterConfig {
+        boards,
+        sync_every: 4,
+        sync,
+        recovery: RecoveryPolicy::checkpointed(4),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn ring_is_bit_identical_to_star_on_every_m_by_f_grid_point() {
+    // The tentpole acceptance property, exhaustively: for every M×F in
+    // 1..=8 × 1..=8 — covering all three placement modes (sequential
+    // M>F, one-to-one M=F, divided M<F) — the ring all-reduce produces
+    // the same trained state as the star default, bit for bit. Ring's
+    // reduce-scatter sums each lane fully in i32 before the single
+    // truncating divide, so associativity of the fixed-point average is
+    // asserted here rather than assumed. Checkpoints must agree on
+    // everything except the recorded policy tag itself.
+    for boards in 1..=8usize {
+        for jobs_n in 1..=8usize {
+            let jobs: Vec<Job> = (0..jobs_n)
+                .map(|j| mk_job(&format!("g{j}"), 90 + j as u64, 8))
+                .collect();
+            let star = execute(&cfg(boards, SyncPolicy::Star), &jobs).unwrap();
+            let ring = execute(&cfg(boards, SyncPolicy::Ring), &jobs).unwrap();
+            let at = format!("M={jobs_n} F={boards}");
+            assert_eq!(star.placement, ring.placement, "placement differs at {at}");
+            for (s, r) in star.results.iter().zip(&ring.results) {
+                assert_eq!(s.weights, r.weights, "weights differ at {at} job {:?}", s.name);
+                assert_eq!(s.biases, r.biases, "biases differ at {at} job {:?}", s.name);
+                assert_eq!(s.curve, r.curve, "curves differ at {at} job {:?}", s.name);
+                assert_eq!(s.accuracy, r.accuracy, "accuracy differs at {at}");
+                assert_eq!(s.stats, r.stats, "stats differ at {at}");
+                assert_eq!(
+                    s.checkpoints.len(),
+                    r.checkpoints.len(),
+                    "checkpoint count differs at {at}"
+                );
+                for (cs, cr) in s.checkpoints.iter().zip(&r.checkpoints) {
+                    assert_eq!(cr.sync, SyncPolicy::Ring, "ring checkpoint mistagged at {at}");
+                    let mut retagged = cr.clone();
+                    retagged.sync = SyncPolicy::Star;
+                    assert_eq!(
+                        *cs, retagged,
+                        "checkpoints differ beyond the policy tag at {at}"
+                    );
+                }
+            }
+            if jobs_n < boards {
+                // Divided placement actually synced, and the ring paid
+                // for it on the modeled bus.
+                assert!(star.metrics.sync_rounds > 0, "no syncs at divided {at}");
+                assert_eq!(star.metrics.sync_rounds, ring.metrics.sync_rounds, "{at}");
+                assert!(ring.metrics.sync_cycles > 0, "free ring sync at {at}");
+            }
+        }
+    }
+}
+
+#[test]
+fn bounded_stale_zero_lag_degenerates_to_star_exactly() {
+    // `BoundedStale { max_lag: 0 }` never has lag budget to spend, so
+    // every boundary performs the star collective — the whole report,
+    // including bus accounting, must be identical.
+    for (boards, jobs_n) in [(2, 1), (3, 1), (5, 2), (4, 4), (3, 6)] {
+        let jobs: Vec<Job> = (0..jobs_n)
+            .map(|j| mk_job(&format!("z{j}"), 7 + j as u64, 12))
+            .collect();
+        let star = execute(&cfg(boards, SyncPolicy::Star), &jobs).unwrap();
+        let zero =
+            execute(&cfg(boards, SyncPolicy::BoundedStale { max_lag: 0 }), &jobs).unwrap();
+        let at = format!("M={jobs_n} F={boards}");
+        for (s, z) in star.results.iter().zip(&zero.results) {
+            assert_eq!(s.weights, z.weights, "{at}");
+            assert_eq!(s.biases, z.biases, "{at}");
+            assert_eq!(s.curve, z.curve, "{at}");
+            assert_eq!(s.stats, z.stats, "{at}");
+        }
+        assert_eq!(star.metrics.sync_rounds, zero.metrics.sync_rounds, "{at}");
+        assert_eq!(star.metrics.sync_cycles, zero.metrics.sync_cycles, "{at}");
+        assert_eq!(star.metrics.bus_bytes, zero.metrics.bus_bytes, "{at}");
+        assert_eq!(star.makespan_s, zero.makespan_s, "{at}");
+    }
+}
+
+#[test]
+fn bounded_stale_trains_through_skipped_collectives() {
+    // A positive lag budget skips collectives (fewer sync rounds than
+    // star) but the final boundary always syncs, the run replays
+    // deterministically, and the job still learns the blobs.
+    let jobs = vec![mk_job("bs", 42, 24)];
+    let stale = SyncPolicy::BoundedStale { max_lag: 2 };
+    let star = execute(&cfg(3, SyncPolicy::Star), &jobs).unwrap();
+    let r1 = execute(&cfg(3, stale), &jobs).unwrap();
+    let r2 = execute(&cfg(3, stale), &jobs).unwrap();
+    assert!(
+        r1.metrics.sync_rounds < star.metrics.sync_rounds,
+        "lag budget {} vs {} never skipped a collective",
+        r1.metrics.sync_rounds,
+        star.metrics.sync_rounds
+    );
+    assert_eq!(r1.results[0].weights, r2.results[0].weights, "stale run nondeterministic");
+    assert_eq!(r1.results[0].curve, r2.results[0].curve, "stale curve nondeterministic");
+    assert!(r1.results[0].accuracy > 0.5, "stale run failed to learn: {}", r1.results[0].accuracy);
+}
+
+#[test]
+fn ring_cost_scales_per_board_while_star_scales_with_the_group() {
+    // The cost-model scaling claim for F up to 64: with a
+    // bandwidth-dominated payload, star serialises k+1 full-parameter
+    // transfers through the leader endpoint (O(k·P)) while the ring
+    // moves 2(k−1) chunks of P/k per board concurrently (~O(P)/board) —
+    // so the star/ring cycle ratio must grow monotonically with k.
+    let bus = SystemBus::default();
+    let p_bytes = 1 << 20; // 1 MiB of parameters: transfer ≫ latency
+    let mut last_ratio = 0.0f64;
+    for k in [2usize, 4, 8, 16, 32, 64] {
+        let star = star_sync_cost(k, p_bytes, &bus);
+        let ring = ring_sync_cost(k, p_bytes, &bus);
+        assert!(
+            ring.cycles < star.cycles,
+            "ring {} !< star {} at k={k}",
+            ring.cycles,
+            star.cycles
+        );
+        let ratio = star.cycles as f64 / ring.cycles as f64;
+        assert!(ratio > last_ratio, "star/ring ratio fell to {ratio:.2} at k={k}");
+        last_ratio = ratio;
+    }
+    // By k=64 the modeled advantage is over an order of magnitude.
+    assert!(last_ratio > 10.0, "only {last_ratio:.2}× at k=64");
+}
+
+fn session(name: &str, target: Target) -> Session {
+    let compiler = Compiler::new();
+    let artifact =
+        compiler.compile_spec(&spec(name), &CompileOptions::training(8, LR)).unwrap();
+    Session::open(artifact, target).unwrap()
+}
+
+#[test]
+fn resume_on_a_different_board_count_is_a_typed_error() {
+    // Regression for the RunIdentity gap: v1 checkpoints did not record
+    // the cluster's board count F, so a snapshot cut on 2 boards could
+    // silently resume on 3 where the divided schedule differs.
+    let ds = dataset::blobs(96, 2, 2, 5);
+    let c = TrainConfig { batch: 8, lr: LR, steps: 16, seed: 11, log_every: 4 };
+    let two = ClusterConfig { boards: 2, sync_every: 4, ..Default::default() };
+    let mut s = session("topo", Target::Cluster(two));
+    let (_, ckpts) = s.train_with(&ds, &c, &TrainOptions::checkpoint_every(8)).unwrap();
+    let ck = ckpts[0].clone();
+    assert_eq!(ck.boards, 2, "checkpoint did not record F");
+    let three = ClusterConfig { boards: 3, sync_every: 4, ..Default::default() };
+    let mut other = session("topo", Target::Cluster(three));
+    let err = other.train_with(&ds, &c, &TrainOptions::resume(ck)).unwrap_err();
+    assert!(matches!(err, mfnn::Error::Checkpoint(_)), "{err}");
+    assert!(err.to_string().contains("board"), "untyped topology error: {err}");
+}
+
+#[test]
+fn resume_under_a_different_sync_policy_is_a_typed_error() {
+    let ds = dataset::blobs(96, 2, 2, 5);
+    let c = TrainConfig { batch: 8, lr: LR, steps: 16, seed: 13, log_every: 4 };
+    let ring = ClusterConfig { boards: 2, sync_every: 4, sync: SyncPolicy::Ring, ..Default::default() };
+    let mut s = session("policy", Target::Cluster(ring.clone()));
+    let (_, ckpts) = s.train_with(&ds, &c, &TrainOptions::checkpoint_every(8)).unwrap();
+    let ck = ckpts[0].clone();
+    assert_eq!(ck.sync, SyncPolicy::Ring, "checkpoint did not record the policy");
+    // Same topology, different policy: typed, names both policies.
+    let star = ClusterConfig { boards: 2, sync_every: 4, ..Default::default() };
+    let mut other = session("policy", Target::Cluster(star));
+    let err = other.train_with(&ds, &c, &TrainOptions::resume(ck.clone())).unwrap_err();
+    assert!(matches!(err, mfnn::Error::Checkpoint(_)), "{err}");
+    let msg = err.to_string();
+    assert!(msg.contains("ring") && msg.contains("star"), "unhelpful policy error: {msg}");
+    // The matching policy still resumes cleanly (and bit-exactly).
+    let mut full = session("policy", Target::Cluster(ring.clone()));
+    let (want, _) = full.train_with(&ds, &c, &TrainOptions::default()).unwrap();
+    let mut resumed = session("policy", Target::Cluster(ring));
+    let (got, _) =
+        resumed.train_with(&ds, &c, &TrainOptions::resume(ck)).unwrap();
+    assert_eq!(resumed.weights().unwrap(), full.weights().unwrap());
+    assert_eq!(got.curve, want.curve);
+}
