@@ -1,0 +1,174 @@
+//! Pass 1: lane-granular use-before-def dataflow.
+//!
+//! Tracks a defined bit per buffer lane through the step schedule.
+//! Host-bindable buffers (every kind except `Temp`) and const-inited
+//! buffers start defined; scratch lanes become defined only when a
+//! `LoadDram` or an earlier wave writes them. A wave that reads an
+//! undefined scratch lane observes arena zero-init — legal on the
+//! simulators, garbage on real BRAM — and is reported as a hard
+//! [`Diagnostic::UndefinedRead`].
+//!
+//! Soundness: lanes are walked in program order and, within a wave, in
+//! lane order — exactly the sequential semantics `FastSim::exec_wave`
+//! implements — so a lane defined by an earlier lane op of the same
+//! wave is correctly visible to later lane ops. The pass never clears a
+//! defined bit (writes only add definitions), so "defined here" is
+//! path-insensitive and exact for this straight-line IR: a flagged read
+//! is undefined on *the* execution path, not just some path.
+
+use crate::assembler::program::{BufKind, Program, Step, View};
+use crate::isa::Opcode;
+
+use super::Diagnostic;
+
+/// Run the pass, appending at most one [`Diagnostic::UndefinedRead`]
+/// per wave (the first undefined read encountered).
+pub(super) fn run(program: &Program, diags: &mut Vec<Diagnostic>) {
+    let mut defined: Vec<Vec<bool>> = program
+        .buffers
+        .iter()
+        .map(|b| vec![b.kind != BufKind::Temp || b.init.is_some(); b.len()])
+        .collect();
+
+    for (si, step) in program.steps.iter().enumerate() {
+        match step {
+            Step::LoadDram(b) => defined[*b].iter_mut().for_each(|d| *d = true),
+            // A store reads whatever is there; stale lanes surface at the
+            // wave that computed (or failed to compute) them, not here.
+            Step::StoreDram(_) | Step::LoadLut(_) => {}
+            Step::Wave(w) => {
+                if w.op == Opcode::Nop {
+                    continue;
+                }
+                let mut flagged = false;
+                for (li, lane) in w.lanes.iter().enumerate() {
+                    if !flagged {
+                        let reads = [Some(&lane.a), lane.b.as_ref()];
+                        'scan: for v in reads.into_iter().flatten() {
+                            if let Some(bad) = first_undefined(v, &defined) {
+                                diags.push(Diagnostic::UndefinedRead {
+                                    step: si,
+                                    op: w.op,
+                                    lane_idx: li,
+                                    buf: program.buffers[v.buf].name.clone(),
+                                    lane: bad,
+                                });
+                                flagged = true;
+                                break 'scan;
+                            }
+                        }
+                    }
+                    for i in 0..lane.out.len {
+                        defined[lane.out.buf][lane.out.offset + i * lane.out.stride] = true;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn first_undefined(v: &View, defined: &[Vec<bool>]) -> Option<usize> {
+    (0..v.len).map(|i| v.offset + i * v.stride).find(|&lane| !defined[v.buf][lane])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembler::program::Wave;
+    use crate::fixed::FixedSpec;
+
+    fn two_buf_program() -> (Program, usize, usize) {
+        let mut p = Program::new("df", FixedSpec::PAPER);
+        let x = p.buffer("x", 4, 1, BufKind::Input);
+        let t = p.buffer("t", 4, 1, BufKind::Temp);
+        (p, x, t)
+    }
+
+    fn add_wave(a: View, b: View, out: View, vec_len: usize) -> Step {
+        Step::Wave(Wave {
+            op: Opcode::VectorAddition,
+            vec_len,
+            lut: None,
+            lanes: vec![crate::assembler::program::LaneOp { a, b: Some(b), out }],
+        })
+    }
+
+    #[test]
+    fn read_of_unwritten_scratch_is_flagged_with_exact_lane() {
+        let (mut p, x, t) = two_buf_program();
+        p.steps.push(add_wave(View::all(t, 4), View::all(x, 4), View::all(x, 4), 4));
+        let mut diags = Vec::new();
+        run(&p, &mut diags);
+        assert_eq!(
+            diags,
+            vec![Diagnostic::UndefinedRead {
+                step: 0,
+                op: Opcode::VectorAddition,
+                lane_idx: 0,
+                buf: "t".into(),
+                lane: 0,
+            }]
+        );
+    }
+
+    #[test]
+    fn write_then_read_is_clean_and_load_dram_defines() {
+        let (mut p, x, t) = two_buf_program();
+        // Write t, then read it back: clean.
+        p.steps.push(add_wave(View::all(x, 4), View::all(x, 4), View::all(t, 4), 4));
+        p.steps.push(add_wave(View::all(t, 4), View::all(x, 4), View::all(x, 4), 4));
+        let mut diags = Vec::new();
+        run(&p, &mut diags);
+        assert!(diags.is_empty(), "{diags:?}");
+
+        // LoadDram alone also defines.
+        let (mut p, x, t) = two_buf_program();
+        p.steps.push(Step::LoadDram(t));
+        p.steps.push(add_wave(View::all(t, 4), View::all(x, 4), View::all(x, 4), 4));
+        let mut diags = Vec::new();
+        run(&p, &mut diags);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn strided_write_leaves_gap_lanes_undefined() {
+        let (mut p, x, t) = two_buf_program();
+        // Write only even lanes of t (stride 2), then read all four.
+        let strided = View { buf: t, offset: 0, len: 2, stride: 2 };
+        p.steps.push(add_wave(View::contiguous(x, 0, 2), View::contiguous(x, 0, 2), strided, 2));
+        p.steps.push(add_wave(View::all(t, 4), View::all(x, 4), View::all(x, 4), 4));
+        let mut diags = Vec::new();
+        run(&p, &mut diags);
+        assert_eq!(diags.len(), 1);
+        match &diags[0] {
+            Diagnostic::UndefinedRead { step, lane, buf, .. } => {
+                assert_eq!((*step, *lane, buf.as_str()), (1, 1, "t"));
+            }
+            other => panic!("wrong diagnostic: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn earlier_lane_defines_for_later_lane_in_same_wave() {
+        let (mut p, x, t) = two_buf_program();
+        let lane0 = crate::assembler::program::LaneOp {
+            a: View::contiguous(x, 0, 2),
+            b: Some(View::contiguous(x, 2, 2)),
+            out: View::contiguous(t, 0, 2),
+        };
+        let lane1 = crate::assembler::program::LaneOp {
+            a: View::contiguous(t, 0, 2),
+            b: Some(View::contiguous(x, 0, 2)),
+            out: View::contiguous(t, 2, 2),
+        };
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::VectorAddition,
+            vec_len: 2,
+            lut: None,
+            lanes: vec![lane0, lane1],
+        }));
+        let mut diags = Vec::new();
+        run(&p, &mut diags);
+        assert!(diags.is_empty(), "sequential lane semantics: {diags:?}");
+    }
+}

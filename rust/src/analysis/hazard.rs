@@ -1,0 +1,443 @@
+//! Pass 4: hazard oracle — certify the plan's optimisation claims.
+//!
+//! [`ExecPlan`] claims two things per compiled wave
+//! ([`crate::hw::WaveClaim`]): that a fused dot→act pair is
+//! semantics-preserving, and that a wave's lanes are independent
+//! (worker-pool eligible). The executor trusts those claims; this pass
+//! recomputes both from scratch over *exact* per-lane address sets
+//! (packed prefix-sum layout, the same arithmetic as the unplanned
+//! `ExecPlan::new` resolver) rather than the plan's interval sweeps:
+//!
+//! - **Fusion** — re-derives the fused-output mapping independently:
+//!   single-lane distinct dot outputs, no dot chains, every activation
+//!   element consuming a distinct dot output exactly once, and no
+//!   activation write clobbering a dot input, another dot output, or
+//!   another activation input. Any violated condition on a wave the
+//!   plan *did* fuse is a [`Diagnostic::FusionUnsound`] miscompile.
+//! - **Parallelism** — the exact independence condition: for lanes
+//!   `i ≠ j`, `W_i ∩ (R_j ∪ W_j) = ∅` (fused writes included, own-lane
+//!   aliasing exempt). A claimed-parallel wave violating it is a
+//!   [`Diagnostic::ParallelUnsound`] miscompile. The plan's own checks
+//!   are conservative under-approximations of this condition, so a
+//!   correct plan can never be flagged — the oracle only fires on real
+//!   unsoundness.
+//! - **Order dependence** — any cross-lane RAW/WAR/WAW conflict on a
+//!   wave executed sequentially is legal but fragile (the result
+//!   depends on lane order); reported as
+//!   [`Diagnostic::OrderDependent`] warnings for `Strict` runs.
+//!
+//! Waves whose exact address sets exceed [`ADDR_BUDGET`] are skipped
+//! and counted in [`super::CheckReport::hazard_skipped`] so a bounded
+//! check never silently claims full coverage.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::assembler::program::{Program, Step, View, Wave};
+use crate::hw::{ExecPlan, FpgaDevice};
+use crate::isa::Opcode;
+
+use super::Diagnostic;
+
+/// Exact-address budget per certified wave (dot + fused act).
+const ADDR_BUDGET: usize = 1 << 20;
+
+/// Run the pass; returns the number of skipped (over-budget) waves.
+pub(super) fn run(
+    program: &Program,
+    device: &FpgaDevice,
+    diags: &mut Vec<Diagnostic>,
+) -> usize {
+    // Packed arena layout: prefix sums of buffer lengths.
+    let mut base = Vec::with_capacity(program.buffers.len());
+    let mut acc = 0usize;
+    for b in &program.buffers {
+        base.push(acc);
+        acc += b.len();
+    }
+
+    let plan = ExecPlan::new(program, device);
+    let mut skipped = 0usize;
+    for claim in plan.wave_claims() {
+        let Step::Wave(w) = &program.steps[claim.src_step] else { continue };
+        if w.op == Opcode::Nop {
+            continue;
+        }
+
+        // Locate the fused activation wave the same way the plan did:
+        // optionally one LoadLut, then the act wave.
+        let fused_act: Option<(usize, &Wave)> = if claim.fused {
+            let next = claim.src_step + 1;
+            let act_idx = match program.steps.get(next) {
+                Some(Step::LoadLut(_)) => next + 1,
+                _ => next,
+            };
+            match program.steps.get(act_idx) {
+                Some(Step::Wave(a)) if a.op == Opcode::ActivationFunction => {
+                    Some((act_idx, a))
+                }
+                _ => {
+                    diags.push(Diagnostic::FusionUnsound {
+                        dot_step: claim.src_step,
+                        act_step: act_idx,
+                        reason: "no activation wave follows the fused dot",
+                    });
+                    continue;
+                }
+            }
+        } else {
+            None
+        };
+
+        let mut total = wave_addr_count(w);
+        if let Some((_, act)) = fused_act {
+            total += wave_addr_count(act);
+        }
+        if total > ADDR_BUDGET {
+            skipped += 1;
+            continue;
+        }
+
+        // Per-lane exact write sets; fused writes attach to the dot lane
+        // producing the consumed output.
+        let mut writes: Vec<Vec<usize>> =
+            w.lanes.iter().map(|l| view_addrs(&base, &l.out)).collect();
+        if let Some((act_step, act)) = fused_act {
+            match fusion_map(&base, w, act) {
+                Ok(fused_out) => {
+                    for (lane, fo) in fused_out.into_iter().enumerate() {
+                        if let Some(addr) = fo {
+                            writes[lane].push(addr);
+                        }
+                    }
+                }
+                Err(reason) => {
+                    diags.push(Diagnostic::FusionUnsound {
+                        dot_step: claim.src_step,
+                        act_step,
+                        reason,
+                    });
+                    continue;
+                }
+            }
+        }
+        let reads: Vec<Vec<usize>> = w
+            .lanes
+            .iter()
+            .map(|l| {
+                let mut r = view_addrs(&base, &l.a);
+                if let Some(b) = &l.b {
+                    r.extend(view_addrs(&base, b));
+                }
+                r
+            })
+            .collect();
+
+        if let Some((lanes, addr, hazard)) = first_conflict(&reads, &writes) {
+            if claim.parallel {
+                diags.push(Diagnostic::ParallelUnsound {
+                    step: claim.src_step,
+                    lanes,
+                    addr,
+                });
+            } else {
+                diags.push(Diagnostic::OrderDependent {
+                    step: claim.src_step,
+                    lanes,
+                    addr,
+                    hazard,
+                });
+            }
+        }
+    }
+    skipped
+}
+
+fn view_addrs(base: &[usize], v: &View) -> Vec<usize> {
+    (0..v.len).map(|i| base[v.buf] + v.offset + i * v.stride).collect()
+}
+
+fn wave_addr_count(w: &Wave) -> usize {
+    w.lanes
+        .iter()
+        .map(|l| l.a.len + l.b.as_ref().map_or(0, |b| b.len) + l.out.len)
+        .sum()
+}
+
+/// Independent re-derivation of the fused-output mapping: `Ok(map)`
+/// gives each dot lane its activation write address (or `None` when its
+/// output is unconsumed); `Err` names the violated soundness condition.
+fn fusion_map(
+    base: &[usize],
+    dot: &Wave,
+    act: &Wave,
+) -> Result<Vec<Option<usize>>, &'static str> {
+    let mut out_lane: HashMap<usize, usize> = HashMap::with_capacity(dot.lanes.len());
+    for (i, l) in dot.lanes.iter().enumerate() {
+        if l.out.len != 1 {
+            return Err("dot output is not a single lane");
+        }
+        let o = base[l.out.buf] + l.out.offset;
+        if out_lane.insert(o, i).is_some() {
+            return Err("two dot lanes share an output lane");
+        }
+    }
+    let mut dot_in: HashSet<usize> = HashSet::new();
+    for l in &dot.lanes {
+        dot_in.extend(view_addrs(base, &l.a));
+        if let Some(b) = &l.b {
+            dot_in.extend(view_addrs(base, b));
+        }
+    }
+    if out_lane.keys().any(|a| dot_in.contains(a)) {
+        return Err("dot chain: one lane reads another's output");
+    }
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    let mut act_in: HashSet<usize> = HashSet::new();
+    for l in &act.lanes {
+        if l.a.len != l.out.len {
+            return Err("activation element count mismatch");
+        }
+        let ia = view_addrs(base, &l.a);
+        let oa = view_addrs(base, &l.out);
+        act_in.extend(ia.iter().copied());
+        pairs.extend(ia.into_iter().zip(oa));
+    }
+    let mut fused: Vec<Option<usize>> = vec![None; dot.lanes.len()];
+    let mut seen_out: HashSet<usize> = HashSet::with_capacity(pairs.len());
+    for (ia, oa) in pairs {
+        let Some(&lane) = out_lane.get(&ia) else {
+            return Err("activation reads a lane that is not a dot output");
+        };
+        if fused[lane].is_some() {
+            return Err("dot output consumed by two activation elements");
+        }
+        if oa != ia && (out_lane.contains_key(&oa) || act_in.contains(&oa)) {
+            return Err("activation write clobbers a dot output or activation input");
+        }
+        if dot_in.contains(&oa) {
+            return Err("activation write clobbers a dot input");
+        }
+        if !seen_out.insert(oa) {
+            return Err("two activation elements write the same lane");
+        }
+        fused[lane] = Some(oa);
+    }
+    Ok(fused)
+}
+
+/// First (lowest-address) cross-lane conflict, classified RAW/WAR/WAW.
+/// Returns `((earlier lane, later lane), addr, hazard)`.
+fn first_conflict(
+    reads: &[Vec<usize>],
+    writes: &[Vec<usize>],
+) -> Option<((usize, usize), usize, &'static str)> {
+    // addr → (first writer, second distinct writer)
+    let mut writer: BTreeMap<usize, (usize, Option<usize>)> = BTreeMap::new();
+    for (i, ws) in writes.iter().enumerate() {
+        for &a in ws {
+            match writer.get_mut(&a) {
+                None => {
+                    writer.insert(a, (i, None));
+                }
+                Some((w1, w2)) => {
+                    if *w1 != i && w2.is_none() {
+                        *w2 = Some(i);
+                    }
+                }
+            }
+        }
+    }
+    // addr → first two distinct reader lanes
+    let mut reader: BTreeMap<usize, (usize, Option<usize>)> = BTreeMap::new();
+    for (i, rs) in reads.iter().enumerate() {
+        for &a in rs {
+            match reader.get_mut(&a) {
+                None => {
+                    reader.insert(a, (i, None));
+                }
+                Some((r1, r2)) => {
+                    if *r1 != i && r2.is_none() {
+                        *r2 = Some(i);
+                    }
+                }
+            }
+        }
+    }
+    for (&addr, &(w1, w2)) in &writer {
+        if let Some(w2) = w2 {
+            return Some(((w1.min(w2), w1.max(w2)), addr, "WAW"));
+        }
+        if let Some(&(r1, r2)) = reader.get(&addr) {
+            // Pick a reader that is not the writing lane itself.
+            let r = if r1 != w1 { Some(r1) } else { r2 };
+            if let Some(r) = r {
+                return Some(if w1 < r {
+                    ((w1, r), addr, "RAW")
+                } else {
+                    ((r, w1), addr, "WAR")
+                });
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembler::program::{BufKind, LaneOp};
+    use crate::fixed::FixedSpec;
+    use crate::nn::lut::{ActKind, ActLut, AddrMode};
+
+    fn device() -> FpgaDevice {
+        FpgaDevice::selected()
+    }
+
+    /// Parallel dot lanes feeding a fused activation: the plan's claims
+    /// must certify clean.
+    #[test]
+    fn certifies_correct_fused_parallel_claims() {
+        let mut p = Program::new("hz", FixedSpec::PAPER);
+        let x = p.buffer("x", 4, 4, BufKind::Input);
+        let w = p.buffer("w", 4, 4, BufKind::Weight);
+        let z = p.buffer("z", 4, 1, BufKind::Temp);
+        let o = p.buffer("o", 4, 1, BufKind::Output);
+        let lut = p.lut(ActLut::build(
+            ActKind::Relu,
+            false,
+            FixedSpec::PAPER,
+            AddrMode::Clamp,
+            3,
+        ));
+        p.steps.push(Step::LoadLut(lut));
+        let dots = (0..4)
+            .map(|r| LaneOp {
+                a: View::contiguous(x, 4 * r, 4),
+                b: Some(View::contiguous(w, 4 * r, 4)),
+                out: View::contiguous(z, r, 1),
+            })
+            .collect();
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::VectorDotProduct,
+            vec_len: 4,
+            lut: None,
+            lanes: dots,
+        }));
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::ActivationFunction,
+            vec_len: 4,
+            lut: Some(lut),
+            lanes: vec![LaneOp { a: View::all(z, 4), b: None, out: View::all(o, 4) }],
+        }));
+        p.check().expect("valid program");
+        let mut diags = Vec::new();
+        let skipped = run(&p, &device(), &mut diags);
+        assert_eq!(skipped, 0);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    /// A lane reading another lane's output is order-dependent — warned,
+    /// never claimed parallel by the plan.
+    #[test]
+    fn cross_lane_raw_is_flagged_order_dependent() {
+        let mut p = Program::new("hz", FixedSpec::PAPER);
+        let x = p.buffer("x", 2, 1, BufKind::Input);
+        let o = p.buffer("o", 2, 1, BufKind::Output);
+        let lane0 = LaneOp {
+            a: View::contiguous(x, 0, 1),
+            b: Some(View::contiguous(x, 1, 1)),
+            out: View::contiguous(o, 0, 1),
+        };
+        let lane1 = LaneOp {
+            a: View::contiguous(o, 0, 1), // reads lane 0's output
+            b: Some(View::contiguous(x, 0, 1)),
+            out: View::contiguous(o, 1, 1),
+        };
+        p.steps.push(Step::Wave(Wave {
+            op: Opcode::VectorAddition,
+            vec_len: 1,
+            lut: None,
+            lanes: vec![lane0, lane1],
+        }));
+        p.check().expect("valid program");
+        let mut diags = Vec::new();
+        run(&p, &device(), &mut diags);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        match &diags[0] {
+            Diagnostic::OrderDependent { step, lanes, hazard, .. } => {
+                assert_eq!((*step, *lanes, *hazard), (0, (0, 1), "RAW"));
+            }
+            other => panic!("wrong diagnostic: {other:?}"),
+        }
+    }
+
+    /// The fusion oracle rejects each unsound shape with a precise
+    /// reason (these shapes are unreachable through ExecPlan, which
+    /// refuses to fuse them — exercised directly).
+    #[test]
+    fn fusion_oracle_rejects_unsound_shapes() {
+        let mut p = Program::new("hz", FixedSpec::PAPER);
+        let x = p.buffer("x", 4, 1, BufKind::Input);
+        let z = p.buffer("z", 2, 1, BufKind::Temp);
+        let o = p.buffer("o", 2, 1, BufKind::Output);
+        let base = vec![0usize, 4, 6];
+        let dot = |out_lane: usize| Wave {
+            op: Opcode::VectorDotProduct,
+            vec_len: 2,
+            lut: None,
+            lanes: vec![LaneOp {
+                a: View::contiguous(x, 0, 2),
+                b: Some(View::contiguous(x, 2, 2)),
+                out: View::contiguous(z, out_lane, 1),
+            }],
+        };
+        let act = |src: View, dst: View| Wave {
+            op: Opcode::ActivationFunction,
+            vec_len: src.len,
+            lut: Some(0),
+            lanes: vec![LaneOp { a: src, b: None, out: dst }],
+        };
+        // Activation reading a non-dot-output lane.
+        let err = fusion_map(
+            &base,
+            &dot(0),
+            &act(View::contiguous(z, 1, 1), View::contiguous(o, 0, 1)),
+        )
+        .unwrap_err();
+        assert!(err.contains("not a dot output"), "{err}");
+
+        // Activation write clobbering a dot input.
+        let err = fusion_map(
+            &base,
+            &dot(0),
+            &act(View::contiguous(z, 0, 1), View::contiguous(x, 0, 1)),
+        )
+        .unwrap_err();
+        assert!(err.contains("dot input"), "{err}");
+
+        // Two activation elements consuming the same dot output.
+        let strided_same = View { buf: z, offset: 0, len: 2, stride: 0 };
+        let err = fusion_map(&base, &dot(0), &act(strided_same, View::all(o, 2)))
+            .unwrap_err();
+        assert!(err.contains("consumed by two"), "{err}");
+    }
+
+    /// The exact parallel-independence condition on synthetic lane sets.
+    #[test]
+    fn first_conflict_classifies_hazards() {
+        // WAW: lanes 0 and 2 write addr 7.
+        let conflict = first_conflict(
+            &[vec![], vec![], vec![]],
+            &[vec![7], vec![8], vec![7]],
+        );
+        assert_eq!(conflict, Some(((0, 2), 7, "WAW")));
+
+        // WAR: lane 0 reads addr 5, lane 1 writes it.
+        let conflict = first_conflict(&[vec![5], vec![]], &[vec![6], vec![5]]);
+        assert_eq!(conflict, Some(((0, 1), 5, "WAR")));
+
+        // Own-lane aliasing is exempt.
+        let conflict = first_conflict(&[vec![3], vec![4]], &[vec![3], vec![4]]);
+        assert_eq!(conflict, None);
+    }
+}

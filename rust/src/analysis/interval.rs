@@ -1,0 +1,421 @@
+//! Pass 2: fixed-point interval analysis.
+//!
+//! Propagates a per-lane value range `[lo, hi]` (raw `i16` units)
+//! through the step schedule under the program's [`FixedSpec`], using
+//! the exact transfer functions of the datapath:
+//!
+//! - add/sub: corner sums, narrowed without shift (`FixedSpec::add`);
+//! - mul: 4-corner product range, floor-shifted by `frac_bits`
+//!   (arithmetic `>>` = floor division, which is monotone, so shifting
+//!   the corners bounds the shift of every interior value), then
+//!   narrowed (`FixedSpec::mul` = `rescale`);
+//! - dot: per-element corner-product ranges summed into a full-width
+//!   accumulator bound, then floor-shifted and narrowed
+//!   (`FixedSpec::dot`);
+//! - sum: corner sums narrowed without shift (`FixedSpec::sum`);
+//! - activation: the reachable table window under the LUT's shift and
+//!   address mode — shifting is monotone so the reachable shifted
+//!   addresses form one interval, and interpolated outputs are proven
+//!   bounded by the two neighbouring table entries (`ActLut`), so the
+//!   min/max over the reachable window (plus interpolation neighbours)
+//!   bounds every output.
+//!
+//! Narrowing is where diagnostics fire. A pre-narrow range entirely
+//! outside `i16` under `RoundMode::Wrap` wraps on *every* execution
+//! within the host envelope — [`Diagnostic::GuaranteedOverflow`], a
+//! hard error. A straddling range is [`Diagnostic::PossibleWrap`]; any
+//! out-of-range bound under `RoundMode::Saturate` is
+//! [`Diagnostic::PossibleSaturation`]; a `AddrMode::Wrap` LUT reachable
+//! outside its `[-512, 511]` shifted domain is
+//! [`Diagnostic::LutDomainExceeded`] (all warnings). Per wave, at most
+//! one diagnostic per kind is emitted, carrying the worst-magnitude
+//! bound and the lane op achieving it.
+//!
+//! Soundness: ranges only ever widen past the true value set (corner
+//! arithmetic over monotone ops, full-`i16` fallback after a wrap), so
+//! the final per-lane ranges returned to [`super::CheckReport::ranges`]
+//! contain every value any execution within the host envelope can leave
+//! in that lane — the property fuzzed in `tests/properties.rs`.
+
+use crate::assembler::program::{BufKind, Program, Step};
+use crate::fixed::RoundMode;
+use crate::isa::Opcode;
+use crate::nn::lut::{ActLut, AddrMode, LUT_SIZE};
+
+use super::{CheckOptions, Diagnostic};
+
+const I16_MIN: i64 = i16::MIN as i64;
+const I16_MAX: i64 = i16::MAX as i64;
+
+type Range = (i64, i64);
+
+/// Run the pass; returns the final per-buffer per-lane ranges.
+pub(super) fn run(
+    program: &Program,
+    opts: &CheckOptions,
+    diags: &mut Vec<Diagnostic>,
+) -> Vec<Vec<Range>> {
+    let bound = opts.host_bound.map_or(I16_MAX, |b| b.unsigned_abs() as i64);
+    let envelope = (-bound, bound);
+
+    // Initial state: const data is exact, host-bindable buffers get the
+    // envelope, scratch is arena zero-init.
+    let init: Vec<Vec<Range>> = program
+        .buffers
+        .iter()
+        .map(|b| match &b.init {
+            Some(data) => data.iter().map(|&v| (v as i64, v as i64)).collect(),
+            None if b.kind == BufKind::Temp => vec![(0, 0); b.len()],
+            None => vec![envelope; b.len()],
+        })
+        .collect();
+    let mut ranges = init.clone();
+    // DDR shadow: what a LoadDram would bring back. Starts at the same
+    // state (host-bound or zero) and is refreshed by StoreDram.
+    let mut dram = init;
+
+    for (si, step) in program.steps.iter().enumerate() {
+        match step {
+            Step::LoadDram(b) => ranges[*b] = dram[*b].clone(),
+            Step::StoreDram(b) => dram[*b] = ranges[*b].clone(),
+            Step::LoadLut(_) => {}
+            Step::Wave(w) => {
+                let mut agg = WaveAgg::default();
+                for (li, lane) in w.lanes.iter().enumerate() {
+                    let a: Vec<Range> = read(&ranges, &lane.a);
+                    let b: Vec<Range> = match &lane.b {
+                        Some(v) => read(&ranges, v),
+                        None => Vec::new(),
+                    };
+                    let out: Vec<Range> = match w.op {
+                        Opcode::Nop => continue,
+                        Opcode::VectorAddition => (0..a.len())
+                            .map(|i| {
+                                narrow(add(a[i], b[i]), program.fixed.round, li, &mut agg)
+                            })
+                            .collect(),
+                        Opcode::VectorSubtraction => (0..a.len())
+                            .map(|i| {
+                                narrow(sub(a[i], b[i]), program.fixed.round, li, &mut agg)
+                            })
+                            .collect(),
+                        Opcode::ElementMultiplication => (0..a.len())
+                            .map(|i| {
+                                let p = shift(mul(a[i], b[i]), program.fixed.frac_bits);
+                                narrow(p, program.fixed.round, li, &mut agg)
+                            })
+                            .collect(),
+                        Opcode::VectorDotProduct => {
+                            let mut acc = (0i64, 0i64);
+                            for i in 0..a.len() {
+                                acc = add(acc, mul(a[i], b[i]));
+                            }
+                            vec![narrow(
+                                shift(acc, program.fixed.frac_bits),
+                                program.fixed.round,
+                                li,
+                                &mut agg,
+                            )]
+                        }
+                        Opcode::VectorSummation => {
+                            let mut acc = (0i64, 0i64);
+                            for &r in &a {
+                                acc = add(acc, r);
+                            }
+                            vec![narrow(acc, program.fixed.round, li, &mut agg)]
+                        }
+                        Opcode::ActivationFunction => {
+                            let lut = &program.luts[w.lut.expect("checked LUT")];
+                            a.iter().map(|&r| lut_range(lut, r, &mut agg)).collect()
+                        }
+                    };
+                    for (i, r) in out.iter().enumerate() {
+                        ranges[lane.out.buf][lane.out.offset + i * lane.out.stride] = *r;
+                    }
+                }
+                agg.flush(si, w.op, w.lut.unwrap_or(0), diags);
+            }
+        }
+    }
+    ranges
+}
+
+fn read(ranges: &[Vec<Range>], v: &crate::assembler::program::View) -> Vec<Range> {
+    (0..v.len).map(|i| ranges[v.buf][v.offset + i * v.stride]).collect()
+}
+
+fn add(a: Range, b: Range) -> Range {
+    (a.0 + b.0, a.1 + b.1)
+}
+
+fn sub(a: Range, b: Range) -> Range {
+    (a.0 - b.1, a.1 - b.0)
+}
+
+fn mul(a: Range, b: Range) -> Range {
+    let c = [a.0 * b.0, a.0 * b.1, a.1 * b.0, a.1 * b.1];
+    (*c.iter().min().unwrap(), *c.iter().max().unwrap())
+}
+
+/// Floor shift (arithmetic `>>`) — monotone, so shifting the corners
+/// is exact on the range.
+fn shift(r: Range, frac_bits: u32) -> Range {
+    (r.0 >> frac_bits, r.1 >> frac_bits)
+}
+
+/// Narrow a pre-narrow range into `i16`, recording the worst offender
+/// per diagnostic kind in `agg`.
+fn narrow(r: Range, round: RoundMode, lane_idx: usize, agg: &mut WaveAgg) -> Range {
+    if r.0 >= I16_MIN && r.1 <= I16_MAX {
+        return r;
+    }
+    match round {
+        RoundMode::Saturate => {
+            agg.record(NarrowKind::Sat, lane_idx, r);
+            (r.0.clamp(I16_MIN, I16_MAX), r.1.clamp(I16_MIN, I16_MAX))
+        }
+        RoundMode::Wrap => {
+            if r.0 > I16_MAX || r.1 < I16_MIN {
+                agg.record(NarrowKind::Guaranteed, lane_idx, r);
+            } else {
+                agg.record(NarrowKind::Wrap, lane_idx, r);
+            }
+            // Wrapped values can land anywhere; the full range is the
+            // only sound post-state.
+            (I16_MIN, I16_MAX)
+        }
+    }
+}
+
+/// Output range of one LUT application over input range `r` (which is
+/// always `i16`-bounded post-narrow).
+fn lut_range(lut: &ActLut, r: Range, agg: &mut WaveAgg) -> Range {
+    let slo = ((r.0 as i32) >> lut.shift) as i64;
+    let shi = ((r.1 as i32) >> lut.shift) as i64;
+    let table = lut.table();
+    let interp = lut.interp && lut.shift > 0;
+    let mut lo = i64::MAX;
+    let mut hi = i64::MIN;
+    let mut cover = |a: usize| {
+        lo = lo.min(table[a] as i64);
+        hi = hi.max(table[a] as i64);
+    };
+    match lut.mode {
+        AddrMode::Clamp => {
+            let alo = (slo + 512).clamp(0, LUT_SIZE as i64 - 1) as usize;
+            let mut ahi = (shi + 512).clamp(0, LUT_SIZE as i64 - 1) as usize;
+            if interp {
+                ahi = (ahi + 1).min(LUT_SIZE - 1);
+            }
+            (alo..=ahi).for_each(&mut cover);
+        }
+        AddrMode::Wrap => {
+            if slo < -512 || shi > 511 {
+                // Addresses alias through the 10-bit truncation: two
+                // distinct inputs share a table entry.
+                let slot = &mut agg.lut_domain;
+                *slot = Some(match *slot {
+                    None => (slo, shi),
+                    Some(prev) => (prev.0.min(slo), prev.1.max(shi)),
+                });
+            }
+            if shi - slo >= LUT_SIZE as i64 - 1 {
+                (0..LUT_SIZE).for_each(&mut cover);
+            } else {
+                for s in slo..=shi {
+                    let a = (s as i32 as u32 as usize) & (LUT_SIZE - 1);
+                    cover(a);
+                    if interp {
+                        cover((a + 1) & (LUT_SIZE - 1));
+                    }
+                }
+            }
+        }
+    }
+    // Interpolated outputs lie between neighbouring entries, both of
+    // which the windows above cover, so (lo, hi) bounds them too.
+    (lo, hi)
+}
+
+/// Per-wave aggregation: at most one diagnostic per kind, keeping the
+/// worst-magnitude bound and the lane op achieving it.
+#[derive(Default)]
+struct WaveAgg {
+    guaranteed: Option<(usize, Range)>,
+    wrap: Option<(usize, Range)>,
+    sat: Option<(usize, Range)>,
+    lut_domain: Option<Range>,
+}
+
+/// Which narrow-time diagnostic a recorded bound belongs to.
+enum NarrowKind {
+    Guaranteed,
+    Wrap,
+    Sat,
+}
+
+impl WaveAgg {
+    fn record(&mut self, kind: NarrowKind, lane_idx: usize, r: Range) {
+        let slot = match kind {
+            NarrowKind::Guaranteed => &mut self.guaranteed,
+            NarrowKind::Wrap => &mut self.wrap,
+            NarrowKind::Sat => &mut self.sat,
+        };
+        let mag = r.0.abs().max(r.1.abs());
+        let keep = match *slot {
+            None => true,
+            Some((_, prev)) => mag > prev.0.abs().max(prev.1.abs()),
+        };
+        if keep {
+            *slot = Some((lane_idx, r));
+        }
+    }
+
+    fn flush(
+        self,
+        step: usize,
+        op: Opcode,
+        lut: usize,
+        diags: &mut Vec<Diagnostic>,
+    ) {
+        if let Some((lane_idx, bound)) = self.guaranteed {
+            diags.push(Diagnostic::GuaranteedOverflow { step, op, lane_idx, bound });
+        }
+        if let Some((lane_idx, bound)) = self.wrap {
+            diags.push(Diagnostic::PossibleWrap { step, op, lane_idx, bound });
+        }
+        if let Some((lane_idx, bound)) = self.sat {
+            diags.push(Diagnostic::PossibleSaturation { step, op, lane_idx, bound });
+        }
+        if let Some(shifted) = self.lut_domain {
+            diags.push(Diagnostic::LutDomainExceeded { step, lut, shifted });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembler::program::{LaneOp, View, Wave};
+    use crate::fixed::FixedSpec;
+    use crate::nn::lut::ActKind;
+
+    fn wave(op: Opcode, a: View, b: Option<View>, out: View, vec_len: usize) -> Step {
+        Step::Wave(Wave { op, vec_len, lut: None, lanes: vec![LaneOp { a, b, out }] })
+    }
+
+    #[test]
+    fn const_add_chain_is_exact_and_guaranteed_overflow_fires() {
+        // big + big = 60000: outside i16 on every execution under Wrap.
+        let mut p = Program::new("iv", FixedSpec::PAPER);
+        let big = p.const_buffer("big", vec![30000; 2]);
+        let out = p.buffer("o", 2, 1, BufKind::Output);
+        p.steps.push(wave(
+            Opcode::VectorAddition,
+            View::all(big, 2),
+            Some(View::all(big, 2)),
+            View::all(out, 2),
+            2,
+        ));
+        let mut diags = Vec::new();
+        let opts = CheckOptions::new(super::super::CheckLevel::Strict);
+        let ranges = run(&p, &opts, &mut diags);
+        assert_eq!(
+            diags,
+            vec![Diagnostic::GuaranteedOverflow {
+                step: 0,
+                op: Opcode::VectorAddition,
+                lane_idx: 0,
+                bound: (60000, 60000),
+            }]
+        );
+        // Post-wrap state is the sound full range.
+        assert_eq!(ranges[out], vec![(I16_MIN, I16_MAX); 2]);
+    }
+
+    #[test]
+    fn saturating_format_downgrades_to_warning_and_clamps_range() {
+        let mut p = Program::new("iv", FixedSpec::PAPER.saturating());
+        let big = p.const_buffer("big", vec![30000]);
+        let out = p.buffer("o", 1, 1, BufKind::Output);
+        p.steps.push(wave(
+            Opcode::VectorAddition,
+            View::all(big, 1),
+            Some(View::all(big, 1)),
+            View::all(out, 1),
+            1,
+        ));
+        let mut diags = Vec::new();
+        let opts = CheckOptions::new(super::super::CheckLevel::Strict);
+        let ranges = run(&p, &opts, &mut diags);
+        assert!(matches!(diags[0], Diagnostic::PossibleSaturation { .. }), "{diags:?}");
+        assert_eq!(ranges[out], vec![(I16_MAX, I16_MAX)]);
+    }
+
+    #[test]
+    fn host_envelope_tightens_ranges_to_clean() {
+        // envelope 100 + 100 = 200: in range, no diagnostics.
+        let mut p = Program::new("iv", FixedSpec::PAPER);
+        let x = p.buffer("x", 4, 1, BufKind::Input);
+        let out = p.buffer("o", 4, 1, BufKind::Output);
+        p.steps.push(wave(
+            Opcode::VectorAddition,
+            View::all(x, 4),
+            Some(View::all(x, 4)),
+            View::all(out, 4),
+            4,
+        ));
+        let mut diags = Vec::new();
+        let opts =
+            CheckOptions::new(super::super::CheckLevel::Strict).with_host_bound(100);
+        let ranges = run(&p, &opts, &mut diags);
+        assert!(diags.is_empty(), "{diags:?}");
+        assert_eq!(ranges[out], vec![(-200, 200); 4]);
+    }
+
+    #[test]
+    fn lut_window_bounds_every_observable_output() {
+        // Exhaustively compare the static LUT range against apply_scalar
+        // over a concrete input interval.
+        let fixed = FixedSpec::PAPER;
+        let lut = ActLut::build(ActKind::Tanh, false, fixed, AddrMode::Clamp, 3).with_interp();
+        let (lo_in, hi_in) = (-900i16, 1300i16);
+        let mut agg = WaveAgg::default();
+        let (lo, hi) = lut_range(&lut, (lo_in as i64, hi_in as i64), &mut agg);
+        for x in lo_in..=hi_in {
+            let y = lut.apply_scalar(x) as i64;
+            assert!(y >= lo && y <= hi, "x={x} y={y} outside [{lo}, {hi}]");
+        }
+    }
+
+    #[test]
+    fn wrap_mode_lut_out_of_domain_is_flagged() {
+        let fixed = FixedSpec::PAPER;
+        // shift 0: shifted range == input range, way outside [-512, 511].
+        let lut = ActLut::build(ActKind::Relu, false, fixed, AddrMode::Wrap, 0);
+        let mut agg = WaveAgg::default();
+        let _ = lut_range(&lut, (-4000, 4000), &mut agg);
+        assert_eq!(agg.lut_domain, Some((-4000, 4000)));
+    }
+
+    #[test]
+    fn store_then_load_round_trips_ranges_through_dram() {
+        let mut p = Program::new("iv", FixedSpec::PAPER);
+        let c = p.const_buffer("c", vec![7]);
+        let t = p.buffer("t", 1, 1, BufKind::Output);
+        p.steps.push(wave(
+            Opcode::VectorAddition,
+            View::all(c, 1),
+            Some(View::all(c, 1)),
+            View::all(t, 1),
+            1,
+        ));
+        p.steps.push(Step::StoreDram(t));
+        p.steps.push(Step::LoadDram(t));
+        let mut diags = Vec::new();
+        let opts = CheckOptions::new(super::super::CheckLevel::Strict);
+        let ranges = run(&p, &opts, &mut diags);
+        assert!(diags.is_empty());
+        assert_eq!(ranges[t], vec![(14, 14)]);
+    }
+}

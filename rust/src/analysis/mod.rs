@@ -1,0 +1,640 @@
+//! Static program checker: compile-time verification of lowered
+//! [`Program`]s before they touch a machine (DESIGN.md §Static
+//! analysis).
+//!
+//! The FPGA-accelerator survey (arxiv 1712.08934) identifies fixed-point
+//! overflow and buffer sizing as the dominant correctness hazards of the
+//! paper's design class; this module turns both — plus stale-lane reads
+//! and unsound plan optimisations — into compile-time diagnostics. Four
+//! passes run over the wave/DMA step schedule:
+//!
+//! 1. **Lane-granular dataflow** ([`dataflow`]) — per-lane
+//!    use-before-def through strided views: a wave that reads a scratch
+//!    (`BufKind::Temp`) lane no `LoadDram` or earlier wave ever defined
+//!    silently observes arena zero-init; that read is a hard
+//!    [`Diagnostic::UndefinedRead`].
+//! 2. **Fixed-point interval analysis** ([`interval`]) — value ranges
+//!    propagated through dot/mul/add/rescale and the LUT tables under
+//!    the program's [`FixedSpec`]. *Guaranteed* overflow (every
+//!    execution within the host envelope wraps) is a hard error;
+//!    *possible* wrap/saturation and LUT-domain aliasing are
+//!    [`CheckLevel::Strict`] warnings carrying the offending wave, op,
+//!    and worst-case bound. The static twin of `nn::precision`'s
+//!    dynamic search.
+//! 3. **Ring-FIFO safety** ([`ring`]) — the per-wavefront result-return
+//!    schedule of every wave is replayed through an
+//!    [`crate::hw::fifo::RingFifo`] sized to the device; a wavefront whose
+//!    simultaneous group injections exceed the FIFO capacity is a
+//!    provable overrun, and completion of the replay is a
+//!    deadlock-freedom proof for the static schedule.
+//! 4. **Hazard oracle** ([`hazard`]) — an independent exact-address
+//!    RAW/WAR/WAW recomputation that certifies [`ExecPlan`]'s fusion
+//!    and lane-parallel independence claims instead of trusting them
+//!    ([`crate::hw::ExecPlan::wave_claims`]).
+//!
+//! Entry point: [`check_program`]. Severity collection is gated by
+//! [`CheckLevel`]: `Standard` keeps hard errors only (zero on every
+//! compiler-emitted golden program — asserted in
+//! `rust/tests/analysis.rs`), `Strict` adds the advisory warnings.
+//! Session wiring: `CompileOptions::with_checks` runs the checker at
+//! compile time, attaches the [`CheckReport`]s to the `Artifact`, and
+//! surfaces hard errors as typed `Error::Check` ([`CheckError`]).
+
+use std::fmt;
+
+use crate::assembler::program::Program;
+use crate::hw::FpgaDevice;
+use crate::isa::Opcode;
+
+mod dataflow;
+mod hazard;
+mod interval;
+mod ring;
+
+/// How much the static checker reports (DESIGN.md §Static analysis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum CheckLevel {
+    /// Checker skipped entirely.
+    #[default]
+    Off,
+    /// Hard errors only: defects every execution (within the host
+    /// envelope) exhibits — undefined-lane reads, guaranteed overflow,
+    /// ring overrun/deadlock, unsound plan claims. Zero on sane
+    /// programs; safe as a compile gate.
+    Standard,
+    /// `Standard` plus advisory warnings: *possible* wrap/saturation,
+    /// LUT-domain aliasing, order-dependent waves, a headroom-free
+    /// ring. Input-envelope dependent; expect warnings on real nets.
+    Strict,
+}
+
+impl CheckLevel {
+    /// Parse a CLI name.
+    pub fn parse(name: &str) -> Option<CheckLevel> {
+        match name {
+            "off" => Some(CheckLevel::Off),
+            "standard" => Some(CheckLevel::Standard),
+            "strict" => Some(CheckLevel::Strict),
+            _ => None,
+        }
+    }
+
+    /// CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CheckLevel::Off => "off",
+            CheckLevel::Standard => "standard",
+            CheckLevel::Strict => "strict",
+        }
+    }
+}
+
+/// Checker configuration: level + the modelled hardware and host-data
+/// assumptions every soundness claim is relative to.
+#[derive(Debug, Clone, Copy)]
+pub struct CheckOptions {
+    /// Reporting level.
+    pub level: CheckLevel,
+    /// Device the ring/hazard passes model.
+    pub device: FpgaDevice,
+    /// Assumed maximum `|raw i16|` of host-bound data (everything the
+    /// host may write to a non-`Temp` buffer or DDR region). `None` =
+    /// the full `i16` range. Interval soundness holds for any host data
+    /// within this envelope.
+    pub host_bound: Option<i16>,
+    /// Ring-FIFO in-flight capacity override. `None` models the
+    /// paper's circular buffer at its natural depth: one slot per ring
+    /// station (global controller + every processor group).
+    pub ring_capacity: Option<usize>,
+}
+
+impl CheckOptions {
+    /// Options at `level` on the selected device, full host envelope.
+    pub fn new(level: CheckLevel) -> CheckOptions {
+        CheckOptions {
+            level,
+            device: FpgaDevice::selected(),
+            host_bound: None,
+            ring_capacity: None,
+        }
+    }
+
+    /// Model a specific device.
+    pub fn with_device(mut self, device: FpgaDevice) -> CheckOptions {
+        self.device = device;
+        self
+    }
+
+    /// Assume host data stays within `|x| ≤ bound` (raw).
+    pub fn with_host_bound(mut self, bound: i16) -> CheckOptions {
+        self.host_bound = Some(bound);
+        self
+    }
+
+    /// Override the modelled ring-FIFO capacity.
+    pub fn with_ring_capacity(mut self, capacity: usize) -> CheckOptions {
+        self.ring_capacity = Some(capacity);
+        self
+    }
+}
+
+impl Default for CheckOptions {
+    fn default() -> CheckOptions {
+        CheckOptions::new(CheckLevel::Standard)
+    }
+}
+
+/// Diagnostic severity. `Error`s are defects proven for *every*
+/// execution within the host envelope; `Warning`s flag possibility.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Severity {
+    /// Proven defect — surfaces as `Error::Check` when compiled with
+    /// checks on.
+    Error,
+    /// Advisory — collected at [`CheckLevel::Strict`] only.
+    Warning,
+}
+
+/// One typed finding, carrying the offending step, op, and worst-case
+/// bound (asserted field-exact by the golden tests in
+/// `rust/tests/analysis.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Diagnostic {
+    /// Dataflow (error): a wave reads a scratch lane no `LoadDram` or
+    /// earlier wave defined — it observes arena zero-init.
+    UndefinedRead {
+        /// Source step of the reading wave.
+        step: usize,
+        /// Opcode of the reading wave.
+        op: Opcode,
+        /// Index of the reading lane op within the wave.
+        lane_idx: usize,
+        /// Name of the buffer holding the undefined lane.
+        buf: String,
+        /// First undefined buffer lane read.
+        lane: usize,
+    },
+    /// Interval (error): under `RoundMode::Wrap` the narrowed value
+    /// range lies entirely outside `i16` — every execution within the
+    /// envelope wraps (catastrophic sign flip).
+    GuaranteedOverflow {
+        /// Source step of the wave.
+        step: usize,
+        /// Opcode.
+        op: Opcode,
+        /// Worst offending lane op.
+        lane_idx: usize,
+        /// Pre-narrow value bound `[lo, hi]`.
+        bound: (i64, i64),
+    },
+    /// Interval (warning): under `RoundMode::Wrap` the range straddles
+    /// the `i16` edge — some host data within the envelope wraps.
+    PossibleWrap {
+        /// Source step of the wave.
+        step: usize,
+        /// Opcode.
+        op: Opcode,
+        /// Worst offending lane op.
+        lane_idx: usize,
+        /// Pre-narrow value bound `[lo, hi]`.
+        bound: (i64, i64),
+    },
+    /// Interval (warning): under `RoundMode::Saturate` the range
+    /// exceeds `i16` — some host data within the envelope clamps.
+    PossibleSaturation {
+        /// Source step of the wave.
+        step: usize,
+        /// Opcode.
+        op: Opcode,
+        /// Worst offending lane op.
+        lane_idx: usize,
+        /// Pre-narrow value bound `[lo, hi]`.
+        bound: (i64, i64),
+    },
+    /// Interval (warning): a `AddrMode::Wrap` LUT is reachable with
+    /// shifted addresses outside `[-512, 511]` — the table aliases
+    /// (two's-complement wraparound of the address).
+    LutDomainExceeded {
+        /// Source step of the ACT wave.
+        step: usize,
+        /// LUT index in `Program::luts`.
+        lut: usize,
+        /// Reachable shifted-address bound `[lo, hi]`.
+        shifted: (i64, i64),
+    },
+    /// Ring (error): a wavefront injects `demand` simultaneous result
+    /// tokens but the ring FIFO holds only `capacity` — the hardware
+    /// overruns (drops data) before the controller can drain.
+    RingOverrun {
+        /// Source step of the wave.
+        step: usize,
+        /// Simultaneous per-wavefront injections (active groups).
+        demand: usize,
+        /// Modelled FIFO capacity.
+        capacity: usize,
+    },
+    /// Ring (error): the static replay stopped making progress — the
+    /// schedule cannot drain (defensive; unreachable while the
+    /// controller always pops).
+    RingDeadlock {
+        /// Source step of the wave.
+        step: usize,
+        /// Tokens still in flight when progress stopped.
+        pending: usize,
+    },
+    /// Ring (warning): the replay reached the FIFO's exact capacity —
+    /// zero headroom; any extra in-flight token would overrun.
+    RingAtCapacity {
+        /// Source step of the wave.
+        step: usize,
+        /// Peak in-flight tokens observed.
+        peak: usize,
+        /// Modelled FIFO capacity.
+        capacity: usize,
+    },
+    /// Hazard (error): the plan claims the wave's lanes independent,
+    /// but lane `lanes.0`'s write set intersects lane `lanes.1`'s
+    /// read-or-write set at `addr` — a parallel miscompile.
+    ParallelUnsound {
+        /// Source step of the wave.
+        step: usize,
+        /// (writer lane, conflicting lane).
+        lanes: (usize, usize),
+        /// Conflicting packed arena address.
+        addr: usize,
+    },
+    /// Hazard (error): the plan fused a dot→act pair whose fusion is
+    /// not semantics-preserving — a fusion miscompile.
+    FusionUnsound {
+        /// Source step of the dot wave.
+        dot_step: usize,
+        /// Source step of the act wave.
+        act_step: usize,
+        /// Why the fusion is unsound.
+        reason: &'static str,
+    },
+    /// Hazard (warning): lanes conflict, so the wave's result depends
+    /// on lane order (legal sequentially, but fragile).
+    OrderDependent {
+        /// Source step of the wave.
+        step: usize,
+        /// (earlier lane, later lane) in program order.
+        lanes: (usize, usize),
+        /// Conflicting packed arena address.
+        addr: usize,
+        /// Hazard class: `"RAW"`, `"WAR"`, or `"WAW"`.
+        hazard: &'static str,
+    },
+}
+
+impl Diagnostic {
+    /// Severity of this finding.
+    pub fn severity(&self) -> Severity {
+        match self {
+            Diagnostic::UndefinedRead { .. }
+            | Diagnostic::GuaranteedOverflow { .. }
+            | Diagnostic::RingOverrun { .. }
+            | Diagnostic::RingDeadlock { .. }
+            | Diagnostic::ParallelUnsound { .. }
+            | Diagnostic::FusionUnsound { .. } => Severity::Error,
+            Diagnostic::PossibleWrap { .. }
+            | Diagnostic::PossibleSaturation { .. }
+            | Diagnostic::LutDomainExceeded { .. }
+            | Diagnostic::RingAtCapacity { .. }
+            | Diagnostic::OrderDependent { .. } => Severity::Warning,
+        }
+    }
+
+    /// Short machine-readable kind tag (JSON / table output).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Diagnostic::UndefinedRead { .. } => "undefined-read",
+            Diagnostic::GuaranteedOverflow { .. } => "guaranteed-overflow",
+            Diagnostic::PossibleWrap { .. } => "possible-wrap",
+            Diagnostic::PossibleSaturation { .. } => "possible-saturation",
+            Diagnostic::LutDomainExceeded { .. } => "lut-domain-exceeded",
+            Diagnostic::RingOverrun { .. } => "ring-overrun",
+            Diagnostic::RingDeadlock { .. } => "ring-deadlock",
+            Diagnostic::RingAtCapacity { .. } => "ring-at-capacity",
+            Diagnostic::ParallelUnsound { .. } => "parallel-unsound",
+            Diagnostic::FusionUnsound { .. } => "fusion-unsound",
+            Diagnostic::OrderDependent { .. } => "order-dependent",
+        }
+    }
+
+    /// Source step the finding anchors to.
+    pub fn step(&self) -> usize {
+        match *self {
+            Diagnostic::UndefinedRead { step, .. }
+            | Diagnostic::GuaranteedOverflow { step, .. }
+            | Diagnostic::PossibleWrap { step, .. }
+            | Diagnostic::PossibleSaturation { step, .. }
+            | Diagnostic::LutDomainExceeded { step, .. }
+            | Diagnostic::RingOverrun { step, .. }
+            | Diagnostic::RingDeadlock { step, .. }
+            | Diagnostic::RingAtCapacity { step, .. }
+            | Diagnostic::ParallelUnsound { step, .. }
+            | Diagnostic::OrderDependent { step, .. } => step,
+            Diagnostic::FusionUnsound { dot_step, .. } => dot_step,
+        }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Diagnostic::UndefinedRead { step, op, lane_idx, buf, lane } => write!(
+                f,
+                "step {step}: {op} lane {lane_idx} reads `{buf}`[{lane}] which no \
+                 LoadDram or wave ever defined (observes arena zero-init)"
+            ),
+            Diagnostic::GuaranteedOverflow { step, op, lane_idx, bound } => write!(
+                f,
+                "step {step}: {op} lane {lane_idx} wraps for every input in the \
+                 envelope — value bound [{}, {}] lies outside i16",
+                bound.0, bound.1
+            ),
+            Diagnostic::PossibleWrap { step, op, lane_idx, bound } => write!(
+                f,
+                "step {step}: {op} lane {lane_idx} may wrap — value bound [{}, {}] \
+                 exceeds i16 under RoundMode::Wrap",
+                bound.0, bound.1
+            ),
+            Diagnostic::PossibleSaturation { step, op, lane_idx, bound } => write!(
+                f,
+                "step {step}: {op} lane {lane_idx} may saturate — value bound \
+                 [{}, {}] exceeds i16 under RoundMode::Saturate",
+                bound.0, bound.1
+            ),
+            Diagnostic::LutDomainExceeded { step, lut, shifted } => write!(
+                f,
+                "step {step}: LUT {lut} (AddrMode::Wrap) reachable with shifted \
+                 addresses [{}, {}] outside [-512, 511] — the table aliases",
+                shifted.0, shifted.1
+            ),
+            Diagnostic::RingOverrun { step, demand, capacity } => write!(
+                f,
+                "step {step}: wavefront injects {demand} simultaneous ring tokens \
+                 but the FIFO holds {capacity} — provable overrun"
+            ),
+            Diagnostic::RingDeadlock { step, pending } => write!(
+                f,
+                "step {step}: ring replay stopped draining with {pending} tokens \
+                 in flight — schedule cannot complete"
+            ),
+            Diagnostic::RingAtCapacity { step, peak, capacity } => write!(
+                f,
+                "step {step}: ring reaches its exact capacity ({peak}/{capacity} \
+                 in flight) — zero headroom"
+            ),
+            Diagnostic::ParallelUnsound { step, lanes, addr } => write!(
+                f,
+                "step {step}: plan claims lanes independent but lane {} writes \
+                 arena address {addr} that lane {} reads or writes — parallel \
+                 miscompile",
+                lanes.0, lanes.1
+            ),
+            Diagnostic::FusionUnsound { dot_step, act_step, reason } => write!(
+                f,
+                "steps {dot_step}+{act_step}: plan fused dot→act but fusion is \
+                 not semantics-preserving: {reason}"
+            ),
+            Diagnostic::OrderDependent { step, lanes, addr, hazard } => write!(
+                f,
+                "step {step}: {hazard} hazard between lanes {} and {} at arena \
+                 address {addr} — result depends on lane order",
+                lanes.0, lanes.1
+            ),
+        }
+    }
+}
+
+/// The checker's output for one program: diagnostics at the requested
+/// level plus the facts each proof rests on.
+#[derive(Debug, Clone)]
+pub struct CheckReport {
+    /// Program name.
+    pub program: String,
+    /// Level the check ran at.
+    pub level: CheckLevel,
+    /// Findings, filtered to the level (errors only at `Standard`).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Wave steps analysed.
+    pub waves: usize,
+    /// Lane ops analysed across all waves.
+    pub lane_ops: usize,
+    /// Peak simultaneous in-flight ring tokens over the whole schedule.
+    pub ring_peak: usize,
+    /// Modelled ring-FIFO capacity the proof holds against.
+    pub ring_capacity: usize,
+    /// Plan waves whose hazard certification was skipped (address-set
+    /// budget exceeded); 0 means every claim was certified.
+    pub hazard_skipped: usize,
+    /// Final per-lane value ranges per buffer (post-schedule): sound
+    /// bounds on what any execution within the host envelope leaves in
+    /// each lane. Indexed `[buf][lane] = (lo, hi)` of raw `i16` values.
+    pub ranges: Vec<Vec<(i64, i64)>>,
+}
+
+impl CheckReport {
+    /// Hard-error findings.
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity() == Severity::Error)
+    }
+
+    /// Number of hard errors.
+    pub fn error_count(&self) -> usize {
+        self.errors().count()
+    }
+
+    /// Number of warnings.
+    pub fn warning_count(&self) -> usize {
+        self.diagnostics.len() - self.error_count()
+    }
+
+    /// No findings at all (at the level the check ran at).
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Promote hard errors to a typed [`CheckError`], keeping a clean
+    /// (or warnings-only) report as `Ok`.
+    pub fn into_result(self) -> Result<CheckReport, CheckError> {
+        if self.error_count() > 0 {
+            let errors = self
+                .diagnostics
+                .iter()
+                .filter(|d| d.severity() == Severity::Error)
+                .cloned()
+                .collect();
+            Err(CheckError { program: self.program, errors })
+        } else {
+            Ok(self)
+        }
+    }
+
+    /// JSON rendering of the report (diagnostics + proof facts) for
+    /// `mfnn lint --json`.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "{{\"program\":\"{}\",\"level\":\"{}\",\"waves\":{},\"lane_ops\":{},\
+             \"ring_peak\":{},\"ring_capacity\":{},\"hazard_skipped\":{},\
+             \"errors\":{},\"warnings\":{},\"diagnostics\":[",
+            json_escape(&self.program),
+            self.level.name(),
+            self.waves,
+            self.lane_ops,
+            self.ring_peak,
+            self.ring_capacity,
+            self.hazard_skipped,
+            self.error_count(),
+            self.warning_count(),
+        ));
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"kind\":\"{}\",\"severity\":\"{}\",\"step\":{},\"message\":\"{}\"}}",
+                d.kind(),
+                match d.severity() {
+                    Severity::Error => "error",
+                    Severity::Warning => "warning",
+                },
+                d.step(),
+                json_escape(&d.to_string()),
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Hard checker failure: the program has at least one proven defect.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[error("static check of `{program}` found {} hard error(s): {}", errors.len(),
+        errors.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("; "))]
+pub struct CheckError {
+    /// Program that failed.
+    pub program: String,
+    /// The proven defects (severity `Error` only).
+    pub errors: Vec<Diagnostic>,
+}
+
+/// Run every pass over `program` and report at `opts.level`.
+///
+/// The program must already pass [`Program::check`] (structural
+/// validity); the checker assumes in-bounds views. At
+/// [`CheckLevel::Off`] no pass runs and the report is empty.
+pub fn check_program(program: &Program, opts: &CheckOptions) -> CheckReport {
+    let stations = 1 + (opts.device.mvm_groups + opts.device.actpro_groups).max(1) as usize;
+    let ring_capacity = opts.ring_capacity.unwrap_or(stations).max(1);
+    let mut report = CheckReport {
+        program: program.name.clone(),
+        level: opts.level,
+        diagnostics: Vec::new(),
+        waves: program.waves().count(),
+        lane_ops: program.total_lane_ops() as usize,
+        ring_peak: 0,
+        ring_capacity,
+        hazard_skipped: 0,
+        ranges: Vec::new(),
+    };
+    if opts.level == CheckLevel::Off {
+        return report;
+    }
+    let mut diags = Vec::new();
+    dataflow::run(program, &mut diags);
+    report.ranges = interval::run(program, opts, &mut diags);
+    report.ring_peak = ring::run(program, opts, ring_capacity, &mut diags);
+    report.hazard_skipped = hazard::run(program, &opts.device, &mut diags);
+    diags.retain(|d| opts.level == CheckLevel::Strict || d.severity() == Severity::Error);
+    diags.sort_by_key(|d| d.step());
+    report.diagnostics = diags;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parses_round_trip() {
+        for level in [CheckLevel::Off, CheckLevel::Standard, CheckLevel::Strict] {
+            assert_eq!(CheckLevel::parse(level.name()), Some(level));
+        }
+        assert_eq!(CheckLevel::parse("pedantic"), None);
+    }
+
+    #[test]
+    fn empty_program_is_clean_at_every_level() {
+        let p = Program::new("empty", crate::fixed::FixedSpec::PAPER);
+        for level in [CheckLevel::Off, CheckLevel::Standard, CheckLevel::Strict] {
+            let r = check_program(&p, &CheckOptions::new(level));
+            assert!(r.is_clean(), "{level:?}: {:?}", r.diagnostics);
+            assert!(r.clone().into_result().is_ok());
+        }
+    }
+
+    #[test]
+    fn check_error_lists_every_hard_error() {
+        let report = CheckReport {
+            program: "p".into(),
+            level: CheckLevel::Standard,
+            diagnostics: vec![
+                Diagnostic::RingOverrun { step: 3, demand: 4, capacity: 2 },
+                Diagnostic::PossibleWrap {
+                    step: 1,
+                    op: Opcode::VectorAddition,
+                    lane_idx: 0,
+                    bound: (-40000, 1),
+                },
+            ],
+            waves: 2,
+            lane_ops: 2,
+            ring_peak: 4,
+            ring_capacity: 2,
+            hazard_skipped: 0,
+            ranges: Vec::new(),
+        };
+        assert_eq!(report.error_count(), 1);
+        assert_eq!(report.warning_count(), 1);
+        let err = report.into_result().unwrap_err();
+        assert_eq!(err.errors.len(), 1);
+        assert!(err.to_string().contains("step 3"));
+    }
+
+    #[test]
+    fn json_escapes_quotes_and_lists_diagnostics() {
+        let report = CheckReport {
+            program: "a\"b".into(),
+            level: CheckLevel::Strict,
+            diagnostics: vec![Diagnostic::RingAtCapacity { step: 0, peak: 2, capacity: 2 }],
+            waves: 1,
+            lane_ops: 1,
+            ring_peak: 2,
+            ring_capacity: 2,
+            hazard_skipped: 0,
+            ranges: Vec::new(),
+        };
+        let j = report.to_json();
+        assert!(j.contains("a\\\"b"));
+        assert!(j.contains("\"kind\":\"ring-at-capacity\""));
+        assert!(j.contains("\"severity\":\"warning\""));
+    }
+}

@@ -1,0 +1,170 @@
+//! Pass 3: ring-FIFO safety.
+//!
+//! The paper's circular FIFO (§4, Fig 4) distributes microcodes to the
+//! processor groups and collects their results; a schedule whose
+//! simultaneous result injections exceed the FIFO's bounded capacity
+//! overruns it on hardware. This pass replays the program's
+//! result-return schedule on the actual [`RingFifo`] model.
+//!
+//! The schedule is wavefront-synchronous: a wave over `L` lane ops
+//! activates `used = min(groups, ceil(L / PROCS_PER_GROUP))` groups
+//! (exactly [`Program::encode`]'s group assignment — MVM groups for
+//! MVM opcodes, ACTPRO groups for activations), and every wavefront
+//! ends with each active group injecting one result token towards the
+//! global controller (station 0), which drains the ring completely
+//! before the next wavefront issues. All wavefronts of a wave are
+//! identical, so replaying one per wave covers the whole schedule.
+//!
+//! Proof obligations:
+//! - **No overrun** ([`Diagnostic::RingOverrun`], error): every
+//!   wavefront's `used` simultaneous injections fit the capacity. The
+//!   replay detects this as actual [`RingFifo::push`] backpressure.
+//! - **No deadlock** ([`Diagnostic::RingDeadlock`], error): each
+//!   wavefront's tokens all reach station 0 within `worst_latency()`
+//!   clocks — completion of the replay is the proof; the diagnostic is
+//!   defensive (unreachable while the controller always pops).
+//! - **Headroom** ([`Diagnostic::RingAtCapacity`], warning): the peak
+//!   in-flight count never *equals* the capacity, so one straggling
+//!   token cannot tip the schedule into backpressure.
+
+use crate::assembler::program::{Program, Step};
+use crate::hw::fifo::RingFifo;
+use crate::hw::PROCS_PER_GROUP;
+use crate::isa::Opcode;
+
+use super::{CheckOptions, Diagnostic};
+
+/// Replay the schedule; returns the peak in-flight token count.
+pub(super) fn run(
+    program: &Program,
+    opts: &CheckOptions,
+    capacity: usize,
+    diags: &mut Vec<Diagnostic>,
+) -> usize {
+    let mvm = opts.device.mvm_groups as usize;
+    let actpro = opts.device.actpro_groups as usize;
+    let stations = 1 + (mvm + actpro).max(1);
+    let mut fifo: RingFifo<usize> = RingFifo::new(stations, capacity);
+    let mut peak = 0usize;
+    let mut at_capacity_step: Option<usize> = None;
+
+    for (si, step) in program.steps.iter().enumerate() {
+        let Step::Wave(w) = step else { continue };
+        if w.op == Opcode::Nop {
+            continue;
+        }
+        // Group assignment mirrors Program::encode exactly.
+        let (groups, first_station) = if w.op.is_mvm() {
+            (mvm, 1)
+        } else {
+            (actpro, 1 + mvm)
+        };
+        let used = groups.min(w.lanes.len().div_ceil(PROCS_PER_GROUP)).max(1);
+
+        // One representative wavefront: every active group injects its
+        // result token towards the controller.
+        let mut overran = false;
+        for g in 0..used {
+            let station = (first_station + g).min(stations - 1);
+            if fifo.push(station, 0, si).is_err() {
+                diags.push(Diagnostic::RingOverrun { step: si, demand: used, capacity });
+                overran = true;
+                break;
+            }
+            peak = peak.max(fifo.in_flight_len());
+        }
+        if peak >= capacity && at_capacity_step.is_none() && !overran {
+            at_capacity_step = Some(si);
+        }
+
+        // Controller drains before the next wavefront. Every clock moves
+        // every token one hop, so this terminates within worst_latency().
+        let mut clocks = 0usize;
+        loop {
+            while fifo.pop(0).is_some() {}
+            if fifo.in_flight_len() == 0 {
+                break;
+            }
+            if clocks > fifo.worst_latency() {
+                diags.push(Diagnostic::RingDeadlock { step: si, pending: fifo.in_flight_len() });
+                return peak;
+            }
+            fifo.clock();
+            clocks += 1;
+        }
+        while fifo.pop(0).is_some() {}
+    }
+
+    if let Some(step) = at_capacity_step {
+        diags.push(Diagnostic::RingAtCapacity { step, peak, capacity });
+    }
+    peak
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{CheckLevel, CheckOptions};
+    use crate::assembler::program::{BufKind, LaneOp, View, Wave};
+    use crate::fixed::FixedSpec;
+
+    /// A single-wave program with `lanes` parallel one-lane additions.
+    fn wide_program(lanes: usize) -> Program {
+        let mut p = Program::new("ring", FixedSpec::PAPER);
+        let x = p.buffer("x", lanes, 1, BufKind::Input);
+        let o = p.buffer("o", lanes, 1, BufKind::Output);
+        let lane_ops = (0..lanes)
+            .map(|i| LaneOp {
+                a: View::contiguous(x, i, 1),
+                b: Some(View::contiguous(x, i, 1)),
+                out: View::contiguous(o, i, 1),
+            })
+            .collect();
+        p.steps.push(Step::Wave(Wave {
+            op: crate::isa::Opcode::VectorAddition,
+            vec_len: 1,
+            lut: None,
+            lanes: lane_ops,
+        }));
+        p
+    }
+
+    #[test]
+    fn natural_capacity_is_always_safe() {
+        // used ≤ max groups < stations = natural capacity, so the widest
+        // possible wave still fits with headroom.
+        let p = wide_program(64 * PROCS_PER_GROUP);
+        let opts = CheckOptions::new(CheckLevel::Strict);
+        let stations =
+            1 + (opts.device.mvm_groups + opts.device.actpro_groups) as usize;
+        let mut diags = Vec::new();
+        let peak = run(&p, &opts, stations, &mut diags);
+        assert!(diags.is_empty(), "{diags:?}");
+        assert_eq!(peak, opts.device.mvm_groups as usize);
+    }
+
+    #[test]
+    fn undersized_fifo_is_a_proven_overrun() {
+        let p = wide_program(4 * PROCS_PER_GROUP); // 4 active MVM groups
+        let opts = CheckOptions::new(CheckLevel::Strict).with_ring_capacity(2);
+        let mut diags = Vec::new();
+        run(&p, &opts, 2, &mut diags);
+        assert_eq!(
+            diags,
+            vec![Diagnostic::RingOverrun { step: 0, demand: 4, capacity: 2 }]
+        );
+    }
+
+    #[test]
+    fn exact_fit_warns_about_zero_headroom() {
+        let p = wide_program(3 * PROCS_PER_GROUP); // 3 active MVM groups
+        let opts = CheckOptions::new(CheckLevel::Strict);
+        let mut diags = Vec::new();
+        let peak = run(&p, &opts, 3, &mut diags);
+        assert_eq!(peak, 3);
+        assert_eq!(
+            diags,
+            vec![Diagnostic::RingAtCapacity { step: 0, peak: 3, capacity: 3 }]
+        );
+    }
+}

@@ -61,7 +61,7 @@ pub use fast::FastSim;
 pub use fpga::FpgaDevice;
 pub use machine::{MatrixMachine, RunStats};
 pub use memplan::{Interval, MemPlan, PlanError};
-pub use plan::{ExecPlan, PlanState};
+pub use plan::{ExecPlan, PlanState, WaveClaim};
 
 /// Simulated clock cycle count.
 pub type Cycle = u64;

@@ -151,6 +151,19 @@ enum PlanStep {
     Wave(PlanWave),
 }
 
+/// One optimisation claim the plan makes about a source wave — what the
+/// static checker's hazard oracle certifies independently
+/// (`analysis::hazard`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WaveClaim {
+    /// Index of the originating step in the source [`Program`].
+    pub src_step: usize,
+    /// The plan fused this dot with the following activation wave.
+    pub fused: bool,
+    /// The plan claims the lanes independent (worker-pool eligible).
+    pub parallel: bool,
+}
+
 /// Mutable run state of a plan: the lane arena + LUT residency.
 ///
 /// Cheap to clone; several states may execute against one shared plan.
@@ -633,6 +646,22 @@ impl ExecPlan {
     /// Number of waves whose lanes were proven independent.
     pub fn parallel_waves(&self) -> usize {
         self.parallel_waves
+    }
+
+    /// The fusion/parallelism claims made per compiled wave, keyed by
+    /// source step — consumed by the static hazard oracle.
+    pub fn wave_claims(&self) -> Vec<WaveClaim> {
+        self.steps
+            .iter()
+            .filter_map(|s| match s {
+                PlanStep::Wave(w) => Some(WaveClaim {
+                    src_step: w.src_step,
+                    fused: w.waves == 2,
+                    parallel: w.parallel,
+                }),
+                _ => None,
+            })
+            .collect()
     }
 
     /// Worker-pool width (including the calling thread).

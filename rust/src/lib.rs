@@ -21,10 +21,15 @@
 //! The [`testkit`] module is the differential-fuzzing and deterministic
 //! fault-injection harness that generates scenarios and proves all five
 //! simulator fidelity levels agree (`mfnn fuzz`; DESIGN.md §Testing).
+//! The [`analysis`] module is the static program checker: lane-granular
+//! dataflow, fixed-point interval analysis, ring-FIFO safety proofs,
+//! and a hazard oracle over every compiled program (`mfnn lint`;
+//! DESIGN.md §Static analysis).
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index mapping
 //! every table/figure of the paper to modules and benches.
 
+pub mod analysis;
 pub mod asm;
 pub mod assembler;
 pub mod bench;
@@ -48,6 +53,7 @@ pub mod session;
 pub mod testkit;
 pub mod util;
 
+pub use analysis::{CheckLevel, CheckOptions, CheckReport};
 pub use serve::{ServeConfig, ServeFaultPlan, Server, SubmitOptions};
 pub use cluster::{RecoveryPolicy, TrainCheckpoint};
 pub use session::{

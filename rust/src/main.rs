@@ -8,6 +8,7 @@
 //! mfnn serve-sim [--requests N] [--seed S] [--nets M] [--boards B] [--max-batch K]
 //!                [--chaos] [--fault-seed S] [--check-determinism]
 //! mfnn fuzz      [--cases N] [--seed S] [--corpus FILE] [--plant-divergence]
+//! mfnn lint      [net.nnasm] [--device P] [--batch N] [--level L] [--bound B] [--json]
 //! mfnn plan      [--device P] [--batch N] [--report] [--out FILE]
 //! mfnn tables    [--which t2|t3|t8|alloc|perf|all]
 //! mfnn traces
@@ -53,6 +54,7 @@ fn main() -> ExitCode {
         "train" => cmd_train(&rest),
         "serve-sim" => cmd_serve_sim(&rest),
         "fuzz" => cmd_fuzz(&rest),
+        "lint" => cmd_lint(&rest),
         "plan" => cmd_plan(&rest),
         "tables" => cmd_tables(&rest),
         "traces" => cmd_traces(&rest),
@@ -81,6 +83,7 @@ fn usage() -> String {
          \x20 train    <cfg.toml>    run a training cluster from a launcher config\n\
          \x20 serve-sim              drive the batched serving runtime with synthetic load\n\
          \x20 fuzz                   differential-fuzz every simulator fidelity level\n\
+         \x20 lint                   static program checker: dataflow, ranges, ring, hazards\n\
          \x20 plan                   static memory-planner report: packed vs planned BRAM per net\n\
          \x20 tables                 regenerate the paper's tables (2,3,8,alloc,perf)\n\
          \x20 traces                 print the Fig 7/8/10 timing diagrams\n\
@@ -540,11 +543,11 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
 
 fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
     let spec = Spec::new()
-        .opt("cases", "generated cases per family (net, graph, program, fault, recovery, serve-chaos, memplan)", Some("64"))
+        .opt("cases", "generated cases per family (net, graph, program, fault, recovery, serve-chaos, memplan, check)", Some("64"))
         .opt("seed", "base seed (case i runs at seed + i·φ; case 0 = seed)", Some("0"))
         .opt("device", "FPGA part every level simulates", Some("XC7S75-2"))
         .opt("corpus", "replay `family seed` lines from this snapshot file", None)
-        .opt("family", "restrict to one family: net|graph|program|fault|recovery|serve-chaos|memplan", None)
+        .opt("family", "restrict to one family: net|graph|program|fault|recovery|serve-chaos|memplan|check", None)
         .opt("failures-out", "write failing seeds here (corpus format)", Some("FUZZ_FAILURES.txt"))
         .opt("max-shrink", "shrink-step budget per failure", Some("100"))
         .opt("sync", "force one weight-sync policy on every cluster case: star|ring|bounded-stale[:N]", None)
@@ -560,7 +563,7 @@ fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
         Some(f) => Some(
             mfnn::testkit::Family::parse(f)
                 .ok_or(format!(
-                    "unknown family {f:?} (net|graph|program|fault|recovery|serve-chaos|memplan)"
+                    "unknown family {f:?} (net|graph|program|fault|recovery|serve-chaos|memplan|check)"
                 ))?,
         ),
         None => None,
@@ -610,6 +613,88 @@ fn cmd_fuzz(rest: &[String]) -> Result<(), String> {
             "{} divergence(s); failing seeds written to {out}",
             report.failures.len()
         ));
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------------- lint
+
+fn cmd_lint(rest: &[String]) -> Result<(), String> {
+    use mfnn::analysis::{check_program, CheckLevel, CheckOptions};
+    let spec = Spec::new()
+        .opt("device", "FPGA part the ring/hazard passes model", Some("XC7S75-2"))
+        .opt("batch", "batch size the golden nets are lowered at", Some("8"))
+        .opt("level", "diagnostic level: standard (errors only) | strict (+warnings)", Some("standard"))
+        .opt("bound", "assumed max |host-bound lane value| for the interval pass", None)
+        .flag("json", "emit machine-readable JSON reports instead of the table")
+        .pos("net", "assembly source (.nnasm); omit to sweep the golden specs", false);
+    let args = parse_or_help(
+        &spec,
+        rest,
+        "mfnn lint",
+        "Static program checker: lane dataflow, fixed-point ranges, ring-FIFO \
+         safety, hazard oracle (DESIGN.md §Static analysis)",
+    )?;
+    let part = device_arg(&args)?;
+    let batch: usize = args.parse_or("batch", 8).map_err(|e| e.to_string())?;
+    let level_name = args.str_or("level", "standard");
+    let level = CheckLevel::parse(&level_name)
+        .ok_or(format!("unknown level {level_name:?} (off|standard|strict)"))?;
+    let mut copts = CheckOptions::new(level).with_device(FpgaDevice::new(part));
+    if let Some(b) = args.get("bound") {
+        let bound: i16 = b.parse().map_err(|e| format!("--bound {b:?}: {e}"))?;
+        copts = copts.with_host_bound(bound);
+    }
+    let programs = match args.positional("net") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            let nets = lower_file(&text).map_err(|e| e.to_string())?;
+            nets.into_iter().map(|n| n.mlp.program).collect()
+        }
+        None => plan_programs(batch)?,
+    };
+    let reports: Vec<_> = programs.iter().map(|p| check_program(p, &copts)).collect();
+    if args.flag("json") {
+        let body: Vec<String> = reports.iter().map(|r| r.to_json()).collect();
+        println!("[{}]", body.join(","));
+    } else {
+        let mut t = Table::new(vec![
+            "program",
+            "waves",
+            "lane ops",
+            "errors",
+            "warnings",
+            "ring peak/cap",
+        ])
+        .with_title(format!(
+            "static checker on {} at level {}, batch {batch}",
+            part.name,
+            level.name()
+        ))
+        .numeric();
+        for r in &reports {
+            t.row(vec![
+                r.program.clone(),
+                r.waves.to_string(),
+                r.lane_ops.to_string(),
+                r.error_count().to_string(),
+                r.warning_count().to_string(),
+                format!("{}/{}", r.ring_peak, r.ring_capacity),
+            ]);
+        }
+        print!("{}", t.render());
+        for r in &reports {
+            for d in &r.diagnostics {
+                println!("  {:?} {}: {d}", d.severity(), r.program);
+            }
+        }
+    }
+    let total: usize = reports.iter().map(|r| r.diagnostics.len()).sum();
+    if total > 0 {
+        return Err(format!("{total} diagnostic(s) at level {}", level.name()));
+    }
+    if !args.flag("json") {
+        println!("{} program(s) clean at level {} ✓", reports.len(), level.name());
     }
     Ok(())
 }

@@ -12,6 +12,7 @@
 //! `(net, device)` pair reuses the cached plan instead of rebuilding it.
 
 use super::error::Error;
+use crate::analysis::CheckReport;
 use crate::assembler::program::{BufId, BufKind, Program, SymbolTable};
 use crate::fixed::FixedSpec;
 use crate::hw::machine::MachineError;
@@ -237,6 +238,11 @@ pub struct Artifact {
     /// variant wraps the artifact's own forward program; other buckets
     /// lower lazily on first use.
     forward_variants: Mutex<HashMap<usize, Arc<ForwardVariant>>>,
+    /// Static-checker reports, one per compiled program (forward, then
+    /// train), when the artifact was compiled with
+    /// `CompileOptions::with_checks` at a level above `Off`. Empty
+    /// otherwise (including `compile_asm`/`compile_program` artifacts).
+    checks: Vec<CheckReport>,
 }
 
 impl std::fmt::Debug for Artifact {
@@ -268,7 +274,23 @@ impl Artifact {
             symbols,
             plans: Mutex::new(HashMap::new()),
             forward_variants: Mutex::new(HashMap::new()),
+            checks: Vec::new(),
         }
+    }
+
+    /// Attach the static-checker reports gathered at compile time
+    /// (compiler-internal; called before the artifact is shared).
+    pub(crate) fn with_check_reports(mut self, checks: Vec<CheckReport>) -> Artifact {
+        self.checks = checks;
+        self
+    }
+
+    /// The static-checker reports attached at compile time — one per
+    /// compiled program (forward first, then the training program), in
+    /// the order the checker ran. Empty when compiled at
+    /// [`crate::analysis::CheckLevel::Off`] (the default).
+    pub fn check_reports(&self) -> &[CheckReport] {
+        &self.checks
     }
 
     /// Fingerprint used to tag [`TensorHandle`]s.

@@ -8,6 +8,7 @@
 
 use super::artifact::{Artifact, NetInfo, NetSpec, Payload};
 use super::error::Error;
+use crate::analysis::{check_program, CheckLevel, CheckOptions, CheckReport};
 use crate::asm::lower_file;
 use crate::assembler::program::Program;
 use crate::hw::memplan::MemPlan;
@@ -40,11 +41,23 @@ pub struct CompileOptions {
     /// per-layer requirement (never widened) within the given max-abs
     /// output-error budget. MLP specs only — graph compiles reject it.
     pub precision_search: Option<f64>,
+    /// Run the static program checker (DESIGN.md §Static analysis) over
+    /// every lowered program: hard errors abort the compile as
+    /// [`Error::Check`]; the per-program [`crate::analysis::CheckReport`]s
+    /// attach to the artifact ([`Artifact::check_reports`]). `Off` (the
+    /// default) skips the checker entirely.
+    pub checks: CheckLevel,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        CompileOptions { batch: 16, lr: None, memory_plan: false, precision_search: None }
+        CompileOptions {
+            batch: 16,
+            lr: None,
+            memory_plan: false,
+            precision_search: None,
+            checks: CheckLevel::Off,
+        }
     }
 }
 
@@ -69,6 +82,12 @@ impl CompileOptions {
     /// output error.
     pub fn with_precision_search(mut self, budget: f64) -> CompileOptions {
         self.precision_search = Some(budget);
+        self
+    }
+
+    /// Same options with the static program checker at `level`.
+    pub fn with_checks(mut self, level: CheckLevel) -> CompileOptions {
+        self.checks = level;
         self
     }
 
@@ -211,11 +230,12 @@ impl Compiler {
         spec.check()?;
         // Exact structural key — no hash collisions, cheap at this scale.
         let key = format!(
-            "spec::{spec:?}::batch={}::lr={:?}::plan={}::prec={:?}",
+            "spec::{spec:?}::batch={}::lr={:?}::plan={}::prec={:?}::checks={:?}",
             opts.batch,
             opts.lr.map(f64::to_bits),
             opts.memory_plan,
-            opts.precision_search.map(f64::to_bits)
+            opts.precision_search.map(f64::to_bits),
+            opts.checks
         );
         if let Some(hit) = self.net_cache.lock().expect("cache poisoned").get(&key) {
             return Ok(Arc::clone(hit));
@@ -232,17 +252,22 @@ impl Compiler {
             None => None,
         };
         self.check_board_fit(opts, &forward.program, train.as_ref().map(|t| &t.program))?;
-        let artifact = Arc::new(Artifact::new(
-            key.clone(),
-            Payload::Net(NetInfo {
-                spec: NetSpec::Mlp(spec),
-                batch: opts.batch,
-                lr: opts.lr,
-                forward,
-                train,
-                memory_plan: opts.memory_plan,
-            }),
-        ));
+        let reports =
+            self.run_checks(opts, &forward.program, train.as_ref().map(|t| &t.program))?;
+        let artifact = Arc::new(
+            Artifact::new(
+                key.clone(),
+                Payload::Net(NetInfo {
+                    spec: NetSpec::Mlp(spec),
+                    batch: opts.batch,
+                    lr: opts.lr,
+                    forward,
+                    train,
+                    memory_plan: opts.memory_plan,
+                }),
+            )
+            .with_check_reports(reports),
+        );
         self.net_cache
             .lock()
             .expect("cache poisoned")
@@ -268,10 +293,11 @@ impl Compiler {
             });
         }
         let key = format!(
-            "graph::{spec:?}::batch={}::lr={:?}::plan={}",
+            "graph::{spec:?}::batch={}::lr={:?}::plan={}::checks={:?}",
             opts.batch,
             opts.lr.map(f64::to_bits),
-            opts.memory_plan
+            opts.memory_plan,
+            opts.checks
         );
         if let Some(hit) = self.net_cache.lock().expect("cache poisoned").get(&key) {
             return Ok(Arc::clone(hit));
@@ -282,17 +308,22 @@ impl Compiler {
             None => None,
         };
         self.check_board_fit(opts, &forward.program, train.as_ref().map(|t| &t.program))?;
-        let artifact = Arc::new(Artifact::new(
-            key.clone(),
-            Payload::Net(NetInfo {
-                spec: NetSpec::Graph(spec.clone()),
-                batch: opts.batch,
-                lr: opts.lr,
-                forward,
-                train,
-                memory_plan: opts.memory_plan,
-            }),
-        ));
+        let reports =
+            self.run_checks(opts, &forward.program, train.as_ref().map(|t| &t.program))?;
+        let artifact = Arc::new(
+            Artifact::new(
+                key.clone(),
+                Payload::Net(NetInfo {
+                    spec: NetSpec::Graph(spec.clone()),
+                    batch: opts.batch,
+                    lr: opts.lr,
+                    forward,
+                    train,
+                    memory_plan: opts.memory_plan,
+                }),
+            )
+            .with_check_reports(reports),
+        );
         self.net_cache
             .lock()
             .expect("cache poisoned")
@@ -319,6 +350,28 @@ impl Compiler {
             MemPlan::fit(t, part)?;
         }
         Ok(())
+    }
+
+    /// Run the static checker (DESIGN.md §Static analysis) over every
+    /// lowered program when `opts.checks` is above `Off`. Hard errors
+    /// (proven defects) abort the compile as [`Error::Check`]; clean or
+    /// warnings-only reports attach to the artifact in forward-then-train
+    /// order.
+    fn run_checks(
+        &self,
+        opts: &CompileOptions,
+        forward: &Program,
+        train: Option<&Program>,
+    ) -> Result<Vec<CheckReport>, Error> {
+        if opts.checks == CheckLevel::Off {
+            return Ok(Vec::new());
+        }
+        let copts = CheckOptions::new(opts.checks);
+        let mut reports = vec![check_program(forward, &copts).into_result()?];
+        if let Some(t) = train {
+            reports.push(check_program(t, &copts).into_result()?);
+        }
+        Ok(reports)
     }
 
     /// Wrap a raw vector [`Program`] (validated) in an artifact: tensor

@@ -60,6 +60,13 @@ pub enum Error {
     /// admission/config errors — see [`crate::serve::ServeError`]).
     #[error(transparent)]
     Serve(#[from] crate::serve::ServeError),
+    /// The static program checker proved a defect in a compiled program
+    /// (undefined-lane read, guaranteed fixed-point overflow, ring-FIFO
+    /// overrun, or an unsound plan claim — see
+    /// [`crate::analysis::CheckError`]). Raised when compiling with
+    /// [`crate::analysis::CheckLevel`] above `Off`.
+    #[error(transparent)]
+    Check(#[from] crate::analysis::CheckError),
     /// Tensor name not found in the artifact's symbol table (`hint` is
     /// the pre-rendered ", did you mean …?" suffix, possibly empty).
     #[error("unknown tensor {name:?} in artifact {artifact:?}{hint}")]

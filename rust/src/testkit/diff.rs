@@ -19,9 +19,10 @@
 //! between the fused and unfused plans.
 
 use super::gen::{
-    FaultCase, FuzzCase, GraphCase, MemplanCase, NetCase, ProgramCase, RecoveryCase,
-    ServeChaosCase,
+    CheckCase, CheckDefect, FaultCase, FuzzCase, GraphCase, MemplanCase, NetCase, ProgramCase,
+    RecoveryCase, ServeChaosCase,
 };
+use crate::analysis::{check_program, CheckLevel, CheckOptions};
 use crate::assembler::program::{BufKind, Step};
 use crate::cluster::cost::SyncPolicy;
 use crate::cluster::fault::FaultPlan;
@@ -55,6 +56,9 @@ pub enum Level {
     Serve,
     /// Memory-planner differential: planned vs packed `ExecPlan` layout.
     MemPlan,
+    /// Static-checker differential: planted defects caught, clean
+    /// programs executed within the certified value ranges.
+    Check,
 }
 
 impl std::fmt::Display for Level {
@@ -67,6 +71,7 @@ impl std::fmt::Display for Level {
             Level::Cluster => "cluster",
             Level::Serve => "serve",
             Level::MemPlan => "memplan",
+            Level::Check => "check",
         })
     }
 }
@@ -1040,6 +1045,89 @@ impl Differ {
                     ),
                 ));
             }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------- checker
+
+    /// Static-checker differential (DESIGN.md §Static analysis).
+    ///
+    /// Planted-defect cases: the checker at [`CheckLevel::Strict`] must
+    /// flag the planted diagnostic kind — a miss is a checker soundness
+    /// bug (the defect provably exists by construction).
+    ///
+    /// Clean cases: the checker at [`CheckLevel::Standard`] (host
+    /// envelope matching the generator's ±6000 bindings) must report
+    /// zero diagnostics — a finding is a false positive — and the
+    /// program must then agree across every raw-program fidelity level
+    /// with every final lane value inside the checker's certified
+    /// `[lo, hi]` range (interval soundness against real execution).
+    pub fn run_check(&self, c: &CheckCase) -> Result<(), Divergence> {
+        if let CheckDefect::Clean(pc) = &c.defect {
+            let (p, binds) = pc.build();
+            p.check()
+                .map_err(|e| fail(Level::Check, format!("generated program invalid: {e}")))?;
+            let opts = CheckOptions::new(CheckLevel::Standard)
+                .with_device(self.device)
+                .with_host_bound(6000);
+            let report = check_program(&p, &opts);
+            if !report.is_clean() {
+                return Err(fail(
+                    Level::Check,
+                    format!("false positive on clean program: {}", report.diagnostics[0]),
+                ));
+            }
+            // Cross-level agreement on the same case.
+            self.run_program(pc)?;
+            // Interval soundness: execute and compare against the
+            // certified final ranges.
+            let mut sim = FastSim::new(&p);
+            for (id, data) in &binds {
+                sim.set_buffer(*id, data);
+            }
+            for step in &p.steps {
+                if let Step::Wave(w) = step {
+                    sim.exec_wave(&p, w);
+                }
+            }
+            for (b, ranges) in report.ranges.iter().enumerate() {
+                for (i, (&v, r)) in sim.buffer(b).iter().zip(ranges).enumerate() {
+                    if (v as i64) < r.0 || (v as i64) > r.1 {
+                        return Err(fail(
+                            Level::Check,
+                            format!(
+                                "interval unsound: buffer {b} lane {i} = {v} outside \
+                                 certified [{}, {}]",
+                                r.0, r.1
+                            ),
+                        ));
+                    }
+                }
+            }
+            return Ok(());
+        }
+        let (p, expect, cap) = c.build_planted();
+        p.check()
+            .map_err(|e| fail(Level::Check, format!("planted program invalid: {e}")))?;
+        let mut opts = CheckOptions::new(CheckLevel::Strict).with_device(self.device);
+        if let Some(cap) = cap {
+            opts = opts.with_ring_capacity(cap);
+        }
+        let report = check_program(&p, &opts);
+        if !report.diagnostics.iter().any(|d| d.kind() == expect) {
+            return Err(fail(
+                Level::Check,
+                format!(
+                    "planted `{expect}` NOT caught; checker reported: [{}]",
+                    report
+                        .diagnostics
+                        .iter()
+                        .map(|d| d.kind().to_string())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ),
+            ));
         }
         Ok(())
     }

@@ -28,7 +28,7 @@ pub fn case_seed(base: u64, index: usize) -> u64 {
     base.wrapping_add((index as u64).wrapping_mul(SEED_STRIDE))
 }
 
-/// The seven generated case families.
+/// The eight generated case families.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Family {
     /// [`gen::FuzzCase`]: forward + training + cluster levels.
@@ -54,11 +54,15 @@ pub enum Family {
     /// be behaviour-invisible — bit-identical outputs, identical
     /// `RunStats`, planned arena never larger than the packed one.
     Memplan,
+    /// [`gen::CheckCase`]: the static checker must catch every planted
+    /// defect and pass clean programs, whose execution must then stay
+    /// inside the certified value ranges.
+    Check,
 }
 
 impl Family {
     /// All families, in execution order.
-    pub const ALL: [Family; 7] = [
+    pub const ALL: [Family; 8] = [
         Family::Net,
         Family::Graph,
         Family::Program,
@@ -66,6 +70,7 @@ impl Family {
         Family::Recovery,
         Family::ServeChaos,
         Family::Memplan,
+        Family::Check,
     ];
 
     /// Stable name used in corpus/failure files.
@@ -78,6 +83,7 @@ impl Family {
             Family::Recovery => "recovery",
             Family::ServeChaos => "serve-chaos",
             Family::Memplan => "memplan",
+            Family::Check => "check",
         }
     }
 
@@ -91,6 +97,7 @@ impl Family {
             "recovery" => Some(Family::Recovery),
             "serve-chaos" => Some(Family::ServeChaos),
             "memplan" => Some(Family::Memplan),
+            "check" => Some(Family::Check),
             _ => None,
         }
     }
@@ -117,7 +124,7 @@ pub struct FuzzOptions {
     pub max_shrink_steps: usize,
     /// Re-run each failure's seed to confirm it reproduces.
     pub check_reproduction: bool,
-    /// Restrict the run to one family (`None` = all seven) —
+    /// Restrict the run to one family (`None` = all eight) —
     /// `mfnn fuzz --family recovery`, `--family serve-chaos`, and
     /// `--family memplan` are the CI recovery, chaos, and
     /// memory-planner smokes.
@@ -265,6 +272,7 @@ pub fn run_case(differ: &Differ, family: Family, seed: u64) -> Result<(), Diverg
         Family::Recovery => differ.run_recovery(&gen::recovery_case().sample(&mut rng)),
         Family::ServeChaos => differ.run_serve_chaos(&gen::serve_chaos_case().sample(&mut rng)),
         Family::Memplan => differ.run_memplan(&gen::memplan_case().sample(&mut rng)),
+        Family::Check => differ.run_check(&gen::check_case().sample(&mut rng)),
     }
 }
 
@@ -373,6 +381,11 @@ fn fuzz_one(
                 differ.run_memplan(c)
             })
         }
+        Family::Check => {
+            fuzz_family(opts, family, case_index, seed, &gen::check_case(), |c| {
+                differ.run_check(c)
+            })
+        }
     };
     failures.extend(failure);
 }
@@ -416,7 +429,7 @@ pub fn parse_corpus(text: &str) -> Result<Vec<(Family, u64)>, String> {
             .ok_or_else(|| {
                 format!(
                     "line {}: expected \
-                     `net|graph|program|fault|recovery|serve-chaos|memplan <seed>`",
+                     `net|graph|program|fault|recovery|serve-chaos|memplan|check <seed>`",
                     ln + 1
                 )
             })?;
@@ -473,7 +486,7 @@ mod tests {
     #[test]
     fn corpus_parses_tags_seeds_and_comments() {
         let text = "# comment\n\nnet 12  # trailing\nprogram 0\nfault 99\nrecovery 7\n\
-                    serve-chaos 3\ngraph 5\nmemplan 8\n";
+                    serve-chaos 3\ngraph 5\nmemplan 8\ncheck 4\n";
         let entries = parse_corpus(text).unwrap();
         assert_eq!(
             entries,
@@ -484,7 +497,8 @@ mod tests {
                 (Family::Recovery, 7),
                 (Family::ServeChaos, 3),
                 (Family::Graph, 5),
-                (Family::Memplan, 8)
+                (Family::Memplan, 8),
+                (Family::Check, 4)
             ]
         );
         assert!(parse_corpus("bogus 1").is_err());

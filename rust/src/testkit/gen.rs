@@ -24,6 +24,9 @@
 //! * [`MemplanCase`] — a [`NetCase`] or [`GraphCase`] run with the
 //!   static memory planner on vs off: outputs and `RunStats` must be
 //!   bit-identical and the planned arena never larger.
+//! * [`CheckCase`] — a program with one planted defect the static
+//!   checker must flag, or a clean [`ProgramCase`] it must pass and
+//!   whose execution must stay inside the certified value ranges.
 //!
 //! Every generator pairs a structured shrinker so a divergence shrinks
 //! toward the minimal failing case (fewer layers, dim 1, batch 1, one
@@ -636,6 +639,168 @@ fn shrink_program_case(c: &ProgramCase) -> Vec<ProgramCase> {
 /// Generator for [`ProgramCase`].
 pub fn program_case() -> Gen<ProgramCase> {
     Gen::new(sample_program_case, shrink_program_case)
+}
+
+// ------------------------------------------------------ checker scenarios
+
+/// The defect a [`CheckCase`] plants — or `Clean`, wrapping a sampled
+/// [`ProgramCase`] that must produce zero diagnostics and then execute
+/// within the checker's certified per-lane ranges.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CheckDefect {
+    /// A wave reads a scratch (`BufKind::Temp`) lane nothing ever
+    /// defined — the checker must flag `undefined-read`.
+    UndefinedRead,
+    /// A wrapping add of two large constants whose sum lies entirely
+    /// outside `i16` — the checker must flag `guaranteed-overflow`.
+    Overflow,
+    /// A wavefront demanding more simultaneous ring slots than the
+    /// modelled FIFO capacity — the checker must flag `ring-overrun`.
+    RingOverrun,
+    /// One wave whose second lane reads the first lane's output —
+    /// the checker must flag `order-dependent` (RAW) at
+    /// [`crate::analysis::CheckLevel::Strict`].
+    Hazard,
+    /// No defect planted.
+    Clean(ProgramCase),
+}
+
+/// A generated static-checker scenario (DESIGN.md §Static analysis):
+/// planted defects MUST be flagged (catch rate 100%), clean programs
+/// MUST check clean at `Standard` and then run — at every raw-program
+/// fidelity level — with every final lane inside the checker's
+/// certified range.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckCase {
+    /// Case seed (sizes the planted programs).
+    pub seed: u64,
+    /// What this case plants.
+    pub defect: CheckDefect,
+}
+
+impl CheckCase {
+    /// Materialise a planted-defect program: `(program, expected
+    /// diagnostic kind, ring-capacity override)`. Panics on `Clean`
+    /// (clean cases run through [`ProgramCase::build`]).
+    pub fn build_planted(&self) -> (Program, &'static str, Option<usize>) {
+        let mut r = Rng::new(self.seed);
+        let n = 2 + r.gen_range(14) as usize; // 2..=15 lanes per buffer
+        match self.defect {
+            CheckDefect::UndefinedRead => {
+                let mut p = Program::new("planted_undefined_read", FixedSpec::PAPER);
+                let t = p.buffer("scratch", n, 1, BufKind::Temp);
+                let o = p.buffer("out", n, 1, BufKind::Output);
+                p.steps.push(Step::Wave(Wave {
+                    op: Opcode::VectorAddition,
+                    vec_len: n,
+                    lut: None,
+                    lanes: vec![LaneOp {
+                        a: View::all(t, n),
+                        b: Some(View::all(t, n)),
+                        out: View::all(o, n),
+                    }],
+                }));
+                (p, "undefined-read", None)
+            }
+            CheckDefect::Overflow => {
+                // Wrap-mode adds don't rescale: big+big ∈ [50000, 63998]
+                // lies outside i16 for every execution.
+                let mut p = Program::new("planted_overflow", FixedSpec::q(7));
+                let big = 25000 + r.gen_range(7000) as i16;
+                let c = p.const_buffer("big", vec![big; n]);
+                let o = p.buffer("out", n, 1, BufKind::Output);
+                p.steps.push(Step::Wave(Wave {
+                    op: Opcode::VectorAddition,
+                    vec_len: n,
+                    lut: None,
+                    lanes: vec![LaneOp {
+                        a: View::all(c, n),
+                        b: Some(View::all(c, n)),
+                        out: View::all(o, n),
+                    }],
+                }));
+                (p, "guaranteed-overflow", None)
+            }
+            CheckDefect::RingOverrun => {
+                // Two active MVM groups inject two simultaneous result
+                // tokens; model a single-slot FIFO.
+                let w = 2 * crate::hw::PROCS_PER_GROUP;
+                let mut p = Program::new("planted_ring_overrun", FixedSpec::PAPER);
+                let x = p.buffer("x", w, 1, BufKind::Input);
+                let o = p.buffer("o", w, 1, BufKind::Output);
+                p.steps.push(Step::Wave(Wave {
+                    op: Opcode::VectorDotProduct,
+                    vec_len: 1,
+                    lut: None,
+                    lanes: (0..w)
+                        .map(|i| LaneOp {
+                            a: View::contiguous(x, i, 1),
+                            b: Some(View::contiguous(x, i, 1)),
+                            out: View::contiguous(o, i, 1),
+                        })
+                        .collect(),
+                }));
+                (p, "ring-overrun", Some(1))
+            }
+            CheckDefect::Hazard => {
+                // Lane 1 reads the arena address lane 0 just wrote —
+                // a RAW hazard that makes the wave order-dependent.
+                let mut p = Program::new("planted_hazard", FixedSpec::PAPER);
+                let x = p.buffer("x", 2, 1, BufKind::Input);
+                let y = p.buffer("y", 2, 1, BufKind::Output);
+                p.steps.push(Step::Wave(Wave {
+                    op: Opcode::VectorAddition,
+                    vec_len: 1,
+                    lut: None,
+                    lanes: vec![
+                        LaneOp {
+                            a: View::contiguous(x, 0, 1),
+                            b: Some(View::contiguous(x, 0, 1)),
+                            out: View::contiguous(y, 0, 1),
+                        },
+                        LaneOp {
+                            a: View::contiguous(y, 0, 1),
+                            b: Some(View::contiguous(x, 1, 1)),
+                            out: View::contiguous(y, 1, 1),
+                        },
+                    ],
+                }));
+                (p, "order-dependent", None)
+            }
+            CheckDefect::Clean(_) => {
+                unreachable!("clean cases materialise via ProgramCase::build")
+            }
+        }
+    }
+}
+
+pub(crate) fn sample_check_case(r: &mut Rng) -> CheckCase {
+    let seed = r.next_u64();
+    let defect = match r.gen_range(5) {
+        0 => CheckDefect::UndefinedRead,
+        1 => CheckDefect::Overflow,
+        2 => CheckDefect::RingOverrun,
+        3 => CheckDefect::Hazard,
+        _ => CheckDefect::Clean(sample_program_case(r)),
+    };
+    CheckCase { seed, defect }
+}
+
+fn shrink_check_case(c: &CheckCase) -> Vec<CheckCase> {
+    // Planted cases are already minimal; clean cases shrink with the
+    // wrapped program.
+    match &c.defect {
+        CheckDefect::Clean(pc) => shrink_program_case(pc)
+            .into_iter()
+            .map(|pc| CheckCase { seed: c.seed, defect: CheckDefect::Clean(pc) })
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+/// Generator for [`CheckCase`].
+pub fn check_case() -> Gen<CheckCase> {
+    Gen::new(sample_check_case, shrink_check_case)
 }
 
 // -------------------------------------------------------- fault scenarios

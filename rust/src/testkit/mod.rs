@@ -44,6 +44,13 @@
 //!   behaviour-invisible: bit-identical non-scratch buffers, identical
 //!   `RunStats` for both fused and unfused variants, and a planned
 //!   arena never larger than the packed one (DESIGN.md §Memory planner).
+//! * Static checker — [`Differ::run_check`] generates programs with one
+//!   planted defect each (undefined-lane read, guaranteed wrap,
+//!   ring-FIFO overrun, cross-lane RAW hazard) and asserts
+//!   [`crate::analysis::check_program`] flags every one; checker-clean
+//!   random programs must run every raw-program fidelity level and
+//!   finish with every lane inside the checker's certified value ranges
+//!   (DESIGN.md §Static analysis).
 //! * [`fuzz`] — the harness: seeded case streams, greedy shrinking to a
 //!   minimal failing case, seed replay (`mfnn fuzz --cases 1 --seed N`
 //!   reproduces exactly), and corpus snapshots under
@@ -63,6 +70,6 @@ pub use fuzz::{
     FuzzReport,
 };
 pub use gen::{
-    FaultCase, FuzzCase, GraphArch, GraphCase, MemplanCase, NetCase, ProgramCase, RecoveryCase,
-    ServeChaosCase,
+    CheckCase, CheckDefect, FaultCase, FuzzCase, GraphArch, GraphCase, MemplanCase, NetCase,
+    ProgramCase, RecoveryCase, ServeChaosCase,
 };

@@ -1,0 +1,350 @@
+//! Golden tests for the static program checker (DESIGN.md §Static
+//! analysis): one field-exact diagnostic per kind, zero diagnostics on
+//! every compiler-emitted golden program, 100% catch rate on planted
+//! defects, and the session wiring (`CompileOptions::with_checks`).
+
+use mfnn::analysis::{check_program, CheckError, CheckLevel, CheckOptions, Diagnostic, Severity};
+use mfnn::assembler::program::{BufKind, LaneOp, Program, Step, View, Wave};
+use mfnn::fixed::FixedSpec;
+use mfnn::hw::{FpgaDevice, PROCS_PER_GROUP};
+use mfnn::isa::Opcode;
+use mfnn::nn::graph::{
+    lower_graph_forward, lower_mlp_forward, lower_mlp_train, Conv2dGeom, GraphSpec, INPUT,
+};
+use mfnn::nn::lut::{ActKind, ActLut, AddrMode};
+use mfnn::nn::mlp::{LutParams, MlpSpec};
+use mfnn::testkit::gen::{self, CheckCase, CheckDefect};
+use mfnn::testkit::{case_seed, Differ};
+use mfnn::util::Rng;
+use mfnn::{CompileOptions, Compiler, Error};
+use std::sync::Arc;
+
+/// One wave: `out = a + b` over whole buffers.
+fn add_wave(a: usize, b: usize, out: usize, n: usize) -> Step {
+    Step::Wave(Wave {
+        op: Opcode::VectorAddition,
+        vec_len: n,
+        lut: None,
+        lanes: vec![LaneOp { a: View::all(a, n), b: Some(View::all(b, n)), out: View::all(out, n) }],
+    })
+}
+
+#[test]
+fn undefined_read_is_flagged_field_exact() {
+    let mut p = Program::new("t", FixedSpec::PAPER);
+    let t = p.buffer("scratch", 4, 1, BufKind::Temp);
+    let o = p.buffer("out", 4, 1, BufKind::Output);
+    p.steps.push(add_wave(t, t, o, 4));
+    let r = check_program(&p, &CheckOptions::new(CheckLevel::Standard));
+    assert_eq!(
+        r.diagnostics,
+        vec![Diagnostic::UndefinedRead {
+            step: 0,
+            op: Opcode::VectorAddition,
+            lane_idx: 0,
+            buf: "scratch".into(),
+            lane: 0,
+        }]
+    );
+    assert_eq!(r.error_count(), 1);
+}
+
+#[test]
+fn guaranteed_overflow_is_flagged_field_exact() {
+    // Wrap-mode add of 30000+30000: every execution wraps.
+    let mut p = Program::new("t", FixedSpec::q(7));
+    let c = p.const_buffer("big", vec![30000; 4]);
+    let o = p.buffer("out", 4, 1, BufKind::Output);
+    p.steps.push(add_wave(c, c, o, 4));
+    let r = check_program(&p, &CheckOptions::new(CheckLevel::Standard));
+    assert_eq!(
+        r.diagnostics,
+        vec![Diagnostic::GuaranteedOverflow {
+            step: 0,
+            op: Opcode::VectorAddition,
+            lane_idx: 0,
+            bound: (60000, 60000),
+        }]
+    );
+    assert!(r.clone().into_result().is_err());
+}
+
+#[test]
+fn possible_wrap_is_a_strict_only_warning() {
+    // Full-envelope inputs may (but need not) wrap a Wrap-mode add.
+    let mut p = Program::new("t", FixedSpec::q(7));
+    let x = p.buffer("x", 4, 1, BufKind::Input);
+    let o = p.buffer("out", 4, 1, BufKind::Output);
+    p.steps.push(add_wave(x, x, o, 4));
+    let std = check_program(&p, &CheckOptions::new(CheckLevel::Standard));
+    assert!(std.is_clean(), "{:?}", std.diagnostics);
+    let strict = check_program(&p, &CheckOptions::new(CheckLevel::Strict));
+    assert_eq!(
+        strict.diagnostics,
+        vec![Diagnostic::PossibleWrap {
+            step: 0,
+            op: Opcode::VectorAddition,
+            lane_idx: 0,
+            // The default host envelope is ±i16::MAX (symmetric).
+            bound: (-2 * i16::MAX as i64, 2 * i16::MAX as i64),
+        }]
+    );
+    assert_eq!(strict.diagnostics[0].severity(), Severity::Warning);
+}
+
+#[test]
+fn possible_saturation_is_a_strict_only_warning() {
+    let mut p = Program::new("t", FixedSpec::q(7).saturating());
+    let c = p.const_buffer("big", vec![30000; 4]);
+    let o = p.buffer("out", 4, 1, BufKind::Output);
+    p.steps.push(add_wave(c, c, o, 4));
+    assert!(check_program(&p, &CheckOptions::new(CheckLevel::Standard)).is_clean());
+    let strict = check_program(&p, &CheckOptions::new(CheckLevel::Strict));
+    assert_eq!(
+        strict.diagnostics,
+        vec![Diagnostic::PossibleSaturation {
+            step: 0,
+            op: Opcode::VectorAddition,
+            lane_idx: 0,
+            bound: (60000, 60000),
+        }]
+    );
+}
+
+#[test]
+fn lut_domain_exceeded_is_flagged_with_shifted_bound() {
+    let fixed = FixedSpec::q(7);
+    let mut p = Program::new("t", fixed);
+    let c = p.const_buffer("x", vec![4000; 4]);
+    let o = p.buffer("out", 4, 1, BufKind::Output);
+    // Wrap-mode addressing with shift 0: address 4000 aliases the table.
+    let lut = p.lut(ActLut::build(ActKind::Tanh, false, fixed, AddrMode::Wrap, 0));
+    p.steps.push(Step::LoadLut(lut));
+    p.steps.push(Step::Wave(Wave {
+        op: Opcode::ActivationFunction,
+        vec_len: 4,
+        lut: Some(lut),
+        lanes: vec![LaneOp { a: View::all(c, 4), b: None, out: View::all(o, 4) }],
+    }));
+    assert!(check_program(&p, &CheckOptions::new(CheckLevel::Standard)).is_clean());
+    let strict = check_program(&p, &CheckOptions::new(CheckLevel::Strict));
+    assert_eq!(
+        strict.diagnostics,
+        vec![Diagnostic::LutDomainExceeded { step: 1, lut: 0, shifted: (4000, 4000) }]
+    );
+}
+
+/// A dot wave wide enough to activate `groups` MVM groups.
+fn wide_dot(groups: usize) -> Program {
+    let w = groups * PROCS_PER_GROUP;
+    let mut p = Program::new("t", FixedSpec::PAPER);
+    let x = p.buffer("x", w, 1, BufKind::Input);
+    let o = p.buffer("o", w, 1, BufKind::Output);
+    p.steps.push(Step::Wave(Wave {
+        op: Opcode::VectorDotProduct,
+        vec_len: 1,
+        lut: None,
+        lanes: (0..w)
+            .map(|i| LaneOp {
+                a: View::contiguous(x, i, 1),
+                b: Some(View::contiguous(x, i, 1)),
+                out: View::contiguous(o, i, 1),
+            })
+            .collect(),
+    }));
+    p
+}
+
+#[test]
+fn ring_overrun_is_flagged_field_exact() {
+    let p = wide_dot(2);
+    let opts = CheckOptions::new(CheckLevel::Standard).with_ring_capacity(1);
+    let r = check_program(&p, &opts);
+    assert_eq!(
+        r.diagnostics,
+        vec![Diagnostic::RingOverrun { step: 0, demand: 2, capacity: 1 }]
+    );
+}
+
+#[test]
+fn ring_at_exact_capacity_warns_of_zero_headroom() {
+    let p = wide_dot(3);
+    // host_bound 4 keeps the tiny dot products out of the interval
+    // pass's warning range so the ring finding is the only diagnostic.
+    let opts = CheckOptions::new(CheckLevel::Strict).with_ring_capacity(3).with_host_bound(4);
+    let r = check_program(&p, &opts);
+    assert_eq!(
+        r.diagnostics,
+        vec![Diagnostic::RingAtCapacity { step: 0, peak: 3, capacity: 3 }]
+    );
+    assert_eq!(r.ring_peak, 3);
+    // One more slot of headroom and the same schedule is clean.
+    let roomy = check_program(
+        &p,
+        &CheckOptions::new(CheckLevel::Strict).with_ring_capacity(4).with_host_bound(4),
+    );
+    assert!(roomy.is_clean(), "{:?}", roomy.diagnostics);
+}
+
+#[test]
+fn cross_lane_raw_hazard_is_order_dependent() {
+    // Lane 1 reads the arena address lane 0 writes (packed layout:
+    // x at 0..2, y at 2..4, so y[0] = address 2).
+    let mut p = Program::new("t", FixedSpec::PAPER);
+    let x = p.buffer("x", 2, 1, BufKind::Input);
+    let y = p.buffer("y", 2, 1, BufKind::Output);
+    p.steps.push(Step::Wave(Wave {
+        op: Opcode::VectorAddition,
+        vec_len: 1,
+        lut: None,
+        lanes: vec![
+            LaneOp {
+                a: View::contiguous(x, 0, 1),
+                b: Some(View::contiguous(x, 0, 1)),
+                out: View::contiguous(y, 0, 1),
+            },
+            LaneOp {
+                a: View::contiguous(y, 0, 1),
+                b: Some(View::contiguous(x, 1, 1)),
+                out: View::contiguous(y, 1, 1),
+            },
+        ],
+    }));
+    assert!(check_program(&p, &CheckOptions::new(CheckLevel::Standard)).is_clean());
+    let strict =
+        check_program(&p, &CheckOptions::new(CheckLevel::Strict).with_host_bound(4));
+    assert_eq!(
+        strict.diagnostics,
+        vec![Diagnostic::OrderDependent { step: 0, lanes: (0, 1), addr: 2, hazard: "RAW" }]
+    );
+}
+
+/// The golden compiler-emitted programs `mfnn lint` sweeps: paper-style
+/// MLP forward + training step, graph CNN, transformer block.
+fn golden_programs(batch: usize) -> Vec<Program> {
+    let fixed = FixedSpec::q(10).saturating();
+    let mlp = MlpSpec::from_dims(
+        "mlp_16_32_32_10",
+        &[16, 32, 32, 10],
+        ActKind::Relu,
+        ActKind::Identity,
+        fixed,
+        LutParams::training(fixed),
+    )
+    .unwrap();
+    let gfixed = FixedSpec::q(9).saturating();
+    let geom = Conv2dGeom { in_h: 8, in_w: 8, in_c: 1, out_c: 8, kh: 3, kw: 3, stride: 1 };
+    let mut conv = GraphSpec::new("cnn_8x8", 64, gfixed, LutParams::training(gfixed));
+    let c = conv.conv2d(INPUT, geom);
+    let ca = conv.activation(c, ActKind::Relu);
+    conv.linear(ca, 10);
+    let (seq, d) = (8, 8);
+    let mut xfmr =
+        GraphSpec::new("transformer_block", seq * d, gfixed, LutParams::training(gfixed));
+    let att = xfmr.attention(INPUT, seq, d);
+    let r1 = xfmr.add(att, INPUT);
+    let n1 = xfmr.normalization(r1, d);
+    let f1 = xfmr.linear(n1, seq * d);
+    let fa = xfmr.activation(f1, ActKind::Relu);
+    let f2 = xfmr.linear(fa, seq * d);
+    let r2 = xfmr.add(f2, n1);
+    xfmr.normalization(r2, d);
+    vec![
+        lower_mlp_forward(&mlp, batch).unwrap().program,
+        lower_mlp_train(&mlp, batch, 1.0 / 128.0).unwrap().program,
+        lower_graph_forward(&conv, batch).unwrap().program,
+        lower_graph_forward(&xfmr, batch).unwrap().program,
+    ]
+}
+
+#[test]
+fn golden_programs_check_clean_at_standard() {
+    // The acceptance gate behind `mfnn lint`: zero diagnostics on every
+    // compiler-emitted golden program, with every plan claim certified.
+    for p in golden_programs(4) {
+        let r = check_program(&p, &CheckOptions::new(CheckLevel::Standard));
+        assert!(r.is_clean(), "{}: {:?}", p.name, r.diagnostics);
+        assert_eq!(r.hazard_skipped, 0, "{}: hazard claims skipped", p.name);
+        assert!(r.waves > 0 && r.lane_ops > 0, "{}: nothing analysed", p.name);
+    }
+}
+
+#[test]
+fn sampled_raw_programs_check_clean_at_standard() {
+    // False-positive rate 0 over the fuzzer's raw-program generator
+    // (its bindings stay within ±6000).
+    let g = gen::program_case();
+    for i in 0..32 {
+        let c = g.sample(&mut Rng::new(case_seed(11, i)));
+        let (p, _) = c.build();
+        let opts = CheckOptions::new(CheckLevel::Standard).with_host_bound(6000);
+        let r = check_program(&p, &opts);
+        assert!(r.is_clean(), "case {i}: {:?} on {c:?}", r.diagnostics);
+    }
+}
+
+#[test]
+fn every_planted_defect_is_caught() {
+    // Catch rate 100%: `Differ::run_check` fails a planted case iff the
+    // checker misses the planted kind.
+    let differ = Differ::new(FpgaDevice::selected());
+    for seed in 0..8u64 {
+        for defect in [
+            CheckDefect::UndefinedRead,
+            CheckDefect::Overflow,
+            CheckDefect::RingOverrun,
+            CheckDefect::Hazard,
+        ] {
+            let case = CheckCase { seed, defect: defect.clone() };
+            differ
+                .run_check(&case)
+                .unwrap_or_else(|d| panic!("seed {seed} {defect:?}: {d}"));
+        }
+    }
+}
+
+#[test]
+fn compile_with_checks_attaches_reports_and_splits_the_cache() {
+    let fixed = FixedSpec::q(8).saturating();
+    let spec = MlpSpec::from_dims(
+        "wired",
+        &[4, 6, 2],
+        ActKind::Relu,
+        ActKind::Identity,
+        fixed,
+        LutParams::training(fixed),
+    )
+    .unwrap();
+    let compiler = Compiler::new();
+    let plain = compiler.compile_spec(&spec, &CompileOptions::inference(4)).unwrap();
+    assert!(plain.check_reports().is_empty());
+    let opts = CompileOptions::inference(4).with_checks(CheckLevel::Standard);
+    let checked = compiler.compile_spec(&spec, &opts).unwrap();
+    assert_eq!(checked.check_reports().len(), 1);
+    assert!(checked.check_reports()[0].is_clean());
+    assert!(!Arc::ptr_eq(&plain, &checked), "check level must split the cache key");
+    let again = compiler.compile_spec(&spec, &opts).unwrap();
+    assert!(Arc::ptr_eq(&checked, &again), "same options must hit the cache");
+    // Training artifacts carry one report per compiled program.
+    let topts = CompileOptions::training(4, 1.0 / 64.0).with_checks(CheckLevel::Standard);
+    let trained = compiler.compile_spec(&spec, &topts).unwrap();
+    assert_eq!(trained.check_reports().len(), 2);
+    assert!(trained.check_reports().iter().all(|r| r.is_clean()));
+}
+
+#[test]
+fn check_errors_surface_as_typed_session_errors() {
+    let err = CheckError {
+        program: "bad".into(),
+        errors: vec![Diagnostic::RingOverrun { step: 2, demand: 4, capacity: 1 }],
+    };
+    let e: Error = err.into();
+    match e {
+        Error::Check(inner) => {
+            assert_eq!(inner.program, "bad");
+            assert_eq!(inner.errors.len(), 1);
+            assert!(inner.to_string().contains("step 2"));
+        }
+        other => panic!("expected Error::Check, got {other:?}"),
+    }
+}

@@ -377,3 +377,38 @@ fn asm_parser_never_panics_on_mutated_sources() {
         }
     }
 }
+
+#[test]
+fn checker_intervals_bound_real_execution() {
+    // Interval soundness (DESIGN.md §Static analysis): for random raw
+    // programs, every lane value FastSim leaves behind must fall inside
+    // the final range the static checker certified under the matching
+    // host envelope (the generator binds data within ±6000) — and none
+    // of those programs may draw a Standard-level diagnostic.
+    use mfnn::analysis::{check_program, CheckLevel, CheckOptions};
+    use mfnn::hw::FastSim;
+    use mfnn::testkit::gen;
+    check("interval_soundness", gen::program_case(), |c| {
+        let (p, binds) = c.build();
+        let opts = CheckOptions::new(CheckLevel::Standard).with_host_bound(6000);
+        let report = check_program(&p, &opts);
+        if !report.is_clean() {
+            return false;
+        }
+        let mut sim = FastSim::new(&p);
+        for (id, data) in &binds {
+            sim.set_buffer(*id, data);
+        }
+        for step in &p.steps {
+            if let Step::Wave(w) = step {
+                sim.exec_wave(&p, w);
+            }
+        }
+        report.ranges.iter().enumerate().all(|(b, ranges)| {
+            sim.buffer(b)
+                .iter()
+                .zip(ranges)
+                .all(|(&v, r)| (v as i64) >= r.0 && (v as i64) <= r.1)
+        })
+    });
+}

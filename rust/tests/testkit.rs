@@ -127,6 +127,40 @@ fn corpus_memplan_seeds_replay_clean() {
 }
 
 #[test]
+fn corpus_check_seeds_replay_clean() {
+    // The CI checker smoke (`mfnn fuzz --family check --cases 8`) plus
+    // this pinned corpus: every planted defect must be flagged and every
+    // checker-clean program must execute within its certified ranges.
+    let text = include_str!("corpus/check.seeds");
+    let entries = testkit::parse_corpus(text).unwrap();
+    assert!(entries.len() >= 8, "check corpus unexpectedly small");
+    assert!(entries.iter().all(|(f, _)| *f == Family::Check));
+    let report = testkit::replay_corpus(&entries, &FuzzOptions::default());
+    assert!(report.ok(), "{}", report.render());
+}
+
+#[test]
+fn check_generator_reaches_every_defect_variant() {
+    use mfnn::testkit::gen::{self, CheckDefect};
+    use mfnn::util::Rng;
+    let g = gen::check_case();
+    let (mut undef, mut ovf, mut ring, mut haz, mut clean) = (false, false, false, false, false);
+    for i in 0..64 {
+        match g.sample(&mut Rng::new(testkit::case_seed(0, i))).defect {
+            CheckDefect::UndefinedRead => undef = true,
+            CheckDefect::Overflow => ovf = true,
+            CheckDefect::RingOverrun => ring = true,
+            CheckDefect::Hazard => haz = true,
+            CheckDefect::Clean(_) => clean = true,
+        }
+    }
+    assert!(
+        undef && ovf && ring && haz && clean,
+        "defect sweep incomplete: undef={undef} ovf={ovf} ring={ring} haz={haz} clean={clean}"
+    );
+}
+
+#[test]
 fn every_placement_mode_is_reachable_by_the_generator() {
     // The M×F sweep must actually exercise all three §2 placements
     // within a modest case budget.
